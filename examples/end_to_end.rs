@@ -1,0 +1,112 @@
+//! End-to-end driver: proves all three layers compose on a real workload.
+//!
+//! Pipeline exercised:
+//!   1. Layer-1/2 artifacts (Pallas kernels → JAX graph → HLO text) are
+//!      loaded through PJRT by the Rust runtime (`make artifacts` first).
+//!   2. The Layer-3 SKIP GP trains on the Protein surrogate
+//!      (n ≈ 1600, d = 9) with the **PJRT backend** serving the
+//!      Lemma-3.1 contraction whenever a compatible artifact shape is
+//!      registered, falling back to native otherwise.
+//!   3. The MLL training curve is logged, predictions are scored, and the
+//!      PJRT/native call split is reported — Python never runs here.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+//!
+//! Headline metrics (recorded in EXPERIMENTS.md): test MAE vs the SGPR
+//! baseline, train time, and PJRT call count > 0.
+
+use skip_gp::coordinator::Session;
+use skip_gp::data::{dataset_by_name, generate};
+use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, Sgpr};
+use skip_gp::runtime::PjrtBackend;
+use skip_gp::util::{mae, Timer};
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() {
+    let spec = dataset_by_name("protein").expect("protein registered");
+    let data = generate(spec, 0.04);
+    println!(
+        "end-to-end: SKIP GP on protein surrogate (n={}, d={})",
+        data.n(),
+        data.d()
+    );
+
+    // Layer 1+2 → runtime: load AOT artifacts. Hard requirement for this
+    // driver — it exists to prove the full stack composes.
+    let artifacts = Path::new("artifacts");
+    let backend = match PjrtBackend::load(artifacts) {
+        Ok(b) => Arc::new(b),
+        Err(e) => {
+            eprintln!("cannot load artifacts ({e}); run `make artifacts` first");
+            std::process::exit(1);
+        }
+    };
+    println!("PJRT runtime up: artifacts loaded from {}", artifacts.display());
+
+    // Layer 3: train with the PJRT contraction backend.
+    // n is chosen ≤ 4096 so the hadamard_mvm_n4096_r32 artifact serves the
+    // root contraction (larger shapes fall back to native — also fine).
+    // Every merge-tree Lanczos iteration routes a Lemma-3.1 contraction
+    // through the artifact (~4 ms/call incl. literal upload), so the demo
+    // keeps n ≈ 600 and r = 25 to finish in about a minute.
+    let cfg = MvmGpConfig {
+        grid_m: 100,
+        rank: 25,
+        refresh_rank: 80,
+        seed: 0,
+        ..Default::default()
+    };
+    let mut gp = MvmGp::new(
+        data.xtrain.clone(),
+        data.ytrain.clone(),
+        GpHypers::init_for_dim(data.d()),
+        cfg,
+    )
+    .with_backend(backend.clone());
+
+    let t = Timer::start();
+    let steps = 6;
+    let trace = gp.fit(steps, 0.1);
+    let skip_train_s = t.elapsed_s();
+    println!("\nMLL curve ({} ADAM steps):", steps);
+    for (i, mll) in trace.iter().enumerate() {
+        println!("  step {i:>3}  mll/n = {:+.4}", mll / data.n() as f64);
+    }
+    let pred = gp.predict_mean(&data.xtest);
+    let skip_mae = mae(&pred, &data.ytest);
+    let (pjrt_calls, native_calls) = backend.call_counts();
+    println!(
+        "\nSKIP: MAE {skip_mae:.4}, train {skip_train_s:.1}s, \
+         backend calls: {pjrt_calls} pjrt / {native_calls} native"
+    );
+
+    // Baseline for the headline comparison.
+    let t = Timer::start();
+    let mut sgpr = Sgpr::new(
+        data.xtrain.clone(),
+        data.ytrain.clone(),
+        GpHypers::init_for_dim(data.d()),
+        200,
+        0,
+    );
+    sgpr.fit(steps, 0.1).expect("sgpr");
+    let sgpr_mae = mae(&sgpr.predict_mean(&data.xtest), &data.ytest);
+    let sgpr_train_s = t.elapsed_s();
+    println!("SGPR(m=200): MAE {sgpr_mae:.4}, train {sgpr_train_s:.1}s");
+
+    // Record the run.
+    let mut session = Session::new("end_to_end", Path::new("results")).expect("session");
+    session.header(&["method", "n", "d", "mae", "train_s", "pjrt_calls", "native_calls"]);
+    session.rowf(&[&"skip_pjrt", &data.n(), &data.d(), &skip_mae, &skip_train_s, &pjrt_calls, &native_calls]);
+    session.rowf(&[&"sgpr_m200", &data.n(), &data.d(), &sgpr_mae, &sgpr_train_s, &0, &0]);
+    let path = session.finish().expect("csv");
+    println!("wrote {}", path.display());
+
+    // The composition claims this driver certifies:
+    assert!(pjrt_calls > 0, "PJRT artifact path was never exercised");
+    assert!(skip_mae.is_finite() && skip_mae < 0.8, "SKIP failed to learn");
+    println!("\nend_to_end OK — all three layers composed");
+}

@@ -1,0 +1,145 @@
+"""AOT pipeline: lower the Layer-2 graphs to HLO text artifacts.
+
+Run once at build time (`make artifacts`); the Rust runtime
+(`rust/src/runtime/`) loads the artifacts through
+`HloModuleProto::from_text_file` and executes them on the PJRT CPU client.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+≥ 0.5 emits protos with 64-bit instruction ids that the crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Besides one `.hlo.txt` per (graph, shape) pair, a `manifest.json` records
+every artifact's operand shapes so the Rust registry can route requests to
+a compatible executable (zero-padding n and r preserves exactness).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+# (n, r) shape points for the Hadamard-pair MVM artifact. n must be a
+# multiple of the kernel block (256); r covers the ranks the harness uses.
+HADAMARD_SHAPES = [
+    (1024, 16),
+    (2048, 32),
+    (4096, 32),
+]
+
+# (n_test, n_train, d) for the predictive-mean artifact.
+PREDICT_SHAPES = [
+    (256, 2048, 4),
+    (512, 4096, 8),
+]
+
+# Chain length for the Corollary-3.4 chained-MVM artifact.
+CHAIN_STEPS = 8
+CHAIN_SHAPES = [(2048, 32)]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float64):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_hadamard(n: int, r: int) -> str:
+    lowered = jax.jit(model.skip_mvm).lower(
+        spec((n, r)), spec((r, r)), spec((n, r)), spec((r, r)), spec((n,))
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_predict(nt: int, ns: int, d: int) -> str:
+    lowered = jax.jit(model.predict_mean).lower(
+        spec((nt, d)), spec((ns, d)), spec((ns,)), spec((2,))
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_chain(n: int, r: int, steps: int) -> str:
+    fn = lambda q1, t1, q2, t2, v: model.skip_mvm_chain(  # noqa: E731
+        q1, t1, q2, t2, v, steps=steps
+    )
+    lowered = jax.jit(fn).lower(
+        spec((n, r)), spec((r, r)), spec((n, r)), spec((r, r)), spec((n,))
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out-dir",
+        default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"),
+    )
+    # Kept for Makefile compatibility: `--out path` names the sentinel file.
+    parser.add_argument("--out", default=None)
+    args = parser.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text", "dtype": "f64", "artifacts": []}
+
+    for n, r in HADAMARD_SHAPES:
+        name = f"hadamard_mvm_n{n}_r{r}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(lower_hadamard(n, r))
+        manifest["artifacts"].append(
+            {"name": name, "op": "hadamard_mvm", "n": n, "r": r,
+             "file": os.path.basename(path)}
+        )
+        print(f"wrote {path}")
+
+    for nt, ns, d in PREDICT_SHAPES:
+        name = f"rbf_mean_t{nt}_n{ns}_d{d}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(lower_predict(nt, ns, d))
+        manifest["artifacts"].append(
+            {"name": name, "op": "rbf_mean", "n_test": nt, "n_train": ns,
+             "d": d, "file": os.path.basename(path)}
+        )
+        print(f"wrote {path}")
+
+    for n, r in CHAIN_SHAPES:
+        name = f"hadamard_chain{CHAIN_STEPS}_n{n}_r{r}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(lower_chain(n, r, CHAIN_STEPS))
+        manifest["artifacts"].append(
+            {"name": name, "op": "hadamard_chain", "n": n, "r": r,
+             "steps": CHAIN_STEPS, "file": os.path.basename(path)}
+        )
+        print(f"wrote {path}")
+
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+    # Sentinel for the Makefile dependency (also doubles as a build stamp).
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(json.dumps({"artifacts": len(manifest["artifacts"])}))
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

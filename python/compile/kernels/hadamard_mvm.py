@@ -1,0 +1,113 @@
+"""Layer-1 Pallas kernels for the Lemma-3.1 Hadamard-product MVM.
+
+The contraction `(Q1 T1 Q1^T ∘ Q2 T2 Q2^T) v` factors into three stages:
+
+    S = Q1^T D_v Q2          (r1 × r2 cross-moment, reduction over n)
+    M = T1 S T2              (r × r, tiny — plain jnp between the kernels)
+    out_i = q1_i · (M q2_i)  (row-wise bilinear diagonal over n)
+
+Stages 1 and 3 stream the n-dimension and are written as Pallas kernels
+tiled over n-blocks; the r×r dimensions stay resident.
+
+Hardware adaptation (paper implements this in CUDA/GPyTorch): on TPU each
+n-block of Q1/Q2 is staged HBM→VMEM by the BlockSpec, and the two
+(block_n × r)·(r × r) products in stage 3 map directly onto the MXU. Here
+we run interpret=True (CPU PJRT cannot execute Mosaic custom-calls), so
+the kernels serve as the *specification* of the schedule; VMEM/MXU
+estimates for the chosen block shapes live in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# n-block size: 256 rows × r≤64 cols × 8 B ≈ 128 KiB per operand block,
+# comfortably inside a 16 MiB VMEM budget with double-buffering.
+DEFAULT_BLOCK_N = 256
+
+
+def _s_accum_kernel(q1_ref, q2_ref, v_ref, s_ref):
+    """Accumulate S += Q1_blk^T (v_blk ⊙ Q2_blk) across the n-grid."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    q1 = q1_ref[...]
+    q2 = q2_ref[...]
+    v = v_ref[...]
+    s_ref[...] += q1.T @ (v[:, None] * q2)
+
+
+def hadamard_s(q1, q2, v, *, block_n=DEFAULT_BLOCK_N, interpret=True):
+    """S = Q1^T D_v Q2 via a Pallas reduction over n-blocks."""
+    n, r1 = q1.shape
+    _, r2 = q2.shape
+    assert q2.shape[0] == n and v.shape == (n,)
+    block_n = min(block_n, n)
+    assert n % block_n == 0, f"n={n} must be divisible by block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _s_accum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, r1), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, r2), lambda i: (i, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        # Every grid step maps to the same output block → accumulation.
+        out_specs=pl.BlockSpec((r1, r2), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((r1, r2), q1.dtype),
+        interpret=interpret,
+    )(q1, q2, v)
+
+
+def _bilinear_diag_kernel(q1_ref, m_ref, q2_ref, o_ref):
+    """o_blk[i] = q1_blk[i] · (M @ q2_blk[i]) — two MXU matmuls + reduce."""
+    q1 = q1_ref[...]
+    q2 = q2_ref[...]
+    m = m_ref[...]
+    # (block_n, r2) @ (r2, r1) → row-wise dot with q1: Δ(Q1 M Q2^T).
+    p = q2 @ m.T
+    o_ref[...] = jnp.sum(q1 * p, axis=1)
+
+
+def bilinear_diag(q1, m, q2, *, block_n=DEFAULT_BLOCK_N, interpret=True):
+    """out[i] = q1[i] @ M @ q2[i]^T via a Pallas map over n-blocks."""
+    n, r1 = q1.shape
+    _, r2 = q2.shape
+    assert m.shape == (r1, r2) and q2.shape[0] == n
+    block_n = min(block_n, n)
+    assert n % block_n == 0, f"n={n} must be divisible by block_n={block_n}"
+    grid = (n // block_n,)
+    return pl.pallas_call(
+        _bilinear_diag_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, r1), lambda i: (i, 0)),
+            pl.BlockSpec((r1, r2), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, r2), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), q1.dtype),
+        interpret=interpret,
+    )(q1, m, q2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def hadamard_pair_mvm(q1, t1, q2, t2, v, *, block_n=DEFAULT_BLOCK_N,
+                      interpret=True):
+    """Full Lemma-3.1 MVM `(Q1T1Q1^T ∘ Q2T2Q2^T) v` in O(r^2 n).
+
+    This is the function AOT-lowered to `artifacts/hadamard_mvm_*.hlo.txt`
+    and executed from the Rust hot path via PJRT.
+    """
+    s = hadamard_s(q1, q2, v, block_n=block_n, interpret=interpret)
+    # M = T1 S T2^T: the identity is (A ∘ B) v = Δ(A D_v B^T) with
+    # B^T = Q2 T2^T Q2^T — the transpose matters for non-symmetric T2
+    # (Lanczos T is symmetric, but the kernel contract is general).
+    m = t1 @ s @ t2.T  # r×r — negligible; fused by XLA with stage 3
+    return bilinear_diag(q1, m, q2, block_n=block_n, interpret=interpret)

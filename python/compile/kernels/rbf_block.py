@@ -1,0 +1,72 @@
+"""Layer-1 Pallas kernel: RBF cross-covariance tile + predictive-mean
+contraction.
+
+The predictive mean (paper Eq. 1) is `mu* = K_{*X} alpha` with
+`K_{*X}[i,j] = sf2 * exp(-||x*_i - x_j||^2 / (2 ell^2))`. The kernel tiles
+the (n_test × n_train) implicit matrix into (block_t × block_n) VMEM tiles,
+computes each tile with a rank-d squared-distance expansion, and
+accumulates the partial `tile @ alpha_blk` products — the n×n matrix is
+never materialized in HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_T = 64
+DEFAULT_BLOCK_N = 256
+
+
+def _rbf_mean_kernel(xt_ref, xs_ref, alpha_ref, params_ref, o_ref):
+    """Accumulate o_blk += sf2 * exp(-d2/(2 ell^2)) @ alpha_blk."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xt = xt_ref[...]          # (bt, d)
+    xs = xs_ref[...]          # (bn, d)
+    alpha = alpha_ref[...]    # (bn,)
+    ell = params_ref[0]
+    sf2 = params_ref[1]
+    # ||a-b||^2 = |a|^2 + |b|^2 - 2ab — the 2ab term is an MXU matmul.
+    at2 = jnp.sum(xt * xt, axis=1)[:, None]
+    bs2 = jnp.sum(xs * xs, axis=1)[None, :]
+    cross = xt @ xs.T
+    d2 = at2 + bs2 - 2.0 * cross
+    k = sf2 * jnp.exp(-0.5 * d2 / (ell * ell))
+    o_ref[...] += k @ alpha
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_n", "interpret"))
+def rbf_cross_mean(xtest, xtrain, alpha, params, *, block_t=DEFAULT_BLOCK_T,
+                   block_n=DEFAULT_BLOCK_N, interpret=True):
+    """mu = sf2 * K_rbf(xtest, xtrain) @ alpha, tiled in VMEM.
+
+    params = jnp.array([ell, sf2]). AOT-lowered to
+    `artifacts/rbf_mean_*.hlo.txt` for the Rust predict path.
+    """
+    nt, d = xtest.shape
+    ns, d2 = xtrain.shape
+    assert d == d2 and alpha.shape == (ns,)
+    block_t = min(block_t, nt)
+    block_n = min(block_n, ns)
+    assert nt % block_t == 0, f"nt={nt} % block_t={block_t}"
+    assert ns % block_n == 0, f"ns={ns} % block_n={block_n}"
+    grid = (nt // block_t, ns // block_n)
+    return pl.pallas_call(
+        _rbf_mean_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_t, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_t,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nt,), xtest.dtype),
+        interpret=interpret,
+    )(xtest, xtrain, alpha, params)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for the Pallas kernels (Layer-1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here
+written in straightforward jax.numpy. pytest (python/tests/) asserts
+allclose between kernel and oracle across shape/dtype sweeps; the same
+oracles also pin down the semantics the Rust-native implementations in
+rust/src/operators/lowrank.rs must match.
+"""
+
+import jax.numpy as jnp
+
+
+def hadamard_s_ref(q1, q2, v):
+    """S = Q1^T D_v Q2  — the (r1, r2) cross-moment of Lemma 3.1."""
+    return q1.T @ (v[:, None] * q2)
+
+
+def bilinear_diag_ref(q1, m, q2):
+    """out[i] = q1[i, :] @ M @ q2[i, :]^T  — the Δ(Q1 M Q2^T) diagonal."""
+    return jnp.einsum("ip,pq,iq->i", q1, m, q2)
+
+
+def hadamard_pair_mvm_ref(q1, t1, q2, t2, v):
+    """Full Lemma-3.1 product-kernel MVM:
+
+        (Q1 T1 Q1^T ∘ Q2 T2 Q2^T) v = Δ(Q1 T1 Q1^T D_v Q2 T2 Q2^T).
+
+    Evaluated here *densely* (O(n^2)) as the semantic oracle.
+    """
+    a = q1 @ t1 @ q1.T
+    b = q2 @ t2 @ q2.T
+    return (a * b) @ v
+
+
+def hadamard_pair_mvm_fast_ref(q1, t1, q2, t2, v):
+    """The O(r^2 n) algebra the kernels implement (still pure jnp).
+
+    Note the T2 transpose: (A ∘ B) v = Δ(A D_v B^T), B^T = Q2 T2^T Q2^T.
+    """
+    s = hadamard_s_ref(q1, q2, v)
+    m = t1 @ s @ t2.T
+    return bilinear_diag_ref(q1, m, q2)
+
+
+def rbf_block_ref(x, y, ell):
+    """Pairwise RBF kernel block: K[i, j] = exp(-||x_i - y_j||^2 / (2 ell^2)).
+
+    x: (bx, d), y: (by, d) -> (bx, by).
+    """
+    sq = jnp.sum((x[:, None, :] - y[None, :, :]) ** 2, axis=-1)
+    return jnp.exp(-0.5 * sq / (ell * ell))
+
+
+def rbf_cross_mean_ref(xtest, xtrain, alpha, ell, sf2):
+    """Predictive-mean contraction: mu = sf2 * K(xtest, xtrain) @ alpha."""
+    return sf2 * rbf_block_ref(xtest, xtrain, ell) @ alpha

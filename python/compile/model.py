@@ -1,0 +1,51 @@
+"""Layer-2 JAX compute graphs for the SKIP hot path.
+
+These functions compose the Layer-1 Pallas kernels into the jitted graphs
+that `aot.py` lowers to HLO text. They are the *only* things the Rust
+runtime executes through PJRT; Python never runs on the request path.
+
+Graphs
+------
+- ``skip_mvm``: the Lemma-3.1 Hadamard-pair MVM — SKIP's per-iteration
+  hot-spot inside CG / Lanczos (O(r² n)).
+- ``predict_mean``: the exact RBF cross-covariance predictive-mean
+  contraction μ* = σ_f² K(X*, X) α (paper Eq. 1).
+- ``skip_mvm_chain``: p chained MVMs with the same cached decomposition —
+  demonstrates Corollary 3.4 (subsequent MVMs reuse Q/T) as a single
+  fused graph for the benchmark harness.
+"""
+
+import jax
+
+from .kernels.hadamard_mvm import hadamard_pair_mvm
+from .kernels.rbf_block import rbf_cross_mean
+
+# All artifacts are lowered in f64: the Rust side works in f64 end-to-end
+# and CPU PJRT has no MXU-driven reason to prefer bf16.
+jax.config.update("jax_enable_x64", True)
+
+
+def skip_mvm(q1, t1, q2, t2, v):
+    """(Q1 T1 Q1ᵀ ∘ Q2 T2 Q2ᵀ) v — root MVM of the SKIP merge tree."""
+    return (hadamard_pair_mvm(q1, t1, q2, t2, v),)
+
+
+def predict_mean(xtest, xtrain, alpha, params):
+    """μ* = σ_f² K_rbf(X*, X) α, params = [ell, sf2]."""
+    return (rbf_cross_mean(xtest, xtrain, alpha, params),)
+
+
+def skip_mvm_chain(q1, t1, q2, t2, v, steps: int = 4):
+    """Apply the Hadamard-pair operator `steps` times: K(K(...K v)).
+
+    Exercises Corollary 3.4: the decomposition (q1,t1,q2,t2) is built once
+    and reused across MVMs; only the vector changes. Lowered as one fused
+    graph so XLA can keep Q1/Q2 resident.
+    """
+
+    def body(carry, _):
+        out = hadamard_pair_mvm(q1, t1, q2, t2, carry)
+        return out, None
+
+    final, _ = jax.lax.scan(body, v, None, length=steps)
+    return (final,)

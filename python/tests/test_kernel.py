@@ -1,0 +1,167 @@
+"""Pallas kernels vs pure-jnp oracles — the core Layer-1 correctness signal.
+
+Hypothesis sweeps shapes and dtypes; fixed-seed numpy data keeps runs
+reproducible. All kernels run interpret=True (CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import hadamard_mvm as hk
+from compile.kernels import rbf_block as rk
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand(rng, *shape, dtype=np.float64):
+    return jnp.asarray(rng.standard_normal(shape), dtype=dtype)
+
+
+# ---------------------------------------------------------------- hadamard
+
+class TestHadamardS:
+    @pytest.mark.parametrize("n,r1,r2,block", [
+        (256, 8, 8, 256),
+        (512, 16, 8, 256),
+        (1024, 32, 32, 256),
+        (512, 4, 12, 128),
+    ])
+    def test_matches_ref(self, n, r1, r2, block):
+        rng = np.random.default_rng(0)
+        q1, q2, v = rand(rng, n, r1), rand(rng, n, r2), rand(rng, n)
+        got = hk.hadamard_s(q1, q2, v, block_n=block)
+        want = ref.hadamard_s_ref(q1, q2, v)
+        np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+    def test_accumulation_over_many_blocks(self):
+        # Exercises the grid-accumulation path with 8 blocks.
+        rng = np.random.default_rng(1)
+        n, r = 2048, 16
+        q1, q2, v = rand(rng, n, r), rand(rng, n, r), rand(rng, n)
+        got = hk.hadamard_s(q1, q2, v, block_n=256)
+        want = ref.hadamard_s_ref(q1, q2, v)
+        np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+class TestBilinearDiag:
+    @pytest.mark.parametrize("n,r1,r2", [(256, 8, 8), (512, 32, 16), (768, 5, 7)])
+    def test_matches_ref(self, n, r1, r2):
+        rng = np.random.default_rng(2)
+        q1, q2 = rand(rng, n, r1), rand(rng, n, r2)
+        m = rand(rng, r1, r2)
+        got = hk.bilinear_diag(q1, m, q2, block_n=256)
+        want = ref.bilinear_diag_ref(q1, m, q2)
+        np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+class TestHadamardPairMvm:
+    @pytest.mark.parametrize("n,r", [(256, 4), (512, 16), (1024, 32)])
+    def test_matches_dense_oracle(self, n, r):
+        rng = np.random.default_rng(3)
+        q1, q2 = rand(rng, n, r), rand(rng, n, r)
+        t1, t2 = rand(rng, r, r), rand(rng, r, r)
+        v = rand(rng, n)
+        got = hk.hadamard_pair_mvm(q1, t1, q2, t2, v)
+        want = ref.hadamard_pair_mvm_ref(q1, t1, q2, t2, v)
+        np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-8)
+
+    def test_fast_ref_equals_dense_ref(self):
+        # Internal consistency of the two oracles (Lemma 3.1 itself).
+        rng = np.random.default_rng(4)
+        n, r = 300, 6
+        q1, q2 = rand(rng, n, r), rand(rng, n, r)
+        t1, t2 = rand(rng, r, r), rand(rng, r, r)
+        v = rand(rng, n)
+        a = ref.hadamard_pair_mvm_ref(q1, t1, q2, t2, v)
+        b = ref.hadamard_pair_mvm_fast_ref(q1, t1, q2, t2, v)
+        np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-9)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n_blocks=st.integers(min_value=1, max_value=6),
+        r1=st.integers(min_value=1, max_value=40),
+        r2=st.integers(min_value=1, max_value=40),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_shape_sweep(self, n_blocks, r1, r2, seed):
+        rng = np.random.default_rng(seed)
+        n = 128 * n_blocks
+        q1, q2 = rand(rng, n, r1), rand(rng, n, r2)
+        t1, t2 = rand(rng, r1, r1), rand(rng, r2, r2)
+        v = rand(rng, n)
+        got = hk.hadamard_pair_mvm(q1, t1, q2, t2, v, block_n=128)
+        want = ref.hadamard_pair_mvm_fast_ref(q1, t1, q2, t2, v)
+        np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-8)
+
+    def test_float32_dtype(self):
+        rng = np.random.default_rng(5)
+        n, r = 256, 8
+        q1 = rand(rng, n, r, dtype=np.float32)
+        q2 = rand(rng, n, r, dtype=np.float32)
+        t1 = rand(rng, r, r, dtype=np.float32)
+        t2 = rand(rng, r, r, dtype=np.float32)
+        v = rand(rng, n, dtype=np.float32)
+        got = hk.hadamard_pair_mvm(q1, t1, q2, t2, v)
+        assert got.dtype == jnp.float32
+        want = ref.hadamard_pair_mvm_fast_ref(q1, t1, q2, t2, v)
+        # f32 accumulations over n=256 with O(10³)-magnitude outputs:
+        # compare at f32-appropriate tolerance.
+        np.testing.assert_allclose(got, want, rtol=3e-3, atol=3e-3)
+
+    def test_symmetric_psd_factors_give_symmetric_operator(self):
+        # ⟨Ku, w⟩ = ⟨u, Kw⟩ for symmetric T — property the GP stack relies on.
+        rng = np.random.default_rng(6)
+        n, r = 256, 10
+        q1, q2 = rand(rng, n, r), rand(rng, n, r)
+        t1 = rand(rng, r, r)
+        t1 = (t1 + t1.T) / 2
+        t2 = rand(rng, r, r)
+        t2 = (t2 + t2.T) / 2
+        u, w = rand(rng, n), rand(rng, n)
+        ku = hk.hadamard_pair_mvm(q1, t1, q2, t2, u)
+        kw = hk.hadamard_pair_mvm(q1, t1, q2, t2, w)
+        np.testing.assert_allclose(jnp.dot(ku, w), jnp.dot(u, kw), rtol=1e-8)
+
+
+# --------------------------------------------------------------- rbf block
+
+class TestRbfCrossMean:
+    @pytest.mark.parametrize("nt,ns,d", [(64, 256, 2), (128, 512, 4), (64, 512, 9)])
+    def test_matches_ref(self, nt, ns, d):
+        rng = np.random.default_rng(7)
+        xt, xs = rand(rng, nt, d), rand(rng, ns, d)
+        alpha = rand(rng, ns)
+        ell, sf2 = 0.7, 1.3
+        params = jnp.array([ell, sf2])
+        got = rk.rbf_cross_mean(xt, xs, alpha, params, block_t=64, block_n=256)
+        want = ref.rbf_cross_mean_ref(xt, xs, alpha, ell, sf2)
+        np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        bt=st.integers(min_value=1, max_value=3),
+        bn=st.integers(min_value=1, max_value=4),
+        d=st.integers(min_value=1, max_value=12),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_hypothesis_sweep(self, bt, bn, d, seed):
+        rng = np.random.default_rng(seed)
+        nt, ns = 32 * bt, 128 * bn
+        xt, xs = rand(rng, nt, d), rand(rng, ns, d)
+        alpha = rand(rng, ns)
+        params = jnp.array([1.1, 0.9])
+        got = rk.rbf_cross_mean(xt, xs, alpha, params, block_t=32, block_n=128)
+        want = ref.rbf_cross_mean_ref(xt, xs, alpha, 1.1, 0.9)
+        np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-8)
+
+    def test_kernel_value_at_zero_distance(self):
+        # Single coincident point: mean = sf2 * alpha.
+        xt = jnp.zeros((32, 3))
+        xs = jnp.zeros((128, 3))
+        alpha = jnp.zeros(128).at[0].set(2.0)
+        params = jnp.array([1.0, 1.5])
+        got = rk.rbf_cross_mean(xt, xs, alpha, params, block_t=32, block_n=128)
+        np.testing.assert_allclose(got, jnp.full(32, 3.0), rtol=1e-12)

@@ -1,0 +1,77 @@
+"""Layer-2 model graphs: shape checks, numerical checks, AOT lowering."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, model
+from compile.kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape))
+
+
+class TestSkipMvmGraph:
+    def test_matches_oracle(self):
+        rng = np.random.default_rng(0)
+        n, r = 512, 16
+        q1, q2 = rand(rng, n, r), rand(rng, n, r)
+        t1, t2 = rand(rng, r, r), rand(rng, r, r)
+        v = rand(rng, n)
+        (got,) = model.skip_mvm(q1, t1, q2, t2, v)
+        want = ref.hadamard_pair_mvm_ref(q1, t1, q2, t2, v)
+        np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-8)
+
+    def test_chain_is_repeated_application(self):
+        rng = np.random.default_rng(1)
+        n, r, steps = 256, 8, 3
+        q1, q2 = rand(rng, n, r), rand(rng, n, r)
+        # Scale down so the power iteration stays bounded.
+        t1, t2 = 0.1 * rand(rng, r, r), 0.1 * rand(rng, r, r)
+        v = rand(rng, n)
+        (got,) = model.skip_mvm_chain(q1, t1, q2, t2, v, steps=steps)
+        want = v
+        for _ in range(steps):
+            want = ref.hadamard_pair_mvm_fast_ref(q1, t1, q2, t2, want)
+        np.testing.assert_allclose(got, want, rtol=1e-7, atol=1e-9)
+
+
+class TestPredictMeanGraph:
+    def test_matches_oracle(self):
+        rng = np.random.default_rng(2)
+        nt, ns, d = 64, 256, 4
+        xt, xs = rand(rng, nt, d), rand(rng, ns, d)
+        alpha = rand(rng, ns)
+        params = jnp.array([0.9, 1.4])
+        (got,) = model.predict_mean(xt, xs, alpha, params)
+        want = ref.rbf_cross_mean_ref(xt, xs, alpha, 0.9, 1.4)
+        np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
+
+
+class TestAotLowering:
+    def test_hadamard_hlo_text_parses(self):
+        text = aot.lower_hadamard(256, 8)
+        assert "HloModule" in text
+        # f64 tensors of the right shapes appear in the entry computation.
+        assert "f64[256,8]" in text
+        assert "f64[256]" in text
+
+    def test_predict_hlo_text(self):
+        text = aot.lower_predict(64, 256, 3)
+        assert "HloModule" in text
+        assert "f64[64,3]" in text
+
+    def test_chain_hlo_text(self):
+        text = aot.lower_chain(256, 8, 4)
+        assert "HloModule" in text
+
+    def test_shapes_registered_in_manifest_tables(self):
+        # The (n, r) grid aot.py lowers must satisfy the kernel block
+        # divisibility contract.
+        for n, r in aot.HADAMARD_SHAPES:
+            assert n % 256 == 0, (n, r)
+        for nt, ns, d in aot.PREDICT_SHAPES:
+            assert nt % 64 == 0 and ns % 256 == 0

@@ -1,0 +1,169 @@
+//! Micro-benchmarks for the hot operators (criterion is unavailable in
+//! this offline environment, so this is a custom `harness = false` bench
+//! using median-of-N wall-clock timing).
+//!
+//! Covers every layer of the MVM stack plus the PJRT artifact path:
+//!   toeplitz_mvm        — O(m log m) grid-kernel multiply (SKI inner)
+//!   ski_mvm             — O(n + m log m) 1-D SKI operator
+//!   kiss_mvm            — Kronecker-grid operator (d = 3)
+//!   lemma31_native      — the O(r²n) Hadamard contraction, Rust
+//!   lemma31_pjrt        — same contraction through the AOT artifact
+//!   skip_build          — full merge-tree construction (d = 8)
+//!   skip_mvm            — root MVM after caching (Corollary 3.4)
+//!   cg_solve            — 30-iteration CG on the SKIP operator
+//!
+//! Run: `cargo bench` (add `-- --fast` for a quick pass).
+
+use skip_gp::data::gaussian_cloud;
+use skip_gp::kernels::{ProductKernel, Stationary1d};
+use skip_gp::linalg::{Matrix, SymToeplitz};
+use skip_gp::operators::lowrank::{
+    hadamard_pair_matvec_native, ContractionBackend, LanczosFactor,
+};
+use skip_gp::operators::{KroneckerSkiOp, LinearOp, SkiOp, SkipComponent, SkipOp};
+use skip_gp::runtime::PjrtBackend;
+use skip_gp::solvers::{cg_solve, CgConfig};
+use skip_gp::util::{bench_median_s, Rng};
+use std::io::Write;
+use std::path::Path;
+
+struct Bench {
+    rows: Vec<(String, f64, String)>,
+    min_iters: usize,
+    min_time: f64,
+}
+
+impl Bench {
+    fn run(&mut self, name: &str, note: &str, mut f: impl FnMut()) {
+        let med = bench_median_s(self.min_iters, self.min_time, &mut f);
+        println!("{name:<18} {:>12.3} µs   {note}", med * 1e6);
+        self.rows.push((name.to_string(), med, note.to_string()));
+    }
+
+    fn write_csv(&self, path: &Path) {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::File::create(path).expect("bench csv");
+        writeln!(f, "bench,median_s,note").unwrap();
+        for (n, t, note) in &self.rows {
+            writeln!(f, "{n},{t},{note}").unwrap();
+        }
+        println!("wrote {}", path.display());
+    }
+}
+
+fn random_factor(n: usize, r: usize, seed: u64) -> LanczosFactor {
+    let mut rng = Rng::new(seed);
+    let q = Matrix::from_fn(n, r, |_, _| rng.normal());
+    let mut t = Matrix::from_fn(r, r, |_, _| rng.normal());
+    t.symmetrize();
+    LanczosFactor { q, t }
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let mut b = Bench {
+        rows: Vec::new(),
+        min_iters: if fast { 3 } else { 10 },
+        min_time: if fast { 0.05 } else { 0.3 },
+    };
+    let mut rng = Rng::new(0);
+
+    // --- Toeplitz MVM (SKI's K_UU multiply), m = 1024.
+    {
+        let kern = Stationary1d::rbf(0.5);
+        let t = SymToeplitz::new(kern.toeplitz_column(1024, 0.01));
+        let v = rng.normal_vec(1024);
+        b.run("toeplitz_mvm", "m=1024", || {
+            std::hint::black_box(t.matvec(&v));
+        });
+    }
+
+    // --- 1-D SKI MVM, n = 4096, m = 512.
+    {
+        let xs = gaussian_cloud(4096, 1, 1);
+        let kern = Stationary1d::rbf(0.7);
+        let ski = SkiOp::new(&xs.col(0), &kern, 512);
+        let v = rng.normal_vec(4096);
+        b.run("ski_mvm", "n=4096 m=512", || {
+            std::hint::black_box(ski.matvec(&v));
+        });
+    }
+
+    // --- KISS-GP MVM, n = 2048, d = 3, m = 32 (grid 32³ = 32768).
+    {
+        let xs = gaussian_cloud(2048, 3, 2);
+        let kern = ProductKernel::rbf(3, 1.0, 1.0);
+        let op = KroneckerSkiOp::new(&xs, &kern, 32);
+        let v = rng.normal_vec(2048);
+        b.run("kiss_mvm", "n=2048 d=3 m=32", || {
+            std::hint::black_box(op.matvec(&v));
+        });
+    }
+
+    // --- Lemma 3.1 contraction, native, n = 2048, r = 32.
+    let fa = random_factor(2048, 32, 3);
+    let fb = random_factor(2048, 32, 4);
+    let v2048 = rng.normal_vec(2048);
+    b.run("lemma31_native", "n=2048 r=32", || {
+        std::hint::black_box(hadamard_pair_matvec_native(&fa, &fb, &v2048));
+    });
+
+    // --- Same contraction through the PJRT artifact (if built).
+    if Path::new("artifacts/manifest.json").exists() {
+        let backend = PjrtBackend::load(Path::new("artifacts")).expect("artifacts");
+        b.run("lemma31_pjrt", "n=2048 r=32 (AOT artifact)", || {
+            std::hint::black_box(backend.hadamard_pair_matvec(&fa, &fb, &v2048));
+        });
+        let (pjrt, native) = backend.call_counts();
+        assert!(pjrt > 0 && native == 0, "pjrt bench fell back to native");
+    } else {
+        println!("lemma31_pjrt       skipped (run `make artifacts`)");
+    }
+
+    // --- SKIP merge-tree build + cached MVM, n = 2048, d = 8, r = 20.
+    {
+        let n = 2048;
+        let d = 8;
+        let xs = gaussian_cloud(n, d, 5);
+        let kern = ProductKernel::rbf(d, 1.6, 1.0);
+        let skis: Vec<SkiOp> = (0..d)
+            .map(|k| SkiOp::new(&xs.col(k), &kern.factors[k], 128))
+            .collect();
+        b.run("skip_build", "n=2048 d=8 r=20", || {
+            let comps: Vec<SkipComponent> = skis
+                .iter()
+                .map(|s| SkipComponent::Op(s as &dyn LinearOp))
+                .collect();
+            let mut r = Rng::new(6);
+            std::hint::black_box(SkipOp::build_native(comps, 20, &mut r));
+        });
+        let comps: Vec<SkipComponent> = skis
+            .iter()
+            .map(|s| SkipComponent::Op(s as &dyn LinearOp))
+            .collect();
+        let mut r6 = Rng::new(6);
+        let skip = SkipOp::build_native(comps, 20, &mut r6);
+        let v = rng.normal_vec(n);
+        b.run("skip_mvm", "n=2048 d=8 r=20 (cached)", || {
+            std::hint::black_box(skip.matvec(&v));
+        });
+        // --- CG solve on the SKIP operator.
+        let shifted = skip_gp::operators::AffineOp {
+            inner: Box::new(skip),
+            scale: 1.0,
+            shift: 0.1,
+        };
+        let y = rng.normal_vec(n);
+        b.run("cg_solve", "n=2048 30 iters", || {
+            std::hint::black_box(cg_solve(
+                &shifted,
+                &y,
+                CgConfig { max_iters: 30, tol: 1e-10 },
+            ));
+        });
+    }
+
+    b.write_csv(Path::new("results/bench_micro.csv"));
+}

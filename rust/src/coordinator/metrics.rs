@@ -1,0 +1,123 @@
+//! Lightweight metrics registry: counters and timers keyed by name.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Aggregated timer statistics.
+#[derive(Clone, Debug, Default)]
+pub struct TimerStats {
+    pub count: usize,
+    pub total_s: f64,
+    pub max_s: f64,
+}
+
+/// Thread-safe metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    timers: Mutex<BTreeMap<String, TimerStats>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    /// Increment a counter.
+    pub fn incr(&self, name: &str, by: u64) {
+        let mut c = self.counters.lock().unwrap();
+        *c.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    /// Record a duration under `name`.
+    pub fn record(&self, name: &str, seconds: f64) {
+        let mut t = self.timers.lock().unwrap();
+        let e = t.entry(name.to_string()).or_default();
+        e.count += 1;
+        e.total_s += seconds;
+        e.max_s = e.max_s.max(seconds);
+    }
+
+    /// Time a closure under `name`.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.record(name, t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        *self.counters.lock().unwrap().get(name).unwrap_or(&0)
+    }
+
+    pub fn timer(&self, name: &str) -> TimerStats {
+        self.timers
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Human-readable dump, sorted by name.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {k} = {v}\n"));
+        }
+        for (k, v) in self.timers.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "timer   {k}: n={} total={:.3}s mean={:.4}s max={:.4}s\n",
+                v.count,
+                v.total_s,
+                v.total_s / v.count.max(1) as f64,
+                v.max_s
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("mvm", 3);
+        m.incr("mvm", 2);
+        assert_eq!(m.counter("mvm"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timers_aggregate() {
+        let m = Metrics::new();
+        m.record("cg", 0.5);
+        m.record("cg", 1.5);
+        let t = m.timer("cg");
+        assert_eq!(t.count, 2);
+        assert!((t.total_s - 2.0).abs() < 1e-12);
+        assert!((t.max_s - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_returns_value() {
+        let m = Metrics::new();
+        let v = m.time("op", || 7);
+        assert_eq!(v, 7);
+        assert_eq!(m.timer("op").count, 1);
+    }
+
+    #[test]
+    fn report_contains_entries() {
+        let m = Metrics::new();
+        m.incr("a", 1);
+        m.record("b", 0.1);
+        let r = m.report();
+        assert!(r.contains("counter a = 1"));
+        assert!(r.contains("timer   b"));
+    }
+}

@@ -1,0 +1,10 @@
+//! Experiment coordination: metrics, sessions, and the job scheduler that
+//! drives the benchmark harness (Layer 3's orchestration role).
+
+pub mod metrics;
+pub mod scheduler;
+pub mod session;
+
+pub use metrics::Metrics;
+pub use scheduler::{print_summary, JobReport, JobStatus, Scheduler};
+pub use session::Session;

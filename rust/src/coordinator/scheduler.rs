@@ -1,0 +1,141 @@
+//! Experiment scheduler: runs a queue of named jobs with isolation.
+//!
+//! The harness registers one job per table/figure; `run_all` executes them
+//! sequentially (this testbed exposes a single core), captures panics so
+//! one failing experiment cannot take down a sweep, and reports per-job
+//! wall time and status.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::Instant;
+
+/// Outcome of one job.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobStatus {
+    Ok,
+    Failed(String),
+    Skipped(String),
+}
+
+/// Report for one executed job.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub name: String,
+    pub status: JobStatus,
+    pub seconds: f64,
+}
+
+type JobFn = Box<dyn FnOnce() -> crate::Result<()>>;
+
+/// A queue of experiments.
+pub struct Scheduler {
+    jobs: Vec<(String, JobFn)>,
+}
+
+impl Default for Scheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler {
+    pub fn new() -> Self {
+        Scheduler { jobs: Vec::new() }
+    }
+
+    /// Register a job.
+    pub fn add(&mut self, name: &str, f: impl FnOnce() -> crate::Result<()> + 'static) {
+        self.jobs.push((name.to_string(), Box::new(f)));
+    }
+
+    /// Number of queued jobs.
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Run everything; panics and errors are contained per job.
+    pub fn run_all(self) -> Vec<JobReport> {
+        let mut reports = Vec::with_capacity(self.jobs.len());
+        for (name, job) in self.jobs {
+            println!("── running {name} ──");
+            let t0 = Instant::now();
+            let status = match catch_unwind(AssertUnwindSafe(job)) {
+                Ok(Ok(())) => JobStatus::Ok,
+                Ok(Err(e)) => JobStatus::Failed(e.to_string()),
+                Err(p) => {
+                    let msg = p
+                        .downcast_ref::<String>()
+                        .cloned()
+                        .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                        .unwrap_or_else(|| "panic".to_string());
+                    JobStatus::Failed(format!("panicked: {msg}"))
+                }
+            };
+            let seconds = t0.elapsed().as_secs_f64();
+            if let JobStatus::Failed(e) = &status {
+                eprintln!("job {name} FAILED: {e}");
+            }
+            reports.push(JobReport { name, status, seconds });
+        }
+        reports
+    }
+}
+
+/// Print a one-line summary per job.
+pub fn print_summary(reports: &[JobReport]) {
+    println!("\n=== experiment summary ===");
+    for r in reports {
+        let s = match &r.status {
+            JobStatus::Ok => "ok".to_string(),
+            JobStatus::Failed(e) => format!("FAILED ({e})"),
+            JobStatus::Skipped(why) => format!("skipped ({why})"),
+        };
+        println!("  {:<18} {:>8.2}s  {}", r.name, r.seconds, s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_jobs_in_order() {
+        use std::sync::{Arc, Mutex};
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let mut s = Scheduler::new();
+        for i in 0..3 {
+            let log = log.clone();
+            s.add(&format!("job{i}"), move || {
+                log.lock().unwrap().push(i);
+                Ok(())
+            });
+        }
+        let reports = s.run_all();
+        assert_eq!(*log.lock().unwrap(), vec![0, 1, 2]);
+        assert!(reports.iter().all(|r| r.status == JobStatus::Ok));
+    }
+
+    #[test]
+    fn contains_panics() {
+        let mut s = Scheduler::new();
+        s.add("boom", || panic!("kaboom"));
+        s.add("after", || Ok(()));
+        let reports = s.run_all();
+        assert!(matches!(reports[0].status, JobStatus::Failed(_)));
+        assert_eq!(reports[1].status, JobStatus::Ok);
+    }
+
+    #[test]
+    fn propagates_errors_as_failed() {
+        let mut s = Scheduler::new();
+        s.add("err", || Err(crate::Error::Config("bad".into())));
+        let reports = s.run_all();
+        match &reports[0].status {
+            JobStatus::Failed(e) => assert!(e.contains("bad")),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

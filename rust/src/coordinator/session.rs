@@ -1,0 +1,146 @@
+//! Experiment sessions: named runs that collect metrics and emit CSV.
+//!
+//! Every harness entry point (`skip-gp bench …`) runs inside a session so
+//! results land in `results/<name>.csv` with uniform metadata, and the
+//! per-op metrics (MVM counts, CG iterations, timer totals) are printed
+//! alongside the paper-style table.
+
+use super::metrics::Metrics;
+use crate::error::Result;
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+/// A running experiment.
+pub struct Session {
+    pub name: String,
+    pub out_dir: PathBuf,
+    pub metrics: Metrics,
+    start: Instant,
+    rows: Vec<Vec<String>>,
+    header: Option<Vec<String>>,
+}
+
+impl Session {
+    /// Start a session writing into `out_dir` (created if needed).
+    pub fn new(name: &str, out_dir: &Path) -> Result<Self> {
+        fs::create_dir_all(out_dir)?;
+        Ok(Session {
+            name: name.to_string(),
+            out_dir: out_dir.to_path_buf(),
+            metrics: Metrics::new(),
+            start: Instant::now(),
+            rows: Vec::new(),
+            header: None,
+        })
+    }
+
+    /// Set the CSV header (once).
+    pub fn header(&mut self, cols: &[&str]) {
+        assert!(self.header.is_none(), "header already set");
+        self.header = Some(cols.iter().map(|s| s.to_string()).collect());
+    }
+
+    /// Append a result row (stringified cells).
+    pub fn row(&mut self, cells: &[String]) {
+        if let Some(h) = &self.header {
+            assert_eq!(cells.len(), h.len(), "row width != header width");
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: format mixed cells.
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let v: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&v);
+    }
+
+    /// Elapsed wall-clock seconds.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Write `results/<name>.csv` and return its path.
+    pub fn finish(&self) -> Result<PathBuf> {
+        let path = self.out_dir.join(format!("{}.csv", self.name));
+        let mut f = fs::File::create(&path)?;
+        if let Some(h) = &self.header {
+            writeln!(f, "{}", h.join(","))?;
+        }
+        for r in &self.rows {
+            writeln!(f, "{}", r.join(","))?;
+        }
+        Ok(path)
+    }
+
+    /// Pretty-print the collected rows as an aligned table.
+    pub fn print_table(&self) {
+        let mut widths: Vec<usize> = Vec::new();
+        let all: Vec<&Vec<String>> =
+            self.header.iter().chain(self.rows.iter()).collect();
+        for row in &all {
+            for (i, c) in row.iter().enumerate() {
+                if widths.len() <= i {
+                    widths.push(0);
+                }
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        for (ri, row) in all.iter().enumerate() {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            println!("  {}", line.join("  "));
+            if ri == 0 && self.header.is_some() {
+                let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+                println!("  {}", "-".repeat(total));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("skipgp-session-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn writes_csv() {
+        let dir = tmpdir("a");
+        let mut s = Session::new("test_exp", &dir).unwrap();
+        s.header(&["method", "mae", "time_s"]);
+        s.rowf(&[&"skip", &0.07, &1.5]);
+        s.rowf(&[&"sgpr", &0.16, &4.2]);
+        let path = s.finish().unwrap();
+        let text = fs::read_to_string(path).unwrap();
+        assert!(text.starts_with("method,mae,time_s\n"));
+        assert!(text.contains("skip,0.07,1.5"));
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let dir = tmpdir("b");
+        let mut s = Session::new("x", &dir).unwrap();
+        s.header(&["a", "b"]);
+        s.row(&["1".into()]);
+    }
+
+    #[test]
+    fn metrics_accessible() {
+        let dir = tmpdir("c");
+        let s = Session::new("m", &dir).unwrap();
+        s.metrics.incr("ops", 2);
+        assert_eq!(s.metrics.counter("ops"), 2);
+        fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,190 @@
+//! Synthetic childhood-development (growth-curve) data — the §6 workload.
+//!
+//! Surrogate for the Gates-foundation longitudinal dataset: each task is a
+//! child with 5–30 weight measurements at irregular ages; children belong
+//! to latent subpopulations (above-average / average / below-average
+//! development, Fig. 3's three cluster archetypes) with cluster-level mean
+//! curves plus individual Matérn-like wiggles.
+
+use crate::gp::mtgp::MtgpData;
+use crate::util::Rng;
+
+/// Generator configuration.
+#[derive(Clone, Debug)]
+pub struct GrowthConfig {
+    pub num_children: usize,
+    /// Latent clusters (paper uses above/average/below = 3).
+    pub num_clusters: usize,
+    pub min_obs: usize,
+    pub max_obs: usize,
+    /// Observation noise on weight (z-scored units).
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for GrowthConfig {
+    fn default() -> Self {
+        GrowthConfig {
+            num_children: 30,
+            num_clusters: 3,
+            min_obs: 5,
+            max_obs: 30,
+            noise: 0.08,
+            seed: 0,
+        }
+    }
+}
+
+/// Generated growth data: observations plus ground-truth cluster labels.
+#[derive(Clone, Debug)]
+pub struct GrowthData {
+    pub data: MtgpData,
+    /// True cluster of each child (for evaluation only).
+    pub true_cluster: Vec<usize>,
+}
+
+/// Cluster-level mean growth curve on age t ∈ [0, 1] (normalized 0–24
+/// months): logistic rise whose asymptote/rate depend on the cluster.
+fn cluster_curve(cluster: usize, num_clusters: usize, t: f64) -> f64 {
+    // Spread asymptotes symmetrically around 0 in z-scored weight units.
+    let offset = if num_clusters == 1 {
+        0.0
+    } else {
+        2.4 * (cluster as f64 / (num_clusters - 1) as f64) - 1.2
+    };
+    // Shared logistic growth shape + cluster level + mild slope variation.
+    let rate = 6.0 + cluster as f64;
+    let logistic = 1.0 / (1.0 + (-rate * (t - 0.35)).exp());
+    offset + 1.6 * logistic - 0.8
+}
+
+/// Generate the growth dataset.
+pub fn generate(cfg: &GrowthConfig) -> GrowthData {
+    let mut rng = Rng::new(cfg.seed);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    let mut task_of = Vec::new();
+    let mut true_cluster = Vec::with_capacity(cfg.num_children);
+    for child in 0..cfg.num_children {
+        let c = rng.below(cfg.num_clusters);
+        true_cluster.push(c);
+        let n_obs = cfg.min_obs + rng.below(cfg.max_obs - cfg.min_obs + 1);
+        // Individual variation: smooth random offset + slope.
+        let indiv_offset = 0.15 * rng.normal();
+        let indiv_slope = 0.2 * rng.normal();
+        let indiv_phase = rng.uniform_in(0.0, std::f64::consts::TAU);
+        for _ in 0..n_obs {
+            let t = rng.uniform_in(0.0, 1.0);
+            let mean = cluster_curve(c, cfg.num_clusters, t)
+                + indiv_offset
+                + indiv_slope * (t - 0.5)
+                + 0.05 * (8.0 * t + indiv_phase).sin();
+            x.push(t);
+            y.push(mean + cfg.noise * rng.normal());
+            task_of.push(child);
+        }
+    }
+    GrowthData {
+        data: MtgpData { x, y, task_of, num_tasks: cfg.num_children },
+        true_cluster,
+    }
+}
+
+/// Split one child's observations into the first `keep` (by age) for
+/// conditioning and the rest for extrapolation evaluation — the Fig. 3/4
+/// protocol ("predict future development from limited measurements").
+pub fn split_child(
+    data: &MtgpData,
+    child: usize,
+    keep: usize,
+) -> (Vec<f64>, Vec<f64>, Vec<f64>, Vec<f64>) {
+    let mut obs: Vec<(f64, f64)> = data
+        .x
+        .iter()
+        .zip(&data.y)
+        .zip(&data.task_of)
+        .filter(|(_, &t)| t == child)
+        .map(|((&x, &y), _)| (x, y))
+        .collect();
+    obs.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let keep = keep.min(obs.len());
+    let (head, tail) = obs.split_at(keep);
+    (
+        head.iter().map(|p| p.0).collect(),
+        head.iter().map(|p| p.1).collect(),
+        tail.iter().map(|p| p.0).collect(),
+        tail.iter().map(|p| p.1).collect(),
+    )
+}
+
+/// Remove a child's observations entirely (to re-add a truncated version).
+pub fn without_child(data: &MtgpData, child: usize) -> MtgpData {
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    let mut task_of = Vec::new();
+    for i in 0..data.len() {
+        if data.task_of[i] != child {
+            x.push(data.x[i]);
+            y.push(data.y[i]);
+            task_of.push(data.task_of[i]);
+        }
+    }
+    MtgpData { x, y, task_of, num_tasks: data.num_tasks }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn obs_counts_in_range() {
+        let g = generate(&GrowthConfig { num_children: 20, ..Default::default() });
+        for child in 0..20 {
+            let cnt = g.data.task_of.iter().filter(|&&t| t == child).count();
+            assert!((5..=30).contains(&cnt), "child {child}: {cnt} obs");
+        }
+        assert_eq!(g.true_cluster.len(), 20);
+    }
+
+    #[test]
+    fn clusters_are_separated() {
+        // Mean weight at late age must be ordered by cluster index.
+        let v0 = cluster_curve(0, 3, 0.9);
+        let v1 = cluster_curve(1, 3, 0.9);
+        let v2 = cluster_curve(2, 3, 0.9);
+        assert!(v0 < v1 && v1 < v2, "{v0} {v1} {v2}");
+        assert!(v2 - v0 > 1.5, "separation {}", v2 - v0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = GrowthConfig::default();
+        let a = generate(&cfg);
+        let b = generate(&cfg);
+        assert_eq!(a.data.y, b.data.y);
+        assert_eq!(a.true_cluster, b.true_cluster);
+    }
+
+    #[test]
+    fn split_child_orders_by_age() {
+        let g = generate(&GrowthConfig { num_children: 5, seed: 3, ..Default::default() });
+        let (hx, hy, tx, _ty) = split_child(&g.data, 2, 4);
+        assert_eq!(hx.len(), 4);
+        assert_eq!(hy.len(), 4);
+        for w in hx.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+        if let (Some(&last_head), Some(&first_tail)) = (hx.last(), tx.first()) {
+            assert!(last_head <= first_tail);
+        }
+    }
+
+    #[test]
+    fn without_child_removes_only_that_child() {
+        let g = generate(&GrowthConfig { num_children: 6, seed: 4, ..Default::default() });
+        let reduced = without_child(&g.data, 3);
+        assert!(reduced.task_of.iter().all(|&t| t != 3));
+        let removed = g.data.task_of.iter().filter(|&&t| t == 3).count();
+        assert_eq!(reduced.len(), g.data.len() - removed);
+    }
+}

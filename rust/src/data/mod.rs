@@ -1,0 +1,12 @@
+//! Dataset substrate: synthetic surrogates for every dataset the paper
+//! evaluates on (UCI regression suites, the precipitation data, and the
+//! Gates childhood-growth data). See DESIGN.md §4 for the substitution
+//! rationale.
+
+pub mod growth;
+pub mod synthetic;
+
+pub use growth::{generate as generate_growth, GrowthConfig, GrowthData};
+pub use synthetic::{
+    dataset_by_name, gaussian_cloud, generate, DatasetSpec, RegressionData, DATASETS,
+};

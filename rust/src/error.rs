@@ -1,0 +1,42 @@
+//! Library-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by skip-gp.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Cholesky hit a non-positive pivot.
+    #[error("matrix not positive definite at pivot {pivot} (value {value})")]
+    NotPositiveDefinite { pivot: usize, value: f64 },
+
+    /// Tridiagonal eigensolver failed to converge.
+    #[error("tridiagonal eigensolver failed to converge at index {index}")]
+    EigFailed { index: usize },
+
+    /// CG failed to reach tolerance.
+    #[error("conjugate gradients did not converge: residual {residual} after {iters} iterations")]
+    CgDidNotConverge { iters: usize, residual: f64 },
+
+    /// Shape mismatch in an operator composition.
+    #[error("dimension mismatch: {context} (expected {expected}, got {got})")]
+    DimMismatch { context: &'static str, expected: usize, got: usize },
+
+    /// Runtime artifact problems (missing/corrupt AOT artifact).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// PJRT/XLA runtime failure.
+    #[error("xla runtime error: {0}")]
+    Xla(String),
+
+    /// I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// Configuration / CLI errors.
+    #[error("config error: {0}")]
+    Config(String),
+}
+
+/// Library result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,90 @@
+//! ADAM optimizer (Kingma & Ba, 2015) — the paper trains all
+//! hyperparameters "with ADAM using default optimization parameters".
+
+/// ADAM state over a flat parameter vector.
+#[derive(Clone, Debug)]
+pub struct Adam {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    m: Vec<f64>,
+    v: Vec<f64>,
+    t: usize,
+}
+
+impl Adam {
+    /// Default β₁=0.9, β₂=0.999, ε=1e-8.
+    pub fn new(dim: usize, lr: f64) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            t: 0,
+        }
+    }
+
+    /// Ascend step: `params ← params + update(grad)` (we maximize MLL).
+    pub fn step_ascend(&mut self, params: &mut [f64], grad: &[f64]) {
+        assert_eq!(params.len(), grad.len());
+        assert_eq!(params.len(), self.m.len());
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..params.len() {
+            let g = grad[i];
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * g;
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * g * g;
+            let mhat = self.m[i] / b1t;
+            let vhat = self.v[i] / b2t;
+            params[i] += self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+    }
+
+    /// Descend step (minimization).
+    pub fn step_descend(&mut self, params: &mut [f64], grad: &[f64]) {
+        let neg: Vec<f64> = grad.iter().map(|g| -g).collect();
+        self.step_ascend(params, &neg);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maximizes_concave_quadratic() {
+        // f(x) = -(x-3)², grad = -2(x-3); ascend should reach x ≈ 3.
+        let mut adam = Adam::new(1, 0.1);
+        let mut x = vec![0.0];
+        for _ in 0..500 {
+            let g = -2.0 * (x[0] - 3.0);
+            adam.step_ascend(&mut x, &[g]);
+        }
+        assert!((x[0] - 3.0).abs() < 0.05, "x={}", x[0]);
+    }
+
+    #[test]
+    fn minimizes_convex_quadratic() {
+        let mut adam = Adam::new(2, 0.05);
+        let mut x = vec![5.0, -4.0];
+        for _ in 0..2000 {
+            let g = vec![2.0 * x[0], 2.0 * (x[1] + 1.0)];
+            adam.step_descend(&mut x, &g);
+        }
+        assert!(x[0].abs() < 0.05);
+        assert!((x[1] + 1.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn first_step_is_lr_sized() {
+        let mut adam = Adam::new(1, 0.1);
+        let mut x = vec![0.0];
+        adam.step_ascend(&mut x, &[123.0]);
+        // ADAM's first step magnitude ≈ lr regardless of gradient scale.
+        assert!((x[0] - 0.1).abs() < 1e-6);
+    }
+}

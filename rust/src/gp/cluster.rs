@@ -1,0 +1,365 @@
+//! Cluster multi-task GP with Gibbs sampling (paper §6).
+//!
+//! Kernel (paper's display equation):
+//!
+//! ```text
+//! k((x,i),(x′,j)) = k_cluster(x,x′)·δ[λ_i = λ_j] + k_indiv(x,x′)·δ[i = j]
+//! ```
+//!
+//! with Matérn-5/2 `k_cluster`, `k_indiv` and a uniform categorical prior
+//! on the cluster assignment λ_i ∈ [1..c]. Both terms are product kernels
+//! (data kernel × indicator task kernel), so SKIP accelerates the O(c·s)
+//! marginal-likelihood evaluations each Gibbs sweep needs.
+
+use crate::kernels::{Stationary1d, TaskKernel};
+use crate::linalg::{Cholesky, Matrix};
+use crate::operators::{AffineOp, SkiOp, SkipComponent, SkipOp, SumOp, TaskOp};
+use crate::solvers::{cg_solve, slq_logdet, CgConfig, SlqConfig};
+use crate::util::Rng;
+use crate::Result;
+
+use super::mtgp::MtgpData;
+
+/// Configuration for the cluster-MTGP sampler.
+#[derive(Clone, Debug)]
+pub struct ClusterMtgpConfig {
+    /// Number of latent clusters c.
+    pub num_clusters: usize,
+    pub grid_m: usize,
+    pub rank: usize,
+    pub cg: CgConfig,
+    pub slq: SlqConfig,
+    pub seed: u64,
+    /// Use the SKIP fast path for MLL (false → dense Cholesky oracle).
+    pub use_skip: bool,
+}
+
+impl Default for ClusterMtgpConfig {
+    fn default() -> Self {
+        ClusterMtgpConfig {
+            num_clusters: 3,
+            grid_m: 64,
+            rank: 15,
+            cg: CgConfig { max_iters: 60, tol: 1e-4 },
+            slq: SlqConfig { num_probes: 6, max_rank: 20 },
+            seed: 0,
+            use_skip: true,
+        }
+    }
+}
+
+/// Cluster-structured multi-task GP.
+pub struct ClusterMtgp {
+    pub data: MtgpData,
+    pub k_cluster: Stationary1d,
+    pub k_indiv: Stationary1d,
+    /// Amplitude of the cluster-level term.
+    pub cluster_var: f64,
+    /// Amplitude of the individual term. Kept *below* the cluster
+    /// amplitude by default so per-task kernels cannot absorb the
+    /// cluster-level offsets (which would wash out the clustering).
+    pub indiv_var: f64,
+    pub sn2: f64,
+    /// Current cluster assignment per task.
+    pub assignments: Vec<usize>,
+    pub cfg: ClusterMtgpConfig,
+}
+
+impl ClusterMtgp {
+    pub fn new(data: MtgpData, cfg: ClusterMtgpConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed.wrapping_add(23));
+        let assignments =
+            (0..data.num_tasks).map(|_| rng.below(cfg.num_clusters)).collect();
+        ClusterMtgp {
+            data,
+            k_cluster: Stationary1d::matern52(1.0),
+            k_indiv: Stationary1d::matern52(0.5),
+            cluster_var: 1.0,
+            indiv_var: 0.2,
+            sn2: 0.05,
+            assignments,
+            cfg,
+        }
+    }
+
+    /// Cluster-membership task kernel for assignment vector `lambda`:
+    /// `B = onehot(λ)` (s×c) → `BBᵀ = δ[λ_i = λ_j]`.
+    fn cluster_task_kernel(&self, lambda: &[usize]) -> TaskKernel {
+        let s = self.data.num_tasks;
+        let c = self.cfg.num_clusters;
+        let mut b = Matrix::zeros(s, c);
+        for (t, &l) in lambda.iter().enumerate() {
+            b.set(t, l, 1.0);
+        }
+        TaskKernel::new(b, vec![0.0; s])
+    }
+
+    /// Identity task kernel: `δ[i = j]` over tasks.
+    fn indiv_task_kernel(&self) -> TaskKernel {
+        TaskKernel::independent(self.data.num_tasks)
+    }
+
+    /// Dense K̂ for assignment vector `lambda` (oracle / small n).
+    pub fn khat_dense(&self, lambda: &[usize]) -> Matrix {
+        let n = self.data.len();
+        let mut k = Matrix::from_fn(n, n, |i, j| {
+            let (ti, tj) = (self.data.task_of[i], self.data.task_of[j]);
+            let mut v = 0.0;
+            if lambda[ti] == lambda[tj] {
+                v += self.cluster_var * self.k_cluster.eval(self.data.x[i], self.data.x[j]);
+            }
+            if ti == tj {
+                v += self.indiv_var * self.k_indiv.eval(self.data.x[i], self.data.x[j]);
+            }
+            v
+        });
+        k.add_diag(self.sn2);
+        k
+    }
+
+    /// Exact dense MLL for `lambda`.
+    pub fn mll_dense(&self, lambda: &[usize]) -> Result<f64> {
+        let n = self.data.len() as f64;
+        let chol = Cholesky::new_with_jitter(&self.khat_dense(lambda), 1e-10)?;
+        let alpha = chol.solve(&self.data.y);
+        let fit: f64 = self.data.y.iter().zip(&alpha).map(|(y, a)| y * a).sum();
+        Ok(-0.5 * fit - 0.5 * chol.logdet()
+            - 0.5 * n * (2.0 * std::f64::consts::PI).ln())
+    }
+
+    /// Build the SKIP-accelerated covariance operator for `lambda`:
+    /// sum of two SKIP products plus noise.
+    pub fn build_operator(&self, lambda: &[usize], seed: u64) -> AffineOp {
+        let mut rng = Rng::new(seed);
+        // Term 1: k_cluster ∘ cluster-membership.
+        let ski_c = SkiOp::new(&self.data.x, &self.k_cluster, self.cfg.grid_m);
+        let fac_c = TaskOp::new(self.data.task_of.clone(), self.cluster_task_kernel(lambda))
+            .factor();
+        let skip_c = SkipOp::build_native(
+            vec![SkipComponent::Op(&ski_c), SkipComponent::Factor(fac_c)],
+            self.cfg.rank,
+            &mut rng,
+        );
+        // Term 2: k_indiv ∘ task-identity.
+        let ski_i = SkiOp::new(&self.data.x, &self.k_indiv, self.cfg.grid_m);
+        let fac_i =
+            TaskOp::new(self.data.task_of.clone(), self.indiv_task_kernel()).factor();
+        let skip_i = SkipOp::build_native(
+            vec![SkipComponent::Op(&ski_i), SkipComponent::Factor(fac_i)],
+            self.cfg.rank,
+            &mut rng,
+        );
+        let sum = SumOp {
+            terms: vec![
+                Box::new(AffineOp { inner: Box::new(skip_c), scale: self.cluster_var, shift: 0.0 }),
+                Box::new(AffineOp { inner: Box::new(skip_i), scale: self.indiv_var, shift: 0.0 }),
+            ],
+        };
+        AffineOp { inner: Box::new(sum), scale: 1.0, shift: self.sn2 }
+    }
+
+    /// MLL for `lambda` via the configured path (SKIP or dense).
+    pub fn mll(&self, lambda: &[usize], seed: u64) -> f64 {
+        if !self.cfg.use_skip {
+            return self.mll_dense(lambda).unwrap_or(f64::NEG_INFINITY);
+        }
+        let op = self.build_operator(lambda, seed);
+        let n = self.data.len() as f64;
+        let sol = cg_solve(&op, &self.data.y, self.cfg.cg);
+        let fit: f64 = self.data.y.iter().zip(&sol.x).map(|(y, a)| y * a).sum();
+        let mut rng = Rng::new(seed ^ 0xC1C1_D2D2_E3E3_F4F4);
+        let logdet = slq_logdet(&op, self.cfg.slq, &mut rng);
+        -0.5 * fit - 0.5 * logdet - 0.5 * n * (2.0 * std::f64::consts::PI).ln()
+    }
+
+    /// One Gibbs sweep over all task assignments. Returns the number of
+    /// assignment changes. Within a sweep all MLL evaluations share the
+    /// same probe seed (common random numbers), so the categorical
+    /// comparisons are low-variance.
+    pub fn gibbs_sweep(&mut self, rng: &mut Rng) -> usize {
+        let c = self.cfg.num_clusters;
+        let sweep_seed = rng.next_u64();
+        let mut changes = 0;
+        for t in 0..self.data.num_tasks {
+            let mut lambda = self.assignments.clone();
+            let mut log_post = Vec::with_capacity(c);
+            for a in 0..c {
+                lambda[t] = a;
+                // Uniform prior over clusters → posterior ∝ likelihood.
+                log_post.push(self.mll(&lambda, sweep_seed));
+            }
+            // Softmax sample.
+            let mx = log_post.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let weights: Vec<f64> =
+                log_post.iter().map(|&lp| (lp - mx).exp()).collect();
+            let new_a = rng.categorical(&weights);
+            if new_a != self.assignments[t] {
+                changes += 1;
+            }
+            self.assignments[t] = new_a;
+        }
+        changes
+    }
+
+    /// Run `sweeps` Gibbs sweeps; returns assignment-change counts.
+    pub fn run_gibbs(&mut self, sweeps: usize) -> Vec<usize> {
+        let mut rng = Rng::new(self.cfg.seed.wrapping_add(101));
+        (0..sweeps).map(|_| self.gibbs_sweep(&mut rng)).collect()
+    }
+
+    /// Posterior distribution over cluster assignment for one task given
+    /// the others fixed (Fig. 3's per-cluster probabilities).
+    pub fn cluster_posterior(&self, task: usize, seed: u64) -> Vec<f64> {
+        let c = self.cfg.num_clusters;
+        let mut lambda = self.assignments.clone();
+        let mut log_post = Vec::with_capacity(c);
+        for a in 0..c {
+            lambda[task] = a;
+            log_post.push(self.mll(&lambda, seed));
+        }
+        let mx = log_post.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let ws: Vec<f64> = log_post.iter().map(|&lp| (lp - mx).exp()).collect();
+        let z: f64 = ws.iter().sum();
+        ws.iter().map(|w| w / z).collect()
+    }
+
+    /// Dense predictive mean at (x*, task) pairs under current assignments.
+    pub fn predict_mean(&self, xt: &[f64], task_t: &[usize]) -> Result<Vec<f64>> {
+        let chol = Cholesky::new_with_jitter(&self.khat_dense(&self.assignments), 1e-10)?;
+        let alpha = chol.solve(&self.data.y);
+        Ok(xt
+            .iter()
+            .zip(task_t)
+            .map(|(&x, &t)| {
+                let lt = self.assignments[t];
+                let mut acc = 0.0;
+                for j in 0..self.data.len() {
+                    let tj = self.data.task_of[j];
+                    let mut k = 0.0;
+                    if self.assignments[tj] == lt {
+                        k += self.cluster_var * self.k_cluster.eval(x, self.data.x[j]);
+                    }
+                    if tj == t {
+                        k += self.indiv_var * self.k_indiv.eval(x, self.data.x[j]);
+                    }
+                    acc += k * alpha[j];
+                }
+                acc
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three true clusters with distinct mean curves.
+    fn clustered_tasks(
+        tasks_per_cluster: usize,
+        per_task: usize,
+        seed: u64,
+    ) -> (MtgpData, Vec<usize>) {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        let mut task_of = Vec::new();
+        let mut truth = Vec::new();
+        let s = 3 * tasks_per_cluster;
+        for t in 0..s {
+            let c = t / tasks_per_cluster;
+            truth.push(c);
+            // Clusters differ in both level and shape so the cluster
+            // kernel, not the individual kernel, explains the signal.
+            let (level, freq) = match c {
+                0 => (2.5, 0.8),
+                1 => (0.0, 1.6),
+                _ => (-2.5, 1.2),
+            };
+            for _ in 0..per_task {
+                let xi = rng.uniform_in(0.0, 3.0);
+                x.push(xi);
+                y.push(level + 0.6 * (xi * freq).sin() + 0.05 * rng.normal());
+                task_of.push(t);
+            }
+        }
+        (MtgpData { x, y, task_of, num_tasks: s }, truth)
+    }
+
+    /// Cluster-label-invariant agreement: fraction of task pairs whose
+    /// co-membership matches the truth.
+    fn pair_agreement(a: &[usize], b: &[usize]) -> f64 {
+        let s = a.len();
+        let mut agree = 0usize;
+        let mut total = 0usize;
+        for i in 0..s {
+            for j in (i + 1)..s {
+                total += 1;
+                if (a[i] == a[j]) == (b[i] == b[j]) {
+                    agree += 1;
+                }
+            }
+        }
+        agree as f64 / total as f64
+    }
+
+    #[test]
+    fn skip_mll_tracks_dense_mll() {
+        let (data, truth) = clustered_tasks(2, 8, 1);
+        let cfg = ClusterMtgpConfig {
+            rank: 30,
+            cg: CgConfig { max_iters: 150, tol: 1e-6 },
+            slq: SlqConfig { num_probes: 20, max_rank: 30 },
+            ..Default::default()
+        };
+        let model = ClusterMtgp::new(data, cfg);
+        let dense = model.mll_dense(&truth).unwrap();
+        let fast = model.mll(&truth, 5);
+        let rel = (fast - dense).abs() / dense.abs();
+        assert!(rel < 0.08, "skip {fast} dense {dense} rel {rel}");
+    }
+
+    #[test]
+    fn mll_prefers_true_clustering() {
+        let (data, truth) = clustered_tasks(3, 8, 2);
+        let model = ClusterMtgp::new(data, ClusterMtgpConfig::default());
+        let good = model.mll_dense(&truth).unwrap();
+        // Scrambled assignment.
+        let bad_lambda: Vec<usize> = (0..truth.len()).map(|t| t % 3).collect();
+        let bad = model.mll_dense(&bad_lambda).unwrap();
+        assert!(good > bad, "true-cluster MLL {good} ≤ scrambled {bad}");
+    }
+
+    #[test]
+    fn gibbs_recovers_clusters_dense() {
+        let (data, truth) = clustered_tasks(3, 8, 3);
+        let cfg = ClusterMtgpConfig { use_skip: false, ..Default::default() };
+        let mut model = ClusterMtgp::new(data, cfg);
+        model.run_gibbs(12);
+        let agreement = pair_agreement(&model.assignments, &truth);
+        assert!(agreement > 0.8, "agreement {agreement}");
+    }
+
+    #[test]
+    fn gibbs_recovers_clusters_skip() {
+        let (data, truth) = clustered_tasks(3, 8, 4);
+        let cfg = ClusterMtgpConfig { use_skip: true, ..Default::default() };
+        let mut model = ClusterMtgp::new(data, cfg);
+        model.run_gibbs(8);
+        let agreement = pair_agreement(&model.assignments, &truth);
+        assert!(agreement > 0.8, "agreement {agreement}");
+    }
+
+    #[test]
+    fn posterior_concentrates_with_more_data() {
+        // Fig. 3's qualitative claim: more observed measurements → more
+        // confident cluster posterior for a new task.
+        let (data, truth) = clustered_tasks(3, 10, 5);
+        let cfg = ClusterMtgpConfig { use_skip: false, ..Default::default() };
+        let mut model = ClusterMtgp::new(data, cfg);
+        model.assignments = truth.clone();
+        // Task 0 (cluster 0): posterior with all its data.
+        let post = model.cluster_posterior(0, 9);
+        assert!(post[truth[0]] > 0.5, "posterior {post:?}");
+    }
+}

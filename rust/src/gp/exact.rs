@@ -1,0 +1,220 @@
+//! Exact GP regression via Cholesky — the paper's "Full GP" baseline
+//! (Table 1, first column; complexity O(n³), Table 2 first row).
+
+use super::adam::Adam;
+use super::hypers::GpHypers;
+use crate::kernels::ProductKernel;
+use crate::linalg::{Cholesky, Matrix};
+use crate::Result;
+
+/// Exact (Cholesky) GP with shared-lengthscale RBF kernel.
+pub struct ExactGp {
+    pub xs: Matrix,
+    pub ys: Vec<f64>,
+    pub hypers: GpHypers,
+    /// Cached α = K̂⁻¹ y after `fit`/`refresh`.
+    alpha: Option<Vec<f64>>,
+    chol: Option<Cholesky>,
+}
+
+impl ExactGp {
+    pub fn new(xs: Matrix, ys: Vec<f64>, hypers: GpHypers) -> Self {
+        assert_eq!(xs.rows, ys.len());
+        ExactGp { xs, ys, hypers, alpha: None, chol: None }
+    }
+
+    fn kernel(&self, h: &GpHypers) -> ProductKernel {
+        ProductKernel::rbf(self.xs.cols, h.ell(), h.sf2())
+    }
+
+    /// K̂ = K + σ_n² I, densely.
+    fn khat(&self, h: &GpHypers) -> Matrix {
+        let mut k = self.kernel(h).gram_sym(&self.xs);
+        k.add_diag(h.sn2());
+        k
+    }
+
+    /// Exact marginal log likelihood (Eq. 3).
+    pub fn mll(&self, h: &GpHypers) -> Result<f64> {
+        let n = self.ys.len() as f64;
+        let chol = Cholesky::new_with_jitter(&self.khat(h), 0.0)?;
+        let alpha = chol.solve(&self.ys);
+        let fit: f64 = self.ys.iter().zip(&alpha).map(|(y, a)| y * a).sum();
+        Ok(-0.5 * fit - 0.5 * chol.logdet() - 0.5 * n * (2.0 * std::f64::consts::PI).ln())
+    }
+
+    /// Analytic MLL gradient wrt (log ℓ, log σ_f², log σ_n²):
+    /// dL/dθ = ½ tr((ααᵀ − K̂⁻¹) ∂K̂/∂θ).
+    pub fn mll_grad(&self, h: &GpHypers) -> Result<(f64, Vec<f64>)> {
+        let n = self.xs.rows;
+        let khat = self.khat(h);
+        let chol = Cholesky::new_with_jitter(&khat, 0.0)?;
+        let alpha = chol.solve(&self.ys);
+        let kinv = chol.inverse();
+        let fit: f64 = self.ys.iter().zip(&alpha).map(|(y, a)| y * a).sum();
+        let mll = -0.5 * fit
+            - 0.5 * chol.logdet()
+            - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+
+        // K (kernel part, no noise).
+        let k = self.kernel(h).gram_sym(&self.xs);
+        let ell2 = h.ell() * h.ell();
+        // ∂K/∂logℓ = K ∘ S, S_ij = ‖x_i − x_j‖²/ℓ².
+        let dk_ell = Matrix::from_fn(n, n, |i, j| {
+            let (xi, xj) = (self.xs.row(i), self.xs.row(j));
+            let sq: f64 = xi.iter().zip(xj).map(|(a, b)| (a - b) * (a - b)).sum();
+            k.get(i, j) * sq / ell2
+        });
+        // ∂K̂/∂logσ_f² = K; ∂K̂/∂logσ_n² = σ_n² I.
+        let grad_for = |dk: &Matrix| -> f64 {
+            // ½ αᵀ dK α − ½ tr(K̂⁻¹ dK)
+            let da = dk.matvec(&alpha);
+            let quad: f64 = alpha.iter().zip(&da).map(|(a, b)| a * b).sum();
+            let mut tr = 0.0;
+            for i in 0..n {
+                let (ki, di) = (kinv.row(i), dk.row(i));
+                for (a, b) in ki.iter().zip(di) {
+                    tr += a * b;
+                }
+            }
+            0.5 * quad - 0.5 * tr
+        };
+        let g_ell = grad_for(&dk_ell);
+        let g_sf2 = grad_for(&k);
+        // Noise: dK̂ = σ_n² I → closed form.
+        let aa: f64 = alpha.iter().map(|a| a * a).sum();
+        let g_sn2 = h.sn2() * (0.5 * aa - 0.5 * kinv.trace());
+        Ok((mll, vec![g_ell, g_sf2, g_sn2]))
+    }
+
+    /// Train hyperparameters by ADAM on the exact MLL. Returns the MLL
+    /// trace. Also refreshes the predictive cache.
+    pub fn fit(&mut self, steps: usize, lr: f64) -> Result<Vec<f64>> {
+        let mut adam = Adam::new(3, lr);
+        let mut params = self.hypers.to_vec();
+        let mut trace = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let h = GpHypers::from_vec(&params);
+            let (mll, grad) = self.mll_grad(&h)?;
+            trace.push(mll);
+            adam.step_ascend(&mut params, &grad);
+        }
+        self.hypers = GpHypers::from_vec(&params);
+        self.refresh()?;
+        Ok(trace)
+    }
+
+    /// Recompute the predictive cache (Cholesky + α) for current hypers.
+    pub fn refresh(&mut self) -> Result<()> {
+        let chol = Cholesky::new_with_jitter(&self.khat(&self.hypers), 0.0)?;
+        self.alpha = Some(chol.solve(&self.ys));
+        self.chol = Some(chol);
+        Ok(())
+    }
+
+    /// Predictive mean at test points (Eq. 1, zero prior mean).
+    pub fn predict_mean(&self, xtest: &Matrix) -> Vec<f64> {
+        let alpha = self.alpha.as_ref().expect("call fit/refresh first");
+        let kx = self.kernel(&self.hypers).gram(xtest, &self.xs);
+        kx.matvec(alpha)
+    }
+
+    /// Predictive variance at test points (Eq. 2), including noise-free
+    /// latent variance only.
+    pub fn predict_var(&self, xtest: &Matrix) -> Vec<f64> {
+        let chol = self.chol.as_ref().expect("call fit/refresh first");
+        let kern = self.kernel(&self.hypers);
+        let kx = kern.gram(xtest, &self.xs);
+        let mut out = Vec::with_capacity(xtest.rows);
+        for i in 0..xtest.rows {
+            let ki = kx.row(i);
+            let sol = chol.solve(ki);
+            let reduce: f64 = ki.iter().zip(&sol).map(|(a, b)| a * b).sum();
+            out.push((kern.outputscale - reduce).max(1e-12));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{mae, Rng};
+
+    /// y = sin(2x) + noise on [0, 3].
+    fn toy_1d(n: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let xs = Matrix::from_fn(n, 1, |_, _| rng.uniform_in(0.0, 3.0));
+        let ys: Vec<f64> = (0..n)
+            .map(|i| (2.0 * xs.get(i, 0)).sin() + 0.05 * rng.normal())
+            .collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn interpolates_smooth_function() {
+        let (xs, ys) = toy_1d(60, 1);
+        let mut gp = ExactGp::new(xs, ys, GpHypers::new(0.5, 1.0, 0.01));
+        gp.refresh().unwrap();
+        let xt = Matrix::from_fn(20, 1, |i, _| 0.1 + i as f64 * 0.14);
+        let pred = gp.predict_mean(&xt);
+        let truth: Vec<f64> = (0..20).map(|i| (2.0 * xt.get(i, 0)).sin()).collect();
+        assert!(mae(&pred, &truth) < 0.05, "mae {}", mae(&pred, &truth));
+    }
+
+    #[test]
+    fn fit_improves_mll() {
+        let (xs, ys) = toy_1d(40, 2);
+        let mut gp = ExactGp::new(xs, ys, GpHypers::new(3.0, 0.5, 0.5));
+        let trace = gp.fit(30, 0.1).unwrap();
+        assert!(
+            trace.last().unwrap() > trace.first().unwrap(),
+            "MLL should increase: {:?} → {:?}",
+            trace.first(),
+            trace.last()
+        );
+    }
+
+    #[test]
+    fn analytic_grad_matches_finite_difference() {
+        let (xs, ys) = toy_1d(25, 3);
+        let gp = ExactGp::new(xs, ys, GpHypers::default_init());
+        let h0 = GpHypers::new(0.8, 1.2, 0.05);
+        let (_, grad) = gp.mll_grad(&h0).unwrap();
+        let eps = 1e-5;
+        let mut v = h0.to_vec();
+        for (i, g) in grad.iter().enumerate() {
+            v[i] += eps;
+            let lp = gp.mll(&GpHypers::from_vec(&v)).unwrap();
+            v[i] -= 2.0 * eps;
+            let lm = gp.mll(&GpHypers::from_vec(&v)).unwrap();
+            v[i] += eps;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - g).abs() < 1e-4 * (1.0 + g.abs()),
+                "param {i}: fd {fd} vs analytic {g}"
+            );
+        }
+    }
+
+    #[test]
+    fn predictive_variance_small_at_data_large_away() {
+        let (xs, ys) = toy_1d(50, 4);
+        let x0 = xs.get(0, 0);
+        let mut gp = ExactGp::new(xs, ys, GpHypers::new(0.5, 1.0, 1e-4));
+        gp.refresh().unwrap();
+        let xt = Matrix::from_vec(2, 1, vec![x0, 50.0]);
+        let var = gp.predict_var(&xt);
+        assert!(var[0] < 0.01, "at-data var {}", var[0]);
+        assert!(var[1] > 0.9, "far-field var {}", var[1]);
+    }
+
+    #[test]
+    fn mll_higher_for_true_noise_level() {
+        let (xs, ys) = toy_1d(50, 5);
+        let gp = ExactGp::new(xs, ys, GpHypers::default_init());
+        let good = gp.mll(&GpHypers::new(0.7, 1.0, 0.01)).unwrap();
+        let bad = gp.mll(&GpHypers::new(0.7, 1.0, 2.0)).unwrap();
+        assert!(good > bad);
+    }
+}

@@ -1,0 +1,89 @@
+//! GP hyperparameters.
+//!
+//! All models share the same parameterization: a shared RBF lengthscale ℓ,
+//! an output scale σ_f², and a noise variance σ_n², stored in log space so
+//! unconstrained gradient steps keep them positive. (Paper §5: "All models
+//! use the RBF kernel", trained with ADAM.)
+
+/// Log-space GP hyperparameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpHypers {
+    /// log lengthscale ℓ (shared across dimensions).
+    pub log_ell: f64,
+    /// log output scale σ_f².
+    pub log_sf2: f64,
+    /// log noise variance σ_n².
+    pub log_sn2: f64,
+}
+
+impl GpHypers {
+    /// Sensible default init for z-scored data.
+    pub fn default_init() -> Self {
+        GpHypers {
+            log_ell: 0.0,   // ℓ = 1
+            log_sf2: 0.0,   // σ_f² = 1
+            log_sn2: -2.0,  // σ_n² ≈ 0.135
+        }
+    }
+
+    /// Median-distance heuristic init: for inputs ~U[-1,1]^d the expected
+    /// squared distance is 2d/3, so ℓ₀ = √(2d/3) starts the product kernel
+    /// in a smooth (low effective rank) regime. This matters for SKIP:
+    /// rank(A∘B) ≤ rank(A)·rank(B) (paper §7), so a too-short initial ℓ
+    /// makes the rank-r merge tree a poor approximation before training
+    /// has a chance to lengthen it.
+    pub fn init_for_dim(d: usize) -> Self {
+        let ell0 = (2.0 * d as f64 / 3.0).sqrt().max(1.0);
+        GpHypers { log_ell: ell0.ln(), log_sf2: 0.0, log_sn2: -2.0 }
+    }
+
+    pub fn new(ell: f64, sf2: f64, sn2: f64) -> Self {
+        assert!(ell > 0.0 && sf2 > 0.0 && sn2 > 0.0);
+        GpHypers { log_ell: ell.ln(), log_sf2: sf2.ln(), log_sn2: sn2.ln() }
+    }
+
+    pub fn ell(&self) -> f64 {
+        self.log_ell.exp()
+    }
+
+    pub fn sf2(&self) -> f64 {
+        self.log_sf2.exp()
+    }
+
+    pub fn sn2(&self) -> f64 {
+        self.log_sn2.exp()
+    }
+
+    /// Flatten for the optimizer.
+    pub fn to_vec(&self) -> Vec<f64> {
+        vec![self.log_ell, self.log_sf2, self.log_sn2]
+    }
+
+    /// Rebuild from the optimizer's parameter vector.
+    pub fn from_vec(v: &[f64]) -> Self {
+        assert_eq!(v.len(), 3);
+        GpHypers { log_ell: v[0], log_sf2: v[1], log_sn2: v[2] }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let h = GpHypers::new(0.5, 2.0, 0.01);
+        let v = h.to_vec();
+        let h2 = GpHypers::from_vec(&v);
+        assert_eq!(h, h2);
+        assert!((h.ell() - 0.5).abs() < 1e-12);
+        assert!((h.sf2() - 2.0).abs() < 1e-12);
+        assert!((h.sn2() - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonpositive() {
+        GpHypers::new(-1.0, 1.0, 1.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Gaussian-process models: exact baseline, SGPR baseline, the MVM family
+//! (SKIP and KISS-GP), multi-task GPs, and the cluster multi-task model.
+
+pub mod adam;
+pub mod cluster;
+pub mod exact;
+pub mod hypers;
+pub mod mtgp;
+pub mod mvm;
+pub mod sgpr;
+
+pub use adam::Adam;
+pub use cluster::{ClusterMtgp, ClusterMtgpConfig};
+pub use exact::ExactGp;
+pub use hypers::GpHypers;
+pub use mtgp::{Mtgp, MtgpConfig, MtgpData};
+pub use mvm::{MvmGp, MvmGpConfig, MvmVariant};
+pub use sgpr::Sgpr;

@@ -1,0 +1,361 @@
+//! Multi-task Gaussian processes (paper §6; Bonilla et al. 2008).
+//!
+//! Covariance between observation (x, task i) and (x′, task j):
+//! `k_input(x, x′) · k_task(i, j)` with `k_task = B Bᵀ + D` low-rank.
+//! The full covariance factors as the Hadamard product
+//! `K_multi = K_data ∘ (V M Vᵀ)` (Eq. 16 region), so SKIP applies: SKI the
+//! 1-D data kernel, supply the task factor exactly — O(n + m log m + sq)
+//! per MVM.
+//!
+//! Two inference paths:
+//! - `mll_skip`: the paper's fast path (CG + SLQ over the SKIP operator).
+//! - dense path (`mll_dense`, `fit_dense`): exact Cholesky algebra with
+//!   analytic gradients for B, D, ℓ, σ_n² — used to *train* the task
+//!   kernel on the modest-n childhood-growth workloads, and as the
+//!   baseline the §6 "20× speedup" claim is measured against.
+
+use super::adam::Adam;
+use crate::kernels::{Stationary1d, TaskKernel};
+use crate::linalg::{Cholesky, Matrix};
+use crate::operators::{AffineOp, SkiOp, SkipComponent, SkipOp, TaskOp};
+use crate::solvers::{cg_solve, slq_logdet, CgConfig, SlqConfig};
+use crate::util::Rng;
+use crate::Result;
+
+/// Multi-task dataset: 1-D inputs, one task label per observation.
+#[derive(Clone, Debug)]
+pub struct MtgpData {
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub task_of: Vec<usize>,
+    pub num_tasks: usize,
+}
+
+impl MtgpData {
+    pub fn len(&self) -> usize {
+        self.x.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.x.is_empty()
+    }
+}
+
+/// Configuration for the SKIP inference path.
+#[derive(Clone, Debug)]
+pub struct MtgpConfig {
+    pub grid_m: usize,
+    pub rank: usize,
+    pub cg: CgConfig,
+    pub slq: SlqConfig,
+    pub seed: u64,
+}
+
+impl Default for MtgpConfig {
+    fn default() -> Self {
+        MtgpConfig {
+            grid_m: 100,
+            rank: 15,
+            cg: CgConfig { max_iters: 60, tol: 1e-4 },
+            slq: SlqConfig { num_probes: 6, max_rank: 20 },
+            seed: 0,
+        }
+    }
+}
+
+/// Multi-task GP model.
+pub struct Mtgp {
+    pub data: MtgpData,
+    pub input_kernel: Stationary1d,
+    pub task_kernel: TaskKernel,
+    pub sn2: f64,
+    pub cfg: MtgpConfig,
+    /// Cached α for prediction (dense path).
+    alpha: Option<Vec<f64>>,
+}
+
+impl Mtgp {
+    pub fn new(
+        data: MtgpData,
+        input_kernel: Stationary1d,
+        task_rank: usize,
+        sn2: f64,
+        cfg: MtgpConfig,
+    ) -> Self {
+        let s = data.num_tasks;
+        // B init: small random entries; D init: 0.1.
+        let mut rng = Rng::new(cfg.seed.wrapping_add(17));
+        let b = Matrix::from_fn(s, task_rank, |_, _| 0.3 * rng.normal());
+        let task_kernel = TaskKernel::new(b, vec![0.1; s]);
+        Mtgp { data, input_kernel, task_kernel, sn2, cfg, alpha: None }
+    }
+
+    /// Dense multi-task covariance K̂ (tests / training / dense baseline).
+    pub fn khat_dense(&self) -> Matrix {
+        let n = self.data.len();
+        let mut k = Matrix::from_fn(n, n, |i, j| {
+            self.input_kernel.eval(self.data.x[i], self.data.x[j])
+                * self.task_kernel.eval(self.data.task_of[i], self.data.task_of[j])
+        });
+        k.add_diag(self.sn2);
+        k
+    }
+
+    /// Exact MLL via Cholesky — O(n³).
+    pub fn mll_dense(&self) -> Result<f64> {
+        let n = self.data.len() as f64;
+        let chol = Cholesky::new_with_jitter(&self.khat_dense(), 1e-10)?;
+        let alpha = chol.solve(&self.data.y);
+        let fit: f64 = self.data.y.iter().zip(&alpha).map(|(y, a)| y * a).sum();
+        Ok(-0.5 * fit - 0.5 * chol.logdet()
+            - 0.5 * n * (2.0 * std::f64::consts::PI).ln())
+    }
+
+    /// Build the SKIP operator for the current parameters:
+    /// `K_data(SKI) ∘ (V M Vᵀ)(exact factor) + σ_n² I`.
+    pub fn build_skip_operator(&self, seed: u64) -> AffineOp {
+        let ski = SkiOp::new(&self.data.x, &self.input_kernel, self.cfg.grid_m);
+        let task_op = TaskOp::new(self.data.task_of.clone(), self.task_kernel.clone());
+        let task_factor = task_op.factor();
+        let mut rng = Rng::new(seed);
+        let skip = SkipOp::build_native(
+            vec![SkipComponent::Op(&ski), SkipComponent::Factor(task_factor)],
+            self.cfg.rank,
+            &mut rng,
+        );
+        AffineOp { inner: Box::new(skip), scale: 1.0, shift: self.sn2 }
+    }
+
+    /// Fast MLL estimate via SKIP + CG + SLQ — the paper's §6 fast path.
+    pub fn mll_skip(&self, seed: u64) -> f64 {
+        let op = self.build_skip_operator(seed);
+        let n = self.data.len() as f64;
+        let sol = cg_solve(&op, &self.data.y, self.cfg.cg);
+        let fit: f64 = self.data.y.iter().zip(&sol.x).map(|(y, a)| y * a).sum();
+        let mut rng = Rng::new(seed ^ 0xA5A5_5A5A_DEAD_BEEF);
+        let logdet = slq_logdet(&op, self.cfg.slq, &mut rng);
+        -0.5 * fit - 0.5 * logdet - 0.5 * n * (2.0 * std::f64::consts::PI).ln()
+    }
+
+    /// Analytic dense gradient step data: returns (mll, dL/dB, dL/dD,
+    /// dL/dlogℓ, dL/dlogσ_n²).
+    ///
+    /// With G = ααᵀ − K̂⁻¹ and H = G ∘ K_data, the task-space gradient is
+    /// the task-block aggregation S = VᵀHV: dL/dM = ½S, dL/dB = S_sym B,
+    /// dL/dD_a = ½S_aa.
+    fn dense_grads(&self) -> Result<(f64, Matrix, Vec<f64>, f64, f64)> {
+        let n = self.data.len();
+        let s = self.task_kernel.num_tasks();
+        let khat = self.khat_dense();
+        let chol = Cholesky::new_with_jitter(&khat, 1e-10)?;
+        let alpha = chol.solve(&self.data.y);
+        let kinv = chol.inverse();
+        let fit: f64 = self.data.y.iter().zip(&alpha).map(|(y, a)| y * a).sum();
+        let mll = -0.5 * fit - 0.5 * chol.logdet()
+            - 0.5 * n as f64 * (2.0 * std::f64::consts::PI).ln();
+
+        // S[a,b] = Σ_{i∈a, j∈b} G_ij · K_data,ij.
+        let mut s_mat = Matrix::zeros(s, s);
+        // dL/dlogℓ accumulator: ½ Σ G_ij (∂K̂/∂logℓ)_ij with
+        // ∂k_input/∂logℓ for Matérn/RBF computed by FD on the 1-D kernel
+        // (cheap and exact enough; the heavy term G is shared).
+        let fd = 1e-5;
+        let kern_p = self.input_kernel.with_lengthscale(self.input_kernel.lengthscale * (1.0 + fd));
+        let kern_m = self.input_kernel.with_lengthscale(self.input_kernel.lengthscale * (1.0 - fd));
+        let mut g_ell = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                let g = alpha[i] * alpha[j] - kinv.get(i, j);
+                let kd = self.input_kernel.eval(self.data.x[i], self.data.x[j]);
+                let kt = self
+                    .task_kernel
+                    .eval(self.data.task_of[i], self.data.task_of[j]);
+                let (a, b) = (self.data.task_of[i], self.data.task_of[j]);
+                s_mat.set(a, b, s_mat.get(a, b) + g * kd);
+                // d k_input / d logℓ ≈ (k₊ − k₋)/(2·fd)
+                let dk = (kern_p.eval(self.data.x[i], self.data.x[j])
+                    - kern_m.eval(self.data.x[i], self.data.x[j]))
+                    / (2.0 * fd);
+                g_ell += 0.5 * g * dk * kt;
+            }
+        }
+        // dL/dB = S_sym B (task-space chain rule through M = BBᵀ).
+        let mut s_sym = s_mat.clone();
+        s_sym.symmetrize();
+        let db = s_sym.matmul(&self.task_kernel.b);
+        // dL/dD_a = ½ S_aa (δ term only hits i=j task blocks... diagonal of
+        // M); chain through softplus-free positive D is handled by caller
+        // via log-param. Here raw dL/dD.
+        let dd: Vec<f64> = (0..s).map(|a| 0.5 * s_mat.get(a, a)).collect();
+        // dL/dlogσ_n² = σ_n²·½·(‖α‖² − tr K̂⁻¹) .
+        let aa: f64 = alpha.iter().map(|a| a * a).sum();
+        let g_sn2 = self.sn2 * 0.5 * (aa - kinv.trace());
+        Ok((mll, db, dd, g_ell, g_sn2))
+    }
+
+    /// Train B, D, ℓ, σ_n² with ADAM on the exact dense MLL.
+    pub fn fit_dense(&mut self, steps: usize, lr: f64) -> Result<Vec<f64>> {
+        let s = self.task_kernel.num_tasks();
+        let q = self.task_kernel.b.cols;
+        // Parameter vector: [B (s·q), log D (s), log ℓ, log σ_n²].
+        let dim = s * q + s + 2;
+        let mut adam = Adam::new(dim, lr);
+        let mut params = Vec::with_capacity(dim);
+        params.extend_from_slice(&self.task_kernel.b.data);
+        params.extend(self.task_kernel.diag.iter().map(|d| d.max(1e-8).ln()));
+        params.push(self.input_kernel.lengthscale.ln());
+        params.push(self.sn2.ln());
+        let mut trace = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            self.unpack_params(&params, s, q);
+            let (mll, db, dd, g_ell, g_sn2) = self.dense_grads()?;
+            trace.push(mll);
+            let mut grad = Vec::with_capacity(dim);
+            grad.extend_from_slice(&db.data);
+            for a in 0..s {
+                // chain: d/d logD = D · d/dD
+                grad.push(self.task_kernel.diag[a] * dd[a]);
+            }
+            grad.push(g_ell);
+            grad.push(g_sn2);
+            adam.step_ascend(&mut params, &grad);
+        }
+        self.unpack_params(&params, s, q);
+        self.refresh()?;
+        Ok(trace)
+    }
+
+    fn unpack_params(&mut self, params: &[f64], s: usize, q: usize) {
+        self.task_kernel.b = Matrix::from_vec(s, q, params[..s * q].to_vec());
+        for a in 0..s {
+            self.task_kernel.diag[a] = params[s * q + a].exp();
+        }
+        self.input_kernel = self
+            .input_kernel
+            .with_lengthscale(params[s * q + s].exp());
+        self.sn2 = params[s * q + s + 1].exp();
+    }
+
+    /// Recompute the dense predictive cache α.
+    pub fn refresh(&mut self) -> Result<()> {
+        let chol = Cholesky::new_with_jitter(&self.khat_dense(), 1e-10)?;
+        self.alpha = Some(chol.solve(&self.data.y));
+        Ok(())
+    }
+
+    /// Predictive mean at (x*, task t) pairs.
+    pub fn predict_mean(&self, xt: &[f64], task_t: &[usize]) -> Vec<f64> {
+        let alpha = self.alpha.as_ref().expect("call fit/refresh first");
+        assert_eq!(xt.len(), task_t.len());
+        xt.iter()
+            .zip(task_t)
+            .map(|(&x, &t)| {
+                let mut acc = 0.0;
+                for j in 0..self.data.len() {
+                    acc += self.input_kernel.eval(x, self.data.x[j])
+                        * self.task_kernel.eval(t, self.data.task_of[j])
+                        * alpha[j];
+                }
+                acc
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::LinearOp;
+    use crate::util::{mae, rel_err, Rng};
+
+    /// Two latent groups of tasks: group 0 follows sin, group 1 follows
+    /// −sin; within-group tasks share structure.
+    fn toy_tasks(s: usize, per_task: usize, seed: u64) -> MtgpData {
+        let mut rng = Rng::new(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        let mut task_of = Vec::new();
+        for t in 0..s {
+            let sign = if t % 2 == 0 { 1.0 } else { -1.0 };
+            for _ in 0..per_task {
+                let xi = rng.uniform_in(0.0, 3.0);
+                x.push(xi);
+                y.push(sign * (1.5 * xi).sin() + 0.05 * rng.normal());
+                task_of.push(t);
+            }
+        }
+        MtgpData { x, y, task_of, num_tasks: s }
+    }
+
+    #[test]
+    fn skip_mll_matches_dense_mll() {
+        let data = toy_tasks(6, 15, 1);
+        let cfg = MtgpConfig {
+            rank: 30,
+            slq: SlqConfig { num_probes: 30, max_rank: 30 },
+            cg: CgConfig { max_iters: 200, tol: 1e-7 },
+            ..Default::default()
+        };
+        let mtgp = Mtgp::new(data, Stationary1d::matern52(1.0), 2, 0.1, cfg);
+        let dense = mtgp.mll_dense().unwrap();
+        let fast = mtgp.mll_skip(3);
+        let rel = (fast - dense).abs() / dense.abs();
+        assert!(rel < 0.05, "skip {fast} vs dense {dense} rel {rel}");
+    }
+
+    #[test]
+    fn fit_improves_mll_and_learns_task_structure() {
+        let data = toy_tasks(6, 12, 2);
+        let cfg = MtgpConfig::default();
+        let mut mtgp = Mtgp::new(data, Stationary1d::matern52(1.0), 2, 0.2, cfg);
+        let trace = mtgp.fit_dense(25, 0.1).unwrap();
+        assert!(trace.last().unwrap() > trace.first().unwrap());
+        // Learned task covariance should correlate same-group tasks
+        // (0,2) more than cross-group (0,1).
+        let m = mtgp.task_kernel.to_dense();
+        let same = m.get(0, 2);
+        let cross = m.get(0, 1);
+        assert!(same > cross, "same-group {same} vs cross-group {cross}");
+    }
+
+    #[test]
+    fn multitask_beats_pooled_on_heterogeneous_tasks() {
+        let data = toy_tasks(4, 20, 3);
+        // Held-out points for task 1 (the −sin group).
+        let xt: Vec<f64> = (0..20).map(|i| 0.15 * i as f64).collect();
+        let yt: Vec<f64> = xt.iter().map(|&x| -(1.5 * x).sin()).collect();
+        let tt = vec![1usize; 20];
+        let cfg = MtgpConfig::default();
+        let mut mtgp = Mtgp::new(data.clone(), Stationary1d::matern52(1.0), 2, 0.2, cfg);
+        mtgp.fit_dense(25, 0.1).unwrap();
+        let pred = mtgp.predict_mean(&xt, &tt);
+        let mtgp_mae = mae(&pred, &yt);
+        // Pooled model: single task — predicts ~0 everywhere (groups cancel).
+        let pooled = {
+            let mut d2 = data;
+            d2.task_of = vec![0; d2.len()];
+            d2.num_tasks = 1;
+            let mut m = Mtgp::new(d2, Stationary1d::matern52(1.0), 1, 0.2, MtgpConfig::default());
+            m.refresh().unwrap();
+            m.predict_mean(&xt, &vec![0; 20])
+        };
+        let pooled_mae = mae(&pooled, &yt);
+        assert!(
+            mtgp_mae < pooled_mae,
+            "mtgp {mtgp_mae} should beat pooled {pooled_mae}"
+        );
+    }
+
+    #[test]
+    fn skip_operator_mvm_matches_dense() {
+        let data = toy_tasks(5, 10, 4);
+        let cfg = MtgpConfig { rank: 30, ..Default::default() };
+        let mtgp = Mtgp::new(data, Stationary1d::matern52(0.8), 2, 0.15, cfg);
+        let op = mtgp.build_skip_operator(7);
+        let dense = mtgp.khat_dense();
+        let mut rng = Rng::new(8);
+        let v = rng.normal_vec(dense.rows);
+        let err = rel_err(&op.matvec(&v), &dense.matvec(&v));
+        assert!(err < 2e-2, "rel err {err}");
+    }
+}

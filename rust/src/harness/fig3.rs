@@ -1,0 +1,179 @@
+//! Figure 3 harness: cluster posterior for a new task as its number of
+//! observed measurements grows (3 → 5 → 9 in the paper).
+//!
+//! Protocol: fit cluster assignments on a training population by Gibbs
+//! sampling, then introduce a held-out child with only its first k
+//! measurements and report p(λ_new = c | y) for each cluster c. The
+//! paper's qualitative claim: the posterior concentrates on the true
+//! subpopulation as k grows.
+
+use crate::coordinator::Session;
+use crate::data::growth::{generate, split_child, without_child, GrowthConfig};
+use crate::gp::mtgp::MtgpData;
+use crate::gp::{ClusterMtgp, ClusterMtgpConfig};
+use crate::Result;
+use std::path::Path;
+
+pub struct Fig3Config {
+    pub num_children: usize,
+    pub num_clusters: usize,
+    /// Observed-measurement counts to sweep for the new task.
+    pub keeps: Vec<usize>,
+    pub gibbs_sweeps: usize,
+    pub use_skip: bool,
+    pub seed: u64,
+}
+
+impl Default for Fig3Config {
+    fn default() -> Self {
+        Fig3Config {
+            num_children: 24,
+            num_clusters: 3,
+            keeps: vec![3, 5, 9],
+            gibbs_sweeps: 6,
+            use_skip: true,
+            seed: 0,
+        }
+    }
+}
+
+/// Posterior rows: (keep, per-cluster probabilities, true cluster).
+pub fn fig3(cfg: &Fig3Config, out_dir: &Path) -> Result<Vec<(usize, Vec<f64>, usize)>> {
+    let mut session = Session::new("fig3", out_dir)?;
+    session.header(&["observed", "p_cluster0", "p_cluster1", "p_cluster2", "true_cluster"]);
+    let growth = generate(&GrowthConfig {
+        num_children: cfg.num_children,
+        num_clusters: cfg.num_clusters,
+        min_obs: 8,
+        max_obs: 16,
+        seed: cfg.seed,
+        ..Default::default()
+    });
+    // Hold out the last child as the "new task".
+    let new_child = cfg.num_children - 1;
+    let true_cluster = growth.true_cluster[new_child];
+    let base = without_child(&growth.data, new_child);
+    // Fit assignments on the training population.
+    let mut model = ClusterMtgp::new(
+        base.clone(),
+        ClusterMtgpConfig {
+            num_clusters: cfg.num_clusters,
+            use_skip: cfg.use_skip,
+            seed: cfg.seed,
+            ..Default::default()
+        },
+    );
+    println!(
+        "Fig 3: Gibbs over {} training children ({} sweeps, {} path)…",
+        cfg.num_children - 1,
+        cfg.gibbs_sweeps,
+        if cfg.use_skip { "SKIP" } else { "dense" }
+    );
+    model.run_gibbs(cfg.gibbs_sweeps);
+    println!(
+        "  training assignments: {:?}\n  truth:                {:?}",
+        model.assignments,
+        &growth.true_cluster[..cfg.num_children - 1]
+    );
+    // Gibbs labels are permutation-invariant: map each true cluster to the
+    // model label that holds the majority of its training tasks, so the
+    // reported posteriors are in *true-cluster* coordinates.
+    let label_map: Vec<usize> = (0..cfg.num_clusters)
+        .map(|true_c| {
+            let mut votes = vec![0usize; cfg.num_clusters];
+            for t in 0..cfg.num_children - 1 {
+                if growth.true_cluster[t] == true_c {
+                    votes[model.assignments[t]] += 1;
+                }
+            }
+            votes
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &v)| v)
+                .map(|(i, _)| i)
+                .unwrap_or(true_c)
+        })
+        .collect();
+    println!("  label map (true→model): {label_map:?}");
+
+    let mut out = Vec::new();
+    for &keep in &cfg.keeps {
+        let (hx, hy, _, _) = split_child(&growth.data, new_child, keep);
+        // Rebuild data with the truncated new task appended.
+        let mut data = base.clone();
+        for (x, y) in hx.iter().zip(&hy) {
+            data.x.push(*x);
+            data.y.push(*y);
+            data.task_of.push(new_child);
+        }
+        let mut m2 = ClusterMtgp::new(
+            MtgpData { num_tasks: cfg.num_children, ..data },
+            ClusterMtgpConfig {
+                num_clusters: cfg.num_clusters,
+                use_skip: cfg.use_skip,
+                seed: cfg.seed,
+                ..Default::default()
+            },
+        );
+        let mut assignments = model.assignments.clone();
+        if assignments.len() < cfg.num_children {
+            assignments.push(0); // placeholder for the new task
+        }
+        m2.assignments = assignments;
+        // Copy trained kernels.
+        m2.k_cluster = model.k_cluster;
+        m2.k_indiv = model.k_indiv;
+        m2.cluster_var = model.cluster_var;
+        m2.indiv_var = model.indiv_var;
+        m2.sn2 = model.sn2;
+        let post_model = m2.cluster_posterior(new_child, cfg.seed ^ keep as u64);
+        // Re-express in true-cluster coordinates via the label map.
+        let post: Vec<f64> = (0..cfg.num_clusters)
+            .map(|true_c| post_model[label_map[true_c]])
+            .collect();
+        println!(
+            "  observed={keep:>2}  posterior(true coords)={:?}  (true cluster {true_cluster})",
+            post.iter().map(|p| format!("{p:.2}")).collect::<Vec<_>>()
+        );
+        let mut cells = vec![keep.to_string()];
+        for c in 0..3 {
+            cells.push(format!("{:.4}", post.get(c).copied().unwrap_or(f64::NAN)));
+        }
+        cells.push(true_cluster.to_string());
+        session.row(&cells);
+        out.push((keep, post, true_cluster));
+    }
+    session.print_table();
+    let path = session.finish()?;
+    println!("wrote {}", path.display());
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn posterior_concentrates_with_more_observations() {
+        let dir = std::env::temp_dir().join(format!("skipgp-f3-{}", std::process::id()));
+        let cfg = Fig3Config {
+            num_children: 13,
+            keeps: vec![2, 8],
+            gibbs_sweeps: 4,
+            use_skip: false, // dense path: deterministic small-n oracle
+            seed: 3,
+            ..Default::default()
+        };
+        let rows = fig3(&cfg, &dir).unwrap();
+        let p_true_few = rows[0].1[rows[0].2];
+        let p_true_many = rows[1].1[rows[1].2];
+        // With more observations, the truth should not get *less* likely,
+        // and should end up dominant.
+        assert!(
+            p_true_many >= p_true_few - 0.1,
+            "few {p_true_few} many {p_true_many}"
+        );
+        assert!(p_true_many > 0.5, "final posterior {p_true_many}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

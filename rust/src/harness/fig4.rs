@@ -1,0 +1,221 @@
+//! Figure 4 harness: extrapolation MAE (left panel) and runtime (right
+//! panel) on the childhood-growth workload as a function of the number of
+//! tasks, for three models: shared (single-task) GP, standard MTGP, and
+//! the cluster MTGP.
+//!
+//! Protocol (paper §6): a fixed set of evaluation children contributes
+//! only its first half of measurements; models extrapolate the second
+//! half. Additional children (tasks) are added to the model, which should
+//! refine everyone's extrapolations — with cluster-MTGP ≤ MTGP < shared.
+
+use crate::coordinator::Session;
+use crate::data::growth::{generate, split_child, GrowthConfig};
+use crate::gp::mtgp::MtgpData;
+use crate::gp::{
+    ClusterMtgp, ClusterMtgpConfig, ExactGp, GpHypers, Mtgp, MtgpConfig,
+};
+use crate::linalg::Matrix;
+use crate::util::{mae, Timer};
+use crate::Result;
+use std::path::Path;
+
+pub struct Fig4Config {
+    /// Evaluation children (fixed).
+    pub eval_children: usize,
+    /// Total task counts to sweep (must be > eval_children).
+    pub task_counts: Vec<usize>,
+    pub num_clusters: usize,
+    /// Fraction of each eval child's measurements observed.
+    pub observed_frac: f64,
+    pub mtgp_steps: usize,
+    pub gibbs_sweeps: usize,
+    pub seed: u64,
+}
+
+impl Default for Fig4Config {
+    fn default() -> Self {
+        Fig4Config {
+            eval_children: 12,
+            task_counts: vec![16, 24, 36, 48],
+            num_clusters: 3,
+            observed_frac: 0.5,
+            mtgp_steps: 12,
+            gibbs_sweeps: 4,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig4Row {
+    pub num_tasks: usize,
+    pub method: String,
+    pub mae: f64,
+    pub seconds: f64,
+}
+
+/// Build the training set: all non-eval children in full, eval children
+/// truncated to their observed head; returns (train data, eval queries).
+struct EvalSplit {
+    train: MtgpData,
+    /// (x, task, y_true) extrapolation targets.
+    queries: Vec<(f64, usize, f64)>,
+}
+
+fn build_split(full: &MtgpData, eval_children: usize, frac: f64) -> EvalSplit {
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    let mut task_of = Vec::new();
+    let mut queries = Vec::new();
+    for child in 0..full.num_tasks {
+        if child < eval_children {
+            let total = full.task_of.iter().filter(|&&t| t == child).count();
+            let keep = ((total as f64 * frac) as usize).max(2);
+            let (hx, hy, tx, ty) = split_child(full, child, keep);
+            for (xi, yi) in hx.iter().zip(&hy) {
+                x.push(*xi);
+                y.push(*yi);
+                task_of.push(child);
+            }
+            for (xi, yi) in tx.iter().zip(&ty) {
+                queries.push((*xi, child, *yi));
+            }
+        } else {
+            for i in 0..full.len() {
+                if full.task_of[i] == child {
+                    x.push(full.x[i]);
+                    y.push(full.y[i]);
+                    task_of.push(child);
+                }
+            }
+        }
+    }
+    EvalSplit {
+        train: MtgpData { x, y, task_of, num_tasks: full.num_tasks },
+        queries,
+    }
+}
+
+/// Run Fig 4 and return all rows.
+pub fn fig4(cfg: &Fig4Config, out_dir: &Path) -> Result<Vec<Fig4Row>> {
+    let mut session = Session::new("fig4", out_dir)?;
+    session.header(&["num_tasks", "method", "extrap_mae", "time_s"]);
+    let mut rows = Vec::new();
+    for &num_tasks in &cfg.task_counts {
+        assert!(num_tasks > cfg.eval_children);
+        let growth = generate(&GrowthConfig {
+            num_children: num_tasks,
+            num_clusters: cfg.num_clusters,
+            min_obs: 6,
+            max_obs: 14,
+            seed: cfg.seed, // same seed → eval children identical across sweeps
+            ..Default::default()
+        });
+        let split = build_split(&growth.data, cfg.eval_children, cfg.observed_frac);
+        let qx: Vec<f64> = split.queries.iter().map(|q| q.0).collect();
+        let qt: Vec<usize> = split.queries.iter().map(|q| q.1).collect();
+        let qy: Vec<f64> = split.queries.iter().map(|q| q.2).collect();
+        println!(
+            "── {} tasks (n={}, {} extrapolation targets) ──",
+            num_tasks,
+            split.train.len(),
+            qy.len()
+        );
+
+        // 1. Shared GP: pool everything as one task.
+        {
+            let t = Timer::start();
+            let xs = Matrix::col_vec(&split.train.x);
+            let mut gp = ExactGp::new(
+                xs,
+                split.train.y.clone(),
+                GpHypers::new(0.3, 1.0, 0.05),
+            );
+            gp.fit(8, 0.1)?;
+            let qxm = Matrix::col_vec(&qx);
+            let pred = gp.predict_mean(&qxm);
+            let m = mae(&pred, &qy);
+            let dt = t.elapsed_s();
+            println!("  shared_gp     mae={m:.4}  ({dt:.1}s)");
+            session.rowf(&[&num_tasks, &"shared_gp", &m, &dt]);
+            rows.push(Fig4Row { num_tasks, method: "shared_gp".into(), mae: m, seconds: dt });
+        }
+
+        // 2. Standard MTGP (low-rank task kernel, trained dense).
+        {
+            let t = Timer::start();
+            let mut mtgp = Mtgp::new(
+                split.train.clone(),
+                crate::kernels::Stationary1d::matern52(0.4),
+                2,
+                0.05,
+                MtgpConfig { seed: cfg.seed, ..Default::default() },
+            );
+            mtgp.fit_dense(cfg.mtgp_steps, 0.1)?;
+            let pred = mtgp.predict_mean(&qx, &qt);
+            let m = mae(&pred, &qy);
+            let dt = t.elapsed_s();
+            println!("  mtgp          mae={m:.4}  ({dt:.1}s)");
+            session.rowf(&[&num_tasks, &"mtgp", &m, &dt]);
+            rows.push(Fig4Row { num_tasks, method: "mtgp".into(), mae: m, seconds: dt });
+        }
+
+        // 3. Cluster MTGP: Gibbs over assignments (SKIP-accelerated MLL),
+        //    dense prediction under the sampled clustering.
+        {
+            let t = Timer::start();
+            let mut cm = ClusterMtgp::new(
+                split.train.clone(),
+                ClusterMtgpConfig {
+                    num_clusters: cfg.num_clusters,
+                    use_skip: true,
+                    seed: cfg.seed,
+                    ..Default::default()
+                },
+            );
+            cm.run_gibbs(cfg.gibbs_sweeps);
+            let pred = cm.predict_mean(&qx, &qt)?;
+            let m = mae(&pred, &qy);
+            let dt = t.elapsed_s();
+            println!("  cluster_mtgp  mae={m:.4}  ({dt:.1}s)");
+            session.rowf(&[&num_tasks, &"cluster_mtgp", &m, &dt]);
+            rows.push(Fig4Row {
+                num_tasks,
+                method: "cluster_mtgp".into(),
+                mae: m,
+                seconds: dt,
+            });
+        }
+    }
+    session.print_table();
+    let path = session.finish()?;
+    println!("wrote {}", path.display());
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multitask_models_beat_shared_gp() {
+        let dir = std::env::temp_dir().join(format!("skipgp-f4-{}", std::process::id()));
+        let cfg = Fig4Config {
+            eval_children: 6,
+            task_counts: vec![14],
+            mtgp_steps: 8,
+            gibbs_sweeps: 3,
+            seed: 1,
+            ..Default::default()
+        };
+        let rows = fig4(&cfg, &dir).unwrap();
+        let get = |m: &str| rows.iter().find(|r| r.method == m).unwrap().mae;
+        let shared = get("shared_gp");
+        let mtgp = get("mtgp");
+        let cluster = get("cluster_mtgp");
+        // Clustered growth curves: any task-aware model must beat pooling.
+        assert!(mtgp < shared, "mtgp {mtgp} vs shared {shared}");
+        assert!(cluster < shared, "cluster {cluster} vs shared {shared}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

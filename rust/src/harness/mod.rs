@@ -1,0 +1,18 @@
+//! Benchmark harness: one module per paper table/figure.
+//!
+//! | Experiment | Module | CLI |
+//! |---|---|---|
+//! | Fig 2 left (MVM error vs rank) | [`fig2`] | `skip-gp bench fig2-left` |
+//! | Fig 2 right (time vs m/dim)    | [`fig2`] | `skip-gp bench fig2-right` |
+//! | Table 1 (MAE + train time)     | [`table1`] | `skip-gp bench table1` |
+//! | Table 2 (complexities)         | [`table2`] | `skip-gp bench table2` |
+//! | Fig 3 (cluster posterior)      | [`fig3`] | `skip-gp bench fig3` |
+//! | Fig 4 (MAE vs #tasks)          | [`fig4`] | `skip-gp bench fig4` |
+//! | §6 20× MLL speedup             | [`mtgp_speed`] | `skip-gp bench mtgp-speedup` |
+
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod mtgp_speed;
+pub mod table1;
+pub mod table2;

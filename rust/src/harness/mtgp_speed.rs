@@ -1,0 +1,108 @@
+//! §6 speedup claim: "For n = 4000, SKIP speeds up marginal likelihood
+//! computations by a factor of 20" (vs the dense-covariance path).
+//!
+//! We time one MLL evaluation of the multi-task model through both paths
+//! across an n sweep and report the speedup factor.
+
+use crate::coordinator::Session;
+use crate::data::growth::{generate, GrowthConfig};
+use crate::gp::{Mtgp, MtgpConfig};
+use crate::kernels::Stationary1d;
+use crate::util::Timer;
+use crate::Result;
+use std::path::Path;
+
+pub struct MtgpSpeedConfig {
+    /// Observation counts to sweep.
+    pub ns: Vec<usize>,
+    pub seed: u64,
+}
+
+impl Default for MtgpSpeedConfig {
+    fn default() -> Self {
+        MtgpSpeedConfig { ns: vec![500, 1000, 2000, 4000], seed: 0 }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct SpeedRow {
+    pub n: usize,
+    pub dense_s: f64,
+    pub skip_s: f64,
+    pub speedup: f64,
+}
+
+/// Run the MLL timing sweep.
+pub fn mtgp_speedup(cfg: &MtgpSpeedConfig, out_dir: &Path) -> Result<Vec<SpeedRow>> {
+    let mut session = Session::new("mtgp_speedup", out_dir)?;
+    session.header(&["n", "dense_mll_s", "skip_mll_s", "speedup"]);
+    let mut rows = Vec::new();
+    for &n in &cfg.ns {
+        // ~12 observations per child → children count scales with n.
+        let children = (n / 12).max(4);
+        let growth = generate(&GrowthConfig {
+            num_children: children,
+            min_obs: 10,
+            max_obs: 14,
+            seed: cfg.seed,
+            ..Default::default()
+        });
+        let data = growth.data;
+        let actual_n = data.len();
+        let mtgp = Mtgp::new(
+            data,
+            Stationary1d::matern52(0.4),
+            2,
+            0.05,
+            MtgpConfig { seed: cfg.seed, ..Default::default() },
+        );
+        let t = Timer::start();
+        let dense_mll = mtgp.mll_dense()?;
+        let dense_s = t.elapsed_s();
+        let t = Timer::start();
+        let skip_mll = mtgp.mll_skip(cfg.seed);
+        let skip_s = t.elapsed_s();
+        let speedup = dense_s / skip_s;
+        // Sanity: the two estimates agree to a few nats per 100 points.
+        let gap = (dense_mll - skip_mll).abs() / actual_n as f64;
+        println!(
+            "  n={actual_n:>5}  dense={dense_s:.3}s  skip={skip_s:.3}s  speedup={speedup:.1}x  (mll gap {gap:.3} nats/pt)"
+        );
+        session.rowf(&[&actual_n, &dense_s, &skip_s, &speedup]);
+        rows.push(SpeedRow { n: actual_n, dense_s, skip_s, speedup });
+    }
+    session.print_table();
+    let path = session.finish()?;
+    println!("wrote {}", path.display());
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skip_is_faster_at_moderate_n() {
+        let dir = std::env::temp_dir().join(format!("skipgp-ms-{}", std::process::id()));
+        let cfg = MtgpSpeedConfig { ns: vec![2000], seed: 0 };
+        let rows = mtgp_speedup(&cfg, &dir).unwrap();
+        assert!(
+            rows[0].speedup > 1.5,
+            "SKIP should beat dense at n≈2000: {:?}",
+            rows[0]
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn speedup_grows_with_n() {
+        let dir = std::env::temp_dir().join(format!("skipgp-ms2-{}", std::process::id()));
+        let cfg = MtgpSpeedConfig { ns: vec![400, 1200], seed: 1 };
+        let rows = mtgp_speedup(&cfg, &dir).unwrap();
+        assert!(
+            rows[1].speedup > rows[0].speedup,
+            "speedup should grow: {rows:?}"
+        );
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

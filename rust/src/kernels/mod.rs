@@ -1,0 +1,15 @@
+//! Covariance kernels.
+//!
+//! The paper's models are built from *products of one-dimensional
+//! stationary kernels* (§3, §5): a d-dimensional RBF/ARD kernel factors
+//! exactly as `k(x,x′) = Π_i k⁽ⁱ⁾(x_i, x′_i)`, and the multi-task kernel
+//! (§6) is a product of a data kernel and a task (coregionalization)
+//! kernel.
+
+pub mod product;
+pub mod stationary;
+pub mod task;
+
+pub use product::ProductKernel;
+pub use stationary::Stationary1d;
+pub use task::TaskKernel;

@@ -1,0 +1,148 @@
+//! One-dimensional stationary kernels.
+//!
+//! These are the atoms of every model in the paper: the RBF kernel (whose
+//! d-dimensional form factors exactly into d of these), and the Matérn
+//! family used by the cluster multi-task model (§6, ν = 5/2).
+
+/// Family of a 1-D stationary kernel `k(x, x′) = κ(|x − x′| / ℓ)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelFamily {
+    /// Squared exponential: κ(u) = exp(−u²/2).
+    Rbf,
+    /// Matérn ν=1/2 (exponential): κ(u) = exp(−u).
+    Matern12,
+    /// Matérn ν=3/2.
+    Matern32,
+    /// Matérn ν=5/2 — the paper's choice for k_cluster / k_indiv.
+    Matern52,
+}
+
+/// A 1-D stationary kernel with a lengthscale.
+///
+/// The output scale lives on the *product* kernel (one σ² per product, not
+/// per factor) to keep hyperparameters identifiable.
+#[derive(Clone, Copy, Debug)]
+pub struct Stationary1d {
+    pub family: KernelFamily,
+    pub lengthscale: f64,
+}
+
+impl Stationary1d {
+    pub fn rbf(lengthscale: f64) -> Self {
+        Stationary1d { family: KernelFamily::Rbf, lengthscale }
+    }
+
+    pub fn matern52(lengthscale: f64) -> Self {
+        Stationary1d { family: KernelFamily::Matern52, lengthscale }
+    }
+
+    pub fn matern32(lengthscale: f64) -> Self {
+        Stationary1d { family: KernelFamily::Matern32, lengthscale }
+    }
+
+    pub fn matern12(lengthscale: f64) -> Self {
+        Stationary1d { family: KernelFamily::Matern12, lengthscale }
+    }
+
+    /// Evaluate κ at distance `r ≥ 0` (lengthscale applied inside).
+    #[inline]
+    pub fn eval_dist(&self, r: f64) -> f64 {
+        let u = r.abs() / self.lengthscale;
+        match self.family {
+            KernelFamily::Rbf => (-0.5 * u * u).exp(),
+            KernelFamily::Matern12 => (-u).exp(),
+            KernelFamily::Matern32 => {
+                let s = 3.0f64.sqrt() * u;
+                (1.0 + s) * (-s).exp()
+            }
+            KernelFamily::Matern52 => {
+                let s = 5.0f64.sqrt() * u;
+                (1.0 + s + s * s / 3.0) * (-s).exp()
+            }
+        }
+    }
+
+    /// k(x, x′) for scalar inputs.
+    #[inline]
+    pub fn eval(&self, x: f64, y: f64) -> f64 {
+        self.eval_dist(x - y)
+    }
+
+    /// First column of the (symmetric Toeplitz) Gram matrix on a regular
+    /// grid with spacing `h`: entry j = κ(j·h). This is what SKI's
+    /// `K_UU` needs.
+    pub fn toeplitz_column(&self, m: usize, h: f64) -> Vec<f64> {
+        (0..m).map(|j| self.eval_dist(j as f64 * h)).collect()
+    }
+
+    /// With a new lengthscale (hyperparameter updates).
+    pub fn with_lengthscale(&self, lengthscale: f64) -> Self {
+        Stationary1d { family: self.family, lengthscale }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unit_at_zero_distance() {
+        for fam in [
+            KernelFamily::Rbf,
+            KernelFamily::Matern12,
+            KernelFamily::Matern32,
+            KernelFamily::Matern52,
+        ] {
+            let k = Stationary1d { family: fam, lengthscale: 0.7 };
+            assert!((k.eval(1.3, 1.3) - 1.0).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn monotone_decreasing() {
+        for fam in [
+            KernelFamily::Rbf,
+            KernelFamily::Matern12,
+            KernelFamily::Matern32,
+            KernelFamily::Matern52,
+        ] {
+            let k = Stationary1d { family: fam, lengthscale: 1.0 };
+            let mut prev = 1.0;
+            for i in 1..20 {
+                let v = k.eval_dist(i as f64 * 0.3);
+                assert!(v < prev, "{fam:?} not decreasing");
+                assert!(v > 0.0);
+                prev = v;
+            }
+        }
+    }
+
+    #[test]
+    fn rbf_known_value() {
+        let k = Stationary1d::rbf(2.0);
+        // exp(-0.5 * (1/2)^2) = exp(-1/8)
+        assert!((k.eval(0.0, 1.0) - (-0.125f64).exp()).abs() < 1e-15);
+    }
+
+    #[test]
+    fn lengthscale_scales_distance() {
+        let k1 = Stationary1d::matern52(1.0);
+        let k2 = Stationary1d::matern52(2.0);
+        assert!((k1.eval_dist(1.0) - k2.eval_dist(2.0)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn toeplitz_column_values() {
+        let k = Stationary1d::rbf(1.0);
+        let col = k.toeplitz_column(4, 0.5);
+        for (j, &c) in col.iter().enumerate() {
+            assert!((c - k.eval_dist(j as f64 * 0.5)).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn symmetry() {
+        let k = Stationary1d::matern32(0.9);
+        assert_eq!(k.eval(0.2, 1.7), k.eval(1.7, 0.2));
+    }
+}

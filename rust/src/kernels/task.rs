@@ -1,0 +1,87 @@
+//! Coregionalization (task) kernel for multi-task GPs (paper §6).
+//!
+//! `k_task(i, j) = [B Bᵀ]_{ij}` with `B ∈ ℝ^{s×q}` low rank. The induced
+//! n×n factor of the multi-task covariance is `V B Bᵀ Vᵀ` where `V` is the
+//! one-hot task-membership matrix; its MVM costs O(n + s·q) because V has
+//! one nonzero per row.
+
+use crate::linalg::Matrix;
+
+/// Low-rank coregionalization kernel over `s` tasks.
+#[derive(Clone, Debug)]
+pub struct TaskKernel {
+    /// s × q low-rank factor B.
+    pub b: Matrix,
+    /// Optional per-task diagonal (task-specific variance), length s.
+    pub diag: Vec<f64>,
+}
+
+impl TaskKernel {
+    /// Random-ish init: B = small values, diag = 1 (caller trains B).
+    pub fn new(b: Matrix, diag: Vec<f64>) -> Self {
+        assert_eq!(b.rows, diag.len());
+        TaskKernel { b, diag }
+    }
+
+    /// Identity task kernel (independent tasks).
+    pub fn independent(s: usize) -> Self {
+        TaskKernel { b: Matrix::zeros(s, 1), diag: vec![1.0; s] }
+    }
+
+    /// Number of tasks.
+    pub fn num_tasks(&self) -> usize {
+        self.b.rows
+    }
+
+    /// k_task(i, j) = (B Bᵀ)_{ij} + δ_{ij}·diag_i.
+    pub fn eval(&self, i: usize, j: usize) -> f64 {
+        let mut v = 0.0;
+        for k in 0..self.b.cols {
+            v += self.b.get(i, k) * self.b.get(j, k);
+        }
+        if i == j {
+            v += self.diag[i];
+        }
+        v
+    }
+
+    /// Dense s×s task covariance M = B Bᵀ + diag.
+    pub fn to_dense(&self) -> Matrix {
+        let s = self.num_tasks();
+        Matrix::from_fn(s, s, |i, j| self.eval(i, j))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_matches_dense() {
+        let b = Matrix::from_vec(3, 2, vec![1., 0., 0.5, 0.5, 0., 1.]);
+        let k = TaskKernel::new(b, vec![0.1, 0.2, 0.3]);
+        let d = k.to_dense();
+        for i in 0..3 {
+            for j in 0..3 {
+                assert!((k.eval(i, j) - d.get(i, j)).abs() < 1e-15);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_is_psd_diag_dominant() {
+        let b = Matrix::from_vec(2, 1, vec![1.0, -1.0]);
+        let k = TaskKernel::new(b, vec![0.5, 0.5]);
+        let d = k.to_dense();
+        // 2x2 PSD check: diag > 0, det > 0
+        assert!(d.get(0, 0) > 0.0);
+        assert!(d.get(0, 0) * d.get(1, 1) - d.get(0, 1) * d.get(1, 0) > 0.0);
+    }
+
+    #[test]
+    fn independent_is_identity() {
+        let k = TaskKernel::independent(4);
+        let d = k.to_dense();
+        assert!(d.max_abs_diff(&Matrix::eye(4)) < 1e-15);
+    }
+}

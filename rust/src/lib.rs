@@ -1,0 +1,36 @@
+//! # skip-gp
+//!
+//! A production-oriented reproduction of **“Product Kernel Interpolation
+//! for Scalable Gaussian Processes”** (Gardner, Pleiss, Wu, Weinberger,
+//! Wilson — AISTATS 2018), built as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! - **Layer 3 (this crate)** — the full GP inference library: kernels,
+//!   structured linear operators (SKI, SKIP, Kronecker), iterative solvers
+//!   (CG, Lanczos, stochastic Lanczos quadrature), GP models (exact, SGPR,
+//!   KISS-GP, SKIP-GP, multi-task, cluster multi-task), dataset substrate,
+//!   and the benchmark harness that regenerates every table and figure in
+//!   the paper.
+//! - **Layer 2 (`python/compile/model.py`)** — JAX compute graphs for the
+//!   SKIP hot path, AOT-lowered to HLO text at build time.
+//! - **Layer 1 (`python/compile/kernels/`)** — Pallas kernels for the
+//!   Lemma-3.1 contraction and RBF kernel tiles, checked against pure-jnp
+//!   oracles.
+//!
+//! Python never runs on the request path: `rust/src/runtime` loads the AOT
+//! artifacts through PJRT and `rust/src/coordinator` orchestrates
+//! experiments over native + PJRT execution.
+
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod gp;
+pub mod harness;
+pub mod kernels;
+pub mod linalg;
+pub mod operators;
+pub mod runtime;
+pub mod solvers;
+pub mod util;
+
+pub use error::{Error, Result};

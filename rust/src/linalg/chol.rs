@@ -1,0 +1,187 @@
+//! Cholesky decomposition and triangular solves.
+//!
+//! The O(n³) backbone of the Exact-GP baseline (paper §2.2 "traditionally…
+//! Cholesky") and of the SGPR baseline's m×m solves.
+
+use super::matrix::Matrix;
+use crate::error::{Error, Result};
+
+/// Lower-triangular Cholesky factor `L` with `A = L Lᵀ`.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    /// Lower-triangular factor, stored dense.
+    pub l: Matrix,
+}
+
+impl Cholesky {
+    /// Factor a symmetric positive-definite matrix. Returns an error if a
+    /// non-positive pivot is hit (matrix not PD to working precision).
+    pub fn new(a: &Matrix) -> Result<Self> {
+        assert_eq!(a.rows, a.cols, "cholesky: square matrix required");
+        let n = a.rows;
+        let mut l = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut sum = a.get(i, j);
+                // sum -= Σ_k<j L[i,k] L[j,k]  (rows are contiguous)
+                let (li, lj) = (l.row(i), l.row(j));
+                for k in 0..j {
+                    sum -= li[k] * lj[k];
+                }
+                if i == j {
+                    if sum <= 0.0 {
+                        return Err(Error::NotPositiveDefinite { pivot: i, value: sum });
+                    }
+                    l.set(i, j, sum.sqrt());
+                } else {
+                    l.set(i, j, sum / l.get(j, j));
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    /// Factor with added diagonal jitter, retrying with growing jitter.
+    pub fn new_with_jitter(a: &Matrix, mut jitter: f64) -> Result<Self> {
+        for _ in 0..8 {
+            let mut aj = a.clone();
+            if jitter > 0.0 {
+                aj.add_diag(jitter);
+            }
+            match Cholesky::new(&aj) {
+                Ok(c) => return Ok(c),
+                Err(_) => jitter = if jitter == 0.0 { 1e-10 } else { jitter * 10.0 },
+            }
+        }
+        Err(Error::NotPositiveDefinite { pivot: 0, value: f64::NAN })
+    }
+
+    /// Solve `A x = b` via forward + backward substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let y = self.solve_lower(b);
+        self.solve_upper(&y)
+    }
+
+    /// Solve `L y = b` (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut sum = b[i];
+            for k in 0..i {
+                sum -= row[k] * y[k];
+            }
+            y[i] = sum / row[i];
+        }
+        y
+    }
+
+    /// Solve `Lᵀ x = y` (backward substitution).
+    pub fn solve_upper(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(y.len(), n);
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut sum = y[i];
+            for k in (i + 1)..n {
+                sum -= self.l.get(k, i) * x[k];
+            }
+            x[i] = sum / self.l.get(i, i);
+        }
+        x
+    }
+
+    /// Solve against each column of `B`.
+    pub fn solve_mat(&self, b: &Matrix) -> Matrix {
+        let mut out = Matrix::zeros(b.rows, b.cols);
+        for j in 0..b.cols {
+            out.set_col(j, &self.solve(&b.col(j)));
+        }
+        out
+    }
+
+    /// log |A| = 2 Σ log L[i,i].
+    pub fn logdet(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l.get(i, i).ln()).sum::<f64>() * 2.0
+    }
+
+    /// Explicit inverse (used only in small m×m contexts, e.g. SGPR).
+    pub fn inverse(&self) -> Matrix {
+        self.solve_mat(&Matrix::eye(self.l.rows))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.matmul_t(&b); // B Bᵀ ⪰ 0
+        a.add_diag(n as f64 * 0.1);
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = random_spd(20, 1);
+        let c = Cholesky::new(&a).unwrap();
+        let rec = c.l.matmul_t(&c.l);
+        assert!(rec.max_abs_diff(&a) < 1e-9);
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let a = random_spd(15, 2);
+        let c = Cholesky::new(&a).unwrap();
+        let b: Vec<f64> = (0..15).map(|i| (i as f64).sin()).collect();
+        let x = c.solve(&b);
+        let back = a.matvec(&x);
+        for (u, v) in back.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-9, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        let a = Matrix::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]);
+        let c = Cholesky::new(&a).unwrap();
+        // det = 11
+        assert!((c.logdet() - 11f64.ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eigs 3, -1
+        assert!(Cholesky::new(&a).is_err());
+    }
+
+    #[test]
+    fn jitter_recovers_semidefinite() {
+        // Rank-1 PSD matrix — plain Cholesky fails, jitter succeeds.
+        let a = Matrix::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        assert!(Cholesky::new(&a).is_err());
+        assert!(Cholesky::new_with_jitter(&a, 1e-8).is_ok());
+    }
+
+    #[test]
+    fn inverse_is_inverse() {
+        let a = random_spd(8, 3);
+        let inv = Cholesky::new(&a).unwrap().inverse();
+        let prod = a.matmul(&inv);
+        assert!(prod.max_abs_diff(&Matrix::eye(8)) < 1e-8);
+    }
+
+    #[test]
+    fn solve_mat_columns() {
+        let a = random_spd(6, 4);
+        let c = Cholesky::new(&a).unwrap();
+        let b = Matrix::from_fn(6, 3, |i, j| (i + j) as f64 * 0.25);
+        let x = c.solve_mat(&b);
+        assert!(a.matmul(&x).max_abs_diff(&b) < 1e-9);
+    }
+}

@@ -1,0 +1,189 @@
+//! Iterative radix-2 complex FFT.
+//!
+//! Powers the O(m log m) Toeplitz/circulant MVMs at the heart of SKI
+//! (paper §2.3): a symmetric Toeplitz `K_UU` embeds in a circulant whose
+//! action diagonalizes under the DFT.
+
+use std::f64::consts::PI;
+
+/// Complex number as (re, im) — small enough that a bespoke type beats
+/// pulling in a dependency.
+pub type C = (f64, f64);
+
+#[inline]
+fn c_add(a: C, b: C) -> C {
+    (a.0 + b.0, a.1 + b.1)
+}
+
+#[inline]
+fn c_sub(a: C, b: C) -> C {
+    (a.0 - b.0, a.1 - b.1)
+}
+
+#[inline]
+fn c_mul(a: C, b: C) -> C {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+/// Next power of two ≥ n.
+pub fn next_pow2(n: usize) -> usize {
+    let mut p = 1;
+    while p < n {
+        p <<= 1;
+    }
+    p
+}
+
+/// In-place forward FFT. `x.len()` must be a power of two.
+pub fn fft(x: &mut [C]) {
+    fft_dir(x, false);
+}
+
+/// In-place inverse FFT (includes the 1/n normalization).
+pub fn ifft(x: &mut [C]) {
+    fft_dir(x, true);
+    let n = x.len() as f64;
+    for v in x.iter_mut() {
+        v.0 /= n;
+        v.1 /= n;
+    }
+}
+
+fn fft_dir(x: &mut [C], inverse: bool) {
+    let n = x.len();
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            x.swap(i, j);
+        }
+    }
+    // Cooley–Tukey butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * PI / len as f64;
+        let wlen: C = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w: C = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = x[i + k];
+                let v = c_mul(x[i + k + len / 2], w);
+                x[i + k] = c_add(u, v);
+                x[i + k + len / 2] = c_sub(u, v);
+                w = c_mul(w, wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Real-input convenience: FFT of a real slice zero-padded to `n` (power of 2).
+pub fn fft_real(x: &[f64], n: usize) -> Vec<C> {
+    assert!(n.is_power_of_two() && n >= x.len());
+    let mut buf: Vec<C> = x.iter().map(|&v| (v, 0.0)).collect();
+    buf.resize(n, (0.0, 0.0));
+    fft(&mut buf);
+    buf
+}
+
+/// Circular convolution via FFT: returns the first `out_len` entries of
+/// `ifft(fft(a) ⊙ fft(b))` where both inputs are zero-padded to `n`.
+pub fn circ_mul(a_hat: &[C], b: &[f64], out_len: usize) -> Vec<f64> {
+    let n = a_hat.len();
+    let mut bh = fft_real(b, n);
+    for (v, &a) in bh.iter_mut().zip(a_hat) {
+        *v = c_mul(*v, a);
+    }
+    ifft(&mut bh);
+    bh[..out_len].iter().map(|c| c.0).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn naive_dft(x: &[C]) -> Vec<C> {
+        let n = x.len();
+        (0..n)
+            .map(|k| {
+                let mut acc = (0.0, 0.0);
+                for (j, &v) in x.iter().enumerate() {
+                    let ang = -2.0 * PI * (k * j) as f64 / n as f64;
+                    acc = c_add(acc, c_mul(v, (ang.cos(), ang.sin())));
+                }
+                acc
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fft_matches_naive_dft() {
+        let mut x: Vec<C> = (0..16)
+            .map(|i| ((i as f64 * 0.3).sin(), (i as f64 * 0.7).cos()))
+            .collect();
+        let expect = naive_dft(&x);
+        fft(&mut x);
+        for (a, e) in x.iter().zip(&expect) {
+            assert!((a.0 - e.0).abs() < 1e-10 && (a.1 - e.1).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fft_ifft_roundtrip() {
+        let orig: Vec<C> = (0..64).map(|i| (i as f64, -(i as f64) * 0.5)).collect();
+        let mut x = orig.clone();
+        fft(&mut x);
+        ifft(&mut x);
+        for (a, e) in x.iter().zip(&orig) {
+            assert!((a.0 - e.0).abs() < 1e-9 && (a.1 - e.1).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut x = vec![(0.0, 0.0); 8];
+        x[0] = (1.0, 0.0);
+        fft(&mut x);
+        for v in x {
+            assert!((v.0 - 1.0).abs() < 1e-12 && v.1.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn circ_mul_matches_naive_circular_convolution() {
+        let a = [1.0, 2.0, 0.0, -1.0, 0.5, 0.0, 0.0, 0.0];
+        let b = [0.5, 0.0, 3.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let n = 8;
+        let a_hat = fft_real(&a, n);
+        let got = circ_mul(&a_hat, &b, n);
+        // naive circular convolution
+        for k in 0..n {
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += a[j] * b[(k + n - j) % n];
+            }
+            assert!((got[k] - acc).abs() < 1e-10, "k={k}: {} vs {acc}", got[k]);
+        }
+    }
+
+    #[test]
+    fn next_pow2_values() {
+        assert_eq!(next_pow2(1), 1);
+        assert_eq!(next_pow2(2), 2);
+        assert_eq!(next_pow2(3), 4);
+        assert_eq!(next_pow2(1000), 1024);
+    }
+}

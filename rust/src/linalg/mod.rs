@@ -1,0 +1,16 @@
+//! Dense and structured linear-algebra substrate.
+//!
+//! Everything here is built from scratch (no external LA crates are
+//! available offline): dense matrices, Cholesky, radix-2 FFT, symmetric
+//! Toeplitz fast MVMs, and a symmetric tridiagonal eigensolver.
+
+pub mod chol;
+pub mod fft;
+pub mod matrix;
+pub mod toeplitz;
+pub mod tridiag;
+
+pub use chol::Cholesky;
+pub use matrix::{axpy, dot, norm2, scale_in_place, Matrix};
+pub use toeplitz::SymToeplitz;
+pub use tridiag::{tridiag_eig, TridiagEig};

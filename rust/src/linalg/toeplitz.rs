@@ -1,0 +1,108 @@
+//! Symmetric Toeplitz matrices with O(m log m) MVMs via circulant embedding.
+//!
+//! In SKI (paper §2.3) a 1-D regular grid of inducing points makes
+//! `K_UU` symmetric Toeplitz: entry (i,j) depends only on |i−j|. Embedding
+//! the first column into a circulant of power-of-two size N ≥ 2m−1 lets the
+//! FFT diagonalize the action, so `K_UU v` costs two FFTs.
+
+use super::fft::{circ_mul, fft_real, next_pow2, C};
+use super::matrix::Matrix;
+
+/// Symmetric Toeplitz matrix represented by its first column, with the
+/// eigen-spectrum of its circulant embedding precomputed.
+#[derive(Clone, Debug)]
+pub struct SymToeplitz {
+    /// First column `t[0..m]`; entry (i,j) = t[|i-j|].
+    pub col: Vec<f64>,
+    /// FFT of the circulant embedding's first column.
+    c_hat: Vec<C>,
+}
+
+impl SymToeplitz {
+    /// Build from the first column.
+    pub fn new(col: Vec<f64>) -> Self {
+        let m = col.len();
+        assert!(m > 0);
+        // Circulant first column: [t0, t1, …, t_{m-1}, 0…0, t_{m-1}, …, t1]
+        // of any length N ≥ 2m−1; choose next power of two for radix-2 FFT.
+        let n = next_pow2((2 * m).saturating_sub(1).max(1));
+        let mut c = vec![0.0; n];
+        c[..m].copy_from_slice(&col);
+        for k in 1..m {
+            c[n - k] = col[k];
+        }
+        let c_hat = fft_real(&c, n);
+        SymToeplitz { col, c_hat }
+    }
+
+    /// Matrix dimension m.
+    pub fn dim(&self) -> usize {
+        self.col.len()
+    }
+
+    /// `K v` in O(m log m) via the circulant embedding.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        let m = self.dim();
+        assert_eq!(v.len(), m);
+        circ_mul(&self.c_hat, v, m)
+    }
+
+    /// Dense materialization (tests / tiny problems only).
+    pub fn to_dense(&self) -> Matrix {
+        let m = self.dim();
+        Matrix::from_fn(m, m, |i, j| self.col[i.abs_diff(j)])
+    }
+
+    /// Naive O(m²) MVM (oracle for tests).
+    pub fn matvec_naive(&self, v: &[f64]) -> Vec<f64> {
+        let m = self.dim();
+        (0..m)
+            .map(|i| (0..m).map(|j| self.col[i.abs_diff(j)] * v[j]).sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fft_mvm_matches_naive() {
+        let mut rng = Rng::new(10);
+        for m in [1usize, 2, 3, 7, 16, 33, 100] {
+            let col: Vec<f64> = (0..m).map(|k| (-(k as f64) * 0.1).exp()).collect();
+            let t = SymToeplitz::new(col);
+            let v = rng.normal_vec(m);
+            let fast = t.matvec(&v);
+            let slow = t.matvec_naive(&v);
+            for (a, b) in fast.iter().zip(&slow) {
+                assert!((a - b).abs() < 1e-9, "m={m}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn matches_dense_matvec() {
+        let col = vec![2.0, 1.0, 0.5, 0.25];
+        let t = SymToeplitz::new(col);
+        let v = [1.0, -1.0, 2.0, 0.0];
+        let dense = t.to_dense().matvec(&v);
+        let fast = t.matvec(&v);
+        for (a, b) in fast.iter().zip(&dense) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn identity_toeplitz() {
+        let mut col = vec![0.0; 8];
+        col[0] = 1.0;
+        let t = SymToeplitz::new(col);
+        let v: Vec<f64> = (0..8).map(|i| i as f64).collect();
+        let out = t.matvec(&v);
+        for (a, b) in out.iter().zip(&v) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+}

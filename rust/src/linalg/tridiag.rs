@@ -1,0 +1,195 @@
+//! Symmetric tridiagonal eigensolver (implicit-shift QL).
+//!
+//! Stochastic Lanczos quadrature (paper §2.2; Dong et al. 2017; Ubaru et
+//! al. 2017) needs the eigenvalues θᵢ of the Lanczos tridiagonal T and the
+//! *first components* τᵢ of its eigenvectors — the Gauss quadrature nodes
+//! and weights. We adapt the classic EISPACK `tql2` routine, tracking only
+//! the first row of the accumulated eigenvector matrix.
+
+use crate::error::{Error, Result};
+
+/// Eigen-decomposition of a symmetric tridiagonal matrix.
+#[derive(Clone, Debug)]
+pub struct TridiagEig {
+    /// Eigenvalues, ascending.
+    pub eigenvalues: Vec<f64>,
+    /// First component of each (unit-norm) eigenvector, same order.
+    pub first_components: Vec<f64>,
+}
+
+/// Compute eigenvalues and eigenvector first-components of the symmetric
+/// tridiagonal matrix with diagonal `d` and off-diagonal `e` (len n−1).
+pub fn tridiag_eig(d: &[f64], e: &[f64]) -> Result<TridiagEig> {
+    let n = d.len();
+    assert!(n > 0);
+    assert_eq!(e.len(), n.saturating_sub(1), "off-diagonal length must be n-1");
+    let mut d = d.to_vec();
+    // Shifted off-diagonal buffer with trailing zero, as in tql2.
+    let mut e2 = vec![0.0; n];
+    e2[..n - 1].copy_from_slice(e);
+    // First row of the eigenvector matrix (starts as e₁ᵀ of identity).
+    let mut z = vec![0.0; n];
+    z[0] = 1.0;
+
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find small subdiagonal element.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e2[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                return Err(Error::EigFailed { index: l });
+            }
+            // Wilkinson shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e2[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r } else { -r };
+            g = d[m] - d[l] + e2[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            // Implicit QL sweep from m-1 down to l.
+            for i in (l..m).rev() {
+                let mut f = s * e2[i];
+                let b = c * e2[i];
+                r = f.hypot(g);
+                e2[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e2[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate the rotation into the tracked first row.
+                f = z[i + 1];
+                z[i + 1] = s * z[i] + c * f;
+                z[i] = c * z[i] - s * f;
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e2[l] = g;
+            e2[m] = 0.0;
+        }
+    }
+
+    // Sort ascending, permuting first-components alongside.
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| d[a].partial_cmp(&d[b]).unwrap());
+    let eigenvalues: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+    let first_components: Vec<f64> = idx.iter().map(|&i| z[i]).collect();
+    Ok(TridiagEig { eigenvalues, first_components })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matrix::Matrix;
+    use crate::util::Rng;
+
+    fn tridiag_dense(d: &[f64], e: &[f64]) -> Matrix {
+        let n = d.len();
+        Matrix::from_fn(n, n, |i, j| {
+            if i == j {
+                d[i]
+            } else if i.abs_diff(j) == 1 {
+                e[i.min(j)]
+            } else {
+                0.0
+            }
+        })
+    }
+
+    #[test]
+    fn diagonal_matrix_eigs() {
+        let d = [3.0, 1.0, 2.0];
+        let e = [0.0, 0.0];
+        let eig = tridiag_eig(&d, &e).unwrap();
+        assert_eq!(eig.eigenvalues, vec![1.0, 2.0, 3.0]);
+        // e1 is the eigenvector of eigenvalue 3 ⇒ |first comp| = 1 there.
+        assert!((eig.first_components[2].abs() - 1.0).abs() < 1e-12);
+        assert!(eig.first_components[0].abs() < 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → eigs 1, 3; eigvecs (1,∓1)/√2.
+        let eig = tridiag_eig(&[2.0, 2.0], &[1.0]).unwrap();
+        assert!((eig.eigenvalues[0] - 1.0).abs() < 1e-12);
+        assert!((eig.eigenvalues[1] - 3.0).abs() < 1e-12);
+        for fc in &eig.first_components {
+            assert!((fc.abs() - std::f64::consts::FRAC_1_SQRT_2).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_and_weights_identities() {
+        // Σθᵢ = trace, Στᵢ² = 1 (first row of an orthogonal matrix).
+        let mut rng = Rng::new(77);
+        for n in [1usize, 2, 5, 20, 50] {
+            let d: Vec<f64> = rng.normal_vec(n).iter().map(|x| x + 3.0).collect();
+            let e: Vec<f64> = rng.normal_vec(n.saturating_sub(1));
+            let eig = tridiag_eig(&d, &e).unwrap();
+            let tr: f64 = d.iter().sum();
+            let tr_eig: f64 = eig.eigenvalues.iter().sum();
+            assert!((tr - tr_eig).abs() < 1e-8 * (1.0 + tr.abs()));
+            let w: f64 = eig.first_components.iter().map(|t| t * t).sum();
+            assert!((w - 1.0).abs() < 1e-10, "n={n} w={w}");
+        }
+    }
+
+    #[test]
+    fn quadrature_reproduces_matrix_function() {
+        // e₁ᵀ f(T) e₁ = Σ τᵢ² f(θᵢ). Check with f = exp against a dense
+        // eigendecomposition by series (small matrix, f(T) via scaling).
+        let d = [1.0, 0.5, 0.25, 0.8];
+        let e = [0.3, 0.2, 0.1];
+        let eig = tridiag_eig(&d, &e).unwrap();
+        // f(x) = x²: e₁ᵀ T² e₁ = (T²)₀₀ = d₀² + e₀².
+        let got: f64 = eig
+            .first_components
+            .iter()
+            .zip(&eig.eigenvalues)
+            .map(|(t, th)| t * t * th * th)
+            .sum();
+        let expect = d[0] * d[0] + e[0] * e[0];
+        assert!((got - expect).abs() < 1e-10, "{got} vs {expect}");
+    }
+
+    #[test]
+    fn eigenvalues_match_dense_characteristic() {
+        // Verify eigenvalues by checking det(T - θI) ≈ 0 via recurrence.
+        let d = [2.0, -1.0, 0.5, 3.0, 1.0];
+        let e = [0.7, 0.4, 0.9, 0.2];
+        let eig = tridiag_eig(&d, &e).unwrap();
+        let a = tridiag_dense(&d, &e);
+        for &theta in &eig.eigenvalues {
+            // char poly via tridiagonal determinant recurrence
+            let n = d.len();
+            let mut p_prev = 1.0;
+            let mut p = a.get(0, 0) - theta;
+            for i in 1..n {
+                let next = (d[i] - theta) * p - e[i - 1] * e[i - 1] * p_prev;
+                p_prev = p;
+                p = next;
+            }
+            assert!(p.abs() < 1e-6, "det at eigenvalue {theta} = {p}");
+        }
+    }
+}

@@ -1,0 +1,332 @@
+//! skip-gp CLI — Layer-3 entrypoint.
+//!
+//! ```text
+//! skip-gp bench <experiment> [options]   regenerate a paper table/figure
+//! skip-gp bench all [options]            run every experiment
+//! skip-gp train [options]                train a SKIP GP on a dataset
+//! skip-gp artifacts [--dir D]            inspect / smoke-test AOT artifacts
+//! skip-gp list                           list datasets and experiments
+//! ```
+//!
+//! (Argument parsing is hand-rolled: no CLI crates are available in this
+//! offline build environment.)
+
+use skip_gp::coordinator::{print_summary, Scheduler};
+use skip_gp::data::{dataset_by_name, generate, DATASETS};
+use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant};
+use skip_gp::harness::{fig2, fig3, fig4, mtgp_speed, table1, table2};
+use skip_gp::runtime::PjrtBackend;
+use skip_gp::util::{mae, Timer};
+use skip_gp::{Error, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Parsed `--key value` / `--flag` options.
+struct Opts {
+    map: HashMap<String, String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> Result<Self> {
+        let mut map = HashMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let is_flag = i + 1 >= args.len() || args[i + 1].starts_with("--");
+                if is_flag {
+                    map.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                } else {
+                    map.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                }
+            } else {
+                return Err(Error::Config(format!("unexpected argument '{a}'")));
+            }
+        }
+        Ok(Opts { map })
+    }
+
+    fn get<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.map.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("bad value for --{key}: '{v}'"))),
+        }
+    }
+
+    fn get_str(&self, key: &str) -> Option<String> {
+        self.map.get(key).cloned()
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.map.get(key).map(|v| v == "true").unwrap_or(false)
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "skip-gp — Product Kernel Interpolation for Scalable Gaussian Processes
+
+USAGE:
+  skip-gp bench <fig2-left|fig2-right|table1|table2|fig3|fig4|mtgp-speedup|all>
+                [--out-dir D] [--scale F] [--steps N] [--rank R] [--seed S]
+                [--dataset NAME] [--trials N] [--n N] [--full]
+  skip-gp train  [--dataset NAME] [--scale F] [--steps N] [--rank R]
+                 [--grid M] [--variant skip|kiss] [--pjrt]
+  skip-gp artifacts [--dir D]
+  skip-gp list"
+    );
+    std::process::exit(2)
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    let cmd = args[0].as_str();
+    let rest = &args[1..];
+    let code = match cmd {
+        "bench" => cmd_bench(rest),
+        "train" => cmd_train(rest),
+        "artifacts" => cmd_artifacts(rest),
+        "list" => cmd_list(),
+        "-h" | "--help" | "help" => usage(),
+        other => {
+            eprintln!("unknown command '{other}'");
+            usage();
+        }
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_list() -> Result<()> {
+    println!("datasets (synthetic surrogates, paper shapes):");
+    for s in DATASETS {
+        println!("  {:<14} n={:<7} d={}", s.name, s.n, s.d);
+    }
+    println!("\nexperiments: fig2-left fig2-right table1 table2 fig3 fig4 mtgp-speedup all");
+    Ok(())
+}
+
+fn cmd_artifacts(rest: &[String]) -> Result<()> {
+    let opts = Opts::parse(rest)?;
+    let dir = PathBuf::from(
+        opts.get_str("dir").unwrap_or_else(|| "artifacts".to_string()),
+    );
+    let entries = skip_gp::runtime::load_manifest(&dir)?;
+    println!("{} artifacts in {}:", entries.len(), dir.display());
+    for e in &entries {
+        println!("  {:<28} op={:<14} dims={:?}", e.name, e.op, e.dims);
+    }
+    // Smoke-test: compile + run the hadamard artifacts against native.
+    let backend = PjrtBackend::load(&dir)?;
+    use skip_gp::linalg::Matrix;
+    use skip_gp::operators::lowrank::{
+        hadamard_pair_matvec_native, ContractionBackend, LanczosFactor,
+    };
+    use skip_gp::util::{rel_err, Rng};
+    let mut rng = Rng::new(0);
+    let (n, r) = (1024, 16);
+    let q = Matrix::from_fn(n, r, |_, _| rng.normal());
+    let mut t = Matrix::from_fn(r, r, |_, _| rng.normal());
+    t.symmetrize();
+    let f = LanczosFactor { q, t };
+    let v = rng.normal_vec(n);
+    let got = backend.hadamard_pair_matvec(&f, &f, &v);
+    let want = hadamard_pair_matvec_native(&f, &f, &v);
+    let err = rel_err(&got, &want);
+    let (pjrt, native) = backend.call_counts();
+    println!("smoke test: rel_err={err:.2e} (pjrt calls {pjrt}, native {native})");
+    if err > 1e-8 || pjrt == 0 {
+        return Err(Error::Artifact("artifact smoke test failed".into()));
+    }
+    println!("artifacts OK");
+    Ok(())
+}
+
+fn cmd_train(rest: &[String]) -> Result<()> {
+    let opts = Opts::parse(rest)?;
+    let name = opts.get_str("dataset").unwrap_or_else(|| "protein".into());
+    let spec = dataset_by_name(&name)
+        .ok_or_else(|| Error::Config(format!("unknown dataset '{name}'")))?;
+    let scale: f64 = opts.get("scale", 0.05)?;
+    let steps: usize = opts.get("steps", 10)?;
+    let rank: usize = opts.get("rank", 15)?;
+    let grid_m: usize = opts.get("grid", 100)?;
+    let variant = match opts.get_str("variant").as_deref() {
+        None | Some("skip") => MvmVariant::Skip,
+        Some("kiss") => MvmVariant::Kiss,
+        Some(v) => return Err(Error::Config(format!("unknown variant '{v}'"))),
+    };
+    let data = generate(spec, scale);
+    println!(
+        "training {} GP on {} (n={}, d={}, steps={steps})",
+        if variant == MvmVariant::Skip { "SKIP" } else { "KISS" },
+        name,
+        data.n(),
+        data.d()
+    );
+    let mut gp = MvmGp::new(
+        data.xtrain.clone(),
+        data.ytrain.clone(),
+        GpHypers::init_for_dim(data.d()),
+        MvmGpConfig { variant, grid_m, rank, ..Default::default() },
+    );
+    if opts.flag("pjrt") {
+        let backend = Arc::new(PjrtBackend::load(&PathBuf::from("artifacts"))?);
+        gp = gp.with_backend(backend);
+        println!("using PJRT contraction backend");
+    }
+    let t = Timer::start();
+    let trace = gp.fit(steps, 0.1);
+    let train_s = t.elapsed_s();
+    for (i, mll) in trace.iter().enumerate() {
+        println!("  step {i:>3}  mll/n = {:.4}", mll / data.n() as f64);
+    }
+    let pred = gp.predict_mean(&data.xtest);
+    println!(
+        "train {train_s:.1}s   test MAE {:.4}   hypers: ell={:.3} sf2={:.3} sn2={:.4}",
+        mae(&pred, &data.ytest),
+        gp.hypers.ell(),
+        gp.hypers.sf2(),
+        gp.hypers.sn2()
+    );
+    Ok(())
+}
+
+fn cmd_bench(rest: &[String]) -> Result<()> {
+    if rest.is_empty() {
+        usage();
+    }
+    let exp = rest[0].as_str();
+    let opts = Opts::parse(&rest[1..])?;
+    let out_dir = PathBuf::from(
+        opts.get_str("out-dir").unwrap_or_else(|| "results".to_string()),
+    );
+    let seed: u64 = opts.get("seed", 0)?;
+    let full = opts.flag("full");
+
+    let run_fig2_left = {
+        let out = out_dir.clone();
+        let n: usize = opts.get("n", if full { 2500 } else { 1200 })?;
+        let trials: usize = opts.get("trials", if full { 10 } else { 4 })?;
+        move || {
+            fig2::fig2_left(
+                &fig2::Fig2LeftConfig { n, trials, seed, ..Default::default() },
+                &out,
+            )
+        }
+    };
+    let run_fig2_right = {
+        let out = out_dir.clone();
+        let n: usize = opts.get("n", if full { 2500 } else { 1500 })?;
+        move || {
+            fig2::fig2_right(
+                &fig2::Fig2RightConfig { n, seed, ..Default::default() },
+                &out,
+            )
+        }
+    };
+    let run_table1 = {
+        let out = out_dir.clone();
+        let cfg = table1::Table1Config {
+            scale: opts.get("scale", if full { 0.25 } else { 0.06 })?,
+            steps: opts.get("steps", if full { 20 } else { 8 })?,
+            rank: opts.get("rank", 30)?,
+            only: opts.get_str("dataset"),
+            seed,
+            ..Default::default()
+        };
+        move || table1::table1(&cfg, &out).map(|_| ())
+    };
+    let run_table2 = {
+        let out = out_dir.clone();
+        let cfg = table2::Table2Config {
+            ns: if full {
+                vec![512, 1024, 2048, 4096]
+            } else {
+                vec![256, 512, 1024, 2048]
+            },
+            seed,
+            ..Default::default()
+        };
+        move || table2::table2(&cfg, &out).map(|_| ())
+    };
+    let run_fig3 = {
+        let out = out_dir.clone();
+        let cfg = fig3::Fig3Config {
+            num_children: opts.get("n", if full { 30 } else { 20 })?,
+            gibbs_sweeps: opts.get("steps", if full { 8 } else { 5 })?,
+            seed,
+            ..Default::default()
+        };
+        move || fig3::fig3(&cfg, &out).map(|_| ())
+    };
+    let run_fig4 = {
+        let out = out_dir.clone();
+        let cfg = fig4::Fig4Config {
+            task_counts: if full {
+                vec![16, 24, 36, 48, 64]
+            } else {
+                vec![16, 24, 36]
+            },
+            mtgp_steps: opts.get("steps", if full { 15 } else { 10 })?,
+            seed,
+            ..Default::default()
+        };
+        move || fig4::fig4(&cfg, &out).map(|_| ())
+    };
+    let run_speedup = {
+        let out = out_dir.clone();
+        let cfg = mtgp_speed::MtgpSpeedConfig {
+            ns: if full {
+                vec![500, 1000, 2000, 4000]
+            } else {
+                vec![500, 1000, 2000]
+            },
+            seed,
+        };
+        move || mtgp_speed::mtgp_speedup(&cfg, &out).map(|_| ())
+    };
+
+    let mut sched = Scheduler::new();
+    match exp {
+        "fig2-left" => sched.add("fig2-left", run_fig2_left),
+        "fig2-right" => sched.add("fig2-right", run_fig2_right),
+        "table1" => sched.add("table1", run_table1),
+        "table2" => sched.add("table2", run_table2),
+        "fig3" => sched.add("fig3", run_fig3),
+        "fig4" => sched.add("fig4", run_fig4),
+        "mtgp-speedup" => sched.add("mtgp-speedup", run_speedup),
+        "all" => {
+            sched.add("fig2-left", run_fig2_left);
+            sched.add("fig2-right", run_fig2_right);
+            sched.add("table1", run_table1);
+            sched.add("table2", run_table2);
+            sched.add("fig3", run_fig3);
+            sched.add("fig4", run_fig4);
+            sched.add("mtgp-speedup", run_speedup);
+        }
+        other => {
+            eprintln!("unknown experiment '{other}'");
+            usage();
+        }
+    }
+    let reports = sched.run_all();
+    print_summary(&reports);
+    if reports
+        .iter()
+        .any(|r| matches!(r.status, skip_gp::coordinator::JobStatus::Failed(_)))
+    {
+        return Err(Error::Config("one or more experiments failed".into()));
+    }
+    Ok(())
+}

@@ -1,0 +1,240 @@
+//! Regular 1-D inducing grids and local cubic interpolation (paper §2.3).
+//!
+//! SKI approximates `k(x, z) ≈ w_x K_UU w_zᵀ` where `w_x` holds the local
+//! cubic convolution interpolation weights of Keys (1981): exactly four
+//! nonzeros per point. We store the interpolation matrix `W` in a
+//! fixed-width sparse layout (4 index/weight pairs per row), which makes
+//! `W v` and `Wᵀ v` allocation-free streaming loops.
+
+use crate::linalg::Matrix;
+
+/// Number of interpolation weights per point (cubic convolution).
+pub const STENCIL: usize = 4;
+
+/// A regular 1-D grid of inducing points.
+#[derive(Clone, Debug)]
+pub struct Grid1d {
+    /// Left-most grid point.
+    pub min: f64,
+    /// Grid spacing h.
+    pub h: f64,
+    /// Number of grid points m.
+    pub m: usize,
+}
+
+impl Grid1d {
+    /// Build a grid of `m ≥ 4` points covering `[lo, hi]` with enough
+    /// margin that every data point has a full interior cubic stencil.
+    pub fn fit(lo: f64, hi: f64, m: usize) -> Self {
+        assert!(m >= STENCIL, "grid needs at least {STENCIL} points");
+        assert!(hi >= lo);
+        let span = (hi - lo).max(1e-8);
+        // Reserve 2 grid cells of margin on each side for the stencil.
+        let h = span / (m - 5) as f64;
+        let min = lo - 2.0 * h;
+        Grid1d { min, h, m }
+    }
+
+    /// Grid point i.
+    #[inline]
+    pub fn point(&self, i: usize) -> f64 {
+        self.min + i as f64 * self.h
+    }
+
+    /// All grid points.
+    pub fn points(&self) -> Vec<f64> {
+        (0..self.m).map(|i| self.point(i)).collect()
+    }
+}
+
+/// Keys (1981) cubic convolution kernel, a = −1/2, support |s| < 2.
+#[inline]
+fn cubic_weight(s: f64) -> f64 {
+    let a = -0.5;
+    let s = s.abs();
+    if s < 1.0 {
+        ((a + 2.0) * s - (a + 3.0)) * s * s + 1.0
+    } else if s < 2.0 {
+        a * (((s - 5.0) * s + 8.0) * s - 4.0)
+    } else {
+        0.0
+    }
+}
+
+/// Stencil of point `x` on `grid`: left-most grid index plus the four
+/// (renormalized) cubic convolution weights. Shared by the 1-D
+/// `InterpMatrix` and the tensor-product weights of KISS-GP.
+pub fn cubic_stencil(x: f64, grid: &Grid1d) -> (usize, [f64; STENCIL]) {
+    let u = (x - grid.min) / grid.h;
+    let fi = u.floor() as isize;
+    let base = (fi - 1).clamp(0, grid.m as isize - STENCIL as isize) as usize;
+    let mut row_w = [0.0; STENCIL];
+    let mut wsum = 0.0;
+    for (k, rw) in row_w.iter_mut().enumerate() {
+        *rw = cubic_weight(u - (base + k) as f64);
+        wsum += *rw;
+    }
+    // Renormalize: guards partition-of-unity at clamped boundaries.
+    if wsum.abs() > 1e-12 {
+        for rw in row_w.iter_mut() {
+            *rw /= wsum;
+        }
+    }
+    (base, row_w)
+}
+
+/// Fixed-width sparse interpolation matrix W (n × m, 4 nnz per row).
+#[derive(Clone, Debug)]
+pub struct InterpMatrix {
+    pub n: usize,
+    pub m: usize,
+    /// 4 column indices per row, row-major.
+    pub idx: Vec<u32>,
+    /// 4 weights per row, row-major.
+    pub w: Vec<f64>,
+}
+
+impl InterpMatrix {
+    /// Interpolation weights of 1-D points `xs` onto `grid`.
+    pub fn new(xs: &[f64], grid: &Grid1d) -> Self {
+        let n = xs.len();
+        let m = grid.m;
+        let mut idx = Vec::with_capacity(n * STENCIL);
+        let mut w = Vec::with_capacity(n * STENCIL);
+        for &x in xs {
+            let (base, row_w) = cubic_stencil(x, grid);
+            for (k, &rw) in row_w.iter().enumerate() {
+                idx.push((base + k) as u32);
+                w.push(rw);
+            }
+        }
+        InterpMatrix { n, m, idx, w }
+    }
+
+    /// `W v` — (n×m)(m) in O(n).
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.m);
+        let mut out = vec![0.0; self.n];
+        for i in 0..self.n {
+            let o = &mut out[i];
+            let base = i * STENCIL;
+            for k in 0..STENCIL {
+                *o += self.w[base + k] * v[self.idx[base + k] as usize];
+            }
+        }
+        out
+    }
+
+    /// `Wᵀ v` — (m×n)(n) in O(n).
+    pub fn t_matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n);
+        let mut out = vec![0.0; self.m];
+        for i in 0..self.n {
+            let base = i * STENCIL;
+            let x = v[i];
+            for k in 0..STENCIL {
+                out[self.idx[base + k] as usize] += self.w[base + k] * x;
+            }
+        }
+        out
+    }
+
+    /// Dense materialization (tests only).
+    pub fn to_dense(&self) -> Matrix {
+        let mut d = Matrix::zeros(self.n, self.m);
+        for i in 0..self.n {
+            let base = i * STENCIL;
+            for k in 0..STENCIL {
+                let j = self.idx[base + k] as usize;
+                d.set(i, j, d.get(i, j) + self.w[base + k]);
+            }
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Stationary1d;
+    use crate::util::Rng;
+
+    #[test]
+    fn grid_covers_data_with_margin() {
+        let g = Grid1d::fit(-1.0, 1.0, 20);
+        assert!(g.point(0) < -1.0);
+        assert!(g.point(g.m - 1) > 1.0);
+        // Interior stencil for boundary data points.
+        let u = (-1.0 - g.min) / g.h;
+        assert!(u >= 1.0);
+        let u = (1.0 - g.min) / g.h;
+        assert!(u <= (g.m - 3) as f64 + 1.0);
+    }
+
+    #[test]
+    fn weights_partition_unity() {
+        let g = Grid1d::fit(0.0, 1.0, 16);
+        let xs: Vec<f64> = (0..50).map(|i| i as f64 / 49.0).collect();
+        let w = InterpMatrix::new(&xs, &g);
+        let ones = vec![1.0; g.m];
+        for v in w.matvec(&ones) {
+            assert!((v - 1.0).abs() < 1e-10, "partition of unity violated: {v}");
+        }
+    }
+
+    #[test]
+    fn interpolates_grid_points_exactly() {
+        let g = Grid1d::fit(0.0, 1.0, 16);
+        // Data exactly on interior grid points → weight 1 on that point.
+        let xs = vec![g.point(5), g.point(8)];
+        let w = InterpMatrix::new(&xs, &g);
+        let f: Vec<f64> = (0..g.m).map(|i| (i as f64).powi(2)).collect();
+        let got = w.matvec(&f);
+        assert!((got[0] - 25.0).abs() < 1e-10);
+        assert!((got[1] - 64.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn cubic_reproduces_cubics() {
+        // Cubic convolution interpolation is exact for polynomials ≤ deg 2
+        // and O(h³) otherwise; test quadratic exactness on interior points.
+        let g = Grid1d::fit(0.0, 1.0, 32);
+        let xs: Vec<f64> = (1..20).map(|i| 0.05 * i as f64).collect();
+        let w = InterpMatrix::new(&xs, &g);
+        let f: Vec<f64> = g.points().iter().map(|&u| 2.0 * u * u - u + 0.3).collect();
+        let got = w.matvec(&f);
+        for (x, v) in xs.iter().zip(got) {
+            let expect = 2.0 * x * x - x + 0.3;
+            assert!((v - expect).abs() < 1e-9, "at {x}: {v} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn ski_kernel_approximation_quality() {
+        // w_x K_UU w_zᵀ ≈ k(x,z) (paper Eq. 4) — dense check on a fine grid.
+        let kern = Stationary1d::rbf(0.5);
+        let g = Grid1d::fit(-1.0, 1.0, 64);
+        let mut rng = Rng::new(5);
+        let xs = rng.uniform_vec(30, -1.0, 1.0);
+        let w = InterpMatrix::new(&xs, &g);
+        let kuu = Matrix::from_fn(g.m, g.m, |i, j| kern.eval(g.point(i), g.point(j)));
+        let wd = w.to_dense();
+        let approx = wd.matmul(&kuu).matmul_t(&wd);
+        let exact = Matrix::from_fn(30, 30, |i, j| kern.eval(xs[i], xs[j]));
+        assert!(approx.max_abs_diff(&exact) < 1e-3);
+    }
+
+    #[test]
+    fn t_matvec_is_adjoint() {
+        let g = Grid1d::fit(0.0, 2.0, 12);
+        let mut rng = Rng::new(6);
+        let xs = rng.uniform_vec(25, 0.0, 2.0);
+        let w = InterpMatrix::new(&xs, &g);
+        let u = rng.normal_vec(g.m);
+        let v = rng.normal_vec(25);
+        // ⟨Wu, v⟩ = ⟨u, Wᵀv⟩
+        let lhs: f64 = w.matvec(&u).iter().zip(&v).map(|(a, b)| a * b).sum();
+        let rhs: f64 = u.iter().zip(w.t_matvec(&v)).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-10);
+    }
+}

@@ -1,0 +1,246 @@
+//! KISS-GP operator: SKI with a d-dimensional Kronecker grid (paper §2.3,
+//! §5 — the baseline SKIP improves on).
+//!
+//! `K_XX ≈ W (T₁ ⊗ ⋯ ⊗ T_d) Wᵀ` where the grid is the Cartesian product
+//! of d regular 1-D grids (m points each → M = mᵈ inducing points) and `W`
+//! carries 4ᵈ tensor-product cubic weights per row. MVM cost is
+//! O(4ᵈ n + d M log m): *exponential in d* — exactly the curse of
+//! dimensionality SKIP removes.
+
+use super::interp::{cubic_stencil, Grid1d, STENCIL};
+use super::LinearOp;
+use crate::kernels::ProductKernel;
+use crate::linalg::{Matrix, SymToeplitz};
+
+/// Tensor-product SKI operator over a d-dimensional grid.
+pub struct KroneckerSkiOp {
+    /// Per-dimension grids (m_k points each).
+    pub grids: Vec<Grid1d>,
+    /// Per-dimension Toeplitz grid-kernel factors.
+    pub factors: Vec<SymToeplitz>,
+    /// Sparse W: for each data row, 4ᵈ (flat grid index, weight) pairs.
+    idx: Vec<u32>,
+    w: Vec<f64>,
+    n: usize,
+    /// Total grid size M = Π m_k.
+    pub total_grid: usize,
+    /// Output scale σ² of the product kernel.
+    outputscale: f64,
+}
+
+impl KroneckerSkiOp {
+    /// Build for data `xs` (n × d) under a product kernel with `m` grid
+    /// points per dimension.
+    pub fn new(xs: &Matrix, kernel: &ProductKernel, m: usize) -> Self {
+        let d = kernel.dim();
+        assert_eq!(xs.cols, d);
+        let n = xs.rows;
+        let stencil_sz = STENCIL.pow(d as u32);
+        // Per-dimension grids + Toeplitz factors.
+        let mut grids = Vec::with_capacity(d);
+        let mut factors = Vec::with_capacity(d);
+        for k in 0..d {
+            let col = xs.col(k);
+            let (lo, hi) = col.iter().fold(
+                (f64::INFINITY, f64::NEG_INFINITY),
+                |(a, b), &x| (a.min(x), b.max(x)),
+            );
+            let grid = Grid1d::fit(lo, hi, m);
+            factors.push(SymToeplitz::new(
+                kernel.factors[k].toeplitz_column(grid.m, grid.h),
+            ));
+            grids.push(grid);
+        }
+        let total_grid: usize = grids.iter().map(|g| g.m).product();
+        // Tensor-product interpolation weights.
+        let mut idx = Vec::with_capacity(n * stencil_sz);
+        let mut w = Vec::with_capacity(n * stencil_sz);
+        // Row-major flat index: dim 0 slowest.
+        let mut strides = vec![1usize; d];
+        for k in (0..d.saturating_sub(1)).rev() {
+            strides[k] = strides[k + 1] * grids[k + 1].m;
+        }
+        let mut bases = vec![0usize; d];
+        let mut wts = vec![[0.0; STENCIL]; d];
+        for i in 0..n {
+            let row = xs.row(i);
+            for k in 0..d {
+                let (b, ws) = cubic_stencil(row[k], &grids[k]);
+                bases[k] = b;
+                wts[k] = ws;
+            }
+            // Enumerate the 4ᵈ stencil combinations.
+            for c in 0..stencil_sz {
+                let mut flat = 0usize;
+                let mut weight = 1.0;
+                let mut cc = c;
+                for k in (0..d).rev() {
+                    let o = cc % STENCIL;
+                    cc /= STENCIL;
+                    flat += (bases[k] + o) * strides[k];
+                    weight *= wts[k][o];
+                }
+                idx.push(flat as u32);
+                w.push(weight);
+            }
+        }
+        KroneckerSkiOp {
+            grids,
+            factors,
+            idx,
+            w,
+            n,
+            total_grid,
+            outputscale: kernel.outputscale,
+        }
+    }
+
+    fn stencil_size(&self) -> usize {
+        STENCIL.pow(self.grids.len() as u32)
+    }
+
+    /// `Wᵀ v` (grid-sized output).
+    fn wt_matvec(&self, v: &[f64]) -> Vec<f64> {
+        let s = self.stencil_size();
+        let mut out = vec![0.0; self.total_grid];
+        for i in 0..self.n {
+            let x = v[i];
+            let base = i * s;
+            for k in 0..s {
+                out[self.idx[base + k] as usize] += self.w[base + k] * x;
+            }
+        }
+        out
+    }
+
+    /// `W u` (data-sized output).
+    fn w_matvec(&self, u: &[f64]) -> Vec<f64> {
+        let s = self.stencil_size();
+        let mut out = vec![0.0; self.n];
+        for i in 0..self.n {
+            let mut acc = 0.0;
+            let base = i * s;
+            for k in 0..s {
+                acc += self.w[base + k] * u[self.idx[base + k] as usize];
+            }
+            out[i] = acc;
+        }
+        out
+    }
+
+    /// `(T₁ ⊗ ⋯ ⊗ T_d) u` via mode-wise Toeplitz application.
+    fn kron_matvec(&self, u: &[f64]) -> Vec<f64> {
+        let d = self.grids.len();
+        let mut cur = u.to_vec();
+        // Strides for row-major layout, dim 0 slowest.
+        let dims: Vec<usize> = self.grids.iter().map(|g| g.m).collect();
+        for k in 0..d {
+            let mk = dims[k];
+            // Stride between consecutive indices along mode k.
+            let stride: usize = dims[k + 1..].iter().product();
+            let outer: usize = dims[..k].iter().product();
+            let mut next = vec![0.0; cur.len()];
+            let mut fiber = vec![0.0; mk];
+            for o in 0..outer {
+                for s in 0..stride {
+                    let start = o * mk * stride + s;
+                    for t in 0..mk {
+                        fiber[t] = cur[start + t * stride];
+                    }
+                    let res = self.factors[k].matvec(&fiber);
+                    for t in 0..mk {
+                        next[start + t * stride] = res[t];
+                    }
+                }
+            }
+            cur = next;
+        }
+        cur
+    }
+}
+
+impl LinearOp for KroneckerSkiOp {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        let t = self.wt_matvec(v);
+        let t = self.kron_matvec(&t);
+        let mut out = self.w_matvec(&t);
+        for o in out.iter_mut() {
+            *o *= self.outputscale;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{rel_err, Rng};
+
+    fn random_points(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0))
+    }
+
+    #[test]
+    fn matches_exact_kernel_mvm_2d() {
+        let xs = random_points(80, 2, 20);
+        let kern = ProductKernel::rbf(2, 0.7, 1.3);
+        let op = KroneckerSkiOp::new(&xs, &kern, 32);
+        let exact = kern.gram_sym(&xs);
+        let mut rng = Rng::new(21);
+        let v = rng.normal_vec(80);
+        let err = rel_err(&op.matvec(&v), &exact.matvec(&v));
+        assert!(err < 1e-3, "rel err {err}");
+    }
+
+    #[test]
+    fn matches_exact_kernel_mvm_3d() {
+        let xs = random_points(50, 3, 22);
+        let kern = ProductKernel::ard(&[0.8, 1.0, 1.2], 0.9);
+        let op = KroneckerSkiOp::new(&xs, &kern, 20);
+        let exact = kern.gram_sym(&xs);
+        let mut rng = Rng::new(23);
+        let v = rng.normal_vec(50);
+        let err = rel_err(&op.matvec(&v), &exact.matvec(&v));
+        assert!(err < 5e-3, "rel err {err}");
+    }
+
+    #[test]
+    fn kron_matvec_matches_dense_kronecker_2d() {
+        // Direct check of the mode-wise Kronecker application.
+        let xs = random_points(10, 2, 24);
+        let kern = ProductKernel::rbf(2, 1.0, 1.0);
+        let op = KroneckerSkiOp::new(&xs, &kern, 6);
+        let (m1, m2) = (op.grids[0].m, op.grids[1].m);
+        let t1 = op.factors[0].to_dense();
+        let t2 = op.factors[1].to_dense();
+        // Dense Kronecker product, dim 0 slowest (row-major flat).
+        let big = Matrix::from_fn(m1 * m2, m1 * m2, |a, b| {
+            let (i1, i2) = (a / m2, a % m2);
+            let (j1, j2) = (b / m2, b % m2);
+            t1.get(i1, j1) * t2.get(i2, j2)
+        });
+        let mut rng = Rng::new(25);
+        let v = rng.normal_vec(m1 * m2);
+        let got = op.kron_matvec(&v);
+        let want = big.matvec(&v);
+        assert!(rel_err(&got, &want) < 1e-10);
+    }
+
+    #[test]
+    fn operator_symmetric() {
+        let xs = random_points(30, 2, 26);
+        let kern = ProductKernel::rbf(2, 0.5, 2.0);
+        let op = KroneckerSkiOp::new(&xs, &kern, 16);
+        let mut rng = Rng::new(27);
+        let u = rng.normal_vec(30);
+        let v = rng.normal_vec(30);
+        let lhs: f64 = op.matvec(&u).iter().zip(&v).map(|(a, b)| a * b).sum();
+        let rhs: f64 = op.matvec(&v).iter().zip(&u).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-9);
+    }
+}

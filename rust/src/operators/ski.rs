@@ -1,0 +1,133 @@
+//! SKI operator: `K_XX ≈ W K_UU Wᵀ` on a 1-D regular grid (paper §2.3).
+//!
+//! With `W` 4-sparse per row and `K_UU` symmetric Toeplitz, `matvec` costs
+//! O(n + m log m) — the building block SKIP multiplies together.
+
+use super::interp::{Grid1d, InterpMatrix};
+use super::LinearOp;
+use crate::kernels::Stationary1d;
+use crate::linalg::SymToeplitz;
+
+/// 1-D structured-kernel-interpolation operator.
+pub struct SkiOp {
+    pub w: InterpMatrix,
+    pub kuu: SymToeplitz,
+    pub grid: Grid1d,
+}
+
+impl SkiOp {
+    /// Build for 1-D inputs `xs` under kernel `kern` on an m-point grid.
+    pub fn new(xs: &[f64], kern: &Stationary1d, m: usize) -> Self {
+        let (lo, hi) = xs
+            .iter()
+            .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &x| {
+                (a.min(x), b.max(x))
+            });
+        let grid = Grid1d::fit(lo, hi, m);
+        let w = InterpMatrix::new(xs, &grid);
+        let kuu = SymToeplitz::new(kern.toeplitz_column(grid.m, grid.h));
+        SkiOp { w, kuu, grid }
+    }
+
+    /// Build with an existing grid (cross-covariance for prediction reuses
+    /// the training grid).
+    pub fn with_grid(xs: &[f64], kern: &Stationary1d, grid: Grid1d) -> Self {
+        let w = InterpMatrix::new(xs, &grid);
+        let kuu = SymToeplitz::new(kern.toeplitz_column(grid.m, grid.h));
+        SkiOp { w, kuu, grid }
+    }
+
+    /// Number of inducing points.
+    pub fn num_inducing(&self) -> usize {
+        self.grid.m
+    }
+
+    /// Cross-MVM `W_a K_UU W_bᵀ v` against another point set's
+    /// interpolation matrix (for test-train covariances).
+    pub fn cross_matvec(&self, other_w: &InterpMatrix, v: &[f64]) -> Vec<f64> {
+        let t = other_w.t_matvec(v);
+        let t = self.kuu.matvec(&t);
+        self.w.matvec(&t)
+    }
+}
+
+impl LinearOp for SkiOp {
+    fn dim(&self) -> usize {
+        self.w.n
+    }
+
+    fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        // Wᵀ v: O(n) → K_UU ·: O(m log m) → W ·: O(n)
+        let t = self.w.t_matvec(v);
+        let t = self.kuu.matvec(&t);
+        self.w.matvec(&t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::util::{rel_err, Rng};
+
+    #[test]
+    fn ski_mvm_close_to_exact_kernel_mvm() {
+        let kern = Stationary1d::rbf(0.4);
+        let mut rng = Rng::new(8);
+        let xs = rng.uniform_vec(200, -1.0, 1.0);
+        let op = SkiOp::new(&xs, &kern, 128);
+        let exact = Matrix::from_fn(200, 200, |i, j| kern.eval(xs[i], xs[j]));
+        let v = rng.normal_vec(200);
+        let got = op.matvec(&v);
+        let want = exact.matvec(&v);
+        assert!(rel_err(&got, &want) < 1e-3, "rel err {}", rel_err(&got, &want));
+    }
+
+    #[test]
+    fn error_decreases_with_grid_size() {
+        let kern = Stationary1d::rbf(0.5);
+        let mut rng = Rng::new(9);
+        let xs = rng.uniform_vec(100, 0.0, 1.0);
+        let exact = Matrix::from_fn(100, 100, |i, j| kern.eval(xs[i], xs[j]));
+        let v = rng.normal_vec(100);
+        let want = exact.matvec(&v);
+        let mut last = f64::INFINITY;
+        for m in [16usize, 32, 64, 128] {
+            let op = SkiOp::new(&xs, &kern, m);
+            let err = rel_err(&op.matvec(&v), &want);
+            assert!(err < last * 1.5, "m={m} err={err} last={last}");
+            last = err;
+        }
+        assert!(last < 1e-4, "finest grid err {last}");
+    }
+
+    #[test]
+    fn operator_is_symmetric() {
+        let kern = Stationary1d::matern52(0.7);
+        let mut rng = Rng::new(10);
+        let xs = rng.uniform_vec(50, 0.0, 3.0);
+        let op = SkiOp::new(&xs, &kern, 40);
+        let u = rng.normal_vec(50);
+        let v = rng.normal_vec(50);
+        let lhs: f64 = op.matvec(&u).iter().zip(&v).map(|(a, b)| a * b).sum();
+        let rhs: f64 = op.matvec(&v).iter().zip(&u).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cross_matvec_matches_dense() {
+        let kern = Stationary1d::rbf(0.6);
+        let mut rng = Rng::new(11);
+        let xs = rng.uniform_vec(40, 0.0, 1.0);
+        let ts = rng.uniform_vec(15, 0.1, 0.9);
+        let op = SkiOp::new(&xs, &kern, 64);
+        let wt = InterpMatrix::new(&ts, &op.grid);
+        // test-train covariance applied to a vector over test points? No:
+        // cross_matvec computes W_train K W_testᵀ v with v over tests.
+        let v = rng.normal_vec(15);
+        let got = op.cross_matvec(&wt, &v);
+        let exact = Matrix::from_fn(40, 15, |i, j| kern.eval(xs[i], ts[j]));
+        let want = exact.matvec(&v);
+        assert!(rel_err(&got, &want) < 1e-3);
+    }
+}

@@ -1,0 +1,338 @@
+//! SKIP: the paper's product-kernel MVM algorithm (§3, Theorem 3.3).
+//!
+//! Given d component operators with fast MVMs, build rank-r Lanczos
+//! decompositions of each (Lemma 3.2), then merge them pairwise in a
+//! divide-and-conquer tree (Eqs. 12–14): each merge Lanczos-decomposes the
+//! Hadamard product of two already-decomposed halves, whose MVMs cost
+//! O(r²n) by Lemma 3.1. The root is kept as a *pair* of factors, so root
+//! MVMs also run through Lemma 3.1 — total O(d·r·μ(K⁽ⁱ⁾) + r³ n log d)
+//! build, O(r²n) per subsequent MVM (Corollary 3.4: the tree is cached).
+
+use super::lowrank::{ContractionBackend, HadamardPairOp, LanczosFactor, NativeBackend};
+use super::LinearOp;
+use crate::solvers::lanczos::lanczos;
+use crate::util::Rng;
+use std::sync::Arc;
+
+/// A component of the product kernel: either an operator to be
+/// Lanczos-decomposed, or an exact low-rank factorization supplied
+/// directly (e.g. the multi-task `V B Bᵀ Vᵀ = (VB)(VB)ᵀ`, §6, or the
+/// §7 "exact algorithm" variant with Q = W, T = K_UU).
+pub enum SkipComponent<'a> {
+    /// Fast-MVM operator; SKIP will Lanczos-decompose it.
+    Op(&'a dyn LinearOp),
+    /// Exact factorization Q T Qᵀ (Q need not be orthonormal — Lemma 3.1
+    /// never uses orthogonality).
+    Factor(LanczosFactor),
+}
+
+/// Diagnostics from building the merge tree.
+#[derive(Clone, Debug, Default)]
+pub struct SkipBuildStats {
+    /// Achieved rank of each leaf decomposition.
+    pub leaf_ranks: Vec<usize>,
+    /// Achieved rank of each internal merge.
+    pub merge_ranks: Vec<usize>,
+    /// Total component-operator MVMs spent on leaf decompositions.
+    pub leaf_mvms: usize,
+}
+
+enum Root {
+    /// d = 1: single factor, MVM in O(rn).
+    Single(LanczosFactor),
+    /// d ≥ 2: Hadamard pair, MVM via Lemma 3.1 in O(r²n).
+    Pair(LanczosFactor, LanczosFactor),
+}
+
+/// The SKIP operator: `K⁽¹⁾ ∘ ⋯ ∘ K⁽ᵈ⁾` with cached decompositions.
+pub struct SkipOp {
+    n: usize,
+    root: Root,
+    backend: Arc<dyn ContractionBackend>,
+    /// Build diagnostics (ranks reached at each node).
+    pub stats: SkipBuildStats,
+}
+
+impl SkipOp {
+    /// Build the merge tree for `components` with target rank `rank`.
+    ///
+    /// `rank` is the paper's r: Lanczos iterations per decomposition.
+    /// Probe vectors are drawn from `rng` (Gaussian).
+    pub fn build(
+        components: Vec<SkipComponent<'_>>,
+        rank: usize,
+        backend: Arc<dyn ContractionBackend>,
+        rng: &mut Rng,
+    ) -> Self {
+        assert!(!components.is_empty());
+        let n = match &components[0] {
+            SkipComponent::Op(op) => op.dim(),
+            SkipComponent::Factor(f) => f.dim(),
+        };
+        for c in &components {
+            let cn = match c {
+                SkipComponent::Op(op) => op.dim(),
+                SkipComponent::Factor(f) => f.dim(),
+            };
+            assert_eq!(cn, n, "SKIP components must share dimension");
+        }
+        let mut stats = SkipBuildStats::default();
+        // Decompose leaves.
+        let mut factors: Vec<LanczosFactor> = components
+            .into_iter()
+            .map(|c| match c {
+                SkipComponent::Op(op) => {
+                    let probe = rng.normal_vec(n);
+                    let res = lanczos(op, &probe, rank, 1e-10);
+                    stats.leaf_mvms += res.rank();
+                    stats.leaf_ranks.push(res.rank());
+                    res.into_factor()
+                }
+                SkipComponent::Factor(f) => {
+                    stats.leaf_ranks.push(f.rank());
+                    f
+                }
+            })
+            .collect();
+        // Pairwise merges until two (or one) factors remain. Merging
+        // adjacent pairs level-by-level realizes Eqs. (13)–(14).
+        while factors.len() > 2 {
+            let mut next = Vec::with_capacity(factors.len().div_ceil(2));
+            let mut iter = factors.into_iter();
+            while let Some(a) = iter.next() {
+                match iter.next() {
+                    Some(b) => {
+                        let merged =
+                            merge_pair(&a, &b, rank, backend.as_ref(), rng);
+                        stats.merge_ranks.push(merged.rank());
+                        next.push(merged);
+                    }
+                    None => next.push(a), // odd one out rides up a level
+                }
+            }
+            factors = next;
+        }
+        let root = if factors.len() == 1 {
+            Root::Single(factors.pop().unwrap())
+        } else {
+            let b = factors.pop().unwrap();
+            let a = factors.pop().unwrap();
+            Root::Pair(a, b)
+        };
+        SkipOp { n, root, backend, stats }
+    }
+
+    /// Convenience: build with the native backend.
+    pub fn build_native(
+        components: Vec<SkipComponent<'_>>,
+        rank: usize,
+        rng: &mut Rng,
+    ) -> Self {
+        SkipOp::build(components, rank, Arc::new(NativeBackend), rng)
+    }
+
+    /// The backend in use (for metrics/logging).
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+}
+
+/// Lanczos-decompose the Hadamard product of two decomposed halves.
+fn merge_pair(
+    a: &LanczosFactor,
+    b: &LanczosFactor,
+    rank: usize,
+    backend: &dyn ContractionBackend,
+    rng: &mut Rng,
+) -> LanczosFactor {
+    let op = HadamardPairOp { a, b, backend };
+    let probe = rng.normal_vec(a.dim());
+    lanczos(&op, &probe, rank, 1e-10).into_factor()
+}
+
+impl LinearOp for SkipOp {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        match &self.root {
+            Root::Single(f) => f.matvec(v),
+            Root::Pair(a, b) => self.backend.hadamard_pair_matvec(a, b, v),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{ProductKernel, Stationary1d};
+    use crate::linalg::Matrix;
+    use crate::operators::{DenseOp, SkiOp};
+    use crate::util::{rel_err, Rng};
+
+    /// Exact dense Gram of a product kernel (oracle).
+    fn dense_product_gram(xs: &Matrix, k: &ProductKernel) -> Matrix {
+        k.gram_sym(xs)
+    }
+
+    #[test]
+    fn single_component_degenerates_to_lanczos() {
+        let mut rng = Rng::new(1);
+        let xs = Matrix::from_fn(50, 1, |_, _| rng.normal());
+        let k = ProductKernel::rbf(1, 1.0, 1.0);
+        let dense = dense_product_gram(&xs, &k);
+        let op = DenseOp(dense.clone());
+        let skip = SkipOp::build_native(vec![SkipComponent::Op(&op)], 25, &mut rng);
+        let v = rng.normal_vec(50);
+        assert!(rel_err(&skip.matvec(&v), &dense.matvec(&v)) < 1e-4);
+    }
+
+    #[test]
+    fn two_component_product_matches_dense() {
+        let mut rng = Rng::new(2);
+        let n = 60;
+        let xs = Matrix::from_fn(n, 2, |_, _| rng.normal());
+        let k = ProductKernel::rbf(2, 1.0, 1.0);
+        let full = dense_product_gram(&xs, &k);
+        // Components: per-dimension dense Grams (exact component MVMs).
+        let g0 = Matrix::from_fn(n, n, |i, j| {
+            k.factors[0].eval(xs.get(i, 0), xs.get(j, 0))
+        });
+        let g1 = Matrix::from_fn(n, n, |i, j| {
+            k.factors[1].eval(xs.get(i, 1), xs.get(j, 1))
+        });
+        let (o0, o1) = (DenseOp(g0), DenseOp(g1));
+        let skip = SkipOp::build_native(
+            vec![SkipComponent::Op(&o0), SkipComponent::Op(&o1)],
+            30,
+            &mut rng,
+        );
+        let v = rng.normal_vec(n);
+        let err = rel_err(&skip.matvec(&v), &full.matvec(&v));
+        assert!(err < 1e-3, "rel err {err}");
+    }
+
+    #[test]
+    fn four_component_merge_tree() {
+        let mut rng = Rng::new(3);
+        let n = 50;
+        let xs = Matrix::from_fn(n, 4, |_, _| rng.normal());
+        let k = ProductKernel::rbf(4, 1.5, 1.0);
+        let full = dense_product_gram(&xs, &k);
+        let grams: Vec<Matrix> = (0..4)
+            .map(|d| {
+                Matrix::from_fn(n, n, |i, j| {
+                    k.factors[d].eval(xs.get(i, d), xs.get(j, d))
+                })
+            })
+            .collect();
+        let ops: Vec<DenseOp> = grams.into_iter().map(DenseOp).collect();
+        let comps: Vec<SkipComponent> =
+            ops.iter().map(|o| SkipComponent::Op(o as &dyn LinearOp)).collect();
+        let skip = SkipOp::build_native(comps, 30, &mut rng);
+        assert_eq!(skip.stats.leaf_ranks.len(), 4);
+        let v = rng.normal_vec(n);
+        let err = rel_err(&skip.matvec(&v), &full.matvec(&v));
+        assert!(err < 5e-3, "rel err {err}");
+    }
+
+    #[test]
+    fn odd_component_count() {
+        let mut rng = Rng::new(4);
+        let n = 40;
+        let xs = Matrix::from_fn(n, 3, |_, _| rng.normal());
+        let k = ProductKernel::rbf(3, 1.2, 1.0);
+        let full = dense_product_gram(&xs, &k);
+        let grams: Vec<Matrix> = (0..3)
+            .map(|d| {
+                Matrix::from_fn(n, n, |i, j| {
+                    k.factors[d].eval(xs.get(i, d), xs.get(j, d))
+                })
+            })
+            .collect();
+        let ops: Vec<DenseOp> = grams.into_iter().map(DenseOp).collect();
+        let comps: Vec<SkipComponent> =
+            ops.iter().map(|o| SkipComponent::Op(o as &dyn LinearOp)).collect();
+        let skip = SkipOp::build_native(comps, 30, &mut rng);
+        let v = rng.normal_vec(n);
+        let err = rel_err(&skip.matvec(&v), &full.matvec(&v));
+        assert!(err < 5e-3, "rel err {err}");
+    }
+
+    #[test]
+    fn ski_components_full_skip_pipeline() {
+        // The real §3.1 configuration: SKI per dimension + merge tree.
+        let mut rng = Rng::new(5);
+        let n = 80;
+        let d = 3;
+        let xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+        let k = ProductKernel::rbf(d, 0.8, 1.0);
+        let full = dense_product_gram(&xs, &k);
+        let skis: Vec<SkiOp> = (0..d)
+            .map(|dd| SkiOp::new(&xs.col(dd), &k.factors[dd], 64))
+            .collect();
+        let comps: Vec<SkipComponent> =
+            skis.iter().map(|o| SkipComponent::Op(o as &dyn LinearOp)).collect();
+        let skip = SkipOp::build_native(comps, 40, &mut rng);
+        let v = rng.normal_vec(n);
+        let err = rel_err(&skip.matvec(&v), &full.matvec(&v));
+        assert!(err < 1e-2, "rel err {err}");
+    }
+
+    #[test]
+    fn exact_factor_component_bypasses_lanczos() {
+        // Supplying a Factor leaf must use it verbatim.
+        let mut rng = Rng::new(6);
+        let n = 30;
+        // Exact rank-2 component A = G Gᵀ with factor (Q=G, T=I).
+        let g = Matrix::from_fn(n, 2, |_, _| rng.normal());
+        let a_dense = g.matmul_t(&g);
+        let fac = LanczosFactor { q: g.clone(), t: Matrix::eye(2) };
+        // Other component: 1-D RBF Gram.
+        let xs: Vec<f64> = rng.normal_vec(n);
+        let kern = Stationary1d::rbf(1.0);
+        let b_dense = Matrix::from_fn(n, n, |i, j| kern.eval(xs[i], xs[j]));
+        let b_op = DenseOp(b_dense.clone());
+        let skip = SkipOp::build_native(
+            vec![SkipComponent::Factor(fac), SkipComponent::Op(&b_op)],
+            25,
+            &mut rng,
+        );
+        let v = rng.normal_vec(n);
+        let want = a_dense.hadamard(&b_dense).matvec(&v);
+        assert!(rel_err(&skip.matvec(&v), &want) < 1e-4);
+    }
+
+    #[test]
+    fn error_improves_with_rank() {
+        // Engine behind Fig. 2 (left): error decays as r grows.
+        let mut rng = Rng::new(7);
+        let n = 60;
+        let d = 4;
+        let xs = Matrix::from_fn(n, d, |_, _| rng.normal());
+        let k = ProductKernel::rbf(d, 1.0, 1.0);
+        let full = dense_product_gram(&xs, &k);
+        let grams: Vec<Matrix> = (0..d)
+            .map(|dd| {
+                Matrix::from_fn(n, n, |i, j| {
+                    k.factors[dd].eval(xs.get(i, dd), xs.get(j, dd))
+                })
+            })
+            .collect();
+        let ops: Vec<DenseOp> = grams.into_iter().map(DenseOp).collect();
+        let v = rng.normal_vec(n);
+        let want = full.matvec(&v);
+        let mut errs = Vec::new();
+        for r in [5usize, 15, 40] {
+            let comps: Vec<SkipComponent> = ops
+                .iter()
+                .map(|o| SkipComponent::Op(o as &dyn LinearOp))
+                .collect();
+            let skip = SkipOp::build_native(comps, r, &mut rng);
+            errs.push(rel_err(&skip.matvec(&v), &want));
+        }
+        assert!(errs[2] < errs[0], "errors {errs:?} should decrease");
+        assert!(errs[2] < 1e-2, "finest err {}", errs[2]);
+    }
+}

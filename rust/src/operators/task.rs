@@ -1,0 +1,125 @@
+//! Multi-task coregionalization operator `V (B Bᵀ + D) Vᵀ` (paper §6).
+//!
+//! `V` is the n×s one-hot task-membership matrix (row i has a single 1 in
+//! the column of observation i's task), so MVMs cost O(n + s·q): gather,
+//! multiply by the small s×q factor, scatter. The paper's footnote 2.
+
+use super::lowrank::LanczosFactor;
+use super::LinearOp;
+use crate::kernels::TaskKernel;
+use crate::linalg::Matrix;
+
+/// `V M Vᵀ` with `M = B Bᵀ + diag` the s×s task covariance.
+pub struct TaskOp {
+    /// Task index of each observation (values in [0, s)).
+    pub task_of: Vec<usize>,
+    /// The task kernel (B and per-task diagonal).
+    pub kernel: TaskKernel,
+}
+
+impl TaskOp {
+    pub fn new(task_of: Vec<usize>, kernel: TaskKernel) -> Self {
+        let s = kernel.num_tasks();
+        assert!(task_of.iter().all(|&t| t < s), "task index out of range");
+        TaskOp { task_of, kernel }
+    }
+
+    /// Exact factorization for SKIP: `V B Bᵀ Vᵀ = (VB)(VB)ᵀ`, i.e.
+    /// Q = VB (n×q, rows gathered from B), T = I — plus the diagonal term
+    /// folded in by augmenting Q with per-task indicator columns scaled by
+    /// √diag. Lemma 3.1 never needs Q orthonormal, so this is exact.
+    pub fn factor(&self) -> LanczosFactor {
+        let n = self.task_of.len();
+        let s = self.kernel.num_tasks();
+        let q_rank = self.kernel.b.cols;
+        // Columns: q columns of VB, then s columns of √diag indicators.
+        let total = q_rank + s;
+        let mut q = Matrix::zeros(n, total);
+        for (i, &t) in self.task_of.iter().enumerate() {
+            for k in 0..q_rank {
+                q.set(i, k, self.kernel.b.get(t, k));
+            }
+            q.set(i, q_rank + t, self.kernel.diag[t].max(0.0).sqrt());
+        }
+        LanczosFactor { q, t: Matrix::eye(total) }
+    }
+}
+
+impl LinearOp for TaskOp {
+    fn dim(&self) -> usize {
+        self.task_of.len()
+    }
+
+    fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        let s = self.kernel.num_tasks();
+        let q = self.kernel.b.cols;
+        // u = Vᵀ v  (s): scatter-sum per task. O(n)
+        let mut u = vec![0.0; s];
+        for (i, &t) in self.task_of.iter().enumerate() {
+            u[t] += v[i];
+        }
+        // w = (B Bᵀ + D) u. O(sq)
+        let bt_u = self.kernel.b.t_matvec(&u); // q
+        let mut w = self.kernel.b.matvec(&bt_u); // s
+        for t in 0..s {
+            w[t] += self.kernel.diag[t] * u[t];
+        }
+        let _ = q;
+        // out = V w: gather. O(n)
+        self.task_of.iter().map(|&t| w[t]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{rel_err, Rng};
+
+    fn setup(n: usize, s: usize, q: usize, seed: u64) -> (TaskOp, Matrix) {
+        let mut rng = Rng::new(seed);
+        let task_of: Vec<usize> = (0..n).map(|_| rng.below(s)).collect();
+        let b = Matrix::from_fn(s, q, |_, _| rng.normal() * 0.5);
+        let diag: Vec<f64> = (0..s).map(|_| rng.uniform_in(0.1, 0.5)).collect();
+        let kern = TaskKernel::new(b, diag);
+        // Dense oracle: K[i,j] = k_task(task_i, task_j).
+        let dense = Matrix::from_fn(n, n, |i, j| kern.eval(task_of[i], task_of[j]));
+        (TaskOp::new(task_of, kern), dense)
+    }
+
+    #[test]
+    fn matvec_matches_dense() {
+        let (op, dense) = setup(50, 7, 2, 1);
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(50);
+        assert!(rel_err(&op.matvec(&v), &dense.matvec(&v)) < 1e-12);
+    }
+
+    #[test]
+    fn factor_is_exact() {
+        let (op, dense) = setup(40, 5, 3, 3);
+        let f = op.factor();
+        let mut rng = Rng::new(4);
+        let v = rng.normal_vec(40);
+        assert!(rel_err(&f.matvec(&v), &dense.matvec(&v)) < 1e-12);
+        // Dense reconstruction too.
+        assert!(f.to_dense().max_abs_diff(&dense) < 1e-12);
+    }
+
+    #[test]
+    fn single_task_is_constant_block() {
+        let kern = TaskKernel::new(Matrix::from_vec(1, 1, vec![2.0]), vec![0.0]);
+        let op = TaskOp::new(vec![0; 10], kern);
+        let v = vec![1.0; 10];
+        // K = 4·11ᵀ → Kv = 40·1
+        for o in op.matvec(&v) {
+            assert!((o - 40.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "task index out of range")]
+    fn rejects_bad_task_index() {
+        let kern = TaskKernel::independent(2);
+        TaskOp::new(vec![0, 1, 2], kern);
+    }
+}

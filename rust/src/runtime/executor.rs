@@ -1,0 +1,407 @@
+//! PJRT execution of AOT artifacts.
+//!
+//! Loads each `artifacts/*.hlo.txt` module (HLO text → `HloModuleProto` →
+//! `XlaComputation` → PJRT compile) once at startup; the compiled
+//! executables then serve the Rust hot path with zero Python involvement.
+//!
+//! Shape policy: artifacts are compiled for fixed (n, r). A request with
+//! n′ ≤ n and r′ ≤ r is served by **zero-padding** — padding rows of Q and
+//! zero rows/columns of T contribute nothing to `S = Q₁ᵀD_vQ₂`,
+//! `M = T₁ST₂ᵀ`, or the row-wise bilinear diagonal, so the result is
+//! exact, not approximate.
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::operators::lowrank::{
+    hadamard_pair_matvec_native, ContractionBackend, LanczosFactor,
+};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::artifact::{load_manifest, ArtifactEntry};
+
+fn xe(e: impl std::fmt::Display) -> Error {
+    Error::Xla(e.to_string())
+}
+
+/// A compiled Hadamard-pair MVM artifact.
+struct HadamardExe {
+    n: usize,
+    r: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// A compiled RBF predictive-mean artifact.
+struct RbfMeanExe {
+    n_test: usize,
+    n_train: usize,
+    d: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT runtime holding the client and all compiled executables.
+pub struct Runtime {
+    _client: xla::PjRtClient,
+    hadamard: Vec<HadamardExe>,
+    rbf_mean: Vec<RbfMeanExe>,
+    /// Executions served by PJRT (for metrics).
+    pub pjrt_calls: AtomicUsize,
+}
+
+// The xla crate's raw pointers are not Sync-annotated; executions are
+// serialized through the Mutex in PjrtBackend below.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Load every artifact in `dir` (must contain `manifest.json`).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let entries = load_manifest(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xe)?;
+        let mut hadamard = Vec::new();
+        let mut rbf_mean = Vec::new();
+        for e in &entries {
+            match e.op.as_str() {
+                "hadamard_mvm" => {
+                    let exe = Self::compile(&client, e)?;
+                    hadamard.push(HadamardExe {
+                        n: e.dim("n").ok_or_else(|| miss(e, "n"))?,
+                        r: e.dim("r").ok_or_else(|| miss(e, "r"))?,
+                        exe,
+                    });
+                }
+                "rbf_mean" => {
+                    let exe = Self::compile(&client, e)?;
+                    rbf_mean.push(RbfMeanExe {
+                        n_test: e.dim("n_test").ok_or_else(|| miss(e, "n_test"))?,
+                        n_train: e.dim("n_train").ok_or_else(|| miss(e, "n_train"))?,
+                        d: e.dim("d").ok_or_else(|| miss(e, "d"))?,
+                        exe,
+                    });
+                }
+                // hadamard_chain is exercised by benches directly.
+                _ => {}
+            }
+        }
+        // Smallest-first so routing picks the cheapest compatible shape.
+        hadamard.sort_by_key(|h| (h.n, h.r));
+        rbf_mean.sort_by_key(|h| (h.n_train, h.n_test, h.d));
+        Ok(Runtime { _client: client, hadamard, rbf_mean, pjrt_calls: AtomicUsize::new(0) })
+    }
+
+    fn compile(
+        client: &xla::PjRtClient,
+        e: &ArtifactEntry,
+    ) -> Result<xla::PjRtLoadedExecutable> {
+        let path = e
+            .path
+            .to_str()
+            .ok_or_else(|| Error::Artifact(format!("non-utf8 path for {}", e.name)))?;
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(xe)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client.compile(&comp).map_err(xe)
+    }
+
+    /// Number of compiled hadamard artifacts.
+    pub fn num_hadamard(&self) -> usize {
+        self.hadamard.len()
+    }
+
+    /// Lemma-3.1 contraction on the smallest compatible artifact, or None
+    /// if no artifact fits (caller falls back to native).
+    pub fn hadamard_pair_matvec(
+        &self,
+        a: &LanczosFactor,
+        b: &LanczosFactor,
+        v: &[f64],
+    ) -> Option<Result<Vec<f64>>> {
+        let n = a.dim();
+        let r = a.rank().max(b.rank());
+        let exe = self.hadamard.iter().find(|h| h.n >= n && h.r >= r)?;
+        Some(self.run_hadamard(exe, a, b, v))
+    }
+
+    fn run_hadamard(
+        &self,
+        h: &HadamardExe,
+        a: &LanczosFactor,
+        b: &LanczosFactor,
+        v: &[f64],
+    ) -> Result<Vec<f64>> {
+        let n = a.dim();
+        let (np, rp) = (h.n, h.r);
+        let pad_q = |m: &Matrix| -> Result<xla::Literal> {
+            let mut buf = vec![0.0f64; np * rp];
+            for i in 0..m.rows {
+                buf[i * rp..i * rp + m.cols].copy_from_slice(m.row(i));
+            }
+            xla::Literal::vec1(&buf)
+                .reshape(&[np as i64, rp as i64])
+                .map_err(xe)
+        };
+        let pad_t = |m: &Matrix| -> Result<xla::Literal> {
+            let mut buf = vec![0.0f64; rp * rp];
+            for i in 0..m.rows {
+                buf[i * rp..i * rp + m.cols].copy_from_slice(m.row(i));
+            }
+            xla::Literal::vec1(&buf)
+                .reshape(&[rp as i64, rp as i64])
+                .map_err(xe)
+        };
+        let mut vbuf = vec![0.0f64; np];
+        vbuf[..n].copy_from_slice(v);
+        let args = [
+            pad_q(&a.q)?,
+            pad_t(&a.t)?,
+            pad_q(&b.q)?,
+            pad_t(&b.t)?,
+            xla::Literal::vec1(&vbuf),
+        ];
+        let result = self.exec_tuple1(&h.exe, &args)?;
+        self.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+        Ok(result[..n].to_vec())
+    }
+
+    /// Predictive mean on the smallest compatible artifact (zero-padding
+    /// test and train rows; padded α entries are zero so they add nothing).
+    pub fn rbf_mean(
+        &self,
+        xtest: &Matrix,
+        xtrain: &Matrix,
+        alpha: &[f64],
+        ell: f64,
+        sf2: f64,
+    ) -> Option<Result<Vec<f64>>> {
+        let (nt, d) = (xtest.rows, xtest.cols);
+        let ns = xtrain.rows;
+        let exe = self
+            .rbf_mean
+            .iter()
+            .find(|h| h.n_test >= nt && h.n_train >= ns && h.d >= d)?;
+        Some(self.run_rbf_mean(exe, xtest, xtrain, alpha, ell, sf2))
+    }
+
+    fn run_rbf_mean(
+        &self,
+        h: &RbfMeanExe,
+        xtest: &Matrix,
+        xtrain: &Matrix,
+        alpha: &[f64],
+        ell: f64,
+        sf2: f64,
+    ) -> Result<Vec<f64>> {
+        let nt = xtest.rows;
+        // Pad coordinates with a far-away sentinel so padded *test* rows
+        // don't matter (we slice them off) and padded *train* rows get
+        // α = 0 anyway. Extra dims (d < artifact d) pad with equal zeros
+        // on both sides → distance contribution 0 → exact.
+        let pad_x = |m: &Matrix, rows: usize, cols: usize| -> Result<xla::Literal> {
+            let mut buf = vec![0.0f64; rows * cols];
+            for i in 0..m.rows {
+                buf[i * cols..i * cols + m.cols].copy_from_slice(m.row(i));
+            }
+            xla::Literal::vec1(&buf)
+                .reshape(&[rows as i64, cols as i64])
+                .map_err(xe)
+        };
+        let mut abuf = vec![0.0f64; h.n_train];
+        abuf[..alpha.len()].copy_from_slice(alpha);
+        let args = [
+            pad_x(xtest, h.n_test, h.d)?,
+            pad_x(xtrain, h.n_train, h.d)?,
+            xla::Literal::vec1(&abuf),
+            xla::Literal::vec1(&[ell, sf2]),
+        ];
+        let result = self.exec_tuple1(&h.exe, &args)?;
+        self.pjrt_calls.fetch_add(1, Ordering::Relaxed);
+        Ok(result[..nt].to_vec())
+    }
+
+    fn exec_tuple1(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<f64>> {
+        let out = exe.execute::<xla::Literal>(args).map_err(xe)?;
+        let lit = out[0][0].to_literal_sync().map_err(xe)?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let inner = lit.to_tuple1().map_err(xe)?;
+        inner.to_vec::<f64>().map_err(xe)
+    }
+}
+
+fn miss(e: &ArtifactEntry, k: &str) -> Error {
+    Error::Artifact(format!("artifact {} missing dim '{k}'", e.name))
+}
+
+/// [`ContractionBackend`] that routes to PJRT artifacts when a compatible
+/// shape is registered and falls back to the native implementation
+/// otherwise. Execution is serialized (PJRT CPU client is not Sync).
+pub struct PjrtBackend {
+    runtime: Mutex<Runtime>,
+    /// Count of native-fallback calls (for metrics).
+    pub native_calls: AtomicUsize,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: Runtime) -> Self {
+        PjrtBackend { runtime: Mutex::new(runtime), native_calls: AtomicUsize::new(0) }
+    }
+
+    /// Load artifacts from `dir` and wrap in a backend.
+    pub fn load(dir: &Path) -> Result<Self> {
+        Ok(Self::new(Runtime::load(dir)?))
+    }
+
+    /// (pjrt_calls, native_calls) so far.
+    pub fn call_counts(&self) -> (usize, usize) {
+        let rt = self.runtime.lock().unwrap();
+        (
+            rt.pjrt_calls.load(Ordering::Relaxed),
+            self.native_calls.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Predictive mean through PJRT if a compatible artifact exists.
+    pub fn rbf_mean(
+        &self,
+        xtest: &Matrix,
+        xtrain: &Matrix,
+        alpha: &[f64],
+        ell: f64,
+        sf2: f64,
+    ) -> Option<Result<Vec<f64>>> {
+        let rt = self.runtime.lock().unwrap();
+        rt.rbf_mean(xtest, xtrain, alpha, ell, sf2)
+    }
+}
+
+impl ContractionBackend for PjrtBackend {
+    fn hadamard_pair_matvec(
+        &self,
+        a: &LanczosFactor,
+        b: &LanczosFactor,
+        v: &[f64],
+    ) -> Vec<f64> {
+        {
+            let rt = self.runtime.lock().unwrap();
+            if let Some(res) = rt.hadamard_pair_matvec(a, b, v) {
+                match res {
+                    Ok(out) => return out,
+                    Err(e) => {
+                        // Artifact execution failed — fall back but surface it.
+                        eprintln!("pjrt backend error ({e}); falling back to native");
+                    }
+                }
+            }
+        }
+        self.native_calls.fetch_add(1, Ordering::Relaxed);
+        hadamard_pair_matvec_native(a, b, v)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{rel_err, Rng};
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    fn random_factor(n: usize, r: usize, seed: u64) -> LanczosFactor {
+        let mut rng = Rng::new(seed);
+        let q = Matrix::from_fn(n, r, |_, _| rng.normal());
+        let mut t = Matrix::from_fn(r, r, |_, _| rng.normal());
+        t.symmetrize();
+        LanczosFactor { q, t }
+    }
+
+    #[test]
+    fn pjrt_matches_native_exact_shape() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let backend = PjrtBackend::load(&artifacts_dir()).unwrap();
+        let (n, r) = (1024, 16);
+        let a = random_factor(n, r, 1);
+        let b = random_factor(n, r, 2);
+        let mut rng = Rng::new(3);
+        let v = rng.normal_vec(n);
+        let got = backend.hadamard_pair_matvec(&a, &b, &v);
+        let want = hadamard_pair_matvec_native(&a, &b, &v);
+        assert!(rel_err(&got, &want) < 1e-10, "err {}", rel_err(&got, &want));
+        let (pjrt, native) = backend.call_counts();
+        assert_eq!(pjrt, 1);
+        assert_eq!(native, 0);
+    }
+
+    #[test]
+    fn pjrt_zero_padding_is_exact() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let backend = PjrtBackend::load(&artifacts_dir()).unwrap();
+        // Odd shape well below the smallest artifact (1024, 16).
+        let (n, r1, r2) = (700, 9, 13);
+        let a = random_factor(n, r1, 4);
+        let b = random_factor(n, r2, 5);
+        let mut rng = Rng::new(6);
+        let v = rng.normal_vec(n);
+        let got = backend.hadamard_pair_matvec(&a, &b, &v);
+        let want = hadamard_pair_matvec_native(&a, &b, &v);
+        assert!(rel_err(&got, &want) < 1e-10, "err {}", rel_err(&got, &want));
+    }
+
+    #[test]
+    fn oversize_falls_back_to_native() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let backend = PjrtBackend::load(&artifacts_dir()).unwrap();
+        let (n, r) = (5000, 8); // n exceeds every artifact
+        let a = random_factor(n, r, 7);
+        let b = random_factor(n, r, 8);
+        let mut rng = Rng::new(9);
+        let v = rng.normal_vec(n);
+        let got = backend.hadamard_pair_matvec(&a, &b, &v);
+        let want = hadamard_pair_matvec_native(&a, &b, &v);
+        assert!(rel_err(&got, &want) < 1e-12);
+        let (pjrt, native) = backend.call_counts();
+        assert_eq!(pjrt, 0);
+        assert_eq!(native, 1);
+    }
+
+    #[test]
+    fn rbf_mean_matches_native_eval() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        use crate::kernels::ProductKernel;
+        let backend = PjrtBackend::load(&artifacts_dir()).unwrap();
+        let mut rng = Rng::new(10);
+        let (nt, ns, d) = (100, 500, 3);
+        let xt = Matrix::from_fn(nt, d, |_, _| rng.normal());
+        let xs = Matrix::from_fn(ns, d, |_, _| rng.normal());
+        let alpha = rng.normal_vec(ns);
+        let (ell, sf2) = (0.9, 1.3);
+        let got = backend.rbf_mean(&xt, &xs, &alpha, ell, sf2).unwrap().unwrap();
+        let kern = ProductKernel::rbf(d, ell, sf2);
+        let want = kern.gram(&xt, &xs).matvec(&alpha);
+        assert!(rel_err(&got, &want) < 1e-10, "err {}", rel_err(&got, &want));
+    }
+}

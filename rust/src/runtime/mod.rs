@@ -1,0 +1,12 @@
+//! PJRT runtime: load and execute AOT artifacts from the Rust hot path.
+//!
+//! `make artifacts` (python, build-time only) lowers the Layer-2 JAX
+//! graphs to HLO text; this module compiles them on the PJRT CPU client
+//! and serves them behind the [`crate::operators::ContractionBackend`]
+//! abstraction. Python never runs at request time.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{load_manifest, ArtifactEntry};
+pub use executor::{PjrtBackend, Runtime};

@@ -1,0 +1,168 @@
+//! Conjugate gradients (paper §2.2).
+//!
+//! Solves `A x = b` for symmetric positive-definite `A` using only MVMs —
+//! the core of MVM-based GP inference. Allocation-free inner loop: all
+//! work buffers are allocated once up front.
+
+use crate::linalg::{axpy, dot, norm2};
+use crate::operators::LinearOp;
+
+/// CG configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CgConfig {
+    /// Maximum iterations (paper: p, a small constant in practice).
+    pub max_iters: usize,
+    /// Relative residual tolerance ‖r‖/‖b‖.
+    pub tol: f64,
+}
+
+impl Default for CgConfig {
+    fn default() -> Self {
+        CgConfig { max_iters: 200, tol: 1e-8 }
+    }
+}
+
+/// CG solution with convergence diagnostics.
+#[derive(Clone, Debug)]
+pub struct CgSolution {
+    pub x: Vec<f64>,
+    pub iters: usize,
+    pub rel_residual: f64,
+    pub converged: bool,
+}
+
+/// Solve `A x = b` by conjugate gradients.
+pub fn cg_solve(a: &dyn LinearOp, b: &[f64], cfg: CgConfig) -> CgSolution {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    let nb = norm2(b);
+    if nb == 0.0 {
+        return CgSolution { x: vec![0.0; n], iters: 0, rel_residual: 0.0, converged: true };
+    }
+    let mut x = vec![0.0; n];
+    let mut r = b.to_vec();
+    let mut p = b.to_vec();
+    let mut rs_old = dot(&r, &r);
+    let mut iters = 0;
+    for _ in 0..cfg.max_iters {
+        iters += 1;
+        let ap = a.matvec(&p);
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 {
+            // Not PD to working precision — bail with current iterate.
+            break;
+        }
+        let alpha = rs_old / pap;
+        axpy(alpha, &p, &mut x);
+        axpy(-alpha, &ap, &mut r);
+        let rs_new = dot(&r, &r);
+        if rs_new.sqrt() <= cfg.tol * nb {
+            rs_old = rs_new;
+            break;
+        }
+        let beta = rs_new / rs_old;
+        for (pi, &ri) in p.iter_mut().zip(&r) {
+            *pi = ri + beta * *pi;
+        }
+        rs_old = rs_new;
+    }
+    let rel = rs_old.sqrt() / nb;
+    CgSolution { x, iters, rel_residual: rel, converged: rel <= cfg.tol }
+}
+
+/// Solve `A X = B` for multiple right-hand sides (columns of `b_cols`),
+/// sequentially. Returns per-column solutions.
+pub fn cg_solve_many(
+    a: &dyn LinearOp,
+    b_cols: &[Vec<f64>],
+    cfg: CgConfig,
+) -> Vec<CgSolution> {
+    b_cols.iter().map(|b| cg_solve(a, b, cfg)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Cholesky, Matrix};
+    use crate::operators::DenseOp;
+    use crate::util::{rel_err, Rng};
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.matmul_t(&b);
+        a.add_diag(n as f64 * 0.05);
+        a
+    }
+
+    #[test]
+    fn matches_cholesky_solve() {
+        let dense = random_spd(30, 1);
+        let op = DenseOp(dense.clone());
+        let mut rng = Rng::new(2);
+        let b = rng.normal_vec(30);
+        let sol = cg_solve(&op, &b, CgConfig::default());
+        assert!(sol.converged, "residual {}", sol.rel_residual);
+        let want = Cholesky::new(&dense).unwrap().solve(&b);
+        assert!(rel_err(&sol.x, &want) < 1e-6);
+    }
+
+    #[test]
+    fn identity_solves_immediately() {
+        let op = DenseOp(Matrix::eye(10));
+        let b: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let sol = cg_solve(&op, &b, CgConfig::default());
+        assert!(sol.converged);
+        assert!(sol.iters <= 2);
+        assert!(rel_err(&sol.x, &b) < 1e-10);
+    }
+
+    #[test]
+    fn zero_rhs() {
+        let op = DenseOp(Matrix::eye(5));
+        let sol = cg_solve(&op, &[0.0; 5], CgConfig::default());
+        assert!(sol.converged);
+        assert_eq!(sol.x, vec![0.0; 5]);
+    }
+
+    #[test]
+    fn exact_in_n_iterations() {
+        let n = 20;
+        let dense = random_spd(n, 3);
+        let op = DenseOp(dense.clone());
+        let mut rng = Rng::new(4);
+        let b = rng.normal_vec(n);
+        let sol = cg_solve(&op, &b, CgConfig { max_iters: n + 5, tol: 1e-12 });
+        let back = dense.matvec(&sol.x);
+        assert!(rel_err(&back, &b) < 1e-8);
+    }
+
+    #[test]
+    fn well_conditioned_converges_fast() {
+        // A = I + small perturbation → few iterations (paper: p depends on
+        // conditioning, not n).
+        let n = 200;
+        let mut rng = Rng::new(5);
+        let g = Matrix::from_fn(n, 3, |_, _| rng.normal() * 0.1);
+        let mut dense = g.matmul_t(&g);
+        dense.add_diag(1.0);
+        let op = DenseOp(dense);
+        let b = rng.normal_vec(n);
+        let sol = cg_solve(&op, &b, CgConfig::default());
+        assert!(sol.converged);
+        assert!(sol.iters < 20, "iters {}", sol.iters);
+    }
+
+    #[test]
+    fn many_rhs() {
+        let dense = random_spd(15, 6);
+        let op = DenseOp(dense.clone());
+        let mut rng = Rng::new(7);
+        let bs: Vec<Vec<f64>> = (0..3).map(|_| rng.normal_vec(15)).collect();
+        let sols = cg_solve_many(&op, &bs, CgConfig::default());
+        for (sol, b) in sols.iter().zip(&bs) {
+            assert!(sol.converged);
+            assert!(rel_err(&dense.matvec(&sol.x), b) < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Lanczos decomposition (paper §3, Lemma 3.2).
+//!
+//! Given a symmetric operator A and a probe vector b, r Lanczos iterations
+//! produce `Q (n×r, orthonormal)` and tridiagonal `T (r×r)` with
+//! `A ≈ Q T Qᵀ` — at the cost of r MVMs. Full reorthogonalization keeps Q
+//! numerically orthogonal (we store Q anyway, so the O(nr²) cost is free
+//! relative to the downstream Lemma-3.1 contraction).
+
+use crate::linalg::{axpy, dot, norm2, Matrix};
+use crate::operators::{LanczosFactor, LinearOp};
+
+/// Raw Lanczos recurrence output.
+#[derive(Clone, Debug)]
+pub struct LanczosResult {
+    /// n × r orthonormal basis.
+    pub q: Matrix,
+    /// Diagonal of T (length r).
+    pub alphas: Vec<f64>,
+    /// Off-diagonal of T (length r−1).
+    pub betas: Vec<f64>,
+}
+
+impl LanczosResult {
+    /// Rank actually reached (early breakdown may stop before `max_rank`).
+    pub fn rank(&self) -> usize {
+        self.alphas.len()
+    }
+
+    /// Dense r×r tridiagonal T.
+    pub fn t_dense(&self) -> Matrix {
+        let r = self.rank();
+        Matrix::from_fn(r, r, |i, j| {
+            if i == j {
+                self.alphas[i]
+            } else if i.abs_diff(j) == 1 {
+                self.betas[i.min(j)]
+            } else {
+                0.0
+            }
+        })
+    }
+
+    /// Package as a [`LanczosFactor`] for the Lemma-3.1 machinery.
+    pub fn into_factor(self) -> LanczosFactor {
+        let t = self.t_dense();
+        LanczosFactor { q: self.q, t }
+    }
+}
+
+/// Run up to `max_rank` Lanczos iterations of `a` from start vector `b`.
+///
+/// Stops early on breakdown (β below `tol`), which signals that the Krylov
+/// space is exhausted — for low-rank kernel matrices this happens fast and
+/// is exactly why SKIP works with tiny r.
+pub fn lanczos(
+    a: &dyn LinearOp,
+    b: &[f64],
+    max_rank: usize,
+    tol: f64,
+) -> LanczosResult {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    let max_rank = max_rank.min(n).max(1);
+    let mut q = Matrix::zeros(n, max_rank);
+    let mut alphas = Vec::with_capacity(max_rank);
+    let mut betas = Vec::with_capacity(max_rank.saturating_sub(1));
+
+    let nb = norm2(b);
+    assert!(nb > 0.0, "lanczos: zero start vector");
+    let mut qj: Vec<f64> = b.iter().map(|&x| x / nb).collect();
+    q.set_col(0, &qj);
+    let mut q_prev = vec![0.0; n];
+    let mut beta_prev = 0.0;
+
+    for j in 0..max_rank {
+        let mut w = a.matvec(&qj);
+        let alpha = dot(&qj, &w);
+        alphas.push(alpha);
+        // w ← w − α qⱼ − β qⱼ₋₁
+        axpy(-alpha, &qj, &mut w);
+        if j > 0 {
+            axpy(-beta_prev, &q_prev, &mut w);
+        }
+        // Full reorthogonalization against all stored columns (twice is
+        // enough — "twice is enough" of Parlett & Kahan).
+        for _ in 0..2 {
+            for k in 0..=j {
+                let col = q.col(k);
+                let c = dot(&col, &w);
+                axpy(-c, &col, &mut w);
+            }
+        }
+        let beta = norm2(&w);
+        if j + 1 == max_rank {
+            break;
+        }
+        if beta < tol {
+            break; // Krylov space exhausted.
+        }
+        betas.push(beta);
+        q_prev = qj;
+        beta_prev = beta;
+        qj = w.iter().map(|&x| x / beta).collect();
+        q.set_col(j + 1, &qj);
+    }
+
+    // Shrink Q to the achieved rank.
+    let r = alphas.len();
+    if r < max_rank {
+        let mut qs = Matrix::zeros(n, r);
+        for k in 0..r {
+            qs.set_col(k, &q.col(k));
+        }
+        q = qs;
+    }
+    LanczosResult { q, alphas, betas }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::DenseOp;
+    use crate::util::{rel_err, Rng};
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.matmul_t(&b);
+        a.add_diag(0.5);
+        a
+    }
+
+    #[test]
+    fn q_is_orthonormal() {
+        let a = DenseOp(random_spd(30, 1));
+        let mut rng = Rng::new(2);
+        let b = rng.normal_vec(30);
+        let res = lanczos(&a, &b, 10, 1e-12);
+        let qtq = res.q.t_matmul(&res.q);
+        assert!(qtq.max_abs_diff(&Matrix::eye(res.rank())) < 1e-10);
+    }
+
+    #[test]
+    fn full_rank_is_exact() {
+        let n = 12;
+        let dense = random_spd(n, 3);
+        let a = DenseOp(dense.clone());
+        let mut rng = Rng::new(4);
+        let b = rng.normal_vec(n);
+        let res = lanczos(&a, &b, n, 1e-14);
+        let f = res.into_factor();
+        // Exact after n steps (if no early breakdown).
+        if f.rank() == n {
+            assert!(f.to_dense().max_abs_diff(&dense) < 1e-7);
+        }
+        // In any case the action on b is exact.
+        let v = dense.matvec(&b);
+        let got = f.matvec(&b);
+        assert!(rel_err(&got, &v) < 1e-8);
+    }
+
+    #[test]
+    fn low_rank_matrix_recovers_with_small_r() {
+        // Rank-3 PSD matrix: Lanczos should be near-exact at r = 4.
+        let n = 40;
+        let mut rng = Rng::new(5);
+        let g = Matrix::from_fn(n, 3, |_, _| rng.normal());
+        let dense = g.matmul_t(&g);
+        let a = DenseOp(dense.clone());
+        let b = rng.normal_vec(n);
+        let res = lanczos(&a, &b, 8, 1e-10);
+        let f = res.into_factor();
+        assert!(f.rank() <= 5, "rank {} should reflect breakdown", f.rank());
+        let v = rng.normal_vec(n);
+        let got = f.matvec(&v);
+        let want = dense.matvec(&v);
+        assert!(rel_err(&got, &want) < 1e-6, "err {}", rel_err(&got, &want));
+    }
+
+    #[test]
+    fn rbf_kernel_matrix_fast_decay() {
+        // Smooth kernels have fast spectral decay — small r gives small
+        // error; this is the empirical engine behind Figure 2 (left).
+        use crate::kernels::ProductKernel;
+        let mut rng = Rng::new(6);
+        let n = 60;
+        let xs = Matrix::from_fn(n, 1, |_, _| rng.normal());
+        let k = ProductKernel::rbf(1, 1.0, 1.0);
+        let dense = k.gram_sym(&xs);
+        let a = DenseOp(dense.clone());
+        let b = rng.normal_vec(n);
+        let f = lanczos(&a, &b, 20, 1e-12).into_factor();
+        let v = rng.normal_vec(n);
+        assert!(rel_err(&f.matvec(&v), &dense.matvec(&v)) < 1e-5);
+    }
+
+    #[test]
+    fn tridiagonal_structure() {
+        let a = DenseOp(random_spd(15, 7));
+        let mut rng = Rng::new(8);
+        let b = rng.normal_vec(15);
+        let res = lanczos(&a, &b, 6, 1e-12);
+        let t = res.t_dense();
+        for i in 0..res.rank() {
+            for j in 0..res.rank() {
+                if i.abs_diff(j) > 1 {
+                    assert_eq!(t.get(i, j), 0.0);
+                }
+            }
+        }
+    }
+}

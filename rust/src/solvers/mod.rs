@@ -1,0 +1,9 @@
+//! Iterative Krylov solvers: CG, Lanczos, stochastic Lanczos quadrature.
+
+pub mod cg;
+pub mod lanczos;
+pub mod slq;
+
+pub use cg::{cg_solve, cg_solve_many, CgConfig, CgSolution};
+pub use lanczos::{lanczos, LanczosResult};
+pub use slq::{hutchinson_trace_inv_prod, slq_logdet, slq_trace_fn, SlqConfig};

@@ -1,0 +1,9 @@
+//! Utility substrate: PRNG, statistics, timing.
+
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use rng::Rng;
+pub use stats::{mae, mean, ols_slope, rel_err, rmse, std_dev, Standardizer};
+pub use timer::{bench_median_s, timed, Timer};

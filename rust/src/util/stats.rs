@@ -1,0 +1,133 @@
+//! Error metrics and small statistical helpers used by the harness.
+
+/// Mean absolute error between predictions and targets.
+pub fn mae(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    assert!(!pred.is_empty());
+    pred.iter()
+        .zip(target)
+        .map(|(p, t)| (p - t).abs())
+        .sum::<f64>()
+        / pred.len() as f64
+}
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f64], target: &[f64]) -> f64 {
+    assert_eq!(pred.len(), target.len());
+    assert!(!pred.is_empty());
+    (pred.iter()
+        .zip(target)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum::<f64>()
+        / pred.len() as f64)
+        .sqrt()
+}
+
+/// Sample mean.
+pub fn mean(xs: &[f64]) -> f64 {
+    assert!(!xs.is_empty());
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (population, ddof=0).
+pub fn std_dev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Relative L2 error ‖a−b‖ / ‖b‖.
+pub fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let num: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt();
+    let den: f64 = b.iter().map(|y| y * y).sum::<f64>().sqrt();
+    if den == 0.0 {
+        num
+    } else {
+        num / den
+    }
+}
+
+/// Ordinary least squares slope of y against x (for log-log scaling fits).
+pub fn ols_slope(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mx = mean(x);
+    let my = mean(y);
+    let sxy: f64 = x.iter().zip(y).map(|(a, b)| (a - mx) * (b - my)).sum();
+    let sxx: f64 = x.iter().map(|a| (a - mx) * (a - mx)).sum();
+    sxy / sxx
+}
+
+/// Standardization transform (z-scoring) fitted on training data.
+#[derive(Clone, Debug)]
+pub struct Standardizer {
+    pub mean: f64,
+    pub std: f64,
+}
+
+impl Standardizer {
+    /// Fit on values; guards against zero variance.
+    pub fn fit(xs: &[f64]) -> Self {
+        let m = mean(xs);
+        let s = std_dev(xs).max(1e-12);
+        Standardizer { mean: m, std: s }
+    }
+
+    pub fn transform(&self, x: f64) -> f64 {
+        (x - self.mean) / self.std
+    }
+
+    pub fn inverse(&self, z: f64) -> f64 {
+        z * self.std + self.mean
+    }
+
+    pub fn transform_vec(&self, xs: &[f64]) -> Vec<f64> {
+        xs.iter().map(|&x| self.transform(x)).collect()
+    }
+
+    pub fn inverse_vec(&self, zs: &[f64]) -> Vec<f64> {
+        zs.iter().map(|&z| self.inverse(z)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mae_rmse_basic() {
+        let p = [1.0, 2.0, 3.0];
+        let t = [1.0, 3.0, 5.0];
+        assert!((mae(&p, &t) - 1.0).abs() < 1e-12);
+        assert!((rmse(&p, &t) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_err_zero_for_equal() {
+        let a = [1.0, -2.0, 3.0];
+        assert_eq!(rel_err(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn ols_slope_exact_line() {
+        let x: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        let y: Vec<f64> = x.iter().map(|v| 3.0 * v + 2.0).collect();
+        assert!((ols_slope(&x, &y) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn standardizer_roundtrip() {
+        let xs = [3.0, 5.0, 9.0, 11.0];
+        let s = Standardizer::fit(&xs);
+        let zs = s.transform_vec(&xs);
+        assert!(mean(&zs).abs() < 1e-12);
+        let back = s.inverse_vec(&zs);
+        for (a, b) in back.iter().zip(&xs) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Lightweight wall-clock timing for the benchmark harness.
+
+use std::time::Instant;
+
+/// A simple stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    /// Elapsed seconds since start.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds since start.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed_s())
+}
+
+/// Run a closure repeatedly until `min_time_s` has elapsed (at least
+/// `min_iters` times) and report the median per-iteration seconds.
+/// This is the measurement core of our criterion-free bench harness.
+pub fn bench_median_s(
+    min_iters: usize,
+    min_time_s: f64,
+    mut f: impl FnMut(),
+) -> f64 {
+    let mut samples = Vec::new();
+    let overall = Timer::start();
+    loop {
+        let t = Timer::start();
+        f();
+        samples.push(t.elapsed_s());
+        if samples.len() >= min_iters && overall.elapsed_s() >= min_time_s {
+            break;
+        }
+        // Hard cap so pathological cases cannot hang the harness.
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[samples.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timed_returns_value() {
+        let (v, s) = timed(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(s >= 0.0);
+    }
+
+    #[test]
+    fn bench_runs_min_iters() {
+        let mut count = 0usize;
+        let med = bench_median_s(5, 0.0, || count += 1);
+        assert!(count >= 5);
+        assert!(med >= 0.0);
+    }
+}

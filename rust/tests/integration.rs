@@ -1,0 +1,208 @@
+//! Cross-module integration tests: full pipelines spanning kernels →
+//! operators → solvers → models, plus the PJRT runtime when artifacts are
+//! built. These complement the per-module unit tests by exercising the
+//! exact compositions the harness and examples rely on.
+
+use skip_gp::data::growth::{generate as generate_growth, GrowthConfig};
+use skip_gp::data::{dataset_by_name, generate, gaussian_cloud};
+use skip_gp::gp::{
+    ClusterMtgp, ClusterMtgpConfig, ExactGp, GpHypers, Mtgp, MtgpConfig, MvmGp,
+    MvmGpConfig, MvmVariant, Sgpr,
+};
+use skip_gp::kernels::ProductKernel;
+use skip_gp::operators::{LinearOp, SkiOp, SkipComponent, SkipOp};
+use skip_gp::solvers::{cg_solve, slq_logdet, CgConfig, SlqConfig};
+use skip_gp::util::{mae, rel_err, Rng};
+
+/// The paper's central pipeline at small scale: SKI per dimension →
+/// SKIP merge → CG solve → prediction, checked against the exact GP.
+#[test]
+fn skip_pipeline_matches_exact_gp_predictions() {
+    let mut rng = Rng::new(1);
+    let n = 300;
+    let d = 3;
+    let xs = skip_gp::linalg::Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+    let f = |row: &[f64]| row.iter().map(|&x| (2.0 * x).sin()).sum::<f64>();
+    let ys: Vec<f64> = (0..n).map(|i| f(xs.row(i)) + 0.05 * rng.normal()).collect();
+    let xt = skip_gp::linalg::Matrix::from_fn(60, d, |_, _| rng.uniform_in(-0.9, 0.9));
+    let h = GpHypers::new(0.8, 1.0, 0.05);
+
+    let mut exact = ExactGp::new(xs.clone(), ys.clone(), h);
+    exact.refresh().unwrap();
+    let pe = exact.predict_mean(&xt);
+
+    let mut skip = MvmGp::new(
+        xs,
+        ys,
+        h,
+        MvmGpConfig { grid_m: 64, rank: 40, refresh_rank: 80, ..Default::default() },
+    );
+    skip.refresh();
+    let ps = skip.predict_mean(&xt);
+    assert!(
+        mae(&pe, &ps) < 0.02,
+        "SKIP and exact GP disagree: mae {}",
+        mae(&pe, &ps)
+    );
+}
+
+/// MLL consistency across all three inference paths on one dataset.
+#[test]
+fn mll_consistency_exact_skip_kiss() {
+    let spec = dataset_by_name("power").unwrap();
+    let data = generate(spec, 0.015);
+    let h = GpHypers::init_for_dim(data.d());
+    let exact = ExactGp::new(data.xtrain.clone(), data.ytrain.clone(), h)
+        .mll(&h)
+        .unwrap();
+    let n = data.n() as f64;
+    for variant in [MvmVariant::Skip, MvmVariant::Kiss] {
+        let gp = MvmGp::new(
+            data.xtrain.clone(),
+            data.ytrain.clone(),
+            h,
+            MvmGpConfig {
+                variant,
+                grid_m: 32,
+                rank: 60,
+                slq: SlqConfig { num_probes: 20, max_rank: 40 },
+                cg: CgConfig { max_iters: 200, tol: 1e-7 },
+                ..Default::default()
+            },
+        );
+        let est = gp.mll(&h, 3);
+        let gap = (est - exact).abs() / n;
+        assert!(gap < 0.06, "{variant:?}: {est} vs exact {exact} ({gap} nats/pt)");
+    }
+}
+
+/// SGPR bound and exact MLL bracket the SKIP estimate on smooth data.
+#[test]
+fn sgpr_bound_below_exact() {
+    let spec = dataset_by_name("power").unwrap();
+    let data = generate(spec, 0.015);
+    let h = GpHypers::init_for_dim(data.d());
+    let exact = ExactGp::new(data.xtrain.clone(), data.ytrain.clone(), h)
+        .mll(&h)
+        .unwrap();
+    let elbo = Sgpr::new(data.xtrain.clone(), data.ytrain.clone(), h, 60, 0)
+        .elbo(&h)
+        .unwrap();
+    assert!(elbo <= exact + 1e-6);
+}
+
+/// End-to-end cluster workflow: generate → Gibbs (SKIP MLLs) → predict.
+#[test]
+fn cluster_workflow_end_to_end() {
+    let growth = generate_growth(&GrowthConfig {
+        num_children: 12,
+        min_obs: 8,
+        max_obs: 12,
+        seed: 5,
+        ..Default::default()
+    });
+    let mut model = ClusterMtgp::new(
+        growth.data.clone(),
+        ClusterMtgpConfig { use_skip: true, seed: 5, ..Default::default() },
+    );
+    model.run_gibbs(5);
+    // Predictions for every observation should track the data.
+    let pred = model
+        .predict_mean(&growth.data.x, &growth.data.task_of)
+        .unwrap();
+    let err = mae(&pred, &growth.data.y);
+    assert!(err < 0.2, "in-sample mae {err}");
+}
+
+/// MTGP: SKIP operator and dense covariance agree through a CG solve.
+#[test]
+fn mtgp_skip_solve_matches_dense_solve() {
+    let growth = generate_growth(&GrowthConfig {
+        num_children: 10,
+        min_obs: 6,
+        max_obs: 10,
+        seed: 9,
+        ..Default::default()
+    });
+    let mtgp = Mtgp::new(
+        growth.data.clone(),
+        skip_gp::kernels::Stationary1d::matern52(0.5),
+        2,
+        0.1,
+        MtgpConfig { rank: 40, ..Default::default() },
+    );
+    let dense = mtgp.khat_dense();
+    let chol = skip_gp::linalg::Cholesky::new_with_jitter(&dense, 1e-10).unwrap();
+    let alpha_exact = chol.solve(&growth.data.y);
+    let op = mtgp.build_skip_operator(3);
+    let sol = cg_solve(&op, &growth.data.y, CgConfig { max_iters: 300, tol: 1e-8 });
+    assert!(
+        rel_err(&sol.x, &alpha_exact) < 0.05,
+        "alpha rel err {}",
+        rel_err(&sol.x, &alpha_exact)
+    );
+}
+
+/// SLQ logdet through the SKIP operator tracks the dense logdet.
+#[test]
+fn slq_on_skip_operator_tracks_dense() {
+    let mut rng = Rng::new(11);
+    let n = 200;
+    let d = 2;
+    let xs = gaussian_cloud(n, d, 11);
+    let kern = ProductKernel::rbf(d, 1.2, 1.0);
+    let skis: Vec<SkiOp> = (0..d)
+        .map(|k| SkiOp::new(&xs.col(k), &kern.factors[k], 64))
+        .collect();
+    let comps: Vec<SkipComponent> = skis
+        .iter()
+        .map(|s| SkipComponent::Op(s as &dyn LinearOp))
+        .collect();
+    let skip = SkipOp::build_native(comps, 60, &mut rng);
+    let op = skip_gp::operators::AffineOp { inner: Box::new(skip), scale: 1.0, shift: 0.3 };
+    let mut dense = kern.gram_sym(&xs);
+    dense.add_diag(0.3);
+    let want = skip_gp::linalg::Cholesky::new_with_jitter(&dense, 1e-10)
+        .unwrap()
+        .logdet();
+    let got = slq_logdet(
+        &op,
+        SlqConfig { num_probes: 40, max_rank: 40 },
+        &mut Rng::new(12),
+    );
+    let gap = (got - want).abs() / n as f64;
+    assert!(gap < 0.05, "slq {got} vs dense {want} ({gap} nats/pt)");
+}
+
+/// PJRT backend inside a full SKIP training loop agrees with native.
+#[test]
+fn pjrt_backend_training_matches_native() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use skip_gp::runtime::PjrtBackend;
+    use std::sync::Arc;
+    let spec = dataset_by_name("power").unwrap();
+    let data = generate(spec, 0.01);
+    let h = GpHypers::init_for_dim(data.d());
+    let cfg = MvmGpConfig { grid_m: 32, rank: 15, refresh_rank: 30, ..Default::default() };
+    // Native path.
+    let mut native = MvmGp::new(data.xtrain.clone(), data.ytrain.clone(), h, cfg.clone());
+    native.refresh();
+    let pn = native.predict_mean(&data.xtest);
+    // PJRT path (same seed → same Lanczos probes → same decompositions up
+    // to artifact numerics).
+    let backend = Arc::new(PjrtBackend::load(&dir).unwrap());
+    let mut pjrt = MvmGp::new(data.xtrain.clone(), data.ytrain.clone(), h, cfg)
+        .with_backend(backend.clone());
+    pjrt.refresh();
+    let pp = pjrt.predict_mean(&data.xtest);
+    // The two paths compute the same math but with different summation
+    // orders inside XLA; Lanczos amplifies ulp-level differences, so
+    // compare at prediction level, not bitwise.
+    assert!(rel_err(&pp, &pn) < 1e-2, "pjrt vs native rel err {}", rel_err(&pp, &pn));
+    let (calls, _) = backend.call_counts();
+    assert!(calls > 0, "pjrt path unused");
+}
