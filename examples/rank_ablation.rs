@@ -1,46 +1,79 @@
-//! Ablation: how the Lanczos rank r controls SKIP's end-to-end quality.
+//! Ablation: how the Lanczos rank r controls SKIP's end-to-end quality —
+//! and what each rank *costs* in the Theorem 3.3 accounting.
 //!
 //! For a fixed hyperparameter setting on the Elevators surrogate this
 //! prints, per rank: the raw MVM relative error of the SKIP operator, the
 //! relative error of the CG solve α = K̂⁻¹y against the Cholesky oracle,
-//! and the resulting test MAE. It makes the design choice behind
-//! `MvmGpConfig::refresh_rank` (and its 14·d scaling) measurable: the
-//! solve amplifies operator error by ~the condition number, so prediction
-//! needs substantially higher rank than training (paper §7's
-//! rank(A∘B) ≤ rank(A)·rank(B) caveat in action).
+//! the resulting test MAE, and the build diagnostics from
+//! `SkipBuildStats` — `leaf_mvms` (the realized d·r of the theorem's
+//! `O(d·r·μ(K⁽ⁱ⁾))` leaf term) plus the achieved leaf/merge ranks, which
+//! show whether the rank cap or spectral decay truncated each tree node
+//! (the §7 rank(A∘B) ≤ rank(A)·rank(B) caveat in action). It makes the
+//! design choice behind `MvmGpConfig::refresh_rank` (and its 14·d
+//! scaling) measurable: the solve amplifies operator error by ~the
+//! condition number, so prediction needs substantially higher rank than
+//! training.
 //!
 //! ```bash
 //! cargo run --release --example rank_ablation
 //! ```
 
 use skip_gp::data::{dataset_by_name, generate};
-use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig};
+use skip_gp::gp::GpHypers;
 use skip_gp::kernels::ProductKernel;
 use skip_gp::linalg::{norm2, Cholesky};
-use skip_gp::operators::LinearOp;
+use skip_gp::operators::{AffineOp, LinearOp, SkiOp, SkipComponent, SkipOp};
 use skip_gp::solvers::{cg_solve, CgConfig};
-use skip_gp::util::{mae, rel_err, Rng};
+use skip_gp::util::{mae, mean, rel_err, Rng};
+
 fn main() {
     let spec = dataset_by_name("elevators").unwrap();
     let data = generate(spec, 0.06);
     let h = GpHypers::new(2.309, 1.949, 0.2835);
-    let kern = ProductKernel::rbf(data.d(), h.ell(), h.sf2());
+    let d = data.d();
+    let kern = ProductKernel::rbf(d, h.ell(), h.sf2());
     let mut khat = kern.gram_sym(&data.xtrain);
     khat.add_diag(h.sn2());
     let chol = Cholesky::new_with_jitter(&khat, 1e-10).unwrap();
     let ae = chol.solve(&data.ytrain);
     let pe = kern.gram(&data.xtest, &data.xtrain).matvec(&ae);
     println!("exact: MAE={:.4} |a|={:.1}", mae(&pe, &data.ytest), norm2(&ae));
+    let comp_kern = ProductKernel::rbf(d, h.ell(), 1.0);
     for rank in [100usize, 160, 240] {
-        let gp = MvmGp::new(data.xtrain.clone(), data.ytrain.clone(), h,
-            MvmGpConfig { grid_m: 100, rank, ..Default::default() });
-        let op = gp.build_operator_with_rank(&h, 0, rank);
+        // Build the SKIP operator directly (rather than through MvmGp) so
+        // the merge tree's SkipBuildStats are visible.
+        let skis: Vec<SkiOp> = (0..d)
+            .map(|k| SkiOp::new(&data.xtrain.col(k), &comp_kern.factors[k], 100))
+            .collect();
+        let comps: Vec<SkipComponent> = skis
+            .iter()
+            .map(|s| SkipComponent::Op(s as &dyn LinearOp))
+            .collect();
+        let mut build_rng = Rng::new(0);
+        let skip = SkipOp::build_native(comps, rank, &mut build_rng);
+        let stats = skip.stats.clone();
+        let op = AffineOp { inner: Box::new(skip), scale: h.sf2(), shift: h.sn2() };
         let mut rng = Rng::new(1);
         let v = rng.normal_vec(data.n());
         let merr = rel_err(&op.matvec(&v), &khat.matvec(&v));
         let sol = cg_solve(&op, &data.ytrain, CgConfig { max_iters: 300, tol: 1e-7 });
         let p = kern.gram(&data.xtest, &data.xtrain).matvec(&sol.x);
-        println!("rank={rank}: mvm_err={merr:.3e} a_err={:.2e} MAE={:.4}",
-            rel_err(&sol.x, &ae), mae(&p, &data.ytest));
+        println!(
+            "rank={rank}: mvm_err={merr:.3e} a_err={:.2e} MAE={:.4}",
+            rel_err(&sol.x, &ae),
+            mae(&p, &data.ytest)
+        );
+        // Theorem 3.3 cost accounting for this build.
+        let leaf_ranks: Vec<f64> = stats.leaf_ranks.iter().map(|&r| r as f64).collect();
+        let merge_ranks: Vec<f64> = stats.merge_ranks.iter().map(|&r| r as f64).collect();
+        println!(
+            "           build: leaf_mvms={} (= realized d*r, worst case {}), \
+             mean leaf rank {:.1}, merges={} mean merge rank {:.1}",
+            stats.leaf_mvms,
+            d * rank,
+            mean(&leaf_ranks),
+            stats.merge_ranks.len(),
+            if merge_ranks.is_empty() { 0.0 } else { mean(&merge_ranks) },
+        );
     }
 }

@@ -7,10 +7,15 @@
 //!   ski_mvm             — O(n + m log m) 1-D SKI operator
 //!   kiss_mvm            — Kronecker-grid operator (d = 3)
 //!   lemma31_native      — the O(r²n) Hadamard contraction, Rust
+//!   lemma31_matmat_serial/fused — t=8 block contraction, column loop vs
+//!                         the fused single-pass batched engine
 //!   lemma31_pjrt        — same contraction through the AOT artifact
 //!   skip_build          — full merge-tree construction (d = 8)
 //!   skip_mvm            — root MVM after caching (Corollary 3.4)
+//!   skip_matmat_serial/fused — t=8 root block MVM, serial vs batched
 //!   cg_solve            — 30-iteration CG on the SKIP operator
+//!   cg_loop_8rhs / block_cg_8rhs — t=8 solves, serial loop vs block-CG
+//!                         (the ≥2× acceptance case of the batched engine)
 //!
 //! Run: `cargo bench` (add `-- --fast` for a quick pass).
 
@@ -18,12 +23,15 @@ use skip_gp::data::gaussian_cloud;
 use skip_gp::kernels::{ProductKernel, Stationary1d};
 use skip_gp::linalg::{Matrix, SymToeplitz};
 use skip_gp::operators::lowrank::{
-    hadamard_pair_matvec_native, ContractionBackend, LanczosFactor,
+    hadamard_pair_matmat_native, hadamard_pair_matvec_native, ContractionBackend,
+    LanczosFactor,
 };
-use skip_gp::operators::{KroneckerSkiOp, LinearOp, SkiOp, SkipComponent, SkipOp};
+use skip_gp::operators::{
+    matmat_via_matvec, KroneckerSkiOp, LinearOp, SkiOp, SkipComponent, SkipOp,
+};
 use skip_gp::runtime::PjrtBackend;
-use skip_gp::solvers::{cg_solve, CgConfig};
-use skip_gp::util::{bench_median_s, Rng};
+use skip_gp::solvers::{block_cg_solve, cg_solve, CgConfig};
+use skip_gp::util::{bench_median_s, rel_err, Rng};
 use std::io::Write;
 use std::path::Path;
 
@@ -34,10 +42,17 @@ struct Bench {
 }
 
 impl Bench {
-    fn run(&mut self, name: &str, note: &str, mut f: impl FnMut()) {
+    fn run(&mut self, name: &str, note: &str, f: impl FnMut()) {
+        self.timed(name, note, f);
+    }
+
+    /// Like [`Bench::run`] but returns the median seconds, so paired
+    /// serial-vs-batched cases can report their speedup.
+    fn timed(&mut self, name: &str, note: &str, mut f: impl FnMut()) -> f64 {
         let med = bench_median_s(self.min_iters, self.min_time, &mut f);
         println!("{name:<18} {:>12.3} µs   {note}", med * 1e6);
         self.rows.push((name.to_string(), med, note.to_string()));
+        med
     }
 
     fn write_csv(&self, path: &Path) {
@@ -110,6 +125,22 @@ fn main() {
         std::hint::black_box(hadamard_pair_matvec_native(&fa, &fb, &v2048));
     });
 
+    // --- Lemma 3.1 block contraction: serial column loop vs fused.
+    {
+        let block = Matrix::from_fn(2048, 8, |_, _| rng.normal());
+        let serial = b.timed("lemma31_mm_serial", "n=2048 r=32 t=8 (col loop)", || {
+            let mut out = Matrix::zeros(2048, 8);
+            for j in 0..8 {
+                out.set_col(j, &hadamard_pair_matvec_native(&fa, &fb, &block.col(j)));
+            }
+            std::hint::black_box(out);
+        });
+        let fused = b.timed("lemma31_mm_fused", "n=2048 r=32 t=8 (one pass)", || {
+            std::hint::black_box(hadamard_pair_matmat_native(&fa, &fb, &block));
+        });
+        println!("  -> fused block contraction speedup: {:.2}x", serial / fused);
+    }
+
     // --- Same contraction through the PJRT artifact (if built).
     if Path::new("artifacts/manifest.json").exists() {
         let backend = PjrtBackend::load(Path::new("artifacts")).expect("artifacts");
@@ -149,6 +180,18 @@ fn main() {
         b.run("skip_mvm", "n=2048 d=8 r=20 (cached)", || {
             std::hint::black_box(skip.matvec(&v));
         });
+
+        // --- Batched root MVM: serial column loop vs the fused matmat.
+        let t_rhs = 8;
+        let block = Matrix::from_fn(n, t_rhs, |_, _| rng.normal());
+        let mm_serial = b.timed("skip_mm_serial", "n=2048 t=8 (col loop)", || {
+            std::hint::black_box(matmat_via_matvec(&skip, &block));
+        });
+        let mm_fused = b.timed("skip_mm_fused", "n=2048 t=8 (batched)", || {
+            std::hint::black_box(skip.matmat(&block));
+        });
+        println!("  -> skip matmat speedup: {:.2}x", mm_serial / mm_fused);
+
         // --- CG solve on the SKIP operator.
         let shifted = skip_gp::operators::AffineOp {
             inner: Box::new(skip),
@@ -163,6 +206,28 @@ fn main() {
                 CgConfig { max_iters: 30, tol: 1e-10 },
             ));
         });
+
+        // --- The batched-engine acceptance case: t = 8 simultaneous
+        // solves against the SKIP-backed K̂, serial CG loop vs block-CG.
+        let rhs = Matrix::from_fn(n, t_rhs, |_, _| rng.normal());
+        let cfg = CgConfig { max_iters: 30, tol: 1e-10 };
+        let serial_s = b.timed("cg_loop_8rhs", "n=2048 t=8 30 iters (serial)", || {
+            for j in 0..t_rhs {
+                std::hint::black_box(cg_solve(&shifted, &rhs.col(j), cfg));
+            }
+        });
+        let block_s = b.timed("block_cg_8rhs", "n=2048 t=8 30 iters (batched)", || {
+            std::hint::black_box(block_cg_solve(&shifted, &rhs, cfg));
+        });
+        println!("  -> block-CG speedup over serial loop: {:.2}x", serial_s / block_s);
+        // Correctness cross-check: block solution matches the serial one.
+        let block_sol = block_cg_solve(&shifted, &rhs, cfg);
+        let mut worst = 0.0f64;
+        for j in 0..t_rhs {
+            let single = cg_solve(&shifted, &rhs.col(j), cfg);
+            worst = worst.max(rel_err(&block_sol.x.col(j), &single.x));
+        }
+        println!("  -> block vs serial max column rel err: {worst:.2e}");
     }
 
     b.write_csv(Path::new("results/bench_micro.csv"));

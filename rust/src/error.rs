@@ -1,42 +1,99 @@
 //! Library-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: no derive-macro crates are
+//! available in the offline build environment.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by skip-gp.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Cholesky hit a non-positive pivot.
-    #[error("matrix not positive definite at pivot {pivot} (value {value})")]
     NotPositiveDefinite { pivot: usize, value: f64 },
 
     /// Tridiagonal eigensolver failed to converge.
-    #[error("tridiagonal eigensolver failed to converge at index {index}")]
     EigFailed { index: usize },
 
     /// CG failed to reach tolerance.
-    #[error("conjugate gradients did not converge: residual {residual} after {iters} iterations")]
     CgDidNotConverge { iters: usize, residual: f64 },
 
     /// Shape mismatch in an operator composition.
-    #[error("dimension mismatch: {context} (expected {expected}, got {got})")]
     DimMismatch { context: &'static str, expected: usize, got: usize },
 
     /// Runtime artifact problems (missing/corrupt AOT artifact).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    /// PJRT/XLA runtime failure.
-    #[error("xla runtime error: {0}")]
+    /// PJRT/XLA runtime failure (or the `xla` feature is not compiled in).
     Xla(String),
 
     /// I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Configuration / CLI errors.
-    #[error("config error: {0}")]
     Config(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::NotPositiveDefinite { pivot, value } => write!(
+                f,
+                "matrix not positive definite at pivot {pivot} (value {value})"
+            ),
+            Error::EigFailed { index } => write!(
+                f,
+                "tridiagonal eigensolver failed to converge at index {index}"
+            ),
+            Error::CgDidNotConverge { iters, residual } => write!(
+                f,
+                "conjugate gradients did not converge: residual {residual} after {iters} iterations"
+            ),
+            Error::DimMismatch { context, expected, got } => write!(
+                f,
+                "dimension mismatch: {context} (expected {expected}, got {got})"
+            ),
+            Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Config(msg) => write!(f, "config error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Library result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_messages() {
+        let e = Error::NotPositiveDefinite { pivot: 3, value: -0.5 };
+        assert!(e.to_string().contains("pivot 3"));
+        let e = Error::Config("bad flag".into());
+        assert_eq!(e.to_string(), "config error: bad flag");
+    }
+
+    #[test]
+    fn io_error_converts_and_chains() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

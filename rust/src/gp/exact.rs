@@ -121,15 +121,22 @@ impl ExactGp {
 
     /// Predictive variance at test points (Eq. 2), including noise-free
     /// latent variance only.
+    ///
+    /// Batched: all n* cross-covariance columns go through one blocked
+    /// triangular solve ([`Cholesky::solve_mat`]) — `L` streams through
+    /// cache once for the whole test block instead of once per point.
     pub fn predict_var(&self, xtest: &Matrix) -> Vec<f64> {
         let chol = self.chol.as_ref().expect("call fit/refresh first");
         let kern = self.kernel(&self.hypers);
-        let kx = kern.gram(xtest, &self.xs);
+        let kx = kern.gram(xtest, &self.xs); // n* × n
+        let sol = chol.solve_mat(&kx.transpose()); // n × n*
         let mut out = Vec::with_capacity(xtest.rows);
         for i in 0..xtest.rows {
             let ki = kx.row(i);
-            let sol = chol.solve(ki);
-            let reduce: f64 = ki.iter().zip(&sol).map(|(a, b)| a * b).sum();
+            let mut reduce = 0.0;
+            for (j, &k) in ki.iter().enumerate() {
+                reduce += k * sol.get(j, i);
+            }
             out.push((kern.outputscale - reduce).max(1e-12));
         }
         out

@@ -127,6 +127,10 @@ impl Mtgp {
     }
 
     /// Fast MLL estimate via SKIP + CG + SLQ — the paper's §6 fast path.
+    /// The single fit solve stays on plain CG (its allocation-free loop is
+    /// the right tool at t = 1); the SLQ log-det underneath batches all
+    /// its probes through the fused block-MVM engine (`lanczos_batch`),
+    /// which is where this path's multi-RHS traffic actually lives.
     pub fn mll_skip(&self, seed: u64) -> f64 {
         let op = self.build_skip_operator(seed);
         let n = self.data.len() as f64;

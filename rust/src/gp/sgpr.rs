@@ -65,15 +65,12 @@ impl Sgpr {
         kmm.add_diag(1e-8 * h.sf2().max(1.0)); // jitter
         let l = Cholesky::new_with_jitter(&kmm, 1e-10)?;
         let kmn = kern.gram(&self.z, &self.xs); // m × n
-        // A = σ⁻¹ L⁻¹ K_mn  (m × n), column-wise forward substitution.
+        // A = σ⁻¹ L⁻¹ K_mn  (m × n): one blocked forward substitution for
+        // all n columns at once (batched multi-RHS engine).
         let sigma = sn2.sqrt();
-        let mut a = Matrix::zeros(m, n);
-        for j in 0..n {
-            let col = kmn.col(j);
-            let sol = l.solve_lower(&col);
-            for i in 0..m {
-                a.set(i, j, sol[i] / sigma);
-            }
+        let mut a = l.solve_lower_mat(&kmn);
+        for v in a.data.iter_mut() {
+            *v /= sigma;
         }
         // B = I + A Aᵀ (m×m).
         let mut b = a.matmul_t(&a);
@@ -151,14 +148,16 @@ impl Sgpr {
         let cache = self.cache.as_ref().expect("call fit/refresh first");
         let kern = self.kernel(&self.hypers);
         let kts = kern.gram(&self.z, xtest); // m × n*
-        let mut out = Vec::with_capacity(xtest.rows);
-        for j in 0..xtest.rows {
-            let col = kts.col(j);
-            let linv_k = cache.l.solve_lower(&col);
-            let lbinv = cache.lb.solve_lower(&linv_k);
-            let mean: f64 =
-                lbinv.iter().zip(&cache.c).map(|(a, b)| a * b).sum::<f64>();
-            out.push(mean);
+        // Both triangular solves run blocked over the whole test batch.
+        let linv_k = cache.l.solve_lower_mat(&kts);
+        let lbinv = cache.lb.solve_lower_mat(&linv_k);
+        // μ* per test point: ⟨LB⁻¹L⁻¹k*, c⟩ — accumulate row-wise so the
+        // inner loop walks contiguous memory.
+        let mut out = vec![0.0; xtest.rows];
+        for (i, &ci) in cache.c.iter().enumerate() {
+            for (o, &v) in out.iter_mut().zip(lbinv.row(i)) {
+                *o += ci * v;
+            }
         }
         out
     }

@@ -20,6 +20,17 @@
 //! Python never runs on the request path: `rust/src/runtime` loads the AOT
 //! artifacts through PJRT and `rust/src/coordinator` orchestrates
 //! experiments over native + PJRT execution.
+//!
+//! Every solve routes through the **batched multi-RHS MVM engine**: all
+//! structured operators implement a [`operators::LinearOp::matmat`] fast
+//! path that carries an n×t block through the structure in one pass, and
+//! [`solvers::block_cg_solve`] / [`solvers::lanczos_batch`] fuse the
+//! per-iteration MVMs of simultaneous right-hand sides / probes into
+//! single block traversals.
+//!
+//! See `ARCHITECTURE.md` at the repository root for the three-layer
+//! design, a paper-equation → module map, and the batched-MVM data flow;
+//! `README.md` covers how to build, test, and run the harness.
 
 pub mod coordinator;
 pub mod data;

@@ -93,13 +93,69 @@ impl Cholesky {
         x
     }
 
-    /// Solve against each column of `B`.
+    /// Solve `A X = B` against all columns of `B` in one blocked forward +
+    /// backward substitution (part of the batched multi-RHS engine: `L` is
+    /// streamed once for the whole block instead of once per column).
     pub fn solve_mat(&self, b: &Matrix) -> Matrix {
-        let mut out = Matrix::zeros(b.rows, b.cols);
-        for j in 0..b.cols {
-            out.set_col(j, &self.solve(&b.col(j)));
+        self.solve_upper_mat(&self.solve_lower_mat(b))
+    }
+
+    /// Solve `L Y = B` for all columns at once. Row-major layout makes the
+    /// inner update a contiguous length-t axpy, so the per-column
+    /// subtraction order matches [`Cholesky::solve_lower`] exactly.
+    pub fn solve_lower_mat(&self, b: &Matrix) -> Matrix {
+        let n = self.l.rows;
+        assert_eq!(b.rows, n);
+        let t = b.cols;
+        let mut y = b.clone();
+        for i in 0..n {
+            let lrow = self.l.row(i);
+            let (done, rest) = y.data.split_at_mut(i * t);
+            let yi = &mut rest[..t];
+            for k in 0..i {
+                let c = lrow[k];
+                if c == 0.0 {
+                    continue;
+                }
+                let yk = &done[k * t..(k + 1) * t];
+                for (a, &v) in yi.iter_mut().zip(yk) {
+                    *a -= c * v;
+                }
+            }
+            let d = lrow[i];
+            for a in yi.iter_mut() {
+                *a /= d;
+            }
         }
-        out
+        y
+    }
+
+    /// Solve `Lᵀ X = Y` for all columns at once (blocked backward
+    /// substitution; see [`Cholesky::solve_lower_mat`]).
+    pub fn solve_upper_mat(&self, yb: &Matrix) -> Matrix {
+        let n = self.l.rows;
+        assert_eq!(yb.rows, n);
+        let t = yb.cols;
+        let mut x = yb.clone();
+        for i in (0..n).rev() {
+            let (head, tail) = x.data.split_at_mut((i + 1) * t);
+            let xi = &mut head[i * t..];
+            for k in (i + 1)..n {
+                let c = self.l.get(k, i);
+                if c == 0.0 {
+                    continue;
+                }
+                let xk = &tail[(k - i - 1) * t..(k - i) * t];
+                for (a, &v) in xi.iter_mut().zip(xk) {
+                    *a -= c * v;
+                }
+            }
+            let d = self.l.get(i, i);
+            for a in xi.iter_mut() {
+                *a /= d;
+            }
+        }
+        x
     }
 
     /// log |A| = 2 Σ log L[i,i].
@@ -183,5 +239,23 @@ mod tests {
         let b = Matrix::from_fn(6, 3, |i, j| (i + j) as f64 * 0.25);
         let x = c.solve_mat(&b);
         assert!(a.matmul(&x).max_abs_diff(&b) < 1e-9);
+    }
+
+    #[test]
+    fn blocked_triangular_solves_match_per_column() {
+        let a = random_spd(12, 5);
+        let c = Cholesky::new(&a).unwrap();
+        let b = Matrix::from_fn(12, 4, |i, j| ((i * 7 + j * 3) as f64).sin());
+        let y = c.solve_lower_mat(&b);
+        let x = c.solve_upper_mat(&y);
+        for j in 0..4 {
+            let col = b.col(j);
+            let y_col = c.solve_lower(&col);
+            let x_col = c.solve_upper(&y_col);
+            for i in 0..12 {
+                assert_eq!(y.get(i, j), y_col[i], "lower ({i},{j})");
+                assert_eq!(x.get(i, j), x_col[i], "upper ({i},{j})");
+            }
+        }
     }
 }

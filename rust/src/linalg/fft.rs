@@ -111,6 +111,42 @@ pub fn circ_mul(a_hat: &[C], b: &[f64], out_len: usize) -> Vec<f64> {
     bh[..out_len].iter().map(|c| c.0).collect()
 }
 
+/// Two circular convolutions for the price of one complex FFT pair.
+///
+/// Packs the real inputs as `x = b1 + i·b2`; since the circulant action is
+/// a *real* linear map, `ifft(a_hat ⊙ fft(x))` carries `circ(a)·b1` in its
+/// real part and `circ(a)·b2` in its imaginary part. This is the column
+/// batching used by `SymToeplitz::matmat`: 2 FFTs per RHS pair (one
+/// forward on the packed pair, one inverse) instead of the 4 that two
+/// `circ_mul` calls pay (a forward + inverse per RHS).
+pub fn circ_mul_pair(
+    a_hat: &[C],
+    b1: &[f64],
+    b2: &[f64],
+    out_len: usize,
+) -> (Vec<f64>, Vec<f64>) {
+    let n = a_hat.len();
+    assert!(n >= b1.len() && n >= b2.len());
+    let m = b1.len().max(b2.len());
+    let mut buf: Vec<C> = (0..m)
+        .map(|i| {
+            (
+                b1.get(i).copied().unwrap_or(0.0),
+                b2.get(i).copied().unwrap_or(0.0),
+            )
+        })
+        .collect();
+    buf.resize(n, (0.0, 0.0));
+    fft(&mut buf);
+    for (v, &a) in buf.iter_mut().zip(a_hat) {
+        *v = c_mul(*v, a);
+    }
+    ifft(&mut buf);
+    let out1 = buf[..out_len].iter().map(|c| c.0).collect();
+    let out2 = buf[..out_len].iter().map(|c| c.1).collect();
+    (out1, out2)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -176,6 +212,21 @@ mod tests {
                 acc += a[j] * b[(k + n - j) % n];
             }
             assert!((got[k] - acc).abs() < 1e-10, "k={k}: {} vs {acc}", got[k]);
+        }
+    }
+
+    #[test]
+    fn circ_mul_pair_matches_two_circ_muls() {
+        let a = [1.0, -0.5, 0.25, 0.0, 0.0, 0.0, 0.0, 0.0];
+        let b1 = [1.0, 2.0, 3.0, 4.0, 0.0, -1.0, 0.5, 2.5];
+        let b2 = [0.0, 1.0, -1.0, 0.5, 2.0, 0.0, 0.0, -3.0];
+        let a_hat = fft_real(&a, 8);
+        let (g1, g2) = circ_mul_pair(&a_hat, &b1, &b2, 8);
+        let w1 = circ_mul(&a_hat, &b1, 8);
+        let w2 = circ_mul(&a_hat, &b2, 8);
+        for k in 0..8 {
+            assert!((g1[k] - w1[k]).abs() < 1e-10, "k={k}");
+            assert!((g2[k] - w2[k]).abs() < 1e-10, "k={k}");
         }
     }
 

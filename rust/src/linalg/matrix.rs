@@ -109,24 +109,39 @@ impl Matrix {
         t
     }
 
-    /// Matrix–matrix product `self * other` (ikj order, contiguous inner loop).
+    /// Matrix–matrix product `self * other` (ikj order, contiguous inner
+    /// loop), parallel across disjoint output-row chunks when the product
+    /// is large enough to amortize thread spawn. Per-row summation order
+    /// is fixed, so results are identical at any thread count.
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul dim mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let a_row = &self.data[i * k..(i + 1) * k];
-            let o_row = &mut out.data[i * n..(i + 1) * n];
-            for (p, &a) in a_row.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = &other.data[p * n..(p + 1) * n];
-                for (o, &b) in o_row.iter_mut().zip(b_row) {
-                    *o += a * b;
-                }
-            }
+        if n == 0 {
+            return out;
         }
+        let a_data = &self.data;
+        let b_data = &other.data;
+        crate::util::parallel::par_row_chunks(
+            &mut out.data,
+            n,
+            par_min_rows(k, n),
+            |first_row, chunk| {
+                for (r, o_row) in chunk.chunks_mut(n).enumerate() {
+                    let i = first_row + r;
+                    let a_row = &a_data[i * k..(i + 1) * k];
+                    for (p, &a) in a_row.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let b_row = &b_data[p * n..(p + 1) * n];
+                        for (o, &b) in o_row.iter_mut().zip(b_row) {
+                            *o += a * b;
+                        }
+                    }
+                }
+            },
+        );
         out
     }
 
@@ -151,22 +166,36 @@ impl Matrix {
         out
     }
 
-    /// `self * otherᵀ` without materializing the transpose.
+    /// `self * otherᵀ` without materializing the transpose; parallel
+    /// across output-row chunks like [`Matrix::matmul`].
     pub fn matmul_t(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_t dim mismatch");
         let (m, k, n) = (self.rows, self.cols, other.rows);
         let mut out = Matrix::zeros(m, n);
-        for i in 0..m {
-            let a_row = &self.data[i * k..(i + 1) * k];
-            for j in 0..n {
-                let b_row = &other.data[j * k..(j + 1) * k];
-                let mut acc = 0.0;
-                for (&a, &b) in a_row.iter().zip(b_row) {
-                    acc += a * b;
-                }
-                out.data[i * n + j] = acc;
-            }
+        if n == 0 {
+            return out;
         }
+        let a_data = &self.data;
+        let b_data = &other.data;
+        crate::util::parallel::par_row_chunks(
+            &mut out.data,
+            n,
+            par_min_rows(k, n),
+            |first_row, chunk| {
+                for (r, o_row) in chunk.chunks_mut(n).enumerate() {
+                    let i = first_row + r;
+                    let a_row = &a_data[i * k..(i + 1) * k];
+                    for (j, o) in o_row.iter_mut().enumerate() {
+                        let b_row = &b_data[j * k..(j + 1) * k];
+                        let mut acc = 0.0;
+                        for (&a, &b) in a_row.iter().zip(b_row) {
+                            acc += a * b;
+                        }
+                        *o = acc;
+                    }
+                }
+            },
+        );
         out
     }
 
@@ -291,6 +320,13 @@ impl Matrix {
             }
         }
     }
+}
+
+/// Minimum output rows per thread chunk so each worker gets ≥ ~64k MACs
+/// (below that, spawn latency beats the speedup and gemms stay serial).
+#[inline]
+fn par_min_rows(k: usize, n: usize) -> usize {
+    ((1usize << 16) / (k * n).max(1)).max(8)
 }
 
 /// Dot product of two slices.

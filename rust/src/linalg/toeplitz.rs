@@ -5,8 +5,9 @@
 //! the first column into a circulant of power-of-two size N ≥ 2m−1 lets the
 //! FFT diagonalize the action, so `K_UU v` costs two FFTs.
 
-use super::fft::{circ_mul, fft_real, next_pow2, C};
+use super::fft::{circ_mul, circ_mul_pair, fft_real, next_pow2, C};
 use super::matrix::Matrix;
+use crate::util::parallel::par_map_range;
 
 /// Symmetric Toeplitz matrix represented by its first column, with the
 /// eigen-spectrum of its circulant embedding precomputed.
@@ -45,6 +46,38 @@ impl SymToeplitz {
         let m = self.dim();
         assert_eq!(v.len(), m);
         circ_mul(&self.c_hat, v, m)
+    }
+
+    /// `K M` for an m×t block in O(t·m log m), batched two columns per
+    /// complex FFT (`circ_mul_pair`) and parallel across column pairs.
+    ///
+    /// This is the grid-level fast path of the batched MVM engine: a SKI
+    /// `matmat` funnels all t right-hand sides through here so the
+    /// circulant spectrum `c_hat` is read once per pair instead of once
+    /// per column.
+    pub fn matmat(&self, m: &Matrix) -> Matrix {
+        let dim = self.dim();
+        assert_eq!(m.rows, dim);
+        let t = m.cols;
+        let mut out = Matrix::zeros(dim, t);
+        // Process columns in pairs: ~2 FFTs per pair instead of 4. Thread
+        // fan-out only pays off when each pair's FFT work is substantial,
+        // so gate it on the embedding size (small grids stay serial — this
+        // runs inside CG-iteration hot loops).
+        let pairs = t / 2;
+        let min_pairs = ((1usize << 15) / self.c_hat.len().max(1)).max(2);
+        let results = par_map_range(pairs, min_pairs, |p| {
+            let (j1, j2) = (2 * p, 2 * p + 1);
+            circ_mul_pair(&self.c_hat, &m.col(j1), &m.col(j2), dim)
+        });
+        for (p, (c1, c2)) in results.into_iter().enumerate() {
+            out.set_col(2 * p, &c1);
+            out.set_col(2 * p + 1, &c2);
+        }
+        if t % 2 == 1 {
+            out.set_col(t - 1, &self.matvec(&m.col(t - 1)));
+        }
+        out
     }
 
     /// Dense materialization (tests / tiny problems only).
@@ -91,6 +124,26 @@ mod tests {
         let fast = t.matvec(&v);
         for (a, b) in fast.iter().zip(&dense) {
             assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn matmat_matches_per_column_matvec() {
+        let mut rng = Rng::new(11);
+        for m in [3usize, 16, 65] {
+            let col: Vec<f64> = (0..m).map(|k| 1.0 / (1.0 + k as f64)).collect();
+            let t = SymToeplitz::new(col);
+            for cols in [1usize, 2, 5, 8] {
+                let b = Matrix::from_fn(m, cols, |_, _| rng.normal());
+                let got = t.matmat(&b);
+                for j in 0..cols {
+                    let want = t.matvec(&b.col(j));
+                    let gcol = got.col(j);
+                    for (a, w) in gcol.iter().zip(&want) {
+                        assert!((a - w).abs() < 1e-9, "m={m} cols={cols} j={j}");
+                    }
+                }
+            }
         }
     }
 

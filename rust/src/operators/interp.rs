@@ -139,6 +139,47 @@ impl InterpMatrix {
         out
     }
 
+    /// `W M` for an m×t block — one streaming pass over the stencil, with
+    /// each update a contiguous length-t row axpy (the block analogue of
+    /// [`InterpMatrix::matvec`]). O(n·t).
+    pub fn matmat(&self, m: &Matrix) -> Matrix {
+        assert_eq!(m.rows, self.m);
+        let t = m.cols;
+        let mut out = Matrix::zeros(self.n, t);
+        for i in 0..self.n {
+            let base = i * STENCIL;
+            let o_row = out.row_mut(i);
+            for k in 0..STENCIL {
+                let w = self.w[base + k];
+                let src = m.row(self.idx[base + k] as usize);
+                for (o, &x) in o_row.iter_mut().zip(src) {
+                    *o += w * x;
+                }
+            }
+        }
+        out
+    }
+
+    /// `Wᵀ M` for an n×t block — scatter rows of `M` into grid rows, all t
+    /// columns per touch. O(n·t).
+    pub fn t_matmat(&self, m: &Matrix) -> Matrix {
+        assert_eq!(m.rows, self.n);
+        let t = m.cols;
+        let mut out = Matrix::zeros(self.m, t);
+        for i in 0..self.n {
+            let base = i * STENCIL;
+            let src = m.row(i);
+            for k in 0..STENCIL {
+                let w = self.w[base + k];
+                let o_row = out.row_mut(self.idx[base + k] as usize);
+                for (o, &x) in o_row.iter_mut().zip(src) {
+                    *o += w * x;
+                }
+            }
+        }
+        out
+    }
+
     /// Dense materialization (tests only).
     pub fn to_dense(&self) -> Matrix {
         let mut d = Matrix::zeros(self.n, self.m);
@@ -222,6 +263,30 @@ mod tests {
         let approx = wd.matmul(&kuu).matmul_t(&wd);
         let exact = Matrix::from_fn(30, 30, |i, j| kern.eval(xs[i], xs[j]));
         assert!(approx.max_abs_diff(&exact) < 1e-3);
+    }
+
+    #[test]
+    fn block_ops_match_per_column() {
+        let g = Grid1d::fit(0.0, 1.0, 16);
+        let mut rng = Rng::new(7);
+        let xs = rng.uniform_vec(30, 0.0, 1.0);
+        let w = InterpMatrix::new(&xs, &g);
+        for t in [1usize, 3, 8] {
+            let mg = Matrix::from_fn(g.m, t, |_, _| rng.normal());
+            let got = w.matmat(&mg);
+            for j in 0..t {
+                assert_eq!(got.col(j), w.matvec(&mg.col(j)), "matmat col {j}");
+            }
+            let mn = Matrix::from_fn(30, t, |_, _| rng.normal());
+            let got_t = w.t_matmat(&mn);
+            for j in 0..t {
+                let want = w.t_matvec(&mn.col(j));
+                let gcol = got_t.col(j);
+                for (a, b) in gcol.iter().zip(&want) {
+                    assert!((a - b).abs() < 1e-14, "t_matmat col {j}");
+                }
+            }
+        }
     }
 
     #[test]

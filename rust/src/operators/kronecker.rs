@@ -11,6 +11,7 @@ use super::interp::{cubic_stencil, Grid1d, STENCIL};
 use super::LinearOp;
 use crate::kernels::ProductKernel;
 use crate::linalg::{Matrix, SymToeplitz};
+use crate::util::parallel::par_map_range;
 
 /// Tensor-product SKI operator over a d-dimensional grid.
 pub struct KroneckerSkiOp {
@@ -169,6 +170,49 @@ impl LinearOp for KroneckerSkiOp {
         let t = self.kron_matvec(&t);
         let mut out = self.w_matvec(&t);
         for o in out.iter_mut() {
+            *o *= self.outputscale;
+        }
+        out
+    }
+
+    /// Fast path: one scatter pass lifts all t right-hand sides onto the
+    /// grid (the 4ᵈ stencil indices are decoded once per data row instead
+    /// of once per row *per column*), the Kronecker–Toeplitz apply runs
+    /// parallel across columns, and one gather pass drops the block back
+    /// to data space.
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        assert_eq!(m.rows, self.n);
+        let t = m.cols;
+        let s = self.stencil_size();
+        // Wᵀ M — scatter, all t columns per stencil touch.
+        let mut grid = Matrix::zeros(self.total_grid, t);
+        for i in 0..self.n {
+            let src = m.row(i);
+            let base = i * s;
+            for k in 0..s {
+                let w = self.w[base + k];
+                let g_row = grid.row_mut(self.idx[base + k] as usize);
+                for (g, &x) in g_row.iter_mut().zip(src) {
+                    *g += w * x;
+                }
+            }
+        }
+        // (T₁ ⊗ ⋯ ⊗ T_d) per column — embarrassingly parallel.
+        let cols = par_map_range(t, 2, |j| self.kron_matvec(&grid.col(j)));
+        // W · — gather, all t columns per stencil touch.
+        let mut out = Matrix::zeros(self.n, t);
+        for i in 0..self.n {
+            let base = i * s;
+            let o_row = out.row_mut(i);
+            for k in 0..s {
+                let w = self.w[base + k];
+                let gi = self.idx[base + k] as usize;
+                for (o, col) in o_row.iter_mut().zip(&cols) {
+                    *o += w * col[gi];
+                }
+            }
+        }
+        for o in out.data.iter_mut() {
             *o *= self.outputscale;
         }
         out

@@ -16,6 +16,7 @@
 
 use super::LinearOp;
 use crate::linalg::Matrix;
+use crate::util::parallel::{par_map_range, par_row_chunks};
 
 /// Rank-r approximation `K ≈ Q T Qᵀ`.
 #[derive(Clone, Debug)]
@@ -46,6 +47,15 @@ impl LanczosFactor {
         let b = self.t.matvec(&a);
         self.q.matvec(&b)
     }
+
+    /// `(Q T Qᵀ) M` for an n×t block in O(nrt) — three gemms instead of t
+    /// gemv chains, so `Q` streams through cache once per stage for the
+    /// whole block (and the big `Q ·` stage is row-parallel).
+    pub fn matmat(&self, m: &Matrix) -> Matrix {
+        let a = self.q.t_matmul(m);
+        let b = self.t.matmul(&a);
+        self.q.matmul(&b)
+    }
 }
 
 impl LinearOp for LanczosFactor {
@@ -55,6 +65,10 @@ impl LinearOp for LanczosFactor {
 
     fn matvec(&self, v: &[f64]) -> Vec<f64> {
         LanczosFactor::matvec(self, v)
+    }
+
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        LanczosFactor::matmat(self, m)
     }
 }
 
@@ -72,6 +86,26 @@ pub trait ContractionBackend: Send + Sync {
         v: &[f64],
     ) -> Vec<f64>;
 
+    /// Compute `(Q₁T₁Q₁ᵀ ∘ Q₂T₂Q₂ᵀ) M` for an n×t block — Lemma 3.1
+    /// generalizes from vectors to blocks column-wise, which is exactly
+    /// what this default does. [`NativeBackend`] overrides it with the
+    /// fused single-pass contraction
+    /// [`hadamard_pair_matmat_native`], the root fast path of the batched
+    /// MVM engine.
+    fn hadamard_pair_matmat(
+        &self,
+        a: &LanczosFactor,
+        b: &LanczosFactor,
+        m: &Matrix,
+    ) -> Matrix {
+        assert_eq!(m.rows, a.dim());
+        let mut out = Matrix::zeros(a.dim(), m.cols);
+        for j in 0..m.cols {
+            out.set_col(j, &self.hadamard_pair_matvec(a, b, &m.col(j)));
+        }
+        out
+    }
+
     /// Human-readable backend name (for logs/metrics).
     fn name(&self) -> &'static str;
 }
@@ -87,6 +121,15 @@ impl ContractionBackend for NativeBackend {
         v: &[f64],
     ) -> Vec<f64> {
         hadamard_pair_matvec_native(a, b, v)
+    }
+
+    fn hadamard_pair_matmat(
+        &self,
+        a: &LanczosFactor,
+        b: &LanczosFactor,
+        m: &Matrix,
+    ) -> Matrix {
+        hadamard_pair_matmat_native(a, b, m)
     }
 
     fn name(&self) -> &'static str {
@@ -152,6 +195,109 @@ pub fn hadamard_pair_matvec_native(
     out
 }
 
+/// Fused native Lemma-3.1 contraction for an n×t block of right-hand
+/// sides: `(Q₁T₁Q₁ᵀ ∘ Q₂T₂Q₂ᵀ) M` in O(n·r₁·r₂·t) — flop-identical to t
+/// calls of [`hadamard_pair_matvec_native`] but with `Q₁`, `Q₂` streamed
+/// through cache **once per pass for the whole block** instead of once per
+/// column, which is where the batched-engine wall-clock win comes from
+/// (the contraction is memory-bound at SKIP's typical r).
+///
+/// Three passes, mirroring the single-RHS path:
+/// 1. `S⁽ʲ⁾ = Q₁ᵀ D_{m_j} Q₂` for all j in one row sweep (parallel over
+///    row chunks with per-thread partials, reduced in chunk order).
+/// 2. `M⁽ʲ⁾ = T₁ S⁽ʲ⁾ T₂ᵀ` — t tiny gemms, parallel over j.
+/// 3. `out[i, j] = q₁ᵢ M⁽ʲ⁾ q₂ᵢᵀ` in one row sweep (row-parallel).
+pub fn hadamard_pair_matmat_native(
+    a: &LanczosFactor,
+    b: &LanczosFactor,
+    m: &Matrix,
+) -> Matrix {
+    let n = a.dim();
+    assert_eq!(b.dim(), n);
+    assert_eq!(m.rows, n);
+    let t = m.cols;
+    let (r1, r2) = (a.rank(), b.rank());
+    let mut out = Matrix::zeros(n, t);
+    if t == 0 || n == 0 {
+        return out;
+    }
+    // --- Pass 1: all t S-matrices in one sweep over the n rows.
+    let block = r1 * r2;
+    // Chunk count derives from n alone (NOT the core count): the partials
+    // are reduced in chunk order, so the summation grouping — and hence
+    // the bitwise result — is machine-independent. par_map spreads the
+    // fixed chunks over however many threads exist.
+    let chunks = n.div_ceil(1024);
+    let chunk_rows = n.div_ceil(chunks);
+    let partials = par_map_range(chunks, 2, |c| {
+        let lo = c * chunk_rows;
+        let hi = ((c + 1) * chunk_rows).min(n);
+        let mut s = vec![0.0; t * block];
+        for i in lo..hi {
+            let vrow = m.row(i);
+            let q1i = a.q.row(i);
+            let q2i = b.q.row(i);
+            for (j, &vj) in vrow.iter().enumerate() {
+                if vj == 0.0 {
+                    continue;
+                }
+                let sj = &mut s[j * block..(j + 1) * block];
+                for (p, &q1v) in q1i.iter().enumerate() {
+                    let c0 = vj * q1v;
+                    let srow = &mut sj[p * r2..(p + 1) * r2];
+                    for (sv, &q2v) in srow.iter_mut().zip(q2i) {
+                        *sv += c0 * q2v;
+                    }
+                }
+            }
+        }
+        s
+    });
+    let mut s_all = vec![0.0; t * block];
+    for part in partials {
+        for (acc, x) in s_all.iter_mut().zip(part) {
+            *acc += x;
+        }
+    }
+    // --- Pass 2: M⁽ʲ⁾ = T₁ S⁽ʲ⁾ T₂ᵀ, parallel across the t columns only
+    // when the tiny gemms are worth a thread spawn (~2r₁r₂(r₁+r₂) flops
+    // each; below the threshold the serial loop wins).
+    let gemm_flops = r1 * r2 * (r1 + r2);
+    let min_cols = ((1usize << 16) / gemm_flops.max(1)).max(2);
+    let ms: Vec<Matrix> = par_map_range(t, min_cols, |j| {
+        let sj = Matrix::from_vec(r1, r2, s_all[j * block..(j + 1) * block].to_vec());
+        a.t.matmul(&sj.matmul_t(&b.t))
+    });
+    // --- Pass 3: row-wise bilinear diagonal for all t columns at once.
+    let min_rows = ((1usize << 16) / (t * block).max(1)).max(8);
+    par_row_chunks(&mut out.data, t, min_rows, |first_row, chunk| {
+        let mut w = vec![0.0; r2];
+        for (r, o_row) in chunk.chunks_mut(t).enumerate() {
+            let i = first_row + r;
+            let q1i = a.q.row(i);
+            let q2i = b.q.row(i);
+            for (o, mj) in o_row.iter_mut().zip(&ms) {
+                w.iter_mut().for_each(|x| *x = 0.0);
+                for (p, &q1v) in q1i.iter().enumerate() {
+                    if q1v == 0.0 {
+                        continue;
+                    }
+                    let mrow = &mj.data[p * r2..(p + 1) * r2];
+                    for (wv, &mv) in w.iter_mut().zip(mrow) {
+                        *wv += q1v * mv;
+                    }
+                }
+                let mut acc = 0.0;
+                for (&wv, &q2v) in w.iter().zip(q2i) {
+                    acc += wv * q2v;
+                }
+                *o = acc;
+            }
+        }
+    });
+    out
+}
+
 /// A pair of factors exposed as the Hadamard-product operator
 /// `A ∘ B` — the root node of SKIP's merge tree.
 pub struct HadamardPairOp<'a> {
@@ -167,6 +313,11 @@ impl<'a> LinearOp for HadamardPairOp<'a> {
 
     fn matvec(&self, v: &[f64]) -> Vec<f64> {
         self.backend.hadamard_pair_matvec(self.a, self.b, v)
+    }
+
+    /// Fast path: the backend's fused block contraction.
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        self.backend.hadamard_pair_matmat(self.a, self.b, m)
     }
 }
 
@@ -270,6 +421,60 @@ mod tests {
         let got = hadamard_pair_matvec_native(&a, &b, &v);
         let want = a.to_dense().hadamard(&b.to_dense()).matvec(&v);
         assert!(rel_err(&got, &want) < 1e-10, "err {}", rel_err(&got, &want));
+    }
+
+    #[test]
+    fn block_contraction_matches_per_column() {
+        let a = random_factor(50, 6, 20);
+        let b = random_factor(50, 4, 21);
+        let mut rng = Rng::new(22);
+        for t in [1usize, 3, 8] {
+            let m = Matrix::from_fn(50, t, |_, _| rng.normal());
+            let got = hadamard_pair_matmat_native(&a, &b, &m);
+            for j in 0..t {
+                let want = hadamard_pair_matvec_native(&a, &b, &m.col(j));
+                let gcol = got.col(j);
+                for (g, w) in gcol.iter().zip(&want) {
+                    assert!((g - w).abs() < 1e-10, "t={t} col {j}: {g} vs {w}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn factor_matmat_matches_dense() {
+        let f = random_factor(35, 5, 23);
+        let mut rng = Rng::new(24);
+        let m = Matrix::from_fn(35, 4, |_, _| rng.normal());
+        let got = f.matmat(&m);
+        let want = f.to_dense().matmul(&m);
+        assert!(got.max_abs_diff(&want) < 1e-10);
+    }
+
+    #[test]
+    fn backend_default_matmat_agrees_with_native_override() {
+        let a = random_factor(30, 3, 25);
+        let b = random_factor(30, 5, 26);
+        let mut rng = Rng::new(27);
+        let m = Matrix::from_fn(30, 6, |_, _| rng.normal());
+        // Default (column loop over matvec) vs the fused override.
+        struct ColumnLoop;
+        impl ContractionBackend for ColumnLoop {
+            fn hadamard_pair_matvec(
+                &self,
+                a: &LanczosFactor,
+                b: &LanczosFactor,
+                v: &[f64],
+            ) -> Vec<f64> {
+                hadamard_pair_matvec_native(a, b, v)
+            }
+            fn name(&self) -> &'static str {
+                "column-loop"
+            }
+        }
+        let serial = ColumnLoop.hadamard_pair_matmat(&a, &b, &m);
+        let fused = NativeBackend.hadamard_pair_matmat(&a, &b, &m);
+        assert!(serial.max_abs_diff(&fused) < 1e-10);
     }
 
     #[test]

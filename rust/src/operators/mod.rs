@@ -23,9 +23,33 @@ pub use task::TaskOp;
 
 use crate::linalg::Matrix;
 
-/// A square linear operator exposing matrix-vector multiplication.
+/// A square linear operator exposing matrix-vector and matrix-matrix
+/// multiplication.
 ///
-/// `μ(K)` in the paper's notation is the cost of one `matvec`.
+/// `μ(K)` in the paper's notation is the cost of one [`matvec`]
+/// (Theorem 3.3 counts everything in these units). The batched engine —
+/// [`crate::solvers::block_cg_solve`], [`crate::solvers::lanczos_batch`],
+/// SLQ probes — drives operators exclusively through [`matmat`], so every
+/// structured operator overrides it with a fast path that carries the
+/// whole n×t block through its structure in one pass instead of t
+/// independent traversals.
+///
+/// [`matvec`]: LinearOp::matvec
+/// [`matmat`]: LinearOp::matmat
+///
+/// ```
+/// use skip_gp::linalg::Matrix;
+/// use skip_gp::operators::{DenseOp, LinearOp};
+///
+/// let a = DenseOp(Matrix::from_vec(2, 2, vec![2.0, 0.0, 0.0, 3.0]));
+/// assert_eq!(a.dim(), 2);
+/// assert_eq!(a.matvec(&[1.0, 1.0]), vec![2.0, 3.0]);
+///
+/// // One matmat call multiplies a whole block of right-hand sides.
+/// let block = Matrix::from_vec(2, 3, vec![1.0, 0.0, 2.0, 0.0, 1.0, -1.0]);
+/// let out = a.matmat(&block);
+/// assert_eq!(out.data, vec![2.0, 0.0, 4.0, 0.0, 3.0, -3.0]);
+/// ```
 pub trait LinearOp: Send + Sync {
     /// Operator dimension n (operators here are square n×n).
     fn dim(&self) -> usize;
@@ -33,14 +57,13 @@ pub trait LinearOp: Send + Sync {
     /// Compute `K v`.
     fn matvec(&self, v: &[f64]) -> Vec<f64>;
 
-    /// Compute `K M` column-by-column (override when a faster path exists).
+    /// Compute `K M` for an n×t block `M`.
+    ///
+    /// The default falls back to column-by-column [`LinearOp::matvec`];
+    /// structured operators override it (see [`matmat_via_matvec`] for the
+    /// reference semantics every override must match).
     fn matmat(&self, m: &Matrix) -> Matrix {
-        assert_eq!(m.rows, self.dim());
-        let mut out = Matrix::zeros(self.dim(), m.cols);
-        for j in 0..m.cols {
-            out.set_col(j, &self.matvec(&m.col(j)));
-        }
-        out
+        matmat_via_matvec(self, m)
     }
 
     /// Materialize densely (tests / small problems only).
@@ -57,6 +80,18 @@ pub trait LinearOp: Send + Sync {
     }
 }
 
+/// Reference `K M`: the serial column-by-column loop every `matmat` fast
+/// path must reproduce. Public so property tests and benches can compare
+/// overridden fast paths against the exact semantics they promise.
+pub fn matmat_via_matvec<A: LinearOp + ?Sized>(a: &A, m: &Matrix) -> Matrix {
+    assert_eq!(m.rows, a.dim());
+    let mut out = Matrix::zeros(a.dim(), m.cols);
+    for j in 0..m.cols {
+        out.set_col(j, &a.matvec(&m.col(j)));
+    }
+    out
+}
+
 /// Dense matrix as an operator.
 pub struct DenseOp(pub Matrix);
 
@@ -68,6 +103,12 @@ impl LinearOp for DenseOp {
 
     fn matvec(&self, v: &[f64]) -> Vec<f64> {
         self.0.matvec(v)
+    }
+
+    /// Fast path: one (row-parallel) gemm instead of t gemvs.
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        assert_eq!(m.rows, self.dim());
+        self.0.matmul(m)
     }
 
     fn to_dense(&self) -> Matrix {
@@ -86,6 +127,18 @@ impl LinearOp for DiagOp {
     fn matvec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.0.len());
         self.0.iter().zip(v).map(|(d, x)| d * x).collect()
+    }
+
+    /// Fast path: scale whole rows (contiguous in row-major layout).
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        assert_eq!(m.rows, self.0.len());
+        let mut out = m.clone();
+        for (i, &d) in self.0.iter().enumerate() {
+            for v in out.row_mut(i) {
+                *v *= d;
+            }
+        }
+        out
     }
 }
 
@@ -113,6 +166,15 @@ impl<'a> LinearOp for ShiftedOp<'a> {
         }
         out
     }
+
+    /// Fast path: one inner `matmat` plus an elementwise block axpy.
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        let mut out = self.inner.matmat(m);
+        for (o, &x) in out.data.iter_mut().zip(&m.data) {
+            *o += self.shift * x;
+        }
+        out
+    }
 }
 
 /// `c · A`.
@@ -129,6 +191,15 @@ impl<'a> LinearOp for ScaledOp<'a> {
     fn matvec(&self, v: &[f64]) -> Vec<f64> {
         let mut out = self.inner.matvec(v);
         for o in out.iter_mut() {
+            *o *= self.scale;
+        }
+        out
+    }
+
+    /// Fast path: one inner `matmat` plus an elementwise block scale.
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        let mut out = self.inner.matmat(m);
+        for o in out.data.iter_mut() {
             *o *= self.scale;
         }
         out
@@ -155,6 +226,17 @@ impl LinearOp for AffineOp {
         }
         out
     }
+
+    /// Fast path: the covariance solve `K̂ X = B` of the batched engine
+    /// funnels through here — one inner `matmat` for the whole block,
+    /// then a fused scale-and-shift over the contiguous buffer.
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        let mut out = self.inner.matmat(m);
+        for (o, &x) in out.data.iter_mut().zip(&m.data) {
+            *o = self.scale * *o + self.shift * x;
+        }
+        out
+    }
 }
 
 /// `A + B` (owned boxed summands; used by the cluster-MTGP kernel).
@@ -173,6 +255,25 @@ impl LinearOp for SumOp {
             debug_assert_eq!(t.dim(), v.len());
             let tv = t.matvec(v);
             for (o, x) in out.iter_mut().zip(tv) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    /// Fast path: one block product per summand, accumulated in term
+    /// order. The terms run *sequentially* on purpose: each term's own
+    /// `matmat` (fused contraction, row-chunked gemm, paired FFTs)
+    /// already fans out across the machine, and nesting another per-term
+    /// thread layer on top would oversubscribe cores in the block-CG hot
+    /// loop.
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        assert_eq!(m.rows, self.dim());
+        let mut out = Matrix::zeros(m.rows, m.cols);
+        for t in &self.terms {
+            debug_assert_eq!(t.dim(), m.rows);
+            let p = t.matmat(m);
+            for (o, x) in out.data.iter_mut().zip(p.data) {
                 *o += x;
             }
         }
@@ -227,5 +328,51 @@ mod tests {
         let got = op.matmat(&b);
         let expect = m.matmul(&b);
         assert!(got.max_abs_diff(&expect) < 1e-14);
+    }
+
+    #[test]
+    fn wrapper_matmat_fast_paths_match_reference() {
+        let inner = DenseOp(Matrix::from_vec(3, 3, vec![1., 2., 0., -1., 3., 1., 0.5, 0., 2.]));
+        let block = Matrix::from_vec(3, 2, vec![1., -2., 0., 1., 3., 0.5]);
+        let shifted = ShiftedOp::new(&inner, 0.7);
+        assert!(shifted
+            .matmat(&block)
+            .max_abs_diff(&matmat_via_matvec(&shifted, &block))
+            < 1e-14);
+        let scaled = ScaledOp { inner: &inner, scale: -2.0 };
+        assert!(scaled
+            .matmat(&block)
+            .max_abs_diff(&matmat_via_matvec(&scaled, &block))
+            < 1e-14);
+        let affine = AffineOp {
+            inner: Box::new(DenseOp(Matrix::eye(3))),
+            scale: 1.5,
+            shift: 0.25,
+        };
+        assert!(affine
+            .matmat(&block)
+            .max_abs_diff(&matmat_via_matvec(&affine, &block))
+            < 1e-14);
+        let diag = DiagOp(vec![1.0, -2.0, 0.5]);
+        assert!(diag
+            .matmat(&block)
+            .max_abs_diff(&matmat_via_matvec(&diag, &block))
+            < 1e-14);
+    }
+
+    #[test]
+    fn sum_op_matmat_parallel_matches_reference() {
+        let sum = SumOp {
+            terms: vec![
+                Box::new(DenseOp(Matrix::eye(4))),
+                Box::new(DiagOp(vec![1.0, 2.0, 3.0, 4.0])),
+                Box::new(DenseOp(Matrix::from_fn(4, 4, |i, j| (i + j) as f64))),
+            ],
+        };
+        let block = Matrix::from_fn(4, 5, |i, j| (i as f64 - j as f64) * 0.5);
+        assert!(sum
+            .matmat(&block)
+            .max_abs_diff(&matmat_via_matvec(&sum, &block))
+            < 1e-12);
     }
 }

@@ -62,6 +62,17 @@ impl LinearOp for SkiOp {
         let t = self.kuu.matvec(&t);
         self.w.matvec(&t)
     }
+
+    /// Fast path: the whole n×t block rides through the structure in one
+    /// pass — `Wᵀ M` (streaming scatter, all columns per touch), a
+    /// pair-batched Toeplitz `matmat` (2 columns per complex FFT, parallel
+    /// across pairs), then `W ·`. O(n·t + t·m log m) with roughly half the
+    /// FFTs and 1/t the stencil-index traffic of the serial column loop.
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        let t = self.w.t_matmat(m);
+        let t = self.kuu.matmat(&t);
+        self.w.matmat(&t)
+    }
 }
 
 #[cfg(test)]

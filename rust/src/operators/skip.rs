@@ -10,7 +10,9 @@
 
 use super::lowrank::{ContractionBackend, HadamardPairOp, LanczosFactor, NativeBackend};
 use super::LinearOp;
+use crate::linalg::Matrix;
 use crate::solvers::lanczos::lanczos;
+use crate::util::parallel::par_map;
 use crate::util::Rng;
 use std::sync::Arc;
 
@@ -26,14 +28,38 @@ pub enum SkipComponent<'a> {
     Factor(LanczosFactor),
 }
 
-/// Diagnostics from building the merge tree.
+/// Diagnostics from building the merge tree, phrased in the cost model of
+/// Theorem 3.3: build cost `O(d·r·μ(K⁽ⁱ⁾) + r³·n·log d)`.
+///
+/// - The **first term** is the leaf work: each of the d component
+///   operators pays one component MVM (cost `μ(K⁽ⁱ⁾)`) per Lanczos
+///   iteration. [`leaf_mvms`](SkipBuildStats::leaf_mvms) is that count
+///   *as actually incurred* — the sum of achieved leaf ranks, which
+///   equals `d·r` exactly when no leaf breaks down early and is smaller
+///   when a component's Krylov space exhausts below r (common for smooth
+///   kernels; it is why SKIP beats the worst-case bound in practice).
+/// - The **second term** is the merge work: `⌈log₂ d⌉` tree levels, each
+///   merge running r Lanczos iterations whose MVMs are Lemma-3.1
+///   contractions of cost `O(r²n)` — hence `r·r²·n` per merge.
+///   [`merge_ranks`](SkipBuildStats::merge_ranks) records the rank each
+///   internal merge actually reached (tree order, level by level). These
+///   are capped at the requested r even though the exact Hadamard product
+///   has rank up to `rank(A)·rank(B)` (the §7 caveat); comparing
+///   `merge_ranks` against r shows whether the cap — rather than spectral
+///   decay — is what truncated each node.
+///
+/// Surfaced by the `rank_ablation` example to make the r-vs-accuracy
+/// trade measurable next to these costs.
 #[derive(Clone, Debug, Default)]
 pub struct SkipBuildStats {
-    /// Achieved rank of each leaf decomposition.
+    /// Achieved rank of each leaf decomposition, in component order.
+    /// (Exact `Factor` components report their factor's rank and cost no
+    /// MVMs.)
     pub leaf_ranks: Vec<usize>,
-    /// Achieved rank of each internal merge.
+    /// Achieved rank of each internal merge, in merge order.
     pub merge_ranks: Vec<usize>,
-    /// Total component-operator MVMs spent on leaf decompositions.
+    /// Total component-operator MVMs spent on leaf decompositions — the
+    /// realized `d·r` of Theorem 3.3's first term.
     pub leaf_mvms: usize,
 }
 
@@ -77,38 +103,62 @@ impl SkipOp {
             assert_eq!(cn, n, "SKIP components must share dimension");
         }
         let mut stats = SkipBuildStats::default();
-        // Decompose leaves.
-        let mut factors: Vec<LanczosFactor> = components
-            .into_iter()
-            .map(|c| match c {
+        // Decompose leaves. Probes are drawn up front in component order —
+        // the same stream the sequential build consumed — so the leaf
+        // Lanczos runs can fan out across threads (they touch disjoint
+        // operators) without changing any result. Exact `Factor` leaves do
+        // no Lanczos work: they are moved straight into their slot (no
+        // copy) and skip the parallel stage entirely.
+        let mut slots: Vec<Option<LanczosFactor>> = Vec::with_capacity(components.len());
+        let mut op_jobs: Vec<(usize, &dyn LinearOp, Vec<f64>)> = Vec::new();
+        for c in components {
+            match c {
                 SkipComponent::Op(op) => {
-                    let probe = rng.normal_vec(n);
-                    let res = lanczos(op, &probe, rank, 1e-10);
-                    stats.leaf_mvms += res.rank();
-                    stats.leaf_ranks.push(res.rank());
-                    res.into_factor()
+                    op_jobs.push((slots.len(), op, rng.normal_vec(n)));
+                    slots.push(None);
                 }
-                SkipComponent::Factor(f) => {
-                    stats.leaf_ranks.push(f.rank());
-                    f
-                }
-            })
+                SkipComponent::Factor(f) => slots.push(Some(f)),
+            }
+        }
+        let decomposed = par_map(&op_jobs, 2, |(_, op, probe)| {
+            let res = lanczos(*op, probe, rank, 1e-10);
+            let mvms = res.rank();
+            (res.into_factor(), mvms)
+        });
+        for ((idx, _, _), (f, mvms)) in op_jobs.iter().zip(decomposed) {
+            stats.leaf_mvms += mvms;
+            slots[*idx] = Some(f);
+        }
+        let mut factors: Vec<LanczosFactor> = slots
+            .into_iter()
+            .map(|s| s.expect("every leaf slot filled"))
             .collect();
+        for f in &factors {
+            stats.leaf_ranks.push(f.rank());
+        }
         // Pairwise merges until two (or one) factors remain. Merging
-        // adjacent pairs level-by-level realizes Eqs. (13)–(14).
+        // adjacent pairs level-by-level realizes Eqs. (13)–(14); merges
+        // within one level are independent, so each level fans out in
+        // parallel (probes pre-drawn in pair order, stream-identical to
+        // the sequential build).
         while factors.len() > 2 {
-            let mut next = Vec::with_capacity(factors.len().div_ceil(2));
+            let mut pairs = Vec::with_capacity(factors.len() / 2);
+            let mut carry = None;
             let mut iter = factors.into_iter();
             while let Some(a) = iter.next() {
                 match iter.next() {
-                    Some(b) => {
-                        let merged =
-                            merge_pair(&a, &b, rank, backend.as_ref(), rng);
-                        stats.merge_ranks.push(merged.rank());
-                        next.push(merged);
-                    }
-                    None => next.push(a), // odd one out rides up a level
+                    Some(b) => pairs.push((a, b, rng.normal_vec(n))),
+                    None => carry = Some(a), // odd one out rides up a level
                 }
+            }
+            let mut next = par_map(&pairs, 2, |(a, b, probe)| {
+                merge_pair(a, b, probe, rank, backend.as_ref())
+            });
+            for f in &next {
+                stats.merge_ranks.push(f.rank());
+            }
+            if let Some(c) = carry {
+                next.push(c);
             }
             factors = next;
         }
@@ -141,13 +191,12 @@ impl SkipOp {
 fn merge_pair(
     a: &LanczosFactor,
     b: &LanczosFactor,
+    probe: &[f64],
     rank: usize,
     backend: &dyn ContractionBackend,
-    rng: &mut Rng,
 ) -> LanczosFactor {
     let op = HadamardPairOp { a, b, backend };
-    let probe = rng.normal_vec(a.dim());
-    lanczos(&op, &probe, rank, 1e-10).into_factor()
+    lanczos(&op, probe, rank, 1e-10).into_factor()
 }
 
 impl LinearOp for SkipOp {
@@ -159,6 +208,18 @@ impl LinearOp for SkipOp {
         match &self.root {
             Root::Single(f) => f.matvec(v),
             Root::Pair(a, b) => self.backend.hadamard_pair_matvec(a, b, v),
+        }
+    }
+
+    /// Fast path of the batched MVM engine: the cached root decomposition
+    /// carries the whole n×t block in one pass — a three-gemm factor
+    /// product for d = 1, the backend's fused Lemma-3.1 block contraction
+    /// (`hadamard_pair_matmat`) for d ≥ 2. Corollary 3.4 amortization now
+    /// applies per *block*, not per vector.
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        match &self.root {
+            Root::Single(f) => f.matmat(m),
+            Root::Pair(a, b) => self.backend.hadamard_pair_matmat(a, b, m),
         }
     }
 }

@@ -68,6 +68,41 @@ impl LinearOp for TaskOp {
         // out = V w: gather. O(n)
         self.task_of.iter().map(|&t| w[t]).collect()
     }
+
+    /// Fast path: scatter/gather move whole rows of the block (contiguous
+    /// length-t slices), and the small task-space product becomes two
+    /// s×q-by-s×t gemms — O(n·t + s·q·t) for the entire block, one pass
+    /// over the task indices instead of t.
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        let n = self.task_of.len();
+        assert_eq!(m.rows, n);
+        let t = m.cols;
+        let s = self.kernel.num_tasks();
+        // U = Vᵀ M  (s×t): row scatter-sum per task.
+        let mut u = Matrix::zeros(s, t);
+        for (i, &task) in self.task_of.iter().enumerate() {
+            let src = m.row(i);
+            let dst = u.row_mut(task);
+            for (d, &x) in dst.iter_mut().zip(src) {
+                *d += x;
+            }
+        }
+        // W = (B Bᵀ + D) U  (s×t).
+        let bt_u = self.kernel.b.t_matmul(&u); // q×t
+        let mut w = self.kernel.b.matmul(&bt_u); // s×t
+        for (task, wrow) in w.data.chunks_mut(t.max(1)).enumerate().take(s) {
+            let d = self.kernel.diag[task];
+            for (wv, &uv) in wrow.iter_mut().zip(u.row(task)) {
+                *wv += d * uv;
+            }
+        }
+        // out = V W: row gather.
+        let mut out = Matrix::zeros(n, t);
+        for (i, &task) in self.task_of.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(w.row(task));
+        }
+        out
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,154 @@
+//! Native stub for the PJRT executor (compiled when the `xla` feature is
+//! off — the offline build environment has no XLA binding crate).
+//!
+//! The API mirrors [`executor`](super) exactly so every consumer (CLI,
+//! benches, integration tests, examples) compiles unchanged:
+//! [`Runtime::load`] / [`PjrtBackend::load`] report [`Error::Xla`], and a
+//! `PjrtBackend` that somehow exists routes every contraction to the
+//! native Lemma-3.1 implementation — including the fused multi-RHS block
+//! path, so batched solves lose nothing when artifacts are absent.
+
+use crate::error::{Error, Result};
+use crate::linalg::Matrix;
+use crate::operators::lowrank::{
+    hadamard_pair_matmat_native, hadamard_pair_matvec_native, ContractionBackend,
+    LanczosFactor,
+};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+fn unavailable() -> Error {
+    Error::Xla(
+        "built without the `xla` feature: PJRT artifacts cannot be executed \
+         (vendor the xla binding crate and rebuild with --features xla)"
+            .into(),
+    )
+}
+
+/// Stub runtime: loading always fails with [`Error::Xla`].
+pub struct Runtime {
+    /// Executions served by PJRT (always 0 in the stub).
+    pub pjrt_calls: AtomicUsize,
+}
+
+impl Runtime {
+    /// Always fails: the `xla` feature is not compiled in.
+    pub fn load(_dir: &Path) -> Result<Runtime> {
+        Err(unavailable())
+    }
+
+    /// Number of compiled hadamard artifacts (always 0 in the stub).
+    pub fn num_hadamard(&self) -> usize {
+        0
+    }
+
+    /// No artifact ever fits: callers fall back to native.
+    pub fn hadamard_pair_matvec(
+        &self,
+        _a: &LanczosFactor,
+        _b: &LanczosFactor,
+        _v: &[f64],
+    ) -> Option<Result<Vec<f64>>> {
+        None
+    }
+
+    /// No artifact ever fits: callers fall back to native.
+    pub fn rbf_mean(
+        &self,
+        _xtest: &Matrix,
+        _xtrain: &Matrix,
+        _alpha: &[f64],
+        _ell: f64,
+        _sf2: f64,
+    ) -> Option<Result<Vec<f64>>> {
+        None
+    }
+}
+
+/// Stub backend with the same surface as the real `PjrtBackend`.
+pub struct PjrtBackend {
+    /// Count of native-fallback calls (every call, in the stub).
+    pub native_calls: AtomicUsize,
+}
+
+impl PjrtBackend {
+    pub fn new(_runtime: Runtime) -> Self {
+        PjrtBackend { native_calls: AtomicUsize::new(0) }
+    }
+
+    /// Always fails: the `xla` feature is not compiled in.
+    pub fn load(_dir: &Path) -> Result<Self> {
+        Err(unavailable())
+    }
+
+    /// (pjrt_calls, native_calls) so far — pjrt is always 0 in the stub.
+    pub fn call_counts(&self) -> (usize, usize) {
+        (0, self.native_calls.load(Ordering::Relaxed))
+    }
+
+    /// No artifacts in the stub: always `None` (caller uses native eval).
+    pub fn rbf_mean(
+        &self,
+        _xtest: &Matrix,
+        _xtrain: &Matrix,
+        _alpha: &[f64],
+        _ell: f64,
+        _sf2: f64,
+    ) -> Option<Result<Vec<f64>>> {
+        None
+    }
+}
+
+impl ContractionBackend for PjrtBackend {
+    fn hadamard_pair_matvec(
+        &self,
+        a: &LanczosFactor,
+        b: &LanczosFactor,
+        v: &[f64],
+    ) -> Vec<f64> {
+        self.native_calls.fetch_add(1, Ordering::Relaxed);
+        hadamard_pair_matvec_native(a, b, v)
+    }
+
+    fn hadamard_pair_matmat(
+        &self,
+        a: &LanczosFactor,
+        b: &LanczosFactor,
+        m: &Matrix,
+    ) -> Matrix {
+        self.native_calls.fetch_add(1, Ordering::Relaxed);
+        hadamard_pair_matmat_native(a, b, m)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-stub"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{rel_err, Rng};
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = PjrtBackend::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("xla"), "got: {err}");
+    }
+
+    #[test]
+    fn stub_backend_contracts_natively() {
+        let mut rng = Rng::new(1);
+        let n = 40;
+        let q = Matrix::from_fn(n, 3, |_, _| rng.normal());
+        let mut t = Matrix::from_fn(3, 3, |_, _| rng.normal());
+        t.symmetrize();
+        let f = LanczosFactor { q, t };
+        let backend = PjrtBackend { native_calls: AtomicUsize::new(0) };
+        let v = rng.normal_vec(n);
+        let got = backend.hadamard_pair_matvec(&f, &f, &v);
+        let want = hadamard_pair_matvec_native(&f, &f, &v);
+        assert!(rel_err(&got, &want) < 1e-15);
+        assert_eq!(backend.call_counts(), (0, 1));
+    }
+}

@@ -6,6 +6,14 @@
 //! abstraction. Python never runs at request time.
 
 pub mod artifact;
+
+/// Real PJRT executor — needs the vendored `xla` binding crate.
+#[cfg(feature = "xla")]
+pub mod executor;
+
+/// Native stub with the same API (the offline default; see Cargo.toml).
+#[cfg(not(feature = "xla"))]
+#[path = "executor_stub.rs"]
 pub mod executor;
 
 pub use artifact::{load_manifest, ArtifactEntry};

@@ -1,0 +1,262 @@
+//! Block conjugate gradients: solve `A X = B` for t right-hand sides with
+//! one operator traversal per iteration.
+//!
+//! The paper's inference loop needs many simultaneous solves against the
+//! same `K̂` — the predictive solve `α = K̂⁻¹y` next to the Hutchinson
+//! trace probes `K̂⁻¹zᵢ` of the gradient (§2.2), or a batch of test-time
+//! solves. Serial CG pays the operator once *per RHS per iteration*; for
+//! SKIP that is t separate O(r²n) Lemma-3.1 contractions whose memory
+//! traffic dominates. This solver runs the t standard CG recurrences in
+//! lockstep and fuses their MVMs into a single [`LinearOp::matmat`] call,
+//! so the structured operator amortizes its traversal across the block
+//! (fused contraction, paired FFTs, shared stencil decode — see each
+//! operator's `matmat`).
+//!
+//! Columns are tracked independently: each has its own α/β scalars,
+//! residual, and iteration count, and a column that converges (or hits a
+//! non-PD breakdown) is frozen and dropped from subsequent block MVMs.
+//! With an exact `matmat` (one that matches column-wise `matvec`, which
+//! every fast path in this crate does to rounding), the per-column
+//! iterates are identical to t independent [`cg_solve`] runs — verified
+//! by the `matmat_props` property tests to 1e-8 and tighter.
+//!
+//! ```
+//! use skip_gp::linalg::Matrix;
+//! use skip_gp::operators::DenseOp;
+//! use skip_gp::solvers::{block_cg_solve, CgConfig};
+//!
+//! // SPD system with two right-hand sides.
+//! let a = DenseOp(Matrix::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]));
+//! let b = Matrix::from_vec(2, 2, vec![1.0, 2.0, 0.0, 1.0]);
+//! let sol = block_cg_solve(&a, &b, CgConfig::default());
+//! assert!(sol.columns.iter().all(|c| c.converged));
+//! // A·X recovers B.
+//! let back = Matrix::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]).matmul(&sol.x);
+//! assert!(back.max_abs_diff(&b) < 1e-8);
+//! ```
+//!
+//! [`cg_solve`]: super::cg::cg_solve
+
+use super::cg::CgConfig;
+use crate::linalg::{axpy, dot, norm2, Matrix};
+use crate::operators::LinearOp;
+
+/// Per-column convergence diagnostics.
+#[derive(Clone, Debug)]
+pub struct BlockCgColumn {
+    /// Iterations this column ran before converging or freezing.
+    pub iters: usize,
+    /// Final relative residual ‖r‖/‖b‖.
+    pub rel_residual: f64,
+    pub converged: bool,
+}
+
+/// Result of a block-CG solve.
+#[derive(Clone, Debug)]
+pub struct BlockCgSolution {
+    /// n×t solution block, column j solving `A x_j = b_j`.
+    pub x: Matrix,
+    /// Per-column diagnostics, aligned with the columns of `x`.
+    pub columns: Vec<BlockCgColumn>,
+    /// Number of block MVMs ([`LinearOp::matmat`] calls) performed — the
+    /// batched engine's cost unit; a serial loop would have paid
+    /// `Σ_j iters_j` single MVMs instead.
+    pub matmats: usize,
+}
+
+impl BlockCgSolution {
+    /// True iff every column converged.
+    pub fn all_converged(&self) -> bool {
+        self.columns.iter().all(|c| c.converged)
+    }
+
+    /// Worst relative residual across columns.
+    pub fn max_rel_residual(&self) -> f64 {
+        self.columns
+            .iter()
+            .map(|c| c.rel_residual)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Solve `A X = B` by conjugate gradients, all columns of `B` at once.
+///
+/// Runs the standard CG recurrence per column with the block's MVMs fused
+/// into one `matmat` per iteration; converged columns freeze and leave
+/// the block. See the module docs for the equivalence guarantee against
+/// [`cg_solve`](super::cg::cg_solve).
+pub fn block_cg_solve(a: &dyn LinearOp, b: &Matrix, cfg: CgConfig) -> BlockCgSolution {
+    let n = a.dim();
+    assert_eq!(b.rows, n, "block_cg: rhs row count must match operator dim");
+    let t = b.cols;
+    let mut xcols: Vec<Vec<f64>> = vec![vec![0.0; n]; t];
+    let mut r: Vec<Vec<f64>> = (0..t).map(|j| b.col(j)).collect();
+    let mut p = r.clone();
+    let nb: Vec<f64> = r.iter().map(|c| norm2(c)).collect();
+    let mut rs_old: Vec<f64> = r.iter().map(|c| dot(c, c)).collect();
+    let mut columns: Vec<BlockCgColumn> = nb
+        .iter()
+        .map(|&nbj| BlockCgColumn {
+            iters: 0,
+            rel_residual: 0.0,
+            // A zero RHS is solved by x = 0 immediately.
+            converged: nbj == 0.0,
+        })
+        .collect();
+    let mut active: Vec<usize> = (0..t).filter(|&j| nb[j] > 0.0).collect();
+    let mut matmats = 0usize;
+
+    for _ in 0..cfg.max_iters {
+        if active.is_empty() {
+            break;
+        }
+        // One operator traversal for every still-active search direction.
+        let mut pk = Matrix::zeros(n, active.len());
+        for (c, &j) in active.iter().enumerate() {
+            pk.set_col(c, &p[j]);
+        }
+        let ap = a.matmat(&pk);
+        matmats += 1;
+
+        let mut still = Vec::with_capacity(active.len());
+        for (c, &j) in active.iter().enumerate() {
+            let apj = ap.col(c);
+            let col = &mut columns[j];
+            col.iters += 1;
+            let pap = dot(&p[j], &apj);
+            if pap <= 0.0 {
+                // Not PD to working precision — freeze with the current
+                // iterate (mirrors cg_solve's bail-out).
+                col.rel_residual = rs_old[j].sqrt() / nb[j];
+                col.converged = col.rel_residual <= cfg.tol;
+                continue;
+            }
+            let alpha = rs_old[j] / pap;
+            axpy(alpha, &p[j], &mut xcols[j]);
+            axpy(-alpha, &apj, &mut r[j]);
+            let rs_new = dot(&r[j], &r[j]);
+            if rs_new.sqrt() <= cfg.tol * nb[j] {
+                col.rel_residual = rs_new.sqrt() / nb[j];
+                col.converged = true;
+                rs_old[j] = rs_new;
+                continue;
+            }
+            let beta = rs_new / rs_old[j];
+            for (pi, &ri) in p[j].iter_mut().zip(&r[j]) {
+                *pi = ri + beta * *pi;
+            }
+            rs_old[j] = rs_new;
+            still.push(j);
+        }
+        active = still;
+    }
+    // Columns that ran out of iterations: report where they stopped.
+    for &j in &active {
+        columns[j].rel_residual = rs_old[j].sqrt() / nb[j];
+        columns[j].converged = columns[j].rel_residual <= cfg.tol;
+    }
+
+    let mut x = Matrix::zeros(n, t);
+    for (j, xc) in xcols.iter().enumerate() {
+        x.set_col(j, xc);
+    }
+    BlockCgSolution { x, columns, matmats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::DenseOp;
+    use crate::solvers::cg::cg_solve;
+    use crate::util::{rel_err, Rng};
+
+    fn random_spd(n: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+        let mut a = b.matmul_t(&b);
+        a.add_diag(n as f64 * 0.05);
+        a
+    }
+
+    #[test]
+    fn matches_single_rhs_cg_per_column() {
+        let dense = random_spd(40, 1);
+        let op = DenseOp(dense.clone());
+        let mut rng = Rng::new(2);
+        let b = Matrix::from_fn(40, 5, |_, _| rng.normal());
+        let sol = block_cg_solve(&op, &b, CgConfig::default());
+        assert!(sol.all_converged());
+        for j in 0..5 {
+            let single = cg_solve(&op, &b.col(j), CgConfig::default());
+            assert!(single.converged);
+            let err = rel_err(&sol.x.col(j), &single.x);
+            assert!(err < 1e-10, "col {j}: {err}");
+            assert_eq!(sol.columns[j].iters, single.iters, "col {j} iters");
+        }
+    }
+
+    #[test]
+    fn one_matmat_per_joint_iteration() {
+        let dense = random_spd(25, 3);
+        let op = DenseOp(dense.clone());
+        let mut rng = Rng::new(4);
+        let b = Matrix::from_fn(25, 4, |_, _| rng.normal());
+        let sol = block_cg_solve(&op, &b, CgConfig::default());
+        let max_iters = sol.columns.iter().map(|c| c.iters).max().unwrap();
+        assert_eq!(sol.matmats, max_iters);
+        let total_single: usize = sol.columns.iter().map(|c| c.iters).sum();
+        assert!(sol.matmats < total_single, "block must amortize MVMs");
+    }
+
+    #[test]
+    fn zero_columns_converge_immediately() {
+        let op = DenseOp(Matrix::eye(6));
+        let mut b = Matrix::zeros(6, 3);
+        b.set(0, 1, 2.0); // only column 1 nonzero
+        let sol = block_cg_solve(&op, &b, CgConfig::default());
+        assert!(sol.all_converged());
+        assert_eq!(sol.columns[0].iters, 0);
+        assert_eq!(sol.columns[2].iters, 0);
+        assert_eq!(sol.x.col(0), vec![0.0; 6]);
+        assert!((sol.x.get(0, 1) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn heterogeneous_difficulty_tracks_per_column() {
+        // Column 0 of B is an eigen-direction (converges in 1 iteration);
+        // column 1 is generic and needs more.
+        let d = Matrix::diag(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        let op = DenseOp(d);
+        let mut b = Matrix::zeros(5, 2);
+        b.set(2, 0, 1.0);
+        for i in 0..5 {
+            b.set(i, 1, 1.0 + i as f64);
+        }
+        let sol = block_cg_solve(&op, &b, CgConfig::default());
+        assert!(sol.all_converged());
+        assert!(sol.columns[0].iters <= 2);
+        assert!(sol.columns[0].iters < sol.columns[1].iters);
+    }
+
+    #[test]
+    fn respects_max_iters_and_reports_residual() {
+        let dense = random_spd(30, 5);
+        let op = DenseOp(dense);
+        let mut rng = Rng::new(6);
+        let b = Matrix::from_fn(30, 2, |_, _| rng.normal());
+        let sol = block_cg_solve(&op, &b, CgConfig { max_iters: 2, tol: 1e-14 });
+        for c in &sol.columns {
+            assert_eq!(c.iters, 2);
+            assert!(!c.converged);
+            assert!(c.rel_residual > 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_block_is_ok() {
+        let op = DenseOp(Matrix::eye(4));
+        let sol = block_cg_solve(&op, &Matrix::zeros(4, 0), CgConfig::default());
+        assert_eq!(sol.x.cols, 0);
+        assert_eq!(sol.matmats, 0);
+    }
+}

@@ -71,7 +71,10 @@ pub fn cg_solve(a: &dyn LinearOp, b: &[f64], cfg: CgConfig) -> CgSolution {
 }
 
 /// Solve `A X = B` for multiple right-hand sides (columns of `b_cols`),
-/// sequentially. Returns per-column solutions.
+/// sequentially — the *serial reference* the batched engine is measured
+/// against. Production multi-RHS solves should use
+/// [`block_cg_solve`](super::block_cg::block_cg_solve), which fuses the
+/// per-iteration MVMs of all columns into one operator traversal.
 pub fn cg_solve_many(
     a: &dyn LinearOp,
     b_cols: &[Vec<f64>],

@@ -116,6 +116,116 @@ pub fn lanczos(
     LanczosResult { q, alphas, betas }
 }
 
+/// Run Lanczos from every column of `probes` in lockstep, fusing the
+/// per-iteration MVMs of all still-active probes into one
+/// [`LinearOp::matmat`] call — the batched probe path used by SLQ, so p
+/// trace probes share each operator traversal instead of paying p
+/// separate ones.
+///
+/// Per probe the recurrence (normalization, reorthogonalization, early
+/// breakdown at `tol`) is *exactly* the one [`lanczos`] runs: a probe that
+/// breaks down is frozen and dropped from later block MVMs, and with a
+/// `matmat` that matches column-wise `matvec`, each returned
+/// [`LanczosResult`] is identical to the sequential call on that column.
+pub fn lanczos_batch(
+    a: &dyn LinearOp,
+    probes: &Matrix,
+    max_rank: usize,
+    tol: f64,
+) -> Vec<LanczosResult> {
+    let n = a.dim();
+    assert_eq!(probes.rows, n);
+    let t = probes.cols;
+    let max_rank = max_rank.min(n).max(1);
+
+    struct ProbeState {
+        q: Matrix,
+        alphas: Vec<f64>,
+        betas: Vec<f64>,
+        qj: Vec<f64>,
+        q_prev: Vec<f64>,
+        beta_prev: f64,
+        done: bool,
+    }
+
+    let mut states: Vec<ProbeState> = (0..t)
+        .map(|j| {
+            let b = probes.col(j);
+            let nb = norm2(&b);
+            assert!(nb > 0.0, "lanczos_batch: zero probe column {j}");
+            let qj: Vec<f64> = b.iter().map(|&x| x / nb).collect();
+            let mut q = Matrix::zeros(n, max_rank);
+            q.set_col(0, &qj);
+            ProbeState {
+                q,
+                alphas: Vec::with_capacity(max_rank),
+                betas: Vec::with_capacity(max_rank.saturating_sub(1)),
+                qj,
+                q_prev: vec![0.0; n],
+                beta_prev: 0.0,
+                done: false,
+            }
+        })
+        .collect();
+
+    for step in 0..max_rank {
+        let active: Vec<usize> = (0..t).filter(|&j| !states[j].done).collect();
+        if active.is_empty() {
+            break;
+        }
+        // Every active probe has completed exactly `step` iterations, so
+        // one block MVM serves them all.
+        let mut block = Matrix::zeros(n, active.len());
+        for (c, &j) in active.iter().enumerate() {
+            block.set_col(c, &states[j].qj);
+        }
+        let w_block = a.matmat(&block);
+        for (c, &j) in active.iter().enumerate() {
+            let st = &mut states[j];
+            let mut w = w_block.col(c);
+            let alpha = dot(&st.qj, &w);
+            st.alphas.push(alpha);
+            axpy(-alpha, &st.qj, &mut w);
+            if step > 0 {
+                axpy(-st.beta_prev, &st.q_prev, &mut w);
+            }
+            for _ in 0..2 {
+                for k in 0..=step {
+                    let col = st.q.col(k);
+                    let cdot = dot(&col, &w);
+                    axpy(-cdot, &col, &mut w);
+                }
+            }
+            let beta = norm2(&w);
+            if step + 1 == max_rank || beta < tol {
+                st.done = true;
+                continue;
+            }
+            st.betas.push(beta);
+            st.q_prev = std::mem::take(&mut st.qj);
+            st.beta_prev = beta;
+            st.qj = w.iter().map(|&x| x / beta).collect();
+            st.q.set_col(step + 1, &st.qj);
+        }
+    }
+
+    states
+        .into_iter()
+        .map(|st| {
+            let r = st.alphas.len();
+            let mut q = st.q;
+            if r < max_rank {
+                let mut qs = Matrix::zeros(n, r);
+                for k in 0..r {
+                    qs.set_col(k, &q.col(k));
+                }
+                q = qs;
+            }
+            LanczosResult { q, alphas: st.alphas, betas: st.betas }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -192,6 +302,49 @@ mod tests {
         let f = lanczos(&a, &b, 20, 1e-12).into_factor();
         let v = rng.normal_vec(n);
         assert!(rel_err(&f.matvec(&v), &dense.matvec(&v)) < 1e-5);
+    }
+
+    #[test]
+    fn batch_matches_sequential_per_probe() {
+        let a = DenseOp(random_spd(35, 10));
+        let mut rng = Rng::new(11);
+        let mut probes = Matrix::zeros(35, 4);
+        for j in 0..4 {
+            probes.set_col(j, &rng.normal_vec(35));
+        }
+        let batch = lanczos_batch(&a, &probes, 12, 1e-10);
+        assert_eq!(batch.len(), 4);
+        for (j, got) in batch.iter().enumerate() {
+            let want = lanczos(&a, &probes.col(j), 12, 1e-10);
+            assert_eq!(got.rank(), want.rank(), "probe {j} rank");
+            for (ga, wa) in got.alphas.iter().zip(&want.alphas) {
+                assert!((ga - wa).abs() < 1e-12, "probe {j} alphas");
+            }
+            for (gb, wb) in got.betas.iter().zip(&want.betas) {
+                assert!((gb - wb).abs() < 1e-12, "probe {j} betas");
+            }
+            assert!(got.q.max_abs_diff(&want.q) < 1e-12, "probe {j} basis");
+        }
+    }
+
+    #[test]
+    fn batch_handles_early_breakdown_per_probe() {
+        // Rank-2 PSD matrix: every probe breaks down by step ~3 while the
+        // lockstep loop keeps the others consistent.
+        let n = 30;
+        let mut rng = Rng::new(12);
+        let g = Matrix::from_fn(n, 2, |_, _| rng.normal());
+        let a = DenseOp(g.matmul_t(&g));
+        let mut probes = Matrix::zeros(n, 3);
+        for j in 0..3 {
+            probes.set_col(j, &rng.normal_vec(n));
+        }
+        let batch = lanczos_batch(&a, &probes, 10, 1e-10);
+        for (j, res) in batch.iter().enumerate() {
+            let want = lanczos(&a, &probes.col(j), 10, 1e-10);
+            assert_eq!(res.rank(), want.rank(), "probe {j}");
+            assert!(res.rank() <= 4, "probe {j} should break down early");
+        }
     }
 
     #[test]

@@ -1,9 +1,12 @@
-//! Iterative Krylov solvers: CG, Lanczos, stochastic Lanczos quadrature.
+//! Iterative Krylov solvers: CG (single and block multi-RHS), Lanczos
+//! (single and batched-probe), stochastic Lanczos quadrature.
 
+pub mod block_cg;
 pub mod cg;
 pub mod lanczos;
 pub mod slq;
 
+pub use block_cg::{block_cg_solve, BlockCgColumn, BlockCgSolution};
 pub use cg::{cg_solve, cg_solve_many, CgConfig, CgSolution};
-pub use lanczos::{lanczos, LanczosResult};
+pub use lanczos::{lanczos, lanczos_batch, LanczosResult};
 pub use slq::{hutchinson_trace_inv_prod, slq_logdet, slq_trace_fn, SlqConfig};

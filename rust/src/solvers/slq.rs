@@ -13,8 +13,9 @@
 //! its eigenvectors (Gauss quadrature nodes/weights).
 
 use crate::linalg::tridiag::tridiag_eig;
+use crate::linalg::Matrix;
 use crate::operators::LinearOp;
-use crate::solvers::lanczos::lanczos;
+use crate::solvers::lanczos::lanczos_batch;
 use crate::util::Rng;
 
 /// SLQ configuration.
@@ -33,6 +34,13 @@ impl Default for SlqConfig {
 }
 
 /// Estimate `tr(f(A))` for SPD operator `A`.
+///
+/// All probes run through the batched Lanczos path
+/// ([`lanczos_batch`]): the probe block is drawn up front (same RNG
+/// stream as the historical one-probe-at-a-time loop, so estimates are
+/// seed-compatible) and every quadrature iteration costs one fused
+/// [`LinearOp::matmat`] over the still-active probes instead of
+/// `num_probes` independent operator traversals.
 pub fn slq_trace_fn(
     a: &dyn LinearOp,
     f: impl Fn(f64) -> f64,
@@ -40,11 +48,14 @@ pub fn slq_trace_fn(
     rng: &mut Rng,
 ) -> f64 {
     let n = a.dim();
+    let mut probes = Matrix::zeros(n, cfg.num_probes);
+    for j in 0..cfg.num_probes {
+        probes.set_col(j, &rng.rademacher_vec(n));
+    }
+    let results = lanczos_batch(a, &probes, cfg.max_rank, 1e-10);
     let mut acc = 0.0;
-    for _ in 0..cfg.num_probes {
-        let z = rng.rademacher_vec(n);
+    for res in &results {
         let z_norm_sq = n as f64; // ‖z‖² = n for Rademacher probes.
-        let res = lanczos(a, &z, cfg.max_rank, 1e-10);
         let eig = tridiag_eig(&res.alphas, &res.betas)
             .expect("SLQ: tridiagonal eigensolver failed");
         let quad: f64 = eig

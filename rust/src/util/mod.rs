@@ -1,9 +1,11 @@
-//! Utility substrate: PRNG, statistics, timing.
+//! Utility substrate: PRNG, statistics, timing, fork-join parallelism.
 
+pub mod parallel;
 pub mod rng;
 pub mod stats;
 pub mod timer;
 
+pub use parallel::{num_threads, par_map, par_map_range, par_row_chunks};
 pub use rng::Rng;
 pub use stats::{mae, mean, ols_slope, rel_err, rmse, std_dev, Standardizer};
 pub use timer::{bench_median_s, timed, Timer};

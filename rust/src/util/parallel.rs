@@ -1,0 +1,136 @@
+//! Minimal fork-join parallelism on `std::thread::scope`.
+//!
+//! No rayon is available in the offline build environment, so the batched
+//! MVM engine uses these helpers for its embarrassingly parallel loops:
+//! columns of a multi-RHS block, components of a SKIP merge level, terms
+//! of a `SumOp`, row chunks of a dense kernel. They are deliberately tiny:
+//! ordered results, contiguous chunking, and a sequential fallback below
+//! a work threshold so small problems never pay thread-spawn latency.
+
+/// Number of worker threads the helpers will fan out to.
+pub fn num_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parallel map over `items`, preserving order.
+///
+/// Falls back to a plain sequential map when `items.len() < min_parallel`
+/// or only one hardware thread is available.
+pub fn par_map<T, R, F>(items: &[T], min_parallel: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let nt = num_threads().min(items.len().max(1));
+    if nt <= 1 || items.len() < min_parallel.max(2) {
+        return items.iter().map(&f).collect();
+    }
+    let chunk = items.len().div_ceil(nt);
+    let mut out: Vec<Option<R>> = Vec::new();
+    out.resize_with(items.len(), || None);
+    let f = &f;
+    std::thread::scope(|s| {
+        for (in_chunk, out_chunk) in items.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            s.spawn(move || {
+                for (item, slot) in in_chunk.iter().zip(out_chunk.iter_mut()) {
+                    *slot = Some(f(item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|r| r.expect("par_map worker panicked")).collect()
+}
+
+/// Parallel map over an index range `0..len`, preserving order.
+pub fn par_map_range<R, F>(len: usize, min_parallel: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let idx: Vec<usize> = (0..len).collect();
+    par_map(&idx, min_parallel, |&i| f(i))
+}
+
+/// Split `buf` into per-thread contiguous chunks of whole rows
+/// (`row_width` elements each) and run `f(first_row_index, chunk)` on each
+/// chunk in parallel. Used to fill the rows of a row-major output matrix
+/// without any locking: chunks are disjoint `&mut` slices.
+///
+/// `min_rows_per_thread` throttles the fan-out so tiny matrices stay
+/// sequential.
+pub fn par_row_chunks<F>(
+    buf: &mut [f64],
+    row_width: usize,
+    min_rows_per_thread: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f64]) + Sync,
+{
+    assert!(row_width > 0);
+    debug_assert_eq!(buf.len() % row_width, 0);
+    let rows = buf.len() / row_width;
+    let nt = num_threads()
+        .min(rows / min_rows_per_thread.max(1))
+        .max(1);
+    if nt <= 1 {
+        f(0, buf);
+        return;
+    }
+    let rows_per = rows.div_ceil(nt);
+    let f = &f;
+    std::thread::scope(|s| {
+        for (ci, chunk) in buf.chunks_mut(rows_per * row_width).enumerate() {
+            s.spawn(move || f(ci * rows_per, chunk));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let xs: Vec<usize> = (0..100).collect();
+        let got = par_map(&xs, 1, |&x| x * x);
+        let want: Vec<usize> = xs.iter().map(|&x| x * x).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_map_sequential_fallback() {
+        let xs = [1, 2, 3];
+        assert_eq!(par_map(&xs, 100, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn par_map_range_matches_loop() {
+        let got = par_map_range(37, 1, |i| i as f64 * 0.5);
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v, i as f64 * 0.5);
+        }
+    }
+
+    #[test]
+    fn par_row_chunks_covers_all_rows() {
+        let (rows, width) = (64, 5);
+        let mut buf = vec![0.0; rows * width];
+        par_row_chunks(&mut buf, width, 1, |first_row, chunk| {
+            for (r, row) in chunk.chunks_mut(width).enumerate() {
+                for v in row.iter_mut() {
+                    *v = (first_row + r) as f64;
+                }
+            }
+        });
+        for (i, row) in buf.chunks(width).enumerate() {
+            assert!(row.iter().all(|&v| v == i as f64), "row {i}: {row:?}");
+        }
+    }
+
+    #[test]
+    fn par_row_chunks_empty_is_noop() {
+        let mut buf: Vec<f64> = Vec::new();
+        par_row_chunks(&mut buf, 3, 1, |_, _| {});
+    }
+}

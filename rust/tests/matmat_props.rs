@@ -1,0 +1,246 @@
+//! Property tests for the batched multi-RHS MVM engine.
+//!
+//! Every structured operator's `matmat` fast path promises *exactly* the
+//! semantics of the serial column-by-column reference
+//! (`matmat_via_matvec`): these tests pin that contract across random
+//! shapes and block widths t ∈ {1, 3, 8}, and pin block-CG to per-column
+//! agreement with single-RHS CG — including the acceptance case of a
+//! SKIP-backed `K̂` with 8 simultaneous right-hand sides.
+
+use skip_gp::kernels::{ProductKernel, Stationary1d, TaskKernel};
+use skip_gp::linalg::Matrix;
+use skip_gp::operators::lowrank::{HadamardPairOp, NativeBackend};
+use skip_gp::operators::{
+    matmat_via_matvec, AffineOp, DenseOp, DiagOp, KroneckerSkiOp, LanczosFactor,
+    LinearOp, ScaledOp, ShiftedOp, SkiOp, SkipComponent, SkipOp, SumOp, TaskOp,
+};
+use skip_gp::solvers::{block_cg_solve, cg_solve, lanczos, CgConfig};
+use skip_gp::util::{rel_err, Rng};
+
+/// Assert `op.matmat` matches the serial reference for t ∈ {1, 3, 8}.
+///
+/// The fast paths are flop-reordered (fused passes, paired FFTs, thread
+/// chunking), so the comparison is to tight relative tolerance rather
+/// than bitwise.
+fn check_matmat(op: &dyn LinearOp, rng: &mut Rng, label: &str) {
+    let n = op.dim();
+    for t in [1usize, 3, 8] {
+        let block = Matrix::from_fn(n, t, |_, _| rng.normal());
+        let fast = op.matmat(&block);
+        let reference = matmat_via_matvec(op, &block);
+        assert_eq!((fast.rows, fast.cols), (n, t), "{label}: shape at t={t}");
+        let scale = reference.fro_norm().max(1.0);
+        let diff = fast.max_abs_diff(&reference);
+        assert!(
+            diff <= 1e-9 * scale,
+            "{label}: t={t} max diff {diff:.3e} vs scale {scale:.3e}"
+        );
+    }
+}
+
+fn random_spd(n: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let b = Matrix::from_fn(n, n, |_, _| rng.normal());
+    let mut a = b.matmul_t(&b);
+    a.add_diag(n as f64 * 0.05);
+    a
+}
+
+fn random_factor(n: usize, r: usize, rng: &mut Rng) -> LanczosFactor {
+    let q = Matrix::from_fn(n, r, |_, _| rng.normal());
+    let mut t = Matrix::from_fn(r, r, |_, _| rng.normal());
+    t.symmetrize();
+    LanczosFactor { q, t }
+}
+
+#[test]
+fn dense_diag_and_wrappers_matmat() {
+    let mut rng = Rng::new(1);
+    for n in [5usize, 23, 64] {
+        let dense = DenseOp(Matrix::from_fn(n, n, |_, _| rng.normal()));
+        check_matmat(&dense, &mut rng, "DenseOp");
+
+        let diag = DiagOp(rng.normal_vec(n));
+        check_matmat(&diag, &mut rng, "DiagOp");
+
+        let shifted = ShiftedOp::new(&dense, 1.7);
+        check_matmat(&shifted, &mut rng, "ShiftedOp");
+
+        let scaled = ScaledOp { inner: &dense, scale: -0.3 };
+        check_matmat(&scaled, &mut rng, "ScaledOp");
+
+        let affine = AffineOp {
+            inner: Box::new(DenseOp(Matrix::from_fn(n, n, |_, _| rng.normal()))),
+            scale: 2.5,
+            shift: 0.9,
+        };
+        check_matmat(&affine, &mut rng, "AffineOp");
+    }
+}
+
+#[test]
+fn sum_op_matmat() {
+    let mut rng = Rng::new(2);
+    for n in [7usize, 40] {
+        let sum = SumOp {
+            terms: vec![
+                Box::new(DenseOp(Matrix::from_fn(n, n, |_, _| rng.normal()))),
+                Box::new(DiagOp(rng.normal_vec(n))),
+                Box::new(DenseOp(Matrix::from_fn(n, n, |_, _| rng.normal()))),
+            ],
+        };
+        check_matmat(&sum, &mut rng, "SumOp");
+    }
+}
+
+#[test]
+fn ski_op_matmat() {
+    let mut rng = Rng::new(3);
+    for (n, m) in [(50usize, 32usize), (211, 64), (400, 128)] {
+        let xs = rng.uniform_vec(n, -1.0, 1.0);
+        let kern = Stationary1d::rbf(0.5);
+        let op = SkiOp::new(&xs, &kern, m);
+        check_matmat(&op, &mut rng, "SkiOp");
+    }
+}
+
+#[test]
+fn kronecker_ski_op_matmat() {
+    let mut rng = Rng::new(4);
+    for (n, d, m) in [(60usize, 2usize, 16usize), (90, 3, 12)] {
+        let xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+        let kern = ProductKernel::rbf(d, 0.8, 1.2);
+        let op = KroneckerSkiOp::new(&xs, &kern, m);
+        check_matmat(&op, &mut rng, "KroneckerSkiOp");
+    }
+}
+
+#[test]
+fn lanczos_factor_and_hadamard_pair_matmat() {
+    let mut rng = Rng::new(5);
+    for (n, r1, r2) in [(30usize, 3usize, 5usize), (120, 8, 8), (75, 1, 6)] {
+        let a = random_factor(n, r1, &mut rng);
+        let b = random_factor(n, r2, &mut rng);
+        check_matmat(&a, &mut rng, "LanczosFactor");
+        let backend = NativeBackend;
+        let pair = HadamardPairOp { a: &a, b: &b, backend: &backend };
+        check_matmat(&pair, &mut rng, "HadamardPairOp");
+    }
+}
+
+#[test]
+fn skip_op_matmat_single_and_pair_roots() {
+    let mut rng = Rng::new(6);
+    // d = 1 → Root::Single; d = 3 → merge tree with a Pair root.
+    for d in [1usize, 3] {
+        let n = 80;
+        let xs = Matrix::from_fn(n, d, |_, _| rng.normal());
+        let k = ProductKernel::rbf(d, 1.0, 1.0);
+        let grams: Vec<Matrix> = (0..d)
+            .map(|dd| {
+                Matrix::from_fn(n, n, |i, j| {
+                    k.factors[dd].eval(xs.get(i, dd), xs.get(j, dd))
+                })
+            })
+            .collect();
+        let ops: Vec<DenseOp> = grams.into_iter().map(DenseOp).collect();
+        let comps: Vec<SkipComponent> = ops
+            .iter()
+            .map(|o| SkipComponent::Op(o as &dyn LinearOp))
+            .collect();
+        let skip = SkipOp::build_native(comps, 25, &mut rng);
+        check_matmat(&skip, &mut rng, "SkipOp");
+    }
+}
+
+#[test]
+fn task_op_matmat() {
+    let mut rng = Rng::new(7);
+    for (n, s, q) in [(40usize, 5usize, 2usize), (130, 9, 3)] {
+        let task_of: Vec<usize> = (0..n).map(|_| rng.below(s)).collect();
+        let b = Matrix::from_fn(s, q, |_, _| rng.normal() * 0.5);
+        let diag: Vec<f64> = (0..s).map(|_| rng.uniform_in(0.1, 0.5)).collect();
+        let op = TaskOp::new(task_of, TaskKernel::new(b, diag));
+        check_matmat(&op, &mut rng, "TaskOp");
+    }
+}
+
+#[test]
+fn block_cg_matches_single_cg_on_dense_spd() {
+    let dense = random_spd(60, 8);
+    let op = DenseOp(dense);
+    let mut rng = Rng::new(9);
+    for t in [1usize, 3, 8] {
+        let b = Matrix::from_fn(60, t, |_, _| rng.normal());
+        let block = block_cg_solve(&op, &b, CgConfig::default());
+        assert!(block.all_converged());
+        for j in 0..t {
+            let single = cg_solve(&op, &b.col(j), CgConfig::default());
+            let err = rel_err(&block.x.col(j), &single.x);
+            assert!(err < 1e-8, "t={t} col {j}: {err}");
+        }
+    }
+}
+
+/// The acceptance case: block-CG with t = 8 right-hand sides against a
+/// SKIP-backed `K̂ = SKIP + σ²I`, agreeing with 8 independent CG solves
+/// to 1e-8 per column.
+#[test]
+fn block_cg_8rhs_on_skip_operator_matches_serial() {
+    let mut rng = Rng::new(10);
+    let n = 300;
+    let d = 3;
+    let xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+    let k = ProductKernel::rbf(d, 0.9, 1.0);
+    let skis: Vec<SkiOp> = (0..d)
+        .map(|dd| SkiOp::new(&xs.col(dd), &k.factors[dd], 64))
+        .collect();
+    let comps: Vec<SkipComponent> = skis
+        .iter()
+        .map(|s| SkipComponent::Op(s as &dyn LinearOp))
+        .collect();
+    let skip = SkipOp::build_native(comps, 30, &mut rng);
+    let khat = AffineOp { inner: Box::new(skip), scale: 1.0, shift: 0.3 };
+
+    let t = 8;
+    let b = Matrix::from_fn(n, t, |_, _| rng.normal());
+    let cfg = CgConfig { max_iters: 400, tol: 1e-12 };
+    let block = block_cg_solve(&khat, &b, cfg);
+    for j in 0..t {
+        let single = cg_solve(&khat, &b.col(j), cfg);
+        assert!(single.converged, "serial col {j} did not converge");
+        assert!(block.columns[j].converged, "block col {j} did not converge");
+        let err = rel_err(&block.x.col(j), &single.x);
+        assert!(err < 1e-8, "col {j}: block vs serial rel err {err}");
+    }
+    // The whole point: one block MVM per iteration, not t.
+    let max_iters = block.columns.iter().map(|c| c.iters).max().unwrap();
+    assert_eq!(block.matmats, max_iters);
+}
+
+/// Batched Lanczos must agree with sequential Lanczos probe-by-probe even
+/// when the operator's matmat takes a reordered (fused/FFT-paired) path.
+#[test]
+fn batched_lanczos_agrees_on_structured_operator() {
+    let mut rng = Rng::new(11);
+    let n = 150;
+    let xs = rng.uniform_vec(n, 0.0, 2.0);
+    let kern = Stationary1d::matern52(0.6);
+    let ski = SkiOp::new(&xs, &kern, 48);
+    let shifted = AffineOp { inner: Box::new(ski), scale: 1.0, shift: 0.4 };
+    let mut probes = Matrix::zeros(n, 4);
+    for j in 0..4 {
+        probes.set_col(j, &rng.normal_vec(n));
+    }
+    // Modest rank: well before Krylov breakdown, where Lanczos is stable
+    // enough that the reordered (FFT-paired) matmat cannot perturb the
+    // recurrence beyond rounding amplification.
+    let batch = skip_gp::solvers::lanczos_batch(&shifted, &probes, 8, 1e-10);
+    for (j, got) in batch.iter().enumerate() {
+        let want = lanczos(&shifted, &probes.col(j), 8, 1e-10);
+        assert_eq!(got.rank(), want.rank(), "probe {j}");
+        for (ga, wa) in got.alphas.iter().zip(&want.alphas) {
+            assert!((ga - wa).abs() < 1e-6 * (1.0 + wa.abs()), "probe {j} alpha");
+        }
+    }
+}
