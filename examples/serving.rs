@@ -1,0 +1,166 @@
+//! Serving end to end: train → snapshot → reload → serve a burst.
+//!
+//! ```bash
+//! cargo run --release --example serving
+//! ```
+//!
+//! Trains a SKIP GP on a synthetic surface, freezes it into a model
+//! snapshot on disk, reloads the snapshot (no training data needed), and
+//! serves a burst of concurrent queries through the request batcher —
+//! printing QPS, p50/p99 latency, and the realized batch-size histogram,
+//! plus a one-at-a-time baseline for comparison. Finishes with a round
+//! trip through the TCP line-protocol server.
+
+use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant};
+use skip_gp::linalg::Matrix;
+use skip_gp::serve::{
+    BatcherConfig, ModelSnapshot, RequestBatcher, ServeEngine, Server, ServerConfig,
+    SnapshotConfig, VarianceMode,
+};
+use skip_gp::util::{mae, Rng, Timer};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn target(x: &[f64]) -> f64 {
+    (2.0 * x[0]).sin() + 0.5 * (3.0 * x[1]).cos()
+}
+
+/// Push `total` queries through a fresh batcher (4 client threads, each
+/// keeping a pipeline of requests outstanding); returns achieved QPS.
+fn burst(engine: &Arc<ServeEngine>, cfg: BatcherConfig, total: usize) -> f64 {
+    let batcher = RequestBatcher::start(engine.clone(), cfg);
+    let clients = 4;
+    let per_client = total / clients;
+    let t = Timer::start();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let handle = batcher.handle();
+            s.spawn(move || {
+                let mut rng = Rng::new(1000 + c as u64);
+                let window = 64;
+                let mut pending = std::collections::VecDeque::new();
+                for _ in 0..per_client {
+                    if pending.len() >= window {
+                        let rx: std::sync::mpsc::Receiver<_> = pending.pop_front().unwrap();
+                        rx.recv().unwrap();
+                    }
+                    let q = [rng.uniform_in(-0.9, 0.9), rng.uniform_in(-0.9, 0.9)];
+                    pending.push_back(handle.submit(&q));
+                }
+                for rx in pending {
+                    rx.recv().unwrap();
+                }
+            });
+        }
+    });
+    let elapsed = t.elapsed_s();
+    batcher.shutdown();
+    (clients * per_client) as f64 / elapsed
+}
+
+fn main() {
+    // --- Train a SKIP GP on y = sin(2x₀) + ½cos(3x₁) + ε.
+    let mut rng = Rng::new(0);
+    let n = 800;
+    let xs = Matrix::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let ys: Vec<f64> = (0..n)
+        .map(|i| target(xs.row(i)) + 0.05 * rng.normal())
+        .collect();
+    let cfg = MvmGpConfig {
+        variant: MvmVariant::Skip,
+        grid_m: 64,
+        rank: 25,
+        ..Default::default()
+    };
+    let mut gp = MvmGp::new(xs, ys, GpHypers::init_for_dim(2), cfg);
+    let t = Timer::start();
+    gp.fit(10, 0.1);
+    println!("trained 10 ADAM steps in {:.2}s", t.elapsed_s());
+
+    // --- Freeze into a snapshot and write it to disk.
+    let t = Timer::start();
+    let snap = ModelSnapshot::from_mvm(
+        &gp,
+        &SnapshotConfig {
+            grid_m: 64,
+            variance: VarianceMode::Lanczos(32),
+            ..Default::default()
+        },
+    )
+    .expect("snapshot build");
+    let build_s = t.elapsed_s();
+    let path = std::env::temp_dir().join(format!("skipgp-serving-{}.snap", std::process::id()));
+    snap.save(&path).expect("snapshot save");
+    let bytes = std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "snapshot: {} grid cells, variance rank {}, built in {build_s:.2}s, {bytes} bytes",
+        snap.cache.total_grid(),
+        snap.cache.var_rank()
+    );
+
+    // --- Reload (training data no longer needed) and sanity-check.
+    let loaded = ModelSnapshot::load(&path).expect("snapshot load");
+    std::fs::remove_file(&path).ok();
+    let xt = Matrix::from_fn(200, 2, |_, _| rng.uniform_in(-0.9, 0.9));
+    let from_disk = loaded.cache.predict_mean(&xt);
+    let in_memory = snap.cache.predict_mean(&xt);
+    assert_eq!(from_disk, in_memory, "reload must be bitwise identical");
+    let truth: Vec<f64> = (0..200).map(|i| target(xt.row(i))).collect();
+    let err = mae(&from_disk, &truth);
+    println!("reloaded snapshot test MAE vs noiseless target: {err:.4}");
+    assert!(err < 0.1, "serving example regression degraded: MAE {err}");
+
+    // --- Serve a burst through the batcher, batched vs one-at-a-time.
+    let total = 20_000;
+    let engine_batched = Arc::new(ServeEngine::new(loaded.clone()).expect("serve engine"));
+    let qps_batched = burst(
+        &engine_batched,
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+        total,
+    );
+    let lat = engine_batched.metrics.latency_snapshot("serve.request");
+    println!(
+        "batched  (t≤64): {qps_batched:>10.0} QPS   p50 {:>7.1}µs   p99 {:>7.1}µs",
+        lat.p50_s * 1e6,
+        lat.p99_s * 1e6
+    );
+    let hist = engine_batched.metrics.value_histogram("serve.batch_size");
+    let cells: Vec<String> = hist.iter().map(|(v, c)| format!("{v}×{c}")).collect();
+    println!("batch-size histogram: {}", cells.join(" "));
+
+    let engine_single = Arc::new(ServeEngine::new(loaded).expect("serve engine"));
+    let qps_single = burst(
+        &engine_single,
+        BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
+        total,
+    );
+    let lat1 = engine_single.metrics.latency_snapshot("serve.request");
+    println!(
+        "one-at-a-time :  {qps_single:>10.0} QPS   p50 {:>7.1}µs   p99 {:>7.1}µs",
+        lat1.p50_s * 1e6,
+        lat1.p99_s * 1e6
+    );
+    println!("batching speedup: {:.2}x", qps_batched / qps_single);
+
+    // --- And once more over TCP.
+    let engine = engine_batched;
+    let server = Server::start(
+        engine,
+        ServerConfig { bind: "127.0.0.1:0".into(), batcher: BatcherConfig::default() },
+    )
+    .expect("server start");
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let stream = std::net::TcpStream::connect(server.addr()).expect("connect");
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        writeln!(writer, "predict 0.25 -0.5").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        println!("tcp {} → {}", server.addr(), line.trim());
+        assert!(line.starts_with("ok "), "tcp response: {line}");
+        writeln!(writer, "quit").unwrap();
+    }
+    server.shutdown();
+    println!("serving example OK");
+}

@@ -1,0 +1,177 @@
+//! Serving throughput bench: one-at-a-time vs batched request dispatch on
+//! the same snapshot, emitting machine-readable `results/BENCH_serve.json`
+//! (QPS per mode, p50/p99 latency, batch-size histogram, cache-build
+//! time) so the serving perf trajectory is tracked from PR 2 onward.
+//!
+//! Run: `cargo bench --bench bench_serve` (add `-- --fast` in CI smoke).
+
+use skip_gp::gp::{ExactGp, GpHypers};
+use skip_gp::linalg::Matrix;
+use skip_gp::serve::{
+    BatcherConfig, ModelSnapshot, RequestBatcher, ServeEngine, SnapshotConfig, VarianceMode,
+};
+use skip_gp::util::{Rng, Timer};
+use std::collections::VecDeque;
+use std::io::Write;
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+struct LoadStats {
+    qps: f64,
+    p50_us: f64,
+    p99_us: f64,
+}
+
+/// Drive `total` queries through a fresh batcher with `clients` closed-loop
+/// client threads (each keeps a 64-deep pipeline outstanding).
+fn run_load(
+    snapshot: &ModelSnapshot,
+    cfg: BatcherConfig,
+    clients: usize,
+    total: usize,
+) -> (LoadStats, std::collections::BTreeMap<u64, u64>) {
+    let engine = Arc::new(ServeEngine::new(snapshot.clone()).expect("serve engine"));
+    let batcher = RequestBatcher::start(engine.clone(), cfg);
+    let per_client = total / clients;
+    let d = engine.dim();
+    let t = Timer::start();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let handle = batcher.handle();
+            s.spawn(move || {
+                let mut rng = Rng::new(7000 + c as u64);
+                let mut q = vec![0.0; d];
+                let mut pending = VecDeque::new();
+                for _ in 0..per_client {
+                    if pending.len() >= 64 {
+                        let rx: std::sync::mpsc::Receiver<_> = pending.pop_front().unwrap();
+                        rx.recv().unwrap();
+                    }
+                    for v in q.iter_mut() {
+                        *v = rng.uniform_in(-0.9, 0.9);
+                    }
+                    pending.push_back(handle.submit(&q));
+                }
+                for rx in pending {
+                    rx.recv().unwrap();
+                }
+            });
+        }
+    });
+    let elapsed = t.elapsed_s();
+    batcher.shutdown();
+    let lat = engine.metrics.latency_snapshot("serve.request");
+    let hist = engine.metrics.value_histogram("serve.batch_size");
+    (
+        LoadStats {
+            qps: (clients * per_client) as f64 / elapsed,
+            p50_us: lat.p50_s * 1e6,
+            p99_us: lat.p99_s * 1e6,
+        },
+        hist,
+    )
+}
+
+fn json_load(stats: &LoadStats) -> String {
+    format!(
+        "{{\"qps\": {:.1}, \"p50_us\": {:.2}, \"p99_us\": {:.2}}}",
+        stats.qps, stats.p50_us, stats.p99_us
+    )
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let total = if fast { 20_000 } else { 100_000 };
+
+    // A small trained model: the bench measures *serving dispatch*, so the
+    // model itself stays deliberately tiny and deterministic.
+    let mut rng = Rng::new(0);
+    let n = 400;
+    let xs = Matrix::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let ys: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = xs.row(i);
+            (2.0 * r[0]).sin() + 0.5 * (3.0 * r[1]).cos() + 0.05 * rng.normal()
+        })
+        .collect();
+    let mut gp = ExactGp::new(xs, ys, GpHypers::new(0.6, 1.0, 0.05));
+    gp.refresh().expect("exact refresh");
+
+    let t = Timer::start();
+    let snap = ModelSnapshot::from_exact(
+        &gp,
+        &SnapshotConfig {
+            grid_m: 32,
+            variance: VarianceMode::Lanczos(32),
+            ..Default::default()
+        },
+    )
+    .expect("snapshot build");
+    let cache_build_s = t.elapsed_s();
+    let snapshot_bytes = snap.to_bytes().len();
+    println!(
+        "snapshot: {} cells, var rank {}, cache built in {:.3}s, {} bytes",
+        snap.cache.total_grid(),
+        snap.cache.var_rank(),
+        cache_build_s,
+        snapshot_bytes
+    );
+
+    let clients = 4;
+    let (single, _) = run_load(
+        &snap,
+        BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
+        clients,
+        total,
+    );
+    println!(
+        "one-at-a-time: {:>10.0} QPS   p50 {:>8.1}µs   p99 {:>8.1}µs",
+        single.qps, single.p50_us, single.p99_us
+    );
+    let (batch8, _) = run_load(
+        &snap,
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) },
+        clients,
+        total,
+    );
+    println!(
+        "batched t≤8  : {:>10.0} QPS   p50 {:>8.1}µs   p99 {:>8.1}µs",
+        batch8.qps, batch8.p50_us, batch8.p99_us
+    );
+    let (batch64, hist64) = run_load(
+        &snap,
+        BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(2) },
+        clients,
+        total,
+    );
+    println!(
+        "batched t≤64 : {:>10.0} QPS   p50 {:>8.1}µs   p99 {:>8.1}µs",
+        batch64.qps, batch64.p50_us, batch64.p99_us
+    );
+    let speedup = batch64.qps / single.qps;
+    println!("  -> batched (t=64) speedup over one-at-a-time: {speedup:.2}x");
+
+    let hist_cells: Vec<String> = hist64
+        .iter()
+        .map(|(v, c)| format!("\"{v}\": {c}"))
+        .collect();
+    let json = format!(
+        "{{\n  \"bench\": \"serve\",\n  \"n_train\": {n},\n  \"total_requests\": {total},\n  \
+         \"clients\": {clients},\n  \"cache_build_s\": {cache_build_s:.6},\n  \
+         \"snapshot_bytes\": {snapshot_bytes},\n  \
+         \"one_at_a_time\": {},\n  \"batched_t8\": {},\n  \"batched_t64\": {},\n  \
+         \"speedup_t64\": {speedup:.3},\n  \"batch_size_histogram\": {{{}}}\n}}\n",
+        json_load(&single),
+        json_load(&batch8),
+        json_load(&batch64),
+        hist_cells.join(", ")
+    );
+    let path = Path::new("results/BENCH_serve.json");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::fs::File::create(path).expect("bench json");
+    f.write_all(json.as_bytes()).unwrap();
+    println!("wrote {}", path.display());
+}

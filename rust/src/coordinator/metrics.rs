@@ -1,4 +1,10 @@
-//! Lightweight metrics registry: counters and timers keyed by name.
+//! Lightweight metrics registry: counters, timers, latency histograms,
+//! and small-integer value histograms, keyed by name.
+//!
+//! The latency histograms back the serving layer's per-request QPS/p50/p99
+//! accounting (`crate::serve`): log-bucketed, so recording is O(1) and
+//! quantiles are read off the cumulative bucket counts with bounded
+//! (±~9%) relative error — plenty for dashboard-grade latency numbers.
 
 use std::collections::BTreeMap;
 use std::sync::Mutex;
@@ -12,11 +18,104 @@ pub struct TimerStats {
     pub max_s: f64,
 }
 
+/// Number of log-spaced latency buckets (4 per octave from 1 µs).
+const LAT_BUCKETS: usize = 128;
+/// Lower edge of bucket 0, seconds.
+const LAT_MIN_S: f64 = 1e-6;
+
+/// Log-bucketed latency histogram (4 buckets per power of two starting at
+/// 1 µs, so bucket edges grow by 2^(1/4) ≈ 1.19×).
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    total_s: f64,
+    max_s: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            buckets: vec![0; LAT_BUCKETS],
+            count: 0,
+            total_s: 0.0,
+            max_s: 0.0,
+        }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket_index(seconds: f64) -> usize {
+        if seconds <= LAT_MIN_S {
+            return 0;
+        }
+        let i = ((seconds / LAT_MIN_S).log2() * 4.0).floor() as isize;
+        i.clamp(0, LAT_BUCKETS as isize - 1) as usize
+    }
+
+    /// Geometric midpoint of bucket `i` (its representative latency).
+    fn bucket_value(i: usize) -> f64 {
+        LAT_MIN_S * 2f64.powf((i as f64 + 0.5) / 4.0)
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        self.buckets[Self::bucket_index(seconds)] += 1;
+        self.count += 1;
+        self.total_s += seconds;
+        self.max_s = self.max_s.max(seconds);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Approximate quantile `q ∈ [0, 1]` (0 when empty).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= target {
+                return Self::bucket_value(i).min(self.max_s);
+            }
+        }
+        self.max_s
+    }
+
+    /// Immutable summary for reporting.
+    pub fn snapshot(&self) -> LatencySnapshot {
+        LatencySnapshot {
+            count: self.count,
+            mean_s: if self.count == 0 { 0.0 } else { self.total_s / self.count as f64 },
+            p50_s: self.quantile(0.50),
+            p90_s: self.quantile(0.90),
+            p99_s: self.quantile(0.99),
+            max_s: self.max_s,
+        }
+    }
+}
+
+/// Point-in-time latency summary.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencySnapshot {
+    pub count: u64,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
 /// Thread-safe metrics registry.
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, u64>>,
     timers: Mutex<BTreeMap<String, TimerStats>>,
+    latencies: Mutex<BTreeMap<String, LatencyHistogram>>,
+    values: Mutex<BTreeMap<String, BTreeMap<u64, u64>>>,
 }
 
 impl Metrics {
@@ -47,6 +146,51 @@ impl Metrics {
         out
     }
 
+    /// Record one latency observation (seconds) under `name`.
+    pub fn record_latency(&self, name: &str, seconds: f64) {
+        let mut l = self.latencies.lock().unwrap();
+        l.entry(name.to_string()).or_default().record(seconds);
+    }
+
+    /// Record a batch of latency observations under one lock acquisition
+    /// (the request batcher records a whole batch's latencies at once).
+    pub fn record_latency_many(&self, name: &str, seconds: &[f64]) {
+        if seconds.is_empty() {
+            return;
+        }
+        let mut l = self.latencies.lock().unwrap();
+        let h = l.entry(name.to_string()).or_default();
+        for &s in seconds {
+            h.record(s);
+        }
+    }
+
+    /// Latency summary for `name` (zeros when never recorded).
+    pub fn latency_snapshot(&self, name: &str) -> LatencySnapshot {
+        self.latencies
+            .lock()
+            .unwrap()
+            .get(name)
+            .map(|h| h.snapshot())
+            .unwrap_or_default()
+    }
+
+    /// Record an integer observation (e.g. a batch size) under `name`.
+    pub fn observe(&self, name: &str, value: u64) {
+        let mut v = self.values.lock().unwrap();
+        *v.entry(name.to_string()).or_default().entry(value).or_insert(0) += 1;
+    }
+
+    /// Exact value → count histogram for `name` (empty when never seen).
+    pub fn value_histogram(&self, name: &str) -> BTreeMap<u64, u64> {
+        self.values
+            .lock()
+            .unwrap()
+            .get(name)
+            .cloned()
+            .unwrap_or_default()
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         *self.counters.lock().unwrap().get(name).unwrap_or(&0)
     }
@@ -74,6 +218,21 @@ impl Metrics {
                 v.total_s / v.count.max(1) as f64,
                 v.max_s
             ));
+        }
+        for (k, h) in self.latencies.lock().unwrap().iter() {
+            let s = h.snapshot();
+            out.push_str(&format!(
+                "latency {k}: n={} p50={:.1}µs p99={:.1}µs max={:.1}µs\n",
+                s.count,
+                s.p50_s * 1e6,
+                s.p99_s * 1e6,
+                s.max_s * 1e6
+            ));
+        }
+        for (k, hist) in self.values.lock().unwrap().iter() {
+            let cells: Vec<String> =
+                hist.iter().map(|(v, c)| format!("{v}:{c}")).collect();
+            out.push_str(&format!("values  {k}: {}\n", cells.join(" ")));
         }
         out
     }
@@ -116,8 +275,63 @@ mod tests {
         let m = Metrics::new();
         m.incr("a", 1);
         m.record("b", 0.1);
+        m.record_latency("c", 1e-4);
+        m.observe("d", 8);
         let r = m.report();
         assert!(r.contains("counter a = 1"));
         assert!(r.contains("timer   b"));
+        assert!(r.contains("latency c"));
+        assert!(r.contains("values  d: 8:1"));
+    }
+
+    #[test]
+    fn latency_quantiles_bracket_observations() {
+        let mut h = LatencyHistogram::default();
+        // 99 fast (10 µs) + 1 slow (10 ms) observation.
+        for _ in 0..99 {
+            h.record(10e-6);
+        }
+        h.record(10e-3);
+        assert_eq!(h.count(), 100);
+        let p50 = h.quantile(0.50);
+        assert!(p50 > 5e-6 && p50 < 20e-6, "p50 {p50}");
+        let p99 = h.quantile(0.99);
+        assert!(p99 < 20e-6, "p99 covers the fast mass: {p99}");
+        let p999 = h.quantile(0.9999);
+        assert!(p999 > 5e-3, "tail quantile sees the slow outlier: {p999}");
+        let s = h.snapshot();
+        assert!((s.max_s - 10e-3).abs() < 1e-12);
+        assert!(s.mean_s > 10e-6 && s.mean_s < 10e-3);
+    }
+
+    #[test]
+    fn latency_histogram_edge_cases() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.quantile(0.5), 0.0);
+        h.record(0.0); // below the first bucket edge
+        h.record(1e9); // far above the last bucket edge
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) <= 1e9);
+    }
+
+    #[test]
+    fn batched_latency_recording_matches_loop() {
+        let m = Metrics::new();
+        m.record_latency_many("x", &[1e-5, 2e-5, 3e-5]);
+        m.record_latency_many("x", &[]);
+        assert_eq!(m.latency_snapshot("x").count, 3);
+        assert_eq!(m.latency_snapshot("missing").count, 0);
+    }
+
+    #[test]
+    fn value_histogram_counts() {
+        let m = Metrics::new();
+        m.observe("batch", 1);
+        m.observe("batch", 64);
+        m.observe("batch", 64);
+        let h = m.value_histogram("batch");
+        assert_eq!(h.get(&1), Some(&1));
+        assert_eq!(h.get(&64), Some(&2));
+        assert!(m.value_histogram("missing").is_empty());
     }
 }

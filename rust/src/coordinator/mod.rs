@@ -5,6 +5,6 @@ pub mod metrics;
 pub mod scheduler;
 pub mod session;
 
-pub use metrics::Metrics;
+pub use metrics::{LatencyHistogram, LatencySnapshot, Metrics};
 pub use scheduler::{print_summary, JobReport, JobStatus, Scheduler};
 pub use session::Session;

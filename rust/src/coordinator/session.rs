@@ -61,17 +61,38 @@ impl Session {
         self.start.elapsed().as_secs_f64()
     }
 
-    /// Write `results/<name>.csv` and return its path.
+    /// Write the collected rows as CSV and return the path written.
+    ///
+    /// Reruns of the same session name land in fresh `<name>_runNN.csv`
+    /// files instead of overwriting `<name>.csv`; consumers should use the
+    /// returned path rather than reconstructing it. Claiming a path uses
+    /// `create_new` (atomic create-if-absent), so even two sessions
+    /// finishing concurrently get distinct files.
     pub fn finish(&self) -> Result<PathBuf> {
-        let path = self.out_dir.join(format!("{}.csv", self.name));
-        let mut f = fs::File::create(&path)?;
-        if let Some(h) = &self.header {
-            writeln!(f, "{}", h.join(","))?;
+        for i in 0u32.. {
+            let path = if i == 0 {
+                self.out_dir.join(format!("{}.csv", self.name))
+            } else {
+                self.out_dir.join(format!("{}_run{i:02}.csv", self.name))
+            };
+            let mut f = match fs::OpenOptions::new()
+                .write(true)
+                .create_new(true)
+                .open(&path)
+            {
+                Ok(f) => f,
+                Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => continue,
+                Err(e) => return Err(e.into()),
+            };
+            if let Some(h) = &self.header {
+                writeln!(f, "{}", h.join(","))?;
+            }
+            for r in &self.rows {
+                writeln!(f, "{}", r.join(","))?;
+            }
+            return Ok(path);
         }
-        for r in &self.rows {
-            writeln!(f, "{}", r.join(","))?;
-        }
-        Ok(path)
+        unreachable!("ran out of run indices")
     }
 
     /// Pretty-print the collected rows as an aligned table.
@@ -123,6 +144,31 @@ mod tests {
         let text = fs::read_to_string(path).unwrap();
         assert!(text.starts_with("method,mae,time_s\n"));
         assert!(text.contains("skip,0.07,1.5"));
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rerun_does_not_overwrite_earlier_results() {
+        let dir = tmpdir("rerun");
+        let mut first = Session::new("exp", &dir).unwrap();
+        first.header(&["k", "v"]);
+        first.rowf(&[&"a", &1]);
+        let p1 = first.finish().unwrap();
+
+        let mut second = Session::new("exp", &dir).unwrap();
+        second.header(&["k", "v"]);
+        second.rowf(&[&"b", &2]);
+        let p2 = second.finish().unwrap();
+        let p3 = second.finish().unwrap(); // even a double-finish is safe
+
+        assert_ne!(p1, p2);
+        assert_ne!(p2, p3);
+        assert!(p2.file_name().unwrap().to_str().unwrap().contains("_run01"));
+        // The first run's contents survived the rerun.
+        let t1 = fs::read_to_string(&p1).unwrap();
+        assert!(t1.contains("a,1"), "first run clobbered: {t1}");
+        let t2 = fs::read_to_string(&p2).unwrap();
+        assert!(t2.contains("b,2"));
         fs::remove_dir_all(dir).ok();
     }
 

@@ -23,6 +23,10 @@ pub enum Error {
     /// Runtime artifact problems (missing/corrupt AOT artifact).
     Artifact(String),
 
+    /// Model snapshot problems (bad magic/version/checksum, missing
+    /// predictive caches, serving-grid budget exceeded).
+    Snapshot(String),
+
     /// PJRT/XLA runtime failure (or the `xla` feature is not compiled in).
     Xla(String),
 
@@ -53,6 +57,7 @@ impl fmt::Display for Error {
                 "dimension mismatch: {context} (expected {expected}, got {got})"
             ),
             Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
+            Error::Snapshot(msg) => write!(f, "snapshot error: {msg}"),
             Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
             Error::Io(e) => write!(f, "{e}"),
             Error::Config(msg) => write!(f, "config error: {msg}"),

@@ -112,6 +112,18 @@ impl ExactGp {
         Ok(())
     }
 
+    /// Cached solve `α = K̂⁻¹y` (None before `fit`/`refresh`). The serving
+    /// layer reads this when freezing a model into a snapshot.
+    pub fn alpha(&self) -> Option<&[f64]> {
+        self.alpha.as_deref()
+    }
+
+    /// Cached Cholesky factor of K̂ (None before `fit`/`refresh`); the
+    /// exact inverse root `L⁻ᵀ` behind `serve::cache::inverse_root_exact`.
+    pub fn cholesky(&self) -> Option<&Cholesky> {
+        self.chol.as_ref()
+    }
+
     /// Predictive mean at test points (Eq. 1, zero prior mean).
     pub fn predict_mean(&self, xtest: &Matrix) -> Vec<f64> {
         let alpha = self.alpha.as_ref().expect("call fit/refresh first");

@@ -17,14 +17,20 @@
 use super::adam::Adam;
 use super::hypers::GpHypers;
 use crate::kernels::ProductKernel;
-use crate::linalg::Matrix;
+use crate::linalg::{dot, Matrix};
 use crate::operators::{
     AffineOp, ContractionBackend, KroneckerSkiOp, LinearOp, NativeBackend, SkiOp,
     SkipComponent, SkipOp,
 };
+use crate::serve::cache::{fit_grids, grid_cells_within, PredictCache};
 use crate::solvers::{block_cg_solve, cg_solve, slq_logdet, CgConfig, SlqConfig};
 use crate::util::Rng;
 use std::sync::Arc;
+
+/// Largest tensor-grid (Π m_k cells) the predictive stencil cache may
+/// occupy; beyond it (high d) prediction falls back to the dense
+/// cross-covariance path. 2²¹ cells ≈ 16 MB of mean cache.
+const PREDICT_CACHE_MAX_CELLS: usize = 1 << 21;
 
 /// Which structured operator backs the model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -78,12 +84,28 @@ pub struct MvmGp {
     backend: Arc<dyn ContractionBackend>,
     /// Cached α = K̂⁻¹y for prediction.
     alpha: Option<Vec<f64>>,
+    /// Grid-side stencil cache for O(1)-per-point means (rebuilt by
+    /// `refresh`; None when mᵈ exceeds the cache budget).
+    cache: Option<PredictCache>,
+    /// The refresh-grade operator K̂ (Corollary 3.4's cached
+    /// decomposition), kept so `predict_var` and snapshot building reuse
+    /// it instead of re-running the Lanczos merge tree.
+    refresh_op: Option<AffineOp>,
 }
 
 impl MvmGp {
     pub fn new(xs: Matrix, ys: Vec<f64>, hypers: GpHypers, cfg: MvmGpConfig) -> Self {
         assert_eq!(xs.rows, ys.len());
-        MvmGp { xs, ys, hypers, cfg, backend: Arc::new(NativeBackend), alpha: None }
+        MvmGp {
+            xs,
+            ys,
+            hypers,
+            cfg,
+            backend: Arc::new(NativeBackend),
+            alpha: None,
+            cache: None,
+            refresh_op: None,
+        }
     }
 
     /// Swap the Lemma-3.1 contraction backend (e.g. the PJRT artifact
@@ -228,24 +250,82 @@ impl MvmGp {
     /// accuracy (see the config docs: the solve amplifies operator error,
     /// so prediction uses a higher-rank operator than training).
     pub fn refresh(&mut self) {
-        // The rank needed for a faithful solve grows with d (the Hadamard
-        // product's effective rank compounds per factor — §7); 14·d matches
-        // the empirical requirement on the d = 9…32 suite.
-        let rank = self
-            .cfg
-            .refresh_rank
-            .max(self.cfg.rank)
-            .max(14 * self.xs.cols);
-        let op = self.build_operator_with_rank(&self.hypers, self.cfg.seed, rank);
+        let op = self.build_operator_with_rank(
+            &self.hypers,
+            self.cfg.seed,
+            self.refresh_grade_rank(),
+        );
         let cg = CgConfig { max_iters: self.cfg.cg.max_iters.max(200), ..self.cfg.cg };
         let sol = cg_solve(&op, &self.ys, cg);
         self.alpha = Some(sol.x);
+        self.cache = self.build_stencil_cache();
+        self.refresh_op = Some(op);
     }
 
-    /// Predictive mean via the exact cross-covariance (Eq. 1):
-    /// `μ* = K_{*X} α`, O(n*·n·d). Prediction is not the paper's
-    /// bottleneck; training MVMs are.
+    /// The refresh-grade operator built by the last `refresh` (None before
+    /// it). `predict_var` and `serve::snapshot` reuse this cached
+    /// decomposition instead of rebuilding the merge tree.
+    pub fn refresh_operator(&self) -> Option<&AffineOp> {
+        self.refresh_op.as_ref()
+    }
+
+    /// Lanczos rank for prediction-grade solves. The rank needed for a
+    /// faithful solve grows with d (the Hadamard product's effective rank
+    /// compounds per factor — §7); 14·d matches the empirical requirement
+    /// on the d = 9…32 suite. One formula shared by `refresh`,
+    /// `predict_var`, and `serve::snapshot` so they can never diverge.
+    pub fn refresh_grade_rank(&self) -> usize {
+        self.cfg
+            .refresh_rank
+            .max(self.cfg.rank)
+            .max(14 * self.xs.cols)
+    }
+
+    /// Cached α = K̂⁻¹y (None before `fit`/`refresh`); read by the serving
+    /// layer when freezing the model into a snapshot.
+    pub fn alpha(&self) -> Option<&[f64]> {
+        self.alpha.as_deref()
+    }
+
+    /// The grid-side stencil cache backing `predict_mean`, when the grid
+    /// fits the budget (None for high-d models, which predict densely).
+    pub fn predict_cache(&self) -> Option<&PredictCache> {
+        self.cache.as_ref()
+    }
+
+    /// Build the mean-only stencil cache on the training grid, or None
+    /// when mᵈ exceeds [`PREDICT_CACHE_MAX_CELLS`].
+    fn build_stencil_cache(&self) -> Option<PredictCache> {
+        let alpha = self.alpha.as_ref()?;
+        grid_cells_within(self.cfg.grid_m, self.xs.cols, PREDICT_CACHE_MAX_CELLS)?;
+        let grids = fit_grids(&self.xs, self.cfg.grid_m);
+        PredictCache::build(&self.xs, alpha, &self.hypers, grids, None).ok()
+    }
+
+    /// Predictive mean (Eq. 1): `μ* = K_{*X} α`, served from the grid-side
+    /// stencil cache shared with `serve::cache` — one 4ᵈ-sparse stencil
+    /// dot per point instead of the O(n·d) dense cross-kernel row. Falls
+    /// back to [`predict_mean_dense`](Self::predict_mean_dense) when the
+    /// grid exceeds the cache budget; debug builds cross-check the stencil
+    /// path against the dense reference.
     pub fn predict_mean(&self, xtest: &Matrix) -> Vec<f64> {
+        assert!(self.alpha.is_some(), "call fit/refresh first");
+        match &self.cache {
+            Some(cache) => {
+                let out = cache.predict_mean(xtest);
+                #[cfg(debug_assertions)]
+                self.debug_check_stencil_mean(&out, xtest);
+                out
+            }
+            None => self.predict_mean_dense(xtest),
+        }
+    }
+
+    /// Reference predictive mean via the exact dense cross-covariance,
+    /// O(n*·n·d) — the path `predict_mean` used historically; kept as the
+    /// fallback for budget-exceeding grids and as the debug-assert oracle
+    /// for the stencil path.
+    pub fn predict_mean_dense(&self, xtest: &Matrix) -> Vec<f64> {
         let alpha = self.alpha.as_ref().expect("call fit/refresh first");
         let kern = ProductKernel::rbf(self.xs.cols, self.hypers.ell(), self.hypers.sf2());
         let mut out = Vec::with_capacity(xtest.rows);
@@ -258,6 +338,92 @@ impl MvmGp {
             out.push(acc);
         }
         out
+    }
+
+    #[cfg(debug_assertions)]
+    fn debug_check_stencil_mean(&self, got: &[f64], xtest: &Matrix) {
+        // Only cross-check problems small enough that the dense oracle is
+        // cheap; the stencil path differs from dense by the SKI
+        // interpolation error, amplified by ‖α‖₁.
+        if xtest.rows * self.xs.rows > 250_000 {
+            return;
+        }
+        let cache = self.cache.as_ref().expect("stencil check without cache");
+        // Extrapolated points (outside the grid span) get clamped,
+        // legitimately degraded stencils — only interior points are held
+        // to the interpolation-accuracy bound.
+        let interior = |row: &[f64]| {
+            row.iter().zip(&cache.grids).all(|(&x, g)| {
+                x >= g.min && x <= g.min + g.h * (g.m - 1) as f64
+            })
+        };
+        let want = self.predict_mean_dense(xtest);
+        let mut err = 0.0f64;
+        let mut count = 0usize;
+        let mut scale = self.hypers.sf2().max(1.0);
+        for i in 0..xtest.rows {
+            if !interior(xtest.row(i)) {
+                continue;
+            }
+            err += (got[i] - want[i]).abs();
+            scale = scale.max(want[i].abs());
+            count += 1;
+        }
+        if count == 0 {
+            return;
+        }
+        err /= count as f64;
+        // The stencil error is bounded by (per-entry kernel interpolation
+        // error)·‖α‖₁, so the tolerance carries an ‖α‖₁ term — a fixed
+        // fraction of scale alone would misfire on small-noise models
+        // whose α is legitimately large.
+        let alpha_l1: f64 = self
+            .alpha
+            .as_ref()
+            .map(|a| a.iter().map(|v| v.abs()).sum())
+            .unwrap_or(0.0);
+        let tol = 0.05 * scale + 1e-3 * alpha_l1;
+        debug_assert!(
+            err <= tol,
+            "stencil predict_mean drifted from the dense reference: \
+             mae {err}, tol {tol} (scale {scale}, ‖α‖₁ {alpha_l1})"
+        );
+    }
+
+    /// Latent predictive variance (Eq. 2): `k** − k*ᵀ K̂⁻¹ k*`, with all
+    /// n* cross-covariance solves riding **one block-CG call** against the
+    /// refresh-grade operator (the batched multi-RHS engine's test-time
+    /// analogue of the training-path gradient solve).
+    ///
+    /// Like `ExactGp::predict_var`, this is the noise-free latent
+    /// variance; add `hypers.sn2()` for observation variance.
+    pub fn predict_var(&self, xtest: &Matrix) -> Vec<f64> {
+        assert!(self.alpha.is_some(), "call fit/refresh first");
+        let d = self.xs.cols;
+        let kern = ProductKernel::rbf(d, self.hypers.ell(), self.hypers.sf2());
+        let kx = kern.gram(&self.xs, xtest); // n × n*
+        // Reuse the cached refresh-grade operator when available; rebuild
+        // only if `refresh` has not run with the current state.
+        let built;
+        let op: &AffineOp = match &self.refresh_op {
+            Some(op) => op,
+            None => {
+                built = self.build_operator_with_rank(
+                    &self.hypers,
+                    self.cfg.seed,
+                    self.refresh_grade_rank(),
+                );
+                &built
+            }
+        };
+        let cg = CgConfig { max_iters: self.cfg.cg.max_iters.max(200), ..self.cfg.cg };
+        let sol = block_cg_solve(op, &kx, cg);
+        (0..xtest.rows)
+            .map(|j| {
+                let quad = dot(&kx.col(j), &sol.x.col(j));
+                (self.hypers.sf2() - quad).max(1e-12)
+            })
+            .collect()
     }
 }
 
@@ -360,6 +526,67 @@ mod tests {
             "trace {:?}",
             trace
         );
+    }
+
+    #[test]
+    fn stencil_cache_built_when_grid_fits() {
+        let (xs, ys, xt, _) = toy(150, 2, 7);
+        let cfg = MvmGpConfig { grid_m: 48, rank: 30, ..Default::default() };
+        let mut gp = MvmGp::new(xs, ys, GpHypers::new(0.7, 1.0, 0.05), cfg);
+        gp.refresh();
+        let cache = gp.predict_cache().expect("2-D grid fits the budget");
+        assert_eq!(cache.total_grid(), 48 * 48);
+        // The stencil path tracks the dense reference closely.
+        let fast = gp.predict_mean(&xt);
+        let dense = gp.predict_mean_dense(&xt);
+        assert!(mae(&fast, &dense) < 5e-3, "mae {}", mae(&fast, &dense));
+    }
+
+    #[test]
+    fn high_dim_grid_falls_back_to_dense_path() {
+        let (xs, ys, xt, _) = toy(60, 8, 8);
+        let cfg = MvmGpConfig { grid_m: 100, rank: 10, refresh_rank: 20, ..Default::default() };
+        let mut gp = MvmGp::new(xs, ys, GpHypers::init_for_dim(8), cfg);
+        gp.refresh();
+        // 100⁸ cells blows any budget — no cache, but prediction works.
+        assert!(gp.predict_cache().is_none());
+        let pred = gp.predict_mean(&xt);
+        assert_eq!(pred.len(), xt.rows);
+        assert!(pred.iter().all(|p| p.is_finite()));
+    }
+
+    #[test]
+    fn predict_var_matches_exact_gp() {
+        use crate::gp::exact::ExactGp;
+        let (xs, ys, xt_all, _) = toy(150, 2, 9);
+        // A 20-point query block keeps the debug-build block-CG quick.
+        let xt = Matrix::from_fn(20, 2, |i, j| xt_all.get(i, j));
+        let h = GpHypers::new(0.7, 1.0, 0.1);
+        let mut exact = ExactGp::new(xs.clone(), ys.clone(), h);
+        exact.refresh().unwrap();
+        let want = exact.predict_var(&xt);
+        let cfg =
+            MvmGpConfig { grid_m: 64, rank: 40, refresh_rank: 40, ..Default::default() };
+        let mut gp = MvmGp::new(xs, ys, h, cfg);
+        gp.refresh();
+        let got = gp.predict_var(&xt);
+        assert!(mae(&got, &want) < 0.05, "var mae {}", mae(&got, &want));
+        for v in &got {
+            assert!(*v > 0.0 && *v <= h.sf2() + 1e-9);
+        }
+    }
+
+    #[test]
+    fn predict_var_small_at_data_large_far_away() {
+        let (xs, ys, _, _) = toy(120, 2, 10);
+        let x0 = [xs.get(0, 0), xs.get(0, 1)];
+        let cfg = MvmGpConfig { grid_m: 48, ..Default::default() };
+        let mut gp = MvmGp::new(xs, ys, GpHypers::new(0.6, 1.0, 0.01), cfg);
+        gp.refresh();
+        let xt = Matrix::from_vec(2, 2, vec![x0[0], x0[1], 50.0, -50.0]);
+        let var = gp.predict_var(&xt);
+        assert!(var[0] < 0.1, "at-data var {}", var[0]);
+        assert!(var[1] > 0.9, "far-field var {}", var[1]);
     }
 
     #[test]

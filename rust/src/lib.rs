@@ -28,6 +28,13 @@
 //! per-iteration MVMs of simultaneous right-hand sides / probes into
 //! single block traversals.
 //!
+//! Trained models deploy through the **serving subsystem** ([`serve`]):
+//! versioned model snapshots freeze the predictive caches onto the
+//! inducing grid, after which each query costs one sparse
+//! interpolation-stencil dot (mean) plus a rank-r gemv (variance), and a
+//! request batcher + TCP front-end (`skip-gp serve`) coalesce concurrent
+//! traffic into blocks for the batched engine.
+//!
 //! See `ARCHITECTURE.md` at the repository root for the three-layer
 //! design, a paper-equation → module map, and the batched-MVM data flow;
 //! `README.md` covers how to build, test, and run the harness.
@@ -41,6 +48,7 @@ pub mod kernels;
 pub mod linalg;
 pub mod operators;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod util;
 

@@ -4,6 +4,8 @@
 //! skip-gp bench <experiment> [options]   regenerate a paper table/figure
 //! skip-gp bench all [options]            run every experiment
 //! skip-gp train [options]                train a SKIP GP on a dataset
+//! skip-gp snapshot [options]             train + freeze a model snapshot
+//! skip-gp serve --snapshot F [options]   serve predictions over TCP
 //! skip-gp artifacts [--dir D]            inspect / smoke-test AOT artifacts
 //! skip-gp list                           list datasets and experiments
 //! ```
@@ -16,11 +18,16 @@ use skip_gp::data::{dataset_by_name, generate, DATASETS};
 use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant};
 use skip_gp::harness::{fig2, fig3, fig4, mtgp_speed, table1, table2};
 use skip_gp::runtime::PjrtBackend;
+use skip_gp::serve::{
+    BatcherConfig, ModelSnapshot, ServeEngine, Server, ServerConfig, SnapshotConfig,
+    VarianceMode,
+};
 use skip_gp::util::{mae, Timer};
 use skip_gp::{Error, Result};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Parsed `--key value` / `--flag` options.
 struct Opts {
@@ -77,6 +84,10 @@ USAGE:
                 [--dataset NAME] [--trials N] [--n N] [--full]
   skip-gp train  [--dataset NAME] [--scale F] [--steps N] [--rank R]
                  [--grid M] [--variant skip|kiss] [--pjrt]
+  skip-gp snapshot [--dataset NAME] [--scale F] [--steps N] [--rank R]
+                   [--grid M] [--variant skip|kiss] [--out F]
+                   [--serve-grid M] [--var exact|lanczos|none] [--var-rank R]
+  skip-gp serve  --snapshot F [--bind ADDR] [--max-batch N] [--max-wait-ms F]
   skip-gp artifacts [--dir D]
   skip-gp list"
     );
@@ -93,6 +104,8 @@ fn main() {
     let code = match cmd {
         "bench" => cmd_bench(rest),
         "train" => cmd_train(rest),
+        "snapshot" => cmd_snapshot(rest),
+        "serve" => cmd_serve(rest),
         "artifacts" => cmd_artifacts(rest),
         "list" => cmd_list(),
         "-h" | "--help" | "help" => usage(),
@@ -200,6 +213,111 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         gp.hypers.sn2()
     );
     Ok(())
+}
+
+/// Train a model (like `train`) and freeze it into a snapshot file.
+fn cmd_snapshot(rest: &[String]) -> Result<()> {
+    let opts = Opts::parse(rest)?;
+    let name = opts.get_str("dataset").unwrap_or_else(|| "power".into());
+    let spec = dataset_by_name(&name)
+        .ok_or_else(|| Error::Config(format!("unknown dataset '{name}'")))?;
+    let scale: f64 = opts.get("scale", 0.05)?;
+    let steps: usize = opts.get("steps", 10)?;
+    let rank: usize = opts.get("rank", 15)?;
+    let grid_m: usize = opts.get("grid", 64)?;
+    let out = PathBuf::from(opts.get_str("out").unwrap_or_else(|| "model.snap".into()));
+    let variant = match opts.get_str("variant").as_deref() {
+        None | Some("skip") => MvmVariant::Skip,
+        Some("kiss") => MvmVariant::Kiss,
+        Some(v) => return Err(Error::Config(format!("unknown variant '{v}'"))),
+    };
+    let var_rank: usize = opts.get("var-rank", 64)?;
+    let variance = match opts.get_str("var").as_deref() {
+        None | Some("lanczos") => VarianceMode::Lanczos(var_rank),
+        Some("exact") => VarianceMode::Exact,
+        Some("none") => VarianceMode::None,
+        Some(v) => return Err(Error::Config(format!("unknown variance mode '{v}'"))),
+    };
+    let data = generate(spec, scale);
+    println!(
+        "training {} GP on {} (n={}, d={}, steps={steps})",
+        if variant == MvmVariant::Skip { "SKIP" } else { "KISS" },
+        name,
+        data.n(),
+        data.d()
+    );
+    let mut gp = MvmGp::new(
+        data.xtrain.clone(),
+        data.ytrain.clone(),
+        GpHypers::init_for_dim(data.d()),
+        MvmGpConfig { variant, grid_m, rank, ..Default::default() },
+    );
+    let t = Timer::start();
+    gp.fit(steps, 0.1);
+    let train_s = t.elapsed_s();
+    let pred = gp.predict_mean(&data.xtest);
+    println!(
+        "trained in {train_s:.1}s, test MAE {:.4}; building predictive caches…",
+        mae(&pred, &data.ytest)
+    );
+    let t = Timer::start();
+    let serve_grid: usize = opts.get("serve-grid", 0)?;
+    let snap = ModelSnapshot::from_mvm(
+        &gp,
+        &SnapshotConfig { grid_m: serve_grid, variance, ..Default::default() },
+    )?;
+    snap.save(&out)?;
+    let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "wrote {} ({} grid cells, variance rank {}, cache built in {:.2}s, {} bytes)",
+        out.display(),
+        snap.cache.total_grid(),
+        snap.cache.var_rank(),
+        t.elapsed_s(),
+        bytes
+    );
+    Ok(())
+}
+
+/// Serve a snapshot over the TCP line protocol until interrupted.
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let opts = Opts::parse(rest)?;
+    let path = PathBuf::from(
+        opts.get_str("snapshot")
+            .ok_or_else(|| Error::Config("serve requires --snapshot FILE".into()))?,
+    );
+    let bind = opts.get_str("bind").unwrap_or_else(|| "127.0.0.1:7470".into());
+    let max_batch: usize = opts.get("max-batch", 64)?;
+    let max_wait_ms: f64 = opts.get("max-wait-ms", 2.0)?;
+    let snap = ModelSnapshot::load(&path)?;
+    println!(
+        "loaded {} (d={}, {} grid cells, variance rank {}, format v{})",
+        path.display(),
+        snap.cache.dim(),
+        snap.cache.total_grid(),
+        snap.cache.var_rank(),
+        snap.version
+    );
+    let engine = Arc::new(ServeEngine::new(snap)?);
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig {
+            bind,
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: Duration::from_secs_f64(max_wait_ms / 1e3),
+            },
+        },
+    )?;
+    println!(
+        "serving on {} (line protocol: `predict x1 … xd`, `stats`, `quit`)",
+        server.addr()
+    );
+    // Foreground serving loop: periodic stats until the process is killed.
+    loop {
+        std::thread::sleep(Duration::from_secs(30));
+        println!("stats: {}", engine.stats_line());
+    }
 }
 
 fn cmd_bench(rest: &[String]) -> Result<()> {

@@ -83,6 +83,63 @@ pub fn cubic_stencil(x: f64, grid: &Grid1d) -> (usize, [f64; STENCIL]) {
     (base, row_w)
 }
 
+/// Row-major strides of a tensor-product grid with per-dimension sizes
+/// `dims` (dimension 0 slowest — the layout shared by [`super::kronecker`]
+/// and the serving layer's grid-side predictive caches).
+pub fn tensor_strides(dims: &[usize]) -> Vec<usize> {
+    let d = dims.len();
+    let mut strides = vec![1usize; d];
+    for k in (0..d.saturating_sub(1)).rev() {
+        strides[k] = strides[k + 1] * dims[k + 1];
+    }
+    strides
+}
+
+/// Maximum tensor-stencil dimensionality (4ᵈ weights per point becomes
+/// astronomically large long before this bound binds).
+pub const MAX_TENSOR_DIM: usize = 16;
+
+/// Tensor-product cubic stencil of the d-dimensional point `x` on the
+/// per-dimension grids `grids`: calls `emit(flat_index, weight)` for each
+/// of the 4ᵈ (flat grid index, product weight) pairs, in the fixed order
+/// where the last dimension's offset varies fastest. `strides` must be
+/// [`tensor_strides`] of the grid sizes.
+///
+/// This is the single-point stencil-extraction primitive shared by the
+/// KISS-GP operator's interpolation matrix and the O(1)-per-point
+/// predictive caches in `crate::serve::cache`.
+pub fn tensor_stencil<F: FnMut(usize, f64)>(
+    x: &[f64],
+    grids: &[Grid1d],
+    strides: &[usize],
+    mut emit: F,
+) {
+    let d = grids.len();
+    debug_assert_eq!(x.len(), d);
+    debug_assert_eq!(strides.len(), d);
+    assert!(d <= MAX_TENSOR_DIM, "tensor stencil supports d <= {MAX_TENSOR_DIM}");
+    let mut bases = [0usize; MAX_TENSOR_DIM];
+    let mut wts = [[0.0f64; STENCIL]; MAX_TENSOR_DIM];
+    for k in 0..d {
+        let (b, ws) = cubic_stencil(x[k], &grids[k]);
+        bases[k] = b;
+        wts[k] = ws;
+    }
+    let size = STENCIL.pow(d as u32);
+    for c in 0..size {
+        let mut flat = 0usize;
+        let mut weight = 1.0;
+        let mut cc = c;
+        for k in (0..d).rev() {
+            let o = cc % STENCIL;
+            cc /= STENCIL;
+            flat += (bases[k] + o) * strides[k];
+            weight *= wts[k][o];
+        }
+        emit(flat, weight);
+    }
+}
+
 /// Fixed-width sparse interpolation matrix W (n × m, 4 nnz per row).
 #[derive(Clone, Debug)]
 pub struct InterpMatrix {
@@ -286,6 +343,46 @@ mod tests {
                     assert!((a - b).abs() < 1e-14, "t_matmat col {j}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn tensor_stencil_matches_1d_interp_matrix() {
+        let g = Grid1d::fit(0.0, 1.0, 16);
+        let mut rng = Rng::new(12);
+        let xs = rng.uniform_vec(20, 0.0, 1.0);
+        let w = InterpMatrix::new(&xs, &g);
+        let grids = [g];
+        let strides = tensor_strides(&[16]);
+        for (i, &x) in xs.iter().enumerate() {
+            let mut got: Vec<(usize, f64)> = Vec::new();
+            tensor_stencil(&[x], &grids, &strides, |g, wt| got.push((g, wt)));
+            assert_eq!(got.len(), STENCIL);
+            for (k, (gi, wt)) in got.iter().enumerate() {
+                assert_eq!(*gi, w.idx[i * STENCIL + k] as usize);
+                assert_eq!(*wt, w.w[i * STENCIL + k]);
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_stencil_partition_of_unity_2d() {
+        let gx = Grid1d::fit(-1.0, 1.0, 12);
+        let gy = Grid1d::fit(0.0, 2.0, 9);
+        let strides = tensor_strides(&[12, 9]);
+        assert_eq!(strides, vec![9, 1]);
+        let mut rng = Rng::new(13);
+        for _ in 0..25 {
+            let x = [rng.uniform_in(-1.0, 1.0), rng.uniform_in(0.0, 2.0)];
+            let mut sum = 0.0;
+            let mut count = 0;
+            tensor_stencil(&x, &[gx.clone(), gy.clone()], &strides, |flat, w| {
+                assert!(flat < 12 * 9);
+                sum += w;
+                count += 1;
+            });
+            assert_eq!(count, STENCIL * STENCIL);
+            assert!((sum - 1.0).abs() < 1e-10, "2-D partition of unity: {sum}");
         }
     }
 

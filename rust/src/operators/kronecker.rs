@@ -7,11 +7,45 @@
 //! O(4ᵈ n + d M log m): *exponential in d* — exactly the curse of
 //! dimensionality SKIP removes.
 
-use super::interp::{cubic_stencil, Grid1d, STENCIL};
+use super::interp::{tensor_stencil, tensor_strides, Grid1d, STENCIL};
 use super::LinearOp;
 use crate::kernels::ProductKernel;
 use crate::linalg::{Matrix, SymToeplitz};
 use crate::util::parallel::par_map_range;
+
+/// `(T₁ ⊗ ⋯ ⊗ T_d) u` via mode-wise Toeplitz application, for a
+/// row-major tensor grid with per-dimension sizes `dims` (dimension 0
+/// slowest). Shared by the KISS-GP operator and the serving layer's
+/// grid-side predictive caches (`crate::serve::cache`), which apply the
+/// same grid kernel to mean/variance caches at snapshot-build time.
+pub fn kron_toeplitz_matvec(factors: &[SymToeplitz], dims: &[usize], u: &[f64]) -> Vec<f64> {
+    let d = dims.len();
+    assert_eq!(factors.len(), d);
+    debug_assert_eq!(u.len(), dims.iter().product::<usize>());
+    let mut cur = u.to_vec();
+    for k in 0..d {
+        let mk = dims[k];
+        // Stride between consecutive indices along mode k.
+        let stride: usize = dims[k + 1..].iter().product();
+        let outer: usize = dims[..k].iter().product();
+        let mut next = vec![0.0; cur.len()];
+        let mut fiber = vec![0.0; mk];
+        for o in 0..outer {
+            for s in 0..stride {
+                let start = o * mk * stride + s;
+                for t in 0..mk {
+                    fiber[t] = cur[start + t * stride];
+                }
+                let res = factors[k].matvec(&fiber);
+                for t in 0..mk {
+                    next[start + t * stride] = res[t];
+                }
+            }
+        }
+        cur = next;
+    }
+    cur
+}
 
 /// Tensor-product SKI operator over a d-dimensional grid.
 pub struct KroneckerSkiOp {
@@ -53,37 +87,17 @@ impl KroneckerSkiOp {
             grids.push(grid);
         }
         let total_grid: usize = grids.iter().map(|g| g.m).product();
-        // Tensor-product interpolation weights.
+        // Tensor-product interpolation weights via the shared single-point
+        // stencil primitive (row-major flat index, dim 0 slowest).
+        let dims: Vec<usize> = grids.iter().map(|g| g.m).collect();
+        let strides = tensor_strides(&dims);
         let mut idx = Vec::with_capacity(n * stencil_sz);
         let mut w = Vec::with_capacity(n * stencil_sz);
-        // Row-major flat index: dim 0 slowest.
-        let mut strides = vec![1usize; d];
-        for k in (0..d.saturating_sub(1)).rev() {
-            strides[k] = strides[k + 1] * grids[k + 1].m;
-        }
-        let mut bases = vec![0usize; d];
-        let mut wts = vec![[0.0; STENCIL]; d];
         for i in 0..n {
-            let row = xs.row(i);
-            for k in 0..d {
-                let (b, ws) = cubic_stencil(row[k], &grids[k]);
-                bases[k] = b;
-                wts[k] = ws;
-            }
-            // Enumerate the 4ᵈ stencil combinations.
-            for c in 0..stencil_sz {
-                let mut flat = 0usize;
-                let mut weight = 1.0;
-                let mut cc = c;
-                for k in (0..d).rev() {
-                    let o = cc % STENCIL;
-                    cc /= STENCIL;
-                    flat += (bases[k] + o) * strides[k];
-                    weight *= wts[k][o];
-                }
+            tensor_stencil(xs.row(i), &grids, &strides, |flat, weight| {
                 idx.push(flat as u32);
                 w.push(weight);
-            }
+            });
         }
         KroneckerSkiOp {
             grids,
@@ -131,32 +145,8 @@ impl KroneckerSkiOp {
 
     /// `(T₁ ⊗ ⋯ ⊗ T_d) u` via mode-wise Toeplitz application.
     fn kron_matvec(&self, u: &[f64]) -> Vec<f64> {
-        let d = self.grids.len();
-        let mut cur = u.to_vec();
-        // Strides for row-major layout, dim 0 slowest.
         let dims: Vec<usize> = self.grids.iter().map(|g| g.m).collect();
-        for k in 0..d {
-            let mk = dims[k];
-            // Stride between consecutive indices along mode k.
-            let stride: usize = dims[k + 1..].iter().product();
-            let outer: usize = dims[..k].iter().product();
-            let mut next = vec![0.0; cur.len()];
-            let mut fiber = vec![0.0; mk];
-            for o in 0..outer {
-                for s in 0..stride {
-                    let start = o * mk * stride + s;
-                    for t in 0..mk {
-                        fiber[t] = cur[start + t * stride];
-                    }
-                    let res = self.factors[k].matvec(&fiber);
-                    for t in 0..mk {
-                        next[start + t * stride] = res[t];
-                    }
-                }
-            }
-            cur = next;
-        }
-        cur
+        kron_toeplitz_matvec(&self.factors, &dims, u)
     }
 }
 

@@ -14,8 +14,8 @@ pub mod ski;
 pub mod skip;
 pub mod task;
 
-pub use interp::{Grid1d, InterpMatrix};
-pub use kronecker::KroneckerSkiOp;
+pub use interp::{tensor_stencil, tensor_strides, Grid1d, InterpMatrix};
+pub use kronecker::{kron_toeplitz_matvec, KroneckerSkiOp};
 pub use lowrank::{ContractionBackend, LanczosFactor, NativeBackend};
 pub use ski::SkiOp;
 pub use skip::{SkipComponent, SkipOp};

@@ -1,0 +1,198 @@
+//! Request batcher: coalesce concurrent predict requests into blocks.
+//!
+//! Serving cost per query is tiny (one stencil dot + a rank-r gemv, see
+//! [`super::cache`]), so at high request rates the *dispatch* — channel
+//! hops, thread wake-ups, per-call bookkeeping — dominates. The batcher
+//! amortizes it: a worker drains the request queue into blocks of up to
+//! `max_batch` points (waiting at most `max_wait` for stragglers once the
+//! first request of a batch has arrived), pushes the whole n×t block
+//! through [`ServeEngine::predict`] in one call, and fans the answers back
+//! out over per-request channels. Under load the queue is never empty, so
+//! batches fill instantly and `max_wait` only bounds the latency of a
+//! lonely request on an idle server.
+//!
+//! Per-request latency (enqueue → response ready) is recorded into the
+//! engine's [`Metrics`] latency histogram under `"serve.request"`, and the
+//! realized batch sizes under `"serve.batch_size"` — the two numbers the
+//! throughput bench reports.
+//!
+//! [`Metrics`]: crate::coordinator::Metrics
+
+use super::server::ServeEngine;
+use crate::linalg::Matrix;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// Largest block a single [`ServeEngine::predict`] call may carry.
+    pub max_batch: usize,
+    /// How long the worker waits for stragglers after the first request
+    /// of a batch arrives (zero ⇒ never wait; serve whatever is queued).
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+struct Request {
+    x: Vec<f64>,
+    enqueued: Instant,
+    resp: Sender<PredictResponse>,
+}
+
+/// One served prediction plus its request-level accounting.
+#[derive(Clone, Copy, Debug)]
+pub struct PredictResponse {
+    pub mean: f64,
+    /// Latent predictive variance (add the snapshot's σ_n² for y-variance).
+    pub var: f64,
+    /// Enqueue → response-ready latency.
+    pub latency: Duration,
+    /// Size of the block this request was served in.
+    pub batch_size: usize,
+}
+
+/// Cloneable submission endpoint; safe to hand to many client threads.
+#[derive(Clone)]
+pub struct BatchHandle {
+    tx: Sender<Request>,
+    dim: usize,
+}
+
+impl BatchHandle {
+    /// Enqueue a query; the returned receiver yields the response when its
+    /// batch completes. Submitting without immediately blocking lets a
+    /// client keep a pipeline of outstanding requests.
+    pub fn submit(&self, x: &[f64]) -> Receiver<PredictResponse> {
+        assert_eq!(x.len(), self.dim, "query dimensionality mismatch");
+        let (tx, rx) = channel();
+        let req = Request {
+            x: x.to_vec(),
+            enqueued: Instant::now(),
+            resp: tx,
+        };
+        // A send error means the batcher shut down; the receiver will
+        // report it as a disconnect on recv.
+        let _ = self.tx.send(req);
+        rx
+    }
+
+    /// Submit and block for the answer.
+    pub fn predict(&self, x: &[f64]) -> PredictResponse {
+        self.submit(x)
+            .recv()
+            .expect("request batcher shut down while a request was in flight")
+    }
+}
+
+/// The batching worker plus its submission side.
+pub struct RequestBatcher {
+    tx: Option<Sender<Request>>,
+    worker: Option<JoinHandle<()>>,
+    dim: usize,
+}
+
+impl RequestBatcher {
+    /// Spawn the worker thread around `engine`.
+    pub fn start(engine: Arc<ServeEngine>, cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        let (tx, rx) = channel::<Request>();
+        let dim = engine.dim();
+        let worker = std::thread::spawn(move || Self::run(engine, cfg, rx));
+        RequestBatcher {
+            tx: Some(tx),
+            worker: Some(worker),
+            dim,
+        }
+    }
+
+    /// A new submission endpoint.
+    pub fn handle(&self) -> BatchHandle {
+        BatchHandle {
+            tx: self.tx.as_ref().expect("batcher already shut down").clone(),
+            dim: self.dim,
+        }
+    }
+
+    /// Drop the submission side and join the worker. Outstanding handles
+    /// keep the worker alive until they are dropped too; requests already
+    /// queued are still served.
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+
+    fn run(engine: Arc<ServeEngine>, cfg: BatcherConfig, rx: Receiver<Request>) {
+        let d = engine.dim();
+        loop {
+            // Block for the batch's first request.
+            let first = match rx.recv() {
+                Ok(r) => r,
+                Err(_) => return, // all senders gone — clean shutdown
+            };
+            let mut batch = Vec::with_capacity(cfg.max_batch);
+            batch.push(first);
+            let deadline = Instant::now() + cfg.max_wait;
+            while batch.len() < cfg.max_batch {
+                match rx.try_recv() {
+                    Ok(r) => batch.push(r),
+                    Err(TryRecvError::Disconnected) => break,
+                    Err(TryRecvError::Empty) => {
+                        let now = Instant::now();
+                        if now >= deadline {
+                            break;
+                        }
+                        match rx.recv_timeout(deadline - now) {
+                            Ok(r) => batch.push(r),
+                            Err(RecvTimeoutError::Timeout)
+                            | Err(RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                }
+            }
+
+            let t = batch.len();
+            let mut block = Matrix::zeros(t, d);
+            for (i, r) in batch.iter().enumerate() {
+                block.row_mut(i).copy_from_slice(&r.x);
+            }
+            let (means, vars) = engine.predict(&block);
+            let done = Instant::now();
+            let mut latencies = Vec::with_capacity(t);
+            for (i, r) in batch.into_iter().enumerate() {
+                let latency = done.saturating_duration_since(r.enqueued);
+                latencies.push(latency.as_secs_f64());
+                // A dropped receiver (client gone) is not an error.
+                let _ = r.resp.send(PredictResponse {
+                    mean: means[i],
+                    var: vars[i],
+                    latency,
+                    batch_size: t,
+                });
+            }
+            engine.metrics.record_latency_many("serve.request", &latencies);
+            engine.metrics.observe("serve.batch_size", t as u64);
+        }
+    }
+}
+
+impl Drop for RequestBatcher {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}

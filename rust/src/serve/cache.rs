@@ -1,0 +1,467 @@
+//! O(1)-per-point predictive caches on the inducing grid.
+//!
+//! KISS-GP's observation (Wilson & Nickisch, 2015) is that once a model is
+//! trained, the SKI structure makes *prediction* nearly free: the
+//! cross-covariance `k(x*, X) ≈ w(x*) K_UU Wᵀ` touches the query point
+//! only through its 4ᵈ-sparse tensor interpolation stencil `w(x*)`, so
+//! every training-data-sized quantity can be pushed onto the grid **once**
+//! at snapshot-build time:
+//!
+//! - **mean cache** `u = σ_f² (⊗K_UU)(Wᵀ α)` (length M = Π m_k): the
+//!   predictive mean collapses to one sparse stencil dot,
+//!   `μ(x*) = w(x*) · u`, in O(4ᵈ) per query;
+//! - **variance cache** `R = σ_f² (⊗K_UU)(Wᵀ S)` (M × r, where
+//!   `K̂⁻¹ ≈ S Sᵀ`): the predictive variance collapses to a rank-r gemv
+//!   against the stencil rows, `σ²(x*) = k** − ‖Rᵀ w(x*)‖²`, in O(4ᵈ r).
+//!
+//! `S` comes from either the exact Cholesky root `L⁻ᵀ` (rank n, small
+//! problems) or r Lanczos iterations on the training operator
+//! (`K̂⁻¹ ≈ Q T⁻¹ Qᵀ`, the LOVE-style low-rank route) — see
+//! [`inverse_root_exact`] / [`inverse_root_lanczos`].
+//!
+//! Cache construction itself rides the batched engine: the r variance
+//! columns go through the Kronecker–Toeplitz grid apply in parallel
+//! (`util::parallel`), and the per-point stencil scatter decodes each
+//! training row once for all r columns — the same single-decode idiom as
+//! `KroneckerSkiOp::matmat`.
+
+use crate::gp::GpHypers;
+use crate::kernels::Stationary1d;
+use crate::linalg::{Cholesky, Matrix, SymToeplitz};
+use crate::operators::{kron_toeplitz_matvec, tensor_stencil, tensor_strides, Grid1d, LinearOp};
+use crate::solvers::lanczos::lanczos;
+use crate::util::parallel::par_map_range;
+use crate::{Error, Result};
+
+/// How to build the data-side inverse-root factor `S` (`K̂⁻¹ ≈ S Sᵀ`) for
+/// the variance cache.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum VarianceMode {
+    /// Mean-only cache; predictive variance is unavailable from it.
+    None,
+    /// Exact `S = L⁻ᵀ` from a dense Cholesky of K̂ (rank n — O(n³) once
+    /// at snapshot time; the right call for n up to a few thousand).
+    Exact,
+    /// `S = Q C⁻ᵀ` from r Lanczos iterations on the training operator
+    /// (`T = C Cᵀ`), rank r ≪ n.
+    Lanczos(usize),
+}
+
+/// Grid-side predictive cache: everything a prediction needs, with no
+/// reference to the training data.
+#[derive(Clone, Debug)]
+pub struct PredictCache {
+    /// Per-dimension inducing grids (the snapshot's grid spec).
+    pub grids: Vec<Grid1d>,
+    /// Mean cache `σ_f² (⊗K)(Wᵀα)`, length M = Π m_k.
+    pub mean: Vec<f64>,
+    /// Variance factor `R = σ_f² (⊗K)(Wᵀ S)`, M × r (zero columns ⇒ no
+    /// variance cache).
+    pub var_r: Matrix,
+    /// Prior latent variance k** = σ_f².
+    pub prior_var: f64,
+    /// Observation noise σ_n² (add to the latent variance for y-variance).
+    pub noise: f64,
+    /// Row-major strides of the tensor grid (derived from `grids`).
+    strides: Vec<usize>,
+}
+
+impl PredictCache {
+    /// Assemble from parts (used by the snapshot loader); validates that
+    /// the buffer sizes agree with the grid spec.
+    pub fn from_parts(
+        grids: Vec<Grid1d>,
+        mean: Vec<f64>,
+        var_r: Matrix,
+        prior_var: f64,
+        noise: f64,
+    ) -> Result<Self> {
+        let dims: Vec<usize> = grids.iter().map(|g| g.m).collect();
+        let total: usize = dims.iter().product();
+        if mean.len() != total {
+            return Err(Error::DimMismatch {
+                context: "predict cache mean buffer",
+                expected: total,
+                got: mean.len(),
+            });
+        }
+        if var_r.cols > 0 && var_r.rows != total {
+            return Err(Error::DimMismatch {
+                context: "predict cache variance factor rows",
+                expected: total,
+                got: var_r.rows,
+            });
+        }
+        let strides = tensor_strides(&dims);
+        Ok(PredictCache { grids, mean, var_r, prior_var, noise, strides })
+    }
+
+    /// Input dimensionality d.
+    pub fn dim(&self) -> usize {
+        self.grids.len()
+    }
+
+    /// Total grid size M = Π m_k.
+    pub fn total_grid(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Rank r of the variance cache (0 ⇒ mean-only).
+    pub fn var_rank(&self) -> usize {
+        self.var_r.cols
+    }
+
+    /// True iff a variance cache was built.
+    pub fn has_variance(&self) -> bool {
+        self.var_r.cols > 0
+    }
+
+    /// Predictive mean at one point: one sparse stencil dot, O(4ᵈ).
+    pub fn predict_mean_one(&self, x: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        tensor_stencil(x, &self.grids, &self.strides, |g, w| {
+            acc += w * self.mean[g];
+        });
+        acc
+    }
+
+    /// Latent predictive variance at one point:
+    /// `k** − ‖Rᵀ w(x*)‖²`, O(4ᵈ · r). Clamped at 1e-12 like
+    /// `ExactGp::predict_var`.
+    pub fn predict_var_one(&self, x: &[f64]) -> f64 {
+        assert!(self.has_variance(), "cache was built without a variance factor");
+        with_rank_scratch(self.var_r.cols, |acc| {
+            tensor_stencil(x, &self.grids, &self.strides, |g, w| {
+                let row = self.var_r.row(g);
+                for (a, &v) in acc.iter_mut().zip(row.iter()) {
+                    *a += w * v;
+                }
+            });
+            let reduce: f64 = acc.iter().map(|a| a * a).sum();
+            (self.prior_var - reduce).max(1e-12)
+        })
+    }
+
+    /// Batched predictive means for an n*×d block (parallel across row
+    /// chunks for large batches; per-row arithmetic is identical to
+    /// [`predict_mean_one`](Self::predict_mean_one), so batched and
+    /// one-at-a-time serving agree bitwise).
+    pub fn predict_mean(&self, xtest: &Matrix) -> Vec<f64> {
+        assert_eq!(xtest.cols, self.dim(), "query dimensionality mismatch");
+        par_map_range(xtest.rows, 256, |i| self.predict_mean_one(xtest.row(i)))
+    }
+
+    /// Batched latent predictive variances (see
+    /// [`predict_mean`](Self::predict_mean) for the equivalence contract).
+    pub fn predict_var(&self, xtest: &Matrix) -> Vec<f64> {
+        assert_eq!(xtest.cols, self.dim(), "query dimensionality mismatch");
+        par_map_range(xtest.rows, 256, |i| self.predict_var_one(xtest.row(i)))
+    }
+
+    /// (mean, latent variance) at one point in a **single** stencil pass:
+    /// the 4ᵈ weights are decoded once and feed both the mean dot and the
+    /// rank-r variance accumulator. The accumulation order per output
+    /// matches [`predict_mean_one`](Self::predict_mean_one) /
+    /// [`predict_var_one`](Self::predict_var_one) exactly, so the fused
+    /// path is bitwise identical to the two separate ones.
+    pub fn predict_one(&self, x: &[f64]) -> (f64, f64) {
+        assert!(self.has_variance(), "cache was built without a variance factor");
+        with_rank_scratch(self.var_r.cols, |acc| {
+            let mut mean = 0.0;
+            tensor_stencil(x, &self.grids, &self.strides, |g, w| {
+                mean += w * self.mean[g];
+                let row = self.var_r.row(g);
+                for (a, &v) in acc.iter_mut().zip(row.iter()) {
+                    *a += w * v;
+                }
+            });
+            let reduce: f64 = acc.iter().map(|a| a * a).sum();
+            (mean, (self.prior_var - reduce).max(1e-12))
+        })
+    }
+
+    /// Batched (means, variances), one fused stencil pass per row.
+    pub fn predict(&self, xtest: &Matrix) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(xtest.cols, self.dim(), "query dimensionality mismatch");
+        let rows = par_map_range(xtest.rows, 256, |i| self.predict_one(xtest.row(i)));
+        rows.into_iter().unzip()
+    }
+
+    /// Build the cache from training data and a cached solve.
+    ///
+    /// - `xs`: n × d training inputs (consumed only at build time);
+    /// - `alpha`: the cached solve `K̂⁻¹ y`;
+    /// - `s`: optional n × r inverse-root factor with `K̂⁻¹ ≈ S Sᵀ`
+    ///   (None ⇒ mean-only cache);
+    /// - `grids`: per-dimension inducing grids (usually
+    ///   [`fit_grids`]`(xs, m)`, or explicit grids for on-grid tests).
+    pub fn build(
+        xs: &Matrix,
+        alpha: &[f64],
+        hypers: &GpHypers,
+        grids: Vec<Grid1d>,
+        s: Option<&Matrix>,
+    ) -> Result<Self> {
+        assert_eq!(xs.rows, alpha.len());
+        assert_eq!(xs.cols, grids.len());
+        let dims: Vec<usize> = grids.iter().map(|g| g.m).collect();
+        let strides = tensor_strides(&dims);
+        let total: usize = dims.iter().product();
+        let kern = Stationary1d::rbf(hypers.ell());
+        let factors: Vec<SymToeplitz> = grids
+            .iter()
+            .map(|g| SymToeplitz::new(kern.toeplitz_column(g.m, g.h)))
+            .collect();
+
+        // Mean cache: scatter Wᵀα onto the grid, one stencil decode per
+        // training point, then one Kronecker–Toeplitz apply.
+        let mut wta = vec![0.0; total];
+        for i in 0..xs.rows {
+            let a = alpha[i];
+            tensor_stencil(xs.row(i), &grids, &strides, |g, w| {
+                wta[g] += w * a;
+            });
+        }
+        let mut mean = kron_toeplitz_matvec(&factors, &dims, &wta);
+        for v in mean.iter_mut() {
+            *v *= hypers.sf2();
+        }
+
+        // Variance cache: Wᵀ S scatter (each training row decoded once for
+        // all r columns), then the grid apply per column in parallel.
+        let var_r = match s {
+            None => Matrix::zeros(total, 0),
+            Some(s) => {
+                assert_eq!(s.rows, xs.rows, "inverse-root factor row count");
+                let r = s.cols;
+                let mut wts = Matrix::zeros(total, r);
+                for i in 0..xs.rows {
+                    let srow = s.row(i);
+                    tensor_stencil(xs.row(i), &grids, &strides, |g, w| {
+                        let out = wts.row_mut(g);
+                        for (o, &v) in out.iter_mut().zip(srow) {
+                            *o += w * v;
+                        }
+                    });
+                }
+                let cols =
+                    par_map_range(r, 2, |j| kron_toeplitz_matvec(&factors, &dims, &wts.col(j)));
+                let mut rmat = Matrix::zeros(total, r);
+                for (j, c) in cols.iter().enumerate() {
+                    rmat.set_col(j, c);
+                }
+                for v in rmat.data.iter_mut() {
+                    *v *= hypers.sf2();
+                }
+                rmat
+            }
+        };
+
+        PredictCache::from_parts(grids, mean, var_r, hypers.sf2(), hypers.sn2())
+    }
+}
+
+thread_local! {
+    /// Per-thread rank-r accumulator for the variance gemv — the serving
+    /// hot path must not heap-allocate per query (with `VarianceMode::Exact`
+    /// r = n, and one-at-a-time traffic calls in here per point).
+    static RANK_SCRATCH: std::cell::RefCell<Vec<f64>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Run `f` on a zeroed length-`r` scratch slice reused across calls on
+/// this thread.
+fn with_rank_scratch<R>(r: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
+    RANK_SCRATCH.with(|cell| {
+        let mut v = cell.borrow_mut();
+        v.clear();
+        v.resize(r, 0.0);
+        f(&mut v)
+    })
+}
+
+/// Fit one inducing grid per input dimension, covering the data with the
+/// standard stencil margin (the same per-dimension fit `SkiOp::new` and
+/// `KroneckerSkiOp::new` use).
+pub fn fit_grids(xs: &Matrix, m: usize) -> Vec<Grid1d> {
+    (0..xs.cols)
+        .map(|k| {
+            let col = xs.col(k);
+            let (lo, hi) = col
+                .iter()
+                .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &x| {
+                    (a.min(x), b.max(x))
+                });
+            Grid1d::fit(lo, hi, m)
+        })
+        .collect()
+}
+
+/// Total cells of an m-per-dimension grid in d dimensions, or `None` when
+/// it overflows / exceeds `budget` (guards the exponential mᵈ blow-up).
+pub fn grid_cells_within(m: usize, d: usize, budget: usize) -> Option<usize> {
+    let mut cells = 1usize;
+    for _ in 0..d {
+        cells = cells.checked_mul(m)?;
+        if cells > budget {
+            return None;
+        }
+    }
+    Some(cells)
+}
+
+/// Exact inverse root `S = L⁻ᵀ` (rank n) from a dense Cholesky of K̂:
+/// `S Sᵀ = L⁻ᵀ L⁻¹ = K̂⁻¹`.
+pub fn inverse_root_exact(chol: &Cholesky) -> Matrix {
+    let n = chol.l.rows;
+    chol.solve_upper_mat(&Matrix::eye(n))
+}
+
+/// Low-rank inverse root from `rank` Lanczos iterations of the training
+/// operator started at `probe`: with `K̂ ≈ Q T Qᵀ` and `T = C Cᵀ`,
+/// `S = Q C⁻ᵀ` gives `S Sᵀ = Q T⁻¹ Qᵀ ≈ K̂⁻¹` (the LOVE-style route; the
+/// Krylov space of `probe = y` puts the accuracy where queries near the
+/// data need it).
+pub fn inverse_root_lanczos(
+    op: &dyn LinearOp,
+    probe: &[f64],
+    rank: usize,
+) -> Result<Matrix> {
+    let res = lanczos(op, probe, rank, 1e-10);
+    let t = res.t_dense();
+    let chol = Cholesky::new_with_jitter(&t, 0.0)?;
+    // S = Q C⁻ᵀ  ⇔  Sᵀ = C⁻¹ Qᵀ  ⇔  C Sᵀ = Qᵀ.
+    let st = chol.solve_lower_mat(&res.q.transpose());
+    Ok(st.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gp::ExactGp;
+    use crate::kernels::ProductKernel;
+    use crate::operators::DenseOp;
+    use crate::util::Rng;
+
+    fn toy(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+        let ys: Vec<f64> = (0..n)
+            .map(|i| {
+                xs.row(i).iter().map(|&x| (2.0 * x).sin()).sum::<f64>()
+                    + 0.05 * rng.normal()
+            })
+            .collect();
+        (xs, ys)
+    }
+
+    #[test]
+    fn mean_cache_matches_exact_gp_2d() {
+        let (xs, ys) = toy(200, 2, 1);
+        let h = GpHypers::new(0.7, 1.0, 0.05);
+        let mut gp = ExactGp::new(xs.clone(), ys, h);
+        gp.refresh().unwrap();
+        let alpha = gp.alpha().unwrap().to_vec();
+        let grids = fit_grids(&xs, 64);
+        let cache = PredictCache::build(&xs, &alpha, &h, grids, None).unwrap();
+        let mut rng = Rng::new(2);
+        let xt = Matrix::from_fn(40, 2, |_, _| rng.uniform_in(-0.9, 0.9));
+        let want = gp.predict_mean(&xt);
+        let got = cache.predict_mean(&xt);
+        // Off-grid queries inherit the SKI interpolation error amplified
+        // by ‖α‖₁; the tight (1e-6) algebra check lives in the on-grid
+        // round-trip integration test.
+        let err = crate::util::mae(&got, &want);
+        assert!(err < 2e-2, "stencil mean vs dense mean: mae {err}");
+        assert!(!cache.has_variance());
+    }
+
+    #[test]
+    fn variance_cache_matches_exact_gp_2d() {
+        let (xs, ys) = toy(150, 2, 3);
+        let h = GpHypers::new(0.7, 1.2, 0.05);
+        let mut gp = ExactGp::new(xs.clone(), ys, h);
+        gp.refresh().unwrap();
+        let alpha = gp.alpha().unwrap().to_vec();
+        let s = inverse_root_exact(gp.cholesky().unwrap());
+        let grids = fit_grids(&xs, 64);
+        let cache = PredictCache::build(&xs, &alpha, &h, grids, Some(&s)).unwrap();
+        assert_eq!(cache.var_rank(), 150);
+        let mut rng = Rng::new(4);
+        let xt = Matrix::from_fn(30, 2, |_, _| rng.uniform_in(-0.9, 0.9));
+        let want = gp.predict_var(&xt);
+        let got = cache.predict_var(&xt);
+        let err = crate::util::mae(&got, &want);
+        assert!(err < 5e-2, "stencil var vs dense var: mae {err}");
+        // Variance is bounded by the prior.
+        for v in &got {
+            assert!(*v > 0.0 && *v <= cache.prior_var + 1e-9);
+        }
+    }
+
+    #[test]
+    fn lanczos_root_approximates_inverse() {
+        let mut rng = Rng::new(5);
+        let b = Matrix::from_fn(40, 40, |_, _| rng.normal());
+        let mut a = b.matmul_t(&b);
+        a.add_diag(40.0 * 0.1);
+        let op = DenseOp(a.clone());
+        let probe = rng.normal_vec(40);
+        // Full-rank Lanczos reproduces the inverse.
+        let s = inverse_root_lanczos(&op, &probe, 40).unwrap();
+        let approx = s.matmul_t(&s); // S Sᵀ
+        let kinv = Cholesky::new(&a).unwrap().inverse();
+        assert!(
+            approx.max_abs_diff(&kinv) < 1e-6,
+            "S Sᵀ vs K⁻¹: {}",
+            approx.max_abs_diff(&kinv)
+        );
+    }
+
+    #[test]
+    fn grid_budget_guard() {
+        assert_eq!(grid_cells_within(32, 3, 1 << 21), Some(32768));
+        assert_eq!(grid_cells_within(32, 3, 1000), None);
+        // Overflow-safe for absurd dimensionality.
+        assert_eq!(grid_cells_within(100, 32, 1 << 21), None);
+    }
+
+    #[test]
+    fn batched_predictions_bitwise_equal_one_at_a_time() {
+        let (xs, ys) = toy(80, 2, 6);
+        let h = GpHypers::new(0.8, 1.0, 0.1);
+        let mut gp = ExactGp::new(xs.clone(), ys, h);
+        gp.refresh().unwrap();
+        let alpha = gp.alpha().unwrap().to_vec();
+        let s = inverse_root_exact(gp.cholesky().unwrap());
+        let cache =
+            PredictCache::build(&xs, &alpha, &h, fit_grids(&xs, 32), Some(&s)).unwrap();
+        let mut rng = Rng::new(7);
+        let xt = Matrix::from_fn(300, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let (means, vars) = cache.predict(&xt);
+        for i in 0..xt.rows {
+            assert_eq!(means[i], cache.predict_mean_one(xt.row(i)), "mean row {i}");
+            assert_eq!(vars[i], cache.predict_var_one(xt.row(i)), "var row {i}");
+        }
+    }
+
+    #[test]
+    fn far_field_query_returns_prior() {
+        let (xs, ys) = toy(60, 2, 8);
+        let h = GpHypers::new(0.5, 1.0, 0.05);
+        let kern = ProductKernel::rbf(2, h.ell(), h.sf2());
+        let mut khat = kern.gram_sym(&xs);
+        khat.add_diag(h.sn2());
+        let chol = Cholesky::new(&khat).unwrap();
+        let alpha = chol.solve(&ys);
+        let s = inverse_root_exact(&chol);
+        let cache =
+            PredictCache::build(&xs, &alpha, &h, fit_grids(&xs, 32), Some(&s)).unwrap();
+        // Far outside the grid every stencil weight underflows to zero →
+        // mean 0 (the prior mean) and variance k** (the prior variance),
+        // exactly like the dense far-field limit.
+        let far = Matrix::from_vec(1, 2, vec![500.0, -500.0]);
+        assert_eq!(cache.predict_mean(&far)[0], 0.0);
+        assert!((cache.predict_var(&far)[0] - cache.prior_var).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,49 @@
+//! Layer-3 online prediction serving: snapshots, O(1)-per-point
+//! predictive caches, request batching, and a TCP front-end.
+//!
+//! Training (the paper's subject) reduces GP inference to fast MVMs;
+//! serving reduces *prediction* to almost nothing. Once a model is
+//! trained, every training-data-sized quantity is pushed onto the
+//! inducing grid at snapshot time, after which a query point touches the
+//! model only through its 4ᵈ-sparse interpolation stencil:
+//!
+//! - [`cache`] — the grid-side mean cache `σ_f²(⊗K)(Wᵀα)` (one sparse
+//!   stencil dot per mean) and the low-rank variance factor `R` with
+//!   `σ²(x*) = k** − ‖Rᵀ w(x*)‖²` (one rank-r gemv per variance);
+//! - [`snapshot`] — a versioned, zero-dependency binary format that
+//!   persists hypers, grid spec, `α`, and both caches, and reloads them
+//!   without touching training data;
+//! - [`batcher`] — coalesces concurrent requests into n×t blocks with
+//!   configurable max-batch/max-wait and per-request latency accounting;
+//! - [`server`] — the in-process [`ServeEngine`] and a `std::net` TCP
+//!   line-protocol server behind `skip-gp serve`.
+//!
+//! ```
+//! use skip_gp::gp::{ExactGp, GpHypers};
+//! use skip_gp::linalg::Matrix;
+//! use skip_gp::serve::{ModelSnapshot, SnapshotConfig, VarianceMode};
+//!
+//! // Train a small exact GP…
+//! let xs = Matrix::from_fn(30, 1, |i, _| i as f64 / 10.0);
+//! let ys: Vec<f64> = (0..30).map(|i| (i as f64 / 5.0).sin()).collect();
+//! let mut gp = ExactGp::new(xs, ys, GpHypers::new(0.5, 1.0, 0.01));
+//! gp.refresh().unwrap();
+//!
+//! // …freeze it into a snapshot and predict from the cache alone.
+//! let cfg = SnapshotConfig { grid_m: 32, variance: VarianceMode::Exact, ..Default::default() };
+//! let snap = ModelSnapshot::from_exact(&gp, &cfg).unwrap();
+//! let bytes = snap.to_bytes();
+//! let back = ModelSnapshot::from_bytes(&bytes).unwrap();
+//! let q = Matrix::from_vec(1, 1, vec![1.25]);
+//! assert_eq!(back.cache.predict_mean(&q), snap.cache.predict_mean(&q));
+//! ```
+
+pub mod batcher;
+pub mod cache;
+pub mod server;
+pub mod snapshot;
+
+pub use batcher::{BatchHandle, BatcherConfig, PredictResponse, RequestBatcher};
+pub use cache::{fit_grids, PredictCache, VarianceMode};
+pub use server::{ServeEngine, Server, ServerConfig};
+pub use snapshot::{ModelSnapshot, SnapshotConfig, SnapshotVariant, SNAPSHOT_VERSION};

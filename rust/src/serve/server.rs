@@ -1,0 +1,289 @@
+//! The serving front-end: an in-process [`ServeEngine`] plus a
+//! `std::net` TCP line-protocol server (`skip-gp serve`).
+//!
+//! The engine owns a loaded [`ModelSnapshot`] and a [`Metrics`] registry;
+//! every prediction — one-at-a-time or batched — goes through
+//! [`ServeEngine::predict`], which is where QPS counters and per-batch
+//! timers accumulate. The TCP server accepts any number of concurrent
+//! connections, forwards each request line into a shared
+//! [`RequestBatcher`], and therefore coalesces traffic *across*
+//! connections into blocks.
+//!
+//! # Wire protocol
+//!
+//! One request per line, whitespace-separated; one response line per
+//! request (no HTTP — the offline build has no networking crates, and a
+//! line protocol is trivially scriptable with `nc`):
+//!
+//! ```text
+//! → predict <x1> <x2> … <xd>     (the word `predict` is optional)
+//! ← ok <mean> <variance> <latency_us> <batch_size>
+//! → ping                          ← ok pong
+//! → dim                           ← ok <d>
+//! → stats                         ← ok qps=… p50_us=… p99_us=… served=…
+//! → quit                          (closes the connection)
+//! ← err <message>                 (malformed input; connection stays open)
+//! ```
+//!
+//! Floats are printed with Rust's shortest-round-trip formatting, so a
+//! client parsing them back gets bit-identical values.
+
+use super::batcher::{BatcherConfig, RequestBatcher};
+use super::cache::PredictCache;
+use super::snapshot::ModelSnapshot;
+use crate::coordinator::Metrics;
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// In-process prediction engine over a loaded snapshot.
+pub struct ServeEngine {
+    snapshot: ModelSnapshot,
+    /// QPS counters, per-batch timers, and the request-latency histogram
+    /// (fed by the batcher).
+    pub metrics: Metrics,
+    started: Instant,
+}
+
+impl ServeEngine {
+    /// Wrap a snapshot for serving. Requires a variance cache — a serving
+    /// endpoint that silently returns no uncertainty is a footgun — and
+    /// reports its absence as [`Error::Snapshot`] so CLI callers fail
+    /// cleanly instead of panicking.
+    pub fn new(snapshot: ModelSnapshot) -> Result<Self> {
+        if !snapshot.cache.has_variance() {
+            return Err(Error::Snapshot(
+                "snapshot has no variance cache — rebuild with \
+                 VarianceMode::Exact or VarianceMode::Lanczos (--var exact|lanczos)"
+                    .into(),
+            ));
+        }
+        Ok(ServeEngine {
+            snapshot,
+            metrics: Metrics::new(),
+            started: Instant::now(),
+        })
+    }
+
+    /// Input dimensionality d.
+    pub fn dim(&self) -> usize {
+        self.snapshot.cache.dim()
+    }
+
+    /// The underlying predictive cache.
+    pub fn cache(&self) -> &PredictCache {
+        &self.snapshot.cache
+    }
+
+    /// The snapshot being served.
+    pub fn snapshot(&self) -> &ModelSnapshot {
+        &self.snapshot
+    }
+
+    /// Serve a block of queries: (means, latent variances).
+    pub fn predict(&self, xtest: &Matrix) -> (Vec<f64>, Vec<f64>) {
+        let out = self
+            .metrics
+            .time("serve.predict_block", || self.snapshot.cache.predict(xtest));
+        self.metrics.incr("serve.points", xtest.rows as u64);
+        self.metrics.incr("serve.batches", 1);
+        out
+    }
+
+    /// Points served per wall-clock second since the engine was created.
+    pub fn lifetime_qps(&self) -> f64 {
+        let secs = self.started.elapsed().as_secs_f64().max(1e-9);
+        self.metrics.counter("serve.points") as f64 / secs
+    }
+
+    /// One-line human summary (the `stats` wire command).
+    pub fn stats_line(&self) -> String {
+        let lat = self.metrics.latency_snapshot("serve.request");
+        format!(
+            "qps={:.0} p50_us={:.1} p99_us={:.1} served={} batches={}",
+            self.lifetime_qps(),
+            lat.p50_s * 1e6,
+            lat.p99_s * 1e6,
+            self.metrics.counter("serve.points"),
+            self.metrics.counter("serve.batches"),
+        )
+    }
+}
+
+/// TCP server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bind address, e.g. `"127.0.0.1:7470"` (port 0 picks a free port).
+    pub bind: String,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            bind: "127.0.0.1:7470".to_string(),
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// A running TCP serving endpoint.
+pub struct Server {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    engine: Arc<ServeEngine>,
+}
+
+impl Server {
+    /// Bind and start accepting connections. Each connection gets a
+    /// handler thread; all handlers share one [`RequestBatcher`].
+    pub fn start(engine: Arc<ServeEngine>, cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.bind)?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Config(format!("no local addr: {e}")))?;
+        listener.set_nonblocking(true)?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = shutdown.clone();
+        let eng = engine.clone();
+        // Live-connection registry: handlers deregister (closing the
+        // clone's fd) when their client hangs up; shutdown force-closes
+        // whatever is left so no blocking read can outlive the server.
+        let conn_reg: Arc<Mutex<Vec<(u64, TcpStream)>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = std::thread::spawn(move || {
+            let batcher = RequestBatcher::start(eng.clone(), cfg.batcher);
+            let mut next_id = 0u64;
+            while !flag.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let id = next_id;
+                        next_id += 1;
+                        // Every served connection MUST be registered, or
+                        // shutdown could wait forever on its blocking
+                        // read. If the registry clone fails (fd
+                        // exhaustion), reject the connection instead.
+                        let clone = match stream.try_clone() {
+                            Ok(c) => c,
+                            Err(_) => continue, // drops `stream`, closing it
+                        };
+                        conn_reg.lock().unwrap().push((id, clone));
+                        let handle = batcher.handle();
+                        let engine = eng.clone();
+                        let reg = conn_reg.clone();
+                        std::thread::spawn(move || {
+                            // Client errors only affect that client.
+                            let _ = handle_connection(stream, handle, engine);
+                            reg.lock().unwrap().retain(|(i, _)| *i != id);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    Err(_) => break,
+                }
+            }
+            // Force-close anything still connected so every handler's
+            // blocking read returns, its BatchHandle drops, and the
+            // batcher Drop below can join its worker.
+            for (_, c) in conn_reg.lock().unwrap().drain(..) {
+                let _ = c.shutdown(Shutdown::Both);
+            }
+            // Dropping the batcher joins its worker once the last
+            // connection handler releases its handle.
+        });
+        Ok(Server {
+            addr,
+            shutdown,
+            accept: Some(accept),
+            engine,
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The engine this server fronts.
+    pub fn engine(&self) -> &Arc<ServeEngine> {
+        &self.engine
+    }
+
+    /// Stop accepting and join the accept loop; still-open connections
+    /// are force-closed so shutdown never waits on an idle client.
+    pub fn shutdown(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    handle: super::batcher::BatchHandle,
+    engine: Arc<ServeEngine>,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    let d = engine.dim();
+    for line in reader.lines() {
+        let line = line?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        match trimmed {
+            "quit" => break,
+            "ping" => writeln!(writer, "ok pong")?,
+            "dim" => writeln!(writer, "ok {d}")?,
+            "stats" => writeln!(writer, "ok {}", engine.stats_line())?,
+            _ => {
+                let body = trimmed.strip_prefix("predict").unwrap_or(trimmed);
+                let mut xs = Vec::with_capacity(d);
+                let mut bad = None;
+                for tok in body.split_whitespace() {
+                    match tok.parse::<f64>() {
+                        Ok(v) => xs.push(v),
+                        Err(_) => {
+                            bad = Some(tok.to_string());
+                            break;
+                        }
+                    }
+                }
+                if let Some(tok) = bad {
+                    writeln!(writer, "err not a number: '{tok}'")?;
+                } else if xs.len() != d {
+                    writeln!(writer, "err expected {d} coordinates, got {}", xs.len())?;
+                } else {
+                    let r = handle.predict(&xs);
+                    writeln!(
+                        writer,
+                        "ok {} {} {:.1} {}",
+                        r.mean,
+                        r.var,
+                        r.latency.as_secs_f64() * 1e6,
+                        r.batch_size
+                    )?;
+                }
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,564 @@
+//! Versioned model snapshots: a trained GP frozen into its predictive
+//! caches, serialized to a zero-dependency binary format.
+//!
+//! A snapshot is everything prediction needs and nothing more: the
+//! hyperparameters, the per-dimension inducing-grid spec, the cached solve
+//! `α = K̂⁻¹y`, the grid-side mean cache, and the low-rank variance factor
+//! `R` (see [`super::cache`]). The training inputs are **not** stored —
+//! reload and serve without touching training data.
+//!
+//! # Format (version 1)
+//!
+//! Little-endian throughout:
+//!
+//! ```text
+//! magic      8 bytes  "SKGPSNAP"
+//! version    u32      format version (this file documents version 1)
+//! d          u32      input dimensionality
+//! n          u32      training-set size (length of α)
+//! r          u32      variance-cache rank (0 ⇒ mean-only snapshot)
+//! variant    u32      provenance tag: 0 SKIP, 1 KISS, 2 exact
+//! train_rank u32      Lanczos rank used during training (provenance)
+//! refresh_rank u32    Lanczos rank of the final predictive solve
+//! hypers     3 × f64  log ℓ, log σ_f², log σ_n²
+//! grids      d × (f64 min, f64 h, u32 m)
+//! alpha      n × f64
+//! mean       M × f64  with M = Π m_k
+//! var_r      (M·r) × f64, row-major M × r
+//! checksum   u64      FNV-1a over every preceding byte
+//! ```
+//!
+//! # Versioning rules
+//!
+//! - The version is a single monotonically increasing `u32`. Readers
+//!   accept **exactly** the versions they know; an unknown version is a
+//!   hard error (`Error::Snapshot`), never a best-effort parse.
+//! - Any layout change — field added, removed, reordered, or re-typed —
+//!   bumps the version. There are no optional/variable fields within a
+//!   version.
+//! - Writers always emit the newest version. Old snapshots are migrated
+//!   by re-snapshotting the model, not by in-place rewrites.
+//! - The trailing checksum covers the full payload; readers verify it
+//!   before trusting any field. Corrupt files fail loudly.
+
+use super::cache::{
+    fit_grids, grid_cells_within, inverse_root_exact, inverse_root_lanczos, PredictCache,
+    VarianceMode,
+};
+use crate::gp::{ExactGp, GpHypers, MvmGp, MvmVariant};
+use crate::kernels::ProductKernel;
+use crate::linalg::{Cholesky, Matrix};
+use crate::operators::Grid1d;
+use crate::{Error, Result};
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+/// File magic.
+pub const SNAPSHOT_MAGIC: &[u8; 8] = b"SKGPSNAP";
+/// Current (newest) format version; see the module docs for the rules.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Default cap on stored cache cells — the mean cache's M = Π m_k plus
+/// the variance factor's M·r, i.e. M·(1+r) ≤ this; beyond it the snapshot
+/// builder refuses (or, for the grid-reuse default, shrinks the serving
+/// grid) rather than silently allocating gigabytes. 2²² cells = 32 MB.
+pub const DEFAULT_MAX_GRID_CELLS: usize = 1 << 22;
+
+/// Variance rank a [`VarianceMode`] will produce for an n-point model.
+fn variance_rank(mode: &VarianceMode, n: usize) -> usize {
+    match mode {
+        VarianceMode::None => 0,
+        VarianceMode::Exact => n,
+        VarianceMode::Lanczos(r) => (*r).min(n),
+    }
+}
+
+/// Resolve the per-dimension serving-grid size for a d-dimensional,
+/// n-point model: an explicit `cfg.grid_m` is validated as-is, while the
+/// grid-reuse default (`cfg.grid_m == 0`) starts from `default_m` and
+/// shrinks until the stored cells M·(1+r) fit `cfg.max_grid_cells` (a
+/// coarser serving grid only costs a little interpolation accuracy).
+fn resolve_serving_grid(
+    cfg: &SnapshotConfig,
+    d: usize,
+    n: usize,
+    default_m: usize,
+) -> Result<usize> {
+    let r = variance_rank(&cfg.variance, n);
+    let per_grid_budget = (cfg.max_grid_cells / (1 + r)).max(1);
+    let m = if cfg.grid_m == 0 {
+        let mut m = default_m.max(8);
+        while m > 8 && grid_cells_within(m, d, per_grid_budget).is_none() {
+            m = (m * 3 / 4).max(8);
+        }
+        m
+    } else {
+        cfg.grid_m
+    };
+    grid_cells_within(m, d, per_grid_budget).ok_or_else(|| {
+        Error::Snapshot(format!(
+            "serving grid {m}^{d} with variance rank {r} exceeds the {}-cell budget — \
+             reduce the per-dimension grid size or the variance rank",
+            cfg.max_grid_cells
+        ))
+    })?;
+    Ok(m)
+}
+
+/// Provenance tag: which model family produced the snapshot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SnapshotVariant {
+    Skip,
+    Kiss,
+    Exact,
+}
+
+impl SnapshotVariant {
+    fn to_u32(self) -> u32 {
+        match self {
+            SnapshotVariant::Skip => 0,
+            SnapshotVariant::Kiss => 1,
+            SnapshotVariant::Exact => 2,
+        }
+    }
+
+    fn from_u32(v: u32) -> Result<Self> {
+        match v {
+            0 => Ok(SnapshotVariant::Skip),
+            1 => Ok(SnapshotVariant::Kiss),
+            2 => Ok(SnapshotVariant::Exact),
+            other => Err(Error::Snapshot(format!("unknown variant tag {other}"))),
+        }
+    }
+}
+
+/// Options for building a snapshot from a trained model.
+#[derive(Clone, Debug)]
+pub struct SnapshotConfig {
+    /// Serving-grid points per dimension (0 ⇒ reuse the model's training
+    /// grid size).
+    pub grid_m: usize,
+    /// How to build the variance factor.
+    pub variance: VarianceMode,
+    /// Refuse grids larger than this many cells.
+    pub max_grid_cells: usize,
+}
+
+impl Default for SnapshotConfig {
+    fn default() -> Self {
+        SnapshotConfig {
+            grid_m: 0,
+            variance: VarianceMode::Lanczos(64),
+            max_grid_cells: DEFAULT_MAX_GRID_CELLS,
+        }
+    }
+}
+
+/// A trained model frozen into its predictive caches.
+#[derive(Clone, Debug)]
+pub struct ModelSnapshot {
+    /// Format version this snapshot was read from / will be written as.
+    pub version: u32,
+    pub hypers: GpHypers,
+    pub variant: SnapshotVariant,
+    /// Lanczos rank used during training (provenance only).
+    pub train_rank: u32,
+    /// Lanczos rank of the final predictive solve (provenance only).
+    pub refresh_rank: u32,
+    /// Cached solve `α = K̂⁻¹ y`.
+    pub alpha: Vec<f64>,
+    /// The grid-side predictive cache queries are answered from.
+    pub cache: PredictCache,
+}
+
+impl ModelSnapshot {
+    /// Freeze a trained [`MvmGp`] (SKIP or KISS-GP). Requires
+    /// `fit`/`refresh` to have produced the cached α.
+    pub fn from_mvm(gp: &MvmGp, cfg: &SnapshotConfig) -> Result<Self> {
+        let alpha = gp
+            .alpha()
+            .ok_or_else(|| Error::Snapshot("model has no cached α — call fit/refresh".into()))?
+            .to_vec();
+        let d = gp.xs.cols;
+        let m = resolve_serving_grid(cfg, d, gp.xs.rows, gp.cfg.grid_m)?;
+        let grids = fit_grids(&gp.xs, m);
+        let s = match &cfg.variance {
+            VarianceMode::None => None,
+            VarianceMode::Exact => {
+                // Dense K̂ + Cholesky once at snapshot time.
+                let kern = ProductKernel::rbf(d, gp.hypers.ell(), gp.hypers.sf2());
+                let mut khat = kern.gram_sym(&gp.xs);
+                khat.add_diag(gp.hypers.sn2());
+                Some(inverse_root_exact(&Cholesky::new_with_jitter(&khat, 0.0)?))
+            }
+            VarianceMode::Lanczos(rank) => {
+                // High-accuracy operator, same grade as the α refresh —
+                // reuse the decomposition `refresh` cached when possible.
+                let built;
+                let op = match gp.refresh_operator() {
+                    Some(op) => op,
+                    None => {
+                        built = gp.build_operator_with_rank(
+                            &gp.hypers,
+                            gp.cfg.seed,
+                            gp.refresh_grade_rank(),
+                        );
+                        &built
+                    }
+                };
+                Some(inverse_root_lanczos(op, &gp.ys, *rank)?)
+            }
+        };
+        let cache = PredictCache::build(&gp.xs, &alpha, &gp.hypers, grids, s.as_ref())?;
+        Ok(ModelSnapshot {
+            version: SNAPSHOT_VERSION,
+            hypers: gp.hypers,
+            variant: match gp.cfg.variant {
+                MvmVariant::Skip => SnapshotVariant::Skip,
+                MvmVariant::Kiss => SnapshotVariant::Kiss,
+            },
+            train_rank: gp.cfg.rank as u32,
+            refresh_rank: gp.cfg.refresh_rank as u32,
+            alpha,
+            cache,
+        })
+    }
+
+    /// Freeze a trained [`ExactGp`], fitting grids to its inputs.
+    pub fn from_exact(gp: &ExactGp, cfg: &SnapshotConfig) -> Result<Self> {
+        let m = resolve_serving_grid(cfg, gp.xs.cols, gp.xs.rows, 64)?;
+        Self::from_exact_with_grids(gp, fit_grids(&gp.xs, m), &cfg.variance)
+    }
+
+    /// Freeze a trained [`ExactGp`] onto explicit per-dimension grids
+    /// (tests place training data exactly on grid nodes this way, making
+    /// the stencil path exact).
+    pub fn from_exact_with_grids(
+        gp: &ExactGp,
+        grids: Vec<Grid1d>,
+        variance: &VarianceMode,
+    ) -> Result<Self> {
+        let alpha = gp
+            .alpha()
+            .ok_or_else(|| Error::Snapshot("model has no cached α — call fit/refresh".into()))?
+            .to_vec();
+        let chol = gp
+            .cholesky()
+            .ok_or_else(|| Error::Snapshot("model has no cached Cholesky".into()))?;
+        let s = match variance {
+            VarianceMode::None => None,
+            VarianceMode::Exact => Some(inverse_root_exact(chol)),
+            VarianceMode::Lanczos(rank) => {
+                let kern = ProductKernel::rbf(gp.xs.cols, gp.hypers.ell(), gp.hypers.sf2());
+                let mut khat = kern.gram_sym(&gp.xs);
+                khat.add_diag(gp.hypers.sn2());
+                let op = crate::operators::DenseOp(khat);
+                Some(inverse_root_lanczos(&op, &gp.ys, *rank)?)
+            }
+        };
+        let cache = PredictCache::build(&gp.xs, &alpha, &gp.hypers, grids, s.as_ref())?;
+        Ok(ModelSnapshot {
+            version: SNAPSHOT_VERSION,
+            hypers: gp.hypers,
+            variant: SnapshotVariant::Exact,
+            train_rank: 0,
+            refresh_rank: 0,
+            alpha,
+            cache,
+        })
+    }
+
+    /// Serialize to `path` (format version [`SNAPSHOT_VERSION`]).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let bytes = self.to_bytes();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = fs::File::create(path)?;
+        f.write_all(&bytes)?;
+        Ok(())
+    }
+
+    /// Deserialize from `path`, verifying magic, version, and checksum.
+    pub fn load(path: &Path) -> Result<Self> {
+        let bytes = fs::read(path)?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// Encode to the version-1 byte layout (checksum included).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let d = self.cache.grids.len();
+        let n = self.alpha.len();
+        let m_total = self.cache.total_grid();
+        let r = self.cache.var_rank();
+        let mut out = Vec::with_capacity(
+            8 + 7 * 4 + 3 * 8 + d * 20 + (n + m_total + m_total * r) * 8 + 8,
+        );
+        out.extend_from_slice(SNAPSHOT_MAGIC);
+        push_u32(&mut out, SNAPSHOT_VERSION);
+        push_u32(&mut out, d as u32);
+        push_u32(&mut out, n as u32);
+        push_u32(&mut out, r as u32);
+        push_u32(&mut out, self.variant.to_u32());
+        push_u32(&mut out, self.train_rank);
+        push_u32(&mut out, self.refresh_rank);
+        push_f64(&mut out, self.hypers.log_ell);
+        push_f64(&mut out, self.hypers.log_sf2);
+        push_f64(&mut out, self.hypers.log_sn2);
+        for g in &self.cache.grids {
+            push_f64(&mut out, g.min);
+            push_f64(&mut out, g.h);
+            push_u32(&mut out, g.m as u32);
+        }
+        for &a in &self.alpha {
+            push_f64(&mut out, a);
+        }
+        for &v in &self.cache.mean {
+            push_f64(&mut out, v);
+        }
+        for &v in &self.cache.var_r.data {
+            push_f64(&mut out, v);
+        }
+        let sum = fnv1a(&out);
+        push_u64(&mut out, sum);
+        out
+    }
+
+    /// Decode from the version-1 byte layout.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut c = Cursor { bytes, pos: 0 };
+        let magic = c.take(8)?;
+        if magic != SNAPSHOT_MAGIC {
+            return Err(Error::Snapshot("bad magic (not a skip-gp snapshot)".into()));
+        }
+        let version = c.u32()?;
+        if version != SNAPSHOT_VERSION {
+            return Err(Error::Snapshot(format!(
+                "unsupported snapshot version {version} (this build reads {SNAPSHOT_VERSION})"
+            )));
+        }
+        // Verify the trailing checksum before trusting any field.
+        if bytes.len() < 8 {
+            return Err(Error::Snapshot("truncated snapshot".into()));
+        }
+        let payload = &bytes[..bytes.len() - 8];
+        let stored = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+        let computed = fnv1a(payload);
+        if stored != computed {
+            return Err(Error::Snapshot(format!(
+                "checksum mismatch (stored {stored:#018x}, computed {computed:#018x})"
+            )));
+        }
+        let d = c.u32()? as usize;
+        let n = c.u32()? as usize;
+        let r = c.u32()? as usize;
+        let variant = SnapshotVariant::from_u32(c.u32()?)?;
+        let train_rank = c.u32()?;
+        let refresh_rank = c.u32()?;
+        let hypers = GpHypers {
+            log_ell: c.f64()?,
+            log_sf2: c.f64()?,
+            log_sn2: c.f64()?,
+        };
+        let mut grids = Vec::with_capacity(d);
+        for _ in 0..d {
+            let min = c.f64()?;
+            let h = c.f64()?;
+            let m = c.u32()? as usize;
+            if m < 4 {
+                return Err(Error::Snapshot(format!("grid with m={m} < 4")));
+            }
+            grids.push(Grid1d { min, h, m });
+        }
+        let m_total = grids
+            .iter()
+            .try_fold(1usize, |acc, g| acc.checked_mul(g.m))
+            .ok_or_else(|| Error::Snapshot("grid size overflow".into()))?;
+        let mr = m_total
+            .checked_mul(r)
+            .ok_or_else(|| Error::Snapshot("variance cache size overflow".into()))?;
+        let alpha = c.f64_vec(n)?;
+        let mean = c.f64_vec(m_total)?;
+        let var_data = c.f64_vec(mr)?;
+        let var_r = if r == 0 {
+            Matrix::zeros(m_total, 0)
+        } else {
+            Matrix::from_vec(m_total, r, var_data)
+        };
+        // Trailing checksum (8 bytes) must be exactly what remains.
+        if c.remaining() != 8 {
+            return Err(Error::Snapshot(format!(
+                "trailing garbage: {} bytes after payload",
+                c.remaining().saturating_sub(8)
+            )));
+        }
+        let cache =
+            PredictCache::from_parts(grids, mean, var_r, hypers.sf2(), hypers.sn2())?;
+        Ok(ModelSnapshot {
+            version,
+            hypers,
+            variant,
+            train_rank,
+            refresh_rank,
+            alpha,
+            cache,
+        })
+    }
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// FNV-1a over `bytes` — cheap corruption detection, not cryptography.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, len: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(len)
+            .ok_or_else(|| Error::Snapshot("field length overflow".into()))?;
+        if end > self.bytes.len() {
+            return Err(Error::Snapshot("truncated snapshot".into()));
+        }
+        let s = &self.bytes[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64_vec(&mut self, len: usize) -> Result<Vec<f64>> {
+        let nbytes = len
+            .checked_mul(8)
+            .ok_or_else(|| Error::Snapshot("field length overflow".into()))?;
+        let raw = self.take(nbytes)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn small_snapshot(seed: u64) -> ModelSnapshot {
+        let mut rng = Rng::new(seed);
+        let xs = Matrix::from_fn(40, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let ys: Vec<f64> = (0..40).map(|i| xs.get(i, 0).sin() + 0.01 * rng.normal()).collect();
+        let mut gp = ExactGp::new(xs, ys, GpHypers::new(0.8, 1.0, 0.05));
+        gp.refresh().unwrap();
+        ModelSnapshot::from_exact(
+            &gp,
+            &SnapshotConfig {
+                grid_m: 16,
+                variance: VarianceMode::Exact,
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn bytes_roundtrip_bitwise() {
+        let snap = small_snapshot(1);
+        let bytes = snap.to_bytes();
+        let back = ModelSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back.version, SNAPSHOT_VERSION);
+        assert_eq!(back.variant, SnapshotVariant::Exact);
+        assert_eq!(back.hypers, snap.hypers);
+        assert_eq!(back.alpha, snap.alpha);
+        assert_eq!(back.cache.mean, snap.cache.mean);
+        assert_eq!(back.cache.var_r.data, snap.cache.var_r.data);
+        assert_eq!(back.cache.grids.len(), snap.cache.grids.len());
+        for (a, b) in back.cache.grids.iter().zip(&snap.cache.grids) {
+            assert_eq!(a.min, b.min);
+            assert_eq!(a.h, b.h);
+            assert_eq!(a.m, b.m);
+        }
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let snap = small_snapshot(2);
+        let mut bytes = snap.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = ModelSnapshot::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let snap = small_snapshot(3);
+        let mut bytes = snap.to_bytes();
+        bytes[8] = 99; // version field, little-endian low byte
+        let err = ModelSnapshot::from_bytes(&bytes).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let snap = small_snapshot(4);
+        let bytes = snap.to_bytes();
+        let err = ModelSnapshot::from_bytes(&bytes[..bytes.len() - 17]).unwrap_err();
+        // Either a length error or a checksum error, never a panic.
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn grid_budget_enforced() {
+        let mut rng = Rng::new(5);
+        let xs = Matrix::from_fn(30, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+        let ys: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let mut gp = ExactGp::new(xs, ys, GpHypers::new(0.8, 1.0, 0.1));
+        gp.refresh().unwrap();
+        let err = ModelSnapshot::from_exact(
+            &gp,
+            &SnapshotConfig {
+                grid_m: 64,
+                variance: VarianceMode::None,
+                max_grid_cells: 1000,
+            },
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+    }
+}

@@ -1,0 +1,270 @@
+//! Integration tests for the serving subsystem: snapshot round-trips,
+//! cached-prediction accuracy against the dense `ExactGp` references, and
+//! batched-vs-one-at-a-time serving equivalence (t ∈ {1, 8, 64}).
+
+use skip_gp::gp::{ExactGp, GpHypers};
+use skip_gp::linalg::Matrix;
+use skip_gp::operators::Grid1d;
+use skip_gp::serve::{
+    BatcherConfig, ModelSnapshot, RequestBatcher, ServeEngine, Server, ServerConfig,
+    SnapshotConfig, VarianceMode,
+};
+use skip_gp::util::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("skipgp-serve-{tag}-{}.snap", std::process::id()))
+}
+
+/// n=256, d=3 training set whose points sit exactly on the serving grid's
+/// nodes, so the cubic stencil is exact (weight 1 on the node) and the
+/// cache path reproduces the dense algebra to rounding.
+fn on_grid_problem(
+    n: usize,
+    seed: u64,
+) -> (Matrix, Vec<f64>, Vec<Grid1d>, Matrix) {
+    let d = 3;
+    let m = 16;
+    let g = Grid1d::fit(0.0, 1.0, m);
+    let mut rng = Rng::new(seed);
+    let mut lattice = |rows: usize| {
+        Matrix::from_fn(rows, d, |_, _| {
+            // Interior nodes only (full cubic stencil).
+            g.point(2 + rng.below(m - 4))
+        })
+    };
+    let xs = lattice(n);
+    let xt = lattice(64);
+    let ys: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = xs.row(i);
+            (2.0 * r[0]).sin() + (3.0 * r[1]).cos() * r[2] + 0.05 * rng.normal()
+        })
+        .collect();
+    (xs, ys, vec![g.clone(), g.clone(), g], xt)
+}
+
+/// Acceptance: cached predict_mean / predict_var match the ExactGp dense
+/// references within 1e-6 on an n=256, d=3 problem.
+#[test]
+fn cached_predictions_match_exact_gp_within_1e6() {
+    let (xs, ys, grids, xt) = on_grid_problem(256, 1);
+    let h = GpHypers::new(0.45, 1.3, 0.05);
+    let mut gp = ExactGp::new(xs, ys, h);
+    gp.refresh().unwrap();
+    let want_mean = gp.predict_mean(&xt);
+    let want_var = gp.predict_var(&xt);
+
+    let snap = ModelSnapshot::from_exact_with_grids(&gp, grids, &VarianceMode::Exact).unwrap();
+    let got_mean = snap.cache.predict_mean(&xt);
+    let got_var = snap.cache.predict_var(&xt);
+
+    for i in 0..xt.rows {
+        assert!(
+            (got_mean[i] - want_mean[i]).abs() < 1e-6,
+            "mean[{i}]: cached {} vs exact {}",
+            got_mean[i],
+            want_mean[i]
+        );
+        assert!(
+            (got_var[i] - want_var[i]).abs() < 1e-6,
+            "var[{i}]: cached {} vs exact {}",
+            got_var[i],
+            want_var[i]
+        );
+    }
+}
+
+/// Off-grid queries: the cache inherits only the (small) SKI interpolation
+/// error.
+#[test]
+fn cached_predictions_accurate_off_grid() {
+    let (xs, ys, grids, _) = on_grid_problem(256, 2);
+    let h = GpHypers::new(0.45, 1.3, 0.05);
+    let mut gp = ExactGp::new(xs, ys, h);
+    gp.refresh().unwrap();
+    let snap = ModelSnapshot::from_exact_with_grids(&gp, grids, &VarianceMode::Exact).unwrap();
+    let mut rng = Rng::new(3);
+    let xt = Matrix::from_fn(64, 3, |_, _| rng.uniform_in(0.15, 0.85));
+    let want_mean = gp.predict_mean(&xt);
+    let want_var = gp.predict_var(&xt);
+    let got_mean = snap.cache.predict_mean(&xt);
+    let got_var = snap.cache.predict_var(&xt);
+    let mmae = skip_gp::util::mae(&got_mean, &want_mean);
+    let vmae = skip_gp::util::mae(&got_var, &want_var);
+    assert!(mmae < 5e-3, "off-grid mean mae {mmae}");
+    assert!(vmae < 5e-3, "off-grid var mae {vmae}");
+}
+
+/// Snapshot → save → load → bitwise-equal predictions.
+#[test]
+fn snapshot_file_roundtrip_is_bitwise_equal() {
+    let (xs, ys, grids, xt) = on_grid_problem(128, 4);
+    let h = GpHypers::new(0.5, 1.0, 0.05);
+    let mut gp = ExactGp::new(xs, ys, h);
+    gp.refresh().unwrap();
+    let snap =
+        ModelSnapshot::from_exact_with_grids(&gp, grids, &VarianceMode::Lanczos(32)).unwrap();
+
+    let path = tmpfile("roundtrip");
+    snap.save(&path).unwrap();
+    let back = ModelSnapshot::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(back.hypers, snap.hypers);
+    assert_eq!(back.alpha, snap.alpha);
+    // Bitwise-identical predictions, mean and variance, on- and off-grid.
+    let mut rng = Rng::new(5);
+    let off = Matrix::from_fn(40, 3, |_, _| rng.uniform_in(0.0, 1.0));
+    for q in [&xt, &off] {
+        assert_eq!(snap.cache.predict_mean(q), back.cache.predict_mean(q));
+        assert_eq!(snap.cache.predict_var(q), back.cache.predict_var(q));
+    }
+}
+
+/// Batched serving equals one-at-a-time serving, bit for bit, at
+/// t ∈ {1, 8, 64}.
+#[test]
+fn batched_serving_equals_one_at_a_time() {
+    let (xs, ys, grids, _) = on_grid_problem(128, 6);
+    let h = GpHypers::new(0.5, 1.0, 0.05);
+    let mut gp = ExactGp::new(xs, ys, h);
+    gp.refresh().unwrap();
+    let snap =
+        ModelSnapshot::from_exact_with_grids(&gp, grids, &VarianceMode::Lanczos(24)).unwrap();
+    let mut rng = Rng::new(7);
+    let queries: Vec<Vec<f64>> = (0..256)
+        .map(|_| (0..3).map(|_| rng.uniform_in(0.0, 1.0)).collect())
+        .collect();
+    // One-at-a-time reference straight off the cache.
+    let reference: Vec<(f64, f64)> = queries
+        .iter()
+        .map(|q| (snap.cache.predict_mean_one(q), snap.cache.predict_var_one(q)))
+        .collect();
+
+    for t in [1usize, 8, 64] {
+        let engine = Arc::new(ServeEngine::new(snap.clone()).unwrap());
+        let batcher = RequestBatcher::start(
+            engine.clone(),
+            BatcherConfig {
+                max_batch: t,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+        );
+        let handle = batcher.handle();
+        // Submit everything up front so batches actually fill to t…
+        let pending: Vec<_> = queries.iter().map(|q| handle.submit(q)).collect();
+        // …then drain in order.
+        for (i, rx) in pending.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert!(resp.batch_size >= 1 && resp.batch_size <= t);
+            assert_eq!(
+                (resp.mean, resp.var),
+                reference[i],
+                "t={t}, query {i}: batched != one-at-a-time"
+            );
+        }
+        let served = engine.metrics.counter("serve.points");
+        assert_eq!(served, queries.len() as u64);
+        if t == 1 {
+            // max_batch=1 must never coalesce.
+            let hist = engine.metrics.value_histogram("serve.batch_size");
+            assert_eq!(hist.keys().copied().max(), Some(1));
+        }
+        drop(handle);
+        batcher.shutdown();
+    }
+}
+
+/// The TCP front-end serves the same numbers the cache computes, via the
+/// shortest-round-trip float formatting.
+#[test]
+fn tcp_server_round_trip() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let (xs, ys, grids, _) = on_grid_problem(96, 8);
+    let h = GpHypers::new(0.5, 1.0, 0.05);
+    let mut gp = ExactGp::new(xs, ys, h);
+    gp.refresh().unwrap();
+    let snap =
+        ModelSnapshot::from_exact_with_grids(&gp, grids, &VarianceMode::Lanczos(16)).unwrap();
+    let engine = Arc::new(ServeEngine::new(snap.clone()).unwrap());
+    let server = Server::start(
+        engine,
+        ServerConfig {
+            bind: "127.0.0.1:0".to_string(),
+            batcher: BatcherConfig::default(),
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+
+        writeln!(writer, "ping").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "ok pong");
+
+        line.clear();
+        writeln!(writer, "dim").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "ok 3");
+
+        line.clear();
+        writeln!(writer, "predict 0.4 0.5 0.6").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let toks: Vec<&str> = line.trim().split_whitespace().collect();
+        assert_eq!(toks[0], "ok", "line: {line}");
+        let mean: f64 = toks[1].parse().unwrap();
+        let var: f64 = toks[2].parse().unwrap();
+        assert_eq!(mean, snap.cache.predict_mean_one(&[0.4, 0.5, 0.6]));
+        assert_eq!(var, snap.cache.predict_var_one(&[0.4, 0.5, 0.6]));
+
+        line.clear();
+        writeln!(writer, "predict 1.0 2.0").unwrap(); // wrong arity
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("err"), "line: {line}");
+
+        line.clear();
+        writeln!(writer, "stats").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("qps="), "line: {line}");
+
+        writeln!(writer, "quit").unwrap();
+    } // connection closes here, releasing its batcher handle
+    server.shutdown();
+}
+
+/// Mean-only snapshots refuse to serve (no silent missing uncertainty),
+/// and the budget guard refuses absurd grids.
+#[test]
+fn serving_guards() {
+    let (xs, ys, grids, _) = on_grid_problem(64, 9);
+    let h = GpHypers::new(0.5, 1.0, 0.05);
+    let mut gp = ExactGp::new(xs, ys, h);
+    gp.refresh().unwrap();
+    let mean_only =
+        ModelSnapshot::from_exact_with_grids(&gp, grids, &VarianceMode::None).unwrap();
+    let err = match ServeEngine::new(mean_only) {
+        Ok(_) => panic!("mean-only snapshot must not serve"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("variance"), "{err}");
+
+    let err = ModelSnapshot::from_exact(
+        &gp,
+        &SnapshotConfig {
+            grid_m: 512,
+            variance: VarianceMode::None,
+            max_grid_cells: 1 << 20,
+        },
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("budget"), "{err}");
+}
