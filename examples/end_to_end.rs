@@ -20,6 +20,7 @@
 use skip_gp::coordinator::Session;
 use skip_gp::data::{dataset_by_name, generate};
 use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, Sgpr};
+use skip_gp::grid::GridSpec;
 use skip_gp::runtime::PjrtBackend;
 use skip_gp::util::{mae, Timer};
 use std::path::Path;
@@ -53,7 +54,7 @@ fn main() {
     // through the artifact (~4 ms/call incl. literal upload), so the demo
     // keeps n ≈ 600 and r = 25 to finish in about a minute.
     let cfg = MvmGpConfig {
-        grid_m: 100,
+        grid: GridSpec::uniform(100),
         rank: 25,
         refresh_rank: 80,
         seed: 0,
@@ -69,7 +70,7 @@ fn main() {
 
     let t = Timer::start();
     let steps = 6;
-    let trace = gp.fit(steps, 0.1);
+    let trace = gp.fit(steps, 0.1).expect("training");
     let skip_train_s = t.elapsed_s();
     println!("\nMLL curve ({} ADAM steps):", steps);
     for (i, mll) in trace.iter().enumerate() {

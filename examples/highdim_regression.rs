@@ -1,13 +1,27 @@
-//! High-dimensional regression: SKIP vs SGPR on a d = 22 dataset — the
-//! paper's §5 scenario, where KISS-GP's Kronecker grid (m²² points) is
-//! impossible and SKIP's d-fold product of 1-D grids wins.
+//! High-dimensional regression: the curse of dimensionality, attacked
+//! from two directions.
 //!
 //! ```bash
 //! cargo run --release --example highdim_regression [-- scale]
 //! ```
+//!
+//! **Scenario 1 (paper §5):** SKIP vs SGPR on a d = 22 dataset, where
+//! KISS-GP's dense Kronecker grid (m²² points) is impossible and SKIP's
+//! d-fold product of 1-D grids wins.
+//!
+//! **Scenario 2 (sparse grids):** grid-based inference *itself* at
+//! d = 9, impossible for the dense mᵈ tensor grid, via the
+//! combination-technique sparse grid (`GridSpec::Sparse` — Yadav,
+//! Sheldon & Musco 2023): train a sparse-grid KISS-GP, freeze it into a
+//! serving snapshot, and answer queries from the grid-side stencil
+//! caches alone.
 
 use skip_gp::data::{dataset_by_name, generate};
-use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, Sgpr};
+use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant, Sgpr};
+use skip_gp::grid::GridSpec;
+use skip_gp::linalg::Matrix;
+use skip_gp::serve::{ModelSnapshot, SnapshotConfig, VarianceMode};
+use skip_gp::solvers::CgConfig;
 use skip_gp::util::{mae, Timer};
 
 fn main() {
@@ -15,6 +29,10 @@ fn main() {
         .nth(1)
         .and_then(|a| a.parse().ok())
         .unwrap_or(0.04);
+
+    // ------------------------------------------------------------------
+    // Scenario 1: SKIP vs SGPR at d = 22 (the paper's §5 comparison).
+    // ------------------------------------------------------------------
     let spec = dataset_by_name("kegg").expect("kegg registered");
     let data = generate(spec, scale);
     println!(
@@ -35,9 +53,9 @@ fn main() {
         data.xtrain.clone(),
         data.ytrain.clone(),
         GpHypers::init_for_dim(data.d()),
-        MvmGpConfig { grid_m: 100, rank: 30, ..Default::default() },
+        MvmGpConfig { grid: GridSpec::uniform(100), rank: 30, ..Default::default() },
     );
-    skip.fit(8, 0.1);
+    skip.fit(8, 0.1).expect("skip fit");
     let skip_pred = skip.predict_mean(&data.xtest);
     let skip_mae = mae(&skip_pred, &data.ytest);
     let skip_s = t.elapsed_s();
@@ -66,6 +84,93 @@ fn main() {
     assert!(
         skip_mae < 1.2 * sgpr_mae,
         "SKIP should be competitive: {skip_mae} vs {sgpr_mae}"
+    );
+
+    // ------------------------------------------------------------------
+    // Scenario 2: sparse-grid KISS-GP at d = 9, where the dense tensor
+    // grid is budget-infeasible but the combination technique is cheap.
+    // ------------------------------------------------------------------
+    let spec9 = dataset_by_name("protein").expect("protein registered");
+    let data9 = generate(spec9, (scale * 0.5).min(0.03));
+    let d = data9.d();
+    let level = 3usize;
+    let sparse = GridSpec::sparse(level);
+    let dense_cells = 17f64.powi(d as i32); // level-3 resolution, densely
+    let sparse_cells = sparse.total_points(d).expect("sparse never overflows");
+    println!(
+        "\nProtein surrogate: n={} d={d} — dense grid at matching resolution \
+         would hold 17^{d} ≈ {dense_cells:.1e} points; the sparse grid stores {sparse_cells}.",
+        data9.n()
+    );
+
+    // The dense path refuses outright (typed error, not an OOM):
+    let dense_gp = MvmGp::new(
+        data9.xtrain.clone(),
+        data9.ytrain.clone(),
+        GpHypers::init_for_dim(d),
+        MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: GridSpec::uniform(17),
+            ..Default::default()
+        },
+    );
+    let refusal = match dense_gp.build_operator(&dense_gp.hypers, 0) {
+        Ok(_) => panic!("dense 17^9 grid must refuse"),
+        Err(e) => e,
+    };
+    println!("dense Kronecker path: {refusal}");
+
+    // The sparse path trains, snapshots, and serves.
+    let t = Timer::start();
+    let mut gp9 = MvmGp::new(
+        data9.xtrain.clone(),
+        data9.ytrain.clone(),
+        GpHypers::init_for_dim(d),
+        MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: sparse,
+            rank: 20,
+            cg: CgConfig { max_iters: 60, tol: 1e-5 },
+            ..Default::default()
+        },
+    );
+    gp9.fit(4, 0.1).expect("sparse-grid fit");
+    let train9_s = t.elapsed_s();
+    let pred9 = gp9.predict_mean(&data9.xtest);
+    let mae9 = mae(&pred9, &data9.ytest);
+    // Baseline: predict the training mean everywhere.
+    let ymean = data9.ytrain.iter().sum::<f64>() / data9.n() as f64;
+    let const_pred = vec![ymean; data9.ytest.len()];
+    let mae_const = mae(&const_pred, &data9.ytest);
+    println!(
+        "sparse-grid KISS (level {level}, {} terms, {} points): \
+         MAE {mae9:.4} vs constant-predictor {mae_const:.4}, train {train9_s:.1}s",
+        gp9.predict_cache().map(|c| c.terms().len()).unwrap_or(0),
+        sparse_cells
+    );
+    assert!(
+        mae9 < 0.9 * mae_const,
+        "sparse-grid model should beat the constant predictor: {mae9} vs {mae_const}"
+    );
+
+    // Freeze → reload → serve from the caches alone.
+    let snap = ModelSnapshot::from_mvm(
+        &gp9,
+        &SnapshotConfig { variance: VarianceMode::Lanczos(32), ..Default::default() },
+    )
+    .expect("sparse snapshot");
+    let bytes = snap.to_bytes();
+    let back = ModelSnapshot::from_bytes(&bytes).expect("sparse snapshot reload");
+    let q = Matrix::from_fn(64, d, |i, j| data9.xtest.get(i, j));
+    let (means, vars) = back.cache.predict(&q);
+    assert_eq!(means, snap.cache.predict_mean(&q), "reload must be bitwise identical");
+    assert!(vars.iter().all(|v| v.is_finite() && *v > 0.0));
+    println!(
+        "served 64 queries from the reloaded sparse snapshot \
+         ({} bytes, {} grid cells, variance rank {})",
+        bytes.len(),
+        back.cache.total_grid(),
+        back.cache.var_rank()
     );
     println!("highdim_regression OK");
 }

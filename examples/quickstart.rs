@@ -9,6 +9,7 @@
 //! predict and score.
 
 use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant};
+use skip_gp::grid::GridSpec;
 use skip_gp::linalg::Matrix;
 use skip_gp::util::{mae, Rng, Timer};
 
@@ -31,14 +32,14 @@ fn main() {
     // grid; the product is handled by the Lanczos merge tree.
     let cfg = MvmGpConfig {
         variant: MvmVariant::Skip,
-        grid_m: 64,
+        grid: GridSpec::uniform(64),
         rank: 25,
         ..Default::default()
     };
     let mut gp = MvmGp::new(xs, ys, GpHypers::init_for_dim(2), cfg);
 
     let t = Timer::start();
-    let trace = gp.fit(12, 0.1);
+    let trace = gp.fit(12, 0.1).expect("training");
     println!("trained 12 ADAM steps in {:.2}s", t.elapsed_s());
     println!(
         "  marginal log likelihood per point: {:.3} → {:.3}",

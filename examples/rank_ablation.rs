@@ -43,7 +43,10 @@ fn main() {
         // Build the SKIP operator directly (rather than through MvmGp) so
         // the merge tree's SkipBuildStats are visible.
         let skis: Vec<SkiOp> = (0..d)
-            .map(|k| SkiOp::new(&data.xtrain.col(k), &comp_kern.factors[k], 100))
+            .map(|k| {
+                SkiOp::new(&data.xtrain.col(k), &comp_kern.factors[k], 100)
+                    .expect("SKI grid fit")
+            })
             .collect();
         let comps: Vec<SkipComponent> = skis
             .iter()

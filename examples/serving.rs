@@ -12,6 +12,7 @@
 //! trip through the TCP line-protocol server.
 
 use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant};
+use skip_gp::grid::GridSpec;
 use skip_gp::linalg::Matrix;
 use skip_gp::serve::{
     BatcherConfig, ModelSnapshot, RequestBatcher, ServeEngine, Server, ServerConfig,
@@ -68,13 +69,13 @@ fn main() {
         .collect();
     let cfg = MvmGpConfig {
         variant: MvmVariant::Skip,
-        grid_m: 64,
+        grid: GridSpec::uniform(64),
         rank: 25,
         ..Default::default()
     };
     let mut gp = MvmGp::new(xs, ys, GpHypers::init_for_dim(2), cfg);
     let t = Timer::start();
-    gp.fit(10, 0.1);
+    gp.fit(10, 0.1).expect("training");
     println!("trained 10 ADAM steps in {:.2}s", t.elapsed_s());
 
     // --- Freeze into a snapshot and write it to disk.
@@ -82,7 +83,7 @@ fn main() {
     let snap = ModelSnapshot::from_mvm(
         &gp,
         &SnapshotConfig {
-            grid_m: 64,
+            grid: Some(GridSpec::uniform(64)),
             variance: VarianceMode::Lanczos(32),
             ..Default::default()
         },

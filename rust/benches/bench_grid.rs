@@ -1,0 +1,120 @@
+//! Inducing-grid bench: dense Kronecker tensor grids vs the
+//! combination-technique sparse grid, across dimensionality.
+//!
+//! For each d the bench builds the SKI covariance operator both ways
+//! (where the dense mᵈ grid is feasible at all) and records grid point
+//! counts, operator build time, and MVM time into machine-readable
+//! `results/BENCH_grid.json` — the curse-of-dimensionality picture in
+//! numbers: dense cells grow as mᵈ while sparse points grow
+//! near-linearly in d.
+//!
+//! Run: `cargo bench --bench bench_grid` (add `-- --fast` in CI smoke).
+
+#![allow(clippy::needless_range_loop)]
+
+use skip_gp::grid::{grid_ski_operator, GridSpec, InducingGrid, RectilinearGrid, SparseGrid};
+use skip_gp::kernels::ProductKernel;
+use skip_gp::linalg::Matrix;
+use skip_gp::operators::LinearOp;
+use skip_gp::util::{bench_median_s, Rng, Timer};
+use std::io::Write;
+use std::path::Path;
+
+struct SideStats {
+    points: usize,
+    build_s: f64,
+    mvm_s: f64,
+}
+
+fn json_side(s: &SideStats) -> String {
+    format!(
+        "{{\"points\": {}, \"build_s\": {:.6}, \"mvm_s\": {:.6}}}",
+        s.points, s.build_s, s.mvm_s
+    )
+}
+
+fn measure(xs: &Matrix, kern: &ProductKernel, grid: &dyn InducingGrid) -> SideStats {
+    let t = Timer::start();
+    let op = grid_ski_operator(xs, kern, grid);
+    let build_s = t.elapsed_s();
+    let mut rng = Rng::new(99);
+    let v = rng.normal_vec(xs.rows);
+    let mvm_s = bench_median_s(5, 0.02, || {
+        std::hint::black_box(op.matvec(std::hint::black_box(&v)));
+    });
+    SideStats { points: grid.total_points(), build_s, mvm_s }
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let n = if fast { 600 } else { 2000 };
+    // (d, dense m per dim or 0 = infeasible, sparse level)
+    let mut cases: Vec<(usize, usize, usize)> = vec![(2, 32, 5), (3, 20, 4), (8, 0, 3)];
+    if !fast {
+        cases.push((10, 0, 3));
+    }
+
+    let mut rows = Vec::new();
+    for &(d, dense_m, level) in &cases {
+        let mut rng = Rng::new(7 + d as u64);
+        let xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+        let kern = ProductKernel::rbf(d, (2.0 * d as f64 / 3.0).sqrt(), 1.0);
+
+        let sparse_grid = SparseGrid::fit(&xs, level).expect("sparse grid fit");
+        let n_terms = sparse_grid.terms().len();
+        let sparse = measure(&xs, &kern, &sparse_grid);
+
+        let dense = if dense_m > 0 {
+            let grid = RectilinearGrid::fit_uniform(&xs, dense_m).expect("dense grid fit");
+            Some(measure(&xs, &kern, &grid))
+        } else {
+            None
+        };
+        // What the dense grid *would* need at the sparse grid's finest
+        // per-axis resolution (the m^d wall).
+        let finest = GridSpec::sparse(level).size_for_dim(0);
+        let dense_equiv_cells = (finest as f64).powi(d as i32);
+
+        match &dense {
+            Some(ds) => println!(
+                "d={d:>2}  dense m={dense_m:<3} {:>9} cells  build {:.3}s  mvm {:.2}ms   \
+                 sparse L={level} ({n_terms} terms) {:>7} pts  build {:.3}s  mvm {:.2}ms",
+                ds.points,
+                ds.build_s,
+                ds.mvm_s * 1e3,
+                sparse.points,
+                sparse.build_s,
+                sparse.mvm_s * 1e3
+            ),
+            None => println!(
+                "d={d:>2}  dense INFEASIBLE ({finest}^{d} ≈ {dense_equiv_cells:.1e} cells)   \
+                 sparse L={level} ({n_terms} terms) {:>7} pts  build {:.3}s  mvm {:.2}ms",
+                sparse.points, sparse.build_s, sparse.mvm_s * 1e3
+            ),
+        }
+
+        let dense_json = match &dense {
+            Some(ds) => json_side(ds),
+            None => "null".to_string(),
+        };
+        rows.push(format!(
+            "    {{\"d\": {d}, \"n\": {n}, \"dense_m\": {dense_m}, \
+             \"dense_equiv_cells\": {dense_equiv_cells:.3e}, \"dense\": {dense_json}, \
+             \"sparse_level\": {level}, \"sparse_terms\": {n_terms}, \
+             \"sparse\": {}}}",
+            json_side(&sparse)
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"grid\",\n  \"fast\": {fast},\n  \"cases\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    let path = Path::new("results/BENCH_grid.json");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut f = std::fs::File::create(path).expect("bench json");
+    f.write_all(json.as_bytes()).unwrap();
+    println!("wrote {}", path.display());
+}

@@ -19,6 +19,8 @@
 //!
 //! Run: `cargo bench` (add `-- --fast` for a quick pass).
 
+#![allow(clippy::needless_range_loop)] // index-heavy numeric test/bench loops
+
 use skip_gp::data::gaussian_cloud;
 use skip_gp::kernels::{ProductKernel, Stationary1d};
 use skip_gp::linalg::{Matrix, SymToeplitz};
@@ -99,7 +101,7 @@ fn main() {
     {
         let xs = gaussian_cloud(4096, 1, 1);
         let kern = Stationary1d::rbf(0.7);
-        let ski = SkiOp::new(&xs.col(0), &kern, 512);
+        let ski = SkiOp::new(&xs.col(0), &kern, 512).unwrap();
         let v = rng.normal_vec(4096);
         b.run("ski_mvm", "n=4096 m=512", || {
             std::hint::black_box(ski.matvec(&v));
@@ -110,7 +112,7 @@ fn main() {
     {
         let xs = gaussian_cloud(2048, 3, 2);
         let kern = ProductKernel::rbf(3, 1.0, 1.0);
-        let op = KroneckerSkiOp::new(&xs, &kern, 32);
+        let op = KroneckerSkiOp::new(&xs, &kern, 32).unwrap();
         let v = rng.normal_vec(2048);
         b.run("kiss_mvm", "n=2048 d=3 m=32", || {
             std::hint::black_box(op.matvec(&v));
@@ -160,7 +162,7 @@ fn main() {
         let xs = gaussian_cloud(n, d, 5);
         let kern = ProductKernel::rbf(d, 1.6, 1.0);
         let skis: Vec<SkiOp> = (0..d)
-            .map(|k| SkiOp::new(&xs.col(k), &kern.factors[k], 128))
+            .map(|k| SkiOp::new(&xs.col(k), &kern.factors[k], 128).unwrap())
             .collect();
         b.run("skip_build", "n=2048 d=8 r=20", || {
             let comps: Vec<SkipComponent> = skis

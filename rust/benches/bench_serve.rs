@@ -5,6 +5,8 @@
 //!
 //! Run: `cargo bench --bench bench_serve` (add `-- --fast` in CI smoke).
 
+#![allow(clippy::needless_range_loop)] // index-heavy numeric test/bench loops
+
 use skip_gp::gp::{ExactGp, GpHypers};
 use skip_gp::linalg::Matrix;
 use skip_gp::serve::{
@@ -102,7 +104,7 @@ fn main() {
     let snap = ModelSnapshot::from_exact(
         &gp,
         &SnapshotConfig {
-            grid_m: 32,
+            grid: Some(skip_gp::grid::GridSpec::uniform(32)),
             variance: VarianceMode::Lanczos(32),
             ..Default::default()
         },

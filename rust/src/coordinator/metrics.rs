@@ -7,8 +7,29 @@
 //! (±~9%) relative error — plenty for dashboard-grade latency numbers.
 
 use std::collections::BTreeMap;
-use std::sync::Mutex;
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
+
+/// Process-wide metrics registry. The iterative solvers (`cg_solve`,
+/// `block_cg_solve`) record their iteration counts and convergence
+/// failures here — they are called from deep inside operator code with no
+/// session handle to thread through — and session summaries read the
+/// solver histograms back out ([`Metrics::solver_report`]).
+pub fn global() -> &'static Metrics {
+    static GLOBAL: OnceLock<Metrics> = OnceLock::new();
+    GLOBAL.get_or_init(Metrics::new)
+}
+
+/// Record one solver run into the [`global`] registry: iteration count
+/// into the `solver.<name>.iters` value histogram, plus a
+/// `solver.<name>.fail` counter when the solve did not converge.
+pub fn record_solver(name: &str, iters: usize, converged: bool) {
+    let g = global();
+    g.observe(&format!("solver.{name}.iters"), iters as u64);
+    if !converged {
+        g.incr(&format!("solver.{name}.fail"), 1);
+    }
+}
 
 /// Aggregated timer statistics.
 #[derive(Clone, Debug, Default)]
@@ -191,6 +212,58 @@ impl Metrics {
             .unwrap_or_default()
     }
 
+    /// Quantile `q ∈ [0, 1]` of the integer observations under `name`
+    /// (exact — the value histograms store every distinct value; 0 when
+    /// never recorded).
+    pub fn value_quantile(&self, name: &str, q: f64) -> u64 {
+        let values = self.values.lock().unwrap();
+        let Some(hist) = values.get(name) else {
+            return 0;
+        };
+        let total: u64 = hist.values().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (v, c) in hist.iter() {
+            cum += c;
+            if cum >= target {
+                return *v;
+            }
+        }
+        *hist.keys().next_back().unwrap()
+    }
+
+    /// One line per solver with recorded runs: count, p50/p99 iterations,
+    /// convergence failures. Empty string when no solver ever ran — the
+    /// session summary printer skips it then.
+    pub fn solver_report(&self) -> String {
+        let mut out = String::new();
+        let names: Vec<String> = {
+            let values = self.values.lock().unwrap();
+            values
+                .keys()
+                .filter_map(|k| {
+                    k.strip_prefix("solver.")?
+                        .strip_suffix(".iters")
+                        .map(|s| s.to_string())
+                })
+                .collect()
+        };
+        for name in names {
+            let iters_key = format!("solver.{name}.iters");
+            let total: u64 = self.value_histogram(&iters_key).values().sum();
+            out.push_str(&format!(
+                "  solver {name:<9} {total:>8} solves  iters p50={} p99={}  failures={}\n",
+                self.value_quantile(&iters_key, 0.50),
+                self.value_quantile(&iters_key, 0.99),
+                self.counter(&format!("solver.{name}.fail")),
+            ));
+        }
+        out
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         *self.counters.lock().unwrap().get(name).unwrap_or(&0)
     }
@@ -321,6 +394,41 @@ mod tests {
         m.record_latency_many("x", &[]);
         assert_eq!(m.latency_snapshot("x").count, 3);
         assert_eq!(m.latency_snapshot("missing").count, 0);
+    }
+
+    #[test]
+    fn value_quantiles_are_exact() {
+        let m = Metrics::new();
+        for i in 1..=100u64 {
+            m.observe("it", i);
+        }
+        assert_eq!(m.value_quantile("it", 0.50), 50);
+        assert_eq!(m.value_quantile("it", 0.99), 99);
+        assert_eq!(m.value_quantile("it", 1.0), 100);
+        assert_eq!(m.value_quantile("missing", 0.5), 0);
+    }
+
+    #[test]
+    fn solver_report_lists_recorded_solvers() {
+        let m = Metrics::new();
+        assert!(m.solver_report().is_empty());
+        m.observe("solver.cg.iters", 12);
+        m.observe("solver.cg.iters", 40);
+        m.incr("solver.cg.fail", 1);
+        let r = m.solver_report();
+        assert!(r.contains("solver cg"), "{r}");
+        assert!(r.contains("p99=40"), "{r}");
+        assert!(r.contains("failures=1"), "{r}");
+    }
+
+    #[test]
+    fn global_record_solver_accumulates() {
+        super::record_solver("unit_test_solver", 7, false);
+        super::record_solver("unit_test_solver", 9, true);
+        let g = super::global();
+        let h = g.value_histogram("solver.unit_test_solver.iters");
+        assert!(h.get(&7).copied().unwrap_or(0) >= 1);
+        assert!(g.counter("solver.unit_test_solver.fail") >= 1);
     }
 
     #[test]

@@ -84,7 +84,9 @@ impl Scheduler {
     }
 }
 
-/// Print a one-line summary per job.
+/// Print a one-line summary per job, plus the aggregate solver effort
+/// (CG / block-CG iteration quantiles and convergence failures) recorded
+/// by every solve the jobs ran.
 pub fn print_summary(reports: &[JobReport]) {
     println!("\n=== experiment summary ===");
     for r in reports {
@@ -94,6 +96,11 @@ pub fn print_summary(reports: &[JobReport]) {
             JobStatus::Skipped(why) => format!("skipped ({why})"),
         };
         println!("  {:<18} {:>8.2}s  {}", r.name, r.seconds, s);
+    }
+    let solvers = crate::coordinator::metrics::global().solver_report();
+    if !solvers.is_empty() {
+        println!("--- solver effort ---");
+        print!("{solvers}");
     }
 }
 

@@ -20,6 +20,10 @@ pub enum Error {
     /// Shape mismatch in an operator composition.
     DimMismatch { context: &'static str, expected: usize, got: usize },
 
+    /// Inducing-grid construction problems (degenerate data bounds, too
+    /// few points for the stencil, infeasible dense tensor grids).
+    Grid(String),
+
     /// Runtime artifact problems (missing/corrupt AOT artifact).
     Artifact(String),
 
@@ -56,6 +60,7 @@ impl fmt::Display for Error {
                 f,
                 "dimension mismatch: {context} (expected {expected}, got {got})"
             ),
+            Error::Grid(msg) => write!(f, "grid error: {msg}"),
             Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
             Error::Snapshot(msg) => write!(f, "snapshot error: {msg}"),
             Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),

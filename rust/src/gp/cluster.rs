@@ -132,7 +132,8 @@ impl ClusterMtgp {
     pub fn build_operator(&self, lambda: &[usize], seed: u64) -> AffineOp {
         let mut rng = Rng::new(seed);
         // Term 1: k_cluster ∘ cluster-membership.
-        let ski_c = SkiOp::new(&self.data.x, &self.k_cluster, self.cfg.grid_m);
+        let ski_c = SkiOp::new(&self.data.x, &self.k_cluster, self.cfg.grid_m)
+            .expect("cluster-kernel grid fit (degenerate observation ages?)");
         let fac_c = TaskOp::new(self.data.task_of.clone(), self.cluster_task_kernel(lambda))
             .factor();
         let skip_c = SkipOp::build_native(
@@ -141,7 +142,8 @@ impl ClusterMtgp {
             &mut rng,
         );
         // Term 2: k_indiv ∘ task-identity.
-        let ski_i = SkiOp::new(&self.data.x, &self.k_indiv, self.cfg.grid_m);
+        let ski_i = SkiOp::new(&self.data.x, &self.k_indiv, self.cfg.grid_m)
+            .expect("individual-kernel grid fit (degenerate observation ages?)");
         let fac_i =
             TaskOp::new(self.data.task_of.clone(), self.indiv_task_kernel()).factor();
         let skip_i = SkipOp::build_native(

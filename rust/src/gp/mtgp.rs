@@ -114,7 +114,8 @@ impl Mtgp {
     /// Build the SKIP operator for the current parameters:
     /// `K_data(SKI) ∘ (V M Vᵀ)(exact factor) + σ_n² I`.
     pub fn build_skip_operator(&self, seed: u64) -> AffineOp {
-        let ski = SkiOp::new(&self.data.x, &self.input_kernel, self.cfg.grid_m);
+        let ski = SkiOp::new(&self.data.x, &self.input_kernel, self.cfg.grid_m)
+            .expect("MTGP input-grid fit (degenerate observation times?)");
         let task_op = TaskOp::new(self.data.task_of.clone(), self.task_kernel.clone());
         let task_factor = task_op.factor();
         let mut rng = Rng::new(seed);

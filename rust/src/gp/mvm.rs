@@ -1,10 +1,20 @@
 //! MVM-based GP regression (paper §2.2) over structured kernel operators.
 //!
-//! One model drives both headline scalable methods:
+//! One model drives the headline scalable methods:
 //! - **SKIP** (§3.1/§5): d per-dimension 1-D SKI operators merged by the
 //!   SKIP tree — O(dn + dm log m) per MVM after the cached decomposition.
 //! - **KISS-GP** (§2.3/§5): a d-dimensional Kronecker-grid SKI operator —
 //!   O(4ᵈn + d mᵈ log m) per MVM, the exponential baseline.
+//! - **Sparse-grid KISS-GP** (`GridSpec::Sparse`): the combination
+//!   technique of Yadav, Sheldon & Musco (2023) replaces the dense mᵈ
+//!   tensor grid with a signed sum of anisotropic Kronecker terms whose
+//!   point count grows near-linearly in d — the Kronecker path without
+//!   its d ≲ 5 cap.
+//!
+//! The inducing grid is configured by [`crate::grid::GridSpec`] and built
+//! through the [`crate::grid::InducingGrid`] trait, so every grid
+//! consumer (operator construction, the predictive stencil cache, the
+//! serving snapshot) shares one fitting/stencil/budget implementation.
 //!
 //! Inference uses CG for solves (block-CG when several right-hand sides
 //! ride together, as in the gradient's y-solve + Hutchinson probes) and
@@ -16,28 +26,37 @@
 
 use super::adam::Adam;
 use super::hypers::GpHypers;
+use crate::grid::{build_grid, grid_ski_operator, GridSpec};
 use crate::kernels::ProductKernel;
 use crate::linalg::{dot, Matrix};
 use crate::operators::{
-    AffineOp, ContractionBackend, KroneckerSkiOp, LinearOp, NativeBackend, SkiOp,
-    SkipComponent, SkipOp,
+    AffineOp, ContractionBackend, LinearOp, NativeBackend, SkiOp, SkipComponent, SkipOp,
 };
-use crate::serve::cache::{fit_grids, grid_cells_within, PredictCache};
+use crate::serve::cache::PredictCache;
 use crate::solvers::{block_cg_solve, cg_solve, slq_logdet, CgConfig, SlqConfig};
 use crate::util::Rng;
+use crate::{Error, Result};
 use std::sync::Arc;
 
-/// Largest tensor-grid (Π m_k cells) the predictive stencil cache may
-/// occupy; beyond it (high d) prediction falls back to the dense
-/// cross-covariance path. 2²¹ cells ≈ 16 MB of mean cache.
+/// Largest stored grid (Σ_t Π m_k cells across terms) the predictive
+/// stencil cache may occupy; beyond it (high d on a dense spec)
+/// prediction falls back to the dense cross-covariance path. 2²¹ cells
+/// ≈ 16 MB of mean cache. Sparse specs essentially always fit.
 const PREDICT_CACHE_MAX_CELLS: usize = 1 << 21;
+
+/// Largest dense tensor grid the Kronecker operator will materialize;
+/// beyond it the build refuses with a typed error pointing at
+/// [`GridSpec::Sparse`] (historically this path silently required
+/// d ≲ 5 — now the cap is explicit and the sparse spec removes it).
+const KRON_MAX_CELLS: usize = 1 << 24;
 
 /// Which structured operator backs the model.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MvmVariant {
     /// SKIP: product of per-dimension 1-D SKI kernels (the paper's method).
     Skip,
-    /// KISS-GP: Kronecker multi-dimensional grid (baseline; d ≲ 5 only).
+    /// KISS-GP: Kronecker multi-dimensional grid. Dense specs are capped
+    /// by [`KRON_MAX_CELLS`]; `GridSpec::Sparse` lifts the cap.
     Kiss,
 }
 
@@ -45,8 +64,9 @@ pub enum MvmVariant {
 #[derive(Clone, Debug)]
 pub struct MvmGpConfig {
     pub variant: MvmVariant,
-    /// Inducing grid points per dimension (paper's m).
-    pub grid_m: usize,
+    /// Inducing-grid specification (uniform per-dimension m, explicit
+    /// per-dimension sizes, or a combination-technique sparse grid).
+    pub grid: GridSpec,
     /// Lanczos rank r for SKIP decompositions during *training* (noisy
     /// gradients tolerate truncation error).
     pub rank: usize,
@@ -65,7 +85,7 @@ impl Default for MvmGpConfig {
     fn default() -> Self {
         MvmGpConfig {
             variant: MvmVariant::Skip,
-            grid_m: 100,
+            grid: GridSpec::Uniform(100),
             rank: 30,
             refresh_rank: 100,
             cg: CgConfig { max_iters: 100, tol: 1e-5 },
@@ -85,7 +105,7 @@ pub struct MvmGp {
     /// Cached α = K̂⁻¹y for prediction.
     alpha: Option<Vec<f64>>,
     /// Grid-side stencil cache for O(1)-per-point means (rebuilt by
-    /// `refresh`; None when mᵈ exceeds the cache budget).
+    /// `refresh`; None when the stored grid exceeds the cache budget).
     cache: Option<PredictCache>,
     /// The refresh-grade operator K̂ (Corollary 3.4's cached
     /// decomposition), kept so `predict_var` and snapshot building reuse
@@ -119,20 +139,34 @@ impl MvmGp {
     ///
     /// Deterministic given `seed` — the heart of common-random-numbers
     /// finite differences.
-    pub fn build_operator(&self, h: &GpHypers, seed: u64) -> AffineOp {
+    pub fn build_operator(&self, h: &GpHypers, seed: u64) -> Result<AffineOp> {
         self.build_operator_with_rank(h, seed, self.cfg.rank)
     }
 
     /// As [`build_operator`](Self::build_operator) with an explicit
     /// Lanczos rank (used by `refresh` for the high-accuracy solve).
-    pub fn build_operator_with_rank(&self, h: &GpHypers, seed: u64, rank: usize) -> AffineOp {
+    pub fn build_operator_with_rank(
+        &self,
+        h: &GpHypers,
+        seed: u64,
+        rank: usize,
+    ) -> Result<AffineOp> {
         let d = self.xs.cols;
+        // A mismatched rectilinear spec is a typed error up front, not an
+        // index panic deep inside operator construction.
+        self.cfg.grid.validate_for_dim(d)?;
         let inner: Box<dyn LinearOp> = match self.cfg.variant {
             MvmVariant::Skip => {
                 let kern = ProductKernel::rbf(d, h.ell(), 1.0);
-                let skis: Vec<SkiOp> = (0..d)
-                    .map(|k| SkiOp::new(&self.xs.col(k), &kern.factors[k], self.cfg.grid_m))
-                    .collect();
+                let skis = (0..d)
+                    .map(|k| {
+                        SkiOp::new(
+                            &self.xs.col(k),
+                            &kern.factors[k],
+                            self.cfg.grid.size_for_dim(k),
+                        )
+                    })
+                    .collect::<Result<Vec<SkiOp>>>()?;
                 let comps: Vec<SkipComponent> = skis
                     .iter()
                     .map(|s| SkipComponent::Op(s as &dyn LinearOp))
@@ -141,22 +175,38 @@ impl MvmGp {
                 Box::new(SkipOp::build(comps, rank, self.backend.clone(), &mut rng))
             }
             MvmVariant::Kiss => {
+                // Dense tensor specs must fit the explicit cell cap (the
+                // historical d ≲ 5 regime); sparse specs break it.
+                if !matches!(self.cfg.grid, GridSpec::Sparse { .. }) {
+                    match self.cfg.grid.total_points(d) {
+                        Some(cells) if cells <= KRON_MAX_CELLS => {}
+                        _ => {
+                            return Err(Error::Grid(format!(
+                                "dense Kronecker grid {} in d={d} exceeds \
+                                 {KRON_MAX_CELLS} cells — use GridSpec::Sparse \
+                                 to break the m^d barrier",
+                                self.cfg.grid.describe()
+                            )))
+                        }
+                    }
+                }
                 let kern = ProductKernel::rbf(d, h.ell(), 1.0);
-                Box::new(KroneckerSkiOp::new(&self.xs, &kern, self.cfg.grid_m))
+                let grid = build_grid(&self.xs, &self.cfg.grid)?;
+                grid_ski_operator(&self.xs, &kern, grid.as_ref())
             }
         };
-        AffineOp { inner, scale: h.sf2(), shift: h.sn2() }
+        Ok(AffineOp { inner, scale: h.sf2(), shift: h.sn2() })
     }
 
     /// Stochastic estimate of the marginal log likelihood (Eq. 3).
-    pub fn mll(&self, h: &GpHypers, seed: u64) -> f64 {
-        let op = self.build_operator(h, seed);
+    pub fn mll(&self, h: &GpHypers, seed: u64) -> Result<f64> {
+        let op = self.build_operator(h, seed)?;
         let n = self.ys.len() as f64;
         let sol = cg_solve(&op, &self.ys, self.cfg.cg);
         let fit: f64 = self.ys.iter().zip(&sol.x).map(|(y, a)| y * a).sum();
         let mut rng = Rng::new(seed ^ LOGDET_STREAM);
         let logdet = slq_logdet(&op, self.cfg.slq, &mut rng);
-        -0.5 * fit - 0.5 * logdet - 0.5 * n * (2.0 * std::f64::consts::PI).ln()
+        Ok(-0.5 * fit - 0.5 * logdet - 0.5 * n * (2.0 * std::f64::consts::PI).ln())
     }
 
     /// One training step's gradient: analytic in σ_f², σ_n²; CRN central
@@ -166,13 +216,13 @@ impl MvmGp {
     /// `K̂⁻¹zᵢ` ride in **one block-CG call**: every CG iteration costs a
     /// single fused SKIP block MVM for all 1 + p right-hand sides instead
     /// of 1 + p independent operator traversals.
-    pub fn mll_grad(&self, h: &GpHypers, seed: u64) -> (f64, Vec<f64>) {
+    pub fn mll_grad(&self, h: &GpHypers, seed: u64) -> Result<(f64, Vec<f64>)> {
         let n = self.ys.len();
-        let op = self.build_operator(h, seed);
+        let op = self.build_operator(h, seed)?;
         // Hutchinson probes from the fixed stream (same draws as the
         // historical one-solve-per-probe loop, for seed compatibility).
         let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
-        let num_tr_probes = self.cfg.slq.num_probes.min(6).max(2);
+        let num_tr_probes = self.cfg.slq.num_probes.clamp(2, 6);
         let probes: Vec<Vec<f64>> =
             (0..num_tr_probes).map(|_| rng.rademacher_vec(n)).collect();
         let mut rhs = Matrix::zeros(n, 1 + num_tr_probes);
@@ -206,14 +256,14 @@ impl MvmGp {
         hp.log_ell += fd_h;
         let mut hm = *h;
         hm.log_ell -= fd_h;
-        let lp = self.mll(&hp, seed);
-        let lm = self.mll(&hm, seed);
+        let lp = self.mll(&hp, seed)?;
+        let lm = self.mll(&hm, seed)?;
         let g_ell = (lp - lm) / (2.0 * fd_h);
 
         // MLL at θ (reuse fit term; logdet from the CRN midpoint average —
         // good enough for the training trace).
         let mll_mid = 0.5 * (lp + lm);
-        (mll_mid, vec![g_ell, g_sf2, g_sn2])
+        Ok((mll_mid, vec![g_ell, g_sf2, g_sn2]))
     }
 
     /// Train with ADAM. Returns MLL trace. Refreshes the predictive cache.
@@ -225,7 +275,7 @@ impl MvmGp {
     /// rank(A∘B) ≤ rank(A)·rank(B) caveat). Left unchecked, that bias
     /// rewards ever-shorter ℓ, walking the optimizer out of the regime
     /// where the approximation (and hence the MLL estimate) is valid.
-    pub fn fit(&mut self, steps: usize, lr: f64) -> Vec<f64> {
+    pub fn fit(&mut self, steps: usize, lr: f64) -> Result<Vec<f64>> {
         let mut adam = Adam::new(3, lr);
         let mut params = self.hypers.to_vec();
         let ell_floor = GpHypers::init_for_dim(self.xs.cols).log_ell + (2.0f64 / 3.0).ln();
@@ -235,31 +285,32 @@ impl MvmGp {
             let h = GpHypers::from_vec(&params);
             // Fresh randomness per step; common within the step.
             let seed = self.cfg.seed.wrapping_add(step as u64);
-            let (mll, grad) = self.mll_grad(&h, seed);
+            let (mll, grad) = self.mll_grad(&h, seed)?;
             trace.push(mll);
             adam.step_ascend(&mut params, &grad);
             params[0] = params[0].max(ell_floor);
             params[2] = params[2].max(sn2_floor);
         }
         self.hypers = GpHypers::from_vec(&params);
-        self.refresh();
-        trace
+        self.refresh()?;
+        Ok(trace)
     }
 
     /// Recompute α for the current hyperparameters at `refresh_rank`
     /// accuracy (see the config docs: the solve amplifies operator error,
     /// so prediction uses a higher-rank operator than training).
-    pub fn refresh(&mut self) {
+    pub fn refresh(&mut self) -> Result<()> {
         let op = self.build_operator_with_rank(
             &self.hypers,
             self.cfg.seed,
             self.refresh_grade_rank(),
-        );
+        )?;
         let cg = CgConfig { max_iters: self.cfg.cg.max_iters.max(200), ..self.cfg.cg };
         let sol = cg_solve(&op, &self.ys, cg);
         self.alpha = Some(sol.x);
         self.cache = self.build_stencil_cache();
         self.refresh_op = Some(op);
+        Ok(())
     }
 
     /// The refresh-grade operator built by the last `refresh` (None before
@@ -288,25 +339,31 @@ impl MvmGp {
     }
 
     /// The grid-side stencil cache backing `predict_mean`, when the grid
-    /// fits the budget (None for high-d models, which predict densely).
+    /// fits the budget (None for high-d dense specs, which predict
+    /// densely).
     pub fn predict_cache(&self) -> Option<&PredictCache> {
         self.cache.as_ref()
     }
 
     /// Build the mean-only stencil cache on the training grid, or None
-    /// when mᵈ exceeds [`PREDICT_CACHE_MAX_CELLS`].
+    /// when the stored cells exceed [`PREDICT_CACHE_MAX_CELLS`] (or the
+    /// grid cannot be fit — prediction then uses the dense path).
     fn build_stencil_cache(&self) -> Option<PredictCache> {
         let alpha = self.alpha.as_ref()?;
-        grid_cells_within(self.cfg.grid_m, self.xs.cols, PREDICT_CACHE_MAX_CELLS)?;
-        let grids = fit_grids(&self.xs, self.cfg.grid_m);
-        PredictCache::build(&self.xs, alpha, &self.hypers, grids, None).ok()
+        let cells = self.cfg.grid.total_points(self.xs.cols)?;
+        if cells > PREDICT_CACHE_MAX_CELLS {
+            return None;
+        }
+        let grid = build_grid(&self.xs, &self.cfg.grid).ok()?;
+        PredictCache::build(&self.xs, alpha, &self.hypers, grid.as_ref(), None).ok()
     }
 
     /// Predictive mean (Eq. 1): `μ* = K_{*X} α`, served from the grid-side
-    /// stencil cache shared with `serve::cache` — one 4ᵈ-sparse stencil
-    /// dot per point instead of the O(n·d) dense cross-kernel row. Falls
-    /// back to [`predict_mean_dense`](Self::predict_mean_dense) when the
-    /// grid exceeds the cache budget; debug builds cross-check the stencil
+    /// stencil cache shared with `serve::cache` — one sparse stencil dot
+    /// per point (per grid term) instead of the O(n·d) dense cross-kernel
+    /// row. Falls back to
+    /// [`predict_mean_dense`](Self::predict_mean_dense) when the grid
+    /// exceeds the cache budget; debug builds cross-check the stencil
     /// path against the dense reference.
     pub fn predict_mean(&self, xtest: &Matrix) -> Vec<f64> {
         assert!(self.alpha.is_some(), "call fit/refresh first");
@@ -344,18 +401,24 @@ impl MvmGp {
     fn debug_check_stencil_mean(&self, got: &[f64], xtest: &Matrix) {
         // Only cross-check problems small enough that the dense oracle is
         // cheap; the stencil path differs from dense by the SKI
-        // interpolation error, amplified by ‖α‖₁.
+        // interpolation error, amplified by ‖α‖₁. Multi-term (sparse)
+        // caches carry the combination-technique error on top and are
+        // covered by their own integration tests instead.
         if xtest.rows * self.xs.rows > 250_000 {
             return;
         }
         let cache = self.cache.as_ref().expect("stencil check without cache");
+        if cache.terms().len() != 1 {
+            return;
+        }
+        let axes = &cache.terms()[0].axes;
         // Extrapolated points (outside the grid span) get clamped,
         // legitimately degraded stencils — only interior points are held
         // to the interpolation-accuracy bound.
         let interior = |row: &[f64]| {
-            row.iter().zip(&cache.grids).all(|(&x, g)| {
-                x >= g.min && x <= g.min + g.h * (g.m - 1) as f64
-            })
+            row.iter()
+                .zip(axes)
+                .all(|(&x, g)| x >= g.min && x <= g.max())
         };
         let want = self.predict_mean_dense(xtest);
         let mut err = 0.0f64;
@@ -397,7 +460,7 @@ impl MvmGp {
     ///
     /// Like `ExactGp::predict_var`, this is the noise-free latent
     /// variance; add `hypers.sn2()` for observation variance.
-    pub fn predict_var(&self, xtest: &Matrix) -> Vec<f64> {
+    pub fn predict_var(&self, xtest: &Matrix) -> Result<Vec<f64>> {
         assert!(self.alpha.is_some(), "call fit/refresh first");
         let d = self.xs.cols;
         let kern = ProductKernel::rbf(d, self.hypers.ell(), self.hypers.sf2());
@@ -412,18 +475,18 @@ impl MvmGp {
                     &self.hypers,
                     self.cfg.seed,
                     self.refresh_grade_rank(),
-                );
+                )?;
                 &built
             }
         };
         let cg = CgConfig { max_iters: self.cfg.cg.max_iters.max(200), ..self.cfg.cg };
         let sol = block_cg_solve(op, &kx, cg);
-        (0..xtest.rows)
+        Ok((0..xtest.rows)
             .map(|j| {
                 let quad = dot(&kx.col(j), &sol.x.col(j));
                 (self.hypers.sf2() - quad).max(1e-12)
             })
-            .collect()
+            .collect())
     }
 }
 
@@ -451,9 +514,10 @@ mod tests {
     #[test]
     fn skip_gp_regresses_2d() {
         let (xs, ys, xt, yt) = toy(200, 2, 1);
-        let cfg = MvmGpConfig { grid_m: 64, rank: 30, ..Default::default() };
+        let cfg =
+            MvmGpConfig { grid: GridSpec::uniform(64), rank: 30, ..Default::default() };
         let mut gp = MvmGp::new(xs, ys, GpHypers::new(0.5, 1.0, 0.05), cfg);
-        gp.refresh();
+        gp.refresh().unwrap();
         let pred = gp.predict_mean(&xt);
         let err = mae(&pred, &yt);
         assert!(err < 0.15, "mae {err}");
@@ -464,33 +528,67 @@ mod tests {
         let (xs, ys, xt, yt) = toy(200, 2, 2);
         let cfg = MvmGpConfig {
             variant: MvmVariant::Kiss,
-            grid_m: 32,
+            grid: GridSpec::uniform(32),
             ..Default::default()
         };
         let mut gp = MvmGp::new(xs, ys, GpHypers::new(0.5, 1.0, 0.05), cfg);
-        gp.refresh();
+        gp.refresh().unwrap();
         let pred = gp.predict_mean(&xt);
         let err = mae(&pred, &yt);
         assert!(err < 0.15, "mae {err}");
     }
 
     #[test]
+    fn sparse_kiss_gp_regresses_2d() {
+        let (xs, ys, xt, yt) = toy(200, 2, 2);
+        let cfg = MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: GridSpec::sparse(5),
+            ..Default::default()
+        };
+        let mut gp = MvmGp::new(xs, ys, GpHypers::new(0.5, 1.0, 0.05), cfg);
+        gp.refresh().unwrap();
+        let pred = gp.predict_mean(&xt);
+        let err = mae(&pred, &yt);
+        assert!(err < 0.15, "sparse-grid mae {err}");
+        // The multi-term cache is live (not the dense fallback).
+        assert!(gp.predict_cache().unwrap().terms().len() > 1);
+    }
+
+    #[test]
     fn skip_and_kiss_agree_on_small_problem() {
         let (xs, ys, xt, _) = toy(150, 2, 3);
         let h = GpHypers::new(0.7, 1.0, 0.1);
-        let cfg_s = MvmGpConfig { grid_m: 64, rank: 40, ..Default::default() };
+        let cfg_s =
+            MvmGpConfig { grid: GridSpec::uniform(64), rank: 40, ..Default::default() };
         let cfg_k = MvmGpConfig {
             variant: MvmVariant::Kiss,
-            grid_m: 64,
+            grid: GridSpec::uniform(64),
             ..Default::default()
         };
         let mut a = MvmGp::new(xs.clone(), ys.clone(), h, cfg_s);
         let mut b = MvmGp::new(xs, ys, h, cfg_k);
-        a.refresh();
-        b.refresh();
+        a.refresh().unwrap();
+        b.refresh().unwrap();
         let pa = a.predict_mean(&xt);
         let pb = b.predict_mean(&xt);
         assert!(mae(&pa, &pb) < 0.05, "mae between variants {}", mae(&pa, &pb));
+    }
+
+    #[test]
+    fn dense_kron_high_d_is_a_typed_error() {
+        let (xs, ys, _, _) = toy(40, 8, 12);
+        let cfg = MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: GridSpec::uniform(100),
+            ..Default::default()
+        };
+        let gp = MvmGp::new(xs, ys, GpHypers::init_for_dim(8), cfg);
+        let err = match gp.build_operator(&gp.hypers, 0) {
+            Ok(_) => panic!("dense 100^8 grid must refuse"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("Sparse"), "{err}");
     }
 
     #[test]
@@ -500,13 +598,13 @@ mod tests {
         let h = GpHypers::new(0.8, 1.0, 0.1);
         let exact = ExactGp::new(xs.clone(), ys.clone(), h).mll(&h).unwrap();
         let cfg = MvmGpConfig {
-            grid_m: 64,
+            grid: GridSpec::uniform(64),
             rank: 40,
             slq: SlqConfig { num_probes: 30, max_rank: 40 },
             ..Default::default()
         };
         let gp = MvmGp::new(xs, ys, h, cfg);
-        let est = gp.mll(&h, 11);
+        let est = gp.mll(&h, 11).unwrap();
         // The SKIP operator is a rank-truncated approximation of K and the
         // logdet is an SLQ estimate, so compare in nats *per datapoint*
         // (the exact MLL sits near zero here, making relative error
@@ -518,9 +616,10 @@ mod tests {
     #[test]
     fn fit_improves_mll() {
         let (xs, ys, _, _) = toy(150, 2, 5);
-        let cfg = MvmGpConfig { grid_m: 48, rank: 25, ..Default::default() };
+        let cfg =
+            MvmGpConfig { grid: GridSpec::uniform(48), rank: 25, ..Default::default() };
         let mut gp = MvmGp::new(xs, ys, GpHypers::new(2.5, 0.5, 0.5), cfg);
-        let trace = gp.fit(15, 0.1);
+        let trace = gp.fit(15, 0.1).unwrap();
         assert!(
             trace.last().unwrap() > trace.first().unwrap(),
             "trace {:?}",
@@ -531,9 +630,10 @@ mod tests {
     #[test]
     fn stencil_cache_built_when_grid_fits() {
         let (xs, ys, xt, _) = toy(150, 2, 7);
-        let cfg = MvmGpConfig { grid_m: 48, rank: 30, ..Default::default() };
+        let cfg =
+            MvmGpConfig { grid: GridSpec::uniform(48), rank: 30, ..Default::default() };
         let mut gp = MvmGp::new(xs, ys, GpHypers::new(0.7, 1.0, 0.05), cfg);
-        gp.refresh();
+        gp.refresh().unwrap();
         let cache = gp.predict_cache().expect("2-D grid fits the budget");
         assert_eq!(cache.total_grid(), 48 * 48);
         // The stencil path tracks the dense reference closely.
@@ -545,9 +645,14 @@ mod tests {
     #[test]
     fn high_dim_grid_falls_back_to_dense_path() {
         let (xs, ys, xt, _) = toy(60, 8, 8);
-        let cfg = MvmGpConfig { grid_m: 100, rank: 10, refresh_rank: 20, ..Default::default() };
+        let cfg = MvmGpConfig {
+            grid: GridSpec::uniform(100),
+            rank: 10,
+            refresh_rank: 20,
+            ..Default::default()
+        };
         let mut gp = MvmGp::new(xs, ys, GpHypers::init_for_dim(8), cfg);
-        gp.refresh();
+        gp.refresh().unwrap();
         // 100⁸ cells blows any budget — no cache, but prediction works.
         assert!(gp.predict_cache().is_none());
         let pred = gp.predict_mean(&xt);
@@ -565,11 +670,15 @@ mod tests {
         let mut exact = ExactGp::new(xs.clone(), ys.clone(), h);
         exact.refresh().unwrap();
         let want = exact.predict_var(&xt);
-        let cfg =
-            MvmGpConfig { grid_m: 64, rank: 40, refresh_rank: 40, ..Default::default() };
+        let cfg = MvmGpConfig {
+            grid: GridSpec::uniform(64),
+            rank: 40,
+            refresh_rank: 40,
+            ..Default::default()
+        };
         let mut gp = MvmGp::new(xs, ys, h, cfg);
-        gp.refresh();
-        let got = gp.predict_var(&xt);
+        gp.refresh().unwrap();
+        let got = gp.predict_var(&xt).unwrap();
         assert!(mae(&got, &want) < 0.05, "var mae {}", mae(&got, &want));
         for v in &got {
             assert!(*v > 0.0 && *v <= h.sf2() + 1e-9);
@@ -580,11 +689,11 @@ mod tests {
     fn predict_var_small_at_data_large_far_away() {
         let (xs, ys, _, _) = toy(120, 2, 10);
         let x0 = [xs.get(0, 0), xs.get(0, 1)];
-        let cfg = MvmGpConfig { grid_m: 48, ..Default::default() };
+        let cfg = MvmGpConfig { grid: GridSpec::uniform(48), ..Default::default() };
         let mut gp = MvmGp::new(xs, ys, GpHypers::new(0.6, 1.0, 0.01), cfg);
-        gp.refresh();
+        gp.refresh().unwrap();
         let xt = Matrix::from_vec(2, 2, vec![x0[0], x0[1], 50.0, -50.0]);
-        let var = gp.predict_var(&xt);
+        let var = gp.predict_var(&xt).unwrap();
         assert!(var[0] < 0.1, "at-data var {}", var[0]);
         assert!(var[1] > 0.9, "far-field var {}", var[1]);
     }
@@ -593,9 +702,14 @@ mod tests {
     fn crn_mll_is_deterministic() {
         let (xs, ys, _, _) = toy(80, 2, 6);
         let h = GpHypers::default_init();
-        let gp = MvmGp::new(xs, ys, h, MvmGpConfig { grid_m: 32, ..Default::default() });
-        let a = gp.mll(&h, 99);
-        let b = gp.mll(&h, 99);
+        let gp = MvmGp::new(
+            xs,
+            ys,
+            h,
+            MvmGpConfig { grid: GridSpec::uniform(32), ..Default::default() },
+        );
+        let a = gp.mll(&h, 99).unwrap();
+        let b = gp.mll(&h, 99).unwrap();
         assert_eq!(a, b);
     }
 }

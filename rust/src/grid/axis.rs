@@ -1,0 +1,393 @@
+//! 1-D inducing-grid axes and local interpolation stencils.
+//!
+//! Every inducing grid in this crate — the 1-D SKI grids, the dense
+//! Kronecker tensor grid, and each anisotropic term of the sparse
+//! combination-technique grid — is a Cartesian product of [`Grid1d`]
+//! axes. This module owns the axis type, its (validated) fitting rules,
+//! and the per-axis interpolation stencils:
+//!
+//! - **cubic** (Keys 1981, a = −1/2, 4 weights) for axes with m ≥ 4
+//!   points — the classic SKI choice, O(h³) on smooth functions;
+//! - **linear** (2 weights) for tiny axes with m ∈ {2, 3};
+//! - **constant** (weight 1) for single-point axes (m = 1) — the coarsest
+//!   level of a sparse-grid term.
+//!
+//! [`tensor_stencil`] takes the per-axis stencils to their tensor product
+//! over a row-major grid, emitting `(flat index, weight)` pairs; it is the
+//! single stencil-extraction primitive shared by the Kronecker SKI
+//! operator and the serving layer's predictive caches.
+
+use crate::{Error, Result};
+
+/// Number of interpolation weights per point on a cubic axis.
+pub const STENCIL: usize = 4;
+
+/// Fewest points for which the margin-fitted cubic grid of [`Grid1d::fit`]
+/// is well defined (the fit reserves 2 cells of margin on each side, so
+/// `h = span / (m − 5)` needs m ≥ 6).
+pub const MIN_FIT_POINTS: usize = 6;
+
+/// A regular 1-D grid of inducing points.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Grid1d {
+    /// Left-most grid point.
+    pub min: f64,
+    /// Grid spacing h.
+    pub h: f64,
+    /// Number of grid points m.
+    pub m: usize,
+}
+
+/// Shared validation for both fitting rules.
+fn check_bounds(lo: f64, hi: f64) -> Result<()> {
+    if !lo.is_finite() || !hi.is_finite() {
+        return Err(Error::Grid(format!(
+            "non-finite data bounds [{lo}, {hi}]"
+        )));
+    }
+    if hi < lo {
+        return Err(Error::Grid(format!(
+            "reversed data bounds [{lo}, {hi}]"
+        )));
+    }
+    if hi == lo {
+        return Err(Error::Grid(format!(
+            "degenerate (constant) feature: lo == hi == {lo}; a grid \
+             cannot be scaled to a zero-width column"
+        )));
+    }
+    Ok(())
+}
+
+impl Grid1d {
+    /// Build a grid of `m ≥ 6` points covering `[lo, hi]` with enough
+    /// margin that every data point has a full interior cubic stencil.
+    ///
+    /// Returns [`Error::Grid`] for degenerate inputs: non-finite or
+    /// reversed bounds, a constant feature (`lo == hi`), or
+    /// `m <` [`MIN_FIT_POINTS`] (the margin formula `h = span/(m−5)`
+    /// yields an invalid spacing below that).
+    pub fn fit(lo: f64, hi: f64, m: usize) -> Result<Self> {
+        check_bounds(lo, hi)?;
+        if m < MIN_FIT_POINTS {
+            return Err(Error::Grid(format!(
+                "grid size m={m} < {MIN_FIT_POINTS}: the margin-fitted \
+                 cubic stencil needs at least {MIN_FIT_POINTS} points"
+            )));
+        }
+        let span = hi - lo;
+        // Reserve 2 grid cells of margin on each side for the stencil.
+        let h = span / (m - 5) as f64;
+        Ok(Grid1d { min: lo - 2.0 * h, h, m })
+    }
+
+    /// Build a grid of `m ≥ 1` points covering `[lo, hi]` exactly (no
+    /// stencil margin): `m = 1` places the single point at the interval
+    /// center, `m ≥ 2` spaces the points `span/(m−1)` apart with the end
+    /// points on the bounds. Sizes `m ≥` [`MIN_FIT_POINTS`] delegate to
+    /// the margin fit of [`Grid1d::fit`].
+    ///
+    /// This is the fitting rule for the anisotropic axes of sparse-grid
+    /// terms, whose coarsest levels have 1-point axes.
+    pub fn fit_any(lo: f64, hi: f64, m: usize) -> Result<Self> {
+        if m >= MIN_FIT_POINTS {
+            return Self::fit(lo, hi, m);
+        }
+        check_bounds(lo, hi)?;
+        if m == 0 {
+            return Err(Error::Grid("grid size m=0".into()));
+        }
+        let span = hi - lo;
+        if m == 1 {
+            return Ok(Grid1d { min: 0.5 * (lo + hi), h: span, m: 1 });
+        }
+        Ok(Grid1d { min: lo, h: span / (m - 1) as f64, m })
+    }
+
+    /// Grid point i.
+    #[inline]
+    pub fn point(&self, i: usize) -> f64 {
+        self.min + i as f64 * self.h
+    }
+
+    /// All grid points.
+    pub fn points(&self) -> Vec<f64> {
+        (0..self.m).map(|i| self.point(i)).collect()
+    }
+
+    /// Right-most grid point (`point(m − 1)`).
+    #[inline]
+    pub fn max(&self) -> f64 {
+        self.point(self.m - 1)
+    }
+
+    /// Width of this axis's interpolation stencil (4 cubic, 2 linear,
+    /// 1 constant) — determined by the axis size alone.
+    #[inline]
+    pub fn stencil_width(&self) -> usize {
+        axis_width(self.m)
+    }
+}
+
+/// Stencil width for an m-point axis (see [`Grid1d::stencil_width`]).
+#[inline]
+pub fn axis_width(m: usize) -> usize {
+    if m >= STENCIL {
+        STENCIL
+    } else if m >= 2 {
+        2
+    } else {
+        1
+    }
+}
+
+/// Keys (1981) cubic convolution kernel, a = −1/2, support |s| < 2.
+#[inline]
+fn cubic_weight(s: f64) -> f64 {
+    let a = -0.5;
+    let s = s.abs();
+    if s < 1.0 {
+        ((a + 2.0) * s - (a + 3.0)) * s * s + 1.0
+    } else if s < 2.0 {
+        a * (((s - 5.0) * s + 8.0) * s - 4.0)
+    } else {
+        0.0
+    }
+}
+
+/// Stencil of point `x` on `grid` (m ≥ 4): left-most grid index plus the
+/// four (renormalized) cubic convolution weights. Shared by the 1-D
+/// `InterpMatrix` and the tensor-product weights of KISS-GP.
+pub fn cubic_stencil(x: f64, grid: &Grid1d) -> (usize, [f64; STENCIL]) {
+    let u = (x - grid.min) / grid.h;
+    let fi = u.floor() as isize;
+    let base = (fi - 1).clamp(0, grid.m as isize - STENCIL as isize) as usize;
+    let mut row_w = [0.0; STENCIL];
+    let mut wsum = 0.0;
+    for (k, rw) in row_w.iter_mut().enumerate() {
+        *rw = cubic_weight(u - (base + k) as f64);
+        wsum += *rw;
+    }
+    // Renormalize: guards partition-of-unity at clamped boundaries.
+    if wsum.abs() > 1e-12 {
+        for rw in row_w.iter_mut() {
+            *rw /= wsum;
+        }
+    }
+    (base, row_w)
+}
+
+/// Stencil of point `x` on an axis of **any** size: returns the base grid
+/// index, the stencil width w ∈ {1, 2, 4}, and the w weights in the first
+/// w slots of the array. Cubic for m ≥ 4, linear (clamped to the axis)
+/// for m ∈ {2, 3}, constant for m = 1.
+pub fn axis_stencil(x: f64, grid: &Grid1d) -> (usize, usize, [f64; STENCIL]) {
+    let m = grid.m;
+    if m >= STENCIL {
+        let (base, w) = cubic_stencil(x, grid);
+        (base, STENCIL, w)
+    } else if m >= 2 {
+        let u = ((x - grid.min) / grid.h).clamp(0.0, (m - 1) as f64);
+        let i = (u.floor() as usize).min(m - 2);
+        let t = u - i as f64;
+        (i, 2, [1.0 - t, t, 0.0, 0.0])
+    } else {
+        (0, 1, [1.0, 0.0, 0.0, 0.0])
+    }
+}
+
+/// Row-major strides of a tensor-product grid with per-dimension sizes
+/// `dims` (dimension 0 slowest — the layout shared by
+/// `crate::operators::kronecker` and the serving layer's grid-side
+/// predictive caches).
+pub fn tensor_strides(dims: &[usize]) -> Vec<usize> {
+    let d = dims.len();
+    let mut strides = vec![1usize; d];
+    for k in (0..d.saturating_sub(1)).rev() {
+        strides[k] = strides[k + 1] * dims[k + 1];
+    }
+    strides
+}
+
+/// Maximum tensor-stencil dimensionality (4ᵈ weights per point becomes
+/// astronomically large long before this bound binds on cubic axes;
+/// sparse-grid terms with mostly 1-point axes stay cheap far beyond it
+/// but share the bound for the fixed-size scratch arrays).
+pub const MAX_TENSOR_DIM: usize = 16;
+
+/// Number of `(flat index, weight)` pairs [`tensor_stencil`] emits per
+/// point on the product of `grids`: Π per-axis stencil widths.
+pub fn tensor_stencil_size(grids: &[Grid1d]) -> usize {
+    grids.iter().map(|g| g.stencil_width()).product()
+}
+
+/// Tensor-product interpolation stencil of the d-dimensional point `x` on
+/// the per-dimension grids `grids`: calls `emit(flat_index, weight)` for
+/// each of the [`tensor_stencil_size`] (flat grid index, product weight)
+/// pairs, in the fixed order where the last dimension's offset varies
+/// fastest. `strides` must be [`tensor_strides`] of the grid sizes.
+///
+/// Axes of any size compose: cubic axes contribute 4 offsets, linear
+/// axes 2, constant axes 1 — so a sparse-grid term whose coarse axes are
+/// single points costs only as much as its refined axes.
+///
+/// This is the single-point stencil-extraction primitive shared by the
+/// KISS-GP operator's interpolation matrix and the O(1)-per-point
+/// predictive caches in `crate::serve::cache`.
+pub fn tensor_stencil<F: FnMut(usize, f64)>(
+    x: &[f64],
+    grids: &[Grid1d],
+    strides: &[usize],
+    mut emit: F,
+) {
+    let d = grids.len();
+    debug_assert_eq!(x.len(), d);
+    debug_assert_eq!(strides.len(), d);
+    assert!(d <= MAX_TENSOR_DIM, "tensor stencil supports d <= {MAX_TENSOR_DIM}");
+    let mut bases = [0usize; MAX_TENSOR_DIM];
+    let mut widths = [1usize; MAX_TENSOR_DIM];
+    let mut wts = [[0.0f64; STENCIL]; MAX_TENSOR_DIM];
+    let mut size = 1usize;
+    for k in 0..d {
+        let (b, wd, ws) = axis_stencil(x[k], &grids[k]);
+        bases[k] = b;
+        widths[k] = wd;
+        wts[k] = ws;
+        size *= wd;
+    }
+    for c in 0..size {
+        let mut flat = 0usize;
+        let mut weight = 1.0;
+        let mut cc = c;
+        for k in (0..d).rev() {
+            let o = cc % widths[k];
+            cc /= widths[k];
+            flat += (bases[k] + o) * strides[k];
+            weight *= wts[k][o];
+        }
+        emit(flat, weight);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn grid_covers_data_with_margin() {
+        let g = Grid1d::fit(-1.0, 1.0, 20).unwrap();
+        assert!(g.point(0) < -1.0);
+        assert!(g.point(g.m - 1) > 1.0);
+        // Interior stencil for boundary data points.
+        let u = (-1.0 - g.min) / g.h;
+        assert!(u >= 1.0);
+        let u = (1.0 - g.min) / g.h;
+        assert!(u <= (g.m - 3) as f64 + 1.0);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_inputs() {
+        // Constant feature.
+        let err = Grid1d::fit(0.7, 0.7, 16).unwrap_err();
+        assert!(err.to_string().contains("constant"), "{err}");
+        // Too few points for the margin formula (historically m = 4 gave a
+        // negative spacing and m = 5 an infinite one).
+        for m in [0usize, 3, 4, 5] {
+            let err = Grid1d::fit(0.0, 1.0, m).unwrap_err();
+            assert!(err.to_string().contains("grid"), "m={m}: {err}");
+        }
+        // Non-finite and reversed bounds.
+        assert!(Grid1d::fit(f64::NAN, 1.0, 16).is_err());
+        assert!(Grid1d::fit(0.0, f64::INFINITY, 16).is_err());
+        assert!(Grid1d::fit(1.0, 0.0, 16).is_err());
+        // fit_any shares the bound checks.
+        assert!(Grid1d::fit_any(0.5, 0.5, 3).is_err());
+        assert!(Grid1d::fit_any(0.0, 1.0, 0).is_err());
+    }
+
+    #[test]
+    fn fit_any_covers_exactly() {
+        let g = Grid1d::fit_any(-1.0, 3.0, 5).unwrap();
+        assert_eq!(g.m, 5);
+        assert!((g.point(0) + 1.0).abs() < 1e-12);
+        assert!((g.point(4) - 3.0).abs() < 1e-12);
+        let g1 = Grid1d::fit_any(-1.0, 3.0, 1).unwrap();
+        assert_eq!(g1.m, 1);
+        assert!((g1.point(0) - 1.0).abs() < 1e-12); // interval center
+        // m >= 6 delegates to the margin fit.
+        let g6 = Grid1d::fit_any(-1.0, 3.0, 12).unwrap();
+        assert_eq!(g6, Grid1d::fit(-1.0, 3.0, 12).unwrap());
+    }
+
+    #[test]
+    fn axis_stencils_partition_unity() {
+        let mut rng = Rng::new(3);
+        for m in [1usize, 2, 3, 5, 16] {
+            let g = Grid1d::fit_any(0.0, 1.0, m).unwrap();
+            assert_eq!(g.stencil_width(), axis_width(m));
+            for _ in 0..40 {
+                let x = rng.uniform_in(0.0, 1.0);
+                let (base, wd, w) = axis_stencil(x, &g);
+                assert!(base + wd <= m, "stencil exceeds axis: m={m}");
+                let sum: f64 = w[..wd].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-10, "m={m}: sum {sum}");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_stencil_interpolates_linears_exactly() {
+        let g = Grid1d::fit_any(0.0, 2.0, 3).unwrap();
+        let f: Vec<f64> = g.points().iter().map(|&u| 3.0 * u - 1.0).collect();
+        let mut rng = Rng::new(4);
+        for _ in 0..30 {
+            let x = rng.uniform_in(0.0, 2.0);
+            let (b, wd, w) = axis_stencil(x, &g);
+            let got: f64 = (0..wd).map(|k| w[k] * f[b + k]).sum();
+            assert!((got - (3.0 * x - 1.0)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn tensor_stencil_mixed_widths_2d() {
+        // One cubic axis × one constant axis: 4 pairs, weights match the
+        // 1-D cubic stencil, flat indices walk the cubic axis only.
+        let gx = Grid1d::fit(0.0, 1.0, 16).unwrap();
+        let g1 = Grid1d::fit_any(0.0, 1.0, 1).unwrap();
+        let strides = tensor_strides(&[16, 1]);
+        assert_eq!(strides, vec![1, 1]);
+        let grids = [gx.clone(), g1];
+        assert_eq!(tensor_stencil_size(&grids), 4);
+        let x = [0.37, 0.9];
+        let (base, w) = cubic_stencil(0.37, &gx);
+        let mut got = Vec::new();
+        tensor_stencil(&x, &grids, &strides, |g, wt| got.push((g, wt)));
+        assert_eq!(got.len(), 4);
+        for (k, (gi, wt)) in got.iter().enumerate() {
+            assert_eq!(*gi, base + k);
+            assert_eq!(*wt, w[k]);
+        }
+    }
+
+    #[test]
+    fn tensor_stencil_partition_of_unity_2d() {
+        let gx = Grid1d::fit(-1.0, 1.0, 12).unwrap();
+        let gy = Grid1d::fit(0.0, 2.0, 9).unwrap();
+        let strides = tensor_strides(&[12, 9]);
+        assert_eq!(strides, vec![9, 1]);
+        let mut rng = Rng::new(13);
+        for _ in 0..25 {
+            let x = [rng.uniform_in(-1.0, 1.0), rng.uniform_in(0.0, 2.0)];
+            let mut sum = 0.0;
+            let mut count = 0;
+            tensor_stencil(&x, &[gx.clone(), gy.clone()], &strides, |flat, w| {
+                assert!(flat < 12 * 9);
+                sum += w;
+                count += 1;
+            });
+            assert_eq!(count, STENCIL * STENCIL);
+            assert!((sum - 1.0).abs() < 1e-10, "2-D partition of unity: {sum}");
+        }
+    }
+}

@@ -1,0 +1,132 @@
+//! Rectilinear (full tensor-product) inducing grids.
+//!
+//! The classic KISS-GP grid: one margin-fitted cubic axis per input
+//! dimension, with **per-dimension sizes and bounds** (generalizing the
+//! historical uniform-m `Grid1d` bundle). The grid is a single
+//! [`GridTerm`] with coefficient 1, so every consumer of the
+//! [`InducingGrid`] trait treats it as the one-term special case of the
+//! combination-technique sum.
+
+use super::axis::Grid1d;
+use super::{column_bounds, GridSpec, GridTerm, InducingGrid};
+use crate::linalg::Matrix;
+use crate::Result;
+
+/// A full tensor-product grid of per-dimension [`Grid1d`] axes.
+#[derive(Clone, Debug)]
+pub struct RectilinearGrid {
+    spec: GridSpec,
+    /// Exactly one term, coefficient 1.
+    terms: Vec<GridTerm>,
+}
+
+impl RectilinearGrid {
+    /// Fit one margin-covered axis per column of `xs` with per-dimension
+    /// sizes `sizes` (`sizes.len()` must equal `xs.cols`).
+    pub fn fit(xs: &Matrix, sizes: &[usize]) -> Result<Self> {
+        assert_eq!(
+            sizes.len(),
+            xs.cols,
+            "one grid size per input dimension"
+        );
+        let bounds = column_bounds(xs);
+        let axes = sizes
+            .iter()
+            .zip(&bounds)
+            .map(|(&m, &(lo, hi))| Grid1d::fit(lo, hi, m))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(RectilinearGrid {
+            spec: GridSpec::Rectilinear(sizes.to_vec()),
+            terms: vec![GridTerm::new(1.0, axes)],
+        })
+    }
+
+    /// Fit with the same size `m` on every dimension (the historical
+    /// `grid_m` configuration; the spec round-trips as
+    /// [`GridSpec::Uniform`]).
+    pub fn fit_uniform(xs: &Matrix, m: usize) -> Result<Self> {
+        let mut grid = Self::fit(xs, &vec![m; xs.cols])?;
+        grid.spec = GridSpec::Uniform(m);
+        Ok(grid)
+    }
+
+    /// Wrap explicit per-dimension axes (tests place training data exactly
+    /// on grid nodes this way; the snapshot loader rebuilds caches from
+    /// persisted axes through here).
+    pub fn from_axes(axes: Vec<Grid1d>) -> Self {
+        assert!(!axes.is_empty(), "rectilinear grid needs at least one axis");
+        RectilinearGrid {
+            spec: GridSpec::Rectilinear(axes.iter().map(|g| g.m).collect()),
+            terms: vec![GridTerm::new(1.0, axes)],
+        }
+    }
+
+    /// The per-dimension axes.
+    pub fn axes(&self) -> &[Grid1d] {
+        &self.terms[0].axes
+    }
+}
+
+impl InducingGrid for RectilinearGrid {
+    fn dim(&self) -> usize {
+        self.terms[0].axes.len()
+    }
+
+    fn spec(&self) -> GridSpec {
+        self.spec.clone()
+    }
+
+    fn terms(&self) -> &[GridTerm] {
+        &self.terms
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn per_dimension_sizes_and_bounds() {
+        let mut rng = Rng::new(1);
+        let xs = Matrix::from_fn(50, 2, |_, j| {
+            if j == 0 {
+                rng.uniform_in(-1.0, 1.0)
+            } else {
+                rng.uniform_in(5.0, 9.0)
+            }
+        });
+        let g = RectilinearGrid::fit(&xs, &[16, 8]).unwrap();
+        assert_eq!(g.dim(), 2);
+        assert_eq!(g.terms().len(), 1);
+        assert_eq!(g.total_points(), 16 * 8);
+        assert_eq!(g.spec(), GridSpec::Rectilinear(vec![16, 8]));
+        // Axis 1 covers the shifted column, with margin.
+        let a1 = &g.axes()[1];
+        assert!(a1.point(0) < 5.0 && a1.max() > 9.0);
+    }
+
+    #[test]
+    fn uniform_spec_roundtrips() {
+        let mut rng = Rng::new(2);
+        let xs = Matrix::from_fn(30, 3, |_, _| rng.uniform_in(0.0, 1.0));
+        let g = RectilinearGrid::fit_uniform(&xs, 12).unwrap();
+        assert_eq!(g.spec(), GridSpec::Uniform(12));
+        assert_eq!(g.total_points(), 12 * 12 * 12);
+    }
+
+    #[test]
+    fn degenerate_column_is_a_typed_error() {
+        let mut rng = Rng::new(3);
+        // Column 1 is constant.
+        let xs = Matrix::from_fn(20, 2, |_, j| {
+            if j == 0 {
+                rng.uniform_in(0.0, 1.0)
+            } else {
+                0.25
+            }
+        });
+        let err = RectilinearGrid::fit(&xs, &[16, 16]).unwrap_err();
+        assert!(err.to_string().contains("constant"), "{err}");
+    }
+}

@@ -11,6 +11,7 @@
 use crate::coordinator::Session;
 use crate::data::{dataset_by_name, gaussian_cloud, generate};
 use crate::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant, Sgpr};
+use crate::grid::GridSpec;
 use crate::kernels::ProductKernel;
 use crate::operators::{LinearOp, SkiOp, SkipComponent, SkipOp};
 use crate::util::{rel_err, Rng, Timer};
@@ -61,9 +62,9 @@ pub fn fig2_left(cfg: &Fig2LeftConfig, out_dir: &Path) -> Result<()> {
         let exact = session.metrics.time("exact_gram", || kern.gram_sym(&xs));
         // Per-dimension SKI components: grid fine enough that
         // interpolation error sits below the Lanczos error floor.
-        let skis: Vec<SkiOp> = (0..d)
+        let skis = (0..d)
             .map(|k| SkiOp::new(&xs.col(k), &kern.factors[k], cfg.grid_m))
-            .collect();
+            .collect::<Result<Vec<SkiOp>>>()?;
         for &r in &cfg.ranks {
             let mut errs = Vec::with_capacity(cfg.trials);
             for trial in 0..cfg.trials {
@@ -138,14 +139,14 @@ pub fn fig2_right(cfg: &Fig2RightConfig, out_dir: &Path) -> Result<()> {
                 h,
                 MvmGpConfig {
                     variant: MvmVariant::Skip,
-                    grid_m: m.max(6),
+                    grid: GridSpec::uniform(m.max(6)),
                     rank: cfg.rank,
                     seed: cfg.seed,
                     ..Default::default()
                 },
             );
             let t = Timer::start();
-            let _ = gp.mll_grad(&h, cfg.seed);
+            let _ = gp.mll_grad(&h, cfg.seed)?;
             let dt = t.elapsed_s();
             println!("  skip     m={m:>4}  step={dt:.3}s");
             session.rowf(&[&"skip", &m, &(m * d), &dt]);
@@ -159,14 +160,14 @@ pub fn fig2_right(cfg: &Fig2RightConfig, out_dir: &Path) -> Result<()> {
                 h,
                 MvmGpConfig {
                     variant: MvmVariant::Kiss,
-                    grid_m: m.max(6),
+                    grid: GridSpec::uniform(m.max(6)),
                     rank: cfg.rank,
                     seed: cfg.seed,
                     ..Default::default()
                 },
             );
             let t = Timer::start();
-            let _ = gp.mll_grad(&h, cfg.seed);
+            let _ = gp.mll_grad(&h, cfg.seed)?;
             let dt = t.elapsed_s();
             println!("  kiss-gp  m={m:>4}  step={dt:.3}s (grid {grid_total:.0})");
             session.rowf(&[&"kiss", &m, &(grid_total as usize), &dt]);

@@ -125,14 +125,14 @@ fn run_mvm(
         GpHypers::init_for_dim(data.d()),
         MvmGpConfig {
             variant,
-            grid_m,
+            grid: crate::grid::GridSpec::uniform(grid_m),
             rank: cfg.rank,
             seed: cfg.seed,
             ..Default::default()
         },
     );
     let t = Timer::start();
-    gp.fit(cfg.steps, 0.1);
+    gp.fit(cfg.steps, 0.1)?;
     let train_s = t.elapsed_s();
     let pred = gp.predict_mean(&data.xtest);
     Ok(MethodResult {

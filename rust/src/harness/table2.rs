@@ -123,9 +123,9 @@ pub fn table2(cfg: &Table2Config, out_dir: &Path) -> Result<Vec<ScalingRow>> {
         let mut times = Vec::new();
         for &n in &cfg.ns {
             let xs = gaussian_cloud(n, cfg.d, cfg.seed + 2);
-            let skis: Vec<SkiOp> = (0..cfg.d)
+            let skis = (0..cfg.d)
                 .map(|k| SkiOp::new(&xs.col(k), &kern.factors[k], cfg.grid_m))
-                .collect();
+                .collect::<Result<Vec<SkiOp>>>()?;
             let comps: Vec<SkipComponent> = skis
                 .iter()
                 .map(|s| SkipComponent::Op(s as &dyn LinearOp))
@@ -152,7 +152,7 @@ pub fn table2(cfg: &Table2Config, out_dir: &Path) -> Result<Vec<ScalingRow>> {
         let mut times = Vec::new();
         for &n in &cfg.ns {
             let xs = gaussian_cloud(n, 1, cfg.seed + 4);
-            let ski = SkiOp::new(&xs.col(0), &kern.factors[0], cfg.grid_m);
+            let ski = SkiOp::new(&xs.col(0), &kern.factors[0], cfg.grid_m)?;
             let mut rng = Rng::new(cfg.seed);
             let v = rng.normal_vec(n);
             let t = bench_median_s(5, 0.05, || {
@@ -178,7 +178,7 @@ pub fn table2(cfg: &Table2Config, out_dir: &Path) -> Result<Vec<ScalingRow>> {
         let xs = gaussian_cloud(n, d, cfg.seed + 5);
         let mut times = Vec::new();
         for &m in &[8usize, 16, 32, 64] {
-            let op = KroneckerSkiOp::new(&xs, &kern3, m);
+            let op = KroneckerSkiOp::new(&xs, &kern3, m)?;
             let mut rng = Rng::new(cfg.seed);
             let v = rng.normal_vec(n);
             let t = bench_median_s(3, 0.05, || {

@@ -13,9 +13,12 @@
 //! (Argument parsing is hand-rolled: no CLI crates are available in this
 //! offline build environment.)
 
+#![allow(clippy::needless_range_loop)] // index-heavy numeric test/bench loops
+
 use skip_gp::coordinator::{print_summary, Scheduler};
 use skip_gp::data::{dataset_by_name, generate, DATASETS};
 use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant};
+use skip_gp::grid::GridSpec;
 use skip_gp::harness::{fig2, fig3, fig4, mtgp_speed, table1, table2};
 use skip_gp::runtime::PjrtBackend;
 use skip_gp::serve::{
@@ -74,6 +77,32 @@ impl Opts {
     }
 }
 
+/// Parse a `--grid` value into a [`GridSpec`]:
+/// `"64"` → uniform 64/dim, `"32x16x8"` → per-dimension sizes,
+/// `"sparse:3"` → combination-technique sparse grid at level 3.
+fn parse_grid_spec(s: &str) -> Result<GridSpec> {
+    if let Some(level) = s.strip_prefix("sparse:") {
+        let level: usize = level
+            .parse()
+            .map_err(|_| Error::Config(format!("bad sparse level in --grid '{s}'")))?;
+        return Ok(GridSpec::sparse(level));
+    }
+    if s.contains('x') {
+        let sizes = s
+            .split('x')
+            .map(|tok| {
+                tok.parse::<usize>()
+                    .map_err(|_| Error::Config(format!("bad size '{tok}' in --grid '{s}'")))
+            })
+            .collect::<Result<Vec<usize>>>()?;
+        return Ok(GridSpec::Rectilinear(sizes));
+    }
+    let m: usize = s
+        .parse()
+        .map_err(|_| Error::Config(format!("bad value for --grid: '{s}'")))?;
+    Ok(GridSpec::uniform(m))
+}
+
 fn usage() -> ! {
     eprintln!(
         "skip-gp — Product Kernel Interpolation for Scalable Gaussian Processes
@@ -83,10 +112,11 @@ USAGE:
                 [--out-dir D] [--scale F] [--steps N] [--rank R] [--seed S]
                 [--dataset NAME] [--trials N] [--n N] [--full]
   skip-gp train  [--dataset NAME] [--scale F] [--steps N] [--rank R]
-                 [--grid M] [--variant skip|kiss] [--pjrt]
+                 [--grid M|M1xM2x…|sparse:L] [--variant skip|kiss] [--pjrt]
   skip-gp snapshot [--dataset NAME] [--scale F] [--steps N] [--rank R]
-                   [--grid M] [--variant skip|kiss] [--out F]
-                   [--serve-grid M] [--var exact|lanczos|none] [--var-rank R]
+                   [--grid M|M1xM2x…|sparse:L] [--variant skip|kiss] [--out F]
+                   [--serve-grid M|M1xM2x…|sparse:L]
+                   [--var exact|lanczos|none] [--var-rank R]
   skip-gp serve  --snapshot F [--bind ADDR] [--max-batch N] [--max-wait-ms F]
   skip-gp artifacts [--dir D]
   skip-gp list"
@@ -173,7 +203,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     let scale: f64 = opts.get("scale", 0.05)?;
     let steps: usize = opts.get("steps", 10)?;
     let rank: usize = opts.get("rank", 15)?;
-    let grid_m: usize = opts.get("grid", 100)?;
+    let grid = parse_grid_spec(&opts.get_str("grid").unwrap_or_else(|| "100".into()))?;
     let variant = match opts.get_str("variant").as_deref() {
         None | Some("skip") => MvmVariant::Skip,
         Some("kiss") => MvmVariant::Kiss,
@@ -181,17 +211,18 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     };
     let data = generate(spec, scale);
     println!(
-        "training {} GP on {} (n={}, d={}, steps={steps})",
+        "training {} GP on {} (n={}, d={}, grid {}, steps={steps})",
         if variant == MvmVariant::Skip { "SKIP" } else { "KISS" },
         name,
         data.n(),
-        data.d()
+        data.d(),
+        grid.describe()
     );
     let mut gp = MvmGp::new(
         data.xtrain.clone(),
         data.ytrain.clone(),
         GpHypers::init_for_dim(data.d()),
-        MvmGpConfig { variant, grid_m, rank, ..Default::default() },
+        MvmGpConfig { variant, grid, rank, ..Default::default() },
     );
     if opts.flag("pjrt") {
         let backend = Arc::new(PjrtBackend::load(&PathBuf::from("artifacts"))?);
@@ -199,7 +230,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         println!("using PJRT contraction backend");
     }
     let t = Timer::start();
-    let trace = gp.fit(steps, 0.1);
+    let trace = gp.fit(steps, 0.1)?;
     let train_s = t.elapsed_s();
     for (i, mll) in trace.iter().enumerate() {
         println!("  step {i:>3}  mll/n = {:.4}", mll / data.n() as f64);
@@ -212,6 +243,10 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         gp.hypers.sf2(),
         gp.hypers.sn2()
     );
+    let solvers = skip_gp::coordinator::metrics::global().solver_report();
+    if !solvers.is_empty() {
+        println!("solver effort:\n{solvers}");
+    }
     Ok(())
 }
 
@@ -224,7 +259,7 @@ fn cmd_snapshot(rest: &[String]) -> Result<()> {
     let scale: f64 = opts.get("scale", 0.05)?;
     let steps: usize = opts.get("steps", 10)?;
     let rank: usize = opts.get("rank", 15)?;
-    let grid_m: usize = opts.get("grid", 64)?;
+    let grid = parse_grid_spec(&opts.get_str("grid").unwrap_or_else(|| "64".into()))?;
     let out = PathBuf::from(opts.get_str("out").unwrap_or_else(|| "model.snap".into()));
     let variant = match opts.get_str("variant").as_deref() {
         None | Some("skip") => MvmVariant::Skip,
@@ -240,20 +275,21 @@ fn cmd_snapshot(rest: &[String]) -> Result<()> {
     };
     let data = generate(spec, scale);
     println!(
-        "training {} GP on {} (n={}, d={}, steps={steps})",
+        "training {} GP on {} (n={}, d={}, grid {}, steps={steps})",
         if variant == MvmVariant::Skip { "SKIP" } else { "KISS" },
         name,
         data.n(),
-        data.d()
+        data.d(),
+        grid.describe()
     );
     let mut gp = MvmGp::new(
         data.xtrain.clone(),
         data.ytrain.clone(),
         GpHypers::init_for_dim(data.d()),
-        MvmGpConfig { variant, grid_m, rank, ..Default::default() },
+        MvmGpConfig { variant, grid, rank, ..Default::default() },
     );
     let t = Timer::start();
-    gp.fit(steps, 0.1);
+    gp.fit(steps, 0.1)?;
     let train_s = t.elapsed_s();
     let pred = gp.predict_mean(&data.xtest);
     println!(
@@ -261,10 +297,13 @@ fn cmd_snapshot(rest: &[String]) -> Result<()> {
         mae(&pred, &data.ytest)
     );
     let t = Timer::start();
-    let serve_grid: usize = opts.get("serve-grid", 0)?;
+    let serve_grid = match opts.get_str("serve-grid") {
+        None => None,
+        Some(s) => Some(parse_grid_spec(&s)?),
+    };
     let snap = ModelSnapshot::from_mvm(
         &gp,
-        &SnapshotConfig { grid_m: serve_grid, variance, ..Default::default() },
+        &SnapshotConfig { grid: serve_grid, variance, ..Default::default() },
     )?;
     snap.save(&out)?;
     let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);

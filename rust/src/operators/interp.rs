@@ -1,144 +1,20 @@
-//! Regular 1-D inducing grids and local cubic interpolation (paper §2.3).
+//! Fixed-width sparse interpolation matrices over 1-D inducing grids
+//! (paper §2.3).
 //!
 //! SKI approximates `k(x, z) ≈ w_x K_UU w_zᵀ` where `w_x` holds the local
 //! cubic convolution interpolation weights of Keys (1981): exactly four
 //! nonzeros per point. We store the interpolation matrix `W` in a
 //! fixed-width sparse layout (4 index/weight pairs per row), which makes
 //! `W v` and `Wᵀ v` allocation-free streaming loops.
+//!
+//! The grid axes and stencil primitives themselves live in
+//! [`crate::grid`] (re-exported here for compatibility) — this module
+//! keeps only the 1-D `W` matrix the [`super::ski::SkiOp`] pipeline uses.
 
+pub use crate::grid::{
+    cubic_stencil, tensor_stencil, tensor_strides, Grid1d, MAX_TENSOR_DIM, STENCIL,
+};
 use crate::linalg::Matrix;
-
-/// Number of interpolation weights per point (cubic convolution).
-pub const STENCIL: usize = 4;
-
-/// A regular 1-D grid of inducing points.
-#[derive(Clone, Debug)]
-pub struct Grid1d {
-    /// Left-most grid point.
-    pub min: f64,
-    /// Grid spacing h.
-    pub h: f64,
-    /// Number of grid points m.
-    pub m: usize,
-}
-
-impl Grid1d {
-    /// Build a grid of `m ≥ 4` points covering `[lo, hi]` with enough
-    /// margin that every data point has a full interior cubic stencil.
-    pub fn fit(lo: f64, hi: f64, m: usize) -> Self {
-        assert!(m >= STENCIL, "grid needs at least {STENCIL} points");
-        assert!(hi >= lo);
-        let span = (hi - lo).max(1e-8);
-        // Reserve 2 grid cells of margin on each side for the stencil.
-        let h = span / (m - 5) as f64;
-        let min = lo - 2.0 * h;
-        Grid1d { min, h, m }
-    }
-
-    /// Grid point i.
-    #[inline]
-    pub fn point(&self, i: usize) -> f64 {
-        self.min + i as f64 * self.h
-    }
-
-    /// All grid points.
-    pub fn points(&self) -> Vec<f64> {
-        (0..self.m).map(|i| self.point(i)).collect()
-    }
-}
-
-/// Keys (1981) cubic convolution kernel, a = −1/2, support |s| < 2.
-#[inline]
-fn cubic_weight(s: f64) -> f64 {
-    let a = -0.5;
-    let s = s.abs();
-    if s < 1.0 {
-        ((a + 2.0) * s - (a + 3.0)) * s * s + 1.0
-    } else if s < 2.0 {
-        a * (((s - 5.0) * s + 8.0) * s - 4.0)
-    } else {
-        0.0
-    }
-}
-
-/// Stencil of point `x` on `grid`: left-most grid index plus the four
-/// (renormalized) cubic convolution weights. Shared by the 1-D
-/// `InterpMatrix` and the tensor-product weights of KISS-GP.
-pub fn cubic_stencil(x: f64, grid: &Grid1d) -> (usize, [f64; STENCIL]) {
-    let u = (x - grid.min) / grid.h;
-    let fi = u.floor() as isize;
-    let base = (fi - 1).clamp(0, grid.m as isize - STENCIL as isize) as usize;
-    let mut row_w = [0.0; STENCIL];
-    let mut wsum = 0.0;
-    for (k, rw) in row_w.iter_mut().enumerate() {
-        *rw = cubic_weight(u - (base + k) as f64);
-        wsum += *rw;
-    }
-    // Renormalize: guards partition-of-unity at clamped boundaries.
-    if wsum.abs() > 1e-12 {
-        for rw in row_w.iter_mut() {
-            *rw /= wsum;
-        }
-    }
-    (base, row_w)
-}
-
-/// Row-major strides of a tensor-product grid with per-dimension sizes
-/// `dims` (dimension 0 slowest — the layout shared by [`super::kronecker`]
-/// and the serving layer's grid-side predictive caches).
-pub fn tensor_strides(dims: &[usize]) -> Vec<usize> {
-    let d = dims.len();
-    let mut strides = vec![1usize; d];
-    for k in (0..d.saturating_sub(1)).rev() {
-        strides[k] = strides[k + 1] * dims[k + 1];
-    }
-    strides
-}
-
-/// Maximum tensor-stencil dimensionality (4ᵈ weights per point becomes
-/// astronomically large long before this bound binds).
-pub const MAX_TENSOR_DIM: usize = 16;
-
-/// Tensor-product cubic stencil of the d-dimensional point `x` on the
-/// per-dimension grids `grids`: calls `emit(flat_index, weight)` for each
-/// of the 4ᵈ (flat grid index, product weight) pairs, in the fixed order
-/// where the last dimension's offset varies fastest. `strides` must be
-/// [`tensor_strides`] of the grid sizes.
-///
-/// This is the single-point stencil-extraction primitive shared by the
-/// KISS-GP operator's interpolation matrix and the O(1)-per-point
-/// predictive caches in `crate::serve::cache`.
-pub fn tensor_stencil<F: FnMut(usize, f64)>(
-    x: &[f64],
-    grids: &[Grid1d],
-    strides: &[usize],
-    mut emit: F,
-) {
-    let d = grids.len();
-    debug_assert_eq!(x.len(), d);
-    debug_assert_eq!(strides.len(), d);
-    assert!(d <= MAX_TENSOR_DIM, "tensor stencil supports d <= {MAX_TENSOR_DIM}");
-    let mut bases = [0usize; MAX_TENSOR_DIM];
-    let mut wts = [[0.0f64; STENCIL]; MAX_TENSOR_DIM];
-    for k in 0..d {
-        let (b, ws) = cubic_stencil(x[k], &grids[k]);
-        bases[k] = b;
-        wts[k] = ws;
-    }
-    let size = STENCIL.pow(d as u32);
-    for c in 0..size {
-        let mut flat = 0usize;
-        let mut weight = 1.0;
-        let mut cc = c;
-        for k in (0..d).rev() {
-            let o = cc % STENCIL;
-            cc /= STENCIL;
-            flat += (bases[k] + o) * strides[k];
-            weight *= wts[k][o];
-        }
-        emit(flat, weight);
-    }
-}
 
 /// Fixed-width sparse interpolation matrix W (n × m, 4 nnz per row).
 #[derive(Clone, Debug)]
@@ -152,8 +28,9 @@ pub struct InterpMatrix {
 }
 
 impl InterpMatrix {
-    /// Interpolation weights of 1-D points `xs` onto `grid`.
+    /// Interpolation weights of 1-D points `xs` onto `grid` (m ≥ 4).
     pub fn new(xs: &[f64], grid: &Grid1d) -> Self {
+        assert!(grid.m >= STENCIL, "InterpMatrix needs a cubic axis (m >= {STENCIL})");
         let n = xs.len();
         let m = grid.m;
         let mut idx = Vec::with_capacity(n * STENCIL);
@@ -258,20 +135,8 @@ mod tests {
     use crate::util::Rng;
 
     #[test]
-    fn grid_covers_data_with_margin() {
-        let g = Grid1d::fit(-1.0, 1.0, 20);
-        assert!(g.point(0) < -1.0);
-        assert!(g.point(g.m - 1) > 1.0);
-        // Interior stencil for boundary data points.
-        let u = (-1.0 - g.min) / g.h;
-        assert!(u >= 1.0);
-        let u = (1.0 - g.min) / g.h;
-        assert!(u <= (g.m - 3) as f64 + 1.0);
-    }
-
-    #[test]
     fn weights_partition_unity() {
-        let g = Grid1d::fit(0.0, 1.0, 16);
+        let g = Grid1d::fit(0.0, 1.0, 16).unwrap();
         let xs: Vec<f64> = (0..50).map(|i| i as f64 / 49.0).collect();
         let w = InterpMatrix::new(&xs, &g);
         let ones = vec![1.0; g.m];
@@ -282,7 +147,7 @@ mod tests {
 
     #[test]
     fn interpolates_grid_points_exactly() {
-        let g = Grid1d::fit(0.0, 1.0, 16);
+        let g = Grid1d::fit(0.0, 1.0, 16).unwrap();
         // Data exactly on interior grid points → weight 1 on that point.
         let xs = vec![g.point(5), g.point(8)];
         let w = InterpMatrix::new(&xs, &g);
@@ -296,7 +161,7 @@ mod tests {
     fn cubic_reproduces_cubics() {
         // Cubic convolution interpolation is exact for polynomials ≤ deg 2
         // and O(h³) otherwise; test quadratic exactness on interior points.
-        let g = Grid1d::fit(0.0, 1.0, 32);
+        let g = Grid1d::fit(0.0, 1.0, 32).unwrap();
         let xs: Vec<f64> = (1..20).map(|i| 0.05 * i as f64).collect();
         let w = InterpMatrix::new(&xs, &g);
         let f: Vec<f64> = g.points().iter().map(|&u| 2.0 * u * u - u + 0.3).collect();
@@ -311,7 +176,7 @@ mod tests {
     fn ski_kernel_approximation_quality() {
         // w_x K_UU w_zᵀ ≈ k(x,z) (paper Eq. 4) — dense check on a fine grid.
         let kern = Stationary1d::rbf(0.5);
-        let g = Grid1d::fit(-1.0, 1.0, 64);
+        let g = Grid1d::fit(-1.0, 1.0, 64).unwrap();
         let mut rng = Rng::new(5);
         let xs = rng.uniform_vec(30, -1.0, 1.0);
         let w = InterpMatrix::new(&xs, &g);
@@ -324,7 +189,7 @@ mod tests {
 
     #[test]
     fn block_ops_match_per_column() {
-        let g = Grid1d::fit(0.0, 1.0, 16);
+        let g = Grid1d::fit(0.0, 1.0, 16).unwrap();
         let mut rng = Rng::new(7);
         let xs = rng.uniform_vec(30, 0.0, 1.0);
         let w = InterpMatrix::new(&xs, &g);
@@ -348,7 +213,7 @@ mod tests {
 
     #[test]
     fn tensor_stencil_matches_1d_interp_matrix() {
-        let g = Grid1d::fit(0.0, 1.0, 16);
+        let g = Grid1d::fit(0.0, 1.0, 16).unwrap();
         let mut rng = Rng::new(12);
         let xs = rng.uniform_vec(20, 0.0, 1.0);
         let w = InterpMatrix::new(&xs, &g);
@@ -366,29 +231,8 @@ mod tests {
     }
 
     #[test]
-    fn tensor_stencil_partition_of_unity_2d() {
-        let gx = Grid1d::fit(-1.0, 1.0, 12);
-        let gy = Grid1d::fit(0.0, 2.0, 9);
-        let strides = tensor_strides(&[12, 9]);
-        assert_eq!(strides, vec![9, 1]);
-        let mut rng = Rng::new(13);
-        for _ in 0..25 {
-            let x = [rng.uniform_in(-1.0, 1.0), rng.uniform_in(0.0, 2.0)];
-            let mut sum = 0.0;
-            let mut count = 0;
-            tensor_stencil(&x, &[gx.clone(), gy.clone()], &strides, |flat, w| {
-                assert!(flat < 12 * 9);
-                sum += w;
-                count += 1;
-            });
-            assert_eq!(count, STENCIL * STENCIL);
-            assert!((sum - 1.0).abs() < 1e-10, "2-D partition of unity: {sum}");
-        }
-    }
-
-    #[test]
     fn t_matvec_is_adjoint() {
-        let g = Grid1d::fit(0.0, 2.0, 12);
+        let g = Grid1d::fit(0.0, 2.0, 12).unwrap();
         let mut rng = Rng::new(6);
         let xs = rng.uniform_vec(25, 0.0, 2.0);
         let w = InterpMatrix::new(&xs, &g);

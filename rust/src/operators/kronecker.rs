@@ -2,16 +2,21 @@
 //! §5 — the baseline SKIP improves on).
 //!
 //! `K_XX ≈ W (T₁ ⊗ ⋯ ⊗ T_d) Wᵀ` where the grid is the Cartesian product
-//! of d regular 1-D grids (m points each → M = mᵈ inducing points) and `W`
-//! carries 4ᵈ tensor-product cubic weights per row. MVM cost is
-//! O(4ᵈ n + d M log m): *exponential in d* — exactly the curse of
-//! dimensionality SKIP removes.
+//! of d regular 1-D grids (per-dimension sizes m_k → M = Π m_k inducing
+//! points) and `W` carries the tensor-product interpolation weights per
+//! row. For the uniform dense grid, MVM cost is O(4ᵈ n + d M log m):
+//! *exponential in d* — the curse of dimensionality that both SKIP and the
+//! sparse combination-technique grid (`crate::grid::SparseGrid`, which
+//! sums anisotropic instances of this very operator) remove.
 
-use super::interp::{tensor_stencil, tensor_strides, Grid1d, STENCIL};
 use super::LinearOp;
+use crate::grid::{
+    tensor_stencil, tensor_stencil_size, Grid1d, InducingGrid, RectilinearGrid,
+};
 use crate::kernels::ProductKernel;
 use crate::linalg::{Matrix, SymToeplitz};
 use crate::util::parallel::par_map_range;
+use crate::Result;
 
 /// `(T₁ ⊗ ⋯ ⊗ T_d) u` via mode-wise Toeplitz application, for a
 /// row-major tensor grid with per-dimension sizes `dims` (dimension 0
@@ -25,6 +30,16 @@ pub fn kron_toeplitz_matvec(factors: &[SymToeplitz], dims: &[usize], u: &[f64]) 
     let mut cur = u.to_vec();
     for k in 0..d {
         let mk = dims[k];
+        if mk == 1 {
+            // A 1-point axis applies a 1×1 kernel: a scalar scale.
+            let s = factors[k].col[0];
+            if s != 1.0 {
+                for v in cur.iter_mut() {
+                    *v *= s;
+                }
+            }
+            continue;
+        }
         // Stride between consecutive indices along mode k.
         let stride: usize = dims[k + 1..].iter().product();
         let outer: usize = dims[..k].iter().product();
@@ -47,58 +62,68 @@ pub fn kron_toeplitz_matvec(factors: &[SymToeplitz], dims: &[usize], u: &[f64]) 
     cur
 }
 
-/// Tensor-product SKI operator over a d-dimensional grid.
+/// Tensor-product SKI operator over a d-dimensional rectilinear grid
+/// (uniform dense KISS-GP grids and the anisotropic terms of
+/// `crate::grid::SparseGrid` alike).
 pub struct KroneckerSkiOp {
     /// Per-dimension grids (m_k points each).
     pub grids: Vec<Grid1d>,
     /// Per-dimension Toeplitz grid-kernel factors.
     pub factors: Vec<SymToeplitz>,
-    /// Sparse W: for each data row, 4ᵈ (flat grid index, weight) pairs.
+    /// Sparse W: for each data row, `stencil` (flat grid index, weight)
+    /// pairs.
     idx: Vec<u32>,
     w: Vec<f64>,
     n: usize,
     /// Total grid size M = Π m_k.
     pub total_grid: usize,
+    /// Stencil entries per data row (Π per-axis widths — 4ᵈ on a dense
+    /// cubic grid, far less on anisotropic sparse-grid terms).
+    stencil: usize,
     /// Output scale σ² of the product kernel.
     outputscale: f64,
 }
 
 impl KroneckerSkiOp {
     /// Build for data `xs` (n × d) under a product kernel with `m` grid
-    /// points per dimension.
-    pub fn new(xs: &Matrix, kernel: &ProductKernel, m: usize) -> Self {
+    /// points per dimension (the classic uniform KISS-GP grid).
+    pub fn new(xs: &Matrix, kernel: &ProductKernel, m: usize) -> Result<Self> {
+        let grid = RectilinearGrid::fit_uniform(xs, m)?;
+        Ok(Self::with_grids(xs, kernel, grid.terms()[0].axes.clone()))
+    }
+
+    /// Build on explicit per-dimension grids (per-dimension sizes and
+    /// bounds; axes of any size ≥ 1 — tiny axes get linear/constant
+    /// stencils, see `crate::grid::axis`).
+    pub fn with_grids(xs: &Matrix, kernel: &ProductKernel, grids: Vec<Grid1d>) -> Self {
         let d = kernel.dim();
         assert_eq!(xs.cols, d);
+        assert_eq!(grids.len(), d);
         let n = xs.rows;
-        let stencil_sz = STENCIL.pow(d as u32);
-        // Per-dimension grids + Toeplitz factors.
-        let mut grids = Vec::with_capacity(d);
         let mut factors = Vec::with_capacity(d);
-        for k in 0..d {
-            let col = xs.col(k);
-            let (lo, hi) = col.iter().fold(
-                (f64::INFINITY, f64::NEG_INFINITY),
-                |(a, b), &x| (a.min(x), b.max(x)),
-            );
-            let grid = Grid1d::fit(lo, hi, m);
+        for (k, grid) in grids.iter().enumerate() {
             factors.push(SymToeplitz::new(
                 kernel.factors[k].toeplitz_column(grid.m, grid.h),
             ));
-            grids.push(grid);
         }
-        let total_grid: usize = grids.iter().map(|g| g.m).product();
+        let total_grid = grids
+            .iter()
+            .try_fold(1usize, |acc, g| acc.checked_mul(g.m))
+            .expect("grid size overflows usize — use a sparse spec");
         // Tensor-product interpolation weights via the shared single-point
         // stencil primitive (row-major flat index, dim 0 slowest).
         let dims: Vec<usize> = grids.iter().map(|g| g.m).collect();
-        let strides = tensor_strides(&dims);
-        let mut idx = Vec::with_capacity(n * stencil_sz);
-        let mut w = Vec::with_capacity(n * stencil_sz);
+        let strides = crate::grid::tensor_strides(&dims);
+        let stencil = tensor_stencil_size(&grids);
+        let mut idx = Vec::with_capacity(n * stencil);
+        let mut w = Vec::with_capacity(n * stencil);
         for i in 0..n {
             tensor_stencil(xs.row(i), &grids, &strides, |flat, weight| {
                 idx.push(flat as u32);
                 w.push(weight);
             });
         }
+        debug_assert_eq!(idx.len(), n * stencil);
         KroneckerSkiOp {
             grids,
             factors,
@@ -106,12 +131,13 @@ impl KroneckerSkiOp {
             w,
             n,
             total_grid,
+            stencil,
             outputscale: kernel.outputscale,
         }
     }
 
     fn stencil_size(&self) -> usize {
-        STENCIL.pow(self.grids.len() as u32)
+        self.stencil
     }
 
     /// `Wᵀ v` (grid-sized output).
@@ -166,7 +192,7 @@ impl LinearOp for KroneckerSkiOp {
     }
 
     /// Fast path: one scatter pass lifts all t right-hand sides onto the
-    /// grid (the 4ᵈ stencil indices are decoded once per data row instead
+    /// grid (the stencil indices are decoded once per data row instead
     /// of once per row *per column*), the Kronecker–Toeplitz apply runs
     /// parallel across columns, and one gather pass drops the block back
     /// to data space.
@@ -223,7 +249,7 @@ mod tests {
     fn matches_exact_kernel_mvm_2d() {
         let xs = random_points(80, 2, 20);
         let kern = ProductKernel::rbf(2, 0.7, 1.3);
-        let op = KroneckerSkiOp::new(&xs, &kern, 32);
+        let op = KroneckerSkiOp::new(&xs, &kern, 32).unwrap();
         let exact = kern.gram_sym(&xs);
         let mut rng = Rng::new(21);
         let v = rng.normal_vec(80);
@@ -235,7 +261,7 @@ mod tests {
     fn matches_exact_kernel_mvm_3d() {
         let xs = random_points(50, 3, 22);
         let kern = ProductKernel::ard(&[0.8, 1.0, 1.2], 0.9);
-        let op = KroneckerSkiOp::new(&xs, &kern, 20);
+        let op = KroneckerSkiOp::new(&xs, &kern, 20).unwrap();
         let exact = kern.gram_sym(&xs);
         let mut rng = Rng::new(23);
         let v = rng.normal_vec(50);
@@ -248,7 +274,7 @@ mod tests {
         // Direct check of the mode-wise Kronecker application.
         let xs = random_points(10, 2, 24);
         let kern = ProductKernel::rbf(2, 1.0, 1.0);
-        let op = KroneckerSkiOp::new(&xs, &kern, 6);
+        let op = KroneckerSkiOp::new(&xs, &kern, 6).unwrap();
         let (m1, m2) = (op.grids[0].m, op.grids[1].m);
         let t1 = op.factors[0].to_dense();
         let t2 = op.factors[1].to_dense();
@@ -269,12 +295,55 @@ mod tests {
     fn operator_symmetric() {
         let xs = random_points(30, 2, 26);
         let kern = ProductKernel::rbf(2, 0.5, 2.0);
-        let op = KroneckerSkiOp::new(&xs, &kern, 16);
+        let op = KroneckerSkiOp::new(&xs, &kern, 16).unwrap();
         let mut rng = Rng::new(27);
         let u = rng.normal_vec(30);
         let v = rng.normal_vec(30);
         let lhs: f64 = op.matvec(&u).iter().zip(&v).map(|(a, b)| a * b).sum();
         let rhs: f64 = op.matvec(&v).iter().zip(&u).map(|(a, b)| a * b).sum();
+        assert!((lhs - rhs).abs() < 1e-9);
+    }
+
+    #[test]
+    fn anisotropic_grids_with_tiny_axes() {
+        // A sparse-grid-style term: cubic × constant × linear axes. The
+        // operator must stay symmetric and match the dense
+        // W (T₁⊗T₂⊗T₃) Wᵀ oracle built from the same stencils.
+        let xs = random_points(25, 3, 28);
+        let kern = ProductKernel::rbf(3, 0.8, 1.0);
+        let grids = vec![
+            Grid1d::fit(-1.0, 1.0, 12).unwrap(),
+            Grid1d::fit_any(-1.0, 1.0, 1).unwrap(),
+            Grid1d::fit_any(-1.0, 1.0, 3).unwrap(),
+        ];
+        let op = KroneckerSkiOp::with_grids(&xs, &kern, grids.clone());
+        assert_eq!(op.total_grid, 12 * 3);
+        // Dense oracle.
+        let dims: Vec<usize> = grids.iter().map(|g| g.m).collect();
+        let strides = crate::grid::tensor_strides(&dims);
+        let total = op.total_grid;
+        let mut wd = Matrix::zeros(25, total);
+        for i in 0..25 {
+            tensor_stencil(xs.row(i), &grids, &strides, |g, wt| {
+                wd.set(i, g, wd.get(i, g) + wt);
+            });
+        }
+        let kron = Matrix::from_fn(total, total, |a, b| {
+            let (a1, ar) = (a / 3, a % 3);
+            let (b1, br) = (b / 3, b % 3);
+            op.factors[0].to_dense().get(a1, b1)
+                * op.factors[2].to_dense().get(ar, br)
+        });
+        let dense = wd.matmul(&kron).matmul_t(&wd);
+        let mut rng = Rng::new(29);
+        let v = rng.normal_vec(25);
+        let got = op.matvec(&v);
+        let want = dense.matvec(&v);
+        assert!(rel_err(&got, &want) < 1e-10, "{}", rel_err(&got, &want));
+        // Symmetry.
+        let u = rng.normal_vec(25);
+        let lhs: f64 = got.iter().zip(&u).map(|(a, b)| a * b).sum();
+        let rhs: f64 = op.matvec(&u).iter().zip(&v).map(|(a, b)| a * b).sum();
         assert!((lhs - rhs).abs() < 1e-9);
     }
 }

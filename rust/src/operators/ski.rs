@@ -6,7 +6,8 @@
 use super::interp::{Grid1d, InterpMatrix};
 use super::LinearOp;
 use crate::kernels::Stationary1d;
-use crate::linalg::SymToeplitz;
+use crate::linalg::{Matrix, SymToeplitz};
+use crate::Result;
 
 /// 1-D structured-kernel-interpolation operator.
 pub struct SkiOp {
@@ -17,16 +18,18 @@ pub struct SkiOp {
 
 impl SkiOp {
     /// Build for 1-D inputs `xs` under kernel `kern` on an m-point grid.
-    pub fn new(xs: &[f64], kern: &Stationary1d, m: usize) -> Self {
+    /// Degenerate inputs (constant column, m too small for the margin
+    /// fit) surface as [`crate::Error::Grid`].
+    pub fn new(xs: &[f64], kern: &Stationary1d, m: usize) -> Result<Self> {
         let (lo, hi) = xs
             .iter()
             .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &x| {
                 (a.min(x), b.max(x))
             });
-        let grid = Grid1d::fit(lo, hi, m);
+        let grid = Grid1d::fit(lo, hi, m)?;
         let w = InterpMatrix::new(xs, &grid);
         let kuu = SymToeplitz::new(kern.toeplitz_column(grid.m, grid.h));
-        SkiOp { w, kuu, grid }
+        Ok(SkiOp { w, kuu, grid })
     }
 
     /// Build with an existing grid (cross-covariance for prediction reuses
@@ -86,7 +89,7 @@ mod tests {
         let kern = Stationary1d::rbf(0.4);
         let mut rng = Rng::new(8);
         let xs = rng.uniform_vec(200, -1.0, 1.0);
-        let op = SkiOp::new(&xs, &kern, 128);
+        let op = SkiOp::new(&xs, &kern, 128).unwrap();
         let exact = Matrix::from_fn(200, 200, |i, j| kern.eval(xs[i], xs[j]));
         let v = rng.normal_vec(200);
         let got = op.matvec(&v);
@@ -104,7 +107,7 @@ mod tests {
         let want = exact.matvec(&v);
         let mut last = f64::INFINITY;
         for m in [16usize, 32, 64, 128] {
-            let op = SkiOp::new(&xs, &kern, m);
+            let op = SkiOp::new(&xs, &kern, m).unwrap();
             let err = rel_err(&op.matvec(&v), &want);
             assert!(err < last * 1.5, "m={m} err={err} last={last}");
             last = err;
@@ -117,7 +120,7 @@ mod tests {
         let kern = Stationary1d::matern52(0.7);
         let mut rng = Rng::new(10);
         let xs = rng.uniform_vec(50, 0.0, 3.0);
-        let op = SkiOp::new(&xs, &kern, 40);
+        let op = SkiOp::new(&xs, &kern, 40).unwrap();
         let u = rng.normal_vec(50);
         let v = rng.normal_vec(50);
         let lhs: f64 = op.matvec(&u).iter().zip(&v).map(|(a, b)| a * b).sum();
@@ -131,7 +134,7 @@ mod tests {
         let mut rng = Rng::new(11);
         let xs = rng.uniform_vec(40, 0.0, 1.0);
         let ts = rng.uniform_vec(15, 0.1, 0.9);
-        let op = SkiOp::new(&xs, &kern, 64);
+        let op = SkiOp::new(&xs, &kern, 64).unwrap();
         let wt = InterpMatrix::new(&ts, &op.grid);
         // test-train covariance applied to a vector over test points? No:
         // cross_matvec computes W_train K W_testᵀ v with v over tests.

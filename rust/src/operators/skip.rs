@@ -331,7 +331,7 @@ mod tests {
         let k = ProductKernel::rbf(d, 0.8, 1.0);
         let full = dense_product_gram(&xs, &k);
         let skis: Vec<SkiOp> = (0..d)
-            .map(|dd| SkiOp::new(&xs.col(dd), &k.factors[dd], 64))
+            .map(|dd| SkiOp::new(&xs.col(dd), &k.factors[dd], 64).unwrap())
             .collect();
         let comps: Vec<SkipComponent> =
             skis.iter().map(|o| SkipComponent::Op(o as &dyn LinearOp)).collect();

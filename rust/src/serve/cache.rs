@@ -3,7 +3,7 @@
 //! KISS-GP's observation (Wilson & Nickisch, 2015) is that once a model is
 //! trained, the SKI structure makes *prediction* nearly free: the
 //! cross-covariance `k(x*, X) ≈ w(x*) K_UU Wᵀ` touches the query point
-//! only through its 4ᵈ-sparse tensor interpolation stencil `w(x*)`, so
+//! only through its sparse tensor interpolation stencil `w(x*)`, so
 //! every training-data-sized quantity can be pushed onto the grid **once**
 //! at snapshot-build time:
 //!
@@ -13,6 +13,16 @@
 //! - **variance cache** `R = σ_f² (⊗K_UU)(Wᵀ S)` (M × r, where
 //!   `K̂⁻¹ ≈ S Sᵀ`): the predictive variance collapses to a rank-r gemv
 //!   against the stencil rows, `σ²(x*) = k** − ‖Rᵀ w(x*)‖²`, in O(4ᵈ r).
+//!
+//! The cache is built **per grid term** through the
+//! [`crate::grid::InducingGrid`] trait: a dense rectilinear grid is the
+//! single-term special case, and a combination-technique sparse grid
+//! ([`crate::grid::SparseGrid`]) holds one `(uₜ, Rₜ)` pair per
+//! anisotropic term, combined at query time with the signed coefficients:
+//! `μ(x*) = Σ_t c_t wₜ(x*)·uₜ` and
+//! `σ²(x*) = k** − ‖Σ_t c_t Rₜᵀ wₜ(x*)‖²`. Coarse axes of sparse terms
+//! carry 1- or 2-wide stencils, so the per-query cost stays tiny even at
+//! d = 10.
 //!
 //! `S` comes from either the exact Cholesky root `L⁻ᵀ` (rank n, small
 //! problems) or r Lanczos iterations on the training operator
@@ -26,9 +36,10 @@
 //! `KroneckerSkiOp::matmat`.
 
 use crate::gp::GpHypers;
+use crate::grid::{tensor_stencil, tensor_strides, Grid1d, GridSpec, InducingGrid};
 use crate::kernels::Stationary1d;
-use crate::linalg::{Cholesky, Matrix, SymToeplitz};
-use crate::operators::{kron_toeplitz_matvec, tensor_stencil, tensor_strides, Grid1d, LinearOp};
+use crate::linalg::{Cholesky, Matrix};
+use crate::operators::{kron_toeplitz_matvec, LinearOp};
 use crate::solvers::lanczos::lanczos;
 use crate::util::parallel::par_map_range;
 use crate::{Error, Result};
@@ -47,36 +58,33 @@ pub enum VarianceMode {
     Lanczos(usize),
 }
 
-/// Grid-side predictive cache: everything a prediction needs, with no
-/// reference to the training data.
+/// Per-term grid-side caches: the mean vector and variance factor of one
+/// rectilinear term, plus its signed combination coefficient.
 #[derive(Clone, Debug)]
-pub struct PredictCache {
-    /// Per-dimension inducing grids (the snapshot's grid spec).
-    pub grids: Vec<Grid1d>,
-    /// Mean cache `σ_f² (⊗K)(Wᵀα)`, length M = Π m_k.
+pub struct TermCache {
+    /// Signed combination coefficient c_t (1 for a dense grid).
+    pub coeff: f64,
+    /// Per-dimension axes of this term.
+    pub axes: Vec<Grid1d>,
+    /// Mean cache `σ_f² (⊗K)(Wᵀα)`, length M_t = Π m_k.
     pub mean: Vec<f64>,
-    /// Variance factor `R = σ_f² (⊗K)(Wᵀ S)`, M × r (zero columns ⇒ no
-    /// variance cache).
+    /// Variance factor `R_t = σ_f² (⊗K)(Wᵀ S)`, M_t × r (zero columns ⇒
+    /// no variance cache).
     pub var_r: Matrix,
-    /// Prior latent variance k** = σ_f².
-    pub prior_var: f64,
-    /// Observation noise σ_n² (add to the latent variance for y-variance).
-    pub noise: f64,
-    /// Row-major strides of the tensor grid (derived from `grids`).
+    /// Row-major strides of the term's flat layout (derived from `axes`).
     strides: Vec<usize>,
 }
 
-impl PredictCache {
-    /// Assemble from parts (used by the snapshot loader); validates that
-    /// the buffer sizes agree with the grid spec.
-    pub fn from_parts(
-        grids: Vec<Grid1d>,
+impl TermCache {
+    /// Assemble one term from parts, validating buffer sizes against the
+    /// axes.
+    pub fn new(
+        coeff: f64,
+        axes: Vec<Grid1d>,
         mean: Vec<f64>,
         var_r: Matrix,
-        prior_var: f64,
-        noise: f64,
     ) -> Result<Self> {
-        let dims: Vec<usize> = grids.iter().map(|g| g.m).collect();
+        let dims: Vec<usize> = axes.iter().map(|g| g.m).collect();
         let total: usize = dims.iter().product();
         if mean.len() != total {
             return Err(Error::DimMismatch {
@@ -93,50 +101,112 @@ impl PredictCache {
             });
         }
         let strides = tensor_strides(&dims);
-        Ok(PredictCache { grids, mean, var_r, prior_var, noise, strides })
+        Ok(TermCache { coeff, axes, mean, var_r, strides })
+    }
+}
+
+/// Grid-side predictive cache: everything a prediction needs, with no
+/// reference to the training data.
+#[derive(Clone, Debug)]
+pub struct PredictCache {
+    /// The grid spec the cache was built on (persisted by snapshots).
+    pub spec: GridSpec,
+    /// One cache per grid term (exactly one for dense grids).
+    terms: Vec<TermCache>,
+    /// Prior latent variance k** = σ_f².
+    pub prior_var: f64,
+    /// Observation noise σ_n² (add to the latent variance for y-variance).
+    pub noise: f64,
+}
+
+impl PredictCache {
+    /// Assemble from per-term parts (used by the snapshot loader);
+    /// validates that every term agrees on dimensionality and variance
+    /// rank.
+    pub fn from_parts(
+        spec: GridSpec,
+        terms: Vec<TermCache>,
+        prior_var: f64,
+        noise: f64,
+    ) -> Result<Self> {
+        if terms.is_empty() {
+            return Err(Error::Snapshot("predict cache with no grid terms".into()));
+        }
+        let d = terms[0].axes.len();
+        let r = terms[0].var_r.cols;
+        for t in &terms {
+            if t.axes.len() != d {
+                return Err(Error::DimMismatch {
+                    context: "predict cache term dimensionality",
+                    expected: d,
+                    got: t.axes.len(),
+                });
+            }
+            if t.var_r.cols != r {
+                return Err(Error::DimMismatch {
+                    context: "predict cache variance rank across terms",
+                    expected: r,
+                    got: t.var_r.cols,
+                });
+            }
+        }
+        Ok(PredictCache { spec, terms, prior_var, noise })
+    }
+
+    /// The per-term caches.
+    pub fn terms(&self) -> &[TermCache] {
+        &self.terms
     }
 
     /// Input dimensionality d.
     pub fn dim(&self) -> usize {
-        self.grids.len()
+        self.terms[0].axes.len()
     }
 
-    /// Total grid size M = Π m_k.
+    /// Total stored grid cells Σ_t M_t across terms.
     pub fn total_grid(&self) -> usize {
-        self.mean.len()
+        self.terms.iter().map(|t| t.mean.len()).sum()
     }
 
     /// Rank r of the variance cache (0 ⇒ mean-only).
     pub fn var_rank(&self) -> usize {
-        self.var_r.cols
+        self.terms[0].var_r.cols
     }
 
     /// True iff a variance cache was built.
     pub fn has_variance(&self) -> bool {
-        self.var_r.cols > 0
+        self.var_rank() > 0
     }
 
-    /// Predictive mean at one point: one sparse stencil dot, O(4ᵈ).
+    /// Predictive mean at one point: one sparse stencil dot per term.
     pub fn predict_mean_one(&self, x: &[f64]) -> f64 {
-        let mut acc = 0.0;
-        tensor_stencil(x, &self.grids, &self.strides, |g, w| {
-            acc += w * self.mean[g];
-        });
-        acc
+        let mut out = 0.0;
+        for t in &self.terms {
+            let mut acc = 0.0;
+            tensor_stencil(x, &t.axes, &t.strides, |g, w| {
+                acc += w * t.mean[g];
+            });
+            out += t.coeff * acc;
+        }
+        out
     }
 
     /// Latent predictive variance at one point:
-    /// `k** − ‖Rᵀ w(x*)‖²`, O(4ᵈ · r). Clamped at 1e-12 like
-    /// `ExactGp::predict_var`.
+    /// `k** − ‖Σ_t c_t Rₜᵀ wₜ(x*)‖²`, O(stencil · r). Clamped at 1e-12
+    /// like `ExactGp::predict_var`.
     pub fn predict_var_one(&self, x: &[f64]) -> f64 {
         assert!(self.has_variance(), "cache was built without a variance factor");
-        with_rank_scratch(self.var_r.cols, |acc| {
-            tensor_stencil(x, &self.grids, &self.strides, |g, w| {
-                let row = self.var_r.row(g);
-                for (a, &v) in acc.iter_mut().zip(row.iter()) {
-                    *a += w * v;
-                }
-            });
+        with_rank_scratch(self.var_rank(), |acc| {
+            for t in &self.terms {
+                let c = t.coeff;
+                tensor_stencil(x, &t.axes, &t.strides, |g, w| {
+                    let cw = c * w;
+                    let row = t.var_r.row(g);
+                    for (a, &v) in acc.iter_mut().zip(row.iter()) {
+                        *a += cw * v;
+                    }
+                });
+            }
             let reduce: f64 = acc.iter().map(|a| a * a).sum();
             (self.prior_var - reduce).max(1e-12)
         })
@@ -158,29 +228,35 @@ impl PredictCache {
         par_map_range(xtest.rows, 256, |i| self.predict_var_one(xtest.row(i)))
     }
 
-    /// (mean, latent variance) at one point in a **single** stencil pass:
-    /// the 4ᵈ weights are decoded once and feed both the mean dot and the
-    /// rank-r variance accumulator. The accumulation order per output
-    /// matches [`predict_mean_one`](Self::predict_mean_one) /
+    /// (mean, latent variance) at one point in a **single** stencil pass
+    /// per term: the weights are decoded once and feed both the mean dot
+    /// and the rank-r variance accumulator. The accumulation order per
+    /// output matches [`predict_mean_one`](Self::predict_mean_one) /
     /// [`predict_var_one`](Self::predict_var_one) exactly, so the fused
     /// path is bitwise identical to the two separate ones.
     pub fn predict_one(&self, x: &[f64]) -> (f64, f64) {
         assert!(self.has_variance(), "cache was built without a variance factor");
-        with_rank_scratch(self.var_r.cols, |acc| {
+        with_rank_scratch(self.var_rank(), |acc| {
             let mut mean = 0.0;
-            tensor_stencil(x, &self.grids, &self.strides, |g, w| {
-                mean += w * self.mean[g];
-                let row = self.var_r.row(g);
-                for (a, &v) in acc.iter_mut().zip(row.iter()) {
-                    *a += w * v;
-                }
-            });
+            for t in &self.terms {
+                let c = t.coeff;
+                let mut term_mean = 0.0;
+                tensor_stencil(x, &t.axes, &t.strides, |g, w| {
+                    term_mean += w * t.mean[g];
+                    let cw = c * w;
+                    let row = t.var_r.row(g);
+                    for (a, &v) in acc.iter_mut().zip(row.iter()) {
+                        *a += cw * v;
+                    }
+                });
+                mean += c * term_mean;
+            }
             let reduce: f64 = acc.iter().map(|a| a * a).sum();
             (mean, (self.prior_var - reduce).max(1e-12))
         })
     }
 
-    /// Batched (means, variances), one fused stencil pass per row.
+    /// Batched (means, variances), one fused stencil pass per row per term.
     pub fn predict(&self, xtest: &Matrix) -> (Vec<f64>, Vec<f64>) {
         assert_eq!(xtest.cols, self.dim(), "query dimensionality mismatch");
         let rows = par_map_range(xtest.rows, 256, |i| self.predict_one(xtest.row(i)));
@@ -191,74 +267,93 @@ impl PredictCache {
     ///
     /// - `xs`: n × d training inputs (consumed only at build time);
     /// - `alpha`: the cached solve `K̂⁻¹ y`;
+    /// - `grid`: the inducing grid (dense rectilinear or sparse) — one
+    ///   `(uₜ, Rₜ)` pair is pushed onto every term;
     /// - `s`: optional n × r inverse-root factor with `K̂⁻¹ ≈ S Sᵀ`
-    ///   (None ⇒ mean-only cache);
-    /// - `grids`: per-dimension inducing grids (usually
-    ///   [`fit_grids`]`(xs, m)`, or explicit grids for on-grid tests).
+    ///   (None ⇒ mean-only cache).
     pub fn build(
         xs: &Matrix,
         alpha: &[f64],
         hypers: &GpHypers,
-        grids: Vec<Grid1d>,
+        grid: &dyn InducingGrid,
         s: Option<&Matrix>,
     ) -> Result<Self> {
         assert_eq!(xs.rows, alpha.len());
-        assert_eq!(xs.cols, grids.len());
-        let dims: Vec<usize> = grids.iter().map(|g| g.m).collect();
-        let strides = tensor_strides(&dims);
-        let total: usize = dims.iter().product();
+        assert_eq!(xs.cols, grid.dim());
+        if let Some(s) = s {
+            assert_eq!(s.rows, xs.rows, "inverse-root factor row count");
+        }
         let kern = Stationary1d::rbf(hypers.ell());
-        let factors: Vec<SymToeplitz> = grids
-            .iter()
-            .map(|g| SymToeplitz::new(kern.toeplitz_column(g.m, g.h)))
-            .collect();
-
-        // Mean cache: scatter Wᵀα onto the grid, one stencil decode per
-        // training point, then one Kronecker–Toeplitz apply.
-        let mut wta = vec![0.0; total];
-        for i in 0..xs.rows {
-            let a = alpha[i];
-            tensor_stencil(xs.row(i), &grids, &strides, |g, w| {
-                wta[g] += w * a;
-            });
+        let mut terms = Vec::with_capacity(grid.terms().len());
+        for t in grid.terms() {
+            terms.push(build_term(xs, alpha, hypers, &kern, t.coeff, &t.axes, s)?);
         }
-        let mut mean = kron_toeplitz_matvec(&factors, &dims, &wta);
-        for v in mean.iter_mut() {
-            *v *= hypers.sf2();
-        }
-
-        // Variance cache: Wᵀ S scatter (each training row decoded once for
-        // all r columns), then the grid apply per column in parallel.
-        let var_r = match s {
-            None => Matrix::zeros(total, 0),
-            Some(s) => {
-                assert_eq!(s.rows, xs.rows, "inverse-root factor row count");
-                let r = s.cols;
-                let mut wts = Matrix::zeros(total, r);
-                for i in 0..xs.rows {
-                    let srow = s.row(i);
-                    tensor_stencil(xs.row(i), &grids, &strides, |g, w| {
-                        let out = wts.row_mut(g);
-                        for (o, &v) in out.iter_mut().zip(srow) {
-                            *o += w * v;
-                        }
-                    });
-                }
-                let cols =
-                    par_map_range(r, 2, |j| kron_toeplitz_matvec(&factors, &dims, &wts.col(j)));
-                let mut rmat = Matrix::zeros(total, r);
-                for (j, c) in cols.iter().enumerate() {
-                    rmat.set_col(j, c);
-                }
-                for v in rmat.data.iter_mut() {
-                    *v *= hypers.sf2();
-                }
-                rmat
-            }
-        };
-
-        PredictCache::from_parts(grids, mean, var_r, hypers.sf2(), hypers.sn2())
+        PredictCache::from_parts(grid.spec(), terms, hypers.sf2(), hypers.sn2())
     }
+}
+
+/// Build one term's `(uₜ, Rₜ)` caches.
+fn build_term(
+    xs: &Matrix,
+    alpha: &[f64],
+    hypers: &GpHypers,
+    kern: &Stationary1d,
+    coeff: f64,
+    axes: &[Grid1d],
+    s: Option<&Matrix>,
+) -> Result<TermCache> {
+    let dims: Vec<usize> = axes.iter().map(|g| g.m).collect();
+    let strides = tensor_strides(&dims);
+    let total: usize = dims.iter().product();
+    let factors: Vec<crate::linalg::SymToeplitz> = axes
+        .iter()
+        .map(|g| crate::linalg::SymToeplitz::new(kern.toeplitz_column(g.m, g.h)))
+        .collect();
+
+    // Mean cache: scatter Wᵀα onto the grid, one stencil decode per
+    // training point, then one Kronecker–Toeplitz apply.
+    let mut wta = vec![0.0; total];
+    for i in 0..xs.rows {
+        let a = alpha[i];
+        tensor_stencil(xs.row(i), axes, &strides, |g, w| {
+            wta[g] += w * a;
+        });
+    }
+    let mut mean = kron_toeplitz_matvec(&factors, &dims, &wta);
+    for v in mean.iter_mut() {
+        *v *= hypers.sf2();
+    }
+
+    // Variance cache: Wᵀ S scatter (each training row decoded once for
+    // all r columns), then the grid apply per column in parallel.
+    let var_r = match s {
+        None => Matrix::zeros(total, 0),
+        Some(s) => {
+            let r = s.cols;
+            let mut wts = Matrix::zeros(total, r);
+            for i in 0..xs.rows {
+                let srow = s.row(i);
+                tensor_stencil(xs.row(i), axes, &strides, |g, w| {
+                    let out = wts.row_mut(g);
+                    for (o, &v) in out.iter_mut().zip(srow) {
+                        *o += w * v;
+                    }
+                });
+            }
+            let cols =
+                par_map_range(r, 2, |j| kron_toeplitz_matvec(&factors, &dims, &wts.col(j)));
+            let mut rmat = Matrix::zeros(total, r);
+            for (j, c) in cols.iter().enumerate() {
+                rmat.set_col(j, c);
+            }
+            for v in rmat.data.iter_mut() {
+                *v *= hypers.sf2();
+            }
+            rmat
+        }
+    };
+
+    TermCache::new(coeff, axes.to_vec(), mean, var_r)
 }
 
 thread_local! {
@@ -278,36 +373,6 @@ fn with_rank_scratch<R>(r: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
         v.resize(r, 0.0);
         f(&mut v)
     })
-}
-
-/// Fit one inducing grid per input dimension, covering the data with the
-/// standard stencil margin (the same per-dimension fit `SkiOp::new` and
-/// `KroneckerSkiOp::new` use).
-pub fn fit_grids(xs: &Matrix, m: usize) -> Vec<Grid1d> {
-    (0..xs.cols)
-        .map(|k| {
-            let col = xs.col(k);
-            let (lo, hi) = col
-                .iter()
-                .fold((f64::INFINITY, f64::NEG_INFINITY), |(a, b), &x| {
-                    (a.min(x), b.max(x))
-                });
-            Grid1d::fit(lo, hi, m)
-        })
-        .collect()
-}
-
-/// Total cells of an m-per-dimension grid in d dimensions, or `None` when
-/// it overflows / exceeds `budget` (guards the exponential mᵈ blow-up).
-pub fn grid_cells_within(m: usize, d: usize, budget: usize) -> Option<usize> {
-    let mut cells = 1usize;
-    for _ in 0..d {
-        cells = cells.checked_mul(m)?;
-        if cells > budget {
-            return None;
-        }
-    }
-    Some(cells)
 }
 
 /// Exact inverse root `S = L⁻ᵀ` (rank n) from a dense Cholesky of K̂:
@@ -339,6 +404,7 @@ pub fn inverse_root_lanczos(
 mod tests {
     use super::*;
     use crate::gp::ExactGp;
+    use crate::grid::{RectilinearGrid, SparseGrid};
     use crate::kernels::ProductKernel;
     use crate::operators::DenseOp;
     use crate::util::Rng;
@@ -362,8 +428,8 @@ mod tests {
         let mut gp = ExactGp::new(xs.clone(), ys, h);
         gp.refresh().unwrap();
         let alpha = gp.alpha().unwrap().to_vec();
-        let grids = fit_grids(&xs, 64);
-        let cache = PredictCache::build(&xs, &alpha, &h, grids, None).unwrap();
+        let grid = RectilinearGrid::fit_uniform(&xs, 64).unwrap();
+        let cache = PredictCache::build(&xs, &alpha, &h, &grid, None).unwrap();
         let mut rng = Rng::new(2);
         let xt = Matrix::from_fn(40, 2, |_, _| rng.uniform_in(-0.9, 0.9));
         let want = gp.predict_mean(&xt);
@@ -377,6 +443,29 @@ mod tests {
     }
 
     #[test]
+    fn sparse_grid_cache_matches_exact_gp_2d() {
+        let (xs, ys) = toy(180, 2, 2);
+        let h = GpHypers::new(0.8, 1.0, 0.05);
+        let mut gp = ExactGp::new(xs.clone(), ys, h);
+        gp.refresh().unwrap();
+        let alpha = gp.alpha().unwrap().to_vec();
+        let s = inverse_root_exact(gp.cholesky().unwrap());
+        let grid = SparseGrid::fit(&xs, 6).unwrap();
+        let cache = PredictCache::build(&xs, &alpha, &h, &grid, Some(&s)).unwrap();
+        assert!(cache.terms().len() > 1, "sparse cache should be multi-term");
+        let mut rng = Rng::new(3);
+        let xt = Matrix::from_fn(40, 2, |_, _| rng.uniform_in(-0.9, 0.9));
+        let want_mean = gp.predict_mean(&xt);
+        let got_mean = cache.predict_mean(&xt);
+        let merr = crate::util::mae(&got_mean, &want_mean);
+        assert!(merr < 2e-2, "sparse stencil mean: mae {merr}");
+        let want_var = gp.predict_var(&xt);
+        let got_var = cache.predict_var(&xt);
+        let verr = crate::util::mae(&got_var, &want_var);
+        assert!(verr < 2e-2, "sparse stencil var: mae {verr}");
+    }
+
+    #[test]
     fn variance_cache_matches_exact_gp_2d() {
         let (xs, ys) = toy(150, 2, 3);
         let h = GpHypers::new(0.7, 1.2, 0.05);
@@ -384,8 +473,8 @@ mod tests {
         gp.refresh().unwrap();
         let alpha = gp.alpha().unwrap().to_vec();
         let s = inverse_root_exact(gp.cholesky().unwrap());
-        let grids = fit_grids(&xs, 64);
-        let cache = PredictCache::build(&xs, &alpha, &h, grids, Some(&s)).unwrap();
+        let grid = RectilinearGrid::fit_uniform(&xs, 64).unwrap();
+        let cache = PredictCache::build(&xs, &alpha, &h, &grid, Some(&s)).unwrap();
         assert_eq!(cache.var_rank(), 150);
         let mut rng = Rng::new(4);
         let xt = Matrix::from_fn(30, 2, |_, _| rng.uniform_in(-0.9, 0.9));
@@ -419,14 +508,6 @@ mod tests {
     }
 
     #[test]
-    fn grid_budget_guard() {
-        assert_eq!(grid_cells_within(32, 3, 1 << 21), Some(32768));
-        assert_eq!(grid_cells_within(32, 3, 1000), None);
-        // Overflow-safe for absurd dimensionality.
-        assert_eq!(grid_cells_within(100, 32, 1 << 21), None);
-    }
-
-    #[test]
     fn batched_predictions_bitwise_equal_one_at_a_time() {
         let (xs, ys) = toy(80, 2, 6);
         let h = GpHypers::new(0.8, 1.0, 0.1);
@@ -434,8 +515,8 @@ mod tests {
         gp.refresh().unwrap();
         let alpha = gp.alpha().unwrap().to_vec();
         let s = inverse_root_exact(gp.cholesky().unwrap());
-        let cache =
-            PredictCache::build(&xs, &alpha, &h, fit_grids(&xs, 32), Some(&s)).unwrap();
+        let grid = RectilinearGrid::fit_uniform(&xs, 32).unwrap();
+        let cache = PredictCache::build(&xs, &alpha, &h, &grid, Some(&s)).unwrap();
         let mut rng = Rng::new(7);
         let xt = Matrix::from_fn(300, 2, |_, _| rng.uniform_in(-1.0, 1.0));
         let (means, vars) = cache.predict(&xt);
@@ -455,13 +536,33 @@ mod tests {
         let chol = Cholesky::new(&khat).unwrap();
         let alpha = chol.solve(&ys);
         let s = inverse_root_exact(&chol);
-        let cache =
-            PredictCache::build(&xs, &alpha, &h, fit_grids(&xs, 32), Some(&s)).unwrap();
+        let grid = RectilinearGrid::fit_uniform(&xs, 32).unwrap();
+        let cache = PredictCache::build(&xs, &alpha, &h, &grid, Some(&s)).unwrap();
         // Far outside the grid every stencil weight underflows to zero →
         // mean 0 (the prior mean) and variance k** (the prior variance),
         // exactly like the dense far-field limit.
         let far = Matrix::from_vec(1, 2, vec![500.0, -500.0]);
         assert_eq!(cache.predict_mean(&far)[0], 0.0);
         assert!((cache.predict_var(&far)[0] - cache.prior_var).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_parts_validates_sizes() {
+        let axes = vec![Grid1d::fit(0.0, 1.0, 8).unwrap()];
+        let err = TermCache::new(1.0, axes.clone(), vec![0.0; 7], Matrix::zeros(8, 0))
+            .unwrap_err();
+        assert!(err.to_string().contains("mean buffer"), "{err}");
+        let t1 = TermCache::new(1.0, axes.clone(), vec![0.0; 8], Matrix::zeros(8, 2))
+            .unwrap();
+        let t2 =
+            TermCache::new(-1.0, axes, vec![0.0; 8], Matrix::zeros(8, 3)).unwrap();
+        let err = PredictCache::from_parts(
+            GridSpec::Rectilinear(vec![8]),
+            vec![t1, t2],
+            1.0,
+            0.1,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("rank"), "{err}");
     }
 }

@@ -20,6 +20,7 @@
 //!
 //! ```
 //! use skip_gp::gp::{ExactGp, GpHypers};
+//! use skip_gp::grid::GridSpec;
 //! use skip_gp::linalg::Matrix;
 //! use skip_gp::serve::{ModelSnapshot, SnapshotConfig, VarianceMode};
 //!
@@ -30,7 +31,11 @@
 //! gp.refresh().unwrap();
 //!
 //! // …freeze it into a snapshot and predict from the cache alone.
-//! let cfg = SnapshotConfig { grid_m: 32, variance: VarianceMode::Exact, ..Default::default() };
+//! let cfg = SnapshotConfig {
+//!     grid: Some(GridSpec::uniform(32)),
+//!     variance: VarianceMode::Exact,
+//!     ..Default::default()
+//! };
 //! let snap = ModelSnapshot::from_exact(&gp, &cfg).unwrap();
 //! let bytes = snap.to_bytes();
 //! let back = ModelSnapshot::from_bytes(&bytes).unwrap();
@@ -44,6 +49,8 @@ pub mod server;
 pub mod snapshot;
 
 pub use batcher::{BatchHandle, BatcherConfig, PredictResponse, RequestBatcher};
-pub use cache::{fit_grids, PredictCache, VarianceMode};
+pub use cache::{PredictCache, TermCache, VarianceMode};
 pub use server::{ServeEngine, Server, ServerConfig};
-pub use snapshot::{ModelSnapshot, SnapshotConfig, SnapshotVariant, SNAPSHOT_VERSION};
+pub use snapshot::{
+    ModelSnapshot, SnapshotConfig, SnapshotVariant, SNAPSHOT_MIN_VERSION, SNAPSHOT_VERSION,
+};

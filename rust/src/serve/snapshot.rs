@@ -2,18 +2,19 @@
 //! caches, serialized to a zero-dependency binary format.
 //!
 //! A snapshot is everything prediction needs and nothing more: the
-//! hyperparameters, the per-dimension inducing-grid spec, the cached solve
-//! `α = K̂⁻¹y`, the grid-side mean cache, and the low-rank variance factor
-//! `R` (see [`super::cache`]). The training inputs are **not** stored —
-//! reload and serve without touching training data.
+//! hyperparameters, the inducing-grid spec with its fitted per-term axes,
+//! the cached solve `α = K̂⁻¹y`, the grid-side mean cache(s), and the
+//! low-rank variance factor(s) `R` (see [`super::cache`]). The training
+//! inputs are **not** stored — reload and serve without touching training
+//! data.
 //!
-//! # Format (version 1)
+//! # Format (version 2)
 //!
 //! Little-endian throughout:
 //!
 //! ```text
 //! magic      8 bytes  "SKGPSNAP"
-//! version    u32      format version (this file documents version 1)
+//! version    u32      format version (this file documents versions 1–2)
 //! d          u32      input dimensionality
 //! n          u32      training-set size (length of α)
 //! r          u32      variance-cache rank (0 ⇒ mean-only snapshot)
@@ -21,12 +22,27 @@
 //! train_rank u32      Lanczos rank used during training (provenance)
 //! refresh_rank u32    Lanczos rank of the final predictive solve
 //! hypers     3 × f64  log ℓ, log σ_f², log σ_n²
-//! grids      d × (f64 min, f64 h, u32 m)
+//! spec_kind  u32      0 uniform, 1 rectilinear, 2 sparse
+//!   uniform:      u32 m
+//!   rectilinear:  d × u32 sizes
+//!   sparse:       u32 level
+//! n_terms    u32      grid terms (1 for dense grids)
+//! terms      n_terms × [f64 coeff, d × (f64 min, f64 h, u32 m)]
 //! alpha      n × f64
-//! mean       M × f64  with M = Π m_k
-//! var_r      (M·r) × f64, row-major M × r
+//! means      per term, M_t × f64 with M_t = Π m_k of that term
+//! var_rs     per term, (M_t·r) × f64, row-major M_t × r
 //! checksum   u64      FNV-1a over every preceding byte
 //! ```
+//!
+//! # Version 1 (read-only, migrated on load)
+//!
+//! Version 1 had no grid spec and exactly one implicit term: after
+//! `hypers` it stored `d × (f64 min, f64 h, u32 m)` grids followed by
+//! `alpha`, one `mean`, one `var_r`, and the checksum. Loading a v1 file
+//! migrates it in memory to a single-term cache with coefficient 1 and a
+//! rectilinear spec derived from the stored axis sizes — predictions are
+//! bitwise identical to what the v1 reader produced (pinned by the
+//! checked-in `rust/tests/fixtures/snapshot_v1.bin` fixture test).
 //!
 //! # Versioning rules
 //!
@@ -35,20 +51,20 @@
 //!   hard error (`Error::Snapshot`), never a best-effort parse.
 //! - Any layout change — field added, removed, reordered, or re-typed —
 //!   bumps the version. There are no optional/variable fields within a
-//!   version.
+//!   version (counts are always explicit).
 //! - Writers always emit the newest version. Old snapshots are migrated
-//!   by re-snapshotting the model, not by in-place rewrites.
+//!   on load (in memory) and persist as the newest version on the next
+//!   save; files are never rewritten in place.
 //! - The trailing checksum covers the full payload; readers verify it
 //!   before trusting any field. Corrupt files fail loudly.
 
 use super::cache::{
-    fit_grids, grid_cells_within, inverse_root_exact, inverse_root_lanczos, PredictCache,
-    VarianceMode,
+    inverse_root_exact, inverse_root_lanczos, PredictCache, TermCache, VarianceMode,
 };
 use crate::gp::{ExactGp, GpHypers, MvmGp, MvmVariant};
+use crate::grid::{build_grid, Grid1d, GridSpec, InducingGrid, RectilinearGrid};
 use crate::kernels::ProductKernel;
 use crate::linalg::{Cholesky, Matrix};
-use crate::operators::Grid1d;
 use crate::{Error, Result};
 use std::fs;
 use std::io::Write;
@@ -57,12 +73,15 @@ use std::path::Path;
 /// File magic.
 pub const SNAPSHOT_MAGIC: &[u8; 8] = b"SKGPSNAP";
 /// Current (newest) format version; see the module docs for the rules.
-pub const SNAPSHOT_VERSION: u32 = 1;
+pub const SNAPSHOT_VERSION: u32 = 2;
+/// Oldest format version this build still reads (migrating on load).
+pub const SNAPSHOT_MIN_VERSION: u32 = 1;
 
-/// Default cap on stored cache cells — the mean cache's M = Π m_k plus
-/// the variance factor's M·r, i.e. M·(1+r) ≤ this; beyond it the snapshot
-/// builder refuses (or, for the grid-reuse default, shrinks the serving
-/// grid) rather than silently allocating gigabytes. 2²² cells = 32 MB.
+/// Default cap on stored cache cells — the mean caches' Σ_t M_t plus the
+/// variance factors' Σ_t M_t·r, i.e. M·(1+r) ≤ this; beyond it the
+/// snapshot builder refuses (or, for the grid-reuse default, shrinks the
+/// serving grid) rather than silently allocating gigabytes.
+/// 2²² cells = 32 MB.
 pub const DEFAULT_MAX_GRID_CELLS: usize = 1 << 22;
 
 /// Variance rank a [`VarianceMode`] will produce for an n-point model.
@@ -74,36 +93,54 @@ fn variance_rank(mode: &VarianceMode, n: usize) -> usize {
     }
 }
 
-/// Resolve the per-dimension serving-grid size for a d-dimensional,
-/// n-point model: an explicit `cfg.grid_m` is validated as-is, while the
-/// grid-reuse default (`cfg.grid_m == 0`) starts from `default_m` and
-/// shrinks until the stored cells M·(1+r) fit `cfg.max_grid_cells` (a
-/// coarser serving grid only costs a little interpolation accuracy).
-fn resolve_serving_grid(
+/// Resolve the serving-grid spec for a d-dimensional, n-point model: an
+/// explicit `cfg.grid` is validated as-is, while the grid-reuse default
+/// (`cfg.grid == None`) starts from the model's own spec and shrinks it
+/// until the stored cells M·(1+r) fit `cfg.max_grid_cells` (a coarser
+/// serving grid only costs a little interpolation accuracy).
+fn resolve_serving_spec(
     cfg: &SnapshotConfig,
     d: usize,
     n: usize,
-    default_m: usize,
-) -> Result<usize> {
+    model_spec: &GridSpec,
+) -> Result<GridSpec> {
     let r = variance_rank(&cfg.variance, n);
     let per_grid_budget = (cfg.max_grid_cells / (1 + r)).max(1);
-    let m = if cfg.grid_m == 0 {
-        let mut m = default_m.max(8);
-        while m > 8 && grid_cells_within(m, d, per_grid_budget).is_none() {
-            m = (m * 3 / 4).max(8);
-        }
-        m
-    } else {
-        cfg.grid_m
+    let fits = |spec: &GridSpec| {
+        matches!(spec.total_points(d), Some(cells) if cells <= per_grid_budget)
     };
-    grid_cells_within(m, d, per_grid_budget).ok_or_else(|| {
-        Error::Snapshot(format!(
-            "serving grid {m}^{d} with variance rank {r} exceeds the {}-cell budget — \
-             reduce the per-dimension grid size or the variance rank",
-            cfg.max_grid_cells
-        ))
-    })?;
-    Ok(m)
+    match &cfg.grid {
+        Some(spec) => {
+            spec.validate_for_dim(d)?;
+            if fits(spec) {
+                Ok(spec.clone())
+            } else {
+                Err(Error::Snapshot(format!(
+                    "serving grid {} in d={d} with variance rank {r} exceeds the \
+                     {}-cell budget — reduce the grid size or the variance rank",
+                    spec.describe(),
+                    cfg.max_grid_cells
+                )))
+            }
+        }
+        None => {
+            let mut spec = model_spec.clone();
+            loop {
+                if fits(&spec) {
+                    return Ok(spec);
+                }
+                spec = spec.shrink().ok_or_else(|| {
+                    Error::Snapshot(format!(
+                        "cannot shrink serving grid {} in d={d} under the \
+                         {}-cell budget (variance rank {r}) — use a sparse \
+                         spec or a lower variance rank",
+                        model_spec.describe(),
+                        cfg.max_grid_cells
+                    ))
+                })?;
+            }
+        }
+    }
 }
 
 /// Provenance tag: which model family produced the snapshot.
@@ -136,19 +173,19 @@ impl SnapshotVariant {
 /// Options for building a snapshot from a trained model.
 #[derive(Clone, Debug)]
 pub struct SnapshotConfig {
-    /// Serving-grid points per dimension (0 ⇒ reuse the model's training
-    /// grid size).
-    pub grid_m: usize,
+    /// Serving-grid spec (None ⇒ reuse the model's training-grid spec,
+    /// shrinking it under `max_grid_cells` if needed).
+    pub grid: Option<GridSpec>,
     /// How to build the variance factor.
     pub variance: VarianceMode,
-    /// Refuse grids larger than this many cells.
+    /// Refuse grids larger than this many stored cells.
     pub max_grid_cells: usize,
 }
 
 impl Default for SnapshotConfig {
     fn default() -> Self {
         SnapshotConfig {
-            grid_m: 0,
+            grid: None,
             variance: VarianceMode::Lanczos(64),
             max_grid_cells: DEFAULT_MAX_GRID_CELLS,
         }
@@ -158,7 +195,8 @@ impl Default for SnapshotConfig {
 /// A trained model frozen into its predictive caches.
 #[derive(Clone, Debug)]
 pub struct ModelSnapshot {
-    /// Format version this snapshot was read from / will be written as.
+    /// Format version this snapshot was read from (writers always emit
+    /// [`SNAPSHOT_VERSION`]).
     pub version: u32,
     pub hypers: GpHypers,
     pub variant: SnapshotVariant,
@@ -173,16 +211,16 @@ pub struct ModelSnapshot {
 }
 
 impl ModelSnapshot {
-    /// Freeze a trained [`MvmGp`] (SKIP or KISS-GP). Requires
-    /// `fit`/`refresh` to have produced the cached α.
+    /// Freeze a trained [`MvmGp`] (SKIP or KISS-GP, dense or sparse
+    /// grid). Requires `fit`/`refresh` to have produced the cached α.
     pub fn from_mvm(gp: &MvmGp, cfg: &SnapshotConfig) -> Result<Self> {
         let alpha = gp
             .alpha()
             .ok_or_else(|| Error::Snapshot("model has no cached α — call fit/refresh".into()))?
             .to_vec();
         let d = gp.xs.cols;
-        let m = resolve_serving_grid(cfg, d, gp.xs.rows, gp.cfg.grid_m)?;
-        let grids = fit_grids(&gp.xs, m);
+        let spec = resolve_serving_spec(cfg, d, gp.xs.rows, &gp.cfg.grid)?;
+        let grid = build_grid(&gp.xs, &spec)?;
         let s = match &cfg.variance {
             VarianceMode::None => None,
             VarianceMode::Exact => {
@@ -203,14 +241,15 @@ impl ModelSnapshot {
                             &gp.hypers,
                             gp.cfg.seed,
                             gp.refresh_grade_rank(),
-                        );
+                        )?;
                         &built
                     }
                 };
                 Some(inverse_root_lanczos(op, &gp.ys, *rank)?)
             }
         };
-        let cache = PredictCache::build(&gp.xs, &alpha, &gp.hypers, grids, s.as_ref())?;
+        let cache =
+            PredictCache::build(&gp.xs, &alpha, &gp.hypers, grid.as_ref(), s.as_ref())?;
         Ok(ModelSnapshot {
             version: SNAPSHOT_VERSION,
             hypers: gp.hypers,
@@ -227,8 +266,14 @@ impl ModelSnapshot {
 
     /// Freeze a trained [`ExactGp`], fitting grids to its inputs.
     pub fn from_exact(gp: &ExactGp, cfg: &SnapshotConfig) -> Result<Self> {
-        let m = resolve_serving_grid(cfg, gp.xs.cols, gp.xs.rows, 64)?;
-        Self::from_exact_with_grids(gp, fit_grids(&gp.xs, m), &cfg.variance)
+        let spec = resolve_serving_spec(
+            cfg,
+            gp.xs.cols,
+            gp.xs.rows,
+            &GridSpec::Uniform(64),
+        )?;
+        let grid = build_grid(&gp.xs, &spec)?;
+        Self::from_exact_on_grid(gp, grid.as_ref(), &cfg.variance)
     }
 
     /// Freeze a trained [`ExactGp`] onto explicit per-dimension grids
@@ -237,6 +282,16 @@ impl ModelSnapshot {
     pub fn from_exact_with_grids(
         gp: &ExactGp,
         grids: Vec<Grid1d>,
+        variance: &VarianceMode,
+    ) -> Result<Self> {
+        let grid = RectilinearGrid::from_axes(grids);
+        Self::from_exact_on_grid(gp, &grid, variance)
+    }
+
+    /// Freeze a trained [`ExactGp`] onto any [`InducingGrid`].
+    pub fn from_exact_on_grid(
+        gp: &ExactGp,
+        grid: &dyn InducingGrid,
         variance: &VarianceMode,
     ) -> Result<Self> {
         let alpha = gp
@@ -257,7 +312,7 @@ impl ModelSnapshot {
                 Some(inverse_root_lanczos(&op, &gp.ys, *rank)?)
             }
         };
-        let cache = PredictCache::build(&gp.xs, &alpha, &gp.hypers, grids, s.as_ref())?;
+        let cache = PredictCache::build(&gp.xs, &alpha, &gp.hypers, grid, s.as_ref())?;
         Ok(ModelSnapshot {
             version: SNAPSHOT_VERSION,
             hypers: gp.hypers,
@@ -288,14 +343,17 @@ impl ModelSnapshot {
         Self::from_bytes(&bytes)
     }
 
-    /// Encode to the version-1 byte layout (checksum included).
+    /// Encode to the version-2 byte layout (checksum included). Writers
+    /// always emit the newest version, whatever `self.version` was read
+    /// from.
     pub fn to_bytes(&self) -> Vec<u8> {
-        let d = self.cache.grids.len();
+        let d = self.cache.dim();
         let n = self.alpha.len();
-        let m_total = self.cache.total_grid();
         let r = self.cache.var_rank();
+        let terms = self.cache.terms();
+        let m_total = self.cache.total_grid();
         let mut out = Vec::with_capacity(
-            8 + 7 * 4 + 3 * 8 + d * 20 + (n + m_total + m_total * r) * 8 + 8,
+            64 + d * 24 + terms.len() * (8 + d * 20) + (n + m_total * (1 + r)) * 8,
         );
         out.extend_from_slice(SNAPSHOT_MAGIC);
         push_u32(&mut out, SNAPSHOT_VERSION);
@@ -308,26 +366,52 @@ impl ModelSnapshot {
         push_f64(&mut out, self.hypers.log_ell);
         push_f64(&mut out, self.hypers.log_sf2);
         push_f64(&mut out, self.hypers.log_sn2);
-        for g in &self.cache.grids {
-            push_f64(&mut out, g.min);
-            push_f64(&mut out, g.h);
-            push_u32(&mut out, g.m as u32);
+        match &self.cache.spec {
+            GridSpec::Uniform(m) => {
+                push_u32(&mut out, 0);
+                push_u32(&mut out, *m as u32);
+            }
+            GridSpec::Rectilinear(sizes) => {
+                push_u32(&mut out, 1);
+                debug_assert_eq!(sizes.len(), d);
+                for &m in sizes {
+                    push_u32(&mut out, m as u32);
+                }
+            }
+            GridSpec::Sparse { level } => {
+                push_u32(&mut out, 2);
+                push_u32(&mut out, *level as u32);
+            }
+        }
+        push_u32(&mut out, terms.len() as u32);
+        for t in terms {
+            push_f64(&mut out, t.coeff);
+            for g in &t.axes {
+                push_f64(&mut out, g.min);
+                push_f64(&mut out, g.h);
+                push_u32(&mut out, g.m as u32);
+            }
         }
         for &a in &self.alpha {
             push_f64(&mut out, a);
         }
-        for &v in &self.cache.mean {
-            push_f64(&mut out, v);
+        for t in terms {
+            for &v in &t.mean {
+                push_f64(&mut out, v);
+            }
         }
-        for &v in &self.cache.var_r.data {
-            push_f64(&mut out, v);
+        for t in terms {
+            for &v in &t.var_r.data {
+                push_f64(&mut out, v);
+            }
         }
         let sum = fnv1a(&out);
         push_u64(&mut out, sum);
         out
     }
 
-    /// Decode from the version-1 byte layout.
+    /// Decode from bytes: version 2 natively, version 1 with an in-memory
+    /// migration (single term, coefficient 1, rectilinear spec).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         let mut c = Cursor { bytes, pos: 0 };
         let magic = c.take(8)?;
@@ -335,9 +419,10 @@ impl ModelSnapshot {
             return Err(Error::Snapshot("bad magic (not a skip-gp snapshot)".into()));
         }
         let version = c.u32()?;
-        if version != SNAPSHOT_VERSION {
+        if !(SNAPSHOT_MIN_VERSION..=SNAPSHOT_VERSION).contains(&version) {
             return Err(Error::Snapshot(format!(
-                "unsupported snapshot version {version} (this build reads {SNAPSHOT_VERSION})"
+                "unsupported snapshot version {version} (this build reads \
+                 {SNAPSHOT_MIN_VERSION}..={SNAPSHOT_VERSION})"
             )));
         }
         // Verify the trailing checksum before trusting any field.
@@ -363,31 +448,68 @@ impl ModelSnapshot {
             log_sf2: c.f64()?,
             log_sn2: c.f64()?,
         };
-        let mut grids = Vec::with_capacity(d);
-        for _ in 0..d {
-            let min = c.f64()?;
-            let h = c.f64()?;
-            let m = c.u32()? as usize;
-            if m < 4 {
-                return Err(Error::Snapshot(format!("grid with m={m} < 4")));
-            }
-            grids.push(Grid1d { min, h, m });
-        }
-        let m_total = grids
-            .iter()
-            .try_fold(1usize, |acc, g| acc.checked_mul(g.m))
-            .ok_or_else(|| Error::Snapshot("grid size overflow".into()))?;
-        let mr = m_total
-            .checked_mul(r)
-            .ok_or_else(|| Error::Snapshot("variance cache size overflow".into()))?;
-        let alpha = c.f64_vec(n)?;
-        let mean = c.f64_vec(m_total)?;
-        let var_data = c.f64_vec(mr)?;
-        let var_r = if r == 0 {
-            Matrix::zeros(m_total, 0)
+
+        // Grid spec + term axes (v1: no spec, one implicit term).
+        let (spec, term_axes): (GridSpec, Vec<(f64, Vec<Grid1d>)>) = if version == 1 {
+            let axes = read_axes(&mut c, d)?;
+            let spec = GridSpec::Rectilinear(axes.iter().map(|g| g.m).collect());
+            (spec, vec![(1.0, axes)])
         } else {
-            Matrix::from_vec(m_total, r, var_data)
+            let spec = match c.u32()? {
+                0 => GridSpec::Uniform(c.u32()? as usize),
+                1 => {
+                    let mut sizes = Vec::with_capacity(d);
+                    for _ in 0..d {
+                        sizes.push(c.u32()? as usize);
+                    }
+                    GridSpec::Rectilinear(sizes)
+                }
+                2 => GridSpec::Sparse { level: c.u32()? as usize },
+                other => {
+                    return Err(Error::Snapshot(format!(
+                        "unknown grid-spec kind {other}"
+                    )))
+                }
+            };
+            let n_terms = c.u32()? as usize;
+            if n_terms == 0 || n_terms > crate::grid::MAX_SPARSE_TERMS {
+                return Err(Error::Snapshot(format!(
+                    "implausible grid term count {n_terms}"
+                )));
+            }
+            let mut terms = Vec::with_capacity(n_terms);
+            for _ in 0..n_terms {
+                let coeff = c.f64()?;
+                if !coeff.is_finite() {
+                    return Err(Error::Snapshot("non-finite term coefficient".into()));
+                }
+                terms.push((coeff, read_axes(&mut c, d)?));
+            }
+            (spec, terms)
         };
+
+        let alpha = c.f64_vec(n)?;
+        let mut means = Vec::with_capacity(term_axes.len());
+        for (_, axes) in &term_axes {
+            let m_t = axes
+                .iter()
+                .try_fold(1usize, |acc, g| acc.checked_mul(g.m))
+                .ok_or_else(|| Error::Snapshot("grid size overflow".into()))?;
+            means.push(c.f64_vec(m_t)?);
+        }
+        let mut vars = Vec::with_capacity(term_axes.len());
+        for (_, axes) in &term_axes {
+            let m_t: usize = axes.iter().map(|g| g.m).product();
+            let mr = m_t
+                .checked_mul(r)
+                .ok_or_else(|| Error::Snapshot("variance cache size overflow".into()))?;
+            let data = c.f64_vec(mr)?;
+            vars.push(if r == 0 {
+                Matrix::zeros(m_t, 0)
+            } else {
+                Matrix::from_vec(m_t, r, data)
+            });
+        }
         // Trailing checksum (8 bytes) must be exactly what remains.
         if c.remaining() != 8 {
             return Err(Error::Snapshot(format!(
@@ -395,8 +517,13 @@ impl ModelSnapshot {
                 c.remaining().saturating_sub(8)
             )));
         }
-        let cache =
-            PredictCache::from_parts(grids, mean, var_r, hypers.sf2(), hypers.sn2())?;
+        let mut terms = Vec::with_capacity(term_axes.len());
+        for (((coeff, axes), mean), var_r) in
+            term_axes.into_iter().zip(means).zip(vars)
+        {
+            terms.push(TermCache::new(coeff, axes, mean, var_r)?);
+        }
+        let cache = PredictCache::from_parts(spec, terms, hypers.sf2(), hypers.sn2())?;
         Ok(ModelSnapshot {
             version,
             hypers,
@@ -407,6 +534,26 @@ impl ModelSnapshot {
             cache,
         })
     }
+}
+
+/// Read `d` serialized axes `(min, h, m)`.
+fn read_axes(c: &mut Cursor<'_>, d: usize) -> Result<Vec<Grid1d>> {
+    let mut axes = Vec::with_capacity(d);
+    for _ in 0..d {
+        let min = c.f64()?;
+        let h = c.f64()?;
+        let m = c.u32()? as usize;
+        if m < 1 {
+            return Err(Error::Snapshot("grid axis with m=0".into()));
+        }
+        if !min.is_finite() || !h.is_finite() || h <= 0.0 {
+            return Err(Error::Snapshot(format!(
+                "invalid grid axis (min={min}, h={h}, m={m})"
+            )));
+        }
+        axes.push(Grid1d { min, h, m });
+    }
+    Ok(axes)
 }
 
 fn push_u32(out: &mut Vec<u8>, v: u32) {
@@ -477,6 +624,7 @@ impl<'a> Cursor<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::grid::SparseGrid;
     use crate::util::Rng;
 
     fn small_snapshot(seed: u64) -> ModelSnapshot {
@@ -488,7 +636,7 @@ mod tests {
         ModelSnapshot::from_exact(
             &gp,
             &SnapshotConfig {
-                grid_m: 16,
+                grid: Some(GridSpec::uniform(16)),
                 variance: VarianceMode::Exact,
                 ..Default::default()
             },
@@ -505,14 +653,36 @@ mod tests {
         assert_eq!(back.variant, SnapshotVariant::Exact);
         assert_eq!(back.hypers, snap.hypers);
         assert_eq!(back.alpha, snap.alpha);
-        assert_eq!(back.cache.mean, snap.cache.mean);
-        assert_eq!(back.cache.var_r.data, snap.cache.var_r.data);
-        assert_eq!(back.cache.grids.len(), snap.cache.grids.len());
-        for (a, b) in back.cache.grids.iter().zip(&snap.cache.grids) {
-            assert_eq!(a.min, b.min);
-            assert_eq!(a.h, b.h);
-            assert_eq!(a.m, b.m);
+        assert_eq!(back.cache.spec, snap.cache.spec);
+        assert_eq!(back.cache.terms().len(), snap.cache.terms().len());
+        for (a, b) in back.cache.terms().iter().zip(snap.cache.terms()) {
+            assert_eq!(a.coeff, b.coeff);
+            assert_eq!(a.mean, b.mean);
+            assert_eq!(a.var_r.data, b.var_r.data);
+            assert_eq!(a.axes, b.axes);
         }
+    }
+
+    #[test]
+    fn sparse_snapshot_roundtrips_and_predicts_identically() {
+        let mut rng = Rng::new(9);
+        let xs = Matrix::from_fn(60, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+        let ys: Vec<f64> =
+            (0..60).map(|i| xs.get(i, 0).sin() + 0.01 * rng.normal()).collect();
+        let mut gp = ExactGp::new(xs.clone(), ys, GpHypers::new(0.8, 1.0, 0.05));
+        gp.refresh().unwrap();
+        let grid = SparseGrid::fit(&xs, 4).unwrap();
+        let snap =
+            ModelSnapshot::from_exact_on_grid(&gp, &grid, &VarianceMode::Lanczos(16))
+                .unwrap();
+        assert!(snap.cache.terms().len() > 1);
+        assert_eq!(snap.cache.spec, GridSpec::sparse(4));
+        let bytes = snap.to_bytes();
+        let back = ModelSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back.cache.spec, snap.cache.spec);
+        let xt = Matrix::from_fn(30, 3, |_, _| rng.uniform_in(-0.9, 0.9));
+        assert_eq!(back.cache.predict_mean(&xt), snap.cache.predict_mean(&xt));
+        assert_eq!(back.cache.predict_var(&xt), snap.cache.predict_var(&xt));
     }
 
     #[test]
@@ -553,12 +723,33 @@ mod tests {
         let err = ModelSnapshot::from_exact(
             &gp,
             &SnapshotConfig {
-                grid_m: 64,
+                grid: Some(GridSpec::uniform(64)),
                 variance: VarianceMode::None,
                 max_grid_cells: 1000,
             },
         )
         .unwrap_err();
         assert!(err.to_string().contains("budget"), "{err}");
+    }
+
+    #[test]
+    fn default_grid_shrinks_under_budget() {
+        let mut rng = Rng::new(6);
+        let xs = Matrix::from_fn(30, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+        let ys: Vec<f64> = (0..30).map(|_| rng.normal()).collect();
+        let mut gp = ExactGp::new(xs, ys, GpHypers::new(0.8, 1.0, 0.1));
+        gp.refresh().unwrap();
+        // Default (grid: None) starts from Uniform(64) = 262144 cells and
+        // shrinks under the 20k budget instead of erroring.
+        let snap = ModelSnapshot::from_exact(
+            &gp,
+            &SnapshotConfig {
+                grid: None,
+                variance: VarianceMode::None,
+                max_grid_cells: 20_000,
+            },
+        )
+        .unwrap();
+        assert!(snap.cache.total_grid() <= 20_000);
     }
 }

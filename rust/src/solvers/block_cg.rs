@@ -160,6 +160,12 @@ pub fn block_cg_solve(a: &dyn LinearOp, b: &Matrix, cfg: CgConfig) -> BlockCgSol
     for (j, xc) in xcols.iter().enumerate() {
         x.set_col(j, xc);
     }
+    // Per-column solver accounting into the global registry (iterations +
+    // convergence failures), plus the block's fused-MVM count.
+    for col in &columns {
+        crate::coordinator::metrics::record_solver("block_cg", col.iters, col.converged);
+    }
+    crate::coordinator::metrics::global().observe("solver.block_cg.matmats", matmats as u64);
     BlockCgSolution { x, columns, matmats }
 }
 

@@ -32,11 +32,17 @@ pub struct CgSolution {
 }
 
 /// Solve `A x = b` by conjugate gradients.
+///
+/// Every run records its iteration count (and any convergence failure)
+/// into the global metrics registry under `solver.cg.*`
+/// ([`crate::coordinator::metrics::record_solver`]), so session summaries
+/// can report p50/p99 solver effort.
 pub fn cg_solve(a: &dyn LinearOp, b: &[f64], cfg: CgConfig) -> CgSolution {
     let n = a.dim();
     assert_eq!(b.len(), n);
     let nb = norm2(b);
     if nb == 0.0 {
+        crate::coordinator::metrics::record_solver("cg", 0, true);
         return CgSolution { x: vec![0.0; n], iters: 0, rel_residual: 0.0, converged: true };
     }
     let mut x = vec![0.0; n];
@@ -67,7 +73,9 @@ pub fn cg_solve(a: &dyn LinearOp, b: &[f64], cfg: CgConfig) -> CgSolution {
         rs_old = rs_new;
     }
     let rel = rs_old.sqrt() / nb;
-    CgSolution { x, iters, rel_residual: rel, converged: rel <= cfg.tol }
+    let converged = rel <= cfg.tol;
+    crate::coordinator::metrics::record_solver("cg", iters, converged);
+    CgSolution { x, iters, rel_residual: rel, converged }
 }
 
 /// Solve `A X = B` for multiple right-hand sides (columns of `b_cols`),

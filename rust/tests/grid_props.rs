@@ -1,0 +1,276 @@
+//! Property and integration tests for the inducing-grid subsystem:
+//! cubic-stencil convergence order and boundary clamping, degenerate-fit
+//! guards, and the headline dense-vs-sparse agreement — sparse-grid SKI
+//! matches dense Kronecker SKI predictive mean/variance within 1e-3 on a
+//! d = 3 problem where both are feasible, and opens d = 8 where the
+//! dense mᵈ path refuses.
+
+#![allow(clippy::needless_range_loop)] // index-heavy numeric test/bench loops
+
+use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant};
+use skip_gp::grid::{cubic_stencil, Grid1d, GridSpec, InducingGrid, SparseGrid};
+use skip_gp::linalg::Matrix;
+use skip_gp::solvers::CgConfig;
+use skip_gp::util::{mae, Rng};
+
+/// Keys cubic convolution is third-order: halving h cuts the
+/// interpolation error of a smooth function by ~8×. Assert ≥ 4× per grid
+/// doubling (the fit's margin makes the effective h shrink slightly
+/// faster than 2×, so the realized ratios are ≥ 8).
+#[test]
+fn cubic_interpolation_error_shrinks_at_h3() {
+    let f = |x: f64| (3.0 * x).sin();
+    let mut rng = Rng::new(1);
+    let pts: Vec<f64> = (0..200).map(|_| rng.uniform_in(0.05, 0.95)).collect();
+    let mut errs = Vec::new();
+    for m in [16usize, 32, 64] {
+        let g = Grid1d::fit(0.0, 1.0, m).unwrap();
+        let vals: Vec<f64> = g.points().iter().map(|&u| f(u)).collect();
+        let mut emax = 0.0f64;
+        for &x in &pts {
+            let (b, w) = cubic_stencil(x, &g);
+            let got: f64 = (0..4).map(|k| w[k] * vals[b + k]).sum();
+            emax = emax.max((got - f(x)).abs());
+        }
+        errs.push(emax);
+    }
+    assert!(errs[0] < 1e-3, "coarse grid already too wrong: {errs:?}");
+    assert!(errs[1] < errs[0] / 4.0, "not third-order: {errs:?}");
+    assert!(errs[2] < errs[1] / 4.0, "not third-order: {errs:?}");
+    assert!(errs[2] < 1e-5, "fine-grid floor: {errs:?}");
+}
+
+/// Stencils clamp correctly at both domain boundaries: the base index
+/// stays inside the axis, mildly extrapolated points keep a renormalized
+/// partition of unity, and far-field points degrade to all-zero weights
+/// (the prior), never out-of-bounds indices.
+#[test]
+fn cubic_stencil_clamps_at_domain_boundaries() {
+    let g = Grid1d::fit(0.0, 1.0, 16).unwrap();
+    // Slightly outside the grid on both sides.
+    for x in [g.point(0) - 0.4 * g.h, g.max() + 0.4 * g.h] {
+        let (b, w) = cubic_stencil(x, &g);
+        assert!(b <= g.m - 4, "base out of range at {x}");
+        let sum: f64 = w.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-10, "renormalized sum {sum} at {x}");
+    }
+    // Data-domain boundary points (the margin fit guarantees full
+    // interior stencils there).
+    for x in [0.0, 1.0] {
+        let (b, w) = cubic_stencil(x, &g);
+        assert!(b + 4 <= g.m);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-10);
+    }
+    // Far outside: every weight underflows to exactly zero.
+    for x in [-100.0, 100.0] {
+        let (b, w) = cubic_stencil(x, &g);
+        assert!(b <= g.m - 4);
+        assert!(w.iter().all(|&v| v == 0.0), "far-field weights {w:?}");
+    }
+}
+
+/// Degenerate inputs surface as typed grid errors through the whole
+/// stack, not NaN spacings (regression: m < 6 used to produce a negative
+/// or infinite h; a constant feature a zero-width grid).
+#[test]
+fn degenerate_grid_inputs_error_through_the_stack() {
+    for m in [3usize, 4, 5] {
+        let err = Grid1d::fit(0.0, 1.0, m).unwrap_err();
+        assert!(matches!(err, skip_gp::Error::Grid(_)), "m={m}: {err}");
+    }
+    let err = Grid1d::fit(0.3, 0.3, 32).unwrap_err();
+    assert!(err.to_string().contains("constant"), "{err}");
+
+    // A constant feature column reaches the same typed error via the
+    // model's operator build.
+    let mut rng = Rng::new(2);
+    let xs = Matrix::from_fn(30, 2, |_, j| if j == 1 { 0.5 } else { rng.normal() });
+    let ys = vec![0.0; 30];
+    let gp = MvmGp::new(
+        xs,
+        ys,
+        GpHypers::default_init(),
+        MvmGpConfig { grid: GridSpec::uniform(32), ..Default::default() },
+    );
+    let err = match gp.build_operator(&gp.hypers, 0) {
+        Ok(_) => panic!("constant feature must not fit a grid"),
+        Err(e) => e,
+    };
+    assert!(matches!(err, skip_gp::Error::Grid(_)), "{err}");
+}
+
+/// Spec/data mismatches and over-MAX_TENSOR_DIM tensor grids are typed
+/// errors up front, not index or assert panics deep in construction.
+#[test]
+fn spec_mismatch_and_overwide_tensor_grids_error_typed() {
+    let mut rng = Rng::new(6);
+    // Rectilinear spec naming fewer dims than the data: typed error from
+    // the SKIP path (which reads per-dimension sizes).
+    let xs = Matrix::from_fn(30, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+    let gp = MvmGp::new(
+        xs,
+        vec![0.0; 30],
+        GpHypers::default_init(),
+        MvmGpConfig {
+            grid: GridSpec::Rectilinear(vec![16, 16]),
+            ..Default::default()
+        },
+    );
+    let err = match gp.build_operator(&gp.hypers, 0) {
+        Ok(_) => panic!("mismatched rectilinear spec must not build"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("dimensions"), "{err}");
+
+    // A sparse tensor grid beyond the stencil machinery's d ≤ 16 bound:
+    // typed refusal from the Kiss path (SKIP stays available up there).
+    let xs = Matrix::from_fn(40, 17, |_, _| rng.uniform_in(-1.0, 1.0));
+    let gp = MvmGp::new(
+        xs,
+        vec![0.0; 40],
+        GpHypers::init_for_dim(17),
+        MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: GridSpec::sparse(2),
+            ..Default::default()
+        },
+    );
+    let err = match gp.build_operator(&gp.hypers, 0) {
+        Ok(_) => panic!("d=17 tensor grid must refuse"),
+        Err(e) => e,
+    };
+    assert!(err.to_string().contains("SKIP"), "{err}");
+}
+
+fn toy(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>, Matrix) {
+    let mut rng = Rng::new(seed);
+    let f = |row: &[f64]| -> f64 {
+        (2.0 * row[0]).sin()
+            + row[1..].iter().enumerate().map(|(k, &x)| ((k + 1) as f64 * x).cos()).sum::<f64>()
+    };
+    let xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+    let ys: Vec<f64> = (0..n).map(|i| f(xs.row(i)) + 0.05 * rng.normal()).collect();
+    let xt = Matrix::from_fn(15, d, |_, _| rng.uniform_in(-0.85, 0.85));
+    (xs, ys, xt)
+}
+
+/// Acceptance: sparse-grid SKI agrees with dense Kronecker SKI within
+/// 1e-3 on predictive mean *and* variance, on a d = 3 problem where both
+/// are feasible.
+#[test]
+fn sparse_agrees_with_dense_kiss_within_1e3_d3() {
+    let (xs, ys, xt) = toy(140, 3, 3);
+    let h = GpHypers::new(0.9, 1.0, 0.05);
+    let cg = CgConfig { max_iters: 300, tol: 1e-8 };
+    let mut dense = MvmGp::new(
+        xs.clone(),
+        ys.clone(),
+        h,
+        MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: GridSpec::uniform(20),
+            cg,
+            ..Default::default()
+        },
+    );
+    let mut sparse = MvmGp::new(
+        xs,
+        ys,
+        h,
+        MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: GridSpec::sparse(6),
+            cg,
+            ..Default::default()
+        },
+    );
+    dense.refresh().unwrap();
+    sparse.refresh().unwrap();
+
+    let mean_d = dense.predict_mean(&xt);
+    let mean_s = sparse.predict_mean(&xt);
+    let mean_mae = mae(&mean_s, &mean_d);
+    let mean_max = mean_s
+        .iter()
+        .zip(&mean_d)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(mean_max < 1e-3, "mean: max {mean_max:.2e}, mae {mean_mae:.2e}");
+
+    let var_d = dense.predict_var(&xt).unwrap();
+    let var_s = sparse.predict_var(&xt).unwrap();
+    let var_max = var_s
+        .iter()
+        .zip(&var_d)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    assert!(var_max < 1e-3, "var: max {var_max:.2e}");
+
+    // And the sparse grid really is the smaller object at matched
+    // resolution in high d — here just sanity-check the term structure.
+    assert!(sparse.predict_cache().unwrap().terms().len() > 1);
+}
+
+/// The d = 8 regime the dense path cannot touch: the sparse grid stores
+/// under a thousand points, trains (refresh + solve), builds a live
+/// multi-term stencil cache, and predicts finite values.
+#[test]
+fn sparse_grid_opens_d8_where_dense_refuses() {
+    let (xs, ys, xt) = toy(120, 8, 4);
+    // Dense 17-per-dim would be 17^8 ≈ 7e9 cells: typed refusal.
+    let dense = MvmGp::new(
+        xs.clone(),
+        ys.clone(),
+        GpHypers::init_for_dim(8),
+        MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: GridSpec::uniform(17),
+            ..Default::default()
+        },
+    );
+    assert!(dense.build_operator(&dense.hypers, 0).is_err());
+
+    // The noise floor must dominate the level-2 combination error (the
+    // signed sum is not exactly PSD — see grid::sparse).
+    let h = GpHypers::new(GpHypers::init_for_dim(8).ell(), 1.0, 0.25);
+    let spec = GridSpec::sparse(2);
+    assert!(spec.total_points(8).unwrap() < 1000);
+    let mut gp = MvmGp::new(
+        xs,
+        ys,
+        h,
+        MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: spec,
+            cg: CgConfig { max_iters: 80, tol: 1e-6 },
+            ..Default::default()
+        },
+    );
+    gp.refresh().unwrap();
+    let cache = gp.predict_cache().expect("sparse cache fits any budget");
+    assert!(cache.terms().len() > 1);
+    let pred = gp.predict_mean(&xt);
+    assert!(pred.iter().all(|p| p.is_finite()));
+    let var = gp.predict_var(&xt).unwrap();
+    assert!(var.iter().all(|v| v.is_finite() && *v > 0.0));
+}
+
+/// The sparse grid's point count grows near-linearly in d while the
+/// dense grid explodes exponentially — the numbers behind the bench.
+#[test]
+fn sparse_point_count_scales_gently_in_d() {
+    let mut rng = Rng::new(5);
+    let mut last = 0usize;
+    for d in [2usize, 4, 8] {
+        let xs = Matrix::from_fn(50, d, |_, _| rng.uniform_in(-1.0, 1.0));
+        let g = SparseGrid::fit(&xs, 3).unwrap();
+        let pts = g.total_points();
+        // (When 17^d overflows usize the dense side has made the point.)
+        if let Some(cells) = 17usize.checked_pow(d as u32) {
+            assert!(pts < cells, "d={d}: {pts} !< {cells}");
+        }
+        assert!(pts > last, "point count should grow with d");
+        last = pts;
+        assert!(pts < 25_000, "d={d}: sparse grid unexpectedly large ({pts})");
+    }
+}

@@ -3,12 +3,15 @@
 //! built. These complement the per-module unit tests by exercising the
 //! exact compositions the harness and examples rely on.
 
+#![allow(clippy::needless_range_loop)] // index-heavy numeric test/bench loops
+
 use skip_gp::data::growth::{generate as generate_growth, GrowthConfig};
 use skip_gp::data::{dataset_by_name, generate, gaussian_cloud};
 use skip_gp::gp::{
     ClusterMtgp, ClusterMtgpConfig, ExactGp, GpHypers, Mtgp, MtgpConfig, MvmGp,
     MvmGpConfig, MvmVariant, Sgpr,
 };
+use skip_gp::grid::GridSpec;
 use skip_gp::kernels::ProductKernel;
 use skip_gp::operators::{LinearOp, SkiOp, SkipComponent, SkipOp};
 use skip_gp::solvers::{cg_solve, slq_logdet, CgConfig, SlqConfig};
@@ -35,9 +38,14 @@ fn skip_pipeline_matches_exact_gp_predictions() {
         xs,
         ys,
         h,
-        MvmGpConfig { grid_m: 64, rank: 40, refresh_rank: 80, ..Default::default() },
+        MvmGpConfig {
+            grid: GridSpec::uniform(64),
+            rank: 40,
+            refresh_rank: 80,
+            ..Default::default()
+        },
     );
-    skip.refresh();
+    skip.refresh().unwrap();
     let ps = skip.predict_mean(&xt);
     assert!(
         mae(&pe, &ps) < 0.02,
@@ -63,14 +71,14 @@ fn mll_consistency_exact_skip_kiss() {
             h,
             MvmGpConfig {
                 variant,
-                grid_m: 32,
+                grid: GridSpec::uniform(32),
                 rank: 60,
                 slq: SlqConfig { num_probes: 20, max_rank: 40 },
                 cg: CgConfig { max_iters: 200, tol: 1e-7 },
                 ..Default::default()
             },
         );
-        let est = gp.mll(&h, 3);
+        let est = gp.mll(&h, 3).unwrap();
         let gap = (est - exact).abs() / n;
         assert!(gap < 0.06, "{variant:?}: {est} vs exact {exact} ({gap} nats/pt)");
     }
@@ -152,7 +160,7 @@ fn slq_on_skip_operator_tracks_dense() {
     let xs = gaussian_cloud(n, d, 11);
     let kern = ProductKernel::rbf(d, 1.2, 1.0);
     let skis: Vec<SkiOp> = (0..d)
-        .map(|k| SkiOp::new(&xs.col(k), &kern.factors[k], 64))
+        .map(|k| SkiOp::new(&xs.col(k), &kern.factors[k], 64).unwrap())
         .collect();
     let comps: Vec<SkipComponent> = skis
         .iter()
@@ -187,17 +195,22 @@ fn pjrt_backend_training_matches_native() {
     let spec = dataset_by_name("power").unwrap();
     let data = generate(spec, 0.01);
     let h = GpHypers::init_for_dim(data.d());
-    let cfg = MvmGpConfig { grid_m: 32, rank: 15, refresh_rank: 30, ..Default::default() };
+    let cfg = MvmGpConfig {
+        grid: GridSpec::uniform(32),
+        rank: 15,
+        refresh_rank: 30,
+        ..Default::default()
+    };
     // Native path.
     let mut native = MvmGp::new(data.xtrain.clone(), data.ytrain.clone(), h, cfg.clone());
-    native.refresh();
+    native.refresh().unwrap();
     let pn = native.predict_mean(&data.xtest);
     // PJRT path (same seed → same Lanczos probes → same decompositions up
     // to artifact numerics).
     let backend = Arc::new(PjrtBackend::load(&dir).unwrap());
     let mut pjrt = MvmGp::new(data.xtrain.clone(), data.ytrain.clone(), h, cfg)
         .with_backend(backend.clone());
-    pjrt.refresh();
+    pjrt.refresh().unwrap();
     let pp = pjrt.predict_mean(&data.xtest);
     // The two paths compute the same math but with different summation
     // orders inside XLA; Lanczos amplifies ulp-level differences, so

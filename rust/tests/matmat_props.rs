@@ -7,6 +7,8 @@
 //! agreement with single-RHS CG — including the acceptance case of a
 //! SKIP-backed `K̂` with 8 simultaneous right-hand sides.
 
+#![allow(clippy::needless_range_loop)] // index-heavy numeric test/bench loops
+
 use skip_gp::kernels::{ProductKernel, Stationary1d, TaskKernel};
 use skip_gp::linalg::Matrix;
 use skip_gp::operators::lowrank::{HadamardPairOp, NativeBackend};
@@ -99,7 +101,7 @@ fn ski_op_matmat() {
     for (n, m) in [(50usize, 32usize), (211, 64), (400, 128)] {
         let xs = rng.uniform_vec(n, -1.0, 1.0);
         let kern = Stationary1d::rbf(0.5);
-        let op = SkiOp::new(&xs, &kern, m);
+        let op = SkiOp::new(&xs, &kern, m).unwrap();
         check_matmat(&op, &mut rng, "SkiOp");
     }
 }
@@ -110,9 +112,24 @@ fn kronecker_ski_op_matmat() {
     for (n, d, m) in [(60usize, 2usize, 16usize), (90, 3, 12)] {
         let xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
         let kern = ProductKernel::rbf(d, 0.8, 1.2);
-        let op = KroneckerSkiOp::new(&xs, &kern, m);
+        let op = KroneckerSkiOp::new(&xs, &kern, m).unwrap();
         check_matmat(&op, &mut rng, "KroneckerSkiOp");
     }
+}
+
+/// The sparse-grid SKI operator is a SumOp of coefficient-scaled
+/// anisotropic Kronecker terms; its block path must match the serial
+/// reference like every other operator.
+#[test]
+fn sparse_grid_ski_operator_matmat() {
+    use skip_gp::grid::{grid_ski_operator, InducingGrid, SparseGrid};
+    let mut rng = Rng::new(12);
+    let xs = Matrix::from_fn(70, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+    let kern = ProductKernel::rbf(3, 0.8, 1.1);
+    let grid = SparseGrid::fit(&xs, 4).unwrap();
+    assert!(grid.terms().len() > 1);
+    let op = grid_ski_operator(&xs, &kern, &grid);
+    check_matmat(op.as_ref(), &mut rng, "SparseGridSkiOp");
 }
 
 #[test]
@@ -193,7 +210,7 @@ fn block_cg_8rhs_on_skip_operator_matches_serial() {
     let xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
     let k = ProductKernel::rbf(d, 0.9, 1.0);
     let skis: Vec<SkiOp> = (0..d)
-        .map(|dd| SkiOp::new(&xs.col(dd), &k.factors[dd], 64))
+        .map(|dd| SkiOp::new(&xs.col(dd), &k.factors[dd], 64).unwrap())
         .collect();
     let comps: Vec<SkipComponent> = skis
         .iter()
@@ -226,7 +243,7 @@ fn batched_lanczos_agrees_on_structured_operator() {
     let n = 150;
     let xs = rng.uniform_vec(n, 0.0, 2.0);
     let kern = Stationary1d::matern52(0.6);
-    let ski = SkiOp::new(&xs, &kern, 48);
+    let ski = SkiOp::new(&xs, &kern, 48).unwrap();
     let shifted = AffineOp { inner: Box::new(ski), scale: 1.0, shift: 0.4 };
     let mut probes = Matrix::zeros(n, 4);
     for j in 0..4 {

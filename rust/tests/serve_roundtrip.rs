@@ -2,9 +2,11 @@
 //! cached-prediction accuracy against the dense `ExactGp` references, and
 //! batched-vs-one-at-a-time serving equivalence (t ∈ {1, 8, 64}).
 
+#![allow(clippy::needless_range_loop)] // index-heavy numeric test/bench loops
+
 use skip_gp::gp::{ExactGp, GpHypers};
+use skip_gp::grid::{Grid1d, GridSpec};
 use skip_gp::linalg::Matrix;
-use skip_gp::operators::Grid1d;
 use skip_gp::serve::{
     BatcherConfig, ModelSnapshot, RequestBatcher, ServeEngine, Server, ServerConfig,
     SnapshotConfig, VarianceMode,
@@ -26,7 +28,7 @@ fn on_grid_problem(
 ) -> (Matrix, Vec<f64>, Vec<Grid1d>, Matrix) {
     let d = 3;
     let m = 16;
-    let g = Grid1d::fit(0.0, 1.0, m);
+    let g = Grid1d::fit(0.0, 1.0, m).unwrap();
     let mut rng = Rng::new(seed);
     let mut lattice = |rows: usize| {
         Matrix::from_fn(rows, d, |_, _| {
@@ -260,11 +262,87 @@ fn serving_guards() {
     let err = ModelSnapshot::from_exact(
         &gp,
         &SnapshotConfig {
-            grid_m: 512,
+            grid: Some(GridSpec::uniform(512)),
             variance: VarianceMode::None,
             max_grid_cells: 1 << 20,
         },
     )
     .unwrap_err();
     assert!(err.to_string().contains("budget"), "{err}");
+}
+
+/// Path of the checked-in format-version-1 snapshot fixture. Its payload
+/// is synthetic but deterministic: d=2, n=6, r=3, Exact variant,
+/// hypers (log ℓ, log σ_f², log σ_n²) = (−0.25, 0.125, −3),
+/// grids (min −1.25, h 0.25, m 12) × (min −0.5, h 0.125, m 9),
+/// α[i] = 0.25·i − 0.75, mean[i] = i·0.015625 − 0.5,
+/// var[i·3+j] = ((i·3+j) mod 17)·0.03125 − 0.25 — every value exactly
+/// representable, so the assertions below are bitwise.
+fn v1_fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/snapshot_v1.bin")
+}
+
+/// v1 files load through the in-memory migration: a single term with
+/// coefficient 1 and a rectilinear spec derived from the stored axes —
+/// and predict **identically** after a v2 re-save.
+#[test]
+fn v1_fixture_migrates_and_predicts_identically() {
+    let bytes = std::fs::read(v1_fixture_path()).expect("v1 fixture present");
+    let snap = ModelSnapshot::from_bytes(&bytes).expect("v1 fixture loads");
+
+    // Migrated structure.
+    assert_eq!(snap.version, 1, "version field records what was read");
+    assert_eq!(snap.cache.dim(), 2);
+    assert_eq!(snap.alpha.len(), 6);
+    assert_eq!(snap.cache.var_rank(), 3);
+    assert_eq!(snap.cache.terms().len(), 1, "v1 had exactly one implicit term");
+    let term = &snap.cache.terms()[0];
+    assert_eq!(term.coeff, 1.0);
+    assert_eq!(term.axes[0].m, 12);
+    assert_eq!(term.axes[1].m, 9);
+    assert_eq!(snap.cache.spec, GridSpec::Rectilinear(vec![12, 9]));
+
+    // Exact payload values (all exactly representable).
+    assert_eq!(snap.hypers.log_ell, -0.25);
+    assert_eq!(snap.hypers.log_sf2, 0.125);
+    assert_eq!(snap.hypers.log_sn2, -3.0);
+    assert_eq!(snap.alpha[1], -0.5);
+    assert_eq!(term.mean[0], -0.5);
+    assert_eq!(term.mean[4], 4.0 * 0.015625 - 0.5);
+    assert_eq!(term.var_r.get(0, 1), 0.03125 - 0.25);
+
+    // Migration predicts identically through a v2 re-save.
+    let q = Matrix::from_vec(
+        5,
+        2,
+        vec![0.1, -0.3, 0.7, 0.2, -0.5, -0.8, 0.0, 0.0, 0.9, 0.4],
+    );
+    let mean_v1 = snap.cache.predict_mean(&q);
+    let var_v1 = snap.cache.predict_var(&q);
+    let v2_bytes = snap.to_bytes();
+    assert_ne!(v2_bytes, bytes, "writers always emit the newest version");
+    let back = ModelSnapshot::from_bytes(&v2_bytes).expect("v2 re-save loads");
+    assert_eq!(back.version, 2);
+    assert_eq!(back.cache.spec, snap.cache.spec);
+    assert_eq!(back.cache.predict_mean(&q), mean_v1, "migration changed means");
+    assert_eq!(back.cache.predict_var(&q), var_v1, "migration changed variances");
+    for (m, v) in mean_v1.iter().zip(&var_v1) {
+        assert!(m.is_finite() && v.is_finite() && *v > 0.0);
+    }
+}
+
+/// An unknown *future* version is a clean typed error, not a parse
+/// attempt — the version gate rejects before any field is trusted.
+#[test]
+fn future_version_is_a_clean_typed_error() {
+    let mut bytes = std::fs::read(v1_fixture_path()).expect("v1 fixture present");
+    bytes[8] = 7; // version u32 little-endian low byte: 1 → 7
+    let err = match ModelSnapshot::from_bytes(&bytes) {
+        Ok(_) => panic!("future version must not parse"),
+        Err(e) => e,
+    };
+    let msg = err.to_string();
+    assert!(msg.contains("version 7"), "unhelpful error: {msg}");
+    assert!(msg.contains("snapshot"), "not a typed snapshot error: {msg}");
 }
