@@ -130,7 +130,7 @@ fn main() {
             variant: MvmVariant::Kiss,
             grid: sparse,
             rank: 20,
-            cg: CgConfig { max_iters: 60, tol: 1e-5 },
+            cg: CgConfig { max_iters: 60, tol: 1e-5, ..CgConfig::default() },
             ..Default::default()
         },
     );

@@ -59,7 +59,8 @@ fn main() {
         let mut rng = Rng::new(1);
         let v = rng.normal_vec(data.n());
         let merr = rel_err(&op.matvec(&v), &khat.matvec(&v));
-        let sol = cg_solve(&op, &data.ytrain, CgConfig { max_iters: 300, tol: 1e-7 });
+        let cg = CgConfig { max_iters: 300, tol: 1e-7, ..CgConfig::default() };
+        let sol = cg_solve(&op, &data.ytrain, cg);
         let p = kern.gram(&data.xtest, &data.xtrain).matvec(&sol.x);
         println!(
             "rank={rank}: mvm_err={merr:.3e} a_err={:.2e} MAE={:.4}",

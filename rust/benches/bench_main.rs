@@ -31,8 +31,12 @@ use skip_gp::operators::lowrank::{
 use skip_gp::operators::{
     matmat_via_matvec, KroneckerSkiOp, LinearOp, SkiOp, SkipComponent, SkipOp,
 };
+use skip_gp::operators::AffineOp;
 use skip_gp::runtime::PjrtBackend;
-use skip_gp::solvers::{block_cg_solve, cg_solve, CgConfig};
+use skip_gp::solvers::{
+    block_cg_solve, build_preconditioner, cg_solve, cg_solve_with, CgConfig, PrecondSpec,
+    Preconditioner,
+};
 use skip_gp::util::{bench_median_s, rel_err, Rng};
 use std::io::Write;
 use std::path::Path;
@@ -205,14 +209,14 @@ fn main() {
             std::hint::black_box(cg_solve(
                 &shifted,
                 &y,
-                CgConfig { max_iters: 30, tol: 1e-10 },
+                CgConfig { max_iters: 30, tol: 1e-10, ..Default::default() },
             ));
         });
 
         // --- The batched-engine acceptance case: t = 8 simultaneous
         // solves against the SKIP-backed K̂, serial CG loop vs block-CG.
         let rhs = Matrix::from_fn(n, t_rhs, |_, _| rng.normal());
-        let cfg = CgConfig { max_iters: 30, tol: 1e-10 };
+        let cfg = CgConfig { max_iters: 30, tol: 1e-10, ..Default::default() };
         let serial_s = b.timed("cg_loop_8rhs", "n=2048 t=8 30 iters (serial)", || {
             for j in 0..t_rhs {
                 std::hint::black_box(cg_solve(&shifted, &rhs.col(j), cfg));
@@ -230,6 +234,89 @@ fn main() {
             worst = worst.max(rel_err(&block_sol.x.col(j), &single.x));
         }
         println!("  -> block vs serial max column rel err: {worst:.2e}");
+    }
+
+    // --- Preconditioned CG: the n=4096 1-D SKI case. Small σ_n² makes
+    // K̂ = K_SKI + σ_n²I ill-conditioned, which is where the rank-k
+    // pivoted-Cholesky preconditioner collapses the iteration count
+    // (Yadav et al. 2021). Paired plain-vs-preconditioned runs, recorded
+    // machine-readably in results/BENCH_precond.json (uploaded from CI).
+    {
+        let n = 4096;
+        let xs = gaussian_cloud(n, 1, 7);
+        let kern = Stationary1d::rbf(0.7);
+        let ski = SkiOp::new(&xs.col(0), &kern, 512).expect("bench SKI grid");
+        let sn2 = 1e-3;
+        let khat = AffineOp { inner: Box::new(ski), scale: 1.0, shift: sn2 };
+        let y = rng.normal_vec(n);
+        let tol = 1e-6;
+        let cfg = CgConfig { max_iters: 2000, tol, ..Default::default() };
+
+        let plain = cg_solve(&khat, &y, cfg);
+        assert!(plain.converged, "plain CG must converge for the paired case");
+        let cg_s = b.timed("cg_plain_n4096", &format!("SKI tol=1e-6 ({} iters)", plain.iters), || {
+            std::hint::black_box(cg_solve(&khat, &y, cfg));
+        });
+
+        let rank = 50;
+        let setup_s = b.timed("pcg_setup_rank50", "pivoted-Cholesky build", || {
+            std::hint::black_box(build_preconditioner(
+                &khat,
+                Some(sn2),
+                PrecondSpec::PivChol { rank },
+            ));
+        });
+        let pre = build_preconditioner(&khat, Some(sn2), PrecondSpec::PivChol { rank });
+        let pcg = cg_solve_with(&khat, &y, pre.as_ref(), None, cfg);
+        assert!(pcg.converged, "PCG must converge for the paired case");
+        let pcg_s = b.timed("pcg_rank50_n4096", &format!("SKI tol=1e-6 ({} iters)", pcg.iters), || {
+            std::hint::black_box(cg_solve_with(&khat, &y, pre.as_ref(), None, cfg));
+        });
+        let jac = build_preconditioner(&khat, Some(sn2), PrecondSpec::Jacobi);
+        let jacobi = cg_solve_with(&khat, &y, jac.as_ref(), None, cfg);
+
+        // Solution agreement, judged on *tight* solves so the comparison
+        // measures the preconditioner (zero accuracy change), not the
+        // stopping point: both paths run to 1e-12 and must coincide.
+        let tight = CgConfig { max_iters: 4000, tol: 1e-12, ..Default::default() };
+        let xa = cg_solve(&khat, &y, tight);
+        let xb = cg_solve_with(&khat, &y, pre.as_ref(), None, tight);
+        // An unconverged tight solve would make `agreement` measure
+        // truncation error, not preconditioner equivalence.
+        assert!(
+            xa.converged && xb.converged,
+            "tight agreement solves must converge (cg {:.1e}, pcg {:.1e})",
+            xa.rel_residual,
+            xb.rel_residual
+        );
+        let agreement = rel_err(&xa.x, &xb.x);
+
+        let iters_ratio = plain.iters as f64 / pcg.iters.max(1) as f64;
+        println!(
+            "  -> precond rank:{rank} iteration reduction: {iters_ratio:.1}x \
+             ({} -> {} iters at tol {tol:.0e}), agreement {agreement:.2e}",
+            plain.iters, pcg.iters
+        );
+        let json = format!(
+            "{{\n  \"bench\": \"precond\",\n  \"n\": {n},\n  \"operator\": \"ski_m512_rbf\",\n  \
+             \"noise\": {sn2},\n  \"tol\": {tol},\n  \"precond\": \"rank:{rank}\",\n  \
+             \"setup_rank\": {setup_rank},\n  \"cg_iters\": {cg_iters},\n  \
+             \"pcg_iters\": {pcg_iters},\n  \"jacobi_iters\": {jacobi_iters},\n  \
+             \"iters_ratio\": {iters_ratio:.3},\n  \"cg_s\": {cg_s:.6},\n  \
+             \"pcg_s\": {pcg_s:.6},\n  \"pcg_setup_s\": {setup_s:.6},\n  \
+             \"solve_speedup\": {speedup:.3},\n  \"agreement_rel_err\": {agreement:.3e}\n}}\n",
+            setup_rank = pre.cost().rank,
+            cg_iters = plain.iters,
+            pcg_iters = pcg.iters,
+            jacobi_iters = jacobi.iters,
+            speedup = cg_s / pcg_s,
+        );
+        let path = Path::new("results/BENCH_precond.json");
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, json).expect("bench json");
+        println!("wrote {}", path.display());
     }
 
     b.write_csv(Path::new("results/bench_micro.csv"));

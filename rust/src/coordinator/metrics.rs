@@ -236,8 +236,13 @@ impl Metrics {
     }
 
     /// One line per solver with recorded runs: count, p50/p99 iterations,
-    /// convergence failures. Empty string when no solver ever ran — the
-    /// session summary printer skips it then.
+    /// convergence failures — plus, when preconditioning/warm starts were
+    /// active, their accounting (setup MVMs spent, seeds given, seeds that
+    /// converged with zero iterations). Empty string when no solver ever
+    /// ran — the session summary printer skips it then.
+    ///
+    /// Reading these lines (and what to do when p99 is high) is covered
+    /// in `docs/SOLVERS.md`.
     pub fn solver_report(&self) -> String {
         let mut out = String::new();
         let names: Vec<String> = {
@@ -259,6 +264,27 @@ impl Metrics {
                 self.value_quantile(&iters_key, 0.50),
                 self.value_quantile(&iters_key, 0.99),
                 self.counter(&format!("solver.{name}.fail")),
+            ));
+        }
+        let setup: u64 = self
+            .value_histogram("solver.precond.setup_matvecs")
+            .iter()
+            .map(|(v, c)| v * c)
+            .sum();
+        let fallbacks = self.counter("solver.precond.fallback");
+        // Fallbacks alone (e.g. Jacobi degrading to identity, which costs
+        // no setup MVMs) must still surface — they mean the requested
+        // preconditioner never took effect.
+        if setup > 0 || fallbacks > 0 {
+            out.push_str(&format!(
+                "  precond   setup mvms={setup} (fallbacks={fallbacks})\n"
+            ));
+        }
+        let seeded = self.counter("solver.warm.seeded");
+        if seeded > 0 {
+            out.push_str(&format!(
+                "  warm      {seeded} solves seeded, {} converged at the seed\n",
+                self.counter("solver.warm.hit")
             ));
         }
         out
@@ -419,6 +445,20 @@ mod tests {
         assert!(r.contains("solver cg"), "{r}");
         assert!(r.contains("p99=40"), "{r}");
         assert!(r.contains("failures=1"), "{r}");
+    }
+
+    #[test]
+    fn solver_report_includes_precond_and_warm_lines() {
+        let m = Metrics::new();
+        m.observe("solver.pcg.iters", 5);
+        m.observe("solver.precond.setup_matvecs", 50);
+        m.incr("solver.warm.seeded", 3);
+        m.incr("solver.warm.hit", 2);
+        let r = m.solver_report();
+        assert!(r.contains("solver pcg"), "{r}");
+        assert!(r.contains("setup mvms=50"), "{r}");
+        assert!(r.contains("3 solves seeded"), "{r}");
+        assert!(r.contains("2 converged at the seed"), "{r}");
     }
 
     #[test]

@@ -1,5 +1,12 @@
 //! ADAM optimizer (Kingma & Ba, 2015) — the paper trains all
 //! hyperparameters "with ADAM using default optimization parameters".
+//!
+//! ADAM's small, momentum-damped steps are what make the solver layer's
+//! warm starts effective: consecutive `MvmGp::mll_grad` calls see nearly
+//! the same covariance, so each step's y-solve is seeded with the
+//! previous α and converges in a handful of (preconditioned) CG
+//! iterations instead of a cold Krylov build-up — see
+//! `crate::solvers::cg::cg_solve_with` and `docs/SOLVERS.md`.
 
 /// ADAM state over a flat parameter vector.
 #[derive(Clone, Debug)]

@@ -40,7 +40,7 @@ impl Default for ClusterMtgpConfig {
             num_clusters: 3,
             grid_m: 64,
             rank: 15,
-            cg: CgConfig { max_iters: 60, tol: 1e-4 },
+            cg: CgConfig { max_iters: 60, tol: 1e-4, ..CgConfig::default() },
             slq: SlqConfig { num_probes: 6, max_rank: 20 },
             seed: 0,
             use_skip: true,
@@ -310,7 +310,7 @@ mod tests {
         let (data, truth) = clustered_tasks(2, 8, 1);
         let cfg = ClusterMtgpConfig {
             rank: 30,
-            cg: CgConfig { max_iters: 150, tol: 1e-6 },
+            cg: CgConfig { max_iters: 150, tol: 1e-6, ..CgConfig::default() },
             slq: SlqConfig { num_probes: 20, max_rank: 30 },
             ..Default::default()
         };

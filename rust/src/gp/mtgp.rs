@@ -56,7 +56,7 @@ impl Default for MtgpConfig {
         MtgpConfig {
             grid_m: 100,
             rank: 15,
-            cg: CgConfig { max_iters: 60, tol: 1e-4 },
+            cg: CgConfig { max_iters: 60, tol: 1e-4, ..CgConfig::default() },
             slq: SlqConfig { num_probes: 6, max_rank: 20 },
             seed: 0,
         }
@@ -298,7 +298,7 @@ mod tests {
         let cfg = MtgpConfig {
             rank: 30,
             slq: SlqConfig { num_probes: 30, max_rank: 30 },
-            cg: CgConfig { max_iters: 200, tol: 1e-7 },
+            cg: CgConfig { max_iters: 200, tol: 1e-7, ..CgConfig::default() },
             ..Default::default()
         };
         let mtgp = Mtgp::new(data, Stationary1d::matern52(1.0), 2, 0.1, cfg);

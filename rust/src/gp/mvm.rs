@@ -16,9 +16,13 @@
 //! consumer (operator construction, the predictive stencil cache, the
 //! serving snapshot) shares one fitting/stencil/budget implementation.
 //!
-//! Inference uses CG for solves (block-CG when several right-hand sides
-//! ride together, as in the gradient's y-solve + Hutchinson probes) and
-//! batched-probe SLQ for log-determinants. Training
+//! Inference uses *preconditioned* CG for solves (block-CG when several
+//! right-hand sides ride together, as in the gradient's y-solve +
+//! Hutchinson probes): `cfg.cg.precond` selects a pivoted-Cholesky /
+//! Jacobi / identity preconditioner built once per operator with the
+//! exact noise shift σ_n², and with `cfg.warm_start` successive y-solves
+//! seed from the previous solution (see `docs/SOLVERS.md`).
+//! Log-determinants use batched-probe SLQ. Training
 //! maximizes Eq. (3) with ADAM; gradients are analytic in (σ_f², σ_n²)
 //! and central finite differences with **common random numbers** in log ℓ
 //! (the same probe/seed is used at ℓ·e^{±h}, so the stochastic parts of
@@ -33,10 +37,13 @@ use crate::operators::{
     AffineOp, ContractionBackend, LinearOp, NativeBackend, SkiOp, SkipComponent, SkipOp,
 };
 use crate::serve::cache::PredictCache;
-use crate::solvers::{block_cg_solve, cg_solve, slq_logdet, CgConfig, SlqConfig};
+use crate::solvers::{
+    block_cg_solve_with, build_preconditioner, cg_solve_with, slq_logdet, CgConfig,
+    Preconditioner, SlqConfig,
+};
 use crate::util::Rng;
 use crate::{Error, Result};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Largest stored grid (Σ_t Π m_k cells across terms) the predictive
 /// stencil cache may occupy; beyond it (high d on a dense spec)
@@ -75,8 +82,18 @@ pub struct MvmGpConfig {
     /// number, so the cached α is computed at higher rank — matching the
     /// paper's "maximum number of Lanczos iterations to 100" (§4).
     pub refresh_rank: usize,
+    /// CG budget — including [`CgConfig::precond`], which selects the
+    /// preconditioner every covariance solve (training, refresh,
+    /// variance) builds per operator (`--precond rank:K|jacobi|none` on
+    /// the CLI; see `docs/SOLVERS.md` for tuning).
     pub cg: CgConfig,
     pub slq: SlqConfig,
+    /// Warm-start the iterative solves with the previous solution: ADAM's
+    /// successive `mll_grad` calls seed the y-solve with the last step's
+    /// α, and `refresh` seeds from the training-grade α. Warm starts
+    /// change where CG *starts*, never what it converges to; disable for
+    /// bit-reproducibility of individual solves against cold runs.
+    pub warm_start: bool,
     /// Base seed for probe vectors (common-random-numbers gradients).
     pub seed: u64,
 }
@@ -88,8 +105,9 @@ impl Default for MvmGpConfig {
             grid: GridSpec::Uniform(100),
             rank: 30,
             refresh_rank: 100,
-            cg: CgConfig { max_iters: 100, tol: 1e-5 },
+            cg: CgConfig { max_iters: 100, tol: 1e-5, ..CgConfig::default() },
             slq: SlqConfig { num_probes: 8, max_rank: 25 },
+            warm_start: true,
             seed: 0,
         }
     }
@@ -111,6 +129,19 @@ pub struct MvmGp {
     /// decomposition), kept so `predict_var` and snapshot building reuse
     /// it instead of re-running the Lanczos merge tree.
     refresh_op: Option<AffineOp>,
+    /// The preconditioner built for `refresh_op` (set together with it),
+    /// so repeated `predict_var` calls don't re-pay the rank-k column
+    /// sampling against the same cached operator.
+    refresh_pre: Option<Box<dyn Preconditioner>>,
+    /// The hypers `refresh_op`/`refresh_pre` were built for — the cached
+    /// pair is only served while `self.hypers` still matches (hypers are
+    /// `pub` and the externally-set-hypers workflow mutates them).
+    refresh_hypers: Option<GpHypers>,
+    /// The most recent y-solve (α from the last `mll_grad`/`refresh`),
+    /// used to warm-start the next one when `cfg.warm_start` is on.
+    /// Interior-mutable so `&self` methods (`mll`) can read it and
+    /// `mll_grad` can be called through `&self` from optimizers.
+    warm: Mutex<Option<Vec<f64>>>,
 }
 
 impl MvmGp {
@@ -125,7 +156,28 @@ impl MvmGp {
             alpha: None,
             cache: None,
             refresh_op: None,
+            refresh_pre: None,
+            refresh_hypers: None,
+            warm: Mutex::new(None),
         }
+    }
+
+    /// The preconditioner `cfg.cg.precond` describes, built for `op`
+    /// with the exact noise shift σ_n² of hypers `h` — one setup
+    /// (k column MVMs for `rank:k`) amortized across every solve against
+    /// this operator.
+    fn preconditioner(&self, op: &AffineOp, h: &GpHypers) -> Box<dyn Preconditioner> {
+        build_preconditioner(op, Some(h.sn2()), self.cfg.cg.precond)
+    }
+
+    /// The warm-start seed for an n-length y-solve, when enabled and a
+    /// previous solution exists.
+    fn warm_seed(&self) -> Option<Vec<f64>> {
+        if !self.cfg.warm_start {
+            return None;
+        }
+        let w = self.warm.lock().unwrap();
+        w.as_ref().filter(|v| v.len() == self.ys.len()).cloned()
     }
 
     /// Swap the Lemma-3.1 contraction backend (e.g. the PJRT artifact
@@ -199,10 +251,39 @@ impl MvmGp {
     }
 
     /// Stochastic estimate of the marginal log likelihood (Eq. 3).
+    ///
+    /// The y-solve is preconditioned per `cfg.cg.precond` and
+    /// warm-started from the last `mll_grad`/`refresh` solution (the
+    /// seed only moves the CG starting point — the estimate still
+    /// converges to `cfg.cg.tol`). `mll` never *writes* the warm state,
+    /// so repeated calls at the same (h, seed) stay deterministic.
     pub fn mll(&self, h: &GpHypers, seed: u64) -> Result<f64> {
+        self.mll_impl(h, seed, None)
+    }
+
+    /// [`mll`](Self::mll) with an optional pre-built preconditioner.
+    /// PCG is correct for *any* SPD `M`, so `mll_grad`'s finite-difference
+    /// evaluations at ℓ·e^{±h} reuse the preconditioner built at ℓ
+    /// instead of paying a fresh rank-k column sampling per FD point
+    /// (ADAM's perturbations are small, so it stays a good `M`).
+    fn mll_impl(
+        &self,
+        h: &GpHypers,
+        seed: u64,
+        pre: Option<&dyn Preconditioner>,
+    ) -> Result<f64> {
         let op = self.build_operator(h, seed)?;
         let n = self.ys.len() as f64;
-        let sol = cg_solve(&op, &self.ys, self.cfg.cg);
+        let built;
+        let pre: &dyn Preconditioner = match pre {
+            Some(p) => p,
+            None => {
+                built = self.preconditioner(&op, h);
+                built.as_ref()
+            }
+        };
+        let x0 = self.warm_seed();
+        let sol = cg_solve_with(&op, &self.ys, pre, x0.as_deref(), self.cfg.cg);
         let fit: f64 = self.ys.iter().zip(&sol.x).map(|(y, a)| y * a).sum();
         let mut rng = Rng::new(seed ^ LOGDET_STREAM);
         let logdet = slq_logdet(&op, self.cfg.slq, &mut rng);
@@ -215,7 +296,11 @@ impl MvmGp {
     /// The predictive solve `K̂⁻¹y` and the Hutchinson trace probes
     /// `K̂⁻¹zᵢ` ride in **one block-CG call**: every CG iteration costs a
     /// single fused SKIP block MVM for all 1 + p right-hand sides instead
-    /// of 1 + p independent operator traversals.
+    /// of 1 + p independent operator traversals. The block solve is
+    /// preconditioned per `cfg.cg.precond`, and with `cfg.warm_start` the
+    /// y-column is seeded with the previous step's α (ADAM moves the
+    /// hypers a little per step, so the old α is a near-solution and the
+    /// y-column converges in a handful of iterations).
     pub fn mll_grad(&self, h: &GpHypers, seed: u64) -> Result<(f64, Vec<f64>)> {
         let n = self.ys.len();
         let op = self.build_operator(h, seed)?;
@@ -230,8 +315,19 @@ impl MvmGp {
         for (j, z) in probes.iter().enumerate() {
             rhs.set_col(1 + j, z);
         }
-        let sol = block_cg_solve(&op, &rhs, self.cfg.cg);
+        let pre = self.preconditioner(&op, h);
+        // Seed only the y-column; the probe columns are fresh draws every
+        // step and start cold (a zero column seeds r₀ = b bitwise).
+        let x0 = self.warm_seed().map(|w| {
+            let mut x0 = Matrix::zeros(n, 1 + num_tr_probes);
+            x0.set_col(0, &w);
+            x0
+        });
+        let sol = block_cg_solve_with(&op, &rhs, pre.as_ref(), x0.as_ref(), self.cfg.cg);
         let alpha = sol.x.col(0);
+        if self.cfg.warm_start {
+            *self.warm.lock().unwrap() = Some(alpha.clone());
+        }
         let ya: f64 = self.ys.iter().zip(&alpha).map(|(y, a)| y * a).sum();
         let aa: f64 = alpha.iter().map(|a| a * a).sum();
 
@@ -256,8 +352,8 @@ impl MvmGp {
         hp.log_ell += fd_h;
         let mut hm = *h;
         hm.log_ell -= fd_h;
-        let lp = self.mll(&hp, seed)?;
-        let lm = self.mll(&hm, seed)?;
+        let lp = self.mll_impl(&hp, seed, Some(pre.as_ref()))?;
+        let lm = self.mll_impl(&hm, seed, Some(pre.as_ref()))?;
         let g_ell = (lp - lm) / (2.0 * fd_h);
 
         // MLL at θ (reuse fit term; logdet from the CRN midpoint average —
@@ -306,17 +402,36 @@ impl MvmGp {
             self.refresh_grade_rank(),
         )?;
         let cg = CgConfig { max_iters: self.cfg.cg.max_iters.max(200), ..self.cfg.cg };
-        let sol = cg_solve(&op, &self.ys, cg);
+        let pre = self.preconditioner(&op, &self.hypers);
+        // Seed with the best solution on hand: the previous refresh's α,
+        // else the last training step's (the refresh-grade operator is a
+        // higher-rank build of the same K̂, so either is a near-solution).
+        let x0 = if self.cfg.warm_start {
+            self.alpha.clone().or_else(|| self.warm_seed())
+        } else {
+            None
+        };
+        let sol = cg_solve_with(&op, &self.ys, pre.as_ref(), x0.as_deref(), cg);
+        if self.cfg.warm_start {
+            *self.warm.lock().unwrap() = Some(sol.x.clone());
+        }
         self.alpha = Some(sol.x);
         self.cache = self.build_stencil_cache();
         self.refresh_op = Some(op);
+        self.refresh_pre = Some(pre);
+        self.refresh_hypers = Some(self.hypers);
         Ok(())
     }
 
-    /// The refresh-grade operator built by the last `refresh` (None before
-    /// it). `predict_var` and `serve::snapshot` reuse this cached
-    /// decomposition instead of rebuilding the merge tree.
+    /// The refresh-grade operator built by the last `refresh`.
+    /// `predict_var` and `serve::snapshot` reuse this cached
+    /// decomposition instead of rebuilding the merge tree. Returns `None`
+    /// before the first `refresh` — and after the (pub) hypers have been
+    /// mutated since it, so a stale operator is never served.
     pub fn refresh_operator(&self) -> Option<&AffineOp> {
+        if self.refresh_hypers != Some(self.hypers) {
+            return None;
+        }
         self.refresh_op.as_ref()
     }
 
@@ -465,10 +580,12 @@ impl MvmGp {
         let d = self.xs.cols;
         let kern = ProductKernel::rbf(d, self.hypers.ell(), self.hypers.sf2());
         let kx = kern.gram(&self.xs, xtest); // n × n*
-        // Reuse the cached refresh-grade operator when available; rebuild
-        // only if `refresh` has not run with the current state.
+        // Reuse the cached refresh-grade operator when it is current for
+        // these hypers (`refresh_operator` returns None when stale);
+        // rebuild otherwise.
         let built;
-        let op: &AffineOp = match &self.refresh_op {
+        let cached = self.refresh_operator();
+        let op: &AffineOp = match cached {
             Some(op) => op,
             None => {
                 built = self.build_operator_with_rank(
@@ -480,7 +597,18 @@ impl MvmGp {
             }
         };
         let cg = CgConfig { max_iters: self.cfg.cg.max_iters.max(200), ..self.cfg.cg };
-        let sol = block_cg_solve(op, &kx, cg);
+        // Reuse the preconditioner cached with the refresh operator; only
+        // a freshly built operator needs a fresh (rank-k column-sampling)
+        // setup.
+        let built_pre;
+        let pre: &dyn Preconditioner = match (cached.is_some(), &self.refresh_pre) {
+            (true, Some(p)) => p.as_ref(),
+            _ => {
+                built_pre = self.preconditioner(op, &self.hypers);
+                built_pre.as_ref()
+            }
+        };
+        let sol = block_cg_solve_with(op, &kx, pre, None, cg);
         Ok((0..xtest.rows)
             .map(|j| {
                 let quad = dot(&kx.col(j), &sol.x.col(j));
@@ -696,6 +824,49 @@ mod tests {
         let var = gp.predict_var(&xt).unwrap();
         assert!(var[0] < 0.1, "at-data var {}", var[0]);
         assert!(var[1] > 0.9, "far-field var {}", var[1]);
+    }
+
+    #[test]
+    fn preconditioned_refresh_matches_plain() {
+        use crate::solvers::PrecondSpec;
+        let (xs, ys, xt, _) = toy(150, 2, 13);
+        let h = GpHypers::new(0.7, 1.0, 0.05);
+        let mut cfg_plain = MvmGpConfig {
+            grid: GridSpec::uniform(48),
+            rank: 30,
+            warm_start: false,
+            ..Default::default()
+        };
+        cfg_plain.cg.tol = 1e-8;
+        cfg_plain.cg.max_iters = 500;
+        let mut cfg_pre = cfg_plain.clone();
+        cfg_pre.cg.precond = PrecondSpec::PivChol { rank: 30 };
+        let mut a = MvmGp::new(xs.clone(), ys.clone(), h, cfg_plain);
+        let mut b = MvmGp::new(xs, ys, h, cfg_pre);
+        a.refresh().unwrap();
+        b.refresh().unwrap();
+        let pa = a.predict_mean(&xt);
+        let pb = b.predict_mean(&xt);
+        assert!(mae(&pa, &pb) < 1e-4, "precond changed predictions: {}", mae(&pa, &pb));
+    }
+
+    #[test]
+    fn second_refresh_warm_starts_from_alpha() {
+        use crate::util::rel_err;
+        // The refresh-grade operator build is seed-deterministic, so the
+        // second refresh's warm seed is (numerically) the solution: it
+        // converges at or within a step of the seed and must not move α.
+        // (The exact zero-iteration bitwise guarantee is pinned at the
+        // solver level in `cg::tests::warm_start_with_solution_is_bitwise_noop`.)
+        let (xs, ys, _, _) = toy(120, 2, 14);
+        let cfg =
+            MvmGpConfig { grid: GridSpec::uniform(48), rank: 25, ..Default::default() };
+        let mut gp = MvmGp::new(xs, ys, GpHypers::new(0.7, 1.0, 0.05), cfg);
+        gp.refresh().unwrap();
+        let a1 = gp.alpha().unwrap().to_vec();
+        gp.refresh().unwrap();
+        let drift = rel_err(gp.alpha().unwrap(), &a1);
+        assert!(drift < 1e-4, "warm-started refresh moved α by {drift}");
     }
 
     #[test]

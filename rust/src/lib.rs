@@ -26,7 +26,13 @@
 //! path that carries an n×t block through the structure in one pass, and
 //! [`solvers::block_cg_solve`] / [`solvers::lanczos_batch`] fuse the
 //! per-iteration MVMs of simultaneous right-hand sides / probes into
-//! single block traversals.
+//! single block traversals. How many iterations those solves need is
+//! governed by the **preconditioned solver subsystem**
+//! ([`solvers::precond`]): partial pivoted-Cholesky / Jacobi
+//! preconditioners built from cheap operator column/diagonal accessors
+//! ([`operators::LinearOp::col_at`] / [`operators::LinearOp::diag`]),
+//! plus warm-started CG for optimizer loops and cache refreshes — see
+//! `docs/SOLVERS.md` for the tuning guide.
 //!
 //! Trained models deploy through the **serving subsystem** ([`serve`]):
 //! versioned model snapshots freeze the predictive caches onto the

@@ -25,6 +25,7 @@ use skip_gp::serve::{
     BatcherConfig, ModelSnapshot, ServeEngine, Server, ServerConfig, SnapshotConfig,
     VarianceMode,
 };
+use skip_gp::solvers::PrecondSpec;
 use skip_gp::util::{mae, Timer};
 use skip_gp::{Error, Result};
 use std::collections::HashMap;
@@ -112,10 +113,12 @@ USAGE:
                 [--out-dir D] [--scale F] [--steps N] [--rank R] [--seed S]
                 [--dataset NAME] [--trials N] [--n N] [--full]
   skip-gp train  [--dataset NAME] [--scale F] [--steps N] [--rank R]
-                 [--grid M|M1xM2x…|sparse:L] [--variant skip|kiss] [--pjrt]
+                 [--grid M|M1xM2x…|sparse:L] [--variant skip|kiss]
+                 [--precond rank:K|jacobi|none] [--pjrt]
   skip-gp snapshot [--dataset NAME] [--scale F] [--steps N] [--rank R]
                    [--grid M|M1xM2x…|sparse:L] [--variant skip|kiss] [--out F]
                    [--serve-grid M|M1xM2x…|sparse:L]
+                   [--precond rank:K|jacobi|none]
                    [--var exact|lanczos|none] [--var-rank R]
   skip-gp serve  --snapshot F [--bind ADDR] [--max-batch N] [--max-wait-ms F]
   skip-gp artifacts [--dir D]
@@ -204,6 +207,8 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     let steps: usize = opts.get("steps", 10)?;
     let rank: usize = opts.get("rank", 15)?;
     let grid = parse_grid_spec(&opts.get_str("grid").unwrap_or_else(|| "100".into()))?;
+    let precond =
+        PrecondSpec::parse(&opts.get_str("precond").unwrap_or_else(|| "none".into()))?;
     let variant = match opts.get_str("variant").as_deref() {
         None | Some("skip") => MvmVariant::Skip,
         Some("kiss") => MvmVariant::Kiss,
@@ -211,18 +216,21 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     };
     let data = generate(spec, scale);
     println!(
-        "training {} GP on {} (n={}, d={}, grid {}, steps={steps})",
+        "training {} GP on {} (n={}, d={}, grid {}, steps={steps}, precond {})",
         if variant == MvmVariant::Skip { "SKIP" } else { "KISS" },
         name,
         data.n(),
         data.d(),
-        grid.describe()
+        grid.describe(),
+        precond.describe()
     );
+    let mut cfg = MvmGpConfig { variant, grid, rank, ..Default::default() };
+    cfg.cg.precond = precond;
     let mut gp = MvmGp::new(
         data.xtrain.clone(),
         data.ytrain.clone(),
         GpHypers::init_for_dim(data.d()),
-        MvmGpConfig { variant, grid, rank, ..Default::default() },
+        cfg,
     );
     if opts.flag("pjrt") {
         let backend = Arc::new(PjrtBackend::load(&PathBuf::from("artifacts"))?);
@@ -273,20 +281,25 @@ fn cmd_snapshot(rest: &[String]) -> Result<()> {
         Some("none") => VarianceMode::None,
         Some(v) => return Err(Error::Config(format!("unknown variance mode '{v}'"))),
     };
+    let precond =
+        PrecondSpec::parse(&opts.get_str("precond").unwrap_or_else(|| "none".into()))?;
     let data = generate(spec, scale);
     println!(
-        "training {} GP on {} (n={}, d={}, grid {}, steps={steps})",
+        "training {} GP on {} (n={}, d={}, grid {}, steps={steps}, precond {})",
         if variant == MvmVariant::Skip { "SKIP" } else { "KISS" },
         name,
         data.n(),
         data.d(),
-        grid.describe()
+        grid.describe(),
+        precond.describe()
     );
+    let mut cfg = MvmGpConfig { variant, grid, rank, ..Default::default() };
+    cfg.cg.precond = precond;
     let mut gp = MvmGp::new(
         data.xtrain.clone(),
         data.ytrain.clone(),
         GpHypers::init_for_dim(data.d()),
-        MvmGpConfig { variant, grid, rank, ..Default::default() },
+        cfg,
     );
     let t = Timer::start();
     gp.fit(steps, 0.1)?;
@@ -303,7 +316,12 @@ fn cmd_snapshot(rest: &[String]) -> Result<()> {
     };
     let snap = ModelSnapshot::from_mvm(
         &gp,
-        &SnapshotConfig { grid: serve_grid, variance, ..Default::default() },
+        &SnapshotConfig {
+            grid: serve_grid,
+            variance,
+            precond: Some(precond),
+            ..Default::default()
+        },
     )?;
     snap.save(&out)?;
     let bytes = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
@@ -315,6 +333,10 @@ fn cmd_snapshot(rest: &[String]) -> Result<()> {
         t.elapsed_s(),
         bytes
     );
+    let solvers = skip_gp::coordinator::metrics::global().solver_report();
+    if !solvers.is_empty() {
+        println!("solver effort:\n{solvers}");
+    }
     Ok(())
 }
 

@@ -56,6 +56,22 @@ impl LanczosFactor {
         let b = self.t.matmul(&a);
         self.q.matmul(&b)
     }
+
+    /// Exact diagonal in O(nr²): `diag_i = q_i T q_iᵀ` per row, via
+    /// `B = Q T` once and then row dot-products.
+    pub fn diag(&self) -> Vec<f64> {
+        let b = self.q.matmul(&self.t);
+        (0..self.q.rows)
+            .map(|i| {
+                self.q
+                    .row(i)
+                    .iter()
+                    .zip(b.row(i))
+                    .map(|(qi, bi)| qi * bi)
+                    .sum()
+            })
+            .collect()
+    }
 }
 
 impl LinearOp for LanczosFactor {
@@ -69,6 +85,10 @@ impl LinearOp for LanczosFactor {
 
     fn matmat(&self, m: &Matrix) -> Matrix {
         LanczosFactor::matmat(self, m)
+    }
+
+    fn diag(&self) -> Option<Vec<f64>> {
+        Some(LanczosFactor::diag(self))
     }
 }
 
@@ -319,6 +339,13 @@ impl<'a> LinearOp for HadamardPairOp<'a> {
     fn matmat(&self, m: &Matrix) -> Matrix {
         self.backend.hadamard_pair_matmat(self.a, self.b, m)
     }
+
+    /// Hadamard products multiply diagonals elementwise.
+    fn diag(&self) -> Option<Vec<f64>> {
+        let da = LanczosFactor::diag(self.a);
+        let db = LanczosFactor::diag(self.b);
+        Some(da.iter().zip(&db).map(|(x, y)| x * y).collect())
+    }
 }
 
 #[cfg(test)]
@@ -360,6 +387,24 @@ mod tests {
         let got = f.matvec(&v);
         let want = f.to_dense().matvec(&v);
         assert!(rel_err(&got, &want) < 1e-10);
+    }
+
+    #[test]
+    fn factor_and_pair_diag_match_dense() {
+        let a = random_factor(30, 5, 11);
+        let b = random_factor(30, 4, 12);
+        let da = LinearOp::diag(&a).unwrap();
+        let want_a = a.to_dense().diagonal();
+        for (g, w) in da.iter().zip(&want_a) {
+            assert!((g - w).abs() < 1e-10);
+        }
+        let backend = NativeBackend;
+        let op = HadamardPairOp { a: &a, b: &b, backend: &backend };
+        let dab = op.diag().unwrap();
+        let want = a.to_dense().hadamard(&b.to_dense()).diagonal();
+        for (g, w) in dab.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-10);
+        }
     }
 
     #[test]

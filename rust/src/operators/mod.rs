@@ -66,6 +66,35 @@ pub trait LinearOp: Send + Sync {
         matmat_via_matvec(self, m)
     }
 
+    /// Column j, `K e_j` — the column-sampling primitive preconditioner
+    /// setup uses ([`crate::solvers::precond`]: a rank-k pivoted Cholesky
+    /// fetches k columns). The default pays one [`matvec`] on a unit
+    /// vector, so sampling k columns costs k MVMs; operators with random
+    /// access (dense) override it.
+    ///
+    /// [`matvec`]: LinearOp::matvec
+    fn col_at(&self, j: usize) -> Vec<f64> {
+        let n = self.dim();
+        assert!(j < n, "column index {j} out of range for dim {n}");
+        let mut e = vec![0.0; n];
+        e[j] = 1.0;
+        self.matvec(&e)
+    }
+
+    /// The operator's diagonal, when the structure makes it cheap —
+    /// `None` otherwise (never approximate: callers fall back rather
+    /// than silently precondition with a wrong diagonal). Drives the
+    /// Jacobi preconditioner and the adaptive pivot selection of the
+    /// pivoted-Cholesky preconditioner.
+    ///
+    /// Wrappers compose (`ShiftedOp`/`ScaledOp`/`AffineOp`/`SumOp`);
+    /// structured operators whose diagonal is a per-row stencil/factor
+    /// contraction (SKI, Kronecker-SKI, Lanczos factors, SKIP, task)
+    /// override it with O(n·small) computations.
+    fn diag(&self) -> Option<Vec<f64>> {
+        None
+    }
+
     /// Materialize densely (tests / small problems only).
     fn to_dense(&self) -> Matrix {
         let n = self.dim();
@@ -111,6 +140,15 @@ impl LinearOp for DenseOp {
         self.0.matmul(m)
     }
 
+    /// Random access: no MVM needed.
+    fn col_at(&self, j: usize) -> Vec<f64> {
+        self.0.col(j)
+    }
+
+    fn diag(&self) -> Option<Vec<f64>> {
+        Some(self.0.diagonal())
+    }
+
     fn to_dense(&self) -> Matrix {
         self.0.clone()
     }
@@ -139,6 +177,16 @@ impl LinearOp for DiagOp {
             }
         }
         out
+    }
+
+    fn col_at(&self, j: usize) -> Vec<f64> {
+        let mut e = vec![0.0; self.0.len()];
+        e[j] = self.0[j];
+        e
+    }
+
+    fn diag(&self) -> Option<Vec<f64>> {
+        Some(self.0.clone())
     }
 }
 
@@ -175,6 +223,20 @@ impl<'a> LinearOp for ShiftedOp<'a> {
         }
         out
     }
+
+    fn col_at(&self, j: usize) -> Vec<f64> {
+        let mut c = self.inner.col_at(j);
+        c[j] += self.shift;
+        c
+    }
+
+    fn diag(&self) -> Option<Vec<f64>> {
+        let mut d = self.inner.diag()?;
+        for v in d.iter_mut() {
+            *v += self.shift;
+        }
+        Some(d)
+    }
 }
 
 /// `c · A`.
@@ -203,6 +265,22 @@ impl<'a> LinearOp for ScaledOp<'a> {
             *o *= self.scale;
         }
         out
+    }
+
+    fn col_at(&self, j: usize) -> Vec<f64> {
+        let mut c = self.inner.col_at(j);
+        for v in c.iter_mut() {
+            *v *= self.scale;
+        }
+        c
+    }
+
+    fn diag(&self) -> Option<Vec<f64>> {
+        let mut d = self.inner.diag()?;
+        for v in d.iter_mut() {
+            *v *= self.scale;
+        }
+        Some(d)
     }
 }
 
@@ -236,6 +314,26 @@ impl LinearOp for AffineOp {
             *o = self.scale * *o + self.shift * x;
         }
         out
+    }
+
+    fn col_at(&self, j: usize) -> Vec<f64> {
+        let mut c = self.inner.col_at(j);
+        for v in c.iter_mut() {
+            *v *= self.scale;
+        }
+        c[j] += self.shift;
+        c
+    }
+
+    /// Composes from the inner diagonal: `scale·diag(A) + shift` — this is
+    /// what hands the pivoted-Cholesky preconditioner its adaptive pivots
+    /// on the covariance `K̂ = σ_f²K + σ_n²I`.
+    fn diag(&self) -> Option<Vec<f64>> {
+        let mut d = self.inner.diag()?;
+        for v in d.iter_mut() {
+            *v = self.scale * *v + self.shift;
+        }
+        Some(d)
     }
 }
 
@@ -278,6 +376,28 @@ impl LinearOp for SumOp {
             }
         }
         out
+    }
+
+    fn col_at(&self, j: usize) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        for t in &self.terms {
+            for (o, x) in out.iter_mut().zip(t.col_at(j)) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    /// Available iff every summand's diagonal is.
+    fn diag(&self) -> Option<Vec<f64>> {
+        let mut out = vec![0.0; self.dim()];
+        for t in &self.terms {
+            let d = t.diag()?;
+            for (o, x) in out.iter_mut().zip(d) {
+                *o += x;
+            }
+        }
+        Some(out)
     }
 }
 
@@ -358,6 +478,52 @@ mod tests {
             .matmat(&block)
             .max_abs_diff(&matmat_via_matvec(&diag, &block))
             < 1e-14);
+    }
+
+    #[test]
+    fn diag_and_col_accessors_match_dense() {
+        let base = Matrix::from_vec(3, 3, vec![2., 1., 0., 1., 3., 0.5, 0., 0.5, 4.]);
+        let inner = DenseOp(base.clone());
+        let affine = AffineOp {
+            inner: Box::new(DenseOp(base.clone())),
+            scale: 2.0,
+            shift: 0.25,
+        };
+        let shifted = ShiftedOp::new(&inner, 0.7);
+        let scaled = ScaledOp { inner: &inner, scale: -1.5 };
+        let sum = SumOp {
+            terms: vec![
+                Box::new(DenseOp(base.clone())),
+                Box::new(DiagOp(vec![1.0, 2.0, 3.0])),
+            ],
+        };
+        let ops: Vec<&dyn LinearOp> = vec![&inner, &affine, &shifted, &scaled, &sum];
+        for op in ops {
+            let dense = op.to_dense();
+            let diag = op.diag().expect("wrapper diagonals compose");
+            for i in 0..3 {
+                assert!((diag[i] - dense.get(i, i)).abs() < 1e-12);
+            }
+            for j in 0..3 {
+                let col = op.col_at(j);
+                for i in 0..3 {
+                    assert!((col[i] - dense.get(i, j)).abs() < 1e-12);
+                }
+            }
+        }
+        // An operator without structure reports no diagonal rather than
+        // guessing one.
+        struct Opaque;
+        impl LinearOp for Opaque {
+            fn dim(&self) -> usize {
+                2
+            }
+            fn matvec(&self, v: &[f64]) -> Vec<f64> {
+                v.to_vec()
+            }
+        }
+        assert!(Opaque.diag().is_none());
+        assert_eq!(Opaque.col_at(1), vec![0.0, 1.0]);
     }
 
     #[test]

@@ -103,6 +103,19 @@ impl LinearOp for TaskOp {
         }
         out
     }
+
+    /// Exact diagonal in O(s·q + n): `diag_i = ‖b_{tᵢ}‖² + d_{tᵢ}`
+    /// depends only on observation i's task.
+    fn diag(&self) -> Option<Vec<f64>> {
+        let s = self.kernel.num_tasks();
+        let per_task: Vec<f64> = (0..s)
+            .map(|task| {
+                let row = self.kernel.b.row(task);
+                row.iter().map(|v| v * v).sum::<f64>() + self.kernel.diag[task]
+            })
+            .collect();
+        Some(self.task_of.iter().map(|&t| per_task[t]).collect())
+    }
 }
 
 #[cfg(test)]
@@ -127,6 +140,15 @@ mod tests {
         let mut rng = Rng::new(2);
         let v = rng.normal_vec(50);
         assert!(rel_err(&op.matvec(&v), &dense.matvec(&v)) < 1e-12);
+    }
+
+    #[test]
+    fn diag_matches_dense() {
+        let (op, dense) = setup(50, 7, 2, 5);
+        let got = op.diag().unwrap();
+        for (i, g) in got.iter().enumerate() {
+            assert!((g - dense.get(i, i)).abs() < 1e-12);
+        }
     }
 
     #[test]

@@ -65,6 +65,8 @@ use crate::gp::{ExactGp, GpHypers, MvmGp, MvmVariant};
 use crate::grid::{build_grid, Grid1d, GridSpec, InducingGrid, RectilinearGrid};
 use crate::kernels::ProductKernel;
 use crate::linalg::{Cholesky, Matrix};
+use crate::operators::AffineOp;
+use crate::solvers::{build_preconditioner, cg_solve_with, CgConfig, PrecondSpec};
 use crate::{Error, Result};
 use std::fs;
 use std::io::Write;
@@ -180,6 +182,15 @@ pub struct SnapshotConfig {
     pub variance: VarianceMode,
     /// Refuse grids larger than this many stored cells.
     pub max_grid_cells: usize,
+    /// Preconditioner for any solve the snapshot build itself performs —
+    /// today the α = K̂⁻¹y recompute when [`ModelSnapshot::from_mvm`] is
+    /// given a model with externally-set hypers and no cached α
+    /// (`--precond` on the `skip-gp snapshot` CLI feeds both this and the
+    /// training config). `None` (the default) inherits the model's own
+    /// `cfg.cg.precond`; `Some(spec)` forces `spec` — including
+    /// `Some(PrecondSpec::None)` for an explicitly unpreconditioned
+    /// solve.
+    pub precond: Option<PrecondSpec>,
 }
 
 impl Default for SnapshotConfig {
@@ -188,6 +199,7 @@ impl Default for SnapshotConfig {
             grid: None,
             variance: VarianceMode::Lanczos(64),
             max_grid_cells: DEFAULT_MAX_GRID_CELLS,
+            precond: None,
         }
     }
 }
@@ -212,12 +224,50 @@ pub struct ModelSnapshot {
 
 impl ModelSnapshot {
     /// Freeze a trained [`MvmGp`] (SKIP or KISS-GP, dense or sparse
-    /// grid). Requires `fit`/`refresh` to have produced the cached α.
+    /// grid). A model with a cached α (`fit`/`refresh` ran) is frozen
+    /// as-is; one without — externally-set hypers, no refresh — gets its
+    /// α = K̂⁻¹y computed here with a refresh-grade operator and the
+    /// preconditioner [`SnapshotConfig::precond`] describes.
     pub fn from_mvm(gp: &MvmGp, cfg: &SnapshotConfig) -> Result<Self> {
-        let alpha = gp
-            .alpha()
-            .ok_or_else(|| Error::Snapshot("model has no cached α — call fit/refresh".into()))?
-            .to_vec();
+        // Refresh-grade operator, built lazily at most once and shared by
+        // the α recompute and the Lanczos variance factor.
+        let mut built: Option<AffineOp> = None;
+        let build = |built: &mut Option<AffineOp>| -> Result<()> {
+            if built.is_none() {
+                *built = Some(gp.build_operator_with_rank(
+                    &gp.hypers,
+                    gp.cfg.seed,
+                    gp.refresh_grade_rank(),
+                )?);
+            }
+            Ok(())
+        };
+        let alpha = match gp.alpha() {
+            Some(a) => a.to_vec(),
+            None => {
+                build(&mut built)?;
+                let op = built.as_ref().expect("just built");
+                // An explicit snapshot-level spec wins; the default (None)
+                // inherits whatever preconditioner the model itself was
+                // configured to solve with, so a library caller doesn't
+                // silently lose preconditioning the CLI would have kept.
+                let spec = cfg.precond.unwrap_or(gp.cfg.cg.precond);
+                let pre = build_preconditioner(op, Some(gp.hypers.sn2()), spec);
+                let cg = CgConfig {
+                    max_iters: gp.cfg.cg.max_iters.max(200),
+                    ..gp.cfg.cg
+                };
+                let sol = cg_solve_with(op, &gp.ys, pre.as_ref(), None, cg);
+                if !sol.converged {
+                    return Err(Error::Snapshot(format!(
+                        "α solve did not converge (rel residual {:.2e}) — raise \
+                         cg.max_iters or use --precond rank:K",
+                        sol.rel_residual
+                    )));
+                }
+                sol.x
+            }
+        };
         let d = gp.xs.cols;
         let spec = resolve_serving_spec(cfg, d, gp.xs.rows, &gp.cfg.grid)?;
         let grid = build_grid(&gp.xs, &spec)?;
@@ -233,16 +283,11 @@ impl ModelSnapshot {
             VarianceMode::Lanczos(rank) => {
                 // High-accuracy operator, same grade as the α refresh —
                 // reuse the decomposition `refresh` cached when possible.
-                let built;
                 let op = match gp.refresh_operator() {
                     Some(op) => op,
                     None => {
-                        built = gp.build_operator_with_rank(
-                            &gp.hypers,
-                            gp.cfg.seed,
-                            gp.refresh_grade_rank(),
-                        )?;
-                        &built
+                        build(&mut built)?;
+                        built.as_ref().expect("just built")
                     }
                 };
                 Some(inverse_root_lanczos(op, &gp.ys, *rank)?)
@@ -686,6 +731,46 @@ mod tests {
     }
 
     #[test]
+    fn from_mvm_without_alpha_solves_for_it() {
+        use crate::gp::{MvmGp, MvmGpConfig};
+        let mut rng = Rng::new(11);
+        let xs = Matrix::from_fn(80, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+        let ys: Vec<f64> =
+            (0..80).map(|i| xs.get(i, 0).sin() + 0.01 * rng.normal()).collect();
+        let h = GpHypers::new(0.8, 1.0, 0.05);
+        let cfg = MvmGpConfig {
+            grid: GridSpec::uniform(32),
+            rank: 30,
+            ..Default::default()
+        };
+        let mut trained = MvmGp::new(xs.clone(), ys.clone(), h, cfg.clone());
+        trained.refresh().unwrap();
+        let snap_a = ModelSnapshot::from_mvm(
+            &trained,
+            &SnapshotConfig { variance: VarianceMode::None, ..Default::default() },
+        )
+        .unwrap();
+        // Same model, hypers set externally, never refreshed: the build
+        // computes α itself (preconditioned), instead of erroring.
+        let cold = MvmGp::new(xs, ys, h, cfg);
+        let snap_b = ModelSnapshot::from_mvm(
+            &cold,
+            &SnapshotConfig {
+                variance: VarianceMode::None,
+                precond: Some(PrecondSpec::PivChol { rank: 25 }),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let xt = Matrix::from_fn(20, 2, |_, _| rng.uniform_in(-0.8, 0.8));
+        let pa = snap_a.cache.predict_mean(&xt);
+        let pb = snap_b.cache.predict_mean(&xt);
+        for (a, b) in pa.iter().zip(&pb) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
     fn corruption_detected() {
         let snap = small_snapshot(2);
         let mut bytes = snap.to_bytes();
@@ -726,6 +811,7 @@ mod tests {
                 grid: Some(GridSpec::uniform(64)),
                 variance: VarianceMode::None,
                 max_grid_cells: 1000,
+                ..Default::default()
             },
         )
         .unwrap_err();
@@ -747,6 +833,7 @@ mod tests {
                 grid: None,
                 variance: VarianceMode::None,
                 max_grid_cells: 20_000,
+                ..Default::default()
             },
         )
         .unwrap();

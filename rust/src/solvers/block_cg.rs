@@ -1,19 +1,25 @@
-//! Block conjugate gradients: solve `A X = B` for t right-hand sides with
-//! one operator traversal per iteration.
+//! Block (preconditioned) conjugate gradients: solve `A X = B` for t
+//! right-hand sides with one operator traversal per iteration.
 //!
 //! The paper's inference loop needs many simultaneous solves against the
 //! same `K̂` — the predictive solve `α = K̂⁻¹y` next to the Hutchinson
 //! trace probes `K̂⁻¹zᵢ` of the gradient (§2.2), or a batch of test-time
 //! solves. Serial CG pays the operator once *per RHS per iteration*; for
 //! SKIP that is t separate O(r²n) Lemma-3.1 contractions whose memory
-//! traffic dominates. This solver runs the t standard CG recurrences in
-//! lockstep and fuses their MVMs into a single [`LinearOp::matmat`] call,
-//! so the structured operator amortizes its traversal across the block
-//! (fused contraction, paired FFTs, shared stencil decode — see each
-//! operator's `matmat`).
+//! traffic dominates. This solver runs the t standard PCG recurrences in
+//! lockstep and fuses their MVMs into a single [`LinearOp::matmat`] call
+//! (and their preconditioner applications into a single
+//! [`Preconditioner::apply_block`]), so the structured operator amortizes
+//! its traversal across the block (fused contraction, paired FFTs, shared
+//! stencil decode — see each operator's `matmat`).
 //!
 //! Columns are tracked independently: each has its own α/β scalars,
-//! residual, and iteration count, and a column that converges (or hits a
+//! residual, and iteration count, each converges against **its own**
+//! right-hand side's preconditioned norm
+//! (`‖r_j‖_{M⁻¹} ≤ tol·‖b_j‖_{M⁻¹}` — never a shared block norm, so a
+//! small-norm column next to a large-norm one is still solved to its own
+//! relative accuracy; pinned by the mixed-norm regression test in
+//! `rust/tests/solver_props.rs`), and a column that converges (or hits a
 //! non-PD breakdown) is frozen and dropped from subsequent block MVMs.
 //! With an exact `matmat` (one that matches column-wise `matvec`, which
 //! every fast path in this crate does to rounding), the per-column
@@ -36,8 +42,10 @@
 //! ```
 //!
 //! [`cg_solve`]: super::cg::cg_solve
+//! [`Preconditioner::apply_block`]: super::precond::Preconditioner::apply_block
 
 use super::cg::CgConfig;
+use super::precond::{build_preconditioner, Preconditioner};
 use crate::linalg::{axpy, dot, norm2, Matrix};
 use crate::operators::LinearOp;
 
@@ -46,8 +54,11 @@ use crate::operators::LinearOp;
 pub struct BlockCgColumn {
     /// Iterations this column ran before converging or freezing.
     pub iters: usize,
-    /// Final relative residual ‖r‖/‖b‖.
+    /// Final relative preconditioned residual `‖r_j‖_{M⁻¹}/‖b_j‖_{M⁻¹}`
+    /// (= `‖r_j‖/‖b_j‖` unpreconditioned).
     pub rel_residual: f64,
+    /// Whether this column met [`CgConfig::tol`] against its own
+    /// right-hand side's norm.
     pub converged: bool,
 }
 
@@ -60,7 +71,8 @@ pub struct BlockCgSolution {
     pub columns: Vec<BlockCgColumn>,
     /// Number of block MVMs ([`LinearOp::matmat`] calls) performed — the
     /// batched engine's cost unit; a serial loop would have paid
-    /// `Σ_j iters_j` single MVMs instead.
+    /// `Σ_j iters_j` single MVMs instead. Includes the one extra block
+    /// MVM a warm start spends on its initial residual.
     pub matmats: usize,
 }
 
@@ -79,32 +91,119 @@ impl BlockCgSolution {
     }
 }
 
-/// Solve `A X = B` by conjugate gradients, all columns of `B` at once.
+/// Solve `A X = B` by conjugate gradients, all columns of `B` at once,
+/// building the preconditioner [`CgConfig::precond`] describes.
 ///
-/// Runs the standard CG recurrence per column with the block's MVMs fused
-/// into one `matmat` per iteration; converged columns freeze and leave
-/// the block. See the module docs for the equivalence guarantee against
-/// [`cg_solve`](super::cg::cg_solve).
+/// Runs the standard PCG recurrence per column with the block's MVMs
+/// fused into one `matmat` per iteration; converged columns freeze and
+/// leave the block. See the module docs for the equivalence guarantee
+/// against [`cg_solve`](super::cg::cg_solve), and
+/// [`block_cg_solve_with`] for amortized preconditioners and warm
+/// starts.
 pub fn block_cg_solve(a: &dyn LinearOp, b: &Matrix, cfg: CgConfig) -> BlockCgSolution {
+    let m = build_preconditioner(a, None, cfg.precond);
+    block_cg_solve_with(a, b, m.as_ref(), None, cfg)
+}
+
+/// Block-PCG with an explicit preconditioner and optional warm-start
+/// block `x0` (seeding semantics per column as in
+/// [`cg_solve_with`](super::cg::cg_solve_with): a column whose seed
+/// already meets the tolerance is returned bitwise with 0 iterations).
+/// Zero columns of `x0` are cold starts — they cost nothing and don't
+/// count as seeded — so a caller can seed one column of a wide block.
+/// An `x0` whose shape does not match `b` is ignored.
+pub fn block_cg_solve_with(
+    a: &dyn LinearOp,
+    b: &Matrix,
+    m: &dyn Preconditioner,
+    x0: Option<&Matrix>,
+    cfg: CgConfig,
+) -> BlockCgSolution {
     let n = a.dim();
     assert_eq!(b.rows, n, "block_cg: rhs row count must match operator dim");
+    assert_eq!(m.dim(), n, "block_cg: preconditioner dim must match operator");
+    let solver = if m.name() == "identity" { "block_cg" } else { "block_pcg" };
     let t = b.cols;
+    let x0 = x0.filter(|x| x.rows == n && x.cols == t);
+    let g = crate::coordinator::metrics::global();
+    let mut matmats = 0usize;
+
+    let nb: Vec<f64> = (0..t).map(|j| norm2(&b.col(j))).collect();
+    // Initial iterates and residuals. A zero RHS is solved by x = 0
+    // immediately (whatever the seed), and a zero seed column IS a cold
+    // start (r₀ = b bitwise) — only the genuinely seeded (nonzero)
+    // columns pay for the initial residual, packed into one block MVM of
+    // exactly their width (mll_grad seeds 1 y-column next to p cold
+    // probes; the probes must not widen the traversal or the metrics).
     let mut xcols: Vec<Vec<f64>> = vec![vec![0.0; n]; t];
     let mut r: Vec<Vec<f64>> = (0..t).map(|j| b.col(j)).collect();
-    let mut p = r.clone();
-    let nb: Vec<f64> = r.iter().map(|c| norm2(c)).collect();
-    let mut rs_old: Vec<f64> = r.iter().map(|c| dot(c, c)).collect();
-    let mut columns: Vec<BlockCgColumn> = nb
-        .iter()
-        .map(|&nbj| BlockCgColumn {
-            iters: 0,
-            rel_residual: 0.0,
-            // A zero RHS is solved by x = 0 immediately.
-            converged: nbj == 0.0,
+    // The single source of truth for which columns are genuinely seeded:
+    // nonzero RHS *and* nonzero seed column.
+    let seeded_cols: Vec<usize> = match x0 {
+        Some(x0) => (0..t)
+            .filter(|&j| nb[j] > 0.0 && norm2(&x0.col(j)) > 0.0)
+            .collect(),
+        None => Vec::new(),
+    };
+    let mut is_seeded = vec![false; t];
+    for &j in &seeded_cols {
+        is_seeded[j] = true;
+    }
+    if !seeded_cols.is_empty() {
+        let x0 = x0.expect("seeded columns imply a seed block");
+        let mut xk = Matrix::zeros(n, seeded_cols.len());
+        for (c, &j) in seeded_cols.iter().enumerate() {
+            xk.set_col(c, &x0.col(j));
+        }
+        let axk = a.matmat(&xk);
+        matmats += 1;
+        g.incr("solver.warm.seeded", seeded_cols.len() as u64);
+        for (c, &j) in seeded_cols.iter().enumerate() {
+            xcols[j] = x0.col(j);
+            for (ri, ai) in r[j].iter_mut().zip(&axk.col(c)) {
+                *ri -= ai;
+            }
+        }
+    }
+    // Preconditioned residuals and per-column reference norms
+    // ‖b_j‖_{M⁻¹} — one blocked application each (cold columns reuse
+    // their initial rz, which already is bᵀM⁻¹b).
+    let mut z: Vec<Vec<f64>> = {
+        let mut rb = Matrix::zeros(n, t);
+        for (j, rj) in r.iter().enumerate() {
+            rb.set_col(j, rj);
+        }
+        let zb = m.apply_block(&rb);
+        (0..t).map(|j| zb.col(j)).collect()
+    };
+    let mut rz: Vec<f64> = (0..t).map(|j| dot(&r[j], &z[j]).max(0.0)).collect();
+    // Cold columns already have ‖b_j‖²_{M⁻¹} in rz (r₀ = b); only the
+    // seeded ones need an extra application, packed to their width.
+    let mut bnorm_m: Vec<f64> = rz.iter().map(|v| v.sqrt()).collect();
+    if !seeded_cols.is_empty() {
+        let mut bk = Matrix::zeros(n, seeded_cols.len());
+        for (c, &j) in seeded_cols.iter().enumerate() {
+            bk.set_col(c, &b.col(j));
+        }
+        let zb = m.apply_block(&bk);
+        for (c, &j) in seeded_cols.iter().enumerate() {
+            bnorm_m[j] = dot(&b.col(j), &zb.col(c)).max(0.0).sqrt();
+        }
+    }
+    let bnorm_m = bnorm_m;
+
+    let mut columns: Vec<BlockCgColumn> = (0..t)
+        .map(|j| {
+            let done = nb[j] == 0.0 || rz[j].sqrt() <= cfg.tol * bnorm_m[j];
+            if done && is_seeded[j] {
+                g.incr("solver.warm.hit", 1);
+            }
+            let rel = if nb[j] > 0.0 { rz[j].sqrt() / bnorm_m[j] } else { 0.0 };
+            BlockCgColumn { iters: 0, rel_residual: rel, converged: done }
         })
         .collect();
-    let mut active: Vec<usize> = (0..t).filter(|&j| nb[j] > 0.0).collect();
-    let mut matmats = 0usize;
+    let mut p = z.clone();
+    let mut active: Vec<usize> = (0..t).filter(|&j| !columns[j].converged).collect();
 
     for _ in 0..cfg.max_iters {
         if active.is_empty() {
@@ -118,7 +217,8 @@ pub fn block_cg_solve(a: &dyn LinearOp, b: &Matrix, cfg: CgConfig) -> BlockCgSol
         let ap = a.matmat(&pk);
         matmats += 1;
 
-        let mut still = Vec::with_capacity(active.len());
+        // α/x/r updates per active column.
+        let mut advanced = Vec::with_capacity(active.len());
         for (c, &j) in active.iter().enumerate() {
             let apj = ap.col(c);
             let col = &mut columns[j];
@@ -127,32 +227,46 @@ pub fn block_cg_solve(a: &dyn LinearOp, b: &Matrix, cfg: CgConfig) -> BlockCgSol
             if pap <= 0.0 {
                 // Not PD to working precision — freeze with the current
                 // iterate (mirrors cg_solve's bail-out).
-                col.rel_residual = rs_old[j].sqrt() / nb[j];
+                col.rel_residual = rz[j].sqrt() / bnorm_m[j];
                 col.converged = col.rel_residual <= cfg.tol;
                 continue;
             }
-            let alpha = rs_old[j] / pap;
+            let alpha = rz[j] / pap;
             axpy(alpha, &p[j], &mut xcols[j]);
             axpy(-alpha, &apj, &mut r[j]);
-            let rs_new = dot(&r[j], &r[j]);
-            if rs_new.sqrt() <= cfg.tol * nb[j] {
-                col.rel_residual = rs_new.sqrt() / nb[j];
+            advanced.push(j);
+        }
+        // One blocked preconditioner application for the advanced columns.
+        let mut rk = Matrix::zeros(n, advanced.len());
+        for (c, &j) in advanced.iter().enumerate() {
+            rk.set_col(c, &r[j]);
+        }
+        let zk = m.apply_block(&rk);
+        let mut still = Vec::with_capacity(advanced.len());
+        for (c, &j) in advanced.iter().enumerate() {
+            z[j] = zk.col(c);
+            let rz_new = dot(&r[j], &z[j]).max(0.0);
+            let col = &mut columns[j];
+            // Convergence against this column's own right-hand side —
+            // never the norm of the whole block.
+            if rz_new.sqrt() <= cfg.tol * bnorm_m[j] {
+                col.rel_residual = rz_new.sqrt() / bnorm_m[j];
                 col.converged = true;
-                rs_old[j] = rs_new;
+                rz[j] = rz_new;
                 continue;
             }
-            let beta = rs_new / rs_old[j];
-            for (pi, &ri) in p[j].iter_mut().zip(&r[j]) {
-                *pi = ri + beta * *pi;
+            let beta = rz_new / rz[j];
+            for (pi, &zi) in p[j].iter_mut().zip(&z[j]) {
+                *pi = zi + beta * *pi;
             }
-            rs_old[j] = rs_new;
+            rz[j] = rz_new;
             still.push(j);
         }
         active = still;
     }
     // Columns that ran out of iterations: report where they stopped.
     for &j in &active {
-        columns[j].rel_residual = rs_old[j].sqrt() / nb[j];
+        columns[j].rel_residual = rz[j].sqrt() / bnorm_m[j];
         columns[j].converged = columns[j].rel_residual <= cfg.tol;
     }
 
@@ -163,9 +277,9 @@ pub fn block_cg_solve(a: &dyn LinearOp, b: &Matrix, cfg: CgConfig) -> BlockCgSol
     // Per-column solver accounting into the global registry (iterations +
     // convergence failures), plus the block's fused-MVM count.
     for col in &columns {
-        crate::coordinator::metrics::record_solver("block_cg", col.iters, col.converged);
+        crate::coordinator::metrics::record_solver(solver, col.iters, col.converged);
     }
-    crate::coordinator::metrics::global().observe("solver.block_cg.matmats", matmats as u64);
+    g.observe(&format!("solver.{solver}.matmats"), matmats as u64);
     BlockCgSolution { x, columns, matmats }
 }
 
@@ -174,6 +288,7 @@ mod tests {
     use super::*;
     use crate::operators::DenseOp;
     use crate::solvers::cg::cg_solve;
+    use crate::solvers::precond::{IdentityPrecond, PivotedCholeskyPrecond};
     use crate::util::{rel_err, Rng};
 
     fn random_spd(n: usize, seed: u64) -> Matrix {
@@ -250,7 +365,8 @@ mod tests {
         let op = DenseOp(dense);
         let mut rng = Rng::new(6);
         let b = Matrix::from_fn(30, 2, |_, _| rng.normal());
-        let sol = block_cg_solve(&op, &b, CgConfig { max_iters: 2, tol: 1e-14 });
+        let sol =
+            block_cg_solve(&op, &b, CgConfig { max_iters: 2, tol: 1e-14, ..Default::default() });
         for c in &sol.columns {
             assert_eq!(c.iters, 2);
             assert!(!c.converged);
@@ -264,5 +380,49 @@ mod tests {
         let sol = block_cg_solve(&op, &Matrix::zeros(4, 0), CgConfig::default());
         assert_eq!(sol.x.cols, 0);
         assert_eq!(sol.matmats, 0);
+    }
+
+    #[test]
+    fn preconditioned_block_matches_plain_block() {
+        let n = 60;
+        let mut rng = Rng::new(7);
+        let gmat = Matrix::from_fn(n, 8, |_, _| rng.normal());
+        let mut dense = gmat.matmul_t(&gmat);
+        let noise = 1e-2;
+        dense.add_diag(noise);
+        let op = DenseOp(dense);
+        let b = Matrix::from_fn(n, 3, |_, _| rng.normal());
+        let cfg = CgConfig { max_iters: 400, tol: 1e-10, ..Default::default() };
+        let plain = block_cg_solve(&op, &b, cfg);
+        let m = PivotedCholeskyPrecond::build(&op, 10, Some(noise)).unwrap();
+        let pre = block_cg_solve_with(&op, &b, &m, None, cfg);
+        assert!(plain.all_converged() && pre.all_converged());
+        for j in 0..3 {
+            assert!(rel_err(&pre.x.col(j), &plain.x.col(j)) < 1e-8);
+            assert!(pre.columns[j].iters <= plain.columns[j].iters);
+        }
+    }
+
+    #[test]
+    fn warm_started_block_returns_seeds_bitwise() {
+        let dense = random_spd(20, 8);
+        let op = DenseOp(dense);
+        let mut rng = Rng::new(9);
+        let b = Matrix::from_fn(20, 3, |_, _| rng.normal());
+        // Seed from a solve two digits tighter than the warm solve's
+        // tolerance, so every seed sits squarely inside it.
+        let cold = block_cg_solve(
+            &op,
+            &b,
+            CgConfig { max_iters: 500, tol: 1e-10, ..Default::default() },
+        );
+        assert!(cold.all_converged());
+        let m = IdentityPrecond::new(20);
+        let warm = block_cg_solve_with(&op, &b, &m, Some(&cold.x), CgConfig::default());
+        assert!(warm.all_converged());
+        assert_eq!(warm.x.data, cold.x.data);
+        assert!(warm.columns.iter().all(|c| c.iters == 0));
+        // Only the one initial-residual block MVM was paid.
+        assert_eq!(warm.matmats, 1);
     }
 }

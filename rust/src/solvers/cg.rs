@@ -1,55 +1,179 @@
-//! Conjugate gradients (paper §2.2).
+//! (Preconditioned) conjugate gradients (paper §2.2; Yadav et al. 2021).
 //!
 //! Solves `A x = b` for symmetric positive-definite `A` using only MVMs —
 //! the core of MVM-based GP inference. Allocation-free inner loop: all
 //! work buffers are allocated once up front.
+//!
+//! Every solve is *preconditioned* CG under the hood. The preconditioner
+//! comes from [`CgConfig::precond`] (built per solve by
+//! [`build_preconditioner`]) or, for callers that amortize setup across
+//! several solves against one operator, is passed explicitly to
+//! [`cg_solve_with`] together with an optional warm-start iterate `x0`.
+//! With the identity preconditioner and no warm start the recurrence —
+//! every float operation of it — is the classic unpreconditioned CG this
+//! module always ran.
+//!
+//! Convergence is judged on the **preconditioned residual norm**:
+//!
+//! ```text
+//! ‖r_i‖_{M⁻¹} ≤ tol · ‖b‖_{M⁻¹},   ‖v‖_{M⁻¹} = √(vᵀ M⁻¹ v)
+//! ```
+//!
+//! which is the norm PCG minimizes in and costs nothing extra (the
+//! recurrence already computes `rᵀz`). For `M = I` it is exactly the
+//! historical `‖r‖/‖b‖ ≤ tol` criterion.
+//!
+//! ```
+//! use skip_gp::linalg::Matrix;
+//! use skip_gp::operators::DenseOp;
+//! use skip_gp::solvers::{
+//!     build_preconditioner, cg_solve, cg_solve_with, CgConfig, PrecondSpec,
+//! };
+//!
+//! let a = DenseOp(Matrix::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]));
+//! let b = vec![1.0, 2.0];
+//!
+//! // Plain CG…
+//! let plain = cg_solve(&a, &b, CgConfig::default());
+//! // …and PCG with a rank-2 pivoted-Cholesky preconditioner: same
+//! // solution (preconditioning never changes the answer), fewer
+//! // iterations on ill-conditioned systems.
+//! let m = build_preconditioner(&a, None, PrecondSpec::PivChol { rank: 2 });
+//! let pre = cg_solve_with(&a, &b, m.as_ref(), None, CgConfig::default());
+//! assert!(plain.converged && pre.converged);
+//! assert!(pre.iters <= plain.iters);
+//! assert!(plain.x.iter().zip(&pre.x).all(|(u, v)| (u - v).abs() < 1e-8));
+//!
+//! // Warm start: seeding with the solved x returns it bitwise, 0 iters.
+//! let again = cg_solve_with(&a, &b, m.as_ref(), Some(&pre.x), CgConfig::default());
+//! assert_eq!(again.iters, 0);
+//! assert_eq!(again.x, pre.x);
+//! ```
 
+use super::precond::{build_preconditioner, Preconditioner, PrecondSpec};
 use crate::linalg::{axpy, dot, norm2};
 use crate::operators::LinearOp;
 
-/// CG configuration.
+/// CG configuration: iteration/tolerance budget plus the preconditioner
+/// specification threaded from `MvmGpConfig` / `SnapshotConfig` / the
+/// `--precond` CLI flag.
 #[derive(Clone, Copy, Debug)]
 pub struct CgConfig {
     /// Maximum iterations (paper: p, a small constant in practice).
     pub max_iters: usize,
-    /// Relative residual tolerance ‖r‖/‖b‖.
+    /// Relative tolerance on the preconditioned residual norm
+    /// `‖r‖_{M⁻¹}/‖b‖_{M⁻¹}` (= `‖r‖/‖b‖` unpreconditioned).
     pub tol: f64,
+    /// Which preconditioner [`cg_solve`]/[`block_cg_solve`] build for the
+    /// solve ([`PrecondSpec::None`] = classic unpreconditioned CG).
+    ///
+    /// [`block_cg_solve`]: super::block_cg::block_cg_solve
+    pub precond: PrecondSpec,
 }
 
 impl Default for CgConfig {
     fn default() -> Self {
-        CgConfig { max_iters: 200, tol: 1e-8 }
+        CgConfig { max_iters: 200, tol: 1e-8, precond: PrecondSpec::None }
     }
 }
 
 /// CG solution with convergence diagnostics.
 #[derive(Clone, Debug)]
 pub struct CgSolution {
+    /// The iterate at exit (the solution when [`converged`] is true).
+    ///
+    /// [`converged`]: CgSolution::converged
     pub x: Vec<f64>,
+    /// Iterations run (0 when the right-hand side is zero or a warm-start
+    /// seed already met the tolerance).
     pub iters: usize,
+    /// Final relative preconditioned residual `‖r‖_{M⁻¹}/‖b‖_{M⁻¹}`.
     pub rel_residual: f64,
+    /// Whether [`rel_residual`] met [`CgConfig::tol`].
+    ///
+    /// [`rel_residual`]: CgSolution::rel_residual
     pub converged: bool,
 }
 
-/// Solve `A x = b` by conjugate gradients.
+/// Solve `A x = b` by (preconditioned) conjugate gradients, building the
+/// preconditioner [`CgConfig::precond`] describes.
+///
+/// Callers that solve repeatedly against one operator should build the
+/// preconditioner once ([`build_preconditioner`]) and call
+/// [`cg_solve_with`], which also accepts a warm-start iterate.
 ///
 /// Every run records its iteration count (and any convergence failure)
-/// into the global metrics registry under `solver.cg.*`
-/// ([`crate::coordinator::metrics::record_solver`]), so session summaries
-/// can report p50/p99 solver effort.
+/// into the global metrics registry under `solver.cg.*` (`solver.pcg.*`
+/// when preconditioned; [`crate::coordinator::metrics::record_solver`]),
+/// so session summaries can report p50/p99 solver effort.
 pub fn cg_solve(a: &dyn LinearOp, b: &[f64], cfg: CgConfig) -> CgSolution {
+    let m = build_preconditioner(a, None, cfg.precond);
+    cg_solve_with(a, b, m.as_ref(), None, cfg)
+}
+
+/// Solve `A x = b` by PCG with an explicit preconditioner and optional
+/// warm start.
+///
+/// `x0` seeds the iteration: the solver starts from `r₀ = b − A x₀` (one
+/// extra MVM) instead of `b`, so a seed near the solution — the previous
+/// step's α in an optimizer loop, the pre-refresh α in a cache refresh —
+/// converges in a handful of iterations, and a seed that already meets
+/// the tolerance is returned **bitwise unchanged** with `iters == 0`.
+/// Warm starts never change the limit the iteration converges to; only
+/// where it starts.
+pub fn cg_solve_with(
+    a: &dyn LinearOp,
+    b: &[f64],
+    m: &dyn Preconditioner,
+    x0: Option<&[f64]>,
+    cfg: CgConfig,
+) -> CgSolution {
     let n = a.dim();
     assert_eq!(b.len(), n);
+    assert_eq!(m.dim(), n, "preconditioner dimension must match operator");
+    let solver = if m.name() == "identity" { "cg" } else { "pcg" };
     let nb = norm2(b);
     if nb == 0.0 {
-        crate::coordinator::metrics::record_solver("cg", 0, true);
+        crate::coordinator::metrics::record_solver(solver, 0, true);
         return CgSolution { x: vec![0.0; n], iters: 0, rel_residual: 0.0, converged: true };
     }
-    let mut x = vec![0.0; n];
-    let mut r = b.to_vec();
-    let mut p = b.to_vec();
-    let mut rs_old = dot(&r, &r);
+    // A mismatched-length seed is ignored rather than asserted: callers
+    // thread "whatever the previous solve produced" here and a stale
+    // shape just means a cold start.
+    let x0 = x0.filter(|x| x.len() == n);
+    let seeded = x0.is_some();
+    let (mut x, mut r, bnorm_m) = match x0 {
+        Some(x0) => {
+            let ax = a.matvec(x0);
+            let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+            // ‖b‖_{M⁻¹} must be computed from b itself when r₀ ≠ b.
+            let zb = m.apply(b);
+            (x0.to_vec(), r, Some(dot(b, &zb).max(0.0).sqrt()))
+        }
+        None => (vec![0.0; n], b.to_vec(), None),
+    };
+    let mut z = m.apply(&r);
+    let mut rz = dot(&r, &z).max(0.0);
+    // Cold starts have r₀ = b, so ‖b‖_{M⁻¹} is the rz just computed.
+    let bnorm_m = bnorm_m.unwrap_or_else(|| rz.sqrt());
+    let g = crate::coordinator::metrics::global();
+    if seeded {
+        g.incr("solver.warm.seeded", 1);
+    }
+    if rz.sqrt() <= cfg.tol * bnorm_m {
+        // Zero iterations: a warm seed already inside the tolerance is
+        // returned bitwise (the "no worse than what you gave me"
+        // guarantee warm-start callers rely on).
+        if seeded {
+            g.incr("solver.warm.hit", 1);
+        }
+        crate::coordinator::metrics::record_solver(solver, 0, true);
+        let rel = if bnorm_m > 0.0 { rz.sqrt() / bnorm_m } else { 0.0 };
+        return CgSolution { x, iters: 0, rel_residual: rel, converged: true };
+    }
+    let mut p = z.clone();
     let mut iters = 0;
+    let mut converged = false;
     for _ in 0..cfg.max_iters {
         iters += 1;
         let ap = a.matvec(&p);
@@ -58,31 +182,56 @@ pub fn cg_solve(a: &dyn LinearOp, b: &[f64], cfg: CgConfig) -> CgSolution {
             // Not PD to working precision — bail with current iterate.
             break;
         }
-        let alpha = rs_old / pap;
+        let alpha = rz / pap;
         axpy(alpha, &p, &mut x);
         axpy(-alpha, &ap, &mut r);
-        let rs_new = dot(&r, &r);
-        if rs_new.sqrt() <= cfg.tol * nb {
-            rs_old = rs_new;
+        z = m.apply(&r);
+        let rz_new = dot(&r, &z).max(0.0);
+        if rz_new.sqrt() <= cfg.tol * bnorm_m {
+            rz = rz_new;
+            converged = true;
             break;
         }
-        let beta = rs_new / rs_old;
-        for (pi, &ri) in p.iter_mut().zip(&r) {
-            *pi = ri + beta * *pi;
+        let beta = rz_new / rz;
+        for (pi, &zi) in p.iter_mut().zip(&z) {
+            *pi = zi + beta * *pi;
         }
-        rs_old = rs_new;
+        rz = rz_new;
     }
-    let rel = rs_old.sqrt() / nb;
-    let converged = rel <= cfg.tol;
-    crate::coordinator::metrics::record_solver("cg", iters, converged);
+    let rel = if bnorm_m > 0.0 { rz.sqrt() / bnorm_m } else { 0.0 };
+    let converged = converged || rel <= cfg.tol;
+    crate::coordinator::metrics::record_solver(solver, iters, converged);
     CgSolution { x, iters, rel_residual: rel, converged }
 }
 
 /// Solve `A X = B` for multiple right-hand sides (columns of `b_cols`),
 /// sequentially — the *serial reference* the batched engine is measured
-/// against. Production multi-RHS solves should use
-/// [`block_cg_solve`](super::block_cg::block_cg_solve), which fuses the
-/// per-iteration MVMs of all columns into one operator traversal.
+/// against, kept for tests and paired benchmarks. Production multi-RHS
+/// solves should use [`block_cg_solve`](super::block_cg::block_cg_solve),
+/// which fuses the per-iteration MVMs of all columns into one operator
+/// traversal (and takes the same preconditioner/warm-start options via
+/// [`block_cg_solve_with`](super::block_cg::block_cg_solve_with)).
+///
+/// ```
+/// use skip_gp::linalg::Matrix;
+/// use skip_gp::operators::DenseOp;
+/// use skip_gp::solvers::{block_cg_solve, cg_solve_many, CgConfig};
+///
+/// let a = DenseOp(Matrix::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]));
+/// let cols = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+/// let serial = cg_solve_many(&a, &cols, CgConfig::default());
+///
+/// // The batched engine gives the same per-column solutions with one
+/// // fused block MVM per iteration instead of one MVM per column:
+/// let mut block_b = Matrix::zeros(2, 2);
+/// for (j, c) in cols.iter().enumerate() {
+///     block_b.set_col(j, c);
+/// }
+/// let block = block_cg_solve(&a, &block_b, CgConfig::default());
+/// for (j, s) in serial.iter().enumerate() {
+///     assert!(s.x.iter().zip(&block.x.col(j)).all(|(u, v)| (u - v).abs() < 1e-10));
+/// }
+/// ```
 pub fn cg_solve_many(
     a: &dyn LinearOp,
     b_cols: &[Vec<f64>],
@@ -96,6 +245,7 @@ mod tests {
     use super::*;
     use crate::linalg::{Cholesky, Matrix};
     use crate::operators::DenseOp;
+    use crate::solvers::precond::PivotedCholeskyPrecond;
     use crate::util::{rel_err, Rng};
 
     fn random_spd(n: usize, seed: u64) -> Matrix {
@@ -143,7 +293,8 @@ mod tests {
         let op = DenseOp(dense.clone());
         let mut rng = Rng::new(4);
         let b = rng.normal_vec(n);
-        let sol = cg_solve(&op, &b, CgConfig { max_iters: n + 5, tol: 1e-12 });
+        let cfg = CgConfig { max_iters: n + 5, tol: 1e-12, ..Default::default() };
+        let sol = cg_solve(&op, &b, cfg);
         let back = dense.matvec(&sol.x);
         assert!(rel_err(&back, &b) < 1e-8);
     }
@@ -175,5 +326,61 @@ mod tests {
             assert!(sol.converged);
             assert!(rel_err(&dense.matvec(&sol.x), b) < 1e-6);
         }
+    }
+
+    #[test]
+    fn pcg_agrees_with_cg_and_iterates_less() {
+        // Low-rank + small noise: the ill-conditioned shape PCG targets.
+        let n = 120;
+        let mut rng = Rng::new(8);
+        let g = Matrix::from_fn(n, 10, |_, _| rng.normal());
+        let mut dense = g.matmul_t(&g);
+        let noise = 1e-3;
+        dense.add_diag(noise);
+        let op = DenseOp(dense);
+        let b = rng.normal_vec(n);
+        let cfg = CgConfig { max_iters: 500, tol: 1e-10, ..Default::default() };
+        let plain = cg_solve(&op, &b, cfg);
+        let m = PivotedCholeskyPrecond::build(&op, 15, Some(noise)).unwrap();
+        let pre = cg_solve_with(&op, &b, &m, None, cfg);
+        assert!(plain.converged && pre.converged);
+        assert!(rel_err(&pre.x, &plain.x) < 1e-8);
+        assert!(
+            pre.iters * 3 <= plain.iters,
+            "pcg {} vs cg {} iters",
+            pre.iters,
+            plain.iters
+        );
+    }
+
+    #[test]
+    fn warm_start_with_solution_is_bitwise_noop() {
+        let dense = random_spd(25, 9);
+        let op = DenseOp(dense);
+        let mut rng = Rng::new(10);
+        let b = rng.normal_vec(25);
+        // Seed from a solve two digits tighter than the warm solve's
+        // tolerance, so the seed sits squarely inside it.
+        let cold = cg_solve(
+            &op,
+            &b,
+            CgConfig { max_iters: 500, tol: 1e-10, ..Default::default() },
+        );
+        assert!(cold.converged);
+        let m = crate::solvers::precond::IdentityPrecond::new(25);
+        let warm = cg_solve_with(&op, &b, &m, Some(&cold.x), CgConfig::default());
+        assert_eq!(warm.iters, 0);
+        assert!(warm.converged);
+        assert_eq!(warm.x, cold.x, "seed inside tolerance must return bitwise");
+    }
+
+    #[test]
+    fn warm_start_mismatched_length_is_ignored() {
+        let op = DenseOp(Matrix::eye(6));
+        let b = vec![1.0; 6];
+        let m = crate::solvers::precond::IdentityPrecond::new(6);
+        let sol = cg_solve_with(&op, &b, &m, Some(&[1.0, 2.0]), CgConfig::default());
+        assert!(sol.converged);
+        assert!(rel_err(&sol.x, &b) < 1e-12);
     }
 }

@@ -1,12 +1,23 @@
-//! Iterative Krylov solvers: CG (single and block multi-RHS), Lanczos
-//! (single and batched-probe), stochastic Lanczos quadrature.
+//! Iterative Krylov solvers: preconditioned CG (single and block
+//! multi-RHS, with warm starts), Lanczos (single and batched-probe),
+//! stochastic Lanczos quadrature — plus the preconditioners themselves
+//! ([`precond`]: identity / Jacobi / partial pivoted Cholesky).
+//!
+//! Tuning the solvers (tolerance vs. preconditioner rank vs. warm
+//! starts, and how to read the p50/p99 solver-effort summary lines) is
+//! covered in `docs/SOLVERS.md` at the repository root.
 
 pub mod block_cg;
 pub mod cg;
 pub mod lanczos;
+pub mod precond;
 pub mod slq;
 
-pub use block_cg::{block_cg_solve, BlockCgColumn, BlockCgSolution};
-pub use cg::{cg_solve, cg_solve_many, CgConfig, CgSolution};
+pub use block_cg::{block_cg_solve, block_cg_solve_with, BlockCgColumn, BlockCgSolution};
+pub use cg::{cg_solve, cg_solve_many, cg_solve_with, CgConfig, CgSolution};
 pub use lanczos::{lanczos, lanczos_batch, LanczosResult};
+pub use precond::{
+    build_preconditioner, IdentityPrecond, JacobiPrecond, PivotedCholeskyPrecond,
+    PrecondCost, PrecondSpec, Preconditioner,
+};
 pub use slq::{hutchinson_trace_inv_prod, slq_logdet, slq_trace_fn, SlqConfig};

@@ -1,0 +1,667 @@
+//! Preconditioners for the iterative solvers (Yadav, Sheldon & Musco
+//! 2021; Gardner et al. 2018's GPyTorch practice).
+//!
+//! CG's iteration count grows with √κ(K̂), and κ explodes exactly where
+//! GP inference wants to operate: small noise σ_n² under a fast-decaying
+//! kernel spectrum. A **low-rank-plus-diagonal** preconditioner
+//! `M = L_k L_kᵀ + δ I` built from k adaptively-pivoted columns of the
+//! operator captures the dominant spectrum, so `M⁻¹K̂` has its large
+//! eigenvalues collapsed to ≈1 and PCG converges in a near-constant
+//! handful of iterations — with **zero accuracy change** (the solution of
+//! the preconditioned system is the solution of the original one).
+//!
+//! Three implementations of the [`Preconditioner`] trait:
+//!
+//! - [`IdentityPrecond`] — no-op; [`cg_solve`] with the identity runs the
+//!   bitwise-identical recurrence the unpreconditioned solver always ran.
+//! - [`JacobiPrecond`] — `M = diag(K̂)`; one elementwise multiply per
+//!   application. Useful when the diagonal varies (multi-task / sum
+//!   operators); a stationary kernel's constant diagonal makes it a no-op
+//!   up to scaling.
+//! - [`PivotedCholeskyPrecond`] — partial pivoted Cholesky
+//!   `L_k L_kᵀ ≈ K` from k greedily-chosen columns (largest residual
+//!   diagonal first), applied via the Woodbury identity in O(nk) per
+//!   vector. Setup costs k operator columns = k MVMs (cheap against the
+//!   structured operators' O(n + m log m) columns) plus the diagonal
+//!   accessor [`LinearOp::diag`] for adaptive pivot selection.
+//!
+//! Which to use: see `docs/SOLVERS.md` for the tuning guide; the short
+//! version is `rank:50` for ill-conditioned (small-σ_n²) solves, `none`
+//! for well-conditioned ones where k setup MVMs would never pay for
+//! themselves.
+//!
+//! ```
+//! use skip_gp::linalg::Matrix;
+//! use skip_gp::operators::DenseOp;
+//! use skip_gp::solvers::{build_preconditioner, Preconditioner, PrecondSpec};
+//!
+//! let a = DenseOp(Matrix::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]));
+//! let m = build_preconditioner(&a, None, PrecondSpec::PivChol { rank: 2 });
+//! // A full-rank pivoted Cholesky inverts A (up to the diagonal floor):
+//! let z = m.apply(&[4.0, 1.0]);
+//! assert!((z[0] - 1.0).abs() < 1e-6 && z[1].abs() < 1e-6);
+//! assert_eq!(m.cost().rank, 2);
+//! ```
+//!
+//! [`cg_solve`]: super::cg::cg_solve
+
+use crate::linalg::{Cholesky, Matrix};
+use crate::operators::LinearOp;
+use crate::{Error, Result};
+
+/// Which preconditioner to build for a solve — the serializable,
+/// `Copy`-able *specification* threaded through [`super::CgConfig`],
+/// `MvmGpConfig`, `SnapshotConfig`, and the `skip-gp` CLI
+/// (`--precond rank:K|jacobi|none`). The concrete [`Preconditioner`] is
+/// constructed per operator by [`build_preconditioner`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum PrecondSpec {
+    /// Unpreconditioned CG (the identity preconditioner).
+    #[default]
+    None,
+    /// Diagonal (Jacobi) scaling from [`LinearOp::diag`]; falls back to
+    /// the identity when the operator has no cheap diagonal.
+    Jacobi,
+    /// Partial pivoted Cholesky of rank ≤ `rank`, Woodbury-applied.
+    PivChol { rank: usize },
+}
+
+impl PrecondSpec {
+    /// Parse the CLI syntax: `"none"`, `"jacobi"`, or `"rank:K"`.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "none" => Ok(PrecondSpec::None),
+            "jacobi" => Ok(PrecondSpec::Jacobi),
+            _ => match s.strip_prefix("rank:").and_then(|k| k.parse::<usize>().ok()) {
+                Some(rank) if rank > 0 => Ok(PrecondSpec::PivChol { rank }),
+                _ => Err(Error::Config(format!(
+                    "bad --precond '{s}' (expected rank:K, jacobi, or none)"
+                ))),
+            },
+        }
+    }
+
+    /// Human-readable form (round-trips through [`PrecondSpec::parse`]).
+    pub fn describe(&self) -> String {
+        match self {
+            PrecondSpec::None => "none".to_string(),
+            PrecondSpec::Jacobi => "jacobi".to_string(),
+            PrecondSpec::PivChol { rank } => format!("rank:{rank}"),
+        }
+    }
+
+    /// True for [`PrecondSpec::None`].
+    pub fn is_none(&self) -> bool {
+        matches!(self, PrecondSpec::None)
+    }
+}
+
+/// Setup-cost report of a built preconditioner, so callers can weigh the
+/// construction against the iterations it is expected to save (a rank-k
+/// setup pays for itself once it removes ≥ k CG iterations: both are one
+/// operator MVM each).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrecondCost {
+    /// Operator MVMs consumed during setup (column sampling).
+    pub setup_matvecs: usize,
+    /// Rank of the low-rank factor (0 for identity/Jacobi).
+    pub rank: usize,
+    /// Approximate flops per [`Preconditioner::apply`] call.
+    pub apply_flops: usize,
+}
+
+/// A symmetric-positive-definite approximation `M ≈ K̂` whose inverse is
+/// cheap to apply. Implementations must be deterministic: CG calls
+/// [`apply`](Preconditioner::apply) every iteration and the recurrence
+/// assumes a fixed `M`.
+pub trait Preconditioner: Send + Sync {
+    /// Operator dimension n.
+    fn dim(&self) -> usize;
+
+    /// `z = M⁻¹ r`.
+    fn apply(&self, r: &[f64]) -> Vec<f64>;
+
+    /// `Z = M⁻¹ R` for an n×t block. The default falls back to
+    /// column-by-column [`apply`](Preconditioner::apply); implementations
+    /// with a blocked fast path (Woodbury via three gemms) override it —
+    /// block-PCG calls this once per iteration for all active columns.
+    fn apply_block(&self, r: &Matrix) -> Matrix {
+        assert_eq!(r.rows, self.dim());
+        let mut out = Matrix::zeros(r.rows, r.cols);
+        for j in 0..r.cols {
+            out.set_col(j, &self.apply(&r.col(j)));
+        }
+        out
+    }
+
+    /// What this preconditioner cost to build and costs to apply.
+    fn cost(&self) -> PrecondCost;
+
+    /// Short name for metrics/logs (`"identity"`, `"jacobi"`,
+    /// `"pivchol"`).
+    fn name(&self) -> &'static str;
+}
+
+/// The no-op preconditioner: `M = I`.
+pub struct IdentityPrecond {
+    n: usize,
+}
+
+impl IdentityPrecond {
+    pub fn new(n: usize) -> Self {
+        IdentityPrecond { n }
+    }
+}
+
+impl Preconditioner for IdentityPrecond {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        assert_eq!(r.len(), self.n);
+        r.to_vec()
+    }
+
+    fn apply_block(&self, r: &Matrix) -> Matrix {
+        assert_eq!(r.rows, self.n);
+        r.clone()
+    }
+
+    fn cost(&self) -> PrecondCost {
+        PrecondCost::default()
+    }
+
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+}
+
+/// Diagonal (Jacobi) preconditioner `M = diag(K̂)`.
+pub struct JacobiPrecond {
+    inv_diag: Vec<f64>,
+}
+
+impl JacobiPrecond {
+    /// Build from an explicit diagonal; every entry must be positive (K̂
+    /// is SPD, so a non-positive diagonal entry means the operator — or
+    /// its [`LinearOp::diag`] override — is broken).
+    pub fn new(diag: Vec<f64>) -> Result<Self> {
+        if diag.iter().any(|&d| d <= 0.0 || !d.is_finite()) {
+            return Err(Error::Config(
+                "Jacobi preconditioner needs a strictly positive diagonal".into(),
+            ));
+        }
+        Ok(JacobiPrecond { inv_diag: diag.iter().map(|d| 1.0 / d).collect() })
+    }
+
+    /// Build from an operator's diagonal accessor (None when the operator
+    /// has no cheap diagonal or it is not strictly positive).
+    pub fn from_op(op: &dyn LinearOp) -> Option<Self> {
+        Self::new(op.diag()?).ok()
+    }
+}
+
+impl Preconditioner for JacobiPrecond {
+    fn dim(&self) -> usize {
+        self.inv_diag.len()
+    }
+
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        assert_eq!(r.len(), self.inv_diag.len());
+        r.iter().zip(&self.inv_diag).map(|(x, d)| x * d).collect()
+    }
+
+    fn apply_block(&self, r: &Matrix) -> Matrix {
+        assert_eq!(r.rows, self.inv_diag.len());
+        let mut out = r.clone();
+        for (i, &d) in self.inv_diag.iter().enumerate() {
+            for v in out.row_mut(i) {
+                *v *= d;
+            }
+        }
+        out
+    }
+
+    fn cost(&self) -> PrecondCost {
+        PrecondCost { setup_matvecs: 0, rank: 0, apply_flops: self.inv_diag.len() }
+    }
+
+    fn name(&self) -> &'static str {
+        "jacobi"
+    }
+}
+
+/// Partial pivoted-Cholesky preconditioner `M = L_k L_kᵀ + δ I`,
+/// Woodbury-applied in O(nk) per vector.
+///
+/// Setup runs the greedy partial pivoted Cholesky of the kernel part of
+/// `K̂`: at each of k steps it picks the index with the largest residual
+/// diagonal (or, for operators with no cheap [`LinearOp::diag`], an
+/// evenly-spread deterministic pivot — every column is normalized by its
+/// exact residual diagonal read off the fetched column, so the factor
+/// stays a valid partial Cholesky either way), fetches that operator
+/// column ([`LinearOp::col_at`], one MVM), orthogonalizes it against the
+/// factor so far, and downdates the residual diagonal.
+///
+/// With a `noise_hint` (the caller knows σ_n², as the GP layer does) the
+/// shift is removed from the sampled columns and
+/// `δ = σ_n²` exactly; without one the factorization runs on `K̂` itself
+/// and `δ` self-calibrates to the mean residual diagonal — the leftover
+/// spectral mass the factor did not capture, which for a noise-shifted
+/// covariance converges onto σ_n² as k grows.
+///
+/// Application uses the Woodbury identity with the k×k Gram factor cached
+/// at build time:
+///
+/// ```text
+/// M⁻¹ r = (r − L G⁻¹ Lᵀ r) / δ,   G = δ I_k + Lᵀ L   (Cholesky, cached)
+/// ```
+///
+/// The block form ([`Preconditioner::apply_block`]) is three gemms and is
+/// what block-PCG drives once per iteration.
+pub struct PivotedCholeskyPrecond {
+    /// n×k factor (k ≤ requested rank; the build stops early when the
+    /// residual diagonal is exhausted).
+    l: Matrix,
+    /// Diagonal floor δ: σ_n² when hinted; else the mean residual
+    /// diagonal, or the last pivot's residual level when the operator has
+    /// no diagonal to read.
+    noise: f64,
+    /// Cholesky of `G = δ I_k + LᵀL`.
+    small: Cholesky,
+    /// Pivot indices in selection order (diagnostics / tests).
+    pub pivots: Vec<usize>,
+    setup_matvecs: usize,
+}
+
+impl PivotedCholeskyPrecond {
+    /// Build a rank ≤ `rank` preconditioner for `op` (the full,
+    /// noise-shifted K̂). `noise_hint` is the additive diagonal shift
+    /// σ_n² when the caller knows it (see the type docs for how the
+    /// build self-calibrates without it).
+    pub fn build(op: &dyn LinearOp, rank: usize, noise_hint: Option<f64>) -> Result<Self> {
+        let n = op.dim();
+        if n == 0 {
+            return Err(Error::Config("pivoted Cholesky of an empty operator".into()));
+        }
+        let shift = noise_hint.unwrap_or(0.0);
+        // Residual diagonal of the kernel part, when the operator can
+        // produce it cheaply — it drives the *greedy* pivot choice.
+        // Without it, pivots fall back to an evenly-spread deterministic
+        // sequence; either way every column is normalized by its **exact**
+        // residual diagonal read off the fetched column itself, so the
+        // factorization is a valid partial Cholesky regardless (pivot
+        // adaptivity only affects which columns it spends the budget on).
+        let mut d: Option<Vec<f64>> = op
+            .diag()
+            .map(|diag| diag.into_iter().map(|v| v - shift).collect());
+        // Scale reference for the stop/floor thresholds: the largest
+        // (residual) diagonal seen so far.
+        let mut seen_max = d
+            .as_ref()
+            .map(|d| d.iter().cloned().fold(0.0f64, f64::max))
+            .unwrap_or(0.0);
+        let k_max = rank.min(n);
+        let stride = (n / k_max.max(1)).max(1);
+        let mut cols: Vec<Vec<f64>> = Vec::with_capacity(k_max);
+        let mut pivots: Vec<usize> = Vec::with_capacity(k_max);
+        let mut matvecs = 0usize;
+        // Residual level of the last accepted pivot — the δ estimate when
+        // neither a noise hint nor a residual diagonal is available.
+        let mut last_dp = 0.0f64;
+        for step in 0..k_max {
+            let p = match &d {
+                Some(d) => {
+                    let (p, dp) = d
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.total_cmp(b.1))
+                        .map(|(i, &v)| (i, v))
+                        .expect("non-empty diagonal");
+                    if dp <= 1e-12 * seen_max.max(1.0) {
+                        break; // residual exhausted — the factor is complete
+                    }
+                    p
+                }
+                None => (step * stride) % n,
+            };
+            let mut col = op.col_at(p);
+            matvecs += 1;
+            col[p] -= shift;
+            // Orthogonalize against the factor so far:
+            // l = (a_p − L L[p,·]ᵀ) / √d_p.
+            for prev in &cols {
+                let lp = prev[p];
+                for (c, &v) in col.iter_mut().zip(prev) {
+                    *c -= lp * v;
+                }
+            }
+            // The exact residual diagonal at p: a_pp − Σ_j L[p,j]², i.e.
+            // this column's own pivot entry after orthogonalization.
+            let dp = col[p];
+            seen_max = seen_max.max(dp);
+            if dp <= 1e-12 * seen_max.max(1.0) {
+                // Pivot numerically exhausted. Under greedy selection this
+                // was the *largest* residual, so the factor is complete;
+                // a spread (diag-less) pivot says nothing about the other
+                // candidates — skip it and keep spending the budget.
+                if d.is_some() {
+                    break;
+                }
+                continue;
+            }
+            last_dp = dp;
+            let scale = 1.0 / dp.sqrt();
+            for c in col.iter_mut() {
+                *c *= scale;
+            }
+            if let Some(d) = &mut d {
+                for (di, &ci) in d.iter_mut().zip(&col) {
+                    *di = (*di - ci * ci).max(0.0);
+                }
+                d[p] = 0.0;
+            }
+            pivots.push(p);
+            cols.push(col);
+        }
+        let k = cols.len();
+        let mut l = Matrix::zeros(n, k);
+        for (j, c) in cols.iter().enumerate() {
+            l.set_col(j, c);
+        }
+        // Diagonal floor: the known σ_n², else the mean residual diagonal,
+        // else (no diagonal to read) the residual level of the last
+        // accepted pivot — a δ too *small* is the dangerous direction (it
+        // blows up M⁻¹ on the uncaptured complement and can make PCG
+        // slower than plain CG), while the last-pivot overestimate only
+        // degrades gently. The clamp keeps the Woodbury division finite
+        // AND dominates the cancellation error of its numerator
+        // (≈ machine-ε·‖r‖), which a floor near ε would amplify to O(1).
+        let resid_estimate = d
+            .as_ref()
+            .map(|d| d.iter().sum::<f64>() / n as f64)
+            .unwrap_or(last_dp);
+        let noise = noise_hint
+            .unwrap_or(resid_estimate)
+            .max(1e-8 * seen_max.max(1.0));
+        let mut g = l.t_matmul(&l);
+        g.add_diag(noise);
+        let small = Cholesky::new_with_jitter(&g, 0.0)?;
+        crate::coordinator::metrics::global()
+            .observe("solver.precond.setup_matvecs", matvecs as u64);
+        Ok(PivotedCholeskyPrecond { l, noise, small, pivots, setup_matvecs: matvecs })
+    }
+
+    /// Achieved rank k (≤ the requested rank).
+    pub fn rank(&self) -> usize {
+        self.l.cols
+    }
+
+    /// The diagonal floor δ in `M = L Lᵀ + δ I`.
+    pub fn noise(&self) -> f64 {
+        self.noise
+    }
+}
+
+impl Preconditioner for PivotedCholeskyPrecond {
+    fn dim(&self) -> usize {
+        self.l.rows
+    }
+
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        assert_eq!(r.len(), self.l.rows);
+        if self.l.cols == 0 {
+            return r.iter().map(|v| v / self.noise).collect();
+        }
+        let t = self.l.t_matvec(r); // Lᵀ r, k
+        let u = self.small.solve(&t); // G⁻¹ Lᵀ r, k
+        let lu = self.l.matvec(&u); // L G⁻¹ Lᵀ r, n
+        r.iter()
+            .zip(&lu)
+            .map(|(ri, li)| (ri - li) / self.noise)
+            .collect()
+    }
+
+    /// Blocked Woodbury: `(R − L G⁻¹ (Lᵀ R)) / δ` — three gemms for the
+    /// whole block instead of t gemv chains.
+    fn apply_block(&self, r: &Matrix) -> Matrix {
+        assert_eq!(r.rows, self.l.rows);
+        if self.l.cols == 0 {
+            let mut out = r.clone();
+            for v in out.data.iter_mut() {
+                *v /= self.noise;
+            }
+            return out;
+        }
+        let t = self.l.t_matmul(r); // k×t
+        let u = self.small.solve_mat(&t); // k×t
+        let lu = self.l.matmul(&u); // n×t
+        let mut out = r.clone();
+        for (o, &x) in out.data.iter_mut().zip(&lu.data) {
+            *o = (*o - x) / self.noise;
+        }
+        out
+    }
+
+    fn cost(&self) -> PrecondCost {
+        let (n, k) = (self.l.rows, self.l.cols);
+        PrecondCost {
+            setup_matvecs: self.setup_matvecs,
+            rank: k,
+            // Two n×k gemvs + one k×k triangular solve pair.
+            apply_flops: 4 * n * k + 2 * k * k,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pivchol"
+    }
+}
+
+/// Build the preconditioner a [`PrecondSpec`] describes for `op` (the
+/// full noise-shifted K̂). `noise_hint` is σ_n² when the caller knows it
+/// (the GP layer does); pass `None` to let the pivoted-Cholesky build
+/// self-calibrate its diagonal floor.
+///
+/// Never fails: a spec the operator cannot support — Jacobi without a
+/// cheap [`LinearOp::diag`], a pivoted-Cholesky build that errors —
+/// degrades to the identity (recorded under the
+/// `solver.precond.fallback` counter) so a solve always proceeds.
+pub fn build_preconditioner(
+    op: &dyn LinearOp,
+    noise_hint: Option<f64>,
+    spec: PrecondSpec,
+) -> Box<dyn Preconditioner> {
+    let fallback = |why: &str| -> Box<dyn Preconditioner> {
+        let g = crate::coordinator::metrics::global();
+        g.incr("solver.precond.fallback", 1);
+        g.incr(&format!("solver.precond.fallback.{why}"), 1);
+        Box::new(IdentityPrecond::new(op.dim()))
+    };
+    match spec {
+        PrecondSpec::None => Box::new(IdentityPrecond::new(op.dim())),
+        PrecondSpec::Jacobi => match JacobiPrecond::from_op(op) {
+            Some(j) => Box::new(j),
+            None => fallback("jacobi_no_diag"),
+        },
+        PrecondSpec::PivChol { rank } => {
+            match PivotedCholeskyPrecond::build(op, rank, noise_hint) {
+                Ok(p) => Box::new(p),
+                Err(_) => fallback("pivchol_build"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::{DenseOp, DiagOp};
+    use crate::util::{rel_err, Rng};
+
+    fn random_spd(n: usize, seed: u64, noise: f64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        // Low-rank-dominated + noise floor, the GP covariance shape.
+        let g = Matrix::from_fn(n, 6, |_, _| rng.normal());
+        let mut a = g.matmul_t(&g);
+        a.add_diag(noise);
+        a
+    }
+
+    #[test]
+    fn spec_parse_roundtrip() {
+        for s in ["none", "jacobi", "rank:50"] {
+            let spec = PrecondSpec::parse(s).unwrap();
+            assert_eq!(spec.describe(), s);
+        }
+        assert!(PrecondSpec::parse("rank:0").is_err());
+        assert!(PrecondSpec::parse("rank:x").is_err());
+        assert!(PrecondSpec::parse("chol").is_err());
+        assert!(PrecondSpec::default().is_none());
+    }
+
+    #[test]
+    fn identity_is_a_noop() {
+        let m = IdentityPrecond::new(3);
+        assert_eq!(m.apply(&[1.0, -2.0, 0.5]), vec![1.0, -2.0, 0.5]);
+        let b = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(m.apply_block(&b).data, b.data);
+        assert_eq!(m.cost().rank, 0);
+    }
+
+    #[test]
+    fn jacobi_inverts_a_diagonal_operator() {
+        let op = DiagOp(vec![2.0, 4.0, 0.5]);
+        let m = JacobiPrecond::from_op(&op).unwrap();
+        assert_eq!(m.apply(&[2.0, 4.0, 0.5]), vec![1.0, 1.0, 1.0]);
+        // Non-positive diagonals are rejected.
+        assert!(JacobiPrecond::new(vec![1.0, 0.0]).is_err());
+        assert!(JacobiPrecond::new(vec![1.0, -2.0]).is_err());
+    }
+
+    #[test]
+    fn pivchol_full_rank_inverts_operator() {
+        let n = 25;
+        let noise = 0.3;
+        let a = random_spd(n, 1, noise);
+        let op = DenseOp(a.clone());
+        let m = PivotedCholeskyPrecond::build(&op, n, Some(noise)).unwrap();
+        // Full rank ⇒ L Lᵀ + σ² I reproduces A exactly ⇒ M⁻¹ A v = v.
+        let mut rng = Rng::new(2);
+        let v = rng.normal_vec(n);
+        let av = a.matvec(&v);
+        let z = m.apply(&av);
+        assert!(rel_err(&z, &v) < 1e-8, "rel err {}", rel_err(&z, &v));
+    }
+
+    #[test]
+    fn pivchol_self_calibrates_without_noise_hint() {
+        let n = 40;
+        let noise = 1e-2;
+        let a = random_spd(n, 3, noise);
+        let op = DenseOp(a.clone());
+        // Rank 6 captures the whole low-rank part; the residual diagonal
+        // the δ floor is read off is then ≈ the true noise.
+        let m = PivotedCholeskyPrecond::build(&op, 10, None).unwrap();
+        assert!(
+            m.noise() > 0.1 * noise && m.noise() < 10.0 * noise,
+            "self-calibrated δ {} vs true σ² {noise}",
+            m.noise()
+        );
+    }
+
+    #[test]
+    fn pivchol_apply_block_matches_apply() {
+        let n = 30;
+        let a = random_spd(n, 4, 0.05);
+        let op = DenseOp(a);
+        let m = PivotedCholeskyPrecond::build(&op, 8, Some(0.05)).unwrap();
+        let mut rng = Rng::new(5);
+        let r = Matrix::from_fn(n, 4, |_, _| rng.normal());
+        let blocked = m.apply_block(&r);
+        for j in 0..4 {
+            let one = m.apply(&r.col(j));
+            assert!(rel_err(&blocked.col(j), &one) < 1e-13);
+        }
+    }
+
+    #[test]
+    fn pivchol_pivots_follow_large_diagonal_entries() {
+        // One dominant coordinate: the first pivot must find it.
+        let mut a = Matrix::eye(10);
+        a.set(7, 7, 50.0);
+        let op = DenseOp(a);
+        let m = PivotedCholeskyPrecond::build(&op, 3, None).unwrap();
+        assert_eq!(m.pivots[0], 7);
+    }
+
+    #[test]
+    fn pivchol_stops_early_on_exact_low_rank() {
+        // Rank-2 + noise: requesting rank 10 must stop once the residual
+        // diagonal is exhausted (numerically), not fabricate columns.
+        let n = 20;
+        let mut rng = Rng::new(6);
+        let g = Matrix::from_fn(n, 2, |_, _| rng.normal());
+        let mut a = g.matmul_t(&g);
+        a.add_diag(1e-3);
+        let op = DenseOp(a);
+        let m = PivotedCholeskyPrecond::build(&op, 10, Some(1e-3)).unwrap();
+        assert!(m.rank() <= 4, "rank {} for a rank-2 kernel", m.rank());
+        // At most one fetched column is discarded by the post-fetch
+        // exhaustion check.
+        assert!(
+            m.cost().setup_matvecs <= m.rank() + 1,
+            "{} matvecs for rank {}",
+            m.cost().setup_matvecs,
+            m.rank()
+        );
+    }
+
+    #[test]
+    fn diagless_operator_still_builds_a_valid_factor() {
+        // No diag() ⇒ pivots are evenly spread instead of greedy, but the
+        // factor is still a valid partial Cholesky (each column is
+        // normalized by its exact residual diagonal read off the fetched
+        // column), so with enough budget it still reproduces the operator.
+        struct Opaque(Matrix);
+        impl LinearOp for Opaque {
+            fn dim(&self) -> usize {
+                self.0.rows
+            }
+            fn matvec(&self, v: &[f64]) -> Vec<f64> {
+                self.0.matvec(v)
+            }
+        }
+        let n = 30;
+        let noise = 0.05;
+        let a = random_spd(n, 8, noise);
+        let op = Opaque(a.clone());
+        assert!(op.diag().is_none());
+        let m = PivotedCholeskyPrecond::build(&op, n, Some(noise)).unwrap();
+        let mut rng = Rng::new(9);
+        let v = rng.normal_vec(n);
+        let av = a.matvec(&v);
+        let z = m.apply(&av);
+        assert!(rel_err(&z, &v) < 1e-6, "rel err {}", rel_err(&z, &v));
+    }
+
+    #[test]
+    fn build_preconditioner_falls_back_to_identity() {
+        // An operator with no diag() override: Jacobi degrades to the
+        // identity instead of failing the solve.
+        struct Opaque(usize);
+        impl crate::operators::LinearOp for Opaque {
+            fn dim(&self) -> usize {
+                self.0
+            }
+            fn matvec(&self, v: &[f64]) -> Vec<f64> {
+                v.to_vec()
+            }
+        }
+        let m = build_preconditioner(&Opaque(4), None, PrecondSpec::Jacobi);
+        assert_eq!(m.name(), "identity");
+        let m = build_preconditioner(&Opaque(4), None, PrecondSpec::None);
+        assert_eq!(m.name(), "identity");
+    }
+}

@@ -161,7 +161,7 @@ fn toy(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>, Matrix) {
 fn sparse_agrees_with_dense_kiss_within_1e3_d3() {
     let (xs, ys, xt) = toy(140, 3, 3);
     let h = GpHypers::new(0.9, 1.0, 0.05);
-    let cg = CgConfig { max_iters: 300, tol: 1e-8 };
+    let cg = CgConfig { max_iters: 300, tol: 1e-8, ..CgConfig::default() };
     let mut dense = MvmGp::new(
         xs.clone(),
         ys.clone(),
@@ -242,7 +242,7 @@ fn sparse_grid_opens_d8_where_dense_refuses() {
         MvmGpConfig {
             variant: MvmVariant::Kiss,
             grid: spec,
-            cg: CgConfig { max_iters: 80, tol: 1e-6 },
+            cg: CgConfig { max_iters: 80, tol: 1e-6, ..CgConfig::default() },
             ..Default::default()
         },
     );

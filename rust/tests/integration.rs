@@ -74,7 +74,7 @@ fn mll_consistency_exact_skip_kiss() {
                 grid: GridSpec::uniform(32),
                 rank: 60,
                 slq: SlqConfig { num_probes: 20, max_rank: 40 },
-                cg: CgConfig { max_iters: 200, tol: 1e-7 },
+                cg: CgConfig { max_iters: 200, tol: 1e-7, ..CgConfig::default() },
                 ..Default::default()
             },
         );
@@ -143,7 +143,8 @@ fn mtgp_skip_solve_matches_dense_solve() {
     let chol = skip_gp::linalg::Cholesky::new_with_jitter(&dense, 1e-10).unwrap();
     let alpha_exact = chol.solve(&growth.data.y);
     let op = mtgp.build_skip_operator(3);
-    let sol = cg_solve(&op, &growth.data.y, CgConfig { max_iters: 300, tol: 1e-8 });
+    let cg = CgConfig { max_iters: 300, tol: 1e-8, ..CgConfig::default() };
+    let sol = cg_solve(&op, &growth.data.y, cg);
     assert!(
         rel_err(&sol.x, &alpha_exact) < 0.05,
         "alpha rel err {}",

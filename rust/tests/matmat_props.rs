@@ -221,7 +221,7 @@ fn block_cg_8rhs_on_skip_operator_matches_serial() {
 
     let t = 8;
     let b = Matrix::from_fn(n, t, |_, _| rng.normal());
-    let cfg = CgConfig { max_iters: 400, tol: 1e-12 };
+    let cfg = CgConfig { max_iters: 400, tol: 1e-12, ..CgConfig::default() };
     let block = block_cg_solve(&khat, &b, cfg);
     for j in 0..t {
         let single = cg_solve(&khat, &b.col(j), cfg);

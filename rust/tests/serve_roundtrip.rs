@@ -265,6 +265,7 @@ fn serving_guards() {
             grid: Some(GridSpec::uniform(512)),
             variance: VarianceMode::None,
             max_grid_cells: 1 << 20,
+            ..Default::default()
         },
     )
     .unwrap_err();

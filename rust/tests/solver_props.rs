@@ -1,0 +1,294 @@
+//! Property tests for the preconditioned solver subsystem
+//! (`skip_gp::solvers::precond` + the PCG rewrite of `cg`/`block_cg`):
+//!
+//! - PCG and plain CG agree to ≤ 1e-8 on every operator family (dense,
+//!   SKI, Kronecker-SKI, SKIP) — preconditioning never changes the
+//!   answer, only the iteration count.
+//! - Pivoted-Cholesky rank sweep: iterations decrease monotonically with
+//!   rank on an ill-conditioned (small-σ_n²) covariance.
+//! - Warm starts are never worse: seeding with the solution returns it
+//!   bitwise in 0 iterations, and seeding with any partial iterate never
+//!   increases the iteration count.
+//! - Block-CG convergence is judged **per column** against each column's
+//!   own ‖b_j‖ — the mixed-norm regression test that pins the criterion
+//!   (a shared block norm would silently leave small-norm columns
+//!   unsolved next to large-norm ones).
+
+use skip_gp::kernels::{ProductKernel, Stationary1d};
+use skip_gp::linalg::{norm2, Matrix};
+use skip_gp::operators::{
+    AffineOp, DenseOp, KroneckerSkiOp, LinearOp, SkiOp, SkipComponent, SkipOp,
+};
+use skip_gp::solvers::{
+    block_cg_solve, block_cg_solve_with, build_preconditioner, cg_solve, cg_solve_with,
+    CgConfig, IdentityPrecond, PivotedCholeskyPrecond, PrecondSpec, Preconditioner,
+};
+use skip_gp::util::{rel_err, Rng};
+
+const NOISE: f64 = 1e-3;
+
+fn tight() -> CgConfig {
+    CgConfig { max_iters: 3000, tol: 1e-10, ..Default::default() }
+}
+
+/// Low-rank-dominated dense covariance `G Gᵀ + σ_n² I` — the
+/// ill-conditioned shape GP solves live in.
+fn dense_covariance(n: usize, rank: usize, seed: u64) -> DenseOp {
+    let mut rng = Rng::new(seed);
+    let g = Matrix::from_fn(n, rank, |_, _| rng.normal());
+    let mut a = g.matmul_t(&g);
+    a.add_diag(NOISE);
+    DenseOp(a)
+}
+
+/// 1-D SKI-backed K̂ = K_SKI + σ_n² I.
+fn ski_covariance(n: usize, m: usize, seed: u64) -> AffineOp {
+    let mut rng = Rng::new(seed);
+    let xs = rng.uniform_vec(n, -2.0, 2.0);
+    let kern = Stationary1d::rbf(0.5);
+    let ski = SkiOp::new(&xs, &kern, m).expect("ski grid");
+    AffineOp { inner: Box::new(ski), scale: 1.0, shift: NOISE }
+}
+
+/// 2-D Kronecker-grid K̂.
+fn kron_covariance(n: usize, m: usize, seed: u64) -> AffineOp {
+    let mut rng = Rng::new(seed);
+    let xs = Matrix::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let kern = ProductKernel::rbf(2, 0.6, 1.0);
+    let op = KroneckerSkiOp::new(&xs, &kern, m).expect("kron grid");
+    AffineOp { inner: Box::new(op), scale: 1.0, shift: NOISE }
+}
+
+/// 2-D SKIP-backed K̂ (rank-truncated merge tree + noise).
+fn skip_covariance(n: usize, seed: u64) -> AffineOp {
+    let mut rng = Rng::new(seed);
+    let xs = Matrix::from_fn(n, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let kern = ProductKernel::rbf(2, 0.8, 1.0);
+    let skis: Vec<SkiOp> = (0..2)
+        .map(|k| SkiOp::new(&xs.col(k), &kern.factors[k], 64).expect("ski grid"))
+        .collect();
+    let comps: Vec<SkipComponent> =
+        skis.iter().map(|s| SkipComponent::Op(s as &dyn LinearOp)).collect();
+    let skip = SkipOp::build_native(comps, 30, &mut rng);
+    AffineOp { inner: Box::new(skip), scale: 1.0, shift: NOISE }
+}
+
+/// PCG must reproduce the plain-CG solution to ≤ 1e-8 (tight solves, so
+/// the comparison measures the preconditioner, not the stopping point).
+fn assert_pcg_matches_cg(op: &dyn LinearOp, rank: usize, seed: u64, label: &str) {
+    let mut rng = Rng::new(seed);
+    let y = rng.normal_vec(op.dim());
+    let plain = cg_solve(op, &y, tight());
+    assert!(plain.converged, "{label}: plain CG did not converge");
+    let pre = build_preconditioner(op, Some(NOISE), PrecondSpec::PivChol { rank });
+    let pcg = cg_solve_with(op, &y, pre.as_ref(), None, tight());
+    assert!(pcg.converged, "{label}: PCG did not converge");
+    let err = rel_err(&pcg.x, &plain.x);
+    assert!(err < 1e-8, "{label}: PCG drifted from CG by {err}");
+    assert!(
+        pcg.iters <= plain.iters,
+        "{label}: PCG took {} iters vs CG {}",
+        pcg.iters,
+        plain.iters
+    );
+}
+
+#[test]
+fn pcg_matches_cg_on_dense() {
+    let op = dense_covariance(120, 10, 1);
+    assert_pcg_matches_cg(&op, 15, 2, "dense");
+}
+
+#[test]
+fn pcg_matches_cg_on_ski() {
+    let op = ski_covariance(400, 128, 3);
+    assert_pcg_matches_cg(&op, 30, 4, "ski");
+}
+
+#[test]
+fn pcg_matches_cg_on_kronecker() {
+    let op = kron_covariance(150, 16, 5);
+    assert_pcg_matches_cg(&op, 25, 6, "kronecker");
+}
+
+#[test]
+fn pcg_matches_cg_on_skip() {
+    let op = skip_covariance(200, 7);
+    assert_pcg_matches_cg(&op, 25, 8, "skip");
+}
+
+#[test]
+fn jacobi_matches_cg_on_scaled_system() {
+    // Strongly varying diagonal (the regime Jacobi helps): D A D with
+    // D log-uniform over two decades.
+    let n = 100;
+    let base = dense_covariance(n, 8, 9).0;
+    let mut rng = Rng::new(10);
+    let d: Vec<f64> = (0..n).map(|_| 10f64.powf(rng.uniform_in(-1.0, 1.0))).collect();
+    let scaled = Matrix::from_fn(n, n, |i, j| d[i] * base.get(i, j) * d[j]);
+    let op = DenseOp(scaled);
+    let y = rng.normal_vec(n);
+    let plain = cg_solve(&op, &y, tight());
+    let jac = build_preconditioner(&op, None, PrecondSpec::Jacobi);
+    assert_eq!(jac.name(), "jacobi", "dense diagonal must be available");
+    let pre = cg_solve_with(&op, &y, jac.as_ref(), None, tight());
+    assert!(plain.converged && pre.converged);
+    assert!(rel_err(&pre.x, &plain.x) < 1e-8);
+    assert!(pre.iters <= plain.iters, "jacobi {} vs {}", pre.iters, plain.iters);
+}
+
+#[test]
+fn pivchol_rank_sweep_monotonically_reduces_iterations() {
+    let op = ski_covariance(400, 128, 11);
+    let mut rng = Rng::new(12);
+    let y = rng.normal_vec(op.dim());
+    let cfg = CgConfig { max_iters: 3000, tol: 1e-8, ..Default::default() };
+    let mut iters = Vec::new();
+    for rank in [0usize, 5, 15, 40] {
+        let sol = if rank == 0 {
+            cg_solve(&op, &y, cfg)
+        } else {
+            let pre =
+                build_preconditioner(&op, Some(NOISE), PrecondSpec::PivChol { rank });
+            cg_solve_with(&op, &y, pre.as_ref(), None, cfg)
+        };
+        assert!(sol.converged, "rank {rank} did not converge");
+        iters.push(sol.iters);
+    }
+    for w in iters.windows(2) {
+        assert!(w[1] <= w[0], "rank sweep not monotone: {iters:?}");
+    }
+    assert!(
+        iters[3] * 3 <= iters[0],
+        "rank 40 should cut iterations ≥ 3x: {iters:?}"
+    );
+}
+
+#[test]
+fn warm_start_is_never_worse() {
+    let op = ski_covariance(300, 64, 13);
+    let mut rng = Rng::new(14);
+    let y = rng.normal_vec(op.dim());
+    let cfg = CgConfig { max_iters: 2000, tol: 1e-8, ..Default::default() };
+    let id = IdentityPrecond::new(op.dim());
+    let cold = cg_solve_with(&op, &y, &id, None, cfg);
+    assert!(cold.converged);
+
+    // Seeding with a solution solved two digits inside the tolerance:
+    // bitwise return, zero iterations.
+    let seed = cg_solve_with(
+        &op,
+        &y,
+        &id,
+        None,
+        CgConfig { tol: 1e-10, ..cfg },
+    );
+    assert!(seed.converged);
+    let exact = cg_solve_with(&op, &y, &id, Some(&seed.x), cfg);
+    assert_eq!(exact.iters, 0);
+    assert_eq!(exact.x, seed.x);
+
+    // Seeding with any partial iterate is no worse than starting cold
+    // (±1: a restart rebuilds the Krylov space, which can cost a single
+    // iteration against continuing — the exact guarantee above is the
+    // zero-iteration bitwise one).
+    for budget in [1usize, 3, 10, 30] {
+        let partial = cg_solve_with(
+            &op,
+            &y,
+            &id,
+            None,
+            CgConfig { max_iters: budget, ..cfg },
+        );
+        let warm = cg_solve_with(&op, &y, &id, Some(&partial.x), cfg);
+        assert!(warm.converged);
+        assert!(
+            warm.iters <= cold.iters + 1,
+            "seed after {budget} cold iters: warm {} vs cold {}",
+            warm.iters,
+            cold.iters
+        );
+        assert!(rel_err(&warm.x, &cold.x) < 1e-6);
+    }
+    // A deep seed must show a real saving, not just parity.
+    let deep = cg_solve_with(
+        &op,
+        &y,
+        &id,
+        None,
+        CgConfig { max_iters: cold.iters.saturating_sub(10).max(1), ..cfg },
+    );
+    let warm = cg_solve_with(&op, &y, &id, Some(&deep.x), cfg);
+    assert!(
+        warm.iters < cold.iters,
+        "near-solution seed saved nothing: warm {} vs cold {}",
+        warm.iters,
+        cold.iters
+    );
+}
+
+#[test]
+fn block_cg_mixed_norm_columns_each_meet_their_own_tolerance() {
+    // Columns at scales 1e6, 1, 1e-6 (plus an exact zero column): per-
+    // column relative convergence must hold for every one. Against a
+    // whole-block criterion the 1e-6-scaled column would "converge"
+    // instantly while carrying an O(1) relative error.
+    let op = dense_covariance(80, 8, 15);
+    let mut rng = Rng::new(16);
+    let scales = [1e6, 1.0, 1e-6, 0.0];
+    let mut b = Matrix::zeros(80, scales.len());
+    for (j, &s) in scales.iter().enumerate() {
+        let col: Vec<f64> = (0..80).map(|_| s * rng.normal()).collect();
+        b.set_col(j, &col);
+    }
+    let tol = 1e-8;
+    let sol = block_cg_solve(&op, &b, CgConfig { max_iters: 2000, tol, ..Default::default() });
+    assert!(sol.all_converged());
+    for (j, &s) in scales.iter().enumerate() {
+        let bj = b.col(j);
+        let axj = op.matvec(&sol.x.col(j));
+        let resid: Vec<f64> = axj.iter().zip(&bj).map(|(a, bv)| a - bv).collect();
+        if s == 0.0 {
+            assert_eq!(sol.x.col(j), vec![0.0; 80], "zero RHS solves to zero");
+            continue;
+        }
+        let rel = norm2(&resid) / norm2(&bj);
+        // True-residual slack over the recurrence tolerance.
+        assert!(rel < tol * 100.0, "column {j} (scale {s:e}): true rel resid {rel}");
+    }
+}
+
+#[test]
+fn preconditioned_block_with_solution_seeds_is_free() {
+    let op = kron_covariance(120, 16, 17);
+    let mut rng = Rng::new(18);
+    let b = Matrix::from_fn(120, 3, |_, _| rng.normal());
+    let cfg = CgConfig { max_iters: 2000, tol: 1e-8, ..Default::default() };
+    let pre = PivotedCholeskyPrecond::build(&op, 20, Some(NOISE)).unwrap();
+    // Seeds solved two digits inside the warm solve's tolerance.
+    let cold = block_cg_solve_with(&op, &b, &pre, None, CgConfig { tol: 1e-10, ..cfg });
+    assert!(cold.all_converged());
+    let warm = block_cg_solve_with(&op, &b, &pre, Some(&cold.x), cfg);
+    assert!(warm.all_converged());
+    assert_eq!(warm.x.data, cold.x.data, "solution seeds return bitwise");
+    assert!(warm.columns.iter().all(|c| c.iters == 0));
+    assert_eq!(warm.matmats, 1, "only the initial-residual block MVM");
+}
+
+#[test]
+fn plain_block_cg_equals_preconditioned_block_with_identity() {
+    // `block_cg_solve` (spec: None) and an explicit identity must produce
+    // byte-identical solutions and per-column iteration counts — the
+    // backward-compatibility contract of the PCG rewrite.
+    let op = ski_covariance(200, 64, 19);
+    let mut rng = Rng::new(20);
+    let b = Matrix::from_fn(200, 4, |_, _| rng.normal());
+    let cfg = CgConfig { max_iters: 2000, tol: 1e-8, ..Default::default() };
+    let a = block_cg_solve(&op, &b, cfg);
+    let id = IdentityPrecond::new(op.dim());
+    let c = block_cg_solve_with(&op, &b, &id, None, cfg);
+    assert_eq!(a.x.data, c.x.data);
+    for (ca, cc) in a.columns.iter().zip(&c.columns) {
+        assert_eq!(ca.iters, cc.iters);
+    }
+}
