@@ -1,0 +1,141 @@
+//! Streaming-ingestion bench: single-point (and small-batch) online
+//! ingest vs a full refresh on the same model, emitting machine-readable
+//! `results/BENCH_stream.json` (ingest p50/p99, refresh time, the
+//! ingest-vs-refresh speedup, and warm-vs-cold solver iterations) so the
+//! online-update perf trajectory is tracked — and gated by
+//! `tools/bench_check` — from this PR onward.
+//!
+//! Run: `cargo bench --bench bench_stream` (add `-- --fast` in CI smoke).
+
+#![allow(clippy::needless_range_loop)] // index-heavy numeric bench loops
+
+use skip_gp::gp::GpHypers;
+use skip_gp::grid::Grid1d;
+use skip_gp::linalg::Matrix;
+use skip_gp::serve::VarianceMode;
+use skip_gp::solvers::CgConfig;
+use skip_gp::stream::{IncrementalState, StreamConfig};
+use skip_gp::util::{Rng, Timer};
+use std::io::Write;
+use std::path::Path;
+
+fn quantile_us(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[i] * 1e6
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let (n, ingests) = if fast { (1024, 32) } else { (4096, 64) };
+    let d = 2;
+    let m = 32;
+
+    let mut rng = Rng::new(0);
+    let mut xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+    for k in 0..d {
+        xs.set(0, k, -1.0);
+        xs.set(1, k, 1.0);
+    }
+    let f = |r: &[f64]| (2.0 * r[0]).sin() + (3.0 * r[1]).cos();
+    let ys: Vec<f64> = (0..n).map(|i| f(xs.row(i)) + 0.05 * rng.normal()).collect();
+    let axes = vec![
+        Grid1d::fit(-1.0, 1.0, m).unwrap(),
+        Grid1d::fit(-1.0, 1.0, m).unwrap(),
+    ];
+    let cg = CgConfig { max_iters: 500, tol: 1e-8, ..Default::default() };
+    // Realistic serving config, but with the drift/policy triggers out of
+    // the way so the measured ingests all take the warm incremental path
+    // (the refresh they are compared against rebuilds the variance too).
+    let cfg = StreamConfig {
+        refresh_every: 0,
+        var_drift_budget: usize::MAX,
+        error_z: 0.0,
+        log_capacity: 1 << 16,
+        variance: VarianceMode::Lanczos(64),
+        patch_eps: 1e-12,
+    };
+
+    let t = Timer::start();
+    let mut live =
+        IncrementalState::new(xs, ys, GpHypers::new(0.5, 1.0, 0.05), axes, cg, cfg)
+            .expect("live state");
+    println!(
+        "built live model: n={n}, d={d}, grid {m}x{m}, var rank 64 ({:.3}s)",
+        t.elapsed_s()
+    );
+
+    // Single-point ingest latency (the streaming hot path).
+    let mut ingest_s = Vec::with_capacity(ingests);
+    let mut warm_iters = Vec::with_capacity(ingests);
+    for _ in 0..ingests {
+        let x: Vec<f64> = (0..d).map(|_| rng.uniform_in(-0.9, 0.9)).collect();
+        let y = f(&x) + 0.05 * rng.normal();
+        let t = Timer::start();
+        let report = live.ingest(&x, y).expect("ingest");
+        ingest_s.push(t.elapsed_s());
+        warm_iters.push(report.solve_iters as u64);
+        assert!(report.refreshed.is_none(), "bench ingests must stay warm");
+    }
+    ingest_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    warm_iters.sort_unstable();
+    let ingest_p50_us = quantile_us(&ingest_s, 0.50);
+    let ingest_p99_us = quantile_us(&ingest_s, 0.99);
+    println!(
+        "single-point ingest: p50 {ingest_p50_us:>8.1}µs   p99 {ingest_p99_us:>8.1}µs   \
+         warm α-solve iters p50 {}",
+        warm_iters[warm_iters.len() / 2]
+    );
+
+    // Small-batch ingest (the batcher's coalesced path): per-point cost.
+    let batch = 8;
+    let bx = Matrix::from_fn(batch, d, |_, _| rng.uniform_in(-0.9, 0.9));
+    let by: Vec<f64> = (0..batch).map(|i| f(bx.row(i)) + 0.05 * rng.normal()).collect();
+    let t = Timer::start();
+    live.ingest_block(&bx, &by).expect("batch ingest");
+    let batch_point_us = t.elapsed_s() * 1e6 / batch as f64;
+    println!("batched t={batch} ingest: {batch_point_us:>8.1}µs/point");
+
+    // Full refresh: rebuild operator + preconditioner + cold α solve +
+    // full cache (mean scatter + variance factor) — what every ingest
+    // would cost without the incremental path.
+    let refresh_trials = 3;
+    let mut refresh_s = Vec::with_capacity(refresh_trials);
+    for _ in 0..refresh_trials {
+        let t = Timer::start();
+        live.refresh().expect("refresh");
+        refresh_s.push(t.elapsed_s());
+    }
+    refresh_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let refresh_ms = refresh_s[refresh_trials / 2] * 1e3;
+    println!("full refresh: {refresh_ms:>8.2}ms (median of {refresh_trials})");
+
+    let ingest_median_us = quantile_us(&ingest_s, 0.50);
+    let speedup = refresh_ms * 1e3 / ingest_median_us.max(1e-9);
+    println!("  -> single-point ingest speedup over full refresh: {speedup:.2}x");
+
+    let json = format!(
+        "{{\n  \"bench\": \"stream\",\n  \"fast\": {fast},\n  \"n\": {n},\n  \"d\": {d},\n  \
+         \"grid_m\": {m},\n  \"ingests\": {ingests},\n  \
+         \"ingest_p50_us\": {ingest_p50_us:.2},\n  \"ingest_p99_us\": {ingest_p99_us:.2},\n  \
+         \"batch8_point_us\": {batch_point_us:.2},\n  \"refresh_ms\": {refresh_ms:.3},\n  \
+         \"warm_iters_p50\": {},\n  \
+         \"speedup_single_vs_refresh\": {speedup:.3}\n}}\n",
+        warm_iters[warm_iters.len() / 2]
+    );
+    let path = Path::new("results/BENCH_stream.json");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut out = std::fs::File::create(path).expect("bench json");
+    out.write_all(json.as_bytes()).unwrap();
+    println!("wrote {}", path.display());
+
+    assert!(
+        speedup >= 5.0,
+        "acceptance: single-point ingest must be ≥5x cheaper than a full \
+         refresh (got {speedup:.2}x)"
+    );
+}

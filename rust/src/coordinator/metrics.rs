@@ -290,6 +290,40 @@ impl Metrics {
         out
     }
 
+    /// Streaming-ingestion summary from the `stream.*` keys the serving
+    /// engine records (ingest p50/p99, warm-start iteration savings,
+    /// cache patch-vs-rebuild counts). Empty string when nothing was
+    /// ever ingested — callers skip printing it then.
+    pub fn stream_report(&self) -> String {
+        let points = self.counter("stream.points");
+        let duplicates = self.counter("stream.duplicates");
+        if points == 0 && duplicates == 0 {
+            return String::new();
+        }
+        let ingest = self.latency_snapshot("stream.ingest");
+        let mut out = format!(
+            "  stream    {points} points ingested ({duplicates} duplicates dropped) \
+             p50={:.1}µs p99={:.1}µs\n",
+            ingest.p50_s * 1e6,
+            ingest.p99_s * 1e6
+        );
+        out.push_str(&format!(
+            "  ingest    α-solve iters p50={} p99={}, warm start saved p50={} iters\n",
+            self.value_quantile("stream.solve.iters", 0.50),
+            self.value_quantile("stream.solve.iters", 0.99),
+            self.value_quantile("stream.solve.iters_saved", 0.50),
+        ));
+        out.push_str(&format!(
+            "  caches    {} mean patches ({} rows scattered), {} variance rebuilds, \
+             {} full refreshes\n",
+            self.counter("stream.cache.mean_patches"),
+            self.counter("stream.cache.rows_patched"),
+            self.counter("stream.cache.var_rebuilds"),
+            self.counter("stream.refreshes"),
+        ));
+        out
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         *self.counters.lock().unwrap().get(name).unwrap_or(&0)
     }
@@ -459,6 +493,26 @@ mod tests {
         assert!(r.contains("setup mvms=50"), "{r}");
         assert!(r.contains("3 solves seeded"), "{r}");
         assert!(r.contains("2 converged at the seed"), "{r}");
+    }
+
+    #[test]
+    fn stream_report_summarizes_ingest_counters() {
+        let m = Metrics::new();
+        assert!(m.stream_report().is_empty());
+        m.incr("stream.points", 64);
+        m.incr("stream.duplicates", 2);
+        m.record_latency("stream.ingest", 250e-6);
+        m.observe("stream.solve.iters", 4);
+        m.observe("stream.solve.iters_saved", 38);
+        m.incr("stream.cache.mean_patches", 64);
+        m.incr("stream.cache.var_rebuilds", 3);
+        m.incr("stream.refreshes", 1);
+        let r = m.stream_report();
+        assert!(r.contains("64 points ingested"), "{r}");
+        assert!(r.contains("2 duplicates"), "{r}");
+        assert!(r.contains("saved p50=38"), "{r}");
+        assert!(r.contains("3 variance rebuilds"), "{r}");
+        assert!(r.contains("1 full refreshes"), "{r}");
     }
 
     #[test]

@@ -31,6 +31,11 @@ pub enum Error {
     /// predictive caches, serving-grid budget exceeded).
     Snapshot(String),
 
+    /// Streaming-ingestion problems (non-finite observations, a model
+    /// family that cannot be updated online, a stalled incremental
+    /// solve).
+    Stream(String),
+
     /// PJRT/XLA runtime failure (or the `xla` feature is not compiled in).
     Xla(String),
 
@@ -63,6 +68,7 @@ impl fmt::Display for Error {
             Error::Grid(msg) => write!(f, "grid error: {msg}"),
             Error::Artifact(msg) => write!(f, "artifact error: {msg}"),
             Error::Snapshot(msg) => write!(f, "snapshot error: {msg}"),
+            Error::Stream(msg) => write!(f, "stream error: {msg}"),
             Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
             Error::Io(e) => write!(f, "{e}"),
             Error::Config(msg) => write!(f, "config error: {msg}"),

@@ -30,7 +30,7 @@
 
 use super::adam::Adam;
 use super::hypers::GpHypers;
-use crate::grid::{build_grid, grid_ski_operator, GridSpec};
+use crate::grid::{build_grid, grid_ski_operator, Grid1d, GridSpec};
 use crate::kernels::ProductKernel;
 use crate::linalg::{dot, Matrix};
 use crate::operators::{
@@ -451,6 +451,23 @@ impl MvmGp {
     /// layer when freezing the model into a snapshot.
     pub fn alpha(&self) -> Option<&[f64]> {
         self.alpha.as_deref()
+    }
+
+    /// The fitted axes of this model's inducing grid, when the spec is a
+    /// single-term dense (rectilinear/uniform) grid — what the streaming
+    /// layer (`crate::stream::IncrementalState::from_mvm`) freezes for
+    /// online updates. Sparse (multi-term) specs are a typed error.
+    pub fn fitted_grid_axes(&self) -> Result<Vec<Grid1d>> {
+        let grid = build_grid(&self.xs, &self.cfg.grid)?;
+        let terms = grid.terms();
+        if terms.len() != 1 || terms[0].coeff != 1.0 {
+            return Err(Error::Grid(format!(
+                "{} is not a single-term dense grid ({} terms)",
+                self.cfg.grid.describe(),
+                terms.len()
+            )));
+        }
+        Ok(terms[0].axes.clone())
     }
 
     /// The grid-side stencil cache backing `predict_mean`, when the grid

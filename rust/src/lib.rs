@@ -39,7 +39,12 @@
 //! inducing grid, after which each query costs one sparse
 //! interpolation-stencil dot (mean) plus a rank-r gemv (variance), and a
 //! request batcher + TCP front-end (`skip-gp serve`) coalesce concurrent
-//! traffic into blocks for the batched engine.
+//! traffic into blocks for the batched engine. Served models stay
+//! **live** through the streaming subsystem ([`stream`]): new
+//! observations extend the interpolation matrix by one sparse stencil
+//! row and re-solve `K̂α = y` with warm-started PCG (reusing the cached
+//! preconditioner), patching the predictive caches in place instead of
+//! refitting — `skip-gp serve --live` / `skip-gp observe` end to end.
 //!
 //! Inducing grids are a first-class subsystem ([`grid`]): every grid
 //! consumer — SKI operators, KISS-GP, the serving caches, snapshots —
@@ -73,6 +78,7 @@ pub mod operators;
 pub mod runtime;
 pub mod serve;
 pub mod solvers;
+pub mod stream;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -5,7 +5,9 @@
 //! skip-gp bench all [options]            run every experiment
 //! skip-gp train [options]                train a SKIP GP on a dataset
 //! skip-gp snapshot [options]             train + freeze a model snapshot
-//! skip-gp serve --snapshot F [options]   serve predictions over TCP
+//! skip-gp serve --snapshot F [options]   serve a frozen snapshot over TCP
+//! skip-gp serve --live [options]         serve a LIVE model (accepts observe)
+//! skip-gp observe [--addr A] [options]   stream observations to a live server
 //! skip-gp artifacts [--dir D]            inspect / smoke-test AOT artifacts
 //! skip-gp list                           list datasets and experiments
 //! ```
@@ -26,6 +28,7 @@ use skip_gp::serve::{
     VarianceMode,
 };
 use skip_gp::solvers::PrecondSpec;
+use skip_gp::stream::{IncrementalState, StreamConfig};
 use skip_gp::util::{mae, Timer};
 use skip_gp::{Error, Result};
 use std::collections::HashMap;
@@ -121,6 +124,14 @@ USAGE:
                    [--precond rank:K|jacobi|none]
                    [--var exact|lanczos|none] [--var-rank R]
   skip-gp serve  --snapshot F [--bind ADDR] [--max-batch N] [--max-wait-ms F]
+  skip-gp serve  --live [--dataset NAME] [--scale F] [--steps N]
+                 [--grid M|M1xM2x…] [--precond rank:K|jacobi|none]
+                 [--var exact|lanczos|none] [--var-rank R]
+                 [--refresh-every N] [--var-drift N] [--error-z F]
+                 [--log-capacity N] [--snapshot-out F] [--replay F]
+                 [--bind ADDR] [--max-batch N] [--max-wait-ms F]
+  skip-gp observe [--addr HOST:PORT] [--file F | --point \"x1 … xd y\"]
+                 (default: reads `x1 … xd y` lines from stdin)
   skip-gp artifacts [--dir D]
   skip-gp list"
     );
@@ -139,6 +150,7 @@ fn main() {
         "train" => cmd_train(rest),
         "snapshot" => cmd_snapshot(rest),
         "serve" => cmd_serve(rest),
+        "observe" => cmd_observe(rest),
         "artifacts" => cmd_artifacts(rest),
         "list" => cmd_list(),
         "-h" | "--help" | "help" => usage(),
@@ -340,26 +352,103 @@ fn cmd_snapshot(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Serve a snapshot over the TCP line protocol until interrupted.
+/// Serve a snapshot (frozen) or a live model over the TCP line protocol
+/// until interrupted.
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let opts = Opts::parse(rest)?;
-    let path = PathBuf::from(
-        opts.get_str("snapshot")
-            .ok_or_else(|| Error::Config("serve requires --snapshot FILE".into()))?,
-    );
     let bind = opts.get_str("bind").unwrap_or_else(|| "127.0.0.1:7470".into());
     let max_batch: usize = opts.get("max-batch", 64)?;
     let max_wait_ms: f64 = opts.get("max-wait-ms", 2.0)?;
-    let snap = ModelSnapshot::load(&path)?;
-    println!(
-        "loaded {} (d={}, {} grid cells, variance rank {}, format v{})",
-        path.display(),
-        snap.cache.dim(),
-        snap.cache.total_grid(),
-        snap.cache.var_rank(),
-        snap.version
-    );
-    let engine = Arc::new(ServeEngine::new(snap)?);
+    let snapshot_out = opts.get_str("snapshot-out").map(PathBuf::from);
+
+    let engine = if opts.flag("live") {
+        // Train (or just refresh) a KISS model and put it behind the
+        // streaming layer: `observe` requests ingest into it online.
+        let name = opts.get_str("dataset").unwrap_or_else(|| "power".into());
+        let spec = dataset_by_name(&name)
+            .ok_or_else(|| Error::Config(format!("unknown dataset '{name}'")))?;
+        let scale: f64 = opts.get("scale", 0.05)?;
+        let steps: usize = opts.get("steps", 10)?;
+        let grid = parse_grid_spec(&opts.get_str("grid").unwrap_or_else(|| "32".into()))?;
+        let precond =
+            PrecondSpec::parse(&opts.get_str("precond").unwrap_or_else(|| "none".into()))?;
+        let var_rank: usize = opts.get("var-rank", 64)?;
+        let variance = match opts.get_str("var").as_deref() {
+            None | Some("lanczos") => VarianceMode::Lanczos(var_rank),
+            Some("exact") => VarianceMode::Exact,
+            Some("none") => VarianceMode::None,
+            Some(v) => return Err(Error::Config(format!("unknown variance mode '{v}'"))),
+        };
+        let data = generate(spec, scale);
+        let mut cfg = MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid,
+            ..Default::default()
+        };
+        cfg.cg.precond = precond;
+        let mut gp = MvmGp::new(
+            data.xtrain.clone(),
+            data.ytrain.clone(),
+            GpHypers::init_for_dim(data.d()),
+            cfg,
+        );
+        if steps > 0 {
+            println!("training on {name} for {steps} steps before going live…");
+            gp.fit(steps, 0.1)?;
+        }
+        let scfg = StreamConfig {
+            refresh_every: opts.get("refresh-every", 256)?,
+            var_drift_budget: opts.get("var-drift", 32)?,
+            error_z: opts.get("error-z", 8.0)?,
+            log_capacity: opts.get("log-capacity", 1024)?,
+            variance,
+            ..Default::default()
+        };
+        let mut live = IncrementalState::from_mvm(&gp, scfg)?;
+        // Resume a previous live session: replay the pending log of a
+        // checkpoint taken over the same base dataset. (The base model
+        // above does not contain those streamed points, so replay is
+        // exactly once; see the snapshot-format docs.) The replay window
+        // is the last refresh — points a full refresh absorbed before
+        // the checkpoint are not recoverable from the snapshot alone.
+        if let Some(replay) = opts.get_str("replay") {
+            let ckpt = ModelSnapshot::load(&PathBuf::from(&replay))?;
+            let report = live.ingest_observations(&ckpt.pending)?;
+            println!(
+                "replayed {} of {} pending observations from {replay} \
+                 ({} duplicates)",
+                report.accepted,
+                ckpt.pending.len(),
+                report.duplicates
+            );
+        }
+        println!(
+            "live model on {name}: n={}, d={}, grid {}, precond {} \
+             (observe verb enabled)",
+            live.n(),
+            live.dim(),
+            gp.cfg.grid.describe(),
+            precond.describe()
+        );
+        Arc::new(ServeEngine::new_live(live)?)
+    } else {
+        let path = PathBuf::from(opts.get_str("snapshot").ok_or_else(|| {
+            Error::Config("serve requires --snapshot FILE (or --live)".into())
+        })?);
+        let snap = ModelSnapshot::load(&path)?;
+        println!(
+            "loaded {} (d={}, {} grid cells, variance rank {}, format v{}, \
+             {} pending observations)",
+            path.display(),
+            snap.cache.dim(),
+            snap.cache.total_grid(),
+            snap.cache.var_rank(),
+            snap.version,
+            snap.pending.len()
+        );
+        Arc::new(ServeEngine::new(snap)?)
+    };
+
     let server = Server::start(
         engine.clone(),
         ServerConfig {
@@ -371,14 +460,80 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         },
     )?;
     println!(
-        "serving on {} (line protocol: `predict x1 … xd`, `stats`, `quit`)",
+        "serving on {} (line protocol: `predict x1 … xd`, `observe x1 … xd y`, \
+         `stats`, `quit`)",
         server.addr()
     );
-    // Foreground serving loop: periodic stats until the process is killed.
+    // Foreground serving loop: periodic stats (and, for live engines,
+    // snapshot checkpoints) until the process is killed.
     loop {
         std::thread::sleep(Duration::from_secs(30));
         println!("stats: {}", engine.stats_line());
+        let streams = engine.metrics.stream_report();
+        if !streams.is_empty() {
+            print!("{streams}");
+        }
+        if let Some(out) = &snapshot_out {
+            // A failed checkpoint (disk full, directory vanished) must
+            // not take the live server down — log it and retry on the
+            // next tick.
+            match engine.save_snapshot(out) {
+                Ok(()) => println!("checkpointed {}", out.display()),
+                Err(e) => eprintln!("checkpoint to {} failed: {e}", out.display()),
+            }
+        }
     }
+}
+
+/// Stream observations from stdin / a file / a single `--point` to a
+/// running live server, printing each ack.
+fn cmd_observe(rest: &[String]) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let opts = Opts::parse(rest)?;
+    let addr = opts.get_str("addr").unwrap_or_else(|| "127.0.0.1:7470".into());
+    let stream = TcpStream::connect(&addr)
+        .map_err(|e| Error::Config(format!("cannot connect to {addr}: {e}")))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+
+    let input: Box<dyn BufRead> = match (opts.get_str("file"), opts.get_str("point")) {
+        (Some(f), _) => Box::new(BufReader::new(std::fs::File::open(f)?)),
+        (None, Some(p)) => Box::new(std::io::Cursor::new(p.into_bytes())),
+        (None, None) => {
+            eprintln!("reading `x1 … xd y` lines from stdin (^D to finish)");
+            Box::new(BufReader::new(std::io::stdin()))
+        }
+    };
+
+    let (mut sent, mut acked, mut dups, mut errs) = (0u64, 0u64, 0u64, 0u64);
+    let mut resp = String::new();
+    for line in input.lines() {
+        let line = line?;
+        let obs = line.trim();
+        if obs.is_empty() || obs.starts_with('#') {
+            continue;
+        }
+        writeln!(writer, "observe {obs}")?;
+        sent += 1;
+        resp.clear();
+        if reader.read_line(&mut resp)? == 0 {
+            return Err(Error::Config("server closed the connection".into()));
+        }
+        let r = resp.trim();
+        println!("{r}");
+        if r.starts_with("ok dup") {
+            dups += 1;
+        } else if r.starts_with("ok") {
+            acked += 1;
+        } else {
+            errs += 1;
+        }
+    }
+    writeln!(writer, "quit").ok();
+    println!("observed {acked}/{sent} points ({dups} duplicates, {errs} errors)");
+    Ok(())
 }
 
 fn cmd_bench(rest: &[String]) -> Result<()> {

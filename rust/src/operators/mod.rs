@@ -284,6 +284,44 @@ impl<'a> LinearOp for ScaledOp<'a> {
     }
 }
 
+/// Shared affine arithmetic `scale·(A·) + shift·(·)` behind both
+/// [`AffineOp`] (owned) and [`AffineRef`] (borrowed) — one
+/// implementation, so the two wrappers can never drift float-for-float
+/// (the streaming layer's incremental solves are pinned bitwise against
+/// the batch path's operator).
+fn affine_matvec(inner: &dyn LinearOp, scale: f64, shift: f64, v: &[f64]) -> Vec<f64> {
+    let mut out = inner.matvec(v);
+    for (o, &x) in out.iter_mut().zip(v) {
+        *o = scale * *o + shift * x;
+    }
+    out
+}
+
+fn affine_matmat(inner: &dyn LinearOp, scale: f64, shift: f64, m: &Matrix) -> Matrix {
+    let mut out = inner.matmat(m);
+    for (o, &x) in out.data.iter_mut().zip(&m.data) {
+        *o = scale * *o + shift * x;
+    }
+    out
+}
+
+fn affine_col_at(inner: &dyn LinearOp, scale: f64, shift: f64, j: usize) -> Vec<f64> {
+    let mut c = inner.col_at(j);
+    for v in c.iter_mut() {
+        *v *= scale;
+    }
+    c[j] += shift;
+    c
+}
+
+fn affine_diag(inner: &dyn LinearOp, scale: f64, shift: f64) -> Option<Vec<f64>> {
+    let mut d = inner.diag()?;
+    for v in d.iter_mut() {
+        *v = scale * *v + shift;
+    }
+    Some(d)
+}
+
 /// Owned affine wrapper `scale·A + shift·I` — the covariance
 /// `K̂ = σ_f² K + σ_n² I` of Eqs. (1)–(3) as a self-contained operator.
 pub struct AffineOp {
@@ -298,42 +336,58 @@ impl LinearOp for AffineOp {
     }
 
     fn matvec(&self, v: &[f64]) -> Vec<f64> {
-        let mut out = self.inner.matvec(v);
-        for (o, &x) in out.iter_mut().zip(v) {
-            *o = self.scale * *o + self.shift * x;
-        }
-        out
+        affine_matvec(self.inner.as_ref(), self.scale, self.shift, v)
     }
 
     /// Fast path: the covariance solve `K̂ X = B` of the batched engine
     /// funnels through here — one inner `matmat` for the whole block,
     /// then a fused scale-and-shift over the contiguous buffer.
     fn matmat(&self, m: &Matrix) -> Matrix {
-        let mut out = self.inner.matmat(m);
-        for (o, &x) in out.data.iter_mut().zip(&m.data) {
-            *o = self.scale * *o + self.shift * x;
-        }
-        out
+        affine_matmat(self.inner.as_ref(), self.scale, self.shift, m)
     }
 
     fn col_at(&self, j: usize) -> Vec<f64> {
-        let mut c = self.inner.col_at(j);
-        for v in c.iter_mut() {
-            *v *= self.scale;
-        }
-        c[j] += self.shift;
-        c
+        affine_col_at(self.inner.as_ref(), self.scale, self.shift, j)
     }
 
     /// Composes from the inner diagonal: `scale·diag(A) + shift` — this is
     /// what hands the pivoted-Cholesky preconditioner its adaptive pivots
     /// on the covariance `K̂ = σ_f²K + σ_n²I`.
     fn diag(&self) -> Option<Vec<f64>> {
-        let mut d = self.inner.diag()?;
-        for v in d.iter_mut() {
-            *v = self.scale * *v + self.shift;
-        }
-        Some(d)
+        affine_diag(self.inner.as_ref(), self.scale, self.shift)
+    }
+}
+
+/// Borrowed [`AffineOp`]: `scale·A + shift·I` over an operator the
+/// caller keeps owning and mutating between solves — the streaming
+/// layer's covariance view over its in-place-growing SKI operator
+/// (`crate::stream`). Identical arithmetic to `AffineOp` by
+/// construction (both delegate to the same helpers).
+pub struct AffineRef<'a> {
+    pub inner: &'a dyn LinearOp,
+    pub scale: f64,
+    pub shift: f64,
+}
+
+impl LinearOp for AffineRef<'_> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        affine_matvec(self.inner, self.scale, self.shift, v)
+    }
+
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        affine_matmat(self.inner, self.scale, self.shift, m)
+    }
+
+    fn col_at(&self, j: usize) -> Vec<f64> {
+        affine_col_at(self.inner, self.scale, self.shift, j)
+    }
+
+    fn diag(&self) -> Option<Vec<f64>> {
+        affine_diag(self.inner, self.scale, self.shift)
     }
 }
 

@@ -17,6 +17,18 @@ use crate::operators::lowrank::{
 use std::path::Path;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+/// The `xla` feature alone selects this stub with a diagnostic that
+/// points at the missing binding; without it, at the missing feature.
+#[cfg(feature = "xla")]
+fn unavailable() -> Error {
+    Error::Xla(
+        "`xla` feature is on but no PJRT binding is vendored: vendor the \
+         xla crate (see Cargo.toml) and rebuild with --features xla-bindings"
+            .into(),
+    )
+}
+
+#[cfg(not(feature = "xla"))]
 fn unavailable() -> Error {
     Error::Xla(
         "built without the `xla` feature: PJRT artifacts cannot be executed \
@@ -134,6 +146,15 @@ mod tests {
     fn load_reports_missing_feature() {
         let err = PjrtBackend::load(Path::new("/nonexistent")).unwrap_err();
         assert!(err.to_string().contains("xla"), "got: {err}");
+    }
+
+    /// The xla CI lane exercises this: with the feature on (but no
+    /// binding vendored), the diagnostic points at `xla-bindings`.
+    #[cfg(feature = "xla")]
+    #[test]
+    fn load_with_feature_points_at_missing_binding() {
+        let err = PjrtBackend::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(err.to_string().contains("xla-bindings"), "got: {err}");
     }
 
     #[test]

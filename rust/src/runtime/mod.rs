@@ -7,12 +7,16 @@
 
 pub mod artifact;
 
-/// Real PJRT executor — needs the vendored `xla` binding crate.
-#[cfg(feature = "xla")]
+/// Real PJRT executor — needs `--features xla-bindings` *and* the
+/// vendored `xla` binding crate (see Cargo.toml).
+#[cfg(feature = "xla-bindings")]
 pub mod executor;
 
-/// Native stub with the same API (the offline default; see Cargo.toml).
-#[cfg(not(feature = "xla"))]
+/// Native stub with the same API — the offline default, and what the
+/// `xla` feature alone compiles (with feature-aware diagnostics; CI's
+/// xla lane builds and tests this configuration so the feature wiring
+/// cannot rot unbuilt).
+#[cfg(not(feature = "xla-bindings"))]
 #[path = "executor_stub.rs"]
 pub mod executor;
 

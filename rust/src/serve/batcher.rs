@@ -1,24 +1,34 @@
-//! Request batcher: coalesce concurrent predict requests into blocks.
+//! Request batcher: coalesce concurrent predict *and observe* requests
+//! into blocks.
 //!
 //! Serving cost per query is tiny (one stencil dot + a rank-r gemv, see
 //! [`super::cache`]), so at high request rates the *dispatch* — channel
 //! hops, thread wake-ups, per-call bookkeeping — dominates. The batcher
 //! amortizes it: a worker drains the request queue into blocks of up to
-//! `max_batch` points (waiting at most `max_wait` for stragglers once the
-//! first request of a batch has arrived), pushes the whole n×t block
-//! through [`ServeEngine::predict`] in one call, and fans the answers back
-//! out over per-request channels. Under load the queue is never empty, so
-//! batches fill instantly and `max_wait` only bounds the latency of a
-//! lonely request on an idle server.
+//! `max_batch` requests (waiting at most `max_wait` for stragglers once
+//! the first request of a batch has arrived), then serves the whole
+//! block:
+//!
+//! - **observes first** — every observation in the block rides **one**
+//!   [`ServeEngine::observe_block`] call (one extended α re-solve for the
+//!   whole block, not one per point);
+//! - **predicts second** — the remaining queries go through one
+//!   [`ServeEngine::predict`] call and therefore see every observation
+//!   coalesced into the same block.
+//!
+//! Under load the queue is never empty, so batches fill instantly and
+//! `max_wait` only bounds the latency of a lonely request on an idle
+//! server.
 //!
 //! Per-request latency (enqueue → response ready) is recorded into the
-//! engine's [`Metrics`] latency histogram under `"serve.request"`, and the
-//! realized batch sizes under `"serve.batch_size"` — the two numbers the
-//! throughput bench reports.
+//! engine's [`Metrics`] latency histograms — predictions under
+//! `"serve.request"`, ingests under `"stream.ingest"` (the p50/p99 the
+//! streaming bench reports) — and the realized batch sizes under
+//! `"serve.batch_size"` / `"stream.batch_size"`.
 //!
 //! [`Metrics`]: crate::coordinator::Metrics
 
-use super::server::ServeEngine;
+use super::server::{ObserveAck, ServeEngine};
 use crate::linalg::Matrix;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
@@ -28,7 +38,7 @@ use std::time::{Duration, Instant};
 /// Batching policy.
 #[derive(Clone, Copy, Debug)]
 pub struct BatcherConfig {
-    /// Largest block a single [`ServeEngine::predict`] call may carry.
+    /// Largest request block the worker drains at once.
     pub max_batch: usize,
     /// How long the worker waits for stragglers after the first request
     /// of a batch arrives (zero ⇒ never wait; serve whatever is queued).
@@ -44,10 +54,18 @@ impl Default for BatcherConfig {
     }
 }
 
-struct Request {
-    x: Vec<f64>,
-    enqueued: Instant,
-    resp: Sender<PredictResponse>,
+enum Request {
+    Predict {
+        x: Vec<f64>,
+        enqueued: Instant,
+        resp: Sender<PredictResponse>,
+    },
+    Observe {
+        x: Vec<f64>,
+        y: f64,
+        enqueued: Instant,
+        resp: Sender<ObserveResponse>,
+    },
 }
 
 /// One served prediction plus its request-level accounting.
@@ -58,7 +76,19 @@ pub struct PredictResponse {
     pub var: f64,
     /// Enqueue → response-ready latency.
     pub latency: Duration,
-    /// Size of the block this request was served in.
+    /// Number of predictions served in this request's block.
+    pub batch_size: usize,
+}
+
+/// One acknowledged observation plus its request-level accounting.
+#[derive(Clone, Debug)]
+pub struct ObserveResponse {
+    /// The per-observation ack, or the engine's refusal (e.g. a frozen
+    /// snapshot with no live model behind it).
+    pub result: Result<ObserveAck, String>,
+    /// Enqueue → response-ready latency.
+    pub latency: Duration,
+    /// Number of observations coalesced into this request's ingest.
     pub batch_size: usize,
 }
 
@@ -76,7 +106,7 @@ impl BatchHandle {
     pub fn submit(&self, x: &[f64]) -> Receiver<PredictResponse> {
         assert_eq!(x.len(), self.dim, "query dimensionality mismatch");
         let (tx, rx) = channel();
-        let req = Request {
+        let req = Request::Predict {
             x: x.to_vec(),
             enqueued: Instant::now(),
             resp: tx,
@@ -92,6 +122,28 @@ impl BatchHandle {
         self.submit(x)
             .recv()
             .expect("request batcher shut down while a request was in flight")
+    }
+
+    /// Enqueue an observation `(x, y)`; coalesced with every other
+    /// request in its block (one ingest solve for all of them).
+    pub fn submit_observe(&self, x: &[f64], y: f64) -> Receiver<ObserveResponse> {
+        assert_eq!(x.len(), self.dim, "observation dimensionality mismatch");
+        let (tx, rx) = channel();
+        let req = Request::Observe {
+            x: x.to_vec(),
+            y,
+            enqueued: Instant::now(),
+            resp: tx,
+        };
+        let _ = self.tx.send(req);
+        rx
+    }
+
+    /// Submit an observation and block for the ack.
+    pub fn observe(&self, x: &[f64], y: f64) -> ObserveResponse {
+        self.submit_observe(x, y)
+            .recv()
+            .expect("request batcher shut down while an observation was in flight")
     }
 }
 
@@ -163,27 +215,72 @@ impl RequestBatcher {
                 }
             }
 
-            let t = batch.len();
-            let mut block = Matrix::zeros(t, d);
-            for (i, r) in batch.iter().enumerate() {
-                block.row_mut(i).copy_from_slice(&r.x);
+            // Split the block: observations are folded into the model
+            // first so the block's predictions see them.
+            let mut observes = Vec::new();
+            let mut predicts = Vec::new();
+            for r in batch {
+                match r {
+                    Request::Observe { x, y, enqueued, resp } => {
+                        observes.push((x, y, enqueued, resp));
+                    }
+                    Request::Predict { x, enqueued, resp } => {
+                        predicts.push((x, enqueued, resp));
+                    }
+                }
             }
-            let (means, vars) = engine.predict(&block);
-            let done = Instant::now();
-            let mut latencies = Vec::with_capacity(t);
-            for (i, r) in batch.into_iter().enumerate() {
-                let latency = done.saturating_duration_since(r.enqueued);
-                latencies.push(latency.as_secs_f64());
-                // A dropped receiver (client gone) is not an error.
-                let _ = r.resp.send(PredictResponse {
-                    mean: means[i],
-                    var: vars[i],
-                    latency,
-                    batch_size: t,
-                });
+
+            if !observes.is_empty() {
+                let k = observes.len();
+                let mut xs = Matrix::zeros(k, d);
+                let mut ys = Vec::with_capacity(k);
+                for (i, (x, y, _, _)) in observes.iter().enumerate() {
+                    xs.row_mut(i).copy_from_slice(x);
+                    ys.push(*y);
+                }
+                let acks = engine.observe_block(&xs, &ys);
+                let done = Instant::now();
+                let mut latencies = Vec::with_capacity(k);
+                for (i, (_, _, enqueued, resp)) in observes.into_iter().enumerate() {
+                    let latency = done.saturating_duration_since(enqueued);
+                    latencies.push(latency.as_secs_f64());
+                    let result = match &acks {
+                        Ok(a) => Ok(a[i]),
+                        Err(e) => Err(e.to_string()),
+                    };
+                    // A dropped receiver (client gone) is not an error.
+                    let _ = resp.send(ObserveResponse {
+                        result,
+                        latency,
+                        batch_size: k,
+                    });
+                }
+                engine.metrics.record_latency_many("stream.ingest", &latencies);
+                engine.metrics.observe("stream.batch_size", k as u64);
             }
-            engine.metrics.record_latency_many("serve.request", &latencies);
-            engine.metrics.observe("serve.batch_size", t as u64);
+
+            if !predicts.is_empty() {
+                let t = predicts.len();
+                let mut block = Matrix::zeros(t, d);
+                for (i, (x, _, _)) in predicts.iter().enumerate() {
+                    block.row_mut(i).copy_from_slice(x);
+                }
+                let (means, vars) = engine.predict(&block);
+                let done = Instant::now();
+                let mut latencies = Vec::with_capacity(t);
+                for (i, (_, enqueued, resp)) in predicts.into_iter().enumerate() {
+                    let latency = done.saturating_duration_since(enqueued);
+                    latencies.push(latency.as_secs_f64());
+                    let _ = resp.send(PredictResponse {
+                        mean: means[i],
+                        var: vars[i],
+                        latency,
+                        batch_size: t,
+                    });
+                }
+                engine.metrics.record_latency_many("serve.request", &latencies);
+                engine.metrics.observe("serve.batch_size", t as u64);
+            }
         }
     }
 }

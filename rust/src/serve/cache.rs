@@ -38,7 +38,7 @@
 use crate::gp::GpHypers;
 use crate::grid::{tensor_stencil, tensor_strides, Grid1d, GridSpec, InducingGrid};
 use crate::kernels::Stationary1d;
-use crate::linalg::{Cholesky, Matrix};
+use crate::linalg::{Cholesky, Matrix, SymToeplitz};
 use crate::operators::{kron_toeplitz_matvec, LinearOp};
 use crate::solvers::lanczos::lanczos;
 use crate::util::parallel::par_map_range;
@@ -156,6 +156,15 @@ impl PredictCache {
     /// The per-term caches.
     pub fn terms(&self) -> &[TermCache] {
         &self.terms
+    }
+
+    /// Mutable access to the per-term caches — the streaming path
+    /// ([`crate::stream`]) patches the mean cache in place after each
+    /// incremental α re-solve instead of rebuilding the whole cache.
+    /// Callers must preserve the invariants [`Self::from_parts`] checks
+    /// (buffer sizes against the axes, one variance rank across terms).
+    pub fn terms_mut(&mut self) -> &mut [TermCache] {
+        &mut self.terms
     }
 
     /// Input dimensionality d.
@@ -292,6 +301,42 @@ impl PredictCache {
     }
 }
 
+/// Scatter `Wᵀ v` (v data-sized) onto one term's grid: one stencil
+/// decode per data row. Shared by the snapshot-time cache build and the
+/// streaming layer's scatter bookkeeping ([`crate::stream`]), so the
+/// two can never drift.
+pub fn scatter_wt(xs: &Matrix, v: &[f64], axes: &[Grid1d]) -> Vec<f64> {
+    assert_eq!(xs.rows, v.len());
+    let dims: Vec<usize> = axes.iter().map(|g| g.m).collect();
+    let strides = tensor_strides(&dims);
+    let total: usize = dims.iter().product();
+    let mut out = vec![0.0; total];
+    for i in 0..xs.rows {
+        let a = v[i];
+        tensor_stencil(xs.row(i), axes, &strides, |g, w| {
+            out[g] += w * a;
+        });
+    }
+    out
+}
+
+/// One term's mean cache from its scatter: `σ_f² (⊗K) wta` — one
+/// Kronecker–Toeplitz apply plus the output scale. Shared by
+/// [`PredictCache::build`] and the streaming layer's per-ingest mean
+/// patch.
+pub fn mean_from_scatter(
+    wta: &[f64],
+    factors: &[SymToeplitz],
+    dims: &[usize],
+    sf2: f64,
+) -> Vec<f64> {
+    let mut mean = kron_toeplitz_matvec(factors, dims, wta);
+    for v in mean.iter_mut() {
+        *v *= sf2;
+    }
+    mean
+}
+
 /// Build one term's `(uₜ, Rₜ)` caches.
 fn build_term(
     xs: &Matrix,
@@ -312,17 +357,8 @@ fn build_term(
 
     // Mean cache: scatter Wᵀα onto the grid, one stencil decode per
     // training point, then one Kronecker–Toeplitz apply.
-    let mut wta = vec![0.0; total];
-    for i in 0..xs.rows {
-        let a = alpha[i];
-        tensor_stencil(xs.row(i), axes, &strides, |g, w| {
-            wta[g] += w * a;
-        });
-    }
-    let mut mean = kron_toeplitz_matvec(&factors, &dims, &wta);
-    for v in mean.iter_mut() {
-        *v *= hypers.sf2();
-    }
+    let wta = scatter_wt(xs, alpha, axes);
+    let mean = mean_from_scatter(&wta, &factors, &dims, hypers.sf2());
 
     // Variance cache: Wᵀ S scatter (each training row decoded once for
     // all r columns), then the grid apply per column in parallel.

@@ -13,10 +13,12 @@
 //! - [`snapshot`] — a versioned, zero-dependency binary format that
 //!   persists hypers, grid spec, `α`, and both caches, and reloads them
 //!   without touching training data;
-//! - [`batcher`] — coalesces concurrent requests into n×t blocks with
-//!   configurable max-batch/max-wait and per-request latency accounting;
-//! - [`server`] — the in-process [`ServeEngine`] and a `std::net` TCP
-//!   line-protocol server behind `skip-gp serve`.
+//! - [`batcher`] — coalesces concurrent requests (predictions *and*
+//!   observations, see [`crate::stream`]) into blocks with configurable
+//!   max-batch/max-wait and per-request latency accounting;
+//! - [`server`] — the in-process [`ServeEngine`] (frozen snapshot or
+//!   live incremental model) and a `std::net` TCP line-protocol server
+//!   behind `skip-gp serve` / `skip-gp serve --live`.
 //!
 //! ```
 //! use skip_gp::gp::{ExactGp, GpHypers};
@@ -48,9 +50,11 @@ pub mod cache;
 pub mod server;
 pub mod snapshot;
 
-pub use batcher::{BatchHandle, BatcherConfig, PredictResponse, RequestBatcher};
+pub use batcher::{
+    BatchHandle, BatcherConfig, ObserveResponse, PredictResponse, RequestBatcher,
+};
 pub use cache::{PredictCache, TermCache, VarianceMode};
-pub use server::{ServeEngine, Server, ServerConfig};
+pub use server::{ObserveAck, ServeEngine, Server, ServerConfig};
 pub use snapshot::{
     ModelSnapshot, SnapshotConfig, SnapshotVariant, SNAPSHOT_MIN_VERSION, SNAPSHOT_VERSION,
 };

@@ -1,13 +1,21 @@
 //! The serving front-end: an in-process [`ServeEngine`] plus a
 //! `std::net` TCP line-protocol server (`skip-gp serve`).
 //!
-//! The engine owns a loaded [`ModelSnapshot`] and a [`Metrics`] registry;
-//! every prediction — one-at-a-time or batched — goes through
+//! The engine owns a published [`ModelSnapshot`] and a [`Metrics`]
+//! registry; every prediction — one-at-a-time or batched — goes through
 //! [`ServeEngine::predict`], which is where QPS counters and per-batch
-//! timers accumulate. The TCP server accepts any number of concurrent
-//! connections, forwards each request line into a shared
-//! [`RequestBatcher`], and therefore coalesces traffic *across*
-//! connections into blocks.
+//! timers accumulate. A **live** engine ([`ServeEngine::new_live`])
+//! additionally owns a [`IncrementalState`] and accepts observations:
+//! [`ServeEngine::observe_block`] ingests a block (one warm-started α
+//! re-solve for all of it, see [`crate::stream`]) and republishes the
+//! updated snapshot, so subsequent predictions reflect the new data. A
+//! frozen engine ([`ServeEngine::new`]) refuses observations with a
+//! typed error.
+//!
+//! The TCP server accepts any number of concurrent connections, forwards
+//! each request line into a shared [`RequestBatcher`], and therefore
+//! coalesces traffic *across* connections into blocks — observations
+//! and predictions alike.
 //!
 //! # Wire protocol
 //!
@@ -18,43 +26,68 @@
 //! ```text
 //! → predict <x1> <x2> … <xd>     (the word `predict` is optional)
 //! ← ok <mean> <variance> <latency_us> <batch_size>
+//! → observe <x1> … <xd> <y>
+//! ← ok <seq> <n> <pending> <latency_us> <batch_size>
+//! ← ok dup <n> <pending> <latency_us> <batch_size>   (bitwise duplicate)
 //! → ping                          ← ok pong
 //! → dim                           ← ok <d>
 //! → stats                         ← ok qps=… p50_us=… p99_us=… served=…
 //! → quit                          (closes the connection)
-//! ← err <message>                 (malformed input; connection stays open)
+//! ← err <message>                 (malformed input / frozen model;
+//!                                  connection stays open)
 //! ```
 //!
 //! Floats are printed with Rust's shortest-round-trip formatting, so a
 //! client parsing them back gets bit-identical values.
 
 use super::batcher::{BatcherConfig, RequestBatcher};
-use super::cache::PredictCache;
 use super::snapshot::ModelSnapshot;
 use crate::coordinator::Metrics;
 use crate::linalg::Matrix;
+use crate::stream::{IncrementalState, RowOutcome};
 use crate::{Error, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-/// In-process prediction engine over a loaded snapshot.
+/// Per-observation acknowledgement from [`ServeEngine::observe_block`].
+#[derive(Clone, Copy, Debug)]
+pub struct ObserveAck {
+    /// Observation-log sequence number (0 for duplicates).
+    pub seq: u64,
+    /// The observation bitwise-duplicated a pending one and was dropped.
+    pub duplicate: bool,
+    /// Model size after the ingest.
+    pub n: usize,
+    /// Pending (un-refreshed) observations after the ingest.
+    pub pending: usize,
+    /// Whether this ingest escalated to a full refresh.
+    pub refreshed: bool,
+}
+
+/// In-process prediction engine over a published snapshot, optionally
+/// backed by a live incremental model.
 pub struct ServeEngine {
-    snapshot: ModelSnapshot,
-    /// QPS counters, per-batch timers, and the request-latency histogram
+    /// The published snapshot predictions are served from. Live engines
+    /// republish it after every ingest.
+    state: RwLock<ModelSnapshot>,
+    /// The live model behind `observe` (None ⇒ frozen snapshot).
+    stream: Option<Mutex<IncrementalState>>,
+    dim: usize,
+    /// QPS counters, per-batch timers, and the request-latency histograms
     /// (fed by the batcher).
     pub metrics: Metrics,
     started: Instant,
 }
 
 impl ServeEngine {
-    /// Wrap a snapshot for serving. Requires a variance cache — a serving
-    /// endpoint that silently returns no uncertainty is a footgun — and
-    /// reports its absence as [`Error::Snapshot`] so CLI callers fail
-    /// cleanly instead of panicking.
+    /// Wrap a frozen snapshot for serving. Requires a variance cache — a
+    /// serving endpoint that silently returns no uncertainty is a
+    /// footgun — and reports its absence as [`Error::Snapshot`] so CLI
+    /// callers fail cleanly instead of panicking.
     pub fn new(snapshot: ModelSnapshot) -> Result<Self> {
         if !snapshot.cache.has_variance() {
             return Err(Error::Snapshot(
@@ -63,8 +96,33 @@ impl ServeEngine {
                     .into(),
             ));
         }
+        let dim = snapshot.cache.dim();
         Ok(ServeEngine {
-            snapshot,
+            state: RwLock::new(snapshot),
+            stream: None,
+            dim,
+            metrics: Metrics::new(),
+            started: Instant::now(),
+        })
+    }
+
+    /// Wrap a live incremental model: predictions come from its
+    /// published snapshot, and `observe` requests ingest into it. The
+    /// same variance-cache requirement as [`ServeEngine::new`] applies.
+    pub fn new_live(live: IncrementalState) -> Result<Self> {
+        if !live.cache().has_variance() {
+            return Err(Error::Snapshot(
+                "live model has no variance cache — use a StreamConfig \
+                 with VarianceMode::Exact or VarianceMode::Lanczos"
+                    .into(),
+            ));
+        }
+        let dim = live.dim();
+        let snapshot = live.to_snapshot();
+        Ok(ServeEngine {
+            state: RwLock::new(snapshot),
+            stream: Some(Mutex::new(live)),
+            dim,
             metrics: Metrics::new(),
             started: Instant::now(),
         })
@@ -72,27 +130,104 @@ impl ServeEngine {
 
     /// Input dimensionality d.
     pub fn dim(&self) -> usize {
-        self.snapshot.cache.dim()
+        self.dim
     }
 
-    /// The underlying predictive cache.
-    pub fn cache(&self) -> &PredictCache {
-        &self.snapshot.cache
+    /// True iff this engine accepts observations.
+    pub fn is_live(&self) -> bool {
+        self.stream.is_some()
     }
 
-    /// The snapshot being served.
-    pub fn snapshot(&self) -> &ModelSnapshot {
-        &self.snapshot
+    /// A clone of the currently-published snapshot (what a `predict`
+    /// sees right now; includes the pending log on live engines).
+    pub fn snapshot(&self) -> ModelSnapshot {
+        self.state.read().unwrap().clone()
     }
 
     /// Serve a block of queries: (means, latent variances).
     pub fn predict(&self, xtest: &Matrix) -> (Vec<f64>, Vec<f64>) {
-        let out = self
-            .metrics
-            .time("serve.predict_block", || self.snapshot.cache.predict(xtest));
+        let out = self.metrics.time("serve.predict_block", || {
+            self.state.read().unwrap().cache.predict(xtest)
+        });
         self.metrics.incr("serve.points", xtest.rows as u64);
         self.metrics.incr("serve.batches", 1);
         out
+    }
+
+    /// Ingest a block of observations into the live model (one extended
+    /// warm-started α re-solve for the whole block) and republish the
+    /// serving snapshot. Frozen engines return [`Error::Stream`].
+    ///
+    /// Returns one [`ObserveAck`] per input row, in order.
+    pub fn observe_block(&self, xs: &Matrix, ys: &[f64]) -> Result<Vec<ObserveAck>> {
+        let stream = self.stream.as_ref().ok_or_else(|| {
+            Error::Stream(
+                "this engine serves a frozen snapshot — observations need a \
+                 live model (skip-gp serve --live)"
+                    .into(),
+            )
+        })?;
+        let report = self.metrics.time("stream.ingest_block", || {
+            let mut live = stream.lock().unwrap();
+            let report = live.ingest_block(xs, ys)?;
+            // Republish by value: `to_snapshot` clones α + both caches
+            // (≈ M·(1+r) floats) once per coalesced block — simple and
+            // lock-light (the write lock is held only for the swap, the
+            // clone happens under the stream mutex predictions never
+            // take). Revisit with structural sharing if M·r grows to
+            // where the per-block memcpy shows up next to the solve.
+            let snapshot = live.to_snapshot();
+            *self.state.write().unwrap() = snapshot;
+            Ok::<_, Error>(report)
+        })?;
+
+        // stream.* metrics: ingest effort, warm-start savings, and
+        // cache patch-vs-rebuild accounting.
+        self.metrics.incr("stream.points", report.accepted as u64);
+        self.metrics.incr("stream.duplicates", report.duplicates as u64);
+        self.metrics.incr("stream.batches", 1);
+        if report.accepted > 0 {
+            self.metrics
+                .observe("stream.solve.iters", report.solve_iters as u64);
+            self.metrics
+                .observe("stream.solve.iters_saved", report.iters_saved as u64);
+            self.metrics.incr("stream.cache.mean_patches", 1);
+            self.metrics
+                .incr("stream.cache.rows_patched", report.rows_patched as u64);
+        }
+        if report.var_rebuilt {
+            self.metrics.incr("stream.cache.var_rebuilds", 1);
+        }
+        if report.refreshed.is_some() {
+            self.metrics.incr("stream.refreshes", 1);
+        }
+
+        Ok(report
+            .outcomes
+            .iter()
+            .map(|o| match *o {
+                RowOutcome::Accepted { seq } => ObserveAck {
+                    seq,
+                    duplicate: false,
+                    n: report.n,
+                    pending: report.pending,
+                    refreshed: report.refreshed.is_some(),
+                },
+                RowOutcome::Duplicate => ObserveAck {
+                    seq: 0,
+                    duplicate: true,
+                    n: report.n,
+                    pending: report.pending,
+                    refreshed: false,
+                },
+            })
+            .collect())
+    }
+
+    /// Persist the currently-published snapshot (live engines include
+    /// their pending log — format v3).
+    pub fn save_snapshot(&self, path: &std::path::Path) -> Result<()> {
+        self.state.read().unwrap().save(path)
     }
 
     /// Points served per wall-clock second since the engine was created.
@@ -104,14 +239,30 @@ impl ServeEngine {
     /// One-line human summary (the `stats` wire command).
     pub fn stats_line(&self) -> String {
         let lat = self.metrics.latency_snapshot("serve.request");
-        format!(
+        let mut line = format!(
             "qps={:.0} p50_us={:.1} p99_us={:.1} served={} batches={}",
             self.lifetime_qps(),
             lat.p50_s * 1e6,
             lat.p99_s * 1e6,
             self.metrics.counter("serve.points"),
             self.metrics.counter("serve.batches"),
-        )
+        );
+        if self.is_live() {
+            let ingest = self.metrics.latency_snapshot("stream.ingest");
+            let (n, pending) = {
+                let s = self.state.read().unwrap();
+                (s.alpha.len(), s.pending.len())
+            };
+            line.push_str(&format!(
+                " n={n} pending={pending} ingested={} ingest_p50_us={:.1} \
+                 ingest_p99_us={:.1} refreshes={}",
+                self.metrics.counter("stream.points"),
+                ingest.p50_s * 1e6,
+                ingest.p99_s * 1e6,
+                self.metrics.counter("stream.refreshes"),
+            ));
+        }
+        line
     }
 }
 
@@ -234,6 +385,22 @@ impl Drop for Server {
     }
 }
 
+/// Parse `expect` whitespace-separated floats from `body`; `Err` carries
+/// the wire-protocol error line.
+fn parse_floats(body: &str, expect: usize) -> std::result::Result<Vec<f64>, String> {
+    let mut out = Vec::with_capacity(expect);
+    for tok in body.split_whitespace() {
+        match tok.parse::<f64>() {
+            Ok(v) => out.push(v),
+            Err(_) => return Err(format!("not a number: '{tok}'")),
+        }
+    }
+    if out.len() != expect {
+        return Err(format!("expected {expect} numbers, got {}", out.len()));
+    }
+    Ok(out)
+}
+
 fn handle_connection(
     stream: TcpStream,
     handle: super::batcher::BatchHandle,
@@ -255,32 +422,57 @@ fn handle_connection(
             "dim" => writeln!(writer, "ok {d}")?,
             "stats" => writeln!(writer, "ok {}", engine.stats_line())?,
             _ => {
-                let body = trimmed.strip_prefix("predict").unwrap_or(trimmed);
-                let mut xs = Vec::with_capacity(d);
-                let mut bad = None;
-                for tok in body.split_whitespace() {
-                    match tok.parse::<f64>() {
-                        Ok(v) => xs.push(v),
-                        Err(_) => {
-                            bad = Some(tok.to_string());
-                            break;
+                if let Some(body) = trimmed.strip_prefix("observe") {
+                    // observe x1 … xd y
+                    match parse_floats(body, d + 1) {
+                        Err(msg) => writeln!(writer, "err {msg}")?,
+                        // Reject non-finite values here, per connection —
+                        // inside a coalesced ingest they would fail the
+                        // whole block, punishing well-behaved clients.
+                        Ok(vals) if vals.iter().any(|v| !v.is_finite()) => {
+                            writeln!(writer, "err non-finite observation")?
+                        }
+                        Ok(vals) => {
+                            let (x, y) = (&vals[..d], vals[d]);
+                            let r = handle.observe(x, y);
+                            match r.result {
+                                Err(msg) => writeln!(writer, "err {msg}")?,
+                                Ok(ack) if ack.duplicate => writeln!(
+                                    writer,
+                                    "ok dup {} {} {:.1} {}",
+                                    ack.n,
+                                    ack.pending,
+                                    r.latency.as_secs_f64() * 1e6,
+                                    r.batch_size
+                                )?,
+                                Ok(ack) => writeln!(
+                                    writer,
+                                    "ok {} {} {} {:.1} {}",
+                                    ack.seq,
+                                    ack.n,
+                                    ack.pending,
+                                    r.latency.as_secs_f64() * 1e6,
+                                    r.batch_size
+                                )?,
+                            }
                         }
                     }
+                    continue;
                 }
-                if let Some(tok) = bad {
-                    writeln!(writer, "err not a number: '{tok}'")?;
-                } else if xs.len() != d {
-                    writeln!(writer, "err expected {d} coordinates, got {}", xs.len())?;
-                } else {
-                    let r = handle.predict(&xs);
-                    writeln!(
-                        writer,
-                        "ok {} {} {:.1} {}",
-                        r.mean,
-                        r.var,
-                        r.latency.as_secs_f64() * 1e6,
-                        r.batch_size
-                    )?;
+                let body = trimmed.strip_prefix("predict").unwrap_or(trimmed);
+                match parse_floats(body, d) {
+                    Err(msg) => writeln!(writer, "err {msg}")?,
+                    Ok(xs) => {
+                        let r = handle.predict(&xs);
+                        writeln!(
+                            writer,
+                            "ok {} {} {:.1} {}",
+                            r.mean,
+                            r.var,
+                            r.latency.as_secs_f64() * 1e6,
+                            r.batch_size
+                        )?;
+                    }
                 }
             }
         }

@@ -8,13 +8,13 @@
 //! inputs are **not** stored — reload and serve without touching training
 //! data.
 //!
-//! # Format (version 2)
+//! # Format (version 3)
 //!
 //! Little-endian throughout:
 //!
 //! ```text
 //! magic      8 bytes  "SKGPSNAP"
-//! version    u32      format version (this file documents versions 1–2)
+//! version    u32      format version (this file documents versions 1–3)
 //! d          u32      input dimensionality
 //! n          u32      training-set size (length of α)
 //! r          u32      variance-cache rank (0 ⇒ mean-only snapshot)
@@ -31,8 +31,30 @@
 //! alpha      n × f64
 //! means      per term, M_t × f64 with M_t = Π m_k of that term
 //! var_rs     per term, (M_t·r) × f64, row-major M_t × r
+//! pending    u32 count, count × [u64 seq, d × f64 x, f64 y]
 //! checksum   u64      FNV-1a over every preceding byte
 //! ```
+//!
+//! The `pending` section (new in v3) persists the streaming layer's
+//! observation log ([`crate::stream::ObservationLog`]): the points a
+//! *live* model ingested since its last full refresh, in chronological
+//! sequence order. Frozen snapshots (the `skip-gp snapshot` path) write
+//! an empty section. Note the checkpoint's `α` and caches **already
+//! include** these points — the log is carried so the streamed
+//! observations survive the checkpoint as data: to reconstruct a live
+//! model, rebuild the base [`crate::stream::IncrementalState`] from the
+//! original training set (which does *not* contain them) and replay the
+//! pending section into it
+//! ([`crate::stream::IncrementalState::ingest_observations`]). Replaying
+//! it on top of the checkpoint itself would double-count.
+//!
+//! # Version 2 (read-only, migrated on load)
+//!
+//! Version 2 is version 3 without the `pending` section: `var_rs` is
+//! followed directly by the checksum. Loading a v2 file migrates it to
+//! an empty pending log — predictions are bitwise identical (pinned by
+//! the checked-in `rust/tests/fixtures/snapshot_v2.bin` fixture test,
+//! the same pin the v1→v2 migration carries).
 //!
 //! # Version 1 (read-only, migrated on load)
 //!
@@ -67,6 +89,7 @@ use crate::kernels::ProductKernel;
 use crate::linalg::{Cholesky, Matrix};
 use crate::operators::AffineOp;
 use crate::solvers::{build_preconditioner, cg_solve_with, CgConfig, PrecondSpec};
+use crate::stream::Observation;
 use crate::{Error, Result};
 use std::fs;
 use std::io::Write;
@@ -75,7 +98,7 @@ use std::path::Path;
 /// File magic.
 pub const SNAPSHOT_MAGIC: &[u8; 8] = b"SKGPSNAP";
 /// Current (newest) format version; see the module docs for the rules.
-pub const SNAPSHOT_VERSION: u32 = 2;
+pub const SNAPSHOT_VERSION: u32 = 3;
 /// Oldest format version this build still reads (migrating on load).
 pub const SNAPSHOT_MIN_VERSION: u32 = 1;
 
@@ -85,6 +108,11 @@ pub const SNAPSHOT_MIN_VERSION: u32 = 1;
 /// serving grid) rather than silently allocating gigabytes.
 /// 2²² cells = 32 MB.
 pub const DEFAULT_MAX_GRID_CELLS: usize = 1 << 22;
+
+/// Sanity cap on the persisted pending-log length: far above any real
+/// ring (the streaming default is 1024) but small enough that a corrupt
+/// count field cannot drive a huge allocation.
+pub const MAX_PENDING_OBSERVATIONS: usize = 1 << 20;
 
 /// Variance rank a [`VarianceMode`] will produce for an n-point model.
 fn variance_rank(mode: &VarianceMode, n: usize) -> usize {
@@ -220,6 +248,11 @@ pub struct ModelSnapshot {
     pub alpha: Vec<f64>,
     /// The grid-side predictive cache queries are answered from.
     pub cache: PredictCache,
+    /// Pending streamed observations (new in format v3): what a live
+    /// model ingested since its last full refresh, in sequence order.
+    /// Empty for frozen (train-then-snapshot) models and for files
+    /// migrated from v1/v2.
+    pub pending: Vec<Observation>,
 }
 
 impl ModelSnapshot {
@@ -306,6 +339,7 @@ impl ModelSnapshot {
             refresh_rank: gp.cfg.refresh_rank as u32,
             alpha,
             cache,
+            pending: Vec::new(),
         })
     }
 
@@ -366,10 +400,16 @@ impl ModelSnapshot {
             refresh_rank: 0,
             alpha,
             cache,
+            pending: Vec::new(),
         })
     }
 
     /// Serialize to `path` (format version [`SNAPSHOT_VERSION`]).
+    ///
+    /// Writes to a `.tmp` sibling and renames into place, so a crash
+    /// mid-write can never destroy the previous good snapshot — live
+    /// servers overwrite their checkpoint in a loop
+    /// (`serve --live --snapshot-out`).
     pub fn save(&self, path: &Path) -> Result<()> {
         let bytes = self.to_bytes();
         if let Some(dir) = path.parent() {
@@ -377,8 +417,15 @@ impl ModelSnapshot {
                 fs::create_dir_all(dir)?;
             }
         }
-        let mut f = fs::File::create(path)?;
-        f.write_all(&bytes)?;
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp_name);
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, path)?;
         Ok(())
     }
 
@@ -388,7 +435,7 @@ impl ModelSnapshot {
         Self::from_bytes(&bytes)
     }
 
-    /// Encode to the version-2 byte layout (checksum included). Writers
+    /// Encode to the version-3 byte layout (checksum included). Writers
     /// always emit the newest version, whatever `self.version` was read
     /// from.
     pub fn to_bytes(&self) -> Vec<u8> {
@@ -398,7 +445,10 @@ impl ModelSnapshot {
         let terms = self.cache.terms();
         let m_total = self.cache.total_grid();
         let mut out = Vec::with_capacity(
-            64 + d * 24 + terms.len() * (8 + d * 20) + (n + m_total * (1 + r)) * 8,
+            64 + d * 24
+                + terms.len() * (8 + d * 20)
+                + (n + m_total * (1 + r)) * 8
+                + self.pending.len() * (16 + d * 8),
         );
         out.extend_from_slice(SNAPSHOT_MAGIC);
         push_u32(&mut out, SNAPSHOT_VERSION);
@@ -450,13 +500,23 @@ impl ModelSnapshot {
                 push_f64(&mut out, v);
             }
         }
+        push_u32(&mut out, self.pending.len() as u32);
+        for o in &self.pending {
+            debug_assert_eq!(o.x.len(), d, "pending observation dimensionality");
+            push_u64(&mut out, o.seq);
+            for &v in &o.x {
+                push_f64(&mut out, v);
+            }
+            push_f64(&mut out, o.y);
+        }
         let sum = fnv1a(&out);
         push_u64(&mut out, sum);
         out
     }
 
-    /// Decode from bytes: version 2 natively, version 1 with an in-memory
-    /// migration (single term, coefficient 1, rectilinear spec).
+    /// Decode from bytes: version 3 natively, versions 1–2 with an
+    /// in-memory migration (v1: single term, coefficient 1, rectilinear
+    /// spec; v2: empty pending log).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         let mut c = Cursor { bytes, pos: 0 };
         let magic = c.take(8)?;
@@ -555,6 +615,38 @@ impl ModelSnapshot {
                 Matrix::from_vec(m_t, r, data)
             });
         }
+        // Pending observation log (v3+; earlier versions migrate to an
+        // empty log).
+        let pending = if version >= 3 {
+            let count = c.u32()? as usize;
+            if count > MAX_PENDING_OBSERVATIONS {
+                return Err(Error::Snapshot(format!(
+                    "implausible pending-log length {count}"
+                )));
+            }
+            let mut pending = Vec::with_capacity(count);
+            let mut last_seq = None;
+            for _ in 0..count {
+                let seq = c.u64()?;
+                if last_seq.is_some_and(|s| seq <= s) {
+                    return Err(Error::Snapshot(
+                        "pending log out of sequence order".into(),
+                    ));
+                }
+                last_seq = Some(seq);
+                let x = c.f64_vec(d)?;
+                let y = c.f64()?;
+                if !y.is_finite() || x.iter().any(|v| !v.is_finite()) {
+                    return Err(Error::Snapshot(
+                        "non-finite pending observation".into(),
+                    ));
+                }
+                pending.push(Observation { seq, x, y });
+            }
+            pending
+        } else {
+            Vec::new()
+        };
         // Trailing checksum (8 bytes) must be exactly what remains.
         if c.remaining() != 8 {
             return Err(Error::Snapshot(format!(
@@ -577,6 +669,7 @@ impl ModelSnapshot {
             refresh_rank,
             alpha,
             cache,
+            pending,
         })
     }
 }
@@ -644,6 +737,10 @@ impl<'a> Cursor<'a> {
 
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
     fn f64(&mut self) -> Result<f64> {
@@ -768,6 +865,23 @@ mod tests {
         for (a, b) in pa.iter().zip(&pb) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
+    }
+
+    #[test]
+    fn pending_log_roundtrips_bitwise() {
+        let mut snap = small_snapshot(7);
+        snap.pending = vec![
+            Observation { seq: 3, x: vec![0.25, -0.5], y: 1.125 },
+            Observation { seq: 9, x: vec![0.75, 0.0], y: -2.25 },
+        ];
+        let bytes = snap.to_bytes();
+        let back = ModelSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back.pending, snap.pending);
+        // Out-of-order sequence numbers are a corrupt file, not a parse.
+        let mut bad = snap.clone();
+        bad.pending.swap(0, 1);
+        let err = ModelSnapshot::from_bytes(&bad.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("sequence"), "{err}");
     }
 
     #[test]

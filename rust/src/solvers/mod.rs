@@ -17,7 +17,7 @@ pub use block_cg::{block_cg_solve, block_cg_solve_with, BlockCgColumn, BlockCgSo
 pub use cg::{cg_solve, cg_solve_many, cg_solve_with, CgConfig, CgSolution};
 pub use lanczos::{lanczos, lanczos_batch, LanczosResult};
 pub use precond::{
-    build_preconditioner, IdentityPrecond, JacobiPrecond, PivotedCholeskyPrecond,
-    PrecondCost, PrecondSpec, Preconditioner,
+    build_preconditioner, IdentityPrecond, JacobiPrecond, PaddedPrecond,
+    PivotedCholeskyPrecond, PrecondCost, PrecondSpec, Preconditioner,
 };
 pub use slq::{hutchinson_trace_inv_prod, slq_logdet, slq_trace_fn, SlqConfig};

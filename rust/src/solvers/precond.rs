@@ -459,6 +459,85 @@ impl Preconditioner for PivotedCholeskyPrecond {
     }
 }
 
+/// A preconditioner for a *grown* system: the cached `inner` (built for
+/// the leading `inner.dim()` rows of an operator that has since gained
+/// rows) applied block-diagonally with a Jacobi tail for the new rows,
+///
+/// ```text
+/// M = [ M_inner      0      ]          z[..n₀] = M_inner⁻¹ r[..n₀]
+///     [    0     tail_diag·I ],        z[n₀..] = r[n₀..] / tail_diag
+/// ```
+///
+/// which is SPD whenever `inner` is and `tail_diag > 0`. This is how the
+/// streaming path ([`crate::stream`]) reuses an expensive rank-k setup
+/// across ingests while the hyperparameters are unchanged: appended
+/// observations only see the exact covariance diagonal σ_f² + σ_n² (the
+/// natural `tail_diag` for an RBF K̂) until the next full refresh rebuilds
+/// the preconditioner at full size.
+pub struct PaddedPrecond<'a> {
+    inner: &'a dyn Preconditioner,
+    tail_diag: f64,
+    n: usize,
+}
+
+impl<'a> PaddedPrecond<'a> {
+    /// Pad `inner` out to dimension `n ≥ inner.dim()` with a constant
+    /// Jacobi tail of `tail_diag` (> 0, typically the operator's exact
+    /// diagonal value for the appended rows).
+    pub fn new(inner: &'a dyn Preconditioner, n: usize, tail_diag: f64) -> Self {
+        assert!(n >= inner.dim(), "padded dim must not shrink the inner");
+        assert!(
+            tail_diag.is_finite() && tail_diag > 0.0,
+            "tail diagonal must be positive (got {tail_diag})"
+        );
+        PaddedPrecond { inner, tail_diag, n }
+    }
+}
+
+impl Preconditioner for PaddedPrecond<'_> {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn apply(&self, r: &[f64]) -> Vec<f64> {
+        assert_eq!(r.len(), self.n);
+        let n0 = self.inner.dim();
+        let mut z = self.inner.apply(&r[..n0]);
+        z.extend(r[n0..].iter().map(|x| x / self.tail_diag));
+        z
+    }
+
+    fn apply_block(&self, r: &Matrix) -> Matrix {
+        assert_eq!(r.rows, self.n);
+        let n0 = self.inner.dim();
+        let top = Matrix {
+            rows: n0,
+            cols: r.cols,
+            data: r.data[..n0 * r.cols].to_vec(),
+        };
+        let mut out = self.inner.apply_block(&top);
+        out.rows = self.n;
+        out.data
+            .extend(r.data[n0 * r.cols..].iter().map(|x| x / self.tail_diag));
+        out
+    }
+
+    fn cost(&self) -> PrecondCost {
+        let inner = self.inner.cost();
+        PrecondCost {
+            setup_matvecs: 0, // the padding itself costs nothing to set up
+            rank: inner.rank,
+            apply_flops: inner.apply_flops + (self.n - self.inner.dim()),
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        // Report the inner's identity so solver metrics keep classifying
+        // identity-padded solves as plain CG.
+        self.inner.name()
+    }
+}
+
 /// Build the preconditioner a [`PrecondSpec`] describes for `op` (the
 /// full noise-shifted K̂). `noise_hint` is σ_n² when the caller knows it
 /// (the GP layer does); pass `None` to let the pivoted-Cholesky build
@@ -507,6 +586,30 @@ mod tests {
         let mut a = g.matmul_t(&g);
         a.add_diag(noise);
         a
+    }
+
+    #[test]
+    fn padded_precond_is_block_diagonal() {
+        let a = random_spd(20, 77, 0.5);
+        let op = DenseOp(a);
+        let inner = PivotedCholeskyPrecond::build(&op, 8, Some(0.5)).unwrap();
+        let padded = PaddedPrecond::new(&inner, 24, 2.0);
+        assert_eq!(padded.dim(), 24);
+        let mut rng = Rng::new(78);
+        let r = rng.normal_vec(24);
+        let z = padded.apply(&r);
+        // Top block = inner apply, tail = Jacobi scaling by 1/tail_diag.
+        assert_eq!(&z[..20], inner.apply(&r[..20]).as_slice());
+        for i in 20..24 {
+            assert_eq!(z[i], r[i] / 2.0);
+        }
+        // Blocked apply matches column-by-column exactly.
+        let block = Matrix::from_fn(24, 3, |_, _| rng.normal());
+        let zb = padded.apply_block(&block);
+        for j in 0..3 {
+            assert_eq!(zb.col(j), padded.apply(&block.col(j)), "column {j}");
+        }
+        assert_eq!(padded.name(), inner.name());
     }
 
     #[test]

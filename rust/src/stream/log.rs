@@ -1,0 +1,222 @@
+//! Append-only observation log: the ring of points ingested since the
+//! last full refresh.
+//!
+//! Every observation accepted by the streaming path
+//! ([`crate::stream::IncrementalState`]) is recorded here with a
+//! monotonically increasing sequence number. The log serves three jobs:
+//!
+//! - **dedup** — a bitwise-identical `(x, y)` pair still in the ring is
+//!   rejected, so client retries (the TCP protocol has no request ids)
+//!   cannot double-count an observation;
+//! - **chronological replay** — [`ObservationLog::replay`] walks the
+//!   pending entries in ingest order, which is how a reloaded snapshot's
+//!   pending section is re-applied to a live model;
+//! - **bounded staleness** — the ring has a fixed capacity; when it
+//!   fills, the refresh policy escalates to a full
+//!   [`refresh`](crate::stream::IncrementalState::refresh), which absorbs
+//!   (and clears) everything pending. Entries are never overwritten or
+//!   dropped — "ring" bounds the *pending* set, not history.
+//!
+//! Snapshot format v3 persists the pending entries verbatim
+//! ([`crate::serve::snapshot`]), so a checkpointed live model does not
+//! lose the observations streamed since its last refresh.
+
+use std::collections::HashSet;
+use std::collections::VecDeque;
+
+/// One streamed observation: query point, target, and its ingest
+/// sequence number (monotonic per log, starting at 0).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Observation {
+    pub seq: u64,
+    pub x: Vec<f64>,
+    pub y: f64,
+}
+
+/// Outcome of a [`ObservationLog::push`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Appended with this sequence number.
+    Appended(u64),
+    /// Bitwise duplicate of a pending entry — dropped.
+    Duplicate,
+}
+
+/// Append-only ring of pending observations (see the module docs).
+#[derive(Debug)]
+pub struct ObservationLog {
+    entries: VecDeque<Observation>,
+    /// FNV hashes of the pending `(x, y)` payloads; collisions are
+    /// resolved by an exact scan before declaring a duplicate.
+    seen: HashSet<u64>,
+    capacity: usize,
+    next_seq: u64,
+}
+
+/// FNV-1a over the little-endian bytes of `(x, y)` — the dedup key.
+fn payload_hash(x: &[f64], y: f64) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut eat = |v: f64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    for &v in x {
+        eat(v);
+    }
+    eat(y);
+    h
+}
+
+impl ObservationLog {
+    /// An empty log that escalates to a full refresh once `capacity`
+    /// observations are pending.
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity >= 1, "log capacity must be at least 1");
+        ObservationLog {
+            entries: VecDeque::new(),
+            seen: HashSet::new(),
+            capacity,
+            next_seq: 0,
+        }
+    }
+
+    /// Append `(x, y)` unless it bitwise-duplicates a pending entry.
+    /// Callers check [`is_full`](Self::is_full) and refresh *after* the
+    /// push that fills the ring — pushes themselves are never refused.
+    pub fn push(&mut self, x: &[f64], y: f64) -> PushOutcome {
+        if self.contains(x, y) {
+            return PushOutcome::Duplicate;
+        }
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.seen.insert(payload_hash(x, y));
+        self.entries.push_back(Observation { seq, x: x.to_vec(), y });
+        PushOutcome::Appended(seq)
+    }
+
+    /// True iff a bitwise-identical `(x, y)` is pending.
+    pub fn contains(&self, x: &[f64], y: f64) -> bool {
+        self.seen.contains(&payload_hash(x, y))
+            && self
+                .entries
+                .iter()
+                .any(|o| o.y.to_bits() == y.to_bits() && bits_eq(&o.x, x))
+    }
+
+    /// Pending entries in chronological (sequence) order.
+    pub fn replay(&self) -> impl Iterator<Item = &Observation> {
+        self.entries.iter()
+    }
+
+    /// Mark everything pending as absorbed (a full refresh ran): clears
+    /// the ring and the dedup window, keeps the sequence counter
+    /// monotonic.
+    pub fn absorb(&mut self) {
+        self.entries.clear();
+        self.seen.clear();
+    }
+
+    /// Restore pending entries (snapshot reload). Entries must be in
+    /// chronological order; the sequence counter resumes past the last.
+    pub fn restore(&mut self, entries: Vec<Observation>) {
+        debug_assert!(entries.windows(2).all(|w| w[0].seq < w[1].seq));
+        for o in &entries {
+            self.seen.insert(payload_hash(&o.x, o.y));
+            self.next_seq = self.next_seq.max(o.seq + 1);
+        }
+        self.entries.extend(entries);
+    }
+
+    /// Pending entry count.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True iff nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// True iff the pending set has reached capacity (refresh now).
+    pub fn is_full(&self) -> bool {
+        self.entries.len() >= self.capacity
+    }
+
+    /// The ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Next sequence number to be assigned.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(u, v)| u.to_bits() == v.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_assigns_monotonic_seqs() {
+        let mut log = ObservationLog::new(8);
+        assert_eq!(log.push(&[0.1, 0.2], 1.0), PushOutcome::Appended(0));
+        assert_eq!(log.push(&[0.3, 0.4], 2.0), PushOutcome::Appended(1));
+        assert_eq!(log.len(), 2);
+        let seqs: Vec<u64> = log.replay().map(|o| o.seq).collect();
+        assert_eq!(seqs, vec![0, 1]);
+    }
+
+    #[test]
+    fn bitwise_duplicates_are_dropped() {
+        let mut log = ObservationLog::new(8);
+        log.push(&[0.1, 0.2], 1.0);
+        assert_eq!(log.push(&[0.1, 0.2], 1.0), PushOutcome::Duplicate);
+        // Same x, different y is a fresh observation (a re-measurement).
+        assert_eq!(log.push(&[0.1, 0.2], 1.5), PushOutcome::Appended(1));
+        // -0.0 differs bitwise from 0.0: not a duplicate.
+        log.push(&[0.0], 0.0);
+        assert_eq!(log.push(&[-0.0], 0.0), PushOutcome::Appended(3));
+        assert_eq!(log.len(), 4);
+    }
+
+    #[test]
+    fn absorb_clears_pending_but_not_seq() {
+        let mut log = ObservationLog::new(4);
+        log.push(&[1.0], 2.0);
+        log.push(&[2.0], 3.0);
+        log.absorb();
+        assert!(log.is_empty());
+        // Absorbed entries no longer shadow re-observations…
+        assert_eq!(log.push(&[1.0], 2.0), PushOutcome::Appended(2));
+        // …and sequence numbers never restart.
+        assert_eq!(log.next_seq(), 3);
+    }
+
+    #[test]
+    fn fills_at_capacity() {
+        let mut log = ObservationLog::new(2);
+        log.push(&[1.0], 0.0);
+        assert!(!log.is_full());
+        log.push(&[2.0], 0.0);
+        assert!(log.is_full());
+    }
+
+    #[test]
+    fn restore_resumes_sequence() {
+        let mut log = ObservationLog::new(8);
+        log.restore(vec![
+            Observation { seq: 3, x: vec![0.5], y: 1.0 },
+            Observation { seq: 7, x: vec![0.6], y: 2.0 },
+        ]);
+        assert_eq!(log.len(), 2);
+        assert!(log.contains(&[0.5], 1.0));
+        assert_eq!(log.push(&[0.7], 3.0), PushOutcome::Appended(8));
+    }
+}

@@ -1,0 +1,57 @@
+//! Streaming observation ingestion: online GP updates on a fixed
+//! inducing grid.
+//!
+//! The serving layer ([`crate::serve`]) froze a trained model into its
+//! predictive caches; this module makes that model *live*. Because SKI
+//! pins the inducing grid, a new observation touches the model only
+//! through one sparse interpolation-stencil row of `W` — so ingestion
+//! never retrains:
+//!
+//! - [`log`] — the [`ObservationLog`]: an append-only ring of pending
+//!   observations with bitwise dedup and chronological replay, persisted
+//!   by snapshot format v3;
+//! - [`state`] — the [`IncrementalState`]: extends `W`/`y` in place,
+//!   re-solves `K̂α = y` with warm-started PCG (the cached refresh-time
+//!   preconditioner rides along via
+//!   [`crate::solvers::PaddedPrecond`]), patches the grid-side mean
+//!   cache per stencil touch, rebuilds the variance factor when its
+//!   tracked rank drift exceeds a budget, and escalates to a full
+//!   [`IncrementalState::refresh`] per the every-N / ring-full /
+//!   error-triggered policy.
+//!
+//! End to end, the TCP line protocol gains an `observe` verb (coalesced
+//! with predicts by the request batcher), the CLI gains
+//! `skip-gp observe` / `skip-gp serve --live`, and ingest latency,
+//! warm-start savings, and cache patch-vs-rebuild counts surface as
+//! `stream.*` metrics in the serving registry.
+//!
+//! ```
+//! use skip_gp::gp::GpHypers;
+//! use skip_gp::grid::Grid1d;
+//! use skip_gp::linalg::Matrix;
+//! use skip_gp::serve::VarianceMode;
+//! use skip_gp::solvers::CgConfig;
+//! use skip_gp::stream::{IncrementalState, StreamConfig};
+//!
+//! // A tiny 1-D model on a fixed 16-point grid…
+//! let xs = Matrix::from_fn(24, 1, |i, _| i as f64 / 24.0);
+//! let ys: Vec<f64> = (0..24).map(|i| (i as f64 / 4.0).sin()).collect();
+//! let axes = vec![Grid1d::fit(0.0, 1.0, 16).unwrap()];
+//! let cfg = StreamConfig { variance: VarianceMode::Exact, ..Default::default() };
+//! let mut live = IncrementalState::new(
+//!     xs, ys, GpHypers::new(0.4, 1.0, 0.01), axes, CgConfig::default(), cfg,
+//! ).unwrap();
+//!
+//! // …ingests an observation without retraining.
+//! let report = live.ingest(&[0.3125], (0.3125f64 * 6.0).sin()).unwrap();
+//! assert_eq!(report.accepted, 1);
+//! assert_eq!(live.n(), 25);
+//! ```
+
+pub mod log;
+pub mod state;
+
+pub use log::{Observation, ObservationLog, PushOutcome};
+pub use state::{
+    IncrementalState, IngestReport, RefreshReason, RowOutcome, StreamConfig, StreamStats,
+};

@@ -1,0 +1,722 @@
+//! Incremental model state: ingest observations without retraining.
+//!
+//! SKI's fixed inducing grid makes online updates cheap (Gardner et al.
+//! 2018's MVM-only framing, plus the fast-interpolation line of
+//! Yadav–Sheldon–Musco): a new observation only changes the
+//! interpolation matrix `W` by one sparse stencil row, so
+//!
+//! 1. **the operator extends in place** —
+//!    [`KroneckerSkiOp::append_rows`] appends the stencil rows; grid,
+//!    Toeplitz factors, and all existing rows are untouched;
+//! 2. **the solve warm-starts** — `K̂α = y` is re-solved by PCG seeded
+//!    with the previous α (padded with the standardized residual guess
+//!    for the new rows), reusing the preconditioner cached at the last
+//!    full refresh through [`PaddedPrecond`] while the hyperparameters
+//!    are unchanged;
+//! 3. **the mean cache is patched, not rebuilt** — the grid-side scatter
+//!    `Wᵀα` is updated with the α *delta* per stencil touch (entries with
+//!    `|Δα| ≤ patch_eps·‖α‖_∞` are skipped), then one Kronecker–Toeplitz
+//!    apply refreshes the mean cache;
+//! 4. **the variance factor is rebuilt on drift** — the low-rank factor
+//!    `R` tolerates a few extra observations (stale variance is an
+//!    *over*-estimate of uncertainty, the conservative direction); once
+//!    the tracked drift exceeds [`StreamConfig::var_drift_budget`]
+//!    points it is rebuilt from the current operator;
+//! 5. **a refresh policy escalates** — every N pending points, on a full
+//!    observation ring, on an outlier (standardized residual beyond
+//!    [`StreamConfig::error_z`]), or on a stalled incremental solve, a
+//!    full [`IncrementalState::refresh`] rebuilds operator,
+//!    preconditioner, α, and both caches from scratch and absorbs the
+//!    pending log.
+//!
+//! Online updates require the dense-grid KISS path ([`MvmVariant::Kiss`]
+//! with a single-term rectilinear grid): the SKIP merge tree bakes a
+//! Lanczos decomposition of the *whole* data set into its operator, so
+//! appending a row would invalidate it — streaming a SKIP model is a
+//! typed [`Error::Stream`].
+
+use super::log::{Observation, ObservationLog, PushOutcome};
+use crate::gp::{GpHypers, MvmGp, MvmVariant};
+use crate::grid::{tensor_stencil, tensor_strides, Grid1d, RectilinearGrid};
+use crate::kernels::{ProductKernel, Stationary1d};
+use crate::linalg::{dot, Cholesky, Matrix, SymToeplitz};
+use crate::operators::{AffineRef, KroneckerSkiOp};
+use crate::serve::cache::{
+    inverse_root_exact, inverse_root_lanczos, mean_from_scatter, scatter_wt,
+    PredictCache, TermCache, VarianceMode,
+};
+use crate::serve::snapshot::{ModelSnapshot, SnapshotVariant, SNAPSHOT_VERSION};
+use crate::solvers::{
+    block_cg_solve_with, build_preconditioner, cg_solve_with, CgConfig, IdentityPrecond,
+    PaddedPrecond, Preconditioner, PrecondSpec,
+};
+use crate::{Error, Result};
+
+/// Streaming-ingestion policy knobs.
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    /// Escalate to a full refresh once this many observations are
+    /// pending (0 disables the count trigger; the ring-capacity trigger
+    /// still applies).
+    pub refresh_every: usize,
+    /// Rebuild the variance factor after this many points have been
+    /// ingested since its last build (0 ⇒ rebuild on every ingest).
+    pub var_drift_budget: usize,
+    /// Escalate to a full refresh when an incoming observation's
+    /// standardized residual `|y − μ(x)| / √(σ²(x) + σ_n²)` exceeds this
+    /// (≤ 0 disables the trigger).
+    pub error_z: f64,
+    /// Pending-log ring capacity; a full ring forces a refresh.
+    pub log_capacity: usize,
+    /// How the variance factor is (re)built.
+    pub variance: VarianceMode,
+    /// Mean-patch threshold: skip scattering α deltas below
+    /// `patch_eps · ‖α‖_∞` (0 ⇒ scatter every nonzero delta).
+    pub patch_eps: f64,
+}
+
+impl Default for StreamConfig {
+    fn default() -> Self {
+        StreamConfig {
+            refresh_every: 256,
+            var_drift_budget: 32,
+            error_z: 8.0,
+            log_capacity: 1024,
+            variance: VarianceMode::Lanczos(64),
+            patch_eps: 1e-12,
+        }
+    }
+}
+
+/// Why an ingest escalated to a full refresh.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RefreshReason {
+    /// [`StreamConfig::refresh_every`] pending observations reached.
+    EveryN,
+    /// The pending-observation ring filled.
+    RingFull,
+    /// An observation's standardized residual exceeded
+    /// [`StreamConfig::error_z`].
+    Outlier,
+    /// The warm-started incremental solve did not converge.
+    SolveStalled,
+}
+
+/// Per-row outcome of an ingest call, aligned with the input rows.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowOutcome {
+    /// Ingested with this log sequence number.
+    Accepted { seq: u64 },
+    /// Bitwise duplicate of a pending observation — dropped.
+    Duplicate,
+}
+
+/// What one [`IncrementalState::ingest_block`] call did.
+#[derive(Clone, Debug)]
+pub struct IngestReport {
+    /// Per-input-row outcomes.
+    pub outcomes: Vec<RowOutcome>,
+    /// Rows actually ingested (non-duplicates).
+    pub accepted: usize,
+    /// Rows dropped as duplicates.
+    pub duplicates: usize,
+    /// Iterations of the warm-started α re-solve (0 when every row was
+    /// a duplicate).
+    pub solve_iters: usize,
+    /// Iterations the warm start saved vs. the last cold (refresh-grade)
+    /// solve of comparable size — the `stream.solve.iters_saved` metric.
+    pub iters_saved: usize,
+    /// α rows whose delta was scattered into the mean cache.
+    pub rows_patched: usize,
+    /// Whether this ingest rebuilt the variance factor under the drift
+    /// budget (a full refresh — see [`refreshed`](Self::refreshed) —
+    /// also rebuilds it, but is counted separately).
+    pub var_rebuilt: bool,
+    /// Whether (and why) this ingest escalated to a full refresh.
+    pub refreshed: Option<RefreshReason>,
+    /// Model size after the ingest.
+    pub n: usize,
+    /// Pending-log length after the ingest (0 right after a refresh).
+    pub pending: usize,
+}
+
+/// A live model that ingests observations incrementally (see the module
+/// docs for the update algebra).
+pub struct IncrementalState {
+    xs: Matrix,
+    ys: Vec<f64>,
+    hypers: GpHypers,
+    /// The frozen inducing-grid axes — never refitted while streaming.
+    axes: Vec<Grid1d>,
+    /// SKI operator over the current data; grows by stencil rows.
+    op: KroneckerSkiOp,
+    /// Preconditioner built at the last refresh (covers the rows that
+    /// existed then; grown systems see it through [`PaddedPrecond`]).
+    pre: Box<dyn Preconditioner>,
+    precond: PrecondSpec,
+    cg: CgConfig,
+    /// Current solve α = K̂⁻¹y.
+    alpha: Vec<f64>,
+    /// Grid-side scatter `Wᵀα` (single term), patched per ingest.
+    wta: Vec<f64>,
+    /// Per-axis Toeplitz grid-kernel factors — invariant while streaming
+    /// (axes and hyperparameters are frozen), built once so the per-
+    /// ingest mean patch pays only the Kronecker apply.
+    factors: Vec<SymToeplitz>,
+    /// Live predictive cache (mean patched per ingest; variance factor
+    /// rebuilt on drift).
+    cache: PredictCache,
+    /// Model size when the variance factor was last built.
+    var_built_at: usize,
+    /// Iterations of the last cold (refresh-grade) solve — the baseline
+    /// the warm-start savings metric is measured against.
+    last_cold_iters: usize,
+    log: ObservationLog,
+    cfg: StreamConfig,
+    /// Cumulative ingest counters (mirrored into serving metrics by the
+    /// engine layer).
+    pub stats: StreamStats,
+}
+
+/// Cumulative streaming counters.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StreamStats {
+    pub points: u64,
+    pub duplicates: u64,
+    pub mean_patches: u64,
+    pub var_rebuilds: u64,
+    pub refreshes: u64,
+    pub outlier_refreshes: u64,
+    /// Variance rebuilds / policy refreshes that failed *after* the
+    /// ingest itself succeeded (the model keeps serving; see
+    /// [`IncrementalState::ingest_block`]).
+    pub maintenance_failures: u64,
+}
+
+impl IncrementalState {
+    /// Build a live state from raw parts. `axes` are the frozen inducing
+    /// grid; performs one full [`refresh`](Self::refresh) to initialize
+    /// α, the preconditioner, and both caches.
+    pub fn new(
+        xs: Matrix,
+        ys: Vec<f64>,
+        hypers: GpHypers,
+        axes: Vec<Grid1d>,
+        cg: CgConfig,
+        cfg: StreamConfig,
+    ) -> Result<Self> {
+        if xs.rows != ys.len() {
+            return Err(Error::DimMismatch {
+                context: "stream training targets",
+                expected: xs.rows,
+                got: ys.len(),
+            });
+        }
+        if axes.len() != xs.cols {
+            return Err(Error::DimMismatch {
+                context: "stream grid axes",
+                expected: xs.cols,
+                got: axes.len(),
+            });
+        }
+        let kern = ProductKernel::rbf(xs.cols, hypers.ell(), 1.0);
+        let op = KroneckerSkiOp::with_grids(&xs, &kern, axes.clone());
+        let n = xs.rows;
+        let total: usize = axes.iter().map(|g| g.m).product();
+        let kern1 = Stationary1d::rbf(hypers.ell());
+        let factors: Vec<SymToeplitz> = axes
+            .iter()
+            .map(|g| SymToeplitz::new(kern1.toeplitz_column(g.m, g.h)))
+            .collect();
+        // Zeroed mean-only cache of the right shape; refresh() below
+        // replaces it with the real one.
+        let empty = PredictCache::from_parts(
+            crate::grid::GridSpec::Rectilinear(axes.iter().map(|g| g.m).collect()),
+            vec![TermCache::new(
+                1.0,
+                axes.clone(),
+                vec![0.0; total],
+                Matrix::zeros(total, 0),
+            )?],
+            hypers.sf2(),
+            hypers.sn2(),
+        )?;
+        let mut state = IncrementalState {
+            xs,
+            ys,
+            hypers,
+            axes,
+            op,
+            pre: Box::new(IdentityPrecond::new(n)),
+            precond: cg.precond,
+            cg,
+            alpha: vec![0.0; n],
+            wta: vec![0.0; total],
+            factors,
+            cache: empty,
+            var_built_at: 0,
+            last_cold_iters: 0,
+            log: ObservationLog::new(cfg.log_capacity),
+            cfg,
+            stats: StreamStats::default(),
+        };
+        state.refresh()?;
+        Ok(state)
+    }
+
+    /// Adopt a trained [`MvmGp`] for streaming. Requires the KISS
+    /// (dense-grid) variant on a single-term grid; the grid axes are
+    /// fitted once here and frozen.
+    pub fn from_mvm(gp: &MvmGp, cfg: StreamConfig) -> Result<Self> {
+        if gp.cfg.variant != MvmVariant::Kiss {
+            return Err(Error::Stream(
+                "online updates require the KISS (grid) variant — the SKIP \
+                 merge tree bakes a whole-data Lanczos decomposition into \
+                 its operator and cannot extend by one row"
+                    .into(),
+            ));
+        }
+        let axes = gp.fitted_grid_axes().map_err(|e| {
+            Error::Stream(format!(
+                "online updates require a single-term dense grid \
+                 (Uniform/Rectilinear spec): {e}"
+            ))
+        })?;
+        let mut cg = gp.cfg.cg;
+        cg.max_iters = cg.max_iters.max(200);
+        Self::new(gp.xs.clone(), gp.ys.clone(), gp.hypers, axes, cg, cfg)
+    }
+
+    /// The noise-shifted covariance view `σ_f²·K_ski + σ_n²·I` over the
+    /// in-place-extended SKI operator — [`AffineRef`] shares `AffineOp`'s
+    /// arithmetic, so incremental solves agree with the batch path's
+    /// operator bitwise.
+    fn view(&self) -> AffineRef<'_> {
+        AffineRef {
+            inner: &self.op,
+            scale: self.hypers.sf2(),
+            shift: self.hypers.sn2(),
+        }
+    }
+
+    /// The preconditioner for a solve on the current n-row system:
+    /// identity when unpreconditioned, otherwise the refresh-time
+    /// preconditioner padded out to any rows appended since (a pad of
+    /// zero rows is an exact pass-through) — one selection shared by the
+    /// ingest and variance solves so they can never diverge.
+    fn solve_precond(&self) -> Box<dyn Preconditioner + '_> {
+        if matches!(self.precond, PrecondSpec::None) {
+            Box::new(IdentityPrecond::new(self.xs.rows))
+        } else {
+            Box::new(PaddedPrecond::new(
+                self.pre.as_ref(),
+                self.xs.rows,
+                self.hypers.sf2() + self.hypers.sn2(),
+            ))
+        }
+    }
+
+    /// Full refresh: rebuild operator, preconditioner, α (cold solve —
+    /// this is the baseline incremental ingests are measured against),
+    /// the grid scatter, and both caches; absorb the pending log.
+    pub fn refresh(&mut self) -> Result<()> {
+        let kern = ProductKernel::rbf(self.xs.cols, self.hypers.ell(), 1.0);
+        self.op = KroneckerSkiOp::with_grids(&self.xs, &kern, self.axes.clone());
+        let view = AffineRef {
+            inner: &self.op,
+            scale: self.hypers.sf2(),
+            shift: self.hypers.sn2(),
+        };
+        self.pre = build_preconditioner(&view, Some(self.hypers.sn2()), self.precond);
+        let sol = cg_solve_with(&view, &self.ys, self.pre.as_ref(), None, self.cg);
+        if !sol.converged {
+            return Err(Error::CgDidNotConverge {
+                iters: sol.iters,
+                residual: sol.rel_residual,
+            });
+        }
+        self.last_cold_iters = sol.iters;
+        self.alpha = sol.x;
+        self.rebuild_scatter();
+        self.rebuild_cache()?;
+        self.var_built_at = self.xs.rows;
+        self.log.absorb();
+        self.stats.refreshes += 1;
+        Ok(())
+    }
+
+    /// Ingest one observation. See [`ingest_block`](Self::ingest_block).
+    pub fn ingest(&mut self, x: &[f64], y: f64) -> Result<IngestReport> {
+        if x.len() != self.xs.cols {
+            return Err(Error::DimMismatch {
+                context: "ingested observation dimensionality",
+                expected: self.xs.cols,
+                got: x.len(),
+            });
+        }
+        let xs = Matrix::from_vec(1, self.xs.cols, x.to_vec());
+        self.ingest_block(&xs, &[y])
+    }
+
+    /// Ingest a block of observations: extend `W`/`y` in place, re-solve
+    /// α seeded from the previous solution, patch the mean cache, and
+    /// apply the variance-drift and refresh policies. Duplicates of
+    /// pending observations are dropped row-wise.
+    pub fn ingest_block(&mut self, xs_new: &Matrix, ys_new: &[f64]) -> Result<IngestReport> {
+        let d = self.xs.cols;
+        if xs_new.cols != d {
+            return Err(Error::DimMismatch {
+                context: "ingested observation dimensionality",
+                expected: d,
+                got: xs_new.cols,
+            });
+        }
+        if xs_new.rows != ys_new.len() {
+            return Err(Error::DimMismatch {
+                context: "ingested observation targets",
+                expected: xs_new.rows,
+                got: ys_new.len(),
+            });
+        }
+        for i in 0..xs_new.rows {
+            if !ys_new[i].is_finite() || xs_new.row(i).iter().any(|v| !v.is_finite()) {
+                return Err(Error::Stream(format!(
+                    "non-finite observation at row {i}"
+                )));
+            }
+        }
+
+        // Row-wise dedup: against the pending log (client retries) AND
+        // against earlier rows of this very block — two clients retrying
+        // the same observation can land in one coalesced batch.
+        let bits_eq = |i: usize, j: usize| {
+            ys_new[i].to_bits() == ys_new[j].to_bits()
+                && xs_new
+                    .row(i)
+                    .iter()
+                    .zip(xs_new.row(j))
+                    .all(|(a, b)| a.to_bits() == b.to_bits())
+        };
+        let mut outcomes: Vec<RowOutcome> = Vec::with_capacity(xs_new.rows);
+        let mut fresh_rows: Vec<usize> = Vec::with_capacity(xs_new.rows);
+        for i in 0..xs_new.rows {
+            let duplicate = self.log.contains(xs_new.row(i), ys_new[i])
+                || fresh_rows.iter().any(|&j| bits_eq(i, j));
+            if duplicate {
+                outcomes.push(RowOutcome::Duplicate);
+            } else {
+                // Seq assigned below, after the solve succeeds.
+                outcomes.push(RowOutcome::Accepted { seq: 0 });
+                fresh_rows.push(i);
+            }
+        }
+        let duplicates = xs_new.rows - fresh_rows.len();
+        self.stats.duplicates += duplicates as u64;
+        if fresh_rows.is_empty() {
+            return Ok(IngestReport {
+                outcomes,
+                accepted: 0,
+                duplicates,
+                solve_iters: 0,
+                iters_saved: 0,
+                rows_patched: 0,
+                var_rebuilt: false,
+                refreshed: None,
+                n: self.xs.rows,
+                pending: self.log.len(),
+            });
+        }
+
+        // Pre-ingest predictive view of the fresh points: the warm-seed
+        // guess for their α entries and the outlier z-scores.
+        let denom = self.hypers.sf2() + self.hypers.sn2();
+        let mut guesses = Vec::with_capacity(fresh_rows.len());
+        let mut max_z = 0.0f64;
+        for &i in &fresh_rows {
+            let x = xs_new.row(i);
+            let resid = ys_new[i] - self.cache.predict_mean_one(x);
+            let var = if self.cache.has_variance() {
+                self.cache.predict_var_one(x)
+            } else {
+                self.cache.prior_var
+            };
+            max_z = max_z.max(resid.abs() / (var + self.hypers.sn2()).sqrt());
+            guesses.push(resid / denom);
+        }
+
+        // Extend the data, W, and the warm seed in place.
+        let n_old = self.xs.rows;
+        let block = Matrix::from_fn(fresh_rows.len(), d, |r, c| {
+            xs_new.get(fresh_rows[r], c)
+        });
+        self.xs.data.extend_from_slice(&block.data);
+        self.xs.rows += block.rows;
+        for &i in &fresh_rows {
+            self.ys.push(ys_new[i]);
+        }
+        self.op.append_rows(&block);
+        let n = self.xs.rows;
+
+        let alpha_old = std::mem::take(&mut self.alpha);
+        let mut seed = alpha_old.clone();
+        seed.extend_from_slice(&guesses);
+
+        // Warm-started PCG, reusing the refresh-time preconditioner
+        // padded out to the grown system (exact diagonal on the tail).
+        let view = AffineRef {
+            inner: &self.op,
+            scale: self.hypers.sf2(),
+            shift: self.hypers.sn2(),
+        };
+        let pre = self.solve_precond();
+        let sol = cg_solve_with(&view, &self.ys, pre.as_ref(), Some(seed.as_slice()), self.cg);
+        // End the Box's borrow of self.pre before the &mut self calls
+        // below (Box drop glue keeps it live otherwise).
+        drop(pre);
+        let solve_iters = sol.iters;
+        let iters_saved = self.last_cold_iters.saturating_sub(solve_iters);
+        let stalled = !sol.converged;
+        self.alpha = sol.x;
+
+        // Patch the mean cache: scatter the α delta per stencil touch,
+        // then one grid apply.
+        let rows_patched = self.patch_mean(&alpha_old, n_old);
+        self.stats.mean_patches += 1;
+        self.stats.points += fresh_rows.len() as u64;
+
+        // Log the accepted rows now that they are part of the model.
+        let mut fresh_iter = fresh_rows.iter();
+        for o in outcomes.iter_mut() {
+            if let RowOutcome::Accepted { seq } = o {
+                let i = *fresh_iter.next().expect("fresh row for outcome");
+                match self.log.push(xs_new.row(i), ys_new[i]) {
+                    PushOutcome::Appended(s) => *seq = s,
+                    PushOutcome::Duplicate => unreachable!("deduped above"),
+                }
+            }
+        }
+
+        // Refresh policy first: every-N / ring-full / outlier / stalled
+        // solve. A pending refresh rebuilds the whole cache anyway, so
+        // the drift-budget variance rebuild below is skipped then (a
+        // refresh-triggering ingest must not pay the rebuild twice).
+        let reason = if stalled {
+            Some(RefreshReason::SolveStalled)
+        } else if self.cfg.refresh_every > 0 && self.log.len() >= self.cfg.refresh_every {
+            Some(RefreshReason::EveryN)
+        } else if self.log.is_full() {
+            Some(RefreshReason::RingFull)
+        } else if self.cfg.error_z > 0.0 && max_z > self.cfg.error_z {
+            Some(RefreshReason::Outlier)
+        } else {
+            None
+        };
+
+        // Maintenance (variance rebuild, policy refresh) normally must
+        // not fail the ingest: the observations are already part of the
+        // model and logged, so an error ack would lie to the client —
+        // a failed rebuild keeps serving the (conservatively stale)
+        // variance, a failed refresh leaves the log pending for the
+        // next trigger, and `maintenance_failures` ticks. The one
+        // exception is a stalled solve whose escalated refresh also
+        // fails: then α itself never converged and the mean would be
+        // *wrong*, not stale — that error must surface (the points are
+        // logged, so a bitwise retry is deduped, never double-counted).
+        let mut var_rebuilt = false;
+        if reason.is_none()
+            && self.cache.has_variance()
+            && n - self.var_built_at > self.cfg.var_drift_budget
+        {
+            match self.rebuild_cache() {
+                Ok(()) => {
+                    self.var_built_at = n;
+                    self.stats.var_rebuilds += 1;
+                    var_rebuilt = true;
+                }
+                Err(_) => self.stats.maintenance_failures += 1,
+            }
+        }
+        let mut refreshed = None;
+        if let Some(r) = reason {
+            if r == RefreshReason::Outlier {
+                self.stats.outlier_refreshes += 1;
+            }
+            match self.refresh() {
+                Ok(()) => refreshed = Some(r),
+                Err(e) => {
+                    self.stats.maintenance_failures += 1;
+                    if r == RefreshReason::SolveStalled {
+                        return Err(e);
+                    }
+                }
+            }
+        }
+
+        Ok(IngestReport {
+            outcomes,
+            accepted: fresh_rows.len(),
+            duplicates,
+            solve_iters,
+            iters_saved,
+            rows_patched,
+            var_rebuilt,
+            refreshed,
+            n,
+            pending: self.log.len(),
+        })
+    }
+
+    /// Replay observations (e.g. a reloaded snapshot's pending section)
+    /// into this model, in chronological order.
+    pub fn ingest_observations(&mut self, obs: &[Observation]) -> Result<IngestReport> {
+        let d = self.xs.cols;
+        let mut xs = Matrix::zeros(obs.len(), d);
+        let mut ys = Vec::with_capacity(obs.len());
+        for (i, o) in obs.iter().enumerate() {
+            if o.x.len() != d {
+                return Err(Error::DimMismatch {
+                    context: "replayed observation dimensionality",
+                    expected: d,
+                    got: o.x.len(),
+                });
+            }
+            xs.row_mut(i).copy_from_slice(&o.x);
+            ys.push(o.y);
+        }
+        self.ingest_block(&xs, &ys)
+    }
+
+    /// Rebuild `wta = Wᵀα` from scratch (refresh path) — the same
+    /// scatter [`PredictCache::build`] performs.
+    fn rebuild_scatter(&mut self) {
+        self.wta = scatter_wt(&self.xs, &self.alpha, &self.axes);
+    }
+
+    /// Scatter the α delta of every materially-changed row into `wta`,
+    /// then refresh the mean cache with one Kronecker–Toeplitz apply.
+    /// Returns the number of rows whose stencil was touched.
+    fn patch_mean(&mut self, alpha_old: &[f64], n_old: usize) -> usize {
+        let dims: Vec<usize> = self.axes.iter().map(|g| g.m).collect();
+        let strides = tensor_strides(&dims);
+        let scale = self
+            .alpha
+            .iter()
+            .fold(0.0f64, |m, a| m.max(a.abs()));
+        let eps = self.cfg.patch_eps * scale;
+        let mut touched = 0usize;
+        let mut wta = std::mem::take(&mut self.wta);
+        for i in 0..self.xs.rows {
+            let old = if i < n_old { alpha_old[i] } else { 0.0 };
+            let delta = self.alpha[i] - old;
+            if delta == 0.0 || delta.abs() <= eps {
+                continue;
+            }
+            touched += 1;
+            tensor_stencil(self.xs.row(i), &self.axes, &strides, |g, w| {
+                wta[g] += w * delta;
+            });
+        }
+        self.wta = wta;
+        // One grid apply (cached Toeplitz factors) refreshes the whole
+        // mean cache — the same formula the snapshot-time build uses.
+        self.cache.terms_mut()[0].mean =
+            mean_from_scatter(&self.wta, &self.factors, &dims, self.hypers.sf2());
+        touched
+    }
+
+    /// Rebuild the full predictive cache (mean + variance factor) from
+    /// the current data and α.
+    fn rebuild_cache(&mut self) -> Result<()> {
+        let s = match &self.cfg.variance {
+            VarianceMode::None => None,
+            VarianceMode::Exact => {
+                let kern =
+                    ProductKernel::rbf(self.xs.cols, self.hypers.ell(), self.hypers.sf2());
+                let mut khat = kern.gram_sym(&self.xs);
+                khat.add_diag(self.hypers.sn2());
+                Some(inverse_root_exact(&Cholesky::new_with_jitter(&khat, 0.0)?))
+            }
+            VarianceMode::Lanczos(rank) => {
+                let view = self.view();
+                Some(inverse_root_lanczos(&view, &self.ys, *rank)?)
+            }
+        };
+        let grid = RectilinearGrid::from_axes(self.axes.clone());
+        self.cache =
+            PredictCache::build(&self.xs, &self.alpha, &self.hypers, &grid, s.as_ref())?;
+        Ok(())
+    }
+
+    /// Predictive mean from the live cache (patched every ingest).
+    pub fn predict_mean(&self, xtest: &Matrix) -> Vec<f64> {
+        self.cache.predict_mean(xtest)
+    }
+
+    /// Latent predictive variance at solver grade: all test solves ride
+    /// one block-CG call against the current operator (exact up to CG
+    /// tolerance, unlike the rank-r cache variance).
+    pub fn predict_var(&self, xtest: &Matrix) -> Result<Vec<f64>> {
+        let kern =
+            ProductKernel::rbf(self.xs.cols, self.hypers.ell(), self.hypers.sf2());
+        let kx = kern.gram(&self.xs, xtest);
+        let view = self.view();
+        let pre = self.solve_precond();
+        let sol = block_cg_solve_with(&view, &kx, pre.as_ref(), None, self.cg);
+        Ok((0..xtest.rows)
+            .map(|j| {
+                let quad = dot(&kx.col(j), &sol.x.col(j));
+                (self.hypers.sf2() - quad).max(1e-12)
+            })
+            .collect())
+    }
+
+    /// Freeze the live state into a serving snapshot; the pending log
+    /// rides along (format v3).
+    pub fn to_snapshot(&self) -> ModelSnapshot {
+        ModelSnapshot {
+            version: SNAPSHOT_VERSION,
+            hypers: self.hypers,
+            variant: SnapshotVariant::Kiss,
+            train_rank: 0,
+            refresh_rank: 0,
+            alpha: self.alpha.clone(),
+            cache: self.cache.clone(),
+            pending: self.log.replay().cloned().collect(),
+        }
+    }
+
+    /// The live predictive cache.
+    pub fn cache(&self) -> &PredictCache {
+        &self.cache
+    }
+
+    /// Current model size n.
+    pub fn n(&self) -> usize {
+        self.xs.rows
+    }
+
+    /// Input dimensionality d.
+    pub fn dim(&self) -> usize {
+        self.xs.cols
+    }
+
+    /// Pending (un-refreshed) observation count.
+    pub fn pending(&self) -> usize {
+        self.log.len()
+    }
+
+    /// Current solve α = K̂⁻¹y.
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    /// Model hyperparameters (fixed while streaming).
+    pub fn hypers(&self) -> &GpHypers {
+        &self.hypers
+    }
+
+    /// The frozen inducing-grid axes.
+    pub fn axes(&self) -> &[Grid1d] {
+        &self.axes
+    }
+}

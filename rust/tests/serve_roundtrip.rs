@@ -9,8 +9,10 @@ use skip_gp::grid::{Grid1d, GridSpec};
 use skip_gp::linalg::Matrix;
 use skip_gp::serve::{
     BatcherConfig, ModelSnapshot, RequestBatcher, ServeEngine, Server, ServerConfig,
-    SnapshotConfig, VarianceMode,
+    SnapshotConfig, VarianceMode, SNAPSHOT_VERSION,
 };
+use skip_gp::solvers::CgConfig;
+use skip_gp::stream::{IncrementalState, StreamConfig};
 use skip_gp::util::Rng;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -321,16 +323,268 @@ fn v1_fixture_migrates_and_predicts_identically() {
     );
     let mean_v1 = snap.cache.predict_mean(&q);
     let var_v1 = snap.cache.predict_var(&q);
-    let v2_bytes = snap.to_bytes();
-    assert_ne!(v2_bytes, bytes, "writers always emit the newest version");
-    let back = ModelSnapshot::from_bytes(&v2_bytes).expect("v2 re-save loads");
-    assert_eq!(back.version, 2);
+    let v3_bytes = snap.to_bytes();
+    assert_ne!(v3_bytes, bytes, "writers always emit the newest version");
+    let back = ModelSnapshot::from_bytes(&v3_bytes).expect("v3 re-save loads");
+    assert_eq!(back.version, SNAPSHOT_VERSION);
+    assert!(back.pending.is_empty(), "migrated v1 has no pending log");
     assert_eq!(back.cache.spec, snap.cache.spec);
     assert_eq!(back.cache.predict_mean(&q), mean_v1, "migration changed means");
     assert_eq!(back.cache.predict_var(&q), var_v1, "migration changed variances");
     for (m, v) in mean_v1.iter().zip(&var_v1) {
         assert!(m.is_finite() && v.is_finite() && *v > 0.0);
     }
+}
+
+/// Path of the checked-in format-version-2 snapshot fixture. Synthetic
+/// but deterministic: d=2, n=5, r=2, KISS variant, train/refresh ranks
+/// 7/9, hypers (log ℓ, log σ_f², log σ_n²) = (−0.25, 0.125, −3),
+/// rectilinear spec [10, 8], one term with coefficient 1 and axes
+/// (min −1.25, h 0.25, m 10) × (min −0.5, h 0.125, m 8),
+/// α[i] = 0.25·i − 0.5, mean[i] = i·0.015625 − 0.5,
+/// var[i] = (i mod 17)·0.03125 − 0.25 — every value exactly
+/// representable, so the assertions below are bitwise.
+fn v2_fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/snapshot_v2.bin")
+}
+
+/// v2 files load through the in-memory migration — an empty pending log
+/// — and predict **identically** after a v3 re-save (the same bitwise
+/// pin the v1→v2 migration carries).
+#[test]
+fn v2_fixture_migrates_and_predicts_identically() {
+    let bytes = std::fs::read(v2_fixture_path()).expect("v2 fixture present");
+    let snap = ModelSnapshot::from_bytes(&bytes).expect("v2 fixture loads");
+
+    // Migrated structure.
+    assert_eq!(snap.version, 2, "version field records what was read");
+    assert!(snap.pending.is_empty(), "v2 migrates to an empty pending log");
+    assert_eq!(snap.cache.dim(), 2);
+    assert_eq!(snap.alpha.len(), 5);
+    assert_eq!(snap.cache.var_rank(), 2);
+    assert_eq!(snap.cache.spec, GridSpec::Rectilinear(vec![10, 8]));
+    assert_eq!(snap.cache.terms().len(), 1);
+
+    // Exact payload values (all exactly representable).
+    let term = &snap.cache.terms()[0];
+    assert_eq!(term.coeff, 1.0);
+    assert_eq!(term.axes[0].min, -1.25);
+    assert_eq!(term.axes[0].h, 0.25);
+    assert_eq!(term.axes[0].m, 10);
+    assert_eq!(term.axes[1].m, 8);
+    assert_eq!(snap.hypers.log_ell, -0.25);
+    assert_eq!(snap.hypers.log_sf2, 0.125);
+    assert_eq!(snap.hypers.log_sn2, -3.0);
+    assert_eq!(snap.alpha[3], 0.25);
+    assert_eq!(term.mean[4], 4.0 * 0.015625 - 0.5);
+    assert_eq!(term.var_r.get(0, 1), 0.03125 - 0.25);
+
+    // Migration predicts identically through a v3 re-save.
+    let q = Matrix::from_vec(
+        4,
+        2,
+        vec![-1.0, -0.4, 0.3, 0.1, 0.9, 0.4, -0.2, -0.45],
+    );
+    let mean_v2 = snap.cache.predict_mean(&q);
+    let var_v2 = snap.cache.predict_var(&q);
+    let v3_bytes = snap.to_bytes();
+    assert_ne!(v3_bytes, bytes, "writers always emit the newest version");
+    let back = ModelSnapshot::from_bytes(&v3_bytes).expect("v3 re-save loads");
+    assert_eq!(back.version, SNAPSHOT_VERSION);
+    assert!(back.pending.is_empty());
+    assert_eq!(back.cache.predict_mean(&q), mean_v2, "migration changed means");
+    assert_eq!(back.cache.predict_var(&q), var_v2, "migration changed variances");
+    for (m, v) in mean_v2.iter().zip(&var_v2) {
+        assert!(m.is_finite() && v.is_finite() && *v > 0.0);
+    }
+}
+
+/// Concurrent serving: multiple TCP clients interleave `observe` and
+/// `predict`; after every streamed point is acknowledged, predictions
+/// match a cold model built on the full point set to 1e-6.
+#[test]
+fn concurrent_observe_and_predict_matches_cold_refit() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let d = 2;
+    let (n0, n_stream, clients) = (160, 48, 3);
+    let mut rng = Rng::new(42);
+    let xs0 = Matrix::from_fn(n0, d, |_, _| rng.uniform_in(-1.0, 1.0));
+    let f = |r: &[f64]| (2.0 * r[0]).sin() + (3.0 * r[1]).cos();
+    let ys0: Vec<f64> = (0..n0).map(|i| f(xs0.row(i)) + 0.02 * rng.normal()).collect();
+    let streamed: Vec<(Vec<f64>, f64)> = (0..n_stream)
+        .map(|_| {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform_in(-0.9, 0.9)).collect();
+            let y = f(&x) + 0.02 * rng.normal();
+            (x, y)
+        })
+        .collect();
+
+    // Explicit fixed axes keep the live and cold models on the *same*
+    // inducing grid regardless of data bounds.
+    let axes = vec![
+        Grid1d::fit(-1.0, 1.0, 16).unwrap(),
+        Grid1d::fit(-1.0, 1.0, 16).unwrap(),
+    ];
+    let h = GpHypers::new(0.6, 1.0, 0.05);
+    let cg = CgConfig { max_iters: 600, tol: 1e-11, ..Default::default() };
+    // Exact variance, rebuilt every ingest (drift budget 0), no policy
+    // refreshes — the test exercises the purely-incremental path.
+    let scfg = StreamConfig {
+        refresh_every: 0,
+        var_drift_budget: 0,
+        error_z: 0.0,
+        log_capacity: 4096,
+        variance: VarianceMode::Exact,
+        patch_eps: 1e-12,
+    };
+    let live = IncrementalState::new(
+        xs0.clone(),
+        ys0.clone(),
+        h,
+        axes.clone(),
+        cg,
+        scfg.clone(),
+    )
+    .unwrap();
+    let engine = Arc::new(ServeEngine::new_live(live).unwrap());
+    assert!(engine.is_live());
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig {
+            bind: "127.0.0.1:0".to_string(),
+            batcher: BatcherConfig::default(),
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+
+    // Interleaved observe + predict traffic from several clients.
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let chunk: Vec<(Vec<f64>, f64)> = streamed
+                .iter()
+                .skip(c)
+                .step_by(clients)
+                .cloned()
+                .collect();
+            s.spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut writer = stream.try_clone().unwrap();
+                let mut reader = BufReader::new(stream);
+                let mut line = String::new();
+                for (x, y) in &chunk {
+                    line.clear();
+                    writeln!(writer, "observe {} {} {}", x[0], x[1], y).unwrap();
+                    reader.read_line(&mut line).unwrap();
+                    assert!(line.starts_with("ok "), "observe ack: {line}");
+                    // Interleave a predict; mid-stream values reflect a
+                    // prefix of the data, so only sanity-check them.
+                    line.clear();
+                    writeln!(writer, "predict {} {}", x[0], x[1]).unwrap();
+                    reader.read_line(&mut line).unwrap();
+                    assert!(line.starts_with("ok "), "predict: {line}");
+                }
+                writeln!(writer, "quit").unwrap();
+            });
+        }
+    });
+
+    // Every observation acknowledged ⇒ the published model holds all
+    // n0 + n_stream points.
+    assert_eq!(
+        engine.metrics.counter("stream.points"),
+        n_stream as u64,
+        "all streamed points ingested"
+    );
+
+    // Cold reference: the same model built in one shot on the full set.
+    let mut xs_full = xs0.clone();
+    let mut ys_full = ys0.clone();
+    for (x, y) in &streamed {
+        xs_full.data.extend_from_slice(x);
+        xs_full.rows += 1;
+        ys_full.push(*y);
+    }
+    let cold = IncrementalState::new(xs_full, ys_full, h, axes, cg, scfg).unwrap();
+
+    // Final predictions over TCP match the cold model to 1e-6.
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        for _ in 0..40 {
+            let q = [rng.uniform_in(-0.8, 0.8), rng.uniform_in(-0.8, 0.8)];
+            line.clear();
+            writeln!(writer, "predict {} {}", q[0], q[1]).unwrap();
+            reader.read_line(&mut line).unwrap();
+            let toks: Vec<&str> = line.trim().split_whitespace().collect();
+            assert_eq!(toks[0], "ok", "line: {line}");
+            let mean: f64 = toks[1].parse().unwrap();
+            let var: f64 = toks[2].parse().unwrap();
+            let want_mean = cold.cache().predict_mean_one(&q);
+            let want_var = cold.cache().predict_var_one(&q);
+            assert!(
+                (mean - want_mean).abs() < 1e-6,
+                "streamed mean {mean} vs cold {want_mean}"
+            );
+            assert!(
+                (var - want_var).abs() < 1e-6,
+                "streamed var {var} vs cold {want_var}"
+            );
+        }
+        writeln!(writer, "quit").unwrap();
+    }
+    server.shutdown();
+}
+
+/// Frozen engines refuse `observe` with a typed error over the wire.
+#[test]
+fn frozen_engine_rejects_observe() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let (xs, ys, grids, _) = on_grid_problem(64, 10);
+    let h = GpHypers::new(0.5, 1.0, 0.05);
+    let mut gp = ExactGp::new(xs, ys, h);
+    gp.refresh().unwrap();
+    let snap =
+        ModelSnapshot::from_exact_with_grids(&gp, grids, &VarianceMode::Lanczos(16)).unwrap();
+    let engine = Arc::new(ServeEngine::new(snap).unwrap());
+    assert!(!engine.is_live());
+    let server = Server::start(
+        engine,
+        ServerConfig {
+            bind: "127.0.0.1:0".to_string(),
+            batcher: BatcherConfig::default(),
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        writeln!(writer, "observe 0.4 0.5 0.6 1.0").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("err"), "line: {line}");
+        assert!(line.contains("live"), "line: {line}");
+        // Bad arity and non-finite values are per-connection errors.
+        line.clear();
+        writeln!(writer, "observe 0.4 0.5").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("err"), "line: {line}");
+        line.clear();
+        writeln!(writer, "observe 0.4 0.5 0.6 nan").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("err"), "line: {line}");
+        writeln!(writer, "quit").unwrap();
+    }
+    server.shutdown();
 }
 
 /// An unknown *future* version is a clean typed error, not a parse

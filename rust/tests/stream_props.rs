@@ -1,0 +1,409 @@
+//! Property tests for the streaming-ingestion subsystem
+//! (`skip_gp::stream`): incremental-vs-scratch agreement, dedup, the
+//! refresh policy triggers, and snapshot-v3 pending-log persistence.
+
+#![allow(clippy::needless_range_loop)] // index-heavy numeric test loops
+
+use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant};
+use skip_gp::grid::{Grid1d, GridSpec};
+use skip_gp::linalg::Matrix;
+use skip_gp::serve::{ModelSnapshot, VarianceMode};
+use skip_gp::solvers::CgConfig;
+use skip_gp::stream::{IncrementalState, RefreshReason, RowOutcome, StreamConfig};
+use skip_gp::util::Rng;
+
+fn smooth(r: &[f64]) -> f64 {
+    r.iter()
+        .enumerate()
+        .map(|(k, &x)| ((k + 1) as f64 * 2.0 * x).sin())
+        .sum()
+}
+
+/// Initial data with pinned per-dimension bounds [−1, 1], so a grid
+/// fitted to the initial set is identical to one fitted to the union
+/// with later points drawn strictly inside.
+fn pinned_data(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>, Rng) {
+    let mut rng = Rng::new(seed);
+    let mut xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+    for k in 0..d {
+        xs.set(0, k, -1.0);
+        xs.set(1, k, 1.0);
+    }
+    let ys: Vec<f64> = (0..n).map(|i| smooth(xs.row(i)) + 0.02 * rng.normal()).collect();
+    (xs, ys, rng)
+}
+
+fn stream_points(rng: &mut Rng, count: usize, d: usize) -> Vec<(Vec<f64>, f64)> {
+    (0..count)
+        .map(|_| {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform_in(-0.9, 0.9)).collect();
+            let y = smooth(&x) + 0.02 * rng.normal();
+            (x, y)
+        })
+        .collect()
+}
+
+/// No-policy stream config: ingestion stays purely incremental.
+fn quiet_cfg() -> StreamConfig {
+    StreamConfig {
+        refresh_every: 0,
+        var_drift_budget: usize::MAX,
+        error_z: 0.0,
+        log_capacity: 1 << 16,
+        variance: VarianceMode::None,
+        patch_eps: 1e-12,
+    }
+}
+
+/// Acceptance: streaming 64 points one at a time into an n=1024, d=2
+/// KISS-SKI model matches a scratch-built model on the same 1088 points
+/// — predictive mean and variance agree to ≤ 1e-6.
+#[test]
+fn incremental_ingest_matches_scratch_refit_1024() {
+    let (n0, extra, d) = (1024, 64, 2);
+    let (xs0, ys0, mut rng) = pinned_data(n0, d, 1);
+    let streamed = stream_points(&mut rng, extra, d);
+
+    let h = GpHypers::new(0.5, 1.0, 0.05);
+    let mut cfg = MvmGpConfig {
+        variant: MvmVariant::Kiss,
+        grid: GridSpec::uniform(32),
+        ..Default::default()
+    };
+    // Both sides solve far below the 1e-6 acceptance band, so the
+    // comparison measures the incremental algebra, not solver slack.
+    cfg.cg.tol = 1e-12;
+    cfg.cg.max_iters = 800;
+
+    // Live model: adopt the initial-data model, then stream one at a
+    // time. No policy refreshes — every point takes the warm path.
+    let gp0 = MvmGp::new(xs0.clone(), ys0.clone(), h, cfg.clone());
+    let mut live = IncrementalState::from_mvm(&gp0, quiet_cfg()).unwrap();
+    for (x, y) in &streamed {
+        let report = live.ingest(x, *y).unwrap();
+        assert_eq!(report.accepted, 1);
+        assert!(report.refreshed.is_none(), "policy must stay quiet");
+    }
+    assert_eq!(live.n(), n0 + extra);
+    assert_eq!(live.pending(), extra);
+    assert_eq!(live.stats.refreshes, 1, "only the construction refresh ran");
+
+    // Scratch model on the full 1088-point set.
+    let mut xs_full = xs0;
+    let mut ys_full = ys0;
+    for (x, y) in &streamed {
+        xs_full.data.extend_from_slice(x);
+        xs_full.rows += 1;
+        ys_full.push(*y);
+    }
+    let mut scratch = MvmGp::new(xs_full, ys_full, h, cfg);
+    scratch.refresh().unwrap();
+
+    // Same frozen grid: the streamed points stayed inside the pinned
+    // bounds, so the scratch fit reproduces the live axes exactly.
+    assert_eq!(scratch.fitted_grid_axes().unwrap(), live.axes().to_vec());
+
+    let xt = Matrix::from_fn(20, d, |_, _| rng.uniform_in(-0.85, 0.85));
+    let live_mean = live.predict_mean(&xt);
+    let scratch_mean = scratch.predict_mean(&xt);
+    let live_var = live.predict_var(&xt).unwrap();
+    let scratch_var = scratch.predict_var(&xt).unwrap();
+    for i in 0..xt.rows {
+        assert!(
+            (live_mean[i] - scratch_mean[i]).abs() <= 1e-6,
+            "mean[{i}]: streamed {} vs scratch {}",
+            live_mean[i],
+            scratch_mean[i]
+        );
+        assert!(
+            (live_var[i] - scratch_var[i]).abs() <= 1e-6,
+            "var[{i}]: streamed {} vs scratch {}",
+            live_var[i],
+            scratch_var[i]
+        );
+    }
+}
+
+/// The patched mean cache equals a cold-built cache on the same data
+/// (the delta scatter loses nothing beyond float ordering).
+#[test]
+fn patched_mean_cache_equals_cold_rebuild() {
+    let d = 2;
+    let (xs0, ys0, mut rng) = pinned_data(96, d, 2);
+    let streamed = stream_points(&mut rng, 24, d);
+    let axes = vec![
+        Grid1d::fit(-1.0, 1.0, 12).unwrap(),
+        Grid1d::fit(-1.0, 1.0, 12).unwrap(),
+    ];
+    let h = GpHypers::new(0.6, 1.0, 0.05);
+    let cg = CgConfig { max_iters: 400, tol: 1e-11, ..Default::default() };
+
+    let mut live =
+        IncrementalState::new(xs0.clone(), ys0.clone(), h, axes.clone(), cg, quiet_cfg())
+            .unwrap();
+    let mut patched_rows = 0usize;
+    for (x, y) in &streamed {
+        patched_rows += live.ingest(x, *y).unwrap().rows_patched;
+    }
+    assert!(patched_rows > 0, "patches must actually touch stencils");
+
+    let mut xs_full = xs0;
+    let mut ys_full = ys0;
+    for (x, y) in &streamed {
+        xs_full.data.extend_from_slice(x);
+        xs_full.rows += 1;
+        ys_full.push(*y);
+    }
+    let cold = IncrementalState::new(xs_full, ys_full, h, axes, cg, quiet_cfg()).unwrap();
+
+    let live_mean = &live.cache().terms()[0].mean;
+    let cold_mean = &cold.cache().terms()[0].mean;
+    assert_eq!(live_mean.len(), cold_mean.len());
+    let scale = cold_mean.iter().fold(1.0f64, |m, v| m.max(v.abs()));
+    for (a, b) in live_mean.iter().zip(cold_mean) {
+        assert!(
+            (a - b).abs() <= 1e-8 * scale,
+            "patched cache drifted: {a} vs {b}"
+        );
+    }
+}
+
+/// Bitwise-duplicate observations are dropped without touching the model.
+#[test]
+fn duplicate_observations_are_dropped() {
+    let (xs0, ys0, _) = pinned_data(40, 2, 3);
+    let axes = vec![
+        Grid1d::fit(-1.0, 1.0, 8).unwrap(),
+        Grid1d::fit(-1.0, 1.0, 8).unwrap(),
+    ];
+    let mut live = IncrementalState::new(
+        xs0,
+        ys0,
+        GpHypers::new(0.6, 1.0, 0.05),
+        axes,
+        CgConfig::default(),
+        quiet_cfg(),
+    )
+    .unwrap();
+    let first = live.ingest(&[0.25, -0.125], 0.75).unwrap();
+    assert_eq!(first.accepted, 1);
+    assert_eq!(live.n(), 41);
+    let again = live.ingest(&[0.25, -0.125], 0.75).unwrap();
+    assert_eq!(again.accepted, 0);
+    assert_eq!(again.duplicates, 1);
+    assert_eq!(again.outcomes, vec![RowOutcome::Duplicate]);
+    assert_eq!(live.n(), 41, "duplicate must not grow the model");
+    // A re-measurement (same x, different y) is a fresh observation.
+    let remeasure = live.ingest(&[0.25, -0.125], 0.8).unwrap();
+    assert_eq!(remeasure.accepted, 1);
+    assert_eq!(live.n(), 42);
+
+    // Duplicates *within one coalesced block* (two clients retrying the
+    // same observation into the same batch) dedup too — one point
+    // ingested, per-row outcomes preserved.
+    let xs = Matrix::from_vec(3, 2, vec![0.5, 0.5, 0.5, 0.5, 0.375, -0.25]);
+    let block = live.ingest_block(&xs, &[1.0, 1.0, 2.0]).unwrap();
+    assert_eq!(block.accepted, 2);
+    assert_eq!(block.duplicates, 1);
+    assert_eq!(block.outcomes[1], RowOutcome::Duplicate);
+    assert!(matches!(block.outcomes[0], RowOutcome::Accepted { .. }));
+    assert!(matches!(block.outcomes[2], RowOutcome::Accepted { .. }));
+    assert_eq!(live.n(), 44);
+}
+
+/// A full observation ring escalates to a refresh that absorbs the log.
+#[test]
+fn ring_full_escalates_to_refresh() {
+    let (xs0, ys0, mut rng) = pinned_data(40, 2, 4);
+    let streamed = stream_points(&mut rng, 4, 2);
+    let axes = vec![
+        Grid1d::fit(-1.0, 1.0, 8).unwrap(),
+        Grid1d::fit(-1.0, 1.0, 8).unwrap(),
+    ];
+    let cfg = StreamConfig { log_capacity: 4, ..quiet_cfg() };
+    let mut live = IncrementalState::new(
+        xs0,
+        ys0,
+        GpHypers::new(0.6, 1.0, 0.05),
+        axes,
+        CgConfig::default(),
+        cfg,
+    )
+    .unwrap();
+    for (i, (x, y)) in streamed.iter().enumerate() {
+        let report = live.ingest(x, *y).unwrap();
+        if i < 3 {
+            assert!(report.refreshed.is_none(), "ingest {i} refreshed early");
+        } else {
+            assert_eq!(report.refreshed, Some(RefreshReason::RingFull));
+            assert_eq!(report.pending, 0, "refresh absorbs the pending log");
+        }
+    }
+    assert_eq!(live.n(), 44);
+}
+
+/// The every-N-points policy triggers a refresh on schedule.
+#[test]
+fn refresh_every_policy_fires() {
+    let (xs0, ys0, mut rng) = pinned_data(40, 2, 5);
+    let streamed = stream_points(&mut rng, 6, 2);
+    let axes = vec![
+        Grid1d::fit(-1.0, 1.0, 8).unwrap(),
+        Grid1d::fit(-1.0, 1.0, 8).unwrap(),
+    ];
+    let cfg = StreamConfig { refresh_every: 3, ..quiet_cfg() };
+    let mut live = IncrementalState::new(
+        xs0,
+        ys0,
+        GpHypers::new(0.6, 1.0, 0.05),
+        axes,
+        CgConfig::default(),
+        cfg,
+    )
+    .unwrap();
+    let mut reasons = Vec::new();
+    for (x, y) in &streamed {
+        reasons.push(live.ingest(x, *y).unwrap().refreshed);
+    }
+    assert_eq!(
+        reasons,
+        vec![
+            None,
+            None,
+            Some(RefreshReason::EveryN),
+            None,
+            None,
+            Some(RefreshReason::EveryN)
+        ]
+    );
+}
+
+/// An outlier observation (standardized residual beyond `error_z`)
+/// escalates to a full refresh.
+#[test]
+fn outlier_escalates_to_refresh() {
+    let (xs0, ys0, _) = pinned_data(60, 2, 6);
+    let axes = vec![
+        Grid1d::fit(-1.0, 1.0, 8).unwrap(),
+        Grid1d::fit(-1.0, 1.0, 8).unwrap(),
+    ];
+    let cfg = StreamConfig { error_z: 4.0, ..quiet_cfg() };
+    let mut live = IncrementalState::new(
+        xs0,
+        ys0,
+        GpHypers::new(0.6, 1.0, 0.05),
+        axes,
+        CgConfig::default(),
+        cfg,
+    )
+    .unwrap();
+    // A well-predicted point does not trigger…
+    let calm = live.ingest(&[0.2, 0.3], smooth(&[0.2, 0.3])).unwrap();
+    assert!(calm.refreshed.is_none());
+    // …a wild one does.
+    let wild = live.ingest(&[0.1, -0.2], 500.0).unwrap();
+    assert_eq!(wild.refreshed, Some(RefreshReason::Outlier));
+    assert_eq!(live.stats.outlier_refreshes, 1);
+}
+
+/// Snapshot format v3 persists the pending log; replaying it into a
+/// fresh model reproduces the live model's predictions.
+#[test]
+fn snapshot_v3_persists_and_replays_pending_log() {
+    let (xs0, ys0, mut rng) = pinned_data(80, 2, 7);
+    let streamed = stream_points(&mut rng, 10, 2);
+    let axes = vec![
+        Grid1d::fit(-1.0, 1.0, 10).unwrap(),
+        Grid1d::fit(-1.0, 1.0, 10).unwrap(),
+    ];
+    let h = GpHypers::new(0.6, 1.0, 0.05);
+    let cg = CgConfig { max_iters: 400, tol: 1e-11, ..Default::default() };
+    let cfg = StreamConfig { variance: VarianceMode::Exact, ..quiet_cfg() };
+
+    let mut live =
+        IncrementalState::new(xs0.clone(), ys0.clone(), h, axes.clone(), cg, cfg.clone())
+            .unwrap();
+    for (x, y) in &streamed {
+        live.ingest(x, *y).unwrap();
+    }
+    assert_eq!(live.pending(), streamed.len());
+
+    // The pending log rides the snapshot bytes bitwise.
+    let snap = live.to_snapshot();
+    assert_eq!(snap.pending.len(), streamed.len());
+    let bytes = snap.to_bytes();
+    let back = ModelSnapshot::from_bytes(&bytes).unwrap();
+    assert_eq!(back.pending, snap.pending);
+    for (o, (x, y)) in back.pending.iter().zip(&streamed) {
+        assert_eq!(&o.x, x, "pending x must be bitwise");
+        assert_eq!(o.y, *y, "pending y must be bitwise");
+    }
+
+    // Replaying the pending log into a fresh base model reproduces the
+    // live predictions.
+    let mut replayed =
+        IncrementalState::new(xs0, ys0, h, axes, cg, cfg).unwrap();
+    let report = replayed.ingest_observations(&back.pending).unwrap();
+    assert_eq!(report.accepted, streamed.len());
+    let xt = Matrix::from_fn(15, 2, |_, _| rng.uniform_in(-0.8, 0.8));
+    let a = live.predict_mean(&xt);
+    let b = replayed.predict_mean(&xt);
+    for (u, v) in a.iter().zip(&b) {
+        assert!((u - v).abs() < 1e-8, "replayed mean {v} vs live {u}");
+    }
+}
+
+/// Streaming rejects model families it cannot update online, with typed
+/// errors that say so.
+#[test]
+fn unsupported_models_are_typed_errors() {
+    let (xs, ys, _) = pinned_data(50, 2, 8);
+    let h = GpHypers::new(0.6, 1.0, 0.05);
+    // SKIP variant: the merge tree cannot extend by a row.
+    let skip_gp_model = MvmGp::new(
+        xs.clone(),
+        ys.clone(),
+        h,
+        MvmGpConfig { grid: GridSpec::uniform(16), ..Default::default() },
+    );
+    let err = IncrementalState::from_mvm(&skip_gp_model, quiet_cfg()).unwrap_err();
+    assert!(err.to_string().contains("KISS"), "{err}");
+    // Sparse (multi-term) grids: the single-term patch path does not
+    // apply.
+    let sparse = MvmGp::new(
+        xs,
+        ys,
+        h,
+        MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: GridSpec::sparse(3),
+            ..Default::default()
+        },
+    );
+    let err = IncrementalState::from_mvm(&sparse, quiet_cfg()).unwrap_err();
+    assert!(err.to_string().contains("single-term"), "{err}");
+}
+
+/// Non-finite observations are rejected before any state mutates.
+#[test]
+fn non_finite_observations_are_rejected() {
+    let (xs0, ys0, _) = pinned_data(40, 2, 9);
+    let axes = vec![
+        Grid1d::fit(-1.0, 1.0, 8).unwrap(),
+        Grid1d::fit(-1.0, 1.0, 8).unwrap(),
+    ];
+    let mut live = IncrementalState::new(
+        xs0,
+        ys0,
+        GpHypers::new(0.6, 1.0, 0.05),
+        axes,
+        CgConfig::default(),
+        quiet_cfg(),
+    )
+    .unwrap();
+    let err = live.ingest(&[f64::NAN, 0.1], 1.0).unwrap_err();
+    assert!(err.to_string().contains("non-finite"), "{err}");
+    let err = live.ingest(&[0.1, 0.2], f64::INFINITY).unwrap_err();
+    assert!(err.to_string().contains("non-finite"), "{err}");
+    assert_eq!(live.n(), 40, "rejected observations must not grow the model");
+}

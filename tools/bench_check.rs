@@ -1,0 +1,600 @@
+//! CI bench-regression gate: compare the current `results/BENCH_*.json`
+//! perf records against checked-in baselines and fail on regression.
+//!
+//! ```text
+//! bench_check [--baseline DIR] [--current DIR] [--tol F]
+//!             (defaults: results/baselines, results, 0.20)
+//! ```
+//!
+//! For every `BENCH_*.json` in the baseline directory, the current
+//! directory must contain a record of the same name. Both are parsed
+//! (hand-rolled reader — no serde offline) and flattened to
+//! dotted-path numeric fields; a field is **gated** only when it is
+//! present in *both* records and its name marks it perf-relevant:
+//!
+//! - higher-is-better: name contains `speedup`, `ratio`, or `qps` —
+//!   regression when `current < baseline·(1 − tol)`;
+//! - lower-is-better: name ends in `_us`, `_ms`, `_s`, or `_iters`, or
+//!   contains `latency` — regression when `current > baseline·(1 + tol)`.
+//!
+//! Everything else (counts, sizes, flags) is informational. Baselines
+//! therefore control exposure: checking in a baseline with only the
+//! machine-portable ratio fields gates exactly those, and raw-latency
+//! baselines can be seeded later from CI's own uploaded artifacts. A
+//! gated field *missing from the current record* fails too — silently
+//! dropping a tracked number is how regressions hide.
+//!
+//! Exit status: 0 clean, 1 regression (with a readable per-field diff
+//! in the step log), 2 usage/IO error.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Minimal JSON value (subset sufficient for the bench records).
+#[derive(Clone, Debug, PartialEq)]
+enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn new(s: &'a str) -> Self {
+        Parser { s: s.as_bytes(), i: 0 }
+    }
+
+    fn err(&self, msg: &str) -> String {
+        format!("JSON parse error at byte {}: {msg}", self.i)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && (self.s[self.i] as char).is_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.s.get(self.i).copied()
+    }
+
+    fn expect(&mut self, c: u8) -> Result<(), String> {
+        self.skip_ws();
+        if self.s.get(self.i) == Some(&c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek().ok_or_else(|| self.err("unexpected end"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn lit(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        self.skip_ws();
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        self.skip_ws();
+        let start = self.i;
+        while self.i < self.s.len()
+            && matches!(self.s[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let txt = std::str::from_utf8(&self.s[start..self.i])
+            .map_err(|_| self.err("bad number bytes"))?;
+        txt.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err("bad number"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        while let Some(&c) = self.s.get(self.i) {
+            self.i += 1;
+            match c {
+                b'"' => return Ok(out),
+                b'\\' => {
+                    let e = *self.s.get(self.i).ok_or_else(|| self.err("bad escape"))?;
+                    self.i += 1;
+                    match e {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        other => {
+                            return Err(self.err(&format!(
+                                "unsupported escape '\\{}'",
+                                other as char
+                            )))
+                        }
+                    }
+                }
+                other => out.push(other as char),
+            }
+        }
+        Err(self.err("unterminated string"))
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            let key = self.string()?;
+            self.expect(b':')?;
+            fields.push((key, self.value()?));
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+}
+
+fn parse(text: &str) -> Result<Json, String> {
+    let mut p = Parser::new(text);
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.s.len() {
+        return Err(p.err("trailing garbage"));
+    }
+    Ok(v)
+}
+
+/// Flatten to dotted-path → numeric value (arrays as `path[i]`).
+fn flatten(v: &Json, prefix: &str, out: &mut BTreeMap<String, f64>) {
+    match v {
+        Json::Num(x) => {
+            out.insert(prefix.to_string(), *x);
+        }
+        Json::Obj(fields) => {
+            for (k, child) in fields {
+                let p = if prefix.is_empty() {
+                    k.clone()
+                } else {
+                    format!("{prefix}.{k}")
+                };
+                flatten(child, &p, out);
+            }
+        }
+        Json::Arr(items) => {
+            for (i, child) in items.iter().enumerate() {
+                flatten(child, &format!("{prefix}[{i}]"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// How a flattened field is gated, from its final path segment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Gate {
+    HigherIsBetter,
+    LowerIsBetter,
+    Ignored,
+}
+
+fn classify(path: &str) -> Gate {
+    // Last dotted segment, with any array index stripped.
+    let last = path.rsplit('.').next().unwrap_or(path);
+    let last = last.split('[').next().unwrap_or(last).to_ascii_lowercase();
+    if last.contains("speedup") || last.contains("ratio") || last.contains("qps") {
+        return Gate::HigherIsBetter;
+    }
+    if last.ends_with("_us")
+        || last.ends_with("_ms")
+        || last.ends_with("_s")
+        || last.ends_with("_iters")
+        || last.contains("latency")
+    {
+        return Gate::LowerIsBetter;
+    }
+    Gate::Ignored
+}
+
+/// One field-level verdict.
+#[derive(Clone, Debug)]
+struct Finding {
+    path: String,
+    baseline: f64,
+    current: Option<f64>,
+    gate: Gate,
+    regressed: bool,
+}
+
+/// Compare one baseline record against the matching current record.
+fn compare_records(baseline: &Json, current: &Json, tol: f64) -> Vec<Finding> {
+    let mut base_fields = BTreeMap::new();
+    let mut cur_fields = BTreeMap::new();
+    flatten(baseline, "", &mut base_fields);
+    flatten(current, "", &mut cur_fields);
+    let mut findings = Vec::new();
+    for (path, &b) in &base_fields {
+        let gate = classify(path);
+        if gate == Gate::Ignored {
+            continue;
+        }
+        match cur_fields.get(path) {
+            None => findings.push(Finding {
+                path: path.clone(),
+                baseline: b,
+                current: None,
+                gate,
+                regressed: true, // a tracked field vanished
+            }),
+            Some(&c) => {
+                let regressed = match gate {
+                    Gate::HigherIsBetter => c < b * (1.0 - tol),
+                    Gate::LowerIsBetter => c > b * (1.0 + tol),
+                    Gate::Ignored => false,
+                };
+                findings.push(Finding {
+                    path: path.clone(),
+                    baseline: b,
+                    current: Some(c),
+                    gate,
+                    regressed,
+                });
+            }
+        }
+    }
+    findings
+}
+
+fn load_json(path: &Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+/// Run the gate over two directories. Returns (report, any_regression).
+fn check_dirs(baseline_dir: &Path, current_dir: &Path, tol: f64) -> Result<(String, bool), String> {
+    let mut names: Vec<String> = std::fs::read_dir(baseline_dir)
+        .map_err(|e| format!("cannot list {}: {e}", baseline_dir.display()))?
+        .filter_map(|entry| {
+            let name = entry.ok()?.file_name().to_string_lossy().into_owned();
+            (name.starts_with("BENCH_") && name.ends_with(".json")).then_some(name)
+        })
+        .collect();
+    names.sort();
+    if names.is_empty() {
+        return Err(format!(
+            "no BENCH_*.json baselines in {}",
+            baseline_dir.display()
+        ));
+    }
+
+    let mut out = String::new();
+    let mut any_regression = false;
+    for name in &names {
+        let base = load_json(&baseline_dir.join(name))?;
+        let cur_path = current_dir.join(name);
+        if !cur_path.exists() {
+            any_regression = true;
+            out.push_str(&format!(
+                "{name}: MISSING current record {} — did the bench stop emitting it?\n",
+                cur_path.display()
+            ));
+            continue;
+        }
+        let cur = load_json(&cur_path)?;
+        let findings = compare_records(&base, &cur, tol);
+        if findings.is_empty() {
+            out.push_str(&format!("{name}: no gated fields in baseline (informational only)\n"));
+            continue;
+        }
+        out.push_str(&format!("{name}:\n"));
+        for f in &findings {
+            let arrow = match f.gate {
+                Gate::HigherIsBetter => "≥",
+                Gate::LowerIsBetter => "≤",
+                Gate::Ignored => "·",
+            };
+            match f.current {
+                None => {
+                    out.push_str(&format!(
+                        "  FAIL {path:<40} baseline {b:>12.3} → (field missing)\n",
+                        path = f.path,
+                        b = f.baseline
+                    ));
+                }
+                Some(c) => {
+                    let delta = if f.baseline != 0.0 {
+                        (c - f.baseline) / f.baseline * 100.0
+                    } else {
+                        0.0
+                    };
+                    let verdict = if f.regressed { "FAIL" } else { "ok  " };
+                    out.push_str(&format!(
+                        "  {verdict} {path:<40} baseline {b:>12.3} {arrow} current {c:>12.3} \
+                         ({delta:+.1}%, tol ±{t:.0}%)\n",
+                        path = f.path,
+                        b = f.baseline,
+                        t = tol * 100.0
+                    ));
+                }
+            }
+            any_regression |= f.regressed;
+        }
+    }
+
+    // Current records with no baseline are future gates, not failures.
+    if let Ok(entries) = std::fs::read_dir(current_dir) {
+        let mut extra: Vec<String> = entries
+            .filter_map(|entry| {
+                let name = entry.ok()?.file_name().to_string_lossy().into_owned();
+                (name.starts_with("BENCH_")
+                    && name.ends_with(".json")
+                    && !names.contains(&name))
+                .then_some(name)
+            })
+            .collect();
+        extra.sort();
+        for name in extra {
+            out.push_str(&format!(
+                "{name}: no baseline — seed one in {} to start gating it\n",
+                baseline_dir.display()
+            ));
+        }
+    }
+    Ok((out, any_regression))
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut baseline_dir = PathBuf::from("results/baselines");
+    let mut current_dir = PathBuf::from("results");
+    let mut tol = 0.20f64;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--baseline" if i + 1 < args.len() => {
+                baseline_dir = PathBuf::from(&args[i + 1]);
+                i += 2;
+            }
+            "--current" if i + 1 < args.len() => {
+                current_dir = PathBuf::from(&args[i + 1]);
+                i += 2;
+            }
+            "--tol" if i + 1 < args.len() => {
+                tol = match args[i + 1].parse() {
+                    Ok(v) => v,
+                    Err(_) => {
+                        eprintln!("bad --tol value '{}'", args[i + 1]);
+                        return ExitCode::from(2);
+                    }
+                };
+                i += 2;
+            }
+            other => {
+                eprintln!(
+                    "unknown argument '{other}'\n\
+                     usage: bench_check [--baseline DIR] [--current DIR] [--tol F]"
+                );
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    match check_dirs(&baseline_dir, &current_dir, tol) {
+        Err(e) => {
+            eprintln!("bench_check: {e}");
+            ExitCode::from(2)
+        }
+        Ok((report, regressed)) => {
+            print!("{report}");
+            if regressed {
+                eprintln!("bench_check: PERF REGRESSION (tolerance ±{:.0}%)", tol * 100.0);
+                ExitCode::from(1)
+            } else {
+                println!("bench_check: all gated fields within ±{:.0}%", tol * 100.0);
+                ExitCode::SUCCESS
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "skipgp-benchcheck-{tag}-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    const BASELINE: &str = r#"{
+  "bench": "stream",
+  "speedup_single_vs_refresh": 6.0,
+  "ingest_p50_us": 500.0,
+  "warm_iters_p50": 10,
+  "n": 4096
+}"#;
+
+    #[test]
+    fn parses_and_flattens_nested_records() {
+        let v = parse(
+            r#"{"a": {"b": 1.5, "qps": 10.0}, "cases": [{"mvm_s": 0.25}], "tag": "x"}"#,
+        )
+        .unwrap();
+        let mut flat = BTreeMap::new();
+        flatten(&v, "", &mut flat);
+        assert_eq!(flat.get("a.b"), Some(&1.5));
+        assert_eq!(flat.get("a.qps"), Some(&10.0));
+        assert_eq!(flat.get("cases[0].mvm_s"), Some(&0.25));
+        assert!(!flat.contains_key("tag"));
+    }
+
+    #[test]
+    fn classification_by_field_name() {
+        assert_eq!(classify("speedup_single_vs_refresh"), Gate::HigherIsBetter);
+        assert_eq!(classify("one_at_a_time.qps"), Gate::HigherIsBetter);
+        assert_eq!(classify("iters_ratio"), Gate::HigherIsBetter);
+        assert_eq!(classify("ingest_p50_us"), Gate::LowerIsBetter);
+        assert_eq!(classify("refresh_ms"), Gate::LowerIsBetter);
+        assert_eq!(classify("cache_build_s"), Gate::LowerIsBetter);
+        assert_eq!(classify("warm_iters_p50"), Gate::Ignored);
+        assert_eq!(classify("cases[0].points"), Gate::Ignored);
+        assert_eq!(classify("n"), Gate::Ignored);
+    }
+
+    #[test]
+    fn within_tolerance_passes() {
+        let base = parse(BASELINE).unwrap();
+        // 10% slower ingest, 10% lower speedup: inside ±20%.
+        let cur = parse(
+            r#"{"bench": "stream", "speedup_single_vs_refresh": 5.4,
+                "ingest_p50_us": 550.0, "warm_iters_p50": 12, "n": 4096}"#,
+        )
+        .unwrap();
+        let findings = compare_records(&base, &cur, 0.20);
+        assert!(findings.iter().all(|f| !f.regressed), "{findings:?}");
+        // Improvements pass too, by any margin.
+        let better = parse(
+            r#"{"bench": "stream", "speedup_single_vs_refresh": 60.0,
+                "ingest_p50_us": 5.0, "warm_iters_p50": 1, "n": 4096}"#,
+        )
+        .unwrap();
+        let findings = compare_records(&base, &better, 0.20);
+        assert!(findings.iter().all(|f| !f.regressed), "{findings:?}");
+    }
+
+    /// Acceptance: a doctored record outside tolerance is rejected.
+    #[test]
+    fn doctored_record_outside_tolerance_is_rejected() {
+        let base = parse(BASELINE).unwrap();
+        // Speedup collapsed 6.0 → 2.0: a real regression.
+        let doctored = parse(
+            r#"{"bench": "stream", "speedup_single_vs_refresh": 2.0,
+                "ingest_p50_us": 500.0, "warm_iters_p50": 10, "n": 4096}"#,
+        )
+        .unwrap();
+        let findings = compare_records(&base, &doctored, 0.20);
+        let bad: Vec<_> = findings.iter().filter(|f| f.regressed).collect();
+        assert_eq!(bad.len(), 1, "{findings:?}");
+        assert_eq!(bad[0].path, "speedup_single_vs_refresh");
+
+        // Latency blown past tolerance regresses too.
+        let slow = parse(
+            r#"{"bench": "stream", "speedup_single_vs_refresh": 6.0,
+                "ingest_p50_us": 2500.0, "warm_iters_p50": 10, "n": 4096}"#,
+        )
+        .unwrap();
+        let findings = compare_records(&base, &slow, 0.20);
+        assert!(
+            findings.iter().any(|f| f.regressed && f.path == "ingest_p50_us"),
+            "{findings:?}"
+        );
+
+        // A tracked field silently vanishing is a failure, not a skip.
+        let dropped = parse(r#"{"bench": "stream", "ingest_p50_us": 500.0}"#).unwrap();
+        let findings = compare_records(&base, &dropped, 0.20);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.regressed && f.current.is_none()),
+            "{findings:?}"
+        );
+    }
+
+    /// End-to-end over directories: the gate fails on a doctored record
+    /// and on a missing current record, with a readable diff.
+    #[test]
+    fn directory_gate_end_to_end() {
+        let bdir = tmpdir("base");
+        let cdir = tmpdir("cur");
+        std::fs::write(bdir.join("BENCH_stream.json"), BASELINE).unwrap();
+        std::fs::write(
+            cdir.join("BENCH_stream.json"),
+            r#"{"bench": "stream", "speedup_single_vs_refresh": 2.0,
+                "ingest_p50_us": 500.0, "warm_iters_p50": 10, "n": 4096}"#,
+        )
+        .unwrap();
+        // Extra current record without a baseline: noted, not fatal.
+        std::fs::write(cdir.join("BENCH_new.json"), r#"{"speedup": 3.0}"#).unwrap();
+        let (report, regressed) = check_dirs(&bdir, &cdir, 0.20).unwrap();
+        assert!(regressed, "{report}");
+        assert!(report.contains("FAIL speedup_single_vs_refresh"), "{report}");
+        assert!(report.contains("BENCH_new.json: no baseline"), "{report}");
+
+        // Healthy current record passes.
+        std::fs::write(
+            cdir.join("BENCH_stream.json"),
+            r#"{"bench": "stream", "speedup_single_vs_refresh": 7.5,
+                "ingest_p50_us": 420.0, "warm_iters_p50": 8, "n": 4096}"#,
+        )
+        .unwrap();
+        let (report, regressed) = check_dirs(&bdir, &cdir, 0.20).unwrap();
+        assert!(!regressed, "{report}");
+
+        // Missing current record fails loudly.
+        std::fs::remove_file(cdir.join("BENCH_stream.json")).unwrap();
+        let (report, regressed) = check_dirs(&bdir, &cdir, 0.20).unwrap();
+        assert!(regressed);
+        assert!(report.contains("MISSING"), "{report}");
+
+        std::fs::remove_dir_all(&bdir).ok();
+        std::fs::remove_dir_all(&cdir).ok();
+    }
+}
