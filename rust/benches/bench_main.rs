@@ -16,6 +16,10 @@
 //!   cg_solve            — 30-iteration CG on the SKIP operator
 //!   cg_loop_8rhs / block_cg_8rhs — t=8 solves, serial loop vs block-CG
 //!                         (the ≥2× acceptance case of the batched engine)
+//!   gridspace_n*        — per-CG-iteration cost, grid space vs data
+//!                         space, across n ∈ {10⁴, 10⁵, 10⁶} (emits
+//!                         results/BENCH_gridspace.json; the flat-in-n
+//!                         ratio is gated by tools/bench_check)
 //!
 //! Run: `cargo bench` (add `-- --fast` for a quick pass).
 
@@ -29,17 +33,18 @@ use skip_gp::operators::lowrank::{
     LanczosFactor,
 };
 use skip_gp::operators::{
-    matmat_via_matvec, KroneckerSkiOp, LinearOp, SkiOp, SkipComponent, SkipOp,
+    matmat_via_matvec, ArcOp, KroneckerSkiOp, LinearOp, SkiOp, SkipComponent, SkipOp,
 };
 use skip_gp::operators::AffineOp;
 use skip_gp::runtime::PjrtBackend;
 use skip_gp::solvers::{
-    block_cg_solve, build_preconditioner, cg_solve, cg_solve_with, CgConfig, PrecondSpec,
-    Preconditioner,
+    block_cg_solve, build_preconditioner, cg_solve, cg_solve_with,
+    grid_cg_solve_with_wty, CgConfig, GridSystem, PrecondSpec, Preconditioner,
 };
-use skip_gp::util::{bench_median_s, rel_err, Rng};
+use skip_gp::util::{bench_median_s, rel_err, Rng, Timer};
 use std::io::Write;
 use std::path::Path;
+use std::sync::Arc;
 
 struct Bench {
     rows: Vec<(String, f64, String)>,
@@ -317,6 +322,117 @@ fn main() {
         }
         std::fs::write(path, json).expect("bench json");
         println!("wrote {}", path.display());
+    }
+
+    // --- Grid-space iteration engine: per-CG-iteration cost vs n.
+    // The grid-space normal equations iterate on the m grid points only
+    // (one Kronecker–Toeplitz apply + one banded WᵀW apply), so the cost
+    // of an iteration must be *flat* in n, while data-space CG walks all
+    // n stencil rows twice per iteration. Measured by differencing two
+    // iteration budgets on the same system — tol = 0 never converges, so
+    // each solve runs exactly max_iters, and the difference cancels the
+    // per-solve O(n) work (Wᵀy projection, α back-projection) that both
+    // budgets share. Recorded machine-readably in
+    // results/BENCH_gridspace.json; bench_check gates the flatness ratio
+    // against results/baselines with a two-sided band.
+    {
+        let d = 2;
+        let m = 64; // 64×64 grid: M = 4096, band width 7² = 49
+        let (sf2, sn2) = (1.0, 0.1);
+        let ns: [usize; 3] = [10_000, 100_000, 1_000_000];
+        let (hi, lo) = (15usize, 5usize);
+        // Grid solves are milliseconds even at the top n — always take a
+        // min-of-3. Data solves at n = 10⁶ are the expensive part; one
+        // reading suffices under --fast.
+        let grid_reps = 3;
+        let data_reps = if fast { 1 } else { 3 };
+        let mut grid_per_iter_us = Vec::with_capacity(ns.len());
+        let mut data_per_iter_us = Vec::with_capacity(ns.len());
+        for &n in &ns {
+            let xs = gaussian_cloud(n, d, 11);
+            let mut ry = Rng::new(12);
+            let y: Vec<f64> = (0..n).map(|_| ry.normal()).collect();
+            let kern = ProductKernel::rbf(d, 0.5, 1.0);
+            let op = Arc::new(KroneckerSkiOp::new(&xs, &kern, m).expect("bench grid"));
+            let sys = GridSystem::new(vec![(1.0, op.clone())], sf2, sn2)
+                .expect("bench grid system");
+            let wty = sys.wt(&y);
+            let data_view =
+                AffineOp { inner: Box::new(ArcOp(op)), scale: sf2, shift: sn2 };
+            let min_s = |reps: usize, f: &mut dyn FnMut()| -> f64 {
+                let mut best = f64::INFINITY;
+                for _ in 0..reps {
+                    let t = Timer::start();
+                    f();
+                    best = best.min(t.elapsed_s());
+                }
+                best
+            };
+            let grid_s = |iters: usize| -> f64 {
+                let cfg = CgConfig { max_iters: iters, tol: 0.0, ..Default::default() };
+                min_s(grid_reps, &mut || {
+                    std::hint::black_box(grid_cg_solve_with_wty(
+                        &sys, &y, &wty, None, cfg,
+                    ));
+                })
+            };
+            let data_s = |iters: usize| -> f64 {
+                let cfg = CgConfig { max_iters: iters, tol: 0.0, ..Default::default() };
+                min_s(data_reps, &mut || {
+                    std::hint::black_box(cg_solve(&data_view, &y, cfg));
+                })
+            };
+            let span = (hi - lo) as f64;
+            let g_us = ((grid_s(hi) - grid_s(lo)) / span * 1e6).max(1e-3);
+            let d_us = ((data_s(hi) - data_s(lo)) / span * 1e6).max(1e-3);
+            println!(
+                "gridspace_n{n:<7} grid {g_us:>10.1} µs/iter   data {d_us:>10.1} µs/iter \
+                 (m={m}x{m})",
+            );
+            b.rows.push((
+                format!("gridspace_n{n}"),
+                g_us / 1e6,
+                format!("grid-space µs/iter, d={d} m={m}x{m}"),
+            ));
+            grid_per_iter_us.push(g_us);
+            data_per_iter_us.push(d_us);
+        }
+        let ratio = grid_per_iter_us[2] / grid_per_iter_us[0];
+        let data_growth = data_per_iter_us[2] / data_per_iter_us[0];
+        println!(
+            "  -> grid-space per-iteration cost, 10^6 vs 10^4 points: {ratio:.2}x \
+             (data space grows {data_growth:.1}x)"
+        );
+        let cases: Vec<String> = ns
+            .iter()
+            .zip(grid_per_iter_us.iter().zip(&data_per_iter_us))
+            .map(|(n, (g, dt))| {
+                format!(
+                    "{{\"n\": {n}, \"grid_per_iter_us\": {g:.2}, \
+                     \"data_per_iter_us\": {dt:.2}}}"
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n  \"bench\": \"gridspace\",\n  \"fast\": {fast},\n  \"d\": {d},\n  \
+             \"grid_m\": {m},\n  \"grid_cells\": {cells},\n  \"iters_hi\": {hi},\n  \
+             \"iters_lo\": {lo},\n  \"cases\": [\n    {cases}\n  ],\n  \
+             \"per_iter_us_ratio_1e6_vs_1e4\": {ratio:.3},\n  \
+             \"data_per_iter_growth_1e6_vs_1e4\": {data_growth:.3}\n}}\n",
+            cells = m * m,
+            cases = cases.join(",\n    "),
+        );
+        let path = Path::new("results/BENCH_gridspace.json");
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, json).expect("bench json");
+        println!("wrote {}", path.display());
+        assert!(
+            ratio <= 1.5,
+            "acceptance: grid-space per-iteration cost must be flat in n \
+             (10^6 vs 10^4 ratio {ratio:.2}x > 1.5x)"
+        );
     }
 
     b.write_csv(Path::new("results/bench_micro.csv"));

@@ -56,6 +56,7 @@ fn main() {
         log_capacity: 1 << 16,
         variance: VarianceMode::Lanczos(64),
         patch_eps: 1e-12,
+        ..Default::default()
     };
 
     let t = Timer::start();

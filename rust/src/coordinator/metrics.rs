@@ -287,6 +287,18 @@ impl Metrics {
                 self.counter("solver.warm.hit")
             ));
         }
+        // Solve-space routing: which engine the y-solves actually ran in
+        // (grid-space normal equations vs data-space CG), plus Auto-mode
+        // fallbacks to data space (over-budget gram, non-converged cold
+        // grid solve). Only printed once a space was ever chosen.
+        let grid = self.counter("solver.space.grid");
+        let data = self.counter("solver.space.data");
+        let space_fallbacks = self.counter("solver.space.fallback");
+        if grid > 0 || data > 0 || space_fallbacks > 0 {
+            out.push_str(&format!(
+                "  space     grid={grid} data={data} solves (auto fallbacks={space_fallbacks})\n"
+            ));
+        }
         out
     }
 
@@ -493,6 +505,19 @@ mod tests {
         assert!(r.contains("setup mvms=50"), "{r}");
         assert!(r.contains("3 solves seeded"), "{r}");
         assert!(r.contains("2 converged at the seed"), "{r}");
+    }
+
+    #[test]
+    fn solver_report_includes_space_line() {
+        let m = Metrics::new();
+        m.observe("solver.gridcg.iters", 11);
+        m.incr("solver.space.grid", 5);
+        m.incr("solver.space.data", 2);
+        m.incr("solver.space.fallback", 1);
+        let r = m.solver_report();
+        assert!(r.contains("solver gridcg"), "{r}");
+        assert!(r.contains("grid=5 data=2"), "{r}");
+        assert!(r.contains("fallbacks=1"), "{r}");
     }
 
     #[test]

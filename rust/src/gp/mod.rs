@@ -14,5 +14,5 @@ pub use cluster::{ClusterMtgp, ClusterMtgpConfig};
 pub use exact::ExactGp;
 pub use hypers::GpHypers;
 pub use mtgp::{Mtgp, MtgpConfig, MtgpData};
-pub use mvm::{MvmGp, MvmGpConfig, MvmVariant};
+pub use mvm::{MvmGp, MvmGpConfig, MvmVariant, SolveSpace};
 pub use sgpr::Sgpr;

@@ -30,16 +30,17 @@
 
 use super::adam::Adam;
 use super::hypers::GpHypers;
-use crate::grid::{build_grid, grid_ski_operator, Grid1d, GridSpec};
+use crate::grid::{build_grid, grid_ski_operator, grid_ski_parts, Grid1d, GridSpec};
 use crate::kernels::ProductKernel;
 use crate::linalg::{dot, Matrix};
 use crate::operators::{
-    AffineOp, ContractionBackend, LinearOp, NativeBackend, SkiOp, SkipComponent, SkipOp,
+    AffineOp, ArcOp, ContractionBackend, KroneckerSkiOp, LinearOp, NativeBackend, SkiOp,
+    SkipComponent, SkipOp, SumOp,
 };
 use crate::serve::cache::PredictCache;
 use crate::solvers::{
-    block_cg_solve_with, build_preconditioner, cg_solve_with, slq_logdet, CgConfig,
-    Preconditioner, SlqConfig,
+    block_cg_solve_with, build_preconditioner, cg_solve_with, grid_cg_solve,
+    slq_logdet, CgConfig, GridSystem, Preconditioner, SlqConfig,
 };
 use crate::util::Rng;
 use crate::{Error, Result};
@@ -65,6 +66,29 @@ pub enum MvmVariant {
     /// KISS-GP: Kronecker multi-dimensional grid. Dense specs are capped
     /// by [`KRON_MAX_CELLS`]; `GridSpec::Sparse` lifts the cap.
     Kiss,
+}
+
+/// Which space the covariance y-solves run in (Yadav, Sheldon & Musco
+/// 2021 — see `crate::solvers::gridspace` for the derivation and
+/// `docs/SOLVERS.md` for the decision table).
+///
+/// Both spaces converge on the *same* certificate
+/// (`‖K̂α − y‖ ≤ tol·‖y‖`), so switching spaces changes iteration cost,
+/// never the answer beyond the tolerance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveSpace {
+    /// Grid space for KISS models when the grid admits it (the `WᵀW`
+    /// band fits its budget, axes are non-degenerate), data space
+    /// otherwise — the default.
+    Auto,
+    /// Always solve in data space (n-dimensional CG/PCG) — the
+    /// equivalence oracle the grid path is tested against.
+    Data,
+    /// Always solve in grid space. A typed [`Error::Config`] for the
+    /// SKIP variant (no tensor-product `W` to project through) and a
+    /// typed [`Error::Grid`] when the grid refuses (over-budget band,
+    /// degenerate axes).
+    Grid,
 }
 
 /// Configuration for MVM-based inference.
@@ -94,6 +118,8 @@ pub struct MvmGpConfig {
     /// change where CG *starts*, never what it converges to; disable for
     /// bit-reproducibility of individual solves against cold runs.
     pub warm_start: bool,
+    /// Which space the covariance y-solves run in (`--space` on the CLI).
+    pub solve_space: SolveSpace,
     /// Base seed for probe vectors (common-random-numbers gradients).
     pub seed: u64,
 }
@@ -108,9 +134,21 @@ impl Default for MvmGpConfig {
             cg: CgConfig { max_iters: 100, tol: 1e-5, ..CgConfig::default() },
             slq: SlqConfig { num_probes: 8, max_rank: 25 },
             warm_start: true,
+            solve_space: SolveSpace::Auto,
             seed: 0,
         }
     }
+}
+
+/// Which space a stored warm-start seed lives in. A grid-space iterate
+/// is meaningless as a data-space seed (and vice versa) even when the
+/// lengths coincide (n == M is possible), so seeds are tagged and a
+/// space switch silently drops the stale seed instead of feeding it to
+/// the wrong solver.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum SeedSpace {
+    Data,
+    Grid,
 }
 
 /// MVM-based GP regression model.
@@ -137,11 +175,15 @@ pub struct MvmGp {
     /// pair is only served while `self.hypers` still matches (hypers are
     /// `pub` and the externally-set-hypers workflow mutates them).
     refresh_hypers: Option<GpHypers>,
-    /// The most recent y-solve (α from the last `mll_grad`/`refresh`),
-    /// used to warm-start the next one when `cfg.warm_start` is on.
+    /// The most recent y-solve iterate (data-space α, or the grid-space
+    /// q when solving in grid space — see [`SeedSpace`]), used to
+    /// warm-start the next solve when `cfg.warm_start` is on.
     /// Interior-mutable so `&self` methods (`mll`) can read it and
     /// `mll_grad` can be called through `&self` from optimizers.
-    warm: Mutex<Option<Vec<f64>>>,
+    warm: Mutex<Option<(SeedSpace, Vec<f64>)>>,
+    /// Whether the cached α was recovered from a grid-space solve —
+    /// recorded as provenance in serving snapshots.
+    alpha_from_grid: bool,
 }
 
 impl MvmGp {
@@ -159,6 +201,7 @@ impl MvmGp {
             refresh_pre: None,
             refresh_hypers: None,
             warm: Mutex::new(None),
+            alpha_from_grid: false,
         }
     }
 
@@ -170,14 +213,29 @@ impl MvmGp {
         build_preconditioner(op, Some(h.sn2()), self.cfg.cg.precond)
     }
 
-    /// The warm-start seed for an n-length y-solve, when enabled and a
-    /// previous solution exists.
-    fn warm_seed(&self) -> Option<Vec<f64>> {
+    /// The warm-start seed for a `len`-length solve in `space`, when
+    /// enabled and a previous solution of matching space AND length
+    /// exists. Both filters matter: after a [`SolveSpace`] flip (or a
+    /// system resize) the stored seed is stale, and feeding it to the
+    /// other space's solver would be wrong even at coincidentally equal
+    /// lengths — a mismatch is silently a cold start, never a panic.
+    fn warm_seed_for(&self, space: SeedSpace, len: usize) -> Option<Vec<f64>> {
         if !self.cfg.warm_start {
             return None;
         }
         let w = self.warm.lock().unwrap();
-        w.as_ref().filter(|v| v.len() == self.ys.len()).cloned()
+        match w.as_ref() {
+            Some((s, v)) if *s == space && v.len() == len => Some(v.clone()),
+            _ => None,
+        }
+    }
+
+    /// Record the latest solve iterate (tagged with its space) for the
+    /// next warm start. No-op when warm starts are disabled.
+    fn store_warm(&self, space: SeedSpace, v: Vec<f64>) {
+        if self.cfg.warm_start {
+            *self.warm.lock().unwrap() = Some((space, v));
+        }
     }
 
     /// Swap the Lemma-3.1 contraction backend (e.g. the PJRT artifact
@@ -250,6 +308,93 @@ impl MvmGp {
         Ok(AffineOp { inner, scale: h.sf2(), shift: h.sn2() })
     }
 
+    /// Build the KISS term decomposition once and hand the *same*
+    /// `Arc`-shared [`KroneckerSkiOp`]s to both solve spaces: the
+    /// data-space covariance view (for SLQ log-determinants, variance
+    /// block-solves, preconditioner setup) and the grid-space
+    /// normal-equations system. One stencil decode, two views,
+    /// float-identical kernel arithmetic.
+    fn build_grid_system(&self, h: &GpHypers) -> Result<(AffineOp, GridSystem)> {
+        let d = self.xs.cols;
+        self.cfg.grid.validate_for_dim(d)?;
+        if !matches!(self.cfg.grid, GridSpec::Sparse { .. }) {
+            match self.cfg.grid.total_points(d) {
+                Some(cells) if cells <= KRON_MAX_CELLS => {}
+                _ => {
+                    return Err(Error::Grid(format!(
+                        "dense Kronecker grid {} in d={d} exceeds \
+                         {KRON_MAX_CELLS} cells — use GridSpec::Sparse \
+                         to break the m^d barrier",
+                        self.cfg.grid.describe()
+                    )))
+                }
+            }
+        }
+        let kern = ProductKernel::rbf(d, h.ell(), 1.0);
+        let grid = build_grid(&self.xs, &self.cfg.grid)?;
+        let parts: Vec<(f64, Arc<KroneckerSkiOp>)> =
+            grid_ski_parts(&self.xs, &kern, grid.as_ref())
+                .into_iter()
+                .map(|(c, op)| (c, Arc::new(op)))
+                .collect();
+        // Data-space view over Arc clones — `ArcOp` is pure delegation,
+        // so this is the `grid_ski_operator` composition bit-for-bit.
+        let inner: Box<dyn LinearOp> = if parts.len() == 1 && parts[0].0 == 1.0 {
+            Box::new(ArcOp(parts[0].1.clone()))
+        } else {
+            let terms: Vec<Box<dyn LinearOp>> = parts
+                .iter()
+                .map(|(c, op)| {
+                    Box::new(AffineOp {
+                        inner: Box::new(ArcOp(op.clone())),
+                        scale: *c,
+                        shift: 0.0,
+                    }) as Box<dyn LinearOp>
+                })
+                .collect();
+            Box::new(SumOp { terms })
+        };
+        let op = AffineOp { inner, scale: h.sf2(), shift: h.sn2() };
+        let sys = GridSystem::new(parts, h.sf2(), h.sn2())?;
+        Ok((op, sys))
+    }
+
+    /// Resolve [`MvmGpConfig::solve_space`] for this model: the grid
+    /// system plus the matching data-space covariance view when y-solves
+    /// should run in grid space, `None` for the data-space path.
+    ///
+    /// `Auto` falls back to data space when grid space is infeasible
+    /// (SKIP variant, over-budget `WᵀW` band, degenerate axes); explicit
+    /// `Grid` turns those into typed errors instead.
+    fn grid_solver(&self, h: &GpHypers) -> Result<Option<(AffineOp, GridSystem)>> {
+        let explicit = match self.cfg.solve_space {
+            SolveSpace::Data => return Ok(None),
+            SolveSpace::Grid => true,
+            SolveSpace::Auto => false,
+        };
+        if self.cfg.variant != MvmVariant::Kiss {
+            return if explicit {
+                Err(Error::Config(
+                    "solve_space=grid requires the kiss variant — the SKIP \
+                     operator has no tensor-product W to project through"
+                        .into(),
+                ))
+            } else {
+                Ok(None)
+            };
+        }
+        match self.build_grid_system(h) {
+            Ok(pair) => Ok(Some(pair)),
+            Err(Error::Grid(_)) if !explicit => {
+                // Auto: infeasible grids (over-budget band, degenerate
+                // axes) quietly take the data-space path instead.
+                crate::coordinator::metrics::global().incr("solver.space.fallback", 1);
+                Ok(None)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
     /// Stochastic estimate of the marginal log likelihood (Eq. 3).
     ///
     /// The y-solve is preconditioned per `cfg.cg.precond` and
@@ -272,8 +417,22 @@ impl MvmGp {
         seed: u64,
         pre: Option<&dyn Preconditioner>,
     ) -> Result<f64> {
-        let op = self.build_operator(h, seed)?;
         let n = self.ys.len() as f64;
+        if let Some((op, sys)) = self.grid_solver(h)? {
+            // Grid space: the y-solve runs on the m×m normal equations
+            // (per-iteration cost independent of n); SLQ stays in data
+            // space over the shared-Arc covariance view.
+            let x0 = self.warm_seed_for(SeedSpace::Grid, sys.grid_dim());
+            let sol = grid_cg_solve(&sys, &self.ys, x0.as_deref(), self.cfg.cg);
+            let fit: f64 = self.ys.iter().zip(&sol.alpha).map(|(y, a)| y * a).sum();
+            let mut rng = Rng::new(seed ^ LOGDET_STREAM);
+            let logdet = slq_logdet(&op, self.cfg.slq, &mut rng);
+            return Ok(
+                -0.5 * fit - 0.5 * logdet - 0.5 * n * (2.0 * std::f64::consts::PI).ln()
+            );
+        }
+        crate::coordinator::metrics::global().incr("solver.space.data", 1);
+        let op = self.build_operator(h, seed)?;
         let built;
         let pre: &dyn Preconditioner = match pre {
             Some(p) => p,
@@ -282,7 +441,7 @@ impl MvmGp {
                 built.as_ref()
             }
         };
-        let x0 = self.warm_seed();
+        let x0 = self.warm_seed_for(SeedSpace::Data, self.ys.len());
         let sol = cg_solve_with(&op, &self.ys, pre, x0.as_deref(), self.cfg.cg);
         let fit: f64 = self.ys.iter().zip(&sol.x).map(|(y, a)| y * a).sum();
         let mut rng = Rng::new(seed ^ LOGDET_STREAM);
@@ -303,39 +462,62 @@ impl MvmGp {
     /// y-column converges in a handful of iterations).
     pub fn mll_grad(&self, h: &GpHypers, seed: u64) -> Result<(f64, Vec<f64>)> {
         let n = self.ys.len();
-        let op = self.build_operator(h, seed)?;
         // Hutchinson probes from the fixed stream (same draws as the
         // historical one-solve-per-probe loop, for seed compatibility).
         let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
         let num_tr_probes = self.cfg.slq.num_probes.clamp(2, 6);
         let probes: Vec<Vec<f64>> =
             (0..num_tr_probes).map(|_| rng.rademacher_vec(n)).collect();
-        let mut rhs = Matrix::zeros(n, 1 + num_tr_probes);
-        rhs.set_col(0, &self.ys);
-        for (j, z) in probes.iter().enumerate() {
-            rhs.set_col(1 + j, z);
-        }
-        let pre = self.preconditioner(&op, h);
-        // Seed only the y-column; the probe columns are fresh draws every
-        // step and start cold (a zero column seeds r₀ = b bitwise).
-        let x0 = self.warm_seed().map(|w| {
-            let mut x0 = Matrix::zeros(n, 1 + num_tr_probes);
-            x0.set_col(0, &w);
-            x0
-        });
-        let sol = block_cg_solve_with(&op, &rhs, pre.as_ref(), x0.as_ref(), self.cfg.cg);
-        let alpha = sol.x.col(0);
-        if self.cfg.warm_start {
-            *self.warm.lock().unwrap() = Some(alpha.clone());
-        }
+
+        // Solve K̂⁻¹[y | z₁ … z_p] in whichever space is configured.
+        // `pre_for_fd` carries the data-space preconditioner to the CRN
+        // finite-difference evaluations below; grid solves are
+        // unpreconditioned by design, so it stays `None` there.
+        let (alpha, probe_sols, pre_for_fd): (
+            Vec<f64>,
+            Vec<Vec<f64>>,
+            Option<Box<dyn Preconditioner>>,
+        ) = if let Some((_op, sys)) = self.grid_solver(h)? {
+            let x0 = self.warm_seed_for(SeedSpace::Grid, sys.grid_dim());
+            let sol = grid_cg_solve(&sys, &self.ys, x0.as_deref(), self.cfg.cg);
+            self.store_warm(SeedSpace::Grid, sol.v.clone());
+            // Probe columns are fresh Rademacher draws every step — no
+            // warm seed exists for them, so they solve cold one by one.
+            let probe_sols = probes
+                .iter()
+                .map(|z| grid_cg_solve(&sys, z, None, self.cfg.cg).alpha)
+                .collect();
+            (sol.alpha, probe_sols, None)
+        } else {
+            crate::coordinator::metrics::global().incr("solver.space.data", 1);
+            let op = self.build_operator(h, seed)?;
+            let mut rhs = Matrix::zeros(n, 1 + num_tr_probes);
+            rhs.set_col(0, &self.ys);
+            for (j, z) in probes.iter().enumerate() {
+                rhs.set_col(1 + j, z);
+            }
+            let pre = self.preconditioner(&op, h);
+            // Seed only the y-column; the probe columns are fresh draws
+            // every step and start cold (a zero column seeds r₀ = b).
+            let x0 = self.warm_seed_for(SeedSpace::Data, n).map(|w| {
+                let mut x0 = Matrix::zeros(n, 1 + num_tr_probes);
+                x0.set_col(0, &w);
+                x0
+            });
+            let sol =
+                block_cg_solve_with(&op, &rhs, pre.as_ref(), x0.as_ref(), self.cfg.cg);
+            let alpha = sol.x.col(0);
+            self.store_warm(SeedSpace::Data, alpha.clone());
+            let probe_sols = (0..num_tr_probes).map(|j| sol.x.col(1 + j)).collect();
+            (alpha, probe_sols, Some(pre))
+        };
         let ya: f64 = self.ys.iter().zip(&alpha).map(|(y, a)| y * a).sum();
         let aa: f64 = alpha.iter().map(|a| a * a).sum();
 
-        // tr(K̂⁻¹) via Hutchinson from the probe columns of the block.
+        // tr(K̂⁻¹) via Hutchinson from the probe solves.
         let mut tr_kinv = 0.0;
-        for (j, z) in probes.iter().enumerate() {
-            let s = sol.x.col(1 + j);
-            tr_kinv += z.iter().zip(&s).map(|(a, b)| a * b).sum::<f64>();
+        for (z, s) in probes.iter().zip(&probe_sols) {
+            tr_kinv += z.iter().zip(s).map(|(a, b)| a * b).sum::<f64>();
         }
         tr_kinv /= num_tr_probes as f64;
 
@@ -352,8 +534,8 @@ impl MvmGp {
         hp.log_ell += fd_h;
         let mut hm = *h;
         hm.log_ell -= fd_h;
-        let lp = self.mll_impl(&hp, seed, Some(pre.as_ref()))?;
-        let lm = self.mll_impl(&hm, seed, Some(pre.as_ref()))?;
+        let lp = self.mll_impl(&hp, seed, pre_for_fd.as_deref())?;
+        let lm = self.mll_impl(&hm, seed, pre_for_fd.as_deref())?;
         let g_ell = (lp - lm) / (2.0 * fd_h);
 
         // MLL at θ (reuse fit term; logdet from the CRN midpoint average —
@@ -396,26 +578,51 @@ impl MvmGp {
     /// accuracy (see the config docs: the solve amplifies operator error,
     /// so prediction uses a higher-rank operator than training).
     pub fn refresh(&mut self) -> Result<()> {
+        let cg = CgConfig { max_iters: self.cfg.cg.max_iters.max(200), ..self.cfg.cg };
+        if let Some((op, sys)) = self.grid_solver(&self.hypers)? {
+            // Grid space: α is recovered from the grid solve; the
+            // data-space covariance view (shared Arcs, so float-identical
+            // to the grid system's kernel arithmetic) is still cached for
+            // `predict_var`'s block solves and its preconditioner.
+            let x0 = if self.cfg.warm_start {
+                self.warm_seed_for(SeedSpace::Grid, sys.grid_dim())
+                    .or_else(|| self.alpha.as_ref().map(|a| sys.seed_from_alpha(a)))
+            } else {
+                None
+            };
+            let sol = grid_cg_solve(&sys, &self.ys, x0.as_deref(), cg);
+            self.store_warm(SeedSpace::Grid, sol.v.clone());
+            self.alpha = Some(sol.alpha);
+            self.alpha_from_grid = true;
+            self.cache = self.build_stencil_cache();
+            let pre = self.preconditioner(&op, &self.hypers);
+            self.refresh_op = Some(op);
+            self.refresh_pre = Some(pre);
+            self.refresh_hypers = Some(self.hypers);
+            return Ok(());
+        }
+        crate::coordinator::metrics::global().incr("solver.space.data", 1);
         let op = self.build_operator_with_rank(
             &self.hypers,
             self.cfg.seed,
             self.refresh_grade_rank(),
         )?;
-        let cg = CgConfig { max_iters: self.cfg.cg.max_iters.max(200), ..self.cfg.cg };
         let pre = self.preconditioner(&op, &self.hypers);
         // Seed with the best solution on hand: the previous refresh's α,
         // else the last training step's (the refresh-grade operator is a
         // higher-rank build of the same K̂, so either is a near-solution).
+        // α is a valid data-space seed whichever space produced it.
         let x0 = if self.cfg.warm_start {
-            self.alpha.clone().or_else(|| self.warm_seed())
+            self.alpha
+                .clone()
+                .or_else(|| self.warm_seed_for(SeedSpace::Data, self.ys.len()))
         } else {
             None
         };
         let sol = cg_solve_with(&op, &self.ys, pre.as_ref(), x0.as_deref(), cg);
-        if self.cfg.warm_start {
-            *self.warm.lock().unwrap() = Some(sol.x.clone());
-        }
+        self.store_warm(SeedSpace::Data, sol.x.clone());
         self.alpha = Some(sol.x);
+        self.alpha_from_grid = false;
         self.cache = self.build_stencil_cache();
         self.refresh_op = Some(op);
         self.refresh_pre = Some(pre);
@@ -451,6 +658,14 @@ impl MvmGp {
     /// layer when freezing the model into a snapshot.
     pub fn alpha(&self) -> Option<&[f64]> {
         self.alpha.as_deref()
+    }
+
+    /// Whether the cached α came out of a grid-space solve (back-projected
+    /// `(y − Wq)/σ_n²`) rather than data-space CG. Pure provenance — the
+    /// two αs agree to solver tolerance — recorded in snapshots so a
+    /// serving fleet can audit which engine produced each artifact.
+    pub fn alpha_solved_in_grid_space(&self) -> bool {
+        self.alpha_from_grid
     }
 
     /// The fitted axes of this model's inducing grid, when the spec is a
@@ -899,5 +1114,118 @@ mod tests {
         let a = gp.mll(&h, 99).unwrap();
         let b = gp.mll(&h, 99).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn grid_and_data_space_refresh_agree() {
+        // The tentpole invariant at unit-test scale (the cross-size sweep
+        // lives in tests/gridspace_props.rs): both solve spaces target the
+        // same certificate ‖K̂α − y‖ ≤ tol·‖y‖, so the recovered α and the
+        // predictions must agree to solver tolerance.
+        let (xs, ys, xt, _) = toy(200, 2, 20);
+        let h = GpHypers::new(0.6, 1.0, 0.1);
+        let mut cfg = MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: GridSpec::uniform(32),
+            solve_space: SolveSpace::Data,
+            warm_start: false,
+            ..Default::default()
+        };
+        cfg.cg.tol = 1e-7;
+        cfg.cg.max_iters = 600;
+        let mut data = MvmGp::new(xs.clone(), ys.clone(), h, cfg.clone());
+        cfg.solve_space = SolveSpace::Grid;
+        let mut grid = MvmGp::new(xs, ys, h, cfg);
+        data.refresh().unwrap();
+        grid.refresh().unwrap();
+        let da = data.alpha().unwrap();
+        let ga = grid.alpha().unwrap();
+        let am = mae(ga, da);
+        assert!(am < 1e-4, "α disagreement between spaces: {am}");
+        let pm = mae(&grid.predict_mean(&xt), &data.predict_mean(&xt));
+        assert!(pm < 1e-4, "prediction disagreement between spaces: {pm}");
+    }
+
+    #[test]
+    fn solve_space_flip_drops_stale_seed() {
+        // A grid-space iterate (length M = 1024 here) is meaningless to
+        // the data-space solver (length n = 200) and vice versa. Flipping
+        // `solve_space` mid-training must silently cold-start, not panic
+        // or feed the stale seed across spaces.
+        let (xs, ys, _, _) = toy(200, 2, 21);
+        let h = GpHypers::new(0.6, 1.0, 0.1);
+        let cfg = MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: GridSpec::uniform(32),
+            solve_space: SolveSpace::Grid,
+            ..Default::default()
+        };
+        let mut gp = MvmGp::new(xs, ys, h, cfg);
+        // Writes a Grid-tagged warm seed.
+        let (mll_g, grad_g) = gp.mll_grad(&h, 7).unwrap();
+        gp.cfg.solve_space = SolveSpace::Data;
+        let (mll_d, grad_d) = gp.mll_grad(&h, 7).unwrap();
+        assert!(mll_g.is_finite() && mll_d.is_finite());
+        assert!(grad_g.iter().chain(&grad_d).all(|g| g.is_finite()));
+        // Same certificate in both spaces: the per-point MLL estimates
+        // agree up to solver + probe noise.
+        assert!(
+            (mll_g - mll_d).abs() / 200.0 < 0.05,
+            "grid-space mll {mll_g} vs data-space {mll_d}"
+        );
+        // Flip back: the Data-tagged seed is dropped just the same, and a
+        // full grid-space refresh comes out finite.
+        gp.cfg.solve_space = SolveSpace::Grid;
+        gp.refresh().unwrap();
+        assert!(gp.alpha().unwrap().iter().all(|a| a.is_finite()));
+    }
+
+    #[test]
+    fn grid_space_requires_kiss_variant() {
+        let (xs, ys, _, _) = toy(80, 2, 22);
+        let cfg = MvmGpConfig {
+            grid: GridSpec::uniform(32),
+            solve_space: SolveSpace::Grid,
+            ..Default::default()
+        };
+        let mut gp = MvmGp::new(xs, ys, GpHypers::default_init(), cfg);
+        match gp.refresh() {
+            Err(Error::Config(msg)) => {
+                assert!(msg.contains("kiss"), "unexpected message: {msg}")
+            }
+            other => {
+                panic!("SKIP + solve_space=grid must be a config error, got {other:?}")
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_grid_rejects_over_budget_band_and_auto_falls_back() {
+        // 13⁴ = 28 561 grid cells pass the dense-Kronecker cap, but the
+        // WᵀW band (m·7⁴ ≈ 6.9e7 entries) just exceeds its ~0.5 GB
+        // budget: explicit grid space is a typed refusal, while Auto
+        // quietly solves the same model in data space.
+        let (xs, ys, _, _) = toy(60, 4, 23);
+        let cfg = MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: GridSpec::uniform(13),
+            solve_space: SolveSpace::Grid,
+            rank: 10,
+            refresh_rank: 20,
+            ..Default::default()
+        };
+        let h = GpHypers::init_for_dim(4);
+        let mut gp = MvmGp::new(xs.clone(), ys.clone(), h, cfg.clone());
+        match gp.refresh() {
+            Err(Error::Grid(msg)) => {
+                assert!(msg.contains("budget"), "unexpected message: {msg}")
+            }
+            other => panic!("over-budget band must be a grid error, got {other:?}"),
+        }
+        let mut cfg = cfg;
+        cfg.solve_space = SolveSpace::Auto;
+        let mut gp = MvmGp::new(xs, ys, h, cfg);
+        gp.refresh().unwrap();
+        assert!(gp.alpha().unwrap().iter().all(|a| a.is_finite()));
     }
 }

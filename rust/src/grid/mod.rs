@@ -282,6 +282,34 @@ pub fn build_grid(xs: &Matrix, spec: &GridSpec) -> Result<Box<dyn InducingGrid>>
     }
 }
 
+/// The term decomposition behind [`grid_ski_operator`]: one
+/// `(coefficient, KroneckerSkiOp)` per grid term, in term order. Exposed
+/// separately so callers that need the *same* concrete operators in two
+/// compositions — the KISS model's data-space covariance view and its
+/// grid-space normal-equations system (`crate::solvers::gridspace`) —
+/// can `Arc`-share them instead of building the stencils twice.
+pub fn grid_ski_parts(
+    xs: &Matrix,
+    kern: &ProductKernel,
+    grid: &dyn InducingGrid,
+) -> Vec<(f64, KroneckerSkiOp)> {
+    let terms = grid.terms();
+    assert!(!terms.is_empty(), "inducing grid has no terms");
+    if terms.len() == 1 {
+        // Single term: build directly (no parallel dispatch), preserving
+        // the historical dense-grid construction path bit-for-bit.
+        return vec![(
+            terms[0].coeff,
+            KroneckerSkiOp::with_grids(xs, kern, terms[0].axes.clone()),
+        )];
+    }
+    // Term construction is embarrassingly parallel (each decodes its own
+    // stencils over the data once).
+    par_map(terms, 4, |t| {
+        (t.coeff, KroneckerSkiOp::with_grids(xs, kern, t.axes.clone()))
+    })
+}
+
 /// SKI approximation of `kern` on the data `xs` over `grid`:
 /// `K ≈ Σ_t c_t · W_t (⊗_k K_t,k) W_tᵀ`, one [`KroneckerSkiOp`] per term.
 /// A single-term grid returns the operator directly (bit-identical to the
@@ -293,17 +321,12 @@ pub fn grid_ski_operator(
     kern: &ProductKernel,
     grid: &dyn InducingGrid,
 ) -> Box<dyn LinearOp> {
-    let terms = grid.terms();
-    assert!(!terms.is_empty(), "inducing grid has no terms");
-    if terms.len() == 1 && terms[0].coeff == 1.0 {
-        return Box::new(KroneckerSkiOp::with_grids(xs, kern, terms[0].axes.clone()));
+    let parts = grid_ski_parts(xs, kern, grid);
+    if parts.len() == 1 && parts[0].0 == 1.0 {
+        let (_, op) = parts.into_iter().next().expect("one part");
+        return Box::new(op);
     }
-    // Term construction is embarrassingly parallel (each decodes its own
-    // stencils over the data once).
-    let ops = par_map(terms, 4, |t| {
-        (t.coeff, KroneckerSkiOp::with_grids(xs, kern, t.axes.clone()))
-    });
-    let terms: Vec<Box<dyn LinearOp>> = ops
+    let terms: Vec<Box<dyn LinearOp>> = parts
         .into_iter()
         .map(|(coeff, op)| {
             Box::new(AffineOp { inner: Box::new(op), scale: coeff, shift: 0.0 })

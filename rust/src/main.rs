@@ -19,7 +19,7 @@
 
 use skip_gp::coordinator::{print_summary, Scheduler};
 use skip_gp::data::{dataset_by_name, generate, DATASETS};
-use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant};
+use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant, SolveSpace};
 use skip_gp::grid::GridSpec;
 use skip_gp::harness::{fig2, fig3, fig4, mtgp_speed, table1, table2};
 use skip_gp::runtime::PjrtBackend;
@@ -107,6 +107,21 @@ fn parse_grid_spec(s: &str) -> Result<GridSpec> {
     Ok(GridSpec::uniform(m))
 }
 
+/// Parse a `--space` value into a [`SolveSpace`]: `auto` (default)
+/// solves in grid space when the operator admits it, `data` forces the
+/// n-space CG path, `grid` forces grid-space normal equations (errors if
+/// the model cannot provide them).
+fn parse_solve_space(opts: &Opts) -> Result<SolveSpace> {
+    match opts.get_str("space").as_deref() {
+        None | Some("auto") => Ok(SolveSpace::Auto),
+        Some("data") => Ok(SolveSpace::Data),
+        Some("grid") => Ok(SolveSpace::Grid),
+        Some(v) => Err(Error::Config(format!(
+            "bad value for --space: '{v}' (auto|data|grid)"
+        ))),
+    }
+}
+
 fn usage() -> ! {
     eprintln!(
         "skip-gp — Product Kernel Interpolation for Scalable Gaussian Processes
@@ -117,15 +132,16 @@ USAGE:
                 [--dataset NAME] [--trials N] [--n N] [--full]
   skip-gp train  [--dataset NAME] [--scale F] [--steps N] [--rank R]
                  [--grid M|M1xM2x…|sparse:L] [--variant skip|kiss]
-                 [--precond rank:K|jacobi|none] [--pjrt]
+                 [--precond rank:K|jacobi|none] [--space auto|data|grid] [--pjrt]
   skip-gp snapshot [--dataset NAME] [--scale F] [--steps N] [--rank R]
                    [--grid M|M1xM2x…|sparse:L] [--variant skip|kiss] [--out F]
                    [--serve-grid M|M1xM2x…|sparse:L]
-                   [--precond rank:K|jacobi|none]
+                   [--precond rank:K|jacobi|none] [--space auto|data|grid]
                    [--var exact|lanczos|none] [--var-rank R]
   skip-gp serve  --snapshot F [--bind ADDR] [--max-batch N] [--max-wait-ms F]
   skip-gp serve  --live [--dataset NAME] [--scale F] [--steps N]
                  [--grid M|M1xM2x…] [--precond rank:K|jacobi|none]
+                 [--space auto|data|grid]
                  [--var exact|lanczos|none] [--var-rank R]
                  [--refresh-every N] [--var-drift N] [--error-z F]
                  [--log-capacity N] [--snapshot-out F] [--replay F]
@@ -236,7 +252,9 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         grid.describe(),
         precond.describe()
     );
-    let mut cfg = MvmGpConfig { variant, grid, rank, ..Default::default() };
+    let solve_space = parse_solve_space(&opts)?;
+    let mut cfg =
+        MvmGpConfig { variant, grid, rank, solve_space, ..Default::default() };
     cfg.cg.precond = precond;
     let mut gp = MvmGp::new(
         data.xtrain.clone(),
@@ -305,7 +323,9 @@ fn cmd_snapshot(rest: &[String]) -> Result<()> {
         grid.describe(),
         precond.describe()
     );
-    let mut cfg = MvmGpConfig { variant, grid, rank, ..Default::default() };
+    let solve_space = parse_solve_space(&opts)?;
+    let mut cfg =
+        MvmGpConfig { variant, grid, rank, solve_space, ..Default::default() };
     cfg.cg.precond = precond;
     let mut gp = MvmGp::new(
         data.xtrain.clone(),
@@ -380,9 +400,11 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             Some(v) => return Err(Error::Config(format!("unknown variance mode '{v}'"))),
         };
         let data = generate(spec, scale);
+        let solve_space = parse_solve_space(&opts)?;
         let mut cfg = MvmGpConfig {
             variant: MvmVariant::Kiss,
             grid,
+            solve_space,
             ..Default::default()
         };
         cfg.cg.precond = precond;
@@ -402,6 +424,7 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             error_z: opts.get("error-z", 8.0)?,
             log_capacity: opts.get("log-capacity", 1024)?,
             variance,
+            space: solve_space,
             ..Default::default()
         };
         let mut live = IncrementalState::from_mvm(&gp, scfg)?;

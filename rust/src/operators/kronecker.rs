@@ -16,7 +16,167 @@ use crate::grid::{
 use crate::kernels::ProductKernel;
 use crate::linalg::{Matrix, SymToeplitz};
 use crate::util::parallel::par_map_range;
-use crate::Result;
+use crate::{Error, Result};
+use std::sync::OnceLock;
+
+/// Precomputed stencil-overlap structure `G = WᵀW` (m × m, sparse) for one
+/// SKI interpolation matrix — the matrix the grid-space normal equations
+/// (`solvers::gridspace`) apply once or twice per iteration.
+///
+/// Every per-axis stencil emits **consecutive** grid indices (cubic: 4,
+/// base-clamped to `[0, m−4]`; linear: 2; constant: 1 — see
+/// `grid::axis`), so two stencil entries of the same data row differ by at
+/// most `w_k − 1 ≤ 3` along axis k. `G[a, b]` is therefore nonzero only
+/// when `b − a` decomposes into per-axis deltas within `±(w_k − 1)`: a
+/// *banded* structure with `Π_k (2w_k − 1)` (≤ 7ᵈ) offsets per grid
+/// point, stored dense per offset. Build cost is O(n·s²) arithmetic
+/// (s = stencil entries per row); apply cost is O(m·7ᵈ) — independent
+/// of n, which is the whole point.
+#[derive(Clone, Debug)]
+pub struct StencilGram {
+    /// Per-dimension grid sizes (dim 0 slowest, row-major flat indices).
+    dims: Vec<usize>,
+    strides: Vec<usize>,
+    /// Per-axis offset counts `2w_k − 1` and their mixed-radix strides.
+    ocounts: Vec<usize>,
+    ostrides: Vec<usize>,
+    /// Per-offset per-axis deltas (o × d, values in `−3..=3`) and the
+    /// corresponding flat-index shifts.
+    odeltas: Vec<i32>,
+    oshifts: Vec<isize>,
+    /// Band values, m × o row-major: `band[g·o + t] = G[g, g + shift_t]`.
+    band: Vec<f64>,
+    m: usize,
+    o: usize,
+}
+
+impl StencilGram {
+    /// Build from the stencil rows of `idx`/`w` (n rows × s entries).
+    fn build(grids: &[Grid1d], idx: &[u32], w: &[f64], s: usize) -> Self {
+        let dims: Vec<usize> = grids.iter().map(|g| g.m).collect();
+        let strides = crate::grid::tensor_strides(&dims);
+        let widths: Vec<usize> = grids.iter().map(|g| g.stencil_width()).collect();
+        let ocounts: Vec<usize> = widths.iter().map(|&w| 2 * w - 1).collect();
+        let ostrides = crate::grid::tensor_strides(&ocounts);
+        let o: usize = ocounts.iter().product();
+        let d = dims.len();
+        let m: usize = dims.iter().product();
+        // Per-offset delta vectors and flat shifts, decoded once.
+        let mut odeltas = Vec::with_capacity(o * d);
+        let mut oshifts = Vec::with_capacity(o);
+        for t in 0..o {
+            let mut shift = 0isize;
+            for k in 0..d {
+                let delta = ((t / ostrides[k]) % ocounts[k]) as i32 - (widths[k] as i32 - 1);
+                odeltas.push(delta);
+                shift += delta as isize * strides[k] as isize;
+            }
+            oshifts.push(shift);
+        }
+        let mut gram = StencilGram {
+            dims,
+            strides,
+            ocounts,
+            ostrides,
+            odeltas,
+            oshifts,
+            band: vec![0.0; m * o],
+            m,
+            o,
+        };
+        debug_assert_eq!(idx.len(), w.len());
+        let n = idx.len() / s;
+        let mut scratch = vec![0usize; s * gram.dims.len()];
+        for i in 0..n {
+            gram.accumulate_row(&idx[i * s..(i + 1) * s], &w[i * s..(i + 1) * s], &mut scratch);
+        }
+        gram
+    }
+
+    /// Fold one more stencil row into the band — the streaming path's
+    /// incremental `WᵀW` update (`G += wᵀw` for the new row's sparse
+    /// stencil vector `w`), O(s²·d) independent of both n and m.
+    pub fn append_row(&mut self, idx: &[u32], w: &[f64]) {
+        let mut scratch = vec![0usize; idx.len() * self.dims.len()];
+        self.accumulate_row(idx, w, &mut scratch);
+    }
+
+    /// Fold one stencil row's `s × s` overlap products into the band.
+    /// `coords` is caller-provided scratch of length ≥ s·d.
+    fn accumulate_row(&mut self, idx: &[u32], w: &[f64], coords: &mut [usize]) {
+        let d = self.dims.len();
+        let s = idx.len();
+        // Decode this row's stencil coordinates once.
+        debug_assert!(s * d <= coords.len(), "stencil × dim exceeds decode buffer");
+        for a in 0..s {
+            let flat = idx[a] as usize;
+            for k in 0..d {
+                coords[a * d + k] = (flat / self.strides[k]) % self.dims[k];
+            }
+        }
+        for a in 0..s {
+            let wa = w[a];
+            let ga = idx[a] as usize;
+            let base = ga * self.o;
+            for b in 0..s {
+                let mut t = 0usize;
+                for k in 0..d {
+                    let delta = coords[b * d + k] as i32 - coords[a * d + k] as i32
+                        + (self.ocounts[k] as i32 - 1) / 2;
+                    t += delta as usize * self.ostrides[k];
+                }
+                self.band[base + t] += wa * w[b];
+            }
+        }
+    }
+
+    /// `G u` — O(m·o), independent of the number of data rows folded in.
+    pub fn apply(&self, u: &[f64]) -> Vec<f64> {
+        assert_eq!(u.len(), self.m);
+        let d = self.dims.len();
+        let mut out = vec![0.0; self.m];
+        let mut coords = vec![0usize; d];
+        for g in 0..self.m {
+            let row = &self.band[g * self.o..(g + 1) * self.o];
+            for k in 0..d {
+                coords[k] = (g / self.strides[k]) % self.dims[k];
+            }
+            let mut acc = 0.0;
+            for (t, &val) in row.iter().enumerate() {
+                if val == 0.0 {
+                    continue;
+                }
+                // Per-axis bound check: the flat shift alone can wrap into
+                // a neighboring fiber.
+                let deltas = &self.odeltas[t * d..(t + 1) * d];
+                let mut ok = true;
+                for k in 0..d {
+                    let c = coords[k] as i32 + deltas[k];
+                    if c < 0 || c >= self.dims[k] as i32 {
+                        ok = false;
+                        break;
+                    }
+                }
+                if ok {
+                    let nb = (g as isize + self.oshifts[t]) as usize;
+                    acc += val * u[nb];
+                }
+            }
+            out[g] = acc;
+        }
+        out
+    }
+
+    /// Grid size m (the operator is m × m).
+    pub fn dim(&self) -> usize {
+        self.m
+    }
+
+    /// Stored band entries per grid point (`Π_k (2w_k − 1)` ≤ 7ᵈ).
+    pub fn band_width(&self) -> usize {
+        self.o
+    }
+}
 
 /// `(T₁ ⊗ ⋯ ⊗ T_d) u` via mode-wise Toeplitz application, for a
 /// row-major tensor grid with per-dimension sizes `dims` (dimension 0
@@ -82,7 +242,16 @@ pub struct KroneckerSkiOp {
     stencil: usize,
     /// Output scale σ² of the product kernel.
     outputscale: f64,
+    /// Lazily-built `WᵀW` stencil Gram (see [`StencilGram`]); built on
+    /// first [`Self::grid_space_op`] call, then updated incrementally by
+    /// [`Self::append_rows`].
+    gram: OnceLock<StencilGram>,
 }
+
+/// Band entries `m × Π(2w_k − 1)` above which [`KroneckerSkiOp::grid_space_op`]
+/// refuses to materialize `WᵀW` (≈ 0.5 GB of f64 band storage) — dense
+/// d ≥ 4 grids, where the data-space path is the right tool anyway.
+const MAX_GRAM_ENTRIES: usize = 1 << 26;
 
 impl KroneckerSkiOp {
     /// Build for data `xs` (n × d) under a product kernel with `m` grid
@@ -133,11 +302,65 @@ impl KroneckerSkiOp {
             total_grid,
             stencil,
             outputscale: kernel.outputscale,
+            gram: OnceLock::new(),
         }
     }
 
     fn stencil_size(&self) -> usize {
         self.stencil
+    }
+
+    /// Stencil layout: `(s, idx, w)` — each data row i owns the s
+    /// `(flat grid index, weight)` pairs at `idx[i·s..(i+1)·s]` /
+    /// `w[i·s..(i+1)·s]`. The raw `W` matrix, for callers that project
+    /// data through it themselves (`solvers::gridspace`).
+    pub fn stencil_entries(&self) -> (usize, &[u32], &[f64]) {
+        (self.stencil, &self.idx, &self.w)
+    }
+
+    /// Per-dimension grid sizes (dim 0 slowest, row-major flat indices).
+    pub fn grid_dims(&self) -> Vec<usize> {
+        self.grids.iter().map(|g| g.m).collect()
+    }
+
+    /// Output scale σ_f² baked into [`LinearOp::matvec`].
+    pub fn outputscale(&self) -> f64 {
+        self.outputscale
+    }
+
+    /// The m × m grid-space building blocks for normal-equations solves:
+    /// validates the grid axes, then returns the (lazily built, cached)
+    /// `WᵀW` stencil Gram. Combined with [`Self::kron_matvec`] this gives
+    /// the grid-space operator `B = σ_f²·(WᵀW)·(⊗K) + σ_n²·I` whose
+    /// per-iteration cost is independent of n — see `solvers::gridspace`.
+    ///
+    /// Returns [`Error::Grid`] for degenerate axes (non-positive or
+    /// non-finite spacing — a hand-built constant-feature grid) and for
+    /// dense high-d grids whose band storage would exceed
+    /// ~0.5 GB (`m · Π(2w_k − 1)` entries), where data-space CG is the
+    /// right tool anyway.
+    pub fn grid_space_op(&self) -> Result<&StencilGram> {
+        for (k, g) in self.grids.iter().enumerate() {
+            if g.m == 0 || !g.h.is_finite() || g.h <= 0.0 {
+                return Err(Error::Grid(format!(
+                    "degenerate axis {k} (m={}, h={}): grid-space solves \
+                     need positive, finite grid spacings",
+                    g.m, g.h
+                )));
+            }
+        }
+        let o: usize = self.grids.iter().map(|g| 2 * g.stencil_width() - 1).product();
+        let entries = self.total_grid.checked_mul(o);
+        if !matches!(entries, Some(e) if e <= MAX_GRAM_ENTRIES) {
+            return Err(Error::Grid(format!(
+                "WᵀW band for m={} with {o} offsets per point exceeds the \
+                 {MAX_GRAM_ENTRIES}-entry budget; solve in data space instead",
+                self.total_grid
+            )));
+        }
+        Ok(self
+            .gram
+            .get_or_init(|| StencilGram::build(&self.grids, &self.idx, &self.w, self.stencil)))
     }
 
     /// Extend `W` in place with the stencil rows of `xs_new` (k × d new
@@ -156,6 +379,7 @@ impl KroneckerSkiOp {
         let dims: Vec<usize> = self.grids.iter().map(|g| g.m).collect();
         let strides = crate::grid::tensor_strides(&dims);
         let s = self.stencil;
+        let old_n = self.n;
         self.idx.reserve(xs_new.rows * s);
         self.w.reserve(xs_new.rows * s);
         for i in 0..xs_new.rows {
@@ -166,10 +390,23 @@ impl KroneckerSkiOp {
         }
         self.n += xs_new.rows;
         debug_assert_eq!(self.idx.len(), self.n * s);
+        // Keep an already-built WᵀW current: fold in just the new rows —
+        // the Gram is a sum of per-row outer products, so this is exactly
+        // the from-scratch build over the concatenated data.
+        if let Some(gram) = self.gram.get_mut() {
+            let mut scratch = vec![0usize; s * dims.len()];
+            for i in old_n..self.n {
+                gram.accumulate_row(
+                    &self.idx[i * s..(i + 1) * s],
+                    &self.w[i * s..(i + 1) * s],
+                    &mut scratch,
+                );
+            }
+        }
     }
 
     /// `Wᵀ v` (grid-sized output).
-    fn wt_matvec(&self, v: &[f64]) -> Vec<f64> {
+    pub fn wt_matvec(&self, v: &[f64]) -> Vec<f64> {
         let s = self.stencil_size();
         let mut out = vec![0.0; self.total_grid];
         for i in 0..self.n {
@@ -183,7 +420,7 @@ impl KroneckerSkiOp {
     }
 
     /// `W u` (data-sized output).
-    fn w_matvec(&self, u: &[f64]) -> Vec<f64> {
+    pub fn w_matvec(&self, u: &[f64]) -> Vec<f64> {
         let s = self.stencil_size();
         let mut out = vec![0.0; self.n];
         for i in 0..self.n {
@@ -197,8 +434,9 @@ impl KroneckerSkiOp {
         out
     }
 
-    /// `(T₁ ⊗ ⋯ ⊗ T_d) u` via mode-wise Toeplitz application.
-    fn kron_matvec(&self, u: &[f64]) -> Vec<f64> {
+    /// `(T₁ ⊗ ⋯ ⊗ T_d) u` via mode-wise Toeplitz application
+    /// (grid-sized in and out, O(M log m)-shaped work).
+    pub fn kron_matvec(&self, u: &[f64]) -> Vec<f64> {
         let dims: Vec<usize> = self.grids.iter().map(|g| g.m).collect();
         kron_toeplitz_matvec(&self.factors, &dims, u)
     }
@@ -417,6 +655,109 @@ mod tests {
         // Same stencils in the same order ⇒ bitwise-identical MVMs.
         assert_eq!(grown.matvec(&v), scratch.matvec(&v));
         assert_eq!(grown.diag().unwrap(), scratch.diag().unwrap());
+    }
+
+    /// Dense `WᵀW` oracle from the operator's own stencil rows.
+    fn dense_gram(op: &KroneckerSkiOp, n: usize) -> Matrix {
+        let (s, idx, w) = op.stencil_entries();
+        let total = op.total_grid;
+        let mut wd = Matrix::zeros(n, total);
+        for i in 0..n {
+            for k in 0..s {
+                let g = idx[i * s + k] as usize;
+                wd.set(i, g, wd.get(i, g) + w[i * s + k]);
+            }
+        }
+        wd.transpose().matmul(&wd)
+    }
+
+    #[test]
+    fn stencil_gram_matches_dense_wtw() {
+        // Anisotropic axis sizes so a stride/axis mix-up cannot cancel.
+        let xs = random_points(40, 2, 41);
+        let kern = ProductKernel::ard(&[0.8, 0.5], 1.1);
+        let grids = vec![
+            Grid1d::fit(-1.0, 1.0, 9).unwrap(),
+            Grid1d::fit(-1.0, 1.0, 7).unwrap(),
+        ];
+        let op = KroneckerSkiOp::with_grids(&xs, &kern, grids);
+        let gram = op.grid_space_op().unwrap();
+        assert_eq!(gram.dim(), op.total_grid);
+        let dense = dense_gram(&op, 40);
+        // Elementwise via unit vectors: column g of G.
+        for g in 0..op.total_grid {
+            let mut e = vec![0.0; op.total_grid];
+            e[g] = 1.0;
+            let col = gram.apply(&e);
+            for r in 0..op.total_grid {
+                let want = dense.get(r, g);
+                assert!(
+                    (col[r] - want).abs() < 1e-12,
+                    "G[{r},{g}] = {} want {want}",
+                    col[r]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stencil_gram_incremental_append_matches_scratch() {
+        let xs_all = random_points(50, 2, 42);
+        let kern = ProductKernel::rbf(2, 0.7, 1.3);
+        let grids = vec![
+            Grid1d::fit(-1.0, 1.0, 10).unwrap(),
+            Grid1d::fit(-1.0, 1.0, 8).unwrap(),
+        ];
+        let head = Matrix::from_fn(35, 2, |i, j| xs_all.get(i, j));
+        let tail = Matrix::from_fn(15, 2, |i, j| xs_all.get(35 + i, j));
+        let mut grown = KroneckerSkiOp::with_grids(&head, &kern, grids.clone());
+        grown.grid_space_op().unwrap(); // force the build, then grow it
+        grown.append_rows(&tail);
+        let scratch = KroneckerSkiOp::with_grids(&xs_all, &kern, grids);
+        let ga = grown.grid_space_op().unwrap();
+        let gb = scratch.grid_space_op().unwrap();
+        let mut rng = Rng::new(43);
+        let v = rng.normal_vec(grown.total_grid);
+        let a = ga.apply(&v);
+        let b = gb.apply(&v);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn stencil_gram_tiny_axes_and_degenerate_guard() {
+        // Mixed cubic × constant × linear axes flow through the banded
+        // Gram too (sparse-grid term shape).
+        let xs = random_points(20, 3, 44);
+        let kern = ProductKernel::rbf(3, 0.8, 1.0);
+        let grids = vec![
+            Grid1d::fit(-1.0, 1.0, 12).unwrap(),
+            Grid1d::fit_any(-1.0, 1.0, 1).unwrap(),
+            Grid1d::fit_any(-1.0, 1.0, 3).unwrap(),
+        ];
+        let op = KroneckerSkiOp::with_grids(&xs, &kern, grids);
+        let gram = op.grid_space_op().unwrap();
+        let dense = dense_gram(&op, 20);
+        let mut rng = Rng::new(45);
+        let v = rng.normal_vec(op.total_grid);
+        let got = gram.apply(&v);
+        let want = dense.matvec(&v);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+        }
+
+        // A hand-built degenerate axis (h = 0) is a typed grid error.
+        let xs1 = random_points(10, 1, 46);
+        let k1 = ProductKernel::rbf(1, 0.8, 1.0);
+        let mut bad = KroneckerSkiOp::with_grids(
+            &xs1,
+            &k1,
+            vec![Grid1d::fit(-1.0, 1.0, 8).unwrap()],
+        );
+        bad.grids[0].h = 0.0;
+        let err = bad.grid_space_op().unwrap_err();
+        assert!(matches!(err, Error::Grid(_)), "{err}");
     }
 
     #[test]

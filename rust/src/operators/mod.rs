@@ -391,6 +391,41 @@ impl LinearOp for AffineRef<'_> {
     }
 }
 
+/// Shared-ownership view of a concrete operator: pure delegation through
+/// an `Arc`, so one operator can back several compositions at once — the
+/// KISS model hands the *same* `KroneckerSkiOp`s to both its data-space
+/// covariance view and the grid-space normal-equations system
+/// (`crate::solvers::gridspace`), guaranteeing the two solve spaces see
+/// float-identical kernel arithmetic. Every method delegates, so wrapping
+/// changes nothing numerically.
+pub struct ArcOp<T: LinearOp>(pub std::sync::Arc<T>);
+
+impl<T: LinearOp> LinearOp for ArcOp<T> {
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+
+    fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        self.0.matvec(v)
+    }
+
+    fn matmat(&self, m: &Matrix) -> Matrix {
+        self.0.matmat(m)
+    }
+
+    fn col_at(&self, j: usize) -> Vec<f64> {
+        self.0.col_at(j)
+    }
+
+    fn diag(&self) -> Option<Vec<f64>> {
+        self.0.diag()
+    }
+
+    fn to_dense(&self) -> Matrix {
+        self.0.to_dense()
+    }
+}
+
 /// `A + B` (owned boxed summands; used by the cluster-MTGP kernel).
 pub struct SumOp {
     pub terms: Vec<Box<dyn LinearOp>>,

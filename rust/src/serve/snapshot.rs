@@ -8,19 +8,22 @@
 //! inputs are **not** stored — reload and serve without touching training
 //! data.
 //!
-//! # Format (version 3)
+//! # Format (version 4)
 //!
 //! Little-endian throughout:
 //!
 //! ```text
 //! magic      8 bytes  "SKGPSNAP"
-//! version    u32      format version (this file documents versions 1–3)
+//! version    u32      format version (this file documents versions 1–4)
 //! d          u32      input dimensionality
 //! n          u32      training-set size (length of α)
 //! r          u32      variance-cache rank (0 ⇒ mean-only snapshot)
 //! variant    u32      provenance tag: 0 SKIP, 1 KISS, 2 exact
 //! train_rank u32      Lanczos rank used during training (provenance)
 //! refresh_rank u32    Lanczos rank of the final predictive solve
+//! alpha_space u32     provenance: which engine solved α — 0 data-space
+//!                     CG/PCG, 1 grid-space normal equations
+//!                     (`crate::solvers::gridspace`, α back-projected)
 //! hypers     3 × f64  log ℓ, log σ_f², log σ_n²
 //! spec_kind  u32      0 uniform, 1 rectilinear, 2 sparse
 //!   uniform:      u32 m
@@ -47,6 +50,14 @@
 //! pending section into it
 //! ([`crate::stream::IncrementalState::ingest_observations`]). Replaying
 //! it on top of the checkpoint itself would double-count.
+//!
+//! # Version 3 (read-only, migrated on load)
+//!
+//! Version 3 is version 4 without the `alpha_space` field:
+//! `refresh_rank` is followed directly by `hypers`. Loading a v3 file
+//! migrates it with `alpha_space = 0` (data-space), which is exactly
+//! right — grid-space solves did not exist when v3 files were written.
+//! Every other field decodes identically.
 //!
 //! # Version 2 (read-only, migrated on load)
 //!
@@ -98,7 +109,7 @@ use std::path::Path;
 /// File magic.
 pub const SNAPSHOT_MAGIC: &[u8; 8] = b"SKGPSNAP";
 /// Current (newest) format version; see the module docs for the rules.
-pub const SNAPSHOT_VERSION: u32 = 3;
+pub const SNAPSHOT_VERSION: u32 = 4;
 /// Oldest format version this build still reads (migrating on load).
 pub const SNAPSHOT_MIN_VERSION: u32 = 1;
 
@@ -244,6 +255,11 @@ pub struct ModelSnapshot {
     pub train_rank: u32,
     /// Lanczos rank of the final predictive solve (provenance only).
     pub refresh_rank: u32,
+    /// Which engine solved the stored α (provenance only, new in format
+    /// v4): 0 — data-space CG/PCG on the n × n system; 1 — grid-space
+    /// normal equations ([`crate::solvers::gridspace`]), α recovered by
+    /// back-projection. Files older than v4 migrate to 0.
+    pub alpha_space: u32,
     /// Cached solve `α = K̂⁻¹ y`.
     pub alpha: Vec<f64>,
     /// The grid-side predictive cache queries are answered from.
@@ -275,8 +291,10 @@ impl ModelSnapshot {
             }
             Ok(())
         };
-        let alpha = match gp.alpha() {
-            Some(a) => a.to_vec(),
+        let (alpha, alpha_space) = match gp.alpha() {
+            // A cached α carries its provenance; the recompute below is
+            // always a data-space CG solve.
+            Some(a) => (a.to_vec(), gp.alpha_solved_in_grid_space() as u32),
             None => {
                 build(&mut built)?;
                 let op = built.as_ref().expect("just built");
@@ -298,7 +316,7 @@ impl ModelSnapshot {
                         sol.rel_residual
                     )));
                 }
-                sol.x
+                (sol.x, 0)
             }
         };
         let d = gp.xs.cols;
@@ -337,6 +355,7 @@ impl ModelSnapshot {
             },
             train_rank: gp.cfg.rank as u32,
             refresh_rank: gp.cfg.refresh_rank as u32,
+            alpha_space,
             alpha,
             cache,
             pending: Vec::new(),
@@ -398,6 +417,7 @@ impl ModelSnapshot {
             variant: SnapshotVariant::Exact,
             train_rank: 0,
             refresh_rank: 0,
+            alpha_space: 0,
             alpha,
             cache,
             pending: Vec::new(),
@@ -435,7 +455,7 @@ impl ModelSnapshot {
         Self::from_bytes(&bytes)
     }
 
-    /// Encode to the version-3 byte layout (checksum included). Writers
+    /// Encode to the version-4 byte layout (checksum included). Writers
     /// always emit the newest version, whatever `self.version` was read
     /// from.
     pub fn to_bytes(&self) -> Vec<u8> {
@@ -458,6 +478,7 @@ impl ModelSnapshot {
         push_u32(&mut out, self.variant.to_u32());
         push_u32(&mut out, self.train_rank);
         push_u32(&mut out, self.refresh_rank);
+        push_u32(&mut out, self.alpha_space);
         push_f64(&mut out, self.hypers.log_ell);
         push_f64(&mut out, self.hypers.log_sf2);
         push_f64(&mut out, self.hypers.log_sn2);
@@ -514,9 +535,9 @@ impl ModelSnapshot {
         out
     }
 
-    /// Decode from bytes: version 3 natively, versions 1–2 with an
+    /// Decode from bytes: version 4 natively, versions 1–3 with an
     /// in-memory migration (v1: single term, coefficient 1, rectilinear
-    /// spec; v2: empty pending log).
+    /// spec; v2: empty pending log; v3: data-space α provenance).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         let mut c = Cursor { bytes, pos: 0 };
         let magic = c.take(8)?;
@@ -548,6 +569,14 @@ impl ModelSnapshot {
         let variant = SnapshotVariant::from_u32(c.u32()?)?;
         let train_rank = c.u32()?;
         let refresh_rank = c.u32()?;
+        // α solve-space provenance (v4+; older files predate grid-space
+        // solves, so data-space is the correct migration, not a guess).
+        let alpha_space = if version >= 4 { c.u32()? } else { 0 };
+        if alpha_space > 1 {
+            return Err(Error::Snapshot(format!(
+                "unknown alpha_space tag {alpha_space} (0 data, 1 grid)"
+            )));
+        }
         let hypers = GpHypers {
             log_ell: c.f64()?,
             log_sf2: c.f64()?,
@@ -667,6 +696,7 @@ impl ModelSnapshot {
             variant,
             train_rank,
             refresh_rank,
+            alpha_space,
             alpha,
             cache,
             pending,
@@ -792,6 +822,7 @@ mod tests {
         let bytes = snap.to_bytes();
         let back = ModelSnapshot::from_bytes(&bytes).unwrap();
         assert_eq!(back.version, SNAPSHOT_VERSION);
+        assert_eq!(back.alpha_space, snap.alpha_space);
         assert_eq!(back.variant, SnapshotVariant::Exact);
         assert_eq!(back.hypers, snap.hypers);
         assert_eq!(back.alpha, snap.alpha);
@@ -901,6 +932,41 @@ mod tests {
         bytes[8] = 99; // version field, little-endian low byte
         let err = ModelSnapshot::from_bytes(&bytes).unwrap_err();
         assert!(err.to_string().contains("version"), "{err}");
+    }
+
+    #[test]
+    fn alpha_space_roundtrips_and_v3_migrates_to_data() {
+        let mut snap = small_snapshot(8);
+        snap.alpha_space = 1;
+        let v4 = snap.to_bytes();
+        let back = ModelSnapshot::from_bytes(&v4).unwrap();
+        assert_eq!(back.alpha_space, 1, "v4 roundtrip keeps grid provenance");
+
+        // Splice the same payload down to version 3: drop the 4-byte
+        // alpha_space field at offset 36 (after magic 8 + 7 × u32), patch
+        // the version field to 3, and recompute the FNV-1a checksum.
+        let mut v3 = Vec::with_capacity(v4.len() - 4);
+        v3.extend_from_slice(&v4[..36]);
+        v3.extend_from_slice(&v4[40..v4.len() - 8]);
+        v3[8..12].copy_from_slice(&3u32.to_le_bytes());
+        let sum = fnv1a(&v3);
+        v3.extend_from_slice(&sum.to_le_bytes());
+
+        let migrated = ModelSnapshot::from_bytes(&v3).unwrap();
+        assert_eq!(migrated.version, 3);
+        assert_eq!(
+            migrated.alpha_space, 0,
+            "v3 files predate grid-space solves — must migrate to data"
+        );
+        assert_eq!(migrated.hypers, snap.hypers);
+        assert_eq!(migrated.alpha, snap.alpha);
+        assert_eq!(migrated.cache.spec, snap.cache.spec);
+
+        // An out-of-range tag is a corrupt file, not a silent default.
+        let mut bad = snap.clone();
+        bad.alpha_space = 7;
+        let err = ModelSnapshot::from_bytes(&bad.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("alpha_space"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,538 @@
+//! Grid-space normal-equations CG: covariance solves whose per-iteration
+//! cost is independent of n (Yadav, Sheldon & Musco 2021, §3).
+//!
+//! Every data-space CG iteration against the SKI covariance
+//! `K̂ = σ_f² W K W ᵀ + σ_n² I` walks all n stencil rows of `W` twice.
+//! But after a **one-time** O(n) projection of the data through `W`, the
+//! solve can run entirely on the m grid points. With `G = WᵀW` (the
+//! precomputed stencil-overlap Gram, [`StencilGram`]) define
+//!
+//! ```text
+//! B = σ_f²·K·G + σ_n²·I          (m × m, nonsymmetric)
+//! ```
+//!
+//! and solve `B q = c` with `c = σ_f²·K·(Wᵀy)`. Then
+//!
+//! ```text
+//! α = (y − W q) / σ_n²
+//! ```
+//!
+//! satisfies `K̂ α = y` *exactly* (substitute and use `Wᵀ W = G`: the
+//! defect is `W·(c − B q)/σ_n² = 0`). Per iteration the solve costs one
+//! Kronecker–Toeplitz apply (O(M log m)) plus one Gram apply (O(M·7ᵈ))
+//! — no term that grows with n.
+//!
+//! **Why CG applies.** `B` is not symmetric, but it is self-adjoint in
+//! the `G`-semi-inner-product `⟨u, v⟩_G = uᵀGv`: `GB = σ_f²·G·K·G +
+//! σ_n²·G` is symmetric, and
+//!
+//! ```text
+//! ⟨u, B u⟩_G = σ_f²·(Gu)ᵀK(Gu) + σ_n²·uᵀGu = (W u)ᵀ K̂ (W u) ≥ 0
+//! ```
+//!
+//! — positive-semidefinite through the *covariance* `K̂`, not the grid
+//! kernel, so the iteration is well defined even for the **signed**
+//! combination-technique terms of a sparse grid (where `K` alone is
+//! indefinite). Components in `null(W)` are invisible to the seminorm
+//! and provably irrelevant: they never change the recovered α (which
+//! only sees `W q`).
+//!
+//! **Convergence criterion.** The grid residual maps to the data residual
+//! exactly: `y − K̂ α̂ = −W r/σ_n²`, hence `‖data residual‖ = ‖r‖_G/σ_n²`.
+//! The solver therefore stops when `‖r‖_G ≤ tol·σ_n²·‖y‖` — the same
+//! `‖K̂x − y‖ ≤ tol·‖y‖` certificate unpreconditioned data-space CG
+//! provides, so the two spaces are interchangeable at equal `tol`.
+//!
+//! Grid solves run *unpreconditioned*: the grid dimension M is fixed as
+//! data streams in (`append_rows` only touches `G` and `Wᵀy`), so warm
+//! starts carry across resolves with no dimension padding — the
+//! grid-space translation of the data path's `PaddedPrecond`.
+//!
+//! Solver effort is recorded as `solver.gridcg.*` with a
+//! `solver.space.grid` counter, next to the data-space solvers in the
+//! metrics summary.
+
+use super::cg::CgConfig;
+use crate::linalg::{axpy, dot, norm2};
+use crate::operators::KroneckerSkiOp;
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// The grid-space normal-equations system for a (possibly multi-term)
+/// SKI covariance `K̂ = σ_f²·Σ_t c_t W_t K_t W_tᵀ + σ_n²·I`.
+///
+/// Terms share their [`KroneckerSkiOp`]s with the data-space covariance
+/// view through `Arc` (see `crate::operators::ArcOp`), so both solve
+/// spaces are backed by float-identical kernel arithmetic. Grid vectors
+/// are the per-term grids stacked: `[q_1; …; q_T]`, M = Σ_t M_t.
+///
+/// - Single-term (dense KISS) systems apply `G = WᵀW` through the
+///   precomputed banded [`StencilGram`] — O(M·7ᵈ) per apply, independent
+///   of n.
+/// - Multi-term (sparse-grid) systems apply the block Gram
+///   `G = W_bigᵀW_big` as the composition `u ↦ Wᵀ(W u)` through one
+///   shared data-space accumulator — still one pass, but O(n·s·T): exact,
+///   not n-independent. The flat-in-n guarantee is the single-term
+///   path's (see `docs/SOLVERS.md` for the decision table).
+///
+/// [`StencilGram`]: crate::operators::kronecker::StencilGram
+pub struct GridSystem {
+    /// `(c_t, op_t)` combination coefficient + per-term operator.
+    terms: Vec<(f64, Arc<KroneckerSkiOp>)>,
+    /// Start offset of each term's block in the stacked grid vector,
+    /// plus the total as a final sentinel.
+    offsets: Vec<usize>,
+    m_big: usize,
+    n: usize,
+    sf2: f64,
+    sn2: f64,
+}
+
+impl GridSystem {
+    /// Build from the covariance's term decomposition. Fails with
+    /// [`Error::Grid`] on degenerate axes, or (single-term) when the
+    /// `WᵀW` band exceeds its storage budget — callers on the `Auto`
+    /// space setting fall back to data-space CG on that error.
+    pub fn new(terms: Vec<(f64, Arc<KroneckerSkiOp>)>, sf2: f64, sn2: f64) -> Result<Self> {
+        if terms.is_empty() {
+            return Err(Error::Grid("grid system needs at least one term".into()));
+        }
+        if !(sn2.is_finite() && sn2 > 0.0) {
+            return Err(Error::Grid(format!(
+                "grid-space solves need a positive noise σ_n² (got {sn2})"
+            )));
+        }
+        let n = terms[0].1.dim();
+        let mut offsets = Vec::with_capacity(terms.len() + 1);
+        let mut m_big = 0usize;
+        for (_, op) in &terms {
+            if op.dim() != n {
+                return Err(Error::Grid(
+                    "grid-system terms disagree on the data size".into(),
+                ));
+            }
+            offsets.push(m_big);
+            m_big += op.total_grid;
+        }
+        offsets.push(m_big);
+        if terms.len() == 1 {
+            // Build (and validate) the banded Gram once, up front.
+            terms[0].1.grid_space_op()?;
+        } else {
+            // Multi-term systems apply G by composition; still refuse
+            // degenerate hand-built axes up front.
+            for (t, (_, op)) in terms.iter().enumerate() {
+                for (k, g) in op.grids.iter().enumerate() {
+                    if g.m == 0 || !g.h.is_finite() || g.h <= 0.0 {
+                        return Err(Error::Grid(format!(
+                            "degenerate axis {k} in term {t} (m={}, h={})",
+                            g.m, g.h
+                        )));
+                    }
+                }
+            }
+        }
+        Ok(GridSystem { terms, offsets, m_big, n, sf2, sn2 })
+    }
+
+    /// Stacked grid dimension M = Σ_t M_t.
+    pub fn grid_dim(&self) -> usize {
+        self.m_big
+    }
+
+    /// Data dimension n.
+    pub fn data_dim(&self) -> usize {
+        self.n
+    }
+
+    /// Noise σ_n² of the covariance this system solves.
+    pub fn noise(&self) -> f64 {
+        self.sn2
+    }
+
+    /// `Wᵀ v`: stack the per-term scatters (O(n·s) — the one-time
+    /// projection; the iteration never calls this).
+    pub fn wt(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n);
+        let mut out = Vec::with_capacity(self.m_big);
+        for (_, op) in &self.terms {
+            out.extend_from_slice(&op.wt_matvec(v));
+        }
+        out
+    }
+
+    /// `W u`: sum of per-term gathers (data-sized; used by the α
+    /// back-projection, once per solve).
+    pub fn w(&self, u: &[f64]) -> Vec<f64> {
+        assert_eq!(u.len(), self.m_big);
+        let mut out = vec![0.0; self.n];
+        for (t, (_, op)) in self.terms.iter().enumerate() {
+            let block = &u[self.offsets[t]..self.offsets[t + 1]];
+            let part = op.w_matvec(block);
+            for (o, x) in out.iter_mut().zip(part) {
+                *o += x;
+            }
+        }
+        out
+    }
+
+    /// `G u = WᵀW u`: banded Gram for single-term systems, gather/scatter
+    /// composition for multi-term ones.
+    pub fn apply_g(&self, u: &[f64]) -> Vec<f64> {
+        assert_eq!(u.len(), self.m_big);
+        if self.terms.len() == 1 {
+            let gram = self.terms[0]
+                .1
+                .grid_space_op()
+                .expect("validated at construction");
+            return gram.apply(u);
+        }
+        self.wt(&self.w(u))
+    }
+
+    /// Block grid kernel `K u`: per term `c_t·σ_t²·(⊗K_t) u_t`, stacked.
+    pub fn apply_k(&self, u: &[f64]) -> Vec<f64> {
+        assert_eq!(u.len(), self.m_big);
+        let mut out = Vec::with_capacity(self.m_big);
+        for (t, (coeff, op)) in self.terms.iter().enumerate() {
+            let block = &u[self.offsets[t]..self.offsets[t + 1]];
+            let mut part = op.kron_matvec(block);
+            let scale = coeff * op.outputscale();
+            if scale != 1.0 {
+                for p in part.iter_mut() {
+                    *p *= scale;
+                }
+            }
+            out.extend_from_slice(&part);
+        }
+        out
+    }
+
+    /// `B u = σ_f²·K·(G u) + σ_n²·u`, reusing a caller-held `G u`
+    /// (the CG loop maintains `G p` by recurrence, so each iteration
+    /// pays exactly one fresh `G` apply and one `K` apply).
+    fn apply_b_given_g(&self, u: &[f64], gu: &[f64]) -> Vec<f64> {
+        let mut out = self.apply_k(gu);
+        for (o, &uu) in out.iter_mut().zip(u) {
+            *o = self.sf2 * *o + self.sn2 * uu;
+        }
+        out
+    }
+
+    /// Right-hand side `c = σ_f²·K·wty` from a (possibly incrementally
+    /// maintained) projection `wty = Wᵀy`.
+    pub fn rhs_from_wty(&self, wty: &[f64]) -> Vec<f64> {
+        let mut c = self.apply_k(wty);
+        for v in c.iter_mut() {
+            *v *= self.sf2;
+        }
+        c
+    }
+
+    /// Back-projection `α = (y − W q)/σ_n²` — exact for the exact q.
+    pub fn recover_alpha(&self, y: &[f64], q: &[f64]) -> Vec<f64> {
+        let wq = self.w(q);
+        y.iter()
+            .zip(&wq)
+            .map(|(yi, wi)| (yi - wi) / self.sn2)
+            .collect()
+    }
+
+    /// Translate a data-space solution into a grid-space warm seed: the
+    /// exact α satisfies `W q = y − σ_n² α = σ_f² W K Wᵀ α`, so
+    /// `q = σ_f²·K·(Wᵀα)` up to an irrelevant `null(W)` component.
+    pub fn seed_from_alpha(&self, alpha: &[f64]) -> Vec<f64> {
+        self.rhs_from_wty(&self.wt(alpha))
+    }
+}
+
+/// Grid-space solve result: the recovered data-space α plus the grid
+/// iterate `v` (the warm-start seed for the next solve against this or a
+/// nearby system — grid dimension is stable across streaming appends).
+#[derive(Clone, Debug)]
+pub struct GridSolution {
+    /// `α = K̂⁻¹ y` recovered by back-projection.
+    pub alpha: Vec<f64>,
+    /// The grid iterate q at exit.
+    pub v: Vec<f64>,
+    /// Iterations run.
+    pub iters: usize,
+    /// Final data-equivalent relative residual `‖K̂α − y‖/‖y‖`
+    /// (= `‖r‖_G/(σ_n²·‖y‖)` — an exact identity, not an estimate).
+    pub rel_residual: f64,
+    /// Whether the tolerance was met.
+    pub converged: bool,
+}
+
+/// Solve `K̂ α = y` in grid space. Convenience wrapper over
+/// [`grid_cg_solve_with_wty`] that pays the O(n) projection itself.
+pub fn grid_cg_solve(
+    sys: &GridSystem,
+    y: &[f64],
+    x0: Option<&[f64]>,
+    cfg: CgConfig,
+) -> GridSolution {
+    let wty = sys.wt(y);
+    grid_cg_solve_with_wty(sys, y, &wty, x0, cfg)
+}
+
+/// Solve `K̂ α = y` in grid space with a caller-maintained projection
+/// `wty = Wᵀy` (the streaming layer updates it incrementally per
+/// ingested point instead of re-scattering all n rows).
+///
+/// `x0` is a *grid* seed (length M): the previous solve's
+/// [`GridSolution::v`], or [`GridSystem::seed_from_alpha`] of a
+/// data-space α. Mismatched lengths are dropped (cold start), mirroring
+/// [`cg_solve_with`](super::cg_solve_with); a seed already inside
+/// tolerance returns bitwise with 0 iterations.
+pub fn grid_cg_solve_with_wty(
+    sys: &GridSystem,
+    y: &[f64],
+    wty: &[f64],
+    x0: Option<&[f64]>,
+    cfg: CgConfig,
+) -> GridSolution {
+    let m = sys.grid_dim();
+    assert_eq!(y.len(), sys.data_dim());
+    assert_eq!(wty.len(), m);
+    let g = crate::coordinator::metrics::global();
+    g.incr("solver.space.grid", 1);
+    let ny = norm2(y);
+    if ny == 0.0 {
+        crate::coordinator::metrics::record_solver("gridcg", 0, true);
+        return GridSolution {
+            alpha: vec![0.0; sys.data_dim()],
+            v: vec![0.0; m],
+            iters: 0,
+            rel_residual: 0.0,
+            converged: true,
+        };
+    }
+    // ‖r‖_G ≤ tol·σ_n²·‖y‖ ⇔ ‖K̂α̂ − y‖ ≤ tol·‖y‖ (see module docs).
+    let threshold = cfg.tol * sys.noise() * ny;
+    let denom = sys.noise() * ny;
+    let c = sys.rhs_from_wty(wty);
+    let x0 = x0.filter(|x| x.len() == m);
+    let seeded = x0.is_some();
+    if seeded {
+        g.incr("solver.warm.seeded", 1);
+    }
+    let (mut x, mut r) = match x0 {
+        Some(x0) => {
+            let gx = sys.apply_g(x0);
+            let bx = sys.apply_b_given_g(x0, &gx);
+            let r: Vec<f64> = c.iter().zip(&bx).map(|(ci, bi)| ci - bi).collect();
+            (x0.to_vec(), r)
+        }
+        None => (vec![0.0; m], c.clone()),
+    };
+    let mut gr = sys.apply_g(&r);
+    let mut rz = dot(&r, &gr).max(0.0);
+    if rz.sqrt() <= threshold {
+        // Inside tolerance at entry: a warm seed is returned bitwise
+        // (iters = 0), and a cold zero-G-norm RHS is solved exactly by
+        // q = c/σ_n² (then `B q = σ_f²·K·G·c/σ_n² + c = c` since
+        // `G c = Wᵀ(W c) = 0`).
+        if seeded {
+            g.incr("solver.warm.hit", 1);
+        } else if rz == 0.0 {
+            for (xi, &ci) in x.iter_mut().zip(&c) {
+                *xi = ci / sys.noise();
+            }
+        }
+        crate::coordinator::metrics::record_solver("gridcg", 0, true);
+        let alpha = sys.recover_alpha(y, &x);
+        return GridSolution {
+            alpha,
+            v: x,
+            iters: 0,
+            rel_residual: rz.sqrt() / denom,
+            converged: true,
+        };
+    }
+    let mut p = r.clone();
+    let mut gp = gr.clone();
+    let mut iters = 0;
+    let mut converged = false;
+    for _ in 0..cfg.max_iters {
+        iters += 1;
+        let bp = sys.apply_b_given_g(&p, &gp);
+        // ⟨p, Bp⟩_G = (W p)ᵀ K̂ (W p) > 0 for any p with W p ≠ 0.
+        let pbp = dot(&gp, &bp);
+        if pbp <= 0.0 {
+            break;
+        }
+        let alpha_step = rz / pbp;
+        axpy(alpha_step, &p, &mut x);
+        axpy(-alpha_step, &bp, &mut r);
+        gr = sys.apply_g(&r);
+        let rz_new = dot(&r, &gr).max(0.0);
+        if rz_new.sqrt() <= threshold {
+            rz = rz_new;
+            converged = true;
+            break;
+        }
+        let beta = rz_new / rz;
+        for (pi, &ri) in p.iter_mut().zip(&r) {
+            *pi = ri + beta * *pi;
+        }
+        // G p' = G r + β·G p by linearity: no extra Gram apply.
+        for (gpi, &gri) in gp.iter_mut().zip(&gr) {
+            *gpi = gri + beta * *gpi;
+        }
+        rz = rz_new;
+    }
+    let rel = rz.sqrt() / denom;
+    let converged = converged || rel <= cfg.tol;
+    crate::coordinator::metrics::record_solver("gridcg", iters, converged);
+    let alpha = sys.recover_alpha(y, &x);
+    GridSolution { alpha, v: x, iters, rel_residual: rel, converged }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::ProductKernel;
+    use crate::linalg::Matrix;
+    use crate::operators::LinearOp;
+    use crate::solvers::cg_solve;
+    use crate::util::{rel_err, Rng};
+
+    fn random_points(n: usize, d: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0))
+    }
+
+    /// Data-space covariance view of the same term set, for oracles.
+    struct Cov {
+        terms: Vec<(f64, Arc<KroneckerSkiOp>)>,
+        sf2: f64,
+        sn2: f64,
+    }
+
+    impl LinearOp for Cov {
+        fn dim(&self) -> usize {
+            self.terms[0].1.dim()
+        }
+        fn matvec(&self, v: &[f64]) -> Vec<f64> {
+            let mut out = vec![0.0; v.len()];
+            for (c, op) in &self.terms {
+                for (o, x) in out.iter_mut().zip(op.matvec(v)) {
+                    *o += c * x;
+                }
+            }
+            for (o, &x) in out.iter_mut().zip(v) {
+                *o = self.sf2 * *o + self.sn2 * x;
+            }
+            out
+        }
+    }
+
+    fn dense_term(n: usize, seed: u64) -> (Matrix, Arc<KroneckerSkiOp>) {
+        let xs = random_points(n, 2, seed);
+        let kern = ProductKernel::rbf(2, 0.6, 1.0);
+        let op = KroneckerSkiOp::new(&xs, &kern, 16).unwrap();
+        (xs, Arc::new(op))
+    }
+
+    #[test]
+    fn grid_solve_matches_data_space_cg() {
+        let (_, op) = dense_term(90, 50);
+        let (sf2, sn2) = (1.3, 0.25);
+        let terms = vec![(1.0, op)];
+        let cov = Cov { terms: terms.clone(), sf2, sn2 };
+        let sys = GridSystem::new(terms, sf2, sn2).unwrap();
+        let mut rng = Rng::new(51);
+        let y = rng.normal_vec(90);
+        let cfg = CgConfig { max_iters: 600, tol: 1e-10, ..CgConfig::default() };
+        let data = cg_solve(&cov, &y, cfg);
+        let grid = grid_cg_solve(&sys, &y, None, cfg);
+        assert!(data.converged && grid.converged, "grid rel {}", grid.rel_residual);
+        assert!(
+            rel_err(&grid.alpha, &data.x) < 1e-7,
+            "α drift {}",
+            rel_err(&grid.alpha, &data.x)
+        );
+        // The recovered α really solves the covariance system: the
+        // residual identity promises ‖K̂α − y‖ ≤ tol·‖y‖, same as data CG.
+        let back = cov.matvec(&grid.alpha);
+        assert!(rel_err(&back, &y) < 1e-9);
+    }
+
+    #[test]
+    fn warm_seed_from_alpha_converges_immediately() {
+        let (_, op) = dense_term(70, 52);
+        let (sf2, sn2) = (1.0, 0.25);
+        let sys = GridSystem::new(vec![(1.0, op)], sf2, sn2).unwrap();
+        let mut rng = Rng::new(53);
+        let y = rng.normal_vec(70);
+        let tight = CgConfig { max_iters: 800, tol: 1e-10, ..CgConfig::default() };
+        let cold = grid_cg_solve(&sys, &y, None, tight);
+        assert!(cold.converged);
+        // Seed with the grid iterate: bitwise return at 0 iterations.
+        let loose = CgConfig { max_iters: 100, tol: 1e-6, ..CgConfig::default() };
+        let warm = grid_cg_solve(&sys, &y, Some(&cold.v), loose);
+        assert_eq!(warm.iters, 0);
+        assert_eq!(warm.v, cold.v);
+        // Seed translated from the data-space α is also near-converged.
+        let seed = sys.seed_from_alpha(&cold.alpha);
+        let warm2 = grid_cg_solve(&sys, &y, Some(&seed), loose);
+        assert!(
+            warm2.iters <= cold.iters / 2,
+            "α-derived seed {} vs cold {}",
+            warm2.iters,
+            cold.iters
+        );
+        // A wrong-length seed is dropped, not panicked on.
+        let bad = grid_cg_solve(&sys, &y, Some(&[1.0, 2.0]), loose);
+        assert!(bad.converged);
+    }
+
+    #[test]
+    fn multi_term_signed_combination_solves() {
+        // A signed two-term system (combination-technique shape): K_big
+        // is indefinite, but the G-inner-product iteration only sees the
+        // PD covariance.
+        let xs = random_points(60, 2, 54);
+        let kern = ProductKernel::rbf(2, 0.7, 1.0);
+        let fine = vec![
+            crate::grid::Grid1d::fit(-1.0, 1.0, 12).unwrap(),
+            crate::grid::Grid1d::fit_any(-1.0, 1.0, 3).unwrap(),
+        ];
+        let coarse = vec![
+            crate::grid::Grid1d::fit_any(-1.0, 1.0, 3).unwrap(),
+            crate::grid::Grid1d::fit_any(-1.0, 1.0, 3).unwrap(),
+        ];
+        let t1 = Arc::new(KroneckerSkiOp::with_grids(&xs, &kern, fine));
+        let t2 = Arc::new(KroneckerSkiOp::with_grids(&xs, &kern, coarse));
+        let terms = vec![(1.0, t1), (-0.3, t2)];
+        let (sf2, sn2) = (1.0, 1.0);
+        let cov = Cov { terms: terms.clone(), sf2, sn2 };
+        let sys = GridSystem::new(terms, sf2, sn2).unwrap();
+        let mut rng = Rng::new(55);
+        let y = rng.normal_vec(60);
+        let cfg = CgConfig { max_iters: 600, tol: 1e-10, ..CgConfig::default() };
+        let grid = grid_cg_solve(&sys, &y, None, cfg);
+        assert!(grid.converged, "rel {}", grid.rel_residual);
+        // Dense Cholesky oracle (also certifies the covariance is PD, so
+        // the G-weighted iteration was legitimately applicable).
+        let dense = cov.to_dense();
+        let want = crate::linalg::Cholesky::new(&dense).unwrap().solve(&y);
+        assert!(
+            rel_err(&grid.alpha, &want) < 1e-7,
+            "{}",
+            rel_err(&grid.alpha, &want)
+        );
+    }
+
+    #[test]
+    fn zero_rhs_and_zero_noise_guards() {
+        let (_, op) = dense_term(30, 56);
+        let sys = GridSystem::new(vec![(1.0, op.clone())], 1.0, 0.1).unwrap();
+        let sol = grid_cg_solve(&sys, &vec![0.0; 30], None, CgConfig::default());
+        assert!(sol.converged);
+        assert!(sol.alpha.iter().all(|&a| a == 0.0));
+        // σ_n² = 0 is a typed error, not a divide-by-zero at recover time.
+        assert!(GridSystem::new(vec![(1.0, op)], 1.0, 0.0).is_err());
+    }
+}

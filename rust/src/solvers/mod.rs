@@ -1,7 +1,9 @@
 //! Iterative Krylov solvers: preconditioned CG (single and block
 //! multi-RHS, with warm starts), Lanczos (single and batched-probe),
 //! stochastic Lanczos quadrature — plus the preconditioners themselves
-//! ([`precond`]: identity / Jacobi / partial pivoted Cholesky).
+//! ([`precond`]: identity / Jacobi / partial pivoted Cholesky) and the
+//! grid-space normal-equations engine ([`gridspace`]), whose per-iteration
+//! cost is independent of n.
 //!
 //! Tuning the solvers (tolerance vs. preconditioner rank vs. warm
 //! starts, and how to read the p50/p99 solver-effort summary lines) is
@@ -9,12 +11,16 @@
 
 pub mod block_cg;
 pub mod cg;
+pub mod gridspace;
 pub mod lanczos;
 pub mod precond;
 pub mod slq;
 
 pub use block_cg::{block_cg_solve, block_cg_solve_with, BlockCgColumn, BlockCgSolution};
 pub use cg::{cg_solve, cg_solve_many, cg_solve_with, CgConfig, CgSolution};
+pub use gridspace::{
+    grid_cg_solve, grid_cg_solve_with_wty, GridSolution, GridSystem,
+};
 pub use lanczos::{lanczos, lanczos_batch, LanczosResult};
 pub use precond::{
     build_preconditioner, IdentityPrecond, JacobiPrecond, PaddedPrecond,

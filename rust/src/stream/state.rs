@@ -12,7 +12,14 @@
 //!    with the previous α (padded with the standardized residual guess
 //!    for the new rows), reusing the preconditioner cached at the last
 //!    full refresh through [`PaddedPrecond`] while the hyperparameters
-//!    are unchanged;
+//!    are unchanged. With [`StreamConfig::space`] in grid mode the
+//!    re-solve runs on the m-dimensional grid-space normal equations
+//!    instead (`crate::solvers::gridspace`): `append_rows` folds the new
+//!    stencil rows into the precomputed `WᵀW` band, `Wᵀy` is folded
+//!    forward per accepted row, and the solve warm-starts from the
+//!    previous grid iterate — whose length is the fixed grid size, so
+//!    appends never invalidate it and per-iteration cost is independent
+//!    of n;
 //! 3. **the mean cache is patched, not rebuilt** — the grid-side scatter
 //!    `Wᵀα` is updated with the α *delta* per stencil touch (entries with
 //!    `|Δα| ≤ patch_eps·‖α‖_∞` are skipped), then one Kronecker–Toeplitz
@@ -36,7 +43,7 @@
 //! typed [`Error::Stream`].
 
 use super::log::{Observation, ObservationLog, PushOutcome};
-use crate::gp::{GpHypers, MvmGp, MvmVariant};
+use crate::gp::{GpHypers, MvmGp, MvmVariant, SolveSpace};
 use crate::grid::{tensor_stencil, tensor_strides, Grid1d, RectilinearGrid};
 use crate::kernels::{ProductKernel, Stationary1d};
 use crate::linalg::{dot, Cholesky, Matrix, SymToeplitz};
@@ -47,10 +54,11 @@ use crate::serve::cache::{
 };
 use crate::serve::snapshot::{ModelSnapshot, SnapshotVariant, SNAPSHOT_VERSION};
 use crate::solvers::{
-    block_cg_solve_with, build_preconditioner, cg_solve_with, CgConfig, IdentityPrecond,
-    PaddedPrecond, Preconditioner, PrecondSpec,
+    block_cg_solve_with, build_preconditioner, cg_solve_with, grid_cg_solve_with_wty,
+    CgConfig, GridSystem, IdentityPrecond, PaddedPrecond, Preconditioner, PrecondSpec,
 };
 use crate::{Error, Result};
+use std::sync::Arc;
 
 /// Streaming-ingestion policy knobs.
 #[derive(Clone, Debug)]
@@ -73,6 +81,12 @@ pub struct StreamConfig {
     /// Mean-patch threshold: skip scattering α deltas below
     /// `patch_eps · ‖α‖_∞` (0 ⇒ scatter every nonzero delta).
     pub patch_eps: f64,
+    /// Which space the per-ingest α re-solves run in. Grid space keeps
+    /// the per-iteration solve cost independent of n — the natural fit
+    /// for an ever-growing stream — with `WᵀW`/`Wᵀy` folded forward
+    /// incrementally per accepted row. `Auto` picks grid space whenever
+    /// the frozen axes admit it (see `docs/SOLVERS.md`).
+    pub space: SolveSpace,
 }
 
 impl Default for StreamConfig {
@@ -84,6 +98,7 @@ impl Default for StreamConfig {
             log_capacity: 1024,
             variance: VarianceMode::Lanczos(64),
             patch_eps: 1e-12,
+            space: SolveSpace::Auto,
         }
     }
 }
@@ -149,7 +164,10 @@ pub struct IncrementalState {
     /// The frozen inducing-grid axes — never refitted while streaming.
     axes: Vec<Grid1d>,
     /// SKI operator over the current data; grows by stencil rows.
-    op: KroneckerSkiOp,
+    /// Behind an `Arc` so the grid-space solver ([`GridSystem`]) can
+    /// share it per solve without copying the stencil — the clone is
+    /// transient, so `Arc::get_mut` always succeeds at append time.
+    op: Arc<KroneckerSkiOp>,
     /// Preconditioner built at the last refresh (covers the rows that
     /// existed then; grown systems see it through [`PaddedPrecond`]).
     pre: Box<dyn Preconditioner>,
@@ -159,6 +177,18 @@ pub struct IncrementalState {
     alpha: Vec<f64>,
     /// Grid-side scatter `Wᵀα` (single term), patched per ingest.
     wta: Vec<f64>,
+    /// Grid-side projection `Wᵀy`, folded forward per accepted row while
+    /// solving in grid space (empty in data-space mode) — the grid-space
+    /// right-hand side never re-reads the n-vector y.
+    wty: Vec<f64>,
+    /// The last grid-space iterate q, the warm seed for the next ingest
+    /// re-solve. Its length is M (grid size), which never changes while
+    /// streaming — appends resize the *data* side only, so the seed
+    /// survives every `append_rows` by construction.
+    grid_q: Option<Vec<f64>>,
+    /// Resolved at each refresh from [`StreamConfig::space`] (the axes
+    /// are frozen, so feasibility never changes between refreshes).
+    grid_active: bool,
     /// Per-axis Toeplitz grid-kernel factors — invariant while streaming
     /// (axes and hyperparameters are frozen), built once so the per-
     /// ingest mean patch pays only the Kronecker apply.
@@ -220,7 +250,7 @@ impl IncrementalState {
             });
         }
         let kern = ProductKernel::rbf(xs.cols, hypers.ell(), 1.0);
-        let op = KroneckerSkiOp::with_grids(&xs, &kern, axes.clone());
+        let op = Arc::new(KroneckerSkiOp::with_grids(&xs, &kern, axes.clone()));
         let n = xs.rows;
         let total: usize = axes.iter().map(|g| g.m).product();
         let kern1 = Stationary1d::rbf(hypers.ell());
@@ -252,6 +282,9 @@ impl IncrementalState {
             cg,
             alpha: vec![0.0; n],
             wta: vec![0.0; total],
+            wty: Vec::new(),
+            grid_q: None,
+            grid_active: false,
             factors,
             cache: empty,
             var_built_at: 0,
@@ -293,10 +326,46 @@ impl IncrementalState {
     /// operator bitwise.
     fn view(&self) -> AffineRef<'_> {
         AffineRef {
-            inner: &self.op,
+            inner: self.op.as_ref(),
             scale: self.hypers.sf2(),
             shift: self.hypers.sn2(),
         }
+    }
+
+    /// Resolve [`StreamConfig::space`] against the frozen grid: whether
+    /// the per-ingest re-solves run in grid space. Explicit `Grid`
+    /// propagates the typed refusal (over-budget `WᵀW` band, degenerate
+    /// axes); `Auto` falls back to data space on it. The call eagerly
+    /// builds the `WᵀW` band when feasible, so later `append_rows` calls
+    /// fold into it incrementally.
+    fn resolve_space(&self) -> Result<bool> {
+        match self.cfg.space {
+            SolveSpace::Data => Ok(false),
+            SolveSpace::Grid => {
+                self.op.grid_space_op()?;
+                Ok(true)
+            }
+            SolveSpace::Auto => match self.op.grid_space_op() {
+                Ok(_) => Ok(true),
+                Err(Error::Grid(_)) => {
+                    crate::coordinator::metrics::global()
+                        .incr("solver.space.fallback", 1);
+                    Ok(false)
+                }
+                Err(e) => Err(e),
+            },
+        }
+    }
+
+    /// The grid-space normal-equations system over the shared operator.
+    /// Transient per solve: the `Arc` clone inside is dropped with the
+    /// returned system, keeping `Arc::get_mut` available at append time.
+    fn grid_system(&self) -> Result<GridSystem> {
+        GridSystem::new(
+            vec![(1.0, self.op.clone())],
+            self.hypers.sf2(),
+            self.hypers.sn2(),
+        )
     }
 
     /// The preconditioner for a solve on the current n-row system:
@@ -321,22 +390,55 @@ impl IncrementalState {
     /// the grid scatter, and both caches; absorb the pending log.
     pub fn refresh(&mut self) -> Result<()> {
         let kern = ProductKernel::rbf(self.xs.cols, self.hypers.ell(), 1.0);
-        self.op = KroneckerSkiOp::with_grids(&self.xs, &kern, self.axes.clone());
+        self.op =
+            Arc::new(KroneckerSkiOp::with_grids(&self.xs, &kern, self.axes.clone()));
         let view = AffineRef {
-            inner: &self.op,
+            inner: self.op.as_ref(),
             scale: self.hypers.sf2(),
             shift: self.hypers.sn2(),
         };
+        // The data-space preconditioner is kept in both modes: variance
+        // solves (`predict_var`, the Lanczos factor) stay in data space.
         self.pre = build_preconditioner(&view, Some(self.hypers.sn2()), self.precond);
-        let sol = cg_solve_with(&view, &self.ys, self.pre.as_ref(), None, self.cg);
-        if !sol.converged {
-            return Err(Error::CgDidNotConverge {
-                iters: sol.iters,
-                residual: sol.rel_residual,
-            });
+        self.grid_active = self.resolve_space()?;
+        let mut grid_result: Option<(usize, bool, f64)> = None;
+        if self.grid_active {
+            // Cold grid-space solve; Wᵀy is rebuilt from scratch here and
+            // only folded forward incrementally between refreshes.
+            self.wty = self.op.wt_matvec(&self.ys);
+            let sys = self.grid_system()?;
+            let sol = grid_cg_solve_with_wty(&sys, &self.ys, &self.wty, None, self.cg);
+            drop(sys);
+            if sol.converged || self.cfg.space == SolveSpace::Grid {
+                self.alpha = sol.alpha;
+                self.grid_q = Some(sol.v);
+                grid_result = Some((sol.iters, sol.converged, sol.rel_residual));
+            } else {
+                // Auto commits to grid space only when the cold solve
+                // demonstrably converges in the configured budget —
+                // otherwise this state demotes to data space for good
+                // (the frozen axes make the retry deterministic).
+                crate::coordinator::metrics::global()
+                    .incr("solver.space.fallback", 1);
+                self.grid_active = false;
+            }
         }
-        self.last_cold_iters = sol.iters;
-        self.alpha = sol.x;
+        let (iters, converged, residual) = match grid_result {
+            Some(r) => r,
+            None => {
+                crate::coordinator::metrics::global().incr("solver.space.data", 1);
+                let sol =
+                    cg_solve_with(&view, &self.ys, self.pre.as_ref(), None, self.cg);
+                self.alpha = sol.x;
+                self.wty = Vec::new();
+                self.grid_q = None;
+                (sol.iters, sol.converged, sol.rel_residual)
+            }
+        };
+        if !converged {
+            return Err(Error::CgDidNotConverge { iters, residual });
+        }
+        self.last_cold_iters = iters;
         self.rebuild_scatter();
         self.rebuild_cache()?;
         self.var_built_at = self.xs.rows;
@@ -444,7 +546,8 @@ impl IncrementalState {
             guesses.push(resid / denom);
         }
 
-        // Extend the data, W, and the warm seed in place.
+        // Extend the data, W (and, in grid mode, WᵀW — `append_rows`
+        // folds the new stencil rows into the built band) in place.
         let n_old = self.xs.rows;
         let block = Matrix::from_fn(fresh_rows.len(), d, |r, c| {
             xs_new.get(fresh_rows[r], c)
@@ -454,29 +557,64 @@ impl IncrementalState {
         for &i in &fresh_rows {
             self.ys.push(ys_new[i]);
         }
-        self.op.append_rows(&block);
+        Arc::get_mut(&mut self.op)
+            .expect("grid systems are transient — no clone outlives its solve")
+            .append_rows(&block);
         let n = self.xs.rows;
 
         let alpha_old = std::mem::take(&mut self.alpha);
-        let mut seed = alpha_old.clone();
-        seed.extend_from_slice(&guesses);
 
-        // Warm-started PCG, reusing the refresh-time preconditioner
-        // padded out to the grown system (exact diagonal on the tail).
-        let view = AffineRef {
-            inner: &self.op,
-            scale: self.hypers.sf2(),
-            shift: self.hypers.sn2(),
+        let (solve_iters, stalled) = if self.grid_active {
+            // Grid space: fold the new targets into Wᵀy through the same
+            // stencil W just grew by, then re-solve the m-dimensional
+            // system warm-started from the previous grid iterate q —
+            // whose length is the (fixed) grid size, so appends never
+            // invalidate it. Per-iteration cost stays independent of n.
+            let dims: Vec<usize> = self.axes.iter().map(|g| g.m).collect();
+            let strides = tensor_strides(&dims);
+            let mut wty = std::mem::take(&mut self.wty);
+            for (r, &i) in fresh_rows.iter().enumerate() {
+                let y = ys_new[i];
+                tensor_stencil(block.row(r), &self.axes, &strides, |g, w| {
+                    wty[g] += w * y;
+                });
+            }
+            self.wty = wty;
+            let sys = self.grid_system()?;
+            let sol = grid_cg_solve_with_wty(
+                &sys,
+                &self.ys,
+                &self.wty,
+                self.grid_q.as_deref(),
+                self.cg,
+            );
+            drop(sys);
+            self.alpha = sol.alpha;
+            self.grid_q = Some(sol.v);
+            (sol.iters, !sol.converged)
+        } else {
+            // Data space: warm-started PCG seeded with the previous α
+            // padded by the standardized-residual guesses, reusing the
+            // refresh-time preconditioner padded out to the grown system
+            // (exact diagonal on the tail).
+            let mut seed = alpha_old.clone();
+            seed.extend_from_slice(&guesses);
+            crate::coordinator::metrics::global().incr("solver.space.data", 1);
+            let view = AffineRef {
+                inner: self.op.as_ref(),
+                scale: self.hypers.sf2(),
+                shift: self.hypers.sn2(),
+            };
+            let pre = self.solve_precond();
+            let sol =
+                cg_solve_with(&view, &self.ys, pre.as_ref(), Some(seed.as_slice()), self.cg);
+            // End the Box's borrow of self.pre before the &mut self calls
+            // below (Box drop glue keeps it live otherwise).
+            drop(pre);
+            self.alpha = sol.x;
+            (sol.iters, !sol.converged)
         };
-        let pre = self.solve_precond();
-        let sol = cg_solve_with(&view, &self.ys, pre.as_ref(), Some(seed.as_slice()), self.cg);
-        // End the Box's borrow of self.pre before the &mut self calls
-        // below (Box drop glue keeps it live otherwise).
-        drop(pre);
-        let solve_iters = sol.iters;
         let iters_saved = self.last_cold_iters.saturating_sub(solve_iters);
-        let stalled = !sol.converged;
-        self.alpha = sol.x;
 
         // Patch the mean cache: scatter the α delta per stencil touch,
         // then one grid apply.
@@ -671,7 +809,8 @@ impl IncrementalState {
     }
 
     /// Freeze the live state into a serving snapshot; the pending log
-    /// rides along (format v3).
+    /// rides along (format v3), as does the α solve-space provenance
+    /// (format v4).
     pub fn to_snapshot(&self) -> ModelSnapshot {
         ModelSnapshot {
             version: SNAPSHOT_VERSION,
@@ -679,6 +818,7 @@ impl IncrementalState {
             variant: SnapshotVariant::Kiss,
             train_rank: 0,
             refresh_rank: 0,
+            alpha_space: self.grid_active as u32,
             alpha: self.alpha.clone(),
             cache: self.cache.clone(),
             pending: self.log.replay().cloned().collect(),
@@ -708,6 +848,14 @@ impl IncrementalState {
     /// Current solve α = K̂⁻¹y.
     pub fn alpha(&self) -> &[f64] {
         &self.alpha
+    }
+
+    /// Whether the per-ingest re-solves run in grid space (resolved from
+    /// [`StreamConfig::space`] at the last refresh). Provenance for the
+    /// serving snapshot — the recovered α agrees with the data-space
+    /// solve to CG tolerance either way.
+    pub fn solved_in_grid_space(&self) -> bool {
+        self.grid_active
     }
 
     /// Model hyperparameters (fixed while streaming).

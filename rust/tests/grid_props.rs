@@ -9,7 +9,9 @@
 
 use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant};
 use skip_gp::grid::{cubic_stencil, Grid1d, GridSpec, InducingGrid, SparseGrid};
+use skip_gp::kernels::ProductKernel;
 use skip_gp::linalg::Matrix;
+use skip_gp::operators::KroneckerSkiOp;
 use skip_gp::solvers::CgConfig;
 use skip_gp::util::{mae, Rng};
 
@@ -253,6 +255,74 @@ fn sparse_grid_opens_d8_where_dense_refuses() {
     assert!(pred.iter().all(|p| p.is_finite()));
     let var = gp.predict_var(&xt).unwrap();
     assert!(var.iter().all(|v| v.is_finite() && *v > 0.0));
+}
+
+/// Every combination-technique term carries the textbook coefficient
+/// `(−1)^q · C(d−1, q)` for its layer `q = ℓ − |l|₁` (Griebel et al.) —
+/// pinned by decoding each term's per-axis levels back out of its fitted
+/// axis sizes (`m(0) = 1`, `m(l) = 2^{l+1} + 1`).
+#[test]
+fn combination_coefficients_match_binomial_signs() {
+    // C(n, k) by the multiplicative rule — exact in f64 at these sizes.
+    fn binom(n: usize, k: usize) -> f64 {
+        let mut c = 1.0f64;
+        for i in 0..k {
+            c = c * (n - i) as f64 / (i + 1) as f64;
+        }
+        c
+    }
+    // Inverse of `sparse_axis_points`.
+    fn axis_level(m: usize) -> usize {
+        if m == 1 {
+            return 0;
+        }
+        let l = (m - 1).trailing_zeros() as usize - 1;
+        assert_eq!((1usize << (l + 1)) + 1, m, "not a sparse axis size: {m}");
+        l
+    }
+    for (d, level) in [(2usize, 3usize), (3, 3), (3, 4), (4, 2)] {
+        let bounds = vec![(-1.0, 1.0); d];
+        let grid = SparseGrid::from_bounds(&bounds, level, d).unwrap();
+        assert!(grid.terms().len() > 1, "d={d} ℓ={level}: multi-term expected");
+        for term in grid.terms() {
+            let l1: usize = term.axes.iter().map(|g| axis_level(g.m)).sum();
+            assert!(l1 <= level, "d={d} ℓ={level}: layer |l|₁={l1} out of range");
+            let q = level - l1;
+            assert!(q <= d - 1, "d={d} ℓ={level}: q={q} beyond the combination depth");
+            let want = if q % 2 == 0 { binom(d - 1, q) } else { -binom(d - 1, q) };
+            assert_eq!(
+                term.coeff, want,
+                "d={d} ℓ={level} |l|₁={l1}: coefficient {} != (−1)^{q}·C({}, {q})",
+                term.coeff,
+                d - 1
+            );
+        }
+    }
+}
+
+/// A hand-built degenerate axis (zero or negative spacing) is a typed
+/// [`Error::Grid`] from `grid_space_op` — the grid-space engine refuses
+/// to assemble `WᵀW` over a zero-width column instead of producing NaN
+/// bands.
+#[test]
+fn degenerate_axis_is_a_typed_grid_error_from_grid_space_op() {
+    let mut rng = Rng::new(8);
+    let xs = Matrix::from_fn(24, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let kern = ProductKernel::rbf(2, 0.5, 1.0);
+    let good = Grid1d::fit(-1.0, 1.0, 8).unwrap();
+    for bad in [
+        Grid1d { min: 0.0, h: 0.0, m: 8 },
+        Grid1d { min: 0.0, h: -0.25, m: 8 },
+        Grid1d { min: 0.0, h: f64::NAN, m: 8 },
+    ] {
+        let op = KroneckerSkiOp::with_grids(&xs, &kern, vec![good.clone(), bad.clone()]);
+        let err = match op.grid_space_op() {
+            Ok(_) => panic!("degenerate axis (h={}) must not assemble WᵀW", bad.h),
+            Err(e) => e,
+        };
+        assert!(matches!(err, skip_gp::Error::Grid(_)), "h={}: {err}", bad.h);
+        assert!(err.to_string().contains("degenerate"), "h={}: {err}", bad.h);
+    }
 }
 
 /// The sparse grid's point count grows near-linearly in d while the

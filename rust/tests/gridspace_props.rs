@@ -1,0 +1,299 @@
+//! Cross-solver equivalence suite for the grid-space iteration engine:
+//! the m×m normal-equations path (`solvers::gridspace`, Yadav, Sheldon &
+//! Musco 2021) must reproduce the data-space CG oracle on every problem
+//! both can solve — dense Kronecker and sparse-grid KISS, cold and
+//! streaming — and a grid-space-trained model must pin against the dense
+//! `ExactGp` references on the on-grid serving fixture.
+//!
+//! The agreement tolerances are derived, not tuned: both solvers stop on
+//! the same certificate `‖K̂α − y‖ ≤ tol·‖y‖`, so
+//! `‖Δα‖₂ ≤ 2·tol·‖y‖₂/λ_min ≤ 2·tol·‖y‖₂/σ_n²`, and with σ_n² = 1,
+//! `mae(Δα) ≤ ‖Δα‖₂/√n ≈ 2·tol` — asserting 1e-8 at tol = 1e-10 leaves
+//! two orders of slack for the attainable CG floor (≈ ε·κ).
+
+#![allow(clippy::needless_range_loop)] // index-heavy numeric test loops
+
+use skip_gp::gp::{ExactGp, GpHypers, MvmGp, MvmGpConfig, MvmVariant, SolveSpace};
+use skip_gp::grid::{Grid1d, GridSpec};
+use skip_gp::kernels::ProductKernel;
+use skip_gp::linalg::Matrix;
+use skip_gp::operators::KroneckerSkiOp;
+use skip_gp::serve::VarianceMode;
+use skip_gp::solvers::CgConfig;
+use skip_gp::stream::{IncrementalState, StreamConfig};
+use skip_gp::util::{mae, Rng};
+
+/// Smooth toy regression problem on [−1, 1]^d.
+fn toy(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let f = |row: &[f64]| -> f64 {
+        row.iter().enumerate().map(|(k, &x)| ((k + 1) as f64 * x).sin()).sum()
+    };
+    let xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+    let ys: Vec<f64> = (0..n).map(|i| f(xs.row(i)) + 0.05 * rng.normal()).collect();
+    (xs, ys)
+}
+
+/// Refresh one KISS model per solve space on the same data/spec and
+/// return both cached αs (data-space first).
+fn alphas_both_spaces(
+    xs: &Matrix,
+    ys: &[f64],
+    spec: GridSpec,
+    hypers: GpHypers,
+) -> (Vec<f64>, Vec<f64>) {
+    let cfg = |space: SolveSpace| MvmGpConfig {
+        variant: MvmVariant::Kiss,
+        grid: spec.clone(),
+        cg: CgConfig { max_iters: 1500, tol: 1e-10, ..Default::default() },
+        warm_start: false,
+        solve_space: space,
+        ..Default::default()
+    };
+    let mut data = MvmGp::new(xs.clone(), ys.to_vec(), hypers, cfg(SolveSpace::Data));
+    data.refresh().unwrap();
+    assert!(
+        !data.alpha_solved_in_grid_space(),
+        "SolveSpace::Data must keep the n-space oracle path"
+    );
+    let mut grid = MvmGp::new(xs.clone(), ys.to_vec(), hypers, cfg(SolveSpace::Grid));
+    grid.refresh().unwrap();
+    assert!(
+        grid.alpha_solved_in_grid_space(),
+        "SolveSpace::Grid must route the y-solve through the grid engine"
+    );
+    (
+        data.alpha().unwrap().to_vec(),
+        grid.alpha().unwrap().to_vec(),
+    )
+}
+
+/// Acceptance: grid-space and data-space solves agree to 1e-8 across
+/// n ∈ {64, 1024, 4096} × d ∈ {1, 2, 3}, dense Kronecker grids.
+#[test]
+fn grid_and_data_space_agree_dense_kronecker() {
+    // σ_n² = 1 keeps the derived mae bound at ≈ 2·tol (see module docs).
+    let hypers = GpHypers::new(0.6, 1.0, 1.0);
+    for (di, &d) in [1usize, 2, 3].iter().enumerate() {
+        let m = [16usize, 12, 8][di];
+        for &n in &[64usize, 1024, 4096] {
+            let (xs, ys) = toy(n, d, 31 * d as u64 + n as u64);
+            let (a_data, a_grid) =
+                alphas_both_spaces(&xs, &ys, GridSpec::Uniform(m), hypers);
+            let err = mae(&a_data, &a_grid);
+            assert!(
+                err < 1e-8,
+                "dense n={n} d={d} m={m}: data vs grid α mae {err:e}"
+            );
+        }
+    }
+}
+
+/// Acceptance: the same equivalence on sparse-grid (combination
+/// technique) KISS, whose grid systems carry signed multi-term `G`.
+#[test]
+fn grid_and_data_space_agree_sparse_grid() {
+    let hypers = GpHypers::new(0.6, 1.0, 1.0);
+    for &d in &[1usize, 2, 3] {
+        for &n in &[64usize, 1024, 4096] {
+            let (xs, ys) = toy(n, d, 71 * d as u64 + n as u64);
+            let (a_data, a_grid) =
+                alphas_both_spaces(&xs, &ys, GridSpec::Sparse { level: 3 }, hypers);
+            let err = mae(&a_data, &a_grid);
+            assert!(
+                err < 1e-8,
+                "sparse n={n} d={d} level=3: data vs grid α mae {err:e}"
+            );
+        }
+    }
+}
+
+/// The serving suite's on-grid fixture (`serve_roundtrip.rs`), widened to
+/// the full margin-fit node range 2..=13 and with both extremes forced
+/// into every column: the data bounds are then exactly
+/// `[g.point(2), g.point(13)]`, so `GridSpec::Uniform(16)`'s re-fit
+/// (`Grid1d::fit` over data bounds) lands on this same lattice (to
+/// rounding) and the cubic stencil stays an exact selection.
+fn on_grid_problem(n: usize, seed: u64) -> (Matrix, Vec<f64>, Matrix) {
+    let d = 3;
+    let m = 16usize;
+    let g = Grid1d::fit(0.0, 1.0, m).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut lattice = |rows: usize| {
+        Matrix::from_fn(rows, d, |_, _| g.point(2 + rng.below(m - 4)))
+    };
+    let mut xs = lattice(n);
+    for k in 0..d {
+        xs.data[k] = g.point(2); // row 0: lower data bound (= 0.0)
+        xs.data[d + k] = g.point(13); // row 1: upper data bound (≈ 1.0)
+    }
+    let xt = lattice(64);
+    let ys: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = xs.row(i);
+            (2.0 * r[0]).sin() + (3.0 * r[1]).cos() * r[2] + 0.05 * rng.normal()
+        })
+        .collect();
+    (xs, ys, xt)
+}
+
+/// Acceptance: a KISS model trained *entirely in grid space* pins its
+/// predictive mean and variance against the dense `ExactGp` references
+/// within 1e-6 on the n=256, d=3 on-grid case — on-grid SKI is exact, so
+/// the only daylight between the two models is solver tolerance.
+#[test]
+fn grid_space_trained_model_matches_exact_gp_within_1e6() {
+    let (xs, ys, xt) = on_grid_problem(256, 1);
+    let h = GpHypers::new(0.45, 1.3, 0.05);
+    let mut exact = ExactGp::new(xs.clone(), ys.clone(), h);
+    exact.refresh().unwrap();
+    let want_mean = exact.predict_mean(&xt);
+    let want_var = exact.predict_var(&xt);
+
+    let cfg = MvmGpConfig {
+        variant: MvmVariant::Kiss,
+        grid: GridSpec::Uniform(16),
+        cg: CgConfig { max_iters: 1500, tol: 1e-11, ..Default::default() },
+        solve_space: SolveSpace::Grid,
+        ..Default::default()
+    };
+    let mut gp = MvmGp::new(xs, ys, h, cfg);
+    gp.refresh().unwrap();
+    assert!(gp.alpha_solved_in_grid_space());
+
+    let got_mean = gp.predict_mean(&xt);
+    let got_var = gp.predict_var(&xt).unwrap();
+    for i in 0..xt.rows {
+        assert!(
+            (got_mean[i] - want_mean[i]).abs() < 1e-6,
+            "mean[{i}]: grid-trained {} vs exact {}",
+            got_mean[i],
+            want_mean[i]
+        );
+        assert!(
+            (got_var[i] - want_var[i]).abs() < 1e-6,
+            "var[{i}]: grid-trained {} vs exact {}",
+            got_var[i],
+            want_var[i]
+        );
+    }
+}
+
+/// The banded `WᵀW` stencil Gram is pinned elementwise against the dense
+/// `Wᵀ·W` assembled column-by-column from the operator's own `W`/`Wᵀ`
+/// matvecs — same stencils, so only summation-order rounding separates
+/// them.
+#[test]
+fn wtw_band_matches_dense_gram_elementwise() {
+    let (d, m, n) = (2usize, 8usize, 80usize);
+    let mut rng = Rng::new(9);
+    let xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+    let kern = ProductKernel::rbf(d, 0.5, 1.0);
+    let op = KroneckerSkiOp::new(&xs, &kern, m).unwrap();
+    let gram = op.grid_space_op().unwrap();
+    let total = m * m;
+    assert_eq!(gram.dim(), total);
+    assert_eq!(gram.band_width(), 49, "(2·4−1)² offsets for a d=2 cubic stencil");
+    for j in 0..total {
+        let mut e = vec![0.0; total];
+        e[j] = 1.0;
+        let dense_col = op.wt_matvec(&op.w_matvec(&e)); // (Wᵀ·W)·e_j
+        let band_col = gram.apply(&e);
+        for i in 0..total {
+            assert!(
+                (band_col[i] - dense_col[i]).abs() < 1e-10,
+                "G[{i},{j}]: band {} vs dense {}",
+                band_col[i],
+                dense_col[i]
+            );
+        }
+    }
+}
+
+/// Acceptance: 64 one-at-a-time grid-mode ingests — each an incremental
+/// `WᵀW`/`Wᵀy` fold plus a warm-started grid re-solve — match a
+/// from-scratch grid-space refit on the full point set within 1e-6.
+#[test]
+fn incremental_grid_ingests_match_scratch_grid_refit() {
+    let d = 2;
+    let (n0, n_stream) = (96usize, 64usize);
+    let mut rng = Rng::new(17);
+    let f = |r: &[f64]| (2.0 * r[0]).sin() + (3.0 * r[1]).cos();
+    let xs0 = Matrix::from_fn(n0, d, |_, _| rng.uniform_in(-1.0, 1.0));
+    let ys0: Vec<f64> = (0..n0).map(|i| f(xs0.row(i)) + 0.02 * rng.normal()).collect();
+    let streamed: Vec<(Vec<f64>, f64)> = (0..n_stream)
+        .map(|_| {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform_in(-0.9, 0.9)).collect();
+            let y = f(&x) + 0.02 * rng.normal();
+            (x, y)
+        })
+        .collect();
+
+    let axes = vec![
+        Grid1d::fit(-1.0, 1.0, 12).unwrap(),
+        Grid1d::fit(-1.0, 1.0, 12).unwrap(),
+    ];
+    let h = GpHypers::new(0.6, 1.0, 0.05);
+    let cg = CgConfig { max_iters: 800, tol: 1e-11, ..Default::default() };
+    // Purely incremental policy (no count/outlier-triggered refreshes),
+    // exact variance so the live and cold factors are deterministic.
+    let scfg = StreamConfig {
+        refresh_every: 0,
+        var_drift_budget: 0,
+        error_z: 0.0,
+        log_capacity: 4096,
+        variance: VarianceMode::Exact,
+        patch_eps: 1e-12,
+        space: SolveSpace::Grid,
+    };
+    let mut live = IncrementalState::new(
+        xs0.clone(),
+        ys0.clone(),
+        h,
+        axes.clone(),
+        cg,
+        scfg.clone(),
+    )
+    .unwrap();
+    assert!(live.solved_in_grid_space(), "explicit grid mode from the first solve");
+    for (x, y) in &streamed {
+        live.ingest(x, *y).unwrap();
+    }
+    assert!(live.solved_in_grid_space(), "grid mode survives 64 ingests");
+    assert_eq!(live.n(), n0 + n_stream);
+
+    // Cold reference: one-shot grid-space build on the full set.
+    let mut xs_full = xs0;
+    let mut ys_full = ys0;
+    for (x, y) in &streamed {
+        xs_full.data.extend_from_slice(x);
+        xs_full.rows += 1;
+        ys_full.push(*y);
+    }
+    let cold = IncrementalState::new(xs_full, ys_full, h, axes, cg, scfg).unwrap();
+    assert!(cold.solved_in_grid_space());
+
+    let aerr = mae(live.alpha(), cold.alpha());
+    assert!(aerr < 1e-6, "incremental vs scratch α mae {aerr:e}");
+    for _ in 0..40 {
+        let q = [rng.uniform_in(-0.8, 0.8), rng.uniform_in(-0.8, 0.8)];
+        let (lm, lv) = (live.cache().predict_mean_one(&q), live.cache().predict_var_one(&q));
+        let (cm, cv) = (cold.cache().predict_mean_one(&q), cold.cache().predict_var_one(&q));
+        assert!((lm - cm).abs() < 1e-6, "mean: live {lm} vs cold {cm}");
+        assert!((lv - cv).abs() < 1e-6, "var: live {lv} vs cold {cv}");
+    }
+}
+
+/// Nightly-lane (`cargo test --release -- --ignored`) scale check: the
+/// equivalence holds at n = 10⁵, where the grid path's per-iteration
+/// advantage actually matters. Too slow for the debug-mode tier-1 lane.
+#[test]
+#[ignore = "n=1e5 equivalence solve; run in the release --ignored lane"]
+fn grid_and_data_space_agree_at_1e5() {
+    let hypers = GpHypers::new(0.6, 1.0, 1.0);
+    let (xs, ys) = toy(100_000, 2, 5);
+    let (a_data, a_grid) =
+        alphas_both_spaces(&xs, &ys, GridSpec::Uniform(32), hypers);
+    let err = mae(&a_data, &a_grid);
+    assert!(err < 1e-8, "n=1e5: data vs grid α mae {err:e}");
+}

@@ -439,6 +439,7 @@ fn concurrent_observe_and_predict_matches_cold_refit() {
         log_capacity: 4096,
         variance: VarianceMode::Exact,
         patch_eps: 1e-12,
+        ..Default::default()
     };
     let live = IncrementalState::new(
         xs0.clone(),

@@ -52,6 +52,7 @@ fn quiet_cfg() -> StreamConfig {
         log_capacity: 1 << 16,
         variance: VarianceMode::None,
         patch_eps: 1e-12,
+        ..StreamConfig::default()
     }
 }
 

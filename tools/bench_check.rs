@@ -15,7 +15,11 @@
 //! - higher-is-better: name contains `speedup`, `ratio`, or `qps` —
 //!   regression when `current < baseline·(1 − tol)`;
 //! - lower-is-better: name ends in `_us`, `_ms`, `_s`, or `_iters`, or
-//!   contains `latency` — regression when `current > baseline·(1 + tol)`.
+//!   contains `latency` — regression when `current > baseline·(1 + tol)`;
+//! - two-sided band (checked first, by exact field name — see
+//!   `BAND_FIELDS`): scaling ratios asserting flatness, e.g.
+//!   `per_iter_us_ratio_1e6_vs_1e4` — regression when the current value
+//!   leaves `baseline ± 10%` in *either* direction.
 //!
 //! Everything else (counts, sizes, flags) is informational. Baselines
 //! therefore control exposure: checking in a baseline with only the
@@ -228,13 +232,27 @@ fn flatten(v: &Json, prefix: &str, out: &mut BTreeMap<String, f64>) {
 enum Gate {
     HigherIsBetter,
     LowerIsBetter,
+    /// Two-sided: must stay within ±[`BAND`] of the baseline. For
+    /// scaling ratios that assert *flatness* — drifting below the band
+    /// is as suspicious as growing above it (it usually means the
+    /// measurement broke, not that the code got faster).
+    Band,
     Ignored,
 }
+
+/// Fields gated two-sided (checked before the generic name rules, which
+/// would otherwise classify a `ratio` as higher-is-better).
+const BAND_FIELDS: &[&str] = &["per_iter_us_ratio_1e6_vs_1e4"];
+/// Half-width of the [`Gate::Band`] acceptance window.
+const BAND: f64 = 0.10;
 
 fn classify(path: &str) -> Gate {
     // Last dotted segment, with any array index stripped.
     let last = path.rsplit('.').next().unwrap_or(path);
     let last = last.split('[').next().unwrap_or(last).to_ascii_lowercase();
+    if BAND_FIELDS.contains(&last.as_str()) {
+        return Gate::Band;
+    }
     if last.contains("speedup") || last.contains("ratio") || last.contains("qps") {
         return Gate::HigherIsBetter;
     }
@@ -283,6 +301,7 @@ fn compare_records(baseline: &Json, current: &Json, tol: f64) -> Vec<Finding> {
                 let regressed = match gate {
                     Gate::HigherIsBetter => c < b * (1.0 - tol),
                     Gate::LowerIsBetter => c > b * (1.0 + tol),
+                    Gate::Band => (c - b).abs() > b.abs() * BAND,
                     Gate::Ignored => false,
                 };
                 findings.push(Finding {
@@ -345,8 +364,10 @@ fn check_dirs(baseline_dir: &Path, current_dir: &Path, tol: f64) -> Result<(Stri
             let arrow = match f.gate {
                 Gate::HigherIsBetter => "≥",
                 Gate::LowerIsBetter => "≤",
+                Gate::Band => "≈",
                 Gate::Ignored => "·",
             };
+            let shown_tol = if f.gate == Gate::Band { BAND } else { tol };
             match f.current {
                 None => {
                     out.push_str(&format!(
@@ -367,7 +388,7 @@ fn check_dirs(baseline_dir: &Path, current_dir: &Path, tol: f64) -> Result<(Stri
                          ({delta:+.1}%, tol ±{t:.0}%)\n",
                         path = f.path,
                         b = f.baseline,
-                        t = tol * 100.0
+                        t = shown_tol * 100.0
                     ));
                 }
             }
@@ -491,6 +512,12 @@ mod tests {
         assert_eq!(classify("speedup_single_vs_refresh"), Gate::HigherIsBetter);
         assert_eq!(classify("one_at_a_time.qps"), Gate::HigherIsBetter);
         assert_eq!(classify("iters_ratio"), Gate::HigherIsBetter);
+        // Band fields are matched before the generic "ratio" rule.
+        assert_eq!(classify("per_iter_us_ratio_1e6_vs_1e4"), Gate::Band);
+        assert_eq!(
+            classify("scaling.per_iter_us_ratio_1e6_vs_1e4"),
+            Gate::Band
+        );
         assert_eq!(classify("ingest_p50_us"), Gate::LowerIsBetter);
         assert_eq!(classify("refresh_ms"), Gate::LowerIsBetter);
         assert_eq!(classify("cache_build_s"), Gate::LowerIsBetter);
@@ -556,6 +583,42 @@ mod tests {
                 .any(|f| f.regressed && f.current.is_none()),
             "{findings:?}"
         );
+    }
+
+    /// The flatness band is two-sided: both growth above and collapse
+    /// below baseline ± 10% regress, while drift inside the band passes
+    /// regardless of the (wider) one-sided --tol.
+    #[test]
+    fn band_field_gates_both_directions() {
+        let base =
+            parse(r#"{"bench": "gridspace", "per_iter_us_ratio_1e6_vs_1e4": 1.0}"#)
+                .unwrap();
+        let inside =
+            parse(r#"{"bench": "gridspace", "per_iter_us_ratio_1e6_vs_1e4": 1.08}"#)
+                .unwrap();
+        let findings = compare_records(&base, &inside, 0.20);
+        assert!(findings.iter().all(|f| !f.regressed), "{findings:?}");
+
+        // 1.25× per-iteration growth: scaling is no longer flat, even
+        // though a generic "ratio" field would pass (higher is better).
+        let above =
+            parse(r#"{"bench": "gridspace", "per_iter_us_ratio_1e6_vs_1e4": 1.25}"#)
+                .unwrap();
+        let findings = compare_records(&base, &above, 0.20);
+        assert!(
+            findings
+                .iter()
+                .any(|f| f.regressed && f.path == "per_iter_us_ratio_1e6_vs_1e4"),
+            "{findings:?}"
+        );
+
+        // A collapse below the band fails too — it means the measurement
+        // broke, not that an O(m log m) iteration got 30% cheaper.
+        let below =
+            parse(r#"{"bench": "gridspace", "per_iter_us_ratio_1e6_vs_1e4": 0.7}"#)
+                .unwrap();
+        let findings = compare_records(&base, &below, 0.20);
+        assert!(findings.iter().any(|f| f.regressed), "{findings:?}");
     }
 
     /// End-to-end over directories: the gate fails on a doctored record
