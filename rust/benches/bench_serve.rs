@@ -3,21 +3,37 @@
 //! (QPS per mode, p50/p99 latency, batch-size histogram, cache-build
 //! time) so the serving perf trajectory is tracked from PR 2 onward.
 //!
-//! Run: `cargo bench --bench bench_serve` (add `-- --fast` in CI smoke).
+//! Since the fleet PR it also benches the sharded serving plane into
+//! `results/BENCH_serve_fleet.json`:
+//!
+//! - closed-loop shard scaling — the same snapshot behind k=1 vs k=4
+//!   [`ShardedModel`] shards (`fleet_vs_single_qps_ratio_k4`, gated ≥2×
+//!   in CI);
+//! - an **open-loop** TCP load generator against a live [`FleetServer`]:
+//!   arrivals on a fixed target-QPS schedule over thousands of
+//!   concurrent connections, with latency measured from the *scheduled*
+//!   send time, so queueing delay is charged to the server
+//!   (coordinated-omission-free p50/p99/p999).
+//!
+//! Run: `cargo bench --bench bench_serve` (add `-- --fast` in CI smoke;
+//! fast mode keeps the connection count inside default fd limits).
 
 #![allow(clippy::needless_range_loop)] // index-heavy numeric test/bench loops
 
+use skip_gp::coordinator::Metrics;
 use skip_gp::gp::{ExactGp, GpHypers};
 use skip_gp::linalg::Matrix;
 use skip_gp::serve::{
     BatcherConfig, ModelSnapshot, RequestBatcher, ServeEngine, SnapshotConfig, VarianceMode,
 };
+use skip_gp::serve::{FleetConfig, FleetServer, ModelRegistry, RegistryConfig, ShardedModel};
 use skip_gp::util::{Rng, Timer};
 use std::collections::VecDeque;
-use std::io::Write;
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
 use std::path::Path;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 struct LoadStats {
     qps: f64,
@@ -80,6 +96,182 @@ fn json_load(stats: &LoadStats) -> String {
         "{{\"qps\": {:.1}, \"p50_us\": {:.2}, \"p99_us\": {:.2}}}",
         stats.qps, stats.p50_us, stats.p99_us
     )
+}
+
+/// Closed-loop QPS through a [`ShardedModel`] with `k` shards: the same
+/// snapshot, the same one-at-a-time batcher policy, only the shard count
+/// varies — so the k=4 / k=1 ratio isolates what sharding buys the
+/// dispatch plane (batching amortization is measured separately above).
+fn run_sharded(snap: &ModelSnapshot, k: usize, clients: usize, total: usize) -> f64 {
+    let metrics = Arc::new(Metrics::new());
+    let model = ShardedModel::from_snapshot(
+        "bench",
+        snap.clone(),
+        k,
+        BatcherConfig { max_batch: 1, max_wait: Duration::ZERO },
+        metrics,
+    )
+    .expect("sharded model");
+    let model = Arc::new(model);
+    let per_client = total / clients;
+    let d = model.dim();
+    let t = Timer::start();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let model = model.clone();
+            s.spawn(move || {
+                let mut rng = Rng::new(9100 + c as u64);
+                let mut q = vec![0.0; d];
+                let mut pending = VecDeque::new();
+                for _ in 0..per_client {
+                    if pending.len() >= 64 {
+                        let rx: std::sync::mpsc::Receiver<_> = pending.pop_front().unwrap();
+                        rx.recv().unwrap();
+                    }
+                    for v in q.iter_mut() {
+                        *v = rng.uniform_in(-0.9, 0.9);
+                    }
+                    pending.push_back(model.submit_predict(&q));
+                }
+                for rx in pending {
+                    rx.recv().unwrap();
+                }
+            });
+        }
+    });
+    let elapsed = t.elapsed_s();
+    (clients * per_client) as f64 / elapsed
+}
+
+/// Exact quantile of a sorted sample (nearest-rank on `q * (len-1)`).
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[(q * (sorted.len() - 1) as f64).round() as usize]
+}
+
+struct OpenConn {
+    stream: TcpStream,
+    wbuf: Vec<u8>,
+    rbuf: Vec<u8>,
+    /// Scheduled send time of each request still awaiting its reply.
+    outstanding: VecDeque<Instant>,
+}
+
+/// Open-loop load against a live fleet endpoint: `total` requests arrive
+/// on a fixed `target_qps` schedule, round-robined over up to
+/// `conns_target` concurrent connections. Latency is measured from the
+/// request's *scheduled* arrival time, not the moment the socket write
+/// happened — if the server (or the generator) falls behind, the backlog
+/// is charged as latency instead of silently stretching the test
+/// (no coordinated omission).
+///
+/// Returns `(connections actually opened, achieved QPS, sorted latencies in seconds)`.
+fn open_loop(
+    addr: std::net::SocketAddr,
+    conns_target: usize,
+    target_qps: f64,
+    total: usize,
+    dim: usize,
+) -> (usize, f64, Vec<f64>) {
+    let mut conns: Vec<OpenConn> = Vec::with_capacity(conns_target);
+    for _ in 0..conns_target {
+        // Degrade gracefully at the fd limit: both endpoints live in this
+        // process, so each connection costs two descriptors.
+        let Ok(stream) = TcpStream::connect(addr) else {
+            break;
+        };
+        stream.set_nodelay(true).ok();
+        stream
+            .set_nonblocking(true)
+            .expect("nonblocking client socket");
+        conns.push(OpenConn {
+            stream,
+            wbuf: Vec::new(),
+            rbuf: Vec::new(),
+            outstanding: VecDeque::new(),
+        });
+    }
+    assert!(!conns.is_empty(), "open-loop generator could not open any connection to {addr}");
+
+    // A rotating pool of pre-formatted query lines keeps the hot loop free
+    // of float formatting.
+    let mut rng = Rng::new(42);
+    let lines: Vec<Vec<u8>> = (0..64)
+        .map(|_| {
+            let mut s = String::from("predict");
+            for _ in 0..dim {
+                s.push_str(&format!(" {:.6}", rng.uniform_in(-0.9, 0.9)));
+            }
+            s.push('\n');
+            s.into_bytes()
+        })
+        .collect();
+
+    let interval = Duration::from_secs_f64(1.0 / target_qps);
+    let start = Instant::now();
+    let mut next = start;
+    let mut sent = 0usize;
+    let mut done = 0usize;
+    let mut lat = Vec::with_capacity(total);
+    let mut buf = [0u8; 4096];
+    while done < total {
+        let now = Instant::now();
+        // Arrivals stay on schedule even when earlier requests are slow:
+        // that is what makes the loop "open".
+        while sent < total && next <= now {
+            let c = &mut conns[sent % conns.len()];
+            c.wbuf.extend_from_slice(&lines[sent % lines.len()]);
+            c.outstanding.push_back(next);
+            sent += 1;
+            next += interval;
+        }
+        let mut progress = false;
+        for c in conns.iter_mut() {
+            while !c.wbuf.is_empty() {
+                match c.stream.write(&c.wbuf) {
+                    Ok(0) => panic!("fleet server closed a connection mid-bench"),
+                    Ok(n) => {
+                        c.wbuf.drain(..n);
+                        progress = true;
+                    }
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(e) => panic!("open-loop write: {e}"),
+                }
+            }
+            if c.outstanding.is_empty() {
+                continue;
+            }
+            match c.stream.read(&mut buf) {
+                Ok(0) => panic!("fleet server closed a connection mid-bench"),
+                Ok(n) => {
+                    c.rbuf.extend_from_slice(&buf[..n]);
+                    let now2 = Instant::now();
+                    while let Some(pos) = c.rbuf.iter().position(|&b| b == b'\n') {
+                        c.rbuf.drain(..=pos);
+                        let sched = c
+                            .outstanding
+                            .pop_front()
+                            .expect("reply without a matching request");
+                        lat.push(now2.saturating_duration_since(sched).as_secs_f64());
+                        done += 1;
+                    }
+                    progress = true;
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {}
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => panic!("open-loop read: {e}"),
+            }
+        }
+        if !progress {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+    let elapsed = start.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (conns.len(), total as f64 / elapsed, lat)
 }
 
 fn main() {
@@ -176,4 +368,74 @@ fn main() {
     let mut f = std::fs::File::create(path).expect("bench json");
     f.write_all(json.as_bytes()).unwrap();
     println!("wrote {}", path.display());
+
+    // ---- fleet: closed-loop shard scaling ------------------------------
+    let fleet_total = if fast { 20_000 } else { 80_000 };
+    let single_qps = run_sharded(&snap, 1, clients, fleet_total);
+    let fleet_qps = run_sharded(&snap, 4, clients, fleet_total);
+    let ratio = fleet_qps / single_qps;
+    println!(
+        "fleet k=1    : {single_qps:>10.0} QPS\nfleet k=4    : {fleet_qps:>10.0} QPS   \
+         -> {ratio:.2}x over single shard"
+    );
+
+    // ---- fleet: open-loop tail latency over many connections ----------
+    // Fast mode stays inside the default 1024-fd soft limit (both
+    // endpoints are in-process, so each connection costs two fds); full
+    // mode pushes to 10k connections and records how many it got.
+    let (conns_target, open_total, target_qps) =
+        if fast { (400, 20_000, 4000.0) } else { (10_000, 50_000, 5000.0) };
+    let metrics = Arc::new(Metrics::new());
+    let model = ShardedModel::from_snapshot(
+        "bench",
+        snap.clone(),
+        4,
+        BatcherConfig::default(),
+        metrics.clone(),
+    )
+    .expect("fleet model");
+    let registry = Arc::new(ModelRegistry::new(RegistryConfig::default(), metrics));
+    registry.insert(model, true);
+    let server = FleetServer::start(
+        registry,
+        FleetConfig {
+            bind: "127.0.0.1:0".into(),
+            max_inflight: 0, // measure queueing delay, not busy replies
+            max_conns: 0,
+            default_model: Some("bench".into()),
+            ..Default::default()
+        },
+    )
+    .expect("fleet server");
+    let (open_conns, open_qps, lat) =
+        open_loop(server.addr(), conns_target, target_qps, open_total, 2);
+    let (p50_ms, p99_ms, p999_ms) = (
+        pct(&lat, 0.50) * 1e3,
+        pct(&lat, 0.99) * 1e3,
+        pct(&lat, 0.999) * 1e3,
+    );
+    println!(
+        "open loop    : {open_conns} conns @ target {target_qps:.0} QPS \
+         (achieved {open_qps:.0})   p50 {p50_ms:.2}ms   p99 {p99_ms:.2}ms   \
+         p999 {p999_ms:.2}ms"
+    );
+    server.shutdown();
+
+    let fleet_json = format!(
+        "{{\n  \"bench\": \"serve_fleet\",\n  \"shards_k\": 4,\n  \
+         \"closed_loop_requests\": {fleet_total},\n  \
+         \"single_shard_qps\": {single_qps:.1},\n  \
+         \"fleet_k4_qps\": {fleet_qps:.1},\n  \
+         \"fleet_vs_single_qps_ratio_k4\": {ratio:.3},\n  \
+         \"open_conns\": {open_conns},\n  \
+         \"open_target_qps\": {target_qps:.0},\n  \
+         \"open_achieved_qps\": {open_qps:.1},\n  \
+         \"open_p50_ms\": {p50_ms:.3},\n  \
+         \"open_p99_ms\": {p99_ms:.3},\n  \
+         \"open_p999_ms\": {p999_ms:.3}\n}}\n"
+    );
+    let fleet_path = Path::new("results/BENCH_serve_fleet.json");
+    let mut f = std::fs::File::create(fleet_path).expect("fleet bench json");
+    f.write_all(fleet_json.as_bytes()).unwrap();
+    println!("wrote {}", fleet_path.display());
 }

@@ -336,6 +336,44 @@ impl Metrics {
         out
     }
 
+    /// Serving-fleet summary from the `serve.fleet.*` keys the reactor
+    /// and model registry record (routed/rejected requests, in-flight and
+    /// shard-queue-depth p99s, registry hit/eviction accounting,
+    /// connection admission). Empty string when the fleet never served —
+    /// callers skip printing it then.
+    pub fn fleet_report(&self) -> String {
+        let routed = self.counter("serve.fleet.requests");
+        let rejected = self.counter("serve.fleet.rejected");
+        let loads = self.counter("serve.fleet.loads");
+        if routed == 0 && rejected == 0 && loads == 0 {
+            return String::new();
+        }
+        let mut out = format!(
+            "  fleet     {routed} requests routed ({rejected} rejected busy), \
+             inflight p99={} shard queue depth p99={}\n",
+            self.value_quantile("serve.fleet.inflight", 0.99),
+            self.value_quantile("serve.fleet.queue_depth", 0.99),
+        );
+        out.push_str(&format!(
+            "  registry  {} hits {} misses, {loads} loads, {} evictions, \
+             resident p99={} models\n",
+            self.counter("serve.fleet.hits"),
+            self.counter("serve.fleet.misses"),
+            self.counter("serve.fleet.evictions"),
+            self.value_quantile("serve.fleet.resident_models", 0.99),
+        ));
+        let conns = self.counter("serve.fleet.conns");
+        let conns_rejected = self.counter("serve.fleet.conns_rejected");
+        if conns > 0 || conns_rejected > 0 {
+            out.push_str(&format!(
+                "  conns     {conns} accepted, {conns_rejected} rejected at \
+                 capacity, {} closed\n",
+                self.counter("serve.fleet.conns_closed"),
+            ));
+        }
+        out
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         *self.counters.lock().unwrap().get(name).unwrap_or(&0)
     }
@@ -538,6 +576,33 @@ mod tests {
         assert!(r.contains("saved p50=38"), "{r}");
         assert!(r.contains("3 variance rebuilds"), "{r}");
         assert!(r.contains("1 full refreshes"), "{r}");
+    }
+
+    #[test]
+    fn fleet_report_summarizes_fleet_counters() {
+        let m = Metrics::new();
+        assert!(m.fleet_report().is_empty());
+        m.incr("serve.fleet.requests", 120);
+        m.incr("serve.fleet.rejected", 4);
+        m.observe("serve.fleet.inflight", 3);
+        m.observe("serve.fleet.inflight", 7);
+        m.observe("serve.fleet.queue_depth", 2);
+        m.incr("serve.fleet.hits", 110);
+        m.incr("serve.fleet.misses", 10);
+        m.incr("serve.fleet.loads", 10);
+        m.incr("serve.fleet.evictions", 6);
+        m.observe("serve.fleet.resident_models", 4);
+        m.incr("serve.fleet.conns", 40);
+        m.incr("serve.fleet.conns_rejected", 2);
+        m.incr("serve.fleet.conns_closed", 38);
+        let r = m.fleet_report();
+        assert!(r.contains("120 requests routed"), "{r}");
+        assert!(r.contains("4 rejected busy"), "{r}");
+        assert!(r.contains("inflight p99=7"), "{r}");
+        assert!(r.contains("queue depth p99=2"), "{r}");
+        assert!(r.contains("110 hits 10 misses"), "{r}");
+        assert!(r.contains("6 evictions"), "{r}");
+        assert!(r.contains("40 accepted, 2 rejected"), "{r}");
     }
 
     #[test]

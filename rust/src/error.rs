@@ -39,6 +39,10 @@ pub enum Error {
     /// PJRT/XLA runtime failure (or the `xla` feature is not compiled in).
     Xla(String),
 
+    /// Serving-fleet problems (unknown model id, registry budget
+    /// impossible to satisfy, shard/live conflicts, reactor overload).
+    Fleet(String),
+
     /// I/O error.
     Io(std::io::Error),
 
@@ -70,6 +74,7 @@ impl fmt::Display for Error {
             Error::Snapshot(msg) => write!(f, "snapshot error: {msg}"),
             Error::Stream(msg) => write!(f, "stream error: {msg}"),
             Error::Xla(msg) => write!(f, "xla runtime error: {msg}"),
+            Error::Fleet(msg) => write!(f, "fleet error: {msg}"),
             Error::Io(e) => write!(f, "{e}"),
             Error::Config(msg) => write!(f, "config error: {msg}"),
         }

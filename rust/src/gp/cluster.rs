@@ -252,6 +252,92 @@ impl ClusterMtgp {
     }
 }
 
+/// Lloyd k-means over the rows of `points` (n×d): seeded start plus
+/// `iters` refinement sweeps, fully deterministic for a given `seed`.
+/// Returns the k×d centroid matrix. Empty clusters keep their previous
+/// centroid, so the result always has k rows. This is the spatial
+/// partitioning the serving fleet's shard router uses to assign
+/// prediction requests to local experts (the KISS-GP line of work
+/// scales by exactly this combination of structured inference and
+/// local partitioning).
+pub fn spatial_centroids(
+    points: &Matrix,
+    k: usize,
+    iters: usize,
+    seed: u64,
+) -> Result<Matrix> {
+    let (n, d) = (points.rows, points.cols);
+    if k == 0 {
+        return Err(crate::Error::Grid("k-means needs k >= 1".into()));
+    }
+    if n == 0 {
+        return Err(crate::Error::Grid("k-means needs at least one point".into()));
+    }
+    // Seed centroids from sampled rows. Duplicate draws are harmless:
+    // the duplicate cluster stays empty (ties break low) and keeps its
+    // seed point.
+    let mut rng = Rng::new(seed.wrapping_add(0x9E37_79B9_7F4A_7C15));
+    let mut centroids = Matrix::zeros(k, d);
+    for c in 0..k {
+        let src = rng.below(n);
+        for j in 0..d {
+            centroids.set(c, j, points.get(src, j));
+        }
+    }
+    let mut assign = vec![0usize; n];
+    for sweep in 0..iters {
+        let mut changed = false;
+        for (i, a) in assign.iter_mut().enumerate() {
+            let nearest = nearest_centroid(points.row(i), &centroids);
+            if nearest != *a || sweep == 0 {
+                changed = true;
+            }
+            *a = nearest;
+        }
+        if !changed {
+            break;
+        }
+        let mut sums = Matrix::zeros(k, d);
+        let mut counts = vec![0usize; k];
+        for (i, &c) in assign.iter().enumerate() {
+            counts[c] += 1;
+            for j in 0..d {
+                sums.set(c, j, sums.get(c, j) + points.get(i, j));
+            }
+        }
+        for (c, &count) in counts.iter().enumerate() {
+            if count == 0 {
+                continue; // empty cluster: keep the previous centroid
+            }
+            for j in 0..d {
+                centroids.set(c, j, sums.get(c, j) / count as f64);
+            }
+        }
+    }
+    Ok(centroids)
+}
+
+/// Index of the centroid (row of `centroids`) nearest to `x` in squared
+/// Euclidean distance. Ties break toward the lower index, so routing
+/// on the boundary is still deterministic.
+pub fn nearest_centroid(x: &[f64], centroids: &Matrix) -> usize {
+    debug_assert_eq!(x.len(), centroids.cols);
+    let mut best = 0usize;
+    let mut best_d2 = f64::INFINITY;
+    for c in 0..centroids.rows {
+        let mut d2 = 0.0;
+        for (xj, cj) in x.iter().zip(centroids.row(c)) {
+            let diff = xj - cj;
+            d2 += diff * diff;
+        }
+        if d2 < best_d2 {
+            best_d2 = d2;
+            best = c;
+        }
+    }
+    best
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -363,5 +449,57 @@ mod tests {
         // Task 0 (cluster 0): posterior with all its data.
         let post = model.cluster_posterior(0, 9);
         assert!(post[truth[0]] > 0.5, "posterior {post:?}");
+    }
+
+    #[test]
+    fn kmeans_recovers_separated_blobs() {
+        let centers = [[-4.0, -4.0], [4.0, -4.0], [0.0, 5.0]];
+        let n_per = 40;
+        let mut rng = Rng::new(11);
+        let pts = Matrix::from_fn(3 * n_per, 2, |i, j| {
+            centers[i / n_per][j] + 0.3 * rng.normal()
+        });
+        let cent = spatial_centroids(&pts, 3, 25, 0).unwrap();
+        assert_eq!((cent.rows, cent.cols), (3, 2));
+        // Every true center has a recovered centroid within 1.0.
+        for c in &centers {
+            let best = (0..3)
+                .map(|r| {
+                    let row = cent.row(r);
+                    let (dx, dy) = (row[0] - c[0], row[1] - c[1]);
+                    (dx * dx + dy * dy).sqrt()
+                })
+                .fold(f64::INFINITY, f64::min);
+            assert!(best < 1.0, "center {c:?} unmatched (nearest {best})");
+        }
+        // All points of one blob route to the same centroid.
+        for blob in 0..3 {
+            let first = nearest_centroid(pts.row(blob * n_per), &cent);
+            for i in 1..n_per {
+                assert_eq!(
+                    nearest_centroid(pts.row(blob * n_per + i), &cent),
+                    first,
+                    "blob {blob} split"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kmeans_is_deterministic_and_total() {
+        let mut rng = Rng::new(12);
+        let pts = Matrix::from_fn(17, 3, |_, _| rng.uniform_in(-1.0, 1.0));
+        let a = spatial_centroids(&pts, 5, 10, 42).unwrap();
+        let b = spatial_centroids(&pts, 5, 10, 42).unwrap();
+        assert_eq!(a.data, b.data, "same seed must reproduce centroids");
+        // k > n still yields k finite centroids (duplicates allowed) and
+        // nearest_centroid stays in range.
+        let many = spatial_centroids(&pts, 24, 4, 7).unwrap();
+        assert_eq!(many.rows, 24);
+        assert!(many.data.iter().all(|v| v.is_finite()));
+        for i in 0..pts.rows {
+            assert!(nearest_centroid(pts.row(i), &many) < 24);
+        }
+        assert!(spatial_centroids(&pts, 0, 4, 7).is_err());
     }
 }

@@ -10,7 +10,7 @@ pub mod mvm;
 pub mod sgpr;
 
 pub use adam::Adam;
-pub use cluster::{ClusterMtgp, ClusterMtgpConfig};
+pub use cluster::{nearest_centroid, spatial_centroids, ClusterMtgp, ClusterMtgpConfig};
 pub use exact::ExactGp;
 pub use hypers::GpHypers;
 pub use mtgp::{Mtgp, MtgpConfig, MtgpData};

@@ -7,6 +7,7 @@
 //! skip-gp snapshot [options]             train + freeze a model snapshot
 //! skip-gp serve --snapshot F [options]   serve a frozen snapshot over TCP
 //! skip-gp serve --live [options]         serve a LIVE model (accepts observe)
+//! skip-gp serve --fleet K [options]      sharded multi-model serving plane
 //! skip-gp observe [--addr A] [options]   stream observations to a live server
 //! skip-gp artifacts [--dir D]            inspect / smoke-test AOT artifacts
 //! skip-gp list                           list datasets and experiments
@@ -23,8 +24,10 @@ use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant, SolveSpace};
 use skip_gp::grid::GridSpec;
 use skip_gp::harness::{fig2, fig3, fig4, mtgp_speed, table1, table2};
 use skip_gp::runtime::PjrtBackend;
+use skip_gp::coordinator::Metrics;
 use skip_gp::serve::{
-    BatcherConfig, ModelSnapshot, ServeEngine, Server, ServerConfig, SnapshotConfig,
+    BatcherConfig, FleetConfig, FleetServer, ModelRegistry, ModelSnapshot,
+    RegistryConfig, ServeEngine, Server, ServerConfig, ShardedModel, SnapshotConfig,
     VarianceMode,
 };
 use skip_gp::solvers::PrecondSpec;
@@ -146,6 +149,12 @@ USAGE:
                  [--refresh-every N] [--var-drift N] [--error-z F]
                  [--log-capacity N] [--snapshot-out F] [--replay F]
                  [--bind ADDR] [--max-batch N] [--max-wait-ms F]
+  skip-gp serve  --fleet K [--models DIR] [--snapshot F] [--model-id ID]
+                 [--bind ADDR] [--workers N] [--max-inflight N] [--max-conns N]
+                 [--mem-budget-mb N] [--grace-ms N]
+                 [--max-batch N] [--max-wait-ms F]
+                 (K shards per model; add --live for a single-shard live
+                  model. Wire verbs grow `model <id>` prefixes + `models`.)
   skip-gp observe [--addr HOST:PORT] [--file F | --point \"x1 … xd y\"]
                  (default: reads `x1 … xd y` lines from stdin)
   skip-gp artifacts [--dir D]
@@ -372,88 +381,105 @@ fn cmd_snapshot(rest: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Train (or just refresh) a KISS model and put it behind the streaming
+/// layer, honoring the `serve --live` options; `observe` requests ingest
+/// into the returned state online.
+fn build_live_state(opts: &Opts) -> Result<IncrementalState> {
+    let name = opts.get_str("dataset").unwrap_or_else(|| "power".into());
+    let spec = dataset_by_name(&name)
+        .ok_or_else(|| Error::Config(format!("unknown dataset '{name}'")))?;
+    let scale: f64 = opts.get("scale", 0.05)?;
+    let steps: usize = opts.get("steps", 10)?;
+    let grid = parse_grid_spec(&opts.get_str("grid").unwrap_or_else(|| "32".into()))?;
+    let precond =
+        PrecondSpec::parse(&opts.get_str("precond").unwrap_or_else(|| "none".into()))?;
+    let var_rank: usize = opts.get("var-rank", 64)?;
+    let variance = match opts.get_str("var").as_deref() {
+        None | Some("lanczos") => VarianceMode::Lanczos(var_rank),
+        Some("exact") => VarianceMode::Exact,
+        Some("none") => VarianceMode::None,
+        Some(v) => return Err(Error::Config(format!("unknown variance mode '{v}'"))),
+    };
+    let data = generate(spec, scale);
+    let solve_space = parse_solve_space(opts)?;
+    let mut cfg = MvmGpConfig {
+        variant: MvmVariant::Kiss,
+        grid,
+        solve_space,
+        ..Default::default()
+    };
+    cfg.cg.precond = precond;
+    let mut gp = MvmGp::new(
+        data.xtrain.clone(),
+        data.ytrain.clone(),
+        GpHypers::init_for_dim(data.d()),
+        cfg,
+    );
+    if steps > 0 {
+        println!("training on {name} for {steps} steps before going live…");
+        gp.fit(steps, 0.1)?;
+    }
+    let scfg = StreamConfig {
+        refresh_every: opts.get("refresh-every", 256)?,
+        var_drift_budget: opts.get("var-drift", 32)?,
+        error_z: opts.get("error-z", 8.0)?,
+        log_capacity: opts.get("log-capacity", 1024)?,
+        variance,
+        space: solve_space,
+        ..Default::default()
+    };
+    let mut live = IncrementalState::from_mvm(&gp, scfg)?;
+    // Resume a previous live session: replay the pending log of a
+    // checkpoint taken over the same base dataset. (The base model
+    // above does not contain those streamed points, so replay is
+    // exactly once; see the snapshot-format docs.) The replay window
+    // is the last refresh — points a full refresh absorbed before
+    // the checkpoint are not recoverable from the snapshot alone.
+    if let Some(replay) = opts.get_str("replay") {
+        let ckpt = ModelSnapshot::load(&PathBuf::from(&replay))?;
+        let report = live.ingest_observations(&ckpt.pending)?;
+        println!(
+            "replayed {} of {} pending observations from {replay} \
+             ({} duplicates)",
+            report.accepted,
+            ckpt.pending.len(),
+            report.duplicates
+        );
+    }
+    println!(
+        "live model on {name}: n={}, d={}, grid {}, precond {} \
+         (observe verb enabled)",
+        live.n(),
+        live.dim(),
+        gp.cfg.grid.describe(),
+        precond.describe()
+    );
+    Ok(live)
+}
+
 /// Serve a snapshot (frozen) or a live model over the TCP line protocol
 /// until interrupted.
 fn cmd_serve(rest: &[String]) -> Result<()> {
     let opts = Opts::parse(rest)?;
+    // `--fleet K` (bare `--fleet` means 4 shards) switches to the
+    // sharded multi-model serving plane.
+    match opts.get_str("fleet") {
+        None => {}
+        Some(v) if v == "true" => return cmd_serve_fleet(&opts, 4),
+        Some(v) => {
+            let k: usize = v.parse().map_err(|_| {
+                Error::Config(format!("bad value for --fleet: '{v}'"))
+            })?;
+            return cmd_serve_fleet(&opts, k);
+        }
+    }
     let bind = opts.get_str("bind").unwrap_or_else(|| "127.0.0.1:7470".into());
     let max_batch: usize = opts.get("max-batch", 64)?;
     let max_wait_ms: f64 = opts.get("max-wait-ms", 2.0)?;
     let snapshot_out = opts.get_str("snapshot-out").map(PathBuf::from);
 
     let engine = if opts.flag("live") {
-        // Train (or just refresh) a KISS model and put it behind the
-        // streaming layer: `observe` requests ingest into it online.
-        let name = opts.get_str("dataset").unwrap_or_else(|| "power".into());
-        let spec = dataset_by_name(&name)
-            .ok_or_else(|| Error::Config(format!("unknown dataset '{name}'")))?;
-        let scale: f64 = opts.get("scale", 0.05)?;
-        let steps: usize = opts.get("steps", 10)?;
-        let grid = parse_grid_spec(&opts.get_str("grid").unwrap_or_else(|| "32".into()))?;
-        let precond =
-            PrecondSpec::parse(&opts.get_str("precond").unwrap_or_else(|| "none".into()))?;
-        let var_rank: usize = opts.get("var-rank", 64)?;
-        let variance = match opts.get_str("var").as_deref() {
-            None | Some("lanczos") => VarianceMode::Lanczos(var_rank),
-            Some("exact") => VarianceMode::Exact,
-            Some("none") => VarianceMode::None,
-            Some(v) => return Err(Error::Config(format!("unknown variance mode '{v}'"))),
-        };
-        let data = generate(spec, scale);
-        let solve_space = parse_solve_space(&opts)?;
-        let mut cfg = MvmGpConfig {
-            variant: MvmVariant::Kiss,
-            grid,
-            solve_space,
-            ..Default::default()
-        };
-        cfg.cg.precond = precond;
-        let mut gp = MvmGp::new(
-            data.xtrain.clone(),
-            data.ytrain.clone(),
-            GpHypers::init_for_dim(data.d()),
-            cfg,
-        );
-        if steps > 0 {
-            println!("training on {name} for {steps} steps before going live…");
-            gp.fit(steps, 0.1)?;
-        }
-        let scfg = StreamConfig {
-            refresh_every: opts.get("refresh-every", 256)?,
-            var_drift_budget: opts.get("var-drift", 32)?,
-            error_z: opts.get("error-z", 8.0)?,
-            log_capacity: opts.get("log-capacity", 1024)?,
-            variance,
-            space: solve_space,
-            ..Default::default()
-        };
-        let mut live = IncrementalState::from_mvm(&gp, scfg)?;
-        // Resume a previous live session: replay the pending log of a
-        // checkpoint taken over the same base dataset. (The base model
-        // above does not contain those streamed points, so replay is
-        // exactly once; see the snapshot-format docs.) The replay window
-        // is the last refresh — points a full refresh absorbed before
-        // the checkpoint are not recoverable from the snapshot alone.
-        if let Some(replay) = opts.get_str("replay") {
-            let ckpt = ModelSnapshot::load(&PathBuf::from(&replay))?;
-            let report = live.ingest_observations(&ckpt.pending)?;
-            println!(
-                "replayed {} of {} pending observations from {replay} \
-                 ({} duplicates)",
-                report.accepted,
-                ckpt.pending.len(),
-                report.duplicates
-            );
-        }
-        println!(
-            "live model on {name}: n={}, d={}, grid {}, precond {} \
-             (observe verb enabled)",
-            live.n(),
-            live.dim(),
-            gp.cfg.grid.describe(),
-            precond.describe()
-        );
-        Arc::new(ServeEngine::new_live(live)?)
+        Arc::new(ServeEngine::new_live(build_live_state(&opts)?)?)
     } else {
         let path = PathBuf::from(opts.get_str("snapshot").ok_or_else(|| {
             Error::Config("serve requires --snapshot FILE (or --live)".into())
@@ -501,6 +527,120 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
             // not take the live server down — log it and retry on the
             // next tick.
             match engine.save_snapshot(out) {
+                Ok(()) => println!("checkpointed {}", out.display()),
+                Err(e) => eprintln!("checkpoint to {} failed: {e}", out.display()),
+            }
+        }
+    }
+}
+
+/// `serve --fleet K`: the sharded multi-model serving plane — a model
+/// registry (lazy loads from `--models DIR`, LRU eviction under
+/// `--mem-budget-mb`), k replica shards per model, and the bounded
+/// reactor front-end with admission control.
+fn cmd_serve_fleet(opts: &Opts, k: usize) -> Result<()> {
+    let k = k.max(1);
+    let bind = opts.get_str("bind").unwrap_or_else(|| "127.0.0.1:7470".into());
+    let max_batch: usize = opts.get("max-batch", 64)?;
+    let max_wait_ms: f64 = opts.get("max-wait-ms", 2.0)?;
+    let snapshot_out = opts.get_str("snapshot-out").map(PathBuf::from);
+    let batcher = BatcherConfig {
+        max_batch,
+        max_wait: Duration::from_secs_f64(max_wait_ms / 1e3),
+    };
+    let models_dir = opts.get_str("models").map(PathBuf::from);
+    let mem_budget_mb: usize = opts.get("mem-budget-mb", 0)?;
+    let metrics = Arc::new(Metrics::new());
+    let registry = Arc::new(ModelRegistry::new(
+        RegistryConfig {
+            dir: models_dir.clone(),
+            memory_budget: mem_budget_mb << 20,
+            shards: k,
+            batcher,
+        },
+        metrics.clone(),
+    ));
+
+    // Pre-place the explicitly named model (if any); it becomes the
+    // default for requests without a `model <id>` prefix.
+    let mut default_model: Option<String> = None;
+    let mut checkpoint_model: Option<Arc<ShardedModel>> = None;
+    if opts.flag("live") {
+        if k > 1 {
+            return Err(Error::Config(
+                "--live models are single-shard (replicated incremental \
+                 state would need cross-shard write fan-out); use \
+                 --fleet 1 --live"
+                    .into(),
+            ));
+        }
+        let id = opts.get_str("model-id").unwrap_or_else(|| "live".into());
+        let model = ShardedModel::live(&id, build_live_state(opts)?, batcher, metrics.clone())?;
+        // Pinned: evicting a live model would discard un-checkpointed
+        // observations.
+        checkpoint_model = Some(registry.insert(model, true));
+        default_model = Some(id);
+    } else if let Some(path) = opts.get_str("snapshot") {
+        let path = PathBuf::from(path);
+        let id = opts.get_str("model-id").unwrap_or_else(|| {
+            match path.file_stem().map(|s| s.to_string_lossy().into_owned()) {
+                Some(stem) if skip_gp::serve::fleet::registry::valid_id(&stem) => stem,
+                _ => "default".to_string(),
+            }
+        });
+        let snap = ModelSnapshot::load(&path)?;
+        println!(
+            "loaded {} as model '{id}' (d={}, {} grid cells, {k} shards)",
+            path.display(),
+            snap.cache.dim(),
+            snap.cache.total_grid(),
+        );
+        let model = ShardedModel::from_snapshot(&id, snap, k, batcher, metrics.clone())?;
+        registry.insert(model, true);
+        default_model = Some(id);
+    } else if models_dir.is_none() {
+        return Err(Error::Config(
+            "serve --fleet needs a model source: --snapshot FILE, \
+             --models DIR, or --live"
+                .into(),
+        ));
+    }
+    if default_model.is_none() {
+        if let Some(id) = opts.get_str("model-id") {
+            default_model = Some(id); // lazily loaded on first request
+        }
+    }
+
+    let server = FleetServer::start(
+        registry.clone(),
+        FleetConfig {
+            bind,
+            workers: opts.get("workers", 0)?,
+            max_inflight: opts.get("max-inflight", 1024)?,
+            max_conns: opts.get("max-conns", 16384)?,
+            grace: Duration::from_millis(opts.get("grace-ms", 500u64)?),
+            default_model,
+        },
+    )?;
+    println!(
+        "fleet serving on {} ({k} shards/model; verbs: \
+         `[model <id>] predict x1 … xd`, `[model <id>] observe x1 … xd y`, \
+         `models`, `stats`, `quit`)",
+        server.addr()
+    );
+    // Foreground serving loop: periodic fleet stats (and, for a live
+    // model, snapshot checkpoints) until the process is killed.
+    loop {
+        std::thread::sleep(Duration::from_secs(30));
+        println!("stats: {}", server.stats_line());
+        let fleet = metrics.fleet_report();
+        if !fleet.is_empty() {
+            print!("{fleet}");
+        }
+        if let (Some(out), Some(model)) = (&snapshot_out, &checkpoint_model) {
+            // Same policy as the legacy loop: a failed checkpoint must
+            // not take the live server down.
+            match model.engine(0).save_snapshot(out) {
                 Ok(()) => println!("checkpointed {}", out.display()),
                 Err(e) => eprintln!("checkpoint to {} failed: {e}", out.display()),
             }

@@ -30,6 +30,7 @@
 
 use super::server::{ObserveAck, ServeEngine};
 use crate::linalg::Matrix;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -97,6 +98,7 @@ pub struct ObserveResponse {
 pub struct BatchHandle {
     tx: Sender<Request>,
     dim: usize,
+    depth: Arc<AtomicUsize>,
 }
 
 impl BatchHandle {
@@ -113,7 +115,10 @@ impl BatchHandle {
         };
         // A send error means the batcher shut down; the receiver will
         // report it as a disconnect on recv.
-        let _ = self.tx.send(req);
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        if self.tx.send(req).is_err() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+        }
         rx
     }
 
@@ -135,7 +140,10 @@ impl BatchHandle {
             enqueued: Instant::now(),
             resp: tx,
         };
-        let _ = self.tx.send(req);
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        if self.tx.send(req).is_err() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+        }
         rx
     }
 
@@ -145,6 +153,12 @@ impl BatchHandle {
             .recv()
             .expect("request batcher shut down while an observation was in flight")
     }
+
+    /// Requests submitted but not yet drained into a batch — the shard
+    /// queue depth the fleet router load-balances and reports on.
+    pub fn queue_depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
 }
 
 /// The batching worker plus its submission side.
@@ -152,6 +166,7 @@ pub struct RequestBatcher {
     tx: Option<Sender<Request>>,
     worker: Option<JoinHandle<()>>,
     dim: usize,
+    depth: Arc<AtomicUsize>,
 }
 
 impl RequestBatcher {
@@ -160,11 +175,14 @@ impl RequestBatcher {
         assert!(cfg.max_batch >= 1, "max_batch must be at least 1");
         let (tx, rx) = channel::<Request>();
         let dim = engine.dim();
-        let worker = std::thread::spawn(move || Self::run(engine, cfg, rx));
+        let depth = Arc::new(AtomicUsize::new(0));
+        let worker_depth = depth.clone();
+        let worker = std::thread::spawn(move || Self::run(engine, cfg, rx, worker_depth));
         RequestBatcher {
             tx: Some(tx),
             worker: Some(worker),
             dim,
+            depth,
         }
     }
 
@@ -173,6 +191,7 @@ impl RequestBatcher {
         BatchHandle {
             tx: self.tx.as_ref().expect("batcher already shut down").clone(),
             dim: self.dim,
+            depth: self.depth.clone(),
         }
     }
 
@@ -186,7 +205,12 @@ impl RequestBatcher {
         }
     }
 
-    fn run(engine: Arc<ServeEngine>, cfg: BatcherConfig, rx: Receiver<Request>) {
+    fn run(
+        engine: Arc<ServeEngine>,
+        cfg: BatcherConfig,
+        rx: Receiver<Request>,
+        depth: Arc<AtomicUsize>,
+    ) {
         let d = engine.dim();
         loop {
             // Block for the batch's first request.
@@ -214,6 +238,13 @@ impl RequestBatcher {
                     }
                 }
             }
+
+            // The drained requests leave the queue in one step; what is
+            // left behind is the depth the stats loop reports (p99 via
+            // the value histogram).
+            let prev = depth.fetch_sub(batch.len(), Ordering::Relaxed);
+            let waiting = prev.saturating_sub(batch.len());
+            engine.metrics.observe("serve.queue_depth", waiting as u64);
 
             // Split the block: observations are folded into the model
             // first so the block's predictions see them.

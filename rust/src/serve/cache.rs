@@ -103,6 +103,14 @@ impl TermCache {
         let strides = tensor_strides(&dims);
         Ok(TermCache { coeff, axes, mean, var_r, strides })
     }
+
+    /// Approximate resident size of this term in bytes (the f64 payload
+    /// buffers; struct overhead is negligible next to them). The fleet
+    /// registry charges models against its memory budget with this.
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<f64>()
+            * (self.mean.len() + self.var_r.rows * self.var_r.cols)
+    }
 }
 
 /// Grid-side predictive cache: everything a prediction needs, with no
@@ -185,6 +193,12 @@ impl PredictCache {
     /// True iff a variance cache was built.
     pub fn has_variance(&self) -> bool {
         self.var_rank() > 0
+    }
+
+    /// Approximate resident size of the cache in bytes (sum of the
+    /// per-term payload buffers) — see [`TermCache::approx_bytes`].
+    pub fn approx_bytes(&self) -> usize {
+        self.terms.iter().map(TermCache::approx_bytes).sum()
     }
 
     /// Predictive mean at one point: one sparse stencil dot per term.

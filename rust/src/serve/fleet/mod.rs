@@ -1,0 +1,24 @@
+//! Sharded multi-model serving plane (`skip-gp serve --fleet`).
+//!
+//! Three layers, each independently testable:
+//!
+//! - [`router`] — one logical model as k replica shards, each with a
+//!   private engine + batcher; spatial (local-expert) query placement.
+//! - [`registry`] — many models resident at once, lazily loaded from a
+//!   snapshot directory, LRU-evicted under a memory budget; live and
+//!   frozen models coexist (live ones pinned).
+//! - [`reactor`] — a bounded worker pool with a readiness-style
+//!   multiplexing loop, admission control (`busy` backpressure), and
+//!   two-phase graceful shutdown, replacing thread-per-connection.
+//!
+//! Replica shards hold bitwise-identical caches, so sharding changes
+//! *where* a query is computed but never *what* it returns — the
+//! equivalence tests assert bitwise-equal predictions at k ∈ {1, 2, 8}.
+
+pub mod reactor;
+pub mod registry;
+pub mod router;
+
+pub use reactor::{FleetConfig, FleetServer};
+pub use registry::{ModelRegistry, RegistryConfig};
+pub use router::{RoutePolicy, ShardedModel};

@@ -1,0 +1,725 @@
+//! Readiness-loop front-end: bounded workers, admission control,
+//! graceful drain.
+//!
+//! The legacy [`Server`](crate::serve::server::Server) spawns one thread
+//! per connection — fine for a handful of clients, fatal for 10⁴ (tens of
+//! gigabytes of stacks, scheduler collapse). The fleet reactor replaces
+//! it with a fixed pool: a **blocking accept loop** hands sockets
+//! round-robin to N **worker threads**, each multiplexing its share of
+//! connections with nonblocking reads/writes. Thread count is set by
+//! [`FleetConfig::workers`], not by client count.
+//!
+//! The crate has no dependencies (no epoll binding), so readiness is
+//! polled: a worker sweeps its connections and, when a full sweep makes
+//! no progress, parks briefly ([`std::thread::park_timeout`]) instead of
+//! spinning; the accept loop unparks it when new work arrives. That
+//! trades a sub-millisecond idle-wakeup for zero unsafe code and zero
+//! platform surface.
+//!
+//! **Admission control**: at most [`FleetConfig::max_inflight`] requests
+//! may be queued across the fleet. Past that, requests are answered with
+//! a `busy …` line immediately — clients get backpressure they can see,
+//! instead of latency they can't explain. Connection count is likewise
+//! capped ([`FleetConfig::max_conns`]).
+//!
+//! **Shutdown** is two-phase: *drain* (stop reading, finish every
+//! admitted request, flush replies, bounded by [`FleetConfig::grace`]),
+//! then *hard stop* (close whatever is left, join every thread). No
+//! connection handler can outlive the server — the regression tests hold
+//! open idle connections through a shutdown to prove it.
+//!
+//! The wire protocol is the legacy one plus multi-model addressing:
+//!
+//! ```text
+//! → [model <id>] predict <x1> … <xd>      (per-request model choice)
+//! → [model <id>] observe <x1> … <xd> <y>
+//! → [model <id>] dim
+//! → models                                 ← ok <id> <id> …
+//! → stats                                  ← ok fleet models=… | <id>: …
+//! ← busy <limit> requests in flight, retry later
+//! ```
+//!
+//! Responses come back **in request order per connection** (pipelining
+//! is safe); different connections never wait on each other's batches.
+
+use super::registry::ModelRegistry;
+use super::router::ShardedModel;
+use crate::coordinator::Metrics;
+use crate::serve::batcher::{ObserveResponse, PredictResponse};
+use crate::serve::server::{parse_floats, wake_addr};
+use crate::{Error, Result};
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Reactor policy.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Bind address (port 0 picks a free port).
+    pub bind: String,
+    /// Worker threads multiplexing connections (0 = derive from
+    /// available parallelism, clamped to 2..=16).
+    pub workers: usize,
+    /// Most requests admitted fleet-wide at once; excess get `busy`
+    /// (0 = unlimited).
+    pub max_inflight: usize,
+    /// Most connections held open at once; excess are told `busy` and
+    /// closed (0 = unlimited).
+    pub max_conns: usize,
+    /// How long shutdown waits for in-flight work to drain before
+    /// force-closing.
+    pub grace: Duration,
+    /// Model served when a request has no `model <id>` prefix.
+    pub default_model: Option<String>,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            bind: "127.0.0.1:7471".to_string(),
+            workers: 0,
+            max_inflight: 1024,
+            max_conns: 16384,
+            grace: Duration::from_millis(500),
+            default_model: None,
+        }
+    }
+}
+
+/// State shared by the accept loop and every worker.
+struct Shared {
+    registry: Arc<ModelRegistry>,
+    metrics: Arc<Metrics>,
+    inflight: AtomicUsize,
+    max_inflight: usize,
+    max_conns: usize,
+    draining: AtomicBool,
+    shutdown: AtomicBool,
+    conns: AtomicUsize,
+    default_model: Option<String>,
+}
+
+impl Shared {
+    /// Try to claim an in-flight slot; false means the caller must send
+    /// the `busy` line instead of submitting.
+    fn admit(&self) -> bool {
+        if self.max_inflight == 0 {
+            let now = self.inflight.fetch_add(1, Ordering::Relaxed) + 1;
+            self.metrics.observe("serve.fleet.inflight", now as u64);
+            self.metrics.incr("serve.fleet.requests", 1);
+            return true;
+        }
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.max_inflight {
+                return false;
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => {
+                    self.metrics.observe("serve.fleet.inflight", (cur + 1) as u64);
+                    self.metrics.incr("serve.fleet.requests", 1);
+                    return true;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Account a rejection and produce the wire `busy` line.
+    fn reject(&self) -> String {
+        self.metrics.incr("serve.fleet.rejected", 1);
+        format!("busy {} requests in flight, retry later", self.max_inflight)
+    }
+
+    fn dec_inflight(&self) {
+        self.inflight.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Resolve the model a request addresses (explicit `model <id>`
+    /// prefix, else the configured default). Errors are wire messages.
+    fn resolve(
+        &self,
+        explicit: Option<&str>,
+    ) -> std::result::Result<Arc<ShardedModel>, String> {
+        let id = match explicit {
+            Some(id) => id,
+            None => match &self.default_model {
+                Some(id) => id.as_str(),
+                None => {
+                    return Err("no model specified — use: model <id> <verb> …".to_string())
+                }
+            },
+        };
+        self.registry.get(id).map_err(|e| e.to_string())
+    }
+
+    /// The fleet `stats` line: reactor counters plus one fragment per
+    /// resident model.
+    fn stats_line(&self) -> String {
+        let mut line = format!(
+            "fleet models={} conns={} inflight={} routed={} rejected={}",
+            self.registry.len(),
+            self.conns.load(Ordering::Relaxed),
+            self.inflight.load(Ordering::Relaxed),
+            self.metrics.counter("serve.fleet.requests"),
+            self.metrics.counter("serve.fleet.rejected"),
+        );
+        for frag in self.registry.stats_fragments() {
+            line.push_str(" | ");
+            line.push_str(&frag);
+        }
+        line
+    }
+}
+
+/// Hard cap on a single request line; past it the connection is closed
+/// (a client streaming garbage must not grow our buffers unboundedly).
+const MAX_LINE: usize = 64 * 1024;
+
+/// A response slot in a connection's FIFO. Replies go out strictly in
+/// request order even though shards complete out of order.
+enum Pending {
+    /// Already-formatted line (errors, ping, stats, busy, …).
+    Ready(String),
+    /// A prediction in flight on some shard.
+    Predict(Receiver<PredictResponse>),
+    /// An observation in flight on shard 0.
+    Observe(Receiver<ObserveResponse>),
+}
+
+/// Per-connection state owned by exactly one worker (no locking).
+struct Conn {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    pending: VecDeque<Pending>,
+    closing: bool,
+}
+
+impl Conn {
+    fn push_ready(&mut self, line: String) {
+        self.pending.push_back(Pending::Ready(line));
+    }
+}
+
+enum Status {
+    /// Did something; sweep again soon.
+    Progress,
+    /// Nothing to do right now.
+    Idle,
+    /// Finished (client gone, `quit`, fatal error, or fully drained).
+    Done,
+}
+
+fn format_predict(r: &PredictResponse) -> String {
+    format!("ok {} {} {:.1} {}", r.mean, r.var, r.latency.as_secs_f64() * 1e6, r.batch_size)
+}
+
+fn format_observe(r: &ObserveResponse) -> String {
+    match &r.result {
+        Err(msg) => format!("err {msg}"),
+        Ok(ack) if ack.duplicate => format!(
+            "ok dup {} {} {:.1} {}",
+            ack.n,
+            ack.pending,
+            r.latency.as_secs_f64() * 1e6,
+            r.batch_size
+        ),
+        Ok(ack) => format!(
+            "ok {} {} {} {:.1} {}",
+            ack.seq,
+            ack.n,
+            ack.pending,
+            r.latency.as_secs_f64() * 1e6,
+            r.batch_size
+        ),
+    }
+}
+
+/// Parse one request line and either queue a `Ready` reply or submit to
+/// a shard (after passing admission control).
+fn handle_line(line: &str, c: &mut Conn, shared: &Shared) {
+    let trimmed = line.trim();
+    if trimmed.is_empty() {
+        return;
+    }
+    // Optional multi-model prefix: `model <id> <verb> …`.
+    let (explicit, rest) = match trimmed.strip_prefix("model ") {
+        Some(body) => {
+            let body = body.trim_start();
+            match body.split_once(|ch: char| ch.is_whitespace()) {
+                Some((id, tail)) => {
+                    (Some(id.to_string()), tail.trim_start().to_string())
+                }
+                None => {
+                    c.push_ready("err usage: model <id> <verb> …".to_string());
+                    return;
+                }
+            }
+        }
+        None => (None, trimmed.to_string()),
+    };
+    let verb = rest.as_str();
+    match verb {
+        "quit" => c.closing = true,
+        "ping" => c.push_ready("ok pong".to_string()),
+        "models" => {
+            let ids = shared.registry.available();
+            if ids.is_empty() {
+                c.push_ready("ok".to_string());
+            } else {
+                c.push_ready(format!("ok {}", ids.join(" ")));
+            }
+        }
+        "stats" => c.push_ready(format!("ok {}", shared.stats_line())),
+        "dim" => match shared.resolve(explicit.as_deref()) {
+            Ok(m) => c.push_ready(format!("ok {}", m.dim())),
+            Err(msg) => c.push_ready(format!("err {msg}")),
+        },
+        _ => {
+            if let Some(body) = verb.strip_prefix("observe") {
+                let model = match shared.resolve(explicit.as_deref()) {
+                    Ok(m) => m,
+                    Err(msg) => {
+                        c.push_ready(format!("err {msg}"));
+                        return;
+                    }
+                };
+                let d = model.dim();
+                match parse_floats(body, d + 1) {
+                    Err(msg) => c.push_ready(format!("err {msg}")),
+                    Ok(vals) if vals.iter().any(|v| !v.is_finite()) => {
+                        c.push_ready("err non-finite observation".to_string());
+                    }
+                    Ok(vals) => {
+                        if !shared.admit() {
+                            c.push_ready(shared.reject());
+                            return;
+                        }
+                        let rx = model.submit_observe(&vals[..d], vals[d]);
+                        c.pending.push_back(Pending::Observe(rx));
+                    }
+                }
+                return;
+            }
+            let body = verb.strip_prefix("predict").unwrap_or(verb);
+            let model = match shared.resolve(explicit.as_deref()) {
+                Ok(m) => m,
+                Err(msg) => {
+                    c.push_ready(format!("err {msg}"));
+                    return;
+                }
+            };
+            match parse_floats(body, model.dim()) {
+                Err(msg) => c.push_ready(format!("err {msg}")),
+                Ok(xs) => {
+                    if !shared.admit() {
+                        c.push_ready(shared.reject());
+                        return;
+                    }
+                    let rx = model.submit_predict(&xs);
+                    c.pending.push_back(Pending::Predict(rx));
+                }
+            }
+        }
+    }
+}
+
+/// One nonblocking sweep over a connection: harvest completed responses
+/// (strictly FIFO), flush output, read and parse new requests.
+fn service_conn(c: &mut Conn, shared: &Shared, draining: bool) -> Status {
+    let mut progress = false;
+
+    // 1. Harvest whatever is ready at the FIFO head.
+    enum Step {
+        Stop,
+        Emit { line: String, dec: bool },
+    }
+    loop {
+        let step = match c.pending.front_mut() {
+            None => Step::Stop,
+            Some(Pending::Ready(s)) => Step::Emit { line: std::mem::take(s), dec: false },
+            Some(Pending::Predict(rx)) => match rx.try_recv() {
+                Ok(r) => Step::Emit { line: format_predict(&r), dec: true },
+                Err(TryRecvError::Empty) => Step::Stop,
+                Err(TryRecvError::Disconnected) => Step::Emit {
+                    line: "err shard unavailable".to_string(),
+                    dec: true,
+                },
+            },
+            Some(Pending::Observe(rx)) => match rx.try_recv() {
+                Ok(r) => Step::Emit { line: format_observe(&r), dec: true },
+                Err(TryRecvError::Empty) => Step::Stop,
+                Err(TryRecvError::Disconnected) => Step::Emit {
+                    line: "err shard unavailable".to_string(),
+                    dec: true,
+                },
+            },
+        };
+        match step {
+            Step::Stop => break,
+            Step::Emit { line, dec } => {
+                c.pending.pop_front();
+                if dec {
+                    shared.dec_inflight();
+                }
+                c.outbuf.extend_from_slice(line.as_bytes());
+                c.outbuf.push(b'\n');
+                progress = true;
+            }
+        }
+    }
+
+    // 2. Flush buffered replies.
+    while !c.outbuf.is_empty() {
+        match c.stream.write(&c.outbuf) {
+            Ok(0) => return Status::Done,
+            Ok(n) => {
+                c.outbuf.drain(..n);
+                progress = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => return Status::Done,
+        }
+    }
+
+    // 3. Read new requests — unless draining (shutdown stops *reading*,
+    // never answering) or the client already said quit.
+    if !draining && !c.closing {
+        let mut buf = [0u8; 4096];
+        match c.stream.read(&mut buf) {
+            Ok(0) => return Status::Done, // EOF
+            Ok(n) => {
+                c.inbuf.extend_from_slice(&buf[..n]);
+                progress = true;
+                while let Some(pos) = c.inbuf.iter().position(|&b| b == b'\n') {
+                    let raw: Vec<u8> = c.inbuf.drain(..=pos).collect();
+                    let line = String::from_utf8_lossy(&raw[..raw.len() - 1]).into_owned();
+                    handle_line(&line, c, shared);
+                    if c.closing {
+                        break;
+                    }
+                }
+                if c.inbuf.len() > MAX_LINE {
+                    c.push_ready(format!("err request line exceeds {MAX_LINE} bytes"));
+                    c.closing = true;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {}
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => return Status::Done,
+        }
+    }
+
+    if (c.closing || draining) && c.pending.is_empty() && c.outbuf.is_empty() {
+        return Status::Done;
+    }
+    if progress {
+        Status::Progress
+    } else {
+        Status::Idle
+    }
+}
+
+/// Release a connection: free its admission slots (responses that will
+/// never be delivered), close the socket, account it.
+fn close_conn(c: &mut Conn, shared: &Shared) {
+    let abandoned = c
+        .pending
+        .iter()
+        .filter(|p| !matches!(p, Pending::Ready(_)))
+        .count();
+    for _ in 0..abandoned {
+        shared.dec_inflight();
+    }
+    c.pending.clear();
+    let _ = c.stream.shutdown(Shutdown::Both);
+    shared.conns.fetch_sub(1, Ordering::Relaxed);
+    shared.metrics.incr("serve.fleet.conns_closed", 1);
+}
+
+/// Hand-off mailbox from the accept loop to one worker.
+type Inbox = Arc<Mutex<Vec<TcpStream>>>;
+
+fn worker_loop(shared: Arc<Shared>, inbox: Inbox) {
+    let mut conns: Vec<Conn> = Vec::new();
+    loop {
+        // Adopt connections the accept loop handed over.
+        for stream in inbox.lock().unwrap().drain(..) {
+            if stream.set_nonblocking(true).is_err() {
+                shared.conns.fetch_sub(1, Ordering::Relaxed);
+                continue;
+            }
+            stream.set_nodelay(true).ok();
+            conns.push(Conn {
+                stream,
+                inbuf: Vec::new(),
+                outbuf: Vec::new(),
+                pending: VecDeque::new(),
+                closing: false,
+            });
+        }
+
+        if shared.shutdown.load(Ordering::Relaxed) {
+            // Hard stop: the accept loop was joined before this flag was
+            // set, so the inbox cannot refill behind us.
+            for mut c in conns.drain(..) {
+                close_conn(&mut c, &shared);
+            }
+            for stream in inbox.lock().unwrap().drain(..) {
+                let mut c = Conn {
+                    stream,
+                    inbuf: Vec::new(),
+                    outbuf: Vec::new(),
+                    pending: VecDeque::new(),
+                    closing: false,
+                };
+                close_conn(&mut c, &shared);
+            }
+            return;
+        }
+
+        let draining = shared.draining.load(Ordering::Relaxed);
+        let mut progress = false;
+        let mut i = 0;
+        while i < conns.len() {
+            match service_conn(&mut conns[i], &shared, draining) {
+                Status::Done => {
+                    let mut c = conns.swap_remove(i);
+                    close_conn(&mut c, &shared);
+                    progress = true;
+                }
+                Status::Progress => {
+                    progress = true;
+                    i += 1;
+                }
+                Status::Idle => i += 1,
+            }
+        }
+        if !progress {
+            // Nothing ready anywhere: park briefly. The accept loop (new
+            // connection) and shutdown both unpark us; batch completions
+            // are picked up on the next sweep.
+            std::thread::park_timeout(Duration::from_micros(500));
+        }
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    shared: Arc<Shared>,
+    inboxes: Vec<Inbox>,
+    workers: Vec<std::thread::Thread>,
+) {
+    let mut rr = 0usize;
+    loop {
+        match listener.accept() {
+            Ok((mut stream, _)) => {
+                if shared.draining.load(Ordering::Relaxed)
+                    || shared.shutdown.load(Ordering::Relaxed)
+                {
+                    // The shutdown wake-connection (or a late client).
+                    break;
+                }
+                if shared.max_conns > 0
+                    && shared.conns.load(Ordering::Relaxed) >= shared.max_conns
+                {
+                    let _ = stream.write_all(b"busy connection limit reached\n");
+                    let _ = stream.shutdown(Shutdown::Both);
+                    shared.metrics.incr("serve.fleet.conns_rejected", 1);
+                    continue;
+                }
+                shared.conns.fetch_add(1, Ordering::Relaxed);
+                shared.metrics.incr("serve.fleet.conns", 1);
+                inboxes[rr % inboxes.len()].lock().unwrap().push(stream);
+                workers[rr % workers.len()].unpark();
+                rr = rr.wrapping_add(1);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+}
+
+/// A running fleet endpoint: one accept thread, N workers, a registry.
+pub struct FleetServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    registry: Arc<ModelRegistry>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    worker_threads: Vec<std::thread::Thread>,
+    grace: Duration,
+}
+
+impl FleetServer {
+    /// Bind and start the reactor over `registry`.
+    pub fn start(registry: Arc<ModelRegistry>, cfg: FleetConfig) -> Result<FleetServer> {
+        let listener = TcpListener::bind(&cfg.bind)?;
+        let addr = listener
+            .local_addr()
+            .map_err(|e| Error::Config(format!("no local addr: {e}")))?;
+        let w = if cfg.workers > 0 {
+            cfg.workers
+        } else {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+                .clamp(2, 16)
+        };
+        let shared = Arc::new(Shared {
+            registry: registry.clone(),
+            metrics: registry.metrics().clone(),
+            inflight: AtomicUsize::new(0),
+            max_inflight: cfg.max_inflight,
+            max_conns: cfg.max_conns,
+            draining: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+            default_model: cfg.default_model.clone(),
+        });
+        let mut workers = Vec::with_capacity(w);
+        let mut worker_threads = Vec::with_capacity(w);
+        let mut inboxes = Vec::with_capacity(w);
+        for _ in 0..w {
+            let inbox: Inbox = Arc::new(Mutex::new(Vec::new()));
+            let s = shared.clone();
+            let ib = inbox.clone();
+            let h = std::thread::spawn(move || worker_loop(s, ib));
+            worker_threads.push(h.thread().clone());
+            workers.push(h);
+            inboxes.push(inbox);
+        }
+        let s = shared.clone();
+        let wt = worker_threads.clone();
+        let accept = std::thread::spawn(move || accept_loop(listener, s, inboxes, wt));
+        Ok(FleetServer {
+            addr,
+            shared,
+            registry,
+            accept: Some(accept),
+            workers,
+            worker_threads,
+            grace: cfg.grace,
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The registry this fleet serves from.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Connections currently open.
+    pub fn conn_count(&self) -> usize {
+        self.shared.conns.load(Ordering::Relaxed)
+    }
+
+    /// The fleet `stats` line (what the wire `stats` verb returns).
+    pub fn stats_line(&self) -> String {
+        self.shared.stats_line()
+    }
+
+    fn stop_impl(&mut self) {
+        if self.accept.is_none() && self.workers.is_empty() {
+            return;
+        }
+        // Phase 1 — drain: stop reading new requests, keep answering the
+        // admitted ones. Wake the blocking accept with a throwaway
+        // connection so it observes the flag and exits.
+        self.shared.draining.store(true, Ordering::Relaxed);
+        let _ = TcpStream::connect_timeout(&wake_addr(self.addr), Duration::from_millis(500));
+        if let Some(a) = self.accept.take() {
+            let _ = a.join();
+        }
+        let deadline = Instant::now() + self.grace;
+        while self.shared.conns.load(Ordering::Relaxed) > 0 && Instant::now() < deadline {
+            for t in &self.worker_threads {
+                t.unpark();
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        // Phase 2 — hard stop: workers close whatever outlived the grace
+        // period, then exit; join them all.
+        self.shared.shutdown.store(true, Ordering::Relaxed);
+        for t in &self.worker_threads {
+            t.unpark();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        self.worker_threads.clear();
+    }
+
+    /// Drain in-flight work (bounded by the grace period), close every
+    /// connection, and join every thread.
+    pub fn shutdown(mut self) {
+        self.stop_impl();
+    }
+}
+
+impl Drop for FleetServer {
+    fn drop(&mut self) {
+        self.stop_impl();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::RegistryConfig;
+    use super::*;
+
+    fn test_shared(max_inflight: usize) -> Shared {
+        let metrics = Arc::new(Metrics::new());
+        let registry = Arc::new(ModelRegistry::new(RegistryConfig::default(), metrics.clone()));
+        Shared {
+            registry,
+            metrics,
+            inflight: AtomicUsize::new(0),
+            max_inflight,
+            max_conns: 0,
+            draining: AtomicBool::new(false),
+            shutdown: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+            default_model: None,
+        }
+    }
+
+    #[test]
+    fn admission_control_caps_inflight() {
+        let shared = test_shared(2);
+        assert!(shared.admit());
+        assert!(shared.admit());
+        assert!(!shared.admit());
+        let busy = shared.reject();
+        assert!(busy.starts_with("busy 2 "), "{busy}");
+        shared.dec_inflight();
+        assert!(shared.admit());
+        assert_eq!(shared.metrics.counter("serve.fleet.rejected"), 1);
+        assert_eq!(shared.metrics.counter("serve.fleet.requests"), 3);
+    }
+
+    #[test]
+    fn unaddressed_request_without_default_is_an_error() {
+        let shared = test_shared(0);
+        let err = shared.resolve(None).unwrap_err();
+        assert!(err.contains("no model specified"), "{err}");
+        let err = shared.resolve(Some("ghost")).unwrap_err();
+        assert!(err.contains("unknown model"), "{err}");
+    }
+}

@@ -1,0 +1,295 @@
+//! Model registry: many models hot, LRU-evicted under a memory budget.
+//!
+//! The registry keys [`ShardedModel`]s by id. A `get` on a resident
+//! model is a map lookup plus an LRU-tick bump; a miss lazily loads
+//! `<dir>/<id>.snap` from the snapshot directory, builds the sharded
+//! model, and evicts least-recently-used non-pinned entries until the
+//! configured memory budget (measured with
+//! [`ModelSnapshot::approx_bytes`] times the shard count) is satisfied
+//! again. Live (observation-accepting) models are inserted **pinned**:
+//! evicting one would discard un-checkpointed observations, so the LRU
+//! never touches them — live and frozen engines coexist in one registry.
+//!
+//! Locking is deliberately coarse (one mutex around the map): lookups
+//! are nanoseconds, loads are rare, and a finer scheme would buy nothing
+//! until model counts reach the tens of thousands. Eviction drops the
+//! registry's `Arc`; the model's shard batchers join once the last
+//! in-flight request releases its handle, so eviction never truncates
+//! queued work.
+//!
+//! Registry traffic records into the shared fleet metrics:
+//! `serve.fleet.{hits,misses,loads,evictions}` counters and the
+//! `serve.fleet.resident_models` gauge histogram
+//! ([`Metrics::fleet_report`] renders them).
+//!
+//! [`Metrics::fleet_report`]: crate::coordinator::Metrics::fleet_report
+
+use super::router::ShardedModel;
+use crate::coordinator::Metrics;
+use crate::serve::batcher::BatcherConfig;
+use crate::serve::snapshot::ModelSnapshot;
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Registry policy.
+#[derive(Clone, Debug)]
+pub struct RegistryConfig {
+    /// Snapshot directory for lazy loads (`<dir>/<id>.snap`); `None`
+    /// disables loading — only explicitly-inserted models resolve.
+    pub dir: Option<PathBuf>,
+    /// Approximate resident-bytes budget across models (0 = unlimited).
+    /// A single model larger than the budget still loads — the registry
+    /// overshoots rather than refusing to serve.
+    pub memory_budget: usize,
+    /// Shards per lazily-loaded frozen model.
+    pub shards: usize,
+    /// Batcher policy for every shard.
+    pub batcher: BatcherConfig,
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        RegistryConfig {
+            dir: None,
+            memory_budget: 0,
+            shards: 1,
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+struct Entry {
+    model: Arc<ShardedModel>,
+    last_used: u64,
+    pinned: bool,
+}
+
+struct Inner {
+    models: HashMap<String, Entry>,
+    tick: u64,
+    resident_bytes: usize,
+}
+
+/// Thread-safe model registry (shared by every reactor worker).
+pub struct ModelRegistry {
+    cfg: RegistryConfig,
+    metrics: Arc<Metrics>,
+    inner: Mutex<Inner>,
+}
+
+/// Model ids double as file stems, so they are locked down hard enough
+/// that no id can escape the snapshot directory.
+pub fn valid_id(id: &str) -> bool {
+    !id.is_empty()
+        && id.len() <= 64
+        && id
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+}
+
+impl ModelRegistry {
+    /// An empty registry recording into `metrics`.
+    pub fn new(cfg: RegistryConfig, metrics: Arc<Metrics>) -> Self {
+        ModelRegistry {
+            cfg,
+            metrics,
+            inner: Mutex::new(Inner {
+                models: HashMap::new(),
+                tick: 0,
+                resident_bytes: 0,
+            }),
+        }
+    }
+
+    /// The shared fleet metrics.
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Insert a pre-built model (replacing any same-id entry). `pinned`
+    /// exempts it from LRU eviction — live models must pass `true`.
+    pub fn insert(&self, model: ShardedModel, pinned: bool) -> Arc<ShardedModel> {
+        let id = model.id().to_string();
+        let arc = Arc::new(model);
+        let bytes = arc.approx_bytes();
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) = inner.models.insert(
+            id.clone(),
+            Entry { model: arc.clone(), last_used: tick, pinned },
+        ) {
+            inner.resident_bytes = inner.resident_bytes.saturating_sub(old.model.approx_bytes());
+        }
+        inner.resident_bytes += bytes;
+        self.evict_over_budget(&mut inner, &id);
+        self.metrics
+            .observe("serve.fleet.resident_models", inner.models.len() as u64);
+        arc
+    }
+
+    /// Resolve `id`: resident models return immediately (bumping their
+    /// LRU tick); misses load `<dir>/<id>.snap`, shard it, and evict
+    /// down to the memory budget.
+    pub fn get(&self, id: &str) -> Result<Arc<ShardedModel>> {
+        if !valid_id(id) {
+            return Err(Error::Fleet(format!(
+                "invalid model id '{id}' (allowed: [A-Za-z0-9_-], \
+                 at most 64 chars)"
+            )));
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.models.get_mut(id) {
+            e.last_used = tick;
+            self.metrics.incr("serve.fleet.hits", 1);
+            return Ok(e.model.clone());
+        }
+        self.metrics.incr("serve.fleet.misses", 1);
+        let dir = self.cfg.dir.as_ref().ok_or_else(|| {
+            Error::Fleet(format!(
+                "unknown model '{id}' (and no --models directory to load from)"
+            ))
+        })?;
+        // The load runs under the registry lock: a burst of misses for
+        // the same id must not load it once per request.
+        let path = dir.join(format!("{id}.snap"));
+        if !path.exists() {
+            return Err(Error::Fleet(format!(
+                "unknown model '{id}' (no {id}.snap in the model directory)"
+            )));
+        }
+        let snap = ModelSnapshot::load(&path)
+            .map_err(|e| Error::Fleet(format!("model '{id}': {e}")))?;
+        let model = Arc::new(ShardedModel::from_snapshot(
+            id,
+            snap,
+            self.cfg.shards.max(1),
+            self.cfg.batcher,
+            self.metrics.clone(),
+        )?);
+        self.metrics.incr("serve.fleet.loads", 1);
+        let bytes = model.approx_bytes();
+        inner.models.insert(
+            id.to_string(),
+            Entry { model: model.clone(), last_used: tick, pinned: false },
+        );
+        inner.resident_bytes += bytes;
+        self.evict_over_budget(&mut inner, id);
+        self.metrics
+            .observe("serve.fleet.resident_models", inner.models.len() as u64);
+        Ok(model)
+    }
+
+    /// Evict LRU non-pinned entries (never `keep`) until the budget
+    /// holds. With only pinned entries (or only `keep`) left, the
+    /// registry overshoots — refusing to serve would be worse.
+    fn evict_over_budget(&self, inner: &mut Inner, keep: &str) {
+        if self.cfg.memory_budget == 0 {
+            return;
+        }
+        while inner.resident_bytes > self.cfg.memory_budget {
+            let victim = inner
+                .models
+                .iter()
+                .filter(|(mid, e)| !e.pinned && mid.as_str() != keep)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(mid, _)| mid.clone());
+            let Some(mid) = victim else { break };
+            if let Some(e) = inner.models.remove(&mid) {
+                inner.resident_bytes = inner.resident_bytes.saturating_sub(e.model.approx_bytes());
+            }
+            self.metrics.incr("serve.fleet.evictions", 1);
+        }
+    }
+
+    /// Number of resident models.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().models.len()
+    }
+
+    /// True iff nothing is resident.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Approximate resident bytes across models.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().resident_bytes
+    }
+
+    /// True iff `id` is resident right now (no LRU bump, no load).
+    pub fn contains(&self, id: &str) -> bool {
+        self.inner.lock().unwrap().models.contains_key(id)
+    }
+
+    /// Sorted resident ids.
+    pub fn ids(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        let mut v: Vec<String> = inner.models.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Sorted serveable ids: resident models plus every `<id>.snap` in
+    /// the snapshot directory (the wire-protocol `models` verb).
+    pub fn available(&self) -> Vec<String> {
+        let mut ids = self.ids();
+        if let Some(dir) = &self.cfg.dir {
+            if let Ok(entries) = std::fs::read_dir(dir) {
+                for e in entries.flatten() {
+                    let name = e.file_name();
+                    let name = name.to_string_lossy();
+                    if let Some(stem) = name.strip_suffix(".snap") {
+                        if valid_id(stem) {
+                            ids.push(stem.to_string());
+                        }
+                    }
+                }
+            }
+        }
+        ids.sort();
+        ids.dedup();
+        ids
+    }
+
+    /// One `"<id>: <model stats>"` fragment per resident model, sorted
+    /// by id (no LRU bumps — stats must not distort eviction order).
+    pub fn stats_fragments(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        let mut v: Vec<String> = inner
+            .models
+            .iter()
+            .map(|(id, e)| format!("{id}: {}", e.model.stats_line()))
+            .collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_validation_blocks_path_escapes() {
+        assert!(valid_id("model-a_1"));
+        assert!(!valid_id(""));
+        assert!(!valid_id("../etc/passwd"));
+        assert!(!valid_id("a/b"));
+        assert!(!valid_id("a.snap"));
+        assert!(!valid_id(&"x".repeat(65)));
+    }
+
+    #[test]
+    fn unknown_model_without_dir_is_typed_error() {
+        let reg = ModelRegistry::new(RegistryConfig::default(), Arc::new(Metrics::new()));
+        let err = reg.get("nope").unwrap_err();
+        assert!(err.to_string().contains("unknown model"), "{err}");
+        let err = reg.get("../sneaky").unwrap_err();
+        assert!(err.to_string().contains("invalid model id"), "{err}");
+    }
+}

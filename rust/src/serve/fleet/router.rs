@@ -1,0 +1,331 @@
+//! Shard router: one logical model served by k independent engines.
+//!
+//! Each shard is a full replica of the same [`ModelSnapshot`] behind its
+//! own [`ServeEngine`] **and its own** [`RequestBatcher`], so shards
+//! never contend on one queue (no shared mutex, no shared channel on the
+//! hot path). Because replicas hold bitwise-identical caches and the
+//! cache's per-point arithmetic is deterministic, routing is a pure
+//! load-placement decision: predictions are bitwise identical at any
+//! shard count.
+//!
+//! Placement follows the local-expert idea from the KISS-GP line of work
+//! (Wilson & Nickisch, 2015): partition input space with the
+//! [`crate::gp::cluster`] k-means ([`spatial_centroids`]) and send each
+//! query to the shard owning its region, so a shard's working set (cache
+//! pages, stencil neighborhoods) stays spatially coherent. When the
+//! model's grid bounding box is degenerate the router falls back to an
+//! FNV hash of the query bytes.
+//!
+//! Live (observation-accepting) models are deliberately single-shard:
+//! replicated incremental state would need cross-shard write fan-out,
+//! which is exactly the contention sharding exists to remove.
+
+use crate::coordinator::Metrics;
+use crate::gp::cluster::{nearest_centroid, spatial_centroids};
+use crate::linalg::Matrix;
+use crate::serve::batcher::{
+    BatchHandle, BatcherConfig, ObserveResponse, PredictResponse, RequestBatcher,
+};
+use crate::serve::server::ServeEngine;
+use crate::serve::snapshot::ModelSnapshot;
+use crate::stream::IncrementalState;
+use crate::util::Rng;
+use crate::{Error, Result};
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+/// How a query picks its shard.
+#[derive(Clone, Debug)]
+pub enum RoutePolicy {
+    /// One shard: everything goes to shard 0.
+    Single,
+    /// Nearest of k centroids (rows of the matrix) — local experts.
+    Spatial(Matrix),
+    /// FNV-1a over the query's f64 bytes, modulo k (fallback when no
+    /// usable spatial structure exists).
+    Hash,
+}
+
+impl RoutePolicy {
+    /// Shard index for query `x` among `k` shards.
+    pub fn route(&self, x: &[f64], k: usize) -> usize {
+        match self {
+            RoutePolicy::Single => 0,
+            RoutePolicy::Spatial(c) => nearest_centroid(x, c).min(k - 1),
+            RoutePolicy::Hash => (hash_point(x) % k as u64) as usize,
+        }
+    }
+
+    /// Short name for stats lines.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            RoutePolicy::Single => "single",
+            RoutePolicy::Spatial(_) => "spatial",
+            RoutePolicy::Hash => "hash",
+        }
+    }
+}
+
+/// FNV-1a over the bitwise representation of the query.
+fn hash_point(x: &[f64]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for v in x {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// Spatial policy for a snapshot: k-means centroids over a deterministic
+/// sample of the model's grid bounding box (the region queries live in).
+/// Falls back to hashing when the box is degenerate.
+fn spatial_policy(snap: &ModelSnapshot, k: usize) -> RoutePolicy {
+    if k <= 1 {
+        return RoutePolicy::Single;
+    }
+    let axes = &snap.cache.terms()[0].axes;
+    let d = axes.len();
+    let (lo, hi): (Vec<f64>, Vec<f64>) = axes.iter().map(|g| (g.min, g.max())).unzip();
+    if lo
+        .iter()
+        .zip(&hi)
+        .any(|(l, h)| !l.is_finite() || !h.is_finite() || h <= l)
+    {
+        return RoutePolicy::Hash;
+    }
+    let n = (64 * k).max(256);
+    let mut rng = Rng::new(0x5A1D_0000 ^ k as u64);
+    let mut sample = Matrix::zeros(n, d);
+    for i in 0..n {
+        for j in 0..d {
+            sample.set(i, j, rng.uniform_in(lo[j], hi[j]));
+        }
+    }
+    match spatial_centroids(&sample, k, 16, 17) {
+        Ok(c) => RoutePolicy::Spatial(c),
+        Err(_) => RoutePolicy::Hash,
+    }
+}
+
+/// One shard: a replica engine plus its private batcher.
+///
+/// Field order matters for Drop: the handle must release its sender
+/// before the batcher's Drop joins the worker thread.
+struct Shard {
+    engine: Arc<ServeEngine>,
+    handle: BatchHandle,
+    batcher: RequestBatcher,
+}
+
+/// One logical model, served by k shards behind one routing policy.
+pub struct ShardedModel {
+    id: String,
+    shards: Vec<Shard>,
+    policy: RoutePolicy,
+    live: bool,
+    dim: usize,
+    bytes: usize,
+    /// Fleet-wide metrics (shared with the registry and reactor).
+    metrics: Arc<Metrics>,
+}
+
+impl ShardedModel {
+    /// Replicate a frozen snapshot across `k` shards.
+    pub fn from_snapshot(
+        id: &str,
+        snap: ModelSnapshot,
+        k: usize,
+        batcher: BatcherConfig,
+        metrics: Arc<Metrics>,
+    ) -> Result<Self> {
+        if k == 0 {
+            return Err(Error::Fleet("shard count must be at least 1".into()));
+        }
+        let policy = spatial_policy(&snap, k);
+        let dim = snap.cache.dim();
+        let bytes = snap.approx_bytes() * k;
+        let mut shards = Vec::with_capacity(k);
+        for _ in 0..k {
+            let engine = Arc::new(ServeEngine::new(snap.clone())?);
+            let b = RequestBatcher::start(engine.clone(), batcher);
+            let handle = b.handle();
+            shards.push(Shard { engine, handle, batcher: b });
+        }
+        Ok(ShardedModel {
+            id: id.to_string(),
+            shards,
+            policy,
+            live: false,
+            dim,
+            bytes,
+            metrics,
+        })
+    }
+
+    /// Wrap a live incremental model (always single-shard; see the
+    /// module docs for why).
+    pub fn live(
+        id: &str,
+        state: IncrementalState,
+        batcher: BatcherConfig,
+        metrics: Arc<Metrics>,
+    ) -> Result<Self> {
+        let engine = Arc::new(ServeEngine::new_live(state)?);
+        let dim = engine.dim();
+        let bytes = engine.snapshot().approx_bytes();
+        let b = RequestBatcher::start(engine.clone(), batcher);
+        let handle = b.handle();
+        Ok(ShardedModel {
+            id: id.to_string(),
+            shards: vec![Shard { engine, handle, batcher: b }],
+            policy: RoutePolicy::Single,
+            live: true,
+            dim,
+            bytes,
+            metrics,
+        })
+    }
+
+    /// Model id (registry key and wire-protocol `model <id>` prefix).
+    pub fn id(&self) -> &str {
+        &self.id
+    }
+
+    /// Input dimensionality d.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Number of shards k.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True iff observations are accepted.
+    pub fn is_live(&self) -> bool {
+        self.live
+    }
+
+    /// Approximate resident bytes across all shard replicas (what the
+    /// registry charges against its memory budget).
+    pub fn approx_bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// The routing policy in use.
+    pub fn policy(&self) -> &RoutePolicy {
+        &self.policy
+    }
+
+    /// The engine behind shard `i` (tests and stats).
+    pub fn engine(&self, shard: usize) -> &Arc<ServeEngine> {
+        &self.shards[shard].engine
+    }
+
+    /// Shard index query `x` routes to.
+    pub fn route(&self, x: &[f64]) -> usize {
+        self.policy.route(x, self.shards.len())
+    }
+
+    /// Enqueue a prediction on its spatially-assigned shard; the
+    /// receiver yields when the shard's batch completes.
+    pub fn submit_predict(&self, x: &[f64]) -> Receiver<PredictResponse> {
+        let s = &self.shards[self.route(x)];
+        self.metrics
+            .observe("serve.fleet.queue_depth", s.handle.queue_depth() as u64);
+        s.handle.submit(x)
+    }
+
+    /// Submit a prediction and block for the response.
+    pub fn predict(&self, x: &[f64]) -> PredictResponse {
+        self.submit_predict(x)
+            .recv()
+            .expect("shard batcher shut down while a request was in flight")
+    }
+
+    /// Enqueue an observation. Observations always land on shard 0:
+    /// live models are single-shard, and frozen models reject the
+    /// observation downstream with the typed frozen-engine error.
+    pub fn submit_observe(&self, x: &[f64], y: f64) -> Receiver<ObserveResponse> {
+        let s = &self.shards[0];
+        self.metrics
+            .observe("serve.fleet.queue_depth", s.handle.queue_depth() as u64);
+        s.handle.submit_observe(x, y)
+    }
+
+    /// Submit an observation and block for the ack.
+    pub fn observe(&self, x: &[f64], y: f64) -> ObserveResponse {
+        self.submit_observe(x, y)
+            .recv()
+            .expect("shard batcher shut down while an observation was in flight")
+    }
+
+    /// Total points served across shards.
+    pub fn served(&self) -> u64 {
+        self.shards
+            .iter()
+            .map(|s| s.engine.metrics.counter("serve.points"))
+            .sum()
+    }
+
+    /// One-line per-model summary: shard count, routing policy, total
+    /// and per-shard served counts (the fleet `stats` verb appends one
+    /// fragment per resident model).
+    pub fn stats_line(&self) -> String {
+        let mut line = format!(
+            "shards={} route={} served={}",
+            self.shards.len(),
+            self.policy.kind(),
+            self.served(),
+        );
+        for (i, s) in self.shards.iter().enumerate() {
+            line.push_str(&format!(
+                " s{i}={}",
+                s.engine.metrics.counter("serve.points")
+            ));
+        }
+        if self.live {
+            line.push_str(" live=1");
+        }
+        line
+    }
+
+    /// Drain and join every shard's batcher (queued requests are still
+    /// served). Dropping the model does the same via the batcher Drops.
+    pub fn shutdown(self) {
+        for s in self.shards {
+            drop(s.handle);
+            s.batcher.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_routing_is_deterministic_and_spread() {
+        let p = RoutePolicy::Hash;
+        let a = p.route(&[0.25, -1.5], 8);
+        assert_eq!(a, p.route(&[0.25, -1.5], 8));
+        assert!(a < 8);
+        // Different points spread across shards (not all on one).
+        let mut seen = std::collections::BTreeSet::new();
+        for i in 0..64 {
+            seen.insert(p.route(&[i as f64 * 0.37, -(i as f64)], 8));
+        }
+        assert!(seen.len() > 2, "hash routing collapsed: {seen:?}");
+    }
+
+    #[test]
+    fn spatial_routing_sends_neighbors_together() {
+        let c = Matrix::from_vec(2, 1, vec![-1.0, 1.0]);
+        let p = RoutePolicy::Spatial(c);
+        assert_eq!(p.route(&[-0.9], 2), p.route(&[-1.1], 2));
+        assert_eq!(p.route(&[0.9], 2), p.route(&[1.1], 2));
+        assert_ne!(p.route(&[-0.9], 2), p.route(&[0.9], 2));
+    }
+}

@@ -18,7 +18,11 @@
 //!   max-batch/max-wait and per-request latency accounting;
 //! - [`server`] — the in-process [`ServeEngine`] (frozen snapshot or
 //!   live incremental model) and a `std::net` TCP line-protocol server
-//!   behind `skip-gp serve` / `skip-gp serve --live`.
+//!   behind `skip-gp serve` / `skip-gp serve --live`;
+//! - [`fleet`] — the sharded multi-model serving plane behind
+//!   `skip-gp serve --fleet`: a model registry with LRU eviction, a
+//!   local-expert shard router, and a bounded-worker reactor with
+//!   admission control and graceful drain.
 //!
 //! ```
 //! use skip_gp::gp::{ExactGp, GpHypers};
@@ -47,11 +51,15 @@
 
 pub mod batcher;
 pub mod cache;
+pub mod fleet;
 pub mod server;
 pub mod snapshot;
 
 pub use batcher::{
     BatchHandle, BatcherConfig, ObserveResponse, PredictResponse, RequestBatcher,
+};
+pub use fleet::{
+    FleetConfig, FleetServer, ModelRegistry, RegistryConfig, RoutePolicy, ShardedModel,
 };
 pub use cache::{PredictCache, TermCache, VarianceMode};
 pub use server::{ObserveAck, ServeEngine, Server, ServerConfig};

@@ -15,7 +15,10 @@
 //! The TCP server accepts any number of concurrent connections, forwards
 //! each request line into a shared [`RequestBatcher`], and therefore
 //! coalesces traffic *across* connections into blocks — observations
-//! and predictions alike.
+//! and predictions alike. Each connection gets its own handler thread,
+//! which is simple and fine up to a few hundred clients; for large
+//! connection counts, multiple models, or admission control, use the
+//! bounded-worker fleet front-end in [`crate::serve::fleet`] instead.
 //!
 //! # Wire protocol
 //!
@@ -299,7 +302,6 @@ impl Server {
         let addr = listener
             .local_addr()
             .map_err(|e| Error::Config(format!("no local addr: {e}")))?;
-        listener.set_nonblocking(true)?;
         let shutdown = Arc::new(AtomicBool::new(false));
         let flag = shutdown.clone();
         let eng = engine.clone();
@@ -310,9 +312,16 @@ impl Server {
         let accept = std::thread::spawn(move || {
             let batcher = RequestBatcher::start(eng.clone(), cfg.batcher);
             let mut next_id = 0u64;
-            while !flag.load(Ordering::Relaxed) {
+            let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+            // Accept blocks — no sleep-poll burning a core on an idle
+            // server. Shutdown wakes it with a throwaway self-connection
+            // after setting the flag, so the check below fires.
+            loop {
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        if flag.load(Ordering::Relaxed) {
+                            break; // the shutdown wake-connection
+                        }
                         let id = next_id;
                         next_id += 1;
                         // Every served connection MUST be registered, or
@@ -327,23 +336,36 @@ impl Server {
                         let handle = batcher.handle();
                         let engine = eng.clone();
                         let reg = conn_reg.clone();
-                        std::thread::spawn(move || {
+                        handlers.push(std::thread::spawn(move || {
                             // Client errors only affect that client.
                             let _ = handle_connection(stream, handle, engine);
                             reg.lock().unwrap().retain(|(i, _)| *i != id);
-                        });
+                        }));
+                        // Reap finished handlers so a long-lived server
+                        // doesn't accumulate zombie JoinHandles.
+                        let mut i = 0;
+                        while i < handlers.len() {
+                            if handlers[i].is_finished() {
+                                let _ = handlers.swap_remove(i).join();
+                            } else {
+                                i += 1;
+                            }
+                        }
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(1));
-                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
                     Err(_) => break,
                 }
             }
             // Force-close anything still connected so every handler's
-            // blocking read returns, its BatchHandle drops, and the
-            // batcher Drop below can join its worker.
+            // blocking read returns EOF…
             for (_, c) in conn_reg.lock().unwrap().drain(..) {
                 let _ = c.shutdown(Shutdown::Both);
+            }
+            // …then join every handler: when the accept thread exits, no
+            // connection thread is left running (the old code leaked
+            // them, so a handler mid-request could outlive `shutdown()`).
+            for h in handlers {
+                let _ = h.join();
             }
             // Dropping the batcher joins its worker once the last
             // connection handler releases its handle.
@@ -366,28 +388,52 @@ impl Server {
         &self.engine
     }
 
-    /// Stop accepting and join the accept loop; still-open connections
-    /// are force-closed so shutdown never waits on an idle client.
-    pub fn shutdown(mut self) {
+    fn stop_impl(&mut self) {
         self.shutdown.store(true, Ordering::Relaxed);
         if let Some(a) = self.accept.take() {
+            // Wake the blocking accept so it observes the flag.
+            let _ = TcpStream::connect_timeout(&wake_addr(self.addr), Duration::from_millis(500));
             let _ = a.join();
         }
+    }
+
+    /// Stop accepting, force-close still-open connections, and join the
+    /// accept loop *and every connection handler* — after this returns,
+    /// no server thread is running.
+    pub fn shutdown(mut self) {
+        self.stop_impl();
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.shutdown.store(true, Ordering::Relaxed);
-        if let Some(a) = self.accept.take() {
-            let _ = a.join();
-        }
+        self.stop_impl();
     }
 }
 
+/// Where a shutdown wake-connection should dial: the bound address, with
+/// unspecified IPs (`0.0.0.0` / `::`) rewritten to the same-family
+/// loopback so the connect actually reaches our listener.
+pub(crate) fn wake_addr(mut addr: SocketAddr) -> SocketAddr {
+    match addr {
+        SocketAddr::V4(v4) if v4.ip().is_unspecified() => {
+            addr.set_ip(std::net::IpAddr::V4(std::net::Ipv4Addr::LOCALHOST));
+        }
+        SocketAddr::V6(v6) if v6.ip().is_unspecified() => {
+            addr.set_ip(std::net::IpAddr::V6(std::net::Ipv6Addr::LOCALHOST));
+        }
+        _ => {}
+    }
+    addr
+}
+
 /// Parse `expect` whitespace-separated floats from `body`; `Err` carries
-/// the wire-protocol error line.
-fn parse_floats(body: &str, expect: usize) -> std::result::Result<Vec<f64>, String> {
+/// the wire-protocol error line. Shared with the fleet reactor so both
+/// front-ends reject malformed input identically.
+pub(crate) fn parse_floats(
+    body: &str,
+    expect: usize,
+) -> std::result::Result<Vec<f64>, String> {
     let mut out = Vec::with_capacity(expect);
     for tok in body.split_whitespace() {
         match tok.parse::<f64>() {

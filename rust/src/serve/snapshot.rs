@@ -455,6 +455,20 @@ impl ModelSnapshot {
         Self::from_bytes(&bytes)
     }
 
+    /// Approximate resident size of the snapshot in bytes: the grid-side
+    /// predictive cache plus α and the pending observation log. The
+    /// fleet registry multiplies this by the shard count when charging a
+    /// model against its memory budget.
+    pub fn approx_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f64>();
+        let pending: usize = self
+            .pending
+            .iter()
+            .map(|o| f * (o.x.len() + 1) + std::mem::size_of::<u64>())
+            .sum();
+        self.cache.approx_bytes() + f * self.alpha.len() + pending
+    }
+
     /// Encode to the version-4 byte layout (checksum included). Writers
     /// always emit the newest version, whatever `self.version` was read
     /// from.

@@ -588,6 +588,164 @@ fn frozen_engine_rejects_observe() {
     server.shutdown();
 }
 
+/// Legacy-server shutdown regression: `shutdown()` must return promptly
+/// even with connections still open mid-session (the accept loop blocks
+/// now — the self-connect wake has to reach it), and after it returns
+/// every connection is force-closed, so no handler thread outlives the
+/// server.
+#[test]
+fn server_shutdown_closes_open_connections_promptly() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::time::{Duration, Instant};
+
+    let (xs, ys, grids, _) = on_grid_problem(64, 12);
+    let h = GpHypers::new(0.5, 1.0, 0.05);
+    let mut gp = ExactGp::new(xs, ys, h);
+    gp.refresh().unwrap();
+    let snap =
+        ModelSnapshot::from_exact_with_grids(&gp, grids, &VarianceMode::Lanczos(16)).unwrap();
+    let engine = Arc::new(ServeEngine::new(snap).unwrap());
+    let server = Server::start(
+        engine,
+        ServerConfig {
+            bind: "127.0.0.1:0".to_string(),
+            batcher: BatcherConfig::default(),
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+
+    // Two live connections: one mid-protocol, one fully idle. Neither
+    // says `quit`.
+    let active = TcpStream::connect(addr).unwrap();
+    active.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let idle = TcpStream::connect(addr).unwrap();
+    idle.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut writer = active.try_clone().unwrap();
+    let mut reader = BufReader::new(active);
+    let mut line = String::new();
+    writeln!(writer, "ping").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "ok pong");
+
+    let t0 = Instant::now();
+    server.shutdown();
+    let took = t0.elapsed();
+    assert!(took < Duration::from_secs(5), "shutdown hung for {took:?}");
+
+    // Both sockets see EOF: the server force-closed them and joined the
+    // handlers (the old code leaked the handler threads here).
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap_or(0), 0, "active: {line}");
+    let mut reader = BufReader::new(idle);
+    line.clear();
+    assert_eq!(reader.read_line(&mut line).unwrap_or(0), 0, "idle: {line}");
+}
+
+/// Multi-model routing over TCP through the fleet front-end: two models
+/// in one registry, addressed per-request with `model <id>`, each
+/// serving its own snapshot's predictions; `models` lists both; an
+/// unaddressed request (no default model configured) is a clean error.
+#[test]
+fn fleet_routes_requests_to_the_addressed_model() {
+    use skip_gp::coordinator::Metrics;
+    use skip_gp::serve::{FleetConfig, FleetServer, ModelRegistry, RegistryConfig};
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let dir = std::env::temp_dir()
+        .join(format!("skipgp-fleet-route-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut snaps = Vec::new();
+    for (id, seed) in [("alpha", 13u64), ("beta", 14u64)] {
+        let (xs, ys, grids, _) = on_grid_problem(96, seed);
+        let h = GpHypers::new(0.45, 1.3, 0.05);
+        let mut gp = ExactGp::new(xs, ys, h);
+        gp.refresh().unwrap();
+        let snap = ModelSnapshot::from_exact_with_grids(&gp, grids, &VarianceMode::Exact).unwrap();
+        snap.save(&dir.join(format!("{id}.snap"))).unwrap();
+        snaps.push(snap);
+    }
+
+    let metrics = Arc::new(Metrics::new());
+    let registry = Arc::new(ModelRegistry::new(
+        RegistryConfig {
+            dir: Some(dir.clone()),
+            shards: 2,
+            ..Default::default()
+        },
+        metrics.clone(),
+    ));
+    let server = FleetServer::start(
+        registry,
+        FleetConfig {
+            bind: "127.0.0.1:0".to_string(),
+            workers: 2,
+            default_model: None,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let stream = TcpStream::connect(server.addr()).unwrap();
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(10)))
+        .unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+
+    // Both models are discoverable before either is resident.
+    writeln!(writer, "models").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "ok alpha beta", "models: {line}");
+
+    // Per-request addressing returns each model's own predictions,
+    // bitwise-equal to its snapshot cache.
+    let q = [0.51, 0.32, 0.77];
+    for (snap, id) in snaps.iter().zip(["alpha", "beta"]) {
+        line.clear();
+        writeln!(writer, "model {id} predict {} {} {}", q[0], q[1], q[2]).unwrap();
+        reader.read_line(&mut line).unwrap();
+        let toks: Vec<&str> = line.trim().split_whitespace().collect();
+        assert_eq!(toks[0], "ok", "{id}: {line}");
+        let mean: f64 = toks[1].parse().unwrap();
+        let var: f64 = toks[2].parse().unwrap();
+        let (want_mean, want_var) = snap.cache.predict_one(&q);
+        assert_eq!(mean.to_bits(), want_mean.to_bits(), "{id} mean");
+        assert_eq!(var.to_bits(), want_var.to_bits(), "{id} var");
+    }
+    // The two models genuinely differ (different training seeds).
+    let a = snaps[0].cache.predict_mean_one(&q);
+    let b = snaps[1].cache.predict_mean_one(&q);
+    assert_ne!(a.to_bits(), b.to_bits(), "test snapshots coincide");
+
+    // model-prefixed dim, and a clean error without a default model.
+    line.clear();
+    writeln!(writer, "model beta dim").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert_eq!(line.trim(), "ok 3");
+    line.clear();
+    writeln!(writer, "predict {} {} {}", q[0], q[1], q[2]).unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(
+        line.starts_with("err") && line.contains("no model specified"),
+        "unaddressed request: {line}"
+    );
+    line.clear();
+    writeln!(writer, "model ghost predict 0 0 0").unwrap();
+    reader.read_line(&mut line).unwrap();
+    assert!(
+        line.starts_with("err") && line.contains("unknown model"),
+        "unknown id: {line}"
+    );
+    writeln!(writer, "quit").unwrap();
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// An unknown *future* version is a clean typed error, not a parse
 /// attempt — the version gate rejects before any field is trusted.
 #[test]
