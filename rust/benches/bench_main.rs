@@ -20,6 +20,10 @@
 //!                         space, across n ∈ {10⁴, 10⁵, 10⁶} (emits
 //!                         results/BENCH_gridspace.json; the flat-in-n
 //!                         ratio is gated by tools/bench_check)
+//!   precision_mvm_*     — f64 vs f32 operator storage on the n = 10⁵
+//!                         KISS MVM (emits results/BENCH_precision.json;
+//!                         the mixed-vs-f64 MVM speedup is gated by
+//!                         tools/bench_check)
 //!
 //! Run: `cargo bench` (add `-- --fast` for a quick pass).
 
@@ -33,7 +37,8 @@ use skip_gp::operators::lowrank::{
     LanczosFactor,
 };
 use skip_gp::operators::{
-    matmat_via_matvec, ArcOp, KroneckerSkiOp, LinearOp, SkiOp, SkipComponent, SkipOp,
+    matmat_via_matvec, ArcOp, KroneckerSkiOp, LinearOp, LinearOpF32, SkiOp,
+    SkipComponent, SkipOp,
 };
 use skip_gp::operators::AffineOp;
 use skip_gp::runtime::PjrtBackend;
@@ -433,6 +438,69 @@ fn main() {
             "acceptance: grid-space per-iteration cost must be flat in n \
              (10^6 vs 10^4 ratio {ratio:.2}x > 1.5x)"
         );
+    }
+
+    // --- Mixed-precision MVM substrate: the same n = 10⁵ KISS operator
+    // applied with f64 storage vs the f32 view (f32 stencil weights, f32
+    // Toeplitz spectra, f32 FFT butterflies). The MVM is memory-bound on
+    // the stencil gather/scatter, so halving the operand width should buy
+    // ~1.5–2× — the `mvm_speedup_f32_vs_f64` field is gated ≥ 1.3× by
+    // tools/bench_check against results/baselines/BENCH_precision.json.
+    // The f32 view is built once outside the timed region, matching how
+    // `refined_cg_solve` amortizes one `as_f32()` across a whole solve.
+    {
+        let n = 100_000;
+        let d = 2;
+        let m = 64;
+        let xs = gaussian_cloud(n, d, 21);
+        let kern = ProductKernel::rbf(d, 0.5, 1.0);
+        let op = KroneckerSkiOp::new(&xs, &kern, m).expect("bench precision grid");
+        let view = op.f32_view();
+        let mut rv = Rng::new(22);
+        let v: Vec<f64> = (0..n).map(|_| rv.normal()).collect();
+        let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+
+        // Correctness first: the f32 path must track f64 elementwise to
+        // f32 grade before its timing means anything.
+        let want = op.matvec(&v);
+        let got32 = view.matvec_f32(&v32);
+        let scale = want.iter().fold(1.0f64, |a, x| a.max(x.abs()));
+        let worst = want
+            .iter()
+            .zip(&got32)
+            .fold(0.0f64, |a, (w, g)| a.max((w - *g as f64).abs()));
+        assert!(
+            worst <= 1e-3 * scale,
+            "f32 MVM drifted from f64: {worst:.3e} vs scale {scale:.3e}"
+        );
+
+        let f64_s = b.timed("precision_mvm_f64", &format!("n={n} d={d} m={m}x{m}"), || {
+            std::hint::black_box(op.matvec(&v));
+        });
+        let f32_s =
+            b.timed("precision_mvm_f32", &format!("n={n} d={d} m={m}x{m} (f32 view)"), || {
+                std::hint::black_box(view.matvec_f32(&v32));
+            });
+        let speedup = f64_s / f32_s;
+        println!(
+            "  -> f32 operator-storage MVM speedup: {speedup:.2}x \
+             (max |f32 − f64| = {worst:.2e})"
+        );
+        let json = format!(
+            "{{\n  \"bench\": \"precision\",\n  \"fast\": {fast},\n  \"n\": {n},\n  \
+             \"d\": {d},\n  \"grid_m\": {m},\n  \"f64_mvm_us\": {f64_us:.2},\n  \
+             \"f32_mvm_us\": {f32_us:.2},\n  \
+             \"mvm_speedup_f32_vs_f64\": {speedup:.3},\n  \
+             \"max_abs_err_vs_f64\": {worst:.3e}\n}}\n",
+            f64_us = f64_s * 1e6,
+            f32_us = f32_s * 1e6,
+        );
+        let path = Path::new("results/BENCH_precision.json");
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, json).expect("bench json");
+        println!("wrote {}", path.display());
     }
 
     b.write_csv(Path::new("results/bench_micro.csv"));

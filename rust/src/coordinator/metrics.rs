@@ -299,6 +299,25 @@ impl Metrics {
                 "  space     grid={grid} data={data} solves (auto fallbacks={space_fallbacks})\n"
             ));
         }
+        // Mixed-precision refinement accounting: outer correction sweeps
+        // plus every road back to full f64 (no f32 operator mirror, a
+        // stalled inner solve, an exhausted sweep budget). Only printed
+        // once the refinement wrapper ever ran or fell back — the
+        // `solver refine` iteration line above comes from the shared
+        // `record_solver` path.
+        let sweeps = self.counter("solver.refine.sweeps");
+        let refine_fallbacks = self.counter("solver.refine.fallback.no_f32")
+            + self.counter("solver.refine.fallback.stall")
+            + self.counter("solver.refine.fallback.sweep_budget");
+        if sweeps > 0 || refine_fallbacks > 0 {
+            out.push_str(&format!(
+                "  refine    {sweeps} f64 correction sweeps, f64 fallbacks={refine_fallbacks} \
+                 (no-f32={} stall={} budget={})\n",
+                self.counter("solver.refine.fallback.no_f32"),
+                self.counter("solver.refine.fallback.stall"),
+                self.counter("solver.refine.fallback.sweep_budget"),
+            ));
+        }
         out
     }
 
@@ -556,6 +575,20 @@ mod tests {
         assert!(r.contains("solver gridcg"), "{r}");
         assert!(r.contains("grid=5 data=2"), "{r}");
         assert!(r.contains("fallbacks=1"), "{r}");
+    }
+
+    #[test]
+    fn solver_report_includes_refine_line() {
+        let m = Metrics::new();
+        m.observe("solver.refine.iters", 18);
+        m.incr("solver.refine.sweeps", 6);
+        m.incr("solver.refine.fallback.stall", 1);
+        m.incr("solver.refine.fallback.sweep_budget", 2);
+        let r = m.solver_report();
+        assert!(r.contains("solver refine"), "{r}");
+        assert!(r.contains("6 f64 correction sweeps"), "{r}");
+        assert!(r.contains("f64 fallbacks=3"), "{r}");
+        assert!(r.contains("no-f32=0 stall=1 budget=2"), "{r}");
     }
 
     #[test]

@@ -40,7 +40,7 @@ use crate::operators::{
 use crate::serve::cache::PredictCache;
 use crate::solvers::{
     block_cg_solve_with, build_preconditioner, cg_solve_with, grid_cg_solve,
-    slq_logdet, CgConfig, GridSystem, Preconditioner, SlqConfig,
+    slq_logdet, CgConfig, GridSystem, Precision, Preconditioner, SlqConfig,
 };
 use crate::util::Rng;
 use crate::{Error, Result};
@@ -120,6 +120,15 @@ pub struct MvmGpConfig {
     pub warm_start: bool,
     /// Which space the covariance y-solves run in (`--space` on the CLI).
     pub solve_space: SolveSpace,
+    /// Arithmetic for the covariance solves (`--precision` on the CLI):
+    /// [`Precision::F64`] runs classic double-precision PCG;
+    /// [`Precision::Mixed`] runs the hot MVMs in f32 inside an f64
+    /// iterative-refinement loop that meets the same residual certificate
+    /// (see `crate::solvers::refine`). Folded into
+    /// [`CgConfig::precision`] by [`MvmGp::new`], so every solve this
+    /// model issues — training, refresh, variance, grid space — routes
+    /// through one switch.
+    pub precision: Precision,
     /// Base seed for probe vectors (common-random-numbers gradients).
     pub seed: u64,
 }
@@ -135,6 +144,7 @@ impl Default for MvmGpConfig {
             slq: SlqConfig { num_probes: 8, max_rank: 25 },
             warm_start: true,
             solve_space: SolveSpace::Auto,
+            precision: Precision::F64,
             seed: 0,
         }
     }
@@ -189,6 +199,14 @@ pub struct MvmGp {
 impl MvmGp {
     pub fn new(xs: Matrix, ys: Vec<f64>, hypers: GpHypers, cfg: MvmGpConfig) -> Self {
         assert_eq!(xs.rows, ys.len());
+        // Fold the model-level precision switch into the CG config every
+        // solve site consumes. Mixed only ever *adds* — a caller that set
+        // `cfg.cg.precision` directly keeps their choice under the
+        // default model-level F64.
+        let mut cfg = cfg;
+        if cfg.precision == Precision::Mixed {
+            cfg.cg.precision = Precision::Mixed;
+        }
         MvmGp {
             xs,
             ys,

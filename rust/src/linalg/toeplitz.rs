@@ -4,19 +4,49 @@
 //! `K_UU` symmetric Toeplitz: entry (i,j) depends only on |i−j|. Embedding
 //! the first column into a circulant of power-of-two size N ≥ 2m−1 lets the
 //! FFT diagonalize the action, so `K_UU v` costs two FFTs.
+//!
+//! The FFTs run through a shared, cached [`FftPlan`] (bit-reversal and
+//! twiddle tables precomputed once per length — bitwise identical to the
+//! direct transform), and every apply reuses a per-instance scratch
+//! buffer, so steady-state `matvec`/[`SymToeplitz::matvec_into`] allocate
+//! nothing. A lazily-built f32 spectrum mirror backs the mixed-precision
+//! path ([`SymToeplitz::matvec_f32`], consumed by `solvers::refine`).
 
-use super::fft::{circ_mul, circ_mul_pair, fft_real, next_pow2, C};
+use super::fft::{fft_real, next_pow2, C, C32, FftPlan};
 use super::matrix::Matrix;
 use crate::util::parallel::par_map_range;
+use std::sync::{Arc, Mutex, OnceLock};
 
 /// Symmetric Toeplitz matrix represented by its first column, with the
 /// eigen-spectrum of its circulant embedding precomputed.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct SymToeplitz {
     /// First column `t[0..m]`; entry (i,j) = t[|i-j|].
     pub col: Vec<f64>,
     /// FFT of the circulant embedding's first column.
     c_hat: Vec<C>,
+    /// Shared FFT plan for the embedding length (`c_hat.len()`).
+    plan: Arc<FftPlan>,
+    /// Reusable complex work buffer for the apply hot path. `try_lock`
+    /// with an allocate-on-contention fallback, so concurrent column
+    /// applies (the parallel `matmat`) stay correct without serializing.
+    scratch: Mutex<Vec<C>>,
+    /// Lazily-converted f32 spectrum for the mixed-precision path.
+    spec32: OnceLock<Vec<C32>>,
+    scratch32: Mutex<Vec<C32>>,
+}
+
+impl Clone for SymToeplitz {
+    fn clone(&self) -> Self {
+        SymToeplitz {
+            col: self.col.clone(),
+            c_hat: self.c_hat.clone(),
+            plan: Arc::clone(&self.plan),
+            scratch: Mutex::new(Vec::new()),
+            spec32: self.spec32.clone(),
+            scratch32: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 impl SymToeplitz {
@@ -33,7 +63,15 @@ impl SymToeplitz {
             c[n - k] = col[k];
         }
         let c_hat = fft_real(&c, n);
-        SymToeplitz { col, c_hat }
+        let plan = FftPlan::shared(n);
+        SymToeplitz {
+            col,
+            c_hat,
+            plan,
+            scratch: Mutex::new(Vec::new()),
+            spec32: OnceLock::new(),
+            scratch32: Mutex::new(Vec::new()),
+        }
     }
 
     /// Matrix dimension m.
@@ -41,15 +79,115 @@ impl SymToeplitz {
         self.col.len()
     }
 
-    /// `K v` in O(m log m) via the circulant embedding.
+    /// The f32 circulant spectrum, converted from `c_hat` on first use.
+    fn spec32(&self) -> &[C32] {
+        self.spec32.get_or_init(|| {
+            self.c_hat
+                .iter()
+                .map(|&(re, im)| (re as f32, im as f32))
+                .collect()
+        })
+    }
+
+    /// `K v` in O(m log m) via the circulant embedding. Allocates only
+    /// the output; the FFT work buffer is reused across calls.
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.dim()];
+        self.matvec_into(v, &mut out);
+        out
+    }
+
+    /// `K v` written into `out` (length m) with zero steady-state
+    /// allocation: the complex work buffer is the cached scratch when
+    /// uncontended, a transient local one otherwise.
+    pub fn matvec_into(&self, v: &[f64], out: &mut [f64]) {
         let m = self.dim();
         assert_eq!(v.len(), m);
-        circ_mul(&self.c_hat, v, m)
+        assert_eq!(out.len(), m);
+        let mut local = Vec::new();
+        let mut guard = self.scratch.try_lock().ok();
+        let buf: &mut Vec<C> = match guard.as_deref_mut() {
+            Some(b) => b,
+            None => &mut local,
+        };
+        buf.clear();
+        buf.extend(v.iter().map(|&x| (x, 0.0)));
+        buf.resize(self.c_hat.len(), (0.0, 0.0));
+        self.plan.process(buf, false);
+        for (b, &a) in buf.iter_mut().zip(&self.c_hat) {
+            let re = b.0 * a.0 - b.1 * a.1;
+            let im = b.0 * a.1 + b.1 * a.0;
+            *b = (re, im);
+        }
+        self.plan.inverse_norm(buf);
+        for (o, c) in out.iter_mut().zip(buf.iter()) {
+            *o = c.0;
+        }
+    }
+
+    /// `K v` in f32 storage and arithmetic: the f32 spectrum mirror and
+    /// f32 twiddles halve the operand bytes of this bandwidth-bound
+    /// transform. Accuracy is f32-level — callers wrap it in the f64
+    /// iterative-refinement loop (`solvers::refine`).
+    pub fn matvec_f32(&self, v: &[f32]) -> Vec<f32> {
+        let m = self.dim();
+        assert_eq!(v.len(), m);
+        let spec = self.spec32();
+        let mut local = Vec::new();
+        let mut guard = self.scratch32.try_lock().ok();
+        let buf: &mut Vec<C32> = match guard.as_deref_mut() {
+            Some(b) => b,
+            None => &mut local,
+        };
+        buf.clear();
+        buf.extend(v.iter().map(|&x| (x, 0.0)));
+        buf.resize(spec.len(), (0.0, 0.0));
+        self.plan.process_f32(buf, false);
+        for (b, &a) in buf.iter_mut().zip(spec) {
+            let re = b.0 * a.0 - b.1 * a.1;
+            let im = b.0 * a.1 + b.1 * a.0;
+            *b = (re, im);
+        }
+        self.plan.inverse_norm_f32(buf);
+        buf[..m].iter().map(|c| c.0).collect()
+    }
+
+    /// Two columns for the price of one complex FFT pair: packs
+    /// `b1 + i·b2`, so the real/imaginary parts of the inverse transform
+    /// carry the two products (see `circ_mul_pair` for the algebra).
+    fn matvec_pair(&self, b1: &[f64], b2: &[f64]) -> (Vec<f64>, Vec<f64>) {
+        let m = self.dim();
+        let n = self.c_hat.len();
+        assert!(m >= b1.len() && m >= b2.len());
+        let top = b1.len().max(b2.len());
+        let mut local = Vec::new();
+        let mut guard = self.scratch.try_lock().ok();
+        let buf: &mut Vec<C> = match guard.as_deref_mut() {
+            Some(b) => b,
+            None => &mut local,
+        };
+        buf.clear();
+        buf.extend((0..top).map(|i| {
+            (
+                b1.get(i).copied().unwrap_or(0.0),
+                b2.get(i).copied().unwrap_or(0.0),
+            )
+        }));
+        buf.resize(n, (0.0, 0.0));
+        self.plan.process(buf, false);
+        for (b, &a) in buf.iter_mut().zip(&self.c_hat) {
+            let re = b.0 * a.0 - b.1 * a.1;
+            let im = b.0 * a.1 + b.1 * a.0;
+            *b = (re, im);
+        }
+        self.plan.inverse_norm(buf);
+        let out1 = buf[..m].iter().map(|c| c.0).collect();
+        let out2 = buf[..m].iter().map(|c| c.1).collect();
+        (out1, out2)
     }
 
     /// `K M` for an m×t block in O(t·m log m), batched two columns per
-    /// complex FFT (`circ_mul_pair`) and parallel across column pairs.
+    /// complex FFT and parallel across column pairs.
     ///
     /// This is the grid-level fast path of the batched MVM engine: a SKI
     /// `matmat` funnels all t right-hand sides through here so the
@@ -68,7 +206,7 @@ impl SymToeplitz {
         let min_pairs = ((1usize << 15) / self.c_hat.len().max(1)).max(2);
         let results = par_map_range(pairs, min_pairs, |p| {
             let (j1, j2) = (2 * p, 2 * p + 1);
-            circ_mul_pair(&self.c_hat, &m.col(j1), &m.col(j2), dim)
+            self.matvec_pair(&m.col(j1), &m.col(j2))
         });
         for (p, (c1, c2)) in results.into_iter().enumerate() {
             out.set_col(2 * p, &c1);
@@ -98,6 +236,7 @@ impl SymToeplitz {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::fft::circ_mul;
     use crate::util::Rng;
 
     #[test]
@@ -113,6 +252,58 @@ mod tests {
                 assert!((a - b).abs() < 1e-9, "m={m}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn planned_matvec_is_bitwise_identical_to_circ_mul() {
+        // The plan-based apply must reproduce the free-function circulant
+        // path bit for bit — this is the "default f64 behavior unchanged"
+        // contract of the FftPlan refactor.
+        let mut rng = Rng::new(12);
+        for m in [1usize, 4, 7, 33, 100] {
+            let col: Vec<f64> = (0..m).map(|k| 1.0 / (1.0 + k as f64)).collect();
+            let t = SymToeplitz::new(col.clone());
+            let n = next_pow2((2 * m).saturating_sub(1).max(1));
+            let mut c = vec![0.0; n];
+            c[..m].copy_from_slice(&col);
+            for k in 1..m {
+                c[n - k] = col[k];
+            }
+            let c_hat = fft_real(&c, n);
+            let v = rng.normal_vec(m);
+            assert_eq!(t.matvec(&v), circ_mul(&c_hat, &v, m), "m={m}");
+        }
+    }
+
+    #[test]
+    fn matvec_f32_tracks_f64_to_single_precision() {
+        let mut rng = Rng::new(13);
+        for m in [3usize, 16, 65, 257] {
+            let col: Vec<f64> = (0..m).map(|k| (-(k as f64) * 0.05).exp()).collect();
+            let t = SymToeplitz::new(col);
+            let v = rng.normal_vec(m);
+            let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+            let want = t.matvec(&v);
+            let got = t.matvec_f32(&v32);
+            let scale: f64 = want.iter().map(|x| x.abs()).fold(1.0, f64::max);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (*g as f64 - w).abs() < 1e-4 * scale,
+                    "m={m}: {g} vs {w} (scale {scale})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn clone_shares_plan_but_not_scratch() {
+        let t = SymToeplitz::new(vec![2.0, 1.0, 0.5]);
+        let mut rng = Rng::new(14);
+        let v = rng.normal_vec(3);
+        let _ = t.matvec(&v); // populate the scratch
+        let u = t.clone();
+        assert_eq!(t.matvec(&v), u.matvec(&v));
+        assert_eq!(u.col, t.col);
     }
 
     #[test]

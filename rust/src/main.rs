@@ -30,7 +30,7 @@ use skip_gp::serve::{
     RegistryConfig, ServeEngine, Server, ServerConfig, ShardedModel, SnapshotConfig,
     VarianceMode,
 };
-use skip_gp::solvers::PrecondSpec;
+use skip_gp::solvers::{Precision, PrecondSpec};
 use skip_gp::stream::{IncrementalState, StreamConfig};
 use skip_gp::util::{mae, Timer};
 use skip_gp::{Error, Result};
@@ -125,6 +125,19 @@ fn parse_solve_space(opts: &Opts) -> Result<SolveSpace> {
     }
 }
 
+/// Parse a `--precision` value into a [`Precision`]: `f64` (default)
+/// runs classic double-precision solves, `mixed` stores the hot
+/// operators in f32 under an f64 iterative-refinement loop that meets
+/// the same residual certificate.
+fn parse_precision(opts: &Opts) -> Result<Precision> {
+    match opts.get_str("precision") {
+        None => Ok(Precision::F64),
+        Some(v) => Precision::parse(&v).ok_or_else(|| {
+            Error::Config(format!("bad value for --precision: '{v}' (f64|mixed)"))
+        }),
+    }
+}
+
 fn usage() -> ! {
     eprintln!(
         "skip-gp — Product Kernel Interpolation for Scalable Gaussian Processes
@@ -135,16 +148,18 @@ USAGE:
                 [--dataset NAME] [--trials N] [--n N] [--full]
   skip-gp train  [--dataset NAME] [--scale F] [--steps N] [--rank R]
                  [--grid M|M1xM2x…|sparse:L] [--variant skip|kiss]
-                 [--precond rank:K|jacobi|none] [--space auto|data|grid] [--pjrt]
+                 [--precond rank:K|jacobi|none] [--space auto|data|grid]
+                 [--precision f64|mixed] [--pjrt]
   skip-gp snapshot [--dataset NAME] [--scale F] [--steps N] [--rank R]
                    [--grid M|M1xM2x…|sparse:L] [--variant skip|kiss] [--out F]
                    [--serve-grid M|M1xM2x…|sparse:L]
                    [--precond rank:K|jacobi|none] [--space auto|data|grid]
+                   [--precision f64|mixed]
                    [--var exact|lanczos|none] [--var-rank R]
   skip-gp serve  --snapshot F [--bind ADDR] [--max-batch N] [--max-wait-ms F]
   skip-gp serve  --live [--dataset NAME] [--scale F] [--steps N]
                  [--grid M|M1xM2x…] [--precond rank:K|jacobi|none]
-                 [--space auto|data|grid]
+                 [--space auto|data|grid] [--precision f64|mixed]
                  [--var exact|lanczos|none] [--var-rank R]
                  [--refresh-every N] [--var-drift N] [--error-z F]
                  [--log-capacity N] [--snapshot-out F] [--replay F]
@@ -262,8 +277,15 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         precond.describe()
     );
     let solve_space = parse_solve_space(&opts)?;
-    let mut cfg =
-        MvmGpConfig { variant, grid, rank, solve_space, ..Default::default() };
+    let precision = parse_precision(&opts)?;
+    let mut cfg = MvmGpConfig {
+        variant,
+        grid,
+        rank,
+        solve_space,
+        precision,
+        ..Default::default()
+    };
     cfg.cg.precond = precond;
     let mut gp = MvmGp::new(
         data.xtrain.clone(),
@@ -333,8 +355,15 @@ fn cmd_snapshot(rest: &[String]) -> Result<()> {
         precond.describe()
     );
     let solve_space = parse_solve_space(&opts)?;
-    let mut cfg =
-        MvmGpConfig { variant, grid, rank, solve_space, ..Default::default() };
+    let precision = parse_precision(&opts)?;
+    let mut cfg = MvmGpConfig {
+        variant,
+        grid,
+        rank,
+        solve_space,
+        precision,
+        ..Default::default()
+    };
     cfg.cg.precond = precond;
     let mut gp = MvmGp::new(
         data.xtrain.clone(),
@@ -402,10 +431,12 @@ fn build_live_state(opts: &Opts) -> Result<IncrementalState> {
     };
     let data = generate(spec, scale);
     let solve_space = parse_solve_space(opts)?;
+    let precision = parse_precision(opts)?;
     let mut cfg = MvmGpConfig {
         variant: MvmVariant::Kiss,
         grid,
         solve_space,
+        precision,
         ..Default::default()
     };
     cfg.cg.precond = precond;
@@ -426,6 +457,7 @@ fn build_live_state(opts: &Opts) -> Result<IncrementalState> {
         log_capacity: opts.get("log-capacity", 1024)?,
         variance,
         space: solve_space,
+        precision,
         ..Default::default()
     };
     let mut live = IncrementalState::from_mvm(&gp, scfg)?;

@@ -46,28 +46,72 @@ impl InterpMatrix {
     }
 
     /// `W v` — (n×m)(m) in O(n).
+    ///
+    /// The fixed-width rows walk as `chunks_exact(STENCIL)`, so the inner
+    /// gather runs bounds-check-free over each 4-wide stencil (same
+    /// accumulation order as the indexed loop it replaced).
     pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
         assert_eq!(v.len(), self.m);
-        let mut out = vec![0.0; self.n];
-        for i in 0..self.n {
-            let o = &mut out[i];
-            let base = i * STENCIL;
-            for k in 0..STENCIL {
-                *o += self.w[base + k] * v[self.idx[base + k] as usize];
+        self.idx
+            .chunks_exact(STENCIL)
+            .zip(self.w.chunks_exact(STENCIL))
+            .map(|(idx, w)| {
+                w.iter()
+                    .zip(idx)
+                    .map(|(&wk, &g)| wk * v[g as usize])
+                    .sum::<f64>()
+            })
+            .collect()
+    }
+
+    /// `Wᵀ v` — (m×n)(n) in O(n), the scatter mirror of
+    /// [`InterpMatrix::matvec`] (fixed-width `chunks_exact` rows; only
+    /// the scattered store stays indexed).
+    pub fn t_matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.n);
+        let mut out = vec![0.0; self.m];
+        let rows = self.idx.chunks_exact(STENCIL).zip(self.w.chunks_exact(STENCIL));
+        for ((idx, w), &x) in rows.zip(v) {
+            for (&g, &wk) in idx.iter().zip(w) {
+                out[g as usize] += wk * x;
             }
         }
         out
     }
 
-    /// `Wᵀ v` — (m×n)(n) in O(n).
-    pub fn t_matvec(&self, v: &[f64]) -> Vec<f64> {
+    /// The stencil weights converted to f32, for the mixed-precision SKI
+    /// view (`SkiOp::as_f32`): built once per solve, streamed every inner
+    /// iteration.
+    pub fn weights_f32(&self) -> Vec<f32> {
+        self.w.iter().map(|&x| x as f32).collect()
+    }
+
+    /// `W v` over f32 operands, against caller-held f32 weights (from
+    /// [`InterpMatrix::weights_f32`] — same length/layout as `w`).
+    pub fn matvec_f32_with(&self, w32: &[f32], v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.m);
+        assert_eq!(w32.len(), self.w.len());
+        self.idx
+            .chunks_exact(STENCIL)
+            .zip(w32.chunks_exact(STENCIL))
+            .map(|(idx, w)| {
+                w.iter()
+                    .zip(idx)
+                    .map(|(&wk, &g)| wk * v[g as usize])
+                    .sum::<f32>()
+            })
+            .collect()
+    }
+
+    /// `Wᵀ v` over f32 operands (see [`InterpMatrix::matvec_f32_with`]).
+    pub fn t_matvec_f32_with(&self, w32: &[f32], v: &[f32]) -> Vec<f32> {
         assert_eq!(v.len(), self.n);
-        let mut out = vec![0.0; self.m];
-        for i in 0..self.n {
-            let base = i * STENCIL;
-            let x = v[i];
-            for k in 0..STENCIL {
-                out[self.idx[base + k] as usize] += self.w[base + k] * x;
+        assert_eq!(w32.len(), self.w.len());
+        let mut out = vec![0.0f32; self.m];
+        let rows = self.idx.chunks_exact(STENCIL).zip(w32.chunks_exact(STENCIL));
+        for ((idx, w), &x) in rows.zip(v) {
+            for (&g, &wk) in idx.iter().zip(w) {
+                out[g as usize] += wk * x;
             }
         }
         out
@@ -227,6 +271,25 @@ mod tests {
                 assert_eq!(*gi, w.idx[i * STENCIL + k] as usize);
                 assert_eq!(*wt, w.w[i * STENCIL + k]);
             }
+        }
+    }
+
+    #[test]
+    fn f32_matvec_and_adjoint_track_f64() {
+        let g = Grid1d::fit(0.0, 1.0, 16).unwrap();
+        let mut rng = Rng::new(9);
+        let xs = rng.uniform_vec(40, 0.0, 1.0);
+        let w = InterpMatrix::new(&xs, &g);
+        let w32 = w.weights_f32();
+        let u = rng.normal_vec(g.m);
+        let u32: Vec<f32> = u.iter().map(|&x| x as f32).collect();
+        for (a, b) in w.matvec_f32_with(&w32, &u32).iter().zip(w.matvec(&u)) {
+            assert!((*a as f64 - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        let v = rng.normal_vec(40);
+        let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+        for (a, b) in w.t_matvec_f32_with(&w32, &v32).iter().zip(w.t_matvec(&v)) {
+            assert!((*a as f64 - b).abs() < 1e-5, "{a} vs {b}");
         }
     }
 

@@ -15,7 +15,9 @@ pub mod skip;
 pub mod task;
 
 pub use interp::{tensor_stencil, tensor_strides, Grid1d, InterpMatrix};
-pub use kronecker::{kron_toeplitz_matvec, KroneckerSkiOp};
+pub use kronecker::{
+    kron_toeplitz_matvec, kron_toeplitz_matvec_with, KronScratch, KronSkiF32, KroneckerSkiOp,
+};
 pub use lowrank::{ContractionBackend, LanczosFactor, NativeBackend};
 pub use ski::SkiOp;
 pub use skip::{SkipComponent, SkipOp};
@@ -107,6 +109,36 @@ pub trait LinearOp: Send + Sync {
         }
         out
     }
+
+    /// A single-precision *view* of this operator for the mixed-precision
+    /// inner solves of `solvers::refine`: f32 storage (spectra, stencil
+    /// weights, dense entries) and f32 apply arithmetic, at f32 accuracy.
+    ///
+    /// `None` (the default) means the operator has no f32 mirror and a
+    /// `Precision::Mixed` solve falls back to full f64 — never approximate
+    /// silently at call sites; the solver meters the fallback. Wrappers
+    /// compose: an affine/sum view exists iff every inner view does.
+    fn as_f32(&self) -> Option<Box<dyn LinearOpF32 + '_>> {
+        None
+    }
+}
+
+/// The single-precision mirror of [`LinearOp`]: `v ↦ K v` over f32
+/// operands. Implementations store their structure (circulant spectra,
+/// stencil weights, dense entries) in f32 — halving the bytes the
+/// memory-bandwidth-bound MVM kernels stream — and run f32 arithmetic;
+/// the f64 iterative-refinement loop around them (`solvers::refine`)
+/// restores full-precision solutions.
+///
+/// Obtained through [`LinearOp::as_f32`]; views borrow the f64 operator
+/// and are built once per solve, so conversion cost amortizes over all
+/// inner iterations.
+pub trait LinearOpF32: Send + Sync {
+    /// Operator dimension n.
+    fn dim(&self) -> usize;
+
+    /// Compute `K v` in f32.
+    fn matvec_f32(&self, v: &[f32]) -> Vec<f32>;
 }
 
 /// Reference `K M`: the serial column-by-column loop every `matmat` fast
@@ -151,6 +183,58 @@ impl LinearOp for DenseOp {
 
     fn to_dense(&self) -> Matrix {
         self.0.clone()
+    }
+
+    /// Owned f32 copy of the dense entries (one conversion per solve).
+    fn as_f32(&self) -> Option<Box<dyn LinearOpF32 + '_>> {
+        let n = self.dim();
+        Some(Box::new(DenseF32 {
+            n,
+            data: self.0.data.iter().map(|&x| x as f32).collect(),
+        }))
+    }
+}
+
+/// f32 mirror of [`DenseOp`]: row-major f32 entries, row-dot apply.
+struct DenseF32 {
+    n: usize,
+    data: Vec<f32>,
+}
+
+impl LinearOpF32 for DenseF32 {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn matvec_f32(&self, v: &[f32]) -> Vec<f32> {
+        assert_eq!(v.len(), self.n);
+        self.data
+            .chunks_exact(self.n)
+            .map(|row| row.iter().zip(v).map(|(&a, &x)| a * x).sum::<f32>())
+            .collect()
+    }
+}
+
+/// Shared f32 affine wrapper `scale·(A·) + shift·(·)` backing the
+/// [`LinearOp::as_f32`] views of [`ShiftedOp`], [`ScaledOp`],
+/// [`AffineOp`], and [`AffineRef`].
+struct AffineF32<'a> {
+    inner: Box<dyn LinearOpF32 + 'a>,
+    scale: f32,
+    shift: f32,
+}
+
+impl LinearOpF32 for AffineF32<'_> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn matvec_f32(&self, v: &[f32]) -> Vec<f32> {
+        let mut out = self.inner.matvec_f32(v);
+        for (o, &x) in out.iter_mut().zip(v) {
+            *o = self.scale * *o + self.shift * x;
+        }
+        out
     }
 }
 
@@ -237,6 +321,14 @@ impl<'a> LinearOp for ShiftedOp<'a> {
         }
         Some(d)
     }
+
+    fn as_f32(&self) -> Option<Box<dyn LinearOpF32 + '_>> {
+        Some(Box::new(AffineF32 {
+            inner: self.inner.as_f32()?,
+            scale: 1.0,
+            shift: self.shift as f32,
+        }))
+    }
 }
 
 /// `c · A`.
@@ -281,6 +373,14 @@ impl<'a> LinearOp for ScaledOp<'a> {
             *v *= self.scale;
         }
         Some(d)
+    }
+
+    fn as_f32(&self) -> Option<Box<dyn LinearOpF32 + '_>> {
+        Some(Box::new(AffineF32 {
+            inner: self.inner.as_f32()?,
+            scale: self.scale as f32,
+            shift: 0.0,
+        }))
     }
 }
 
@@ -356,6 +456,14 @@ impl LinearOp for AffineOp {
     fn diag(&self) -> Option<Vec<f64>> {
         affine_diag(self.inner.as_ref(), self.scale, self.shift)
     }
+
+    fn as_f32(&self) -> Option<Box<dyn LinearOpF32 + '_>> {
+        Some(Box::new(AffineF32 {
+            inner: self.inner.as_f32()?,
+            scale: self.scale as f32,
+            shift: self.shift as f32,
+        }))
+    }
 }
 
 /// Borrowed [`AffineOp`]: `scale·A + shift·I` over an operator the
@@ -388,6 +496,14 @@ impl LinearOp for AffineRef<'_> {
 
     fn diag(&self) -> Option<Vec<f64>> {
         affine_diag(self.inner, self.scale, self.shift)
+    }
+
+    fn as_f32(&self) -> Option<Box<dyn LinearOpF32 + '_>> {
+        Some(Box::new(AffineF32 {
+            inner: self.inner.as_f32()?,
+            scale: self.scale as f32,
+            shift: self.shift as f32,
+        }))
     }
 }
 
@@ -423,6 +539,10 @@ impl<T: LinearOp> LinearOp for ArcOp<T> {
 
     fn to_dense(&self) -> Matrix {
         self.0.to_dense()
+    }
+
+    fn as_f32(&self) -> Option<Box<dyn LinearOpF32 + '_>> {
+        self.0.as_f32()
     }
 }
 
@@ -487,6 +607,37 @@ impl LinearOp for SumOp {
             }
         }
         Some(out)
+    }
+
+    /// Available iff every summand has an f32 view (all-or-nothing: a
+    /// partially-f32 sum would silently mix precisions term by term).
+    fn as_f32(&self) -> Option<Box<dyn LinearOpF32 + '_>> {
+        let views: Option<Vec<_>> = self.terms.iter().map(|t| t.as_f32()).collect();
+        Some(Box::new(SumF32 { n: self.dim(), terms: views? }))
+    }
+}
+
+/// f32 mirror of [`SumOp`]: summand views accumulated in term order.
+struct SumF32<'a> {
+    n: usize,
+    terms: Vec<Box<dyn LinearOpF32 + 'a>>,
+}
+
+impl LinearOpF32 for SumF32<'_> {
+    fn dim(&self) -> usize {
+        self.n
+    }
+
+    fn matvec_f32(&self, v: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; v.len()];
+        for t in &self.terms {
+            debug_assert_eq!(t.dim(), v.len());
+            let tv = t.matvec_f32(v);
+            for (o, x) in out.iter_mut().zip(tv) {
+                *o += x;
+            }
+        }
+        out
     }
 }
 

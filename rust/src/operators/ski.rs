@@ -4,7 +4,7 @@
 //! O(n + m log m) — the building block SKIP multiplies together.
 
 use super::interp::{Grid1d, InterpMatrix};
-use super::LinearOp;
+use super::{LinearOp, LinearOpF32};
 use crate::kernels::Stationary1d;
 use crate::linalg::{Matrix, SymToeplitz};
 use crate::Result;
@@ -54,9 +54,34 @@ impl SkiOp {
     }
 }
 
+/// Per-solve f32 mirror of [`SkiOp`]: owned f32 stencil weights plus the
+/// Toeplitz factor's lazily cached f32 spectrum. Built fresh by
+/// [`LinearOp::as_f32`] so there is no cache to invalidate when operators
+/// are rebuilt.
+struct SkiF32<'a> {
+    op: &'a SkiOp,
+    w32: Vec<f32>,
+}
+
+impl LinearOpF32 for SkiF32<'_> {
+    fn dim(&self) -> usize {
+        self.op.w.n
+    }
+
+    fn matvec_f32(&self, v: &[f32]) -> Vec<f32> {
+        let t = self.op.w.t_matvec_f32_with(&self.w32, v);
+        let t = self.op.kuu.matvec_f32(&t);
+        self.op.w.matvec_f32_with(&self.w32, &t)
+    }
+}
+
 impl LinearOp for SkiOp {
     fn dim(&self) -> usize {
         self.w.n
+    }
+
+    fn as_f32(&self) -> Option<Box<dyn LinearOpF32 + '_>> {
+        Some(Box::new(SkiF32 { op: self, w32: self.w.weights_f32() }))
     }
 
     fn matvec(&self, v: &[f64]) -> Vec<f64> {

@@ -46,6 +46,7 @@
 
 use super::cg::CgConfig;
 use super::precond::{build_preconditioner, Preconditioner};
+use super::refine::{refined_cg_solve, Precision};
 use crate::linalg::{axpy, dot, norm2, Matrix};
 use crate::operators::LinearOp;
 
@@ -122,6 +123,9 @@ pub fn block_cg_solve_with(
     let n = a.dim();
     assert_eq!(b.rows, n, "block_cg: rhs row count must match operator dim");
     assert_eq!(m.dim(), n, "block_cg: preconditioner dim must match operator");
+    if cfg.precision == Precision::Mixed {
+        return block_refined_solve(a, b, m, x0, cfg);
+    }
     let solver = if m.name() == "identity" { "block_cg" } else { "block_pcg" };
     let t = b.cols;
     let x0 = x0.filter(|x| x.rows == n && x.cols == t);
@@ -281,6 +285,41 @@ pub fn block_cg_solve_with(
     }
     g.observe(&format!("solver.{solver}.matmats"), matmats as u64);
     BlockCgSolution { x, columns, matmats }
+}
+
+/// Mixed-precision block route: iterative refinement has no lockstep
+/// block recurrence (each column's outer loop corrects on its own
+/// schedule), so [`Precision::Mixed`] solves the columns independently
+/// through [`refined_cg_solve`] — every column still meets its own
+/// `‖r_j‖_{M⁻¹} ≤ tol·‖b_j‖_{M⁻¹}` certificate. The fused-`matmat`
+/// accounting (`matmats`) applies only to the f64 block engine and
+/// reports 0 here.
+fn block_refined_solve(
+    a: &dyn LinearOp,
+    b: &Matrix,
+    m: &dyn Preconditioner,
+    x0: Option<&Matrix>,
+    cfg: CgConfig,
+) -> BlockCgSolution {
+    let n = a.dim();
+    let t = b.cols;
+    let x0 = x0.filter(|x| x.rows == n && x.cols == t);
+    let mut x = Matrix::zeros(n, t);
+    let mut columns = Vec::with_capacity(t);
+    for j in 0..t {
+        let bj = b.col(j);
+        // Match the f64 block path's seed semantics: a zero seed column
+        // is a cold start, not a warm one.
+        let seed = x0.map(|x0| x0.col(j)).filter(|s| norm2(s) > 0.0);
+        let sol = refined_cg_solve(a, &bj, m, seed.as_deref(), cfg);
+        x.set_col(j, &sol.x);
+        columns.push(BlockCgColumn {
+            iters: sol.iters,
+            rel_residual: sol.rel_residual,
+            converged: sol.converged,
+        });
+    }
+    BlockCgSolution { x, columns, matmats: 0 }
 }
 
 #[cfg(test)]

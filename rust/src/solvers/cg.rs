@@ -51,6 +51,7 @@
 //! ```
 
 use super::precond::{build_preconditioner, Preconditioner, PrecondSpec};
+use super::refine::{refined_cg_solve, Precision};
 use crate::linalg::{axpy, dot, norm2};
 use crate::operators::LinearOp;
 
@@ -69,11 +70,21 @@ pub struct CgConfig {
     ///
     /// [`block_cg_solve`]: super::block_cg::block_cg_solve
     pub precond: PrecondSpec,
+    /// Arithmetic policy: [`Precision::F64`] (default, historical path,
+    /// bitwise unchanged) or [`Precision::Mixed`] (f32 operator storage
+    /// under f64 iterative refinement — same residual certificate, see
+    /// [`super::refine`]).
+    pub precision: Precision,
 }
 
 impl Default for CgConfig {
     fn default() -> Self {
-        CgConfig { max_iters: 200, tol: 1e-8, precond: PrecondSpec::None }
+        CgConfig {
+            max_iters: 200,
+            tol: 1e-8,
+            precond: PrecondSpec::None,
+            precision: Precision::F64,
+        }
     }
 }
 
@@ -121,7 +132,28 @@ pub fn cg_solve(a: &dyn LinearOp, b: &[f64], cfg: CgConfig) -> CgSolution {
 /// the tolerance is returned **bitwise unchanged** with `iters == 0`.
 /// Warm starts never change the limit the iteration converges to; only
 /// where it starts.
+///
+/// [`CgConfig::precision`] selects the arithmetic: `F64` runs the classic
+/// recurrence below bitwise unchanged; `Mixed` routes through
+/// [`refined_cg_solve`](super::refine::refined_cg_solve) — f32 inner
+/// iterations under an f64 refinement loop meeting the same certificate.
 pub fn cg_solve_with(
+    a: &dyn LinearOp,
+    b: &[f64],
+    m: &dyn Preconditioner,
+    x0: Option<&[f64]>,
+    cfg: CgConfig,
+) -> CgSolution {
+    match cfg.precision {
+        Precision::F64 => cg_solve_f64(a, b, m, x0, cfg),
+        Precision::Mixed => refined_cg_solve(a, b, m, x0, cfg),
+    }
+}
+
+/// The f64 PCG recurrence behind [`cg_solve_with`] — also the certifying
+/// fallback of the mixed-precision path (`super::refine`), which must
+/// reach it *without* re-entering the precision router.
+pub(crate) fn cg_solve_f64(
     a: &dyn LinearOp,
     b: &[f64],
     m: &dyn Preconditioner,

@@ -53,8 +53,12 @@
 //! metrics summary.
 
 use super::cg::CgConfig;
+use super::refine::{
+    dot32, to_f64, Precision, INNER_TOL, MAX_OUTER, MIN_CONTRACTION,
+};
 use crate::linalg::{axpy, dot, norm2};
-use crate::operators::KroneckerSkiOp;
+use crate::operators::kronecker::GramF32;
+use crate::operators::{KronSkiF32, KroneckerSkiOp};
 use crate::{Error, Result};
 use std::sync::Arc;
 
@@ -285,7 +289,29 @@ pub fn grid_cg_solve(
 /// data-space α. Mismatched lengths are dropped (cold start), mirroring
 /// [`cg_solve_with`](super::cg_solve_with); a seed already inside
 /// tolerance returns bitwise with 0 iterations.
+///
+/// [`CgConfig::precision`] routes the arithmetic exactly as in data
+/// space: `F64` runs the recurrence below bitwise unchanged, `Mixed`
+/// runs f32 inner grid iterations (f32 Gram band + f32 Toeplitz
+/// spectra) under an f64 refinement loop that certifies on the same
+/// `‖r‖_G ≤ tol·σ_n²·‖y‖` threshold.
 pub fn grid_cg_solve_with_wty(
+    sys: &GridSystem,
+    y: &[f64],
+    wty: &[f64],
+    x0: Option<&[f64]>,
+    cfg: CgConfig,
+) -> GridSolution {
+    match cfg.precision {
+        Precision::F64 => grid_cg_solve_f64(sys, y, wty, x0, cfg),
+        Precision::Mixed => grid_refined_solve(sys, y, wty, x0, cfg),
+    }
+}
+
+/// The f64 grid-space recurrence behind [`grid_cg_solve_with_wty`] —
+/// also the certifying fallback of the mixed path, reached without
+/// re-entering the precision router.
+fn grid_cg_solve_f64(
     sys: &GridSystem,
     y: &[f64],
     wty: &[f64],
@@ -387,6 +413,254 @@ pub fn grid_cg_solve_with_wty(
     crate::coordinator::metrics::record_solver("gridcg", iters, converged);
     let alpha = sys.recover_alpha(y, &x);
     GridSolution { alpha, v: x, iters, rel_residual: rel, converged }
+}
+
+/// Per-solve f32 view of a [`GridSystem`]: the banded Gram's f32 band
+/// (single-term) or per-term f32 stencil views (multi-term composition),
+/// plus the f32 Toeplitz spectra cached inside each factor.
+struct GridSystemF32<'a> {
+    sys: &'a GridSystem,
+    /// Per-term stencil views — only built for multi-term systems, where
+    /// `G` is applied as the composition `Wᵀ(W u)`.
+    views: Vec<KronSkiF32<'a>>,
+    /// Banded `WᵀW` in f32 — the single-term fast path.
+    gram: Option<GramF32<'a>>,
+    /// Per-term `c_t · σ_t²` as f32.
+    kscales: Vec<f32>,
+    sf2: f32,
+    sn2: f32,
+}
+
+impl<'a> GridSystemF32<'a> {
+    fn new(sys: &'a GridSystem) -> Self {
+        let gram = if sys.terms.len() == 1 {
+            Some(
+                sys.terms[0]
+                    .1
+                    .grid_space_op()
+                    .expect("validated at construction")
+                    .f32_view(),
+            )
+        } else {
+            None
+        };
+        let views = if gram.is_some() {
+            Vec::new()
+        } else {
+            sys.terms.iter().map(|(_, op)| op.f32_view()).collect()
+        };
+        let kscales = sys
+            .terms
+            .iter()
+            .map(|(c, op)| (c * op.outputscale()) as f32)
+            .collect();
+        GridSystemF32 {
+            sys,
+            views,
+            gram,
+            kscales,
+            sf2: sys.sf2 as f32,
+            sn2: sys.sn2 as f32,
+        }
+    }
+
+    /// `G u` in f32 (banded or composed — mirrors [`GridSystem::apply_g`]).
+    fn apply_g_f32(&self, u: &[f32]) -> Vec<f32> {
+        if let Some(gram) = &self.gram {
+            return gram.apply_f32(u);
+        }
+        let mut data = vec![0.0f32; self.sys.n];
+        for (t, view) in self.views.iter().enumerate() {
+            let block = &u[self.sys.offsets[t]..self.sys.offsets[t + 1]];
+            for (o, x) in data.iter_mut().zip(view.w_matvec_f32(block)) {
+                *o += x;
+            }
+        }
+        let mut out = Vec::with_capacity(self.sys.m_big);
+        for view in &self.views {
+            out.extend_from_slice(&view.wt_matvec_f32(&data));
+        }
+        out
+    }
+
+    /// `B u = σ_f²·K·gu + σ_n²·u` in f32, with a caller-held `gu = G u`.
+    fn apply_b_given_g_f32(&self, u: &[f32], gu: &[f32]) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.sys.m_big);
+        for (t, (_, op)) in self.sys.terms.iter().enumerate() {
+            let block = &gu[self.sys.offsets[t]..self.sys.offsets[t + 1]];
+            let mut part = op.kron_matvec_f32(block);
+            let scale = self.kscales[t];
+            if scale != 1.0 {
+                for p in part.iter_mut() {
+                    *p *= scale;
+                }
+            }
+            out.extend_from_slice(&part);
+        }
+        for (o, &uu) in out.iter_mut().zip(u) {
+            *o = self.sf2 * *o + self.sn2 * uu;
+        }
+        out
+    }
+}
+
+/// Inner f32 grid CG: solves `B d ≈ r` to [`INNER_TOL`] in the G-norm,
+/// f64-accumulated scalars — the grid-space analogue of the inner solve
+/// in [`super::refine`]. Unpreconditioned, exactly like the f64 grid
+/// recurrence. Returns the correction in f64 plus iterations run.
+fn inner_grid_cg_f32(f: &GridSystemF32, r: &[f64], max_iters: usize) -> (Vec<f64>, usize) {
+    let m = r.len();
+    let mut resid: Vec<f32> = r.iter().map(|&v| v as f32).collect();
+    let mut x = vec![0.0f32; m];
+    let mut gr = f.apply_g_f32(&resid);
+    let mut rz = dot32(&resid, &gr).max(0.0);
+    let bnorm = rz.sqrt();
+    if bnorm == 0.0 || !bnorm.is_finite() {
+        return (to_f64(&x), 0);
+    }
+    let mut p = resid.clone();
+    let mut gp = gr.clone();
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        iters += 1;
+        let bp = f.apply_b_given_g_f32(&p, &gp);
+        let pbp = dot32(&gp, &bp);
+        if pbp.is_nan() || pbp <= 0.0 {
+            break;
+        }
+        let alpha = (rz / pbp) as f32;
+        for (xi, &pi) in x.iter_mut().zip(&p) {
+            *xi += alpha * pi;
+        }
+        for (ri, &bi) in resid.iter_mut().zip(&bp) {
+            *ri -= alpha * bi;
+        }
+        gr = f.apply_g_f32(&resid);
+        let rz_new = dot32(&resid, &gr).max(0.0);
+        if rz_new.sqrt() <= INNER_TOL * bnorm {
+            break;
+        }
+        let beta = (rz_new / rz) as f32;
+        for (pi, &ri) in p.iter_mut().zip(&resid) {
+            *pi = ri + beta * *pi;
+        }
+        for (gpi, &gri) in gp.iter_mut().zip(&gr) {
+            *gpi = gri + beta * *gpi;
+        }
+        rz = rz_new;
+    }
+    (to_f64(&x), iters)
+}
+
+/// Mixed-precision grid solve: f32 inner grid CG sweeps under an f64
+/// refinement loop certifying the same `‖r‖_G ≤ tol·σ_n²·‖y‖` threshold
+/// as [`grid_cg_solve_f64`]. Stalls and sweep-budget exhaustion fall
+/// back to the f64 recurrence seeded with the refined iterate.
+fn grid_refined_solve(
+    sys: &GridSystem,
+    y: &[f64],
+    wty: &[f64],
+    x0: Option<&[f64]>,
+    cfg: CgConfig,
+) -> GridSolution {
+    let m = sys.grid_dim();
+    assert_eq!(y.len(), sys.data_dim());
+    assert_eq!(wty.len(), m);
+    let g = crate::coordinator::metrics::global();
+    g.incr("solver.space.grid", 1);
+    let ny = norm2(y);
+    if ny == 0.0 {
+        crate::coordinator::metrics::record_solver("refine", 0, true);
+        return GridSolution {
+            alpha: vec![0.0; sys.data_dim()],
+            v: vec![0.0; m],
+            iters: 0,
+            rel_residual: 0.0,
+            converged: true,
+        };
+    }
+    let threshold = cfg.tol * sys.noise() * ny;
+    let denom = sys.noise() * ny;
+    let c = sys.rhs_from_wty(wty);
+    let x0 = x0.filter(|x| x.len() == m);
+    let seeded = x0.is_some();
+    if seeded {
+        g.incr("solver.warm.seeded", 1);
+    }
+    let (mut x, mut r) = match x0 {
+        Some(x0) => {
+            let gx = sys.apply_g(x0);
+            let bx = sys.apply_b_given_g(x0, &gx);
+            let r: Vec<f64> = c.iter().zip(&bx).map(|(ci, bi)| ci - bi).collect();
+            (x0.to_vec(), r)
+        }
+        None => (vec![0.0; m], c.clone()),
+    };
+    let gr = sys.apply_g(&r);
+    let mut rz = dot(&r, &gr).max(0.0);
+    if rz.sqrt() <= threshold {
+        // Same entry short-circuits as the f64 path: warm seeds inside
+        // tolerance return bitwise; a zero-G-norm RHS solves exactly.
+        if seeded {
+            g.incr("solver.warm.hit", 1);
+        } else if rz == 0.0 {
+            for (xi, &ci) in x.iter_mut().zip(&c) {
+                *xi = ci / sys.noise();
+            }
+        }
+        crate::coordinator::metrics::record_solver("refine", 0, true);
+        let alpha = sys.recover_alpha(y, &x);
+        return GridSolution {
+            alpha,
+            v: x,
+            iters: 0,
+            rel_residual: rz.sqrt() / denom,
+            converged: true,
+        };
+    }
+    let f32v = GridSystemF32::new(sys);
+    let mut inner_total = 0usize;
+    let mut sweeps = 0usize;
+    let mut converged = false;
+    for _ in 0..MAX_OUTER {
+        sweeps += 1;
+        let (d, it) = inner_grid_cg_f32(&f32v, &r, cfg.max_iters);
+        inner_total += it;
+        axpy(1.0, &d, &mut x);
+        // True f64 residual r = c − B x — the certificate only ever
+        // consults f64 arithmetic.
+        let gx = sys.apply_g(&x);
+        let bx = sys.apply_b_given_g(&x, &gx);
+        for ((ri, &ci), &bi) in r.iter_mut().zip(&c).zip(&bx) {
+            *ri = ci - bi;
+        }
+        let gr = sys.apply_g(&r);
+        let rz_new = dot(&r, &gr).max(0.0);
+        if rz_new.sqrt() <= threshold {
+            rz = rz_new;
+            converged = true;
+            break;
+        }
+        if !rz_new.is_finite() || rz_new.sqrt() > MIN_CONTRACTION * rz.sqrt() {
+            g.incr("solver.refine.fallback.stall", 1);
+            g.incr("solver.refine.sweeps", sweeps as u64);
+            crate::coordinator::metrics::record_solver("refine", inner_total, false);
+            let seed = if rz_new.is_finite() && rz_new < rz { Some(&x[..]) } else { x0 };
+            return grid_cg_solve_f64(sys, y, wty, seed, cfg);
+        }
+        rz = rz_new;
+    }
+    if !converged {
+        g.incr("solver.refine.fallback.sweep_budget", 1);
+        g.incr("solver.refine.sweeps", sweeps as u64);
+        crate::coordinator::metrics::record_solver("refine", inner_total, false);
+        return grid_cg_solve_f64(sys, y, wty, Some(&x), cfg);
+    }
+    let rel = rz.sqrt() / denom;
+    g.incr("solver.refine.sweeps", sweeps as u64);
+    crate::coordinator::metrics::record_solver("refine", inner_total, true);
+    let alpha = sys.recover_alpha(y, &x);
+    GridSolution { alpha, v: x, iters: inner_total, rel_residual: rel, converged: true }
 }
 
 #[cfg(test)]
@@ -523,6 +797,69 @@ mod tests {
             "{}",
             rel_err(&grid.alpha, &want)
         );
+    }
+
+    #[test]
+    fn mixed_precision_grid_solve_meets_f64_certificate() {
+        let (_, op) = dense_term(90, 57);
+        let (sf2, sn2) = (1.3, 0.25);
+        let terms = vec![(1.0, op)];
+        let cov = Cov { terms: terms.clone(), sf2, sn2 };
+        let sys = GridSystem::new(terms, sf2, sn2).unwrap();
+        let mut rng = Rng::new(58);
+        let y = rng.normal_vec(90);
+        let cfg = CgConfig { max_iters: 600, tol: 1e-8, ..CgConfig::default() };
+        let gold = grid_cg_solve(&sys, &y, None, cfg);
+        let mixed = grid_cg_solve(
+            &sys,
+            &y,
+            None,
+            CgConfig { precision: Precision::Mixed, ..cfg },
+        );
+        assert!(gold.converged && mixed.converged, "rel {}", mixed.rel_residual);
+        // Same certificate as f64 — and the recovered α agrees far
+        // tighter than f32 storage alone could deliver.
+        assert!(mixed.rel_residual <= 1e-8, "rel {}", mixed.rel_residual);
+        assert!(
+            rel_err(&mixed.alpha, &gold.alpha) < 1e-6,
+            "α drift {}",
+            rel_err(&mixed.alpha, &gold.alpha)
+        );
+        let back = cov.matvec(&mixed.alpha);
+        assert!(rel_err(&back, &y) < 1e-7);
+    }
+
+    #[test]
+    fn mixed_precision_multi_term_composition_path() {
+        // Signed sparse-grid shape: the f32 G must run the Wᵀ(W u)
+        // composition (no banded Gram for multi-term systems).
+        let xs = random_points(60, 2, 59);
+        let kern = ProductKernel::rbf(2, 0.7, 1.0);
+        let fine = vec![
+            crate::grid::Grid1d::fit(-1.0, 1.0, 12).unwrap(),
+            crate::grid::Grid1d::fit_any(-1.0, 1.0, 3).unwrap(),
+        ];
+        let coarse = vec![
+            crate::grid::Grid1d::fit_any(-1.0, 1.0, 3).unwrap(),
+            crate::grid::Grid1d::fit_any(-1.0, 1.0, 3).unwrap(),
+        ];
+        let t1 = Arc::new(KroneckerSkiOp::with_grids(&xs, &kern, fine));
+        let t2 = Arc::new(KroneckerSkiOp::with_grids(&xs, &kern, coarse));
+        let terms = vec![(1.0, t1), (-0.3, t2)];
+        let (sf2, sn2) = (1.0, 1.0);
+        let sys = GridSystem::new(terms, sf2, sn2).unwrap();
+        let mut rng = Rng::new(60);
+        let y = rng.normal_vec(60);
+        let cfg = CgConfig { max_iters: 600, tol: 1e-8, ..CgConfig::default() };
+        let gold = grid_cg_solve(&sys, &y, None, cfg);
+        let mixed = grid_cg_solve(
+            &sys,
+            &y,
+            None,
+            CgConfig { precision: Precision::Mixed, ..cfg },
+        );
+        assert!(gold.converged && mixed.converged, "rel {}", mixed.rel_residual);
+        assert!(rel_err(&mixed.alpha, &gold.alpha) < 1e-6);
     }
 
     #[test]

@@ -1,9 +1,10 @@
 //! Iterative Krylov solvers: preconditioned CG (single and block
 //! multi-RHS, with warm starts), Lanczos (single and batched-probe),
 //! stochastic Lanczos quadrature — plus the preconditioners themselves
-//! ([`precond`]: identity / Jacobi / partial pivoted Cholesky) and the
+//! ([`precond`]: identity / Jacobi / partial pivoted Cholesky), the
 //! grid-space normal-equations engine ([`gridspace`]), whose per-iteration
-//! cost is independent of n.
+//! cost is independent of n, and the mixed-precision refinement wrapper
+//! ([`refine`]) that runs the hot MVMs in f32 under an f64 outer loop.
 //!
 //! Tuning the solvers (tolerance vs. preconditioner rank vs. warm
 //! starts, and how to read the p50/p99 solver-effort summary lines) is
@@ -14,6 +15,7 @@ pub mod cg;
 pub mod gridspace;
 pub mod lanczos;
 pub mod precond;
+pub mod refine;
 pub mod slq;
 
 pub use block_cg::{block_cg_solve, block_cg_solve_with, BlockCgColumn, BlockCgSolution};
@@ -26,4 +28,5 @@ pub use precond::{
     build_preconditioner, IdentityPrecond, JacobiPrecond, PaddedPrecond,
     PivotedCholeskyPrecond, PrecondCost, PrecondSpec, Preconditioner,
 };
+pub use refine::{raw_cg_f32, refined_cg_solve, Precision};
 pub use slq::{hutchinson_trace_inv_prod, slq_logdet, slq_trace_fn, SlqConfig};

@@ -1,0 +1,407 @@
+//! Mixed-precision iterative refinement for MVM solves.
+//!
+//! The MVM bottleneck of SKI/SKIP inference is memory bandwidth: the
+//! stencil weights, Toeplitz spectra, and Gram bands stream through the
+//! cache once per CG iteration. Storing them in f32 halves that traffic —
+//! but raw f32 CG cannot certify the tolerances GP training asks for
+//! (attainable relative residual scales like `eps32 · κ(A)`, which for a
+//! small-noise covariance is ≥ 1). Classic iterative refinement squares
+//! that circle:
+//!
+//! 1. **inner**: solve `A d ≈ r` in f32 arithmetic against the operator's
+//!    f32 mirror ([`crate::operators::LinearOpF32`]), preconditioned by
+//!    the caller's f64 preconditioner (applied through conversion — this
+//!    collapses the condition number the f32 recurrence sees);
+//! 2. **outer**: in f64, update `x += d`, recompute the *true* residual
+//!    `r = b − A x` with the f64 operator, and test the same
+//!    `‖r‖_{M⁻¹} ≤ tol · ‖b‖_{M⁻¹}` certificate the f64 path pins.
+//!
+//! Each outer sweep multiplies the residual by roughly the inner solve's
+//! relative tolerance, so a handful of sweeps reach f64-grade tolerances
+//! while every hot MVM runs at f32 bandwidth. If the inner solve stalls
+//! (residual stops contracting — pathological conditioning the
+//! preconditioner did not capture), the solve falls back to plain f64 CG
+//! seeded with the current iterate, so the certificate holds
+//! unconditionally.
+//!
+//! Entry is by configuration, not call site: [`Precision::Mixed`] on
+//! [`CgConfig`] routes [`super::cg_solve_with`],
+//! [`super::block_cg_solve_with`], and the grid-space solver through this
+//! module; [`Precision::F64`] (the default) leaves the historical path
+//! bitwise untouched.
+
+use super::cg::{cg_solve_f64, CgConfig, CgSolution};
+use super::precond::Preconditioner;
+use crate::linalg::{axpy, dot, norm2};
+use crate::operators::{LinearOp, LinearOpF32};
+
+/// Arithmetic policy for iterative solves (`--precision` on the CLI).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Pure f64 — the historical path, bitwise unchanged.
+    #[default]
+    F64,
+    /// f32 operator storage with an f64-refined outer loop; meets the
+    /// same residual certificate as [`Precision::F64`] (falls back to
+    /// f64 CG when the operator has no f32 mirror or the inner solve
+    /// stalls).
+    Mixed,
+}
+
+impl Precision {
+    /// Parse a CLI/config token (`f64`/`double`, `mixed`/`f32`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f64" | "double" => Some(Precision::F64),
+            "mixed" | "f32" => Some(Precision::Mixed),
+            _ => None,
+        }
+    }
+
+    /// Canonical token, mirror of [`Precision::parse`].
+    pub fn describe(&self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::Mixed => "mixed",
+        }
+    }
+}
+
+/// Outer refinement sweeps before declaring a stall. Each sweep contracts
+/// the residual by ~[`INNER_TOL`], so certified tolerances down to
+/// ~1e-12 need 3-4 sweeps; hitting this cap means the inner solver is
+/// not converging and the f64 fallback takes over.
+pub(crate) const MAX_OUTER: usize = 10;
+
+/// Relative tolerance of the inner f32 solve — loose on purpose: a few
+/// digits per sweep is the efficient operating point of refinement, and
+/// f32 cannot certify much tighter anyway.
+pub(crate) const INNER_TOL: f64 = 1e-4;
+
+/// Minimum factor the preconditioned residual must shrink by per outer
+/// sweep; anything less is a stall.
+pub(crate) const MIN_CONTRACTION: f64 = 0.5;
+
+/// f64-accumulated dot product of two f32 vectors — the accuracy anchor
+/// of the inner recurrence (f32 dot products lose ~`√n` ulps, enough to
+/// destabilize CG scalars at n = 10⁵⁺).
+pub(crate) fn dot32(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+pub(crate) fn to_f32(v: &[f64]) -> Vec<f32> {
+    v.iter().map(|&x| x as f32).collect()
+}
+
+pub(crate) fn to_f64(v: &[f32]) -> Vec<f64> {
+    v.iter().map(|&x| x as f64).collect()
+}
+
+/// Apply the f64 preconditioner to an f32 vector (convert → apply →
+/// convert). The extra f64 work here is per-*vector*, not per-operator
+/// entry, so it does not erode the bandwidth win.
+fn precond_f32(m: &dyn Preconditioner, r: &[f32]) -> Vec<f32> {
+    to_f32(&m.apply(&to_f64(r)))
+}
+
+/// Inner preconditioned CG in f32 arithmetic: solves `A d ≈ r` to
+/// [`INNER_TOL`] with f64-accumulated scalars. Returns the correction in
+/// f64 plus the iteration count. Never consulted for a certificate —
+/// only the outer f64 residual is.
+fn inner_pcg_f32(
+    a32: &dyn LinearOpF32,
+    m: &dyn Preconditioner,
+    r: &[f64],
+    max_iters: usize,
+) -> (Vec<f64>, usize) {
+    let n = a32.dim();
+    let rf = to_f32(r);
+    let mut x = vec![0.0f32; n];
+    let mut resid = rf;
+    let mut z = precond_f32(m, &resid);
+    let mut rz = dot32(&resid, &z).max(0.0);
+    let bnorm = rz.sqrt();
+    if bnorm == 0.0 || !bnorm.is_finite() {
+        return (to_f64(&x), 0);
+    }
+    let mut p = z.clone();
+    let mut iters = 0;
+    for _ in 0..max_iters {
+        iters += 1;
+        let ap = a32.matvec_f32(&p);
+        let pap = dot32(&p, &ap);
+        if pap.is_nan() || pap <= 0.0 {
+            // Indefinite to f32 precision (or NaN) — stop with the
+            // current correction; the outer loop decides what it earned.
+            break;
+        }
+        let alpha = (rz / pap) as f32;
+        for (xi, &pi) in x.iter_mut().zip(&p) {
+            *xi += alpha * pi;
+        }
+        for (ri, &api) in resid.iter_mut().zip(&ap) {
+            *ri -= alpha * api;
+        }
+        z = precond_f32(m, &resid);
+        let rz_new = dot32(&resid, &z).max(0.0);
+        if rz_new.sqrt() <= INNER_TOL * bnorm {
+            break;
+        }
+        let beta = (rz_new / rz) as f32;
+        for (pi, &zi) in p.iter_mut().zip(&z) {
+            *pi = zi + beta * *pi;
+        }
+        rz = rz_new;
+    }
+    (to_f64(&x), iters)
+}
+
+/// Solve `A x = b` by mixed-precision iterative refinement, meeting the
+/// same preconditioned-residual certificate as
+/// [`cg_solve_with`](super::cg_solve_with):
+/// `‖b − A x‖_{M⁻¹} ≤ tol · ‖b‖_{M⁻¹}`, measured with the f64 operator.
+///
+/// Routing rules match the f64 path: a zero right-hand side returns
+/// immediately; a warm-start seed already inside the tolerance is
+/// returned **bitwise unchanged** with `iters == 0`. Operators without an
+/// f32 mirror ([`LinearOp::as_f32`] = `None`) and inner-solve stalls fall
+/// back to [`cg_solve_f64`] (seeded with the current iterate), counted
+/// under `solver.refine.fallback.*`.
+///
+/// Metrics: `solver.refine.iters` (inner f32 iterations, via
+/// `record_solver`), `solver.refine.sweeps` (outer corrections),
+/// `solver.refine.rel_residual_neg_log10` (achieved certificate).
+pub fn refined_cg_solve(
+    a: &dyn LinearOp,
+    b: &[f64],
+    m: &dyn Preconditioner,
+    x0: Option<&[f64]>,
+    cfg: CgConfig,
+) -> CgSolution {
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    assert_eq!(m.dim(), n, "preconditioner dimension must match operator");
+    let g = crate::coordinator::metrics::global();
+    let a32 = match a.as_f32() {
+        Some(view) => view,
+        None => {
+            // No f32 mirror anywhere in the operator composition — run
+            // the solve the classic way and say so in the metrics.
+            g.incr("solver.refine.fallback.no_f32", 1);
+            return cg_solve_f64(a, b, m, x0, cfg);
+        }
+    };
+    let nb = norm2(b);
+    if nb == 0.0 {
+        crate::coordinator::metrics::record_solver("refine", 0, true);
+        return CgSolution { x: vec![0.0; n], iters: 0, rel_residual: 0.0, converged: true };
+    }
+    let zb = m.apply(b);
+    let bnorm_m = dot(b, &zb).max(0.0).sqrt();
+    let x0 = x0.filter(|x| x.len() == n);
+    let seeded = x0.is_some();
+    let (mut x, mut r) = match x0 {
+        Some(x0) => {
+            let ax = a.matvec(x0);
+            let r: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+            (x0.to_vec(), r)
+        }
+        None => (vec![0.0; n], b.to_vec()),
+    };
+    if seeded {
+        g.incr("solver.warm.seeded", 1);
+    }
+    let rnorm_of = |r: &[f64]| {
+        let z = m.apply(r);
+        dot(r, &z).max(0.0).sqrt()
+    };
+    let mut rnorm = rnorm_of(&r);
+    let threshold = cfg.tol * bnorm_m;
+    if rnorm <= threshold {
+        // Zero sweeps: cold zero-seed with an easy b, or a warm seed
+        // already inside the tolerance (returned bitwise, matching the
+        // f64 path's warm-start guarantee).
+        if seeded {
+            g.incr("solver.warm.hit", 1);
+        }
+        crate::coordinator::metrics::record_solver("refine", 0, true);
+        let rel = if bnorm_m > 0.0 { rnorm / bnorm_m } else { 0.0 };
+        return CgSolution { x, iters: 0, rel_residual: rel, converged: true };
+    }
+    let mut inner_total = 0usize;
+    let mut sweeps = 0usize;
+    let mut converged = false;
+    for _ in 0..MAX_OUTER {
+        sweeps += 1;
+        let (d, it) = inner_pcg_f32(a32.as_ref(), m, &r, cfg.max_iters);
+        inner_total += it;
+        axpy(1.0, &d, &mut x);
+        // True residual, f64 operator: refinement certifies on this, not
+        // on anything the f32 recurrence believes.
+        let ax = a.matvec(&x);
+        for ((ri, &bi), &axi) in r.iter_mut().zip(b).zip(&ax) {
+            *ri = bi - axi;
+        }
+        let rnorm_new = rnorm_of(&r);
+        if rnorm_new <= threshold {
+            rnorm = rnorm_new;
+            converged = true;
+            break;
+        }
+        if !rnorm_new.is_finite() || rnorm_new > MIN_CONTRACTION * rnorm {
+            // Stalled: the f32 inner solve is no longer contracting the
+            // f64 residual. Hand the current iterate to f64 CG, which
+            // certifies unconditionally.
+            g.incr("solver.refine.fallback.stall", 1);
+            g.incr("solver.refine.sweeps", sweeps as u64);
+            crate::coordinator::metrics::record_solver("refine", inner_total, false);
+            let seed = if rnorm_new.is_finite() && rnorm_new < rnorm { Some(&x[..]) } else { x0 };
+            return cg_solve_f64(a, b, m, seed, cfg);
+        }
+        rnorm = rnorm_new;
+    }
+    if !converged {
+        // Out of sweeps — certify with f64 CG from the refined iterate.
+        g.incr("solver.refine.fallback.sweep_budget", 1);
+        g.incr("solver.refine.sweeps", sweeps as u64);
+        crate::coordinator::metrics::record_solver("refine", inner_total, false);
+        return cg_solve_f64(a, b, m, Some(&x), cfg);
+    }
+    let rel = if bnorm_m > 0.0 { rnorm / bnorm_m } else { 0.0 };
+    g.incr("solver.refine.sweeps", sweeps as u64);
+    if rel > 0.0 {
+        g.observe("solver.refine.rel_residual_neg_log10", (-rel.log10()).max(0.0) as u64);
+    }
+    crate::coordinator::metrics::record_solver("refine", inner_total, true);
+    CgSolution { x, iters: inner_total, rel_residual: rel, converged: true }
+}
+
+/// Raw unpreconditioned f32 CG — **diagnostic only**. This is the solver
+/// refinement exists to avoid: its attainable residual floors out near
+/// `eps32 · κ(A)`, so on small-noise covariances it stalls far above any
+/// useful tolerance (the property tests pin exactly that). Returns `None`
+/// when the operator has no f32 mirror. The reported `rel_residual` is
+/// the *true* f64 relative residual `‖b − A x‖/‖b‖`.
+pub fn raw_cg_f32(a: &dyn LinearOp, b: &[f64], cfg: CgConfig) -> Option<CgSolution> {
+    let a32 = a.as_f32()?;
+    let n = a.dim();
+    assert_eq!(b.len(), n);
+    let bf = to_f32(b);
+    let mut x = vec![0.0f32; n];
+    let mut r = bf;
+    let mut rz = dot32(&r, &r).max(0.0);
+    let bnorm = rz.sqrt();
+    let mut iters = 0;
+    if bnorm > 0.0 {
+        let mut p = r.clone();
+        for _ in 0..cfg.max_iters {
+            iters += 1;
+            let ap = a32.matvec_f32(&p);
+            let pap = dot32(&p, &ap);
+            if pap.is_nan() || pap <= 0.0 {
+                break;
+            }
+            let alpha = (rz / pap) as f32;
+            for (xi, &pi) in x.iter_mut().zip(&p) {
+                *xi += alpha * pi;
+            }
+            for (ri, &api) in r.iter_mut().zip(&ap) {
+                *ri -= alpha * api;
+            }
+            let rz_new = dot32(&r, &r).max(0.0);
+            if rz_new.sqrt() <= cfg.tol * bnorm {
+                break;
+            }
+            let beta = (rz_new / rz) as f32;
+            for (pi, &ri) in p.iter_mut().zip(&r) {
+                *pi = ri + beta * *pi;
+            }
+            rz = rz_new;
+        }
+    }
+    let xd = to_f64(&x);
+    let ax = a.matvec(&xd);
+    let resid: Vec<f64> = b.iter().zip(&ax).map(|(bi, ai)| bi - ai).collect();
+    let nb = norm2(b);
+    let rel = if nb > 0.0 { norm2(&resid) / nb } else { 0.0 };
+    Some(CgSolution { x: xd, iters, rel_residual: rel, converged: rel <= cfg.tol })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::operators::DenseOp;
+    use crate::solvers::cg::cg_solve;
+    use crate::solvers::precond::IdentityPrecond;
+    use crate::util::{rel_err, Rng};
+
+    fn spd(n: usize, noise: f64, seed: u64) -> DenseOp {
+        let mut rng = Rng::new(seed);
+        let g = Matrix::from_fn(n, 8, |_, _| rng.normal());
+        let mut a = g.matmul_t(&g);
+        a.add_diag(noise);
+        DenseOp(a)
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        for p in [Precision::F64, Precision::Mixed] {
+            assert_eq!(Precision::parse(p.describe()), Some(p));
+        }
+        assert_eq!(Precision::parse("f32"), Some(Precision::Mixed));
+        assert_eq!(Precision::parse("double"), Some(Precision::F64));
+        assert_eq!(Precision::parse("half"), None);
+        assert_eq!(Precision::default(), Precision::F64);
+    }
+
+    #[test]
+    fn refined_matches_f64_cg_to_certificate() {
+        let op = spd(60, 1e-2, 1);
+        let mut rng = Rng::new(2);
+        let b = rng.normal_vec(60);
+        let cfg = CgConfig { max_iters: 500, tol: 1e-10, ..Default::default() };
+        let m = IdentityPrecond::new(60);
+        let gold = cg_solve(&op, &b, cfg);
+        let mixed = refined_cg_solve(&op, &b, &m, None, cfg);
+        assert!(gold.converged && mixed.converged, "rel {}", mixed.rel_residual);
+        assert!(mixed.rel_residual <= 1e-10);
+        assert!(rel_err(&mixed.x, &gold.x) < 1e-8, "{}", rel_err(&mixed.x, &gold.x));
+    }
+
+    #[test]
+    fn warm_seed_inside_tolerance_returns_bitwise() {
+        let op = spd(40, 1e-2, 3);
+        let mut rng = Rng::new(4);
+        let b = rng.normal_vec(40);
+        let tight = CgConfig { max_iters: 500, tol: 1e-12, ..Default::default() };
+        let m = IdentityPrecond::new(40);
+        let cold = refined_cg_solve(&op, &b, &m, None, tight);
+        assert!(cold.converged);
+        let loose = CgConfig { max_iters: 500, tol: 1e-8, ..Default::default() };
+        let warm = refined_cg_solve(&op, &b, &m, Some(&cold.x), loose);
+        assert_eq!(warm.iters, 0);
+        assert_eq!(warm.x, cold.x);
+    }
+
+    #[test]
+    fn zero_rhs_short_circuits() {
+        let op = spd(10, 1e-2, 5);
+        let m = IdentityPrecond::new(10);
+        let sol = refined_cg_solve(&op, &[0.0; 10], &m, None, CgConfig::default());
+        assert!(sol.converged);
+        assert_eq!(sol.x, vec![0.0; 10]);
+        assert_eq!(sol.iters, 0);
+    }
+
+    #[test]
+    fn raw_f32_cg_reports_true_residual() {
+        let op = spd(50, 1.0, 6);
+        let mut rng = Rng::new(7);
+        let b = rng.normal_vec(50);
+        let cfg = CgConfig { max_iters: 300, tol: 1e-6, ..Default::default() };
+        let sol = raw_cg_f32(&op, &b, cfg).expect("dense has an f32 mirror");
+        // Well conditioned (unit noise): f32 CG gets within f32 range.
+        assert!(sol.rel_residual < 1e-3, "rel {}", sol.rel_residual);
+    }
+}

@@ -55,7 +55,8 @@ use crate::serve::cache::{
 use crate::serve::snapshot::{ModelSnapshot, SnapshotVariant, SNAPSHOT_VERSION};
 use crate::solvers::{
     block_cg_solve_with, build_preconditioner, cg_solve_with, grid_cg_solve_with_wty,
-    CgConfig, GridSystem, IdentityPrecond, PaddedPrecond, Preconditioner, PrecondSpec,
+    CgConfig, GridSystem, IdentityPrecond, PaddedPrecond, Precision, Preconditioner,
+    PrecondSpec,
 };
 use crate::{Error, Result};
 use std::sync::Arc;
@@ -87,6 +88,12 @@ pub struct StreamConfig {
     /// incrementally per accepted row. `Auto` picks grid space whenever
     /// the frozen axes admit it (see `docs/SOLVERS.md`).
     pub space: SolveSpace,
+    /// Arithmetic for the per-ingest re-solves (and every other solve
+    /// this state issues): [`Precision::Mixed`] runs the hot MVMs in f32
+    /// under an f64 refinement loop meeting the same residual
+    /// certificate (see `crate::solvers::refine`). Folded into the
+    /// [`CgConfig`] at construction.
+    pub precision: Precision,
 }
 
 impl Default for StreamConfig {
@@ -99,6 +106,7 @@ impl Default for StreamConfig {
             variance: VarianceMode::Lanczos(64),
             patch_eps: 1e-12,
             space: SolveSpace::Auto,
+            precision: Precision::F64,
         }
     }
 }
@@ -248,6 +256,14 @@ impl IncrementalState {
                 expected: xs.cols,
                 got: axes.len(),
             });
+        }
+        // Fold the stream-level precision switch into the CG config every
+        // solve site (ingest re-solve, refresh, variance block-solve)
+        // consumes. Mixed only ever adds — a caller that set
+        // `cg.precision` directly keeps their choice.
+        let mut cg = cg;
+        if cfg.precision == Precision::Mixed {
+            cg.precision = Precision::Mixed;
         }
         let kern = ProductKernel::rbf(xs.cols, hypers.ell(), 1.0);
         let op = Arc::new(KroneckerSkiOp::with_grids(&xs, &kern, axes.clone()));

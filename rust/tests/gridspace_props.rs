@@ -245,6 +245,7 @@ fn incremental_grid_ingests_match_scratch_grid_refit() {
         variance: VarianceMode::Exact,
         patch_eps: 1e-12,
         space: SolveSpace::Grid,
+        ..Default::default()
     };
     let mut live = IncrementalState::new(
         xs0.clone(),

@@ -1,0 +1,230 @@
+//! Property tests for the mixed-precision MVM substrate
+//! (`operators::LinearOpF32` + `solvers::refine`):
+//!
+//! - Every f32 operator view (SKI, Kronecker-SKI, the affine/sum
+//!   wrappers, sparse-grid compositions) reproduces its f64 parent
+//!   elementwise to f32-accumulation accuracy — the views are *storage*
+//!   mirrors, not approximations.
+//! - `Precision::Mixed` training meets the acceptance bar end to end:
+//!   the cached α agrees with an f64-trained twin to ≤ 1e-6 in data
+//!   space, grid space, and under streaming ingestion — because both
+//!   paths stop on the same `‖K̂α − y‖_{M⁻¹} ≤ tol·‖y‖_{M⁻¹}`
+//!   certificate, the agreement is derived (≈ 2·tol/σ_n²), not tuned.
+//! - The precision switch folds down from the model/stream configs into
+//!   every solve site: a Mixed run must actually tick the
+//!   `solver.refine.*` meters.
+
+use skip_gp::coordinator::metrics;
+use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant, SolveSpace};
+use skip_gp::grid::{build_grid, grid_ski_operator, GridSpec};
+use skip_gp::kernels::{ProductKernel, Stationary1d};
+use skip_gp::linalg::Matrix;
+use skip_gp::operators::{AffineOp, KroneckerSkiOp, LinearOp, LinearOpF32, SkiOp};
+use skip_gp::serve::VarianceMode;
+use skip_gp::solvers::{CgConfig, Precision};
+use skip_gp::stream::{IncrementalState, StreamConfig};
+use skip_gp::util::{mae, Rng};
+
+/// Elementwise f32-view agreement: `|K v − K₃₂ v₃₂|_i ≤ tol·‖Kv‖_∞`.
+/// The bound covers f32 storage rounding (≈ 6e-8 relative) plus f32
+/// accumulation over the stencil/butterfly chains — 1e-3 leaves two
+/// orders of slack at the test sizes while still catching any use of a
+/// stale or truncated buffer outright.
+fn assert_f32_view_matches(op: &dyn LinearOp, seed: u64, label: &str) {
+    let view = op.as_f32().unwrap_or_else(|| panic!("{label}: missing f32 view"));
+    let n = op.dim();
+    assert_eq!(view.dim(), n, "{label}: view dimension");
+    let mut rng = Rng::new(seed);
+    let v = rng.normal_vec(n);
+    let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    let w64 = op.matvec(&v);
+    let w32 = view.matvec_f32(&v32);
+    assert_eq!(w32.len(), n, "{label}: view output length");
+    let scale = w64.iter().fold(1.0f64, |m, &x| m.max(x.abs()));
+    for (i, (&a, &b)) in w64.iter().zip(&w32).enumerate() {
+        let err = (a - b as f64).abs();
+        assert!(
+            err <= 1e-3 * scale,
+            "{label}: row {i} diverged: f64 {a} vs f32 {b} (scale {scale:e})"
+        );
+    }
+}
+
+#[test]
+fn ski_f32_view_matches_f64() {
+    let mut rng = Rng::new(1);
+    let xs = rng.uniform_vec(500, -2.0, 2.0);
+    let kern = Stationary1d::rbf(0.5);
+    let op = SkiOp::new(&xs, &kern, 128).expect("ski grid");
+    assert_f32_view_matches(&op, 2, "ski");
+}
+
+#[test]
+fn kronecker_f32_view_matches_f64() {
+    let mut rng = Rng::new(3);
+    let xs = Matrix::from_fn(400, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let kern = ProductKernel::rbf(2, 0.6, 1.0);
+    let op = KroneckerSkiOp::new(&xs, &kern, 16).expect("kron grid");
+    assert_f32_view_matches(&op, 4, "kronecker");
+    // The typed view and the trait-object view are the same mirror.
+    let view = op.f32_view();
+    let mut rng = Rng::new(4);
+    let v = rng.normal_vec(op.dim());
+    let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
+    let via_trait = op.as_f32().expect("kron f32 view").matvec_f32(&v32);
+    assert_eq!(view.matvec_f32(&v32), via_trait, "typed and trait views must agree");
+}
+
+#[test]
+fn affine_wrapper_composes_f32_view() {
+    // σ_f²·K + σ_n²·I — the exact covariance shape every solve sees.
+    let mut rng = Rng::new(5);
+    let xs = rng.uniform_vec(300, -2.0, 2.0);
+    let kern = Stationary1d::rbf(0.4);
+    let ski = SkiOp::new(&xs, &kern, 64).expect("ski grid");
+    let op = AffineOp { inner: Box::new(ski), scale: 2.5, shift: 1e-3 };
+    assert_f32_view_matches(&op, 6, "affine(ski)");
+}
+
+#[test]
+fn sparse_grid_composition_has_f32_view() {
+    // The combination-technique operator is a SumOp of coefficient-scaled
+    // Kronecker terms (signed coefficients included) — the wrapper
+    // delegation must surface one composite f32 view for it.
+    let mut rng = Rng::new(7);
+    let xs = Matrix::from_fn(350, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let kern = ProductKernel::rbf(2, 0.6, 1.0);
+    let grid = build_grid(&xs, &GridSpec::Sparse { level: 3 }).expect("sparse grid");
+    let op = grid_ski_operator(&xs, &kern, grid.as_ref());
+    assert_f32_view_matches(op.as_ref(), 8, "sparse-grid sum");
+}
+
+/// Smooth toy regression problem on [−1, 1]^d (pinned bounds so a grid
+/// fitted to the initial rows also covers streamed interior points).
+fn toy(n: usize, d: usize, seed: u64) -> (Matrix, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let f = |row: &[f64]| -> f64 {
+        row.iter().enumerate().map(|(k, &x)| ((k + 1) as f64 * x).sin()).sum()
+    };
+    let mut xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+    for k in 0..d {
+        xs.set(0, k, -1.0);
+        xs.set(1, k, 1.0);
+    }
+    let ys: Vec<f64> = (0..n).map(|i| f(xs.row(i)) + 0.05 * rng.normal()).collect();
+    (xs, ys)
+}
+
+fn kiss_cfg(space: SolveSpace, precision: Precision) -> MvmGpConfig {
+    MvmGpConfig {
+        variant: MvmVariant::Kiss,
+        grid: GridSpec::uniform(16),
+        cg: CgConfig { max_iters: 1500, tol: 1e-10, ..Default::default() },
+        warm_start: false,
+        solve_space: space,
+        precision,
+        ..Default::default()
+    }
+}
+
+/// Train two KISS models on the same data — one per precision — and
+/// return both cached αs (f64 first).
+fn alphas_both_precisions(space: SolveSpace, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    // σ_n² = 1 keeps the derived α bound at ≈ 2·tol (module docs).
+    let hypers = GpHypers::new(0.6, 1.0, 1.0);
+    let (xs, ys) = toy(1024, 2, seed);
+    let f64_cfg = kiss_cfg(space, Precision::F64);
+    let mut f64_gp = MvmGp::new(xs.clone(), ys.clone(), hypers, f64_cfg);
+    f64_gp.refresh().unwrap();
+    let mut mixed_gp = MvmGp::new(xs, ys, hypers, kiss_cfg(space, Precision::Mixed));
+    mixed_gp.refresh().unwrap();
+    (f64_gp.alpha().unwrap().to_vec(), mixed_gp.alpha().unwrap().to_vec())
+}
+
+/// Acceptance: Mixed training reproduces the f64 α to ≤ 1e-6 in data
+/// space, and the refinement meters prove the mixed path actually ran
+/// (the config fold-down from `MvmGpConfig.precision` into every solve).
+#[test]
+fn mixed_training_matches_f64_data_space() {
+    let g = metrics::global();
+    let refined = |g: &skip_gp::coordinator::metrics::Metrics| {
+        g.counter("solver.refine.sweeps") + g.counter("solver.refine.fallback.no_f32")
+    };
+    let sweeps0 = refined(g);
+    let (a64, amix) = alphas_both_precisions(SolveSpace::Data, 11);
+    let err = mae(&a64, &amix);
+    assert!(err < 1e-6, "data-space mixed vs f64 α mae {err:e}");
+    let sweeps1 = refined(g);
+    assert!(
+        sweeps1 > sweeps0,
+        "Precision::Mixed must route the y-solve through solvers::refine"
+    );
+}
+
+/// The same acceptance through the grid-space (m×m normal-equations)
+/// engine, whose inner solves run against the StencilGram system.
+#[test]
+fn mixed_training_matches_f64_grid_space() {
+    let (a64, amix) = alphas_both_precisions(SolveSpace::Grid, 13);
+    let err = mae(&a64, &amix);
+    assert!(err < 1e-6, "grid-space mixed vs f64 α mae {err:e}");
+}
+
+/// Streaming ingestion under `StreamConfig { precision: Mixed }`: after
+/// identical one-at-a-time ingests, the live α and predictive means agree
+/// with an f64 streaming twin to the acceptance band.
+#[test]
+fn mixed_streaming_matches_f64() {
+    let (n0, extra, d) = (512, 32, 2);
+    let (xs0, ys0) = toy(n0, d, 17);
+    let mut rng = Rng::new(18);
+    let smooth = |x: &[f64]| -> f64 {
+        x.iter().enumerate().map(|(k, &v)| ((k + 1) as f64 * v).sin()).sum()
+    };
+    let streamed: Vec<(Vec<f64>, f64)> = (0..extra)
+        .map(|_| {
+            let x: Vec<f64> = (0..d).map(|_| rng.uniform_in(-0.9, 0.9)).collect();
+            let y = smooth(&x);
+            (x, y)
+        })
+        .collect();
+    let hypers = GpHypers::new(0.6, 1.0, 1.0);
+
+    let quiet = |precision: Precision| StreamConfig {
+        refresh_every: 0,
+        var_drift_budget: usize::MAX,
+        error_z: 0.0,
+        variance: VarianceMode::None,
+        precision,
+        ..StreamConfig::default()
+    };
+    let run = |precision: Precision| -> IncrementalState {
+        // The base model stays f64 either way: the stream-level switch
+        // alone must carry Mixed into the per-ingest re-solves.
+        let gp = MvmGp::new(
+            xs0.clone(),
+            ys0.clone(),
+            hypers,
+            kiss_cfg(SolveSpace::Data, Precision::F64),
+        );
+        let mut live = IncrementalState::from_mvm(&gp, quiet(precision)).unwrap();
+        for (x, y) in &streamed {
+            let report = live.ingest(x, *y).expect("ingest");
+            assert_eq!(report.accepted, 1);
+        }
+        live
+    };
+    let f64_live = run(Precision::F64);
+    let mixed_live = run(Precision::Mixed);
+    assert_eq!(mixed_live.n(), n0 + extra);
+
+    let err = mae(f64_live.alpha(), mixed_live.alpha());
+    assert!(err < 1e-6, "streamed mixed vs f64 α mae {err:e}");
+
+    let step = 1.8 / (64 * d) as f64;
+    let xtest = Matrix::from_fn(64, d, |i, k| -0.9 + step * (i * d + k) as f64);
+    let m64 = f64_live.predict_mean(&xtest);
+    let mmix = mixed_live.predict_mean(&xtest);
+    let perr = mae(&m64, &mmix);
+    assert!(perr < 1e-6, "streamed mixed vs f64 predictive mean mae {perr:e}");
+}

@@ -13,6 +13,10 @@
 //!   own ‖b_j‖ — the mixed-norm regression test that pins the criterion
 //!   (a shared block norm would silently leave small-norm columns
 //!   unsolved next to large-norm ones).
+//! - `Precision::Mixed` meets the same residual certificate as f64 on
+//!   every operator family, and on a σ_n² = 1e-8 covariance — where raw
+//!   f32 CG floors out at O(1) relative residual — the refinement loop's
+//!   stall detection hands off to f64 CG and still certifies.
 
 use skip_gp::kernels::{ProductKernel, Stationary1d};
 use skip_gp::linalg::{norm2, Matrix};
@@ -21,7 +25,8 @@ use skip_gp::operators::{
 };
 use skip_gp::solvers::{
     block_cg_solve, block_cg_solve_with, build_preconditioner, cg_solve, cg_solve_with,
-    CgConfig, IdentityPrecond, PivotedCholeskyPrecond, PrecondSpec, Preconditioner,
+    raw_cg_f32, refined_cg_solve, CgConfig, IdentityPrecond, PivotedCholeskyPrecond,
+    Precision, PrecondSpec, Preconditioner,
 };
 use skip_gp::util::{rel_err, Rng};
 
@@ -273,6 +278,105 @@ fn preconditioned_block_with_solution_seeds_is_free() {
     assert_eq!(warm.x.data, cold.x.data, "solution seeds return bitwise");
     assert!(warm.columns.iter().all(|c| c.iters == 0));
     assert_eq!(warm.matmats, 1, "only the initial-residual block MVM");
+}
+
+/// `Precision::Mixed` on `CgConfig` routes the solve through iterative
+/// refinement; both arithmetics stop on the same certificate, so the
+/// solutions must agree on every operator family with an f32 mirror.
+#[test]
+fn mixed_precision_meets_the_f64_certificate_on_every_family() {
+    let tol = 1e-8;
+    let cfg = CgConfig { max_iters: 3000, tol, ..Default::default() };
+    let mixed_cfg = CgConfig { precision: Precision::Mixed, ..cfg };
+    let ops: Vec<(Box<dyn LinearOp>, &str)> = vec![
+        (Box::new(dense_covariance(120, 10, 21)), "dense"),
+        (Box::new(ski_covariance(400, 128, 22)), "ski"),
+        (Box::new(kron_covariance(150, 16, 23)), "kronecker"),
+    ];
+    for (op, label) in &ops {
+        let mut rng = Rng::new(24);
+        let y = rng.normal_vec(op.dim());
+        let gold = cg_solve(op.as_ref(), &y, cfg);
+        assert!(gold.converged, "{label}: f64 CG did not converge");
+        let id = IdentityPrecond::new(op.dim());
+        let mixed = cg_solve_with(op.as_ref(), &y, &id, None, mixed_cfg);
+        assert!(mixed.converged, "{label}: mixed solve did not converge");
+        // The certificate is measured on the *true* f64 residual — verify
+        // it independently of anything the solver reported.
+        let ax = op.matvec(&mixed.x);
+        let resid: Vec<f64> = ax.iter().zip(&y).map(|(a, b)| a - b).collect();
+        let rel = norm2(&resid) / norm2(&y);
+        assert!(rel <= tol * 10.0, "{label}: true rel residual {rel:e}");
+        let err = rel_err(&mixed.x, &gold.x);
+        assert!(err < 1e-4, "{label}: mixed drifted from f64 by {err:e}");
+    }
+}
+
+/// Block solves honor the precision switch too: every column of a Mixed
+/// block solve must land within the certificate-derived band of its f64
+/// twin.
+#[test]
+fn mixed_precision_block_solve_matches_f64_per_column() {
+    let op = kron_covariance(150, 16, 25);
+    let mut rng = Rng::new(26);
+    let b = Matrix::from_fn(150, 3, |_, _| rng.normal());
+    let cfg = CgConfig { max_iters: 3000, tol: 1e-8, ..Default::default() };
+    let gold = block_cg_solve(&op, &b, cfg);
+    assert!(gold.all_converged());
+    let id = IdentityPrecond::new(op.dim());
+    let mixed = block_cg_solve_with(
+        &op,
+        &b,
+        &id,
+        None,
+        CgConfig { precision: Precision::Mixed, ..cfg },
+    );
+    assert!(mixed.all_converged(), "mixed block solve did not converge");
+    for j in 0..b.cols {
+        let err = rel_err(&mixed.x.col(j), &gold.x.col(j));
+        assert!(err < 1e-4, "column {j}: mixed drifted from f64 by {err:e}");
+    }
+}
+
+/// The reason refinement exists: on a σ_n² = 1e-8 covariance
+/// (κ ≈ 1e8, far beyond `1/eps32`) raw f32 CG floors out at O(1)
+/// relative residual, while `refined_cg_solve` — via its stall detector
+/// and f64 fallback — still meets the certificate. The spectrum is 8
+/// large eigenvalues plus a repeated 1e-8 cluster, so f64 CG terminates
+/// in a few dozen iterations; only the arithmetic separates the two.
+#[test]
+fn raw_f32_cg_stalls_where_refinement_still_certifies() {
+    let n = 80;
+    let mut rng = Rng::new(27);
+    // Scale to λmax = O(1) so the f64 attainable floor (≈ eps64·κ) sits
+    // two orders below the 1e-6 tolerance and the test bounds are
+    // derived, not tuned.
+    let scale = 1.0 / (n as f64).sqrt();
+    let g = Matrix::from_fn(n, 8, |_, _| scale * rng.normal());
+    let mut a = g.matmul_t(&g);
+    a.add_diag(1e-8);
+    let op = DenseOp(a);
+    let y = rng.normal_vec(n);
+    let cfg = CgConfig { max_iters: 3000, tol: 1e-6, ..Default::default() };
+
+    let raw = raw_cg_f32(&op, &y, cfg).expect("dense operators have an f32 mirror");
+    assert!(
+        raw.rel_residual > 1e-3,
+        "raw f32 CG should stall far above tolerance on κ≈1e8, got {:e}",
+        raw.rel_residual
+    );
+
+    let id = IdentityPrecond::new(n);
+    let refined = refined_cg_solve(&op, &y, &id, None, cfg);
+    assert!(
+        refined.converged,
+        "refinement must certify where raw f32 stalls (rel {:e})",
+        refined.rel_residual
+    );
+    let ax = op.matvec(&refined.x);
+    let resid: Vec<f64> = ax.iter().zip(&y).map(|(a, b)| a - b).collect();
+    let rel = norm2(&resid) / norm2(&y);
+    assert!(rel <= 1e-5, "refined true rel residual {rel:e}");
 }
 
 #[test]
