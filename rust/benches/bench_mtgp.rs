@@ -1,0 +1,178 @@
+//! Multi-task serving/streaming bench: per-task predict throughput and
+//! online task-enrollment latency across a task-count sweep
+//! (T ∈ {4, 64} in the `--fast` CI smoke, plus T = 1024 in the full
+//! run), emitting machine-readable `results/BENCH_mtgp.json`. CI's
+//! `tools/bench_check` gates the enrollment-vs-rebuild speedup — the
+//! one machine-portable ratio — against its checked-in floor.
+//!
+//! Run: `cargo bench --bench bench_mtgp` (add `-- --fast` in CI smoke).
+
+#![allow(clippy::needless_range_loop)] // index-heavy numeric bench loops
+
+use skip_gp::gp::GpHypers;
+use skip_gp::grid::Grid1d;
+use skip_gp::kernels::TaskKernel;
+use skip_gp::linalg::Matrix;
+use skip_gp::serve::{ServeEngine, VarianceMode};
+use skip_gp::solvers::CgConfig;
+use skip_gp::stream::{IncrementalState, StreamConfig};
+use skip_gp::util::{Rng, Timer};
+use std::io::Write;
+use std::path::Path;
+
+fn quantile_us(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[i] * 1e6
+}
+
+struct SweepResult {
+    tasks: usize,
+    n: usize,
+    build_ms: f64,
+    predict_qps: f64,
+    enroll_p50_us: f64,
+    enroll_p99_us: f64,
+}
+
+fn run_case(tasks: usize, per_task: usize, rng: &mut Rng) -> SweepResult {
+    let d = 2;
+    let n = tasks * per_task;
+    let mut data = Vec::with_capacity(n * d);
+    let mut ys = Vec::with_capacity(n);
+    let mut task_of = Vec::with_capacity(n);
+    for t in 0..tasks {
+        let sign = if t % 2 == 0 { 1.0 } else { -1.0 };
+        for _ in 0..per_task {
+            let x0 = rng.uniform_in(-0.95, 0.95);
+            let x1 = rng.uniform_in(-0.95, 0.95);
+            data.push(x0);
+            data.push(x1);
+            ys.push(sign * ((2.0 * x0).sin() + (3.0 * x1).cos()) + 0.05 * rng.normal());
+            task_of.push(t);
+        }
+    }
+    let xs = Matrix::from_vec(n, d, data);
+    let b = Matrix::from_fn(tasks, 2, |_, _| 0.1 * rng.normal());
+    let kernel = TaskKernel::new(b, vec![0.5; tasks]);
+    let axes = vec![
+        Grid1d::fit(-1.0, 1.0, 16).unwrap(),
+        Grid1d::fit(-1.0, 1.0, 16).unwrap(),
+    ];
+    let cg = CgConfig { max_iters: 300, tol: 1e-8, ..Default::default() };
+    // Serving-shaped config: the variance factor is built once (rank-16
+    // Lanczos) at construction, and the drift budget keeps measured
+    // enrollments on the warm incremental path (mean caches patched,
+    // variance deferred) — the latency a serving fleet actually pays
+    // per online enrollment.
+    let cfg = StreamConfig {
+        refresh_every: 0,
+        var_drift_budget: usize::MAX,
+        error_z: 0.0,
+        log_capacity: 1 << 16,
+        variance: VarianceMode::Lanczos(16),
+        patch_eps: 1e-12,
+        ..Default::default()
+    };
+    // σ_n² = 0.3 keeps the Hadamard systems well-conditioned across the
+    // whole sweep (T = 1024 included), so iteration counts stay flat.
+    let h = GpHypers::new(0.6, 1.0, 0.3);
+
+    let t0 = Timer::start();
+    let mut live =
+        IncrementalState::new_multitask(xs, ys, (kernel, task_of), h, axes, cg, cfg)
+            .expect("multi-task live state");
+    let build_ms = t0.elapsed_s() * 1e3;
+
+    // Per-task predict throughput through the serving engine (the same
+    // par_map path the request batcher dispatches to), tasks cycling
+    // across the whole range.
+    let engine = ServeEngine::new(live.to_snapshot()).expect("engine");
+    let q_rows = 256;
+    let qx = Matrix::from_fn(q_rows, d, |_, _| rng.uniform_in(-0.9, 0.9));
+    let qtasks: Vec<usize> = (0..q_rows).map(|i| i % tasks).collect();
+    let repeats = 8;
+    let t0 = Timer::start();
+    for _ in 0..repeats {
+        let (mean, _var) = engine.predict_tasks(&qx, &qtasks);
+        assert!(mean.iter().all(|m| m.is_finite()));
+    }
+    let predict_qps = (q_rows * repeats) as f64 / t0.elapsed_s().max(1e-12);
+
+    // Online enrollment latency: each ingest names task == num_tasks,
+    // growing the model by one task (decoupled B row, warm re-solve,
+    // patched caches).
+    let enrolls = 8;
+    let mut enroll_s = Vec::with_capacity(enrolls);
+    for e in 0..enrolls {
+        let x = vec![rng.uniform_in(-0.9, 0.9), rng.uniform_in(-0.9, 0.9)];
+        let y = rng.normal();
+        let xm = Matrix::from_vec(1, d, x);
+        let t0 = Timer::start();
+        let report = live.ingest_block_tasks(&xm, &[y], &[tasks + e]).expect("enroll");
+        enroll_s.push(t0.elapsed_s());
+        assert_eq!(report.enrolled, 1, "each bench ingest must enroll");
+    }
+    enroll_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let enroll_p50_us = quantile_us(&enroll_s, 0.50);
+    let enroll_p99_us = quantile_us(&enroll_s, 0.99);
+
+    println!(
+        "T={tasks:>5}  n={n:>5}  build {build_ms:>9.2}ms   predict {predict_qps:>9.0} q/s   \
+         enroll p50 {enroll_p50_us:>9.1}µs  p99 {enroll_p99_us:>9.1}µs"
+    );
+    SweepResult { tasks, n, build_ms, predict_qps, enroll_p50_us, enroll_p99_us }
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    // (T, rows per task): n grows sublinearly in T so the full sweep
+    // stays minutes, not hours.
+    let mut sweep: Vec<(usize, usize)> = vec![(4, 64), (64, 8)];
+    if !fast {
+        sweep.push((1024, 2));
+    }
+    let mut rng = Rng::new(0);
+    let results: Vec<SweepResult> =
+        sweep.iter().map(|&(t, p)| run_case(t, p, &mut rng)).collect();
+
+    // The gated ratio comes from the smallest case — the one every run
+    // (fast and full, any machine) measures.
+    let base = &results[0];
+    let speedup = base.build_ms * 1e3 / base.enroll_p50_us.max(1e-9);
+    println!(
+        "  -> online enrollment is {speedup:.2}x cheaper than a cold multi-task rebuild (T={})",
+        base.tasks
+    );
+
+    let mut entries = String::new();
+    for (i, r) in results.iter().enumerate() {
+        if i > 0 {
+            entries.push_str(",\n");
+        }
+        entries.push_str(&format!(
+            "    {{\"tasks\": {}, \"n\": {}, \"build_ms\": {:.3}, \"predict_qps\": {:.1}, \
+             \"enroll_p50_us\": {:.2}, \"enroll_p99_us\": {:.2}}}",
+            r.tasks, r.n, r.build_ms, r.predict_qps, r.enroll_p50_us, r.enroll_p99_us
+        ));
+    }
+    let json = format!(
+        "{{\n  \"bench\": \"mtgp\",\n  \"fast\": {fast},\n  \"sweep\": [\n{entries}\n  ],\n  \
+         \"speedup_enroll_vs_rebuild\": {speedup:.3}\n}}\n"
+    );
+    let path = Path::new("results/BENCH_mtgp.json");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut out = std::fs::File::create(path).expect("bench json");
+    out.write_all(json.as_bytes()).unwrap();
+    println!("wrote {}", path.display());
+
+    assert!(
+        speedup >= 2.0,
+        "acceptance: online enrollment must be ≥2x cheaper than a cold \
+         multi-task rebuild (got {speedup:.2}x)"
+    );
+}

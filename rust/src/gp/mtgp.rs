@@ -267,100 +267,7 @@ impl Mtgp {
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::operators::LinearOp;
-    use crate::util::{mae, rel_err, Rng};
-
-    /// Two latent groups of tasks: group 0 follows sin, group 1 follows
-    /// −sin; within-group tasks share structure.
-    fn toy_tasks(s: usize, per_task: usize, seed: u64) -> MtgpData {
-        let mut rng = Rng::new(seed);
-        let mut x = Vec::new();
-        let mut y = Vec::new();
-        let mut task_of = Vec::new();
-        for t in 0..s {
-            let sign = if t % 2 == 0 { 1.0 } else { -1.0 };
-            for _ in 0..per_task {
-                let xi = rng.uniform_in(0.0, 3.0);
-                x.push(xi);
-                y.push(sign * (1.5 * xi).sin() + 0.05 * rng.normal());
-                task_of.push(t);
-            }
-        }
-        MtgpData { x, y, task_of, num_tasks: s }
-    }
-
-    #[test]
-    fn skip_mll_matches_dense_mll() {
-        let data = toy_tasks(6, 15, 1);
-        let cfg = MtgpConfig {
-            rank: 30,
-            slq: SlqConfig { num_probes: 30, max_rank: 30 },
-            cg: CgConfig { max_iters: 200, tol: 1e-7, ..CgConfig::default() },
-            ..Default::default()
-        };
-        let mtgp = Mtgp::new(data, Stationary1d::matern52(1.0), 2, 0.1, cfg);
-        let dense = mtgp.mll_dense().unwrap();
-        let fast = mtgp.mll_skip(3);
-        let rel = (fast - dense).abs() / dense.abs();
-        assert!(rel < 0.05, "skip {fast} vs dense {dense} rel {rel}");
-    }
-
-    #[test]
-    fn fit_improves_mll_and_learns_task_structure() {
-        let data = toy_tasks(6, 12, 2);
-        let cfg = MtgpConfig::default();
-        let mut mtgp = Mtgp::new(data, Stationary1d::matern52(1.0), 2, 0.2, cfg);
-        let trace = mtgp.fit_dense(25, 0.1).unwrap();
-        assert!(trace.last().unwrap() > trace.first().unwrap());
-        // Learned task covariance should correlate same-group tasks
-        // (0,2) more than cross-group (0,1).
-        let m = mtgp.task_kernel.to_dense();
-        let same = m.get(0, 2);
-        let cross = m.get(0, 1);
-        assert!(same > cross, "same-group {same} vs cross-group {cross}");
-    }
-
-    #[test]
-    fn multitask_beats_pooled_on_heterogeneous_tasks() {
-        let data = toy_tasks(4, 20, 3);
-        // Held-out points for task 1 (the −sin group).
-        let xt: Vec<f64> = (0..20).map(|i| 0.15 * i as f64).collect();
-        let yt: Vec<f64> = xt.iter().map(|&x| -(1.5 * x).sin()).collect();
-        let tt = vec![1usize; 20];
-        let cfg = MtgpConfig::default();
-        let mut mtgp = Mtgp::new(data.clone(), Stationary1d::matern52(1.0), 2, 0.2, cfg);
-        mtgp.fit_dense(25, 0.1).unwrap();
-        let pred = mtgp.predict_mean(&xt, &tt);
-        let mtgp_mae = mae(&pred, &yt);
-        // Pooled model: single task — predicts ~0 everywhere (groups cancel).
-        let pooled = {
-            let mut d2 = data;
-            d2.task_of = vec![0; d2.len()];
-            d2.num_tasks = 1;
-            let mut m = Mtgp::new(d2, Stationary1d::matern52(1.0), 1, 0.2, MtgpConfig::default());
-            m.refresh().unwrap();
-            m.predict_mean(&xt, &vec![0; 20])
-        };
-        let pooled_mae = mae(&pooled, &yt);
-        assert!(
-            mtgp_mae < pooled_mae,
-            "mtgp {mtgp_mae} should beat pooled {pooled_mae}"
-        );
-    }
-
-    #[test]
-    fn skip_operator_mvm_matches_dense() {
-        let data = toy_tasks(5, 10, 4);
-        let cfg = MtgpConfig { rank: 30, ..Default::default() };
-        let mtgp = Mtgp::new(data, Stationary1d::matern52(0.8), 2, 0.15, cfg);
-        let op = mtgp.build_skip_operator(7);
-        let dense = mtgp.khat_dense();
-        let mut rng = Rng::new(8);
-        let v = rng.normal_vec(dense.rows);
-        let err = rel_err(&op.matvec(&v), &dense.matvec(&v));
-        assert!(err < 2e-2, "rel err {err}");
-    }
-}
+// The multi-task property tests (SKIP-vs-dense MLL agreement, `fit_dense`
+// task-structure recovery, pooled-baseline comparison, SKIP MVM vs the
+// dense covariance) are promoted to rust/tests/mtgp_props.rs so they
+// exercise the public API.

@@ -45,10 +45,45 @@ impl TaskKernel {
         v
     }
 
+    /// Cross-covariance of `task` against each observation's task:
+    /// `c_t[i] = k_task(task, task_of[i])` — the per-row mask that turns
+    /// single-task grid caches into task-t caches
+    /// ([`crate::serve::build_task_cache`]).
+    pub fn row_mask(&self, task: usize, task_of: &[usize]) -> Vec<f64> {
+        task_of.iter().map(|&t| self.eval(task, t)).collect()
+    }
+
     /// Dense s×s task covariance M = B Bᵀ + diag.
     pub fn to_dense(&self) -> Matrix {
         let s = self.num_tasks();
         Matrix::from_fn(s, s, |i, j| self.eval(i, j))
+    }
+
+    /// Enroll a new task online: append a zero row to `B` (no learned
+    /// cross-task coupling yet) and give the newcomer the mean of the
+    /// existing task-specific variances (1.0 when starting from an empty
+    /// kernel or all-nonpositive diagonals). The zero `B` row keeps every
+    /// existing entry of `B Bᵀ + D` bitwise-unchanged, so enrollment never
+    /// perturbs the tasks already being served. Returns the new task id.
+    pub fn enroll(&mut self) -> usize {
+        let s = self.num_tasks();
+        let mut d_new = if s == 0 {
+            1.0
+        } else {
+            self.diag.iter().sum::<f64>() / s as f64
+        };
+        if d_new <= 0.0 || !d_new.is_finite() {
+            d_new = 1.0;
+        }
+        self.b = Matrix::from_fn(s + 1, self.b.cols, |i, j| {
+            if i < s {
+                self.b.get(i, j)
+            } else {
+                0.0
+            }
+        });
+        self.diag.push(d_new);
+        s
     }
 }
 
@@ -83,5 +118,33 @@ mod tests {
         let k = TaskKernel::independent(4);
         let d = k.to_dense();
         assert!(d.max_abs_diff(&Matrix::eye(4)) < 1e-15);
+    }
+
+    #[test]
+    fn enroll_appends_a_decoupled_task() {
+        let b = Matrix::from_vec(2, 2, vec![1.0, 0.5, -0.25, 2.0]);
+        let mut k = TaskKernel::new(b, vec![0.5, 0.3]);
+        let before = k.to_dense();
+        let id = k.enroll();
+        assert_eq!(id, 2);
+        assert_eq!(k.num_tasks(), 3);
+        // Existing entries are bitwise-unchanged; the new task has no
+        // cross-task covariance and the mean of the old diagonals.
+        let after = k.to_dense();
+        for i in 0..2 {
+            for j in 0..2 {
+                assert_eq!(before.get(i, j).to_bits(), after.get(i, j).to_bits());
+            }
+            assert_eq!(after.get(2, i), 0.0);
+            assert_eq!(after.get(i, 2), 0.0);
+        }
+        assert!((after.get(2, 2) - 0.4).abs() < 1e-15);
+    }
+
+    #[test]
+    fn enroll_falls_back_to_unit_variance() {
+        let mut k = TaskKernel::new(Matrix::zeros(1, 1), vec![0.0]);
+        k.enroll();
+        assert_eq!(k.diag[1], 1.0);
     }
 }

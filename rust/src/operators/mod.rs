@@ -21,7 +21,7 @@ pub use kronecker::{
 pub use lowrank::{ContractionBackend, LanczosFactor, NativeBackend};
 pub use ski::SkiOp;
 pub use skip::{SkipComponent, SkipOp};
-pub use task::TaskOp;
+pub use task::{TaskHadamardRef, TaskOp};
 
 use crate::linalg::Matrix;
 

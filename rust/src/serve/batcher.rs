@@ -57,11 +57,15 @@ impl Default for BatcherConfig {
 
 enum Request {
     Predict {
+        /// Task the query addresses (0 for single-task models).
+        task: usize,
         x: Vec<f64>,
         enqueued: Instant,
         resp: Sender<PredictResponse>,
     },
     Observe {
+        /// Task the observation belongs to (0 for single-task models).
+        task: usize,
         x: Vec<f64>,
         y: f64,
         enqueued: Instant,
@@ -106,9 +110,17 @@ impl BatchHandle {
     /// batch completes. Submitting without immediately blocking lets a
     /// client keep a pipeline of outstanding requests.
     pub fn submit(&self, x: &[f64]) -> Receiver<PredictResponse> {
+        self.submit_predict_task(0, x)
+    }
+
+    /// Enqueue a task-addressed query (task 0 on single-task models ≡
+    /// [`submit`](Self::submit)). Task ids are validated by the wire
+    /// front-ends; a row naming an out-of-range task answers NaN.
+    pub fn submit_predict_task(&self, task: usize, x: &[f64]) -> Receiver<PredictResponse> {
         assert_eq!(x.len(), self.dim, "query dimensionality mismatch");
         let (tx, rx) = channel();
         let req = Request::Predict {
+            task,
             x: x.to_vec(),
             enqueued: Instant::now(),
             resp: tx,
@@ -129,12 +141,32 @@ impl BatchHandle {
             .expect("request batcher shut down while a request was in flight")
     }
 
+    /// Submit a task-addressed query and block for the answer.
+    pub fn predict_task(&self, task: usize, x: &[f64]) -> PredictResponse {
+        self.submit_predict_task(task, x)
+            .recv()
+            .expect("request batcher shut down while a request was in flight")
+    }
+
     /// Enqueue an observation `(x, y)`; coalesced with every other
     /// request in its block (one ingest solve for all of them).
     pub fn submit_observe(&self, x: &[f64], y: f64) -> Receiver<ObserveResponse> {
+        self.submit_observe_task(0, x, y)
+    }
+
+    /// Enqueue a task-addressed observation (task 0 on single-task models
+    /// ≡ [`submit_observe`](Self::submit_observe)); on a multi-task
+    /// model, the first unseen task id enrolls a new task online.
+    pub fn submit_observe_task(
+        &self,
+        task: usize,
+        x: &[f64],
+        y: f64,
+    ) -> Receiver<ObserveResponse> {
         assert_eq!(x.len(), self.dim, "observation dimensionality mismatch");
         let (tx, rx) = channel();
         let req = Request::Observe {
+            task,
             x: x.to_vec(),
             y,
             enqueued: Instant::now(),
@@ -150,6 +182,13 @@ impl BatchHandle {
     /// Submit an observation and block for the ack.
     pub fn observe(&self, x: &[f64], y: f64) -> ObserveResponse {
         self.submit_observe(x, y)
+            .recv()
+            .expect("request batcher shut down while an observation was in flight")
+    }
+
+    /// Submit a task-addressed observation and block for the ack.
+    pub fn observe_task(&self, task: usize, x: &[f64], y: f64) -> ObserveResponse {
+        self.submit_observe_task(task, x, y)
             .recv()
             .expect("request batcher shut down while an observation was in flight")
     }
@@ -247,32 +286,47 @@ impl RequestBatcher {
             engine.metrics.observe("serve.queue_depth", waiting as u64);
 
             // Split the block: observations are folded into the model
-            // first so the block's predictions see them.
+            // first so the block's predictions see them. A block freely
+            // coalesces requests across *tasks* (the task rides each
+            // request); the engine — and therefore the model — is fixed
+            // per batcher, so blocks never mix models.
             let mut observes = Vec::new();
             let mut predicts = Vec::new();
             for r in batch {
                 match r {
-                    Request::Observe { x, y, enqueued, resp } => {
-                        observes.push((x, y, enqueued, resp));
+                    Request::Observe { task, x, y, enqueued, resp } => {
+                        observes.push((task, x, y, enqueued, resp));
                     }
-                    Request::Predict { x, enqueued, resp } => {
-                        predicts.push((x, enqueued, resp));
+                    Request::Predict { task, x, enqueued, resp } => {
+                        predicts.push((task, x, enqueued, resp));
                     }
                 }
             }
+            let multi = engine.is_multitask();
 
             if !observes.is_empty() {
                 let k = observes.len();
                 let mut xs = Matrix::zeros(k, d);
                 let mut ys = Vec::with_capacity(k);
-                for (i, (x, y, _, _)) in observes.iter().enumerate() {
+                let mut tasks = Vec::with_capacity(k);
+                for (i, (task, x, y, _, _)) in observes.iter().enumerate() {
                     xs.row_mut(i).copy_from_slice(x);
                     ys.push(*y);
+                    tasks.push(*task);
                 }
-                let acks = engine.observe_block(&xs, &ys);
+                // Multi-task models must be addressed by task; a task-0
+                // block on a single-task model keeps the plain path so
+                // pre-multi-task behavior is bitwise untouched. (A
+                // nonzero task on a single-task engine reaches the typed
+                // single-task refusal downstream.)
+                let acks = if multi || tasks.iter().any(|&t| t != 0) {
+                    engine.observe_block_tasks(&xs, &ys, &tasks)
+                } else {
+                    engine.observe_block(&xs, &ys)
+                };
                 let done = Instant::now();
                 let mut latencies = Vec::with_capacity(k);
-                for (i, (_, _, enqueued, resp)) in observes.into_iter().enumerate() {
+                for (i, (_, _, _, enqueued, resp)) in observes.into_iter().enumerate() {
                     let latency = done.saturating_duration_since(enqueued);
                     latencies.push(latency.as_secs_f64());
                     let result = match &acks {
@@ -293,13 +347,19 @@ impl RequestBatcher {
             if !predicts.is_empty() {
                 let t = predicts.len();
                 let mut block = Matrix::zeros(t, d);
-                for (i, (x, _, _)) in predicts.iter().enumerate() {
+                let mut tasks = Vec::with_capacity(t);
+                for (i, (task, x, _, _)) in predicts.iter().enumerate() {
                     block.row_mut(i).copy_from_slice(x);
+                    tasks.push(*task);
                 }
-                let (means, vars) = engine.predict(&block);
+                let (means, vars) = if multi || tasks.iter().any(|&t| t != 0) {
+                    engine.predict_tasks(&block, &tasks)
+                } else {
+                    engine.predict(&block)
+                };
                 let done = Instant::now();
                 let mut latencies = Vec::with_capacity(t);
-                for (i, (_, enqueued, resp)) in predicts.into_iter().enumerate() {
+                for (i, (_, _, enqueued, resp)) in predicts.into_iter().enumerate() {
                     let latency = done.saturating_duration_since(enqueued);
                     latencies.push(latency.as_secs_f64());
                     let _ = resp.send(PredictResponse {

@@ -315,6 +315,53 @@ impl PredictCache {
     }
 }
 
+/// Build **one task's** serving cache of a multi-task model (paper §6).
+///
+/// With the multi-task covariance `K̂ = σ_f²(K_data ∘ K_task) + σ_n² I`,
+/// the cross-covariance of a query `(x*, t)` against training row `i` is
+/// `k_data(x*, xᵢ) · k_task(t, tᵢ)` — the data part is the usual SKI
+/// stencil, and the task part is a fixed per-row coefficient
+/// `c_t[i] = k_task(t, tᵢ)` ([`crate::kernels::TaskKernel::row_mask`]).
+/// So task t's caches are the single-task caches of *masked* data-side
+/// vectors:
+///
+/// - mean `u_t = σ_f²(⊗K)(Wᵀ(c_t ∘ α))` → `μ(x*, t) = w(x*)·u_t`;
+/// - variance root `R_t = σ_f²(⊗K)(Wᵀ diag(c_t) S)` →
+///   `σ²(x*, t) = σ_f²·k_task(t,t) − ‖R_tᵀ w(x*)‖²`.
+///
+/// `task_mask` is `c_t`, and `task_prior` is the query's prior latent
+/// variance `σ_f²·k_task(t,t)` (which replaces the single-task `σ_f²` in
+/// [`PredictCache::prior_var`]). Everything else — stencil decode, grid
+/// apply, clamping — reuses [`PredictCache::build`] verbatim, so
+/// single-task models (mask all-ones, prior σ_f²) produce bitwise the
+/// same cache through either entry point.
+pub fn build_task_cache(
+    xs: &Matrix,
+    alpha: &[f64],
+    hypers: &GpHypers,
+    grid: &dyn InducingGrid,
+    s: Option<&Matrix>,
+    task_mask: &[f64],
+    task_prior: f64,
+) -> Result<PredictCache> {
+    assert_eq!(task_mask.len(), alpha.len(), "task mask length");
+    let masked_alpha: Vec<f64> =
+        alpha.iter().zip(task_mask).map(|(&a, &c)| c * a).collect();
+    let masked_s = s.map(|s| {
+        let mut m = s.clone();
+        for (i, &c) in task_mask.iter().enumerate() {
+            for v in m.row_mut(i) {
+                *v *= c;
+            }
+        }
+        m
+    });
+    let mut cache =
+        PredictCache::build(xs, &masked_alpha, hypers, grid, masked_s.as_ref())?;
+    cache.prior_var = task_prior;
+    Ok(cache)
+}
+
 /// Scatter `Wᵀ v` (v data-sized) onto one term's grid: one stencil
 /// decode per data row. Shared by the snapshot-time cache build and the
 /// streaming layer's scatter bookkeeping ([`crate::stream`]), so the

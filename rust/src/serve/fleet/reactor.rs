@@ -33,11 +33,22 @@
 //! ```text
 //! → [model <id>] predict <x1> … <xd>      (per-request model choice)
 //! → [model <id>] observe <x1> … <xd> <y>
+//! → [model <id>] predict <task> <x1> … <xd>      (multi-task models)
+//! → [model <id>] observe <task> <x1> … <xd> <y>  (task == num_tasks
+//!                                                 enrolls a new task)
 //! → [model <id>] dim
+//! → [model <id>] tasks                     ← ok <num_tasks>
 //! → models                                 ← ok <id> <id> …
 //! → stats                                  ← ok fleet models=… | <id>: …
 //! ← busy <limit> requests in flight, retry later
 //! ```
+//!
+//! Multi-task requests follow the same rules as the legacy server
+//! ([`crate::serve::server`]): the task id leads the body, plain forms
+//! on a multi-task model answer `err` naming the expected shape, and
+//! task validation happens here at the wire. A block coalesces requests
+//! across the tasks of one model — never across models, since every
+//! shard batcher is pinned to its model.
 //!
 //! Responses come back **in request order per connection** (pipelining
 //! is safe); different connections never wait on each other's batches.
@@ -46,7 +57,7 @@ use super::registry::ModelRegistry;
 use super::router::ShardedModel;
 use crate::coordinator::Metrics;
 use crate::serve::batcher::{ObserveResponse, PredictResponse};
-use crate::serve::server::{parse_floats, wake_addr};
+use crate::serve::server::{parse_floats, parse_task, wake_addr};
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::io::{Read, Write};
@@ -286,6 +297,10 @@ fn handle_line(line: &str, c: &mut Conn, shared: &Shared) {
             Ok(m) => c.push_ready(format!("ok {}", m.dim())),
             Err(msg) => c.push_ready(format!("err {msg}")),
         },
+        "tasks" => match shared.resolve(explicit.as_deref()) {
+            Ok(m) => c.push_ready(format!("ok {}", m.num_tasks())),
+            Err(msg) => c.push_ready(format!("err {msg}")),
+        },
         _ => {
             if let Some(body) = verb.strip_prefix("observe") {
                 let model = match shared.resolve(explicit.as_deref()) {
@@ -296,6 +311,17 @@ fn handle_line(line: &str, c: &mut Conn, shared: &Shared) {
                     }
                 };
                 let d = model.dim();
+                let (task, body) = if model.is_multitask() {
+                    match parse_task(body, model.num_tasks(), d, true) {
+                        Ok(p) => p,
+                        Err(msg) => {
+                            c.push_ready(format!("err {msg}"));
+                            return;
+                        }
+                    }
+                } else {
+                    (0, body)
+                };
                 match parse_floats(body, d + 1) {
                     Err(msg) => c.push_ready(format!("err {msg}")),
                     Ok(vals) if vals.iter().any(|v| !v.is_finite()) => {
@@ -306,7 +332,7 @@ fn handle_line(line: &str, c: &mut Conn, shared: &Shared) {
                             c.push_ready(shared.reject());
                             return;
                         }
-                        let rx = model.submit_observe(&vals[..d], vals[d]);
+                        let rx = model.submit_observe_task(task, &vals[..d], vals[d]);
                         c.pending.push_back(Pending::Observe(rx));
                     }
                 }
@@ -320,14 +346,26 @@ fn handle_line(line: &str, c: &mut Conn, shared: &Shared) {
                     return;
                 }
             };
-            match parse_floats(body, model.dim()) {
+            let d = model.dim();
+            let (task, body) = if model.is_multitask() {
+                match parse_task(body, model.num_tasks(), d, false) {
+                    Ok(p) => p,
+                    Err(msg) => {
+                        c.push_ready(format!("err {msg}"));
+                        return;
+                    }
+                }
+            } else {
+                (0, body)
+            };
+            match parse_floats(body, d) {
                 Err(msg) => c.push_ready(format!("err {msg}")),
                 Ok(xs) => {
                     if !shared.admit() {
                         c.push_ready(shared.reject());
                         return;
                     }
-                    let rx = model.submit_predict(&xs);
+                    let rx = model.submit_predict_task(task, &xs);
                     c.pending.push_back(Pending::Predict(rx));
                 }
             }

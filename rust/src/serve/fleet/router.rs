@@ -19,6 +19,13 @@
 //! Live (observation-accepting) models are deliberately single-shard:
 //! replicated incremental state would need cross-shard write fan-out,
 //! which is exactly the contention sharding exists to remove.
+//!
+//! Multi-task models shard exactly like single-task ones: every replica
+//! carries the full per-task cache set (snapshot format v5), so the task
+//! id never enters the routing decision — placement stays purely
+//! spatial, and per-task predictions are bitwise identical at any shard
+//! count. Observations (including online task enrollment) still pin to
+//! shard 0.
 
 use crate::coordinator::Metrics;
 use crate::gp::cluster::{nearest_centroid, spatial_centroids};
@@ -208,6 +215,18 @@ impl ShardedModel {
         self.live
     }
 
+    /// Number of tasks served (1 for single-task models). Read from
+    /// shard 0 — the shard whose live engine enrollment can grow (frozen
+    /// replicas are identical, so the choice is moot for them).
+    pub fn num_tasks(&self) -> usize {
+        self.shards[0].engine.num_tasks()
+    }
+
+    /// True iff the model carries a multi-task head.
+    pub fn is_multitask(&self) -> bool {
+        self.shards[0].engine.is_multitask()
+    }
+
     /// Approximate resident bytes across all shard replicas (what the
     /// registry charges against its memory budget).
     pub fn approx_bytes(&self) -> usize {
@@ -245,6 +264,24 @@ impl ShardedModel {
             .expect("shard batcher shut down while a request was in flight")
     }
 
+    /// Enqueue a task-addressed prediction. Placement is the same
+    /// spatial decision as [`submit_predict`](Self::submit_predict) —
+    /// every shard replicates every task's cache, so the task id plays
+    /// no routing role.
+    pub fn submit_predict_task(&self, task: usize, x: &[f64]) -> Receiver<PredictResponse> {
+        let s = &self.shards[self.route(x)];
+        self.metrics
+            .observe("serve.fleet.queue_depth", s.handle.queue_depth() as u64);
+        s.handle.submit_predict_task(task, x)
+    }
+
+    /// Submit a task-addressed prediction and block for the response.
+    pub fn predict_task(&self, task: usize, x: &[f64]) -> PredictResponse {
+        self.submit_predict_task(task, x)
+            .recv()
+            .expect("shard batcher shut down while a request was in flight")
+    }
+
     /// Enqueue an observation. Observations always land on shard 0:
     /// live models are single-shard, and frozen models reject the
     /// observation downstream with the typed frozen-engine error.
@@ -258,6 +295,28 @@ impl ShardedModel {
     /// Submit an observation and block for the ack.
     pub fn observe(&self, x: &[f64], y: f64) -> ObserveResponse {
         self.submit_observe(x, y)
+            .recv()
+            .expect("shard batcher shut down while an observation was in flight")
+    }
+
+    /// Enqueue a task-addressed observation — shard 0, like every
+    /// observation (see [`submit_observe`](Self::submit_observe)); on a
+    /// live multi-task model the first unseen task id enrolls online.
+    pub fn submit_observe_task(
+        &self,
+        task: usize,
+        x: &[f64],
+        y: f64,
+    ) -> Receiver<ObserveResponse> {
+        let s = &self.shards[0];
+        self.metrics
+            .observe("serve.fleet.queue_depth", s.handle.queue_depth() as u64);
+        s.handle.submit_observe_task(task, x, y)
+    }
+
+    /// Submit a task-addressed observation and block for the ack.
+    pub fn observe_task(&self, task: usize, x: &[f64], y: f64) -> ObserveResponse {
+        self.submit_observe_task(task, x, y)
             .recv()
             .expect("shard batcher shut down while an observation was in flight")
     }

@@ -61,8 +61,9 @@ pub use batcher::{
 pub use fleet::{
     FleetConfig, FleetServer, ModelRegistry, RegistryConfig, RoutePolicy, ShardedModel,
 };
-pub use cache::{PredictCache, TermCache, VarianceMode};
+pub use cache::{build_task_cache, PredictCache, TermCache, VarianceMode};
 pub use server::{ObserveAck, ServeEngine, Server, ServerConfig};
 pub use snapshot::{
-    ModelSnapshot, SnapshotConfig, SnapshotVariant, SNAPSHOT_MIN_VERSION, SNAPSHOT_VERSION,
+    ModelSnapshot, SnapshotConfig, SnapshotVariant, TaskHead, SNAPSHOT_MIN_VERSION,
+    SNAPSHOT_VERSION,
 };

@@ -34,11 +34,28 @@
 //! ← ok dup <n> <pending> <latency_us> <batch_size>   (bitwise duplicate)
 //! → ping                          ← ok pong
 //! → dim                           ← ok <d>
+//! → tasks                         ← ok <num_tasks>   (1 for single-task)
 //! → stats                         ← ok qps=… p50_us=… p99_us=… served=…
 //! → quit                          (closes the connection)
 //! ← err <message>                 (malformed input / frozen model;
 //!                                  connection stays open)
 //! ```
+//!
+//! **Multi-task models** (a snapshot with a task head, format v5) address
+//! every query and observation at a task, so the leading token of the
+//! request body is the task id:
+//!
+//! ```text
+//! → predict <task> <x1> … <xd>        (task < num_tasks)
+//! → observe <task> <x1> … <xd> <y>    (task == num_tasks enrolls a new
+//!                                      task online, see crate::stream)
+//! ```
+//!
+//! The plain forms on a multi-task model answer `err` naming the expected
+//! shape; task ids are validated here at the wire (the batched
+//! [`PredictResponse`](super::batcher::PredictResponse) carries no error
+//! channel, and task counts only ever grow, so a task valid at parse time
+//! stays valid at serve time).
 //!
 //! Floats are printed with Rust's shortest-round-trip formatting, so a
 //! client parsing them back gets bit-identical values.
@@ -48,6 +65,7 @@ use super::snapshot::ModelSnapshot;
 use crate::coordinator::Metrics;
 use crate::linalg::Matrix;
 use crate::stream::{IncrementalState, RowOutcome};
+use crate::util::parallel::par_map_range;
 use crate::{Error, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -141,6 +159,17 @@ impl ServeEngine {
         self.stream.is_some()
     }
 
+    /// Number of tasks the published snapshot serves (1 for single-task
+    /// models). Read per call — online enrollment grows it mid-serve.
+    pub fn num_tasks(&self) -> usize {
+        self.state.read().unwrap().num_tasks()
+    }
+
+    /// True iff the published snapshot carries a multi-task head.
+    pub fn is_multitask(&self) -> bool {
+        self.state.read().unwrap().is_multitask()
+    }
+
     /// A clone of the currently-published snapshot (what a `predict`
     /// sees right now; includes the pending log on live engines).
     pub fn snapshot(&self) -> ModelSnapshot {
@@ -157,22 +186,72 @@ impl ServeEngine {
         out
     }
 
+    /// Serve a block of task-addressed queries: row `i` is answered from
+    /// task `tasks[i]`'s cache. Per-row arithmetic is
+    /// [`PredictCache::predict_one`](super::cache::PredictCache::predict_one),
+    /// so a task-0 block agrees bitwise with [`ServeEngine::predict`].
+    /// Rows naming an out-of-range task answer NaN — task ids are
+    /// validated at the wire front-ends, and a misrouted row must not
+    /// take down the batcher worker serving everyone else's block.
+    pub fn predict_tasks(&self, xtest: &Matrix, tasks: &[usize]) -> (Vec<f64>, Vec<f64>) {
+        assert_eq!(xtest.rows, tasks.len(), "one task id per query row");
+        let out = self.metrics.time("serve.predict_block", || {
+            let snap = self.state.read().unwrap();
+            let rows = par_map_range(xtest.rows, 256, |i| match snap.task_cache(tasks[i]) {
+                Some(c) => c.predict_one(xtest.row(i)),
+                None => (f64::NAN, f64::NAN),
+            });
+            rows.into_iter().unzip()
+        });
+        self.metrics.incr("serve.points", xtest.rows as u64);
+        self.metrics.incr("serve.batches", 1);
+        out
+    }
+
     /// Ingest a block of observations into the live model (one extended
     /// warm-started α re-solve for the whole block) and republish the
     /// serving snapshot. Frozen engines return [`Error::Stream`].
     ///
     /// Returns one [`ObserveAck`] per input row, in order.
     pub fn observe_block(&self, xs: &Matrix, ys: &[f64]) -> Result<Vec<ObserveAck>> {
+        self.observe_inner(xs, ys, None)
+    }
+
+    /// Task-addressed [`observe_block`](Self::observe_block): row `i`
+    /// belongs to task `tasks[i]`, and a row naming the first unseen task
+    /// id enrolls it online (see
+    /// [`IncrementalState::ingest_block_tasks`]).
+    pub fn observe_block_tasks(
+        &self,
+        xs: &Matrix,
+        ys: &[f64],
+        tasks: &[usize],
+    ) -> Result<Vec<ObserveAck>> {
+        self.observe_inner(xs, ys, Some(tasks))
+    }
+
+    fn observe_inner(
+        &self,
+        xs: &Matrix,
+        ys: &[f64],
+        tasks: Option<&[usize]>,
+    ) -> Result<Vec<ObserveAck>> {
         let stream = self.stream.as_ref().ok_or_else(|| {
             Error::Stream(
                 "this engine serves a frozen snapshot — observations need a \
-                 live model (skip-gp serve --live)"
+                 live model (skip-gp serve --live); note a live model must \
+                 be the KISS (grid) variant on a single-term dense grid — \
+                 SKIP and sparse-grid multi-term snapshots stay frozen, \
+                 single- and multi-task alike"
                     .into(),
             )
         })?;
         let report = self.metrics.time("stream.ingest_block", || {
             let mut live = stream.lock().unwrap();
-            let report = live.ingest_block(xs, ys)?;
+            let report = match tasks {
+                Some(t) => live.ingest_block_tasks(xs, ys, t)?,
+                None => live.ingest_block(xs, ys)?,
+            };
             // Republish by value: `to_snapshot` clones α + both caches
             // (≈ M·(1+r) floats) once per coalesced block — simple and
             // lock-light (the write lock is held only for the swap, the
@@ -197,6 +276,9 @@ impl ServeEngine {
             self.metrics.incr("stream.cache.mean_patches", 1);
             self.metrics
                 .incr("stream.cache.rows_patched", report.rows_patched as u64);
+        }
+        if report.enrolled > 0 {
+            self.metrics.incr("stream.enrollments", report.enrolled as u64);
         }
         if report.var_rebuilt {
             self.metrics.incr("stream.cache.var_rebuilds", 1);
@@ -447,6 +529,47 @@ pub(crate) fn parse_floats(
     Ok(out)
 }
 
+/// Split the leading task id off a multi-task request body, returning
+/// `(task, rest)`. `observe` selects the observe wire form, which also
+/// admits `task == num_tasks` (online enrollment); predictions require
+/// `task < num_tasks`. `Err` carries the wire-protocol error line.
+/// Shared with the fleet reactor so both front-ends reject malformed
+/// input identically.
+pub(crate) fn parse_task<'a>(
+    body: &'a str,
+    num_tasks: usize,
+    dim: usize,
+    observe: bool,
+) -> std::result::Result<(usize, &'a str), String> {
+    let body = body.trim_start();
+    let (tok, rest) = match body.split_once(|ch: char| ch.is_whitespace()) {
+        Some((tok, rest)) => (tok, rest),
+        None => (body, ""),
+    };
+    let Ok(task) = tok.parse::<usize>() else {
+        let form = if observe {
+            format!("observe <task> x1 … x{dim} y")
+        } else {
+            format!("predict <task> x1 … x{dim}")
+        };
+        return Err(format!(
+            "this model is multi-task — requests must lead with a task id: {form}"
+        ));
+    };
+    let limit = if observe { num_tasks + 1 } else { num_tasks };
+    if task >= limit {
+        return Err(if observe {
+            format!(
+                "task {task} out of range (model has {num_tasks} tasks; \
+                 task {num_tasks} would enroll a new one)"
+            )
+        } else {
+            format!("task {task} out of range (model has {num_tasks} tasks)")
+        });
+    }
+    Ok((task, rest))
+}
+
 fn handle_connection(
     stream: TcpStream,
     handle: super::batcher::BatchHandle,
@@ -466,10 +589,23 @@ fn handle_connection(
             "quit" => break,
             "ping" => writeln!(writer, "ok pong")?,
             "dim" => writeln!(writer, "ok {d}")?,
+            "tasks" => writeln!(writer, "ok {}", engine.num_tasks())?,
             "stats" => writeln!(writer, "ok {}", engine.stats_line())?,
             _ => {
                 if let Some(body) = trimmed.strip_prefix("observe") {
-                    // observe x1 … xd y
+                    // observe x1 … xd y — or, on a multi-task model,
+                    // observe <task> x1 … xd y (task == num_tasks enrolls).
+                    let (task, body) = if engine.is_multitask() {
+                        match parse_task(body, engine.num_tasks(), d, true) {
+                            Ok(p) => p,
+                            Err(msg) => {
+                                writeln!(writer, "err {msg}")?;
+                                continue;
+                            }
+                        }
+                    } else {
+                        (0, body)
+                    };
                     match parse_floats(body, d + 1) {
                         Err(msg) => writeln!(writer, "err {msg}")?,
                         // Reject non-finite values here, per connection —
@@ -480,7 +616,7 @@ fn handle_connection(
                         }
                         Ok(vals) => {
                             let (x, y) = (&vals[..d], vals[d]);
-                            let r = handle.observe(x, y);
+                            let r = handle.observe_task(task, x, y);
                             match r.result {
                                 Err(msg) => writeln!(writer, "err {msg}")?,
                                 Ok(ack) if ack.duplicate => writeln!(
@@ -506,10 +642,21 @@ fn handle_connection(
                     continue;
                 }
                 let body = trimmed.strip_prefix("predict").unwrap_or(trimmed);
+                let (task, body) = if engine.is_multitask() {
+                    match parse_task(body, engine.num_tasks(), d, false) {
+                        Ok(p) => p,
+                        Err(msg) => {
+                            writeln!(writer, "err {msg}")?;
+                            continue;
+                        }
+                    }
+                } else {
+                    (0, body)
+                };
                 match parse_floats(body, d) {
                     Err(msg) => writeln!(writer, "err {msg}")?,
                     Ok(xs) => {
-                        let r = handle.predict(&xs);
+                        let r = handle.predict_task(task, &xs);
                         writeln!(
                             writer,
                             "ok {} {} {:.1} {}",

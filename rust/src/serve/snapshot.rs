@@ -8,13 +8,13 @@
 //! inputs are **not** stored — reload and serve without touching training
 //! data.
 //!
-//! # Format (version 4)
+//! # Format (version 5)
 //!
 //! Little-endian throughout:
 //!
 //! ```text
 //! magic      8 bytes  "SKGPSNAP"
-//! version    u32      format version (this file documents versions 1–4)
+//! version    u32      format version (this file documents versions 1–5)
 //! d          u32      input dimensionality
 //! n          u32      training-set size (length of α)
 //! r          u32      variance-cache rank (0 ⇒ mean-only snapshot)
@@ -34,7 +34,15 @@
 //! alpha      n × f64
 //! means      per term, M_t × f64 with M_t = Π m_k of that term
 //! var_rs     per term, (M_t·r) × f64, row-major M_t × r
-//! pending    u32 count, count × [u64 seq, d × f64 x, f64 y]
+//! pending    u32 count, count × [u64 seq, u32 task, d × f64 x, f64 y]
+//! tasks      u32 flag: 0 single-task, 1 multi-task; if 1:
+//!              u32 s, u32 q
+//!              B       (s·q) × f64, row-major s × q
+//!              diag    s × f64
+//!              task_of n × u32 (task of every training row, < s)
+//!              heads   (s−1) × [f64 prior_var,
+//!                               per term: M_t × f64 mean,
+//!                                         (M_t·r) × f64 var_r]
 //! checksum   u64      FNV-1a over every preceding byte
 //! ```
 //!
@@ -50,6 +58,26 @@
 //! pending section into it
 //! ([`crate::stream::IncrementalState::ingest_observations`]). Replaying
 //! it on top of the checkpoint itself would double-count.
+//!
+//! The `tasks` section (new in v5, with the per-entry `task` id in
+//! `pending`) persists a multi-task model's head ([`TaskHead`]): the
+//! coregionalization kernel `B Bᵀ + D` (paper §6), each training row's
+//! task assignment, and one serving cache per task — task 0's cache *is*
+//! the base `means`/`var_rs` payload, so only tasks 1..s store extra
+//! grid buffers, and they share the base cache's spec, term axes,
+//! coefficients, and variance rank (per-head payloads carry only what
+//! differs: the prior variance `σ_f²·k_task(t,t)` and the masked
+//! mean/variance buffers). Single-task snapshots write flag 0 and their
+//! pending entries carry task 0, keeping the format overhead at 4 bytes.
+//!
+//! # Version 4 (read-only, migrated on load)
+//!
+//! Version 4 is version 5 without the multi-task payload: pending
+//! entries have no `task` field (`seq` is followed directly by `x`) and
+//! there is no `tasks` section (`pending` is followed directly by the
+//! checksum). Loading a v4 file migrates it to task-0 pending entries
+//! and no task head — exactly right, because multi-task models could
+//! not be persisted before v5.
 //!
 //! # Version 3 (read-only, migrated on load)
 //!
@@ -96,7 +124,7 @@ use super::cache::{
 };
 use crate::gp::{ExactGp, GpHypers, MvmGp, MvmVariant};
 use crate::grid::{build_grid, Grid1d, GridSpec, InducingGrid, RectilinearGrid};
-use crate::kernels::ProductKernel;
+use crate::kernels::{ProductKernel, TaskKernel};
 use crate::linalg::{Cholesky, Matrix};
 use crate::operators::AffineOp;
 use crate::solvers::{build_preconditioner, cg_solve_with, CgConfig, PrecondSpec};
@@ -109,7 +137,7 @@ use std::path::Path;
 /// File magic.
 pub const SNAPSHOT_MAGIC: &[u8; 8] = b"SKGPSNAP";
 /// Current (newest) format version; see the module docs for the rules.
-pub const SNAPSHOT_VERSION: u32 = 4;
+pub const SNAPSHOT_VERSION: u32 = 5;
 /// Oldest format version this build still reads (migrating on load).
 pub const SNAPSHOT_MIN_VERSION: u32 = 1;
 
@@ -124,6 +152,11 @@ pub const DEFAULT_MAX_GRID_CELLS: usize = 1 << 22;
 /// ring (the streaming default is 1024) but small enough that a corrupt
 /// count field cannot drive a huge allocation.
 pub const MAX_PENDING_OBSERVATIONS: usize = 1 << 20;
+
+/// Sanity cap on the persisted task count (and task-kernel rank): far
+/// above any real fleet (the nightly scale lane runs T = 1024) but small
+/// enough that a corrupt count field cannot drive a huge allocation.
+pub const MAX_TASKS: usize = 1 << 16;
 
 /// Variance rank a [`VarianceMode`] will produce for an n-point model.
 fn variance_rank(mode: &VarianceMode, n: usize) -> usize {
@@ -243,6 +276,25 @@ impl Default for SnapshotConfig {
     }
 }
 
+/// The multi-task head of a snapshot (new in format v5): the
+/// coregionalization kernel, each training row's task assignment, and
+/// the per-task serving caches for tasks `1..s` — task 0 is served from
+/// the base [`ModelSnapshot::cache`], so single-task models pay nothing
+/// for the multi-task format beyond a 4-byte flag.
+#[derive(Clone, Debug)]
+pub struct TaskHead {
+    /// Coregionalization kernel `B Bᵀ + D` over the `s` tasks (paper §6).
+    pub kernel: TaskKernel,
+    /// Task of every training row (length n, values < s).
+    pub task_of: Vec<usize>,
+    /// Serving caches for tasks `1..s` (length `s − 1`, indexed by
+    /// `task − 1`): structurally identical to the base cache — same grid
+    /// spec, term axes, coefficients, and variance rank — differing only
+    /// in the task-masked mean/variance buffers and the prior variance
+    /// `σ_f²·k_task(t,t)` (see [`super::cache::build_task_cache`]).
+    pub caches: Vec<PredictCache>,
+}
+
 /// A trained model frozen into its predictive caches.
 #[derive(Clone, Debug)]
 pub struct ModelSnapshot {
@@ -269,6 +321,11 @@ pub struct ModelSnapshot {
     /// Empty for frozen (train-then-snapshot) models and for files
     /// migrated from v1/v2.
     pub pending: Vec<Observation>,
+    /// Multi-task head (new in format v5): the task kernel, per-row task
+    /// assignments, and the serving caches for tasks `1..s`. `None` for
+    /// single-task models and for files migrated from v1–v4 (which could
+    /// not persist multi-task models).
+    pub tasks: Option<TaskHead>,
 }
 
 impl ModelSnapshot {
@@ -359,6 +416,7 @@ impl ModelSnapshot {
             alpha,
             cache,
             pending: Vec::new(),
+            tasks: None,
         })
     }
 
@@ -421,7 +479,28 @@ impl ModelSnapshot {
             alpha,
             cache,
             pending: Vec::new(),
+            tasks: None,
         })
+    }
+
+    /// Number of tasks this snapshot serves (1 for single-task models).
+    pub fn num_tasks(&self) -> usize {
+        self.tasks.as_ref().map_or(1, |h| h.kernel.num_tasks())
+    }
+
+    /// True iff the snapshot carries a multi-task head.
+    pub fn is_multitask(&self) -> bool {
+        self.tasks.is_some()
+    }
+
+    /// The serving cache that answers `task`'s queries: task 0 is the
+    /// base cache, tasks `1..s` live in the head. `None` when out of
+    /// range — including any task > 0 on a single-task model.
+    pub fn task_cache(&self, task: usize) -> Option<&PredictCache> {
+        if task == 0 {
+            return Some(&self.cache);
+        }
+        self.tasks.as_ref()?.caches.get(task - 1)
     }
 
     /// Serialize to `path` (format version [`SNAPSHOT_VERSION`]).
@@ -456,20 +535,27 @@ impl ModelSnapshot {
     }
 
     /// Approximate resident size of the snapshot in bytes: the grid-side
-    /// predictive cache plus α and the pending observation log. The
-    /// fleet registry multiplies this by the shard count when charging a
-    /// model against its memory budget.
+    /// predictive cache(s, one per task) plus α, the task kernel, and
+    /// the pending observation log. The fleet registry multiplies this
+    /// by the shard count when charging a model against its memory
+    /// budget.
     pub fn approx_bytes(&self) -> usize {
         let f = std::mem::size_of::<f64>();
+        let u = std::mem::size_of::<u32>();
         let pending: usize = self
             .pending
             .iter()
-            .map(|o| f * (o.x.len() + 1) + std::mem::size_of::<u64>())
+            .map(|o| f * (o.x.len() + 1) + std::mem::size_of::<u64>() + u)
             .sum();
-        self.cache.approx_bytes() + f * self.alpha.len() + pending
+        let tasks = self.tasks.as_ref().map_or(0, |h| {
+            h.caches.iter().map(PredictCache::approx_bytes).sum::<usize>()
+                + f * (h.kernel.b.data.len() + h.kernel.diag.len())
+                + u * h.task_of.len()
+        });
+        self.cache.approx_bytes() + f * self.alpha.len() + pending + tasks
     }
 
-    /// Encode to the version-4 byte layout (checksum included). Writers
+    /// Encode to the version-5 byte layout (checksum included). Writers
     /// always emit the newest version, whatever `self.version` was read
     /// from.
     pub fn to_bytes(&self) -> Vec<u8> {
@@ -478,11 +564,17 @@ impl ModelSnapshot {
         let r = self.cache.var_rank();
         let terms = self.cache.terms();
         let m_total = self.cache.total_grid();
+        let task_bytes = self.tasks.as_ref().map_or(4, |h| {
+            16 + 8 * (h.kernel.b.data.len() + h.kernel.diag.len())
+                + 4 * h.task_of.len()
+                + h.caches.len() * (8 + m_total * (1 + r) * 8)
+        });
         let mut out = Vec::with_capacity(
             64 + d * 24
                 + terms.len() * (8 + d * 20)
                 + (n + m_total * (1 + r)) * 8
-                + self.pending.len() * (16 + d * 8),
+                + self.pending.len() * (20 + d * 8)
+                + task_bytes,
         );
         out.extend_from_slice(SNAPSHOT_MAGIC);
         push_u32(&mut out, SNAPSHOT_VERSION);
@@ -539,19 +631,57 @@ impl ModelSnapshot {
         for o in &self.pending {
             debug_assert_eq!(o.x.len(), d, "pending observation dimensionality");
             push_u64(&mut out, o.seq);
+            push_u32(&mut out, o.task as u32);
             for &v in &o.x {
                 push_f64(&mut out, v);
             }
             push_f64(&mut out, o.y);
+        }
+        match &self.tasks {
+            None => push_u32(&mut out, 0),
+            Some(head) => {
+                push_u32(&mut out, 1);
+                let s = head.kernel.num_tasks();
+                push_u32(&mut out, s as u32);
+                push_u32(&mut out, head.kernel.b.cols as u32);
+                for &v in &head.kernel.b.data {
+                    push_f64(&mut out, v);
+                }
+                for &v in &head.kernel.diag {
+                    push_f64(&mut out, v);
+                }
+                debug_assert_eq!(head.task_of.len(), n, "task assignments cover α");
+                for &t in &head.task_of {
+                    push_u32(&mut out, t as u32);
+                }
+                debug_assert_eq!(head.caches.len(), s - 1, "one cache per task 1..s");
+                for cache in &head.caches {
+                    push_f64(&mut out, cache.prior_var);
+                    debug_assert_eq!(
+                        cache.terms().len(),
+                        terms.len(),
+                        "task caches share the base cache's grid terms"
+                    );
+                    for t in cache.terms() {
+                        for &v in &t.mean {
+                            push_f64(&mut out, v);
+                        }
+                        for &v in &t.var_r.data {
+                            push_f64(&mut out, v);
+                        }
+                    }
+                }
+            }
         }
         let sum = fnv1a(&out);
         push_u64(&mut out, sum);
         out
     }
 
-    /// Decode from bytes: version 4 natively, versions 1–3 with an
+    /// Decode from bytes: version 5 natively, versions 1–4 with an
     /// in-memory migration (v1: single term, coefficient 1, rectilinear
-    /// spec; v2: empty pending log; v3: data-space α provenance).
+    /// spec; v2: empty pending log; v3: data-space α provenance; v4:
+    /// task-0 pending entries and no multi-task head).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         let mut c = Cursor { bytes, pos: 0 };
         let magic = c.take(8)?;
@@ -677,6 +807,10 @@ impl ModelSnapshot {
                     ));
                 }
                 last_seq = Some(seq);
+                // v5 entries carry their task id; older files predate
+                // multi-task streaming, so task 0 is the correct
+                // migration, not a guess.
+                let task = if version >= 5 { c.u32()? as usize } else { 0 };
                 let x = c.f64_vec(d)?;
                 let y = c.f64()?;
                 if !y.is_finite() || x.iter().any(|v| !v.is_finite()) {
@@ -684,12 +818,109 @@ impl ModelSnapshot {
                         "non-finite pending observation".into(),
                     ));
                 }
-                pending.push(Observation { seq, x, y });
+                pending.push(Observation { seq, task, x, y });
             }
             pending
         } else {
             Vec::new()
         };
+        // Multi-task head (v5+; single-task files write flag 0 and older
+        // versions could not persist multi-task models at all).
+        let tasks = if version >= 5 {
+            match c.u32()? {
+                0 => None,
+                1 => {
+                    let s = c.u32()? as usize;
+                    if s == 0 || s > MAX_TASKS {
+                        return Err(Error::Snapshot(format!(
+                            "implausible task count {s}"
+                        )));
+                    }
+                    let q = c.u32()? as usize;
+                    if q > MAX_TASKS {
+                        return Err(Error::Snapshot(format!(
+                            "implausible task-kernel rank {q}"
+                        )));
+                    }
+                    let sq = s.checked_mul(q).ok_or_else(|| {
+                        Error::Snapshot("task kernel size overflow".into())
+                    })?;
+                    let b_data = c.f64_vec(sq)?;
+                    let diag = c.f64_vec(s)?;
+                    if b_data.iter().chain(&diag).any(|v| !v.is_finite()) {
+                        return Err(Error::Snapshot("non-finite task kernel".into()));
+                    }
+                    let b = if q == 0 {
+                        Matrix::zeros(s, 0)
+                    } else {
+                        Matrix::from_vec(s, q, b_data)
+                    };
+                    let kernel = TaskKernel::new(b, diag);
+                    let mut task_of = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let t = c.u32()? as usize;
+                        if t >= s {
+                            return Err(Error::Snapshot(format!(
+                                "task assignment {t} out of range (model has \
+                                 {s} tasks)"
+                            )));
+                        }
+                        task_of.push(t);
+                    }
+                    // Per-task caches reuse the base cache's term axes,
+                    // coefficients, and variance rank — only the masked
+                    // buffers and the prior variance are per-task.
+                    let mut caches = Vec::with_capacity(s - 1);
+                    for _ in 1..s {
+                        let prior_var = c.f64()?;
+                        if !prior_var.is_finite() {
+                            return Err(Error::Snapshot(
+                                "non-finite task prior variance".into(),
+                            ));
+                        }
+                        let mut tterms = Vec::with_capacity(term_axes.len());
+                        for (coeff, axes) in &term_axes {
+                            let m_t: usize = axes.iter().map(|g| g.m).product();
+                            let mean = c.f64_vec(m_t)?;
+                            let data = c.f64_vec(m_t * r)?;
+                            let var_r = if r == 0 {
+                                Matrix::zeros(m_t, 0)
+                            } else {
+                                Matrix::from_vec(m_t, r, data)
+                            };
+                            tterms.push(TermCache::new(
+                                *coeff,
+                                axes.clone(),
+                                mean,
+                                var_r,
+                            )?);
+                        }
+                        caches.push(PredictCache::from_parts(
+                            spec.clone(),
+                            tterms,
+                            prior_var,
+                            hypers.sn2(),
+                        )?);
+                    }
+                    Some(TaskHead { kernel, task_of, caches })
+                }
+                other => {
+                    return Err(Error::Snapshot(format!(
+                        "unknown task-section flag {other}"
+                    )))
+                }
+            }
+        } else {
+            None
+        };
+        let num_tasks = tasks.as_ref().map_or(1, |h| h.kernel.num_tasks());
+        if let Some(o) = pending.iter().find(|o| o.task >= num_tasks) {
+            return Err(Error::Snapshot(format!(
+                "pending observation task {} out of range (model has \
+                 {num_tasks} tasks)",
+                o.task
+            )));
+        }
         // Trailing checksum (8 bytes) must be exactly what remains.
         if c.remaining() != 8 {
             return Err(Error::Snapshot(format!(
@@ -714,6 +945,7 @@ impl ModelSnapshot {
             alpha,
             cache,
             pending,
+            tasks,
         })
     }
 }
@@ -916,8 +1148,8 @@ mod tests {
     fn pending_log_roundtrips_bitwise() {
         let mut snap = small_snapshot(7);
         snap.pending = vec![
-            Observation { seq: 3, x: vec![0.25, -0.5], y: 1.125 },
-            Observation { seq: 9, x: vec![0.75, 0.0], y: -2.25 },
+            Observation { seq: 3, task: 0, x: vec![0.25, -0.5], y: 1.125 },
+            Observation { seq: 9, task: 0, x: vec![0.75, 0.0], y: -2.25 },
         ];
         let bytes = snap.to_bytes();
         let back = ModelSnapshot::from_bytes(&bytes).unwrap();
@@ -952,16 +1184,19 @@ mod tests {
     fn alpha_space_roundtrips_and_v3_migrates_to_data() {
         let mut snap = small_snapshot(8);
         snap.alpha_space = 1;
-        let v4 = snap.to_bytes();
-        let back = ModelSnapshot::from_bytes(&v4).unwrap();
-        assert_eq!(back.alpha_space, 1, "v4 roundtrip keeps grid provenance");
+        let v5 = snap.to_bytes();
+        let back = ModelSnapshot::from_bytes(&v5).unwrap();
+        assert_eq!(back.alpha_space, 1, "v5 roundtrip keeps grid provenance");
 
         // Splice the same payload down to version 3: drop the 4-byte
-        // alpha_space field at offset 36 (after magic 8 + 7 × u32), patch
-        // the version field to 3, and recompute the FNV-1a checksum.
-        let mut v3 = Vec::with_capacity(v4.len() - 4);
-        v3.extend_from_slice(&v4[..36]);
-        v3.extend_from_slice(&v4[40..v4.len() - 8]);
+        // alpha_space field at offset 36 (after magic 8 + 7 × u32) and
+        // the trailing 4-byte task-section flag (the snapshot is
+        // single-task with an empty pending log, so nothing else in the
+        // layout differs), patch the version field to 3, and recompute
+        // the FNV-1a checksum.
+        let mut v3 = Vec::with_capacity(v5.len() - 8);
+        v3.extend_from_slice(&v5[..36]);
+        v3.extend_from_slice(&v5[40..v5.len() - 12]);
         v3[8..12].copy_from_slice(&3u32.to_le_bytes());
         let sum = fnv1a(&v3);
         v3.extend_from_slice(&sum.to_le_bytes());
@@ -981,6 +1216,116 @@ mod tests {
         bad.alpha_space = 7;
         let err = ModelSnapshot::from_bytes(&bad.to_bytes()).unwrap_err();
         assert!(err.to_string().contains("alpha_space"), "{err}");
+    }
+
+    /// A multi-task snapshot: `small_snapshot`'s base model wearing a
+    /// 3-task head whose per-task caches are structurally-identical
+    /// clones of the base cache with distinguishable payloads.
+    fn multitask_snapshot(seed: u64) -> ModelSnapshot {
+        let mut snap = small_snapshot(seed);
+        let n = snap.alpha.len();
+        let kernel = TaskKernel::new(
+            Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.5, 0.25, -0.5, 1.0]),
+            vec![0.5, 0.25, 0.125],
+        );
+        let mut c1 = snap.cache.clone();
+        c1.prior_var = 2.5;
+        for t in c1.terms_mut() {
+            for v in &mut t.mean {
+                *v *= 0.5;
+            }
+            for v in &mut t.var_r.data {
+                *v *= 0.25;
+            }
+        }
+        let mut c2 = snap.cache.clone();
+        c2.prior_var = 1.75;
+        snap.tasks = Some(TaskHead {
+            kernel,
+            task_of: (0..n).map(|i| i % 3).collect(),
+            caches: vec![c1, c2],
+        });
+        snap.pending = vec![
+            Observation { seq: 0, task: 2, x: vec![0.5, 0.5], y: 1.0 },
+            Observation { seq: 4, task: 0, x: vec![-0.25, 0.125], y: -0.5 },
+        ];
+        snap
+    }
+
+    #[test]
+    fn multitask_head_roundtrips_bitwise() {
+        let snap = multitask_snapshot(12);
+        let bytes = snap.to_bytes();
+        let back = ModelSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back.num_tasks(), 3);
+        assert!(back.is_multitask());
+        assert_eq!(back.pending, snap.pending);
+        let head = back.tasks.as_ref().unwrap();
+        let orig = snap.tasks.as_ref().unwrap();
+        assert_eq!(head.task_of, orig.task_of);
+        assert_eq!(head.kernel.b.data, orig.kernel.b.data);
+        assert_eq!(head.kernel.diag, orig.kernel.diag);
+        assert_eq!(head.caches.len(), 2);
+        for (a, b) in head.caches.iter().zip(&orig.caches) {
+            assert_eq!(a.prior_var, b.prior_var);
+            for (ta, tb) in a.terms().iter().zip(b.terms()) {
+                assert_eq!(ta.mean, tb.mean);
+                assert_eq!(ta.var_r.data, tb.var_r.data);
+                assert_eq!(ta.axes, tb.axes);
+            }
+        }
+        // task_cache routes task 0 to the base cache, 1.. to the head,
+        // and rejects out-of-range ids.
+        assert!(std::ptr::eq(back.task_cache(0).unwrap(), &back.cache));
+        assert_eq!(back.task_cache(1).unwrap().prior_var, 2.5);
+        assert_eq!(back.task_cache(2).unwrap().prior_var, 1.75);
+        assert!(back.task_cache(3).is_none());
+        // And re-encoding reproduces the identical bytes.
+        assert_eq!(back.to_bytes(), bytes);
+    }
+
+    #[test]
+    fn bad_task_payloads_are_rejected() {
+        // A task assignment pointing past the task count is a corrupt
+        // file, not an index panic later.
+        let mut snap = multitask_snapshot(13);
+        snap.tasks.as_mut().unwrap().task_of[0] = 3;
+        let err = ModelSnapshot::from_bytes(&snap.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("task assignment"), "{err}");
+
+        // So is a pending observation for a task the model doesn't have.
+        let mut snap = multitask_snapshot(13);
+        snap.pending[0].task = 9;
+        let err = ModelSnapshot::from_bytes(&snap.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("pending observation task"), "{err}");
+
+        // Single-task snapshots only carry task-0 pending entries.
+        let mut snap = small_snapshot(13);
+        snap.pending =
+            vec![Observation { seq: 1, task: 1, x: vec![0.5, 0.5], y: 1.0 }];
+        let err = ModelSnapshot::from_bytes(&snap.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("pending observation task"), "{err}");
+    }
+
+    #[test]
+    fn v4_migrates_to_task_free_head() {
+        let snap = small_snapshot(14);
+        let v5 = snap.to_bytes();
+        // Splice down to version 4: the snapshot is single-task with an
+        // empty pending log, so v4 is exactly v5 minus the trailing
+        // 4-byte task-section flag. Patch the version, re-checksum.
+        let mut v4 = Vec::with_capacity(v5.len() - 4);
+        v4.extend_from_slice(&v5[..v5.len() - 12]);
+        v4[8..12].copy_from_slice(&4u32.to_le_bytes());
+        let sum = fnv1a(&v4);
+        v4.extend_from_slice(&sum.to_le_bytes());
+
+        let migrated = ModelSnapshot::from_bytes(&v4).unwrap();
+        assert_eq!(migrated.version, 4);
+        assert!(migrated.tasks.is_none());
+        assert_eq!(migrated.num_tasks(), 1);
+        assert_eq!(migrated.alpha, snap.alpha);
+        assert_eq!(migrated.cache.spec, snap.cache.spec);
     }
 
     #[test]

@@ -5,9 +5,9 @@
 //! ([`crate::stream::IncrementalState`]) is recorded here with a
 //! monotonically increasing sequence number. The log serves three jobs:
 //!
-//! - **dedup** — a bitwise-identical `(x, y)` pair still in the ring is
-//!   rejected, so client retries (the TCP protocol has no request ids)
-//!   cannot double-count an observation;
+//! - **dedup** — a bitwise-identical `(task, x, y)` triple still in the
+//!   ring is rejected, so client retries (the TCP protocol has no
+//!   request ids) cannot double-count an observation;
 //! - **chronological replay** — [`ObservationLog::replay`] walks the
 //!   pending entries in ingest order, which is how a reloaded snapshot's
 //!   pending section is re-applied to a live model;
@@ -17,18 +17,23 @@
 //!   (and clears) everything pending. Entries are never overwritten or
 //!   dropped — "ring" bounds the *pending* set, not history.
 //!
-//! Snapshot format v3 persists the pending entries verbatim
+//! Snapshot format v3+ persists the pending entries verbatim
 //! ([`crate::serve::snapshot`]), so a checkpointed live model does not
-//! lose the observations streamed since its last refresh.
+//! lose the observations streamed since its last refresh. Single-task
+//! models carry `task == 0` everywhere, which keeps their dedup and
+//! replay semantics identical to the pre-multi-task format.
 
 use std::collections::HashSet;
 use std::collections::VecDeque;
 
-/// One streamed observation: query point, target, and its ingest
-/// sequence number (monotonic per log, starting at 0).
+/// One streamed observation: task id (0 for single-task models), query
+/// point, target, and its ingest sequence number (monotonic per log,
+/// starting at 0).
 #[derive(Clone, Debug, PartialEq)]
 pub struct Observation {
     pub seq: u64,
+    /// Task the observation belongs to (always 0 for single-task models).
+    pub task: usize,
     pub x: Vec<f64>,
     pub y: f64,
 }
@@ -46,26 +51,30 @@ pub enum PushOutcome {
 #[derive(Debug)]
 pub struct ObservationLog {
     entries: VecDeque<Observation>,
-    /// FNV hashes of the pending `(x, y)` payloads; collisions are
+    /// FNV hashes of the pending `(task, x, y)` payloads; collisions are
     /// resolved by an exact scan before declaring a duplicate.
     seen: HashSet<u64>,
     capacity: usize,
     next_seq: u64,
 }
 
-/// FNV-1a over the little-endian bytes of `(x, y)` — the dedup key.
-fn payload_hash(x: &[f64], y: f64) -> u64 {
+/// FNV-1a over the task id and the little-endian bytes of `(x, y)` — the
+/// dedup key. The hash is internal (never persisted), so folding the
+/// task id in costs nothing for single-task models beyond eight zero
+/// bytes.
+fn payload_hash(task: usize, x: &[f64], y: f64) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut eat = |v: f64| {
-        for b in v.to_le_bytes() {
+    let mut eat_bytes = |bytes: [u8; 8]| {
+        for b in bytes {
             h ^= b as u64;
             h = h.wrapping_mul(0x0000_0100_0000_01b3);
         }
     };
+    eat_bytes((task as u64).to_le_bytes());
     for &v in x {
-        eat(v);
+        eat_bytes(v.to_le_bytes());
     }
-    eat(y);
+    eat_bytes(y.to_le_bytes());
     h
 }
 
@@ -82,27 +91,28 @@ impl ObservationLog {
         }
     }
 
-    /// Append `(x, y)` unless it bitwise-duplicates a pending entry.
-    /// Callers check [`is_full`](Self::is_full) and refresh *after* the
-    /// push that fills the ring — pushes themselves are never refused.
-    pub fn push(&mut self, x: &[f64], y: f64) -> PushOutcome {
-        if self.contains(x, y) {
+    /// Append `(task, x, y)` unless it bitwise-duplicates a pending
+    /// entry. Callers check [`is_full`](Self::is_full) and refresh
+    /// *after* the push that fills the ring — pushes themselves are never
+    /// refused.
+    pub fn push(&mut self, task: usize, x: &[f64], y: f64) -> PushOutcome {
+        if self.contains(task, x, y) {
             return PushOutcome::Duplicate;
         }
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.seen.insert(payload_hash(x, y));
-        self.entries.push_back(Observation { seq, x: x.to_vec(), y });
+        self.seen.insert(payload_hash(task, x, y));
+        self.entries
+            .push_back(Observation { seq, task, x: x.to_vec(), y });
         PushOutcome::Appended(seq)
     }
 
-    /// True iff a bitwise-identical `(x, y)` is pending.
-    pub fn contains(&self, x: &[f64], y: f64) -> bool {
-        self.seen.contains(&payload_hash(x, y))
-            && self
-                .entries
-                .iter()
-                .any(|o| o.y.to_bits() == y.to_bits() && bits_eq(&o.x, x))
+    /// True iff a bitwise-identical `(task, x, y)` is pending.
+    pub fn contains(&self, task: usize, x: &[f64], y: f64) -> bool {
+        self.seen.contains(&payload_hash(task, x, y))
+            && self.entries.iter().any(|o| {
+                o.task == task && o.y.to_bits() == y.to_bits() && bits_eq(&o.x, x)
+            })
     }
 
     /// Pending entries in chronological (sequence) order.
@@ -123,7 +133,7 @@ impl ObservationLog {
     pub fn restore(&mut self, entries: Vec<Observation>) {
         debug_assert!(entries.windows(2).all(|w| w[0].seq < w[1].seq));
         for o in &entries {
-            self.seen.insert(payload_hash(&o.x, o.y));
+            self.seen.insert(payload_hash(o.task, &o.x, o.y));
             self.next_seq = self.next_seq.max(o.seq + 1);
         }
         self.entries.extend(entries);
@@ -166,8 +176,8 @@ mod tests {
     #[test]
     fn push_assigns_monotonic_seqs() {
         let mut log = ObservationLog::new(8);
-        assert_eq!(log.push(&[0.1, 0.2], 1.0), PushOutcome::Appended(0));
-        assert_eq!(log.push(&[0.3, 0.4], 2.0), PushOutcome::Appended(1));
+        assert_eq!(log.push(0, &[0.1, 0.2], 1.0), PushOutcome::Appended(0));
+        assert_eq!(log.push(0, &[0.3, 0.4], 2.0), PushOutcome::Appended(1));
         assert_eq!(log.len(), 2);
         let seqs: Vec<u64> = log.replay().map(|o| o.seq).collect();
         assert_eq!(seqs, vec![0, 1]);
@@ -176,25 +186,37 @@ mod tests {
     #[test]
     fn bitwise_duplicates_are_dropped() {
         let mut log = ObservationLog::new(8);
-        log.push(&[0.1, 0.2], 1.0);
-        assert_eq!(log.push(&[0.1, 0.2], 1.0), PushOutcome::Duplicate);
+        log.push(0, &[0.1, 0.2], 1.0);
+        assert_eq!(log.push(0, &[0.1, 0.2], 1.0), PushOutcome::Duplicate);
         // Same x, different y is a fresh observation (a re-measurement).
-        assert_eq!(log.push(&[0.1, 0.2], 1.5), PushOutcome::Appended(1));
+        assert_eq!(log.push(0, &[0.1, 0.2], 1.5), PushOutcome::Appended(1));
         // -0.0 differs bitwise from 0.0: not a duplicate.
-        log.push(&[0.0], 0.0);
-        assert_eq!(log.push(&[-0.0], 0.0), PushOutcome::Appended(3));
+        log.push(0, &[0.0], 0.0);
+        assert_eq!(log.push(0, &[-0.0], 0.0), PushOutcome::Appended(3));
         assert_eq!(log.len(), 4);
+    }
+
+    #[test]
+    fn same_payload_different_task_is_not_a_duplicate() {
+        let mut log = ObservationLog::new(8);
+        log.push(1, &[0.1, 0.2], 1.0);
+        // A different task observing the identical (x, y) is fresh data.
+        assert_eq!(log.push(2, &[0.1, 0.2], 1.0), PushOutcome::Appended(1));
+        // …while the same task retrying is deduped.
+        assert_eq!(log.push(1, &[0.1, 0.2], 1.0), PushOutcome::Duplicate);
+        assert!(log.contains(2, &[0.1, 0.2], 1.0));
+        assert!(!log.contains(3, &[0.1, 0.2], 1.0));
     }
 
     #[test]
     fn absorb_clears_pending_but_not_seq() {
         let mut log = ObservationLog::new(4);
-        log.push(&[1.0], 2.0);
-        log.push(&[2.0], 3.0);
+        log.push(0, &[1.0], 2.0);
+        log.push(0, &[2.0], 3.0);
         log.absorb();
         assert!(log.is_empty());
         // Absorbed entries no longer shadow re-observations…
-        assert_eq!(log.push(&[1.0], 2.0), PushOutcome::Appended(2));
+        assert_eq!(log.push(0, &[1.0], 2.0), PushOutcome::Appended(2));
         // …and sequence numbers never restart.
         assert_eq!(log.next_seq(), 3);
     }
@@ -202,9 +224,9 @@ mod tests {
     #[test]
     fn fills_at_capacity() {
         let mut log = ObservationLog::new(2);
-        log.push(&[1.0], 0.0);
+        log.push(0, &[1.0], 0.0);
         assert!(!log.is_full());
-        log.push(&[2.0], 0.0);
+        log.push(0, &[2.0], 0.0);
         assert!(log.is_full());
     }
 
@@ -212,11 +234,12 @@ mod tests {
     fn restore_resumes_sequence() {
         let mut log = ObservationLog::new(8);
         log.restore(vec![
-            Observation { seq: 3, x: vec![0.5], y: 1.0 },
-            Observation { seq: 7, x: vec![0.6], y: 2.0 },
+            Observation { seq: 3, task: 0, x: vec![0.5], y: 1.0 },
+            Observation { seq: 7, task: 1, x: vec![0.6], y: 2.0 },
         ]);
         assert_eq!(log.len(), 2);
-        assert!(log.contains(&[0.5], 1.0));
-        assert_eq!(log.push(&[0.7], 3.0), PushOutcome::Appended(8));
+        assert!(log.contains(0, &[0.5], 1.0));
+        assert!(log.contains(1, &[0.6], 2.0));
+        assert_eq!(log.push(0, &[0.7], 3.0), PushOutcome::Appended(8));
     }
 }

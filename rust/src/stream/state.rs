@@ -41,18 +41,42 @@
 //! Lanczos decomposition of the *whole* data set into its operator, so
 //! appending a row would invalidate it — streaming a SKIP model is a
 //! typed [`Error::Stream`].
+//!
+//! # Multi-task streaming
+//!
+//! A state built with [`IncrementalState::new_multitask`] carries a
+//! coregionalization kernel (paper §6) and each row's task. Everything
+//! above still holds — the data-side stencil `W` is task-blind — with
+//! three substitutions: solves run against the Hadamard view
+//! `σ_f²·(K_ski ∘ K_task) + σ_n²·I`
+//! ([`crate::operators::TaskHadamardRef`], still MVM-only, so `--precond`,
+//! warm starts, and `--precision mixed` apply unchanged); the mean patch
+//! scatters each α delta into *every* task's masked scatter
+//! `Wᵀ(c_t ∘ α)` in one stencil decode; and observations arrive as
+//! `(task, x, y)` via [`IncrementalState::ingest_block_tasks`]. A
+//! previously-unseen task id equal to the current task count **enrolls
+//! online**: the task kernel grows a decoupled row
+//! ([`crate::kernels::TaskKernel::enroll`]), the newcomer gets a zero
+//! scatter and a placeholder cache (conservative prior variance until
+//! the next rebuild), and the warm re-solve proceeds through the
+//! existing [`PaddedPrecond`] exactly as a same-task append would.
+//! Grid-space re-solves stay single-task — the Hadamard operator has no
+//! grid-space normal form, so `--space grid` is a typed error and `Auto`
+//! falls back to data space, metered under `solver.space.fallback`.
 
 use super::log::{Observation, ObservationLog, PushOutcome};
 use crate::gp::{GpHypers, MvmGp, MvmVariant, SolveSpace};
 use crate::grid::{tensor_stencil, tensor_strides, Grid1d, RectilinearGrid};
-use crate::kernels::{ProductKernel, Stationary1d};
+use crate::kernels::{ProductKernel, Stationary1d, TaskKernel};
 use crate::linalg::{dot, Cholesky, Matrix, SymToeplitz};
-use crate::operators::{AffineRef, KroneckerSkiOp};
+use crate::operators::{AffineRef, KroneckerSkiOp, LinearOp, TaskHadamardRef};
 use crate::serve::cache::{
-    inverse_root_exact, inverse_root_lanczos, mean_from_scatter, scatter_wt,
-    PredictCache, TermCache, VarianceMode,
+    build_task_cache, inverse_root_exact, inverse_root_lanczos, mean_from_scatter,
+    scatter_wt, PredictCache, TermCache, VarianceMode,
 };
-use crate::serve::snapshot::{ModelSnapshot, SnapshotVariant, SNAPSHOT_VERSION};
+use crate::serve::snapshot::{
+    ModelSnapshot, SnapshotVariant, TaskHead, SNAPSHOT_VERSION,
+};
 use crate::solvers::{
     block_cg_solve_with, build_preconditioner, cg_solve_with, grid_cg_solve_with_wty,
     CgConfig, GridSystem, IdentityPrecond, PaddedPrecond, Precision, Preconditioner,
@@ -157,6 +181,9 @@ pub struct IngestReport {
     pub var_rebuilt: bool,
     /// Whether (and why) this ingest escalated to a full refresh.
     pub refreshed: Option<RefreshReason>,
+    /// Tasks enrolled online by this ingest (always 0 for single-task
+    /// models and for blocks naming only existing tasks).
+    pub enrolled: usize,
     /// Model size after the ingest.
     pub n: usize,
     /// Pending-log length after the ingest (0 right after a refresh).
@@ -202,8 +229,14 @@ pub struct IncrementalState {
     /// ingest mean patch pays only the Kronecker apply.
     factors: Vec<SymToeplitz>,
     /// Live predictive cache (mean patched per ingest; variance factor
-    /// rebuilt on drift).
+    /// rebuilt on drift). For multi-task states this is **task 0's
+    /// masked** cache — `wta` likewise holds task 0's masked scatter —
+    /// so the single-task layout doubles as the task-0 head.
     cache: PredictCache,
+    /// Multi-task extension: the task kernel, per-row assignments, and
+    /// the scatters/caches of tasks `1..s`. `None` for single-task
+    /// states, whose code paths are bitwise-unchanged by its existence.
+    mt: Option<MtState>,
     /// Model size when the variance factor was last built.
     var_built_at: usize,
     /// Iterations of the last cold (refresh-grade) solve — the baseline
@@ -216,6 +249,22 @@ pub struct IncrementalState {
     pub stats: StreamStats,
 }
 
+/// The multi-task extension of a live state (tasks `1..s`; task 0 rides
+/// the base `wta`/`cache` fields, which hold its *masked* versions
+/// whenever this is present — the same split the snapshot format uses).
+struct MtState {
+    /// Coregionalization kernel `B Bᵀ + D`; grows by one decoupled row
+    /// per online enrollment.
+    kernel: TaskKernel,
+    /// Task of every training row (length n).
+    task_of: Vec<usize>,
+    /// Masked grid scatters `Wᵀ(c_t ∘ α)` for tasks `1..s`, patched per
+    /// ingest alongside the base scatter.
+    wtas: Vec<Vec<f64>>,
+    /// Per-task serving caches for tasks `1..s`.
+    caches: Vec<PredictCache>,
+}
+
 /// Cumulative streaming counters.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct StreamStats {
@@ -225,6 +274,8 @@ pub struct StreamStats {
     pub var_rebuilds: u64,
     pub refreshes: u64,
     pub outlier_refreshes: u64,
+    /// Tasks enrolled online (multi-task states only).
+    pub enrollments: u64,
     /// Variance rebuilds / policy refreshes that failed *after* the
     /// ingest itself succeeded (the model keeps serving; see
     /// [`IncrementalState::ingest_block`]).
@@ -236,6 +287,65 @@ impl IncrementalState {
     /// grid; performs one full [`refresh`](Self::refresh) to initialize
     /// α, the preconditioner, and both caches.
     pub fn new(
+        xs: Matrix,
+        ys: Vec<f64>,
+        hypers: GpHypers,
+        axes: Vec<Grid1d>,
+        cg: CgConfig,
+        cfg: StreamConfig,
+    ) -> Result<Self> {
+        let mut state = Self::build(xs, ys, hypers, axes, cg, cfg)?;
+        state.refresh()?;
+        Ok(state)
+    }
+
+    /// Build a live **multi-task** state: `tasks` pairs the
+    /// coregionalization kernel with each training row's task id. Same
+    /// contract as [`new`](Self::new) otherwise — one full refresh
+    /// initializes α (solved against the Hadamard view), the
+    /// preconditioner, and every per-task cache.
+    pub fn new_multitask(
+        xs: Matrix,
+        ys: Vec<f64>,
+        tasks: (TaskKernel, Vec<usize>),
+        hypers: GpHypers,
+        axes: Vec<Grid1d>,
+        cg: CgConfig,
+        cfg: StreamConfig,
+    ) -> Result<Self> {
+        let (kernel, task_of) = tasks;
+        if task_of.len() != xs.rows {
+            return Err(Error::DimMismatch {
+                context: "stream task assignments",
+                expected: xs.rows,
+                got: task_of.len(),
+            });
+        }
+        let s = kernel.num_tasks();
+        if s == 0 {
+            return Err(Error::Stream(
+                "multi-task model needs at least one task".into(),
+            ));
+        }
+        if let Some(&t) = task_of.iter().find(|&&t| t >= s) {
+            return Err(Error::Stream(format!(
+                "task assignment {t} out of range (task kernel has {s} tasks)"
+            )));
+        }
+        let mut state = Self::build(xs, ys, hypers, axes, cg, cfg)?;
+        state.mt = Some(MtState {
+            kernel,
+            task_of,
+            wtas: Vec::new(),
+            caches: Vec::new(),
+        });
+        state.refresh()?;
+        Ok(state)
+    }
+
+    /// Shared constructor body: validate, freeze the axes, and assemble
+    /// the (not-yet-refreshed) state.
+    fn build(
         xs: Matrix,
         ys: Vec<f64>,
         hypers: GpHypers,
@@ -287,7 +397,7 @@ impl IncrementalState {
             hypers.sf2(),
             hypers.sn2(),
         )?;
-        let mut state = IncrementalState {
+        Ok(IncrementalState {
             xs,
             ys,
             hypers,
@@ -303,14 +413,13 @@ impl IncrementalState {
             grid_active: false,
             factors,
             cache: empty,
+            mt: None,
             var_built_at: 0,
             last_cold_iters: 0,
             log: ObservationLog::new(cfg.log_capacity),
             cfg,
             stats: StreamStats::default(),
-        };
-        state.refresh()?;
-        Ok(state)
+        })
     }
 
     /// Adopt a trained [`MvmGp`] for streaming. Requires the KISS
@@ -319,16 +428,20 @@ impl IncrementalState {
     pub fn from_mvm(gp: &MvmGp, cfg: StreamConfig) -> Result<Self> {
         if gp.cfg.variant != MvmVariant::Kiss {
             return Err(Error::Stream(
-                "online updates require the KISS (grid) variant — the SKIP \
-                 merge tree bakes a whole-data Lanczos decomposition into \
-                 its operator and cannot extend by one row"
+                "online updates require the KISS (grid) variant — SKIP \
+                 models remain unsupported (single- and multi-task alike): \
+                 the SKIP merge tree bakes a whole-data Lanczos \
+                 decomposition into its operator and cannot extend by one \
+                 row"
                     .into(),
             ));
         }
         let axes = gp.fitted_grid_axes().map_err(|e| {
             Error::Stream(format!(
                 "online updates require a single-term dense grid \
-                 (Uniform/Rectilinear spec): {e}"
+                 (Uniform/Rectilinear spec) — sparse-grid multi-term \
+                 models remain unsupported (single- and multi-task \
+                 alike): {e}"
             ))
         })?;
         let mut cg = gp.cfg.cg;
@@ -339,12 +452,34 @@ impl IncrementalState {
     /// The noise-shifted covariance view `σ_f²·K_ski + σ_n²·I` over the
     /// in-place-extended SKI operator — [`AffineRef`] shares `AffineOp`'s
     /// arithmetic, so incremental solves agree with the batch path's
-    /// operator bitwise.
+    /// operator bitwise. Single-task only; multi-task solves go through
+    /// [`with_view`](Self::with_view).
     fn view(&self) -> AffineRef<'_> {
         AffineRef {
             inner: self.op.as_ref(),
             scale: self.hypers.sf2(),
             shift: self.hypers.sn2(),
+        }
+    }
+
+    /// Run `f` against the covariance view of the current model:
+    /// `σ_f²·K_ski + σ_n²·I` single-task, or the Hadamard composition
+    /// `σ_f²·(K_ski ∘ K_task) + σ_n²·I` multi-task (the SKI operator is
+    /// built with unit outputscale, so one `σ_f²` scaling serves both).
+    /// The per-call [`TaskHadamardRef`] borrows the shared stencil — no
+    /// copy — and lives exactly as long as the solve using it.
+    fn with_view<R>(&self, f: impl FnOnce(&dyn LinearOp) -> R) -> R {
+        match &self.mt {
+            None => f(&self.view()),
+            Some(mt) => {
+                let had =
+                    TaskHadamardRef::new(self.op.as_ref(), &mt.task_of, &mt.kernel);
+                f(&AffineRef {
+                    inner: &had,
+                    scale: self.hypers.sf2(),
+                    shift: self.hypers.sn2(),
+                })
+            }
         }
     }
 
@@ -355,6 +490,23 @@ impl IncrementalState {
     /// builds the `WᵀW` band when feasible, so later `append_rows` calls
     /// fold into it incrementally.
     fn resolve_space(&self) -> Result<bool> {
+        if self.mt.is_some() {
+            return match self.cfg.space {
+                SolveSpace::Grid => Err(Error::Stream(
+                    "grid-space re-solves are single-task only — the \
+                     multi-task Hadamard operator (K_ski ∘ K_task) has no \
+                     grid-space normal form; use --space data (or auto, \
+                     which falls back to data space)"
+                        .into(),
+                )),
+                SolveSpace::Data => Ok(false),
+                SolveSpace::Auto => {
+                    crate::coordinator::metrics::global()
+                        .incr("solver.space.fallback", 1);
+                    Ok(false)
+                }
+            };
+        }
         match self.cfg.space {
             SolveSpace::Data => Ok(false),
             SolveSpace::Grid => {
@@ -408,14 +560,12 @@ impl IncrementalState {
         let kern = ProductKernel::rbf(self.xs.cols, self.hypers.ell(), 1.0);
         self.op =
             Arc::new(KroneckerSkiOp::with_grids(&self.xs, &kern, self.axes.clone()));
-        let view = AffineRef {
-            inner: self.op.as_ref(),
-            scale: self.hypers.sf2(),
-            shift: self.hypers.sn2(),
-        };
         // The data-space preconditioner is kept in both modes: variance
         // solves (`predict_var`, the Lanczos factor) stay in data space.
-        self.pre = build_preconditioner(&view, Some(self.hypers.sn2()), self.precond);
+        // Built against the full (multi-task-aware) view.
+        self.pre = self.with_view(|view| {
+            build_preconditioner(view, Some(self.hypers.sn2()), self.precond)
+        });
         self.grid_active = self.resolve_space()?;
         let mut grid_result: Option<(usize, bool, f64)> = None;
         if self.grid_active {
@@ -443,8 +593,9 @@ impl IncrementalState {
             Some(r) => r,
             None => {
                 crate::coordinator::metrics::global().incr("solver.space.data", 1);
-                let sol =
-                    cg_solve_with(&view, &self.ys, self.pre.as_ref(), None, self.cg);
+                let sol = self.with_view(|view| {
+                    cg_solve_with(view, &self.ys, self.pre.as_ref(), None, self.cg)
+                });
                 self.alpha = sol.x;
                 self.wty = Vec::new();
                 self.grid_q = None;
@@ -479,8 +630,58 @@ impl IncrementalState {
     /// Ingest a block of observations: extend `W`/`y` in place, re-solve
     /// α seeded from the previous solution, patch the mean cache, and
     /// apply the variance-drift and refresh policies. Duplicates of
-    /// pending observations are dropped row-wise.
+    /// pending observations are dropped row-wise. Single-task models
+    /// only — a multi-task model's observations must name their task
+    /// ([`ingest_block_tasks`](Self::ingest_block_tasks)).
     pub fn ingest_block(&mut self, xs_new: &Matrix, ys_new: &[f64]) -> Result<IngestReport> {
+        if self.mt.is_some() {
+            return Err(Error::Stream(
+                "this model is multi-task — observations must name a task \
+                 (observe <task> x… y)"
+                    .into(),
+            ));
+        }
+        self.ingest_inner(xs_new, ys_new, None)
+    }
+
+    /// Ingest a block of `(task, x, y)` observations into a multi-task
+    /// model. Same contract as [`ingest_block`](Self::ingest_block),
+    /// plus **online task enrollment**: a task id equal to the current
+    /// task count enrolls a new task mid-stream (ids beyond that are a
+    /// typed error — rows are scanned in order, so one block may enroll
+    /// several consecutive tasks). Dedup keys on the full `(task, x, y)`
+    /// triple.
+    pub fn ingest_block_tasks(
+        &mut self,
+        xs_new: &Matrix,
+        ys_new: &[f64],
+        tasks: &[usize],
+    ) -> Result<IngestReport> {
+        if self.mt.is_none() {
+            return Err(Error::Stream(
+                "this model is single-task — observations cannot name a \
+                 task (observe x… y); build it with new_multitask to \
+                 serve tasks"
+                    .into(),
+            ));
+        }
+        if tasks.len() != xs_new.rows {
+            return Err(Error::DimMismatch {
+                context: "ingested observation tasks",
+                expected: xs_new.rows,
+                got: tasks.len(),
+            });
+        }
+        self.ingest_inner(xs_new, ys_new, Some(tasks))
+    }
+
+    /// Shared ingest body; `tasks` is `Some` exactly when `self.mt` is.
+    fn ingest_inner(
+        &mut self,
+        xs_new: &Matrix,
+        ys_new: &[f64],
+        tasks: Option<&[usize]>,
+    ) -> Result<IngestReport> {
         let d = self.xs.cols;
         if xs_new.cols != d {
             return Err(Error::DimMismatch {
@@ -504,11 +705,35 @@ impl IncrementalState {
             }
         }
 
+        // Online-enrollment pre-scan: a previously-unseen task id is
+        // legal only as the *next* one. Rows are scanned in order, so a
+        // block may enroll several consecutive tasks, each introduced by
+        // its first row; anything beyond the running count is a typed
+        // error before the block touches any state.
+        let task_at = |i: usize| tasks.map_or(0, |t| t[i]);
+        if let Some(ts) = tasks {
+            let mut s_virtual = self.num_tasks();
+            for (i, &t) in ts.iter().enumerate() {
+                if t > s_virtual {
+                    return Err(Error::Stream(format!(
+                        "task {t} out of range at row {i}: the model has \
+                         {s_virtual} tasks (task {s_virtual} would enroll \
+                         a new one)"
+                    )));
+                }
+                if t == s_virtual {
+                    s_virtual += 1;
+                }
+            }
+        }
+
         // Row-wise dedup: against the pending log (client retries) AND
         // against earlier rows of this very block — two clients retrying
-        // the same observation can land in one coalesced batch.
+        // the same observation can land in one coalesced batch. The key
+        // is the full (task, x, y) triple.
         let bits_eq = |i: usize, j: usize| {
-            ys_new[i].to_bits() == ys_new[j].to_bits()
+            task_at(i) == task_at(j)
+                && ys_new[i].to_bits() == ys_new[j].to_bits()
                 && xs_new
                     .row(i)
                     .iter()
@@ -518,7 +743,7 @@ impl IncrementalState {
         let mut outcomes: Vec<RowOutcome> = Vec::with_capacity(xs_new.rows);
         let mut fresh_rows: Vec<usize> = Vec::with_capacity(xs_new.rows);
         for i in 0..xs_new.rows {
-            let duplicate = self.log.contains(xs_new.row(i), ys_new[i])
+            let duplicate = self.log.contains(task_at(i), xs_new.row(i), ys_new[i])
                 || fresh_rows.iter().any(|&j| bits_eq(i, j));
             if duplicate {
                 outcomes.push(RowOutcome::Duplicate);
@@ -540,25 +765,78 @@ impl IncrementalState {
                 rows_patched: 0,
                 var_rebuilt: false,
                 refreshed: None,
+                enrolled: 0,
                 n: self.xs.rows,
                 pending: self.log.len(),
             });
         }
 
+        // Enroll the new tasks named by accepted rows, *before* the
+        // guesses below so every task has a cache to predict from: the
+        // kernel grows a decoupled row, the newcomer gets a zero scatter
+        // and a placeholder cache — zero mean, zero variance factor, so
+        // it serves the conservative prior variance σ_f²·k_task(t,t)
+        // until the next rebuild. The post-solve mean patch then fills
+        // the scatter from the task's own rows (existing rows contribute
+        // nothing: their cross-covariance to the decoupled task is 0).
+        let mut enrolled = 0usize;
+        if tasks.is_some() {
+            let total: usize = self.axes.iter().map(|g| g.m).product();
+            let r = self.cache.var_rank();
+            let spec = self.cache.spec.clone();
+            let sf2 = self.hypers.sf2();
+            let sn2 = self.hypers.sn2();
+            let mt = self.mt.as_mut().expect("task ingests are multi-task");
+            for &i in &fresh_rows {
+                let t = task_at(i);
+                if t == mt.kernel.num_tasks() {
+                    let id = mt.kernel.enroll();
+                    let prior = sf2 * mt.kernel.eval(id, id);
+                    let term = TermCache::new(
+                        1.0,
+                        self.axes.clone(),
+                        vec![0.0; total],
+                        Matrix::zeros(total, r),
+                    )?;
+                    mt.caches.push(PredictCache::from_parts(
+                        spec.clone(),
+                        vec![term],
+                        prior,
+                        sn2,
+                    )?);
+                    mt.wtas.push(vec![0.0; total]);
+                    enrolled += 1;
+                }
+            }
+            self.stats.enrollments += enrolled as u64;
+        }
+
         // Pre-ingest predictive view of the fresh points: the warm-seed
-        // guess for their α entries and the outlier z-scores.
-        let denom = self.hypers.sf2() + self.hypers.sn2();
+        // guess for their α entries and the outlier z-scores, each read
+        // from the observation's own task cache with its task's prior
+        // variance in the denominator.
+        let denom0 = self.hypers.sf2() + self.hypers.sn2();
         let mut guesses = Vec::with_capacity(fresh_rows.len());
         let mut max_z = 0.0f64;
         for &i in &fresh_rows {
             let x = xs_new.row(i);
-            let resid = ys_new[i] - self.cache.predict_mean_one(x);
-            let var = if self.cache.has_variance() {
-                self.cache.predict_var_one(x)
+            let t = task_at(i);
+            let cache = self
+                .task_cache(t)
+                .expect("enrollment above covers every accepted task");
+            let resid = ys_new[i] - cache.predict_mean_one(x);
+            let var = if cache.has_variance() {
+                cache.predict_var_one(x)
             } else {
-                self.cache.prior_var
+                cache.prior_var
             };
             max_z = max_z.max(resid.abs() / (var + self.hypers.sn2()).sqrt());
+            let denom = match &self.mt {
+                None => denom0,
+                Some(mt) => {
+                    self.hypers.sf2() * mt.kernel.eval(t, t) + self.hypers.sn2()
+                }
+            };
             guesses.push(resid / denom);
         }
 
@@ -572,6 +850,12 @@ impl IncrementalState {
         self.xs.rows += block.rows;
         for &i in &fresh_rows {
             self.ys.push(ys_new[i]);
+        }
+        if let Some(ts) = tasks {
+            let mt = self.mt.as_mut().expect("task ingests are multi-task");
+            for &i in &fresh_rows {
+                mt.task_of.push(ts[i]);
+            }
         }
         Arc::get_mut(&mut self.op)
             .expect("grid systems are transient — no clone outlives its solve")
@@ -616,14 +900,10 @@ impl IncrementalState {
             let mut seed = alpha_old.clone();
             seed.extend_from_slice(&guesses);
             crate::coordinator::metrics::global().incr("solver.space.data", 1);
-            let view = AffineRef {
-                inner: self.op.as_ref(),
-                scale: self.hypers.sf2(),
-                shift: self.hypers.sn2(),
-            };
             let pre = self.solve_precond();
-            let sol =
-                cg_solve_with(&view, &self.ys, pre.as_ref(), Some(seed.as_slice()), self.cg);
+            let sol = self.with_view(|view| {
+                cg_solve_with(view, &self.ys, pre.as_ref(), Some(seed.as_slice()), self.cg)
+            });
             // End the Box's borrow of self.pre before the &mut self calls
             // below (Box drop glue keeps it live otherwise).
             drop(pre);
@@ -643,7 +923,7 @@ impl IncrementalState {
         for o in outcomes.iter_mut() {
             if let RowOutcome::Accepted { seq } = o {
                 let i = *fresh_iter.next().expect("fresh row for outcome");
-                match self.log.push(xs_new.row(i), ys_new[i]) {
+                match self.log.push(task_at(i), xs_new.row(i), ys_new[i]) {
                     PushOutcome::Appended(s) => *seq = s,
                     PushOutcome::Duplicate => unreachable!("deduped above"),
                 }
@@ -715,17 +995,22 @@ impl IncrementalState {
             rows_patched,
             var_rebuilt,
             refreshed,
+            enrolled,
             n,
             pending: self.log.len(),
         })
     }
 
     /// Replay observations (e.g. a reloaded snapshot's pending section)
-    /// into this model, in chronological order.
+    /// into this model, in chronological order. Multi-task models route
+    /// each observation to its recorded task (re-enrolling any task that
+    /// was first seen mid-stream); single-task models reject entries
+    /// naming a nonzero task.
     pub fn ingest_observations(&mut self, obs: &[Observation]) -> Result<IngestReport> {
         let d = self.xs.cols;
         let mut xs = Matrix::zeros(obs.len(), d);
         let mut ys = Vec::with_capacity(obs.len());
+        let mut tasks = Vec::with_capacity(obs.len());
         for (i, o) in obs.iter().enumerate() {
             if o.x.len() != d {
                 return Err(Error::DimMismatch {
@@ -736,19 +1021,47 @@ impl IncrementalState {
             }
             xs.row_mut(i).copy_from_slice(&o.x);
             ys.push(o.y);
+            tasks.push(o.task);
+        }
+        if self.mt.is_some() {
+            return self.ingest_block_tasks(&xs, &ys, &tasks);
+        }
+        if let Some(o) = obs.iter().find(|o| o.task != 0) {
+            return Err(Error::Stream(format!(
+                "replayed observation names task {} but this model is \
+                 single-task",
+                o.task
+            )));
         }
         self.ingest_block(&xs, &ys)
     }
 
-    /// Rebuild `wta = Wᵀα` from scratch (refresh path) — the same
-    /// scatter [`PredictCache::build`] performs.
+    /// Rebuild the grid scatter(s) from scratch (refresh path) — the
+    /// same scatter [`PredictCache::build`] performs; multi-task states
+    /// rebuild every task's masked scatter `Wᵀ(c_t ∘ α)`.
     fn rebuild_scatter(&mut self) {
-        self.wta = scatter_wt(&self.xs, &self.alpha, &self.axes);
+        let Some(mt) = &self.mt else {
+            self.wta = scatter_wt(&self.xs, &self.alpha, &self.axes);
+            return;
+        };
+        let s = mt.kernel.num_tasks();
+        let mut scatters = Vec::with_capacity(s);
+        for t in 0..s {
+            let mask = mt.kernel.row_mask(t, &mt.task_of);
+            let masked: Vec<f64> =
+                self.alpha.iter().zip(&mask).map(|(&a, &c)| c * a).collect();
+            scatters.push(scatter_wt(&self.xs, &masked, &self.axes));
+        }
+        self.wta = scatters.remove(0);
+        self.mt.as_mut().expect("checked above").wtas = scatters;
     }
 
-    /// Scatter the α delta of every materially-changed row into `wta`,
-    /// then refresh the mean cache with one Kronecker–Toeplitz apply.
-    /// Returns the number of rows whose stencil was touched.
+    /// Scatter the α delta of every materially-changed row into the grid
+    /// scatter(s), then refresh the mean cache(s) with one
+    /// Kronecker–Toeplitz apply each. Returns the number of rows whose
+    /// stencil was touched. Multi-task states pay one stencil *decode*
+    /// per touched row for all tasks — row i's delta lands in task t's
+    /// scatter weighted by `k_task(t, task_of[i])`.
     fn patch_mean(&mut self, alpha_old: &[f64], n_old: usize) -> usize {
         let dims: Vec<usize> = self.axes.iter().map(|g| g.m).collect();
         let strides = tensor_strides(&dims);
@@ -759,6 +1072,10 @@ impl IncrementalState {
         let eps = self.cfg.patch_eps * scale;
         let mut touched = 0usize;
         let mut wta = std::mem::take(&mut self.wta);
+        let mut mt_wtas = match &mut self.mt {
+            Some(mt) => std::mem::take(&mut mt.wtas),
+            None => Vec::new(),
+        };
         for i in 0..self.xs.rows {
             let old = if i < n_old { alpha_old[i] } else { 0.0 };
             let delta = self.alpha[i] - old;
@@ -766,20 +1083,46 @@ impl IncrementalState {
                 continue;
             }
             touched += 1;
-            tensor_stencil(self.xs.row(i), &self.axes, &strides, |g, w| {
-                wta[g] += w * delta;
-            });
+            match &self.mt {
+                None => {
+                    tensor_stencil(self.xs.row(i), &self.axes, &strides, |g, w| {
+                        wta[g] += w * delta;
+                    });
+                }
+                Some(mt) => {
+                    let ti = mt.task_of[i];
+                    let masks: Vec<f64> = (0..=mt_wtas.len())
+                        .map(|t| mt.kernel.eval(t, ti))
+                        .collect();
+                    tensor_stencil(self.xs.row(i), &self.axes, &strides, |g, w| {
+                        let wd = w * delta;
+                        wta[g] += wd * masks[0];
+                        for (wt, &c) in mt_wtas.iter_mut().zip(&masks[1..]) {
+                            wt[g] += wd * c;
+                        }
+                    });
+                }
+            }
         }
         self.wta = wta;
-        // One grid apply (cached Toeplitz factors) refreshes the whole
-        // mean cache — the same formula the snapshot-time build uses.
+        // One grid apply per cache (cached Toeplitz factors) — the same
+        // formula the snapshot-time build uses.
         self.cache.terms_mut()[0].mean =
             mean_from_scatter(&self.wta, &self.factors, &dims, self.hypers.sf2());
+        if let Some(mt) = &mut self.mt {
+            mt.wtas = mt_wtas;
+            for (cache, wt) in mt.caches.iter_mut().zip(&mt.wtas) {
+                cache.terms_mut()[0].mean =
+                    mean_from_scatter(wt, &self.factors, &dims, self.hypers.sf2());
+            }
+        }
         touched
     }
 
-    /// Rebuild the full predictive cache (mean + variance factor) from
-    /// the current data and α.
+    /// Rebuild the full predictive cache(s) (mean + variance factor)
+    /// from the current data and α. Multi-task states rebuild one masked
+    /// cache per task from the shared inverse root of the *multi-task*
+    /// K̂ = σ_f²·(K ∘ K_task) + σ_n²·I.
     fn rebuild_cache(&mut self) -> Result<()> {
         let s = match &self.cfg.variance {
             VarianceMode::None => None,
@@ -787,17 +1130,54 @@ impl IncrementalState {
                 let kern =
                     ProductKernel::rbf(self.xs.cols, self.hypers.ell(), self.hypers.sf2());
                 let mut khat = kern.gram_sym(&self.xs);
+                if let Some(mt) = &self.mt {
+                    for i in 0..khat.rows {
+                        for j in 0..khat.cols {
+                            let v = khat.get(i, j)
+                                * mt.kernel.eval(mt.task_of[i], mt.task_of[j]);
+                            khat.set(i, j, v);
+                        }
+                    }
+                }
                 khat.add_diag(self.hypers.sn2());
                 Some(inverse_root_exact(&Cholesky::new_with_jitter(&khat, 0.0)?))
             }
             VarianceMode::Lanczos(rank) => {
-                let view = self.view();
-                Some(inverse_root_lanczos(&view, &self.ys, *rank)?)
+                let rank = *rank;
+                Some(self.with_view(|view| inverse_root_lanczos(view, &self.ys, rank))?)
             }
         };
         let grid = RectilinearGrid::from_axes(self.axes.clone());
-        self.cache =
-            PredictCache::build(&self.xs, &self.alpha, &self.hypers, &grid, s.as_ref())?;
+        match &self.mt {
+            None => {
+                self.cache = PredictCache::build(
+                    &self.xs,
+                    &self.alpha,
+                    &self.hypers,
+                    &grid,
+                    s.as_ref(),
+                )?;
+            }
+            Some(mt) => {
+                let sf2 = self.hypers.sf2();
+                let num = mt.kernel.num_tasks();
+                let mut caches = Vec::with_capacity(num);
+                for t in 0..num {
+                    let mask = mt.kernel.row_mask(t, &mt.task_of);
+                    caches.push(build_task_cache(
+                        &self.xs,
+                        &self.alpha,
+                        &self.hypers,
+                        &grid,
+                        s.as_ref(),
+                        &mask,
+                        sf2 * mt.kernel.eval(t, t),
+                    )?);
+                }
+                self.cache = caches.remove(0);
+                self.mt.as_mut().expect("checked above").caches = caches;
+            }
+        }
         Ok(())
     }
 
@@ -808,8 +1188,18 @@ impl IncrementalState {
 
     /// Latent predictive variance at solver grade: all test solves ride
     /// one block-CG call against the current operator (exact up to CG
-    /// tolerance, unlike the rank-r cache variance).
+    /// tolerance, unlike the rank-r cache variance). Single-task only —
+    /// a bare test point carries no task id, so multi-task variances are
+    /// served from the per-task caches ([`task_cache`](Self::task_cache)).
     pub fn predict_var(&self, xtest: &Matrix) -> Result<Vec<f64>> {
+        if self.mt.is_some() {
+            return Err(Error::Stream(
+                "solver-grade predict_var is single-task only — multi-task \
+                 variances are served from the per-task caches \
+                 (predict <task> x…)"
+                    .into(),
+            ));
+        }
         let kern =
             ProductKernel::rbf(self.xs.cols, self.hypers.ell(), self.hypers.sf2());
         let kx = kern.gram(&self.xs, xtest);
@@ -825,8 +1215,8 @@ impl IncrementalState {
     }
 
     /// Freeze the live state into a serving snapshot; the pending log
-    /// rides along (format v3), as does the α solve-space provenance
-    /// (format v4).
+    /// rides along (format v3), as do the α solve-space provenance
+    /// (format v4) and the multi-task head (format v5).
     pub fn to_snapshot(&self) -> ModelSnapshot {
         ModelSnapshot {
             version: SNAPSHOT_VERSION,
@@ -838,12 +1228,37 @@ impl IncrementalState {
             alpha: self.alpha.clone(),
             cache: self.cache.clone(),
             pending: self.log.replay().cloned().collect(),
+            tasks: self.mt.as_ref().map(|mt| TaskHead {
+                kernel: mt.kernel.clone(),
+                task_of: mt.task_of.clone(),
+                caches: mt.caches.clone(),
+            }),
         }
     }
 
-    /// The live predictive cache.
+    /// The live predictive cache (task 0's for multi-task states).
     pub fn cache(&self) -> &PredictCache {
         &self.cache
+    }
+
+    /// Number of tasks this state serves (1 for single-task).
+    pub fn num_tasks(&self) -> usize {
+        self.mt.as_ref().map_or(1, |mt| mt.kernel.num_tasks())
+    }
+
+    /// True iff this is a multi-task state.
+    pub fn is_multitask(&self) -> bool {
+        self.mt.is_some()
+    }
+
+    /// The live predictive cache serving `task`: task 0 is the base
+    /// cache, tasks `1..s` their masked caches. `None` when out of
+    /// range — including any task > 0 on a single-task state.
+    pub fn task_cache(&self, task: usize) -> Option<&PredictCache> {
+        if task == 0 {
+            return Some(&self.cache);
+        }
+        self.mt.as_ref()?.caches.get(task - 1)
     }
 
     /// Current model size n.

@@ -1,0 +1,603 @@
+//! Cross-layer multi-task equivalence suite — the contract that pins
+//! multi-task GPs (paper §6) across every layer of the stack at once:
+//!
+//! - **Streaming ≡ batch**: a streamed multi-task model — including a
+//!   task enrolled online mid-stream — matches a cold refit on the full
+//!   point set to 1e-6 in mean *and* variance, per task.
+//! - **Sharded ≡ single-engine**: a sharded multi-task model answers
+//!   bitwise-identically to the underlying snapshot caches at every
+//!   replica count k ∈ {1, 2, 8}.
+//! - **Snapshot v5**: multi-task snapshots round-trip bitwise, and all
+//!   four historical formats (v1–v4) migrate with identical predictions.
+//! - **Identity task kernel ≡ independent models**: with `B = 0, D = I`
+//!   the multi-task posterior factorizes, so each task matches its own
+//!   single-task model to 1e-6.
+//! - The unsupported-configuration errors name exactly which
+//!   configurations remain outside each path, and the wire protocol
+//!   validates task ids end-to-end (including online enrollment).
+
+#![allow(clippy::needless_range_loop)] // index-heavy numeric test loops
+
+use skip_gp::coordinator::Metrics;
+use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant, SolveSpace};
+use skip_gp::grid::{Grid1d, GridSpec};
+use skip_gp::kernels::TaskKernel;
+use skip_gp::linalg::Matrix;
+use skip_gp::serve::{
+    BatcherConfig, ModelSnapshot, ServeEngine, Server, ServerConfig, ShardedModel,
+    VarianceMode, SNAPSHOT_VERSION,
+};
+use skip_gp::solvers::CgConfig;
+use skip_gp::stream::{IncrementalState, StreamConfig};
+use skip_gp::util::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Distinct smooth target per task so cross-task structure is real.
+fn task_fn(t: usize, r: &[f64]) -> f64 {
+    let base = (2.0 * r[0]).sin() + (3.0 * r[1]).cos();
+    match t % 3 {
+        0 => base,
+        1 => -base,
+        _ => 0.5 * base + r[0],
+    }
+}
+
+/// Contiguous per-task row blocks (task t's rows precede task t+1's):
+/// d=2 points in (−0.95, 0.95) with per-task targets plus small noise.
+/// Returns the advanced Rng so callers draw query points from the same
+/// deterministic sequence.
+fn mt_data(per_task: usize, s: usize, seed: u64) -> (Matrix, Vec<f64>, Vec<usize>, Rng) {
+    let mut rng = Rng::new(seed);
+    let n = per_task * s;
+    let mut data = Vec::with_capacity(n * 2);
+    let mut ys = Vec::with_capacity(n);
+    let mut task_of = Vec::with_capacity(n);
+    for t in 0..s {
+        for _ in 0..per_task {
+            let x0 = rng.uniform_in(-0.95, 0.95);
+            let x1 = rng.uniform_in(-0.95, 0.95);
+            data.push(x0);
+            data.push(x1);
+            ys.push(task_fn(t, &[x0, x1]) + 0.02 * rng.normal());
+            task_of.push(t);
+        }
+    }
+    (Matrix::from_vec(n, 2, data), ys, task_of, rng)
+}
+
+/// Fixed inducing axes: live and cold models share the same grid
+/// regardless of data bounds.
+fn axes12() -> Vec<Grid1d> {
+    vec![
+        Grid1d::fit(-1.0, 1.0, 12).unwrap(),
+        Grid1d::fit(-1.0, 1.0, 12).unwrap(),
+    ]
+}
+
+fn tight_cg() -> CgConfig {
+    CgConfig { max_iters: 600, tol: 1e-11, ..Default::default() }
+}
+
+/// Exact variance, rebuilt on every ingest, no policy refreshes: the
+/// purely-incremental path at solver-grade accuracy (the same settings
+/// the single-task cold-refit equivalence test uses).
+fn exact_cfg() -> StreamConfig {
+    StreamConfig {
+        refresh_every: 0,
+        var_drift_budget: 0,
+        error_z: 0.0,
+        log_capacity: 4096,
+        variance: VarianceMode::Exact,
+        patch_eps: 1e-12,
+        ..Default::default()
+    }
+}
+
+/// The 3-task coregionalization kernel several tests share.
+fn three_task_kernel() -> TaskKernel {
+    TaskKernel::new(
+        Matrix::from_vec(3, 2, vec![1.0, 0.0, 0.5, 0.25, -0.5, 1.0]),
+        vec![0.5, 0.25, 0.125],
+    )
+}
+
+/// Streaming ≡ batch, with online enrollment: a 2-task model streams 19
+/// points one at a time — one of them naming task 2 == num_tasks, which
+/// enrolls a brand-new task mid-stream — and every per-task cache then
+/// matches a cold refit on the full point set (with the task kernel
+/// extended by the same decoupled enrollment row) to 1e-6 in mean and
+/// variance.
+#[test]
+fn streamed_enrollment_matches_cold_multitask_refit() {
+    let (xs0, ys0, task_of0, mut rng) = mt_data(48, 2, 1);
+    let kernel = TaskKernel::new(Matrix::from_vec(2, 1, vec![1.0, 0.6]), vec![0.4, 0.3]);
+    let h = GpHypers::new(0.6, 1.0, 0.05);
+    let mut live = IncrementalState::new_multitask(
+        xs0.clone(),
+        ys0.clone(),
+        (kernel.clone(), task_of0.clone()),
+        h,
+        axes12(),
+        tight_cg(),
+        exact_cfg(),
+    )
+    .unwrap();
+    assert_eq!(live.num_tasks(), 2);
+    assert!(live.is_multitask());
+
+    // 12 points on the existing tasks, then one naming task 2 (online
+    // enrollment), then 6 more across all three — the enrolled task
+    // keeps learning after its birth.
+    let mut streamed: Vec<(usize, Vec<f64>, f64)> = Vec::new();
+    for i in 0..12 {
+        let t = i % 2;
+        let x = vec![rng.uniform_in(-0.9, 0.9), rng.uniform_in(-0.9, 0.9)];
+        let y = task_fn(t, &x) + 0.02 * rng.normal();
+        streamed.push((t, x, y));
+    }
+    {
+        let x = vec![rng.uniform_in(-0.9, 0.9), rng.uniform_in(-0.9, 0.9)];
+        let y = task_fn(2, &x) + 0.02 * rng.normal();
+        streamed.push((2, x, y));
+    }
+    for i in 0..6 {
+        let t = i % 3;
+        let x = vec![rng.uniform_in(-0.9, 0.9), rng.uniform_in(-0.9, 0.9)];
+        let y = task_fn(t, &x) + 0.02 * rng.normal();
+        streamed.push((t, x, y));
+    }
+
+    let mut enrolled = 0;
+    for (t, x, y) in &streamed {
+        let xm = Matrix::from_vec(1, 2, x.clone());
+        let report = live.ingest_block_tasks(&xm, &[*y], &[*t]).unwrap();
+        assert_eq!(report.accepted, 1, "task {t}");
+        enrolled += report.enrolled;
+    }
+    assert_eq!(enrolled, 1, "exactly one online enrollment");
+    assert_eq!(live.num_tasks(), 3);
+    assert_eq!(live.stats.enrollments, 1);
+
+    // Cold reference: one shot on the full point set, with the task
+    // kernel extended by the same decoupled enrollment row the live
+    // path appends.
+    let mut cold_kernel = kernel;
+    assert_eq!(cold_kernel.enroll(), 2);
+    let mut xs_full = xs0;
+    let mut ys_full = ys0;
+    let mut task_full = task_of0;
+    for (t, x, y) in &streamed {
+        xs_full.data.extend_from_slice(x);
+        xs_full.rows += 1;
+        ys_full.push(*y);
+        task_full.push(*t);
+    }
+    let cold = IncrementalState::new_multitask(
+        xs_full,
+        ys_full,
+        (cold_kernel, task_full),
+        h,
+        axes12(),
+        tight_cg(),
+        exact_cfg(),
+    )
+    .unwrap();
+
+    for t in 0..3 {
+        let lc = live.task_cache(t).expect("live cache");
+        let cc = cold.task_cache(t).expect("cold cache");
+        for _ in 0..15 {
+            let q = [rng.uniform_in(-0.9, 0.9), rng.uniform_in(-0.9, 0.9)];
+            let (lm, lv) = lc.predict_one(&q);
+            let (cm, cv) = cc.predict_one(&q);
+            assert!(
+                (lm - cm).abs() < 1e-6,
+                "task {t} mean: streamed {lm} vs cold {cm}"
+            );
+            assert!(
+                (lv - cv).abs() < 1e-6,
+                "task {t} var: streamed {lv} vs cold {cv}"
+            );
+        }
+    }
+}
+
+/// Sharded ≡ single-engine: every task-addressed prediction from a
+/// sharded multi-task model is bitwise-identical to the underlying
+/// snapshot's per-task cache, at every replica count k ∈ {1, 2, 8} —
+/// sharding is a throughput decision, never a numerics decision.
+#[test]
+fn sharded_multitask_predictions_are_bitwise_identical() {
+    let (xs, ys, task_of, mut rng) = mt_data(20, 3, 2);
+    let live = IncrementalState::new_multitask(
+        xs,
+        ys,
+        (three_task_kernel(), task_of),
+        GpHypers::new(0.6, 1.0, 0.05),
+        axes12(),
+        tight_cg(),
+        exact_cfg(),
+    )
+    .unwrap();
+    let snap = live.to_snapshot();
+    assert!(snap.is_multitask());
+    assert_eq!(snap.num_tasks(), 3);
+
+    let queries: Vec<(usize, [f64; 2])> = (0..48)
+        .map(|i| (i % 3, [rng.uniform_in(-0.9, 0.9), rng.uniform_in(-0.9, 0.9)]))
+        .collect();
+    let reference: Vec<(f64, f64)> = queries
+        .iter()
+        .map(|(t, q)| snap.task_cache(*t).unwrap().predict_one(q))
+        .collect();
+
+    for k in [1usize, 2, 8] {
+        let model = ShardedModel::from_snapshot(
+            "mt",
+            snap.clone(),
+            k,
+            BatcherConfig::default(),
+            Arc::new(Metrics::new()),
+        )
+        .unwrap();
+        assert_eq!(model.shard_count(), k);
+        assert_eq!(model.num_tasks(), 3);
+        assert!(model.is_multitask());
+        for ((t, q), want) in queries.iter().zip(&reference) {
+            let got = model.predict_task(*t, q);
+            assert_eq!(got.mean.to_bits(), want.0.to_bits(), "k={k} task={t} mean");
+            assert_eq!(got.var.to_bits(), want.1.to_bits(), "k={k} task={t} var");
+        }
+        // An out-of-range task is NaN-poisoned, not a worker failure.
+        let poisoned = model.predict_task(9, &queries[0].1);
+        assert!(poisoned.mean.is_nan() && poisoned.var.is_nan(), "k={k}");
+    }
+}
+
+/// Snapshot format v5: a multi-task snapshot round-trips **bitwise**
+/// (encode → decode → re-encode reproduces the identical byte string),
+/// and all four historical formats still load and predict identically
+/// after the v5 re-save (v1: implicit single term; v2: no pending log;
+/// v3: no α provenance; v4: no multi-task payload).
+#[test]
+fn snapshot_v5_roundtrips_and_every_fixture_migrates() {
+    let (xs, ys, task_of, mut rng) = mt_data(15, 3, 3);
+    let live = IncrementalState::new_multitask(
+        xs,
+        ys,
+        (three_task_kernel(), task_of),
+        GpHypers::new(0.6, 1.0, 0.05),
+        axes12(),
+        tight_cg(),
+        exact_cfg(),
+    )
+    .unwrap();
+    let snap = live.to_snapshot();
+    let bytes = snap.to_bytes();
+    let back = ModelSnapshot::from_bytes(&bytes).expect("v5 loads");
+    assert_eq!(back.version, SNAPSHOT_VERSION);
+    assert_eq!(back.num_tasks(), 3);
+    assert_eq!(back.to_bytes(), bytes, "v5 round-trip must be bitwise");
+    for t in 0..3 {
+        let q = [rng.uniform_in(-0.9, 0.9), rng.uniform_in(-0.9, 0.9)];
+        let want = snap.task_cache(t).unwrap().predict_one(&q);
+        let got = back.task_cache(t).unwrap().predict_one(&q);
+        assert_eq!(got.0.to_bits(), want.0.to_bits(), "task {t} mean");
+        assert_eq!(got.1.to_bits(), want.1.to_bits(), "task {t} var");
+    }
+
+    // Queries inside every fixture's grid support.
+    let q = Matrix::from_vec(3, 2, vec![0.1, -0.3, 0.6, 0.1, -0.4, -0.2]);
+    for (file, ver) in [
+        ("snapshot_v1.bin", 1u32),
+        ("snapshot_v2.bin", 2),
+        ("snapshot_v3.bin", 3),
+        ("snapshot_v4.bin", 4),
+    ] {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("rust/tests/fixtures")
+            .join(file);
+        let raw = std::fs::read(&path).unwrap_or_else(|e| panic!("{file}: {e}"));
+        let old = ModelSnapshot::from_bytes(&raw).unwrap_or_else(|e| panic!("{file}: {e}"));
+        assert_eq!(old.version, ver, "{file}");
+        assert!(old.tasks.is_none(), "{file}: historical formats are single-task");
+        assert!(old.pending.iter().all(|o| o.task == 0), "{file}");
+        let mean = old.cache.predict_mean(&q);
+        let var = old.cache.predict_var(&q);
+        let resaved =
+            ModelSnapshot::from_bytes(&old.to_bytes()).unwrap_or_else(|e| panic!("{file}: {e}"));
+        assert_eq!(resaved.version, SNAPSHOT_VERSION, "{file}");
+        assert_eq!(resaved.cache.predict_mean(&q), mean, "{file}: migration changed means");
+        assert_eq!(resaved.cache.predict_var(&q), var, "{file}: migration changed variances");
+        assert_eq!(resaved.pending, old.pending, "{file}: pending log must survive");
+    }
+}
+
+/// With the identity task kernel (B = 0, D = I) the multi-task
+/// covariance is block-diagonal over contiguous task blocks, so each
+/// task's posterior factorizes: the 2-task model matches two
+/// independently-built single-task models to 1e-6 in mean and variance.
+#[test]
+fn identity_task_kernel_matches_independent_single_task_models() {
+    let h = GpHypers::new(0.6, 1.0, 0.05);
+    let per = 70;
+    let (xs, ys, task_of, mut rng) = mt_data(per, 2, 4);
+    let multi = IncrementalState::new_multitask(
+        xs.clone(),
+        ys.clone(),
+        (TaskKernel::independent(2), task_of),
+        h,
+        axes12(),
+        tight_cg(),
+        exact_cfg(),
+    )
+    .unwrap();
+
+    // The same two row blocks as independent single-task models.
+    let mut singles = Vec::new();
+    for t in 0..2 {
+        let xb = Matrix::from_fn(per, 2, |i, j| xs.get(t * per + i, j));
+        let yb = ys[t * per..(t + 1) * per].to_vec();
+        singles.push(
+            IncrementalState::new(xb, yb, h, axes12(), tight_cg(), exact_cfg()).unwrap(),
+        );
+    }
+
+    for t in 0..2 {
+        let mc = multi.task_cache(t).expect("multi cache");
+        let sc = singles[t].cache();
+        for _ in 0..20 {
+            let q = [rng.uniform_in(-0.9, 0.9), rng.uniform_in(-0.9, 0.9)];
+            let (mm, mv) = mc.predict_one(&q);
+            let (sm, sv) = sc.predict_one(&q);
+            assert!(
+                (mm - sm).abs() < 1e-6,
+                "task {t} mean: multi {mm} vs single {sm}"
+            );
+            assert!(
+                (mv - sv).abs() < 1e-6,
+                "task {t} var: multi {mv} vs single {sv}"
+            );
+        }
+    }
+}
+
+/// The unsupported-configuration errors name *exactly* which
+/// configurations remain outside each path — no more blanket "KISS
+/// only" wording that misleads about what is actually supported.
+#[test]
+fn unsupported_configurations_are_named_precisely() {
+    let mut rng = Rng::new(5);
+    let n = 40;
+    let mut data = Vec::with_capacity(n * 2);
+    for _ in 0..n * 2 {
+        data.push(rng.uniform_in(-1.0, 1.0));
+    }
+    let xs = Matrix::from_vec(n, 2, data);
+    let ys: Vec<f64> = (0..n).map(|i| task_fn(0, xs.row(i))).collect();
+    let h = GpHypers::new(0.6, 1.0, 0.05);
+
+    // SKIP variant: online updates stay unsupported for a structural
+    // reason the error must state.
+    let skip = MvmGp::new(
+        xs.clone(),
+        ys.clone(),
+        h,
+        MvmGpConfig { variant: MvmVariant::Skip, ..Default::default() },
+    );
+    let err = IncrementalState::from_mvm(&skip, exact_cfg()).unwrap_err().to_string();
+    assert!(err.contains("KISS (grid) variant"), "{err}");
+    assert!(
+        err.contains("SKIP models remain unsupported (single- and multi-task alike)"),
+        "{err}"
+    );
+
+    // Sparse-grid KISS: also unsupported, for a *different* stated
+    // reason (multi-term grids cannot extend row-by-row).
+    let sparse = MvmGp::new(
+        xs.clone(),
+        ys.clone(),
+        h,
+        MvmGpConfig {
+            variant: MvmVariant::Kiss,
+            grid: GridSpec::Sparse { level: 3 },
+            ..Default::default()
+        },
+    );
+    let err = IncrementalState::from_mvm(&sparse, exact_cfg()).unwrap_err().to_string();
+    assert!(err.contains("single-term dense grid"), "{err}");
+    assert!(err.contains("sparse-grid multi-term models remain unsupported"), "{err}");
+    assert!(err.contains("(single- and multi-task alike)"), "{err}");
+
+    // Multi-task guards: task-less ingest and solver-grade predict_var.
+    let (mxs, mys, mtask, _) = mt_data(10, 2, 6);
+    let mut mt = IncrementalState::new_multitask(
+        mxs.clone(),
+        mys.clone(),
+        (TaskKernel::independent(2), mtask.clone()),
+        h,
+        axes12(),
+        tight_cg(),
+        exact_cfg(),
+    )
+    .unwrap();
+    let one = Matrix::from_vec(1, 2, vec![0.1, 0.2]);
+    let err = mt.ingest_block(&one, &[1.0]).unwrap_err().to_string();
+    assert!(err.contains("this model is multi-task"), "{err}");
+    assert!(err.contains("observations must name a task"), "{err}");
+    let err = mt.predict_var(&one).unwrap_err().to_string();
+    assert!(err.contains("solver-grade predict_var is single-task only"), "{err}");
+    assert!(err.contains("per-task caches"), "{err}");
+
+    // Single-task states reject task-addressed observations.
+    let mut st = IncrementalState::new(xs, ys, h, axes12(), tight_cg(), exact_cfg()).unwrap();
+    let err = st.ingest_block_tasks(&one, &[1.0], &[1]).unwrap_err().to_string();
+    assert!(err.contains("this model is single-task"), "{err}");
+
+    // Grid-space re-solves have no multi-task normal form — refused at
+    // construction, not at the first ingest.
+    let grid_cfg = StreamConfig { space: SolveSpace::Grid, ..exact_cfg() };
+    let err = IncrementalState::new_multitask(
+        mxs,
+        mys,
+        (TaskKernel::independent(2), mtask),
+        h,
+        axes12(),
+        tight_cg(),
+        grid_cfg,
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("grid-space re-solves are single-task only"), "{err}");
+    assert!(err.contains("no grid-space normal form"), "{err}");
+
+    // A frozen engine's refusal names what stays frozen.
+    let engine = ServeEngine::new(mt.to_snapshot()).unwrap();
+    let err = engine.observe_block(&one, &[1.0]).unwrap_err().to_string();
+    assert!(err.contains("frozen snapshot"), "{err}");
+    assert!(
+        err.contains("SKIP and sparse-grid multi-term snapshots stay frozen"),
+        "{err}"
+    );
+}
+
+/// The wire protocol validates task ids end-to-end on a live multi-task
+/// model: `tasks` reports the count, task-less predicts are protocol
+/// errors, out-of-range ids are named, a well-formed predict is bitwise
+/// the addressed task's cache, and `observe <num_tasks> …` enrolls a
+/// brand-new task online.
+#[test]
+fn multitask_wire_protocol_validates_and_enrolls() {
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let (xs, ys, task_of, _) = mt_data(16, 3, 7);
+    let live = IncrementalState::new_multitask(
+        xs,
+        ys,
+        (three_task_kernel(), task_of),
+        GpHypers::new(0.6, 1.0, 0.05),
+        axes12(),
+        tight_cg(),
+        exact_cfg(),
+    )
+    .unwrap();
+    let engine = Arc::new(ServeEngine::new_live(live).unwrap());
+    let snap = engine.snapshot();
+    let server = Server::start(
+        engine.clone(),
+        ServerConfig {
+            bind: "127.0.0.1:0".to_string(),
+            batcher: BatcherConfig::default(),
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+    {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream
+            .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+            .unwrap();
+        let mut writer = stream.try_clone().unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+
+        writeln!(writer, "tasks").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "ok 3", "tasks: {line}");
+
+        // Task-less predict on a multi-task model is a protocol error.
+        line.clear();
+        writeln!(writer, "predict 0.1 0.2").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("err"), "line: {line}");
+        assert!(line.contains("must lead with a task id"), "line: {line}");
+
+        // Out-of-range predict task.
+        line.clear();
+        writeln!(writer, "predict 5 0.1 0.2").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("err") && line.contains("out of range"), "line: {line}");
+
+        // A well-formed task-addressed predict is bitwise the addressed
+        // task's cache.
+        line.clear();
+        writeln!(writer, "predict 1 0.25 -0.5").unwrap();
+        reader.read_line(&mut line).unwrap();
+        let toks: Vec<&str> = line.trim().split_whitespace().collect();
+        assert_eq!(toks[0], "ok", "line: {line}");
+        let mean: f64 = toks[1].parse().unwrap();
+        let var: f64 = toks[2].parse().unwrap();
+        let (want_mean, want_var) = snap.task_cache(1).unwrap().predict_one(&[0.25, -0.5]);
+        assert_eq!(mean.to_bits(), want_mean.to_bits(), "wire mean");
+        assert_eq!(var.to_bits(), want_var.to_bits(), "wire var");
+
+        // Observing task 9 is out of range even for enrollment (only
+        // task == num_tasks enrolls), and the error says so.
+        line.clear();
+        writeln!(writer, "observe 9 0.3 0.3 1.0").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("err") && line.contains("would enroll"), "line: {line}");
+
+        // observe <num_tasks> enrolls a brand-new task online.
+        line.clear();
+        writeln!(writer, "observe 3 0.3 0.3 1.0").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ok "), "enrollment ack: {line}");
+        line.clear();
+        writeln!(writer, "tasks").unwrap();
+        reader.read_line(&mut line).unwrap();
+        assert_eq!(line.trim(), "ok 4", "post-enrollment: {line}");
+
+        writeln!(writer, "quit").unwrap();
+    }
+    assert_eq!(engine.metrics.counter("stream.enrollments"), 1);
+    server.shutdown();
+}
+
+/// Nightly scale lane (runs under `cargo test --release -- --ignored`):
+/// a T = 1024 task fleet — 1023 tasks at construction, the 1024th
+/// enrolled online, finite serving across the whole task range. Lanczos
+/// variance and an untriggered drift budget keep this about the task
+/// axis, not about dense O(n³) factorization.
+#[test]
+#[ignore = "nightly scale lane: T = 1024 online task enrollment (minutes in release)"]
+fn enrollment_scales_to_1024_tasks() {
+    let s = 1023;
+    let per = 2;
+    let (xs, ys, task_of, _) = mt_data(per, s, 8);
+    let mut rng = Rng::new(9);
+    let b = Matrix::from_fn(s, 2, |_, _| 0.1 * rng.normal());
+    let kernel = TaskKernel::new(b, vec![0.5; s]);
+    let cfg = StreamConfig {
+        refresh_every: 0,
+        var_drift_budget: usize::MAX,
+        error_z: 0.0,
+        log_capacity: 4096,
+        variance: VarianceMode::Lanczos(8),
+        patch_eps: 1e-12,
+        ..Default::default()
+    };
+    let cg = CgConfig { max_iters: 500, tol: 1e-6, ..Default::default() };
+    let axes = vec![
+        Grid1d::fit(-1.0, 1.0, 8).unwrap(),
+        Grid1d::fit(-1.0, 1.0, 8).unwrap(),
+    ];
+    // σ_n² = 0.3 bounds the condition number so the big Hadamard solves
+    // converge well inside the iteration budget.
+    let h = GpHypers::new(0.6, 1.0, 0.3);
+    let mut live =
+        IncrementalState::new_multitask(xs, ys, (kernel, task_of), h, axes, cg, cfg).unwrap();
+    assert_eq!(live.num_tasks(), s);
+
+    let report = live
+        .ingest_block_tasks(&Matrix::from_vec(1, 2, vec![0.25, -0.5]), &[0.75], &[s])
+        .unwrap();
+    assert_eq!(report.enrolled, 1);
+    assert_eq!(live.num_tasks(), 1024);
+    for t in [0usize, 511, 1022, 1023] {
+        let (m, v) = live.task_cache(t).expect("cache").predict_one(&[0.1, 0.2]);
+        assert!(m.is_finite() && v.is_finite(), "task {t}: ({m}, {v})");
+    }
+}

@@ -9,7 +9,7 @@ use skip_gp::grid::{Grid1d, GridSpec};
 use skip_gp::linalg::Matrix;
 use skip_gp::serve::{
     BatcherConfig, ModelSnapshot, RequestBatcher, ServeEngine, Server, ServerConfig,
-    SnapshotConfig, VarianceMode, SNAPSHOT_VERSION,
+    SnapshotConfig, SnapshotVariant, VarianceMode, SNAPSHOT_VERSION,
 };
 use skip_gp::solvers::CgConfig;
 use skip_gp::stream::{IncrementalState, StreamConfig};
@@ -400,6 +400,162 @@ fn v2_fixture_migrates_and_predicts_identically() {
     }
 }
 
+/// Path of the checked-in format-version-3 snapshot fixture (generated
+/// by tools/make_snapshot_fixtures.py). Synthetic but deterministic:
+/// d=2, n=6, r=2, SKIP variant, train/refresh ranks 9/15, hypers
+/// (log ℓ, log σ_f², log σ_n²) = (−0.25, 0.125, −3), rectilinear spec
+/// [10, 9], one term with coefficient 1 and axes
+/// (min −1.25, h 0.25, m 10) × (min −0.5, h 0.125, m 9),
+/// α[i] = 0.25·i − 0.5, mean[i] = i·0.015625 − 0.5,
+/// var[i] = (i mod 17)·0.03125 − 0.25, one pending observation
+/// (seq 7, x = [0.5, −0.25], y = 2.25) — every value exactly
+/// representable, so the assertions below are bitwise.
+fn v3_fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/snapshot_v3.bin")
+}
+
+/// v3 files predate the `alpha_space` provenance field: they migrate to
+/// data-space (`alpha_space = 0`) with their pending log intact, and
+/// predict **identically** after a v5 re-save.
+#[test]
+fn v3_fixture_migrates_and_predicts_identically() {
+    let bytes = std::fs::read(v3_fixture_path()).expect("v3 fixture present");
+    let snap = ModelSnapshot::from_bytes(&bytes).expect("v3 fixture loads");
+
+    // Migrated structure.
+    assert_eq!(snap.version, 3, "version field records what was read");
+    assert_eq!(snap.variant, SnapshotVariant::Skip);
+    assert_eq!(snap.alpha_space, 0, "v3 migrates to data-space provenance");
+    assert!(snap.tasks.is_none(), "v3 predates the multi-task head");
+    assert_eq!(snap.train_rank, 9);
+    assert_eq!(snap.refresh_rank, 15);
+    assert_eq!(snap.cache.dim(), 2);
+    assert_eq!(snap.alpha.len(), 6);
+    assert_eq!(snap.cache.var_rank(), 2);
+    assert_eq!(snap.cache.spec, GridSpec::Rectilinear(vec![10, 9]));
+
+    // Exact payload values (all exactly representable).
+    let term = &snap.cache.terms()[0];
+    assert_eq!(term.coeff, 1.0);
+    assert_eq!(term.axes[0].min, -1.25);
+    assert_eq!(term.axes[0].h, 0.25);
+    assert_eq!(term.axes[0].m, 10);
+    assert_eq!(term.axes[1].m, 9);
+    assert_eq!(snap.hypers.log_ell, -0.25);
+    assert_eq!(snap.hypers.log_sf2, 0.125);
+    assert_eq!(snap.hypers.log_sn2, -3.0);
+    assert_eq!(snap.alpha[2], 0.0);
+    assert_eq!(term.mean[4], 4.0 * 0.015625 - 0.5);
+    assert_eq!(term.var_r.get(0, 1), 0.03125 - 0.25);
+
+    // The pending log (new in v3) survives, carrying task 0 after the
+    // migration to the task-aware entry layout.
+    assert_eq!(snap.pending.len(), 1);
+    assert_eq!(snap.pending[0].seq, 7);
+    assert_eq!(snap.pending[0].task, 0, "pre-v5 pending entries are task 0");
+    assert_eq!(snap.pending[0].x, vec![0.5, -0.25]);
+    assert_eq!(snap.pending[0].y, 2.25);
+
+    // Migration predicts identically through a v5 re-save.
+    let q = Matrix::from_vec(4, 2, vec![-0.9, -0.4, 0.3, 0.1, 0.8, 0.4, -0.2, -0.45]);
+    let mean_v3 = snap.cache.predict_mean(&q);
+    let var_v3 = snap.cache.predict_var(&q);
+    let v5_bytes = snap.to_bytes();
+    assert_ne!(v5_bytes, bytes, "writers always emit the newest version");
+    let back = ModelSnapshot::from_bytes(&v5_bytes).expect("v5 re-save loads");
+    assert_eq!(back.version, SNAPSHOT_VERSION);
+    assert_eq!(back.alpha_space, 0);
+    assert!(back.tasks.is_none());
+    assert_eq!(back.pending, snap.pending, "pending log must survive the re-save");
+    assert_eq!(back.cache.predict_mean(&q), mean_v3, "migration changed means");
+    assert_eq!(back.cache.predict_var(&q), var_v3, "migration changed variances");
+    for (m, v) in mean_v3.iter().zip(&var_v3) {
+        assert!(m.is_finite() && v.is_finite() && *v > 0.0);
+    }
+}
+
+/// Path of the checked-in format-version-4 snapshot fixture (generated
+/// by tools/make_snapshot_fixtures.py). Synthetic but deterministic:
+/// d=2, n=7, r=2, KISS variant, train/refresh ranks 11/13, grid-space
+/// α provenance (`alpha_space = 1` — the field v4 introduced), hypers
+/// (−0.25, 0.125, −3), rectilinear spec [11, 7], one term with
+/// coefficient 1 and axes (min −1.25, h 0.25, m 11) ×
+/// (min −0.5, h 0.125, m 7), α[i] = 0.25·i − 0.75,
+/// mean[i] = i·0.015625 − 0.5, var[i] = (i mod 17)·0.03125 − 0.25, two
+/// pending observations (seq 2, [0.25, −0.375], 1.5) and
+/// (seq 5, [−1.0, 0.125], −0.75) — every value exactly representable,
+/// so the assertions below are bitwise.
+fn v4_fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures/snapshot_v4.bin")
+}
+
+/// v4 files carry `alpha_space` but predate the multi-task payload:
+/// loading preserves the provenance bit, migrates the pending entries
+/// to task 0, leaves the task head empty, and predicts **identically**
+/// after a v5 re-save.
+#[test]
+fn v4_fixture_migrates_and_predicts_identically() {
+    let bytes = std::fs::read(v4_fixture_path()).expect("v4 fixture present");
+    let snap = ModelSnapshot::from_bytes(&bytes).expect("v4 fixture loads");
+
+    // Migrated structure.
+    assert_eq!(snap.version, 4, "version field records what was read");
+    assert_eq!(snap.variant, SnapshotVariant::Kiss);
+    assert_eq!(snap.alpha_space, 1, "v4's provenance field is preserved");
+    assert!(snap.tasks.is_none(), "v4 predates the multi-task head");
+    assert_eq!(snap.num_tasks(), 1);
+    assert!(!snap.is_multitask());
+    assert_eq!(snap.train_rank, 11);
+    assert_eq!(snap.refresh_rank, 13);
+    assert_eq!(snap.cache.dim(), 2);
+    assert_eq!(snap.alpha.len(), 7);
+    assert_eq!(snap.cache.var_rank(), 2);
+    assert_eq!(snap.cache.spec, GridSpec::Rectilinear(vec![11, 7]));
+
+    // Exact payload values (all exactly representable).
+    let term = &snap.cache.terms()[0];
+    assert_eq!(term.coeff, 1.0);
+    assert_eq!(term.axes[0].min, -1.25);
+    assert_eq!(term.axes[0].h, 0.25);
+    assert_eq!(term.axes[0].m, 11);
+    assert_eq!(term.axes[1].m, 7);
+    assert_eq!(snap.hypers.log_ell, -0.25);
+    assert_eq!(snap.hypers.log_sf2, 0.125);
+    assert_eq!(snap.hypers.log_sn2, -3.0);
+    assert_eq!(snap.alpha[3], 0.0);
+    assert_eq!(term.mean[4], 4.0 * 0.015625 - 0.5);
+    assert_eq!(term.var_r.get(0, 1), 0.03125 - 0.25);
+
+    // Pending entries migrate to task 0 (v4 had no per-entry task id).
+    assert_eq!(snap.pending.len(), 2);
+    assert_eq!(snap.pending[0].seq, 2);
+    assert_eq!(snap.pending[0].x, vec![0.25, -0.375]);
+    assert_eq!(snap.pending[0].y, 1.5);
+    assert_eq!(snap.pending[1].seq, 5);
+    assert_eq!(snap.pending[1].x, vec![-1.0, 0.125]);
+    assert_eq!(snap.pending[1].y, -0.75);
+    assert!(snap.pending.iter().all(|o| o.task == 0));
+
+    // Migration predicts identically through a v5 re-save.
+    let q = Matrix::from_vec(4, 2, vec![0.1, -0.3, 0.7, 0.2, -0.5, -0.4, 1.0, 0.0]);
+    let mean_v4 = snap.cache.predict_mean(&q);
+    let var_v4 = snap.cache.predict_var(&q);
+    let v5_bytes = snap.to_bytes();
+    assert_ne!(v5_bytes, bytes, "writers always emit the newest version");
+    let back = ModelSnapshot::from_bytes(&v5_bytes).expect("v5 re-save loads");
+    assert_eq!(back.version, SNAPSHOT_VERSION);
+    assert_eq!(back.alpha_space, 1, "provenance survives the re-save");
+    assert!(back.tasks.is_none());
+    assert_eq!(back.pending, snap.pending, "pending log must survive the re-save");
+    assert_eq!(back.cache.predict_mean(&q), mean_v4, "migration changed means");
+    assert_eq!(back.cache.predict_var(&q), var_v4, "migration changed variances");
+    for (m, v) in mean_v4.iter().zip(&var_v4) {
+        assert!(m.is_finite() && v.is_finite() && *v > 0.0);
+    }
+}
+
 /// Concurrent serving: multiple TCP clients interleave `observe` and
 /// `predict`; after every streamed point is acknowledged, predictions
 /// match a cold model built on the full point set to 1e-6.
@@ -741,6 +897,114 @@ fn fleet_routes_requests_to_the_addressed_model() {
         "unknown id: {line}"
     );
     writeln!(writer, "quit").unwrap();
+
+    server.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Two clients, two models, one fleet plane: each client holds its own
+/// connection and interleaves per-request-addressed predicts against
+/// *both* models (starting on different ones, alternating every
+/// request). Every response must be bitwise-equal to the addressed
+/// snapshot's own cache, so concurrent cross-model traffic cannot bleed
+/// state between residents.
+#[test]
+fn two_clients_interleave_predicts_across_models() {
+    use skip_gp::coordinator::Metrics;
+    use skip_gp::serve::{FleetConfig, FleetServer, ModelRegistry, RegistryConfig};
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+
+    let dir = std::env::temp_dir()
+        .join(format!("skipgp-fleet-interleave-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let mut snaps = Vec::new();
+    for (id, seed) in [("alpha", 21u64), ("beta", 22u64)] {
+        let (xs, ys, grids, _) = on_grid_problem(96, seed);
+        let h = GpHypers::new(0.45, 1.3, 0.05);
+        let mut gp = ExactGp::new(xs, ys, h);
+        gp.refresh().unwrap();
+        let snap = ModelSnapshot::from_exact_with_grids(&gp, grids, &VarianceMode::Exact).unwrap();
+        snap.save(&dir.join(format!("{id}.snap"))).unwrap();
+        snaps.push(snap);
+    }
+    // The two models genuinely differ (different training seeds).
+    let probe = [0.5, 0.5, 0.5];
+    assert_ne!(
+        snaps[0].cache.predict_mean_one(&probe).to_bits(),
+        snaps[1].cache.predict_mean_one(&probe).to_bits(),
+        "test snapshots coincide"
+    );
+
+    let metrics = Arc::new(Metrics::new());
+    let registry = Arc::new(ModelRegistry::new(
+        RegistryConfig {
+            dir: Some(dir.clone()),
+            shards: 2,
+            ..Default::default()
+        },
+        metrics,
+    ));
+    let server = FleetServer::start(
+        registry,
+        FleetConfig {
+            bind: "127.0.0.1:0".to_string(),
+            workers: 2,
+            default_model: None,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+
+    let snaps = &snaps;
+    std::thread::scope(|scope| {
+        for client in 0..2usize {
+            scope.spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                stream
+                    .set_read_timeout(Some(std::time::Duration::from_secs(30)))
+                    .unwrap();
+                let mut writer = stream.try_clone().unwrap();
+                let mut reader = BufReader::new(stream);
+                let mut line = String::new();
+                let mut rng = Rng::new(100 + client as u64);
+                for i in 0..32 {
+                    let which = (client + i) % 2;
+                    let id = ["alpha", "beta"][which];
+                    let q = [
+                        rng.uniform_in(0.2, 0.8),
+                        rng.uniform_in(0.2, 0.8),
+                        rng.uniform_in(0.2, 0.8),
+                    ];
+                    line.clear();
+                    writeln!(writer, "model {id} predict {} {} {}", q[0], q[1], q[2]).unwrap();
+                    reader.read_line(&mut line).unwrap();
+                    let toks: Vec<&str> = line.trim().split_whitespace().collect();
+                    assert_eq!(toks[0], "ok", "client {client} iter {i}: {line}");
+                    let mean: f64 = toks[1].parse().unwrap();
+                    let var: f64 = toks[2].parse().unwrap();
+                    let (want_mean, want_var) = snaps[which].cache.predict_one(&q);
+                    assert_eq!(
+                        mean.to_bits(),
+                        want_mean.to_bits(),
+                        "client {client} iter {i} {id} mean"
+                    );
+                    assert_eq!(
+                        var.to_bits(),
+                        want_var.to_bits(),
+                        "client {client} iter {i} {id} var"
+                    );
+                }
+                // Single-task residents answer the task-count verb too.
+                line.clear();
+                writeln!(writer, "model alpha tasks").unwrap();
+                reader.read_line(&mut line).unwrap();
+                assert_eq!(line.trim(), "ok 1", "client {client}: {line}");
+                writeln!(writer, "quit").unwrap();
+            });
+        }
+    });
 
     server.shutdown();
     std::fs::remove_dir_all(&dir).ok();

@@ -1,0 +1,133 @@
+#!/usr/bin/env python3
+"""Generate the checked-in historical snapshot fixtures.
+
+The migration tests in rust/tests/serve_roundtrip.rs pin every snapshot
+format version this build still reads against a byte-exact fixture file.
+The v1/v2 fixtures predate this script; it generates the v3 and v4 ones
+(rust/tests/fixtures/snapshot_v3.bin, snapshot_v4.bin) from the layouts
+documented in rust/src/serve/snapshot.rs:
+
+  v4 = v5 without the multi-task payload: pending entries carry no task
+       field and there is no trailing task-section flag.
+  v3 = v4 without the u32 alpha_space field (after refresh_rank).
+
+Every float in the payloads is an exact binary fraction, so the Rust
+tests can assert field values and predictions bitwise. Deterministic:
+re-running reproduces identical bytes.
+
+Run from the repo root:  python3 tools/make_snapshot_fixtures.py
+"""
+
+import struct
+from pathlib import Path
+
+MAGIC = b"SKGPSNAP"
+FIXTURES = Path(__file__).resolve().parent.parent / "rust" / "tests" / "fixtures"
+
+
+def fnv1a(data: bytes) -> int:
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x00000100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def u32(v):
+    return struct.pack("<I", v)
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def f64(v):
+    return struct.pack("<d", v)
+
+
+def body(version, *, variant, train_rank, refresh_rank, alpha_space, sizes,
+         axes, alpha, pending):
+    """Common v3/v4 layout; alpha_space=None omits the field (v3)."""
+    d = len(sizes)
+    n = len(alpha)
+    r = 2
+    out = bytearray()
+    out += MAGIC
+    out += u32(version)
+    out += u32(d)
+    out += u32(n)
+    out += u32(r)
+    out += u32(variant)
+    out += u32(train_rank)
+    out += u32(refresh_rank)
+    if alpha_space is not None:
+        out += u32(alpha_space)
+    # hypers: log ell, log sf2, log sn2 — all exact binary fractions.
+    out += f64(-0.25) + f64(0.125) + f64(-3.0)
+    # Rectilinear spec.
+    out += u32(1)
+    for m in sizes:
+        out += u32(m)
+    # One term, coefficient 1.
+    out += u32(1)
+    out += f64(1.0)
+    for (mn, h, m) in axes:
+        out += f64(mn) + f64(h) + u32(m)
+    for a in alpha:
+        out += f64(a)
+    m_total = 1
+    for m in sizes:
+        m_total *= m
+    for i in range(m_total):
+        out += f64(i * 0.015625 - 0.5)
+    for i in range(m_total * r):
+        out += f64((i % 17) * 0.03125 - 0.25)
+    out += u32(len(pending))
+    for (seq, x, y) in pending:
+        out += u64(seq)
+        for v in x:
+            out += f64(v)
+        out += f64(y)
+    out += u64(fnv1a(bytes(out)))
+    return bytes(out)
+
+
+def main():
+    FIXTURES.mkdir(parents=True, exist_ok=True)
+
+    # v3: d=2, n=6, r=2, SKIP variant, no alpha_space field, one pending
+    # observation. Grids 10 x 9 starting at exact fractions.
+    v3 = body(
+        3,
+        variant=0,
+        train_rank=9,
+        refresh_rank=15,
+        alpha_space=None,
+        sizes=[10, 9],
+        axes=[(-1.25, 0.25, 10), (-0.5, 0.125, 9)],
+        alpha=[0.25 * i - 0.5 for i in range(6)],
+        pending=[(7, [0.5, -0.25], 2.25)],
+    )
+    (FIXTURES / "snapshot_v3.bin").write_bytes(v3)
+    print(f"wrote snapshot_v3.bin ({len(v3)} bytes)")
+
+    # v4: d=2, n=7, r=2, KISS variant, grid-space alpha provenance
+    # (alpha_space=1 — the field v4 introduced), two pending
+    # observations. Grids 11 x 7.
+    v4 = body(
+        4,
+        variant=1,
+        train_rank=11,
+        refresh_rank=13,
+        alpha_space=1,
+        sizes=[11, 7],
+        axes=[(-1.25, 0.25, 11), (-0.5, 0.125, 7)],
+        alpha=[0.25 * i - 0.75 for i in range(7)],
+        pending=[(2, [0.25, -0.375], 1.5), (5, [-1.0, 0.125], -0.75)],
+    )
+    (FIXTURES / "snapshot_v4.bin").write_bytes(v4)
+    print(f"wrote snapshot_v4.bin ({len(v4)} bytes)")
+
+
+if __name__ == "__main__":
+    main()
