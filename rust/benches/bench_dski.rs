@@ -1,0 +1,187 @@
+//! D-SKI derivative-observation bench: the cost of carrying `(y, ∇y)`
+//! pairs through the extended interpolation operator, emitting
+//! machine-readable `results/BENCH_dski.json` (gated by
+//! `tools/bench_check` against `results/baselines/BENCH_dski.json`).
+//!
+//! Two ratios are tracked:
+//!
+//! - `grad_ingest_vs_refresh_speedup` — streaming one `(y, ∇y)` pair
+//!   into a live D-SKI state (warm re-solve + cache patch) vs the full
+//!   refresh it replaces, the closed-loop BO hot path;
+//! - `dski_vs_dense_solve_speedup` — training the SKI gradient model
+//!   (CG on the `W_ext (⊗K) W_extᵀ` operator) vs the dense
+//!   derivative-kernel oracle (Cholesky on the n(1+d) × n(1+d) gram),
+//!   the paper's headline structure-vs-dense trade at gradient scale.
+//!
+//! Run: `cargo bench --bench bench_dski` (add `-- --fast` in CI smoke).
+
+#![allow(clippy::needless_range_loop)] // index-heavy numeric bench loops
+
+use skip_gp::gp::{ExactGradGp, GpHypers, MvmGp, MvmGpConfig, MvmVariant};
+use skip_gp::grid::GridSpec;
+use skip_gp::linalg::Matrix;
+use skip_gp::serve::VarianceMode;
+use skip_gp::solvers::CgConfig;
+use skip_gp::stream::{IncrementalState, StreamConfig};
+use skip_gp::util::{Rng, Timer};
+use std::io::Write;
+use std::path::Path;
+
+fn quantile_us(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[i] * 1e6
+}
+
+/// Smooth 2-D target with analytic gradient.
+fn objective(r: &[f64]) -> (f64, [f64; 2]) {
+    let y = (2.0 * r[0]).sin() + (3.0 * r[1]).cos();
+    (y, [2.0 * (2.0 * r[0]).cos(), -3.0 * (3.0 * r[1]).sin()])
+}
+
+fn grad_data(n: usize, rng: &mut Rng) -> (Matrix, Vec<f64>, Matrix) {
+    let d = 2;
+    let mut xs = Matrix::from_fn(n, d, |_, _| rng.uniform_in(-1.0, 1.0));
+    for k in 0..d {
+        xs.set(0, k, -1.0);
+        xs.set(1, k, 1.0);
+    }
+    let mut ys = Vec::with_capacity(n);
+    let mut grads = Matrix::zeros(n, d);
+    for i in 0..n {
+        let (y, g) = objective(xs.row(i));
+        ys.push(y + 0.05 * rng.normal());
+        grads.set(i, 0, g[0]);
+        grads.set(i, 1, g[1]);
+    }
+    (xs, ys, grads)
+}
+
+fn main() {
+    let fast = std::env::args().any(|a| a == "--fast");
+    let (n, ingests, dense_n) = if fast { (768, 24, 220) } else { (2048, 48, 400) };
+    let (d, m) = (2, 32);
+    let h = GpHypers::new(0.5, 1.0, 0.05);
+    let mut rng = Rng::new(0);
+
+    // --- Streaming: warm (y, ∇y) ingest vs the full refresh it avoids.
+    let (xs, ys, grads) = grad_data(n, &mut rng);
+    let cfg = MvmGpConfig {
+        variant: MvmVariant::Kiss,
+        grid: GridSpec::uniform(m),
+        cg: CgConfig { max_iters: 600, tol: 1e-6, ..Default::default() },
+        ..Default::default()
+    };
+    let scfg = StreamConfig {
+        refresh_every: 0,
+        var_drift_budget: usize::MAX,
+        error_z: 0.0,
+        log_capacity: 1 << 16,
+        variance: VarianceMode::Lanczos(32),
+        patch_eps: 1e-12,
+        ..Default::default()
+    };
+    let gp = MvmGp::new_with_grads(xs, ys, grads, h, cfg.clone()).expect("D-SKI model");
+    let t = Timer::start();
+    let mut live = IncrementalState::from_mvm(&gp, scfg).expect("live D-SKI state");
+    println!(
+        "built live D-SKI model: n={n} ({} operator rows), d={d}, grid {m}x{m} ({:.3}s)",
+        n * (1 + d),
+        t.elapsed_s()
+    );
+
+    let mut ingest_s = Vec::with_capacity(ingests);
+    let mut warm_iters = Vec::with_capacity(ingests);
+    for _ in 0..ingests {
+        let x: Vec<f64> = (0..d).map(|_| rng.uniform_in(-0.9, 0.9)).collect();
+        let (y, g) = objective(&x);
+        let t = Timer::start();
+        let report = live
+            .ingest_with_grad(&x, y + 0.05 * rng.normal(), &g)
+            .expect("grad ingest");
+        ingest_s.push(t.elapsed_s());
+        warm_iters.push(report.solve_iters as u64);
+        assert!(report.refreshed.is_none(), "bench ingests must stay warm");
+    }
+    ingest_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    warm_iters.sort_unstable();
+    let ingest_p50_us = quantile_us(&ingest_s, 0.50);
+    let ingest_p99_us = quantile_us(&ingest_s, 0.99);
+    println!(
+        "(y, ∇y) ingest: p50 {ingest_p50_us:>8.1}µs   p99 {ingest_p99_us:>8.1}µs   \
+         warm α-solve iters p50 {}",
+        warm_iters[warm_iters.len() / 2]
+    );
+
+    let refresh_trials = 3;
+    let mut refresh_s = Vec::with_capacity(refresh_trials);
+    for _ in 0..refresh_trials {
+        let t = Timer::start();
+        live.refresh().expect("refresh");
+        refresh_s.push(t.elapsed_s());
+    }
+    refresh_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let refresh_ms = refresh_s[refresh_trials / 2] * 1e3;
+    let ingest_speedup = refresh_ms * 1e3 / ingest_p50_us.max(1e-9);
+    println!(
+        "full refresh: {refresh_ms:>8.2}ms (median of {refresh_trials})  \
+         -> grad-ingest speedup {ingest_speedup:.2}x"
+    );
+
+    // --- Training: SKI extended-operator CG vs the dense derivative
+    // oracle (the n(1+d) × n(1+d) gram + Cholesky D-SKI replaces).
+    let (dxs, dys, dgrads) = grad_data(dense_n, &mut rng);
+    let t = Timer::start();
+    let mut ski =
+        MvmGp::new_with_grads(dxs.clone(), dys.clone(), dgrads.clone(), h, cfg)
+            .expect("D-SKI model");
+    ski.refresh().expect("ski refresh");
+    let ski_refresh_s = t.elapsed_s();
+    let t = Timer::start();
+    let mut dense = ExactGradGp::new(dxs, dys, dgrads, h);
+    dense.refresh().expect("dense refresh");
+    let dense_refresh_s = t.elapsed_s();
+    let solve_speedup = dense_refresh_s / ski_refresh_s.max(1e-12);
+    println!(
+        "training at n={dense_n} ({} rows): ski {:.3}s vs dense {:.3}s \
+         -> {solve_speedup:.2}x",
+        dense_n * (1 + d),
+        ski_refresh_s,
+        dense_refresh_s
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"dski\",\n  \"fast\": {fast},\n  \"n\": {n},\n  \"d\": {d},\n  \
+         \"grid_m\": {m},\n  \"ingests\": {ingests},\n  \
+         \"grad_ingest_p50_us\": {ingest_p50_us:.2},\n  \
+         \"grad_ingest_p99_us\": {ingest_p99_us:.2},\n  \
+         \"refresh_ms\": {refresh_ms:.3},\n  \
+         \"warm_iters_p50\": {},\n  \
+         \"grad_ingest_vs_refresh_speedup\": {ingest_speedup:.3},\n  \
+         \"dense_n\": {dense_n},\n  \
+         \"ski_refresh_s\": {ski_refresh_s:.4},\n  \
+         \"dense_refresh_s\": {dense_refresh_s:.4},\n  \
+         \"dski_vs_dense_solve_speedup\": {solve_speedup:.3}\n}}\n",
+        warm_iters[warm_iters.len() / 2]
+    );
+    let path = Path::new("results/BENCH_dski.json");
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let mut out = std::fs::File::create(path).expect("bench json");
+    out.write_all(json.as_bytes()).unwrap();
+    println!("wrote {}", path.display());
+
+    assert!(
+        ingest_speedup >= 2.0,
+        "acceptance: a warm (y, ∇y) ingest must be ≥2x cheaper than a full \
+         refresh (got {ingest_speedup:.2}x)"
+    );
+    assert!(
+        solve_speedup >= 1.0,
+        "acceptance: D-SKI training must not be slower than the dense \
+         derivative-kernel oracle (got {solve_speedup:.2}x)"
+    );
+}

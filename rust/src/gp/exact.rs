@@ -7,6 +7,113 @@ use crate::kernels::ProductKernel;
 use crate::linalg::{Cholesky, Matrix};
 use crate::Result;
 
+/// Exact GP with **gradient observations** via the dense derivative
+/// kernel `[[K, ∂K], [∂K, ∂²K]]` (D-SKI's O((n(1+d))³) oracle): every
+/// training point contributes its value and its d partial derivatives,
+/// interleaved in [`crate::kernels::deriv_layout`] row order. This is
+/// the reference the structured D-SKI path
+/// ([`crate::gp::MvmGp::new_with_grads`]) is held to in the property
+/// tests — exactly the role [`ExactGp`] plays for the value-only models.
+pub struct ExactGradGp {
+    pub xs: Matrix,
+    pub ys: Vec<f64>,
+    /// Gradient observations, n × d (row i = ∇y at xs row i).
+    pub grads: Matrix,
+    pub hypers: GpHypers,
+    /// Cached α = K̂_ext⁻¹ (y, ∇y) after `refresh`, length n·(1+d).
+    alpha: Option<Vec<f64>>,
+    chol: Option<Cholesky>,
+}
+
+impl ExactGradGp {
+    pub fn new(xs: Matrix, ys: Vec<f64>, grads: Matrix, hypers: GpHypers) -> Self {
+        assert_eq!(xs.rows, ys.len());
+        assert_eq!(grads.rows, xs.rows, "one gradient row per point");
+        assert_eq!(grads.cols, xs.cols, "gradient dimensionality");
+        ExactGradGp { xs, ys, grads, hypers, alpha: None, chol: None }
+    }
+
+    fn kernel(&self) -> ProductKernel {
+        ProductKernel::rbf(self.xs.cols, self.hypers.ell(), self.hypers.sf2())
+    }
+
+    /// The interleaved `(y, ∇y)` target vector, length n·(1+d).
+    pub fn targets(&self) -> Vec<f64> {
+        let d = self.xs.cols;
+        let mut t = Vec::with_capacity(self.ys.len() * (1 + d));
+        for (i, &y) in self.ys.iter().enumerate() {
+            t.push(y);
+            t.extend_from_slice(self.grads.row(i));
+        }
+        t
+    }
+
+    /// Solve the dense extended system and cache (α, Cholesky).
+    pub fn refresh(&mut self) -> Result<()> {
+        let mask = vec![true; self.xs.rows];
+        let mut khat = self.kernel().gram_deriv_sym(&self.xs, &mask);
+        khat.add_diag(self.hypers.sn2());
+        let chol = Cholesky::new_with_jitter(&khat, 0.0)?;
+        self.alpha = Some(chol.solve(&self.targets()));
+        self.chol = Some(chol);
+        Ok(())
+    }
+
+    /// Cached extended solve (None before `refresh`).
+    pub fn alpha(&self) -> Option<&[f64]> {
+        self.alpha.as_deref()
+    }
+
+    /// Predictive mean: value cross-covariances against every extended
+    /// training row.
+    pub fn predict_mean(&self, xtest: &Matrix) -> Vec<f64> {
+        let alpha = self.alpha.as_ref().expect("call refresh first");
+        let kern = self.kernel();
+        let train_mask = vec![true; self.xs.rows];
+        let test_mask = vec![false; xtest.rows];
+        let kx = kern.gram_deriv(xtest, &test_mask, &self.xs, &train_mask);
+        kx.matvec(alpha)
+    }
+
+    /// Gradient of the predictive mean (n* × d): the test side of the
+    /// derivative kernel against the cached extended α.
+    pub fn predict_grad(&self, xtest: &Matrix) -> Matrix {
+        let alpha = self.alpha.as_ref().expect("call refresh first");
+        let d = self.xs.cols;
+        let kern = self.kernel();
+        let train_mask = vec![true; self.xs.rows];
+        let test_mask = vec![true; xtest.rows];
+        // n*(1+d) × N in interleaved order: row j(1+d) is query j's
+        // value, rows j(1+d)+1+a its gradient components.
+        let kx = kern.gram_deriv(xtest, &test_mask, &self.xs, &train_mask);
+        Matrix::from_fn(xtest.rows, d, |j, a| {
+            let row = kx.row(j * (1 + d) + 1 + a);
+            row.iter().zip(alpha).map(|(k, al)| k * al).sum()
+        })
+    }
+
+    /// Latent predictive variance of the value at test points, under the
+    /// extended system (gradient observations tighten it).
+    pub fn predict_var(&self, xtest: &Matrix) -> Vec<f64> {
+        let chol = self.chol.as_ref().expect("call refresh first");
+        let kern = self.kernel();
+        let train_mask = vec![true; self.xs.rows];
+        let test_mask = vec![false; xtest.rows];
+        let kx = kern.gram_deriv(xtest, &test_mask, &self.xs, &train_mask); // n* × N
+        let sol = chol.solve_mat(&kx.transpose()); // N × n*
+        let mut out = Vec::with_capacity(xtest.rows);
+        for i in 0..xtest.rows {
+            let ki = kx.row(i);
+            let mut reduce = 0.0;
+            for (j, &k) in ki.iter().enumerate() {
+                reduce += k * sol.get(j, i);
+            }
+            out.push((kern.outputscale - reduce).max(1e-12));
+        }
+        out
+    }
+}
+
 /// Exact (Cholesky) GP with shared-lengthscale RBF kernel.
 pub struct ExactGp {
     pub xs: Matrix,

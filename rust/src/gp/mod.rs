@@ -11,7 +11,7 @@ pub mod sgpr;
 
 pub use adam::Adam;
 pub use cluster::{nearest_centroid, spatial_centroids, ClusterMtgp, ClusterMtgpConfig};
-pub use exact::ExactGp;
+pub use exact::{ExactGp, ExactGradGp};
 pub use hypers::GpHypers;
 pub use mtgp::{Mtgp, MtgpConfig, MtgpData};
 pub use mvm::{MvmGp, MvmGpConfig, MvmVariant, SolveSpace};

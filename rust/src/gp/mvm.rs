@@ -20,8 +20,12 @@
 //! right-hand sides ride together, as in the gradient's y-solve +
 //! Hutchinson probes): `cfg.cg.precond` selects a pivoted-Cholesky /
 //! Jacobi / identity preconditioner built once per operator with the
-//! exact noise shift σ_n², and with `cfg.warm_start` successive y-solves
-//! seed from the previous solution (see `docs/SOLVERS.md`).
+//! exact noise shift σ_n², and with `cfg.policy.warm_start` successive
+//! y-solves seed from the previous solution (see `docs/SOLVERS.md`).
+//! The deployment-facing solver knobs (preconditioner, precision, solve
+//! space, warm starts) arrive bundled as a
+//! [`crate::solvers::SolverPolicy`] — the same struct the streaming and
+//! snapshot configs embed, parsed once from the CLI.
 //! Log-determinants use batched-probe SLQ. Training
 //! maximizes Eq. (3) with ADAM; gradients are analytic in (σ_f², σ_n²)
 //! and central finite differences with **common random numbers** in log ℓ
@@ -31,19 +35,20 @@
 use super::adam::Adam;
 use super::hypers::GpHypers;
 use crate::grid::{build_grid, grid_ski_operator, grid_ski_parts, Grid1d, GridSpec};
-use crate::kernels::ProductKernel;
+use crate::kernels::{deriv_layout, ProductKernel};
 use crate::linalg::{dot, Matrix};
 use crate::operators::{
     AffineOp, ArcOp, ContractionBackend, KroneckerSkiOp, LinearOp, NativeBackend, SkiOp,
     SkipComponent, SkipOp, SumOp,
 };
-use crate::serve::cache::PredictCache;
+use crate::serve::cache::{build_grad_cache, PredictCache};
 use crate::solvers::{
     block_cg_solve_with, build_preconditioner, cg_solve_with, grid_cg_solve,
-    slq_logdet, CgConfig, GridSystem, Precision, Preconditioner, SlqConfig,
+    slq_logdet, CgConfig, GridSystem, Preconditioner, SlqConfig, SolverPolicy,
 };
 use crate::util::Rng;
 use crate::{Error, Result};
+use std::borrow::Cow;
 use std::sync::{Arc, Mutex};
 
 /// Largest stored grid (Σ_t Π m_k cells across terms) the predictive
@@ -68,28 +73,10 @@ pub enum MvmVariant {
     Kiss,
 }
 
-/// Which space the covariance y-solves run in (Yadav, Sheldon & Musco
-/// 2021 — see `crate::solvers::gridspace` for the derivation and
-/// `docs/SOLVERS.md` for the decision table).
-///
-/// Both spaces converge on the *same* certificate
-/// (`‖K̂α − y‖ ≤ tol·‖y‖`), so switching spaces changes iteration cost,
-/// never the answer beyond the tolerance.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SolveSpace {
-    /// Grid space for KISS models when the grid admits it (the `WᵀW`
-    /// band fits its budget, axes are non-degenerate), data space
-    /// otherwise — the default.
-    Auto,
-    /// Always solve in data space (n-dimensional CG/PCG) — the
-    /// equivalence oracle the grid path is tested against.
-    Data,
-    /// Always solve in grid space. A typed [`Error::Config`] for the
-    /// SKIP variant (no tensor-product `W` to project through) and a
-    /// typed [`Error::Grid`] when the grid refuses (over-budget band,
-    /// degenerate axes).
-    Grid,
-}
+// `SolveSpace` historically lived here; it moved to `crate::solvers`
+// with the rest of the solver policy, and this re-export keeps the
+// long-standing `skip_gp::gp::SolveSpace` path working.
+pub use crate::solvers::SolveSpace;
 
 /// Configuration for MVM-based inference.
 #[derive(Clone, Debug)]
@@ -112,23 +99,14 @@ pub struct MvmGpConfig {
     /// the CLI; see `docs/SOLVERS.md` for tuning).
     pub cg: CgConfig,
     pub slq: SlqConfig,
-    /// Warm-start the iterative solves with the previous solution: ADAM's
-    /// successive `mll_grad` calls seed the y-solve with the last step's
-    /// α, and `refresh` seeds from the training-grade α. Warm starts
-    /// change where CG *starts*, never what it converges to; disable for
-    /// bit-reproducibility of individual solves against cold runs.
-    pub warm_start: bool,
-    /// Which space the covariance y-solves run in (`--space` on the CLI).
-    pub solve_space: SolveSpace,
-    /// Arithmetic for the covariance solves (`--precision` on the CLI):
-    /// [`Precision::F64`] runs classic double-precision PCG;
-    /// [`Precision::Mixed`] runs the hot MVMs in f32 inside an f64
-    /// iterative-refinement loop that meets the same residual certificate
-    /// (see `crate::solvers::refine`). Folded into
-    /// [`CgConfig::precision`] by [`MvmGp::new`], so every solve this
-    /// model issues — training, refresh, variance, grid space — routes
-    /// through one switch.
-    pub precision: Precision,
+    /// The deployment-facing solver knobs — preconditioner, precision,
+    /// solve space, warm starts — shared with the streaming and snapshot
+    /// configs. The preconditioner/precision components are folded into
+    /// [`CgConfig`] by [`MvmGp::new`] (non-default policy wins, a
+    /// directly-set `cg` field survives a default policy), so every
+    /// solve this model issues — training, refresh, variance, grid
+    /// space — routes through one switch.
+    pub policy: SolverPolicy,
     /// Base seed for probe vectors (common-random-numbers gradients).
     pub seed: u64,
 }
@@ -142,9 +120,7 @@ impl Default for MvmGpConfig {
             refresh_rank: 100,
             cg: CgConfig { max_iters: 100, tol: 1e-5, ..CgConfig::default() },
             slq: SlqConfig { num_probes: 8, max_rank: 25 },
-            warm_start: true,
-            solve_space: SolveSpace::Auto,
-            precision: Precision::F64,
+            policy: SolverPolicy::default(),
             seed: 0,
         }
     }
@@ -165,6 +141,13 @@ enum SeedSpace {
 pub struct MvmGp {
     pub xs: Matrix,
     pub ys: Vec<f64>,
+    /// D-SKI gradient observations (n × d, row i = ∇y at xs row i), set
+    /// by [`Self::new_with_grads`]. When present, every training row
+    /// contributes its value row *and* d gradient rows to the extended
+    /// operator `W_ext (⊗K) W_extᵀ` (interleaved order — see
+    /// [`crate::kernels::deriv_layout`]), and the train targets become
+    /// the interleaved `(y, ∇y)` vector of length n·(1+d).
+    grads: Option<Matrix>,
     pub hypers: GpHypers,
     pub cfg: MvmGpConfig,
     backend: Arc<dyn ContractionBackend>,
@@ -199,17 +182,16 @@ pub struct MvmGp {
 impl MvmGp {
     pub fn new(xs: Matrix, ys: Vec<f64>, hypers: GpHypers, cfg: MvmGpConfig) -> Self {
         assert_eq!(xs.rows, ys.len());
-        // Fold the model-level precision switch into the CG config every
-        // solve site consumes. Mixed only ever *adds* — a caller that set
-        // `cfg.cg.precision` directly keeps their choice under the
-        // default model-level F64.
+        // Fold the policy's precision/preconditioner switches into the
+        // CG config every solve site consumes. The policy only ever
+        // *adds* — a caller that set `cfg.cg.precision`/`cfg.cg.precond`
+        // directly keeps their choice under a default policy.
         let mut cfg = cfg;
-        if cfg.precision == Precision::Mixed {
-            cfg.cg.precision = Precision::Mixed;
-        }
+        cfg.policy.fold_into(&mut cfg.cg);
         MvmGp {
             xs,
             ys,
+            grads: None,
             hypers,
             cfg,
             backend: Arc::new(NativeBackend),
@@ -220,6 +202,73 @@ impl MvmGp {
             refresh_hypers: None,
             warm: Mutex::new(None),
             alpha_from_grid: false,
+        }
+    }
+
+    /// Build a D-SKI model with gradient observations: every training
+    /// point carries its value `y_i` *and* its gradient `∇y_i` (row i of
+    /// `grads`, n × d). Training and prediction run on the extended
+    /// interpolation operator whose `W_ext (⊗K) W_extᵀ` approximates the
+    /// full derivative kernel `[[K, ∂K], [∂K, ∂²K]]` (Eriksson et al.
+    /// 2018). Gradient models require the KISS variant on a single-term
+    /// dense grid (the differentiated stencils live on one tensor grid)
+    /// and an RBF kernel — all three are typed errors here, not panics
+    /// deep in operator construction.
+    pub fn new_with_grads(
+        xs: Matrix,
+        ys: Vec<f64>,
+        grads: Matrix,
+        hypers: GpHypers,
+        cfg: MvmGpConfig,
+    ) -> Result<Self> {
+        if grads.rows != xs.rows || grads.cols != xs.cols {
+            return Err(Error::DimMismatch {
+                context: "gradient observations (n × d, aligned with xs)",
+                expected: xs.rows * xs.cols,
+                got: grads.rows * grads.cols,
+            });
+        }
+        if cfg.variant != MvmVariant::Kiss {
+            return Err(Error::Config(
+                "gradient observations require the kiss variant — the SKIP \
+                 operator has no tensor-product W to differentiate"
+                    .into(),
+            ));
+        }
+        if matches!(cfg.grid, GridSpec::Sparse { .. }) {
+            return Err(Error::Config(
+                "gradient observations require a single-term dense grid — \
+                 sparse (combination-technique) grids are unsupported"
+                    .into(),
+            ));
+        }
+        let mut gp = Self::new(xs, ys, hypers, cfg);
+        gp.grads = Some(grads);
+        Ok(gp)
+    }
+
+    /// The gradient observations, when this is a D-SKI model.
+    pub fn grads(&self) -> Option<&Matrix> {
+        self.grads.as_ref()
+    }
+
+    /// The train-target vector every y-solve consumes: plain `ys` for
+    /// value-only models (borrowed — zero cost on the common path), the
+    /// interleaved `[y_i, ∇y_i·e_0, …, ∇y_i·e_{d−1}]` vector of length
+    /// n·(1+d) for gradient models, aligned row-for-row with the
+    /// extended operator.
+    pub fn train_targets(&self) -> Cow<'_, [f64]> {
+        match &self.grads {
+            None => Cow::Borrowed(&self.ys[..]),
+            Some(g) => {
+                let d = self.xs.cols;
+                let mut t = Vec::with_capacity(self.ys.len() * (1 + d));
+                for (i, &y) in self.ys.iter().enumerate() {
+                    t.push(y);
+                    t.extend_from_slice(g.row(i));
+                }
+                Cow::Owned(t)
+            }
         }
     }
 
@@ -238,7 +287,7 @@ impl MvmGp {
     /// other space's solver would be wrong even at coincidentally equal
     /// lengths — a mismatch is silently a cold start, never a panic.
     fn warm_seed_for(&self, space: SeedSpace, len: usize) -> Option<Vec<f64>> {
-        if !self.cfg.warm_start {
+        if !self.cfg.policy.warm_start {
             return None;
         }
         let w = self.warm.lock().unwrap();
@@ -251,7 +300,7 @@ impl MvmGp {
     /// Record the latest solve iterate (tagged with its space) for the
     /// next warm start. No-op when warm starts are disabled.
     fn store_warm(&self, space: SeedSpace, v: Vec<f64>) {
-        if self.cfg.warm_start {
+        if self.cfg.policy.warm_start {
             *self.warm.lock().unwrap() = Some((space, v));
         }
     }
@@ -319,8 +368,16 @@ impl MvmGp {
                     }
                 }
                 let kern = ProductKernel::rbf(d, h.ell(), 1.0);
-                let grid = build_grid(&self.xs, &self.cfg.grid)?;
-                grid_ski_operator(&self.xs, &kern, grid.as_ref())
+                if self.grads.is_some() {
+                    // D-SKI: the extended operator interleaves value and
+                    // gradient stencil rows; the single-term dense grid is
+                    // guaranteed by `new_with_grads`.
+                    let axes = self.fitted_grid_axes()?;
+                    Box::new(KroneckerSkiOp::with_grids_grad(&self.xs, &kern, axes))
+                } else {
+                    let grid = build_grid(&self.xs, &self.cfg.grid)?;
+                    grid_ski_operator(&self.xs, &kern, grid.as_ref())
+                }
             }
         };
         Ok(AffineOp { inner, scale: h.sf2(), shift: h.sn2() })
@@ -349,12 +406,21 @@ impl MvmGp {
             }
         }
         let kern = ProductKernel::rbf(d, h.ell(), 1.0);
-        let grid = build_grid(&self.xs, &self.cfg.grid)?;
-        let parts: Vec<(f64, Arc<KroneckerSkiOp>)> =
+        let parts: Vec<(f64, Arc<KroneckerSkiOp>)> = if self.grads.is_some() {
+            // D-SKI: one extended single-term operator; the same Arc
+            // serves the grid system and the data-space view below.
+            let axes = self.fitted_grid_axes()?;
+            vec![(
+                1.0,
+                Arc::new(KroneckerSkiOp::with_grids_grad(&self.xs, &kern, axes)),
+            )]
+        } else {
+            let grid = build_grid(&self.xs, &self.cfg.grid)?;
             grid_ski_parts(&self.xs, &kern, grid.as_ref())
                 .into_iter()
                 .map(|(c, op)| (c, Arc::new(op)))
-                .collect();
+                .collect()
+        };
         // Data-space view over Arc clones — `ArcOp` is pure delegation,
         // so this is the `grid_ski_operator` composition bit-for-bit.
         let inner: Box<dyn LinearOp> = if parts.len() == 1 && parts[0].0 == 1.0 {
@@ -377,7 +443,7 @@ impl MvmGp {
         Ok((op, sys))
     }
 
-    /// Resolve [`MvmGpConfig::solve_space`] for this model: the grid
+    /// Resolve [`SolverPolicy::space`] for this model: the grid
     /// system plus the matching data-space covariance view when y-solves
     /// should run in grid space, `None` for the data-space path.
     ///
@@ -385,7 +451,7 @@ impl MvmGp {
     /// (SKIP variant, over-budget `WᵀW` band, degenerate axes); explicit
     /// `Grid` turns those into typed errors instead.
     fn grid_solver(&self, h: &GpHypers) -> Result<Option<(AffineOp, GridSystem)>> {
-        let explicit = match self.cfg.solve_space {
+        let explicit = match self.cfg.policy.space {
             SolveSpace::Data => return Ok(None),
             SolveSpace::Grid => true,
             SolveSpace::Auto => false,
@@ -435,14 +501,17 @@ impl MvmGp {
         seed: u64,
         pre: Option<&dyn Preconditioner>,
     ) -> Result<f64> {
-        let n = self.ys.len() as f64;
+        // Gradient models train on the interleaved (y, ∇y) targets of the
+        // extended system; N = n·(1+d) there, plain n otherwise.
+        let ys = self.train_targets();
+        let n = ys.len() as f64;
         if let Some((op, sys)) = self.grid_solver(h)? {
             // Grid space: the y-solve runs on the m×m normal equations
             // (per-iteration cost independent of n); SLQ stays in data
             // space over the shared-Arc covariance view.
             let x0 = self.warm_seed_for(SeedSpace::Grid, sys.grid_dim());
-            let sol = grid_cg_solve(&sys, &self.ys, x0.as_deref(), self.cfg.cg);
-            let fit: f64 = self.ys.iter().zip(&sol.alpha).map(|(y, a)| y * a).sum();
+            let sol = grid_cg_solve(&sys, &ys, x0.as_deref(), self.cfg.cg);
+            let fit: f64 = ys.iter().zip(&sol.alpha).map(|(y, a)| y * a).sum();
             let mut rng = Rng::new(seed ^ LOGDET_STREAM);
             let logdet = slq_logdet(&op, self.cfg.slq, &mut rng);
             return Ok(
@@ -459,9 +528,9 @@ impl MvmGp {
                 built.as_ref()
             }
         };
-        let x0 = self.warm_seed_for(SeedSpace::Data, self.ys.len());
-        let sol = cg_solve_with(&op, &self.ys, pre, x0.as_deref(), self.cfg.cg);
-        let fit: f64 = self.ys.iter().zip(&sol.x).map(|(y, a)| y * a).sum();
+        let x0 = self.warm_seed_for(SeedSpace::Data, ys.len());
+        let sol = cg_solve_with(&op, &ys, pre, x0.as_deref(), self.cfg.cg);
+        let fit: f64 = ys.iter().zip(&sol.x).map(|(y, a)| y * a).sum();
         let mut rng = Rng::new(seed ^ LOGDET_STREAM);
         let logdet = slq_logdet(&op, self.cfg.slq, &mut rng);
         Ok(-0.5 * fit - 0.5 * logdet - 0.5 * n * (2.0 * std::f64::consts::PI).ln())
@@ -479,7 +548,13 @@ impl MvmGp {
     /// hypers a little per step, so the old α is a near-solution and the
     /// y-column converges in a handful of iterations).
     pub fn mll_grad(&self, h: &GpHypers, seed: u64) -> Result<(f64, Vec<f64>)> {
-        let n = self.ys.len();
+        // The hyper-gradient algebra below survives the D-SKI extension
+        // unchanged: the derivative kernel scales linearly in σ_f², so
+        // K̂ = σ_f²·B + σ_n²·I still holds row-for-row over the extended
+        // system and the quad/trace identities carry over with
+        // N = targets.len().
+        let ys = self.train_targets();
+        let n = ys.len();
         // Hutchinson probes from the fixed stream (same draws as the
         // historical one-solve-per-probe loop, for seed compatibility).
         let mut rng = Rng::new(seed ^ 0x9E37_79B9_7F4A_7C15);
@@ -497,7 +572,7 @@ impl MvmGp {
             Option<Box<dyn Preconditioner>>,
         ) = if let Some((_op, sys)) = self.grid_solver(h)? {
             let x0 = self.warm_seed_for(SeedSpace::Grid, sys.grid_dim());
-            let sol = grid_cg_solve(&sys, &self.ys, x0.as_deref(), self.cfg.cg);
+            let sol = grid_cg_solve(&sys, &ys, x0.as_deref(), self.cfg.cg);
             self.store_warm(SeedSpace::Grid, sol.v.clone());
             // Probe columns are fresh Rademacher draws every step — no
             // warm seed exists for them, so they solve cold one by one.
@@ -510,7 +585,7 @@ impl MvmGp {
             crate::coordinator::metrics::global().incr("solver.space.data", 1);
             let op = self.build_operator(h, seed)?;
             let mut rhs = Matrix::zeros(n, 1 + num_tr_probes);
-            rhs.set_col(0, &self.ys);
+            rhs.set_col(0, &ys);
             for (j, z) in probes.iter().enumerate() {
                 rhs.set_col(1 + j, z);
             }
@@ -529,7 +604,7 @@ impl MvmGp {
             let probe_sols = (0..num_tr_probes).map(|j| sol.x.col(1 + j)).collect();
             (alpha, probe_sols, Some(pre))
         };
-        let ya: f64 = self.ys.iter().zip(&alpha).map(|(y, a)| y * a).sum();
+        let ya: f64 = ys.iter().zip(&alpha).map(|(y, a)| y * a).sum();
         let aa: f64 = alpha.iter().map(|a| a * a).sum();
 
         // tr(K̂⁻¹) via Hutchinson from the probe solves.
@@ -597,18 +672,19 @@ impl MvmGp {
     /// so prediction uses a higher-rank operator than training).
     pub fn refresh(&mut self) -> Result<()> {
         let cg = CgConfig { max_iters: self.cfg.cg.max_iters.max(200), ..self.cfg.cg };
+        let ys = self.train_targets().into_owned();
         if let Some((op, sys)) = self.grid_solver(&self.hypers)? {
             // Grid space: α is recovered from the grid solve; the
             // data-space covariance view (shared Arcs, so float-identical
             // to the grid system's kernel arithmetic) is still cached for
             // `predict_var`'s block solves and its preconditioner.
-            let x0 = if self.cfg.warm_start {
+            let x0 = if self.cfg.policy.warm_start {
                 self.warm_seed_for(SeedSpace::Grid, sys.grid_dim())
                     .or_else(|| self.alpha.as_ref().map(|a| sys.seed_from_alpha(a)))
             } else {
                 None
             };
-            let sol = grid_cg_solve(&sys, &self.ys, x0.as_deref(), cg);
+            let sol = grid_cg_solve(&sys, &ys, x0.as_deref(), cg);
             self.store_warm(SeedSpace::Grid, sol.v.clone());
             self.alpha = Some(sol.alpha);
             self.alpha_from_grid = true;
@@ -630,14 +706,14 @@ impl MvmGp {
         // else the last training step's (the refresh-grade operator is a
         // higher-rank build of the same K̂, so either is a near-solution).
         // α is a valid data-space seed whichever space produced it.
-        let x0 = if self.cfg.warm_start {
+        let x0 = if self.cfg.policy.warm_start {
             self.alpha
                 .clone()
-                .or_else(|| self.warm_seed_for(SeedSpace::Data, self.ys.len()))
+                .or_else(|| self.warm_seed_for(SeedSpace::Data, ys.len()))
         } else {
             None
         };
-        let sol = cg_solve_with(&op, &self.ys, pre.as_ref(), x0.as_deref(), cg);
+        let sol = cg_solve_with(&op, &ys, pre.as_ref(), x0.as_deref(), cg);
         self.store_warm(SeedSpace::Data, sol.x.clone());
         self.alpha = Some(sol.x);
         self.alpha_from_grid = false;
@@ -719,6 +795,23 @@ impl MvmGp {
         if cells > PREDICT_CACHE_MAX_CELLS {
             return None;
         }
+        if self.grads.is_some() {
+            // D-SKI: the mean cache is u = σ_f²(⊗K)(W_extᵀα) — identical
+            // query-side algebra, gradient rows scattered through
+            // differentiated stencils (`serve::cache::build_grad_cache`).
+            let axes = self.fitted_grid_axes().ok()?;
+            let has_grad = vec![true; self.xs.rows];
+            return build_grad_cache(
+                &self.xs,
+                &has_grad,
+                alpha,
+                &self.hypers,
+                self.cfg.grid.clone(),
+                axes,
+                None,
+            )
+            .ok();
+        }
         let grid = build_grid(&self.xs, &self.cfg.grid).ok()?;
         PredictCache::build(&self.xs, alpha, &self.hypers, grid.as_ref(), None).ok()
     }
@@ -750,6 +843,25 @@ impl MvmGp {
     pub fn predict_mean_dense(&self, xtest: &Matrix) -> Vec<f64> {
         let alpha = self.alpha.as_ref().expect("call fit/refresh first");
         let kern = ProductKernel::rbf(self.xs.cols, self.hypers.ell(), self.hypers.sf2());
+        if self.grads.is_some() {
+            // Gradient rows contribute through the derivative
+            // cross-covariances: μ(x*) = Σ_r α_r · k_r(x*) with k_r the
+            // value or ∂-row of the exact derivative kernel.
+            let layout =
+                deriv_layout(&vec![true; self.xs.rows], self.xs.cols);
+            return (0..xtest.rows)
+                .map(|j| {
+                    let xj = xtest.row(j);
+                    layout
+                        .iter()
+                        .zip(alpha)
+                        .map(|(&(pi, da), &a)| {
+                            a * kern.eval_deriv(self.xs.row(pi), xj, da, None)
+                        })
+                        .sum()
+                })
+                .collect();
+        }
         let mut out = Vec::with_capacity(xtest.rows);
         for i in 0..xtest.rows {
             let xi = xtest.row(i);
@@ -762,6 +874,42 @@ impl MvmGp {
         out
     }
 
+    /// Gradient of the predictive mean (n* × d): served from the
+    /// grid-side cache through differentiated query stencils
+    /// ([`PredictCache::predict_grad`]), falling back to the exact
+    /// derivative cross-covariances when the grid exceeds the cache
+    /// budget. Available on value-only models too — the posterior mean
+    /// of a smooth kernel is differentiable whether or not gradients
+    /// were observed.
+    pub fn predict_grad(&self, xtest: &Matrix) -> Matrix {
+        assert!(self.alpha.is_some(), "call fit/refresh first");
+        match &self.cache {
+            Some(cache) => cache.predict_grad(xtest),
+            None => self.predict_grad_dense(xtest),
+        }
+    }
+
+    /// Reference predictive-mean gradient via the exact derivative
+    /// cross-covariances, O(n*·N·d²) — the oracle for the differentiated
+    /// stencil path.
+    pub fn predict_grad_dense(&self, xtest: &Matrix) -> Matrix {
+        let alpha = self.alpha.as_ref().expect("call fit/refresh first");
+        let d = self.xs.cols;
+        let kern = ProductKernel::rbf(d, self.hypers.ell(), self.hypers.sf2());
+        let layout =
+            deriv_layout(&vec![self.grads.is_some(); self.xs.rows], d);
+        Matrix::from_fn(xtest.rows, d, |j, a| {
+            let xj = xtest.row(j);
+            layout
+                .iter()
+                .zip(alpha)
+                .map(|(&(pi, da), &al)| {
+                    al * kern.eval_deriv(self.xs.row(pi), xj, da, Some(a))
+                })
+                .sum()
+        })
+    }
+
     #[cfg(debug_assertions)]
     fn debug_check_stencil_mean(&self, got: &[f64], xtest: &Matrix) {
         // Only cross-check problems small enough that the dense oracle is
@@ -770,6 +918,12 @@ impl MvmGp {
         // caches carry the combination-technique error on top and are
         // covered by their own integration tests instead.
         if xtest.rows * self.xs.rows > 250_000 {
+            return;
+        }
+        // Gradient models: the extended α's ‖·‖₁ bound would need the
+        // differentiated-stencil error constants on top; the D-SKI
+        // property tests hold that path to an explicit oracle instead.
+        if self.grads.is_some() {
             return;
         }
         let cache = self.cache.as_ref().expect("stencil check without cache");
@@ -829,7 +983,18 @@ impl MvmGp {
         assert!(self.alpha.is_some(), "call fit/refresh first");
         let d = self.xs.cols;
         let kern = ProductKernel::rbf(d, self.hypers.ell(), self.hypers.sf2());
-        let kx = kern.gram(&self.xs, xtest); // n × n*
+        // Gradient models solve against the extended system, so the
+        // cross-covariance block carries the derivative rows too (N × n*).
+        let kx = if self.grads.is_some() {
+            kern.gram_deriv(
+                &self.xs,
+                &vec![true; self.xs.rows],
+                xtest,
+                &vec![false; xtest.rows],
+            )
+        } else {
+            kern.gram(&self.xs, xtest) // n × n*
+        };
         // Reuse the cached refresh-grade operator when it is current for
         // these hypers (`refresh_operator` returns None when stale);
         // rebuild otherwise.
@@ -1084,7 +1249,7 @@ mod tests {
         let mut cfg_plain = MvmGpConfig {
             grid: GridSpec::uniform(48),
             rank: 30,
-            warm_start: false,
+            policy: SolverPolicy { warm_start: false, ..Default::default() },
             ..Default::default()
         };
         cfg_plain.cg.tol = 1e-8;
@@ -1145,14 +1310,17 @@ mod tests {
         let mut cfg = MvmGpConfig {
             variant: MvmVariant::Kiss,
             grid: GridSpec::uniform(32),
-            solve_space: SolveSpace::Data,
-            warm_start: false,
+            policy: SolverPolicy {
+                space: SolveSpace::Data,
+                warm_start: false,
+                ..Default::default()
+            },
             ..Default::default()
         };
         cfg.cg.tol = 1e-7;
         cfg.cg.max_iters = 600;
         let mut data = MvmGp::new(xs.clone(), ys.clone(), h, cfg.clone());
-        cfg.solve_space = SolveSpace::Grid;
+        cfg.policy.space = SolveSpace::Grid;
         let mut grid = MvmGp::new(xs, ys, h, cfg);
         data.refresh().unwrap();
         grid.refresh().unwrap();
@@ -1175,13 +1343,13 @@ mod tests {
         let cfg = MvmGpConfig {
             variant: MvmVariant::Kiss,
             grid: GridSpec::uniform(32),
-            solve_space: SolveSpace::Grid,
+            policy: SolverPolicy { space: SolveSpace::Grid, ..Default::default() },
             ..Default::default()
         };
         let mut gp = MvmGp::new(xs, ys, h, cfg);
         // Writes a Grid-tagged warm seed.
         let (mll_g, grad_g) = gp.mll_grad(&h, 7).unwrap();
-        gp.cfg.solve_space = SolveSpace::Data;
+        gp.cfg.policy.space = SolveSpace::Data;
         let (mll_d, grad_d) = gp.mll_grad(&h, 7).unwrap();
         assert!(mll_g.is_finite() && mll_d.is_finite());
         assert!(grad_g.iter().chain(&grad_d).all(|g| g.is_finite()));
@@ -1193,7 +1361,7 @@ mod tests {
         );
         // Flip back: the Data-tagged seed is dropped just the same, and a
         // full grid-space refresh comes out finite.
-        gp.cfg.solve_space = SolveSpace::Grid;
+        gp.cfg.policy.space = SolveSpace::Grid;
         gp.refresh().unwrap();
         assert!(gp.alpha().unwrap().iter().all(|a| a.is_finite()));
     }
@@ -1203,7 +1371,7 @@ mod tests {
         let (xs, ys, _, _) = toy(80, 2, 22);
         let cfg = MvmGpConfig {
             grid: GridSpec::uniform(32),
-            solve_space: SolveSpace::Grid,
+            policy: SolverPolicy { space: SolveSpace::Grid, ..Default::default() },
             ..Default::default()
         };
         let mut gp = MvmGp::new(xs, ys, GpHypers::default_init(), cfg);
@@ -1227,7 +1395,7 @@ mod tests {
         let cfg = MvmGpConfig {
             variant: MvmVariant::Kiss,
             grid: GridSpec::uniform(13),
-            solve_space: SolveSpace::Grid,
+            policy: SolverPolicy { space: SolveSpace::Grid, ..Default::default() },
             rank: 10,
             refresh_rank: 20,
             ..Default::default()
@@ -1241,7 +1409,7 @@ mod tests {
             other => panic!("over-budget band must be a grid error, got {other:?}"),
         }
         let mut cfg = cfg;
-        cfg.solve_space = SolveSpace::Auto;
+        cfg.policy.space = SolveSpace::Auto;
         let mut gp = MvmGp::new(xs, ys, h, cfg);
         gp.refresh().unwrap();
         assert!(gp.alpha().unwrap().iter().all(|a| a.is_finite()));

@@ -16,6 +16,13 @@
 //! over a row-major grid, emitting `(flat index, weight)` pairs; it is the
 //! single stencil-extraction primitive shared by the Kronecker SKI
 //! operator and the serving layer's predictive caches.
+//!
+//! Each stencil also has an analytic derivative ([`cubic_stencil_deriv`],
+//! [`axis_stencil_deriv`], composed by [`tensor_stencil_grad`]): the
+//! D-SKI extension (Eriksson et al. 2018) represents a gradient
+//! observation ∂f/∂x_a as a row of ∂W/∂x_a — the same grid support with
+//! differentiated weights — so derivative data rides the existing
+//! Kronecker MVM machinery unchanged.
 
 use crate::{Error, Result};
 
@@ -155,6 +162,22 @@ fn cubic_weight(s: f64) -> f64 {
     }
 }
 
+/// Derivative dw/ds of [`cubic_weight`] (signed argument; odd symmetry
+/// about 0 since the kernel itself is even).
+#[inline]
+fn cubic_weight_deriv(s: f64) -> f64 {
+    let a = -0.5;
+    let sign = if s < 0.0 { -1.0 } else { 1.0 };
+    let s = s.abs();
+    sign * if s < 1.0 {
+        (3.0 * (a + 2.0) * s - 2.0 * (a + 3.0)) * s
+    } else if s < 2.0 {
+        a * ((3.0 * s - 10.0) * s + 8.0)
+    } else {
+        0.0
+    }
+}
+
 /// Stencil of point `x` on `grid` (m ≥ 4): left-most grid index plus the
 /// four (renormalized) cubic convolution weights. Shared by the 1-D
 /// `InterpMatrix` and the tensor-product weights of KISS-GP.
@@ -175,6 +198,69 @@ pub fn cubic_stencil(x: f64, grid: &Grid1d) -> (usize, [f64; STENCIL]) {
         }
     }
     (base, row_w)
+}
+
+/// Derivative of the (renormalized) cubic stencil of [`cubic_stencil`]
+/// with respect to `x`: the same base index plus the four weight
+/// derivatives. With Σ the raw weight sum, the renormalized weight is
+/// w_k/Σ, so d/dx (w_k/Σ) = (w_k′·Σ − w_k·Σ′)/Σ² · (1/h) — the quotient
+/// rule keeps the derivative exact through the boundary renormalization
+/// (in the interior Σ ≡ 1 and Σ′ ≡ 0, recovering the plain chain rule).
+/// This is the D-SKI row primitive (Eriksson et al. 2018): ∂W/∂x rows
+/// reuse the value stencil's support.
+pub fn cubic_stencil_deriv(x: f64, grid: &Grid1d) -> (usize, [f64; STENCIL]) {
+    let u = (x - grid.min) / grid.h;
+    let fi = u.floor() as isize;
+    let base = (fi - 1).clamp(0, grid.m as isize - STENCIL as isize) as usize;
+    let mut w = [0.0; STENCIL];
+    let mut dw = [0.0; STENCIL];
+    let mut wsum = 0.0;
+    let mut dsum = 0.0;
+    for k in 0..STENCIL {
+        let s = u - (base + k) as f64;
+        w[k] = cubic_weight(s);
+        dw[k] = cubic_weight_deriv(s);
+        wsum += w[k];
+        dsum += dw[k];
+    }
+    let mut out = [0.0; STENCIL];
+    let inv_h = 1.0 / grid.h;
+    if wsum.abs() > 1e-12 {
+        for k in 0..STENCIL {
+            out[k] = (dw[k] * wsum - w[k] * dsum) / (wsum * wsum) * inv_h;
+        }
+    } else {
+        for k in 0..STENCIL {
+            out[k] = dw[k] * inv_h;
+        }
+    }
+    (base, out)
+}
+
+/// Derivative stencil of point `x` on an axis of **any** size: base grid
+/// index, stencil width w ∈ {1, 2, 4}, and the w weight derivatives
+/// d/dx in the first w slots. Cubic axes differentiate the renormalized
+/// Keys stencil; linear axes have slope ±1/h (0 where the stencil is
+/// clamped to the axis ends, matching the piecewise-constant
+/// extrapolation of [`axis_stencil`]); constant axes contribute 0.
+pub fn axis_stencil_deriv(x: f64, grid: &Grid1d) -> (usize, usize, [f64; STENCIL]) {
+    let m = grid.m;
+    if m >= STENCIL {
+        let (base, dw) = cubic_stencil_deriv(x, grid);
+        (base, STENCIL, dw)
+    } else if m >= 2 {
+        let u_raw = (x - grid.min) / grid.h;
+        let u = u_raw.clamp(0.0, (m - 1) as f64);
+        let i = (u.floor() as usize).min(m - 2);
+        let inv_h = if (0.0..=(m - 1) as f64).contains(&u_raw) {
+            1.0 / grid.h
+        } else {
+            0.0 // clamped: interpolant is constant outside the axis
+        };
+        (i, 2, [-inv_h, inv_h, 0.0, 0.0])
+    } else {
+        (0, 1, [0.0; STENCIL])
+    }
 }
 
 /// Stencil of point `x` on an axis of **any** size: returns the base grid
@@ -250,6 +336,55 @@ pub fn tensor_stencil<F: FnMut(usize, f64)>(
     let mut size = 1usize;
     for k in 0..d {
         let (b, wd, ws) = axis_stencil(x[k], &grids[k]);
+        bases[k] = b;
+        widths[k] = wd;
+        wts[k] = ws;
+        size *= wd;
+    }
+    for c in 0..size {
+        let mut flat = 0usize;
+        let mut weight = 1.0;
+        let mut cc = c;
+        for k in (0..d).rev() {
+            let o = cc % widths[k];
+            cc /= widths[k];
+            flat += (bases[k] + o) * strides[k];
+            weight *= wts[k][o];
+        }
+        emit(flat, weight);
+    }
+}
+
+/// Tensor-product **derivative** stencil of the d-dimensional point `x`
+/// with respect to coordinate `axis`: identical support, emission order,
+/// and pair count as [`tensor_stencil`], but the weights are
+/// ∂/∂x_axis of the product weights — the derivative stencil of
+/// [`axis_stencil_deriv`] along `axis` composed with the value stencils
+/// of [`axis_stencil`] on every other dimension. These are the gradient
+/// rows of D-SKI: `(∂W/∂x_axis) u` interpolates ∂f/∂x_axis from the same
+/// grid values `u` the value rows use.
+pub fn tensor_stencil_grad<F: FnMut(usize, f64)>(
+    x: &[f64],
+    axis: usize,
+    grids: &[Grid1d],
+    strides: &[usize],
+    mut emit: F,
+) {
+    let d = grids.len();
+    debug_assert_eq!(x.len(), d);
+    debug_assert_eq!(strides.len(), d);
+    assert!(axis < d, "gradient axis {axis} out of range for d={d}");
+    assert!(d <= MAX_TENSOR_DIM, "tensor stencil supports d <= {MAX_TENSOR_DIM}");
+    let mut bases = [0usize; MAX_TENSOR_DIM];
+    let mut widths = [1usize; MAX_TENSOR_DIM];
+    let mut wts = [[0.0f64; STENCIL]; MAX_TENSOR_DIM];
+    let mut size = 1usize;
+    for k in 0..d {
+        let (b, wd, ws) = if k == axis {
+            axis_stencil_deriv(x[k], &grids[k])
+        } else {
+            axis_stencil(x[k], &grids[k])
+        };
         bases[k] = b;
         widths[k] = wd;
         wts[k] = ws;
@@ -367,6 +502,122 @@ mod tests {
         for (k, (gi, wt)) in got.iter().enumerate() {
             assert_eq!(*gi, base + k);
             assert_eq!(*wt, w[k]);
+        }
+    }
+
+    #[test]
+    fn cubic_stencil_deriv_matches_finite_differences() {
+        let g = Grid1d::fit(-1.0, 1.0, 16).unwrap();
+        let mut rng = Rng::new(7);
+        let eps = 1e-6;
+        for _ in 0..60 {
+            let x = rng.uniform_in(-1.0, 1.0);
+            let (b, dw) = cubic_stencil_deriv(x, &g);
+            let (bp, wp) = cubic_stencil(x + eps, &g);
+            let (bm, wm) = cubic_stencil(x - eps, &g);
+            // Stay within one stencil window (skip the rare base flip).
+            if bp != bm || bp != b {
+                continue;
+            }
+            for k in 0..STENCIL {
+                let fd = (wp[k] - wm[k]) / (2.0 * eps);
+                assert!(
+                    (dw[k] - fd).abs() < 1e-5,
+                    "x={x}: dw[{k}]={} vs fd {fd}",
+                    dw[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn derivative_weights_sum_to_zero() {
+        // d/dx of a partition of unity is identically zero.
+        let mut rng = Rng::new(11);
+        for m in [2usize, 3, 5, 16] {
+            let g = Grid1d::fit_any(0.0, 1.0, m).unwrap();
+            for _ in 0..40 {
+                let x = rng.uniform_in(0.0, 1.0);
+                let (_, wd, dw) = axis_stencil_deriv(x, &g);
+                let sum: f64 = dw[..wd].iter().sum();
+                assert!(sum.abs() < 1e-9, "m={m}: derivative sum {sum}");
+            }
+        }
+        // Constant axes contribute an exactly-zero derivative.
+        let g1 = Grid1d::fit_any(0.0, 1.0, 1).unwrap();
+        let (_, wd, dw) = axis_stencil_deriv(0.3, &g1);
+        assert_eq!(wd, 1);
+        assert_eq!(dw[0], 0.0);
+    }
+
+    #[test]
+    fn derivative_stencil_differentiates_linears_exactly() {
+        // A cubic-convolution interpolant reproduces linear functions, so
+        // its derivative stencil must reproduce their (constant) slope.
+        let g = Grid1d::fit(0.0, 2.0, 20).unwrap();
+        let f: Vec<f64> = g.points().iter().map(|&u| 3.0 * u - 1.0).collect();
+        let mut rng = Rng::new(5);
+        for _ in 0..40 {
+            let x = rng.uniform_in(0.0, 2.0);
+            let (b, dw) = cubic_stencil_deriv(x, &g);
+            let got: f64 = (0..STENCIL).map(|k| dw[k] * f[b + k]).sum();
+            assert!((got - 3.0).abs() < 1e-9, "slope at {x}: {got}");
+        }
+        // Linear axes too (slope ±1/h inside the axis).
+        let g3 = Grid1d::fit_any(0.0, 2.0, 3).unwrap();
+        let f3: Vec<f64> = g3.points().iter().map(|&u| 3.0 * u - 1.0).collect();
+        for _ in 0..20 {
+            let x = rng.uniform_in(0.0, 2.0);
+            let (b, wd, dw) = axis_stencil_deriv(x, &g3);
+            let got: f64 = (0..wd).map(|k| dw[k] * f3[b + k]).sum();
+            assert!((got - 3.0).abs() < 1e-9, "linear-axis slope at {x}: {got}");
+        }
+    }
+
+    #[test]
+    fn tensor_stencil_grad_matches_finite_differences_2d() {
+        let gx = Grid1d::fit(-1.0, 1.0, 12).unwrap();
+        let gy = Grid1d::fit(0.0, 2.0, 9).unwrap();
+        let grids = [gx, gy];
+        let strides = tensor_strides(&[12, 9]);
+        // A smooth surrogate on the grid: interpolate it and compare the
+        // gradient stencil against central differences of the value
+        // stencil applied to the same grid vector.
+        let total = 12 * 9;
+        let u: Vec<f64> = (0..total)
+            .map(|i| {
+                let (ix, iy) = (i / 9, i % 9);
+                ((ix as f64) * 0.3).sin() + ((iy as f64) * 0.2).cos()
+            })
+            .collect();
+        let interp = |x: &[f64]| {
+            let mut acc = 0.0;
+            tensor_stencil(x, &grids, &strides, |flat, w| acc += w * u[flat]);
+            acc
+        };
+        let eps = 1e-6;
+        let mut rng = Rng::new(21);
+        for _ in 0..25 {
+            let x = [rng.uniform_in(-0.9, 0.9), rng.uniform_in(0.1, 1.9)];
+            for axis in 0..2 {
+                let mut got = 0.0;
+                let mut count = 0usize;
+                tensor_stencil_grad(&x, axis, &grids, &strides, |flat, w| {
+                    assert!(flat < total);
+                    got += w * u[flat];
+                    count += 1;
+                });
+                assert_eq!(count, STENCIL * STENCIL);
+                let mut xp = x;
+                let mut xm = x;
+                xp[axis] += eps;
+                xm[axis] -= eps;
+                let fd = (interp(&xp) - interp(&xm)) / (2.0 * eps);
+                assert!(
+                    (got - fd).abs() < 1e-4,
+                    "axis {axis} at {x:?}: {got} vs fd {fd}"
+                );
+            }
         }
     }
 

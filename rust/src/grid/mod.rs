@@ -32,8 +32,9 @@ pub mod rectilinear;
 pub mod sparse;
 
 pub use axis::{
-    axis_stencil, axis_width, cubic_stencil, tensor_stencil, tensor_stencil_size,
-    tensor_strides, Grid1d, MAX_TENSOR_DIM, MIN_FIT_POINTS, STENCIL,
+    axis_stencil, axis_stencil_deriv, axis_width, cubic_stencil, cubic_stencil_deriv,
+    tensor_stencil, tensor_stencil_grad, tensor_stencil_size, tensor_strides, Grid1d,
+    MAX_TENSOR_DIM, MIN_FIT_POINTS, STENCIL,
 };
 pub use rectilinear::RectilinearGrid;
 pub use sparse::{combination_terms, sparse_axis_points, MAX_SPARSE_TERMS, SparseGrid};

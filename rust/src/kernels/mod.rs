@@ -10,6 +10,6 @@ pub mod product;
 pub mod stationary;
 pub mod task;
 
-pub use product::ProductKernel;
+pub use product::{deriv_layout, ProductKernel};
 pub use stationary::Stationary1d;
 pub use task::TaskKernel;

@@ -4,8 +4,30 @@
 //! about. With all factors RBF and a shared lengthscale this *is* the
 //! d-dimensional RBF kernel; with per-dimension lengthscales it is ARD.
 
-use super::stationary::Stationary1d;
+use super::stationary::{KernelFamily, Stationary1d};
 use crate::linalg::Matrix;
+
+/// Enumerate the interleaved derivative-extended row layout: for each
+/// point, one value row, followed — when its `has_grad` flag is set — by
+/// `d` gradient rows (axis 0..d). Returns `(point index, None)` for value
+/// rows and `(point index, Some(axis))` for gradient rows. This is the
+/// row order D-SKI uses everywhere: the extended interpolation operator
+/// ([`crate::operators::KroneckerSkiOp::with_grids_grad`]), the dense
+/// derivative Grams below, and the streamed `(y, ∇y)` target vectors.
+pub fn deriv_layout(has_grad: &[bool], d: usize) -> Vec<(usize, Option<usize>)> {
+    let mut rows = Vec::with_capacity(
+        has_grad.len() + d * has_grad.iter().filter(|&&g| g).count(),
+    );
+    for (i, &g) in has_grad.iter().enumerate() {
+        rows.push((i, None));
+        if g {
+            for a in 0..d {
+                rows.push((i, Some(a)));
+            }
+        }
+    }
+    rows
+}
 
 /// Product of 1-D stationary kernels with a single output scale σ².
 #[derive(Clone, Debug)]
@@ -47,6 +69,78 @@ impl ProductKernel {
             p *= k.eval(xi, yi);
         }
         p
+    }
+
+    /// Derivative covariances of the RBF product kernel (D-SKI, Eriksson
+    /// et al. 2018). With `r_a = x_a − y_a` and per-factor lengthscales
+    /// `ℓ_a`:
+    ///
+    /// - `(None, None)`      → `k(x, y)`
+    /// - `(Some(a), None)`   → `∂k/∂x_a = −(r_a/ℓ_a²)·k`
+    /// - `(None, Some(b))`   → `∂k/∂y_b = +(r_b/ℓ_b²)·k`
+    /// - `(Some(a), Some(b))`→ `∂²k/∂x_a∂y_b
+    ///                          = (δ_ab/ℓ_a² − r_a r_b/(ℓ_a²ℓ_b²))·k`
+    ///
+    /// Only RBF factors are differentiable here — Matérn-1/2 kernels are
+    /// not differentiable at zero and the higher Matérns need different
+    /// algebra; gradient observations are an RBF-only feature.
+    pub fn eval_deriv(
+        &self,
+        x: &[f64],
+        y: &[f64],
+        dx: Option<usize>,
+        dy: Option<usize>,
+    ) -> f64 {
+        debug_assert!(
+            self.factors.iter().all(|f| f.family == KernelFamily::Rbf),
+            "derivative covariances are defined for RBF factors only"
+        );
+        let k = self.eval(x, y);
+        let scaled = |a: usize| -> f64 {
+            let ell2 = self.factors[a].lengthscale * self.factors[a].lengthscale;
+            (x[a] - y[a]) / ell2
+        };
+        match (dx, dy) {
+            (None, None) => k,
+            (Some(a), None) => -scaled(a) * k,
+            (None, Some(b)) => scaled(b) * k,
+            (Some(a), Some(b)) => {
+                let ell_a2 =
+                    self.factors[a].lengthscale * self.factors[a].lengthscale;
+                let delta = if a == b { 1.0 / ell_a2 } else { 0.0 };
+                (delta - scaled(a) * scaled(b)) * k
+            }
+        }
+    }
+
+    /// Dense derivative-extended Gram between two point sets, rows
+    /// differentiating the first argument and columns the second, in the
+    /// interleaved [`deriv_layout`] row order on both sides. O(N·M·d) —
+    /// D-SKI oracles and exact-variance factors only.
+    pub fn gram_deriv(
+        &self,
+        xs: &Matrix,
+        xs_grad: &[bool],
+        ys: &Matrix,
+        ys_grad: &[bool],
+    ) -> Matrix {
+        assert_eq!(xs.cols, self.dim());
+        assert_eq!(ys.cols, self.dim());
+        assert_eq!(xs.rows, xs_grad.len());
+        assert_eq!(ys.rows, ys_grad.len());
+        let rows = deriv_layout(xs_grad, self.dim());
+        let cols = deriv_layout(ys_grad, self.dim());
+        Matrix::from_fn(rows.len(), cols.len(), |i, j| {
+            let (pi, da) = rows[i];
+            let (pj, db) = cols[j];
+            self.eval_deriv(xs.row(pi), ys.row(pj), da, db)
+        })
+    }
+
+    /// Symmetric derivative-extended training Gram (`gram_deriv` of a
+    /// point set against itself).
+    pub fn gram_deriv_sym(&self, xs: &Matrix, has_grad: &[bool]) -> Matrix {
+        self.gram_deriv(xs, has_grad, xs, has_grad)
     }
 
     /// Dense Gram matrix between two point sets (rows of `xs`, `ys`);
@@ -126,6 +220,89 @@ mod tests {
         // cross-gram agrees
         let g2 = k.gram(&xs, &xs);
         assert!(g.max_abs_diff(&g2) < 1e-14);
+    }
+
+    #[test]
+    fn eval_deriv_matches_finite_differences() {
+        let k = ProductKernel::ard(&[0.8, 1.3, 0.6], 1.7);
+        let x = [0.3, -0.4, 0.9];
+        let y = [-0.2, 0.5, 0.1];
+        let h = 1e-5;
+        let perturb = |p: &[f64; 3], a: usize, eps: f64| -> [f64; 3] {
+            let mut q = *p;
+            q[a] += eps;
+            q
+        };
+        for a in 0..3 {
+            // ∂k/∂x_a by central difference.
+            let fd = (k.eval(&perturb(&x, a, h), &y)
+                - k.eval(&perturb(&x, a, -h), &y))
+                / (2.0 * h);
+            let an = k.eval_deriv(&x, &y, Some(a), None);
+            assert!((fd - an).abs() < 1e-8, "dx axis {a}: {fd} vs {an}");
+            // ∂k/∂y_a by central difference.
+            let fd = (k.eval(&x, &perturb(&y, a, h))
+                - k.eval(&x, &perturb(&y, a, -h)))
+                / (2.0 * h);
+            let an = k.eval_deriv(&x, &y, None, Some(a));
+            assert!((fd - an).abs() < 1e-8, "dy axis {a}: {fd} vs {an}");
+            for b in 0..3 {
+                // ∂²k/∂x_a∂y_b by nested central differences.
+                let g = |xp: &[f64; 3]| {
+                    (k.eval(xp, &perturb(&y, b, h))
+                        - k.eval(xp, &perturb(&y, b, -h)))
+                        / (2.0 * h)
+                };
+                let fd = (g(&perturb(&x, a, h)) - g(&perturb(&x, a, -h)))
+                    / (2.0 * h);
+                let an = k.eval_deriv(&x, &y, Some(a), Some(b));
+                assert!(
+                    (fd - an).abs() < 1e-6,
+                    "dxdy axes ({a},{b}): {fd} vs {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gram_deriv_is_symmetric_and_embeds_plain_gram() {
+        let k = ProductKernel::ard(&[0.9, 1.1], 2.0);
+        let xs = Matrix::from_vec(3, 2, vec![0., 0., 0.7, -0.3, -0.5, 0.4]);
+        let mask = [true, false, true];
+        let g = k.gram_deriv_sym(&xs, &mask);
+        let n_ext = 3 + 2 * 2;
+        assert_eq!(g.rows, n_ext);
+        assert_eq!(g.cols, n_ext);
+        for i in 0..n_ext {
+            for j in 0..n_ext {
+                assert!(
+                    (g.get(i, j) - g.get(j, i)).abs() < 1e-13,
+                    "asymmetry at ({i},{j})"
+                );
+            }
+        }
+        // Value rows sit at layout offsets 0, 3, 4 and reproduce the
+        // plain Gram exactly.
+        let plain = k.gram_sym(&xs);
+        let value_rows = [0usize, 3, 4];
+        for (pi, &ri) in value_rows.iter().enumerate() {
+            for (pj, &rj) in value_rows.iter().enumerate() {
+                assert_eq!(g.get(ri, rj), plain.get(pi, pj));
+            }
+        }
+        // Layout enumerates value-then-gradient rows per flagged point.
+        assert_eq!(
+            deriv_layout(&mask, 2),
+            vec![
+                (0, None),
+                (0, Some(0)),
+                (0, Some(1)),
+                (1, None),
+                (2, None),
+                (2, Some(0)),
+                (2, Some(1)),
+            ]
+        );
     }
 
     #[test]

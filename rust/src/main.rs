@@ -20,7 +20,7 @@
 
 use skip_gp::coordinator::{print_summary, Scheduler};
 use skip_gp::data::{dataset_by_name, generate, DATASETS};
-use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant, SolveSpace};
+use skip_gp::gp::{GpHypers, MvmGp, MvmGpConfig, MvmVariant};
 use skip_gp::grid::GridSpec;
 use skip_gp::harness::{fig2, fig3, fig4, mtgp_speed, table1, table2};
 use skip_gp::runtime::PjrtBackend;
@@ -30,7 +30,7 @@ use skip_gp::serve::{
     RegistryConfig, ServeEngine, Server, ServerConfig, ShardedModel, SnapshotConfig,
     VarianceMode,
 };
-use skip_gp::solvers::{Precision, PrecondSpec};
+use skip_gp::solvers::SolverPolicy;
 use skip_gp::stream::{IncrementalState, StreamConfig};
 use skip_gp::util::{mae, Timer};
 use skip_gp::{Error, Result};
@@ -110,32 +110,16 @@ fn parse_grid_spec(s: &str) -> Result<GridSpec> {
     Ok(GridSpec::uniform(m))
 }
 
-/// Parse a `--space` value into a [`SolveSpace`]: `auto` (default)
-/// solves in grid space when the operator admits it, `data` forces the
-/// n-space CG path, `grid` forces grid-space normal equations (errors if
-/// the model cannot provide them).
-fn parse_solve_space(opts: &Opts) -> Result<SolveSpace> {
-    match opts.get_str("space").as_deref() {
-        None | Some("auto") => Ok(SolveSpace::Auto),
-        Some("data") => Ok(SolveSpace::Data),
-        Some("grid") => Ok(SolveSpace::Grid),
-        Some(v) => Err(Error::Config(format!(
-            "bad value for --space: '{v}' (auto|data|grid)"
-        ))),
-    }
-}
-
-/// Parse a `--precision` value into a [`Precision`]: `f64` (default)
-/// runs classic double-precision solves, `mixed` stores the hot
-/// operators in f32 under an f64 iterative-refinement loop that meets
-/// the same residual certificate.
-fn parse_precision(opts: &Opts) -> Result<Precision> {
-    match opts.get_str("precision") {
-        None => Ok(Precision::F64),
-        Some(v) => Precision::parse(&v).ok_or_else(|| {
-            Error::Config(format!("bad value for --precision: '{v}' (f64|mixed)"))
-        }),
-    }
+/// Parse the `--precond` / `--space` / `--precision` flags into the
+/// shared [`SolverPolicy`] — the one solver-flag parser every
+/// subcommand (`train`, `snapshot`, `serve --live`) routes through, so
+/// grammar and error wordings cannot drift between entrypoints.
+fn parse_policy(opts: &Opts) -> Result<SolverPolicy> {
+    SolverPolicy::from_cli(
+        opts.get_str("precond").as_deref(),
+        opts.get_str("space").as_deref(),
+        opts.get_str("precision").as_deref(),
+    )
 }
 
 fn usage() -> ! {
@@ -171,7 +155,9 @@ USAGE:
                  (K shards per model; add --live for a single-shard live
                   model. Wire verbs grow `model <id>` prefixes + `models`.)
   skip-gp observe [--addr HOST:PORT] [--file F | --point \"x1 … xd y\"]
-                 (default: reads `x1 … xd y` lines from stdin)
+                 (default: reads `[task] x1 … xd y [grad g1 … gd]` lines
+                  from stdin — the task id when the server is multi-task,
+                  the grad clause for derivative observations, D-SKI)
   skip-gp artifacts [--dir D]
   skip-gp list"
     );
@@ -259,8 +245,7 @@ fn cmd_train(rest: &[String]) -> Result<()> {
     let steps: usize = opts.get("steps", 10)?;
     let rank: usize = opts.get("rank", 15)?;
     let grid = parse_grid_spec(&opts.get_str("grid").unwrap_or_else(|| "100".into()))?;
-    let precond =
-        PrecondSpec::parse(&opts.get_str("precond").unwrap_or_else(|| "none".into()))?;
+    let policy = parse_policy(&opts)?;
     let variant = match opts.get_str("variant").as_deref() {
         None | Some("skip") => MvmVariant::Skip,
         Some("kiss") => MvmVariant::Kiss,
@@ -274,19 +259,9 @@ fn cmd_train(rest: &[String]) -> Result<()> {
         data.n(),
         data.d(),
         grid.describe(),
-        precond.describe()
+        policy.precond.describe()
     );
-    let solve_space = parse_solve_space(&opts)?;
-    let precision = parse_precision(&opts)?;
-    let mut cfg = MvmGpConfig {
-        variant,
-        grid,
-        rank,
-        solve_space,
-        precision,
-        ..Default::default()
-    };
-    cfg.cg.precond = precond;
+    let cfg = MvmGpConfig { variant, grid, rank, policy, ..Default::default() };
     let mut gp = MvmGp::new(
         data.xtrain.clone(),
         data.ytrain.clone(),
@@ -342,8 +317,7 @@ fn cmd_snapshot(rest: &[String]) -> Result<()> {
         Some("none") => VarianceMode::None,
         Some(v) => return Err(Error::Config(format!("unknown variance mode '{v}'"))),
     };
-    let precond =
-        PrecondSpec::parse(&opts.get_str("precond").unwrap_or_else(|| "none".into()))?;
+    let policy = parse_policy(&opts)?;
     let data = generate(spec, scale);
     println!(
         "training {} GP on {} (n={}, d={}, grid {}, steps={steps}, precond {})",
@@ -352,19 +326,9 @@ fn cmd_snapshot(rest: &[String]) -> Result<()> {
         data.n(),
         data.d(),
         grid.describe(),
-        precond.describe()
+        policy.precond.describe()
     );
-    let solve_space = parse_solve_space(&opts)?;
-    let precision = parse_precision(&opts)?;
-    let mut cfg = MvmGpConfig {
-        variant,
-        grid,
-        rank,
-        solve_space,
-        precision,
-        ..Default::default()
-    };
-    cfg.cg.precond = precond;
+    let cfg = MvmGpConfig { variant, grid, rank, policy, ..Default::default() };
     let mut gp = MvmGp::new(
         data.xtrain.clone(),
         data.ytrain.clone(),
@@ -389,7 +353,7 @@ fn cmd_snapshot(rest: &[String]) -> Result<()> {
         &SnapshotConfig {
             grid: serve_grid,
             variance,
-            precond: Some(precond),
+            policy: Some(policy),
             ..Default::default()
         },
     )?;
@@ -420,8 +384,7 @@ fn build_live_state(opts: &Opts) -> Result<IncrementalState> {
     let scale: f64 = opts.get("scale", 0.05)?;
     let steps: usize = opts.get("steps", 10)?;
     let grid = parse_grid_spec(&opts.get_str("grid").unwrap_or_else(|| "32".into()))?;
-    let precond =
-        PrecondSpec::parse(&opts.get_str("precond").unwrap_or_else(|| "none".into()))?;
+    let policy = parse_policy(opts)?;
     let var_rank: usize = opts.get("var-rank", 64)?;
     let variance = match opts.get_str("var").as_deref() {
         None | Some("lanczos") => VarianceMode::Lanczos(var_rank),
@@ -430,16 +393,12 @@ fn build_live_state(opts: &Opts) -> Result<IncrementalState> {
         Some(v) => return Err(Error::Config(format!("unknown variance mode '{v}'"))),
     };
     let data = generate(spec, scale);
-    let solve_space = parse_solve_space(opts)?;
-    let precision = parse_precision(opts)?;
-    let mut cfg = MvmGpConfig {
+    let cfg = MvmGpConfig {
         variant: MvmVariant::Kiss,
         grid,
-        solve_space,
-        precision,
+        policy,
         ..Default::default()
     };
-    cfg.cg.precond = precond;
     let mut gp = MvmGp::new(
         data.xtrain.clone(),
         data.ytrain.clone(),
@@ -456,8 +415,7 @@ fn build_live_state(opts: &Opts) -> Result<IncrementalState> {
         error_z: opts.get("error-z", 8.0)?,
         log_capacity: opts.get("log-capacity", 1024)?,
         variance,
-        space: solve_space,
-        precision,
+        policy,
         ..Default::default()
     };
     let mut live = IncrementalState::from_mvm(&gp, scfg)?;
@@ -484,7 +442,7 @@ fn build_live_state(opts: &Opts) -> Result<IncrementalState> {
         live.n(),
         live.dim(),
         gp.cfg.grid.describe(),
-        precond.describe()
+        policy.precond.describe()
     );
     Ok(live)
 }
@@ -541,8 +499,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         },
     )?;
     println!(
-        "serving on {} (line protocol: `predict x1 … xd`, `observe x1 … xd y`, \
-         `stats`, `quit`)",
+        "serving on {} (line protocol: `predict x1 … xd`, `observe x1 … xd y \
+         [grad g1 … gd]`, `stats`, `quit` — see docs/PROTOCOL.md)",
         server.addr()
     );
     // Foreground serving loop: periodic stats (and, for live engines,
@@ -680,9 +638,31 @@ fn cmd_serve_fleet(opts: &Opts, k: usize) -> Result<()> {
     }
 }
 
+/// Ask the server a single-number question (`dim` / `tasks`) and parse
+/// the `ok <n>` answer.
+fn wire_query(
+    writer: &mut impl std::io::Write,
+    reader: &mut impl std::io::BufRead,
+    verb: &str,
+) -> Result<usize> {
+    writeln!(writer, "{verb}")?;
+    let mut resp = String::new();
+    if reader.read_line(&mut resp)? == 0 {
+        return Err(Error::Config("server closed the connection".into()));
+    }
+    let r = resp.trim();
+    r.strip_prefix("ok ")
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .ok_or_else(|| Error::Config(format!("unexpected `{verb}` response: {r}")))
+}
+
 /// Stream observations from stdin / a file / a single `--point` to a
-/// running live server, printing each ack.
+/// running live server, printing each ack. Input lines are
+/// `[task] x1 … xd y [grad g1 … gd]` — validated and formatted through
+/// the shared wire parser ([`skip_gp::serve::protocol`]), so a malformed
+/// line is reported locally without costing a round-trip.
 fn cmd_observe(rest: &[String]) -> Result<()> {
+    use skip_gp::serve::protocol::{self, ModelShape, Request};
     use std::io::{BufRead, BufReader, Write};
     use std::net::TcpStream;
 
@@ -693,11 +673,20 @@ fn cmd_observe(rest: &[String]) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
 
+    // Handshake: learn the model's shape so lines parse the same way
+    // they will on the server (task-led forms on multi-task models).
+    let dim = wire_query(&mut writer, &mut reader, "dim")?;
+    let num_tasks = wire_query(&mut writer, &mut reader, "tasks")?;
+    let shape = ModelShape { dim, num_tasks, multitask: num_tasks > 1 };
+
     let input: Box<dyn BufRead> = match (opts.get_str("file"), opts.get_str("point")) {
         (Some(f), _) => Box::new(BufReader::new(std::fs::File::open(f)?)),
         (None, Some(p)) => Box::new(std::io::Cursor::new(p.into_bytes())),
         (None, None) => {
-            eprintln!("reading `x1 … xd y` lines from stdin (^D to finish)");
+            eprintln!(
+                "reading `[task] x1 … x{dim} y [grad g1 … g{dim}]` lines \
+                 from stdin (^D to finish)"
+            );
             Box::new(BufReader::new(std::io::stdin()))
         }
     };
@@ -710,7 +699,15 @@ fn cmd_observe(rest: &[String]) -> Result<()> {
         if obs.is_empty() || obs.starts_with('#') {
             continue;
         }
-        writeln!(writer, "observe {obs}")?;
+        let req = match protocol::parse_observe(obs, &shape) {
+            Ok(o) => Request::Observe(o),
+            Err(msg) => {
+                println!("err {msg}");
+                errs += 1;
+                continue;
+            }
+        };
+        writeln!(writer, "{}", protocol::format_request(&req, shape.multitask))?;
         sent += 1;
         resp.clear();
         if reader.read_line(&mut resp)? == 0 {

@@ -12,7 +12,8 @@
 //! keeps only the 1-D `W` matrix the [`super::ski::SkiOp`] pipeline uses.
 
 pub use crate::grid::{
-    cubic_stencil, tensor_stencil, tensor_strides, Grid1d, MAX_TENSOR_DIM, STENCIL,
+    cubic_stencil, cubic_stencil_deriv, tensor_stencil, tensor_strides, Grid1d,
+    MAX_TENSOR_DIM, STENCIL,
 };
 use crate::linalg::Matrix;
 
@@ -39,6 +40,33 @@ impl InterpMatrix {
             let (base, row_w) = cubic_stencil(x, grid);
             for (k, &rw) in row_w.iter().enumerate() {
                 idx.push((base + k) as u32);
+                w.push(rw);
+            }
+        }
+        InterpMatrix { n, m, idx, w }
+    }
+
+    /// D-SKI layout: value **and** derivative rows, interleaved per point
+    /// (row 2i is the value stencil of `xs[i]`, row 2i+1 its derivative
+    /// stencil `∂w/∂x` from [`cubic_stencil_deriv`]). The 2n × m result is
+    /// an ordinary [`InterpMatrix`] — every matvec/matmat path is
+    /// row-generic, so gradient observations ride the same machinery.
+    pub fn new_with_grad(xs: &[f64], grid: &Grid1d) -> Self {
+        assert!(grid.m >= STENCIL, "InterpMatrix needs a cubic axis (m >= {STENCIL})");
+        let n = 2 * xs.len();
+        let m = grid.m;
+        let mut idx = Vec::with_capacity(n * STENCIL);
+        let mut w = Vec::with_capacity(n * STENCIL);
+        for &x in xs {
+            let (base, row_w) = cubic_stencil(x, grid);
+            for (k, &rw) in row_w.iter().enumerate() {
+                idx.push((base + k) as u32);
+                w.push(rw);
+            }
+            let (dbase, row_dw) = cubic_stencil_deriv(x, grid);
+            debug_assert_eq!(dbase, base);
+            for (k, &rw) in row_dw.iter().enumerate() {
+                idx.push((dbase + k) as u32);
                 w.push(rw);
             }
         }
@@ -290,6 +318,25 @@ mod tests {
         let v32: Vec<f32> = v.iter().map(|&x| x as f32).collect();
         for (a, b) in w.t_matvec_f32_with(&w32, &v32).iter().zip(w.t_matvec(&v)) {
             assert!((*a as f64 - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn grad_rows_differentiate_the_interpolant() {
+        // Row 2i+1 of the D-SKI matrix applied to grid values must equal
+        // d/dx of the row-2i interpolant: check against a quadratic, for
+        // which cubic convolution is exact (value AND derivative).
+        let g = Grid1d::fit(0.0, 1.0, 32).unwrap();
+        let xs: Vec<f64> = (1..20).map(|i| 0.05 * i as f64).collect();
+        let w = InterpMatrix::new_with_grad(&xs, &g);
+        assert_eq!(w.n, 2 * xs.len());
+        let f: Vec<f64> = g.points().iter().map(|&u| 2.0 * u * u - u + 0.3).collect();
+        let got = w.matvec(&f);
+        for (i, &x) in xs.iter().enumerate() {
+            let val = 2.0 * x * x - x + 0.3;
+            let slope = 4.0 * x - 1.0;
+            assert!((got[2 * i] - val).abs() < 1e-9, "value at {x}");
+            assert!((got[2 * i + 1] - slope).abs() < 1e-8, "slope at {x}: {}", got[2 * i + 1]);
         }
     }
 

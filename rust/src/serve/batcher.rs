@@ -11,7 +11,10 @@
 //!
 //! - **observes first** — every observation in the block rides **one**
 //!   [`ServeEngine::observe_block`] call (one extended α re-solve for the
-//!   whole block, not one per point);
+//!   whole block, not one per point); derivative observations (D-SKI,
+//!   `grad` payloads) are split into their own
+//!   [`ServeEngine::observe_block_grads`] block so plain ingest stays
+//!   bitwise untouched;
 //! - **predicts second** — the remaining queries go through one
 //!   [`ServeEngine::predict`] call and therefore see every observation
 //!   coalesced into the same block.
@@ -68,6 +71,9 @@ enum Request {
         task: usize,
         x: Vec<f64>,
         y: f64,
+        /// Optional gradient observation ∇y (D-SKI); gradient-carrying
+        /// requests ride their own ingest block.
+        grad: Option<Vec<f64>>,
         enqueued: Instant,
         resp: Sender<ObserveResponse>,
     },
@@ -169,6 +175,35 @@ impl BatchHandle {
             task,
             x: x.to_vec(),
             y,
+            grad: None,
+            enqueued: Instant::now(),
+            resp: tx,
+        };
+        self.depth.fetch_add(1, Ordering::Relaxed);
+        if self.tx.send(req).is_err() {
+            self.depth.fetch_sub(1, Ordering::Relaxed);
+        }
+        rx
+    }
+
+    /// Enqueue a derivative observation `(x, y, ∇y)` (D-SKI). Gradient
+    /// requests coalesce with each other into one extended-row ingest;
+    /// single-task only — the wire parser rejects `grad` on multi-task
+    /// models before a request reaches the batcher.
+    pub fn submit_observe_grad(
+        &self,
+        x: &[f64],
+        y: f64,
+        grad: &[f64],
+    ) -> Receiver<ObserveResponse> {
+        assert_eq!(x.len(), self.dim, "observation dimensionality mismatch");
+        assert_eq!(grad.len(), self.dim, "gradient dimensionality mismatch");
+        let (tx, rx) = channel();
+        let req = Request::Observe {
+            task: 0,
+            x: x.to_vec(),
+            y,
+            grad: Some(grad.to_vec()),
             enqueued: Instant::now(),
             resp: tx,
         };
@@ -189,6 +224,13 @@ impl BatchHandle {
     /// Submit a task-addressed observation and block for the ack.
     pub fn observe_task(&self, task: usize, x: &[f64], y: f64) -> ObserveResponse {
         self.submit_observe_task(task, x, y)
+            .recv()
+            .expect("request batcher shut down while an observation was in flight")
+    }
+
+    /// Submit a derivative observation and block for the ack.
+    pub fn observe_grad(&self, x: &[f64], y: f64, grad: &[f64]) -> ObserveResponse {
+        self.submit_observe_grad(x, y, grad)
             .recv()
             .expect("request batcher shut down while an observation was in flight")
     }
@@ -291,10 +333,17 @@ impl RequestBatcher {
             // request); the engine — and therefore the model — is fixed
             // per batcher, so blocks never mix models.
             let mut observes = Vec::new();
+            let mut grad_observes = Vec::new();
             let mut predicts = Vec::new();
             for r in batch {
                 match r {
-                    Request::Observe { task, x, y, enqueued, resp } => {
+                    // Gradient-carrying observations ride their own
+                    // extended-row ingest; plain observations keep the
+                    // legacy block so pre-D-SKI behavior is untouched.
+                    Request::Observe { x, y, grad: Some(g), enqueued, resp, .. } => {
+                        grad_observes.push((x, y, g, enqueued, resp));
+                    }
+                    Request::Observe { task, x, y, grad: None, enqueued, resp } => {
                         observes.push((task, x, y, enqueued, resp));
                     }
                     Request::Predict { task, x, enqueued, resp } => {
@@ -334,6 +383,36 @@ impl RequestBatcher {
                         Err(e) => Err(e.to_string()),
                     };
                     // A dropped receiver (client gone) is not an error.
+                    let _ = resp.send(ObserveResponse {
+                        result,
+                        latency,
+                        batch_size: k,
+                    });
+                }
+                engine.metrics.record_latency_many("stream.ingest", &latencies);
+                engine.metrics.observe("stream.batch_size", k as u64);
+            }
+
+            if !grad_observes.is_empty() {
+                let k = grad_observes.len();
+                let mut xs = Matrix::zeros(k, d);
+                let mut ys = Vec::with_capacity(k);
+                let mut gs = Matrix::zeros(k, d);
+                for (i, (x, y, g, _, _)) in grad_observes.iter().enumerate() {
+                    xs.row_mut(i).copy_from_slice(x);
+                    ys.push(*y);
+                    gs.row_mut(i).copy_from_slice(g);
+                }
+                let acks = engine.observe_block_grads(&xs, &ys, &gs);
+                let done = Instant::now();
+                let mut latencies = Vec::with_capacity(k);
+                for (i, (_, _, _, enqueued, resp)) in grad_observes.into_iter().enumerate() {
+                    let latency = done.saturating_duration_since(enqueued);
+                    latencies.push(latency.as_secs_f64());
+                    let result = match &acks {
+                        Ok(a) => Ok(a[i]),
+                        Err(e) => Err(e.to_string()),
+                    };
                     let _ = resp.send(ObserveResponse {
                         result,
                         latency,

@@ -36,7 +36,9 @@
 //! `KroneckerSkiOp::matmat`.
 
 use crate::gp::GpHypers;
-use crate::grid::{tensor_stencil, tensor_strides, Grid1d, GridSpec, InducingGrid};
+use crate::grid::{
+    tensor_stencil, tensor_stencil_grad, tensor_strides, Grid1d, GridSpec, InducingGrid,
+};
 use crate::kernels::Stationary1d;
 use crate::linalg::{Cholesky, Matrix, SymToeplitz};
 use crate::operators::{kron_toeplitz_matvec, LinearOp};
@@ -235,6 +237,41 @@ impl PredictCache {
         })
     }
 
+    /// Gradient of the predictive mean at one point (D-SKI's query-side
+    /// trick): `∇μ(x*)_a = Σ_t c_t · dwₜ_a(x*)·uₜ` — the *same* grid-side
+    /// mean cache queried through differentiated stencil weights, one
+    /// sparse stencil dot per axis per term. Writes the d components into
+    /// `out`.
+    pub fn predict_grad_one(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.dim());
+        out.fill(0.0);
+        for t in &self.terms {
+            for (a, o) in out.iter_mut().enumerate() {
+                let mut acc = 0.0;
+                tensor_stencil_grad(x, a, &t.axes, &t.strides, |g, w| {
+                    acc += w * t.mean[g];
+                });
+                *o += t.coeff * acc;
+            }
+        }
+    }
+
+    /// Batched predictive-mean gradients (n* × d, row i = ∇μ at query i).
+    pub fn predict_grad(&self, xtest: &Matrix) -> Matrix {
+        assert_eq!(xtest.cols, self.dim(), "query dimensionality mismatch");
+        let d = self.dim();
+        let rows = par_map_range(xtest.rows, 256, |i| {
+            let mut g = vec![0.0; d];
+            self.predict_grad_one(xtest.row(i), &mut g);
+            g
+        });
+        let mut out = Matrix::zeros(xtest.rows, d);
+        for (i, g) in rows.iter().enumerate() {
+            out.row_mut(i).copy_from_slice(g);
+        }
+        out
+    }
+
     /// Batched predictive means for an n*×d block (parallel across row
     /// chunks for large batches; per-row arithmetic is identical to
     /// [`predict_mean_one`](Self::predict_mean_one), so batched and
@@ -360,6 +397,134 @@ pub fn build_task_cache(
         PredictCache::build(xs, &masked_alpha, hypers, grid, masked_s.as_ref())?;
     cache.prior_var = task_prior;
     Ok(cache)
+}
+
+/// Build the serving cache of a **gradient-observation (D-SKI)** model:
+/// the cached solve `alpha` is row-aligned with the extended operator
+/// `W_ext` — for each training point, one value row, then (when its
+/// `has_grad` flag is set) d gradient rows, the
+/// [`crate::kernels::deriv_layout`] order. The mean cache becomes
+/// `u = σ_f² (⊗K)(W_extᵀ α)`: value rows scatter through plain stencils,
+/// gradient rows through differentiated ones, and the *query* side is
+/// untouched — `μ(x*) = w(x*)·u` and `∇μ(x*) = dw(x*)·u` read the same
+/// buffer. The optional `s` is an N × r inverse-root factor of the
+/// extended system (`K̂_ext⁻¹ ≈ S Sᵀ`), scattered the same way into the
+/// variance factor `R = σ_f² (⊗K)(W_extᵀ S)`.
+///
+/// Gradient models are single-term dense-grid only (the combination
+/// technique would need per-term differentiated stencils on coarse axes
+/// where the derivative error dominates), so this builds exactly one
+/// [`TermCache`] on `axes`.
+pub fn build_grad_cache(
+    xs: &Matrix,
+    has_grad: &[bool],
+    alpha: &[f64],
+    hypers: &GpHypers,
+    spec: GridSpec,
+    axes: Vec<Grid1d>,
+    s: Option<&Matrix>,
+) -> Result<PredictCache> {
+    assert_eq!(xs.rows, has_grad.len());
+    assert_eq!(xs.cols, axes.len());
+    let d = axes.len();
+    let n_rows =
+        xs.rows + d * has_grad.iter().filter(|&&g| g).count();
+    if alpha.len() != n_rows {
+        return Err(Error::DimMismatch {
+            context: "gradient cache α rows",
+            expected: n_rows,
+            got: alpha.len(),
+        });
+    }
+    if let Some(s) = s {
+        if s.rows != n_rows {
+            return Err(Error::DimMismatch {
+                context: "gradient cache inverse-root factor rows",
+                expected: n_rows,
+                got: s.rows,
+            });
+        }
+    }
+    let dims: Vec<usize> = axes.iter().map(|g| g.m).collect();
+    let strides = tensor_strides(&dims);
+    let total: usize = dims.iter().product();
+    let kern = Stationary1d::rbf(hypers.ell());
+    let factors: Vec<SymToeplitz> = axes
+        .iter()
+        .map(|g| SymToeplitz::new(kern.toeplitz_column(g.m, g.h)))
+        .collect();
+
+    // Mean cache: scatter W_extᵀα, walking the interleaved row layout.
+    let mut wta = vec![0.0; total];
+    let mut row = 0usize;
+    for i in 0..xs.rows {
+        let a = alpha[row];
+        tensor_stencil(xs.row(i), &axes, &strides, |g, w| {
+            wta[g] += w * a;
+        });
+        row += 1;
+        if has_grad[i] {
+            for axis in 0..d {
+                let a = alpha[row];
+                tensor_stencil_grad(xs.row(i), axis, &axes, &strides, |g, w| {
+                    wta[g] += w * a;
+                });
+                row += 1;
+            }
+        }
+    }
+    let mean = mean_from_scatter(&wta, &factors, &dims, hypers.sf2());
+
+    // Variance cache: W_extᵀ S scatter (each row decoded once for all r
+    // columns), then the grid apply per column — the extended-row twin of
+    // `build_term`'s variance path.
+    let var_r = match s {
+        None => Matrix::zeros(total, 0),
+        Some(s) => {
+            let r = s.cols;
+            let mut wts = Matrix::zeros(total, r);
+            let mut row = 0usize;
+            let mut scatter = |x: &[f64], axis: Option<usize>, srow: &[f64]| {
+                let fold = |g: usize, w: f64, wts: &mut Matrix| {
+                    let out = wts.row_mut(g);
+                    for (o, &v) in out.iter_mut().zip(srow) {
+                        *o += w * v;
+                    }
+                };
+                match axis {
+                    None => tensor_stencil(x, &axes, &strides, |g, w| {
+                        fold(g, w, &mut wts)
+                    }),
+                    Some(a) => tensor_stencil_grad(x, a, &axes, &strides, |g, w| {
+                        fold(g, w, &mut wts)
+                    }),
+                }
+            };
+            for i in 0..xs.rows {
+                scatter(xs.row(i), None, s.row(row));
+                row += 1;
+                if has_grad[i] {
+                    for axis in 0..d {
+                        scatter(xs.row(i), Some(axis), s.row(row));
+                        row += 1;
+                    }
+                }
+            }
+            let cols = par_map_range(r, 2, |j| {
+                kron_toeplitz_matvec(&factors, &dims, &wts.col(j))
+            });
+            let mut rmat = Matrix::zeros(total, r);
+            for (j, c) in cols.iter().enumerate() {
+                rmat.set_col(j, c);
+            }
+            for v in rmat.data.iter_mut() {
+                *v *= hypers.sf2();
+            }
+            rmat
+        }
+    };
+    let term = TermCache::new(1.0, axes, mean, var_r)?;
+    PredictCache::from_parts(spec, vec![term], hypers.sf2(), hypers.sn2())
 }
 
 /// Scatter `Wᵀ v` (v data-sized) onto one term's grid: one stencil

@@ -57,7 +57,8 @@ use super::registry::ModelRegistry;
 use super::router::ShardedModel;
 use crate::coordinator::Metrics;
 use crate::serve::batcher::{ObserveResponse, PredictResponse};
-use crate::serve::server::{parse_floats, parse_task, wake_addr};
+use crate::serve::protocol::{self, ModelShape, Response, Verb};
+use crate::serve::server::wake_addr;
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::io::{Read, Write};
@@ -149,7 +150,7 @@ impl Shared {
     /// Account a rejection and produce the wire `busy` line.
     fn reject(&self) -> String {
         self.metrics.incr("serve.fleet.rejected", 1);
-        format!("busy {} requests in flight, retry later", self.max_inflight)
+        Response::Busy { limit: self.max_inflight }.format()
     }
 
     fn dec_inflight(&self) {
@@ -232,140 +233,85 @@ enum Status {
     Done,
 }
 
-fn format_predict(r: &PredictResponse) -> String {
-    format!("ok {} {} {:.1} {}", r.mean, r.var, r.latency.as_secs_f64() * 1e6, r.batch_size)
-}
-
-fn format_observe(r: &ObserveResponse) -> String {
-    match &r.result {
-        Err(msg) => format!("err {msg}"),
-        Ok(ack) if ack.duplicate => format!(
-            "ok dup {} {} {:.1} {}",
-            ack.n,
-            ack.pending,
-            r.latency.as_secs_f64() * 1e6,
-            r.batch_size
-        ),
-        Ok(ack) => format!(
-            "ok {} {} {} {:.1} {}",
-            ack.seq,
-            ack.n,
-            ack.pending,
-            r.latency.as_secs_f64() * 1e6,
-            r.batch_size
-        ),
-    }
-}
-
 /// Parse one request line and either queue a `Ready` reply or submit to
-/// a shard (after passing admission control).
+/// a shard (after passing admission control). Classification and body
+/// parsing both live in [`crate::serve::protocol`]; this function only
+/// interleaves them with model resolution (resolution errors precede
+/// parse errors, exactly as before the shared parser existed).
 fn handle_line(line: &str, c: &mut Conn, shared: &Shared) {
-    let trimmed = line.trim();
-    if trimmed.is_empty() {
-        return;
-    }
     // Optional multi-model prefix: `model <id> <verb> …`.
-    let (explicit, rest) = match trimmed.strip_prefix("model ") {
-        Some(body) => {
-            let body = body.trim_start();
-            match body.split_once(|ch: char| ch.is_whitespace()) {
-                Some((id, tail)) => {
-                    (Some(id.to_string()), tail.trim_start().to_string())
-                }
-                None => {
-                    c.push_ready("err usage: model <id> <verb> …".to_string());
-                    return;
-                }
-            }
+    let (explicit, rest) = match protocol::split_model_prefix(line) {
+        Ok(split) => split,
+        Err(msg) => {
+            c.push_ready(Response::Error(msg).format());
+            return;
         }
-        None => (None, trimmed.to_string()),
     };
-    let verb = rest.as_str();
-    match verb {
-        "quit" => c.closing = true,
-        "ping" => c.push_ready("ok pong".to_string()),
-        "models" => {
-            let ids = shared.registry.available();
-            if ids.is_empty() {
-                c.push_ready("ok".to_string());
-            } else {
-                c.push_ready(format!("ok {}", ids.join(" ")));
-            }
+    match protocol::classify(rest, true) {
+        Verb::Empty => {}
+        Verb::Quit => c.closing = true,
+        Verb::Ping => c.push_ready(Response::Pong.format()),
+        Verb::Models => {
+            c.push_ready(Response::Models(shared.registry.available()).format())
         }
-        "stats" => c.push_ready(format!("ok {}", shared.stats_line())),
-        "dim" => match shared.resolve(explicit.as_deref()) {
-            Ok(m) => c.push_ready(format!("ok {}", m.dim())),
-            Err(msg) => c.push_ready(format!("err {msg}")),
+        Verb::Stats => c.push_ready(Response::Stats(shared.stats_line()).format()),
+        Verb::Dim => match shared.resolve(explicit) {
+            Ok(m) => c.push_ready(Response::Dim(m.dim()).format()),
+            Err(msg) => c.push_ready(Response::Error(msg).format()),
         },
-        "tasks" => match shared.resolve(explicit.as_deref()) {
-            Ok(m) => c.push_ready(format!("ok {}", m.num_tasks())),
-            Err(msg) => c.push_ready(format!("err {msg}")),
+        Verb::Tasks => match shared.resolve(explicit) {
+            Ok(m) => c.push_ready(Response::Tasks(m.num_tasks()).format()),
+            Err(msg) => c.push_ready(Response::Error(msg).format()),
         },
-        _ => {
-            if let Some(body) = verb.strip_prefix("observe") {
-                let model = match shared.resolve(explicit.as_deref()) {
-                    Ok(m) => m,
-                    Err(msg) => {
-                        c.push_ready(format!("err {msg}"));
-                        return;
-                    }
-                };
-                let d = model.dim();
-                let (task, body) = if model.is_multitask() {
-                    match parse_task(body, model.num_tasks(), d, true) {
-                        Ok(p) => p,
-                        Err(msg) => {
-                            c.push_ready(format!("err {msg}"));
-                            return;
-                        }
-                    }
-                } else {
-                    (0, body)
-                };
-                match parse_floats(body, d + 1) {
-                    Err(msg) => c.push_ready(format!("err {msg}")),
-                    Ok(vals) if vals.iter().any(|v| !v.is_finite()) => {
-                        c.push_ready("err non-finite observation".to_string());
-                    }
-                    Ok(vals) => {
-                        if !shared.admit() {
-                            c.push_ready(shared.reject());
-                            return;
-                        }
-                        let rx = model.submit_observe_task(task, &vals[..d], vals[d]);
-                        c.pending.push_back(Pending::Observe(rx));
-                    }
-                }
-                return;
-            }
-            let body = verb.strip_prefix("predict").unwrap_or(verb);
-            let model = match shared.resolve(explicit.as_deref()) {
+        Verb::Observe(body) => {
+            let model = match shared.resolve(explicit) {
                 Ok(m) => m,
                 Err(msg) => {
-                    c.push_ready(format!("err {msg}"));
+                    c.push_ready(Response::Error(msg).format());
                     return;
                 }
             };
-            let d = model.dim();
-            let (task, body) = if model.is_multitask() {
-                match parse_task(body, model.num_tasks(), d, false) {
-                    Ok(p) => p,
-                    Err(msg) => {
-                        c.push_ready(format!("err {msg}"));
-                        return;
-                    }
-                }
-            } else {
-                (0, body)
+            let shape = ModelShape {
+                dim: model.dim(),
+                num_tasks: model.num_tasks(),
+                multitask: model.is_multitask(),
             };
-            match parse_floats(body, d) {
-                Err(msg) => c.push_ready(format!("err {msg}")),
-                Ok(xs) => {
+            match protocol::parse_observe(body, &shape) {
+                Err(msg) => c.push_ready(Response::Error(msg).format()),
+                Ok(o) => {
                     if !shared.admit() {
                         c.push_ready(shared.reject());
                         return;
                     }
-                    let rx = model.submit_predict_task(task, &xs);
+                    let rx = match &o.grad {
+                        Some(g) => model.submit_observe_grad(&o.x, o.y, g),
+                        None => model.submit_observe_task(o.task, &o.x, o.y),
+                    };
+                    c.pending.push_back(Pending::Observe(rx));
+                }
+            }
+        }
+        Verb::Predict(body) => {
+            let model = match shared.resolve(explicit) {
+                Ok(m) => m,
+                Err(msg) => {
+                    c.push_ready(Response::Error(msg).format());
+                    return;
+                }
+            };
+            let shape = ModelShape {
+                dim: model.dim(),
+                num_tasks: model.num_tasks(),
+                multitask: model.is_multitask(),
+            };
+            match protocol::parse_predict(body, &shape) {
+                Err(msg) => c.push_ready(Response::Error(msg).format()),
+                Ok(p) => {
+                    if !shared.admit() {
+                        c.push_ready(shared.reject());
+                        return;
+                    }
+                    let rx = model.submit_predict_task(p.task, &p.x);
                     c.pending.push_back(Pending::Predict(rx));
                 }
             }
@@ -388,7 +334,7 @@ fn service_conn(c: &mut Conn, shared: &Shared, draining: bool) -> Status {
             None => Step::Stop,
             Some(Pending::Ready(s)) => Step::Emit { line: std::mem::take(s), dec: false },
             Some(Pending::Predict(rx)) => match rx.try_recv() {
-                Ok(r) => Step::Emit { line: format_predict(&r), dec: true },
+                Ok(r) => Step::Emit { line: Response::Predict(r).format(), dec: true },
                 Err(TryRecvError::Empty) => Step::Stop,
                 Err(TryRecvError::Disconnected) => Step::Emit {
                     line: "err shard unavailable".to_string(),
@@ -396,7 +342,7 @@ fn service_conn(c: &mut Conn, shared: &Shared, draining: bool) -> Status {
                 },
             },
             Some(Pending::Observe(rx)) => match rx.try_recv() {
-                Ok(r) => Step::Emit { line: format_observe(&r), dec: true },
+                Ok(r) => Step::Emit { line: Response::Observe(r).format(), dec: true },
                 Err(TryRecvError::Empty) => Step::Stop,
                 Err(TryRecvError::Disconnected) => Step::Emit {
                     line: "err shard unavailable".to_string(),
@@ -450,7 +396,10 @@ fn service_conn(c: &mut Conn, shared: &Shared, draining: bool) -> Status {
                     }
                 }
                 if c.inbuf.len() > MAX_LINE {
-                    c.push_ready(format!("err request line exceeds {MAX_LINE} bytes"));
+                    c.push_ready(
+                        Response::Error(format!("request line exceeds {MAX_LINE} bytes"))
+                            .format(),
+                    );
                     c.closing = true;
                 }
             }

@@ -321,6 +321,27 @@ impl ShardedModel {
             .expect("shard batcher shut down while an observation was in flight")
     }
 
+    /// Enqueue a derivative observation `(x, y, ∇y)` (D-SKI) — shard 0,
+    /// like every observation (see [`submit_observe`](Self::submit_observe)).
+    pub fn submit_observe_grad(
+        &self,
+        x: &[f64],
+        y: f64,
+        grad: &[f64],
+    ) -> Receiver<ObserveResponse> {
+        let s = &self.shards[0];
+        self.metrics
+            .observe("serve.fleet.queue_depth", s.handle.queue_depth() as u64);
+        s.handle.submit_observe_grad(x, y, grad)
+    }
+
+    /// Submit a derivative observation and block for the ack.
+    pub fn observe_grad(&self, x: &[f64], y: f64, grad: &[f64]) -> ObserveResponse {
+        self.submit_observe_grad(x, y, grad)
+            .recv()
+            .expect("shard batcher shut down while an observation was in flight")
+    }
+
     /// Total points served across shards.
     pub fn served(&self) -> u64 {
         self.shards

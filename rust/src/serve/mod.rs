@@ -16,6 +16,10 @@
 //! - [`batcher`] — coalesces concurrent requests (predictions *and*
 //!   observations, see [`crate::stream`]) into blocks with configurable
 //!   max-batch/max-wait and per-request latency accounting;
+//! - [`protocol`] — the typed wire protocol (`Request`/`Response` plus
+//!   the one parser and formatter, including the D-SKI `grad` clause)
+//!   shared by the TCP server, the fleet reactor, and the
+//!   `skip-gp observe` CLI client — see `docs/PROTOCOL.md`;
 //! - [`server`] — the in-process [`ServeEngine`] (frozen snapshot or
 //!   live incremental model) and a `std::net` TCP line-protocol server
 //!   behind `skip-gp serve` / `skip-gp serve --live`;
@@ -52,6 +56,7 @@
 pub mod batcher;
 pub mod cache;
 pub mod fleet;
+pub mod protocol;
 pub mod server;
 pub mod snapshot;
 
@@ -62,6 +67,9 @@ pub use fleet::{
     FleetConfig, FleetServer, ModelRegistry, RegistryConfig, RoutePolicy, ShardedModel,
 };
 pub use cache::{build_task_cache, PredictCache, TermCache, VarianceMode};
+pub use protocol::{
+    ModelShape, ObserveRequest, PredictRequest, Request, Response, Verb,
+};
 pub use server::{ObserveAck, ServeEngine, Server, ServerConfig};
 pub use snapshot::{
     ModelSnapshot, SnapshotConfig, SnapshotVariant, TaskHead, SNAPSHOT_MIN_VERSION,

@@ -1,0 +1,567 @@
+//! The typed wire protocol: **one** parser and **one** formatter for
+//! every front-end.
+//!
+//! Four entrypoints speak the TCP line protocol — the legacy thread-per-
+//! connection [`Server`](super::server::Server), the bounded fleet
+//! reactor ([`crate::serve::fleet::reactor`]), the request batcher's
+//! in-process callers, and the `skip-gp observe` CLI client. Before this
+//! module each of them re-implemented the grammar with its own
+//! `strip_prefix`/`format!` calls, so verbs and error wordings could
+//! drift between front-ends. Now the grammar lives here once: requests
+//! parse into a typed [`Request`], responses format from a typed
+//! [`Response`], and both front-ends are byte-for-byte identical by
+//! construction (a property test pins this).
+//!
+//! # Grammar
+//!
+//! One request per line, whitespace-separated tokens; one response line
+//! per request. See `docs/PROTOCOL.md` for the human-oriented version.
+//!
+//! ```text
+//! request  = [ "model" <id> ] verb
+//! verb     = "quit" | "ping" | "dim" | "tasks" | "stats" | "models"
+//!          | [ "predict" ] [ <task> ] <x1> … <xd>
+//!          | "observe"    [ <task> ] <x1> … <xd> <y> [ "grad" <g1> … <gd> ]
+//! ```
+//!
+//! - The `model <id>` prefix and the `models` verb exist only on the
+//!   fleet front-end ([`split_model_prefix`], [`classify`] with
+//!   `models_verb = true`); on the legacy server `models` falls through
+//!   to the predict parse and errors, exactly as it always has.
+//! - The `<task>` token is present iff the model is multi-task
+//!   ([`ModelShape::multitask`]); `observe` additionally admits
+//!   `task == num_tasks` (online enrollment).
+//! - The `grad` clause (D-SKI) attaches the observed gradient ∇y to the
+//!   observation; gradient observations are single-task only, because
+//!   the multi-task Hadamard operator has no extended derivative-row
+//!   form (see [`crate::stream`]).
+//!
+//! Responses (`Response::format`):
+//!
+//! ```text
+//! ok pong                                       (ping)
+//! ok <d>                                        (dim / tasks)
+//! ok <stats line>                               (stats)
+//! ok [<id> <id> …]                              (models)
+//! ok <mean> <var> <latency_us> <batch>          (predict)
+//! ok <seq> <n> <pending> <latency_us> <batch>   (observe)
+//! ok dup <n> <pending> <latency_us> <batch>     (duplicate observe)
+//! err <message>
+//! busy <limit> requests in flight, retry later
+//! ```
+//!
+//! Floats are printed with Rust's shortest-round-trip formatting, so
+//! [`format_request`] → [`parse_request`] reproduces every payload
+//! bitwise (the round-trip property test in `rust/tests/protocol_props.rs`).
+
+use super::batcher::{ObserveResponse, PredictResponse};
+
+/// What the parser needs to know about the model a request addresses:
+/// input dimensionality, task count, and whether the wire form is
+/// task-led. Build it per request — online enrollment grows
+/// `num_tasks` mid-serve.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelShape {
+    /// Input dimensionality d.
+    pub dim: usize,
+    /// Tasks the model serves (1 for single-task models).
+    pub num_tasks: usize,
+    /// True iff requests must lead with a task id.
+    pub multitask: bool,
+}
+
+impl ModelShape {
+    /// The shape of a plain single-task model.
+    pub fn single(dim: usize) -> Self {
+        ModelShape { dim, num_tasks: 1, multitask: false }
+    }
+}
+
+/// A parsed `predict` request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PredictRequest {
+    /// Task the query addresses (0 for single-task models).
+    pub task: usize,
+    pub x: Vec<f64>,
+}
+
+/// A parsed `observe` request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObserveRequest {
+    /// Task the observation belongs to (0 for single-task models; on a
+    /// multi-task model `task == num_tasks` enrolls a new task).
+    pub task: usize,
+    pub x: Vec<f64>,
+    pub y: f64,
+    /// The D-SKI gradient payload of an `observe … grad …` request.
+    pub grad: Option<Vec<f64>>,
+}
+
+/// One fully-parsed request line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Quit,
+    Ping,
+    Dim,
+    Tasks,
+    Stats,
+    /// Fleet-only: list resident model ids.
+    Models,
+    Predict(PredictRequest),
+    Observe(ObserveRequest),
+}
+
+/// One response line, formatted by [`Response::format`]. Predict and
+/// observe responses wrap the batcher's accounting structs so the
+/// latency/batch fields print identically everywhere.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Pong,
+    Dim(usize),
+    Tasks(usize),
+    Stats(String),
+    Models(Vec<String>),
+    Predict(PredictResponse),
+    Observe(ObserveResponse),
+    Error(String),
+    /// Fleet admission control: the request was not admitted.
+    Busy { limit: usize },
+}
+
+impl Response {
+    /// The wire line (no trailing newline).
+    pub fn format(&self) -> String {
+        match self {
+            Response::Pong => "ok pong".to_string(),
+            Response::Dim(d) => format!("ok {d}"),
+            Response::Tasks(t) => format!("ok {t}"),
+            Response::Stats(s) => format!("ok {s}"),
+            Response::Models(ids) => {
+                if ids.is_empty() {
+                    "ok".to_string()
+                } else {
+                    format!("ok {}", ids.join(" "))
+                }
+            }
+            Response::Predict(r) => format!(
+                "ok {} {} {:.1} {}",
+                r.mean,
+                r.var,
+                r.latency.as_secs_f64() * 1e6,
+                r.batch_size
+            ),
+            Response::Observe(r) => match &r.result {
+                Err(msg) => format!("err {msg}"),
+                Ok(ack) if ack.duplicate => format!(
+                    "ok dup {} {} {:.1} {}",
+                    ack.n,
+                    ack.pending,
+                    r.latency.as_secs_f64() * 1e6,
+                    r.batch_size
+                ),
+                Ok(ack) => format!(
+                    "ok {} {} {} {:.1} {}",
+                    ack.seq,
+                    ack.n,
+                    ack.pending,
+                    r.latency.as_secs_f64() * 1e6,
+                    r.batch_size
+                ),
+            },
+            Response::Error(msg) => format!("err {msg}"),
+            Response::Busy { limit } => {
+                format!("busy {limit} requests in flight, retry later")
+            }
+        }
+    }
+}
+
+/// Context-free verb classification — the piece of parsing that needs no
+/// model. Front-ends that resolve a model per request (the fleet) run
+/// this first, resolve, then hand the body to [`parse_predict`] /
+/// [`parse_observe`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verb<'a> {
+    /// Blank line — ignore.
+    Empty,
+    Quit,
+    Ping,
+    Dim,
+    Tasks,
+    Stats,
+    Models,
+    /// `observe …` with the body after the verb.
+    Observe(&'a str),
+    /// Everything else: the body after an *optional* `predict` verb
+    /// (a bare `x1 … xd` line predicts, as it always has).
+    Predict(&'a str),
+}
+
+/// Classify a request line. `models_verb` enables the fleet-only
+/// `models` verb; without it the token falls through to the predict
+/// parse and errors exactly as the legacy server always did.
+pub fn classify(line: &str, models_verb: bool) -> Verb<'_> {
+    let trimmed = line.trim();
+    if trimmed.is_empty() {
+        return Verb::Empty;
+    }
+    match trimmed {
+        "quit" => Verb::Quit,
+        "ping" => Verb::Ping,
+        "dim" => Verb::Dim,
+        "tasks" => Verb::Tasks,
+        "stats" => Verb::Stats,
+        "models" if models_verb => Verb::Models,
+        _ => {
+            if let Some(body) = trimmed.strip_prefix("observe") {
+                Verb::Observe(body)
+            } else {
+                Verb::Predict(trimmed.strip_prefix("predict").unwrap_or(trimmed))
+            }
+        }
+    }
+}
+
+/// Split the fleet's optional `model <id>` prefix off a request line,
+/// returning `(explicit_model, rest)`. `Err` carries the wire error
+/// line.
+pub fn split_model_prefix(line: &str) -> Result<(Option<&str>, &str), String> {
+    let trimmed = line.trim();
+    match trimmed.strip_prefix("model ") {
+        Some(body) => {
+            let body = body.trim_start();
+            match body.split_once(|ch: char| ch.is_whitespace()) {
+                Some((id, tail)) => Ok((Some(id), tail.trim_start())),
+                None => Err("usage: model <id> <verb> …".to_string()),
+            }
+        }
+        None => Ok((None, trimmed)),
+    }
+}
+
+/// Parse `expect` whitespace-separated floats from `body`; `Err` carries
+/// the wire-protocol error line.
+pub fn parse_floats(body: &str, expect: usize) -> Result<Vec<f64>, String> {
+    let mut out = Vec::with_capacity(expect);
+    for tok in body.split_whitespace() {
+        match tok.parse::<f64>() {
+            Ok(v) => out.push(v),
+            Err(_) => return Err(format!("not a number: '{tok}'")),
+        }
+    }
+    if out.len() != expect {
+        return Err(format!("expected {expect} numbers, got {}", out.len()));
+    }
+    Ok(out)
+}
+
+/// Split the leading task id off a multi-task request body, returning
+/// `(task, rest)`. `observe` selects the observe wire form, which also
+/// admits `task == num_tasks` (online enrollment); predictions require
+/// `task < num_tasks`. `Err` carries the wire-protocol error line.
+pub fn parse_task(
+    body: &str,
+    num_tasks: usize,
+    dim: usize,
+    observe: bool,
+) -> Result<(usize, &str), String> {
+    let body = body.trim_start();
+    let (tok, rest) = match body.split_once(|ch: char| ch.is_whitespace()) {
+        Some((tok, rest)) => (tok, rest),
+        None => (body, ""),
+    };
+    let Ok(task) = tok.parse::<usize>() else {
+        let form = if observe {
+            format!("observe <task> x1 … x{dim} y")
+        } else {
+            format!("predict <task> x1 … x{dim}")
+        };
+        return Err(format!(
+            "this model is multi-task — requests must lead with a task id: {form}"
+        ));
+    };
+    let limit = if observe { num_tasks + 1 } else { num_tasks };
+    if task >= limit {
+        return Err(if observe {
+            format!(
+                "task {task} out of range (model has {num_tasks} tasks; \
+                 task {num_tasks} would enroll a new one)"
+            )
+        } else {
+            format!("task {task} out of range (model has {num_tasks} tasks)")
+        });
+    }
+    Ok((task, rest))
+}
+
+/// Split an observe body at the literal `grad` token: everything before
+/// is the `(x, y)` payload, everything after is the gradient clause.
+/// Token-aware, so a float like `7` in `0.7` can never false-match.
+fn split_grad(body: &str) -> (&str, Option<&str>) {
+    let mut token_start: Option<usize> = None;
+    for (i, ch) in body.char_indices() {
+        if ch.is_whitespace() {
+            if let Some(s) = token_start.take() {
+                if &body[s..i] == "grad" {
+                    return (&body[..s], Some(&body[i..]));
+                }
+            }
+        } else if token_start.is_none() {
+            token_start = Some(i);
+        }
+    }
+    if let Some(s) = token_start {
+        if &body[s..] == "grad" {
+            return (&body[..s], Some(""));
+        }
+    }
+    (body, None)
+}
+
+/// Parse a predict body (everything after the optional `predict` verb).
+pub fn parse_predict(body: &str, shape: &ModelShape) -> Result<PredictRequest, String> {
+    let (task, body) = if shape.multitask {
+        parse_task(body, shape.num_tasks, shape.dim, false)?
+    } else {
+        (0, body)
+    };
+    let x = parse_floats(body, shape.dim)?;
+    Ok(PredictRequest { task, x })
+}
+
+/// Parse an observe body (everything after the `observe` verb),
+/// including the optional D-SKI `grad g1 … gd` clause. Non-finite
+/// values are rejected here, per request — inside a coalesced ingest
+/// they would fail the whole block, punishing well-behaved clients.
+pub fn parse_observe(body: &str, shape: &ModelShape) -> Result<ObserveRequest, String> {
+    let (task, body) = if shape.multitask {
+        parse_task(body, shape.num_tasks, shape.dim, true)?
+    } else {
+        (0, body)
+    };
+    let d = shape.dim;
+    let (vals_part, grad_part) = split_grad(body);
+    let vals = parse_floats(vals_part, d + 1)?;
+    let grad = match grad_part {
+        None => None,
+        Some(g) => {
+            if shape.multitask {
+                return Err(
+                    "gradient observations are single-task only — the \
+                     multi-task Hadamard operator (K_ski ∘ K_task) has no \
+                     extended derivative-row form"
+                        .to_string(),
+                );
+            }
+            Some(parse_floats(g, d)?)
+        }
+    };
+    if vals.iter().any(|v| !v.is_finite()) {
+        return Err("non-finite observation".to_string());
+    }
+    if grad.iter().flatten().any(|v| !v.is_finite()) {
+        return Err("non-finite gradient observation".to_string());
+    }
+    Ok(ObserveRequest {
+        task,
+        x: vals[..d].to_vec(),
+        y: vals[d],
+        grad,
+    })
+}
+
+/// Parse a whole request line against one model's shape — the
+/// single-model front-ends' entrypoint (the fleet interleaves
+/// [`classify`] with model resolution instead). `Ok(None)` is a blank
+/// line; `Err` carries the wire error line.
+pub fn parse_request(
+    line: &str,
+    shape: &ModelShape,
+    models_verb: bool,
+) -> Result<Option<Request>, String> {
+    Ok(Some(match classify(line, models_verb) {
+        Verb::Empty => return Ok(None),
+        Verb::Quit => Request::Quit,
+        Verb::Ping => Request::Ping,
+        Verb::Dim => Request::Dim,
+        Verb::Tasks => Request::Tasks,
+        Verb::Stats => Request::Stats,
+        Verb::Models => Request::Models,
+        Verb::Observe(body) => Request::Observe(parse_observe(body, shape)?),
+        Verb::Predict(body) => Request::Predict(parse_predict(body, shape)?),
+    }))
+}
+
+/// Format a request back into its wire line. `multitask` selects the
+/// task-led form (the task id is omitted for single-task models, whose
+/// parse fixes it at 0). Inverse of [`parse_request`] bitwise: floats
+/// print with shortest-round-trip formatting.
+pub fn format_request(req: &Request, multitask: bool) -> String {
+    use std::fmt::Write as _;
+    match req {
+        Request::Quit => "quit".to_string(),
+        Request::Ping => "ping".to_string(),
+        Request::Dim => "dim".to_string(),
+        Request::Tasks => "tasks".to_string(),
+        Request::Stats => "stats".to_string(),
+        Request::Models => "models".to_string(),
+        Request::Predict(p) => {
+            let mut s = "predict".to_string();
+            if multitask {
+                let _ = write!(s, " {}", p.task);
+            }
+            for v in &p.x {
+                let _ = write!(s, " {v}");
+            }
+            s
+        }
+        Request::Observe(o) => {
+            let mut s = "observe".to_string();
+            if multitask {
+                let _ = write!(s, " {}", o.task);
+            }
+            for v in &o.x {
+                let _ = write!(s, " {v}");
+            }
+            let _ = write!(s, " {}", o.y);
+            if let Some(g) = &o.grad {
+                s.push_str(" grad");
+                for v in g {
+                    let _ = write!(s, " {v}");
+                }
+            }
+            s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shape2() -> ModelShape {
+        ModelShape::single(2)
+    }
+
+    #[test]
+    fn classify_matches_legacy_verbs() {
+        assert_eq!(classify("  ", false), Verb::Empty);
+        assert_eq!(classify("quit", false), Verb::Quit);
+        assert_eq!(classify("ping", false), Verb::Ping);
+        assert_eq!(classify("stats", true), Verb::Stats);
+        assert_eq!(classify("models", true), Verb::Models);
+        // Without the fleet verb set, `models` is a (doomed) predict.
+        assert_eq!(classify("models", false), Verb::Predict("models"));
+        assert_eq!(classify("observe 1 2 3", false), Verb::Observe(" 1 2 3"));
+        assert_eq!(classify("predict 1 2", false), Verb::Predict(" 1 2"));
+        // The bare form predicts, as it always has.
+        assert_eq!(classify("1 2", false), Verb::Predict("1 2"));
+    }
+
+    #[test]
+    fn model_prefix_splits_and_errors_like_the_reactor() {
+        assert_eq!(split_model_prefix("predict 1 2"), Ok((None, "predict 1 2")));
+        assert_eq!(
+            split_model_prefix("model abc predict 1 2"),
+            Ok((Some("abc"), "predict 1 2"))
+        );
+        assert_eq!(
+            split_model_prefix("model abc"),
+            Err("usage: model <id> <verb> …".to_string())
+        );
+    }
+
+    #[test]
+    fn parse_errors_are_bitwise_legacy() {
+        let s = shape2();
+        assert_eq!(
+            parse_predict("1 two", &s).unwrap_err(),
+            "not a number: 'two'"
+        );
+        assert_eq!(
+            parse_predict("1 2 3", &s).unwrap_err(),
+            "expected 2 numbers, got 3"
+        );
+        assert_eq!(
+            parse_observe(" 1 2", &s).unwrap_err(),
+            "expected 3 numbers, got 2"
+        );
+        assert_eq!(
+            parse_observe(" 1 2 nan", &s).unwrap_err(),
+            "non-finite observation"
+        );
+        let mt = ModelShape { dim: 2, num_tasks: 3, multitask: true };
+        assert_eq!(
+            parse_predict("x 1 2", &mt).unwrap_err(),
+            "this model is multi-task — requests must lead with a task id: \
+             predict <task> x1 … x2"
+        );
+        assert_eq!(
+            parse_predict("3 1 2", &mt).unwrap_err(),
+            "task 3 out of range (model has 3 tasks)"
+        );
+        assert_eq!(
+            parse_observe(" 4 1 2 0.5", &mt).unwrap_err(),
+            "task 4 out of range (model has 3 tasks; task 3 would enroll a new one)"
+        );
+        // Enrollment (task == num_tasks) is admitted for observe.
+        assert!(parse_observe(" 3 1 2 0.5", &mt).is_ok());
+    }
+
+    #[test]
+    fn grad_clause_parses_and_validates() {
+        let s = shape2();
+        let o = parse_observe(" 0.5 -0.25 1.5 grad 2.0 -3.0", &s).unwrap();
+        assert_eq!(o.x, vec![0.5, -0.25]);
+        assert_eq!(o.y, 1.5);
+        assert_eq!(o.grad, Some(vec![2.0, -3.0]));
+        // Wrong gradient arity / non-finite gradients are typed errors.
+        assert_eq!(
+            parse_observe(" 0.5 -0.25 1.5 grad 2.0", &s).unwrap_err(),
+            "expected 2 numbers, got 1"
+        );
+        assert_eq!(
+            parse_observe(" 0.5 -0.25 1.5 grad inf 0", &s).unwrap_err(),
+            "non-finite gradient observation"
+        );
+        // A trailing bare `grad` is an empty clause, not a float error.
+        assert_eq!(
+            parse_observe(" 0.5 -0.25 1.5 grad", &s).unwrap_err(),
+            "expected 2 numbers, got 0"
+        );
+        // Multi-task models have no extended derivative-row form.
+        let mt = ModelShape { dim: 2, num_tasks: 2, multitask: true };
+        let err = parse_observe(" 0 0.5 -0.25 1.5 grad 1 2", &mt).unwrap_err();
+        assert!(err.contains("single-task only"), "{err}");
+    }
+
+    #[test]
+    fn requests_round_trip_through_format() {
+        let s = shape2();
+        let reqs = [
+            Request::Ping,
+            Request::Predict(PredictRequest { task: 0, x: vec![0.1, -2.5e-3] }),
+            Request::Observe(ObserveRequest {
+                task: 0,
+                x: vec![1.0 / 3.0, -0.0],
+                y: f64::MIN_POSITIVE,
+                grad: Some(vec![std::f64::consts::PI, -1e300]),
+            }),
+        ];
+        for req in &reqs {
+            let line = format_request(req, false);
+            let back = parse_request(&line, &s, false).unwrap().unwrap();
+            assert_eq!(&back, req, "line: {line}");
+        }
+        let mt = ModelShape { dim: 1, num_tasks: 4, multitask: true };
+        let req = Request::Observe(ObserveRequest {
+            task: 4, // enrollment
+            x: vec![0.25],
+            y: -1.75,
+            grad: None,
+        });
+        let line = format_request(&req, true);
+        assert_eq!(line, "observe 4 0.25 -1.75");
+        assert_eq!(parse_request(&line, &mt, false).unwrap().unwrap(), req);
+    }
+}

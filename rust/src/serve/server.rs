@@ -30,6 +30,7 @@
 //! → predict <x1> <x2> … <xd>     (the word `predict` is optional)
 //! ← ok <mean> <variance> <latency_us> <batch_size>
 //! → observe <x1> … <xd> <y>
+//! → observe <x1> … <xd> <y> grad <g1> … <gd>   (D-SKI: value + gradient)
 //! ← ok <seq> <n> <pending> <latency_us> <batch_size>
 //! ← ok dup <n> <pending> <latency_us> <batch_size>   (bitwise duplicate)
 //! → ping                          ← ok pong
@@ -40,6 +41,11 @@
 //! ← err <message>                 (malformed input / frozen model;
 //!                                  connection stays open)
 //! ```
+//!
+//! The grammar is defined once, in [`crate::serve::protocol`] (see also
+//! `docs/PROTOCOL.md`): this server, the fleet reactor, and the
+//! `skip-gp observe` CLI client all parse and format through it, so
+//! verbs and error wordings cannot drift between front-ends.
 //!
 //! **Multi-task models** (a snapshot with a task head, format v5) address
 //! every query and observation at a task, so the leading token of the
@@ -214,7 +220,7 @@ impl ServeEngine {
     ///
     /// Returns one [`ObserveAck`] per input row, in order.
     pub fn observe_block(&self, xs: &Matrix, ys: &[f64]) -> Result<Vec<ObserveAck>> {
-        self.observe_inner(xs, ys, None)
+        self.observe_inner(xs, ys, None, None)
     }
 
     /// Task-addressed [`observe_block`](Self::observe_block): row `i`
@@ -227,7 +233,21 @@ impl ServeEngine {
         ys: &[f64],
         tasks: &[usize],
     ) -> Result<Vec<ObserveAck>> {
-        self.observe_inner(xs, ys, Some(tasks))
+        self.observe_inner(xs, ys, Some(tasks), None)
+    }
+
+    /// Derivative-carrying [`observe_block`](Self::observe_block): row `i`
+    /// observes `(ys[i], ∇ys[i] = grads.row(i))`, and the ingest extends
+    /// the operator with d gradient stencil rows per point (D-SKI, see
+    /// [`IncrementalState::ingest_block_grads`]). Single-task only — the
+    /// multi-task Hadamard operator has no extended derivative-row form.
+    pub fn observe_block_grads(
+        &self,
+        xs: &Matrix,
+        ys: &[f64],
+        grads: &Matrix,
+    ) -> Result<Vec<ObserveAck>> {
+        self.observe_inner(xs, ys, None, Some(grads))
     }
 
     fn observe_inner(
@@ -235,6 +255,7 @@ impl ServeEngine {
         xs: &Matrix,
         ys: &[f64],
         tasks: Option<&[usize]>,
+        grads: Option<&Matrix>,
     ) -> Result<Vec<ObserveAck>> {
         let stream = self.stream.as_ref().ok_or_else(|| {
             Error::Stream(
@@ -248,9 +269,20 @@ impl ServeEngine {
         })?;
         let report = self.metrics.time("stream.ingest_block", || {
             let mut live = stream.lock().unwrap();
-            let report = match tasks {
-                Some(t) => live.ingest_block_tasks(xs, ys, t)?,
-                None => live.ingest_block(xs, ys)?,
+            let report = match (tasks, grads) {
+                (Some(t), None) => live.ingest_block_tasks(xs, ys, t)?,
+                (None, Some(g)) => live.ingest_block_grads(xs, ys, g)?,
+                (None, None) => live.ingest_block(xs, ys)?,
+                (Some(_), Some(_)) => {
+                    // No public entrypoint builds this combination; the
+                    // wire parser rejects `grad` on multi-task models.
+                    return Err(Error::Stream(
+                        "gradient observations are single-task only — the \
+                         multi-task Hadamard operator (K_ski ∘ K_task) has \
+                         no extended derivative-row form"
+                            .into(),
+                    ));
+                }
             };
             // Republish by value: `to_snapshot` clones α + both caches
             // (≈ M·(1+r) floats) once per coalesced block — simple and
@@ -509,166 +541,52 @@ pub(crate) fn wake_addr(mut addr: SocketAddr) -> SocketAddr {
     addr
 }
 
-/// Parse `expect` whitespace-separated floats from `body`; `Err` carries
-/// the wire-protocol error line. Shared with the fleet reactor so both
-/// front-ends reject malformed input identically.
-pub(crate) fn parse_floats(
-    body: &str,
-    expect: usize,
-) -> std::result::Result<Vec<f64>, String> {
-    let mut out = Vec::with_capacity(expect);
-    for tok in body.split_whitespace() {
-        match tok.parse::<f64>() {
-            Ok(v) => out.push(v),
-            Err(_) => return Err(format!("not a number: '{tok}'")),
-        }
-    }
-    if out.len() != expect {
-        return Err(format!("expected {expect} numbers, got {}", out.len()));
-    }
-    Ok(out)
-}
-
-/// Split the leading task id off a multi-task request body, returning
-/// `(task, rest)`. `observe` selects the observe wire form, which also
-/// admits `task == num_tasks` (online enrollment); predictions require
-/// `task < num_tasks`. `Err` carries the wire-protocol error line.
-/// Shared with the fleet reactor so both front-ends reject malformed
-/// input identically.
-pub(crate) fn parse_task<'a>(
-    body: &'a str,
-    num_tasks: usize,
-    dim: usize,
-    observe: bool,
-) -> std::result::Result<(usize, &'a str), String> {
-    let body = body.trim_start();
-    let (tok, rest) = match body.split_once(|ch: char| ch.is_whitespace()) {
-        Some((tok, rest)) => (tok, rest),
-        None => (body, ""),
-    };
-    let Ok(task) = tok.parse::<usize>() else {
-        let form = if observe {
-            format!("observe <task> x1 … x{dim} y")
-        } else {
-            format!("predict <task> x1 … x{dim}")
-        };
-        return Err(format!(
-            "this model is multi-task — requests must lead with a task id: {form}"
-        ));
-    };
-    let limit = if observe { num_tasks + 1 } else { num_tasks };
-    if task >= limit {
-        return Err(if observe {
-            format!(
-                "task {task} out of range (model has {num_tasks} tasks; \
-                 task {num_tasks} would enroll a new one)"
-            )
-        } else {
-            format!("task {task} out of range (model has {num_tasks} tasks)")
-        });
-    }
-    Ok((task, rest))
-}
-
 fn handle_connection(
     stream: TcpStream,
     handle: super::batcher::BatchHandle,
     engine: Arc<ServeEngine>,
 ) -> std::io::Result<()> {
+    use super::protocol::{self, ModelShape, Request, Response};
     stream.set_nodelay(true).ok();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     let d = engine.dim();
     for line in reader.lines() {
         let line = line?;
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
-        }
-        match trimmed {
-            "quit" => break,
-            "ping" => writeln!(writer, "ok pong")?,
-            "dim" => writeln!(writer, "ok {d}")?,
-            "tasks" => writeln!(writer, "ok {}", engine.num_tasks())?,
-            "stats" => writeln!(writer, "ok {}", engine.stats_line())?,
-            _ => {
-                if let Some(body) = trimmed.strip_prefix("observe") {
-                    // observe x1 … xd y — or, on a multi-task model,
-                    // observe <task> x1 … xd y (task == num_tasks enrolls).
-                    let (task, body) = if engine.is_multitask() {
-                        match parse_task(body, engine.num_tasks(), d, true) {
-                            Ok(p) => p,
-                            Err(msg) => {
-                                writeln!(writer, "err {msg}")?;
-                                continue;
-                            }
-                        }
-                    } else {
-                        (0, body)
-                    };
-                    match parse_floats(body, d + 1) {
-                        Err(msg) => writeln!(writer, "err {msg}")?,
-                        // Reject non-finite values here, per connection —
-                        // inside a coalesced ingest they would fail the
-                        // whole block, punishing well-behaved clients.
-                        Ok(vals) if vals.iter().any(|v| !v.is_finite()) => {
-                            writeln!(writer, "err non-finite observation")?
-                        }
-                        Ok(vals) => {
-                            let (x, y) = (&vals[..d], vals[d]);
-                            let r = handle.observe_task(task, x, y);
-                            match r.result {
-                                Err(msg) => writeln!(writer, "err {msg}")?,
-                                Ok(ack) if ack.duplicate => writeln!(
-                                    writer,
-                                    "ok dup {} {} {:.1} {}",
-                                    ack.n,
-                                    ack.pending,
-                                    r.latency.as_secs_f64() * 1e6,
-                                    r.batch_size
-                                )?,
-                                Ok(ack) => writeln!(
-                                    writer,
-                                    "ok {} {} {} {:.1} {}",
-                                    ack.seq,
-                                    ack.n,
-                                    ack.pending,
-                                    r.latency.as_secs_f64() * 1e6,
-                                    r.batch_size
-                                )?,
-                            }
-                        }
-                    }
-                    continue;
-                }
-                let body = trimmed.strip_prefix("predict").unwrap_or(trimmed);
-                let (task, body) = if engine.is_multitask() {
-                    match parse_task(body, engine.num_tasks(), d, false) {
-                        Ok(p) => p,
-                        Err(msg) => {
-                            writeln!(writer, "err {msg}")?;
-                            continue;
-                        }
-                    }
-                } else {
-                    (0, body)
-                };
-                match parse_floats(body, d) {
-                    Err(msg) => writeln!(writer, "err {msg}")?,
-                    Ok(xs) => {
-                        let r = handle.predict_task(task, &xs);
-                        writeln!(
-                            writer,
-                            "ok {} {} {:.1} {}",
-                            r.mean,
-                            r.var,
-                            r.latency.as_secs_f64() * 1e6,
-                            r.batch_size
-                        )?;
-                    }
-                }
+        // Shape is re-read per request: online enrollment grows the task
+        // count mid-connection.
+        let shape = ModelShape {
+            dim: d,
+            num_tasks: engine.num_tasks(),
+            multitask: engine.is_multitask(),
+        };
+        let req = match protocol::parse_request(&line, &shape, false) {
+            Ok(None) => continue, // blank line
+            Ok(Some(req)) => req,
+            Err(msg) => {
+                writeln!(writer, "{}", Response::Error(msg).format())?;
+                continue;
             }
-        }
+        };
+        let resp = match req {
+            Request::Quit => break,
+            Request::Ping => Response::Pong,
+            Request::Dim => Response::Dim(d),
+            Request::Tasks => Response::Tasks(engine.num_tasks()),
+            Request::Stats => Response::Stats(engine.stats_line()),
+            // `models` is a fleet-only verb: with `models_verb = false`
+            // the parser routes the token through the predict parse,
+            // which errors — this arm cannot be reached.
+            Request::Models => unreachable!("models verb disabled on the legacy server"),
+            Request::Observe(o) => Response::Observe(match &o.grad {
+                // The parser rejects `grad` on multi-task models, so a
+                // gradient-carrying request is always task 0.
+                Some(g) => handle.observe_grad(&o.x, o.y, g),
+                None => handle.observe_task(o.task, &o.x, o.y),
+            }),
+            Request::Predict(p) => Response::Predict(handle.predict_task(p.task, &p.x)),
+        };
+        writeln!(writer, "{}", resp.format())?;
     }
     Ok(())
 }

@@ -8,13 +8,13 @@
 //! inputs are **not** stored — reload and serve without touching training
 //! data.
 //!
-//! # Format (version 5)
+//! # Format (version 6)
 //!
 //! Little-endian throughout:
 //!
 //! ```text
 //! magic      8 bytes  "SKGPSNAP"
-//! version    u32      format version (this file documents versions 1–5)
+//! version    u32      format version (this file documents versions 1–6)
 //! d          u32      input dimensionality
 //! n          u32      training-set size (length of α)
 //! r          u32      variance-cache rank (0 ⇒ mean-only snapshot)
@@ -34,7 +34,8 @@
 //! alpha      n × f64
 //! means      per term, M_t × f64 with M_t = Π m_k of that term
 //! var_rs     per term, (M_t·r) × f64, row-major M_t × r
-//! pending    u32 count, count × [u64 seq, u32 task, d × f64 x, f64 y]
+//! pending    u32 count, count × [u64 seq, u32 task, d × f64 x, f64 y,
+//!              u32 grad flag (0 or 1); if 1: d × f64 ∇y]
 //! tasks      u32 flag: 0 single-task, 1 multi-task; if 1:
 //!              u32 s, u32 q
 //!              B       (s·q) × f64, row-major s × q
@@ -69,6 +70,14 @@
 //! differs: the prior variance `σ_f²·k_task(t,t)` and the masked
 //! mean/variance buffers). Single-task snapshots write flag 0 and their
 //! pending entries carry task 0, keeping the format overhead at 4 bytes.
+//!
+//! # Version 5 (read-only, migrated on load)
+//!
+//! Version 5 is version 6 without the pending-entry gradient payload:
+//! each entry's `y` is followed directly by the next entry (no grad
+//! flag). Loading a v5 file migrates every pending entry to `grad =
+//! None` — exactly right, because derivative observations (D-SKI) could
+//! not be persisted before v6. Every other field decodes identically.
 //!
 //! # Version 4 (read-only, migrated on load)
 //!
@@ -120,14 +129,15 @@
 //!   before trusting any field. Corrupt files fail loudly.
 
 use super::cache::{
-    inverse_root_exact, inverse_root_lanczos, PredictCache, TermCache, VarianceMode,
+    build_grad_cache, inverse_root_exact, inverse_root_lanczos, PredictCache,
+    TermCache, VarianceMode,
 };
 use crate::gp::{ExactGp, GpHypers, MvmGp, MvmVariant};
 use crate::grid::{build_grid, Grid1d, GridSpec, InducingGrid, RectilinearGrid};
 use crate::kernels::{ProductKernel, TaskKernel};
 use crate::linalg::{Cholesky, Matrix};
 use crate::operators::AffineOp;
-use crate::solvers::{build_preconditioner, cg_solve_with, CgConfig, PrecondSpec};
+use crate::solvers::{build_preconditioner, cg_solve_with, CgConfig, SolverPolicy};
 use crate::stream::Observation;
 use crate::{Error, Result};
 use std::fs;
@@ -137,7 +147,7 @@ use std::path::Path;
 /// File magic.
 pub const SNAPSHOT_MAGIC: &[u8; 8] = b"SKGPSNAP";
 /// Current (newest) format version; see the module docs for the rules.
-pub const SNAPSHOT_VERSION: u32 = 5;
+pub const SNAPSHOT_VERSION: u32 = 6;
 /// Oldest format version this build still reads (migrating on load).
 pub const SNAPSHOT_MIN_VERSION: u32 = 1;
 
@@ -254,15 +264,16 @@ pub struct SnapshotConfig {
     pub variance: VarianceMode,
     /// Refuse grids larger than this many stored cells.
     pub max_grid_cells: usize,
-    /// Preconditioner for any solve the snapshot build itself performs —
+    /// Solver policy for any solve the snapshot build itself performs —
     /// today the α = K̂⁻¹y recompute when [`ModelSnapshot::from_mvm`] is
-    /// given a model with externally-set hypers and no cached α
-    /// (`--precond` on the `skip-gp snapshot` CLI feeds both this and the
-    /// training config). `None` (the default) inherits the model's own
-    /// `cfg.cg.precond`; `Some(spec)` forces `spec` — including
-    /// `Some(PrecondSpec::None)` for an explicitly unpreconditioned
-    /// solve.
-    pub precond: Option<PrecondSpec>,
+    /// given a model with externally-set hypers and no cached α (the
+    /// CLI's `--precond`/`--space`/`--precision` flags feed both this
+    /// and the training config through one
+    /// [`SolverPolicy::from_cli`] parse). `None` (the default) inherits
+    /// the model's own folded `cfg.cg.precond`; `Some(policy)` forces
+    /// `policy.precond` — including a policy whose preconditioner is
+    /// `PrecondSpec::None` for an explicitly unpreconditioned solve.
+    pub policy: Option<SolverPolicy>,
 }
 
 impl Default for SnapshotConfig {
@@ -271,7 +282,7 @@ impl Default for SnapshotConfig {
             grid: None,
             variance: VarianceMode::Lanczos(64),
             max_grid_cells: DEFAULT_MAX_GRID_CELLS,
-            precond: None,
+            policy: None,
         }
     }
 }
@@ -348,6 +359,10 @@ impl ModelSnapshot {
             }
             Ok(())
         };
+        // D-SKI models solve the extended (y, ∇y) system — the recompute
+        // targets, the Lanczos probe, and the cache build all switch on
+        // this (value-only models borrow `ys` at zero cost).
+        let targets = gp.train_targets();
         let (alpha, alpha_space) = match gp.alpha() {
             // A cached α carries its provenance; the recompute below is
             // always a data-space CG solve.
@@ -355,17 +370,21 @@ impl ModelSnapshot {
             None => {
                 build(&mut built)?;
                 let op = built.as_ref().expect("just built");
-                // An explicit snapshot-level spec wins; the default (None)
-                // inherits whatever preconditioner the model itself was
-                // configured to solve with, so a library caller doesn't
+                // An explicit snapshot-level policy wins; the default
+                // (None) inherits whatever preconditioner the model
+                // itself was configured to solve with (already folded
+                // into its CgConfig), so a library caller doesn't
                 // silently lose preconditioning the CLI would have kept.
-                let spec = cfg.precond.unwrap_or(gp.cfg.cg.precond);
+                let spec = cfg
+                    .policy
+                    .map(|p| p.precond)
+                    .unwrap_or(gp.cfg.cg.precond);
                 let pre = build_preconditioner(op, Some(gp.hypers.sn2()), spec);
                 let cg = CgConfig {
                     max_iters: gp.cfg.cg.max_iters.max(200),
                     ..gp.cfg.cg
                 };
-                let sol = cg_solve_with(op, &gp.ys, pre.as_ref(), None, cg);
+                let sol = cg_solve_with(op, &targets, pre.as_ref(), None, cg);
                 if !sol.converged {
                     return Err(Error::Snapshot(format!(
                         "α solve did not converge (rel residual {:.2e}) — raise \
@@ -382,9 +401,14 @@ impl ModelSnapshot {
         let s = match &cfg.variance {
             VarianceMode::None => None,
             VarianceMode::Exact => {
-                // Dense K̂ + Cholesky once at snapshot time.
+                // Dense K̂ + Cholesky once at snapshot time (derivative
+                // kernel for D-SKI models).
                 let kern = ProductKernel::rbf(d, gp.hypers.ell(), gp.hypers.sf2());
-                let mut khat = kern.gram_sym(&gp.xs);
+                let mut khat = if gp.grads().is_some() {
+                    kern.gram_deriv_sym(&gp.xs, &vec![true; gp.xs.rows])
+                } else {
+                    kern.gram_sym(&gp.xs)
+                };
                 khat.add_diag(gp.hypers.sn2());
                 Some(inverse_root_exact(&Cholesky::new_with_jitter(&khat, 0.0)?))
             }
@@ -398,11 +422,34 @@ impl ModelSnapshot {
                         built.as_ref().expect("just built")
                     }
                 };
-                Some(inverse_root_lanczos(op, &gp.ys, *rank)?)
+                Some(inverse_root_lanczos(op, &targets, *rank)?)
             }
         };
-        let cache =
-            PredictCache::build(&gp.xs, &alpha, &gp.hypers, grid.as_ref(), s.as_ref())?;
+        let cache = if gp.grads().is_some() {
+            // The extended α scatters through value + differentiated
+            // stencils; the serving spec must be a single-term dense
+            // grid, like the training grid `new_with_grads` enforced.
+            let terms = grid.terms();
+            if terms.len() != 1 || terms[0].coeff != 1.0 {
+                return Err(Error::Snapshot(format!(
+                    "gradient-observation models need a single-term dense \
+                     serving grid, got {} ({} terms)",
+                    spec.describe(),
+                    terms.len()
+                )));
+            }
+            build_grad_cache(
+                &gp.xs,
+                &vec![true; gp.xs.rows],
+                &alpha,
+                &gp.hypers,
+                spec.clone(),
+                terms[0].axes.clone(),
+                s.as_ref(),
+            )?
+        } else {
+            PredictCache::build(&gp.xs, &alpha, &gp.hypers, grid.as_ref(), s.as_ref())?
+        };
         Ok(ModelSnapshot {
             version: SNAPSHOT_VERSION,
             hypers: gp.hypers,
@@ -573,7 +620,7 @@ impl ModelSnapshot {
             64 + d * 24
                 + terms.len() * (8 + d * 20)
                 + (n + m_total * (1 + r)) * 8
-                + self.pending.len() * (20 + d * 8)
+                + self.pending.len() * (24 + 2 * d * 8)
                 + task_bytes,
         );
         out.extend_from_slice(SNAPSHOT_MAGIC);
@@ -636,6 +683,16 @@ impl ModelSnapshot {
                 push_f64(&mut out, v);
             }
             push_f64(&mut out, o.y);
+            match &o.grad {
+                None => push_u32(&mut out, 0),
+                Some(g) => {
+                    debug_assert_eq!(g.len(), d, "pending gradient dimensionality");
+                    push_u32(&mut out, 1);
+                    for &v in g {
+                        push_f64(&mut out, v);
+                    }
+                }
+            }
         }
         match &self.tasks {
             None => push_u32(&mut out, 0),
@@ -678,10 +735,11 @@ impl ModelSnapshot {
         out
     }
 
-    /// Decode from bytes: version 5 natively, versions 1–4 with an
+    /// Decode from bytes: version 6 natively, versions 1–5 with an
     /// in-memory migration (v1: single term, coefficient 1, rectilinear
     /// spec; v2: empty pending log; v3: data-space α provenance; v4:
-    /// task-0 pending entries and no multi-task head).
+    /// task-0 pending entries and no multi-task head; v5: gradient-free
+    /// pending entries).
     pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
         let mut c = Cursor { bytes, pos: 0 };
         let magic = c.take(8)?;
@@ -818,7 +876,31 @@ impl ModelSnapshot {
                         "non-finite pending observation".into(),
                     ));
                 }
-                pending.push(Observation { seq, task, x, y });
+                // v6 entries may carry a gradient payload; older files
+                // predate derivative observations, so `None` is the
+                // correct migration, not a guess.
+                let grad = if version >= 6 {
+                    match c.u32()? {
+                        0 => None,
+                        1 => {
+                            let g = c.f64_vec(d)?;
+                            if g.iter().any(|v| !v.is_finite()) {
+                                return Err(Error::Snapshot(
+                                    "non-finite pending gradient".into(),
+                                ));
+                            }
+                            Some(g)
+                        }
+                        other => {
+                            return Err(Error::Snapshot(format!(
+                                "unknown pending gradient flag {other} (0 or 1)"
+                            )))
+                        }
+                    }
+                } else {
+                    None
+                };
+                pending.push(Observation { seq, task, x, y, grad });
             }
             pending
         } else {
@@ -1131,7 +1213,10 @@ mod tests {
             &cold,
             &SnapshotConfig {
                 variance: VarianceMode::None,
-                precond: Some(PrecondSpec::PivChol { rank: 25 }),
+                policy: Some(SolverPolicy {
+                    precond: crate::solvers::PrecondSpec::PivChol { rank: 25 },
+                    ..Default::default()
+                }),
                 ..Default::default()
             },
         )
@@ -1148,12 +1233,21 @@ mod tests {
     fn pending_log_roundtrips_bitwise() {
         let mut snap = small_snapshot(7);
         snap.pending = vec![
-            Observation { seq: 3, task: 0, x: vec![0.25, -0.5], y: 1.125 },
-            Observation { seq: 9, task: 0, x: vec![0.75, 0.0], y: -2.25 },
+            Observation { seq: 3, task: 0, x: vec![0.25, -0.5], y: 1.125, grad: None },
+            Observation {
+                seq: 9,
+                task: 0,
+                x: vec![0.75, 0.0],
+                y: -2.25,
+                grad: Some(vec![0.5, -1.5]),
+            },
         ];
         let bytes = snap.to_bytes();
         let back = ModelSnapshot::from_bytes(&bytes).unwrap();
         assert_eq!(back.pending, snap.pending);
+        // Re-encoding a mixed (gradient-free + gradient) pending log
+        // reproduces the identical bytes.
+        assert_eq!(back.to_bytes(), bytes);
         // Out-of-order sequence numbers are a corrupt file, not a parse.
         let mut bad = snap.clone();
         bad.pending.swap(0, 1);
@@ -1184,19 +1278,20 @@ mod tests {
     fn alpha_space_roundtrips_and_v3_migrates_to_data() {
         let mut snap = small_snapshot(8);
         snap.alpha_space = 1;
-        let v5 = snap.to_bytes();
-        let back = ModelSnapshot::from_bytes(&v5).unwrap();
-        assert_eq!(back.alpha_space, 1, "v5 roundtrip keeps grid provenance");
+        let v6 = snap.to_bytes();
+        let back = ModelSnapshot::from_bytes(&v6).unwrap();
+        assert_eq!(back.alpha_space, 1, "v6 roundtrip keeps grid provenance");
 
         // Splice the same payload down to version 3: drop the 4-byte
         // alpha_space field at offset 36 (after magic 8 + 7 × u32) and
         // the trailing 4-byte task-section flag (the snapshot is
         // single-task with an empty pending log, so nothing else in the
-        // layout differs), patch the version field to 3, and recompute
-        // the FNV-1a checksum.
-        let mut v3 = Vec::with_capacity(v5.len() - 8);
-        v3.extend_from_slice(&v5[..36]);
-        v3.extend_from_slice(&v5[40..v5.len() - 12]);
+        // layout differs — no pending entries means no v6 grad flags
+        // either), patch the version field to 3, and recompute the
+        // FNV-1a checksum.
+        let mut v3 = Vec::with_capacity(v6.len() - 8);
+        v3.extend_from_slice(&v6[..36]);
+        v3.extend_from_slice(&v6[40..v6.len() - 12]);
         v3[8..12].copy_from_slice(&3u32.to_le_bytes());
         let sum = fnv1a(&v3);
         v3.extend_from_slice(&sum.to_le_bytes());
@@ -1246,8 +1341,14 @@ mod tests {
             caches: vec![c1, c2],
         });
         snap.pending = vec![
-            Observation { seq: 0, task: 2, x: vec![0.5, 0.5], y: 1.0 },
-            Observation { seq: 4, task: 0, x: vec![-0.25, 0.125], y: -0.5 },
+            Observation { seq: 0, task: 2, x: vec![0.5, 0.5], y: 1.0, grad: None },
+            Observation {
+                seq: 4,
+                task: 0,
+                x: vec![-0.25, 0.125],
+                y: -0.5,
+                grad: None,
+            },
         ];
         snap
     }
@@ -1301,8 +1402,13 @@ mod tests {
 
         // Single-task snapshots only carry task-0 pending entries.
         let mut snap = small_snapshot(13);
-        snap.pending =
-            vec![Observation { seq: 1, task: 1, x: vec![0.5, 0.5], y: 1.0 }];
+        snap.pending = vec![Observation {
+            seq: 1,
+            task: 1,
+            x: vec![0.5, 0.5],
+            y: 1.0,
+            grad: None,
+        }];
         let err = ModelSnapshot::from_bytes(&snap.to_bytes()).unwrap_err();
         assert!(err.to_string().contains("pending observation task"), "{err}");
     }
@@ -1310,12 +1416,13 @@ mod tests {
     #[test]
     fn v4_migrates_to_task_free_head() {
         let snap = small_snapshot(14);
-        let v5 = snap.to_bytes();
+        let v6 = snap.to_bytes();
         // Splice down to version 4: the snapshot is single-task with an
-        // empty pending log, so v4 is exactly v5 minus the trailing
-        // 4-byte task-section flag. Patch the version, re-checksum.
-        let mut v4 = Vec::with_capacity(v5.len() - 4);
-        v4.extend_from_slice(&v5[..v5.len() - 12]);
+        // empty pending log (so no v6 grad flags), and v4 is exactly the
+        // current layout minus the trailing 4-byte task-section flag.
+        // Patch the version, re-checksum.
+        let mut v4 = Vec::with_capacity(v6.len() - 4);
+        v4.extend_from_slice(&v6[..v6.len() - 12]);
         v4[8..12].copy_from_slice(&4u32.to_le_bytes());
         let sum = fnv1a(&v4);
         v4.extend_from_slice(&sum.to_le_bytes());
@@ -1326,6 +1433,55 @@ mod tests {
         assert_eq!(migrated.num_tasks(), 1);
         assert_eq!(migrated.alpha, snap.alpha);
         assert_eq!(migrated.cache.spec, snap.cache.spec);
+    }
+
+    #[test]
+    fn v5_pending_migrates_gradient_free() {
+        let mut snap = small_snapshot(15);
+        snap.pending = vec![
+            Observation { seq: 2, task: 0, x: vec![0.5, -0.25], y: 1.5, grad: None },
+            Observation { seq: 6, task: 0, x: vec![0.0, 0.75], y: -0.5, grad: None },
+        ];
+        let v6 = snap.to_bytes();
+        // Splice down to version 5: drop each pending entry's trailing
+        // 4-byte grad flag (both entries above carry none, so v5 is
+        // exactly v6 minus one zero u32 per entry). The snapshot is
+        // single-task, so the file ends with the 4-byte task flag and
+        // the 8-byte checksum. Patch the version, re-checksum.
+        let d = 2;
+        let entry_v6 = 8 + 4 + d * 8 + 8 + 4; // seq, task, x, y, grad flag
+        let pend_start = v6.len() - 12 - 4 - 2 * entry_v6;
+        let mut v5 = Vec::with_capacity(v6.len() - 8);
+        v5.extend_from_slice(&v6[..pend_start + 4]);
+        for i in 0..2 {
+            let start = pend_start + 4 + i * entry_v6;
+            v5.extend_from_slice(&v6[start..start + entry_v6 - 4]);
+        }
+        v5.extend_from_slice(&v6[v6.len() - 12..v6.len() - 8]);
+        v5[8..12].copy_from_slice(&5u32.to_le_bytes());
+        let sum = fnv1a(&v5);
+        v5.extend_from_slice(&sum.to_le_bytes());
+
+        let migrated = ModelSnapshot::from_bytes(&v5).unwrap();
+        assert_eq!(migrated.version, 5);
+        assert_eq!(
+            migrated.pending, snap.pending,
+            "v5 files predate derivative observations — every entry \
+             migrates with grad = None"
+        );
+        // Re-saving persists as the newest version, bitwise equal to the
+        // native v6 encoding of the same snapshot.
+        assert_eq!(migrated.to_bytes(), v6);
+
+        // An out-of-range grad flag is a corrupt file, not a bool cast.
+        let mut bad = v6.clone();
+        let flag_at = pend_start + 4 + entry_v6 - 4;
+        bad[flag_at..flag_at + 4].copy_from_slice(&7u32.to_le_bytes());
+        let trunc = bad.len() - 8;
+        let sum = fnv1a(&bad[..trunc]);
+        bad[trunc..].copy_from_slice(&sum.to_le_bytes());
+        let err = ModelSnapshot::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("gradient flag"), "{err}");
     }
 
     #[test]

@@ -5,6 +5,10 @@
 //! grid-space normal-equations engine ([`gridspace`]), whose per-iteration
 //! cost is independent of n, and the mixed-precision refinement wrapper
 //! ([`refine`]) that runs the hot MVMs in f32 under an f64 outer loop.
+//! The four deployment-facing knobs (preconditioner, precision, solve
+//! space, warm starts) are bundled by [`policy::SolverPolicy`], the one
+//! struct every embedding config (training, streaming, snapshots) and
+//! the CLI share.
 //!
 //! Tuning the solvers (tolerance vs. preconditioner rank vs. warm
 //! starts, and how to read the p50/p99 solver-effort summary lines) is
@@ -14,6 +18,7 @@ pub mod block_cg;
 pub mod cg;
 pub mod gridspace;
 pub mod lanczos;
+pub mod policy;
 pub mod precond;
 pub mod refine;
 pub mod slq;
@@ -24,6 +29,7 @@ pub use gridspace::{
     grid_cg_solve, grid_cg_solve_with_wty, GridSolution, GridSystem,
 };
 pub use lanczos::{lanczos, lanczos_batch, LanczosResult};
+pub use policy::{SolveSpace, SolverPolicy};
 pub use precond::{
     build_preconditioner, IdentityPrecond, JacobiPrecond, PaddedPrecond,
     PivotedCholeskyPrecond, PrecondCost, PrecondSpec, Preconditioner,

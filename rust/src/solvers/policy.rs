@@ -1,0 +1,205 @@
+//! The solver policy shared by every layer that issues covariance
+//! solves.
+//!
+//! Training ([`crate::gp::MvmGpConfig`]), streaming ingest
+//! ([`crate::stream::StreamConfig`]), and snapshot building
+//! ([`crate::serve::SnapshotConfig`]) all answer the same four
+//! questions before touching a Krylov solver: which preconditioner,
+//! which arithmetic, which space, and whether successive solves may
+//! seed from the previous solution. [`SolverPolicy`] bundles those
+//! answers in one struct so the configs embed *one* policy instead of
+//! re-declaring the knobs — and [`SolverPolicy::from_cli`] is the one
+//! place the `--precond` / `--space` / `--precision` flags are parsed,
+//! with the exact error wordings the CLI has always produced.
+//!
+//! None of the knobs changes *what* a solve converges to — the
+//! preconditioner and warm start change where CG starts and how fast it
+//! contracts, mixed precision meets the same residual certificate
+//! through iterative refinement, and both solve spaces share one
+//! tolerance contract (see [`SolveSpace`]). A policy is therefore
+//! always safe to tune per deployment.
+
+use super::precond::PrecondSpec;
+use super::refine::Precision;
+use crate::Result;
+
+/// Which space the covariance y-solves run in (Yadav, Sheldon & Musco
+/// 2021 — see `crate::solvers::gridspace` for the derivation and
+/// `docs/SOLVERS.md` for the decision table).
+///
+/// Both spaces converge on the *same* certificate
+/// (`‖K̂α − y‖ ≤ tol·‖y‖`), so switching spaces changes iteration cost,
+/// never the answer beyond the tolerance.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SolveSpace {
+    /// Grid space for KISS models when the grid admits it (the `WᵀW`
+    /// band fits its budget, axes are non-degenerate), data space
+    /// otherwise — the default.
+    Auto,
+    /// Always solve in data space (n-dimensional CG/PCG) — the
+    /// equivalence oracle the grid path is tested against.
+    Data,
+    /// Always solve in grid space. A typed [`crate::Error::Config`] for
+    /// the SKIP variant (no tensor-product `W` to project through) and a
+    /// typed [`crate::Error::Grid`] when the grid refuses (over-budget
+    /// band, degenerate axes).
+    Grid,
+}
+
+/// How this deployment wants its covariance solves run — embedded by
+/// [`crate::gp::MvmGpConfig`], [`crate::stream::StreamConfig`], and
+/// [`crate::serve::SnapshotConfig`] so the four knobs are declared (and
+/// CLI-parsed) exactly once.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SolverPolicy {
+    /// Preconditioner for the data-space solves (`--precond
+    /// rank:K|jacobi|none`), built once per operator with the exact
+    /// noise shift σ_n². Folded into [`super::CgConfig::precond`] at
+    /// model/state construction whenever it is not
+    /// [`PrecondSpec::None`] — a caller that set `cg.precond` directly
+    /// keeps their choice under the default policy.
+    pub precond: PrecondSpec,
+    /// Arithmetic for the solves (`--precision f64|mixed`):
+    /// [`Precision::F64`] runs classic double-precision PCG;
+    /// [`Precision::Mixed`] runs the hot MVMs in f32 inside an f64
+    /// iterative-refinement loop that meets the same residual
+    /// certificate (see `crate::solvers::refine`). Folded into
+    /// [`super::CgConfig::precision`] the same way — Mixed only ever
+    /// *adds*.
+    pub precision: Precision,
+    /// Which space the covariance y-solves run in (`--space
+    /// auto|data|grid`).
+    pub space: SolveSpace,
+    /// Warm-start successive iterative solves with the previous
+    /// solution. Warm starts change where CG *starts*, never what it
+    /// converges to; disable for bit-reproducibility of individual
+    /// solves against cold runs.
+    pub warm_start: bool,
+}
+
+impl Default for SolverPolicy {
+    fn default() -> Self {
+        SolverPolicy {
+            precond: PrecondSpec::None,
+            precision: Precision::F64,
+            space: SolveSpace::Auto,
+            warm_start: true,
+        }
+    }
+}
+
+impl SolverPolicy {
+    /// Parse the three solver CLI flags — the values of `--precond`,
+    /// `--space`, and `--precision`, each `None` when absent — into a
+    /// policy. This is the *only* parser for these flags; every
+    /// subcommand (`train`, `snapshot`, `serve --live`, benches) calls
+    /// it, so the accepted grammar and the error wordings cannot drift
+    /// between entrypoints.
+    pub fn from_cli(
+        precond: Option<&str>,
+        space: Option<&str>,
+        precision: Option<&str>,
+    ) -> Result<Self> {
+        let precond = PrecondSpec::parse(precond.unwrap_or("none"))?;
+        let space = match space {
+            None | Some("auto") => SolveSpace::Auto,
+            Some("data") => SolveSpace::Data,
+            Some("grid") => SolveSpace::Grid,
+            Some(v) => {
+                return Err(crate::Error::Config(format!(
+                    "bad value for --space: '{v}' (auto|data|grid)"
+                )))
+            }
+        };
+        let precision = match precision {
+            None => Precision::F64,
+            Some(v) => Precision::parse(v).ok_or_else(|| {
+                crate::Error::Config(format!(
+                    "bad value for --precision: '{v}' (f64|mixed)"
+                ))
+            })?,
+        };
+        Ok(SolverPolicy {
+            precond,
+            precision,
+            space,
+            ..SolverPolicy::default()
+        })
+    }
+
+    /// Fold this policy into a [`super::CgConfig`] — the shared
+    /// "policy only ever adds" rule every embedding config applies at
+    /// construction: a non-default policy knob overrides the CG config,
+    /// a default one keeps whatever the caller set on `cg` directly.
+    pub fn fold_into(&self, cg: &mut super::CgConfig) {
+        if self.precision == Precision::Mixed {
+            cg.precision = Precision::Mixed;
+        }
+        if !matches!(self.precond, PrecondSpec::None) {
+            cg.precond = self.precond;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_is_the_historical_default() {
+        let p = SolverPolicy::default();
+        assert!(matches!(p.precond, PrecondSpec::None));
+        assert_eq!(p.precision, Precision::F64);
+        assert_eq!(p.space, SolveSpace::Auto);
+        assert!(p.warm_start);
+    }
+
+    #[test]
+    fn cli_parser_accepts_the_full_grammar() {
+        let p = SolverPolicy::from_cli(Some("rank:20"), Some("grid"), Some("mixed"))
+            .unwrap();
+        assert!(matches!(p.precond, PrecondSpec::PivChol { rank: 20 }));
+        assert_eq!(p.space, SolveSpace::Grid);
+        assert_eq!(p.precision, Precision::Mixed);
+        let p = SolverPolicy::from_cli(None, None, None).unwrap();
+        assert_eq!(p, SolverPolicy::default());
+    }
+
+    #[test]
+    fn cli_parser_preserves_legacy_error_wordings() {
+        let e = SolverPolicy::from_cli(None, Some("gird"), None).unwrap_err();
+        assert_eq!(
+            e.to_string(),
+            "config error: bad value for --space: 'gird' (auto|data|grid)"
+        );
+        let e = SolverPolicy::from_cli(None, None, Some("half")).unwrap_err();
+        assert_eq!(
+            e.to_string(),
+            "config error: bad value for --precision: 'half' (f64|mixed)"
+        );
+        let e = SolverPolicy::from_cli(Some("rank:0"), None, None).unwrap_err();
+        assert_eq!(
+            e.to_string(),
+            "config error: bad --precond 'rank:0' (expected rank:K, jacobi, or none)"
+        );
+    }
+
+    #[test]
+    fn fold_only_ever_adds() {
+        let mut cg = super::super::CgConfig {
+            precond: PrecondSpec::Jacobi,
+            ..Default::default()
+        };
+        SolverPolicy::default().fold_into(&mut cg);
+        assert!(matches!(cg.precond, PrecondSpec::Jacobi));
+        assert_eq!(cg.precision, Precision::F64);
+        let pol = SolverPolicy {
+            precond: PrecondSpec::PivChol { rank: 5 },
+            precision: Precision::Mixed,
+            ..Default::default()
+        };
+        pol.fold_into(&mut cg);
+        assert!(matches!(cg.precond, PrecondSpec::PivChol { rank: 5 }));
+        assert_eq!(cg.precision, Precision::Mixed);
+    }
+}

@@ -36,6 +36,10 @@ pub struct Observation {
     pub task: usize,
     pub x: Vec<f64>,
     pub y: f64,
+    /// Optional gradient observation ∇y at `x` (D-SKI): `Some` entries
+    /// carry d partial derivatives and make the refresh build the
+    /// extended-row operator. Persisted by snapshot format v6+.
+    pub grad: Option<Vec<f64>>,
 }
 
 /// Outcome of a [`ObservationLog::push`].
@@ -61,8 +65,10 @@ pub struct ObservationLog {
 /// FNV-1a over the task id and the little-endian bytes of `(x, y)` — the
 /// dedup key. The hash is internal (never persisted), so folding the
 /// task id in costs nothing for single-task models beyond eight zero
-/// bytes.
-fn payload_hash(task: usize, x: &[f64], y: f64) -> u64 {
+/// bytes. A gradient payload, when present, is folded after a marker
+/// word; observations without a gradient hash exactly as they always
+/// have, so mixed logs dedup both kinds correctly.
+fn payload_hash(task: usize, x: &[f64], y: f64, grad: Option<&[f64]>) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     let mut eat_bytes = |bytes: [u8; 8]| {
         for b in bytes {
@@ -75,6 +81,13 @@ fn payload_hash(task: usize, x: &[f64], y: f64) -> u64 {
         eat_bytes(v.to_le_bytes());
     }
     eat_bytes(y.to_le_bytes());
+    if let Some(g) = grad {
+        // Marker distinguishes `(x, y, grad=[0.0; d])` from `(x, y)`.
+        eat_bytes(u64::MAX.to_le_bytes());
+        for &v in g {
+            eat_bytes(v.to_le_bytes());
+        }
+    }
     h
 }
 
@@ -96,22 +109,59 @@ impl ObservationLog {
     /// *after* the push that fills the ring — pushes themselves are never
     /// refused.
     pub fn push(&mut self, task: usize, x: &[f64], y: f64) -> PushOutcome {
-        if self.contains(task, x, y) {
+        self.push_with_grad(task, x, y, None)
+    }
+
+    /// [`push`](Self::push) with an optional gradient payload; the
+    /// gradient participates in dedup (same `(x, y)` with and without a
+    /// gradient are distinct observations).
+    pub fn push_with_grad(
+        &mut self,
+        task: usize,
+        x: &[f64],
+        y: f64,
+        grad: Option<&[f64]>,
+    ) -> PushOutcome {
+        if self.contains_with_grad(task, x, y, grad) {
             return PushOutcome::Duplicate;
         }
         let seq = self.next_seq;
         self.next_seq += 1;
-        self.seen.insert(payload_hash(task, x, y));
-        self.entries
-            .push_back(Observation { seq, task, x: x.to_vec(), y });
+        self.seen.insert(payload_hash(task, x, y, grad));
+        self.entries.push_back(Observation {
+            seq,
+            task,
+            x: x.to_vec(),
+            y,
+            grad: grad.map(<[f64]>::to_vec),
+        });
         PushOutcome::Appended(seq)
     }
 
-    /// True iff a bitwise-identical `(task, x, y)` is pending.
+    /// True iff a bitwise-identical gradient-free `(task, x, y)` is
+    /// pending.
     pub fn contains(&self, task: usize, x: &[f64], y: f64) -> bool {
-        self.seen.contains(&payload_hash(task, x, y))
+        self.contains_with_grad(task, x, y, None)
+    }
+
+    /// True iff a bitwise-identical `(task, x, y, grad)` is pending.
+    pub fn contains_with_grad(
+        &self,
+        task: usize,
+        x: &[f64],
+        y: f64,
+        grad: Option<&[f64]>,
+    ) -> bool {
+        self.seen.contains(&payload_hash(task, x, y, grad))
             && self.entries.iter().any(|o| {
-                o.task == task && o.y.to_bits() == y.to_bits() && bits_eq(&o.x, x)
+                o.task == task
+                    && o.y.to_bits() == y.to_bits()
+                    && bits_eq(&o.x, x)
+                    && match (&o.grad, grad) {
+                        (None, None) => true,
+                        (Some(a), Some(b)) => bits_eq(a, b),
+                        _ => false,
+                    }
             })
     }
 
@@ -133,7 +183,8 @@ impl ObservationLog {
     pub fn restore(&mut self, entries: Vec<Observation>) {
         debug_assert!(entries.windows(2).all(|w| w[0].seq < w[1].seq));
         for o in &entries {
-            self.seen.insert(payload_hash(o.task, &o.x, o.y));
+            self.seen
+                .insert(payload_hash(o.task, &o.x, o.y, o.grad.as_deref()));
             self.next_seq = self.next_seq.max(o.seq + 1);
         }
         self.entries.extend(entries);
@@ -231,11 +282,38 @@ mod tests {
     }
 
     #[test]
+    fn gradient_payload_participates_in_dedup() {
+        let mut log = ObservationLog::new(8);
+        let x = [0.1, 0.2];
+        let g = [3.0, -4.0];
+        assert_eq!(
+            log.push_with_grad(0, &x, 1.0, Some(&g)),
+            PushOutcome::Appended(0)
+        );
+        // Exact retry (same gradient) is deduped…
+        assert_eq!(
+            log.push_with_grad(0, &x, 1.0, Some(&g)),
+            PushOutcome::Duplicate
+        );
+        // …but the same (x, y) without a gradient is a fresh observation,
+        assert_eq!(log.push(0, &x, 1.0), PushOutcome::Appended(1));
+        // …as is a zero gradient (the hash marker keeps it distinct from
+        // the gradient-free entry).
+        assert_eq!(
+            log.push_with_grad(0, &x, 1.0, Some(&[0.0, 0.0])),
+            PushOutcome::Appended(2)
+        );
+        assert!(log.contains_with_grad(0, &x, 1.0, Some(&g)));
+        assert!(!log.contains_with_grad(0, &x, 1.0, Some(&[3.0, 4.0])));
+        assert!(log.contains(0, &x, 1.0));
+    }
+
+    #[test]
     fn restore_resumes_sequence() {
         let mut log = ObservationLog::new(8);
         log.restore(vec![
-            Observation { seq: 3, task: 0, x: vec![0.5], y: 1.0 },
-            Observation { seq: 7, task: 1, x: vec![0.6], y: 2.0 },
+            Observation { seq: 3, task: 0, x: vec![0.5], y: 1.0, grad: None },
+            Observation { seq: 7, task: 1, x: vec![0.6], y: 2.0, grad: None },
         ]);
         assert_eq!(log.len(), 2);
         assert!(log.contains(0, &[0.5], 1.0));

@@ -12,7 +12,8 @@
 //!    with the previous α (padded with the standardized residual guess
 //!    for the new rows), reusing the preconditioner cached at the last
 //!    full refresh through [`PaddedPrecond`] while the hyperparameters
-//!    are unchanged. With [`StreamConfig::space`] in grid mode the
+//!    are unchanged. With the solver policy's space
+//!    ([`StreamConfig::policy`]) in grid mode the
 //!    re-solve runs on the m-dimensional grid-space normal equations
 //!    instead (`crate::solvers::gridspace`): `append_rows` folds the new
 //!    stencil rows into the precomputed `WᵀW` band, `Wᵀy` is folded
@@ -42,6 +43,24 @@
 //! appending a row would invalidate it — streaming a SKIP model is a
 //! typed [`Error::Stream`].
 //!
+//! # Derivative observations (D-SKI)
+//!
+//! A `(y, ∇y)` observation ([`IncrementalState::ingest_with_grad`])
+//! appends **1 + d** stencil rows — the value row plus one derivative
+//! stencil row per axis ([`KroneckerSkiOp::append_point`]) — and
+//! (1 + d) solve targets, making `W_ext (⊗K) W_extᵀ` the structured
+//! approximation of the derivative kernel `[[K, ∂K], [∂K, ∂²K]]`
+//! (Eriksson et al. 2018). Everything above carries over row-for-row:
+//! warm re-solves seed the derivative entries at zero, the grid-space
+//! `Wᵀy` folds `∂y/∂x_a` through the matching derivative stencil, the
+//! mean patch walks the interleaved row cursor, and the serving cache is
+//! rebuilt with gradient-aware scatters
+//! ([`crate::serve::cache::build_grad_cache`]) so
+//! [`IncrementalState::predict_grad`] reads ∇μ from the same grid
+//! buffer. Gradient observations are **single-task only** (the Hadamard
+//! operator has no extended row form) and persist in snapshot format
+//! v6+ pending logs.
+//!
 //! # Multi-task streaming
 //!
 //! A state built with [`IncrementalState::new_multitask`] carries a
@@ -66,23 +85,26 @@
 
 use super::log::{Observation, ObservationLog, PushOutcome};
 use crate::gp::{GpHypers, MvmGp, MvmVariant, SolveSpace};
-use crate::grid::{tensor_stencil, tensor_strides, Grid1d, RectilinearGrid};
+use crate::grid::{
+    tensor_stencil, tensor_stencil_grad, tensor_strides, Grid1d, RectilinearGrid,
+};
 use crate::kernels::{ProductKernel, Stationary1d, TaskKernel};
 use crate::linalg::{dot, Cholesky, Matrix, SymToeplitz};
 use crate::operators::{AffineRef, KroneckerSkiOp, LinearOp, TaskHadamardRef};
 use crate::serve::cache::{
-    build_task_cache, inverse_root_exact, inverse_root_lanczos, mean_from_scatter,
-    scatter_wt, PredictCache, TermCache, VarianceMode,
+    build_grad_cache, build_task_cache, inverse_root_exact, inverse_root_lanczos,
+    mean_from_scatter, scatter_wt, PredictCache, TermCache, VarianceMode,
 };
 use crate::serve::snapshot::{
     ModelSnapshot, SnapshotVariant, TaskHead, SNAPSHOT_VERSION,
 };
 use crate::solvers::{
     block_cg_solve_with, build_preconditioner, cg_solve_with, grid_cg_solve_with_wty,
-    CgConfig, GridSystem, IdentityPrecond, PaddedPrecond, Precision, Preconditioner,
-    PrecondSpec,
+    CgConfig, GridSystem, IdentityPrecond, PaddedPrecond, Preconditioner, PrecondSpec,
+    SolverPolicy,
 };
 use crate::{Error, Result};
+use std::borrow::Cow;
 use std::sync::Arc;
 
 /// Streaming-ingestion policy knobs.
@@ -106,18 +128,18 @@ pub struct StreamConfig {
     /// Mean-patch threshold: skip scattering α deltas below
     /// `patch_eps · ‖α‖_∞` (0 ⇒ scatter every nonzero delta).
     pub patch_eps: f64,
-    /// Which space the per-ingest α re-solves run in. Grid space keeps
-    /// the per-iteration solve cost independent of n — the natural fit
-    /// for an ever-growing stream — with `WᵀW`/`Wᵀy` folded forward
-    /// incrementally per accepted row. `Auto` picks grid space whenever
-    /// the frozen axes admit it (see `docs/SOLVERS.md`).
-    pub space: SolveSpace,
-    /// Arithmetic for the per-ingest re-solves (and every other solve
-    /// this state issues): [`Precision::Mixed`] runs the hot MVMs in f32
-    /// under an f64 refinement loop meeting the same residual
-    /// certificate (see `crate::solvers::refine`). Folded into the
-    /// [`CgConfig`] at construction.
-    pub precision: Precision,
+    /// The solver policy for every solve this state issues — the same
+    /// struct [`crate::gp::MvmGpConfig`] and
+    /// [`crate::serve::SnapshotConfig`] embed. `policy.space` picks the
+    /// space of the per-ingest α re-solves (grid space keeps the
+    /// per-iteration cost independent of n — the natural fit for an
+    /// ever-growing stream — with `WᵀW`/`Wᵀy` folded forward
+    /// incrementally per accepted row; `Auto` picks grid space whenever
+    /// the frozen axes admit it, see `docs/SOLVERS.md`);
+    /// `policy.precision`/`policy.precond` are folded into the
+    /// [`CgConfig`] at construction; `policy.warm_start` gates the
+    /// previous-iterate seeds of the per-ingest re-solves.
+    pub policy: SolverPolicy,
 }
 
 impl Default for StreamConfig {
@@ -129,8 +151,7 @@ impl Default for StreamConfig {
             log_capacity: 1024,
             variance: VarianceMode::Lanczos(64),
             patch_eps: 1e-12,
-            space: SolveSpace::Auto,
-            precision: Precision::F64,
+            policy: SolverPolicy::default(),
         }
     }
 }
@@ -195,6 +216,13 @@ pub struct IngestReport {
 pub struct IncrementalState {
     xs: Matrix,
     ys: Vec<f64>,
+    /// Per-point gradient observations (D-SKI), aligned with `xs` rows.
+    /// `Some` entries contribute d derivative stencil rows to the
+    /// operator and d extra targets to every solve; an all-`None` vector
+    /// keeps every code path bitwise-identical to the value-only model.
+    /// Single-task only — the multi-task Hadamard view has no extended
+    /// row form.
+    grads: Vec<Option<Vec<f64>>>,
     hypers: GpHypers,
     /// The frozen inducing-grid axes — never refitted while streaming.
     axes: Vec<Grid1d>,
@@ -367,14 +395,13 @@ impl IncrementalState {
                 got: axes.len(),
             });
         }
-        // Fold the stream-level precision switch into the CG config every
-        // solve site (ingest re-solve, refresh, variance block-solve)
-        // consumes. Mixed only ever adds — a caller that set
-        // `cg.precision` directly keeps their choice.
+        // Fold the policy's precision/preconditioner switches into the
+        // CG config every solve site (ingest re-solve, refresh, variance
+        // block-solve) consumes. The policy only ever adds — a caller
+        // that set `cg.precision`/`cg.precond` directly keeps their
+        // choice under a default policy.
         let mut cg = cg;
-        if cfg.precision == Precision::Mixed {
-            cg.precision = Precision::Mixed;
-        }
+        cfg.policy.fold_into(&mut cg);
         let kern = ProductKernel::rbf(xs.cols, hypers.ell(), 1.0);
         let op = Arc::new(KroneckerSkiOp::with_grids(&xs, &kern, axes.clone()));
         let n = xs.rows;
@@ -400,6 +427,7 @@ impl IncrementalState {
         Ok(IncrementalState {
             xs,
             ys,
+            grads: vec![None; n],
             hypers,
             axes,
             op,
@@ -422,9 +450,49 @@ impl IncrementalState {
         })
     }
 
+    /// True iff any training point carries a gradient observation — the
+    /// switch between the value-only paths (bitwise-legacy) and the
+    /// extended-row D-SKI paths.
+    fn has_any_grad(&self) -> bool {
+        self.grads.iter().any(Option::is_some)
+    }
+
+    /// Per-point gradient-presence mask, the row layout key shared with
+    /// [`crate::kernels::deriv_layout`].
+    fn grad_mask(&self) -> Vec<bool> {
+        self.grads.iter().map(Option::is_some).collect()
+    }
+
+    /// Extended-system row count: one row per point plus d per gradient
+    /// observation — the length of α and of every solve's target vector.
+    fn num_rows(&self) -> usize {
+        let d = self.xs.cols;
+        self.xs.rows + d * self.grads.iter().filter(|g| g.is_some()).count()
+    }
+
+    /// The solve targets: `ys` verbatim for value-only states (borrowed,
+    /// no copy on the hot path), or the interleaved `(y, ∇y)` vector
+    /// when any point carries a gradient.
+    fn targets(&self) -> Cow<'_, [f64]> {
+        if !self.has_any_grad() {
+            return Cow::Borrowed(&self.ys[..]);
+        }
+        let mut t = Vec::with_capacity(self.num_rows());
+        for (y, g) in self.ys.iter().zip(&self.grads) {
+            t.push(*y);
+            if let Some(g) = g {
+                t.extend_from_slice(g);
+            }
+        }
+        Cow::Owned(t)
+    }
+
     /// Adopt a trained [`MvmGp`] for streaming. Requires the KISS
     /// (dense-grid) variant on a single-term grid; the grid axes are
-    /// fitted once here and frozen.
+    /// fitted once here and frozen. A model trained with gradient
+    /// observations ([`MvmGp::new_with_grads`]) carries them into the
+    /// live state — its extended operator keeps growing by
+    /// value-or-gradient stencil rows per ingest.
     pub fn from_mvm(gp: &MvmGp, cfg: StreamConfig) -> Result<Self> {
         if gp.cfg.variant != MvmVariant::Kiss {
             return Err(Error::Stream(
@@ -446,7 +514,13 @@ impl IncrementalState {
         })?;
         let mut cg = gp.cfg.cg;
         cg.max_iters = cg.max_iters.max(200);
-        Self::new(gp.xs.clone(), gp.ys.clone(), gp.hypers, axes, cg, cfg)
+        let mut state =
+            Self::build(gp.xs.clone(), gp.ys.clone(), gp.hypers, axes, cg, cfg)?;
+        if let Some(g) = gp.grads() {
+            state.grads = (0..g.rows).map(|i| Some(g.row(i).to_vec())).collect();
+        }
+        state.refresh()?;
+        Ok(state)
     }
 
     /// The noise-shifted covariance view `σ_f²·K_ski + σ_n²·I` over the
@@ -491,7 +565,7 @@ impl IncrementalState {
     /// fold into it incrementally.
     fn resolve_space(&self) -> Result<bool> {
         if self.mt.is_some() {
-            return match self.cfg.space {
+            return match self.cfg.policy.space {
                 SolveSpace::Grid => Err(Error::Stream(
                     "grid-space re-solves are single-task only — the \
                      multi-task Hadamard operator (K_ski ∘ K_task) has no \
@@ -507,7 +581,7 @@ impl IncrementalState {
                 }
             };
         }
-        match self.cfg.space {
+        match self.cfg.policy.space {
             SolveSpace::Data => Ok(false),
             SolveSpace::Grid => {
                 self.op.grid_space_op()?;
@@ -543,11 +617,11 @@ impl IncrementalState {
     /// ingest and variance solves so they can never diverge.
     fn solve_precond(&self) -> Box<dyn Preconditioner + '_> {
         if matches!(self.precond, PrecondSpec::None) {
-            Box::new(IdentityPrecond::new(self.xs.rows))
+            Box::new(IdentityPrecond::new(self.num_rows()))
         } else {
             Box::new(PaddedPrecond::new(
                 self.pre.as_ref(),
-                self.xs.rows,
+                self.num_rows(),
                 self.hypers.sf2() + self.hypers.sn2(),
             ))
         }
@@ -558,8 +632,24 @@ impl IncrementalState {
     /// the grid scatter, and both caches; absorb the pending log.
     pub fn refresh(&mut self) -> Result<()> {
         let kern = ProductKernel::rbf(self.xs.cols, self.hypers.ell(), 1.0);
-        self.op =
-            Arc::new(KroneckerSkiOp::with_grids(&self.xs, &kern, self.axes.clone()));
+        self.op = if self.has_any_grad() {
+            // Mixed value/gradient rows: grow an empty operator point by
+            // point so each gradient-carrying observation contributes its
+            // d derivative stencil rows in the canonical interleaved
+            // order ([`KroneckerSkiOp::append_point`]).
+            let mut op = KroneckerSkiOp::with_grids(
+                &Matrix::zeros(0, self.xs.cols),
+                &kern,
+                self.axes.clone(),
+            );
+            for i in 0..self.xs.rows {
+                op.append_point(self.xs.row(i), self.grads[i].is_some());
+            }
+            Arc::new(op)
+        } else {
+            Arc::new(KroneckerSkiOp::with_grids(&self.xs, &kern, self.axes.clone()))
+        };
+        let targets = self.targets().into_owned();
         // The data-space preconditioner is kept in both modes: variance
         // solves (`predict_var`, the Lanczos factor) stay in data space.
         // Built against the full (multi-task-aware) view.
@@ -570,12 +660,15 @@ impl IncrementalState {
         let mut grid_result: Option<(usize, bool, f64)> = None;
         if self.grid_active {
             // Cold grid-space solve; Wᵀy is rebuilt from scratch here and
-            // only folded forward incrementally between refreshes.
-            self.wty = self.op.wt_matvec(&self.ys);
+            // only folded forward incrementally between refreshes. With
+            // gradient rows the extended Wᵀ folds the interleaved
+            // (y, ∇y) targets through value and derivative stencils
+            // alike.
+            self.wty = self.op.wt_matvec(&targets);
             let sys = self.grid_system()?;
-            let sol = grid_cg_solve_with_wty(&sys, &self.ys, &self.wty, None, self.cg);
+            let sol = grid_cg_solve_with_wty(&sys, &targets, &self.wty, None, self.cg);
             drop(sys);
-            if sol.converged || self.cfg.space == SolveSpace::Grid {
+            if sol.converged || self.cfg.policy.space == SolveSpace::Grid {
                 self.alpha = sol.alpha;
                 self.grid_q = Some(sol.v);
                 grid_result = Some((sol.iters, sol.converged, sol.rel_residual));
@@ -594,7 +687,7 @@ impl IncrementalState {
             None => {
                 crate::coordinator::metrics::global().incr("solver.space.data", 1);
                 let sol = self.with_view(|view| {
-                    cg_solve_with(view, &self.ys, self.pre.as_ref(), None, self.cg)
+                    cg_solve_with(view, &targets, self.pre.as_ref(), None, self.cg)
                 });
                 self.alpha = sol.x;
                 self.wty = Vec::new();
@@ -641,7 +734,58 @@ impl IncrementalState {
                     .into(),
             ));
         }
-        self.ingest_inner(xs_new, ys_new, None)
+        self.ingest_inner(xs_new, ys_new, None, None)
+    }
+
+    /// Ingest one `(y, ∇y)` observation — see
+    /// [`ingest_block_grads`](Self::ingest_block_grads).
+    pub fn ingest_with_grad(
+        &mut self,
+        x: &[f64],
+        y: f64,
+        grad: &[f64],
+    ) -> Result<IngestReport> {
+        let d = self.xs.cols;
+        if x.len() != d {
+            return Err(Error::DimMismatch {
+                context: "ingested observation dimensionality",
+                expected: d,
+                got: x.len(),
+            });
+        }
+        let xs = Matrix::from_vec(1, d, x.to_vec());
+        let grads = Matrix::from_vec(1, d, grad.to_vec());
+        self.ingest_block_grads(&xs, &[y], &grads)
+    }
+
+    /// Ingest a block of `(y, ∇y)` observations (D-SKI): each accepted
+    /// row appends its value stencil row **plus d derivative stencil
+    /// rows** to the operator and (1+d) targets to the solve, then the
+    /// warm re-solve / mean patch / drift policies run exactly as in
+    /// [`ingest_block`](Self::ingest_block). Single-task only — the
+    /// multi-task Hadamard operator has no extended row form.
+    pub fn ingest_block_grads(
+        &mut self,
+        xs_new: &Matrix,
+        ys_new: &[f64],
+        grads_new: &Matrix,
+    ) -> Result<IngestReport> {
+        if self.mt.is_some() {
+            return Err(Error::Stream(
+                "gradient observations are single-task only — the \
+                 multi-task Hadamard operator (K_ski ∘ K_task) has no \
+                 extended derivative-row form"
+                    .into(),
+            ));
+        }
+        if grads_new.rows != xs_new.rows || grads_new.cols != xs_new.cols {
+            return Err(Error::DimMismatch {
+                context: "ingested observation gradients",
+                expected: xs_new.rows * xs_new.cols,
+                got: grads_new.rows * grads_new.cols,
+            });
+        }
+        self.ingest_inner(xs_new, ys_new, None, Some(grads_new))
     }
 
     /// Ingest a block of `(task, x, y)` observations into a multi-task
@@ -672,15 +816,19 @@ impl IncrementalState {
                 got: tasks.len(),
             });
         }
-        self.ingest_inner(xs_new, ys_new, Some(tasks))
+        self.ingest_inner(xs_new, ys_new, Some(tasks), None)
     }
 
-    /// Shared ingest body; `tasks` is `Some` exactly when `self.mt` is.
+    /// Shared ingest body; `tasks` is `Some` exactly when `self.mt` is,
+    /// and `grads_new` (one ∇y row per input row) only ever arrives on
+    /// single-task states ([`ingest_block_grads`](Self::ingest_block_grads)
+    /// rejects the combination).
     fn ingest_inner(
         &mut self,
         xs_new: &Matrix,
         ys_new: &[f64],
         tasks: Option<&[usize]>,
+        grads_new: Option<&Matrix>,
     ) -> Result<IngestReport> {
         let d = self.xs.cols;
         if xs_new.cols != d {
@@ -697,10 +845,17 @@ impl IncrementalState {
                 got: ys_new.len(),
             });
         }
+        let grad_at =
+            |i: usize| -> Option<&[f64]> { grads_new.map(|g| g.row(i)) };
         for i in 0..xs_new.rows {
             if !ys_new[i].is_finite() || xs_new.row(i).iter().any(|v| !v.is_finite()) {
                 return Err(Error::Stream(format!(
                     "non-finite observation at row {i}"
+                )));
+            }
+            if grad_at(i).is_some_and(|g| g.iter().any(|v| !v.is_finite())) {
+                return Err(Error::Stream(format!(
+                    "non-finite gradient observation at row {i}"
                 )));
             }
         }
@@ -730,7 +885,9 @@ impl IncrementalState {
         // Row-wise dedup: against the pending log (client retries) AND
         // against earlier rows of this very block — two clients retrying
         // the same observation can land in one coalesced batch. The key
-        // is the full (task, x, y) triple.
+        // is the full (task, x, y, ∇y) tuple; within one block the rows
+        // share a single gradient matrix (all-Some or all-None), so the
+        // value comparison suffices there once the gradients match.
         let bits_eq = |i: usize, j: usize| {
             task_at(i) == task_at(j)
                 && ys_new[i].to_bits() == ys_new[j].to_bits()
@@ -739,12 +896,23 @@ impl IncrementalState {
                     .iter()
                     .zip(xs_new.row(j))
                     .all(|(a, b)| a.to_bits() == b.to_bits())
+                && match (grad_at(i), grad_at(j)) {
+                    (None, None) => true,
+                    (Some(a), Some(b)) => {
+                        a.iter().zip(b).all(|(u, v)| u.to_bits() == v.to_bits())
+                    }
+                    _ => unreachable!("one gradient matrix per block"),
+                }
         };
         let mut outcomes: Vec<RowOutcome> = Vec::with_capacity(xs_new.rows);
         let mut fresh_rows: Vec<usize> = Vec::with_capacity(xs_new.rows);
         for i in 0..xs_new.rows {
-            let duplicate = self.log.contains(task_at(i), xs_new.row(i), ys_new[i])
-                || fresh_rows.iter().any(|&j| bits_eq(i, j));
+            let duplicate = self.log.contains_with_grad(
+                task_at(i),
+                xs_new.row(i),
+                ys_new[i],
+                grad_at(i),
+            ) || fresh_rows.iter().any(|&j| bits_eq(i, j));
             if duplicate {
                 outcomes.push(RowOutcome::Duplicate);
             } else {
@@ -814,7 +982,9 @@ impl IncrementalState {
         // Pre-ingest predictive view of the fresh points: the warm-seed
         // guess for their α entries and the outlier z-scores, each read
         // from the observation's own task cache with its task's prior
-        // variance in the denominator.
+        // variance in the denominator. A gradient-carrying row seeds its
+        // value α entry the same way and its d derivative entries at 0
+        // (no cheap standardized-residual analogue for derivative rows).
         let denom0 = self.hypers.sf2() + self.hypers.sn2();
         let mut guesses = Vec::with_capacity(fresh_rows.len());
         let mut max_z = 0.0f64;
@@ -838,6 +1008,9 @@ impl IncrementalState {
                 }
             };
             guesses.push(resid / denom);
+            if grad_at(i).is_some() {
+                guesses.extend(std::iter::repeat(0.0).take(d));
+            }
         }
 
         // Extend the data, W (and, in grid mode, WᵀW — `append_rows`
@@ -850,6 +1023,7 @@ impl IncrementalState {
         self.xs.rows += block.rows;
         for &i in &fresh_rows {
             self.ys.push(ys_new[i]);
+            self.grads.push(grad_at(i).map(<[f64]>::to_vec));
         }
         if let Some(ts) = tasks {
             let mt = self.mt.as_mut().expect("task ingests are multi-task");
@@ -857,9 +1031,22 @@ impl IncrementalState {
                 mt.task_of.push(ts[i]);
             }
         }
-        Arc::get_mut(&mut self.op)
-            .expect("grid systems are transient — no clone outlives its solve")
-            .append_rows(&block);
+        {
+            let op = Arc::get_mut(&mut self.op)
+                .expect("grid systems are transient — no clone outlives its solve");
+            if self.grads.iter().any(Option::is_some) {
+                // Extended-row operator: each accepted point appends its
+                // value row plus (when it carries a gradient) d
+                // derivative stencil rows, keeping the interleaved D-SKI
+                // layout — and, in grid mode, folding every new row into
+                // the built WᵀW band.
+                for (r, &i) in fresh_rows.iter().enumerate() {
+                    op.append_point(block.row(r), grad_at(i).is_some());
+                }
+            } else {
+                op.append_rows(&block);
+            }
+        }
         let n = self.xs.rows;
 
         let alpha_old = std::mem::take(&mut self.alpha);
@@ -878,31 +1065,55 @@ impl IncrementalState {
                 tensor_stencil(block.row(r), &self.axes, &strides, |g, w| {
                     wty[g] += w * y;
                 });
+                // Gradient rows fold their ∂y/∂x_axis target through the
+                // matching derivative stencil — the W_extᵀ(y, ∇y)
+                // contribution of the new rows, never re-reading the
+                // n-vector.
+                if let Some(gv) = grad_at(i) {
+                    for (axis, &g_a) in gv.iter().enumerate() {
+                        tensor_stencil_grad(
+                            block.row(r),
+                            axis,
+                            &self.axes,
+                            &strides,
+                            |g, w| {
+                                wty[g] += w * g_a;
+                            },
+                        );
+                    }
+                }
             }
             self.wty = wty;
+            let targets = self.targets().into_owned();
             let sys = self.grid_system()?;
-            let sol = grid_cg_solve_with_wty(
-                &sys,
-                &self.ys,
-                &self.wty,
-                self.grid_q.as_deref(),
-                self.cg,
-            );
+            let q0 = if self.cfg.policy.warm_start {
+                self.grid_q.as_deref()
+            } else {
+                None
+            };
+            let sol = grid_cg_solve_with_wty(&sys, &targets, &self.wty, q0, self.cg);
             drop(sys);
             self.alpha = sol.alpha;
             self.grid_q = Some(sol.v);
             (sol.iters, !sol.converged)
         } else {
             // Data space: warm-started PCG seeded with the previous α
-            // padded by the standardized-residual guesses, reusing the
-            // refresh-time preconditioner padded out to the grown system
-            // (exact diagonal on the tail).
+            // padded by the standardized-residual guesses (zeros for
+            // derivative rows), reusing the refresh-time preconditioner
+            // padded out to the grown system (exact diagonal on the
+            // tail).
             let mut seed = alpha_old.clone();
             seed.extend_from_slice(&guesses);
+            let x0 = if self.cfg.policy.warm_start {
+                Some(seed.as_slice())
+            } else {
+                None
+            };
             crate::coordinator::metrics::global().incr("solver.space.data", 1);
+            let targets = self.targets().into_owned();
             let pre = self.solve_precond();
             let sol = self.with_view(|view| {
-                cg_solve_with(view, &self.ys, pre.as_ref(), Some(seed.as_slice()), self.cg)
+                cg_solve_with(view, &targets, pre.as_ref(), x0, self.cg)
             });
             // End the Box's borrow of self.pre before the &mut self calls
             // below (Box drop glue keeps it live otherwise).
@@ -923,7 +1134,12 @@ impl IncrementalState {
         for o in outcomes.iter_mut() {
             if let RowOutcome::Accepted { seq } = o {
                 let i = *fresh_iter.next().expect("fresh row for outcome");
-                match self.log.push(task_at(i), xs_new.row(i), ys_new[i]) {
+                match self.log.push_with_grad(
+                    task_at(i),
+                    xs_new.row(i),
+                    ys_new[i],
+                    grad_at(i),
+                ) {
                     PushOutcome::Appended(s) => *seq = s,
                     PushOutcome::Duplicate => unreachable!("deduped above"),
                 }
@@ -1005,13 +1221,14 @@ impl IncrementalState {
     /// into this model, in chronological order. Multi-task models route
     /// each observation to its recorded task (re-enrolling any task that
     /// was first seen mid-stream); single-task models reject entries
-    /// naming a nonzero task.
+    /// naming a nonzero task. Gradient-carrying entries (snapshot v6+)
+    /// replay through [`ingest_block_grads`](Self::ingest_block_grads):
+    /// consecutive same-kind entries are chunked into one block each, so
+    /// chronological order is preserved while a homogeneous pending log
+    /// still replays as a single solve.
     pub fn ingest_observations(&mut self, obs: &[Observation]) -> Result<IngestReport> {
         let d = self.xs.cols;
-        let mut xs = Matrix::zeros(obs.len(), d);
-        let mut ys = Vec::with_capacity(obs.len());
-        let mut tasks = Vec::with_capacity(obs.len());
-        for (i, o) in obs.iter().enumerate() {
+        for o in obs {
             if o.x.len() != d {
                 return Err(Error::DimMismatch {
                     context: "replayed observation dimensionality",
@@ -1019,11 +1236,33 @@ impl IncrementalState {
                     got: o.x.len(),
                 });
             }
-            xs.row_mut(i).copy_from_slice(&o.x);
-            ys.push(o.y);
-            tasks.push(o.task);
+            if let Some(g) = &o.grad {
+                if g.len() != d {
+                    return Err(Error::DimMismatch {
+                        context: "replayed observation gradient",
+                        expected: d,
+                        got: g.len(),
+                    });
+                }
+            }
         }
         if self.mt.is_some() {
+            if let Some(o) = obs.iter().find(|o| o.grad.is_some()) {
+                return Err(Error::Stream(format!(
+                    "replayed observation (seq {}) carries a gradient but \
+                     this model is multi-task — gradient observations are \
+                     single-task only",
+                    o.seq
+                )));
+            }
+            let mut xs = Matrix::zeros(obs.len(), d);
+            let mut ys = Vec::with_capacity(obs.len());
+            let mut tasks = Vec::with_capacity(obs.len());
+            for (i, o) in obs.iter().enumerate() {
+                xs.row_mut(i).copy_from_slice(&o.x);
+                ys.push(o.y);
+                tasks.push(o.task);
+            }
             return self.ingest_block_tasks(&xs, &ys, &tasks);
         }
         if let Some(o) = obs.iter().find(|o| o.task != 0) {
@@ -1033,7 +1272,42 @@ impl IncrementalState {
                 o.task
             )));
         }
-        self.ingest_block(&xs, &ys)
+        if obs.is_empty() {
+            return self.ingest_block(&Matrix::zeros(0, d), &[]);
+        }
+        let mut report: Option<IngestReport> = None;
+        let mut start = 0usize;
+        while start < obs.len() {
+            let with_grad = obs[start].grad.is_some();
+            let mut end = start + 1;
+            while end < obs.len() && obs[end].grad.is_some() == with_grad {
+                end += 1;
+            }
+            let chunk = &obs[start..end];
+            let mut xs = Matrix::zeros(chunk.len(), d);
+            let mut ys = Vec::with_capacity(chunk.len());
+            for (i, o) in chunk.iter().enumerate() {
+                xs.row_mut(i).copy_from_slice(&o.x);
+                ys.push(o.y);
+            }
+            let r = if with_grad {
+                let mut grads = Matrix::zeros(chunk.len(), d);
+                for (i, o) in chunk.iter().enumerate() {
+                    grads
+                        .row_mut(i)
+                        .copy_from_slice(o.grad.as_ref().expect("chunked on Some"));
+                }
+                self.ingest_block_grads(&xs, &ys, &grads)?
+            } else {
+                self.ingest_block(&xs, &ys)?
+            };
+            report = Some(match report {
+                None => r,
+                Some(acc) => merge_reports(acc, r),
+            });
+            start = end;
+        }
+        Ok(report.expect("non-empty observation list"))
     }
 
     /// Rebuild the grid scatter(s) from scratch (refresh path) — the
@@ -1041,7 +1315,15 @@ impl IncrementalState {
     /// rebuild every task's masked scatter `Wᵀ(c_t ∘ α)`.
     fn rebuild_scatter(&mut self) {
         let Some(mt) = &self.mt else {
-            self.wta = scatter_wt(&self.xs, &self.alpha, &self.axes);
+            self.wta = if self.has_any_grad() {
+                // Extended rows: W_extᵀα through the operator's own row
+                // list — value-only states keep the historical
+                // `scatter_wt` call, whose accumulation order it matches
+                // bitwise.
+                self.op.wt_matvec(&self.alpha)
+            } else {
+                scatter_wt(&self.xs, &self.alpha, &self.axes)
+            };
             return;
         };
         let s = mt.kernel.num_tasks();
@@ -1076,6 +1358,51 @@ impl IncrementalState {
             Some(mt) => std::mem::take(&mut mt.wtas),
             None => Vec::new(),
         };
+        if self.has_any_grad() {
+            // Extended rows (single-task only): walk the interleaved row
+            // cursor — each point's value row, then its d derivative
+            // rows when it carries a gradient. Appended rows are a
+            // suffix, so `r < alpha_old.len()` identifies surviving
+            // entries exactly as the value-only walk does.
+            debug_assert!(self.mt.is_none(), "gradients are single-task only");
+            let rows_old = alpha_old.len();
+            let mut r = 0usize;
+            for i in 0..self.xs.rows {
+                let old = if r < rows_old { alpha_old[r] } else { 0.0 };
+                let delta = self.alpha[r] - old;
+                if delta != 0.0 && delta.abs() > eps {
+                    touched += 1;
+                    tensor_stencil(self.xs.row(i), &self.axes, &strides, |g, w| {
+                        wta[g] += w * delta;
+                    });
+                }
+                r += 1;
+                if self.grads[i].is_some() {
+                    for axis in 0..self.xs.cols {
+                        let old = if r < rows_old { alpha_old[r] } else { 0.0 };
+                        let delta = self.alpha[r] - old;
+                        if delta != 0.0 && delta.abs() > eps {
+                            touched += 1;
+                            tensor_stencil_grad(
+                                self.xs.row(i),
+                                axis,
+                                &self.axes,
+                                &strides,
+                                |g, w| {
+                                    wta[g] += w * delta;
+                                },
+                            );
+                        }
+                        r += 1;
+                    }
+                }
+            }
+            debug_assert_eq!(r, self.alpha.len());
+            self.wta = wta;
+            self.cache.terms_mut()[0].mean =
+                mean_from_scatter(&self.wta, &self.factors, &dims, self.hypers.sf2());
+            return touched;
+        }
         for i in 0..self.xs.rows {
             let old = if i < n_old { alpha_old[i] } else { 0.0 };
             let delta = self.alpha[i] - old;
@@ -1129,7 +1456,13 @@ impl IncrementalState {
             VarianceMode::Exact => {
                 let kern =
                     ProductKernel::rbf(self.xs.cols, self.hypers.ell(), self.hypers.sf2());
-                let mut khat = kern.gram_sym(&self.xs);
+                let mut khat = if self.has_any_grad() {
+                    // Dense derivative kernel over the extended rows —
+                    // the exact K̂ the extended operator approximates.
+                    kern.gram_deriv_sym(&self.xs, &self.grad_mask())
+                } else {
+                    kern.gram_sym(&self.xs)
+                };
                 if let Some(mt) = &self.mt {
                     for i in 0..khat.rows {
                         for j in 0..khat.cols {
@@ -1144,10 +1477,25 @@ impl IncrementalState {
             }
             VarianceMode::Lanczos(rank) => {
                 let rank = *rank;
-                Some(self.with_view(|view| inverse_root_lanczos(view, &self.ys, rank))?)
+                let probe = self.targets();
+                Some(self.with_view(|view| inverse_root_lanczos(view, &probe, rank))?)
             }
         };
         let grid = RectilinearGrid::from_axes(self.axes.clone());
+        if self.has_any_grad() {
+            self.cache = build_grad_cache(
+                &self.xs,
+                &self.grad_mask(),
+                &self.alpha,
+                &self.hypers,
+                crate::grid::GridSpec::Rectilinear(
+                    self.axes.iter().map(|g| g.m).collect(),
+                ),
+                self.axes.clone(),
+                s.as_ref(),
+            )?;
+            return Ok(());
+        }
         match &self.mt {
             None => {
                 self.cache = PredictCache::build(
@@ -1186,6 +1534,15 @@ impl IncrementalState {
         self.cache.predict_mean(xtest)
     }
 
+    /// Gradient of the predictive mean (n* × d) from the live cache —
+    /// the same grid buffer queried through derivative stencils, so it
+    /// is as fresh as the mean (patched every ingest). Available on
+    /// value-only states too: the posterior mean is differentiable
+    /// whether or not gradients were observed.
+    pub fn predict_grad(&self, xtest: &Matrix) -> Matrix {
+        self.cache.predict_grad(xtest)
+    }
+
     /// Latent predictive variance at solver grade: all test solves ride
     /// one block-CG call against the current operator (exact up to CG
     /// tolerance, unlike the rank-r cache variance). Single-task only —
@@ -1202,7 +1559,19 @@ impl IncrementalState {
         }
         let kern =
             ProductKernel::rbf(self.xs.cols, self.hypers.ell(), self.hypers.sf2());
-        let kx = kern.gram(&self.xs, xtest);
+        let kx = if self.has_any_grad() {
+            // Extended cross-covariance: derivative-kernel rows against
+            // value-only test columns, matching the extended operator's
+            // row count.
+            kern.gram_deriv(
+                &self.xs,
+                &self.grad_mask(),
+                xtest,
+                &vec![false; xtest.rows],
+            )
+        } else {
+            kern.gram(&self.xs, xtest)
+        };
         let view = self.view();
         let pre = self.solve_precond();
         let sol = block_cg_solve_with(&view, &kx, pre.as_ref(), None, self.cg);
@@ -1216,7 +1585,8 @@ impl IncrementalState {
 
     /// Freeze the live state into a serving snapshot; the pending log
     /// rides along (format v3), as do the α solve-space provenance
-    /// (format v4) and the multi-task head (format v5).
+    /// (format v4), the multi-task head (format v5), and any pending
+    /// gradient payloads (format v6).
     pub fn to_snapshot(&self) -> ModelSnapshot {
         ModelSnapshot {
             version: SNAPSHOT_VERSION,
@@ -1297,5 +1667,33 @@ impl IncrementalState {
     /// The frozen inducing-grid axes.
     pub fn axes(&self) -> &[Grid1d] {
         &self.axes
+    }
+
+    /// How many training points carry a gradient observation (0 for
+    /// value-only states).
+    pub fn num_grad_points(&self) -> usize {
+        self.grads.iter().filter(|g| g.is_some()).count()
+    }
+}
+
+/// Concatenate two chronologically-consecutive ingest reports (the
+/// chunked replay of a mixed value/gradient pending log): counters sum,
+/// outcomes concatenate, and the later report wins the point-in-time
+/// fields (`n`, `pending`, `refreshed`).
+fn merge_reports(a: IngestReport, b: IngestReport) -> IngestReport {
+    let mut outcomes = a.outcomes;
+    outcomes.extend(b.outcomes);
+    IngestReport {
+        outcomes,
+        accepted: a.accepted + b.accepted,
+        duplicates: a.duplicates + b.duplicates,
+        solve_iters: a.solve_iters + b.solve_iters,
+        iters_saved: a.iters_saved + b.iters_saved,
+        rows_patched: a.rows_patched + b.rows_patched,
+        var_rebuilt: a.var_rebuilt || b.var_rebuilt,
+        refreshed: b.refreshed.or(a.refreshed),
+        enrolled: a.enrolled + b.enrolled,
+        n: b.n,
+        pending: b.pending,
     }
 }

@@ -1,0 +1,477 @@
+//! Property tests for D-SKI derivative observations (ISSUE 10).
+//!
+//! - On-grid D-SKI models match a dense derivative-kernel oracle
+//!   ([`ExactGradGp`]) in both predictive mean and mean-gradient to
+//!   1e-5, for d ∈ {1, 2}.
+//! - Streaming `(y, ∇y)` ingestion (singles and blocks) matches a cold
+//!   refit on the full data to 1e-6, and a forced [`IncrementalState::refresh`]
+//!   does not move predictions.
+//! - Snapshot format v6 round-trips bitwise with grad-carrying pending
+//!   entries, and every historical format v1–v5 still migrates (v5 via a
+//!   byte-spliced downgrade — no fixture file predates v6 pending grads).
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+
+use skip_gp::gp::{ExactGp, ExactGradGp, GpHypers, MvmGp, MvmGpConfig, MvmVariant};
+use skip_gp::grid::{Grid1d, GridSpec};
+use skip_gp::linalg::Matrix;
+use skip_gp::serve::{
+    ModelSnapshot, SnapshotConfig, VarianceMode, SNAPSHOT_VERSION,
+};
+use skip_gp::solvers::CgConfig;
+use skip_gp::stream::{IncrementalState, Observation, StreamConfig};
+use skip_gp::util::Rng;
+
+/// Tight CG so solver error sits far below the stencil-accuracy
+/// tolerances the assertions pin.
+fn tight_cg() -> CgConfig {
+    CgConfig { max_iters: 2000, tol: 1e-10, ..Default::default() }
+}
+
+fn kiss_cfg(m: usize) -> MvmGpConfig {
+    MvmGpConfig {
+        variant: MvmVariant::Kiss,
+        grid: GridSpec::uniform(m),
+        cg: tight_cg(),
+        ..Default::default()
+    }
+}
+
+/// Streaming config with every automatic refresh trigger disabled, so
+/// the test exercises the warm incremental path and nothing else.
+fn warm_only_cfg() -> StreamConfig {
+    StreamConfig {
+        refresh_every: 0,
+        var_drift_budget: 0,
+        error_z: 0.0,
+        log_capacity: 64,
+        variance: VarianceMode::Lanczos(32),
+        patch_eps: 1e-12,
+        ..Default::default()
+    }
+}
+
+/// D-SKI on on-grid 1-D data matches the dense derivative-kernel oracle:
+/// when every training point sits exactly on an inducing node, the value
+/// stencils are exact and the derivative stencils are O(h²·k'''), far
+/// below 1e-5 at this grid density.
+#[test]
+fn dski_matches_dense_derivative_oracle_1d() {
+    let m = 512;
+    let n = 120;
+    let g = Grid1d::fit(0.0, 1.0, m).unwrap();
+    // Node indices spanning the full interior [2, m-3], endpoints
+    // included — data min/max are then exactly 0 and 1, so the model's
+    // own grid fit reproduces these axes.
+    let f = |x: f64| (3.0 * x).sin() + 0.5 * (5.0 * x).cos();
+    let fp = |x: f64| 3.0 * (3.0 * x).cos() - 2.5 * (5.0 * x).sin();
+    let xs = Matrix::from_fn(n, 1, |k, _| {
+        let i = 2 + ((k * (m - 5)) as f64 / (n - 1) as f64).round() as usize;
+        g.point(i)
+    });
+    let ys: Vec<f64> = (0..n).map(|k| f(xs.get(k, 0))).collect();
+    let grads = Matrix::from_fn(n, 1, |k, _| fp(xs.get(k, 0)));
+    let h = GpHypers::new(2.0, 1.0, 0.1);
+
+    let mut gp =
+        MvmGp::new_with_grads(xs.clone(), ys.clone(), grads.clone(), h, kiss_cfg(m))
+            .unwrap();
+    gp.refresh().unwrap();
+    let mut oracle = ExactGradGp::new(xs, ys, grads, h);
+    oracle.refresh().unwrap();
+
+    let mut rng = Rng::new(11);
+    let q = Matrix::from_fn(40, 1, |_, _| rng.uniform_in(0.03, 0.97));
+    let (mean, want_mean) = (gp.predict_mean(&q), oracle.predict_mean(&q));
+    let (grad, want_grad) = (gp.predict_grad(&q), oracle.predict_grad(&q));
+    for i in 0..q.rows {
+        assert!(
+            (mean[i] - want_mean[i]).abs() <= 1e-5,
+            "1-D mean at x={}: ski {} vs oracle {}",
+            q.get(i, 0),
+            mean[i],
+            want_mean[i]
+        );
+        assert!(
+            (grad.get(i, 0) - want_grad.get(i, 0)).abs() <= 1e-5,
+            "1-D mean-gradient at x={}: ski {} vs oracle {}",
+            q.get(i, 0),
+            grad.get(i, 0),
+            want_grad.get(i, 0)
+        );
+    }
+}
+
+/// Same property in 2-D: an 8×8 lattice of inducing nodes (corners
+/// included) as training data, KISS D-SKI vs the dense oracle.
+#[test]
+fn dski_matches_dense_derivative_oracle_2d() {
+    let m = 200;
+    let g = Grid1d::fit(0.0, 1.0, m).unwrap();
+    let f = |x0: f64, x1: f64| (2.0 * x0).sin() * (3.0 * x1).cos();
+    let g0 = |x0: f64, x1: f64| 2.0 * (2.0 * x0).cos() * (3.0 * x1).cos();
+    let g1 = |x0: f64, x1: f64| -3.0 * (2.0 * x0).sin() * (3.0 * x1).sin();
+    let idx: Vec<usize> =
+        (0..8).map(|a| 2 + ((a * (m - 5)) as f64 / 7.0).round() as usize).collect();
+    assert_eq!((idx[0], idx[7]), (2, m - 3), "lattice must include the grid corners");
+    let n = idx.len() * idx.len();
+    let xs = Matrix::from_fn(n, 2, |k, j| {
+        let (a, b) = (idx[k / 8], idx[k % 8]);
+        g.point(if j == 0 { a } else { b })
+    });
+    let ys: Vec<f64> = (0..n).map(|k| f(xs.get(k, 0), xs.get(k, 1))).collect();
+    let grads = Matrix::from_fn(n, 2, |k, j| {
+        let (x0, x1) = (xs.get(k, 0), xs.get(k, 1));
+        if j == 0 {
+            g0(x0, x1)
+        } else {
+            g1(x0, x1)
+        }
+    });
+    let h = GpHypers::new(2.5, 1.0, 0.1);
+
+    let mut gp =
+        MvmGp::new_with_grads(xs.clone(), ys.clone(), grads.clone(), h, kiss_cfg(m))
+            .unwrap();
+    gp.refresh().unwrap();
+    let mut oracle = ExactGradGp::new(xs, ys, grads, h);
+    oracle.refresh().unwrap();
+
+    let mut rng = Rng::new(12);
+    let q = Matrix::from_fn(30, 2, |_, _| rng.uniform_in(0.03, 0.97));
+    let (mean, want_mean) = (gp.predict_mean(&q), oracle.predict_mean(&q));
+    let (grad, want_grad) = (gp.predict_grad(&q), oracle.predict_grad(&q));
+    for i in 0..q.rows {
+        assert!(
+            (mean[i] - want_mean[i]).abs() <= 1e-5,
+            "2-D mean at row {i}: ski {} vs oracle {}",
+            mean[i],
+            want_mean[i]
+        );
+        for j in 0..2 {
+            assert!(
+                (grad.get(i, j) - want_grad.get(i, j)).abs() <= 1e-5,
+                "2-D mean-gradient at row {i} axis {j}: ski {} vs oracle {}",
+                grad.get(i, j),
+                want_grad.get(i, j)
+            );
+        }
+    }
+}
+
+/// Data for the streaming tests: 40 points in [-1, 1]² with analytic
+/// gradients; the corners (-1,-1) and (1,1) sit in the first two rows so
+/// every prefix ≥ 2 spans the same bounding box (identical grid axes
+/// between the streamed prefix model and the cold full-data refit).
+fn bo_style_data(seed: u64) -> (Matrix, Vec<f64>, Matrix) {
+    let mut rng = Rng::new(seed);
+    let n = 40;
+    let f = |x0: f64, x1: f64| (1.3 * x0).sin() + 0.7 * (1.9 * x1).cos();
+    let xs = Matrix::from_fn(n, 2, |i, j| match (i, j) {
+        (0, _) => -1.0,
+        (1, _) => 1.0,
+        _ => rng.uniform_in(-1.0, 1.0),
+    });
+    let ys: Vec<f64> = (0..n).map(|i| f(xs.get(i, 0), xs.get(i, 1))).collect();
+    let grads = Matrix::from_fn(n, 2, |i, j| {
+        if j == 0 {
+            1.3 * (1.3 * xs.get(i, 0)).cos()
+        } else {
+            -0.7 * 1.9 * (1.9 * xs.get(i, 1)).sin()
+        }
+    });
+    (xs, ys, grads)
+}
+
+fn rows(m: &Matrix, lo: usize, hi: usize) -> Matrix {
+    Matrix::from_fn(hi - lo, m.cols, |i, j| m.get(lo + i, j))
+}
+
+/// Streamed `(y, ∇y)` ingestion — six warm singles plus one block —
+/// matches a cold refit on the full 40-point data set to 1e-6 in both
+/// mean and mean-gradient.
+#[test]
+fn streamed_grad_ingest_matches_cold_refit() {
+    let (xs, ys, grads) = bo_style_data(21);
+    let h = GpHypers::new(0.7, 1.0, 0.05);
+
+    let prefix = MvmGp::new_with_grads(
+        rows(&xs, 0, 28),
+        ys[..28].to_vec(),
+        rows(&grads, 0, 28),
+        h,
+        kiss_cfg(32),
+    )
+    .unwrap();
+    let mut state = IncrementalState::from_mvm(&prefix, warm_only_cfg()).unwrap();
+    for i in 28..34 {
+        let report = state
+            .ingest_with_grad(xs.row(i), ys[i], grads.row(i))
+            .unwrap_or_else(|e| panic!("ingest row {i}: {e}"));
+        assert_eq!(report.accepted, 1, "row {i}");
+    }
+    state
+        .ingest_block_grads(&rows(&xs, 34, 40), &ys[34..40], &rows(&grads, 34, 40))
+        .unwrap();
+    assert_eq!(state.n(), 40);
+    assert_eq!(state.num_grad_points(), 40);
+
+    let mut cold =
+        MvmGp::new_with_grads(xs.clone(), ys.clone(), grads, h, kiss_cfg(32)).unwrap();
+    cold.refresh().unwrap();
+
+    let mut rng = Rng::new(22);
+    let q = Matrix::from_fn(25, 2, |_, _| rng.uniform_in(-0.95, 0.95));
+    let (mean, want_mean) = (state.predict_mean(&q), cold.predict_mean(&q));
+    let (grad, want_grad) = (state.predict_grad(&q), cold.predict_grad(&q));
+    for i in 0..q.rows {
+        assert!(
+            (mean[i] - want_mean[i]).abs() <= 1e-6,
+            "streamed mean at row {i}: {} vs cold {}",
+            mean[i],
+            want_mean[i]
+        );
+        for j in 0..2 {
+            assert!(
+                (grad.get(i, j) - want_grad.get(i, j)).abs() <= 1e-6,
+                "streamed mean-gradient at row {i} axis {j}: {} vs cold {}",
+                grad.get(i, j),
+                want_grad.get(i, j)
+            );
+        }
+    }
+}
+
+/// Mixed ingestion — value-only points interleaved with `(y, ∇y)` pairs —
+/// then a forced full refresh: the rebuild re-derives the extended
+/// operator from the same observation set, so predictions move ≤ 1e-6.
+#[test]
+fn mixed_ingest_survives_forced_refresh() {
+    let (xs, ys, grads) = bo_style_data(33);
+    let h = GpHypers::new(0.7, 1.0, 0.05);
+    let prefix = MvmGp::new_with_grads(
+        rows(&xs, 0, 30),
+        ys[..30].to_vec(),
+        rows(&grads, 0, 30),
+        h,
+        kiss_cfg(32),
+    )
+    .unwrap();
+    let mut state = IncrementalState::from_mvm(&prefix, warm_only_cfg()).unwrap();
+    for i in 30..40 {
+        // Even rows stream a bare value, odd rows the full (y, ∇y) pair.
+        if i % 2 == 0 {
+            state.ingest(xs.row(i), ys[i]).unwrap();
+        } else {
+            state.ingest_with_grad(xs.row(i), ys[i], grads.row(i)).unwrap();
+        }
+    }
+    assert_eq!(state.n(), 40);
+    assert_eq!(state.num_grad_points(), 35);
+
+    let mut rng = Rng::new(34);
+    let q = Matrix::from_fn(20, 2, |_, _| rng.uniform_in(-0.95, 0.95));
+    let warm_mean = state.predict_mean(&q);
+    let warm_grad = state.predict_grad(&q);
+    state.refresh().unwrap();
+    let cold_mean = state.predict_mean(&q);
+    let cold_grad = state.predict_grad(&q);
+    for i in 0..q.rows {
+        assert!(
+            (warm_mean[i] - cold_mean[i]).abs() <= 1e-6,
+            "refresh moved the mean at row {i}: {} vs {}",
+            warm_mean[i],
+            cold_mean[i]
+        );
+        for j in 0..2 {
+            assert!(
+                (warm_grad.get(i, j) - cold_grad.get(i, j)).abs() <= 1e-6,
+                "refresh moved the mean-gradient at row {i} axis {j}: {} vs {}",
+                warm_grad.get(i, j),
+                cold_grad.get(i, j)
+            );
+        }
+    }
+}
+
+/// A small frozen snapshot to carry pending entries through the format
+/// tests.
+fn base_snapshot(seed: u64) -> ModelSnapshot {
+    let mut rng = Rng::new(seed);
+    let xs = Matrix::from_fn(40, 2, |_, _| rng.uniform_in(-1.0, 1.0));
+    let ys: Vec<f64> =
+        (0..40).map(|i| xs.get(i, 0).sin() + 0.01 * rng.normal()).collect();
+    let mut gp = ExactGp::new(xs, ys, GpHypers::new(0.8, 1.0, 0.05));
+    gp.refresh().unwrap();
+    ModelSnapshot::from_exact(
+        &gp,
+        &SnapshotConfig {
+            grid: Some(GridSpec::uniform(16)),
+            variance: VarianceMode::Exact,
+            ..Default::default()
+        },
+    )
+    .unwrap()
+}
+
+/// FNV-1a, matching the snapshot trailer checksum.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Format v6 round-trips bitwise with a grad-carrying pending entry next
+/// to a grad-free one, and every v1–v4 fixture file still migrates
+/// (their pending logs are necessarily gradient-free).
+#[test]
+fn snapshot_v6_roundtrips_and_every_fixture_migrates() {
+    let mut snap = base_snapshot(41);
+    snap.pending = vec![
+        Observation {
+            seq: 3,
+            task: 0,
+            x: vec![0.25, -0.5],
+            y: 1.25,
+            grad: Some(vec![0.5, -2.0]),
+        },
+        Observation { seq: 4, task: 0, x: vec![0.1, 0.2], y: -0.75, grad: None },
+    ];
+    let bytes = snap.to_bytes();
+    let back = ModelSnapshot::from_bytes(&bytes).unwrap();
+    assert_eq!(back.version, SNAPSHOT_VERSION);
+    assert_eq!(back.pending, snap.pending, "pending gradients must survive");
+    assert_eq!(back.to_bytes(), bytes, "v6 round-trip must be bitwise");
+
+    let q = Matrix::from_vec(3, 2, vec![0.1, -0.3, 0.6, 0.1, -0.4, -0.2]);
+    for (file, ver) in [
+        ("snapshot_v1.bin", 1u32),
+        ("snapshot_v2.bin", 2),
+        ("snapshot_v3.bin", 3),
+        ("snapshot_v4.bin", 4),
+    ] {
+        let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("rust/tests/fixtures")
+            .join(file);
+        let raw = std::fs::read(&path).unwrap_or_else(|e| panic!("{file}: {e}"));
+        let old = ModelSnapshot::from_bytes(&raw).unwrap_or_else(|e| panic!("{file}: {e}"));
+        assert_eq!(old.version, ver, "{file}");
+        assert!(
+            old.pending.iter().all(|o| o.grad.is_none()),
+            "{file}: historical formats predate derivative observations"
+        );
+        let mean = old.cache.predict_mean(&q);
+        let resaved = ModelSnapshot::from_bytes(&old.to_bytes())
+            .unwrap_or_else(|e| panic!("{file}: {e}"));
+        assert_eq!(resaved.version, SNAPSHOT_VERSION, "{file}");
+        assert_eq!(resaved.cache.predict_mean(&q), mean, "{file}: migration changed means");
+        assert_eq!(resaved.pending, old.pending, "{file}: pending log must survive");
+    }
+}
+
+/// v5 migration, spliced programmatically (no fixture file exists for
+/// v5): a v5 file is a v6 file minus the 4-byte grad flag per pending
+/// entry. Dropping the flags, patching the version word, and
+/// re-checksumming yields a file that loads with `grad = None`
+/// everywhere and re-saves bitwise-identical to the native v6 encoding.
+#[test]
+fn snapshot_v5_splice_migrates_gradient_free() {
+    let mut snap = base_snapshot(42);
+    snap.pending = vec![
+        Observation { seq: 7, task: 0, x: vec![0.5, -0.25], y: 1.5, grad: None },
+        Observation { seq: 9, task: 0, x: vec![0.0, 0.75], y: -0.5, grad: None },
+    ];
+    let v6 = snap.to_bytes();
+    let d = 2;
+    let entry_v6 = 8 + 4 + d * 8 + 8 + 4; // seq, task, x, y, grad flag
+    // The single-task file tail is the 4-byte task flag plus the 8-byte
+    // checksum; the pending section is a 4-byte count then the entries.
+    let pend_start = v6.len() - 12 - 4 - 2 * entry_v6;
+    let mut v5 = Vec::with_capacity(v6.len() - 8);
+    v5.extend_from_slice(&v6[..pend_start + 4]);
+    for i in 0..2 {
+        let start = pend_start + 4 + i * entry_v6;
+        v5.extend_from_slice(&v6[start..start + entry_v6 - 4]);
+    }
+    v5.extend_from_slice(&v6[v6.len() - 12..v6.len() - 8]);
+    v5[8..12].copy_from_slice(&5u32.to_le_bytes());
+    let sum = fnv1a(&v5);
+    v5.extend_from_slice(&sum.to_le_bytes());
+
+    let migrated = ModelSnapshot::from_bytes(&v5).unwrap();
+    assert_eq!(migrated.version, 5);
+    assert_eq!(
+        migrated.pending, snap.pending,
+        "v5 entries migrate with grad = None"
+    );
+    assert_eq!(migrated.to_bytes(), v6, "re-save must be the native v6 encoding");
+}
+
+/// Large-n D-SKI: 2 000 points × 3 rows each is a 6 000-row extended
+/// system — the scale where the dense oracle is already infeasible.
+#[test]
+#[ignore = "scale test: ~6k-row extended operator; run in the nightly --ignored lane"]
+fn dski_large_n_builds_streams_and_predicts() {
+    let mut rng = Rng::new(99);
+    let n = 2000;
+    let f = |x0: f64, x1: f64| (1.1 * x0).sin() + 0.5 * (1.7 * x1).cos();
+    let xs = Matrix::from_fn(n, 2, |i, j| match (i, j) {
+        (0, _) => -1.0,
+        (1, _) => 1.0,
+        _ => rng.uniform_in(-1.0, 1.0),
+    });
+    let ys: Vec<f64> = (0..n).map(|i| f(xs.get(i, 0), xs.get(i, 1))).collect();
+    let grads = Matrix::from_fn(n, 2, |i, j| {
+        if j == 0 {
+            1.1 * (1.1 * xs.get(i, 0)).cos()
+        } else {
+            -0.5 * 1.7 * (1.7 * xs.get(i, 1)).sin()
+        }
+    });
+    let cfg = MvmGpConfig {
+        variant: MvmVariant::Kiss,
+        grid: GridSpec::uniform(64),
+        cg: CgConfig { max_iters: 1500, tol: 1e-8, ..Default::default() },
+        ..Default::default()
+    };
+    let gp = MvmGp::new_with_grads(xs, ys, grads, GpHypers::new(0.6, 1.0, 0.05), cfg)
+        .unwrap();
+    let mut state = IncrementalState::from_mvm(&gp, warm_only_cfg()).unwrap();
+
+    let q = Matrix::from_fn(64, 2, |_, _| rng.uniform_in(-0.9, 0.9));
+    let mean = state.predict_mean(&q);
+    let grad = state.predict_grad(&q);
+    let mut seen = HashSet::new();
+    for i in 0..q.rows {
+        assert!(mean[i].is_finite(), "mean at row {i}");
+        assert!(
+            grad.get(i, 0).is_finite() && grad.get(i, 1).is_finite(),
+            "gradient at row {i}"
+        );
+        // The surrogate should track the smooth target at this density.
+        assert!(
+            (mean[i] - f(q.get(i, 0), q.get(i, 1))).abs() < 0.2,
+            "mean at row {i} drifted: {} vs {}",
+            mean[i],
+            f(q.get(i, 0), q.get(i, 1))
+        );
+        seen.insert(mean[i].to_bits());
+    }
+    assert!(seen.len() > 1, "predictions must not collapse to a constant");
+
+    for k in 0..8 {
+        let x = [rng.uniform_in(-1.0, 1.0), rng.uniform_in(-1.0, 1.0)];
+        let (y, g) = (
+            f(x[0], x[1]),
+            [1.1 * (1.1 * x[0]).cos(), -0.5 * 1.7 * (1.7 * x[1]).sin()],
+        );
+        let report = state.ingest_with_grad(&x, y, &g).unwrap();
+        assert_eq!(report.accepted, 1, "streamed point {k}");
+    }
+    assert_eq!(state.n(), n + 8);
+    assert_eq!(state.num_grad_points(), n + 8);
+}

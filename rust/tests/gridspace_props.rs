@@ -19,7 +19,7 @@ use skip_gp::kernels::ProductKernel;
 use skip_gp::linalg::Matrix;
 use skip_gp::operators::KroneckerSkiOp;
 use skip_gp::serve::VarianceMode;
-use skip_gp::solvers::CgConfig;
+use skip_gp::solvers::{CgConfig, SolverPolicy};
 use skip_gp::stream::{IncrementalState, StreamConfig};
 use skip_gp::util::{mae, Rng};
 
@@ -46,8 +46,7 @@ fn alphas_both_spaces(
         variant: MvmVariant::Kiss,
         grid: spec.clone(),
         cg: CgConfig { max_iters: 1500, tol: 1e-10, ..Default::default() },
-        warm_start: false,
-        solve_space: space,
+        policy: SolverPolicy { warm_start: false, space, ..Default::default() },
         ..Default::default()
     };
     let mut data = MvmGp::new(xs.clone(), ys.to_vec(), hypers, cfg(SolveSpace::Data));
@@ -154,7 +153,7 @@ fn grid_space_trained_model_matches_exact_gp_within_1e6() {
         variant: MvmVariant::Kiss,
         grid: GridSpec::Uniform(16),
         cg: CgConfig { max_iters: 1500, tol: 1e-11, ..Default::default() },
-        solve_space: SolveSpace::Grid,
+        policy: SolverPolicy { space: SolveSpace::Grid, ..Default::default() },
         ..Default::default()
     };
     let mut gp = MvmGp::new(xs, ys, h, cfg);
@@ -244,7 +243,7 @@ fn incremental_grid_ingests_match_scratch_grid_refit() {
         log_capacity: 4096,
         variance: VarianceMode::Exact,
         patch_eps: 1e-12,
-        space: SolveSpace::Grid,
+        policy: SolverPolicy { space: SolveSpace::Grid, ..Default::default() },
         ..Default::default()
     };
     let mut live = IncrementalState::new(

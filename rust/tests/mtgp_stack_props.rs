@@ -7,8 +7,10 @@
 //! - **Sharded ≡ single-engine**: a sharded multi-task model answers
 //!   bitwise-identically to the underlying snapshot caches at every
 //!   replica count k ∈ {1, 2, 8}.
-//! - **Snapshot v5**: multi-task snapshots round-trip bitwise, and all
-//!   four historical formats (v1–v4) migrate with identical predictions.
+//! - **Snapshots**: multi-task snapshots round-trip bitwise at the
+//!   current format version, and the v1–v4 historical fixtures migrate
+//!   with identical predictions (the v5→v6 step is pinned by
+//!   `dski_props.rs`).
 //! - **Identity task kernel ≡ independent models**: with `B = 0, D = I`
 //!   the multi-task posterior factorizes, so each task matches its own
 //!   single-task model to 1e-6.
@@ -27,7 +29,7 @@ use skip_gp::serve::{
     BatcherConfig, ModelSnapshot, ServeEngine, Server, ServerConfig, ShardedModel,
     VarianceMode, SNAPSHOT_VERSION,
 };
-use skip_gp::solvers::CgConfig;
+use skip_gp::solvers::{CgConfig, SolverPolicy};
 use skip_gp::stream::{IncrementalState, StreamConfig};
 use skip_gp::util::Rng;
 use std::path::PathBuf;
@@ -255,13 +257,15 @@ fn sharded_multitask_predictions_are_bitwise_identical() {
     }
 }
 
-/// Snapshot format v5: a multi-task snapshot round-trips **bitwise**
-/// (encode → decode → re-encode reproduces the identical byte string),
-/// and all four historical formats still load and predict identically
-/// after the v5 re-save (v1: implicit single term; v2: no pending log;
-/// v3: no α provenance; v4: no multi-task payload).
+/// Multi-task snapshots round-trip **bitwise** at the current format
+/// version (encode → decode → re-encode reproduces the identical byte
+/// string), and all four historical fixtures still load and predict
+/// identically after a current-format re-save (v1: implicit single
+/// term; v2: no pending log; v3: no α provenance; v4: no multi-task
+/// payload; the gradient-payload v5→v6 step is pinned by
+/// `dski_props.rs`).
 #[test]
-fn snapshot_v5_roundtrips_and_every_fixture_migrates() {
+fn multitask_snapshot_roundtrips_and_every_fixture_migrates() {
     let (xs, ys, task_of, mut rng) = mt_data(15, 3, 3);
     let live = IncrementalState::new_multitask(
         xs,
@@ -275,10 +279,10 @@ fn snapshot_v5_roundtrips_and_every_fixture_migrates() {
     .unwrap();
     let snap = live.to_snapshot();
     let bytes = snap.to_bytes();
-    let back = ModelSnapshot::from_bytes(&bytes).expect("v5 loads");
+    let back = ModelSnapshot::from_bytes(&bytes).expect("snapshot loads");
     assert_eq!(back.version, SNAPSHOT_VERSION);
     assert_eq!(back.num_tasks(), 3);
-    assert_eq!(back.to_bytes(), bytes, "v5 round-trip must be bitwise");
+    assert_eq!(back.to_bytes(), bytes, "round-trip must be bitwise");
     for t in 0..3 {
         let q = [rng.uniform_in(-0.9, 0.9), rng.uniform_in(-0.9, 0.9)];
         let want = snap.task_cache(t).unwrap().predict_one(&q);
@@ -437,7 +441,10 @@ fn unsupported_configurations_are_named_precisely() {
 
     // Grid-space re-solves have no multi-task normal form — refused at
     // construction, not at the first ingest.
-    let grid_cfg = StreamConfig { space: SolveSpace::Grid, ..exact_cfg() };
+    let grid_cfg = StreamConfig {
+        policy: SolverPolicy { space: SolveSpace::Grid, ..Default::default() },
+        ..exact_cfg()
+    };
     let err = IncrementalState::new_multitask(
         mxs,
         mys,

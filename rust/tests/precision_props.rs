@@ -21,7 +21,7 @@ use skip_gp::kernels::{ProductKernel, Stationary1d};
 use skip_gp::linalg::Matrix;
 use skip_gp::operators::{AffineOp, KroneckerSkiOp, LinearOp, LinearOpF32, SkiOp};
 use skip_gp::serve::VarianceMode;
-use skip_gp::solvers::{CgConfig, Precision};
+use skip_gp::solvers::{CgConfig, Precision, SolverPolicy};
 use skip_gp::stream::{IncrementalState, StreamConfig};
 use skip_gp::util::{mae, Rng};
 
@@ -120,9 +120,12 @@ fn kiss_cfg(space: SolveSpace, precision: Precision) -> MvmGpConfig {
         variant: MvmVariant::Kiss,
         grid: GridSpec::uniform(16),
         cg: CgConfig { max_iters: 1500, tol: 1e-10, ..Default::default() },
-        warm_start: false,
-        solve_space: space,
-        precision,
+        policy: SolverPolicy {
+            warm_start: false,
+            space,
+            precision,
+            ..Default::default()
+        },
         ..Default::default()
     }
 }
@@ -170,7 +173,7 @@ fn mixed_training_matches_f64_grid_space() {
     assert!(err < 1e-6, "grid-space mixed vs f64 α mae {err:e}");
 }
 
-/// Streaming ingestion under `StreamConfig { precision: Mixed }`: after
+/// Streaming ingestion under a Mixed-precision solver policy: after
 /// identical one-at-a-time ingests, the live α and predictive means agree
 /// with an f64 streaming twin to the acceptance band.
 #[test]
@@ -195,7 +198,7 @@ fn mixed_streaming_matches_f64() {
         var_drift_budget: usize::MAX,
         error_z: 0.0,
         variance: VarianceMode::None,
-        precision,
+        policy: SolverPolicy { precision, ..Default::default() },
         ..StreamConfig::default()
     };
     let run = |precision: Precision| -> IncrementalState {

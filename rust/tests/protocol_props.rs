@@ -1,0 +1,397 @@
+//! Property tests for the typed wire protocol
+//! (`skip_gp::serve::protocol`): every request round-trips
+//! `format_request` → `parse_request` bitwise, the response formatter
+//! pins the legacy byte strings, and — the point of having ONE parser —
+//! malformed lines draw byte-identical `err` replies from the legacy
+//! TCP server and the fleet reactor.
+
+use skip_gp::coordinator::Metrics;
+use skip_gp::gp::{ExactGp, GpHypers};
+use skip_gp::grid::Grid1d;
+use skip_gp::linalg::Matrix;
+use skip_gp::serve::{
+    BatcherConfig, FleetConfig, FleetServer, ModelRegistry, ModelShape,
+    ModelSnapshot, ObserveRequest, PredictRequest, RegistryConfig, Request, Response,
+    ServeEngine, Server, ServerConfig, ShardedModel, VarianceMode,
+};
+use skip_gp::serve::protocol::{format_request, parse_request};
+use skip_gp::solvers::CgConfig;
+use skip_gp::stream::{IncrementalState, StreamConfig};
+use skip_gp::util::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every request in the catalog — across single- and multi-task shapes,
+/// with sign-of-zero, subnormal-adjacent, huge, and irrational payloads —
+/// survives `format_request` → `parse_request` with bitwise-identical
+/// float payloads.
+#[test]
+fn every_request_round_trips_format_to_parse_bitwise() {
+    let tricky = [
+        0.0,
+        -0.0,
+        1.0 / 3.0,
+        f64::MIN_POSITIVE,
+        -1e300,
+        std::f64::consts::PI,
+        -2.5e-3,
+        42.0,
+    ];
+    for d in [1usize, 3] {
+        let shape = ModelShape::single(d);
+        let mut reqs = vec![
+            Request::Quit,
+            Request::Ping,
+            Request::Dim,
+            Request::Tasks,
+            Request::Stats,
+        ];
+        for w in tricky.windows(d) {
+            reqs.push(Request::Predict(PredictRequest { task: 0, x: w.to_vec() }));
+            reqs.push(Request::Observe(ObserveRequest {
+                task: 0,
+                x: w.to_vec(),
+                y: tricky[1],
+                grad: None,
+            }));
+            reqs.push(Request::Observe(ObserveRequest {
+                task: 0,
+                x: w.to_vec(),
+                y: f64::MIN_POSITIVE,
+                grad: Some(w.iter().map(|v| -v).collect()),
+            }));
+        }
+        for req in &reqs {
+            let line = format_request(req, false);
+            let back = parse_request(&line, &shape, false)
+                .unwrap_or_else(|e| panic!("`{line}` failed to parse: {e}"))
+                .unwrap_or_else(|| panic!("`{line}` parsed as blank"));
+            assert_eq!(&back, req, "structural round-trip of `{line}`");
+            match (&back, req) {
+                (Request::Predict(b), Request::Predict(r)) => {
+                    assert_eq!(bits(&b.x), bits(&r.x), "payload bits of `{line}`");
+                }
+                (Request::Observe(b), Request::Observe(r)) => {
+                    assert_eq!(bits(&b.x), bits(&r.x), "payload bits of `{line}`");
+                    assert_eq!(b.y.to_bits(), r.y.to_bits(), "y bits of `{line}`");
+                    assert_eq!(
+                        b.grad.as_deref().map(bits),
+                        r.grad.as_deref().map(bits),
+                        "gradient bits of `{line}`"
+                    );
+                }
+                _ => {}
+            }
+        }
+    }
+
+    // Multi-task: task-led forms, including the enrollment id on observe.
+    let mt = ModelShape { dim: 2, num_tasks: 3, multitask: true };
+    for req in [
+        Request::Predict(PredictRequest { task: 2, x: vec![-0.0, 1e300] }),
+        Request::Observe(ObserveRequest {
+            task: 3, // enrollment: one past the current task count
+            x: vec![std::f64::consts::PI, f64::MIN_POSITIVE],
+            y: -1.0 / 3.0,
+            grad: None,
+        }),
+    ] {
+        let line = format_request(&req, true);
+        let back = parse_request(&line, &mt, false).unwrap().unwrap();
+        assert_eq!(back, req, "multi-task round-trip of `{line}`");
+    }
+
+    // The fleet-only verb round-trips where it is enabled…
+    assert_eq!(
+        parse_request("models", &ModelShape::single(2), true).unwrap().unwrap(),
+        Request::Models
+    );
+    assert_eq!(format_request(&Request::Models, false), "models");
+    // …and is a doomed predict where it is not (legacy behavior).
+    assert_eq!(
+        parse_request("models", &ModelShape::single(2), false).unwrap_err(),
+        "not a number: 'models'"
+    );
+}
+
+/// The response formatter reproduces the legacy wire strings byte for
+/// byte — these are the exact lines PR 7's clients already parse.
+#[test]
+fn response_formats_pin_the_legacy_bytes() {
+    use skip_gp::serve::{ObserveAck, ObserveResponse, PredictResponse};
+    assert_eq!(Response::Pong.format(), "ok pong");
+    assert_eq!(Response::Dim(3).format(), "ok 3");
+    assert_eq!(Response::Tasks(1).format(), "ok 1");
+    assert_eq!(Response::Models(vec![]).format(), "ok");
+    assert_eq!(
+        Response::Models(vec!["a".into(), "b".into()]).format(),
+        "ok a b"
+    );
+    assert_eq!(Response::Error("boom".into()).format(), "err boom");
+    assert_eq!(
+        Response::Busy { limit: 7 }.format(),
+        "busy 7 requests in flight, retry later"
+    );
+    assert_eq!(
+        Response::Predict(PredictResponse {
+            mean: 0.5,
+            var: 0.25,
+            latency: Duration::from_micros(12),
+            batch_size: 3,
+        })
+        .format(),
+        "ok 0.5 0.25 12.0 3"
+    );
+    let obs = |result| ObserveResponse {
+        result,
+        latency: Duration::from_micros(8),
+        batch_size: 2,
+    };
+    assert_eq!(
+        Response::Observe(obs(Ok(ObserveAck {
+            seq: 9,
+            duplicate: false,
+            n: 41,
+            pending: 5,
+            refreshed: false,
+        })))
+        .format(),
+        "ok 9 41 5 8.0 2"
+    );
+    assert_eq!(
+        Response::Observe(obs(Ok(ObserveAck {
+            seq: 0,
+            duplicate: true,
+            n: 41,
+            pending: 5,
+            refreshed: false,
+        })))
+        .format(),
+        "ok dup 41 5 8.0 2"
+    );
+    assert_eq!(
+        Response::Observe(obs(Err("frozen".into()))).format(),
+        "err frozen"
+    );
+}
+
+/// A small d=3 frozen snapshot (interior-node training data, same
+/// construction as the serve_roundtrip suite).
+fn small_snapshot(seed: u64) -> ModelSnapshot {
+    let (d, m, n) = (3, 16, 96);
+    let g = Grid1d::fit(0.0, 1.0, m).unwrap();
+    let mut rng = Rng::new(seed);
+    let xs = Matrix::from_fn(n, d, |_, _| g.point(2 + rng.below(m - 4)));
+    let ys: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = xs.row(i);
+            (2.0 * r[0]).sin() + (3.0 * r[1]).cos() * r[2] + 0.05 * rng.normal()
+        })
+        .collect();
+    let mut gp = ExactGp::new(xs, ys, GpHypers::new(0.45, 1.3, 0.05));
+    gp.refresh().unwrap();
+    let grids = vec![g.clone(), g.clone(), g];
+    ModelSnapshot::from_exact_with_grids(&gp, grids, &VarianceMode::Exact).unwrap()
+}
+
+/// A small d=2 live model with every automatic refresh trigger disabled.
+fn small_live(seed: u64) -> IncrementalState {
+    let (d, n0) = (2, 48);
+    let mut rng = Rng::new(seed);
+    let xs = Matrix::from_fn(n0, d, |_, _| rng.uniform_in(-1.0, 1.0));
+    let ys: Vec<f64> = (0..n0)
+        .map(|i| {
+            let r = xs.row(i);
+            (2.0 * r[0]).sin() + r[1] + 0.02 * rng.normal()
+        })
+        .collect();
+    let axes = vec![Grid1d::fit(-1.0, 1.0, 8).unwrap(); 2];
+    let cg = CgConfig { max_iters: 400, tol: 1e-10, ..Default::default() };
+    let scfg = StreamConfig {
+        refresh_every: 0,
+        var_drift_budget: 0,
+        error_z: 0.0,
+        log_capacity: 1024,
+        variance: VarianceMode::Exact,
+        patch_eps: 1e-12,
+        ..Default::default()
+    };
+    IncrementalState::new(xs, ys, GpHypers::new(0.6, 1.0, 0.05), axes, cg, scfg)
+        .unwrap()
+}
+
+struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let writer = stream.try_clone().unwrap();
+        Client { writer, reader: BufReader::new(stream) }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> String {
+        writeln!(self.writer, "{line}").unwrap();
+        let mut reply = String::new();
+        self.reader.read_line(&mut reply).unwrap();
+        reply.trim_end_matches('\n').to_string()
+    }
+}
+
+/// The acceptance property: the legacy thread-per-connection server and
+/// the fleet reactor answer every malformed line with **byte-identical**
+/// typed errors, because both front-ends run the one parser in
+/// `serve::protocol`.
+#[test]
+fn malformed_lines_err_identically_on_legacy_and_fleet_front_ends() {
+    let snap = small_snapshot(61);
+
+    let engine = Arc::new(ServeEngine::new(snap.clone()).unwrap());
+    let legacy = Server::start(
+        engine,
+        ServerConfig {
+            bind: "127.0.0.1:0".to_string(),
+            batcher: BatcherConfig::default(),
+        },
+    )
+    .unwrap();
+
+    let metrics = Arc::new(Metrics::new());
+    let reg = Arc::new(ModelRegistry::new(RegistryConfig::default(), metrics.clone()));
+    let model =
+        ShardedModel::from_snapshot("m", snap, 1, BatcherConfig::default(), metrics)
+            .unwrap();
+    reg.insert(model, true);
+    let fleet = FleetServer::start(
+        reg,
+        FleetConfig {
+            bind: "127.0.0.1:0".to_string(),
+            workers: 2,
+            max_inflight: 64,
+            default_model: Some("m".to_string()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let mut lc = Client::connect(legacy.addr());
+    let mut fc = Client::connect(fleet.addr());
+
+    // (line, expected reply) — the expectation pins the wording, the
+    // cross-front-end assertion pins the byte identity.
+    let catalog = [
+        ("predict one 2 3", "err not a number: 'one'"),
+        ("one 2 3", "err not a number: 'one'"),
+        ("predict 1 2", "err expected 3 numbers, got 2"),
+        ("predict 1 2 3 4", "err expected 3 numbers, got 4"),
+        ("observe 1 2 3", "err expected 4 numbers, got 3"),
+        ("observe 1 2 3 nan", "err non-finite observation"),
+        ("observe 1 2 3 4 grad 1 2", "err expected 3 numbers, got 2"),
+        ("observe 1 2 3 4 grad", "err expected 3 numbers, got 0"),
+        ("observe 1 2 3 4 grad x y z", "err not a number: 'x'"),
+        ("observe 1 2 3 4 grad 1 2 inf", "err non-finite gradient observation"),
+        ("observe 1 2 3 4 5", "err expected 4 numbers, got 5"),
+    ];
+    for (line, want) in catalog {
+        let from_legacy = lc.roundtrip(line);
+        let from_fleet = fc.roundtrip(line);
+        assert_eq!(from_legacy, want, "legacy reply to `{line}`");
+        assert_eq!(
+            from_fleet, from_legacy,
+            "front-ends diverged on `{line}`"
+        );
+    }
+
+    // `models` is the one verb the front-ends legitimately disagree on:
+    // the legacy server never had it (the token falls through to the
+    // predict parse), the fleet answers with its resident ids.
+    assert_eq!(lc.roundtrip("models"), "err not a number: 'models'");
+    assert_eq!(fc.roundtrip("models"), "ok m");
+
+    assert_eq!(lc.roundtrip("ping"), "ok pong");
+    assert_eq!(fc.roundtrip("model m ping"), "ok pong");
+    assert_eq!(fc.roundtrip("model m"), "err usage: model <id> <verb> …");
+    // Resolution errors precede parse errors (ping skips resolution, so
+    // probe with a verb that needs the model).
+    assert_eq!(fc.roundtrip("model nope ping"), "ok pong");
+    assert_eq!(
+        fc.roundtrip("model nope dim"),
+        "err fleet error: unknown model 'nope' (and no --models directory to \
+         load from)"
+    );
+    assert_eq!(fc.roundtrip("dim"), "ok 3");
+
+    lc.roundtrip("quit");
+    drop(lc);
+    drop(fc);
+    legacy.shutdown();
+    fleet.shutdown();
+}
+
+/// The D-SKI `grad` clause end to end on both front-ends: a live model
+/// behind each accepts `observe … grad …`, acknowledges with the
+/// standard observe reply, and flags the bitwise-identical resend as a
+/// duplicate.
+#[test]
+fn grad_observations_flow_through_both_front_ends() {
+    let legacy_engine = Arc::new(ServeEngine::new_live(small_live(71)).unwrap());
+    let legacy = Server::start(
+        legacy_engine,
+        ServerConfig {
+            bind: "127.0.0.1:0".to_string(),
+            batcher: BatcherConfig::default(),
+        },
+    )
+    .unwrap();
+
+    let metrics = Arc::new(Metrics::new());
+    let reg = Arc::new(ModelRegistry::new(RegistryConfig::default(), metrics.clone()));
+    let model =
+        ShardedModel::live("hot", small_live(71), BatcherConfig::default(), metrics)
+            .unwrap();
+    reg.insert(model, true);
+    let fleet = FleetServer::start(
+        reg,
+        FleetConfig {
+            bind: "127.0.0.1:0".to_string(),
+            workers: 2,
+            max_inflight: 64,
+            default_model: Some("hot".to_string()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    for addr in [legacy.addr(), fleet.addr()] {
+        let mut c = Client::connect(addr);
+        let reply = c.roundtrip("observe 0.5 -0.25 1.7 grad 0.3 -0.4");
+        let toks: Vec<&str> = reply.split_whitespace().collect();
+        assert_eq!(toks[0], "ok", "grad observe on {addr}: {reply}");
+        let seq: u64 = toks[1].parse().unwrap_or_else(|_| {
+            panic!("grad observe on {addr} must ack with a sequence: {reply}")
+        });
+        assert!(seq > 0, "{reply}");
+        assert_eq!(toks[2].parse::<usize>().unwrap(), 49, "n after ingest: {reply}");
+
+        // The bitwise-identical (x, y, ∇y) payload is a duplicate…
+        let dup = c.roundtrip("observe 0.5 -0.25 1.7 grad 0.3 -0.4");
+        assert!(dup.starts_with("ok dup "), "resend on {addr}: {dup}");
+        // …but the same (x, y) with a different gradient is not.
+        let fresh = c.roundtrip("observe 0.5 -0.25 1.7 grad 0.3 -0.5");
+        assert!(
+            fresh.starts_with("ok ") && !fresh.starts_with("ok dup"),
+            "gradient payload must participate in dedup: {fresh}"
+        );
+    }
+    legacy.shutdown();
+    fleet.shutdown();
+}
